@@ -1,0 +1,59 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Builds a config from a preset, tweaks a couple of knobs, runs AdLoCo on
+//! the fast MockEngine substrate, and prints the run summary plus the
+//! perplexity curve. Takes a few seconds.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use adloco::config::presets;
+use adloco::coordinator::Coordinator;
+use adloco::engine::build_engine;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Start from a preset (see `adloco presets` for the list; the
+    //    paper's Table 1 lives in presets::paper_table1()).
+    let mut cfg = presets::mock_default();
+    cfg.name = "quickstart".into();
+    cfg.algo.outer_steps = 8;
+    cfg.algo.inner_steps = 20;
+    cfg.algo.workers_per_trainer = 2;
+
+    // Everything is also settable via dotted overrides, exactly like the
+    // CLI's --set flags:
+    cfg.apply_override("algo.batching.eta=0.8")?;
+    cfg.apply_override("algo.merge.frequency=3")?;
+
+    // 2. Build the engine (Mock here; swap the preset for `xla_tiny` to
+    //    run the real PJRT transformer) and the coordinator.
+    let engine = build_engine(&cfg)?;
+    let mut coord = Coordinator::new(cfg, engine)?;
+
+    // 3. Run and inspect.
+    let result = coord.run()?;
+    println!("== quickstart result ==");
+    println!("best perplexity : {:.3}", result.best_ppl);
+    println!("communications  : {} ({} bytes)", result.comm_count, result.comm_bytes);
+    println!("virtual time    : {:.2}s", result.virtual_time_s);
+    println!("trainers left   : {} (started with 4)", result.trainers_left);
+
+    println!("\nperplexity curve (trainer, step, ppl):");
+    for e in coord.recorder.evals.iter().step_by(4) {
+        println!("  t{} step {:>4} ppl {:>10.3}", e.trainer, e.global_step, e.perplexity);
+    }
+
+    println!("\nbatch growth (first worker):");
+    for s in coord
+        .recorder
+        .steps
+        .iter()
+        .filter(|s| s.trainer == 0 && s.worker == 0)
+        .step_by(20)
+    {
+        println!(
+            "  step {:>4}  requested {:>4}  executed {:>3} x{}",
+            s.global_step, s.requested_batch, s.batch, s.accum_steps
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,207 @@
+"""AOT export: lower the L2/L1 programs to HLO text + metadata for Rust.
+
+Run once at build time (`make artifacts`).  For each profile this emits,
+under artifacts/<profile>/:
+
+    train_step_b{B}.hlo.txt   one per batch-size ladder rung B
+    grad_step_b{B}.hlo.txt    SwitchMode micro-step, one per rung (nodes
+                              with small memory budgets accumulate at a
+                              rung below the engine max)
+    apply_update.hlo.txt      SwitchMode commit (AdamW with external grad)
+    eval_step_b{B}.hlo.txt    validation loss at the eval batch size
+    init_params.f32.bin       flat f32 (little-endian) initial parameters
+    meta.json                 layout + ladder + shapes + hyperparameters
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python never runs after this step: the Rust binary loads the artifacts and
+is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+# ---------------------------------------------------------------------------
+# Profiles: the model sizes this repo ships. `tiny` drives tests and the
+# coordination benches; `small` is the end-to-end example model.  DESIGN.md
+# §4 documents the width substitution vs the paper's MicroLlama-300M.
+# ---------------------------------------------------------------------------
+
+PROFILES = {
+    "tiny": dict(
+        cfg=M.ModelConfig(vocab=256, d_model=64, n_layers=2, n_heads=4, seq_len=64),
+        ladder=[1, 2, 4, 8, 16],
+        max_chunks=4,
+        eval_batch=8,
+        init_seed=1,
+    ),
+    "small": dict(
+        cfg=M.ModelConfig(vocab=512, d_model=128, n_layers=4, n_heads=4, seq_len=128),
+        ladder=[1, 2, 4, 8, 16, 32],
+        max_chunks=8,
+        eval_batch=16,
+        init_seed=1,
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def chunks_for(batch: int, max_chunks: int) -> int:
+    """Largest power-of-two divisor of `batch` capped at max_chunks."""
+    c = 1
+    while c * 2 <= max_chunks and batch % (c * 2) == 0:
+        c *= 2
+    return c
+
+
+def export_profile(name: str, out_root: str, verbose: bool = True) -> dict:
+    prof = PROFILES[name]
+    cfg: M.ModelConfig = prof["cfg"]
+    layout = M.ParamLayout.build(cfg)
+    out_dir = os.path.join(out_root, name)
+    os.makedirs(out_dir, exist_ok=True)
+
+    p = layout.total
+    s1 = cfg.seq_len + 1
+    files = {}
+
+    def emit(fname: str, fn, *specs, donate=()):
+        # donate_argnums adds input_output_alias to the HLO: PJRT reuses
+        # the (freshly-uploaded, never-reread) input buffers for the big
+        # outputs instead of allocating new ones (EXPERIMENTS.md §Perf).
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        files[fname] = {
+            "bytes": len(text),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        if verbose:
+            print(f"  {fname}: {len(text)} chars", file=sys.stderr)
+
+    flat_s = _spec((p,))
+    step_s = _spec((1,))
+    lr_s = _spec((1,))
+
+    rungs = []
+    for b in prof["ladder"]:
+        c = chunks_for(b, prof["max_chunks"])
+        tok_s = _spec((b, s1), jnp.int32)
+        emit(
+            f"train_step_b{b}.hlo.txt",
+            functools.partial(M.train_step, cfg=cfg, chunks=c),
+            flat_s, flat_s, flat_s, step_s, lr_s, tok_s,
+            donate=(0, 1, 2),
+        )
+        rungs.append({"batch": b, "chunks": c, "file": f"train_step_b{b}.hlo.txt"})
+
+    grad_rungs = []
+    for b in prof["ladder"]:
+        c = chunks_for(b, prof["max_chunks"])
+        emit(
+            f"grad_step_b{b}.hlo.txt",
+            functools.partial(M.grad_step, cfg=cfg, chunks=c),
+            flat_s, _spec((b, s1), jnp.int32),
+        )
+        grad_rungs.append({"batch": b, "chunks": c, "file": f"grad_step_b{b}.hlo.txt"})
+    b_max = prof["ladder"][-1]
+    c_max = chunks_for(b_max, prof["max_chunks"])
+    emit(
+        "apply_update.hlo.txt",
+        functools.partial(M.apply_update, cfg=cfg),
+        flat_s, flat_s, flat_s, step_s, lr_s, flat_s,
+        donate=(0, 1, 2),
+    )
+    eb = prof["eval_batch"]
+    emit(
+        f"eval_step_b{eb}.hlo.txt",
+        functools.partial(M.eval_step, cfg=cfg),
+        flat_s, _spec((eb, s1), jnp.int32),
+    )
+
+    init = M.init_params(cfg, seed=prof["init_seed"])
+    init_path = os.path.join(out_dir, "init_params.f32.bin")
+    init.astype("<f4").tofile(init_path)
+
+    meta = {
+        "profile": name,
+        "format_version": 1,
+        "model": {k: getattr(cfg, k) for k in (
+            "vocab", "d_model", "n_layers", "n_heads", "seq_len",
+            "beta1", "beta2", "eps", "weight_decay", "rope_theta")},
+        "d_head": cfg.d_head,
+        "d_ffn": cfg.d_ffn,
+        "param_count": p,
+        "layout": layout.to_json_obj(),
+        "ladder": rungs,
+        "grad_step": {"batch": b_max, "chunks": c_max,
+                      "file": f"grad_step_b{b_max}.hlo.txt"},
+        "grad_steps": grad_rungs,
+        "apply_update": {"file": "apply_update.hlo.txt"},
+        "eval": {"batch": eb, "file": f"eval_step_b{eb}.hlo.txt"},
+        "init_params": {"file": "init_params.f32.bin", "seed": prof["init_seed"],
+                        "sha256": hashlib.sha256(init.tobytes()).hexdigest()[:16]},
+        "tokens_shape_note": "token inputs are i32[batch, seq_len+1]",
+        "scalar_outputs_note": "loss/s1/sigma2/ip_var are f32[1]",
+        "files": files,
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    if verbose:
+        print(f"profile {name}: {p} params, {len(files)} programs -> {out_dir}",
+              file=sys.stderr)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts root dir")
+    ap.add_argument("--profiles", default="tiny,small",
+                    help="comma-separated profile names")
+    ap.add_argument("--stamp", default=None,
+                    help="write a stamp file when done (Makefile freshness)")
+    args = ap.parse_args()
+    for name in args.profiles.split(","):
+        name = name.strip()
+        if name not in PROFILES:
+            raise SystemExit(f"unknown profile {name!r}; have {sorted(PROFILES)}")
+        export_profile(name, args.out)
+    if args.stamp:
+        with open(args.stamp, "w") as f:
+            f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""Pallas tiled causal attention (forward flash-style, custom-VJP backward).
+
+This is the L1 compute hot-spot of the transformer used by the AdLoCo
+reproduction.  The forward pass is written in the FlashAttention schedule:
+the grid iterates over (batch*heads, query blocks), each program keeps an
+online-softmax accumulator in VMEM-sized registers and streams key/value
+blocks, so the S x S score matrix is never materialized.  The log-sum-exp
+per query row is emitted as a second output and reused by the backward
+kernel, which recomputes the probabilities blockwise.
+
+TPU adaptation notes (paper targets A100 CUDA; see DESIGN.md
+§Hardware-Adaptation):
+  * the threadblock tiling of GPU flash attention becomes BlockSpec-driven
+    HBM->VMEM streaming: one (block_q x dh) query tile resident, key/value
+    tiles streamed via `pl.dynamic_slice`-style loads inside a fori_loop;
+  * the matmuls are shaped (block_q x dh) @ (dh x block_k) to feed the MXU
+    with contiguous lanes (dh is the minor dimension everywhere);
+  * everything below runs with interpret=True on CPU PJRT — real-TPU
+    lowering would emit a Mosaic custom call the CPU plugin cannot execute
+    (see /opt/xla-example/README.md).
+
+Shapes: q, k, v are [BH, S, dh] with BH = batch * heads.  S must be a
+multiple of the query block; dh is small (<= 128) and kept whole.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 64 x 64 f32 score tiles keep the working set
+# (q tile + 2 kv tiles + accumulator ~= 4 * 64 * 128 * 4B ~= 128 KiB)
+# far inside a TPU core's ~16 MiB VMEM even with double buffering.
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+_NEG_INF = -1e30  # finite stand-in for -inf: keeps exp() exact zero without NaNs
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_q, block_k, seq_len):
+    """One (bh, q-block) program of the flash forward pass."""
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :]  # [block_q, dh]
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # [block_q]
+
+    # Causal bound: key block t is live iff t*block_k <= last query row.
+    num_kb = (qi * block_q + block_q + block_k - 1) // block_k
+
+    def body(t, carry):
+        m_i, l_i, acc = carry
+        k_blk = k_ref[0, pl.dslice(t * block_k, block_k), :]
+        v_blk = v_ref[0, pl.dslice(t * block_k, block_k), :]
+        s = jnp.dot(q, k_blk.T) * scale  # [block_q, block_k]
+        k_pos = t * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])  # [block_q, block_k]
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v_blk)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), dtype=jnp.float32)
+    m_i, l_i, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+
+    o_ref[0, :, :] = (acc / l_i[:, None]).astype(o_ref.dtype)
+    lse_ref[0, :] = (m_i + jnp.log(l_i)).astype(lse_ref.dtype)
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, o_ref, do_ref, lse_ref, dq_ref, dk_ref, dv_ref, *, seq_len):
+    """One bh program of the backward pass.
+
+    Recomputes the probability matrix from (q, k, lse) — the classic
+    flash-backward trick — then forms dq/dk/dv with three matmuls.  The
+    full S x S tile is used per program: for the sequence lengths this
+    repo compiles (S <= 256, f32) that is <= 256 KiB, still VMEM-friendly,
+    so blocking the backward adds no memory benefit at these shapes.
+    """
+    q = q_ref[0, :, :]
+    k = k_ref[0, :, :]
+    v = v_ref[0, :, :]
+    o = o_ref[0, :, :]
+    do = do_ref[0, :, :]
+    lse = lse_ref[0, :]
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+
+    pos = jax.lax.iota(jnp.int32, seq_len)
+    mask = pos[:, None] >= pos[None, :]
+
+    s = jnp.dot(q, k.T) * scale
+    s = jnp.where(mask, s, _NEG_INF)
+    p = jnp.exp(s - lse[:, None])  # softmax probabilities, exact zeros off-causal
+    p = jnp.where(mask, p, 0.0)
+
+    dv = jnp.dot(p.T, do)
+    dp = jnp.dot(do, v.T)
+    delta = jnp.sum(do * o, axis=-1)  # [S]
+    ds = p * (dp - delta[:, None]) * scale
+    dq = jnp.dot(ds, k)
+    dk = jnp.dot(ds.T, q)
+
+    dq_ref[0, :, :] = dq.astype(dq_ref.dtype)
+    dk_ref[0, :, :] = dk.astype(dk_ref.dtype)
+    dv_ref[0, :, :] = dv.astype(dv_ref.dtype)
+
+
+def _attention_fwd_impl(q, k, v, block_q, block_k):
+    bh, s, dh = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    grid = (bh, s // block_q)
+    kernel = functools.partial(
+        _fwd_kernel, block_q=block_q, block_k=block_k, seq_len=s
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_q), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return o, lse
+
+
+def _attention_bwd_impl(q, k, v, o, do, lse):
+    bh, s, dh = q.shape
+    kernel = functools.partial(_bwd_kernel, seq_len=s)
+    spec3 = pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0))
+    spec1 = pl.BlockSpec((1, s), lambda i: (i, 0))
+    dq, dk, dv = pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[spec3, spec3, spec3, spec3, spec3, spec1],
+        out_specs=[spec3, spec3, spec3],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+            jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+            jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, o, do, lse)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def attention(q, k, v, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Causal attention over [BH, S, dh] tensors (differentiable)."""
+    o, _ = _attention_fwd_impl(q, k, v, block_q, block_k)
+    return o
+
+
+def _attention_vjp_fwd(q, k, v, block_q, block_k):
+    o, lse = _attention_fwd_impl(q, k, v, block_q, block_k)
+    return o, (q, k, v, o, lse)
+
+
+def _attention_vjp_bwd(block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _attention_bwd_impl(q, k, v, o, do, lse)
+    return dq, dk, dv
+
+
+attention.defvjp(_attention_vjp_fwd, _attention_vjp_bwd)
+
+
+def attention_with_lse(q, k, v, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Non-differentiable variant that also returns the log-sum-exp rows."""
+    return _attention_fwd_impl(q, k, v, block_q, block_k)

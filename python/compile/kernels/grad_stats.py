@@ -1,0 +1,111 @@
+"""Pallas fused chunk-gradient moment kernel — the adaptive-batching hot spot.
+
+The norm test (paper Eq. 10) and inner-product test (Eq. 12) need, per
+optimizer step, three statistics over the C per-chunk mean gradients
+g_0..g_{C-1} (each of length P = parameter count):
+
+    s1 = ||gbar||^2            with gbar = mean_c g_c
+    s2 = sum_c ||g_c - gbar||^2
+    ip = [<g_c, gbar>]_c
+
+Computed naively these need several O(C*P) passes and materialize the
+(C, P) residual matrix.  This kernel fuses all three into a single pass:
+the grid tiles the parameter axis into `block_p`-wide stripes, each
+program loads one (C, block_p) stripe into VMEM, forms the stripe's gbar
+once, and accumulates the three reductions into tiny output refs shared
+by every grid step (index_map -> 0, initialized at program 0).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the GPU formulation
+would be a grid-stride loop with atomics into global accumulators; on TPU
+the sequential grid makes the accumulation race-free by construction, and
+`block_p` is sized so the stripe (C * block_p * 4B, C <= 16) stays a few
+hundred KiB — deep inside VMEM with room for double buffering.
+
+Runs with interpret=True (CPU PJRT); see attention.py for why.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_P = 8192
+
+
+def _stats_kernel(g_ref, s1_ref, s2_ref, ip_ref):
+    """One parameter-stripe program: accumulate the three moments."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        s1_ref[0] = 0.0
+        s2_ref[0] = 0.0
+        ip_ref[:] = jnp.zeros_like(ip_ref)
+
+    g = g_ref[...]  # [C, block_p]
+    gbar = jnp.mean(g, axis=0)  # [block_p]
+    s1_ref[0] += jnp.sum(gbar * gbar)
+    diff = g - gbar[None, :]
+    s2_ref[0] += jnp.sum(diff * diff)
+    ip_ref[:] += g @ gbar  # [C]
+
+
+def grad_stats(g: jnp.ndarray, block_p: int = DEFAULT_BLOCK_P):
+    """Fused (s1, s2, ip) over stacked chunk gradients g: [C, P].
+
+    P is zero-padded up to a multiple of `block_p`; zero columns are exact
+    no-ops for all three statistics (gbar = 0 there), so padding does not
+    perturb the result.
+    """
+    c, p = g.shape
+    block_p = min(block_p, _next_multiple(p, 128))
+    p_pad = _next_multiple(p, block_p)
+    if p_pad != p:
+        g = jnp.pad(g, ((0, 0), (0, p_pad - p)))
+    grid = (p_pad // block_p,)
+    s1, s2, ip = pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((c, block_p), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+        ],
+        interpret=True,
+    )(g.astype(jnp.float32))
+    return s1[0], s2[0], ip
+
+
+def _next_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("chunks", "batch"))
+def batch_stats(g: jnp.ndarray, chunks: int, batch: int):
+    """Convenience wrapper returning the paper-level statistics.
+
+    Returns (grad_sq_norm, sigma2_sample, ip_var_sample):
+      grad_sq_norm  = ||gbar||^2                        (Eq. 10 denominator)
+      sigma2_sample ~= Var_i(grad_i)    via chunk scaling: (B/C) * s2/(C-1)
+      ip_var_sample ~= Var_i(<grad_i, gbar>)          = (B/C) * Var_c(ip_c)
+    For chunks == 1 the variances are returned as 0; the Rust controller
+    substitutes its EMA fallback (rust/src/batching).
+    """
+    s1, s2, ip = grad_stats(g)
+    if chunks > 1:
+        scale = batch / chunks
+        sigma2 = scale * s2 / (chunks - 1)
+        ip_var = scale * jnp.sum((ip - jnp.mean(ip)) ** 2) / (chunks - 1)
+    else:
+        sigma2 = jnp.asarray(0.0, jnp.float32)
+        ip_var = jnp.asarray(0.0, jnp.float32)
+    return s1, sigma2, ip_var

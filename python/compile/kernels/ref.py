@@ -1,0 +1,97 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the *correctness source of truth*: every Pallas kernel in this
+package has a matching function here, written in the most direct jnp style
+possible (no tiling, no online softmax, no accumulation tricks), and the
+pytest/hypothesis suites assert `assert_allclose(kernel(...), ref(...))`
+across shape/seed sweeps.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Causal scaled-dot-product attention, direct formulation.
+
+    Args:
+      q, k, v: float arrays of shape [BH, S, dh] (batch*heads flattened).
+
+    Returns:
+      o: [BH, S, dh] = softmax(mask(q k^T / sqrt(dh))) v
+    """
+    _, s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    logits = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None, :, :], logits, jnp.asarray(-jnp.inf, q.dtype))
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def attention_lse_ref(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise log-sum-exp of the masked attention logits, shape [BH, S].
+
+    Used to validate the auxiliary output the flash-style forward stores
+    for the backward pass.
+    """
+    _, s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    logits = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None, :, :], logits, jnp.asarray(-jnp.inf, q.dtype))
+    m = jnp.max(logits, axis=-1)
+    return m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+
+
+def grad_stats_ref(g: jnp.ndarray):
+    """Chunk-gradient moment statistics, direct formulation.
+
+    Args:
+      g: [C, P] stacked per-chunk mean gradients.
+
+    Returns:
+      (s1, s2, ip) where
+        s1 = || mean_c g_c ||^2                     (scalar)
+        s2 = sum_c || g_c - mean_c g_c ||^2         (scalar)
+        ip = [ <g_c, mean_c g_c> for c in 0..C )    ([C])
+    """
+    gbar = jnp.mean(g, axis=0)
+    s1 = jnp.sum(gbar * gbar)
+    diff = g - gbar[None, :]
+    s2 = jnp.sum(diff * diff)
+    ip = g @ gbar
+    return s1, s2, ip
+
+
+def norm_test_batch_ref(s1, s2, chunks: int, batch: int, eta: float) -> float:
+    """Requested batch size per the norm test (paper Eq. 10), reference form.
+
+    sigma^2_sample ~= (B/C) * s2 / (C-1); b_req = ceil(sigma^2 / (eta^2 s1)).
+    Mirrored by the Rust controller (rust/src/batching) — kept here so the
+    python tests pin the exact formula both sides implement.
+    """
+    if chunks <= 1:
+        return float("nan")
+    sigma2 = (batch / chunks) * float(s2) / (chunks - 1)
+    denom = eta * eta * float(s1)
+    if denom <= 0.0:
+        return float("inf")
+    return math.ceil(sigma2 / denom)
+
+
+def inner_product_test_batch_ref(s1, ip, chunks: int, batch: int, theta: float) -> float:
+    """Requested batch size per the inner-product test (paper Eq. 12)."""
+    if chunks <= 1:
+        return float("nan")
+    ip = jnp.asarray(ip)
+    var_c = float(jnp.sum((ip - jnp.mean(ip)) ** 2)) / (chunks - 1)
+    var_i = (batch / chunks) * var_c
+    denom = theta * theta * float(s1) * float(s1)
+    if denom <= 0.0:
+        return float("inf")
+    return math.ceil(var_i / denom)

@@ -1,0 +1,321 @@
+"""L2: MicroLlama-style decoder transformer + AdamW inner step, in pure JAX.
+
+This module defines everything the Rust coordinator executes through PJRT:
+
+  * a decoder-only transformer (RMSNorm, SwiGLU MLP, RoPE, causal attention
+    via the L1 Pallas kernel) — the same architecture family as the
+    MicroLlama model the paper trains (DESIGN.md §4 records the width
+    substitution);
+  * next-token cross-entropy loss;
+  * chunked gradient computation feeding the L1 `grad_stats` kernel, which
+    yields the norm-test / inner-product-test statistics (paper Eqs. 8-12);
+  * a fused AdamW inner-optimizer step (the paper's inner optimizer).
+
+Parameter convention: ALL parameters cross the Rust<->PJRT boundary as one
+flat f32 vector (see DESIGN.md §Flat parameter convention).  `ParamLayout`
+records the (name, shape, offset) table that is serialized into
+artifacts/<profile>/meta.json so the Rust side can interpret the vector.
+
+Nothing here runs at serving/training time on the Python side: `aot.py`
+lowers these functions to HLO text once, and the Rust runtime executes them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attention import attention
+from .kernels.grad_stats import grad_stats
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + optimizer hyperparameters baked into artifacts."""
+
+    vocab: int = 256
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    seq_len: int = 64
+    # AdamW (inner optimizer; paper uses AdamW with lr 4e-4 / 2e-5, wd 0.1)
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    rope_theta: float = 10000.0
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ffn(self) -> int:
+        # SwiGLU sizing: 8/3 * d_model, rounded up to a multiple of 8.
+        return ((8 * self.d_model // 3) + 7) // 8 * 8
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout / flat-vector packing
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) table. Order defines flat offsets."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = [("embed", (cfg.vocab, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln_attn", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln_mlp", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_model, cfg.d_ffn)),
+            (p + "w_up", (cfg.d_model, cfg.d_ffn)),
+            (p + "w_down", (cfg.d_ffn, cfg.d_model)),
+        ]
+    spec.append(("ln_final", (cfg.d_model,)))
+    return spec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamLayout:
+    names: Tuple[str, ...]
+    shapes: Tuple[Tuple[int, ...], ...]
+    offsets: Tuple[int, ...]
+    total: int
+
+    @staticmethod
+    def build(cfg: ModelConfig) -> "ParamLayout":
+        spec = param_spec(cfg)
+        names, shapes, offsets = [], [], []
+        off = 0
+        for name, shape in spec:
+            names.append(name)
+            shapes.append(shape)
+            offsets.append(off)
+            off += int(np.prod(shape))
+        return ParamLayout(tuple(names), tuple(shapes), tuple(offsets), off)
+
+    def to_json_obj(self) -> dict:
+        return {
+            "total": self.total,
+            "entries": [
+                {"name": n, "shape": list(s), "offset": o}
+                for n, s, o in zip(self.names, self.shapes, self.offsets)
+            ],
+        }
+
+
+def unflatten(flat: jnp.ndarray, layout: ParamLayout) -> Dict[str, jnp.ndarray]:
+    """Static-offset slicing of the flat vector into named tensors."""
+    out = {}
+    for name, shape, off in zip(layout.names, layout.shapes, layout.offsets):
+        n = int(np.prod(shape))
+        out[name] = jax.lax.slice(flat, (off,), (off + n,)).reshape(shape)
+    return out
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """GPT-2-style init, returned as the flat f32 vector (numpy, host-side)."""
+    layout = ParamLayout.build(cfg)
+    rng = np.random.default_rng(seed)
+    flat = np.empty(layout.total, dtype=np.float32)
+    resid_scale = 0.02 / math.sqrt(2.0 * cfg.n_layers)
+    for name, shape, off in zip(layout.names, layout.shapes, layout.offsets):
+        n = int(np.prod(shape))
+        if name.endswith(("ln_attn", "ln_mlp", "ln_final")):
+            vals = np.ones(n, dtype=np.float32)
+        elif name.endswith(("wo", "w_down")):
+            vals = rng.normal(0.0, resid_scale, n).astype(np.float32)
+        else:
+            vals = rng.normal(0.0, 0.02, n).astype(np.float32)
+        flat[off : off + n] = vals
+    return flat
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def _rope_tables(cfg: ModelConfig) -> Tuple[np.ndarray, np.ndarray]:
+    """Precomputed RoPE cos/sin tables, baked as constants into the HLO."""
+    dh = cfg.d_head
+    inv = 1.0 / (cfg.rope_theta ** (np.arange(0, dh, 2, dtype=np.float64) / dh))
+    t = np.arange(cfg.seq_len, dtype=np.float64)
+    freqs = np.outer(t, inv)  # [S, dh/2]
+    return np.cos(freqs).astype(np.float32), np.sin(freqs).astype(np.float32)
+
+
+def _apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, S, H, dh]; rotate pairs (even, odd) along dh."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    r1 = x1 * c - x2 * s
+    r2 = x1 * s + x2 * c
+    # interleave back
+    out = jnp.stack([r1, r2], axis=-1)
+    return out.reshape(x.shape)
+
+
+def forward(flat: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Logits [B, S, V] for input token ids [B, S] (int32)."""
+    layout = ParamLayout.build(cfg)
+    p = unflatten(flat, layout)
+    cos, sin = _rope_tables(cfg)
+    cos, sin = jnp.asarray(cos), jnp.asarray(sin)
+
+    b, s = tokens.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x = jnp.take(p["embed"], tokens, axis=0)  # [B, S, D]
+
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        hn = _rmsnorm(x, p[pre + "ln_attn"])
+        q = (hn @ p[pre + "wq"]).reshape(b, s, h, dh)
+        k = (hn @ p[pre + "wk"]).reshape(b, s, h, dh)
+        v = (hn @ p[pre + "wv"]).reshape(b, s, h, dh)
+        q = _apply_rope(q, cos, sin)
+        k = _apply_rope(k, cos, sin)
+        # [B, S, H, dh] -> [B*H, S, dh] for the Pallas kernel
+        qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+        kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+        vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+        of = attention(qf, kf, vf)
+        o = of.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        x = x + o @ p[pre + "wo"]
+
+        hn = _rmsnorm(x, p[pre + "ln_mlp"])
+        gate = jax.nn.silu(hn @ p[pre + "w_gate"])
+        up = hn @ p[pre + "w_up"]
+        x = x + (gate * up) @ p[pre + "w_down"]
+
+    x = _rmsnorm(x, p["ln_final"])
+    return x @ p["embed"].T  # tied output head
+
+
+def loss_fn(flat: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Mean next-token cross-entropy over a [B, S+1] token batch."""
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    logits = forward(flat, inp, cfg)  # [B, S, V]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+# ---------------------------------------------------------------------------
+# Chunked gradients + adaptive-batching statistics
+# ---------------------------------------------------------------------------
+
+
+def chunked_grads(flat: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig, chunks: int):
+    """Per-chunk mean losses/gradients via lax.map (keeps HLO size flat).
+
+    tokens: [B, S+1] with B % chunks == 0.  Returns (losses [C], G [C, P]).
+    """
+    b = tokens.shape[0]
+    assert b % chunks == 0, (b, chunks)
+    grouped = tokens.reshape(chunks, b // chunks, tokens.shape[1])
+
+    def one(chunk_tokens):
+        return jax.value_and_grad(loss_fn)(flat, chunk_tokens, cfg)
+
+    losses, grads = jax.lax.map(one, grouped)
+    return losses, grads
+
+
+def step_stats(grads: jnp.ndarray, chunks: int, batch: int):
+    """(grad_sq_norm, sigma2_sample, ip_var_sample) via the L1 stats kernel.
+
+    Chunk-to-sample scaling per DESIGN.md §Gradient-variance statistics:
+    Var_c(g_c) = sigma2_sample / chunk_size  =>  sigma2_sample = (B/C) * ...
+    """
+    s1, s2, ip = grad_stats(grads)
+    if chunks > 1:
+        scale = batch / chunks
+        sigma2 = scale * s2 / (chunks - 1)
+        ip_var = scale * jnp.sum((ip - jnp.mean(ip)) ** 2) / (chunks - 1)
+    else:
+        sigma2 = jnp.zeros((), jnp.float32)
+        ip_var = jnp.zeros((), jnp.float32)
+    return s1, sigma2, ip_var
+
+
+# ---------------------------------------------------------------------------
+# AdamW inner step + exported entry points
+# ---------------------------------------------------------------------------
+
+
+def adamw_update(flat, m, v, grad, step, lr, cfg: ModelConfig):
+    """One fused AdamW step. `step` is the 1-based step count as f32[1]."""
+    t = step[0]
+    b1, b2 = cfg.beta1, cfg.beta2
+    m_new = b1 * m + (1.0 - b1) * grad
+    v_new = b2 * v + (1.0 - b2) * grad * grad
+    m_hat = m_new / (1.0 - b1**t)
+    v_hat = v_new / (1.0 - b2**t)
+    upd = m_hat / (jnp.sqrt(v_hat) + cfg.eps) + cfg.weight_decay * flat
+    return flat - lr[0] * upd, m_new, v_new
+
+
+def train_step(flat, m, v, step, lr, tokens, *, cfg: ModelConfig, chunks: int):
+    """Full inner step: chunked grads -> stats kernel -> AdamW.
+
+    Returns (new_flat, new_m, new_v, loss, grad_sq_norm, sigma2, ip_var),
+    scalars packed as f32[1] so the Rust side reads uniform array literals.
+    """
+    batch = tokens.shape[0]
+    losses, grads = chunked_grads(flat, tokens, cfg, chunks)
+    gbar = jnp.mean(grads, axis=0)
+    s1, sigma2, ip_var = step_stats(grads, chunks, batch)
+    new_flat, new_m, new_v = adamw_update(flat, m, v, gbar, step, lr, cfg)
+    pack = lambda x: jnp.reshape(x, (1,)).astype(jnp.float32)
+    return (
+        new_flat,
+        new_m,
+        new_v,
+        pack(jnp.mean(losses)),
+        pack(s1),
+        pack(sigma2),
+        pack(ip_var),
+    )
+
+
+def grad_step(flat, tokens, *, cfg: ModelConfig, chunks: int):
+    """SwitchMode micro-step: gradient + stats only (no update applied).
+
+    Returns (gbar, loss, grad_sq_norm, sigma2, ip_var).
+    """
+    batch = tokens.shape[0]
+    losses, grads = chunked_grads(flat, tokens, cfg, chunks)
+    gbar = jnp.mean(grads, axis=0)
+    s1, sigma2, ip_var = step_stats(grads, chunks, batch)
+    pack = lambda x: jnp.reshape(x, (1,)).astype(jnp.float32)
+    return gbar, pack(jnp.mean(losses)), pack(s1), pack(sigma2), pack(ip_var)
+
+
+def apply_update(flat, m, v, step, lr, grad, *, cfg: ModelConfig):
+    """SwitchMode commit: AdamW with an externally-accumulated gradient."""
+    return adamw_update(flat, m, v, grad, step, lr, cfg)
+
+
+def eval_step(flat, tokens, *, cfg: ModelConfig):
+    """Validation loss over a [B, S+1] batch, as f32[1]."""
+    return (jnp.reshape(loss_fn(flat, tokens, cfg), (1,)),)

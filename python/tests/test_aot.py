@@ -1,0 +1,89 @@
+"""AOT export path: HLO text generation, ladder metadata, artifact layout."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+def test_chunks_for():
+    assert aot.chunks_for(1, 8) == 1
+    assert aot.chunks_for(2, 8) == 2
+    assert aot.chunks_for(4, 8) == 4
+    assert aot.chunks_for(16, 8) == 8
+    assert aot.chunks_for(16, 4) == 4
+    assert aot.chunks_for(6, 8) == 2  # largest pow2 divisor of 6 is 2
+
+
+def test_profiles_ladders_sorted_pow2():
+    for name, prof in aot.PROFILES.items():
+        ladder = prof["ladder"]
+        assert ladder == sorted(ladder), name
+        for b in ladder:
+            assert b & (b - 1) == 0, f"{name}: rung {b} not a power of two"
+        cfg = prof["cfg"]
+        assert cfg.d_model % cfg.n_heads == 0
+
+
+def test_hlo_text_is_parseable_module():
+    """Lower a small program and check HLO text structure (ENTRY + tuple)."""
+    cfg = M.ModelConfig(vocab=32, d_model=16, n_layers=1, n_heads=2, seq_len=8)
+    layout = M.ParamLayout.build(cfg)
+    import functools
+    fn = functools.partial(M.eval_step, cfg=cfg)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((layout.total,), jnp.float32),
+        jax.ShapeDtypeStruct((2, cfg.seq_len + 1), jnp.int32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[1]" in text  # tuple-packed scalar loss
+
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "tiny")
+
+
+@pytest.mark.skipif(not os.path.isdir(ARTIFACTS), reason="run `make artifacts` first")
+class TestEmittedArtifacts:
+    """Validate the real artifacts/ tree that Rust consumes."""
+
+    @pytest.fixture(scope="class")
+    def meta(self):
+        with open(os.path.join(ARTIFACTS, "meta.json")) as f:
+            return json.load(f)
+
+    def test_meta_param_count_matches_layout(self, meta):
+        cfg = M.ModelConfig(**meta["model"])
+        assert M.ParamLayout.build(cfg).total == meta["param_count"]
+
+    def test_layout_entries_contiguous(self, meta):
+        off = 0
+        for e in meta["layout"]["entries"]:
+            assert e["offset"] == off
+            off += int(np.prod(e["shape"]))
+        assert off == meta["layout"]["total"] == meta["param_count"]
+
+    def test_all_listed_files_exist(self, meta):
+        for fname in meta["files"]:
+            assert os.path.isfile(os.path.join(ARTIFACTS, fname)), fname
+        assert os.path.isfile(os.path.join(ARTIFACTS, meta["init_params"]["file"]))
+
+    def test_init_params_size_and_hash(self, meta):
+        import hashlib
+        raw = open(os.path.join(ARTIFACTS, meta["init_params"]["file"]), "rb").read()
+        assert len(raw) == 4 * meta["param_count"]
+        assert hashlib.sha256(raw).hexdigest()[:16] == meta["init_params"]["sha256"]
+
+    def test_ladder_chunk_consistency(self, meta):
+        for rung in meta["ladder"]:
+            assert rung["batch"] % rung["chunks"] == 0
+
+    def test_hlo_files_have_entry(self, meta):
+        for rung in meta["ladder"]:
+            head = open(os.path.join(ARTIFACTS, rung["file"])).read(200000)
+            assert "ENTRY" in head

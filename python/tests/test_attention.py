@@ -1,0 +1,111 @@
+"""Pallas attention kernel vs the pure-jnp oracle (the CORE L1 signal)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention, attention_with_lse
+from compile.kernels import ref
+
+
+def _rand_qkv(rng, bh, s, dh, scale=1.0):
+    mk = lambda: jnp.asarray(rng.normal(0.0, scale, size=(bh, s, dh)), jnp.float32)
+    return mk(), mk(), mk()
+
+
+@pytest.mark.parametrize("bh,s,dh", [(1, 8, 4), (2, 64, 16), (4, 128, 32), (1, 256, 64)])
+def test_forward_matches_ref(bh, s, dh):
+    rng = np.random.default_rng(42 + s)
+    q, k, v = _rand_qkv(rng, bh, s, dh)
+    o = attention(q, k, v)
+    np.testing.assert_allclose(o, ref.attention_ref(q, k, v), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(8, 8), (16, 32), (64, 64), (32, 16)])
+def test_forward_block_shape_invariance(bq, bk):
+    """Tiling must not change the numerics: every block shape agrees."""
+    rng = np.random.default_rng(7)
+    q, k, v = _rand_qkv(rng, 2, 64, 16)
+    o = attention(q, k, v, bq, bk)
+    np.testing.assert_allclose(o, ref.attention_ref(q, k, v), rtol=2e-5, atol=2e-5)
+
+
+def test_lse_matches_ref():
+    rng = np.random.default_rng(3)
+    q, k, v = _rand_qkv(rng, 2, 64, 16)
+    _, lse = attention_with_lse(q, k, v)
+    np.testing.assert_allclose(lse, ref.attention_lse_ref(q, k), rtol=2e-5, atol=2e-5)
+
+
+def test_causality():
+    """Output at position t must not depend on tokens > t."""
+    rng = np.random.default_rng(9)
+    q, k, v = _rand_qkv(rng, 1, 32, 8)
+    o1 = attention(q, k, v)
+    k2 = k.at[:, 20:, :].set(999.0)
+    v2 = v.at[:, 20:, :].set(-999.0)
+    o2 = attention(q, k2, v2)
+    np.testing.assert_allclose(o1[:, :20, :], o2[:, :20, :], rtol=1e-6, atol=1e-6)
+
+
+def test_first_position_is_v0():
+    """Row 0 attends only to itself: o[0] == v[0]."""
+    rng = np.random.default_rng(11)
+    q, k, v = _rand_qkv(rng, 3, 16, 8)
+    o = attention(q, k, v)
+    np.testing.assert_allclose(o[:, 0, :], v[:, 0, :], rtol=1e-6, atol=1e-6)
+
+
+def test_gradients_match_ref():
+    rng = np.random.default_rng(5)
+    q, k, v = _rand_qkv(rng, 2, 32, 16)
+    f = lambda q, k, v: jnp.sum(jnp.sin(attention(q, k, v)))
+    fr = lambda q, k, v: jnp.sum(jnp.sin(ref.attention_ref(q, k, v)))
+    gk = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-5)
+
+
+def test_gradients_under_jit():
+    """custom_vjp must survive jit + being embedded in a larger graph."""
+    rng = np.random.default_rng(6)
+    q, k, v = _rand_qkv(rng, 1, 16, 8)
+    w = jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)
+
+    @jax.jit
+    def loss(q, w):
+        return jnp.sum(attention(q, k, v) @ w)
+
+    g = jax.grad(loss)(q, w)
+    gr = jax.grad(lambda q, w: jnp.sum(ref.attention_ref(q, k, v) @ w))(q, w)
+    np.testing.assert_allclose(g, gr, rtol=5e-4, atol=5e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bh=st.integers(1, 4),
+    s_pow=st.integers(2, 6),  # S in {4..64}
+    dh_pow=st.integers(2, 5),  # dh in {4..32}
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 5.0]),
+)
+def test_hypothesis_sweep(bh, s_pow, dh_pow, seed, scale):
+    """Randomized shape/scale sweep; larger scales stress the online softmax."""
+    s, dh = 2**s_pow, 2**dh_pow
+    rng = np.random.default_rng(seed)
+    q, k, v = _rand_qkv(rng, bh, s, dh, scale)
+    o = attention(q, k, v, min(16, s), min(16, s))
+    np.testing.assert_allclose(o, ref.attention_ref(q, k, v), rtol=3e-4, atol=3e-4)
+
+
+def test_extreme_logits_no_nan():
+    """Online softmax must stay finite for large-magnitude logits."""
+    q = jnp.full((1, 16, 8), 30.0, jnp.float32)
+    k = jnp.full((1, 16, 8), 30.0, jnp.float32)
+    v = jnp.ones((1, 16, 8), jnp.float32)
+    o = attention(q, k, v)
+    assert bool(jnp.all(jnp.isfinite(o)))
+    np.testing.assert_allclose(o, jnp.ones_like(o), rtol=1e-5)

@@ -1,0 +1,110 @@
+"""Pallas grad_stats kernel vs the pure-jnp oracle + scaling identities."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.grad_stats import grad_stats, batch_stats
+from compile.kernels import ref
+
+
+def _g(rng, c, p, scale=1.0):
+    return jnp.asarray(rng.normal(0.0, scale, size=(c, p)), jnp.float32)
+
+
+@pytest.mark.parametrize("c,p", [(2, 64), (4, 1000), (8, 50000), (16, 123)])
+def test_matches_ref(c, p):
+    rng = np.random.default_rng(c * 1000 + p)
+    g = _g(rng, c, p)
+    s1, s2, ip = grad_stats(g, block_p=4096)
+    r1, r2, ri = ref.grad_stats_ref(g)
+    np.testing.assert_allclose(s1, r1, rtol=2e-4)
+    np.testing.assert_allclose(s2, r2, rtol=2e-4)
+    np.testing.assert_allclose(ip, ri, rtol=2e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_p", [128, 512, 4096, 1 << 20])
+def test_block_size_invariance(block_p):
+    """Stripe width must not change the accumulated statistics."""
+    rng = np.random.default_rng(77)
+    g = _g(rng, 4, 10000)
+    s1a, s2a, ipa = grad_stats(g, block_p=block_p)
+    r1, r2, ri = ref.grad_stats_ref(g)
+    np.testing.assert_allclose(s1a, r1, rtol=2e-4)
+    np.testing.assert_allclose(s2a, r2, rtol=2e-4)
+    np.testing.assert_allclose(ipa, ri, rtol=2e-4, atol=1e-4)
+
+
+def test_padding_is_noop():
+    """P not a multiple of block_p: zero-padding must not perturb stats."""
+    rng = np.random.default_rng(5)
+    g = _g(rng, 3, 130)  # forces padding with block_p=128
+    s1, s2, ip = grad_stats(g, block_p=128)
+    r1, r2, ri = ref.grad_stats_ref(g)
+    np.testing.assert_allclose(s1, r1, rtol=2e-4)
+    np.testing.assert_allclose(s2, r2, rtol=2e-4)
+    np.testing.assert_allclose(ip, ri, rtol=2e-4, atol=1e-4)
+
+
+def test_identical_chunks_zero_variance():
+    """All chunks equal => s2 == 0 and ip uniform."""
+    g0 = jnp.ones((4, 256), jnp.float32) * 0.5
+    s1, s2, ip = grad_stats(g0, block_p=128)
+    np.testing.assert_allclose(s2, 0.0, atol=1e-6)
+    np.testing.assert_allclose(s1, 256 * 0.25, rtol=1e-5)
+    np.testing.assert_allclose(ip, jnp.full((4,), 256 * 0.25), rtol=1e-5)
+
+
+def test_single_chunk():
+    """C=1: s2 must be 0 (gbar == g0) and batch_stats returns zero variances."""
+    rng = np.random.default_rng(2)
+    g = _g(rng, 1, 500)
+    s1, s2, ip = grad_stats(g, block_p=128)
+    np.testing.assert_allclose(s2, 0.0, atol=1e-5)
+    _, sigma2, ip_var = batch_stats(g, chunks=1, batch=1)
+    assert float(sigma2) == 0.0 and float(ip_var) == 0.0
+
+
+def test_batch_stats_scaling():
+    """sigma2 must carry the (B/C) chunk-to-sample scaling (DESIGN.md)."""
+    rng = np.random.default_rng(8)
+    g = _g(rng, 4, 1000)
+    s1, sigma2, ip_var = batch_stats(g, chunks=4, batch=32)
+    _, r2, ri = ref.grad_stats_ref(g)
+    np.testing.assert_allclose(sigma2, (32 / 4) * float(r2) / 3, rtol=2e-4)
+    ivar = float(jnp.sum((ri - jnp.mean(ri)) ** 2)) / 3
+    np.testing.assert_allclose(ip_var, (32 / 4) * ivar, rtol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c=st.integers(1, 12),
+    p=st.integers(1, 3000),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    block_pow=st.integers(7, 12),
+)
+def test_hypothesis_sweep(c, p, seed, scale, block_pow):
+    rng = np.random.default_rng(seed)
+    g = _g(rng, c, p, scale)
+    s1, s2, ip = grad_stats(g, block_p=2**block_pow)
+    r1, r2, ri = ref.grad_stats_ref(g)
+    tol = dict(rtol=3e-4, atol=3e-4 * scale * scale * max(p, 1))
+    np.testing.assert_allclose(s1, r1, **tol)
+    np.testing.assert_allclose(s2, r2, **tol)
+    np.testing.assert_allclose(ip, ri, **tol)
+
+
+def test_norm_test_formula_reference():
+    """Pin the Eq.10 arithmetic both the python oracle and Rust implement."""
+    b = ref.norm_test_batch_ref(s1=2.0, s2=6.0, chunks=4, batch=16, eta=0.8)
+    # sigma2 = (16/4) * 6/3 = 8; denom = 0.64 * 2 = 1.28; ceil(8/1.28) = 7
+    assert b == 7
+
+
+def test_inner_product_test_formula_reference():
+    ip = [1.0, 2.0, 3.0, 4.0]
+    b = ref.inner_product_test_batch_ref(s1=2.0, ip=ip, chunks=4, batch=16, theta=0.5)
+    # var_c = 5/3; var_i = 4*5/3; denom = 0.25*4 = 1.0 -> ceil(20/3) = 7
+    assert b == 7

@@ -1,0 +1,213 @@
+"""L2 model invariants: layout, forward, loss, chunked grads, AdamW."""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, seq_len=16)
+
+
+@pytest.fixture(scope="module")
+def flat():
+    return jnp.asarray(M.init_params(CFG, seed=3))
+
+
+def _tokens(rng, b, cfg=CFG):
+    return jnp.asarray(rng.integers(0, cfg.vocab, size=(b, cfg.seq_len + 1)), jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# layout / packing
+# --------------------------------------------------------------------------
+
+
+def test_layout_offsets_contiguous():
+    layout = M.ParamLayout.build(CFG)
+    off = 0
+    for shape, o in zip(layout.shapes, layout.offsets):
+        assert o == off
+        off += int(np.prod(shape))
+    assert layout.total == off
+
+
+def test_layout_names_unique():
+    layout = M.ParamLayout.build(CFG)
+    assert len(set(layout.names)) == len(layout.names)
+
+
+def test_unflatten_roundtrip(flat):
+    layout = M.ParamLayout.build(CFG)
+    parts = M.unflatten(flat, layout)
+    rebuilt = jnp.concatenate([parts[n].reshape(-1) for n in layout.names])
+    np.testing.assert_array_equal(rebuilt, flat)
+
+
+def test_init_deterministic():
+    a = M.init_params(CFG, seed=9)
+    b = M.init_params(CFG, seed=9)
+    np.testing.assert_array_equal(a, b)
+    c = M.init_params(CFG, seed=10)
+    assert not np.array_equal(a, c)
+
+
+def test_init_norm_gains_are_one():
+    layout = M.ParamLayout.build(CFG)
+    flat = M.init_params(CFG, seed=0)
+    for name, shape, off in zip(layout.names, layout.shapes, layout.offsets):
+        if "ln_" in name:
+            n = int(np.prod(shape))
+            np.testing.assert_array_equal(flat[off : off + n], np.ones(n, np.float32))
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+
+
+def test_forward_shape(flat):
+    rng = np.random.default_rng(0)
+    toks = _tokens(rng, 3)[:, :-1]
+    logits = M.forward(flat, toks, CFG)
+    assert logits.shape == (3, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_loss_near_uniform_at_init(flat):
+    rng = np.random.default_rng(1)
+    loss = M.loss_fn(flat, _tokens(rng, 8), CFG)
+    assert abs(float(loss) - math.log(CFG.vocab)) < 0.3
+
+
+def test_forward_causal(flat):
+    """Changing a future token must not change earlier logits."""
+    rng = np.random.default_rng(2)
+    toks = _tokens(rng, 1)[:, :-1]
+    l1 = M.forward(flat, toks, CFG)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % CFG.vocab)
+    l2 = M.forward(flat, toks2, CFG)
+    np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], rtol=1e-5, atol=1e-5)
+
+
+def test_training_reduces_loss(flat):
+    """A few AdamW steps on one batch must overfit it (loss drops)."""
+    rng = np.random.default_rng(4)
+    toks = _tokens(rng, 4)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    f = flat
+    ts = jax.jit(lambda f, m, v, s: M.train_step(
+        f, m, v, s, jnp.full((1,), 1e-3, jnp.float32), toks, cfg=CFG, chunks=4))
+    first = None
+    for i in range(8):
+        f, m, v, loss, *_ = ts(f, m, v, jnp.full((1,), float(i + 1), jnp.float32))
+        if first is None:
+            first = float(loss[0])
+    assert float(loss[0]) < first - 0.1
+
+
+# --------------------------------------------------------------------------
+# chunked grads + stats
+# --------------------------------------------------------------------------
+
+
+def test_chunked_grads_mean_equals_full_grad(flat):
+    rng = np.random.default_rng(5)
+    toks = _tokens(rng, 8)
+    _, grads = M.chunked_grads(flat, toks, CFG, chunks=4)
+    gbar = jnp.mean(grads, axis=0)
+    gfull = jax.grad(M.loss_fn)(flat, toks, CFG)
+    np.testing.assert_allclose(gbar, gfull, rtol=1e-3, atol=1e-5)
+
+
+def test_chunked_losses_mean_equals_full_loss(flat):
+    rng = np.random.default_rng(6)
+    toks = _tokens(rng, 8)
+    losses, _ = M.chunked_grads(flat, toks, CFG, chunks=4)
+    np.testing.assert_allclose(
+        jnp.mean(losses), M.loss_fn(flat, toks, CFG), rtol=1e-5)
+
+
+def test_grad_step_matches_train_step_stats(flat):
+    rng = np.random.default_rng(7)
+    toks = _tokens(rng, 8)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    one = jnp.ones((1,), jnp.float32)
+    lr = jnp.full((1,), 1e-3, jnp.float32)
+    _, _, _, loss_a, s1_a, sg_a, ip_a = M.train_step(
+        flat, m, v, one, lr, toks, cfg=CFG, chunks=4)
+    gbar, loss_b, s1_b, sg_b, ip_b = M.grad_step(flat, toks, cfg=CFG, chunks=4)
+    np.testing.assert_allclose(loss_a, loss_b, rtol=1e-6)
+    np.testing.assert_allclose(s1_a, s1_b, rtol=1e-5)
+    np.testing.assert_allclose(sg_a, sg_b, rtol=1e-5)
+    np.testing.assert_allclose(ip_a, ip_b, rtol=1e-5)
+    # and the apply path must reproduce train_step's parameter update
+    f2, m2, v2 = M.apply_update(flat, m, v, one, lr, gbar, cfg=CFG)
+    f1, m1, v1, *_ = M.train_step(flat, m, v, one, lr, toks, cfg=CFG, chunks=4)
+    np.testing.assert_allclose(f1, f2, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(m1, m2, rtol=1e-5, atol=1e-8)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5, atol=1e-10)
+
+
+def test_adamw_against_manual_numpy():
+    """Pin the optimizer arithmetic against a plain numpy transcription."""
+    cfg = CFG
+    rng = np.random.default_rng(8)
+    n = 100
+    flat = rng.normal(size=n).astype(np.float32)
+    m = rng.normal(size=n).astype(np.float32) * 0.1
+    v = np.abs(rng.normal(size=n)).astype(np.float32) * 0.01
+    g = rng.normal(size=n).astype(np.float32)
+    t, lr = 5.0, 2e-3
+    f2, m2, v2 = M.adamw_update(
+        jnp.asarray(flat), jnp.asarray(m), jnp.asarray(v), jnp.asarray(g),
+        jnp.asarray([t], jnp.float32), jnp.asarray([lr], jnp.float32), cfg)
+    mn = cfg.beta1 * m + (1 - cfg.beta1) * g
+    vn = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+    mh = mn / (1 - cfg.beta1**t)
+    vh = vn / (1 - cfg.beta2**t)
+    fn = flat - lr * (mh / (np.sqrt(vh) + cfg.eps) + cfg.weight_decay * flat)
+    np.testing.assert_allclose(f2, fn, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(m2, mn, rtol=1e-6)
+    np.testing.assert_allclose(v2, vn, rtol=1e-6)
+
+
+def test_eval_step_matches_loss(flat):
+    rng = np.random.default_rng(9)
+    toks = _tokens(rng, 4)
+    (l,) = M.eval_step(flat, toks, cfg=CFG)
+    np.testing.assert_allclose(l[0], M.loss_fn(flat, toks, CFG), rtol=1e-6)
+
+
+def test_rope_orthogonality():
+    """RoPE preserves vector norms (it is a rotation)."""
+    cfg = CFG
+    from compile.model import _rope_tables, _apply_rope
+    cos, sin = _rope_tables(cfg)
+    rng = np.random.default_rng(10)
+    x = jnp.asarray(rng.normal(size=(2, cfg.seq_len, cfg.n_heads, cfg.d_head)), jnp.float32)
+    xr = _apply_rope(x, jnp.asarray(cos), jnp.asarray(sin))
+    np.testing.assert_allclose(
+        jnp.linalg.norm(xr, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j (the defining property)."""
+    cfg = M.ModelConfig(vocab=16, d_model=8, n_layers=1, n_heads=1, seq_len=32)
+    from compile.model import _rope_tables, _apply_rope
+    cos, sin = _rope_tables(cfg)
+    rng = np.random.default_rng(11)
+    qv = rng.normal(size=cfg.d_head).astype(np.float32)
+    kv = rng.normal(size=cfg.d_head).astype(np.float32)
+    q = jnp.tile(jnp.asarray(qv), (1, cfg.seq_len, 1, 1))
+    k = jnp.tile(jnp.asarray(kv), (1, cfg.seq_len, 1, 1))
+    qr = _apply_rope(q, jnp.asarray(cos), jnp.asarray(sin))[0, :, 0, :]
+    kr = _apply_rope(k, jnp.asarray(cos), jnp.asarray(sin))[0, :, 0, :]
+    d1 = float(qr[5] @ kr[2])   # offset 3
+    d2 = float(qr[20] @ kr[17])  # offset 3
+    np.testing.assert_allclose(d1, d2, rtol=1e-4)

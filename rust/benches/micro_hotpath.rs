@@ -1,0 +1,154 @@
+//! MICRO — hot-path microbenchmarks backing EXPERIMENTS.md §Perf:
+//! the L3 dense-vector operations (merge, outer delta+step, controller),
+//! data sampling, the MockEngine step, and — when artifacts are present —
+//! the PJRT train/grad/eval calls across the batch ladder.
+//!
+//! Run: `cargo bench --bench micro_hotpath` (`--quick` to smoke).
+
+use adloco::batching::BatchController;
+use adloco::benchkit::{quick_mode, time_auto, Table};
+use adloco::config::presets;
+use adloco::data::{make_shards, BatchSampler, Corpus, CorpusSpec, TokenBatch};
+use adloco::engine::{MockEngine, MockSpec, StepStats, TrainEngine};
+use adloco::merge::do_merge;
+use adloco::outer::OuterOpt;
+use adloco::util::Rng;
+
+fn main() {
+    let quick = quick_mode();
+    let budget = if quick { 0.05 } else { 0.5 };
+    let p = 117_056; // tiny-profile parameter count
+    let mut rng = Rng::new(1);
+    let mut table = Table::new(&["op", "median_ms", "p90_ms", "ops_per_s"]);
+    fn push(table: &mut Table, name: &str, t: adloco::benchkit::Timing) {
+        table.row(&[
+            name.to_string(),
+            format!("{:.4}", t.median_s * 1e3),
+            format!("{:.4}", t.p90_s * 1e3),
+            format!("{:.1}", t.per_sec()),
+        ]);
+    }
+
+    // ---- merge (DoMerge weighted average over 4 trainers) ----------------
+    let mut bufs: Vec<Vec<f32>> =
+        (0..4).map(|_| (0..p).map(|_| rng.normal() as f32).collect()).collect();
+    let t = time_auto(budget, 5, || {
+        let mut it = bufs.iter_mut();
+        let (a, b, c, d) =
+            (it.next().unwrap(), it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+        let mut members = vec![
+            (0usize, 3usize, a.as_mut_slice()),
+            (1, 7, b.as_mut_slice()),
+            (2, 2, c.as_mut_slice()),
+            (3, 9, d.as_mut_slice()),
+        ];
+        std::hint::black_box(do_merge(&mut members));
+    });
+    push(&mut table, "do_merge(4 x 117k)", t);
+
+    // ---- outer delta + Nesterov step --------------------------------------
+    let x_prev: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+    let workers: Vec<Vec<f32>> =
+        (0..4).map(|_| (0..p).map(|_| rng.normal() as f32).collect()).collect();
+    let mut x = x_prev.clone();
+    let mut delta = vec![0.0f32; p];
+    let mut opt = OuterOpt::new(
+        adloco::config::OuterOptKind::Nesterov { momentum: 0.9 },
+        0.5,
+        p,
+    );
+    let t = time_auto(budget, 5, || {
+        let wr: Vec<&[f32]> = workers.iter().map(|w| w.as_slice()).collect();
+        OuterOpt::compute_delta(&x_prev, &wr, &mut delta);
+        opt.step(&mut x, &delta);
+        std::hint::black_box(&x);
+    });
+    push(&mut table, "outer_delta+nesterov(4 x 117k)", t);
+
+    // ---- batch controller --------------------------------------------------
+    let mut ctl = BatchController::new(presets::paper_table1().algo.batching);
+    let stats = StepStats { loss: 2.0, grad_sq_norm: 0.5, sigma2: 1.3, ip_var: 0.2 };
+    let t = time_auto(budget.min(0.1), 100, || {
+        for _ in 0..1000 {
+            ctl.observe(std::hint::black_box(&stats), 8);
+        }
+    });
+    table.row(&[
+        "controller.observe x1000".into(),
+        format!("{:.4}", t.median_s * 1e3),
+        format!("{:.4}", t.p90_s * 1e3),
+        format!("{:.1}", t.per_sec()),
+    ]);
+
+    // ---- data sampling ------------------------------------------------------
+    let corpus = Corpus::generate(CorpusSpec::new(4000, 64, 256, 1.1, 5));
+    let shard = make_shards(4000, 1, 1.0, &mut rng).pop().unwrap();
+    let mut sampler = BatchSampler::new(shard, rng.fork(9));
+    let mut buf = TokenBatch::new(16, corpus.width());
+    let t = time_auto(budget.min(0.2), 20, || {
+        sampler.next_batch(&corpus, &mut buf);
+        std::hint::black_box(&buf);
+    });
+    push(&mut table, "sampler.next_batch(b=16,s=64)", t);
+
+    // ---- mock engine step ---------------------------------------------------
+    let mut mock = MockEngine::new(MockSpec { dim: 2000, ..MockSpec::default() });
+    let mut st = mock.init_state(0);
+    let mb = TokenBatch::new(16, 8);
+    let t = time_auto(budget, 5, || {
+        mock.train_step(&mut st, 0.01, &mb).unwrap();
+    });
+    push(&mut table, "mock.train_step(dim=2000,b=16)", t);
+
+    // ---- PJRT ladder (artifacts-gated) --------------------------------------
+    if std::path::Path::new("artifacts/tiny/meta.json").exists() {
+        let mut eng = adloco::runtime::XlaEngine::load("artifacts", "tiny").unwrap();
+        let width = eng.meta().seq_len + 1;
+        let vocab = eng.meta().vocab as i64;
+        let ladder: Vec<usize> = eng.supported_batches().to_vec();
+        for b in ladder {
+            let mut state = eng.init_state(0);
+            let mut tb = TokenBatch::new(b, width);
+            let mut r2 = Rng::new(3);
+            for t in tb.tokens.iter_mut() {
+                *t = r2.range(0, vocab) as i32;
+            }
+            eng.train_step(&mut state, 1e-4, &tb).unwrap(); // compile
+            let t = time_auto(budget, 3, || {
+                eng.train_step(&mut state, 1e-4, &tb).unwrap();
+            });
+            push(&mut table, &format!("xla.train_step(tiny,b={b})"), t);
+        }
+        // grad + apply at max batch
+        let bmax = eng.meta().grad_step_batch;
+        let mut tb = TokenBatch::new(bmax, width);
+        let mut r2 = Rng::new(4);
+        for t in tb.tokens.iter_mut() {
+            *t = r2.range(0, vocab) as i32;
+        }
+        let st0 = eng.init_state(0);
+        let mut grad = vec![0.0f32; eng.param_count()];
+        eng.grad_step(&st0.params, &tb, &mut grad).unwrap();
+        let t = time_auto(budget, 3, || {
+            eng.grad_step(&st0.params, &tb, &mut grad).unwrap();
+        });
+        push(&mut table, &format!("xla.grad_step(tiny,b={bmax})"), t);
+
+        let eb = eng.eval_batch();
+        let mut tb = TokenBatch::new(eb, width);
+        for t in tb.tokens.iter_mut() {
+            *t = r2.range(0, vocab) as i32;
+        }
+        eng.eval_loss(&st0.params, &tb).unwrap();
+        let t = time_auto(budget, 3, || {
+            eng.eval_loss(&st0.params, &tb).unwrap();
+        });
+        push(&mut table, &format!("xla.eval(tiny,b={eb})"), t);
+    } else {
+        eprintln!("artifacts/tiny missing — run `make artifacts` for PJRT rows");
+    }
+
+    println!("\nMICRO — hot-path benchmarks");
+    table.print();
+    table.write_csv("micro_hotpath").unwrap();
+}

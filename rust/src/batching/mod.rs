@@ -1,0 +1,384 @@
+//! Adaptive batch sizing (paper §3.3, §4.2): the norm test, the
+//! inner-product test, the augmented test, EMA smoothing of the noisy
+//! variance statistics, rounding onto the AOT batch-size ladder, and the
+//! SwitchMode gradient-accumulation policy.
+//!
+//! The controller is deliberately pure/deterministic: `observe()` folds in
+//! the statistics of the step that just ran, `requested()` returns the
+//! b_req the trainer stores for the next outer step (Algorithm 3 line 31),
+//! and `plan()` maps a request onto (micro_batch, accum_steps) given the
+//! hardware max_batch (Algorithm 3 lines 17-27).
+
+use crate::config::{BatchTest, BatchingConfig};
+use crate::engine::StepStats;
+use crate::util::stats::Ema;
+
+/// Execution plan for one inner step at a requested batch size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepPlan {
+    /// Batch each engine call runs at (a ladder rung <= max_batch).
+    pub micro_batch: usize,
+    /// Number of accumulated micro-steps (1 = plain step).
+    pub accum_steps: usize,
+    /// True when SwitchMode engaged (b_req > n * max_batch).
+    pub switched: bool,
+}
+
+impl StepPlan {
+    /// Total samples consumed by the plan.
+    pub fn effective_batch(&self) -> usize {
+        self.micro_batch * self.accum_steps
+    }
+}
+
+/// Round a requested batch up to the smallest supported ladder rung;
+/// saturates at the top rung. `ladder` must be ascending and non-empty.
+pub fn round_to_ladder(b: usize, ladder: &[usize]) -> usize {
+    debug_assert!(!ladder.is_empty());
+    for &rung in ladder {
+        if rung >= b {
+            return rung;
+        }
+    }
+    *ladder.last().unwrap()
+}
+
+/// SwitchMode policy (paper §4.2 + Algorithm 3 lines 17-27):
+/// accumulation engages only once b_req exceeds `multiplier * max_batch`
+/// (paper: n = 2); below that the batch is clamped to max_batch and full
+/// update frequency is kept.
+pub fn plan_step(
+    b_req: usize,
+    max_batch: usize,
+    multiplier: f64,
+    switch_enabled: bool,
+    ladder: &[usize],
+) -> StepPlan {
+    debug_assert!(max_batch >= 1);
+    let b_req = b_req.max(1);
+    let threshold = (multiplier * max_batch as f64).floor() as usize;
+    if switch_enabled && b_req > threshold {
+        // accumulate ceil(b_req / max_batch) micro-steps of max_batch
+        let micro = round_to_ladder(max_batch, ladder).min(max_batch);
+        let accum = b_req.div_ceil(max_batch);
+        StepPlan { micro_batch: micro, accum_steps: accum, switched: true }
+    } else {
+        let clamped = b_req.min(max_batch);
+        let micro = round_to_ladder(clamped, ladder).min(max_batch);
+        StepPlan { micro_batch: micro.max(1), accum_steps: 1, switched: false }
+    }
+}
+
+/// Per-trainer adaptive batch controller.
+#[derive(Clone, Debug)]
+pub struct BatchController {
+    cfg: BatchingConfig,
+    requested: usize,
+    sigma2_ema: Ema,
+    ip_var_ema: Ema,
+    s1_ema: Ema,
+    observations: u64,
+}
+
+impl BatchController {
+    pub fn new(cfg: BatchingConfig) -> Self {
+        let beta = if cfg.ema_beta > 0.0 { cfg.ema_beta } else { 0.0 };
+        BatchController {
+            requested: cfg.initial_batch,
+            sigma2_ema: Ema::new(beta),
+            ip_var_ema: Ema::new(beta),
+            s1_ema: Ema::new(beta),
+            cfg,
+        observations: 0,
+        }
+    }
+
+    /// Current requested batch b_req (Algorithm 3 stores this per trainer).
+    pub fn requested(&self) -> usize {
+        self.requested
+    }
+
+    /// Force a request (used by DoMerge when the representative inherits
+    /// the merged trainers' state, and by tests).
+    pub fn set_requested(&mut self, b: usize) {
+        self.requested = b.max(1);
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Fold in the statistics of a completed gradient computation (which
+    /// ran at `executed_batch` effective samples) and update the
+    /// requested batch size.
+    ///
+    /// `stats.sigma2 == 0` (single-chunk batches can't estimate variance)
+    /// falls back to the EMA history; with no history at all the request
+    /// becomes 2x the *executed* batch — a geometric probe that mirrors
+    /// how AdAdaGrad implementations warm up from batch 1 without
+    /// compounding across the many inner steps that share one plan
+    /// (Algorithm 3 recomputes b_req once per outer step).
+    pub fn observe(&mut self, stats: &StepStats, executed_batch: usize) {
+        if !self.cfg.adaptive {
+            return;
+        }
+        self.observations += 1;
+        if stats.sigma2 > 0.0 {
+            self.sigma2_ema.push(stats.sigma2);
+        }
+        if stats.ip_var > 0.0 {
+            self.ip_var_ema.push(stats.ip_var);
+        }
+        if stats.grad_sq_norm > 0.0 {
+            self.s1_ema.push(stats.grad_sq_norm);
+        }
+
+        let s1 = self.smoothed(&self.s1_ema, stats.grad_sq_norm);
+        let new_req = match self.cfg.test {
+            BatchTest::Norm => self.norm_test(s1, stats),
+            BatchTest::InnerProduct => self.inner_product_test(s1, stats),
+            BatchTest::Augmented => self.augmented_test(s1, stats),
+        };
+        let new_req = match new_req {
+            Some(b) => b,
+            // no usable statistic yet: geometric warm-up probe anchored
+            // at the batch that actually ran
+            None => executed_batch.max(1).saturating_mul(2),
+        };
+        let mut req = if self.cfg.monotone {
+            self.requested.max(new_req).max(1)
+        } else {
+            new_req.max(1)
+        };
+        if self.cfg.max_request > 0 {
+            req = req.min(self.cfg.max_request);
+        }
+        self.requested = req;
+    }
+
+    fn smoothed(&self, ema: &Ema, instant: f64) -> f64 {
+        if self.cfg.ema_beta > 0.0 {
+            ema.get().unwrap_or(instant)
+        } else {
+            instant
+        }
+    }
+
+    /// Norm test, Eq. 10: b = ceil(sigma^2 / (eta^2 ||gbar||^2)).
+    fn norm_test(&self, s1: f64, stats: &StepStats) -> Option<usize> {
+        let sigma2 = if stats.sigma2 > 0.0 {
+            self.smoothed(&self.sigma2_ema, stats.sigma2)
+        } else {
+            self.sigma2_ema.get()?
+        };
+        if s1 <= 0.0 {
+            return None;
+        }
+        Some(ceil_div_f64(sigma2, self.cfg.eta * self.cfg.eta * s1))
+    }
+
+    /// Inner-product test, Eq. 12:
+    /// b = ceil(Var_i(<g_i, gbar>) / (theta^2 ||gbar||^4)).
+    fn inner_product_test(&self, s1: f64, stats: &StepStats) -> Option<usize> {
+        let ip_var = if stats.ip_var > 0.0 {
+            self.smoothed(&self.ip_var_ema, stats.ip_var)
+        } else {
+            self.ip_var_ema.get()?
+        };
+        if s1 <= 0.0 {
+            return None;
+        }
+        Some(ceil_div_f64(ip_var, self.cfg.theta * self.cfg.theta * s1 * s1))
+    }
+
+    /// Augmented inner-product test, Eq. 13: max of the inner-product
+    /// request and the orthogonal-residual term
+    /// Var_i(g_i - proj_gbar(g_i)) / (nu^2 ||gbar||^2).
+    ///
+    /// The orthogonal variance decomposes as
+    /// sigma^2_total - Var_i(<g_i, ghat>) = sigma2 - ip_var / ||gbar||^2,
+    /// so it is computable from the same two fused statistics the Pallas
+    /// kernel already produces (paper §3.3.2 notes the two terms differ by
+    /// ~1e7 in practice — the IPT bench reproduces that observation).
+    fn augmented_test(&self, s1: f64, stats: &StepStats) -> Option<usize> {
+        let base = self.inner_product_test(s1, stats)?;
+        let sigma2 = if stats.sigma2 > 0.0 {
+            self.smoothed(&self.sigma2_ema, stats.sigma2)
+        } else {
+            self.sigma2_ema.get()?
+        };
+        let ip_var = if stats.ip_var > 0.0 {
+            self.smoothed(&self.ip_var_ema, stats.ip_var)
+        } else {
+            self.ip_var_ema.get()?
+        };
+        if s1 <= 0.0 {
+            return None;
+        }
+        let orth_var = (sigma2 - ip_var / s1).max(0.0);
+        let aug = ceil_div_f64(orth_var, self.cfg.nu * self.cfg.nu * s1);
+        Some(base.max(aug))
+    }
+}
+
+fn ceil_div_f64(num: f64, den: f64) -> usize {
+    if den <= 0.0 || !num.is_finite() {
+        return usize::MAX / 4; // effectively "as large as possible"
+    }
+    let v = (num / den).ceil();
+    if v < 1.0 {
+        1
+    } else if v > 1e12 {
+        usize::MAX / 4
+    } else {
+        v as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn cfg() -> BatchingConfig {
+        let mut c = presets::paper_table1().algo.batching;
+        c.ema_beta = 0.0; // raw statistics for exact arithmetic checks
+        c
+    }
+
+    fn stats(loss: f64, s1: f64, sigma2: f64, ip_var: f64) -> StepStats {
+        StepStats { loss, grad_sq_norm: s1, sigma2, ip_var }
+    }
+
+    #[test]
+    fn ladder_rounding() {
+        let ladder = [1, 2, 4, 8, 16];
+        assert_eq!(round_to_ladder(1, &ladder), 1);
+        assert_eq!(round_to_ladder(3, &ladder), 4);
+        assert_eq!(round_to_ladder(16, &ladder), 16);
+        assert_eq!(round_to_ladder(100, &ladder), 16);
+    }
+
+    #[test]
+    fn norm_test_matches_eq10() {
+        // mirrors python tests: sigma2 = 8, eta=0.8, s1=2 -> ceil(8/1.28)=7
+        let mut c = BatchController::new(cfg());
+        c.observe(&stats(1.0, 2.0, 8.0, 0.0), 4);
+        assert_eq!(c.requested(), 7);
+    }
+
+    #[test]
+    fn inner_product_test_matches_eq12() {
+        let mut bc = cfg();
+        bc.test = BatchTest::InnerProduct;
+        bc.theta = 0.5;
+        let mut c = BatchController::new(bc);
+        // ip_var = 20/3, s1 = 2 -> ceil((20/3) / (0.25 * 4)) = 7
+        c.observe(&stats(1.0, 2.0, 0.0, 20.0 / 3.0), 4);
+        assert_eq!(c.requested(), 7);
+    }
+
+    #[test]
+    fn augmented_takes_max() {
+        let mut bc = cfg();
+        bc.test = BatchTest::Augmented;
+        bc.theta = 0.5;
+        bc.nu = 0.1;
+        let mut c = BatchController::new(bc);
+        // ip request: ceil((20/3)/(0.25*4)) = 7
+        // orth_var = sigma2 - ip_var/s1 = 10 - (20/3)/2 = 6.667
+        // aug: ceil(6.667 / (0.01 * 2)) = 334 -> max = 334
+        c.observe(&stats(1.0, 2.0, 10.0, 20.0 / 3.0), 4);
+        assert_eq!(c.requested(), 334);
+    }
+
+    #[test]
+    fn monotone_growth() {
+        let mut c = BatchController::new(cfg());
+        c.observe(&stats(1.0, 1.0, 10.0, 0.0), 4); // req = ceil(10/0.64) = 16
+        assert_eq!(c.requested(), 16);
+        c.observe(&stats(1.0, 100.0, 1.0, 0.0), 4); // raw request tiny
+        assert_eq!(c.requested(), 16, "monotone controller must not shrink");
+    }
+
+    #[test]
+    fn non_monotone_can_shrink() {
+        let mut bc = cfg();
+        bc.monotone = false;
+        let mut c = BatchController::new(bc);
+        c.observe(&stats(1.0, 1.0, 10.0, 0.0), 4);
+        assert_eq!(c.requested(), 16);
+        c.observe(&stats(1.0, 100.0, 1.0, 0.0), 4);
+        assert!(c.requested() < 16);
+    }
+
+    #[test]
+    fn zero_sigma_fallback_doubles_then_uses_ema() {
+        let mut bc = cfg();
+        bc.ema_beta = 0.5;
+        let mut c = BatchController::new(bc);
+        assert_eq!(c.requested(), 1);
+        // no variance statistic at batch 1 -> geometric probe
+        c.observe(&stats(1.0, 1.0, 0.0, 0.0), c.requested().min(4));
+        assert_eq!(c.requested(), 2);
+        c.observe(&stats(1.0, 1.0, 0.0, 0.0), c.requested().min(4));
+        assert_eq!(c.requested(), 4);
+        // now a real statistic arrives and seeds the EMA
+        c.observe(&stats(1.0, 1.0, 6.4, 0.0), 4);
+        assert!(c.requested() >= 10, "req {}", c.requested());
+        // zero-sigma steps afterwards reuse the EMA instead of doubling
+        let before = c.requested();
+        c.observe(&stats(1.0, 1.0, 0.0, 0.0), c.requested().min(4));
+        assert!(c.requested() >= before);
+        assert!(c.requested() < before * 2, "must not blind-double with history");
+    }
+
+    #[test]
+    fn non_adaptive_is_frozen() {
+        let mut bc = cfg();
+        bc.adaptive = false;
+        bc.initial_batch = 5;
+        let mut c = BatchController::new(bc);
+        c.observe(&stats(1.0, 0.001, 100.0, 0.0), 4);
+        assert_eq!(c.requested(), 5);
+    }
+
+    #[test]
+    fn switch_mode_thresholds() {
+        let ladder = [1, 2, 4, 8, 16];
+        // paper: n=2, max_batch=16 -> accumulate only above 32
+        let p = plan_step(32, 16, 2.0, true, &ladder);
+        assert_eq!(p, StepPlan { micro_batch: 16, accum_steps: 1, switched: false });
+        let p = plan_step(33, 16, 2.0, true, &ladder);
+        assert!(p.switched);
+        assert_eq!(p.micro_batch, 16);
+        assert_eq!(p.accum_steps, 3); // ceil(33/16)
+        assert_eq!(p.effective_batch(), 48);
+    }
+
+    #[test]
+    fn switch_disabled_clamps() {
+        let ladder = [1, 2, 4, 8, 16];
+        let p = plan_step(1000, 16, 2.0, false, &ladder);
+        assert_eq!(p, StepPlan { micro_batch: 16, accum_steps: 1, switched: false });
+    }
+
+    #[test]
+    fn plan_rounds_up_to_rung() {
+        let ladder = [1, 2, 4, 8, 16];
+        let p = plan_step(3, 16, 2.0, true, &ladder);
+        assert_eq!(p.micro_batch, 4);
+        assert_eq!(p.accum_steps, 1);
+        // rounding never exceeds max_batch even with a sparse ladder
+        let p = plan_step(9, 12, 2.0, true, &[1, 2, 4, 8, 16]);
+        assert_eq!(p.micro_batch, 12.min(16)); // rung 16 capped at max 12
+    }
+
+    #[test]
+    fn degenerate_gradient_requests_huge_batch() {
+        let mut c = BatchController::new(cfg());
+        c.observe(&stats(1.0, 0.0, 5.0, 0.0), 1);
+        // s1 == 0 => no finite request; geometric probe applies
+        assert_eq!(c.requested(), 2);
+    }
+}

@@ -1,0 +1,170 @@
+//! Minimal benchmarking toolkit (no `criterion` in the offline crate set).
+//!
+//! Provides warmup+repeat timing with median/p10/p90 reporting, simple
+//! table printing for the figure/table reproduction benches, and CSV
+//! output under `bench_results/` so every paper artifact regeneration
+//! leaves a machine-readable trace.
+
+use std::io::Write;
+use std::time::Instant;
+
+/// Timing summary over repeated runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub reps: usize,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+    pub mean_s: f64,
+}
+
+impl Timing {
+    pub fn per_sec(&self) -> f64 {
+        if self.median_s > 0.0 {
+            1.0 / self.median_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "median {:.3}ms  p10 {:.3}ms  p90 {:.3}ms  ({} reps)",
+            self.median_s * 1e3,
+            self.p10_s * 1e3,
+            self.p90_s * 1e3,
+            self.reps
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `reps` measured runs.
+pub fn time_fn<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timing {
+    assert!(reps >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / reps as f64;
+    Timing {
+        reps,
+        median_s: crate::util::stats::percentile(&samples, 50.0),
+        p10_s: crate::util::stats::percentile(&samples, 10.0),
+        p90_s: crate::util::stats::percentile(&samples, 90.0),
+        mean_s: mean,
+    }
+}
+
+/// Auto-calibrating variant: picks reps so the measured block runs for
+/// roughly `budget_s` seconds total (at least `min_reps`).
+pub fn time_auto<F: FnMut()>(budget_s: f64, min_reps: usize, mut f: F) -> Timing {
+    let t0 = Instant::now();
+    f(); // warmup + probe
+    let probe = t0.elapsed().as_secs_f64().max(1e-9);
+    let reps = ((budget_s / probe) as usize).clamp(min_reps, 10_000);
+    time_fn(0, reps, f)
+}
+
+/// Simple fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+
+    /// Also dump as CSV under bench_results/.
+    pub fn write_csv(&self, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all("bench_results")?;
+        let path = format!("bench_results/{name}.csv");
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        eprintln!("wrote {path}");
+        Ok(())
+    }
+}
+
+/// `cargo bench` passes `--bench`; strip the harness-reserved args so
+/// benches can read their own (e.g. `--quick`).
+pub fn bench_args() -> Vec<String> {
+    std::env::args()
+        .skip(1)
+        .filter(|a| a != "--bench" && !a.starts_with("--save-baseline"))
+        .collect()
+}
+
+/// True when the bench should run in a reduced "smoke" configuration
+/// (ADLOCO_BENCH_QUICK=1 or --quick).
+pub fn quick_mode() -> bool {
+    std::env::var("ADLOCO_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+        || bench_args().iter().any(|a| a == "--quick")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures() {
+        let t = time_fn(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(t.reps, 5);
+        assert!(t.median_s >= 0.0);
+        assert!(t.p10_s <= t.p90_s);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+        // csv write goes to bench_results/ in cwd; use temp cwd-safe name
+        t.write_csv("benchkit_selftest").unwrap();
+        let text = std::fs::read_to_string("bench_results/benchkit_selftest.csv").unwrap();
+        assert!(text.contains("a,b"));
+        std::fs::remove_file("bench_results/benchkit_selftest.csv").ok();
+    }
+}

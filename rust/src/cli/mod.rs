@@ -1,0 +1,127 @@
+//! Minimal CLI argument parser (no `clap` in the offline crate set).
+//!
+//! Grammar: `adloco <subcommand> [--flag] [--key value | --key=value]...`
+//! with repeatable keys (e.g. `--set a=1 --set b=2`).
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    /// key -> values, in order of appearance (repeatable options).
+    pub options: BTreeMap<String, Vec<String>>,
+    /// bare `--flag`s (no value).
+    pub flags: Vec<String>,
+}
+
+/// Options that take a value; anything else after `--` is a bare flag.
+/// Keeping an explicit list avoids the classic `--flag value` ambiguity.
+const VALUE_OPTS: &[&str] = &[
+    "config", "preset", "set", "out", "profile", "artifacts", "methods",
+    "steps", "seed", "log-level", "target-ppl", "format", "param", "values",
+];
+
+pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+    let mut args = Args::default();
+    let mut it = argv.into_iter().peekable();
+    while let Some(tok) = it.next() {
+        if let Some(rest) = tok.strip_prefix("--") {
+            let (key, inline_val) = match rest.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (rest.to_string(), None),
+            };
+            if let Some(v) = inline_val {
+                args.options.entry(key).or_default().push(v);
+            } else if VALUE_OPTS.contains(&key.as_str()) {
+                match it.next() {
+                    Some(v) => args.options.entry(key).or_default().push(v),
+                    None => bail!("option --{key} requires a value"),
+                }
+            } else {
+                args.flags.push(key);
+            }
+        } else if args.subcommand.is_none() {
+            args.subcommand = Some(tok);
+        } else {
+            args.positional.push(tok);
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn opt_all(&self, key: &str) -> &[String] {
+        self.options.get(key).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => match s.parse::<T>() {
+                Ok(v) => Ok(Some(v)),
+                Err(e) => bail!("--{key} {s:?}: {e}"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Args {
+        parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = p("train --preset quick --set a=1 --set b.c=2 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.opt("preset"), Some("quick"));
+        assert_eq!(a.opt_all("set"), &["a=1".to_string(), "b.c=2".to_string()]);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = p("bench --profile=tiny --steps=100");
+        assert_eq!(a.opt("profile"), Some("tiny"));
+        assert_eq!(a.opt_parse::<usize>("steps").unwrap(), Some(100));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(["train".into(), "--preset".into()]).is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = p("x --steps nope");
+        assert!(a.opt_parse::<usize>("steps").is_err());
+    }
+
+    #[test]
+    fn positional_collection() {
+        let a = p("report runs/a.jsonl runs/b.jsonl");
+        assert_eq!(a.positional, vec!["runs/a.jsonl", "runs/b.jsonl"]);
+    }
+
+    #[test]
+    fn last_value_wins_for_opt() {
+        let a = p("t --preset a --preset b");
+        assert_eq!(a.opt("preset"), Some("b"));
+    }
+}

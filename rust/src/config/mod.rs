@@ -1,0 +1,736 @@
+//! Experiment configuration: typed structs, JSON loading, dotted-path
+//! overrides, validation, and the paper's hyperparameter presets.
+//!
+//! A config fully determines a run (together with the artifact profile):
+//! engine, algorithm (AdLoCo / DiLoCo / LocalSGD and every ablation knob),
+//! data generation, simulated cluster, and run schedule.  `Config::load`
+//! reads a JSON file; `Config::apply_override` implements
+//! `--set algo.batching.eta=0.5`-style CLI overrides so benches and
+//! examples can sweep parameters without writing files.
+
+pub mod presets;
+
+use crate::util::JsonValue;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Which coordination algorithm the run uses. AdLoCo with every feature
+/// disabled degrades to DiLoCo; DiLoCo with a trivial outer optimizer and
+/// H-step averaging is LocalSGD — the coordinator implements all three via
+/// these knobs, matching the paper's ablation structure (Fig. 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    AdLoCo,
+    DiLoCo,
+    LocalSgd,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "adloco" => Ok(Method::AdLoCo),
+            "diloco" => Ok(Method::DiLoCo),
+            "localsgd" | "local_sgd" => Ok(Method::LocalSgd),
+            _ => bail!("unknown method {s:?} (adloco|diloco|localsgd)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Method::AdLoCo => "adloco",
+            Method::DiLoCo => "diloco",
+            Method::LocalSgd => "localsgd",
+        }
+    }
+}
+
+/// Which statistical test drives the requested batch size (paper §3.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchTest {
+    /// Eq. 10 — the paper's default.
+    Norm,
+    /// Eq. 12.
+    InnerProduct,
+    /// Eq. 13 (max of inner-product and orthogonality terms).
+    Augmented,
+}
+
+impl BatchTest {
+    pub fn parse(s: &str) -> Result<BatchTest> {
+        match s.to_ascii_lowercase().as_str() {
+            "norm" => Ok(BatchTest::Norm),
+            "inner_product" | "ip" => Ok(BatchTest::InnerProduct),
+            "augmented" | "aug" => Ok(BatchTest::Augmented),
+            _ => bail!("unknown batch test {s:?} (norm|inner_product|augmented)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BatchTest::Norm => "norm",
+            BatchTest::InnerProduct => "inner_product",
+            BatchTest::Augmented => "augmented",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum EngineConfig {
+    /// Pure-Rust synthetic objective (fast; powers theory benches & tests).
+    Mock {
+        /// Problem dimension.
+        dim: usize,
+        /// Per-sample gradient noise standard deviation.
+        noise: f64,
+        /// Condition number of the quadratic part.
+        condition: f64,
+    },
+    /// PJRT-backed transformer from `artifacts/<profile>/`.
+    Xla { artifacts_dir: String, profile: String },
+}
+
+#[derive(Clone, Debug)]
+pub struct BatchingConfig {
+    /// false => fixed batch (DiLoCo / ablation arm).
+    pub adaptive: bool,
+    pub test: BatchTest,
+    /// Norm-test eta (paper Table 1: 0.8).
+    pub eta: f64,
+    /// Inner-product-test theta (paper Table 1: 0.01).
+    pub theta: f64,
+    /// Augmented-test nu (paper Table 1: 0.3).
+    pub nu: f64,
+    /// Starting batch size (paper Table 1: 1).
+    pub initial_batch: usize,
+    /// EMA smoothing for noisy variance estimates (beta; 0 disables).
+    pub ema_beta: f64,
+    /// Batch can only grow (monotone, as in AdAdaGrad's theory) if true.
+    pub monotone: bool,
+    /// Hard cap on the requested batch (bounds SwitchMode accumulation
+    /// depth; 0 = uncapped). Real systems always carry such a guard —
+    /// without it the norm test's request diverges as ||∇F|| → 0.
+    pub max_request: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct MergeConfig {
+    pub enabled: bool,
+    /// Merge the `w` worst trainers by requested batch (Algorithm 1).
+    pub w: usize,
+    /// Check for merges every this many outer steps (paper Table 1: 3).
+    pub frequency: usize,
+    /// Minimum trainer count to keep (merging stops at this many).
+    pub min_trainers: usize,
+    /// Selection rule: the paper's worst-by-requested-batch, or random
+    /// (the control arm isolating the selection policy's contribution).
+    pub policy: MergeSelect,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeSelect {
+    WorstByBatch,
+    Random,
+}
+
+impl MergeSelect {
+    pub fn parse(s: &str) -> Result<MergeSelect> {
+        match s.to_ascii_lowercase().as_str() {
+            "worst" | "worst_by_batch" => Ok(MergeSelect::WorstByBatch),
+            "random" => Ok(MergeSelect::Random),
+            _ => bail!("unknown merge policy {s:?} (worst|random)"),
+        }
+    }
+}
+
+/// Learning-rate schedule parameters (see `crate::schedule`).
+#[derive(Clone, Debug)]
+pub struct ScheduleConfig {
+    /// constant | warmup | warmup_cosine | step_decay
+    pub kind: String,
+    pub warmup_steps: u64,
+    /// 0 = derive from outer_steps * inner_steps.
+    pub total_steps: u64,
+    pub min_frac: f64,
+    pub decay_every: u64,
+    pub decay_factor: f64,
+}
+
+impl Default for ScheduleConfig {
+    fn default() -> Self {
+        ScheduleConfig {
+            kind: "constant".into(),
+            warmup_steps: 0,
+            total_steps: 0,
+            min_frac: 0.1,
+            decay_every: 100,
+            decay_factor: 0.5,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SwitchConfig {
+    pub enabled: bool,
+    /// Accumulation engages when b_req > multiplier * max_batch (paper: 2).
+    pub multiplier: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OuterOptKind {
+    /// Plain parameter averaging (LocalSGD-style).
+    Average,
+    /// SGD on the outer delta (what the theorems assume).
+    Sgd,
+    /// Nesterov momentum on the outer delta (DiLoCo's default).
+    Nesterov { momentum: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct AlgoConfig {
+    pub method: Method,
+    /// k — initial number of trainers (paper Table 1: 4).
+    pub num_trainers: usize,
+    /// M — workers per trainer.
+    pub workers_per_trainer: usize,
+    /// H — inner steps per outer step (paper Table 1: 200).
+    pub inner_steps: usize,
+    /// T — outer steps (paper Table 1: 20).
+    pub outer_steps: usize,
+    pub lr_inner: f64,
+    pub lr_outer: f64,
+    /// Inner-lr schedule over the worker's inner-step axis.
+    pub lr_schedule: ScheduleConfig,
+    pub outer_opt: OuterOptKind,
+    pub batching: BatchingConfig,
+    pub merge: MergeConfig,
+    pub switch: SwitchConfig,
+    /// Batch used when batching.adaptive == false.
+    pub fixed_batch: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    /// Total corpus size in sequences.
+    pub corpus_sequences: usize,
+    /// Vocabulary (must match the artifact profile for XlaEngine).
+    pub vocab: usize,
+    /// Sequence length + 1 tokens per example (input+target overlap).
+    pub seq_len: usize,
+    /// Zipf exponent of the unigram distribution.
+    pub zipf_s: f64,
+    /// Fraction of each trainer's shard drawn from the shared pool
+    /// (shards "possibly intersecting", §4.1.1).
+    pub shard_fraction: f64,
+    /// Held-out validation sequences.
+    pub val_sequences: usize,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct NodeConfig {
+    /// Memory-limited max batch per node (the paper's max_batch).
+    pub max_batch: usize,
+    /// Relative compute speed (1.0 = reference; heterogeneity knob).
+    pub speed: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub nodes: Vec<NodeConfig>,
+    /// Per-sync latency, seconds (alpha in t = alpha + bytes/beta).
+    pub net_latency_s: f64,
+    /// Bandwidth, bytes/second.
+    pub net_bandwidth_bps: f64,
+    /// Step-time model: t_step = step_fixed_s + step_per_token_s * b * seq.
+    pub step_fixed_s: f64,
+    pub step_per_token_s: f64,
+    /// Fractional lognormal-ish jitter on per-step compute time
+    /// (dynamic-workload knob from the paper's motivation; 0 = none).
+    pub step_jitter: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Evaluate every this many *inner* steps (paper: every 10 steps).
+    pub eval_every: usize,
+    /// Number of eval batches averaged per evaluation.
+    pub eval_batches: usize,
+    /// Stop early when validation perplexity reaches this (0 = never).
+    pub target_ppl: f64,
+    /// Hard cap on total inner steps across the run (0 = no cap).
+    pub max_inner_steps: usize,
+    /// Write a checkpoint here every `checkpoint_every` outer steps.
+    pub checkpoint_path: Option<String>,
+    /// 0 disables periodic checkpointing (a final one is still written
+    /// when `checkpoint_path` is set).
+    pub checkpoint_every: usize,
+    /// Resume trainer state from this checkpoint before the first step.
+    pub resume_from: Option<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub name: String,
+    pub seed: u64,
+    pub engine: EngineConfig,
+    pub algo: AlgoConfig,
+    pub data: DataConfig,
+    pub cluster: ClusterConfig,
+    pub run: RunConfig,
+    /// Metrics output directory (JSONL/CSV); None = in-memory only.
+    pub out_dir: Option<String>,
+}
+
+impl Config {
+    /// Validate cross-field invariants; call after construction/overrides.
+    pub fn validate(&self) -> Result<()> {
+        let a = &self.algo;
+        if a.num_trainers == 0 {
+            bail!("algo.num_trainers must be >= 1");
+        }
+        if a.workers_per_trainer == 0 {
+            bail!("algo.workers_per_trainer must be >= 1");
+        }
+        if a.inner_steps == 0 || a.outer_steps == 0 {
+            bail!("algo.inner_steps / outer_steps must be >= 1");
+        }
+        if a.batching.initial_batch == 0 {
+            bail!("batching.initial_batch must be >= 1");
+        }
+        if !(0.0..1.0).contains(&a.batching.ema_beta) {
+            bail!("batching.ema_beta must be in [0,1)");
+        }
+        if a.batching.eta <= 0.0 || a.batching.theta <= 0.0 || a.batching.nu <= 0.0 {
+            bail!("batching test constants must be positive");
+        }
+        if a.merge.enabled && a.merge.w == 0 {
+            bail!("merge.w must be >= 1 when merging is enabled");
+        }
+        if a.merge.min_trainers == 0 {
+            bail!("merge.min_trainers must be >= 1");
+        }
+        if a.switch.enabled && a.switch.multiplier < 1.0 {
+            bail!("switch.multiplier must be >= 1");
+        }
+        if self.cluster.nodes.is_empty() {
+            bail!("cluster.nodes must be non-empty");
+        }
+        for (i, n) in self.cluster.nodes.iter().enumerate() {
+            if n.max_batch == 0 || n.speed <= 0.0 {
+                bail!("cluster.nodes[{i}] invalid (max_batch >= 1, speed > 0)");
+            }
+        }
+        if self.cluster.net_bandwidth_bps <= 0.0 {
+            bail!("cluster.net_bandwidth_bps must be positive");
+        }
+        if !(0.0..1.0).contains(&self.cluster.step_jitter) {
+            bail!("cluster.step_jitter must be in [0,1)");
+        }
+        if self.data.vocab < 2 || self.data.seq_len == 0 {
+            bail!("data.vocab >= 2 and data.seq_len >= 1 required");
+        }
+        if self.data.corpus_sequences == 0 {
+            bail!("data.corpus_sequences must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&self.data.shard_fraction) {
+            bail!("data.shard_fraction must be in [0,1]");
+        }
+        let total_workers = a.num_trainers * a.workers_per_trainer;
+        if total_workers > 4096 {
+            bail!("{total_workers} workers is beyond the simulator's design range");
+        }
+        Ok(())
+    }
+
+    /// Load a config JSON file on top of a preset base.
+    pub fn load(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let v = JsonValue::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        let base = match v.get("preset").and_then(|p| p.as_str()) {
+            Some(name) => presets::by_name(name)
+                .ok_or_else(|| anyhow!("unknown preset {name:?}"))?,
+            None => presets::mock_default(),
+        };
+        let mut cfg = base;
+        apply_json(&mut cfg, &v)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply a `--set dotted.path=value` override.
+    pub fn apply_override(&mut self, spec: &str) -> Result<()> {
+        let (path, value) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow!("override must be path=value, got {spec:?}"))?;
+        set_path(self, path.trim(), value.trim())
+            .with_context(|| format!("applying override {spec:?}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON -> Config application (partial overlays: only present keys change)
+// ---------------------------------------------------------------------------
+
+fn apply_json(cfg: &mut Config, v: &JsonValue) -> Result<()> {
+    if let Some(s) = v.get("name").and_then(|x| x.as_str()) {
+        cfg.name = s.to_string();
+    }
+    if let Some(n) = v.get("seed").and_then(|x| x.as_f64()) {
+        cfg.seed = n as u64;
+    }
+    if let Some(o) = v.get("out_dir").and_then(|x| x.as_str()) {
+        cfg.out_dir = Some(o.to_string());
+    }
+    if let Some(e) = v.get("engine") {
+        apply_engine(cfg, e)?;
+    }
+    if let Some(a) = v.get("algo") {
+        apply_algo(&mut cfg.algo, a)?;
+    }
+    if let Some(d) = v.get("data") {
+        apply_data(&mut cfg.data, d)?;
+    }
+    if let Some(c) = v.get("cluster") {
+        apply_cluster(&mut cfg.cluster, c)?;
+    }
+    if let Some(r) = v.get("run") {
+        apply_run(&mut cfg.run, r)?;
+    }
+    Ok(())
+}
+
+fn apply_engine(cfg: &mut Config, v: &JsonValue) -> Result<()> {
+    match v.get("kind").and_then(|x| x.as_str()) {
+        Some("mock") => {
+            let mut dim = 1000;
+            let mut noise = 1.0;
+            let mut condition = 10.0;
+            if let EngineConfig::Mock { dim: d, noise: n, condition: c } = &cfg.engine {
+                dim = *d;
+                noise = *n;
+                condition = *c;
+            }
+            if let Some(x) = v.get("dim").and_then(|x| x.as_usize()) {
+                dim = x;
+            }
+            if let Some(x) = v.get("noise").and_then(|x| x.as_f64()) {
+                noise = x;
+            }
+            if let Some(x) = v.get("condition").and_then(|x| x.as_f64()) {
+                condition = x;
+            }
+            cfg.engine = EngineConfig::Mock { dim, noise, condition };
+        }
+        Some("xla") => {
+            let dir = v
+                .get("artifacts_dir")
+                .and_then(|x| x.as_str())
+                .unwrap_or("artifacts")
+                .to_string();
+            let profile = v
+                .get("profile")
+                .and_then(|x| x.as_str())
+                .unwrap_or("tiny")
+                .to_string();
+            cfg.engine = EngineConfig::Xla { artifacts_dir: dir, profile };
+        }
+        Some(k) => bail!("unknown engine kind {k:?}"),
+        None => bail!("engine.kind required"),
+    }
+    Ok(())
+}
+
+fn apply_algo(a: &mut AlgoConfig, v: &JsonValue) -> Result<()> {
+    if let Some(s) = v.get("method").and_then(|x| x.as_str()) {
+        a.method = Method::parse(s)?;
+    }
+    macro_rules! usize_field {
+        ($key:literal, $field:expr) => {
+            if let Some(x) = v.get($key).and_then(|x| x.as_usize()) {
+                $field = x;
+            }
+        };
+    }
+    macro_rules! f64_field {
+        ($v:expr, $key:literal, $field:expr) => {
+            if let Some(x) = $v.get($key).and_then(|x| x.as_f64()) {
+                $field = x;
+            }
+        };
+    }
+    usize_field!("num_trainers", a.num_trainers);
+    usize_field!("workers_per_trainer", a.workers_per_trainer);
+    usize_field!("inner_steps", a.inner_steps);
+    usize_field!("outer_steps", a.outer_steps);
+    usize_field!("fixed_batch", a.fixed_batch);
+    f64_field!(v, "lr_inner", a.lr_inner);
+    f64_field!(v, "lr_outer", a.lr_outer);
+    if let Some(sc) = v.get("lr_schedule") {
+        if let Some(x) = sc.get("kind").and_then(|x| x.as_str()) {
+            a.lr_schedule.kind = x.to_string();
+        }
+        if let Some(x) = sc.get("warmup_steps").and_then(|x| x.as_usize()) {
+            a.lr_schedule.warmup_steps = x as u64;
+        }
+        if let Some(x) = sc.get("total_steps").and_then(|x| x.as_usize()) {
+            a.lr_schedule.total_steps = x as u64;
+        }
+        if let Some(x) = sc.get("min_frac").and_then(|x| x.as_f64()) {
+            a.lr_schedule.min_frac = x;
+        }
+        if let Some(x) = sc.get("decay_every").and_then(|x| x.as_usize()) {
+            a.lr_schedule.decay_every = x as u64;
+        }
+        if let Some(x) = sc.get("decay_factor").and_then(|x| x.as_f64()) {
+            a.lr_schedule.decay_factor = x;
+        }
+    }
+    if let Some(o) = v.get("outer_opt") {
+        let kind = o.get("kind").and_then(|x| x.as_str()).unwrap_or("nesterov");
+        a.outer_opt = match kind {
+            "average" => OuterOptKind::Average,
+            "sgd" => OuterOptKind::Sgd,
+            "nesterov" => OuterOptKind::Nesterov {
+                momentum: o.get("momentum").and_then(|x| x.as_f64()).unwrap_or(0.9),
+            },
+            k => bail!("unknown outer_opt kind {k:?}"),
+        };
+    }
+    if let Some(b) = v.get("batching") {
+        if let Some(x) = b.get("adaptive").and_then(|x| x.as_bool()) {
+            a.batching.adaptive = x;
+        }
+        if let Some(s) = b.get("test").and_then(|x| x.as_str()) {
+            a.batching.test = BatchTest::parse(s)?;
+        }
+        f64_field!(b, "eta", a.batching.eta);
+        f64_field!(b, "theta", a.batching.theta);
+        f64_field!(b, "nu", a.batching.nu);
+        f64_field!(b, "ema_beta", a.batching.ema_beta);
+        if let Some(x) = b.get("initial_batch").and_then(|x| x.as_usize()) {
+            a.batching.initial_batch = x;
+        }
+        if let Some(x) = b.get("monotone").and_then(|x| x.as_bool()) {
+            a.batching.monotone = x;
+        }
+        if let Some(x) = b.get("max_request").and_then(|x| x.as_usize()) {
+            a.batching.max_request = x;
+        }
+    }
+    if let Some(m) = v.get("merge") {
+        if let Some(x) = m.get("enabled").and_then(|x| x.as_bool()) {
+            a.merge.enabled = x;
+        }
+        if let Some(x) = m.get("w").and_then(|x| x.as_usize()) {
+            a.merge.w = x;
+        }
+        if let Some(x) = m.get("frequency").and_then(|x| x.as_usize()) {
+            a.merge.frequency = x;
+        }
+        if let Some(x) = m.get("min_trainers").and_then(|x| x.as_usize()) {
+            a.merge.min_trainers = x;
+        }
+        if let Some(x) = m.get("policy").and_then(|x| x.as_str()) {
+            a.merge.policy = MergeSelect::parse(x)?;
+        }
+    }
+    if let Some(s) = v.get("switch") {
+        if let Some(x) = s.get("enabled").and_then(|x| x.as_bool()) {
+            a.switch.enabled = x;
+        }
+        f64_field!(s, "multiplier", a.switch.multiplier);
+    }
+    Ok(())
+}
+
+fn apply_data(d: &mut DataConfig, v: &JsonValue) -> Result<()> {
+    if let Some(x) = v.get("corpus_sequences").and_then(|x| x.as_usize()) {
+        d.corpus_sequences = x;
+    }
+    if let Some(x) = v.get("vocab").and_then(|x| x.as_usize()) {
+        d.vocab = x;
+    }
+    if let Some(x) = v.get("seq_len").and_then(|x| x.as_usize()) {
+        d.seq_len = x;
+    }
+    if let Some(x) = v.get("zipf_s").and_then(|x| x.as_f64()) {
+        d.zipf_s = x;
+    }
+    if let Some(x) = v.get("shard_fraction").and_then(|x| x.as_f64()) {
+        d.shard_fraction = x;
+    }
+    if let Some(x) = v.get("val_sequences").and_then(|x| x.as_usize()) {
+        d.val_sequences = x;
+    }
+    if let Some(x) = v.get("seed").and_then(|x| x.as_f64()) {
+        d.seed = x as u64;
+    }
+    Ok(())
+}
+
+fn apply_cluster(c: &mut ClusterConfig, v: &JsonValue) -> Result<()> {
+    if let Some(nodes) = v.get("nodes").and_then(|x| x.as_array()) {
+        c.nodes = nodes
+            .iter()
+            .map(|n| {
+                Ok(NodeConfig {
+                    max_batch: n
+                        .get("max_batch")
+                        .and_then(|x| x.as_usize())
+                        .ok_or_else(|| anyhow!("node.max_batch required"))?,
+                    speed: n.get("speed").and_then(|x| x.as_f64()).unwrap_or(1.0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(x) = v.get("net_latency_s").and_then(|x| x.as_f64()) {
+        c.net_latency_s = x;
+    }
+    if let Some(x) = v.get("net_bandwidth_bps").and_then(|x| x.as_f64()) {
+        c.net_bandwidth_bps = x;
+    }
+    if let Some(x) = v.get("step_fixed_s").and_then(|x| x.as_f64()) {
+        c.step_fixed_s = x;
+    }
+    if let Some(x) = v.get("step_per_token_s").and_then(|x| x.as_f64()) {
+        c.step_per_token_s = x;
+    }
+    if let Some(x) = v.get("step_jitter").and_then(|x| x.as_f64()) {
+        c.step_jitter = x;
+    }
+    Ok(())
+}
+
+fn apply_run(r: &mut RunConfig, v: &JsonValue) -> Result<()> {
+    if let Some(x) = v.get("eval_every").and_then(|x| x.as_usize()) {
+        r.eval_every = x;
+    }
+    if let Some(x) = v.get("eval_batches").and_then(|x| x.as_usize()) {
+        r.eval_batches = x;
+    }
+    if let Some(x) = v.get("target_ppl").and_then(|x| x.as_f64()) {
+        r.target_ppl = x;
+    }
+    if let Some(x) = v.get("max_inner_steps").and_then(|x| x.as_usize()) {
+        r.max_inner_steps = x;
+    }
+    if let Some(x) = v.get("checkpoint_path").and_then(|x| x.as_str()) {
+        r.checkpoint_path = Some(x.to_string());
+    }
+    if let Some(x) = v.get("checkpoint_every").and_then(|x| x.as_usize()) {
+        r.checkpoint_every = x;
+    }
+    if let Some(x) = v.get("resume_from").and_then(|x| x.as_str()) {
+        r.resume_from = Some(x.to_string());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// dotted-path overrides (CLI --set)
+// ---------------------------------------------------------------------------
+
+fn set_path(cfg: &mut Config, path: &str, value: &str) -> Result<()> {
+    // Route through the JSON overlay machinery: build a nested one-key
+    // object and apply it, so every JSON-settable field is CLI-settable.
+    let mut leaf = parse_scalar(value);
+    for key in path.split('.').rev() {
+        leaf = JsonValue::Object(vec![(key.to_string(), leaf)]);
+    }
+    apply_json(cfg, &leaf)
+}
+
+fn parse_scalar(s: &str) -> JsonValue {
+    match s {
+        "true" => return JsonValue::Bool(true),
+        "false" => return JsonValue::Bool(false),
+        "null" => return JsonValue::Null,
+        _ => {}
+    }
+    if let Ok(n) = s.parse::<f64>() {
+        return JsonValue::Number(n);
+    }
+    // allow inline JSON arrays/objects for e.g. cluster.nodes
+    if (s.starts_with('[') || s.starts_with('{')) && JsonValue::parse(s).is_ok() {
+        return JsonValue::parse(s).unwrap();
+    }
+    JsonValue::String(s.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_is_valid() {
+        presets::mock_default().validate().unwrap();
+        presets::paper_table1().validate().unwrap();
+        presets::xla_tiny().validate().unwrap();
+        presets::xla_small().validate().unwrap();
+    }
+
+    #[test]
+    fn override_numeric_and_bool() {
+        let mut cfg = presets::mock_default();
+        cfg.apply_override("algo.batching.eta=0.5").unwrap();
+        assert_eq!(cfg.algo.batching.eta, 0.5);
+        cfg.apply_override("algo.merge.enabled=false").unwrap();
+        assert!(!cfg.algo.merge.enabled);
+        cfg.apply_override("algo.method=diloco").unwrap();
+        assert_eq!(cfg.algo.method, Method::DiLoCo);
+        cfg.apply_override("algo.merge.policy=random").unwrap();
+        assert_eq!(cfg.algo.merge.policy, MergeSelect::Random);
+    }
+
+    #[test]
+    fn override_nested_nodes() {
+        let mut cfg = presets::mock_default();
+        cfg.apply_override(r#"cluster.nodes=[{"max_batch":4},{"max_batch":8,"speed":0.5}]"#)
+            .unwrap();
+        assert_eq!(cfg.cluster.nodes.len(), 2);
+        assert_eq!(cfg.cluster.nodes[1].max_batch, 8);
+        assert_eq!(cfg.cluster.nodes[1].speed, 0.5);
+    }
+
+    #[test]
+    fn bad_override_is_error() {
+        let mut cfg = presets::mock_default();
+        assert!(cfg.apply_override("no_equals_sign").is_err());
+        assert!(cfg.apply_override("algo.method=bogus").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut cfg = presets::mock_default();
+        cfg.algo.num_trainers = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = presets::mock_default();
+        cfg.algo.batching.ema_beta = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = presets::mock_default();
+        cfg.cluster.nodes.clear();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn load_json_overlay() {
+        let dir = std::env::temp_dir().join("adloco_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(
+            &path,
+            r#"{"preset":"paper_table1","name":"t","algo":{"inner_steps":7},
+               "engine":{"kind":"mock","dim":55}}"#,
+        )
+        .unwrap();
+        let cfg = Config::load(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.name, "t");
+        assert_eq!(cfg.algo.inner_steps, 7);
+        match cfg.engine {
+            EngineConfig::Mock { dim, .. } => assert_eq!(dim, 55),
+            _ => panic!("expected mock engine"),
+        }
+        // untouched field keeps the preset value (paper Table 1: eta=0.8)
+        assert_eq!(cfg.algo.batching.eta, 0.8);
+    }
+}

@@ -1,0 +1,203 @@
+//! Named configuration presets, including the paper's Table 1.
+
+use super::*;
+
+/// Look up a preset by name (used by config files' `"preset"` key).
+pub fn by_name(name: &str) -> Option<Config> {
+    match name {
+        "mock_default" => Some(mock_default()),
+        "paper_table1" => Some(paper_table1()),
+        "xla_tiny" => Some(xla_tiny()),
+        "xla_small" => Some(xla_small()),
+        "quick" => Some(quick()),
+        _ => None,
+    }
+}
+
+pub fn preset_names() -> &'static [&'static str] {
+    &["mock_default", "paper_table1", "xla_tiny", "xla_small", "quick"]
+}
+
+fn base_batching() -> BatchingConfig {
+    BatchingConfig {
+        adaptive: true,
+        test: BatchTest::Norm,
+        eta: 0.8,      // paper Table 1
+        theta: 0.01,   // paper Table 1 (vartheta)
+        nu: 0.3,       // paper Table 1
+        initial_batch: 1, // paper Table 1
+        ema_beta: 0.5,
+        monotone: true,
+        // 8x the paper's switch threshold (2 * max_batch = 128): deep
+        // enough to exercise SwitchMode, bounded enough to terminate.
+        max_request: 1024,
+    }
+}
+
+fn base_cluster(nodes: usize, max_batch: usize) -> ClusterConfig {
+    ClusterConfig {
+        nodes: (0..nodes)
+            .map(|_| NodeConfig { max_batch, speed: 1.0 })
+            .collect(),
+        // Values in the ballpark of a 10 GbE interconnect between the
+        // paper's simulated GPUs; overridable per experiment.
+        net_latency_s: 1e-3,
+        net_bandwidth_bps: 1.25e9,
+        // Filled from measured PJRT timings by `adloco calibrate`; these
+        // defaults approximate the tiny profile on this machine.
+        step_fixed_s: 5e-3,
+        step_per_token_s: 3e-5,
+        step_jitter: 0.0,
+    }
+}
+
+/// The paper's Table 1 hyperparameters, MockEngine substrate.
+///
+/// | num_outer_steps 20 | num_inner_steps 200 | lr_inner 2e-5 | lr_outer 0.5 |
+/// | nodes_per_gpu 4 | num_init_trainers 4 | initial_batch_size 1 |
+/// | merge_frequency 3 | eta 0.8 | theta 0.01 | nu 0.3 |
+pub fn paper_table1() -> Config {
+    Config {
+        name: "paper_table1".into(),
+        seed: 0,
+        engine: EngineConfig::Mock { dim: 2000, noise: 1.0, condition: 25.0 },
+        algo: AlgoConfig {
+            method: Method::AdLoCo,
+            num_trainers: 4,      // num_init_trainers
+            workers_per_trainer: 1,
+            inner_steps: 200,     // num_inner_steps
+            outer_steps: 20,      // num_outer_steps
+            lr_inner: 2e-5,
+            lr_outer: 0.5,
+            lr_schedule: ScheduleConfig::default(),
+            outer_opt: OuterOptKind::Nesterov { momentum: 0.9 },
+            batching: base_batching(),
+            merge: MergeConfig {
+                enabled: true,
+                w: 2,
+                frequency: 3,
+                min_trainers: 1,
+                policy: MergeSelect::WorstByBatch,
+            },
+            switch: SwitchConfig { enabled: true, multiplier: 2.0 },
+            fixed_batch: 16,
+        },
+        data: DataConfig {
+            corpus_sequences: 20_000,
+            vocab: 256,
+            seq_len: 64,
+            zipf_s: 1.1,
+            shard_fraction: 0.5,
+            val_sequences: 512,
+            seed: 7,
+        },
+        cluster: base_cluster(4, 64), // 4 simulated GPUs (paper §6.1)
+        run: RunConfig {
+            eval_every: 10, // paper: eval every 10 steps
+            eval_batches: 4,
+            target_ppl: 0.0,
+            max_inner_steps: 0,
+            checkpoint_path: None,
+            checkpoint_every: 0,
+            resume_from: None,
+        },
+        out_dir: None,
+    }
+}
+
+/// Fast MockEngine default for tests and quick CLI runs.
+pub fn mock_default() -> Config {
+    let mut cfg = paper_table1();
+    cfg.name = "mock_default".into();
+    cfg.algo.inner_steps = 20;
+    cfg.algo.outer_steps = 8;
+    cfg.algo.lr_inner = 0.05;
+    cfg.engine = EngineConfig::Mock { dim: 500, noise: 1.0, condition: 10.0 };
+    cfg.data.corpus_sequences = 4_000;
+    cfg.data.val_sequences = 128;
+    cfg
+}
+
+/// XlaEngine on the `tiny` artifact profile (matches python/compile/aot.py).
+pub fn xla_tiny() -> Config {
+    let mut cfg = paper_table1();
+    cfg.name = "xla_tiny".into();
+    cfg.engine = EngineConfig::Xla {
+        artifacts_dir: "artifacts".into(),
+        profile: "tiny".into(),
+    };
+    cfg.algo.inner_steps = 10;
+    cfg.algo.outer_steps = 6;
+    cfg.algo.lr_inner = 4e-4; // paper §6.1 AdamW lr
+    cfg.data.vocab = 256;
+    cfg.data.seq_len = 64;
+    cfg.data.corpus_sequences = 4_000;
+    cfg.data.val_sequences = 64;
+    // ladder tops out at 16 for the tiny profile
+    for n in &mut cfg.cluster.nodes {
+        n.max_batch = 16;
+    }
+    cfg.run.eval_every = 10;
+    cfg.run.eval_batches = 2;
+    cfg
+}
+
+/// XlaEngine on the `small` profile — the end-to-end example model.
+pub fn xla_small() -> Config {
+    let mut cfg = xla_tiny();
+    cfg.name = "xla_small".into();
+    cfg.engine = EngineConfig::Xla {
+        artifacts_dir: "artifacts".into(),
+        profile: "small".into(),
+    };
+    cfg.data.vocab = 512;
+    cfg.data.seq_len = 128;
+    for n in &mut cfg.cluster.nodes {
+        n.max_batch = 32;
+    }
+    cfg
+}
+
+/// Minimal smoke-run preset (seconds, MockEngine).
+pub fn quick() -> Config {
+    let mut cfg = mock_default();
+    cfg.name = "quick".into();
+    cfg.algo.inner_steps = 5;
+    cfg.algo.outer_steps = 3;
+    cfg.algo.num_trainers = 2;
+    cfg.data.corpus_sequences = 500;
+    cfg.data.val_sequences = 32;
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// TAB1: pin the paper's Table 1 values exactly.
+    #[test]
+    fn table1_values() {
+        let c = paper_table1();
+        assert_eq!(c.algo.outer_steps, 20);
+        assert_eq!(c.algo.inner_steps, 200);
+        assert_eq!(c.algo.lr_inner, 2e-5);
+        assert_eq!(c.algo.lr_outer, 0.5);
+        assert_eq!(c.cluster.nodes.len(), 4); // nodes_per_gpu
+        assert_eq!(c.algo.num_trainers, 4);   // num_init_trainers
+        assert_eq!(c.algo.batching.initial_batch, 1);
+        assert_eq!(c.algo.merge.frequency, 3);
+        assert_eq!(c.algo.batching.eta, 0.8);
+        assert_eq!(c.algo.batching.theta, 0.01);
+        assert_eq!(c.algo.batching.nu, 0.3);
+        assert_eq!(c.algo.switch.multiplier, 2.0);
+    }
+
+    #[test]
+    fn all_presets_resolvable_and_valid() {
+        for name in preset_names() {
+            let cfg = by_name(name).unwrap();
+            cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

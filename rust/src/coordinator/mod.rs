@@ -1,0 +1,876 @@
+//! The AdLoCo coordinator (paper Algorithm 3): the run loop that composes
+//! adaptive batching, SwitchMode accumulation, multi-instance merging and
+//! DiLoCo-style outer optimization over a simulated cluster.
+//!
+//! The same loop realizes every method and ablation arm in the paper via
+//! the config knobs (see [`resolve_policy`]):
+//!
+//! | run                    | adaptive | merge | switch | outer opt |
+//! |------------------------|----------|-------|--------|-----------|
+//! | AdLoCo (full)          | on       | on    | on     | Nesterov  |
+//! | DiLoCo baseline        | off      | off   | off    | Nesterov  |
+//! | LocalSGD baseline      | off      | off   | off    | Average   |
+//! | Fig. 2 −adaptive       | off      | on    | on     | Nesterov  |
+//! | Fig. 2 −merge          | on       | off   | on     | Nesterov  |
+//! | Fig. 2 −switch         | on       | on    | off    | Nesterov  |
+//!
+//! Timekeeping is virtual (DESIGN.md §3): compute advances each worker's
+//! clock through the node's step-time model; outer syncs and merges are
+//! barriers plus modeled all-reduce/transfer time; the ledger records
+//! every communication for the C(N) analyses (Theorem 2).
+
+use crate::batching::{plan_step, StepPlan};
+use crate::config::{Config, Method};
+use crate::data::{make_shards, shard::union_shards, Corpus, CorpusSpec, TokenBatch};
+use crate::engine::{StepStats, TrainEngine};
+use crate::merge::{check_merge_with_policy, do_merge, MergePolicy};
+use crate::metrics::{perplexity, EvalRecord, MergeRecord, Recorder, StepRecord};
+use crate::simulator::{
+    assign_workers, node_models, CommEvent, CommKind, CommLedger, NetworkModel, NodeModel,
+    VirtualClock,
+};
+use crate::trainer::Trainer;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Outcome summary of a run (full series live in the recorder).
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub name: String,
+    pub method: Method,
+    /// Best validation perplexity seen by any live trainer.
+    pub best_ppl: f64,
+    pub final_ppl: f64,
+    pub total_inner_steps: u64,
+    pub total_samples: u64,
+    pub comm_count: usize,
+    pub comm_bytes: u64,
+    pub virtual_time_s: f64,
+    pub trainers_left: usize,
+    /// (step, time, comms) at which target_ppl was first reached, if ever.
+    pub time_to_target: Option<(u64, f64, usize)>,
+}
+
+/// Apply the method's policy constraints to a copy of the config
+/// (DiLoCo = AdLoCo minus adaptivity/merging/switching; LocalSGD further
+/// degrades the outer optimizer to plain averaging — §3.1, §3.2).
+pub fn resolve_policy(cfg: &Config) -> Config {
+    let mut out = cfg.clone();
+    match cfg.algo.method {
+        Method::AdLoCo => {}
+        Method::DiLoCo => {
+            out.algo.batching.adaptive = false;
+            out.algo.merge.enabled = false;
+            out.algo.switch.enabled = false;
+        }
+        Method::LocalSgd => {
+            out.algo.batching.adaptive = false;
+            out.algo.merge.enabled = false;
+            out.algo.switch.enabled = false;
+            out.algo.outer_opt = crate::config::OuterOptKind::Average;
+        }
+    }
+    out
+}
+
+pub struct Coordinator {
+    cfg: Config,
+    engine: Box<dyn TrainEngine>,
+    corpus: Corpus,
+    val_corpus: Corpus,
+    trainers: Vec<Trainer>,
+    clock: VirtualClock,
+    nodes: Vec<NodeModel>,
+    net: NetworkModel,
+    ledger: CommLedger,
+    pub recorder: Recorder,
+    rng: Rng,
+    /// Reusable buffers (hot path: no allocation per step).
+    delta_scratch: Vec<f32>,
+    grad_scratch: Vec<f32>,
+    accum_scratch: Vec<f32>,
+    batch_buf: TokenBatch,
+    /// Samples consumed across the run (the N axis of Theorem 2).
+    total_samples: u64,
+    /// Inner-lr schedule (evaluated on each trainer's inner-step count).
+    lr_schedule: crate::schedule::Schedule,
+}
+
+impl Coordinator {
+    /// Build a coordinator (generates data, shards it, places workers).
+    pub fn new(cfg: Config, engine: Box<dyn TrainEngine>) -> Result<Coordinator> {
+        let cfg = resolve_policy(&cfg);
+        cfg.validate()?;
+        let a = &cfg.algo;
+
+        let seq_width_minus1 = cfg.data.seq_len;
+        let corpus = Corpus::generate(CorpusSpec::new(
+            cfg.data.corpus_sequences,
+            seq_width_minus1,
+            cfg.data.vocab,
+            cfg.data.zipf_s,
+            cfg.data.seed,
+        ));
+        let val_corpus = Corpus::generate(CorpusSpec::new(
+            cfg.data.val_sequences.max(engine.eval_batch()),
+            seq_width_minus1,
+            cfg.data.vocab,
+            cfg.data.zipf_s,
+            cfg.data.seed ^ 0xFACE,
+        ));
+
+        let mut rng = Rng::new(cfg.seed);
+        let k = a.num_trainers;
+        let m = a.workers_per_trainer;
+        let shards = make_shards(corpus.len(), k, cfg.data.shard_fraction, &mut rng);
+        let placement = assign_workers(k * m, cfg.cluster.nodes.len());
+
+        let mut trainers = Vec::with_capacity(k);
+        for (i, shard) in shards.into_iter().enumerate() {
+            let nodes_of_workers: Vec<usize> =
+                (0..m).map(|j| placement[i * m + j]).collect();
+            trainers.push(Trainer::new(
+                i,
+                engine.as_ref(),
+                a,
+                shard,
+                &nodes_of_workers,
+                i * m,
+                // trainer 0 uses the canonical init; others are
+                // independent initializations (MIT §4.1)
+                i as u64,
+                &mut rng,
+            ));
+        }
+
+        let p = engine.param_count();
+        let width = cfg.data.seq_len + 1;
+        let mut recorder = Recorder::new();
+        recorder.note("engine", engine.name());
+        recorder.note("method", a.method.as_str());
+        recorder.note("config", cfg.name.clone());
+
+        Ok(Coordinator {
+            clock: VirtualClock::new(k * m),
+            nodes: node_models(&cfg.cluster),
+            net: NetworkModel {
+                latency_s: cfg.cluster.net_latency_s,
+                bandwidth_bps: cfg.cluster.net_bandwidth_bps,
+            },
+            ledger: CommLedger::default(),
+            recorder,
+            rng,
+            delta_scratch: vec![0.0; p],
+            grad_scratch: vec![0.0; p],
+            accum_scratch: vec![0.0; p],
+            batch_buf: TokenBatch::new(1, width),
+            total_samples: 0,
+            lr_schedule: crate::schedule::Schedule::from_config(
+                &cfg.algo.lr_schedule,
+                (cfg.algo.outer_steps * cfg.algo.inner_steps) as u64,
+            ),
+            cfg,
+            engine,
+            corpus,
+            val_corpus,
+            trainers,
+        })
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn ledger(&self) -> &CommLedger {
+        &self.ledger
+    }
+
+    pub fn live_trainers(&self) -> usize {
+        self.trainers.iter().filter(|t| t.alive).count()
+    }
+
+    /// The effective hardware max_batch for a trainer: the smallest node
+    /// budget among its workers, capped by the engine's compiled ladder.
+    fn max_batch_for(&self, t: &Trainer) -> usize {
+        let node_min = t
+            .workers
+            .iter()
+            .map(|w| self.nodes[w.node].max_batch)
+            .min()
+            .unwrap_or(1);
+        node_min.min(self.engine.max_batch()).max(1)
+    }
+
+    /// Run the full schedule (T outer steps of H inner steps), honouring
+    /// the checkpoint/resume settings in `run` config.
+    pub fn run(&mut self) -> Result<RunResult> {
+        let mut start = 1u64;
+        if let Some(path) = self.cfg.run.resume_from.clone() {
+            let cp = crate::checkpoint::Checkpoint::load(&path)?;
+            start = cp.outer_step + 1;
+            self.restore(&cp)?;
+            crate::info!("resumed from {path} at outer step {}", cp.outer_step);
+        }
+        let outer_steps = self.cfg.algo.outer_steps as u64;
+        let every = self.cfg.run.checkpoint_every as u64;
+        for t in start..=outer_steps {
+            let hit = self.step_outer(t)?;
+            if let Some(path) = self.cfg.run.checkpoint_path.clone() {
+                if (every > 0 && t % every == 0) || t == outer_steps || hit {
+                    self.snapshot(t).save(&path)?;
+                    crate::debug!("checkpoint written to {path} at outer {t}");
+                }
+            }
+            if hit {
+                crate::info!("target perplexity reached at outer step {t}; stopping");
+                break;
+            }
+        }
+        Ok(self.result())
+    }
+
+    /// Capture the trainer pool for checkpointing.
+    pub fn snapshot(&self, outer_step: u64) -> crate::checkpoint::Checkpoint {
+        use crate::checkpoint::{Checkpoint, TrainerSnapshot, WorkerSnapshot};
+        Checkpoint {
+            config_name: self.cfg.name.clone(),
+            outer_step,
+            total_samples: self.total_samples,
+            comm_count: self.ledger.count() as u64,
+            comm_bytes: self.ledger.total_bytes(),
+            clock_times: (0..self.clock.len()).map(|w| self.clock.time(w)).collect(),
+            trainers: self
+                .trainers
+                .iter()
+                .filter(|t| t.alive)
+                .map(|t| TrainerSnapshot {
+                    id: t.id,
+                    params: t.params.clone(),
+                    outer_velocity: t.outer.velocity().to_vec(),
+                    requested_batch: t.controller.requested(),
+                    inner_steps_done: t.inner_steps_done,
+                    workers: t
+                        .workers
+                        .iter()
+                        .map(|w| WorkerSnapshot {
+                            params: w.state.params.clone(),
+                            m: w.state.m.clone(),
+                            v: w.state.v.clone(),
+                            step: w.state.step,
+                        })
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Restore trainer state from a checkpoint. Trainers present in the
+    /// coordinator but absent from the checkpoint were merged away before
+    /// the snapshot and are marked dead. Data-pipeline position restarts
+    /// from the config seed (see checkpoint module docs).
+    pub fn restore(&mut self, cp: &crate::checkpoint::Checkpoint) -> Result<()> {
+        use anyhow::ensure;
+        let p = self.engine.param_count();
+        for t in &mut self.trainers {
+            t.alive = false;
+        }
+        for snap in &cp.trainers {
+            ensure!(
+                snap.id < self.trainers.len(),
+                "checkpoint trainer id {} out of range (config has {})",
+                snap.id,
+                self.trainers.len()
+            );
+            ensure!(
+                snap.params.len() == p,
+                "checkpoint param count {} != engine {}",
+                snap.params.len(),
+                p
+            );
+            let t = &mut self.trainers[snap.id];
+            ensure!(
+                snap.workers.len() == t.workers.len(),
+                "checkpoint worker count mismatch for trainer {}",
+                snap.id
+            );
+            t.alive = true;
+            t.params.copy_from_slice(&snap.params);
+            t.outer.set_velocity(&snap.outer_velocity);
+            t.controller.set_requested(snap.requested_batch);
+            t.inner_steps_done = snap.inner_steps_done;
+            for (w, ws) in t.workers.iter_mut().zip(snap.workers.iter()) {
+                w.state.params.copy_from_slice(&ws.params);
+                w.state.m.copy_from_slice(&ws.m);
+                w.state.v.copy_from_slice(&ws.v);
+                w.state.step = ws.step;
+            }
+        }
+        for (w, &t) in cp.clock_times.iter().enumerate().map(|(i, t)| (i, t)) {
+            if w < self.clock.len() {
+                let cur = self.clock.time(w);
+                if t > cur {
+                    self.clock.advance(w, t - cur);
+                }
+            }
+        }
+        self.total_samples = cp.total_samples;
+        Ok(())
+    }
+
+    /// One outer step. Returns true if the target perplexity was reached.
+    pub fn step_outer(&mut self, outer_t: u64) -> Result<bool> {
+        // ---- merging (Algorithm 3 lines 11-16) -------------------------
+        let mc = self.cfg.algo.merge.clone();
+        if mc.enabled
+            && self.live_trainers() > 1
+            && mc.frequency > 0
+            && outer_t % mc.frequency as u64 == 0
+        {
+            self.maybe_merge(outer_t)?;
+        }
+
+        // ---- inner loops ------------------------------------------------
+        let h = self.cfg.algo.inner_steps;
+        let live: Vec<usize> = (0..self.trainers.len())
+            .filter(|&i| self.trainers[i].alive)
+            .collect();
+        let mut hit_target = false;
+
+        for &ti in &live {
+            self.trainers[ti].broadcast_params();
+            let plan = self.plan_for(ti);
+            for step_h in 1..=h {
+                self.inner_step(ti, outer_t, &plan)?;
+                // cap on total inner steps (profiling / quick runs)
+                let cap = self.cfg.run.max_inner_steps as u64;
+                if cap > 0 && self.trainers[ti].inner_steps_done >= cap {
+                    break;
+                }
+                // periodic evaluation on worker-0's live parameters
+                if self.cfg.run.eval_every > 0
+                    && step_h % self.cfg.run.eval_every == 0
+                {
+                    let reached = self.evaluate(ti, outer_t)?;
+                    hit_target |= reached;
+                }
+            }
+        }
+
+        // ---- outer sync (Algorithm 3 lines 40-44) ------------------------
+        let param_bytes = (self.engine.param_count() * 4) as u64;
+        for &ti in &live {
+            let m = self.trainers[ti].workers.len();
+            let slots: Vec<usize> =
+                self.trainers[ti].workers.iter().map(|w| w.clock_slot).collect();
+            let comm_t = self.net.allreduce_time(param_bytes, m);
+            let t_after = self.clock.barrier(&slots, comm_t);
+            if m > 1 {
+                self.ledger.record(CommEvent {
+                    kind: CommKind::OuterSync,
+                    at_virtual_s: t_after,
+                    bytes: (2 * (m as u64 - 1)) * param_bytes,
+                    participants: m,
+                    at_inner_step: self.total_samples, // N axis: samples
+                });
+            }
+            let tr = &mut self.trainers[ti];
+            tr.outer_step(&mut self.delta_scratch);
+        }
+
+        // end-of-outer-step evaluation on the trainer parameters
+        for &ti in &live {
+            if self.trainers[ti].alive {
+                let reached = self.evaluate_trainer_params(ti, outer_t)?;
+                hit_target |= reached;
+            }
+        }
+        Ok(hit_target)
+    }
+
+    /// The step plan this trainer uses for the whole outer step
+    /// (Algorithm 3 lines 17-27 — b_req was stored at the previous one).
+    fn plan_for(&self, ti: usize) -> StepPlan {
+        let tr = &self.trainers[ti];
+        let a = &self.cfg.algo;
+        let b_req = if a.batching.adaptive { tr.requested_batch() } else { a.fixed_batch };
+        let max_batch = self.max_batch_for(tr);
+        plan_step(
+            b_req,
+            max_batch,
+            a.switch.multiplier,
+            a.switch.enabled,
+            self.engine.supported_batches(),
+        )
+    }
+
+    /// One inner step of every worker of trainer `ti`.
+    fn inner_step(&mut self, ti: usize, outer_t: u64, plan: &StepPlan) -> Result<()> {
+        let lr = self
+            .lr_schedule
+            .lr(self.cfg.algo.lr_inner, self.trainers[ti].inner_steps_done + 1);
+        let n_workers = self.trainers[ti].workers.len();
+        let width = self.corpus.width();
+
+        for wi in 0..n_workers {
+            // (re)size the shared batch buffer for this plan
+            if self.batch_buf.batch != plan.micro_batch || self.batch_buf.width != width {
+                self.batch_buf = TokenBatch::new(plan.micro_batch, width);
+            }
+
+            let stats = if plan.accum_steps > 1 {
+                // SwitchMode: accumulate accum_steps gradients at the
+                // micro batch, then one optimizer commit (§4.2).
+                self.accum_scratch.iter_mut().for_each(|x| *x = 0.0);
+                let mut agg = StepStats::default();
+                for _ in 0..plan.accum_steps {
+                    let tr = &mut self.trainers[ti];
+                    let w = &mut tr.workers[wi];
+                    w.sampler.next_batch(&self.corpus, &mut self.batch_buf);
+                    let s = self.engine.grad_step(
+                        &w.state.params,
+                        &self.batch_buf,
+                        &mut self.grad_scratch,
+                    )?;
+                    for (a, g) in self.accum_scratch.iter_mut().zip(&self.grad_scratch) {
+                        *a += *g / plan.accum_steps as f32;
+                    }
+                    agg.loss += s.loss / plan.accum_steps as f64;
+                    agg.grad_sq_norm += s.grad_sq_norm / plan.accum_steps as f64;
+                    agg.sigma2 += s.sigma2 / plan.accum_steps as f64;
+                    agg.ip_var += s.ip_var / plan.accum_steps as f64;
+                }
+                let tr = &mut self.trainers[ti];
+                let w = &mut tr.workers[wi];
+                self.engine.apply_update(&mut w.state, lr, &self.accum_scratch)?;
+                agg
+            } else {
+                let tr = &mut self.trainers[ti];
+                let w = &mut tr.workers[wi];
+                w.sampler.next_batch(&self.corpus, &mut self.batch_buf);
+                self.engine.train_step(&mut w.state, lr, &self.batch_buf)?
+            };
+
+            // virtual time: accum_steps micro-steps on this worker's node,
+            // with optional dynamic-workload jitter (truncated at -3 sigma
+            // so time never goes negative)
+            let jitter = self.cfg.cluster.step_jitter;
+            let tr = &mut self.trainers[ti];
+            let w = &tr.workers[wi];
+            let mut dt = self.nodes[w.node].step_time(plan.micro_batch, width - 1)
+                * plan.accum_steps as f64;
+            if jitter > 0.0 {
+                let z = self.rng.normal().clamp(-3.0, 3.0);
+                dt *= (1.0 + jitter * z).max(0.05);
+            }
+            self.clock.advance(w.clock_slot, dt);
+
+            // adaptive-batching statistics (Algorithm 3 line 31)
+            tr.controller.observe(&stats, plan.effective_batch());
+
+            self.total_samples += plan.effective_batch() as u64;
+            let global_step = tr.inner_steps_done + 1;
+            self.recorder.steps.push(StepRecord {
+                global_step,
+                outer_step: outer_t,
+                trainer: ti,
+                worker: wi,
+                batch: plan.micro_batch,
+                requested_batch: tr.controller.requested(),
+                accum_steps: plan.accum_steps,
+                loss: stats.loss,
+                grad_sq_norm: stats.grad_sq_norm,
+                sigma2: stats.sigma2,
+                virtual_time_s: self.clock.time(tr.workers[wi].clock_slot),
+            });
+        }
+        self.trainers[ti].inner_steps_done += 1;
+        Ok(())
+    }
+
+    /// MIT merge round (Algorithms 1-2).
+    fn maybe_merge(&mut self, outer_t: u64) -> Result<()> {
+        let requests: Vec<(usize, usize)> = self
+            .trainers
+            .iter()
+            .filter(|t| t.alive)
+            .map(|t| (t.id, t.requested_batch()))
+            .collect();
+        let policy = match self.cfg.algo.merge.policy {
+            crate::config::MergeSelect::WorstByBatch => MergePolicy::WorstByBatch,
+            crate::config::MergeSelect::Random => MergePolicy::Random,
+        };
+        let selected = check_merge_with_policy(
+            &requests,
+            self.cfg.algo.merge.w,
+            self.cfg.algo.merge.min_trainers,
+            policy,
+            &mut self.rng,
+        );
+        if selected.len() < 2 {
+            return Ok(());
+        }
+
+        // barrier every worker of the merging trainers + transfer time
+        let param_bytes = (self.engine.param_count() * 4) as u64;
+        let slots: Vec<usize> = selected
+            .iter()
+            .flat_map(|&id| self.trainers[id].workers.iter().map(|w| w.clock_slot))
+            .collect();
+        let bytes = (selected.len() as u64 - 1) * param_bytes;
+        let t_after = self.clock.barrier(&slots, self.net.transfer_time(bytes));
+        self.ledger.record(CommEvent {
+            kind: CommKind::Merge,
+            at_virtual_s: t_after,
+            bytes,
+            participants: selected.len(),
+            at_inner_step: self.total_samples,
+        });
+
+        // weighted merge over the selected trainers' parameters
+        let outcome = {
+            // split borrows: collect (id, b_req) first, then build the
+            // mutable member list in id order
+            let reqs: Vec<(usize, usize)> = selected
+                .iter()
+                .map(|&id| (id, self.trainers[id].requested_batch()))
+                .collect();
+            let mut members: Vec<(usize, usize, &mut [f32])> = Vec::new();
+            // safe split of multiple &mut trainers via split_at_mut walk
+            let mut rest: &mut [Trainer] = &mut self.trainers;
+            let mut base = 0usize;
+            let mut sorted = selected.clone();
+            sorted.sort_unstable();
+            for id in sorted {
+                let local = id - base;
+                let tmp = rest;
+                let (head, tail) = tmp.split_at_mut(local + 1);
+                let tr = &mut head[local];
+                let b = reqs.iter().find(|(i, _)| *i == id).unwrap().1;
+                members.push((id, b, tr.params.as_mut_slice()));
+                rest = tail;
+                base = id + 1;
+            }
+            do_merge(&mut members)
+        };
+
+        // consume the non-representative trainers
+        for &dead in &outcome.removed {
+            self.trainers[dead].alive = false;
+        }
+        // the representative keeps the union of the merged shards and its
+        // own optimizer trajectory (Algorithm 2 line 9); its outer
+        // momentum is reset since the parameters jumped
+        let shard_refs: Vec<&crate::data::Shard> = selected
+            .iter()
+            .map(|&id| &self.trainers[id].shard)
+            .collect();
+        let merged_shard = union_shards(&shard_refs);
+        let rep = outcome.representative;
+        {
+            let m = self.trainers[rep].workers.len();
+            let worker_shards = merged_shard.split(m);
+            for (w, ws) in self.trainers[rep]
+                .workers
+                .iter_mut()
+                .zip(worker_shards.into_iter())
+            {
+                w.sampler = crate::data::BatchSampler::new(ws, self.rng.fork(0xABCD + rep as u64));
+            }
+            self.trainers[rep].shard = merged_shard;
+            self.trainers[rep].outer.reset();
+        }
+
+        crate::info!(
+            "outer {outer_t}: merged {:?} -> representative {rep} ({} trainers left)",
+            outcome.removed,
+            self.live_trainers()
+        );
+        self.recorder.merges.push(MergeRecord {
+            outer_step: outer_t,
+            merged: outcome.removed.clone(),
+            representative: rep,
+            trainers_left: self.live_trainers(),
+            virtual_time_s: t_after,
+        });
+        Ok(())
+    }
+
+    /// Evaluate worker-0 parameters of trainer `ti` (mid-outer-step eval,
+    /// the paper's every-10-steps cadence). Returns true if target reached.
+    fn evaluate(&mut self, ti: usize, outer_t: u64) -> Result<bool> {
+        let params_ptr: Vec<f32> = self.trainers[ti].workers[0].state.params.clone();
+        self.eval_params(&params_ptr, ti, outer_t)
+    }
+
+    /// Evaluate the trainer's outer parameters (post-sync).
+    fn evaluate_trainer_params(&mut self, ti: usize, outer_t: u64) -> Result<bool> {
+        let params: Vec<f32> = self.trainers[ti].params.clone();
+        self.eval_params(&params, ti, outer_t)
+    }
+
+    fn eval_params(&mut self, params: &[f32], ti: usize, outer_t: u64) -> Result<bool> {
+        let eb = self.engine.eval_batch();
+        let width = self.val_corpus.width();
+        let mut eval_rng = Rng::new(self.cfg.seed ^ 0xE7A1 ^ outer_t);
+        let mut loss_acc = 0.0;
+        let n = self.cfg.run.eval_batches.max(1);
+        let mut buf = TokenBatch::new(eb, width);
+        for _ in 0..n {
+            for row in 0..eb {
+                let ix = eval_rng.below(self.val_corpus.len() as u64) as usize;
+                buf.row_mut(row).copy_from_slice(self.val_corpus.sequence(ix));
+            }
+            loss_acc += self.engine.eval_loss(params, &buf)?;
+        }
+        let loss = loss_acc / n as f64;
+        let ppl = perplexity(loss);
+        let tr = &self.trainers[ti];
+        let vt = tr
+            .workers
+            .iter()
+            .map(|w| self.clock.time(w.clock_slot))
+            .fold(0.0f64, f64::max);
+        self.recorder.evals.push(EvalRecord {
+            global_step: tr.inner_steps_done,
+            outer_step: outer_t,
+            trainer: ti,
+            loss,
+            perplexity: ppl,
+            virtual_time_s: vt,
+            comm_count: self.ledger.count(),
+            comm_bytes: self.ledger.total_bytes(),
+        });
+        Ok(self.cfg.run.target_ppl > 0.0 && ppl <= self.cfg.run.target_ppl)
+    }
+
+    /// Final summary.
+    pub fn result(&self) -> RunResult {
+        RunResult {
+            name: self.cfg.name.clone(),
+            method: self.cfg.algo.method,
+            best_ppl: self.recorder.best_perplexity().unwrap_or(f64::INFINITY),
+            final_ppl: self.recorder.final_perplexity().unwrap_or(f64::INFINITY),
+            total_inner_steps: self
+                .trainers
+                .iter()
+                .map(|t| t.inner_steps_done)
+                .max()
+                .unwrap_or(0),
+            total_samples: self.total_samples,
+            comm_count: self.ledger.count(),
+            comm_bytes: self.ledger.total_bytes(),
+            virtual_time_s: self.clock.max_time(),
+            trainers_left: self.live_trainers(),
+            time_to_target: if self.cfg.run.target_ppl > 0.0 {
+                self.recorder.time_to_target(self.cfg.run.target_ppl)
+            } else {
+                None
+            },
+        }
+    }
+}
+
+/// Convenience: build engine + coordinator from a config and run it.
+pub fn run_experiment(cfg: Config) -> Result<RunResult> {
+    let engine = crate::engine::build_engine(&cfg)?;
+    let mut coord = Coordinator::new(cfg, engine)?;
+    let result = coord.run()?;
+    if let Some(dir) = coord.cfg.out_dir.clone() {
+        let base = format!("{dir}/{}", coord.cfg.name);
+        coord.recorder.write_jsonl(&format!("{base}.jsonl"))?;
+        coord.recorder.write_eval_csv(&format!("{base}.csv"))?;
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn mock_cfg() -> Config {
+        let mut cfg = presets::mock_default();
+        cfg.algo.outer_steps = 8;
+        cfg.algo.inner_steps = 15;
+        cfg.algo.lr_inner = 0.15; // converge fast enough that the norm
+                                  // test's request visibly grows in-test
+        cfg.algo.num_trainers = 4;
+        cfg.algo.workers_per_trainer = 2;
+        cfg.algo.merge.frequency = 2;
+        cfg.run.eval_every = 5;
+        cfg
+    }
+
+    fn run_with(cfg: Config) -> (RunResult, Recorder, usize) {
+        let engine = crate::engine::build_engine(&cfg).unwrap();
+        let mut c = Coordinator::new(cfg, engine).unwrap();
+        let r = c.run().unwrap();
+        let rec = c.recorder.clone();
+        (r, rec, c.live_trainers())
+    }
+
+    #[test]
+    fn adloco_run_descends_and_merges() {
+        let (r, rec, live) = run_with(mock_cfg());
+        assert!(r.best_ppl < rec.evals.first().unwrap().perplexity);
+        assert!(live < 4, "merging should consolidate trainers");
+        assert!(!rec.merges.is_empty());
+        assert!(r.comm_count > 0);
+        assert!(r.virtual_time_s > 0.0);
+    }
+
+    #[test]
+    fn adaptive_batch_grows() {
+        let (_, rec, _) = run_with(mock_cfg());
+        let first_req = rec.steps.first().unwrap().requested_batch;
+        let last_req = rec.steps.last().unwrap().requested_batch;
+        assert!(
+            last_req > first_req,
+            "requested batch should grow: {first_req} -> {last_req}"
+        );
+    }
+
+    #[test]
+    fn diloco_policy_disables_features() {
+        let mut cfg = mock_cfg();
+        cfg.algo.method = Method::DiLoCo;
+        let resolved = resolve_policy(&cfg);
+        assert!(!resolved.algo.batching.adaptive);
+        assert!(!resolved.algo.merge.enabled);
+        assert!(!resolved.algo.switch.enabled);
+
+        let (r, rec, live) = run_with(cfg);
+        assert_eq!(live, 4, "DiLoCo must not merge");
+        assert!(rec.merges.is_empty());
+        // fixed batch: every step at algo.fixed_batch
+        let fixed = resolved.algo.fixed_batch;
+        assert!(rec.steps.iter().all(|s| s.batch == fixed.min(16)));
+        assert!(r.best_ppl.is_finite());
+    }
+
+    #[test]
+    fn localsgd_uses_average_outer() {
+        let mut cfg = mock_cfg();
+        cfg.algo.method = Method::LocalSgd;
+        let resolved = resolve_policy(&cfg);
+        assert_eq!(resolved.algo.outer_opt, crate::config::OuterOptKind::Average);
+        let (r, _, _) = run_with(cfg);
+        assert!(r.best_ppl.is_finite());
+    }
+
+    #[test]
+    fn switch_mode_engages_at_large_requests() {
+        let mut cfg = mock_cfg();
+        // tiny node budget + warm-started request past 2*max_batch forces
+        // SwitchMode from the first plan
+        for n in &mut cfg.cluster.nodes {
+            n.max_batch = 2;
+        }
+        cfg.algo.batching.initial_batch = 10;
+        cfg.algo.batching.max_request = 16; // bound accumulation depth
+        cfg.algo.outer_steps = 8;
+        let (_, rec, _) = run_with(cfg);
+        assert!(
+            rec.steps.iter().any(|s| s.accum_steps > 1),
+            "switch mode never engaged"
+        );
+        // micro batch never exceeds the node budget
+        assert!(rec.steps.iter().all(|s| s.batch <= 2));
+    }
+
+    #[test]
+    fn switch_disabled_never_accumulates() {
+        let mut cfg = mock_cfg();
+        for n in &mut cfg.cluster.nodes {
+            n.max_batch = 2;
+        }
+        cfg.algo.batching.max_request = 16;
+        cfg.algo.switch.enabled = false;
+        let (_, rec, _) = run_with(cfg);
+        assert!(rec.steps.iter().all(|s| s.accum_steps == 1));
+    }
+
+    #[test]
+    fn merge_preserves_param_dimension_and_counts() {
+        let cfg = mock_cfg();
+        let engine = crate::engine::build_engine(&cfg).unwrap();
+        let mut c = Coordinator::new(cfg, engine).unwrap();
+        let p = c.engine.param_count();
+        for t in 1..=6u64 {
+            c.step_outer(t).unwrap();
+        }
+        for tr in c.trainers.iter().filter(|t| t.alive) {
+            assert_eq!(tr.params.len(), p);
+        }
+        // every merge recorded the surviving count correctly
+        for m in &c.recorder.merges {
+            assert!(m.trainers_left >= c.cfg.algo.merge.min_trainers);
+        }
+    }
+
+    #[test]
+    fn min_trainers_floor_respected() {
+        let mut cfg = mock_cfg();
+        cfg.algo.merge.min_trainers = 3;
+        cfg.algo.merge.w = 4;
+        cfg.algo.outer_steps = 10;
+        let (_, _, live) = run_with(cfg);
+        assert!(live >= 3, "live {live} below min_trainers floor");
+    }
+
+    #[test]
+    fn comm_ledger_has_outer_syncs() {
+        let cfg = mock_cfg(); // workers_per_trainer = 2 -> real syncs
+        let engine = crate::engine::build_engine(&cfg).unwrap();
+        let mut c = Coordinator::new(cfg, engine).unwrap();
+        c.run().unwrap();
+        assert!(c.ledger().count_kind(CommKind::OuterSync) > 0);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let (r1, rec1, _) = run_with(mock_cfg());
+        let (r2, rec2, _) = run_with(mock_cfg());
+        assert_eq!(r1.comm_count, r2.comm_count);
+        assert_eq!(r1.total_samples, r2.total_samples);
+        assert_eq!(rec1.evals.len(), rec2.evals.len());
+        for (a, b) in rec1.evals.iter().zip(rec2.evals.iter()) {
+            assert!((a.perplexity - b.perplexity).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn random_merge_policy_runs_and_merges() {
+        let mut cfg = mock_cfg();
+        cfg.algo.merge.policy = crate::config::MergeSelect::Random;
+        let (r, rec, live) = run_with(cfg);
+        assert!(r.best_ppl.is_finite());
+        assert!(live < 4, "random policy must still merge");
+        assert!(!rec.merges.is_empty());
+    }
+
+    #[test]
+    fn target_ppl_stops_early() {
+        let mut cfg = mock_cfg();
+        cfg.run.target_ppl = 1e14; // above the e^30 perplexity clamp => trivially reached
+        let (r, _, _) = run_with(cfg);
+        assert!(r.time_to_target.is_some());
+        assert!(r.total_inner_steps <= 15, "should stop within first outer step");
+    }
+
+    #[test]
+    fn virtual_time_monotone_in_steps() {
+        let (_, rec, _) = run_with(mock_cfg());
+        // per (trainer, worker) stream, virtual time must be nondecreasing
+        use std::collections::HashMap;
+        let mut last: HashMap<(usize, usize), f64> = HashMap::new();
+        for s in &rec.steps {
+            let key = (s.trainer, s.worker);
+            if let Some(prev) = last.get(&key) {
+                assert!(s.virtual_time_s >= *prev);
+            }
+            last.insert(key, s.virtual_time_s);
+        }
+    }
+
+}

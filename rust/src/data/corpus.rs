@@ -1,0 +1,221 @@
+//! Deterministic synthetic corpus generator (C4 stand-in; see module docs
+//! in `data/mod.rs` and DESIGN.md §4 for the substitution rationale).
+
+use crate::util::{Rng, ZipfTable};
+
+/// Generation parameters for a synthetic corpus.
+#[derive(Clone, Debug)]
+pub struct CorpusSpec {
+    pub sequences: usize,
+    pub seq_width: usize, // seq_len + 1 tokens per stored example
+    pub vocab: usize,
+    pub zipf_s: f64,
+    /// Probability a position is drawn from the Markov chain rather than
+    /// the unigram background (higher = more learnable structure).
+    pub structure: f64,
+    /// Number of distinct repeated templates woven into the corpus.
+    pub templates: usize,
+    pub seed: u64,
+}
+
+impl CorpusSpec {
+    pub fn new(sequences: usize, seq_len: usize, vocab: usize, zipf_s: f64, seed: u64) -> Self {
+        CorpusSpec {
+            sequences,
+            seq_width: seq_len + 1,
+            vocab,
+            zipf_s,
+            structure: 0.75,
+            templates: 16,
+            seed,
+        }
+    }
+}
+
+/// A fully-materialized token corpus (train or validation split).
+#[derive(Clone)]
+pub struct Corpus {
+    pub spec: CorpusSpec,
+    /// Row-major `[sequences, seq_width]`.
+    tokens: Vec<i32>,
+}
+
+impl Corpus {
+    /// Generate a corpus. Deterministic in `spec` (including the seed).
+    pub fn generate(spec: CorpusSpec) -> Corpus {
+        assert!(spec.vocab >= 4, "vocab too small");
+        let mut rng = Rng::new(spec.seed);
+        let zipf = ZipfTable::new(spec.vocab, spec.zipf_s);
+
+        // Order-2 Markov chain over a hashed transition rule: cheap,
+        // deterministic, and gives each (a, b) context a sharp next-token
+        // distribution the model can learn.
+        let chain = MarkovRule { vocab: spec.vocab as u64, salt: spec.seed ^ 0xC0FFEE };
+
+        // Repeated templates: short token motifs inserted verbatim.
+        let templates: Vec<Vec<i32>> = (0..spec.templates)
+            .map(|_| {
+                let len = 6 + rng.below(10) as usize;
+                (0..len).map(|_| zipf.sample(&mut rng) as i32).collect()
+            })
+            .collect();
+
+        let mut tokens = Vec::with_capacity(spec.sequences * spec.seq_width);
+        for _ in 0..spec.sequences {
+            let mut a = zipf.sample(&mut rng) as i32;
+            let mut b = zipf.sample(&mut rng) as i32;
+            let mut row: Vec<i32> = Vec::with_capacity(spec.seq_width);
+            row.push(a);
+            row.push(b);
+            while row.len() < spec.seq_width {
+                if !templates.is_empty() && rng.f64() < 0.05 {
+                    // splice a template motif
+                    let t = &templates[rng.below(templates.len() as u64) as usize];
+                    for &tok in t.iter() {
+                        if row.len() >= spec.seq_width {
+                            break;
+                        }
+                        row.push(tok);
+                    }
+                } else if rng.f64() < spec.structure {
+                    row.push(chain.next(a, b));
+                } else {
+                    row.push(zipf.sample(&mut rng) as i32);
+                }
+                b = row[row.len() - 1];
+                a = row[row.len() - 2];
+            }
+            row.truncate(spec.seq_width);
+            tokens.extend_from_slice(&row);
+        }
+        Corpus { spec, tokens }
+    }
+
+    pub fn len(&self) -> usize {
+        self.spec.sequences
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn width(&self) -> usize {
+        self.spec.seq_width
+    }
+
+    #[inline]
+    pub fn sequence(&self, i: usize) -> &[i32] {
+        let w = self.spec.seq_width;
+        &self.tokens[i * w..(i + 1) * w]
+    }
+}
+
+/// Hash-derived deterministic order-2 transition rule.
+struct MarkovRule {
+    vocab: u64,
+    salt: u64,
+}
+
+impl MarkovRule {
+    /// Next token for context (a, b): one of 4 context-determined modes,
+    /// selected pseudo-randomly but *fixed* per context, so the mapping is
+    /// learnable.
+    #[inline]
+    fn next(&self, a: i32, b: i32) -> i32 {
+        let h = Self::mix(self.salt ^ ((a as u64) << 32 | (b as u64 & 0xFFFF_FFFF)));
+        (h % self.vocab) as i32
+    }
+
+    #[inline]
+    fn mix(mut z: u64) -> u64 {
+        z = (z ^ (z >> 33)).wrapping_mul(0xFF51AFD7ED558CCD);
+        z = (z ^ (z >> 33)).wrapping_mul(0xC4CEB9FE1A85EC53);
+        z ^ (z >> 33)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CorpusSpec {
+        CorpusSpec::new(200, 32, 128, 1.1, 42)
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Corpus::generate(spec());
+        let b = Corpus::generate(spec());
+        assert_eq!(a.tokens, b.tokens);
+        let mut s2 = spec();
+        s2.seed = 43;
+        let c = Corpus::generate(s2);
+        assert_ne!(a.tokens, c.tokens);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = Corpus::generate(spec());
+        for i in 0..c.len() {
+            for &t in c.sequence(i) {
+                assert!((0..128).contains(&t));
+            }
+        }
+    }
+
+    #[test]
+    fn shapes() {
+        let c = Corpus::generate(spec());
+        assert_eq!(c.len(), 200);
+        assert_eq!(c.width(), 33);
+        assert_eq!(c.sequence(0).len(), 33);
+        assert_eq!(c.sequence(199).len(), 33);
+    }
+
+    #[test]
+    fn unigram_is_heavy_tailed() {
+        let c = Corpus::generate(CorpusSpec::new(500, 64, 256, 1.2, 1));
+        let mut counts = vec![0usize; 256];
+        for i in 0..c.len() {
+            for &t in c.sequence(i) {
+                counts[t as usize] += 1;
+            }
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let total: usize = counts.iter().sum();
+        let top10: usize = counts[..10].iter().sum();
+        assert!(
+            top10 as f64 / total as f64 > 0.25,
+            "top-10 share {top10}/{total} not heavy-tailed"
+        );
+    }
+
+    #[test]
+    fn markov_structure_is_learnable() {
+        // The same context (a, b) must usually produce the same next token
+        // when the structural mode fires => conditional entropy is far
+        // below the unigram entropy. Count repeated-context agreement.
+        let c = Corpus::generate(CorpusSpec::new(2000, 32, 64, 1.1, 5));
+        use std::collections::HashMap;
+        let mut ctx: HashMap<(i32, i32), HashMap<i32, usize>> = HashMap::new();
+        for i in 0..c.len() {
+            let s = c.sequence(i);
+            for w in s.windows(3) {
+                *ctx.entry((w[0], w[1])).or_default().entry(w[2]).or_default() += 1;
+            }
+        }
+        // aggregate: fraction of mass on each context's modal token
+        let (mut modal, mut total) = (0usize, 0usize);
+        for (_, dist) in ctx.iter() {
+            let sum: usize = dist.values().sum();
+            if sum < 5 {
+                continue;
+            }
+            modal += dist.values().max().unwrap();
+            total += sum;
+        }
+        assert!(total > 0);
+        let frac = modal as f64 / total as f64;
+        assert!(frac > 0.5, "modal fraction {frac:.3} — structure too weak");
+    }
+}

@@ -1,0 +1,51 @@
+//! Synthetic corpus, sharding, and batch sampling.
+//!
+//! The paper pre-trains on C4-English; with no network access we substitute
+//! a deterministic synthetic corpus that keeps the two properties the
+//! coordination layer actually reacts to (DESIGN.md §4):
+//!
+//!   1. a *heavy-tailed unigram distribution* (Zipf) — gradient noise is
+//!      dominated by rare tokens, which is what makes the norm-test
+//!      statistic informative;
+//!   2. *learnable sequential structure* — an order-2 Markov chain blended
+//!      with repeated templates, so the model's loss genuinely decreases
+//!      and the gradient signal-to-noise ratio falls over training
+//!      (the regime where adaptive batching pays off).
+//!
+//! Sharding follows §4.1: each trainer gets a random, possibly
+//! intersecting subset `D_i ⊆ D`, and workers within a trainer partition
+//! that subset disjointly.
+
+pub mod corpus;
+pub mod sampler;
+pub mod shard;
+
+pub use corpus::{Corpus, CorpusSpec};
+pub use sampler::BatchSampler;
+pub use shard::{make_shards, Shard};
+
+/// A batch of token sequences, row-major `[batch, seq_len + 1]` i32 —
+/// exactly the layout the PJRT `train_step` artifacts expect.
+#[derive(Clone, Debug)]
+pub struct TokenBatch {
+    pub tokens: Vec<i32>,
+    pub batch: usize,
+    pub width: usize,
+}
+
+impl TokenBatch {
+    pub fn new(batch: usize, width: usize) -> Self {
+        TokenBatch { tokens: vec![0; batch * width], batch, width }
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [i32] {
+        let w = self.width;
+        &mut self.tokens[i * w..(i + 1) * w]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.width..(i + 1) * self.width]
+    }
+}

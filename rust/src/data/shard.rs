@@ -1,0 +1,120 @@
+//! Data sharding per the paper's §4.1: every trainer receives a random,
+//! *possibly intersecting* subset `D_i ⊆ D`; workers inside a trainer
+//! split that subset disjointly.
+
+use crate::util::Rng;
+
+/// A shard is a list of sequence indices into the shared corpus.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub indices: Vec<usize>,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Split a trainer shard into `m` disjoint worker shards (round-robin
+    /// to keep sizes within 1 of each other).
+    pub fn split(&self, m: usize) -> Vec<Shard> {
+        assert!(m >= 1);
+        let mut out: Vec<Shard> = (0..m).map(|_| Shard { indices: Vec::new() }).collect();
+        for (i, &ix) in self.indices.iter().enumerate() {
+            out[i % m].indices.push(ix);
+        }
+        out
+    }
+}
+
+/// Build `k` trainer shards over a corpus of `n` sequences.
+///
+/// `fraction` controls shard size: each shard holds `ceil(fraction * n)`
+/// sequences drawn without replacement *within the shard* but
+/// independently *across shards*, so shards intersect with the natural
+/// hypergeometric overlap (the paper's "possibly intersecting random data
+/// subset assigned to trainer i").
+pub fn make_shards(n: usize, k: usize, fraction: f64, rng: &mut Rng) -> Vec<Shard> {
+    assert!(n > 0 && k > 0);
+    assert!((0.0..=1.0).contains(&fraction));
+    let size = ((fraction * n as f64).ceil() as usize).clamp(1, n);
+    (0..k)
+        .map(|_| Shard { indices: rng.sample_indices(n, size) })
+        .collect()
+}
+
+/// Merge shard index sets when trainers merge (the representative keeps
+/// the union so no data assigned to the consumed trainers is lost).
+pub fn union_shards(shards: &[&Shard]) -> Shard {
+    let mut all: Vec<usize> = shards.iter().flat_map(|s| s.indices.iter().copied()).collect();
+    all.sort_unstable();
+    all.dedup();
+    Shard { indices: all }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_sizes() {
+        let mut rng = Rng::new(1);
+        let shards = make_shards(100, 4, 0.5, &mut rng);
+        assert_eq!(shards.len(), 4);
+        for s in &shards {
+            assert_eq!(s.len(), 50);
+            let mut d = s.indices.clone();
+            d.sort();
+            d.dedup();
+            assert_eq!(d.len(), 50, "indices within a shard must be distinct");
+        }
+    }
+
+    #[test]
+    fn shards_differ_and_intersect() {
+        let mut rng = Rng::new(2);
+        let shards = make_shards(1000, 2, 0.5, &mut rng);
+        let a: std::collections::HashSet<_> = shards[0].indices.iter().collect();
+        let b: std::collections::HashSet<_> = shards[1].indices.iter().collect();
+        assert_ne!(a, b);
+        // expected overlap ~ 0.25 * 1000 = 250; allow wide tolerance
+        let inter = a.intersection(&b).count();
+        assert!((100..400).contains(&inter), "overlap {inter}");
+    }
+
+    #[test]
+    fn worker_split_disjoint_and_complete() {
+        let mut rng = Rng::new(3);
+        let shard = make_shards(97, 1, 1.0, &mut rng).pop().unwrap();
+        let workers = shard.split(4);
+        let sizes: Vec<usize> = workers.iter().map(|w| w.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 97);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        let mut all: Vec<usize> = workers.iter().flat_map(|w| w.indices.clone()).collect();
+        all.sort();
+        let mut orig = shard.indices.clone();
+        orig.sort();
+        assert_eq!(all, orig);
+    }
+
+    #[test]
+    fn union_dedups() {
+        let a = Shard { indices: vec![1, 2, 3] };
+        let b = Shard { indices: vec![3, 4] };
+        let u = union_shards(&[&a, &b]);
+        assert_eq!(u.indices, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn fraction_one_is_full_coverage() {
+        let mut rng = Rng::new(4);
+        let s = &make_shards(50, 1, 1.0, &mut rng)[0];
+        let mut ix = s.indices.clone();
+        ix.sort();
+        assert_eq!(ix, (0..50).collect::<Vec<_>>());
+    }
+}

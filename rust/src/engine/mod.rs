@@ -1,0 +1,226 @@
+//! The `TrainEngine` abstraction: what the coordinator needs from the
+//! compute substrate, implemented by both the PJRT-backed
+//! [`crate::runtime::XlaEngine`] (the real transformer) and the pure-Rust
+//! [`MockEngine`] (a synthetic stochastic objective for tests and the
+//! long-horizon theory benches).
+//!
+//! The engine boundary is deliberately *stateless about training policy*:
+//! batch sizes, accumulation, merging and outer optimization all live in
+//! the coordinator. The engine only knows how to (a) take one inner
+//! optimizer step at one of its supported batch sizes, (b) produce a raw
+//! gradient for SwitchMode accumulation, (c) commit an accumulated
+//! gradient, and (d) evaluate.
+
+pub mod mock;
+
+pub use mock::{MockEngine, MockSpec};
+
+use crate::config::{Config, EngineConfig};
+use crate::data::TokenBatch;
+use anyhow::Result;
+
+/// Statistics returned by every gradient computation — the raw material
+/// of the adaptive-batching tests (paper Eqs. 8-12).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// Mean loss over the batch.
+    pub loss: f64,
+    /// ||mean gradient||^2  (Eq. 10 denominator).
+    pub grad_sq_norm: f64,
+    /// Estimated per-sample gradient variance sigma^2_B (Eq. 8).
+    pub sigma2: f64,
+    /// Estimated Var_i(<grad_i, gbar>) (Eq. 12 numerator).
+    pub ip_var: f64,
+}
+
+/// Mutable per-worker model state: flat parameters + AdamW moments.
+/// The flat-vector convention (DESIGN.md) makes DoMerge and outer deltas
+/// plain dense ops.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// 1-based count of optimizer updates applied (AdamW bias correction).
+    pub step: u64,
+}
+
+impl ModelState {
+    pub fn zeros_like(params: Vec<f32>) -> Self {
+        let n = params.len();
+        ModelState { params, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+
+    /// Reset optimizer moments (used after merges when moments of the
+    /// consumed trainers are dropped; the representative's are carried).
+    pub fn reset_moments(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.step = 0;
+    }
+}
+
+/// Compute substrate interface (see module docs).
+pub trait TrainEngine {
+    /// Human-readable engine identifier for logs/metrics.
+    fn name(&self) -> String;
+
+    /// Flat parameter vector length.
+    fn param_count(&self) -> usize;
+
+    /// Fresh model state. `seed` differentiates trainer initializations
+    /// (the paper's MIT uses independent inits).
+    fn init_state(&self, seed: u64) -> ModelState;
+
+    /// Ascending list of batch sizes with a compiled executable (the
+    /// AOT ladder). The coordinator rounds requested batches onto this.
+    fn supported_batches(&self) -> &[usize];
+
+    /// Largest executable batch (the paper's max_batch is then
+    /// min(engine max, node max) — see the coordinator).
+    fn max_batch(&self) -> usize {
+        *self.supported_batches().last().expect("empty ladder")
+    }
+
+    /// Eval batch size the engine was compiled for.
+    fn eval_batch(&self) -> usize;
+
+    /// One fused inner step (forward, backward, stats, AdamW update).
+    /// `batch.batch` must be a supported batch size.
+    fn train_step(
+        &mut self,
+        state: &mut ModelState,
+        lr: f64,
+        batch: &TokenBatch,
+    ) -> Result<StepStats>;
+
+    /// Gradient + stats at max_batch without applying an update
+    /// (SwitchMode micro-step). Writes the mean gradient into `grad_out`.
+    fn grad_step(
+        &mut self,
+        params: &[f32],
+        batch: &TokenBatch,
+        grad_out: &mut [f32],
+    ) -> Result<StepStats>;
+
+    /// Commit an (accumulated) gradient with AdamW (SwitchMode commit).
+    fn apply_update(&mut self, state: &mut ModelState, lr: f64, grad: &[f32]) -> Result<()>;
+
+    /// Mean loss over one eval batch (batch.batch == eval_batch()).
+    fn eval_loss(&mut self, params: &[f32], batch: &TokenBatch) -> Result<f64>;
+}
+
+/// Shared AdamW update used by the MockEngine (the XlaEngine's AdamW is
+/// fused into the HLO; `python/tests/test_model.py::test_adamw_against_
+/// manual_numpy` pins both to the same arithmetic).
+pub struct AdamWParams {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+}
+
+impl Default for AdamWParams {
+    fn default() -> Self {
+        // matches python/compile/model.py ModelConfig defaults
+        AdamWParams { beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.1 }
+    }
+}
+
+pub fn adamw_step(state: &mut ModelState, grad: &[f32], lr: f64, p: &AdamWParams) {
+    debug_assert_eq!(state.params.len(), grad.len());
+    state.step += 1;
+    let t = state.step as f64;
+    let bc1 = 1.0 - p.beta1.powf(t);
+    let bc2 = 1.0 - p.beta2.powf(t);
+    for i in 0..grad.len() {
+        let g = grad[i] as f64;
+        let m = p.beta1 * state.m[i] as f64 + (1.0 - p.beta1) * g;
+        let v = p.beta2 * state.v[i] as f64 + (1.0 - p.beta2) * g * g;
+        state.m[i] = m as f32;
+        state.v[i] = v as f32;
+        let m_hat = m / bc1;
+        let v_hat = v / bc2;
+        let x = state.params[i] as f64;
+        state.params[i] =
+            (x - lr * (m_hat / (v_hat.sqrt() + p.eps) + p.weight_decay * x)) as f32;
+    }
+}
+
+/// Plain SGD update (what the paper's theorems assume for the outer/inner
+/// analysis; the theory benches use it for clean Theorem 1/2 curves).
+pub fn sgd_step(state: &mut ModelState, grad: &[f32], lr: f64) {
+    state.step += 1;
+    for i in 0..grad.len() {
+        state.params[i] -= (lr * grad[i] as f64) as f32;
+    }
+}
+
+/// Build an engine from config. XlaEngine construction lives in
+/// `crate::runtime` (it owns the PJRT client); this factory dispatches.
+pub fn build_engine(cfg: &Config) -> Result<Box<dyn TrainEngine>> {
+    match &cfg.engine {
+        EngineConfig::Mock { dim, noise, condition } => Ok(Box::new(MockEngine::new(
+            MockSpec {
+                dim: *dim,
+                noise: *noise,
+                condition: *condition,
+                seed: cfg.seed ^ 0x5EED,
+                ..MockSpec::default()
+            },
+        ))),
+        EngineConfig::Xla { artifacts_dir, profile } => {
+            let engine = crate::runtime::XlaEngine::load(artifacts_dir, profile)?;
+            Ok(Box::new(engine))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adamw_matches_reference_arithmetic() {
+        // mirrors python/tests/test_model.py::test_adamw_against_manual_numpy
+        let p = AdamWParams::default();
+        let mut st = ModelState::zeros_like(vec![1.0, -2.0, 0.5]);
+        st.m = vec![0.1, 0.0, -0.1];
+        st.v = vec![0.01, 0.02, 0.0];
+        let grad = [0.3f32, -0.6, 0.9];
+        let lr = 2e-3;
+        let before = st.clone();
+        adamw_step(&mut st, &grad, lr, &p);
+        assert_eq!(st.step, 1);
+        for i in 0..3 {
+            let g = grad[i] as f64;
+            let m = 0.9 * before.m[i] as f64 + 0.1 * g;
+            let v = 0.95 * before.v[i] as f64 + 0.05 * g * g;
+            let mh = m / (1.0 - 0.9f64);
+            let vh = v / (1.0 - 0.95f64);
+            let x = before.params[i] as f64;
+            let want = x - lr * (mh / (vh.sqrt() + 1e-8) + 0.1 * x);
+            assert!((st.params[i] as f64 - want).abs() < 1e-6, "i={i}");
+        }
+    }
+
+    #[test]
+    fn sgd_step_basic() {
+        let mut st = ModelState::zeros_like(vec![1.0, 1.0]);
+        sgd_step(&mut st, &[0.5, -0.5], 0.1);
+        assert!((st.params[0] - 0.95).abs() < 1e-6);
+        assert!((st.params[1] - 1.05).abs() < 1e-6);
+        assert_eq!(st.step, 1);
+    }
+
+    #[test]
+    fn reset_moments() {
+        let mut st = ModelState::zeros_like(vec![1.0]);
+        adamw_step(&mut st, &[1.0], 0.01, &AdamWParams::default());
+        assert_ne!(st.m[0], 0.0);
+        st.reset_moments();
+        assert_eq!(st.m[0], 0.0);
+        assert_eq!(st.v[0], 0.0);
+        assert_eq!(st.step, 0);
+    }
+}

@@ -1,0 +1,38 @@
+//! # AdLoCo — adaptive batching for communication-efficient distributed training
+//!
+//! Reproduction of *"AdLoCo: adaptive batching significantly improves
+//! communications efficiency and convergence for Large Language Models"*
+//! (Kutuzov et al., 2025) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: the
+//!   AdLoCo orchestrator ([`coordinator`]) with adaptive batching
+//!   ([`batching`]), multi-instance trainer merging ([`merge`]), SwitchMode
+//!   gradient accumulation, DiLoCo-style outer optimization ([`outer`]),
+//!   a simulated multi-GPU cluster ([`simulator`]), plus the DiLoCo and
+//!   LocalSGD baselines.
+//! * **L2/L1 (build-time Python)** — a MicroLlama-style transformer with a
+//!   Pallas flash-attention kernel and a fused gradient-moment kernel,
+//!   AOT-lowered to HLO text and executed through the PJRT runtime
+//!   ([`runtime`]).
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod batching;
+pub mod benchkit;
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod merge;
+pub mod metrics;
+pub mod outer;
+pub mod runtime;
+pub mod schedule;
+pub mod simulator;
+pub mod sweep;
+pub mod theory;
+pub mod trainer;
+pub mod util;

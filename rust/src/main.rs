@@ -1,0 +1,292 @@
+//! `adloco` — CLI entry point for the AdLoCo reproduction.
+//!
+//! Subcommands:
+//!   train      run one experiment from a preset/config (+ --set overrides)
+//!   compare    run several methods on the same setup and tabulate them
+//!   calibrate  measure real PJRT step times and fit the simulator model
+//!   inspect    print an artifact profile's metadata
+//!   presets    list named presets
+//!
+//! Examples:
+//!   adloco train --preset quick
+//!   adloco train --preset xla_tiny --set algo.outer_steps=4 --out runs
+//!   adloco compare --preset mock_default --methods adloco,diloco,localsgd
+//!   adloco calibrate --profile tiny
+
+use adloco::cli;
+use adloco::config::{presets, Config, Method};
+use adloco::coordinator::{resolve_policy, run_experiment, RunResult};
+use adloco::engine::TrainEngine;
+use adloco::util::logger;
+use anyhow::{bail, Context, Result};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = cli::parse(argv)?;
+    if let Some(lvl) = args.opt("log-level") {
+        logger::set_max_level(match lvl {
+            "error" => logger::Level::Error,
+            "warn" => logger::Level::Warn,
+            "info" => logger::Level::Info,
+            "debug" => logger::Level::Debug,
+            "trace" => logger::Level::Trace,
+            other => bail!("unknown log level {other:?}"),
+        });
+    }
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("report") => cmd_report(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("presets") => {
+            for name in presets::preset_names() {
+                println!("{name}");
+            }
+            Ok(())
+        }
+        Some(other) => {
+            bail!("unknown subcommand {other:?} (try: train, compare, calibrate, inspect, report, sweep, presets)")
+        }
+        None => {
+            println!("adloco — AdLoCo distributed-training reproduction");
+            println!("usage: adloco <train|compare|calibrate|inspect|report|sweep|presets> [options]");
+            Ok(())
+        }
+    }
+}
+
+fn load_config(args: &cli::Args) -> Result<Config> {
+    let mut cfg = match (args.opt("config"), args.opt("preset")) {
+        (Some(path), _) => Config::load(path)?,
+        (None, Some(name)) => {
+            presets::by_name(name).with_context(|| format!("unknown preset {name:?}"))?
+        }
+        (None, None) => presets::mock_default(),
+    };
+    for spec in args.opt_all("set") {
+        cfg.apply_override(spec)?;
+    }
+    if let Some(out) = args.opt("out") {
+        cfg.out_dir = Some(out.to_string());
+    }
+    if let Some(seed) = args.opt_parse::<u64>("seed")? {
+        cfg.seed = seed;
+    }
+    if let Some(t) = args.opt_parse::<f64>("target-ppl")? {
+        cfg.run.target_ppl = t;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn print_result(r: &RunResult) {
+    println!("== {} ({}) ==", r.name, r.method.as_str());
+    println!("  best ppl        : {:.4}", r.best_ppl);
+    println!("  final ppl       : {:.4}", r.final_ppl);
+    println!("  inner steps     : {}", r.total_inner_steps);
+    println!("  samples         : {}", r.total_samples);
+    println!("  communications  : {} ({} bytes)", r.comm_count, r.comm_bytes);
+    println!("  virtual time    : {:.3}s", r.virtual_time_s);
+    println!("  trainers left   : {}", r.trainers_left);
+    if let Some((step, t, comms)) = r.time_to_target {
+        println!("  time-to-target  : step {step}, {t:.3}s, {comms} comms");
+    }
+}
+
+fn cmd_train(args: &cli::Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    adloco::info!("running {} [{}]", cfg.name, cfg.algo.method.as_str());
+    let r = run_experiment(cfg)?;
+    print_result(&r);
+    Ok(())
+}
+
+fn cmd_compare(args: &cli::Args) -> Result<()> {
+    let methods: Vec<Method> = args
+        .opt("methods")
+        .unwrap_or("adloco,diloco,localsgd")
+        .split(',')
+        .map(Method::parse)
+        .collect::<Result<_>>()?;
+    let base = load_config(args)?;
+    let mut rows = Vec::new();
+    for m in methods {
+        let mut cfg = base.clone();
+        cfg.algo.method = m;
+        cfg.name = format!("{}_{}", base.name, m.as_str());
+        let cfg = resolve_policy(&cfg);
+        adloco::info!("running {}", cfg.name);
+        rows.push(run_experiment(cfg)?);
+    }
+    println!(
+        "{:<26} {:>10} {:>10} {:>8} {:>12} {:>10}",
+        "run", "best_ppl", "final_ppl", "comms", "samples", "vtime_s"
+    );
+    for r in &rows {
+        println!(
+            "{:<26} {:>10.4} {:>10.4} {:>8} {:>12} {:>10.3}",
+            r.name, r.best_ppl, r.final_ppl, r.comm_count, r.total_samples, r.virtual_time_s
+        );
+    }
+    Ok(())
+}
+
+/// Measure real PJRT step times across the ladder and fit the simulator's
+/// step-time model t = a + b * batch * seq (printed as config overrides).
+fn cmd_calibrate(args: &cli::Args) -> Result<()> {
+    let profile = args.opt("profile").unwrap_or("tiny");
+    let dir = args.opt("artifacts").unwrap_or("artifacts");
+    let mut engine = adloco::runtime::XlaEngine::load(dir, profile)?;
+    let seq = engine.meta().seq_len;
+    let vocab = engine.meta().vocab as i64;
+    let width = seq + 1;
+    let reps = args.opt_parse::<usize>("steps")?.unwrap_or(5);
+
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    println!("{:>8} {:>12}", "batch", "sec/step");
+    let ladder: Vec<usize> = engine.supported_batches().to_vec();
+    for b in ladder {
+        let mut state = engine.init_state(0);
+        let mut batch = adloco::data::TokenBatch::new(b, width);
+        let mut rng = adloco::util::Rng::new(1);
+        for t in batch.tokens.iter_mut() {
+            *t = rng.range(0, vocab) as i32;
+        }
+        // one warmup (compile) + timed reps
+        engine.train_step(&mut state, 1e-4, &batch)?;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            engine.train_step(&mut state, 1e-4, &batch)?;
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        println!("{b:>8} {per:>12.6}");
+        xs.push((b * seq) as f64);
+        ys.push(per);
+    }
+    let (a, b, r2) = adloco::util::stats::linear_fit(&xs, &ys);
+    println!("\nfitted: t_step = {a:.6} + {b:.3e} * batch * seq   (r2 = {r2:.4})");
+    println!("config overrides:");
+    println!("  --set cluster.step_fixed_s={a:.6} --set cluster.step_per_token_s={b:.3e}");
+    Ok(())
+}
+
+fn cmd_inspect(args: &cli::Args) -> Result<()> {
+    let profile = args.opt("profile").unwrap_or("tiny");
+    let dir = args.opt("artifacts").unwrap_or("artifacts");
+    let meta = adloco::runtime::ArtifactMeta::load(
+        std::path::Path::new(dir).join(profile).join("meta.json").as_path(),
+    )?;
+    println!("profile      : {}", meta.profile);
+    println!("params       : {}", meta.param_count);
+    println!(
+        "model        : vocab={} d_model={} layers={} heads={} seq={}",
+        meta.vocab, meta.d_model, meta.n_layers, meta.n_heads, meta.seq_len
+    );
+    println!(
+        "ladder       : {:?}",
+        meta.ladder.iter().map(|r| r.batch).collect::<Vec<_>>()
+    );
+    println!("grad_step    : batch {}", meta.grad_step_batch);
+    println!("eval         : batch {}", meta.eval_batch);
+    println!("layout ({} tensors):", meta.layout.len());
+    for e in &meta.layout {
+        println!("  {:<20} {:>10?} @ {}", e.name, e.shape, e.offset);
+    }
+    Ok(())
+}
+
+/// Summarize one or more run JSONL files written by `--out` / examples.
+fn cmd_report(args: &cli::Args) -> Result<()> {
+    use adloco::util::JsonValue;
+    if args.positional.is_empty() {
+        bail!("usage: adloco report <run.jsonl> [more.jsonl ...]");
+    }
+    println!(
+        "{:<28} {:>7} {:>10} {:>10} {:>8} {:>8} {:>10}",
+        "run", "evals", "first_ppl", "best_ppl", "steps", "merges", "mean_batch"
+    );
+    for path in &args.positional {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let mut evals = 0usize;
+        let mut first_ppl = f64::NAN;
+        let mut best_ppl = f64::INFINITY;
+        let mut steps = 0u64;
+        let mut merges = 0usize;
+        let mut batch_sum = 0.0;
+        let mut batch_n = 0usize;
+        for line in text.lines() {
+            let v = JsonValue::parse(line).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            match v.get("type").and_then(|t| t.as_str()) {
+                Some("eval") => {
+                    let ppl = v.get("perplexity").and_then(|x| x.as_f64()).unwrap_or(f64::NAN);
+                    if evals == 0 {
+                        first_ppl = ppl;
+                    }
+                    if ppl < best_ppl {
+                        best_ppl = ppl;
+                    }
+                    evals += 1;
+                }
+                Some("step") => {
+                    steps += 1;
+                    if let Some(b) = v.get("batch").and_then(|x| x.as_f64()) {
+                        let accum = v.get("accum_steps").and_then(|x| x.as_f64()).unwrap_or(1.0);
+                        batch_sum += b * accum;
+                        batch_n += 1;
+                    }
+                }
+                Some("merge") => merges += 1,
+                _ => {}
+            }
+        }
+        let name = std::path::Path::new(path)
+            .file_stem()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_else(|| path.clone());
+        println!(
+            "{:<28} {:>7} {:>10.3} {:>10.3} {:>8} {:>8} {:>10.1}",
+            name,
+            evals,
+            first_ppl,
+            best_ppl,
+            steps,
+            merges,
+            if batch_n > 0 { batch_sum / batch_n as f64 } else { 0.0 }
+        );
+    }
+    Ok(())
+}
+
+/// Grid-sweep one config knob: `adloco sweep --preset X --param
+/// algo.batching.eta --values 0.4,0.8,1.6 [--methods adloco,diloco]`.
+fn cmd_sweep(args: &cli::Args) -> Result<()> {
+    let base = load_config(args)?;
+    let param = args
+        .opt("param")
+        .ok_or_else(|| anyhow::anyhow!("--param dotted.path required"))?;
+    let values: Vec<String> = args
+        .opt("values")
+        .ok_or_else(|| anyhow::anyhow!("--values v1,v2,... required"))?
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let methods: Vec<Method> = args
+        .opt("methods")
+        .unwrap_or("adloco")
+        .split(',')
+        .map(Method::parse)
+        .collect::<Result<_>>()?;
+    let rows = adloco::sweep::run_sweep(&base, param, &values, &methods)?;
+    print!("{}", adloco::sweep::format_table(param, &rows));
+    Ok(())
+}

@@ -1,0 +1,242 @@
+//! Multi-Instance Training merges (paper §4.1 + Algorithms 1-2):
+//! `check_merge` selects the w trainers with the smallest requested batch
+//! (small b_req = proxy for least-converged trajectory), `do_merge`
+//! replaces them with their batch-size-weighted parameter average carried
+//! by the strongest representative.
+
+use crate::util::Rng;
+
+/// Which trainers to merge this round (Algorithm 1, CHECKMERGE).
+///
+/// Inputs are (trainer_id, requested_batch) pairs for the *live* trainers.
+/// Returns the ids selected for merging (empty when no merge applies).
+/// Matching the paper:  w == 0 or k <= 1 -> none;  w > k -> none;
+/// otherwise the w trainers with the smallest b_req. `min_keep` guards the
+/// floor on the surviving trainer count (w is clamped so at least
+/// `min_keep` trainers remain *after* the merge collapses w into 1).
+pub fn check_merge(requests: &[(usize, usize)], w: usize, min_keep: usize) -> Vec<usize> {
+    let k = requests.len();
+    if w == 0 || k <= 1 || w > k {
+        return Vec::new();
+    }
+    // merging w trainers removes w-1; keep at least min_keep alive
+    let max_removable = k.saturating_sub(min_keep.max(1));
+    let w = w.min(max_removable + 1);
+    if w < 2 {
+        return Vec::new();
+    }
+    let mut order: Vec<(usize, usize)> = requests.to_vec();
+    // sort ascending by b_req, tie-break on id for determinism
+    order.sort_by_key(|&(id, b)| (b, id));
+    order.truncate(w);
+    order.into_iter().map(|(id, _)| id).collect()
+}
+
+/// Alternative policies for the ablation benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergePolicy {
+    /// Paper default: w smallest requested batches.
+    WorstByBatch,
+    /// Random w trainers (control arm isolating the selection rule).
+    Random,
+}
+
+pub fn check_merge_with_policy(
+    requests: &[(usize, usize)],
+    w: usize,
+    min_keep: usize,
+    policy: MergePolicy,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    match policy {
+        MergePolicy::WorstByBatch => check_merge(requests, w, min_keep),
+        MergePolicy::Random => {
+            let base = check_merge(requests, w, min_keep); // reuse clamping rules
+            if base.is_empty() {
+                return base;
+            }
+            let w = base.len();
+            let ids: Vec<usize> = requests.iter().map(|&(id, _)| id).collect();
+            let picks = rng.sample_indices(ids.len(), w);
+            picks.into_iter().map(|i| ids[i]).collect()
+        }
+    }
+}
+
+/// Result of a weighted merge (Algorithm 2, DOMERGE).
+#[derive(Clone, Debug)]
+pub struct MergeOutcome {
+    /// The trainer that carries the merged parameters forward.
+    pub representative: usize,
+    /// Trainers removed from the pool (everything in S except the rep).
+    pub removed: Vec<usize>,
+}
+
+/// Weighted parameter average over the selected trainers:
+/// x_merge = sum_j b_j x_j / sum_j b_j, written into the representative's
+/// parameter buffer (the member with the largest b_req; ties -> lowest id,
+/// deterministically).
+///
+/// `members` is a list of (trainer_id, b_req, params); all parameter
+/// slices must have equal length. Returns the outcome; the caller removes
+/// the consumed trainers and carries the representative's optimizer state
+/// forward (Algorithm 2 line 9).
+pub fn do_merge(members: &mut [(usize, usize, &mut [f32])]) -> MergeOutcome {
+    assert!(members.len() >= 2, "merge needs >= 2 members");
+    let n = members[0].2.len();
+    for (_, _, p) in members.iter() {
+        assert_eq!(p.len(), n, "parameter length mismatch in merge");
+    }
+    let w_sum: f64 = members.iter().map(|&(_, b, _)| b as f64).sum();
+    assert!(w_sum > 0.0, "merge weights must be positive");
+
+    // representative: max b_req, tie-break lowest id
+    let rep_pos = members
+        .iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+        .map(|(i, _)| i)
+        .unwrap();
+
+    // accumulate into f64 then write back to the representative
+    let mut acc = vec![0.0f64; n];
+    for (_, b, p) in members.iter() {
+        let w = *b as f64 / w_sum;
+        for i in 0..n {
+            acc[i] += w * p[i] as f64;
+        }
+    }
+    let rep_id = members[rep_pos].0;
+    for (i, v) in acc.iter().enumerate() {
+        members[rep_pos].2[i] = *v as f32;
+    }
+    let removed = members
+        .iter()
+        .map(|&(id, _, _)| id)
+        .filter(|&id| id != rep_id)
+        .collect();
+    MergeOutcome { representative: rep_id, removed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_merge_picks_w_smallest() {
+        let reqs = [(0, 50), (1, 10), (2, 30), (3, 20)];
+        let s = check_merge(&reqs, 2, 1);
+        assert_eq!(s, vec![1, 3]);
+        let s = check_merge(&reqs, 3, 1);
+        assert_eq!(s, vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn check_merge_paper_edge_cases() {
+        // w = 0 -> empty (Algorithm 1 line 3)
+        assert!(check_merge(&[(0, 1), (1, 2)], 0, 1).is_empty());
+        // k <= 1 -> empty
+        assert!(check_merge(&[(0, 1)], 2, 1).is_empty());
+        // w > k -> empty (Algorithm 1 line 10)
+        assert!(check_merge(&[(0, 5), (1, 3)], 5, 1).is_empty());
+    }
+
+    #[test]
+    fn min_keep_clamps_selection() {
+        let reqs = [(0, 5), (1, 1), (2, 3), (3, 4)];
+        // min_keep = 3: only 1 removable => w clamped to 2
+        let s = check_merge(&reqs, 3, 3);
+        assert_eq!(s.len(), 2);
+        // min_keep = 4: nothing removable
+        assert!(check_merge(&reqs, 2, 4).is_empty());
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let reqs = [(3, 10), (1, 10), (2, 10)];
+        let s = check_merge(&reqs, 2, 1);
+        assert_eq!(s, vec![1, 2], "ties broken by id");
+    }
+
+    #[test]
+    fn do_merge_weighted_average() {
+        let mut p0 = vec![1.0f32, 0.0];
+        let mut p1 = vec![0.0f32, 1.0];
+        let outcome = {
+            let mut members = vec![(0usize, 1usize, p0.as_mut_slice()), (1, 3, p1.as_mut_slice())];
+            do_merge(&mut members)
+        };
+        assert_eq!(outcome.representative, 1, "largest b_req is representative");
+        assert_eq!(outcome.removed, vec![0]);
+        // x = (1*[1,0] + 3*[0,1]) / 4 = [0.25, 0.75]
+        assert!((p1[0] - 0.25).abs() < 1e-6);
+        assert!((p1[1] - 0.75).abs() < 1e-6);
+        // non-representative buffer untouched
+        assert_eq!(p0, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn do_merge_preserves_weighted_sum() {
+        // conservation: representative = weighted mean => weighted sum of
+        // (params * b) is preserved by construction. Check numerically.
+        let mut rng = Rng::new(5);
+        let n = 64;
+        let mut bufs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let weights = [7usize, 2, 9, 4];
+        let expected: Vec<f64> = (0..n)
+            .map(|i| {
+                bufs.iter()
+                    .zip(weights.iter())
+                    .map(|(p, &w)| p[i] as f64 * w as f64)
+                    .sum::<f64>()
+                    / 22.0
+            })
+            .collect();
+        let outcome = {
+            let mut it = bufs.iter_mut();
+            let (a, b, c, d) = (
+                it.next().unwrap(),
+                it.next().unwrap(),
+                it.next().unwrap(),
+                it.next().unwrap(),
+            );
+            let mut members = vec![
+                (0usize, weights[0], a.as_mut_slice()),
+                (1, weights[1], b.as_mut_slice()),
+                (2, weights[2], c.as_mut_slice()),
+                (3, weights[3], d.as_mut_slice()),
+            ];
+            do_merge(&mut members)
+        };
+        assert_eq!(outcome.representative, 2);
+        for i in 0..n {
+            assert!((bufs[2][i] as f64 - expected[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn equal_weights_is_plain_average() {
+        let mut p0 = vec![2.0f32];
+        let mut p1 = vec![4.0f32];
+        {
+            let mut members = vec![(0usize, 5usize, p0.as_mut_slice()), (1, 5, p1.as_mut_slice())];
+            let o = do_merge(&mut members);
+            assert_eq!(o.representative, 0, "equal b_req tie-breaks to lowest id");
+        }
+        assert!((p0[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn random_policy_respects_count() {
+        let mut rng = Rng::new(1);
+        let reqs = [(0, 5), (1, 1), (2, 3), (3, 4)];
+        let s = check_merge_with_policy(&reqs, 2, 1, MergePolicy::Random, &mut rng);
+        assert_eq!(s.len(), 2);
+        let mut d = s.clone();
+        d.sort();
+        d.dedup();
+        assert_eq!(d.len(), 2);
+    }
+}

@@ -1,0 +1,306 @@
+//! Run metrics: per-step records, evaluation curves, communication
+//! accounting, JSONL/CSV export, and run summaries.
+//!
+//! Everything Fig. 1 / Fig. 2 / the theory benches plot flows through the
+//! `Recorder`; the export format is line-oriented so the report
+//! generators (and any external plotting) can stream it.
+
+use crate::util::JsonValue;
+use anyhow::{Context, Result};
+use std::io::Write;
+
+/// One inner optimizer step of one worker.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    /// Global inner-step counter across the whole run.
+    pub global_step: u64,
+    pub outer_step: u64,
+    pub trainer: usize,
+    pub worker: usize,
+    pub batch: usize,
+    pub requested_batch: usize,
+    pub accum_steps: usize,
+    pub loss: f64,
+    pub grad_sq_norm: f64,
+    pub sigma2: f64,
+    pub virtual_time_s: f64,
+}
+
+/// One validation pass.
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub global_step: u64,
+    pub outer_step: u64,
+    pub trainer: usize,
+    pub loss: f64,
+    pub perplexity: f64,
+    pub virtual_time_s: f64,
+    pub comm_count: usize,
+    pub comm_bytes: u64,
+}
+
+/// A trainer-merge event (MIT DoMerge).
+#[derive(Clone, Debug)]
+pub struct MergeRecord {
+    pub outer_step: u64,
+    pub merged: Vec<usize>,
+    pub representative: usize,
+    pub trainers_left: usize,
+    pub virtual_time_s: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    pub merges: Vec<MergeRecord>,
+    /// Free-form run annotations (config echo, engine info, ...).
+    pub notes: Vec<(String, String)>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn note(&mut self, key: &str, value: impl Into<String>) {
+        self.notes.push((key.to_string(), value.into()));
+    }
+
+    // ------------------------------------------------------------------
+    // summaries
+    // ------------------------------------------------------------------
+
+    /// First eval at which perplexity <= target; returns (global_step,
+    /// virtual_time_s, comm_count) — the paper's time-to-target metric.
+    pub fn time_to_target(&self, target_ppl: f64) -> Option<(u64, f64, usize)> {
+        self.evals
+            .iter()
+            .find(|e| e.perplexity <= target_ppl)
+            .map(|e| (e.global_step, e.virtual_time_s, e.comm_count))
+    }
+
+    pub fn final_perplexity(&self) -> Option<f64> {
+        self.evals.last().map(|e| e.perplexity)
+    }
+
+    pub fn best_perplexity(&self) -> Option<f64> {
+        self.evals
+            .iter()
+            .map(|e| e.perplexity)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Mean applied batch size over all steps (hardware-utilization proxy).
+    pub fn mean_batch(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.batch as f64).sum::<f64>() / self.steps.len() as f64
+    }
+
+    /// (step, requested_batch) series — Theorem 1's E[b_k] observable.
+    pub fn batch_growth_series(&self) -> Vec<(u64, usize)> {
+        self.steps.iter().map(|s| (s.global_step, s.requested_batch)).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // export
+    // ------------------------------------------------------------------
+
+    fn step_json(s: &StepRecord) -> JsonValue {
+        JsonValue::obj(vec![
+            ("type", JsonValue::str("step")),
+            ("global_step", JsonValue::num(s.global_step as f64)),
+            ("outer_step", JsonValue::num(s.outer_step as f64)),
+            ("trainer", JsonValue::num(s.trainer as f64)),
+            ("worker", JsonValue::num(s.worker as f64)),
+            ("batch", JsonValue::num(s.batch as f64)),
+            ("requested_batch", JsonValue::num(s.requested_batch as f64)),
+            ("accum_steps", JsonValue::num(s.accum_steps as f64)),
+            ("loss", JsonValue::num(s.loss)),
+            ("grad_sq_norm", JsonValue::num(s.grad_sq_norm)),
+            ("sigma2", JsonValue::num(s.sigma2)),
+            ("virtual_time_s", JsonValue::num(s.virtual_time_s)),
+        ])
+    }
+
+    fn eval_json(e: &EvalRecord) -> JsonValue {
+        JsonValue::obj(vec![
+            ("type", JsonValue::str("eval")),
+            ("global_step", JsonValue::num(e.global_step as f64)),
+            ("outer_step", JsonValue::num(e.outer_step as f64)),
+            ("trainer", JsonValue::num(e.trainer as f64)),
+            ("loss", JsonValue::num(e.loss)),
+            ("perplexity", JsonValue::num(e.perplexity)),
+            ("virtual_time_s", JsonValue::num(e.virtual_time_s)),
+            ("comm_count", JsonValue::num(e.comm_count as f64)),
+            ("comm_bytes", JsonValue::num(e.comm_bytes as f64)),
+        ])
+    }
+
+    /// Write all records as JSON-lines.
+    pub fn write_jsonl(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let f = std::fs::File::create(path).with_context(|| format!("create {path}"))?;
+        let mut w = std::io::BufWriter::new(f);
+        for (k, v) in &self.notes {
+            let line = JsonValue::obj(vec![
+                ("type", JsonValue::str("note")),
+                ("key", JsonValue::str(k.clone())),
+                ("value", JsonValue::str(v.clone())),
+            ]);
+            writeln!(w, "{}", line.to_string())?;
+        }
+        for s in &self.steps {
+            writeln!(w, "{}", Self::step_json(s).to_string())?;
+        }
+        for e in &self.evals {
+            writeln!(w, "{}", Self::eval_json(e).to_string())?;
+        }
+        for m in &self.merges {
+            let line = JsonValue::obj(vec![
+                ("type", JsonValue::str("merge")),
+                ("outer_step", JsonValue::num(m.outer_step as f64)),
+                (
+                    "merged",
+                    JsonValue::Array(
+                        m.merged.iter().map(|&i| JsonValue::num(i as f64)).collect(),
+                    ),
+                ),
+                ("representative", JsonValue::num(m.representative as f64)),
+                ("trainers_left", JsonValue::num(m.trainers_left as f64)),
+                ("virtual_time_s", JsonValue::num(m.virtual_time_s)),
+            ]);
+            writeln!(w, "{}", line.to_string())?;
+        }
+        Ok(())
+    }
+
+    /// Write the eval curve as CSV (step, time, ppl, comms) — what the
+    /// figure generators tabulate.
+    pub fn write_eval_csv(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let f = std::fs::File::create(path).with_context(|| format!("create {path}"))?;
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(w, "global_step,virtual_time_s,loss,perplexity,comm_count,comm_bytes")?;
+        for e in &self.evals {
+            writeln!(
+                w,
+                "{},{:.6},{:.6},{:.6},{},{}",
+                e.global_step, e.virtual_time_s, e.loss, e.perplexity, e.comm_count, e.comm_bytes
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Perplexity from a mean cross-entropy loss (clamped to avoid overflow
+/// in early-training explosions).
+pub fn perplexity(loss: f64) -> f64 {
+    loss.min(30.0).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eval(step: u64, ppl: f64, t: f64, comms: usize) -> EvalRecord {
+        EvalRecord {
+            global_step: step,
+            outer_step: 0,
+            trainer: 0,
+            loss: ppl.ln(),
+            perplexity: ppl,
+            virtual_time_s: t,
+            comm_count: comms,
+            comm_bytes: comms as u64 * 100,
+        }
+    }
+
+    #[test]
+    fn time_to_target() {
+        let mut r = Recorder::new();
+        r.evals.push(eval(10, 100.0, 1.0, 1));
+        r.evals.push(eval(20, 50.0, 2.0, 2));
+        r.evals.push(eval(30, 20.0, 3.0, 3));
+        assert_eq!(r.time_to_target(50.0), Some((20, 2.0, 2)));
+        assert_eq!(r.time_to_target(10.0), None);
+        assert_eq!(r.best_perplexity(), Some(20.0));
+        assert_eq!(r.final_perplexity(), Some(20.0));
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let mut r = Recorder::new();
+        r.note("method", "adloco");
+        r.steps.push(StepRecord {
+            global_step: 1,
+            outer_step: 0,
+            trainer: 0,
+            worker: 0,
+            batch: 4,
+            requested_batch: 7,
+            accum_steps: 1,
+            loss: 5.5,
+            grad_sq_norm: 0.25,
+            sigma2: 1.5,
+            virtual_time_s: 0.1,
+        });
+        r.evals.push(eval(10, 90.0, 1.0, 1));
+        r.merges.push(MergeRecord {
+            outer_step: 3,
+            merged: vec![1, 2],
+            representative: 2,
+            trainers_left: 3,
+            virtual_time_s: 2.0,
+        });
+        let dir = std::env::temp_dir().join("adloco_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.jsonl");
+        r.write_jsonl(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        for line in lines {
+            JsonValue::parse(line).unwrap();
+        }
+        let csv = dir.join("evals.csv");
+        r.write_eval_csv(csv.to_str().unwrap()).unwrap();
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.starts_with("global_step,"));
+        assert_eq!(csv_text.lines().count(), 2);
+    }
+
+    #[test]
+    fn perplexity_clamps() {
+        assert!((perplexity(2.0) - 2.0f64.exp()).abs() < 1e-12);
+        assert!(perplexity(1e9).is_finite());
+    }
+
+    #[test]
+    fn mean_batch_and_series() {
+        let mut r = Recorder::new();
+        for (i, b) in [2usize, 4, 6].iter().enumerate() {
+            r.steps.push(StepRecord {
+                global_step: i as u64,
+                outer_step: 0,
+                trainer: 0,
+                worker: 0,
+                batch: *b,
+                requested_batch: *b + 1,
+                accum_steps: 1,
+                loss: 0.0,
+                grad_sq_norm: 0.0,
+                sigma2: 0.0,
+                virtual_time_s: 0.0,
+            });
+        }
+        assert!((r.mean_batch() - 4.0).abs() < 1e-12);
+        assert_eq!(r.batch_growth_series()[2], (2, 7));
+    }
+}

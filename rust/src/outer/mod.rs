@@ -1,0 +1,170 @@
+//! Outer optimization (the DiLoCo bilevel structure the paper builds on):
+//! workers' post-inner-loop parameters are reduced to an outer delta
+//! Δ = x_prev − mean_worker(x_worker), and the trainer's parameters are
+//! updated by an outer optimizer stepping along −Δ.
+//!
+//! Three variants, matching the paper + baselines:
+//!   * `Average`  — x ← mean(x_workers)            (LocalSGD)
+//!   * `Sgd`      — x ← x − lr·Δ                   (what the theorems use)
+//!   * `Nesterov` — DiLoCo's default outer optimizer
+
+use crate::config::OuterOptKind;
+
+/// Stateful outer optimizer for one trainer.
+#[derive(Clone, Debug)]
+pub struct OuterOpt {
+    kind: OuterOptKind,
+    lr: f64,
+    /// Momentum buffer (Nesterov only).
+    velocity: Vec<f32>,
+}
+
+impl OuterOpt {
+    pub fn new(kind: OuterOptKind, lr: f64, dim: usize) -> Self {
+        let velocity = match kind {
+            OuterOptKind::Nesterov { .. } => vec![0.0; dim],
+            _ => Vec::new(),
+        };
+        OuterOpt { kind, lr, velocity }
+    }
+
+    pub fn kind(&self) -> OuterOptKind {
+        self.kind
+    }
+
+    /// Compute Δ = x_prev − avg into `delta` (all slices same length).
+    /// `workers` holds each worker's post-inner-loop parameters.
+    pub fn compute_delta(x_prev: &[f32], workers: &[&[f32]], delta: &mut [f32]) {
+        assert!(!workers.is_empty());
+        let n = x_prev.len();
+        for w in workers {
+            assert_eq!(w.len(), n);
+        }
+        let inv = 1.0 / workers.len() as f64;
+        for i in 0..n {
+            let mut avg = 0.0f64;
+            for w in workers {
+                avg += w[i] as f64;
+            }
+            avg *= inv;
+            delta[i] = (x_prev[i] as f64 - avg) as f32;
+        }
+    }
+
+    /// Apply the outer update to `x` given Δ (OuterOpt step of
+    /// Algorithm 3 line 43).
+    pub fn step(&mut self, x: &mut [f32], delta: &[f32]) {
+        assert_eq!(x.len(), delta.len());
+        match self.kind {
+            OuterOptKind::Average => {
+                // x ← x − Δ  == mean of workers (lr ignored by design)
+                for i in 0..x.len() {
+                    x[i] -= delta[i];
+                }
+            }
+            OuterOptKind::Sgd => {
+                for i in 0..x.len() {
+                    x[i] = (x[i] as f64 - self.lr * delta[i] as f64) as f32;
+                }
+            }
+            OuterOptKind::Nesterov { momentum } => {
+                debug_assert_eq!(self.velocity.len(), x.len());
+                for i in 0..x.len() {
+                    let v = momentum * self.velocity[i] as f64 + delta[i] as f64;
+                    self.velocity[i] = v as f32;
+                    // Nesterov lookahead: step along momentum*v + delta
+                    x[i] = (x[i] as f64 - self.lr * (momentum * v + delta[i] as f64)) as f32;
+                }
+            }
+        }
+    }
+
+    /// Reset momentum (used when a trainer's parameters are replaced by a
+    /// merge and old velocity no longer points anywhere meaningful).
+    pub fn reset(&mut self) {
+        self.velocity.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// Momentum buffer (empty for Average/Sgd) — checkpointing.
+    pub fn velocity(&self) -> &[f32] {
+        &self.velocity
+    }
+
+    /// Restore the momentum buffer (checkpoint resume).
+    pub fn set_velocity(&mut self, v: &[f32]) {
+        if !self.velocity.is_empty() {
+            assert_eq!(self.velocity.len(), v.len());
+            self.velocity.copy_from_slice(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_is_prev_minus_mean() {
+        let x_prev = [1.0f32, 2.0];
+        let w1 = [0.0f32, 2.0];
+        let w2 = [1.0f32, 0.0];
+        let mut delta = [0.0f32; 2];
+        OuterOpt::compute_delta(&x_prev, &[&w1, &w2], &mut delta);
+        assert_eq!(delta, [0.5, 1.0]);
+    }
+
+    #[test]
+    fn average_recovers_worker_mean() {
+        let x_prev = [1.0f32, 2.0];
+        let w1 = [0.0f32, 2.0];
+        let w2 = [1.0f32, 0.0];
+        let mut delta = [0.0f32; 2];
+        OuterOpt::compute_delta(&x_prev, &[&w1, &w2], &mut delta);
+        let mut x = x_prev;
+        let mut opt = OuterOpt::new(OuterOptKind::Average, 123.0, 2);
+        opt.step(&mut x, &delta);
+        assert_eq!(x, [0.5, 1.0], "average must equal the worker mean");
+    }
+
+    #[test]
+    fn sgd_scales_by_lr() {
+        let mut x = [1.0f32];
+        let delta = [0.5f32];
+        let mut opt = OuterOpt::new(OuterOptKind::Sgd, 0.5, 1);
+        opt.step(&mut x, &delta);
+        assert!((x[0] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nesterov_accumulates_momentum() {
+        let mut x = [0.0f32];
+        let delta = [1.0f32];
+        let mut opt = OuterOpt::new(OuterOptKind::Nesterov { momentum: 0.9 }, 1.0, 1);
+        opt.step(&mut x, &delta);
+        // v=1; step = m*v + d = 1.9 -> x = -1.9
+        assert!((x[0] + 1.9).abs() < 1e-6);
+        opt.step(&mut x, &delta);
+        // v = 0.9 + 1 = 1.9; step = 0.9*1.9 + 1 = 2.71 -> x = -4.61
+        assert!((x[0] + 4.61).abs() < 1e-5);
+        opt.reset();
+        let mut y = [0.0f32];
+        opt.step(&mut y, &delta);
+        assert!((y[0] + 1.9).abs() < 1e-6, "reset clears velocity");
+    }
+
+    #[test]
+    fn repeated_sgd_outer_steps_converge_on_fixed_target() {
+        // With workers always reporting the optimum, outer SGD with lr<1
+        // contracts toward it geometrically.
+        let target = [3.0f32, -2.0];
+        let mut x = [0.0f32, 0.0];
+        let mut opt = OuterOpt::new(OuterOptKind::Sgd, 0.5, 2);
+        let mut delta = [0.0f32; 2];
+        for _ in 0..40 {
+            OuterOpt::compute_delta(&x, &[&target], &mut delta);
+            opt.step(&mut x, &delta);
+        }
+        assert!((x[0] - 3.0).abs() < 1e-3);
+        assert!((x[1] + 2.0).abs() < 1e-3);
+    }
+}

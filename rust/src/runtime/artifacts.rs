@@ -1,0 +1,263 @@
+//! `meta.json` parsing: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Fails loudly on any missing/odd field — a silently
+//! misread artifact layout corrupts every downstream experiment.
+
+use crate::util::JsonValue;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// One entry of the flat-parameter layout table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl LayoutEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One batch-size rung of the AOT ladder.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LadderRung {
+    pub batch: usize,
+    pub chunks: usize,
+    pub file: String,
+}
+
+/// Parsed artifact profile metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub profile: String,
+    pub param_count: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub layout: Vec<LayoutEntry>,
+    pub ladder: Vec<LadderRung>,
+    pub grad_step_batch: usize,
+    pub grad_step_file: String,
+    /// Per-rung grad_step programs (SwitchMode at any node budget).
+    /// Falls back to just the top rung for older artifact bundles.
+    pub grad_steps: Vec<LadderRung>,
+    pub apply_update_file: String,
+    pub eval_batch: usize,
+    pub eval_file: String,
+    pub init_params_file: String,
+}
+
+impl ArtifactMeta {
+    pub fn load(path: &Path) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = JsonValue::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &JsonValue) -> Result<ArtifactMeta> {
+        let req_usize = |obj: &JsonValue, key: &str| -> Result<usize> {
+            obj.get(key)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("meta.json: missing/invalid {key}"))
+        };
+        let req_str = |obj: &JsonValue, key: &str| -> Result<String> {
+            obj.get(key)
+                .and_then(|x| x.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("meta.json: missing/invalid {key}"))
+        };
+
+        let model = v.get("model").ok_or_else(|| anyhow!("meta.json: missing model"))?;
+
+        let layout_obj = v.get("layout").ok_or_else(|| anyhow!("meta.json: missing layout"))?;
+        let entries = layout_obj
+            .get("entries")
+            .and_then(|x| x.as_array())
+            .ok_or_else(|| anyhow!("meta.json: layout.entries"))?;
+        let mut layout = Vec::with_capacity(entries.len());
+        for e in entries {
+            layout.push(LayoutEntry {
+                name: req_str(e, "name")?,
+                shape: e
+                    .get("shape")
+                    .and_then(|x| x.as_array())
+                    .ok_or_else(|| anyhow!("layout entry shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+                    .collect::<Result<Vec<_>>>()?,
+                offset: req_usize(e, "offset")?,
+            });
+        }
+
+        let ladder_arr = v
+            .get("ladder")
+            .and_then(|x| x.as_array())
+            .ok_or_else(|| anyhow!("meta.json: ladder"))?;
+        let mut ladder = Vec::with_capacity(ladder_arr.len());
+        for r in ladder_arr {
+            ladder.push(LadderRung {
+                batch: req_usize(r, "batch")?,
+                chunks: req_usize(r, "chunks")?,
+                file: req_str(r, "file")?,
+            });
+        }
+        if ladder.is_empty() {
+            bail!("meta.json: empty ladder");
+        }
+        if !ladder.windows(2).all(|w| w[0].batch < w[1].batch) {
+            bail!("meta.json: ladder must be strictly ascending");
+        }
+
+        let grad = v.get("grad_step").ok_or_else(|| anyhow!("meta.json: grad_step"))?;
+        let mut grad_steps = Vec::new();
+        if let Some(arr) = v.get("grad_steps").and_then(|x| x.as_array()) {
+            for r in arr {
+                grad_steps.push(LadderRung {
+                    batch: req_usize(r, "batch")?,
+                    chunks: req_usize(r, "chunks")?,
+                    file: req_str(r, "file")?,
+                });
+            }
+        }
+        if grad_steps.is_empty() {
+            grad_steps.push(LadderRung {
+                batch: req_usize(grad, "batch")?,
+                chunks: req_usize(grad, "chunks")?,
+                file: req_str(grad, "file")?,
+            });
+        }
+        let eval = v.get("eval").ok_or_else(|| anyhow!("meta.json: eval"))?;
+        let init = v.get("init_params").ok_or_else(|| anyhow!("meta.json: init_params"))?;
+
+        let meta = ArtifactMeta {
+            profile: req_str(v, "profile")?,
+            param_count: req_usize(v, "param_count")?,
+            vocab: req_usize(model, "vocab")?,
+            d_model: req_usize(model, "d_model")?,
+            n_layers: req_usize(model, "n_layers")?,
+            n_heads: req_usize(model, "n_heads")?,
+            seq_len: req_usize(model, "seq_len")?,
+            layout,
+            ladder,
+            grad_step_batch: req_usize(grad, "batch")?,
+            grad_step_file: req_str(grad, "file")?,
+            grad_steps,
+            apply_update_file: req_str(
+                v.get("apply_update").ok_or_else(|| anyhow!("meta.json: apply_update"))?,
+                "file",
+            )?,
+            eval_batch: req_usize(eval, "batch")?,
+            eval_file: req_str(eval, "file")?,
+            init_params_file: req_str(init, "file")?,
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    fn validate(&self) -> Result<()> {
+        // layout must tile [0, param_count) contiguously
+        let mut off = 0usize;
+        for e in &self.layout {
+            if e.offset != off {
+                bail!("layout entry {} offset {} != expected {off}", e.name, e.offset);
+            }
+            off += e.numel();
+        }
+        if off != self.param_count {
+            bail!("layout covers {off} params, meta says {}", self.param_count);
+        }
+        for r in &self.ladder {
+            if r.batch == 0 || r.batch % r.chunks != 0 {
+                bail!("ladder rung {:?} invalid", r);
+            }
+        }
+        if self.d_model % self.n_heads != 0 {
+            bail!("d_model {} not divisible by n_heads {}", self.d_model, self.n_heads);
+        }
+        Ok(())
+    }
+
+    /// Look up a named tensor's layout entry.
+    pub fn entry(&self, name: &str) -> Option<&LayoutEntry> {
+        self.layout.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal_meta_json() -> String {
+        r#"{
+          "profile": "t",
+          "param_count": 10,
+          "model": {"vocab": 8, "d_model": 4, "n_layers": 1, "n_heads": 2, "seq_len": 3},
+          "layout": {"total": 10, "entries": [
+             {"name": "a", "shape": [2, 3], "offset": 0},
+             {"name": "b", "shape": [4], "offset": 6}
+          ]},
+          "ladder": [
+            {"batch": 1, "chunks": 1, "file": "t1.hlo.txt"},
+            {"batch": 4, "chunks": 2, "file": "t4.hlo.txt"}
+          ],
+          "grad_step": {"batch": 4, "chunks": 2, "file": "g.hlo.txt"},
+          "apply_update": {"file": "a.hlo.txt"},
+          "eval": {"batch": 2, "file": "e.hlo.txt"},
+          "init_params": {"file": "init.bin", "seed": 1, "sha256": "x"}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_minimal() {
+        let v = JsonValue::parse(&minimal_meta_json()).unwrap();
+        let m = ArtifactMeta::from_json(&v).unwrap();
+        assert_eq!(m.profile, "t");
+        assert_eq!(m.param_count, 10);
+        assert_eq!(m.layout.len(), 2);
+        assert_eq!(m.entry("b").unwrap().offset, 6);
+        assert_eq!(m.ladder[1].batch, 4);
+        assert_eq!(m.grad_step_batch, 4);
+        assert_eq!(m.eval_batch, 2);
+    }
+
+    #[test]
+    fn rejects_gap_in_layout() {
+        let text = minimal_meta_json().replace("\"offset\": 6", "\"offset\": 7");
+        let v = JsonValue::parse(&text).unwrap();
+        assert!(ArtifactMeta::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_unsorted_ladder() {
+        let text = minimal_meta_json()
+            .replace("{\"batch\": 1, \"chunks\": 1, \"file\": \"t1.hlo.txt\"}",
+                     "{\"batch\": 8, \"chunks\": 1, \"file\": \"t8.hlo.txt\"}");
+        let v = JsonValue::parse(&text).unwrap();
+        assert!(ArtifactMeta::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_field() {
+        let text = minimal_meta_json().replace("\"param_count\": 10,", "");
+        let v = JsonValue::parse(&text).unwrap();
+        assert!(ArtifactMeta::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn parses_real_artifact_if_present() {
+        let p = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny/meta.json"));
+        if p.exists() {
+            let m = ArtifactMeta::load(p).unwrap();
+            assert_eq!(m.profile, "tiny");
+            assert_eq!(m.vocab, 256);
+            assert!(m.param_count > 100_000);
+            assert_eq!(m.entry("embed").unwrap().offset, 0);
+        }
+    }
+}

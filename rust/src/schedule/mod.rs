@@ -1,0 +1,159 @@
+//! Inner-optimizer learning-rate schedules.
+//!
+//! The paper trains with a fixed AdamW learning rate; real deployments of
+//! the method (and the MicroLlama recipe it borrows) use warmup + decay.
+//! The schedule composes with adaptive batching in an important way: as
+//! the batch grows, steps get less frequent but less noisy, so decaying
+//! lr on the *inner-step* axis (not wall-clock) keeps the two adaptation
+//! mechanisms independent — which is what the coordinator does.
+
+use crate::config::ScheduleConfig;
+
+/// Evaluated per (global inner step of a worker).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// Linear warmup to the base lr over `warmup` steps, then flat.
+    Warmup { warmup: u64 },
+    /// Linear warmup then cosine decay to `min_frac * base` at `total`.
+    WarmupCosine { warmup: u64, total: u64, min_frac: f64 },
+    /// Multiply by `factor` every `every` steps.
+    StepDecay { every: u64, factor: f64 },
+}
+
+impl Schedule {
+    pub fn from_config(cfg: &ScheduleConfig, total_steps: u64) -> Schedule {
+        match cfg.kind.as_str() {
+            "constant" => Schedule::Constant,
+            "warmup" => Schedule::Warmup { warmup: cfg.warmup_steps },
+            "warmup_cosine" => Schedule::WarmupCosine {
+                warmup: cfg.warmup_steps,
+                total: if cfg.total_steps > 0 { cfg.total_steps } else { total_steps.max(1) },
+                min_frac: cfg.min_frac,
+            },
+            "step_decay" => Schedule::StepDecay {
+                every: cfg.decay_every.max(1),
+                factor: cfg.decay_factor,
+            },
+            other => {
+                crate::warn!("unknown schedule {other:?}; using constant");
+                Schedule::Constant
+            }
+        }
+    }
+
+    /// lr multiplier at 1-based step `k`.
+    pub fn factor(&self, k: u64) -> f64 {
+        match *self {
+            Schedule::Constant => 1.0,
+            Schedule::Warmup { warmup } => {
+                if warmup == 0 || k >= warmup {
+                    1.0
+                } else {
+                    k as f64 / warmup as f64
+                }
+            }
+            Schedule::WarmupCosine { warmup, total, min_frac } => {
+                if warmup > 0 && k < warmup {
+                    return k as f64 / warmup as f64;
+                }
+                let total = total.max(warmup + 1);
+                let progress =
+                    ((k - warmup) as f64 / (total - warmup) as f64).clamp(0.0, 1.0);
+                let cos = 0.5 * (1.0 + (std::f64::consts::PI * progress).cos());
+                min_frac + (1.0 - min_frac) * cos
+            }
+            Schedule::StepDecay { every, factor } => factor.powi((k / every) as i32),
+        }
+    }
+
+    /// Absolute lr at step `k` given the base learning rate.
+    pub fn lr(&self, base: f64, k: u64) -> f64 {
+        base * self.factor(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_one() {
+        let s = Schedule::Constant;
+        assert_eq!(s.factor(1), 1.0);
+        assert_eq!(s.factor(1_000_000), 1.0);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::Warmup { warmup: 10 };
+        assert!((s.factor(1) - 0.1).abs() < 1e-12);
+        assert!((s.factor(5) - 0.5).abs() < 1e-12);
+        assert_eq!(s.factor(10), 1.0);
+        assert_eq!(s.factor(100), 1.0);
+    }
+
+    #[test]
+    fn warmup_cosine_shape() {
+        let s = Schedule::WarmupCosine { warmup: 10, total: 110, min_frac: 0.1 };
+        // during warmup
+        assert!((s.factor(5) - 0.5).abs() < 1e-12);
+        // at warmup end: full lr
+        assert!((s.factor(10) - 1.0).abs() < 1e-12);
+        // midpoint of the cosine: (1 + min)/2
+        assert!((s.factor(60) - 0.55).abs() < 1e-9);
+        // at/after total: min_frac
+        assert!((s.factor(110) - 0.1).abs() < 1e-12);
+        assert!((s.factor(500) - 0.1).abs() < 1e-12);
+        // monotone decreasing after warmup
+        let mut last = f64::INFINITY;
+        for k in 10..=110 {
+            let f = s.factor(k);
+            assert!(f <= last + 1e-12);
+            last = f;
+        }
+    }
+
+    #[test]
+    fn step_decay() {
+        let s = Schedule::StepDecay { every: 100, factor: 0.5 };
+        assert_eq!(s.factor(1), 1.0);
+        assert_eq!(s.factor(99), 1.0);
+        assert_eq!(s.factor(100), 0.5);
+        assert_eq!(s.factor(250), 0.25);
+    }
+
+    #[test]
+    fn lr_scales_base() {
+        let s = Schedule::Warmup { warmup: 4 };
+        assert!((s.lr(4e-4, 2) - 2e-4).abs() < 1e-18);
+    }
+
+    #[test]
+    fn from_config_variants() {
+        use crate::config::ScheduleConfig;
+        let mk = |kind: &str| ScheduleConfig {
+            kind: kind.into(),
+            warmup_steps: 5,
+            total_steps: 0,
+            min_frac: 0.2,
+            decay_every: 50,
+            decay_factor: 0.7,
+        };
+        assert_eq!(Schedule::from_config(&mk("constant"), 100), Schedule::Constant);
+        assert_eq!(
+            Schedule::from_config(&mk("warmup"), 100),
+            Schedule::Warmup { warmup: 5 }
+        );
+        assert_eq!(
+            Schedule::from_config(&mk("warmup_cosine"), 100),
+            Schedule::WarmupCosine { warmup: 5, total: 100, min_frac: 0.2 }
+        );
+        assert_eq!(
+            Schedule::from_config(&mk("step_decay"), 100),
+            Schedule::StepDecay { every: 50, factor: 0.7 }
+        );
+        // unknown falls back to constant
+        assert_eq!(Schedule::from_config(&mk("bogus"), 100), Schedule::Constant);
+    }
+}

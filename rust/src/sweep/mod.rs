@@ -1,0 +1,125 @@
+//! Parameter sweeps: run the same experiment across a grid of one
+//! config knob (optionally crossed with methods) and tabulate the
+//! results — the workhorse behind the design-choice ablations DESIGN.md
+//! calls out (η sensitivity, merge frequency, switch multiplier, ...).
+
+use crate::config::{Config, Method};
+use crate::coordinator::{resolve_policy, Coordinator, RunResult};
+use crate::engine::build_engine;
+use anyhow::{Context, Result};
+
+/// One sweep cell result.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub value: String,
+    pub method: Method,
+    pub result: RunResult,
+    pub mean_batch: f64,
+}
+
+/// Run `base` once per (value, method) with `param=value` applied.
+pub fn run_sweep(
+    base: &Config,
+    param: &str,
+    values: &[String],
+    methods: &[Method],
+) -> Result<Vec<SweepRow>> {
+    let mut rows = Vec::new();
+    for value in values {
+        for &method in methods {
+            let mut cfg = base.clone();
+            cfg.algo.method = method;
+            cfg.name = format!("{}_{}={}_{}", base.name, param, value, method.as_str());
+            cfg.apply_override(&format!("{param}={value}"))
+                .with_context(|| format!("sweep value {value:?}"))?;
+            let cfg = resolve_policy(&cfg);
+            cfg.validate()?;
+            crate::info!("sweep: {}", cfg.name);
+            let engine = build_engine(&cfg)?;
+            let mut coord = Coordinator::new(cfg, engine)?;
+            let result = coord.run()?;
+            rows.push(SweepRow {
+                value: value.clone(),
+                method,
+                result,
+                mean_batch: coord.recorder.mean_batch(),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render sweep rows as an aligned text table (also used by the CLI).
+pub fn format_table(param: &str, rows: &[SweepRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<12} {:<10} {:>10} {:>10} {:>8} {:>12} {:>10} {:>11}\n",
+        param, "method", "best_ppl", "final_ppl", "comms", "samples", "vtime_s", "mean_batch"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<12} {:<10} {:>10.4} {:>10.4} {:>8} {:>12} {:>10.3} {:>11.1}\n",
+            r.value,
+            r.method.as_str(),
+            r.result.best_ppl,
+            r.result.final_ppl,
+            r.result.comm_count,
+            r.result.total_samples,
+            r.result.virtual_time_s,
+            r.mean_batch,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn eta_sweep_runs_and_orders() {
+        let mut base = presets::quick();
+        base.algo.outer_steps = 2;
+        base.algo.inner_steps = 5;
+        let rows = run_sweep(
+            &base,
+            "algo.batching.eta",
+            &["0.4".into(), "1.6".into()],
+            &[Method::AdLoCo],
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.result.best_ppl.is_finite());
+        }
+        // smaller eta => stricter test => larger requested batches
+        // (can only be checked weakly on a short run: at minimum the
+        // sweep must produce distinct configurations)
+        assert_ne!(rows[0].value, rows[1].value);
+        let table = format_table("eta", &rows);
+        assert!(table.contains("0.4") && table.contains("1.6"));
+    }
+
+    #[test]
+    fn sweep_crosses_methods() {
+        let mut base = presets::quick();
+        base.algo.outer_steps = 2;
+        base.algo.inner_steps = 4;
+        let rows = run_sweep(
+            &base,
+            "algo.inner_steps",
+            &["3".into()],
+            &[Method::AdLoCo, Method::DiLoCo],
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_ne!(rows[0].method, rows[1].method);
+    }
+
+    #[test]
+    fn bad_param_is_error() {
+        let base = presets::quick();
+        assert!(run_sweep(&base, "algo.method", &["bogus".into()], &[Method::AdLoCo]).is_err());
+    }
+}

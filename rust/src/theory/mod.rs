@@ -1,0 +1,143 @@
+//! Theorem 1/2 bound evaluators (paper §5 + Appendix A.1), used by the
+//! theory benches to overlay the analytic curves on measured series.
+//!
+//! Theorem 1 (batch growth):
+//!   E[b_k] = Ω( k σ² / (η² L (HM + η²) (F(x₀) − F(x*))) )
+//! Theorem 2 (communication complexity, after N accumulation iterations):
+//!   E[C(N)] = O( b_max η² L (1 + η²) (F(x₀) − F(x*)) / σ² · ln N )
+
+/// Problem constants entering the bounds.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundParams {
+    /// Gradient-noise variance σ².
+    pub sigma2: f64,
+    /// Norm-test constant η.
+    pub eta: f64,
+    /// Smoothness constant L.
+    pub l_smooth: f64,
+    /// Inner steps per outer step H.
+    pub h: usize,
+    /// Workers per trainer M.
+    pub m: usize,
+    /// Initial optimality gap F(x₀) − F(x*).
+    pub f_gap: f64,
+    /// Hardware max batch b_max.
+    pub b_max: usize,
+}
+
+impl BoundParams {
+    /// Theorem 1 lower-bound on E[b_k] up to the hidden constant
+    /// (`scale` absorbs the Ω(·) constant when fitting measured data).
+    pub fn batch_lower_bound(&self, k: u64, scale: f64) -> f64 {
+        let denom = self.eta * self.eta
+            * self.l_smooth
+            * (self.h as f64 * self.m as f64 + self.eta * self.eta)
+            * self.f_gap;
+        scale * k as f64 * self.sigma2 / denom
+    }
+
+    /// Theorem 2 upper-bound on E[C(N)] up to the hidden constant.
+    pub fn comm_upper_bound(&self, n: u64, scale: f64) -> f64 {
+        if n < 2 {
+            return 0.0;
+        }
+        let num = self.b_max as f64
+            * self.eta
+            * self.eta
+            * self.l_smooth
+            * (1.0 + self.eta * self.eta)
+            * self.f_gap;
+        scale * num / self.sigma2 * (n as f64).ln()
+    }
+}
+
+/// Fit the hidden constant of a bound to a measured series by least
+/// squares on `measured ≈ scale * shape(x)`. Returns (scale, r²) where r²
+/// is the goodness of the *shape* match (1.0 = the measured curve is an
+/// exact multiple of the analytic one).
+pub fn fit_scale(shape: &[f64], measured: &[f64]) -> (f64, f64) {
+    assert_eq!(shape.len(), measured.len());
+    assert!(!shape.is_empty());
+    let num: f64 = shape.iter().zip(measured).map(|(s, m)| s * m).sum();
+    let den: f64 = shape.iter().map(|s| s * s).sum();
+    let scale = if den > 0.0 { num / den } else { 0.0 };
+    // r² of the scaled fit
+    let mean = measured.iter().sum::<f64>() / measured.len() as f64;
+    let ss_tot: f64 = measured.iter().map(|m| (m - mean) * (m - mean)).sum();
+    let ss_res: f64 = shape
+        .iter()
+        .zip(measured)
+        .map(|(s, m)| {
+            let e = m - scale * s;
+            e * e
+        })
+        .sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    (scale, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> BoundParams {
+        BoundParams {
+            sigma2: 1.0,
+            eta: 0.8,
+            l_smooth: 1.0,
+            h: 10,
+            m: 2,
+            f_gap: 5.0,
+            b_max: 64,
+        }
+    }
+
+    #[test]
+    fn batch_bound_linear_in_k() {
+        let p = params();
+        let b1 = p.batch_lower_bound(100, 1.0);
+        let b2 = p.batch_lower_bound(200, 1.0);
+        assert!((b2 / b1 - 2.0).abs() < 1e-12, "must be linear in k");
+        assert!(b1 > 0.0);
+    }
+
+    #[test]
+    fn comm_bound_logarithmic_in_n() {
+        let p = params();
+        let c1 = p.comm_upper_bound(1_000, 1.0);
+        let c2 = p.comm_upper_bound(1_000_000, 1.0);
+        assert!((c2 / c1 - 2.0).abs() < 1e-9, "ln(N²)/ln(N) = 2");
+        assert_eq!(p.comm_upper_bound(1, 1.0), 0.0);
+    }
+
+    #[test]
+    fn bounds_move_with_constants() {
+        let p = params();
+        let mut p2 = p;
+        p2.sigma2 = 2.0;
+        // more noise -> larger batches needed, fewer comms
+        assert!(p2.batch_lower_bound(100, 1.0) > p.batch_lower_bound(100, 1.0));
+        assert!(p2.comm_upper_bound(1000, 1.0) < p.comm_upper_bound(1000, 1.0));
+        let mut p3 = p;
+        p3.h = 100;
+        assert!(p3.batch_lower_bound(100, 1.0) < p.batch_lower_bound(100, 1.0));
+    }
+
+    #[test]
+    fn fit_scale_exact_multiple() {
+        let shape: Vec<f64> = (1..=50).map(|k| k as f64).collect();
+        let measured: Vec<f64> = shape.iter().map(|s| 3.5 * s).collect();
+        let (scale, r2) = fit_scale(&shape, &measured);
+        assert!((scale - 3.5).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fit_scale_detects_shape_mismatch() {
+        let shape: Vec<f64> = (1..=50).map(|k| k as f64).collect();
+        // measured is quadratic, shape linear -> r² noticeably below 1
+        let measured: Vec<f64> = (1..=50).map(|k| (k * k) as f64).collect();
+        let (_, r2) = fit_scale(&shape, &measured);
+        assert!(r2 < 0.99, "r2 {r2}");
+    }
+}

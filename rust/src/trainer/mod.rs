@@ -1,0 +1,166 @@
+//! Per-trainer state: the trainer's outer parameters, its M workers
+//! (each with persistent inner-optimizer state, a data sub-shard, a node
+//! assignment and a virtual clock slot), the adaptive-batch controller,
+//! and the outer optimizer.
+//!
+//! Lifecycle per outer step (Algorithm 3): workers copy the trainer's
+//! parameters (line 30), run H inner steps on their shard, then the
+//! trainer reduces the worker deltas (line 42) and applies the outer
+//! optimizer (line 43). The controller's `requested()` is the b_req the
+//! trainer "stores for the next outer step" (line 32).
+
+use crate::batching::BatchController;
+use crate::config::AlgoConfig;
+use crate::data::{BatchSampler, Shard};
+use crate::engine::{ModelState, TrainEngine};
+use crate::outer::OuterOpt;
+use crate::util::Rng;
+
+/// One worker (the paper's m ∈ T_i): inner-loop executor.
+pub struct Worker {
+    /// Model + inner-optimizer state. Parameters are overwritten from the
+    /// trainer at each outer step; AdamW moments persist across outer
+    /// steps (standard DiLoCo practice).
+    pub state: ModelState,
+    pub sampler: BatchSampler,
+    /// Node (simulated GPU) this worker runs on.
+    pub node: usize,
+    /// Slot in the run-wide VirtualClock.
+    pub clock_slot: usize,
+}
+
+/// One trainer (the paper's T_i): a model instance spanning M workers.
+pub struct Trainer {
+    pub id: usize,
+    /// Outer parameters x_{T_i}.
+    pub params: Vec<f32>,
+    pub outer: OuterOpt,
+    pub controller: BatchController,
+    pub workers: Vec<Worker>,
+    pub shard: Shard,
+    /// Dead trainers were consumed by a merge and take no further part.
+    pub alive: bool,
+    /// Inner steps this trainer has executed (per worker, they advance in
+    /// lockstep inside an outer step).
+    pub inner_steps_done: u64,
+}
+
+impl Trainer {
+    /// Build a trainer with `workers` workers over `shard`, placing worker
+    /// j on `nodes[(base_worker + j) % nodes.len()]`-style assignment done
+    /// by the caller (the coordinator owns placement).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: usize,
+        engine: &dyn TrainEngine,
+        algo: &AlgoConfig,
+        shard: Shard,
+        node_of_worker: &[usize],
+        clock_base: usize,
+        init_seed: u64,
+        rng: &mut Rng,
+    ) -> Trainer {
+        let m = algo.workers_per_trainer;
+        assert_eq!(node_of_worker.len(), m);
+        let trainer_state = engine.init_state(init_seed);
+        let worker_shards = shard.split(m);
+        let workers = worker_shards
+            .into_iter()
+            .enumerate()
+            .map(|(j, ws)| Worker {
+                state: ModelState::zeros_like(trainer_state.params.clone()),
+                sampler: BatchSampler::new(ws, rng.fork(id as u64 * 1024 + j as u64)),
+                node: node_of_worker[j],
+                clock_slot: clock_base + j,
+            })
+            .collect();
+        Trainer {
+            id,
+            params: trainer_state.params,
+            outer: OuterOpt::new(algo.outer_opt, algo.lr_outer, engine.param_count()),
+            controller: BatchController::new(algo.batching.clone()),
+            workers,
+            shard,
+            alive: true,
+            inner_steps_done: 0,
+        }
+    }
+
+    /// Outer-step prologue: every worker restarts from the trainer params
+    /// (Algorithm 3 line 30).
+    pub fn broadcast_params(&mut self) {
+        for w in &mut self.workers {
+            w.state.params.copy_from_slice(&self.params);
+        }
+    }
+
+    /// Outer-step epilogue: Δ = x_prev − mean(workers), outer-opt step
+    /// (Algorithm 3 lines 40-44). `delta_scratch` avoids reallocation.
+    pub fn outer_step(&mut self, delta_scratch: &mut [f32]) {
+        let worker_params: Vec<&[f32]> =
+            self.workers.iter().map(|w| w.state.params.as_slice()).collect();
+        OuterOpt::compute_delta(&self.params, &worker_params, delta_scratch);
+        self.outer.step(&mut self.params, delta_scratch);
+    }
+
+    /// Requested batch this trainer reports to CheckMerge.
+    pub fn requested_batch(&self) -> usize {
+        self.controller.requested()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::data::make_shards;
+    use crate::engine::{MockEngine, MockSpec};
+
+    fn setup(m: usize) -> (MockEngine, Trainer) {
+        let engine = MockEngine::new(MockSpec { dim: 50, ..MockSpec::default() });
+        let mut algo = presets::mock_default().algo;
+        algo.workers_per_trainer = m;
+        let mut rng = Rng::new(0);
+        let shard = make_shards(100, 1, 1.0, &mut rng).pop().unwrap();
+        let nodes: Vec<usize> = (0..m).map(|j| j % 2).collect();
+        let t = Trainer::new(0, &engine, &algo, shard, &nodes, 0, 1, &mut rng);
+        (engine, t)
+    }
+
+    #[test]
+    fn construction_layout() {
+        let (engine, t) = setup(3);
+        assert_eq!(t.workers.len(), 3);
+        assert_eq!(t.params.len(), engine.param_count());
+        assert_eq!(t.workers[2].clock_slot, 2);
+        assert_eq!(t.workers[2].node, 0);
+        // worker shards partition the trainer shard
+        let total: usize = t.workers.iter().map(|w| w.sampler.shard_len()).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn broadcast_copies_params() {
+        let (_, mut t) = setup(2);
+        t.params[0] = 123.0;
+        t.broadcast_params();
+        for w in &t.workers {
+            assert_eq!(w.state.params[0], 123.0);
+        }
+    }
+
+    #[test]
+    fn outer_step_average_moves_toward_workers() {
+        let (_, mut t) = setup(2);
+        // make outer opt a plain average for a deterministic check
+        t.outer = OuterOpt::new(crate::config::OuterOptKind::Average, 1.0, t.params.len());
+        t.broadcast_params();
+        for w in &mut t.workers {
+            w.state.params[0] += 2.0;
+        }
+        let prev = t.params[0];
+        let mut scratch = vec![0.0f32; t.params.len()];
+        t.outer_step(&mut scratch);
+        assert!((t.params[0] - (prev + 2.0)).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,127 @@
+//! Leveled stderr logger controlled by the `ADLOCO_LOG` env var.
+//!
+//! Levels: `error < warn < info < debug < trace`; default `info`.
+//! Kept free of globals-with-locks on the hot path: the level is read once
+//! and cached in an atomic, and the macros skip formatting entirely when
+//! the level is disabled.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    fn from_env() -> Level {
+        match std::env::var("ADLOCO_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+}
+
+const UNINIT: u8 = u8::MAX;
+static LEVEL: AtomicU8 = AtomicU8::new(UNINIT);
+
+/// Current max enabled level (cached after first call).
+pub fn max_level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw != UNINIT {
+        // SAFETY: only valid discriminants are ever stored.
+        return unsafe { std::mem::transmute::<u8, Level>(raw) };
+    }
+    let lvl = Level::from_env();
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+    lvl
+}
+
+/// Override the level programmatically (tests, CLI `--log-level`).
+pub fn set_max_level(lvl: Level) {
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn log_enabled(lvl: Level) -> bool {
+    lvl <= max_level()
+}
+
+/// Seconds (with millis) since process start — cheap monotonic timestamps.
+pub fn uptime_secs() -> f64 {
+    use std::time::Instant;
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+#[doc(hidden)]
+pub fn log_impl(lvl: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    eprintln!("[{:>9.3}s {} {}] {}", uptime_secs(), lvl.as_str(), module, args);
+}
+
+#[macro_export]
+macro_rules! log_at {
+    ($lvl:expr, $($arg:tt)*) => {
+        if $crate::util::logger::log_enabled($lvl) {
+            $crate::util::logger::log_impl($lvl, module_path!(), format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Error, $($arg)*) };
+}
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Warn, $($arg)*) };
+}
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Info, $($arg)*) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Debug, $($arg)*) };
+}
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Trace, $($arg)*) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Trace);
+    }
+
+    #[test]
+    fn set_and_check() {
+        set_max_level(Level::Debug);
+        assert!(log_enabled(Level::Debug));
+        assert!(!log_enabled(Level::Trace));
+        set_max_level(Level::Info);
+    }
+}

@@ -1,0 +1,17 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! The build runs fully offline against the vendored crate set (see
+//! `.cargo/config.toml`), which ships neither `rand`, `serde`, nor a
+//! logging facade — so this module provides from-scratch equivalents:
+//! a counter-seeded xoshiro256** PRNG, a JSON parser/serializer (used for
+//! `artifacts/*/meta.json`, experiment configs and metric dumps), a
+//! leveled logger and a handful of numeric helpers.
+
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+
+pub use json::JsonValue;
+pub use logger::{log_enabled, Level};
+pub use rng::{Rng, ZipfTable};

@@ -1,0 +1,204 @@
+//! Numeric helpers shared by the controller, metrics and benches.
+
+/// Online mean/variance accumulator (Welford). Numerically stable for the
+/// long metric streams the theory benches produce.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (ddof = 1); 0 for fewer than two samples.
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Exponential moving average with bias correction (Adam-style), used by
+/// the adaptive-batching controller to smooth noisy variance estimates.
+#[derive(Clone, Debug)]
+pub struct Ema {
+    beta: f64,
+    value: f64,
+    steps: u64,
+}
+
+impl Ema {
+    pub fn new(beta: f64) -> Self {
+        assert!((0.0..1.0).contains(&beta), "beta must be in [0,1)");
+        Ema { beta, value: 0.0, steps: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.value = self.beta * self.value + (1.0 - self.beta) * x;
+        self.steps += 1;
+    }
+
+    /// Bias-corrected estimate; None before any sample.
+    pub fn get(&self) -> Option<f64> {
+        if self.steps == 0 {
+            None
+        } else {
+            Some(self.value / (1.0 - self.beta.powi(self.steps as i32)))
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.steps
+    }
+}
+
+/// Percentile of a sample (linear interpolation, like numpy's default).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Dot product over f32 slices (hot path of merge / outer step checks).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b.iter()) {
+        acc += (*x as f64) * (*y as f64);
+    }
+    acc
+}
+
+/// Squared L2 norm of an f32 slice, accumulated in f64.
+#[inline]
+pub fn norm_sq_f32(a: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for x in a {
+        acc += (*x as f64) * (*x as f64);
+    }
+    acc
+}
+
+/// `y += alpha * x` (axpy) over f32 slices.
+#[inline]
+pub fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * *xi;
+    }
+}
+
+/// Simple ordinary-least-squares fit y ~ a + b*x. Returns (a, b, r2).
+/// Used to (1) fit the simulator's step-time model from measured PJRT
+/// timings and (2) check Theorem 1/2 curve shapes in the theory benches.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys.iter()) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    let b = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    let a = my - b * mx;
+    let r2 = if sxx > 0.0 && syy > 0.0 { (sxy * sxy) / (sxx * syy) } else { 1.0 };
+    (a, b, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for x in xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // sample variance of that classic set is 32/7
+        assert!((w.var() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_bias_correction() {
+        let mut e = Ema::new(0.9);
+        assert!(e.get().is_none());
+        e.push(10.0);
+        // after one sample the bias-corrected value equals the sample
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-12);
+        for _ in 0..200 {
+            e.push(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vector_ops() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 5.0, 6.0];
+        assert!((dot_f32(&a, &b) - 32.0).abs() < 1e-9);
+        assert!((norm_sq_f32(&a) - 14.0).abs() < 1e-9);
+        let mut y = b;
+        axpy_f32(2.0, &a, &mut y);
+        assert_eq!(y, [6.0f32, 9.0, 12.0]);
+    }
+
+    #[test]
+    fn linear_fit_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,254 @@
+//! Integration tests: cross-module flows over the public API, including
+//! the PJRT-backed engine when artifacts are present.
+
+use adloco::config::{presets, Config, Method};
+use adloco::coordinator::{resolve_policy, run_experiment, Coordinator};
+use adloco::engine::build_engine;
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/tiny/meta.json").exists()
+}
+
+#[test]
+fn run_experiment_writes_outputs() {
+    let dir = std::env::temp_dir().join("adloco_it_out");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut cfg = presets::quick();
+    cfg.name = "it_quick".into();
+    cfg.out_dir = Some(dir.to_str().unwrap().to_string());
+    let r = run_experiment(cfg).unwrap();
+    assert!(r.best_ppl.is_finite());
+    let jsonl = dir.join("it_quick.jsonl");
+    let csv = dir.join("it_quick.csv");
+    assert!(jsonl.exists(), "missing {jsonl:?}");
+    assert!(csv.exists(), "missing {csv:?}");
+    // every jsonl line parses
+    for line in std::fs::read_to_string(&jsonl).unwrap().lines() {
+        adloco::util::JsonValue::parse(line).unwrap();
+    }
+}
+
+#[test]
+fn config_file_to_run_flow() {
+    let dir = std::env::temp_dir().join("adloco_it_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.json");
+    std::fs::write(
+        &path,
+        r#"{
+          "preset": "quick",
+          "name": "from_file",
+          "seed": 9,
+          "algo": {"method": "diloco", "outer_steps": 2, "inner_steps": 5},
+          "engine": {"kind": "mock", "dim": 100}
+        }"#,
+    )
+    .unwrap();
+    let cfg = Config::load(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.name, "from_file");
+    assert_eq!(cfg.algo.method, Method::DiLoCo);
+    let r = run_experiment(cfg).unwrap();
+    assert!(r.best_ppl.is_finite());
+    // `quick` preset starts 2 trainers; DiLoCo must not merge any away
+    assert_eq!(r.trainers_left, 2, "diloco must not merge");
+}
+
+#[test]
+fn cli_args_compose_with_config() {
+    let args = adloco::cli::parse(
+        ["train", "--preset", "quick", "--set", "algo.inner_steps=3", "--set", "seed=5"]
+            .iter()
+            .map(|s| s.to_string()),
+    )
+    .unwrap();
+    let mut cfg = presets::by_name(args.opt("preset").unwrap()).unwrap();
+    for s in args.opt_all("set") {
+        cfg.apply_override(s).unwrap();
+    }
+    assert_eq!(cfg.algo.inner_steps, 3);
+    assert_eq!(cfg.seed, 5);
+    cfg.validate().unwrap();
+}
+
+#[test]
+fn methods_rank_sanely_on_mock() {
+    // On the shared setup, AdLoCo should spend less simulated wall-clock
+    // and fewer communications than DiLoCo while staying competitive in
+    // perplexity (the paper's Fig. 1 shape).
+    let mut base = presets::mock_default();
+    base.algo.outer_steps = 8;
+    base.algo.inner_steps = 15;
+    base.algo.workers_per_trainer = 2;
+    base.algo.lr_inner = 0.15;
+
+    let mut results = std::collections::BTreeMap::new();
+    for m in [Method::AdLoCo, Method::DiLoCo] {
+        let mut cfg = base.clone();
+        cfg.algo.method = m;
+        cfg.name = format!("rank_{}", m.as_str());
+        let cfg = resolve_policy(&cfg);
+        let engine = build_engine(&cfg).unwrap();
+        let mut coord = Coordinator::new(cfg, engine).unwrap();
+        let r = coord.run().unwrap();
+        results.insert(m.as_str(), (r.best_ppl, r.virtual_time_s, r.comm_count));
+    }
+    let (ad_ppl, ad_time, ad_comms) = results["adloco"];
+    let (di_ppl, di_time, di_comms) = results["diloco"];
+    assert!(
+        ad_time < di_time,
+        "adloco should finish sooner in virtual time: {ad_time} vs {di_time}"
+    );
+    assert!(
+        ad_comms <= di_comms,
+        "adloco should not communicate more: {ad_comms} vs {di_comms}"
+    );
+    assert!(
+        ad_ppl <= di_ppl * 2.0,
+        "adloco perplexity should stay competitive: {ad_ppl} vs {di_ppl}"
+    );
+}
+
+#[test]
+fn xla_coordinator_short_run() {
+    if !artifacts_present() {
+        eprintln!("skipping xla integration (run `make artifacts`)");
+        return;
+    }
+    let mut cfg = presets::xla_tiny();
+    cfg.name = "it_xla".into();
+    cfg.algo.outer_steps = 2;
+    cfg.algo.inner_steps = 4;
+    cfg.algo.num_trainers = 2;
+    cfg.algo.workers_per_trainer = 1;
+    cfg.algo.merge.frequency = 2;
+    cfg.run.eval_every = 2;
+    cfg.run.eval_batches = 1;
+    cfg.data.corpus_sequences = 256;
+    let engine = build_engine(&cfg).unwrap();
+    let mut coord = Coordinator::new(cfg, engine).unwrap();
+    let r = coord.run().unwrap();
+    assert!(r.best_ppl.is_finite());
+    assert!(r.best_ppl < 500.0, "ppl {:.1} should be near/below vocab=256", r.best_ppl);
+    assert!(!coord.recorder.steps.is_empty());
+    // losses start near ln(256) ~ 5.55
+    let l0 = coord.recorder.steps.first().unwrap().loss;
+    assert!((l0 - 5.55).abs() < 1.0, "initial loss {l0}");
+}
+
+#[test]
+fn xla_switch_mode_accumulates() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut cfg = presets::xla_tiny();
+    cfg.name = "it_xla_switch".into();
+    cfg.algo.outer_steps = 1;
+    cfg.algo.inner_steps = 2;
+    cfg.algo.num_trainers = 1;
+    cfg.algo.workers_per_trainer = 1;
+    // force switch: request already above 2 * max_batch
+    cfg.algo.batching.initial_batch = 40;
+    cfg.algo.batching.max_request = 40;
+    for n in &mut cfg.cluster.nodes {
+        n.max_batch = 8;
+    }
+    cfg.run.eval_every = 0;
+    cfg.data.corpus_sequences = 128;
+    let engine = build_engine(&cfg).unwrap();
+    let mut coord = Coordinator::new(cfg, engine).unwrap();
+    coord.run().unwrap();
+    let s = coord.recorder.steps.first().unwrap();
+    assert_eq!(s.batch, 8, "micro batch must be the node budget rung");
+    assert_eq!(s.accum_steps, 5, "ceil(40/8) = 5 accumulation steps");
+}
+
+#[test]
+fn xla_and_mock_agree_on_protocol() {
+    // The coordinator must produce the same *shape* of record stream for
+    // both engines (same schema, same per-step bookkeeping).
+    let run = |cfg: Config| {
+        let engine = build_engine(&cfg).unwrap();
+        let mut coord = Coordinator::new(cfg, engine).unwrap();
+        coord.run().unwrap();
+        coord
+            .recorder
+            .steps
+            .iter()
+            .map(|s| (s.trainer, s.worker, s.accum_steps))
+            .collect::<Vec<_>>()
+    };
+    let mut mock_cfg = presets::quick();
+    mock_cfg.algo.num_trainers = 2;
+    mock_cfg.algo.outer_steps = 2;
+    mock_cfg.algo.inner_steps = 3;
+    mock_cfg.algo.batching.adaptive = false;
+    mock_cfg.algo.merge.enabled = false;
+    let mock_stream = run(mock_cfg);
+
+    if !artifacts_present() {
+        return;
+    }
+    let mut xla_cfg = presets::xla_tiny();
+    xla_cfg.algo.num_trainers = 2;
+    xla_cfg.algo.outer_steps = 2;
+    xla_cfg.algo.inner_steps = 3;
+    xla_cfg.algo.batching.adaptive = false;
+    xla_cfg.algo.merge.enabled = false;
+    xla_cfg.run.eval_every = 0;
+    xla_cfg.data.corpus_sequences = 128;
+    let xla_stream = run(xla_cfg);
+    assert_eq!(mock_stream, xla_stream, "record protocol must be engine-agnostic");
+}
+
+#[test]
+fn checkpoint_resume_continues_run() {
+    let dir = std::env::temp_dir().join("adloco_it_ckpt");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("run.ckpt").to_str().unwrap().to_string();
+
+    // run 1: 4 outer steps, checkpoint every 2
+    let mut cfg = presets::quick();
+    cfg.name = "it_ckpt".into();
+    cfg.algo.outer_steps = 4;
+    cfg.run.checkpoint_path = Some(ckpt.clone());
+    cfg.run.checkpoint_every = 2;
+    let engine = build_engine(&cfg).unwrap();
+    let mut c1 = Coordinator::new(cfg.clone(), engine).unwrap();
+    let r1 = c1.run().unwrap();
+    assert!(std::path::Path::new(&ckpt).exists());
+
+    // the checkpoint reflects the final state
+    let cp = adloco::checkpoint::Checkpoint::load(&ckpt).unwrap();
+    assert_eq!(cp.outer_step, 4);
+    assert_eq!(cp.total_samples, r1.total_samples);
+
+    // run 2: same config extended to 6 outer steps, resuming from the
+    // checkpoint: must skip straight past step 4 and keep the counters.
+    let mut cfg2 = cfg.clone();
+    cfg2.algo.outer_steps = 6;
+    cfg2.run.resume_from = Some(ckpt.clone());
+    cfg2.run.checkpoint_path = None;
+    let engine2 = build_engine(&cfg2).unwrap();
+    let mut c2 = Coordinator::new(cfg2, engine2).unwrap();
+    let r2 = c2.run().unwrap();
+    assert!(r2.total_samples > r1.total_samples, "resumed run must add samples");
+    assert!(r2.best_ppl.is_finite());
+    // resumed steps continue the per-trainer counters
+    assert!(r2.total_inner_steps > r1.total_inner_steps);
+}
+
+#[test]
+fn snapshot_restore_is_identity() {
+    let cfg = presets::quick();
+    let engine = build_engine(&cfg).unwrap();
+    let mut c = Coordinator::new(cfg.clone(), engine).unwrap();
+    c.step_outer(1).unwrap();
+    let snap = c.snapshot(1);
+    // fresh coordinator, restore, snapshot again: must match exactly
+    let engine2 = build_engine(&cfg).unwrap();
+    let mut c2 = Coordinator::new(cfg, engine2).unwrap();
+    c2.restore(&snap).unwrap();
+    let snap2 = c2.snapshot(1);
+    assert_eq!(snap, snap2);
+}

@@ -1,0 +1,298 @@
+//! Property-based tests (hand-rolled proptest-style: seeded random case
+//! generation over many iterations) on the coordinator-layer invariants:
+//! merge selection/conservation, switch-mode planning, ladder rounding,
+//! controller monotonicity, clock barriers, and JSON round-tripping.
+
+use adloco::batching::{plan_step, round_to_ladder, BatchController};
+use adloco::config::presets;
+use adloco::engine::StepStats;
+use adloco::merge::{check_merge, do_merge};
+use adloco::simulator::VirtualClock;
+use adloco::util::{JsonValue, Rng};
+
+const CASES: usize = 300;
+
+// ---------------------------------------------------------------------------
+// merge properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_check_merge_selects_minima() {
+    let mut rng = Rng::new(100);
+    for case in 0..CASES {
+        let k = 2 + rng.below(10) as usize;
+        let w = rng.below(k as u64 + 3) as usize;
+        let min_keep = 1 + rng.below(3) as usize;
+        let reqs: Vec<(usize, usize)> =
+            (0..k).map(|id| (id, 1 + rng.below(100) as usize)).collect();
+        let sel = check_merge(&reqs, w, min_keep);
+
+        if !sel.is_empty() {
+            assert!(sel.len() >= 2, "case {case}: merge of {} members", sel.len());
+            // survivors floor
+            assert!(
+                k - (sel.len() - 1) >= min_keep,
+                "case {case}: floor violated (k={k}, sel={}, keep={min_keep})",
+                sel.len()
+            );
+            // selected are exactly a set of minimal b_req (allowing ties)
+            let max_sel_b = sel
+                .iter()
+                .map(|&id| reqs.iter().find(|(i, _)| *i == id).unwrap().1)
+                .max()
+                .unwrap();
+            let better_outside = reqs
+                .iter()
+                .filter(|(id, b)| !sel.contains(id) && *b < max_sel_b)
+                .count();
+            assert_eq!(better_outside, 0, "case {case}: non-minimal selection");
+        }
+    }
+}
+
+#[test]
+fn prop_do_merge_is_convex_combination() {
+    let mut rng = Rng::new(200);
+    for case in 0..CASES {
+        let n = 1 + rng.below(64) as usize;
+        let k = 2 + rng.below(4) as usize;
+        let mut bufs: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..n).map(|_| rng.normal_ms(0.0, 3.0) as f32).collect())
+            .collect();
+        let weights: Vec<usize> = (0..k).map(|_| 1 + rng.below(50) as usize).collect();
+
+        // coordinate-wise min/max BEFORE the merge
+        let lo: Vec<f32> = (0..n)
+            .map(|i| bufs.iter().map(|b| b[i]).fold(f32::INFINITY, f32::min))
+            .collect();
+        let hi: Vec<f32> = (0..n)
+            .map(|i| bufs.iter().map(|b| b[i]).fold(f32::NEG_INFINITY, f32::max))
+            .collect();
+
+        let outcome = {
+            let mut members: Vec<(usize, usize, &mut [f32])> = bufs
+                .iter_mut()
+                .enumerate()
+                .map(|(i, b)| (i, weights[i], b.as_mut_slice()))
+                .collect();
+            do_merge(&mut members)
+        };
+        let rep = outcome.representative;
+        // representative has max weight (ties -> lowest id)
+        let wmax = *weights.iter().max().unwrap();
+        assert_eq!(weights[rep], wmax, "case {case}");
+        // merged vector is inside the convex hull coordinate-wise
+        for i in 0..n {
+            let v = bufs[rep][i];
+            assert!(
+                v >= lo[i] - 1e-4 && v <= hi[i] + 1e-4,
+                "case {case}: coord {i} {v} outside [{}, {}]",
+                lo[i],
+                hi[i]
+            );
+        }
+        assert_eq!(outcome.removed.len(), k - 1);
+        assert!(!outcome.removed.contains(&rep));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batching properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_plan_step_invariants() {
+    let mut rng = Rng::new(300);
+    let ladder_pool: Vec<Vec<usize>> =
+        vec![vec![1, 2, 4, 8, 16], vec![1, 2, 4, 8, 16, 32, 64], vec![1, 4, 16, 64, 256]];
+    for case in 0..CASES {
+        let ladder = &ladder_pool[rng.below(3) as usize];
+        let b_req = 1 + rng.below(4000) as usize;
+        let max_batch = 1 + rng.below(80) as usize;
+        let multiplier = 1.0 + rng.f64() * 3.0;
+        let enabled = rng.f64() < 0.7;
+        let p = plan_step(b_req, max_batch, multiplier, enabled, ladder);
+
+        assert!(p.micro_batch >= 1, "case {case}");
+        assert!(p.micro_batch <= max_batch, "case {case}: micro > max_batch");
+        assert!(p.accum_steps >= 1);
+        let threshold = (multiplier * max_batch as f64).floor() as usize;
+        if p.switched {
+            assert!(enabled && b_req > threshold, "case {case}: switched too early");
+            // accumulation covers the request
+            assert!(
+                p.accum_steps == b_req.div_ceil(max_batch),
+                "case {case}: accum {} for b_req {b_req} max {max_batch}",
+                p.accum_steps
+            );
+        } else {
+            assert_eq!(p.accum_steps, 1, "case {case}");
+        }
+        if !enabled {
+            assert!(!p.switched);
+        }
+    }
+}
+
+#[test]
+fn prop_round_to_ladder() {
+    let mut rng = Rng::new(400);
+    for _ in 0..CASES {
+        let mut ladder: Vec<usize> =
+            (0..(1 + rng.below(8) as usize)).map(|_| 1 + rng.below(512) as usize).collect();
+        ladder.sort_unstable();
+        ladder.dedup();
+        let b = 1 + rng.below(1024) as usize;
+        let r = round_to_ladder(b, &ladder);
+        assert!(ladder.contains(&r));
+        if b <= *ladder.last().unwrap() {
+            assert!(r >= b, "rounding must not shrink below request");
+            // r is the *smallest* rung >= b
+            for &rung in &ladder {
+                if rung >= b {
+                    assert_eq!(r, rung);
+                    break;
+                }
+            }
+        } else {
+            assert_eq!(r, *ladder.last().unwrap());
+        }
+    }
+}
+
+#[test]
+fn prop_controller_monotone_and_capped() {
+    let mut rng = Rng::new(500);
+    for case in 0..CASES {
+        let mut bc = presets::paper_table1().algo.batching;
+        bc.max_request = 1 + rng.below(500) as usize;
+        bc.monotone = true;
+        bc.ema_beta = if rng.f64() < 0.5 { 0.0 } else { 0.9 };
+        let mut c = BatchController::new(bc.clone());
+        let mut prev = c.requested();
+        for _ in 0..50 {
+            let stats = StepStats {
+                loss: rng.f64() * 10.0,
+                grad_sq_norm: rng.f64() * 2.0,
+                sigma2: rng.f64() * 5.0,
+                ip_var: rng.f64() * 5.0,
+            };
+            c.observe(&stats, 1 + rng.below(64) as usize);
+            let req = c.requested();
+            assert!(req >= prev, "case {case}: monotone violated {prev} -> {req}");
+            assert!(req <= bc.max_request.max(prev), "case {case}: cap violated");
+            assert!(req >= 1);
+            prev = req;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// simulator properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_clock_barrier_is_max_plus_extra() {
+    let mut rng = Rng::new(600);
+    for _ in 0..CASES {
+        let n = 2 + rng.below(16) as usize;
+        let mut clock = VirtualClock::new(n);
+        for w in 0..n {
+            clock.advance(w, rng.f64() * 100.0);
+        }
+        let mut members: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut members);
+        members.truncate(1 + rng.below(n as u64) as usize);
+        let before_max =
+            members.iter().map(|&w| clock.time(w)).fold(0.0_f64, f64::max);
+        let extra = rng.f64();
+        let after = clock.barrier(&members, extra);
+        assert!((after - (before_max + extra)).abs() < 1e-9);
+        for &w in &members {
+            assert!((clock.time(w) - after).abs() < 1e-12);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// json round-trip on random documents
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> JsonValue {
+    let kind = if depth == 0 { rng.below(4) } else { rng.below(6) };
+    match kind {
+        0 => JsonValue::Null,
+        1 => JsonValue::Bool(rng.f64() < 0.5),
+        2 => {
+            // keep numbers exactly representable through the writer
+            let v = (rng.range(-1_000_000, 1_000_000) as f64) / 64.0;
+            JsonValue::Number(v)
+        }
+        3 => {
+            let len = rng.below(12) as usize;
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.below(96) as u8 + 32;
+                    c as char
+                })
+                .collect();
+            JsonValue::String(s)
+        }
+        4 => JsonValue::Array(
+            (0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect(),
+        ),
+        _ => JsonValue::Object(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    let mut rng = Rng::new(700);
+    for case in 0..CASES {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = JsonValue::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(v, back, "case {case}");
+        let pretty = v.to_string_pretty();
+        assert_eq!(v, JsonValue::parse(&pretty).unwrap(), "case {case} (pretty)");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end property: random small configs never panic and stay sane
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_random_configs_run_clean() {
+    let mut rng = Rng::new(800);
+    for case in 0..12 {
+        let mut cfg = presets::quick();
+        cfg.name = format!("prop_run_{case}");
+        cfg.seed = rng.next_u64();
+        cfg.algo.num_trainers = 1 + rng.below(4) as usize;
+        cfg.algo.workers_per_trainer = 1 + rng.below(3) as usize;
+        cfg.algo.inner_steps = 2 + rng.below(8) as usize;
+        cfg.algo.outer_steps = 1 + rng.below(4) as usize;
+        cfg.algo.merge.enabled = rng.f64() < 0.7;
+        cfg.algo.merge.w = 1 + rng.below(4) as usize;
+        cfg.algo.merge.frequency = 1 + rng.below(3) as usize;
+        cfg.algo.switch.enabled = rng.f64() < 0.7;
+        cfg.algo.batching.adaptive = rng.f64() < 0.8;
+        cfg.algo.batching.max_request = 64;
+        cfg.algo.batching.monotone = rng.f64() < 0.8;
+        cfg.run.eval_every = 2;
+        cfg.validate().unwrap();
+
+        let r = adloco::coordinator::run_experiment(cfg).unwrap_or_else(|e| {
+            panic!("case {case} failed: {e:#}")
+        });
+        assert!(r.best_ppl.is_finite(), "case {case}");
+        assert!(r.trainers_left >= 1, "case {case}");
+        assert!(r.total_inner_steps >= 1, "case {case}");
+    }
+}

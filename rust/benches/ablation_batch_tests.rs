@@ -85,11 +85,12 @@ fn main() {
         .map(|&x| x + probe_rng.normal_ms(0.0, 0.003) as f32)
         .collect();
     let mut grad = vec![0.0f32; engine.param_count()];
+    let mut noise = adloco::util::Rng::new(123);
     let batch = adloco::data::TokenBatch::new(64, 8);
     let (mut s_sig, mut s_ip, mut s_s1) = (0.0, 0.0, 0.0);
     let probes = 100;
     for _ in 0..probes {
-        let s = engine.grad_step(&params, &batch, &mut grad).unwrap();
+        let s = engine.grad_step(&params, &batch, &mut grad, &mut noise).unwrap();
         s_sig += s.sigma2 / probes as f64;
         s_ip += s.ip_var / probes as f64;
         s_s1 += s.grad_sq_norm / probes as f64;

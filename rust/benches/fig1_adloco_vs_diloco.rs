@@ -14,12 +14,15 @@
 //! Run: `cargo bench --bench fig1_adloco_vs_diloco` (`--quick` to smoke).
 
 use adloco::benchkit::{quick_mode, Table};
-use adloco::config::{presets, Config, Method};
+use adloco::config::{presets, Config, Method, SchedulerKind};
 use adloco::coordinator::{resolve_policy, Coordinator};
 use adloco::engine::build_engine;
 
 fn base_config(quick: bool) -> Config {
     let mut cfg = presets::paper_table1();
+    // event scheduler (bit-identical to lockstep on this static cluster;
+    // also exercises the tentpole path and yields utilization columns)
+    cfg.run.scheduler = SchedulerKind::Event;
     // small mock dimension so every arm converges to the loss floor
     // within the paper's 20-outer-step horizon (ppl floor = e^1 ~ 2.72)
     cfg.engine = adloco::config::EngineConfig::Mock { dim: 40, noise: 1.0, condition: 10.0 };
@@ -56,6 +59,8 @@ fn main() {
         "comms@target",
         "total_comms",
         "mean_batch",
+        "idle_s",
+        "util",
     ]);
 
     for m in methods {
@@ -80,6 +85,8 @@ fn main() {
             tt.map(|t| t.2.to_string()).unwrap_or_else(|| "-".into()),
             r.comm_count.to_string(),
             format!("{:.1}", rec.mean_batch()),
+            format!("{:.2}", r.total_idle_s),
+            format!("{:.2}", r.mean_utilization),
         ]);
     }
 

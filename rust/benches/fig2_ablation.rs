@@ -9,7 +9,7 @@
 //! Run: `cargo bench --bench fig2_ablation` (`--quick` to smoke).
 
 use adloco::benchkit::{quick_mode, Table};
-use adloco::config::{presets, Config};
+use adloco::config::{presets, Config, SchedulerKind};
 use adloco::coordinator::Coordinator;
 use adloco::engine::build_engine;
 
@@ -36,6 +36,8 @@ fn base_config(quick: bool) -> Config {
         n.max_batch = 16;
     }
     cfg.algo.batching.max_request = 256;
+    // event scheduler (bit-identical to lockstep on this static cluster)
+    cfg.run.scheduler = SchedulerKind::Event;
     cfg
 }
 
@@ -62,6 +64,7 @@ fn main() {
         "trainers_left",
         "mean_batch",
         "accum_steps_seen",
+        "idle_s",
     ]);
 
     for arm in &arms {
@@ -86,6 +89,7 @@ fn main() {
             r.trainers_left.to_string(),
             format!("{:.1}", rec.mean_batch()),
             max_accum.to_string(),
+            format!("{:.2}", r.total_idle_s),
         ]);
     }
 

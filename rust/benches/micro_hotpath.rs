@@ -94,9 +94,10 @@ fn main() {
     // ---- mock engine step ---------------------------------------------------
     let mut mock = MockEngine::new(MockSpec { dim: 2000, ..MockSpec::default() });
     let mut st = mock.init_state(0);
+    let mut noise = Rng::new(17);
     let mb = TokenBatch::new(16, 8);
     let t = time_auto(budget, 5, || {
-        mock.train_step(&mut st, 0.01, &mb).unwrap();
+        mock.train_step(&mut st, 0.01, &mb, &mut noise).unwrap();
     });
     push(&mut table, "mock.train_step(dim=2000,b=16)", t);
 
@@ -113,9 +114,9 @@ fn main() {
             for t in tb.tokens.iter_mut() {
                 *t = r2.range(0, vocab) as i32;
             }
-            eng.train_step(&mut state, 1e-4, &tb).unwrap(); // compile
+            eng.train_step(&mut state, 1e-4, &tb, &mut noise).unwrap(); // compile
             let t = time_auto(budget, 3, || {
-                eng.train_step(&mut state, 1e-4, &tb).unwrap();
+                eng.train_step(&mut state, 1e-4, &tb, &mut noise).unwrap();
             });
             push(&mut table, &format!("xla.train_step(tiny,b={b})"), t);
         }
@@ -128,9 +129,9 @@ fn main() {
         }
         let st0 = eng.init_state(0);
         let mut grad = vec![0.0f32; eng.param_count()];
-        eng.grad_step(&st0.params, &tb, &mut grad).unwrap();
+        eng.grad_step(&st0.params, &tb, &mut grad, &mut noise).unwrap();
         let t = time_auto(budget, 3, || {
-            eng.grad_step(&st0.params, &tb, &mut grad).unwrap();
+            eng.grad_step(&st0.params, &tb, &mut grad, &mut noise).unwrap();
         });
         push(&mut table, &format!("xla.grad_step(tiny,b={bmax})"), t);
 
@@ -139,9 +140,9 @@ fn main() {
         for t in tb.tokens.iter_mut() {
             *t = r2.range(0, vocab) as i32;
         }
-        eng.eval_loss(&st0.params, &tb).unwrap();
+        eng.eval_loss(&st0.params, &tb, &mut noise).unwrap();
         let t = time_auto(budget, 3, || {
-            eng.eval_loss(&st0.params, &tb).unwrap();
+            eng.eval_loss(&st0.params, &tb, &mut noise).unwrap();
         });
         push(&mut table, &format!("xla.eval(tiny,b={eb})"), t);
     } else {

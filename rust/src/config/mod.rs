@@ -233,6 +233,92 @@ pub struct NodeConfig {
     pub speed: f64,
 }
 
+/// Which run loop drives the simulated cluster (DESIGN.md §3.1–§3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// The reference round-lockstep walk: trainers and workers are
+    /// iterated in fixed program order. Bit-exact anchor for regressions;
+    /// cannot express dynamic workloads.
+    Lockstep,
+    /// Discrete-event scheduler: worker steps, sync and merge arrivals
+    /// are consumed from a priority queue in virtual-time order. On a
+    /// static cluster it reproduces the lockstep ledger bit-for-bit;
+    /// with a scenario configured it models stragglers, churn and
+    /// time-varying links.
+    Event,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Result<SchedulerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "lockstep" => Ok(SchedulerKind::Lockstep),
+            "event" => Ok(SchedulerKind::Event),
+            _ => bail!("unknown scheduler {s:?} (lockstep|event)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SchedulerKind::Lockstep => "lockstep",
+            SchedulerKind::Event => "event",
+        }
+    }
+}
+
+/// A node-preemption window: the node is down over `[from_s, until_s)`
+/// of virtual time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnWindow {
+    pub node: usize,
+    pub from_s: f64,
+    pub until_s: f64,
+}
+
+/// A scheduled bandwidth change on one node's link: from `at_s` on, the
+/// link runs at `bandwidth_factor` x the base bandwidth (piecewise
+/// constant until the next shift).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkShift {
+    pub node: usize,
+    pub at_s: f64,
+    pub bandwidth_factor: f64,
+}
+
+/// Dynamic-workload scenario knobs (compiled by `simulator::Scenario`).
+/// The default is fully static; any non-static scenario requires the
+/// event scheduler.
+#[derive(Clone, Debug)]
+pub struct ScenarioConfig {
+    /// Per-inner-step probability a worker's compute is slowed (0 = off).
+    pub straggler_prob: f64,
+    /// Slowdown multiplier range, drawn uniformly on a straggler hit.
+    pub straggler_min: f64,
+    pub straggler_max: f64,
+    /// Node preemption windows (virtual seconds).
+    pub churn: Vec<ChurnWindow>,
+    /// Scheduled per-node link-bandwidth changes.
+    pub link_shifts: Vec<LinkShift>,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            straggler_prob: 0.0,
+            straggler_min: 1.5,
+            straggler_max: 4.0,
+            churn: Vec::new(),
+            link_shifts: Vec::new(),
+        }
+    }
+}
+
+impl ScenarioConfig {
+    /// True when no knob perturbs the cluster.
+    pub fn is_static(&self) -> bool {
+        self.straggler_prob <= 0.0 && self.churn.is_empty() && self.link_shifts.is_empty()
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
     pub nodes: Vec<NodeConfig>,
@@ -245,7 +331,11 @@ pub struct ClusterConfig {
     pub step_per_token_s: f64,
     /// Fractional lognormal-ish jitter on per-step compute time
     /// (dynamic-workload knob from the paper's motivation; 0 = none).
+    /// Drawn from each worker's private time stream, so it is
+    /// scheduler-order independent.
     pub step_jitter: f64,
+    /// Dynamic-workload scenario (stragglers / churn / link shifts).
+    pub scenario: ScenarioConfig,
 }
 
 #[derive(Clone, Debug)]
@@ -265,6 +355,8 @@ pub struct RunConfig {
     pub checkpoint_every: usize,
     /// Resume trainer state from this checkpoint before the first step.
     pub resume_from: Option<String>,
+    /// Run-loop flavour; `Event` is required for dynamic scenarios.
+    pub scheduler: SchedulerKind,
 }
 
 #[derive(Clone, Debug)]
@@ -324,6 +416,45 @@ impl Config {
         }
         if !(0.0..1.0).contains(&self.cluster.step_jitter) {
             bail!("cluster.step_jitter must be in [0,1)");
+        }
+        let sc = &self.cluster.scenario;
+        if !(0.0..=1.0).contains(&sc.straggler_prob) {
+            bail!("scenario.straggler_prob must be in [0,1]");
+        }
+        if sc.straggler_prob > 0.0
+            && (sc.straggler_min < 1.0 || sc.straggler_max < sc.straggler_min)
+        {
+            bail!("scenario straggler factors need 1 <= min <= max");
+        }
+        for (i, w) in sc.churn.iter().enumerate() {
+            if w.node >= self.cluster.nodes.len() {
+                bail!("scenario.churn[{i}].node {} out of range", w.node);
+            }
+            if !w.from_s.is_finite()
+                || w.from_s < 0.0
+                || !w.until_s.is_finite()
+                || w.until_s <= w.from_s
+            {
+                bail!("scenario.churn[{i}] needs 0 <= from_s < until_s (finite)");
+            }
+        }
+        for (i, s) in sc.link_shifts.iter().enumerate() {
+            if s.node >= self.cluster.nodes.len() {
+                bail!("scenario.link_shifts[{i}].node {} out of range", s.node);
+            }
+            if !s.at_s.is_finite()
+                || s.at_s < 0.0
+                || !s.bandwidth_factor.is_finite()
+                || s.bandwidth_factor <= 0.0
+            {
+                bail!("scenario.link_shifts[{i}] needs at_s >= 0 and bandwidth_factor > 0");
+            }
+        }
+        if !sc.is_static() && self.run.scheduler != SchedulerKind::Event {
+            bail!(
+                "a dynamic scenario requires run.scheduler=event \
+                 (the lockstep reference walk cannot express it)"
+            );
         }
         if self.data.vocab < 2 || self.data.seq_len == 0 {
             bail!("data.vocab >= 2 and data.seq_len >= 1 required");
@@ -598,6 +729,64 @@ fn apply_cluster(c: &mut ClusterConfig, v: &JsonValue) -> Result<()> {
     if let Some(x) = v.get("step_jitter").and_then(|x| x.as_f64()) {
         c.step_jitter = x;
     }
+    if let Some(s) = v.get("scenario") {
+        apply_scenario(&mut c.scenario, s)?;
+    }
+    Ok(())
+}
+
+fn apply_scenario(sc: &mut ScenarioConfig, v: &JsonValue) -> Result<()> {
+    if let Some(x) = v.get("straggler_prob").and_then(|x| x.as_f64()) {
+        sc.straggler_prob = x;
+    }
+    if let Some(x) = v.get("straggler_min").and_then(|x| x.as_f64()) {
+        sc.straggler_min = x;
+    }
+    if let Some(x) = v.get("straggler_max").and_then(|x| x.as_f64()) {
+        sc.straggler_max = x;
+    }
+    if let Some(arr) = v.get("churn").and_then(|x| x.as_array()) {
+        sc.churn = arr
+            .iter()
+            .map(|w| {
+                Ok(ChurnWindow {
+                    node: w
+                        .get("node")
+                        .and_then(|x| x.as_usize())
+                        .ok_or_else(|| anyhow!("churn.node required"))?,
+                    from_s: w
+                        .get("from_s")
+                        .and_then(|x| x.as_f64())
+                        .ok_or_else(|| anyhow!("churn.from_s required"))?,
+                    until_s: w
+                        .get("until_s")
+                        .and_then(|x| x.as_f64())
+                        .ok_or_else(|| anyhow!("churn.until_s required"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(arr) = v.get("link_shifts").and_then(|x| x.as_array()) {
+        sc.link_shifts = arr
+            .iter()
+            .map(|s| {
+                Ok(LinkShift {
+                    node: s
+                        .get("node")
+                        .and_then(|x| x.as_usize())
+                        .ok_or_else(|| anyhow!("link_shifts.node required"))?,
+                    at_s: s
+                        .get("at_s")
+                        .and_then(|x| x.as_f64())
+                        .ok_or_else(|| anyhow!("link_shifts.at_s required"))?,
+                    bandwidth_factor: s
+                        .get("bandwidth_factor")
+                        .and_then(|x| x.as_f64())
+                        .ok_or_else(|| anyhow!("link_shifts.bandwidth_factor required"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
     Ok(())
 }
 
@@ -622,6 +811,9 @@ fn apply_run(r: &mut RunConfig, v: &JsonValue) -> Result<()> {
     }
     if let Some(x) = v.get("resume_from").and_then(|x| x.as_str()) {
         r.resume_from = Some(x.to_string());
+    }
+    if let Some(x) = v.get("scheduler").and_then(|x| x.as_str()) {
+        r.scheduler = SchedulerKind::parse(x)?;
     }
     Ok(())
 }
@@ -667,6 +859,7 @@ mod tests {
         presets::paper_table1().validate().unwrap();
         presets::xla_tiny().validate().unwrap();
         presets::xla_small().validate().unwrap();
+        presets::hetero_dynamic().validate().unwrap();
     }
 
     #[test]
@@ -690,6 +883,48 @@ mod tests {
         assert_eq!(cfg.cluster.nodes.len(), 2);
         assert_eq!(cfg.cluster.nodes[1].max_batch, 8);
         assert_eq!(cfg.cluster.nodes[1].speed, 0.5);
+    }
+
+    #[test]
+    fn scheduler_and_scenario_overrides() {
+        let mut cfg = presets::mock_default();
+        assert_eq!(cfg.run.scheduler, SchedulerKind::Lockstep);
+        cfg.apply_override("run.scheduler=event").unwrap();
+        assert_eq!(cfg.run.scheduler, SchedulerKind::Event);
+        cfg.apply_override("cluster.scenario.straggler_prob=0.2").unwrap();
+        cfg.apply_override(
+            r#"cluster.scenario.churn=[{"node":0,"from_s":1.0,"until_s":2.0}]"#,
+        )
+        .unwrap();
+        cfg.apply_override(
+            r#"cluster.scenario.link_shifts=[{"node":1,"at_s":3.0,"bandwidth_factor":0.5}]"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.scenario.straggler_prob, 0.2);
+        assert_eq!(cfg.cluster.scenario.churn, vec![ChurnWindow {
+            node: 0,
+            from_s: 1.0,
+            until_s: 2.0
+        }]);
+        assert_eq!(cfg.cluster.scenario.link_shifts[0].bandwidth_factor, 0.5);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn dynamic_scenario_requires_event_scheduler() {
+        let mut cfg = presets::mock_default();
+        cfg.cluster.scenario.straggler_prob = 0.5;
+        assert!(cfg.validate().is_err(), "straggler scenario on lockstep must fail");
+        cfg.run.scheduler = SchedulerKind::Event;
+        cfg.validate().unwrap();
+        cfg.cluster
+            .scenario
+            .churn
+            .push(ChurnWindow { node: 99, from_s: 0.0, until_s: 1.0 });
+        assert!(cfg.validate().is_err(), "out-of-range churn node must fail");
+        cfg.cluster.scenario.churn[0].node = 0;
+        cfg.cluster.scenario.churn[0].until_s = 0.0;
+        assert!(cfg.validate().is_err(), "empty churn window must fail");
     }
 
     #[test]

@@ -10,12 +10,13 @@ pub fn by_name(name: &str) -> Option<Config> {
         "xla_tiny" => Some(xla_tiny()),
         "xla_small" => Some(xla_small()),
         "quick" => Some(quick()),
+        "hetero_dynamic" => Some(hetero_dynamic()),
         _ => None,
     }
 }
 
 pub fn preset_names() -> &'static [&'static str] {
-    &["mock_default", "paper_table1", "xla_tiny", "xla_small", "quick"]
+    &["mock_default", "paper_table1", "xla_tiny", "xla_small", "quick", "hetero_dynamic"]
 }
 
 fn base_batching() -> BatchingConfig {
@@ -48,6 +49,7 @@ fn base_cluster(nodes: usize, max_batch: usize) -> ClusterConfig {
         step_fixed_s: 5e-3,
         step_per_token_s: 3e-5,
         step_jitter: 0.0,
+        scenario: ScenarioConfig::default(),
     }
 }
 
@@ -100,6 +102,7 @@ pub fn paper_table1() -> Config {
             checkpoint_path: None,
             checkpoint_every: 0,
             resume_from: None,
+            scheduler: SchedulerKind::Lockstep,
         },
         out_dir: None,
     }
@@ -155,6 +158,45 @@ pub fn xla_small() -> Config {
     for n in &mut cfg.cluster.nodes {
         n.max_batch = 32;
     }
+    cfg
+}
+
+/// Heterogeneous cluster under a dynamic workload: mixed node speeds and
+/// memory budgets, stochastic stragglers, one mid-run node preemption and
+/// a temporary bandwidth collapse — the scenario the paper's introduction
+/// motivates. Runs on the event scheduler (required for scenarios).
+pub fn hetero_dynamic() -> Config {
+    let mut cfg = paper_table1();
+    cfg.name = "hetero_dynamic".into();
+    cfg.algo.outer_steps = 10;
+    cfg.algo.inner_steps = 30;
+    cfg.algo.workers_per_trainer = 2;
+    cfg.algo.lr_inner = 0.02;
+    cfg.algo.fixed_batch = 8;
+    cfg.engine = EngineConfig::Mock { dim: 500, noise: 1.0, condition: 10.0 };
+    cfg.data.corpus_sequences = 4_000;
+    cfg.data.val_sequences = 128;
+    cfg.run.eval_every = 10;
+    cfg.run.scheduler = SchedulerKind::Event;
+    // one fast/big node, two mid, one slow/small straggler host
+    cfg.cluster.nodes = vec![
+        NodeConfig { max_batch: 128, speed: 2.0 },
+        NodeConfig { max_batch: 64, speed: 1.0 },
+        NodeConfig { max_batch: 64, speed: 1.0 },
+        NodeConfig { max_batch: 16, speed: 0.35 },
+    ];
+    cfg.cluster.scenario = ScenarioConfig {
+        straggler_prob: 0.15,
+        straggler_min: 1.5,
+        straggler_max: 4.0,
+        // the slow node drops out mid-run, then returns
+        churn: vec![ChurnWindow { node: 3, from_s: 8.0, until_s: 16.0 }],
+        // node 1's uplink collapses to a tenth for a while
+        link_shifts: vec![
+            LinkShift { node: 1, at_s: 5.0, bandwidth_factor: 0.1 },
+            LinkShift { node: 1, at_s: 20.0, bandwidth_factor: 1.0 },
+        ],
+    };
     cfg
 }
 

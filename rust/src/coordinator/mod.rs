@@ -18,20 +18,36 @@
 //! clock through the node's step-time model; outer syncs and merges are
 //! barriers plus modeled all-reduce/transfer time; the ledger records
 //! every communication for the C(N) analyses (Theorem 2).
+//!
+//! Two run loops drive the same numerics (DESIGN.md §3.1–§3.2):
+//!
+//! * **lockstep** — the reference walk: trainers and their workers are
+//!   iterated in fixed program order. Retained as the bit-exact
+//!   regression anchor.
+//! * **event** — a discrete-event scheduler: workers post `StepDone`
+//!   events into a priority queue and the coordinator consumes them in
+//!   virtual-time order, with `SyncArrive`/`MergeArrive` rendezvous at
+//!   the outer boundaries. On a static cluster it reproduces the
+//!   lockstep run bit-for-bit (per-worker RNG streams make the numerics
+//!   scheduling-order independent — DESIGN.md §3.4); with a
+//!   `cluster.scenario` it models stragglers, node churn and
+//!   time-varying links, and accounts per-worker busy/wait/preempted
+//!   time for the utilization report.
 
 use crate::batching::{plan_step, StepPlan};
-use crate::config::{Config, Method};
+use crate::config::{Config, Method, SchedulerKind};
 use crate::data::{make_shards, shard::union_shards, Corpus, CorpusSpec, TokenBatch};
 use crate::engine::{StepStats, TrainEngine};
 use crate::merge::{check_merge_with_policy, do_merge, MergePolicy};
-use crate::metrics::{perplexity, EvalRecord, MergeRecord, Recorder, StepRecord};
+use crate::metrics::{perplexity, EvalRecord, MergeRecord, Recorder, StepRecord, UtilRecord};
 use crate::simulator::{
-    assign_workers, node_models, CommEvent, CommKind, CommLedger, NetworkModel, NodeModel,
-    VirtualClock,
+    assign_workers, node_models, CommEvent, CommKind, CommLedger, EventQueue, NetworkModel,
+    NodeModel, Scenario, SimEvent, VirtualClock,
 };
 use crate::trainer::Trainer;
 use crate::util::Rng;
 use anyhow::Result;
+use std::collections::BTreeMap;
 
 /// Outcome summary of a run (full series live in the recorder).
 #[derive(Clone, Debug)]
@@ -47,6 +63,11 @@ pub struct RunResult {
     pub comm_bytes: u64,
     pub virtual_time_s: f64,
     pub trainers_left: usize,
+    /// Sum of barrier-wait + churn-preemption seconds across all workers
+    /// (the cluster-efficiency axis of the dynamic-workload scenarios).
+    pub total_idle_s: f64,
+    /// Mean per-worker busy fraction.
+    pub mean_utilization: f64,
     /// (step, time, comms) at which target_ppl was first reached, if ever.
     pub time_to_target: Option<(u64, f64, usize)>,
 }
@@ -73,6 +94,33 @@ pub fn resolve_policy(cfg: &Config) -> Config {
     out
 }
 
+/// Per-trainer bookkeeping of one event-driven outer step.
+struct TrainerRun {
+    plan: StepPlan,
+    /// Inner steps this trainer executes this outer step.
+    target: u64,
+    /// `inner_steps_done` at the start of the outer step.
+    start_done: u64,
+    /// Worker whose parameters mid-loop evals read (first active; worker
+    /// 0 on a static cluster, matching the lockstep path).
+    eval_worker: usize,
+    n_active: usize,
+    /// Completed steps: (step, worker, stats, completion time). Folded
+    /// into the controller in canonical (step, worker) order at the
+    /// outer boundary — the exact order the lockstep walk produces.
+    stats: Vec<(u64, usize, StepStats, f64)>,
+    /// Mid-loop evals buffered until the canonical flush, keyed by step.
+    evals: Vec<(u64, EvalRecord)>,
+    /// Pending mid-loop evals: step -> arrival times + params snapshot.
+    pending: BTreeMap<u64, PendingEval>,
+}
+
+struct PendingEval {
+    times: Vec<f64>,
+    remaining: usize,
+    params: Vec<f32>,
+}
+
 pub struct Coordinator {
     cfg: Config,
     engine: Box<dyn TrainEngine>,
@@ -82,6 +130,7 @@ pub struct Coordinator {
     clock: VirtualClock,
     nodes: Vec<NodeModel>,
     net: NetworkModel,
+    scenario: Scenario,
     ledger: CommLedger,
     pub recorder: Recorder,
     rng: Rng,
@@ -89,11 +138,19 @@ pub struct Coordinator {
     delta_scratch: Vec<f32>,
     grad_scratch: Vec<f32>,
     accum_scratch: Vec<f32>,
-    batch_buf: TokenBatch,
+    /// One reusable token buffer per (batch, width) seen — bounded by the
+    /// engine ladder, so interleaved trainers with different plans (the
+    /// event scheduler) don't reallocate per step.
+    batch_bufs: Vec<TokenBatch>,
     /// Samples consumed across the run (the N axis of Theorem 2).
     total_samples: u64,
     /// Inner-lr schedule (evaluated on each trainer's inner-step count).
     lr_schedule: crate::schedule::Schedule,
+    /// Per-clock-slot time accounting (virtual seconds).
+    busy_s: Vec<f64>,
+    wait_s: Vec<f64>,
+    comm_s: Vec<f64>,
+    preempted_s: Vec<f64>,
 }
 
 impl Coordinator {
@@ -144,11 +201,11 @@ impl Coordinator {
         }
 
         let p = engine.param_count();
-        let width = cfg.data.seq_len + 1;
         let mut recorder = Recorder::new();
         recorder.note("engine", engine.name());
         recorder.note("method", a.method.as_str());
         recorder.note("config", cfg.name.clone());
+        recorder.note("scheduler", cfg.run.scheduler.as_str());
 
         Ok(Coordinator {
             clock: VirtualClock::new(k * m),
@@ -157,18 +214,23 @@ impl Coordinator {
                 latency_s: cfg.cluster.net_latency_s,
                 bandwidth_bps: cfg.cluster.net_bandwidth_bps,
             },
+            scenario: Scenario::compile(&cfg.cluster.scenario, cfg.cluster.nodes.len()),
             ledger: CommLedger::default(),
             recorder,
             rng,
             delta_scratch: vec![0.0; p],
             grad_scratch: vec![0.0; p],
             accum_scratch: vec![0.0; p],
-            batch_buf: TokenBatch::new(1, width),
+            batch_bufs: Vec::new(),
             total_samples: 0,
             lr_schedule: crate::schedule::Schedule::from_config(
                 &cfg.algo.lr_schedule,
                 (cfg.algo.outer_steps * cfg.algo.inner_steps) as u64,
             ),
+            busy_s: vec![0.0; k * m],
+            wait_s: vec![0.0; k * m],
+            comm_s: vec![0.0; k * m],
+            preempted_s: vec![0.0; k * m],
             cfg,
             engine,
             corpus,
@@ -201,6 +263,21 @@ impl Coordinator {
         node_min.min(self.engine.max_batch()).max(1)
     }
 
+    /// Barrier with utilization accounting: members wait for the slowest
+    /// (wait time) then pay the transfer (comm time). Numerically exactly
+    /// `VirtualClock::barrier`.
+    fn barrier_tracked(&mut self, members: &[usize], extra: f64) -> f64 {
+        let t_start = members
+            .iter()
+            .map(|&w| self.clock.time(w))
+            .fold(0.0_f64, f64::max);
+        for &w in members {
+            self.wait_s[w] += t_start - self.clock.time(w);
+            self.comm_s[w] += extra;
+        }
+        self.clock.barrier(members, extra)
+    }
+
     /// Run the full schedule (T outer steps of H inner steps), honouring
     /// the checkpoint/resume settings in `run` config.
     pub fn run(&mut self) -> Result<RunResult> {
@@ -214,7 +291,10 @@ impl Coordinator {
         let outer_steps = self.cfg.algo.outer_steps as u64;
         let every = self.cfg.run.checkpoint_every as u64;
         for t in start..=outer_steps {
-            let hit = self.step_outer(t)?;
+            let hit = match self.cfg.run.scheduler {
+                SchedulerKind::Lockstep => self.step_outer(t)?,
+                SchedulerKind::Event => self.step_outer_event(t)?,
+            };
             if let Some(path) = self.cfg.run.checkpoint_path.clone() {
                 if (every > 0 && t % every == 0) || t == outer_steps || hit {
                     self.snapshot(t).save(&path)?;
@@ -226,6 +306,7 @@ impl Coordinator {
                 break;
             }
         }
+        self.record_utilization();
         Ok(self.result())
     }
 
@@ -317,7 +398,273 @@ impl Coordinator {
         Ok(())
     }
 
-    /// One outer step. Returns true if the target perplexity was reached.
+    // ------------------------------------------------------------------
+    // shared building blocks (both schedulers)
+    // ------------------------------------------------------------------
+
+    /// The step plan this trainer uses for the whole outer step
+    /// (Algorithm 3 lines 17-27 — b_req was stored at the previous one).
+    fn plan_for(&self, ti: usize) -> StepPlan {
+        let tr = &self.trainers[ti];
+        let a = &self.cfg.algo;
+        let b_req = if a.batching.adaptive { tr.requested_batch() } else { a.fixed_batch };
+        let max_batch = self.max_batch_for(tr);
+        plan_step(
+            b_req,
+            max_batch,
+            a.switch.multiplier,
+            a.switch.enabled,
+            self.engine.supported_batches(),
+        )
+    }
+
+    /// The engine work of one inner step of worker `wi` of trainer `ti`:
+    /// sample a batch (or `accum_steps` of them under SwitchMode), run the
+    /// gradient computation, apply the update. Pure compute — no clocks,
+    /// no controller, no records — so both schedulers share it verbatim.
+    /// Engine noise comes from the worker's private stream.
+    fn exec_worker_step(&mut self, ti: usize, wi: usize, plan: &StepPlan, lr: f64) -> Result<StepStats> {
+        let width = self.corpus.width();
+        let bi = self.batch_buf_for(plan.micro_batch, width);
+
+        if plan.accum_steps > 1 {
+            // SwitchMode: accumulate accum_steps gradients at the
+            // micro batch, then one optimizer commit (§4.2).
+            self.accum_scratch.iter_mut().for_each(|x| *x = 0.0);
+            let mut agg = StepStats::default();
+            for _ in 0..plan.accum_steps {
+                let tr = &mut self.trainers[ti];
+                let w = &mut tr.workers[wi];
+                w.sampler.next_batch(&self.corpus, &mut self.batch_bufs[bi]);
+                let s = self.engine.grad_step(
+                    &w.state.params,
+                    &self.batch_bufs[bi],
+                    &mut self.grad_scratch,
+                    &mut w.noise_rng,
+                )?;
+                for (a, g) in self.accum_scratch.iter_mut().zip(&self.grad_scratch) {
+                    *a += *g / plan.accum_steps as f32;
+                }
+                agg.loss += s.loss / plan.accum_steps as f64;
+                agg.grad_sq_norm += s.grad_sq_norm / plan.accum_steps as f64;
+                agg.sigma2 += s.sigma2 / plan.accum_steps as f64;
+                agg.ip_var += s.ip_var / plan.accum_steps as f64;
+            }
+            let tr = &mut self.trainers[ti];
+            let w = &mut tr.workers[wi];
+            self.engine.apply_update(&mut w.state, lr, &self.accum_scratch)?;
+            Ok(agg)
+        } else {
+            let tr = &mut self.trainers[ti];
+            let w = &mut tr.workers[wi];
+            w.sampler.next_batch(&self.corpus, &mut self.batch_bufs[bi]);
+            self.engine
+                .train_step(&mut w.state, lr, &self.batch_bufs[bi], &mut w.noise_rng)
+        }
+    }
+
+    /// Index of the reusable token buffer for this (batch, width),
+    /// creating it on first use. The set of sizes is bounded by the
+    /// engine's batch ladder, so the cache stays tiny.
+    fn batch_buf_for(&mut self, batch: usize, width: usize) -> usize {
+        match self
+            .batch_bufs
+            .iter()
+            .position(|b| b.batch == batch && b.width == width)
+        {
+            Some(i) => i,
+            None => {
+                self.batch_bufs.push(TokenBatch::new(batch, width));
+                self.batch_bufs.len() - 1
+            }
+        }
+    }
+
+    /// Compute-time of one inner step of worker `wi` (node model x
+    /// accumulation depth x optional jitter from the worker's private
+    /// time stream). Shared by both schedulers.
+    fn step_duration(&mut self, ti: usize, wi: usize, plan: &StepPlan) -> f64 {
+        let width = self.corpus.width();
+        let jitter = self.cfg.cluster.step_jitter;
+        let tr = &mut self.trainers[ti];
+        let w = &mut tr.workers[wi];
+        let mut dt = self.nodes[w.node].step_time(plan.micro_batch, width - 1)
+            * plan.accum_steps as f64;
+        if jitter > 0.0 {
+            // truncated at -3 sigma so time never goes negative
+            let z = w.time_rng.normal().clamp(-3.0, 3.0);
+            dt *= (1.0 + jitter * z).max(0.05);
+        }
+        dt
+    }
+
+    /// Pick the trainers to merge this round (Algorithm 1). Empty or a
+    /// single id means no merge.
+    fn select_merge(&mut self) -> Vec<usize> {
+        let requests: Vec<(usize, usize)> = self
+            .trainers
+            .iter()
+            .filter(|t| t.alive)
+            .map(|t| (t.id, t.requested_batch()))
+            .collect();
+        let policy = match self.cfg.algo.merge.policy {
+            crate::config::MergeSelect::WorstByBatch => MergePolicy::WorstByBatch,
+            crate::config::MergeSelect::Random => MergePolicy::Random,
+        };
+        check_merge_with_policy(
+            &requests,
+            self.cfg.algo.merge.w,
+            self.cfg.algo.merge.min_trainers,
+            policy,
+            &mut self.rng,
+        )
+    }
+
+    /// The parameter/shard consolidation of a merge (Algorithm 2), after
+    /// the participants' barrier produced `t_after`. Shared by both
+    /// schedulers; the ledger entry is recorded by the caller.
+    fn perform_merge(&mut self, outer_t: u64, selected: &[usize], t_after: f64) -> Result<()> {
+        // weighted merge over the selected trainers' parameters
+        let outcome = {
+            // split borrows: collect (id, b_req) first, then build the
+            // mutable member list in id order
+            let reqs: Vec<(usize, usize)> = selected
+                .iter()
+                .map(|&id| (id, self.trainers[id].requested_batch()))
+                .collect();
+            let mut members: Vec<(usize, usize, &mut [f32])> = Vec::new();
+            // safe split of multiple &mut trainers via split_at_mut walk
+            let mut rest: &mut [Trainer] = &mut self.trainers;
+            let mut base = 0usize;
+            let mut sorted = selected.to_vec();
+            sorted.sort_unstable();
+            for id in sorted {
+                let local = id - base;
+                let tmp = rest;
+                let (head, tail) = tmp.split_at_mut(local + 1);
+                let tr = &mut head[local];
+                let b = reqs.iter().find(|(i, _)| *i == id).unwrap().1;
+                members.push((id, b, tr.params.as_mut_slice()));
+                rest = tail;
+                base = id + 1;
+            }
+            do_merge(&mut members)
+        };
+
+        // consume the non-representative trainers
+        for &dead in &outcome.removed {
+            self.trainers[dead].alive = false;
+        }
+        // the representative keeps the union of the merged shards and its
+        // own optimizer trajectory (Algorithm 2 line 9); its outer
+        // momentum is reset since the parameters jumped
+        let shard_refs: Vec<&crate::data::Shard> = selected
+            .iter()
+            .map(|&id| &self.trainers[id].shard)
+            .collect();
+        let merged_shard = union_shards(&shard_refs);
+        let rep = outcome.representative;
+        {
+            // re-split among the representative's active workers (all of
+            // them on a static cluster); churned-out workers get fresh
+            // samplers from the merged shard when they rejoin
+            let active_ix: Vec<usize> = self.trainers[rep]
+                .workers
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| w.active)
+                .map(|(i, _)| i)
+                .collect();
+            let split_ix: Vec<usize> = if active_ix.is_empty() {
+                (0..self.trainers[rep].workers.len()).collect()
+            } else {
+                active_ix
+            };
+            let worker_shards = merged_shard.split(split_ix.len());
+            for (&w_ix, ws) in split_ix.iter().zip(worker_shards.into_iter()) {
+                self.trainers[rep].workers[w_ix].sampler =
+                    crate::data::BatchSampler::new(ws, self.rng.fork(0xABCD + rep as u64));
+            }
+            self.trainers[rep].shard = merged_shard;
+            self.trainers[rep].outer.reset();
+        }
+
+        crate::info!(
+            "outer {outer_t}: merged {:?} -> representative {rep} ({} trainers left)",
+            outcome.removed,
+            self.live_trainers()
+        );
+        self.recorder.merges.push(MergeRecord {
+            outer_step: outer_t,
+            merged: outcome.removed.clone(),
+            representative: rep,
+            trainers_left: self.live_trainers(),
+            virtual_time_s: t_after,
+        });
+        Ok(())
+    }
+
+    /// Validation loss/perplexity of `params` (fresh per-call eval RNG
+    /// keyed by the outer step, so the draw is independent of when or in
+    /// which order evaluations execute).
+    fn compute_eval(&mut self, params: &[f32], outer_t: u64) -> Result<(f64, f64)> {
+        let eb = self.engine.eval_batch();
+        let width = self.val_corpus.width();
+        let mut eval_rng = Rng::new(self.cfg.seed ^ 0xE7A1 ^ outer_t);
+        let mut loss_acc = 0.0;
+        let n = self.cfg.run.eval_batches.max(1);
+        let mut buf = TokenBatch::new(eb, width);
+        for _ in 0..n {
+            for row in 0..eb {
+                let ix = eval_rng.below(self.val_corpus.len() as u64) as usize;
+                buf.row_mut(row).copy_from_slice(self.val_corpus.sequence(ix));
+            }
+            loss_acc += self.engine.eval_loss(params, &buf, &mut eval_rng)?;
+        }
+        let loss = loss_acc / n as f64;
+        Ok((loss, perplexity(loss)))
+    }
+
+    fn eval_params(&mut self, params: &[f32], ti: usize, outer_t: u64) -> Result<bool> {
+        let (loss, ppl) = self.compute_eval(params, outer_t)?;
+        let tr = &self.trainers[ti];
+        let vt = tr
+            .workers
+            .iter()
+            .map(|w| self.clock.time(w.clock_slot))
+            .fold(0.0f64, f64::max);
+        self.recorder.evals.push(EvalRecord {
+            global_step: tr.inner_steps_done,
+            outer_step: outer_t,
+            trainer: ti,
+            loss,
+            perplexity: ppl,
+            virtual_time_s: vt,
+            comm_count: self.ledger.count(),
+            comm_bytes: self.ledger.total_bytes(),
+        });
+        Ok(self.cfg.run.target_ppl > 0.0 && ppl <= self.cfg.run.target_ppl)
+    }
+
+    /// Evaluate worker-0 parameters of trainer `ti` (mid-outer-step eval,
+    /// the paper's every-10-steps cadence). Returns true if target reached.
+    fn evaluate(&mut self, ti: usize, outer_t: u64) -> Result<bool> {
+        let params: Vec<f32> = self.trainers[ti].workers[0].state.params.clone();
+        self.eval_params(&params, ti, outer_t)
+    }
+
+    /// Evaluate the trainer's outer parameters (post-sync).
+    fn evaluate_trainer_params(&mut self, ti: usize, outer_t: u64) -> Result<bool> {
+        let params: Vec<f32> = self.trainers[ti].params.clone();
+        self.eval_params(&params, ti, outer_t)
+    }
+
+    // ------------------------------------------------------------------
+    // lockstep scheduler (reference walk)
+    // ------------------------------------------------------------------
+
+    /// One outer step of the lockstep reference walk. Returns true if the
+    /// target perplexity was reached.
     pub fn step_outer(&mut self, outer_t: u64) -> Result<bool> {
         // ---- merging (Algorithm 3 lines 11-16) -------------------------
         let mc = self.cfg.algo.merge.clone();
@@ -363,7 +710,7 @@ impl Coordinator {
             let slots: Vec<usize> =
                 self.trainers[ti].workers.iter().map(|w| w.clock_slot).collect();
             let comm_t = self.net.allreduce_time(param_bytes, m);
-            let t_after = self.clock.barrier(&slots, comm_t);
+            let t_after = self.barrier_tracked(&slots, comm_t);
             if m > 1 {
                 self.ledger.record(CommEvent {
                     kind: CommKind::OuterSync,
@@ -387,84 +734,24 @@ impl Coordinator {
         Ok(hit_target)
     }
 
-    /// The step plan this trainer uses for the whole outer step
-    /// (Algorithm 3 lines 17-27 — b_req was stored at the previous one).
-    fn plan_for(&self, ti: usize) -> StepPlan {
-        let tr = &self.trainers[ti];
-        let a = &self.cfg.algo;
-        let b_req = if a.batching.adaptive { tr.requested_batch() } else { a.fixed_batch };
-        let max_batch = self.max_batch_for(tr);
-        plan_step(
-            b_req,
-            max_batch,
-            a.switch.multiplier,
-            a.switch.enabled,
-            self.engine.supported_batches(),
-        )
-    }
-
-    /// One inner step of every worker of trainer `ti`.
+    /// One inner step of every worker of trainer `ti` (lockstep walk).
     fn inner_step(&mut self, ti: usize, outer_t: u64, plan: &StepPlan) -> Result<()> {
         let lr = self
             .lr_schedule
             .lr(self.cfg.algo.lr_inner, self.trainers[ti].inner_steps_done + 1);
         let n_workers = self.trainers[ti].workers.len();
-        let width = self.corpus.width();
 
         for wi in 0..n_workers {
-            // (re)size the shared batch buffer for this plan
-            if self.batch_buf.batch != plan.micro_batch || self.batch_buf.width != width {
-                self.batch_buf = TokenBatch::new(plan.micro_batch, width);
-            }
+            let stats = self.exec_worker_step(ti, wi, plan, lr)?;
 
-            let stats = if plan.accum_steps > 1 {
-                // SwitchMode: accumulate accum_steps gradients at the
-                // micro batch, then one optimizer commit (§4.2).
-                self.accum_scratch.iter_mut().for_each(|x| *x = 0.0);
-                let mut agg = StepStats::default();
-                for _ in 0..plan.accum_steps {
-                    let tr = &mut self.trainers[ti];
-                    let w = &mut tr.workers[wi];
-                    w.sampler.next_batch(&self.corpus, &mut self.batch_buf);
-                    let s = self.engine.grad_step(
-                        &w.state.params,
-                        &self.batch_buf,
-                        &mut self.grad_scratch,
-                    )?;
-                    for (a, g) in self.accum_scratch.iter_mut().zip(&self.grad_scratch) {
-                        *a += *g / plan.accum_steps as f32;
-                    }
-                    agg.loss += s.loss / plan.accum_steps as f64;
-                    agg.grad_sq_norm += s.grad_sq_norm / plan.accum_steps as f64;
-                    agg.sigma2 += s.sigma2 / plan.accum_steps as f64;
-                    agg.ip_var += s.ip_var / plan.accum_steps as f64;
-                }
-                let tr = &mut self.trainers[ti];
-                let w = &mut tr.workers[wi];
-                self.engine.apply_update(&mut w.state, lr, &self.accum_scratch)?;
-                agg
-            } else {
-                let tr = &mut self.trainers[ti];
-                let w = &mut tr.workers[wi];
-                w.sampler.next_batch(&self.corpus, &mut self.batch_buf);
-                self.engine.train_step(&mut w.state, lr, &self.batch_buf)?
-            };
-
-            // virtual time: accum_steps micro-steps on this worker's node,
-            // with optional dynamic-workload jitter (truncated at -3 sigma
-            // so time never goes negative)
-            let jitter = self.cfg.cluster.step_jitter;
-            let tr = &mut self.trainers[ti];
-            let w = &tr.workers[wi];
-            let mut dt = self.nodes[w.node].step_time(plan.micro_batch, width - 1)
-                * plan.accum_steps as f64;
-            if jitter > 0.0 {
-                let z = self.rng.normal().clamp(-3.0, 3.0);
-                dt *= (1.0 + jitter * z).max(0.05);
-            }
-            self.clock.advance(w.clock_slot, dt);
+            // virtual time: accum_steps micro-steps on this worker's node
+            let dt = self.step_duration(ti, wi, plan);
+            let slot = self.trainers[ti].workers[wi].clock_slot;
+            self.clock.advance(slot, dt);
+            self.busy_s[slot] += dt;
 
             // adaptive-batching statistics (Algorithm 3 line 31)
+            let tr = &mut self.trainers[ti];
             tr.controller.observe(&stats, plan.effective_batch());
 
             self.total_samples += plan.effective_batch() as u64;
@@ -480,32 +767,18 @@ impl Coordinator {
                 loss: stats.loss,
                 grad_sq_norm: stats.grad_sq_norm,
                 sigma2: stats.sigma2,
-                virtual_time_s: self.clock.time(tr.workers[wi].clock_slot),
+                virtual_time_s: self.clock.time(slot),
             });
         }
         self.trainers[ti].inner_steps_done += 1;
         Ok(())
     }
 
-    /// MIT merge round (Algorithms 1-2).
+    /// MIT merge round (Algorithms 1-2), lockstep flavour: selection, a
+    /// plain barrier over every worker of the selected trainers, then the
+    /// shared consolidation.
     fn maybe_merge(&mut self, outer_t: u64) -> Result<()> {
-        let requests: Vec<(usize, usize)> = self
-            .trainers
-            .iter()
-            .filter(|t| t.alive)
-            .map(|t| (t.id, t.requested_batch()))
-            .collect();
-        let policy = match self.cfg.algo.merge.policy {
-            crate::config::MergeSelect::WorstByBatch => MergePolicy::WorstByBatch,
-            crate::config::MergeSelect::Random => MergePolicy::Random,
-        };
-        let selected = check_merge_with_policy(
-            &requests,
-            self.cfg.algo.merge.w,
-            self.cfg.algo.merge.min_trainers,
-            policy,
-            &mut self.rng,
-        );
+        let selected = self.select_merge();
         if selected.len() < 2 {
             return Ok(());
         }
@@ -517,7 +790,7 @@ impl Coordinator {
             .flat_map(|&id| self.trainers[id].workers.iter().map(|w| w.clock_slot))
             .collect();
         let bytes = (selected.len() as u64 - 1) * param_bytes;
-        let t_after = self.clock.barrier(&slots, self.net.transfer_time(bytes));
+        let t_after = self.barrier_tracked(&slots, self.net.transfer_time(bytes));
         self.ledger.record(CommEvent {
             kind: CommKind::Merge,
             at_virtual_s: t_after,
@@ -525,126 +798,447 @@ impl Coordinator {
             participants: selected.len(),
             at_inner_step: self.total_samples,
         });
+        self.perform_merge(outer_t, &selected, t_after)
+    }
 
-        // weighted merge over the selected trainers' parameters
-        let outcome = {
-            // split borrows: collect (id, b_req) first, then build the
-            // mutable member list in id order
-            let reqs: Vec<(usize, usize)> = selected
-                .iter()
-                .map(|&id| (id, self.trainers[id].requested_batch()))
-                .collect();
-            let mut members: Vec<(usize, usize, &mut [f32])> = Vec::new();
-            // safe split of multiple &mut trainers via split_at_mut walk
-            let mut rest: &mut [Trainer] = &mut self.trainers;
-            let mut base = 0usize;
-            let mut sorted = selected.clone();
-            sorted.sort_unstable();
-            for id in sorted {
-                let local = id - base;
-                let tmp = rest;
-                let (head, tail) = tmp.split_at_mut(local + 1);
-                let tr = &mut head[local];
-                let b = reqs.iter().find(|(i, _)| *i == id).unwrap().1;
-                members.push((id, b, tr.params.as_mut_slice()));
-                rest = tail;
-                base = id + 1;
-            }
-            do_merge(&mut members)
-        };
+    // ------------------------------------------------------------------
+    // event-driven scheduler
+    // ------------------------------------------------------------------
 
-        // consume the non-representative trainers
-        for &dead in &outcome.removed {
-            self.trainers[dead].alive = false;
-        }
-        // the representative keeps the union of the merged shards and its
-        // own optimizer trajectory (Algorithm 2 line 9); its outer
-        // momentum is reset since the parameters jumped
-        let shard_refs: Vec<&crate::data::Shard> = selected
-            .iter()
-            .map(|&id| &self.trainers[id].shard)
-            .collect();
-        let merged_shard = union_shards(&shard_refs);
-        let rep = outcome.representative;
+    /// One outer step of the discrete-event scheduler. Returns true if
+    /// the target perplexity was reached.
+    ///
+    /// Inner steps execute when their `StepDone` event pops — in virtual
+    /// time order across all trainers and workers. Controller
+    /// observations, step records and buffered evals are flushed in
+    /// canonical (trainer, step, worker) order at the outer boundary,
+    /// which is exactly the order the lockstep walk produces — together
+    /// with per-worker RNG streams this makes the two schedulers
+    /// bit-identical on static clusters.
+    pub fn step_outer_event(&mut self, outer_t: u64) -> Result<bool> {
+        // ---- churn: refresh worker activity, re-shard changed trainers --
+        self.apply_churn()?;
+
+        // ---- merging (same cadence and selection as lockstep) -----------
+        let mc = self.cfg.algo.merge.clone();
+        if mc.enabled
+            && self.live_trainers() > 1
+            && mc.frequency > 0
+            && outer_t % mc.frequency as u64 == 0
         {
-            let m = self.trainers[rep].workers.len();
-            let worker_shards = merged_shard.split(m);
-            for (w, ws) in self.trainers[rep]
-                .workers
-                .iter_mut()
-                .zip(worker_shards.into_iter())
-            {
-                w.sampler = crate::data::BatchSampler::new(ws, self.rng.fork(0xABCD + rep as u64));
-            }
-            self.trainers[rep].shard = merged_shard;
-            self.trainers[rep].outer.reset();
+            self.maybe_merge_event(outer_t)?;
         }
 
-        crate::info!(
-            "outer {outer_t}: merged {:?} -> representative {rep} ({} trainers left)",
-            outcome.removed,
-            self.live_trainers()
-        );
-        self.recorder.merges.push(MergeRecord {
-            outer_step: outer_t,
-            merged: outcome.removed.clone(),
-            representative: rep,
-            trainers_left: self.live_trainers(),
-            virtual_time_s: t_after,
-        });
+        let h = self.cfg.algo.inner_steps as u64;
+        let cap = self.cfg.run.max_inner_steps as u64;
+        let eval_every = self.cfg.run.eval_every as u64;
+        let live: Vec<usize> = (0..self.trainers.len())
+            .filter(|&i| self.trainers[i].alive)
+            .collect();
+        let mut hit_target = false;
+
+        // ---- per-trainer plans + bookkeeping ----------------------------
+        let mut runs: Vec<Option<TrainerRun>> =
+            (0..self.trainers.len()).map(|_| None).collect();
+        for &ti in &live {
+            self.trainers[ti].broadcast_params();
+            let plan = self.plan_for(ti);
+            let start_done = self.trainers[ti].inner_steps_done;
+            let target = if cap == 0 {
+                h
+            } else {
+                h.min(cap.saturating_sub(start_done).max(1))
+            };
+            let n_active = self.trainers[ti].workers.iter().filter(|w| w.active).count();
+            let eval_worker = self.trainers[ti]
+                .workers
+                .iter()
+                .position(|w| w.active)
+                .unwrap_or(0);
+            runs[ti] = Some(TrainerRun {
+                plan,
+                target,
+                start_done,
+                eval_worker,
+                n_active,
+                stats: Vec::with_capacity((target as usize) * n_active),
+                evals: Vec::new(),
+                pending: BTreeMap::new(),
+            });
+        }
+
+        // ---- seed the queue with every active worker's first step -------
+        let mut queue = EventQueue::new();
+        for &ti in &live {
+            let plan = runs[ti].as_ref().unwrap().plan;
+            for wi in 0..self.trainers[ti].workers.len() {
+                if !self.trainers[ti].workers[wi].active {
+                    continue;
+                }
+                let end = self.schedule_step_end(ti, wi, &plan);
+                queue.push(end, SimEvent::StepDone { trainer: ti, worker: wi, step: 1 });
+            }
+        }
+
+        // ---- consume events in virtual-time order -----------------------
+        while let Some((t, ev)) = queue.pop() {
+            match ev {
+                SimEvent::StepDone { trainer: ti, worker: wi, step } => {
+                    let slot = self.trainers[ti].workers[wi].clock_slot;
+                    self.clock.advance_to(slot, t);
+                    let (plan, target, start_done, eval_worker) = {
+                        let r = runs[ti].as_ref().unwrap();
+                        (r.plan, r.target, r.start_done, r.eval_worker)
+                    };
+                    let lr = self
+                        .lr_schedule
+                        .lr(self.cfg.algo.lr_inner, start_done + step);
+                    let stats = self.exec_worker_step(ti, wi, &plan, lr)?;
+                    runs[ti].as_mut().unwrap().stats.push((step, wi, stats, t));
+
+                    // mid-loop eval bookkeeping: the eval runs once every
+                    // active worker has completed this step (lockstep
+                    // evaluates at the same logical point)
+                    let eval_due = eval_every > 0
+                        && step % eval_every == 0
+                        && step <= target
+                        && !(cap > 0 && start_done + step >= cap);
+                    if eval_due {
+                        let ready = {
+                            let r = runs[ti].as_mut().unwrap();
+                            let n_active = r.n_active;
+                            let p = r.pending.entry(step).or_insert_with(|| PendingEval {
+                                times: Vec::new(),
+                                remaining: n_active,
+                                params: Vec::new(),
+                            });
+                            p.times.push(t);
+                            p.remaining -= 1;
+                            p.remaining == 0
+                        };
+                        if wi == eval_worker {
+                            let snap = self.trainers[ti].workers[wi].state.params.clone();
+                            runs[ti]
+                                .as_mut()
+                                .unwrap()
+                                .pending
+                                .get_mut(&step)
+                                .unwrap()
+                                .params = snap;
+                        }
+                        if ready {
+                            let pend = runs[ti]
+                                .as_mut()
+                                .unwrap()
+                                .pending
+                                .remove(&step)
+                                .unwrap();
+                            let vt =
+                                pend.times.iter().fold(0.0f64, |acc, &x| acc.max(x));
+                            let (loss, ppl) = self.compute_eval(&pend.params, outer_t)?;
+                            hit_target |= self.cfg.run.target_ppl > 0.0
+                                && ppl <= self.cfg.run.target_ppl;
+                            let rec = EvalRecord {
+                                global_step: start_done + step,
+                                outer_step: outer_t,
+                                trainer: ti,
+                                loss,
+                                perplexity: ppl,
+                                virtual_time_s: vt,
+                                comm_count: self.ledger.count(),
+                                comm_bytes: self.ledger.total_bytes(),
+                            };
+                            runs[ti].as_mut().unwrap().evals.push((step, rec));
+                        }
+                    }
+
+                    if step < target {
+                        let end = self.schedule_step_end(ti, wi, &plan);
+                        queue.push(
+                            end,
+                            SimEvent::StepDone { trainer: ti, worker: wi, step: step + 1 },
+                        );
+                    } else {
+                        queue.push(t, SimEvent::SyncArrive { trainer: ti, worker: wi });
+                    }
+                }
+                // Arrival markers: the rendezvous itself is the queue
+                // draining — every active worker has posted its arrival
+                // by then. (MergeArrive is handled in maybe_merge_event.)
+                SimEvent::SyncArrive { .. } | SimEvent::MergeArrive { .. } => {}
+            }
+        }
+
+        // ---- canonical flush: controller folds, step records, evals -----
+        for &ti in &live {
+            let mut r = match runs[ti].take() {
+                Some(r) => r,
+                None => continue,
+            };
+            if r.n_active == 0 {
+                continue; // fully preempted: the trainer sat this one out
+            }
+            r.stats.sort_by_key(|&(s, w, _, _)| (s, w));
+            for &(step, wi, ref stats, vt) in r.stats.iter() {
+                let tr = &mut self.trainers[ti];
+                tr.controller.observe(stats, r.plan.effective_batch());
+                self.total_samples += r.plan.effective_batch() as u64;
+                self.recorder.steps.push(StepRecord {
+                    global_step: r.start_done + step,
+                    outer_step: outer_t,
+                    trainer: ti,
+                    worker: wi,
+                    batch: r.plan.micro_batch,
+                    requested_batch: tr.controller.requested(),
+                    accum_steps: r.plan.accum_steps,
+                    loss: stats.loss,
+                    grad_sq_norm: stats.grad_sq_norm,
+                    sigma2: stats.sigma2,
+                    virtual_time_s: vt,
+                });
+            }
+            self.trainers[ti].inner_steps_done = r.start_done + r.target;
+            r.evals.sort_by_key(|&(s, _)| s);
+            for (_, rec) in r.evals {
+                self.recorder.evals.push(rec);
+            }
+        }
+
+        // ---- outer sync over active workers, in trainer order -----------
+        let param_bytes = (self.engine.param_count() * 4) as u64;
+        for &ti in &live {
+            let members: Vec<(usize, usize)> = self.trainers[ti]
+                .workers
+                .iter()
+                .filter(|w| w.active)
+                .map(|w| (w.clock_slot, w.node))
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            let m_active = members.len();
+            let slots: Vec<usize> = members.iter().map(|&(s, _)| s).collect();
+            let t_start = slots
+                .iter()
+                .map(|&s| self.clock.time(s))
+                .fold(0.0_f64, f64::max);
+            let factor = self
+                .scenario
+                .min_bandwidth_factor(members.iter().map(|&(_, n)| n), t_start);
+            let comm_t = self.net.scaled(factor).allreduce_time(param_bytes, m_active);
+            let t_after = self.barrier_tracked(&slots, comm_t);
+            if m_active > 1 {
+                self.ledger.record(CommEvent {
+                    kind: CommKind::OuterSync,
+                    at_virtual_s: t_after,
+                    bytes: (2 * (m_active as u64 - 1)) * param_bytes,
+                    participants: m_active,
+                    at_inner_step: self.total_samples,
+                });
+            }
+            let tr = &mut self.trainers[ti];
+            tr.outer_step_active(&mut self.delta_scratch);
+        }
+
+        // end-of-outer-step evaluation on the trainer parameters
+        for &ti in &live {
+            if self.trainers[ti].alive {
+                let reached = self.evaluate_trainer_params(ti, outer_t)?;
+                hit_target |= reached;
+            }
+        }
+        Ok(hit_target)
+    }
+
+    /// Schedule the completion time of worker `wi`'s next inner step:
+    /// current clock + duration, stretched by scenario stragglers and
+    /// preemption windows. Accounts busy/preempted time.
+    fn schedule_step_end(&mut self, ti: usize, wi: usize, plan: &StepPlan) -> f64 {
+        let mut dt = self.step_duration(ti, wi, plan);
+        {
+            let w = &mut self.trainers[ti].workers[wi];
+            dt *= self.scenario.straggler_factor(&mut w.time_rng);
+        }
+        let (slot, node) = {
+            let w = &self.trainers[ti].workers[wi];
+            (w.clock_slot, w.node)
+        };
+        let start = self.clock.time(slot);
+        let (end, stall) = self.scenario.compute_span(node, start, dt);
+        self.busy_s[slot] += dt;
+        self.preempted_s[slot] += stall;
+        end
+    }
+
+    /// Churn bookkeeping at an outer boundary: workers on preempted nodes
+    /// sit the round out; returning workers catch their clocks up and the
+    /// trainer's shard is re-split among the currently active workers
+    /// (the `Shard::split` / `union_shards` machinery).
+    #[allow(clippy::needless_range_loop)] // body interleaves &mut self calls
+    fn apply_churn(&mut self) -> Result<()> {
+        if self.scenario.is_static() {
+            return Ok(());
+        }
+        for ti in 0..self.trainers.len() {
+            if !self.trainers[ti].alive {
+                continue;
+            }
+            // the trainer front: where its active cohort currently is; a
+            // fully-preempted trainer's clocks are frozen, so fall back
+            // to the global front or it would never see its window end
+            let mut t_now = self.trainers[ti]
+                .workers
+                .iter()
+                .map(|w| self.clock.time(w.clock_slot))
+                .fold(0.0f64, f64::max);
+            if !self.trainers[ti].workers.iter().any(|w| w.active) {
+                t_now = t_now.max(self.clock.max_time());
+            }
+            let changed = self.trainers[ti]
+                .workers
+                .iter()
+                .any(|w| self.scenario.node_available(w.node, t_now) != w.active);
+            if !changed {
+                continue;
+            }
+            for wi in 0..self.trainers[ti].workers.len() {
+                let (node, slot, was_active) = {
+                    let w = &self.trainers[ti].workers[wi];
+                    (w.node, w.clock_slot, w.active)
+                };
+                let avail = self.scenario.node_available(node, t_now);
+                if avail && !was_active {
+                    // rejoin: jump to the trainer front; the gap was
+                    // preemption downtime
+                    let cur = self.clock.time(slot);
+                    if t_now > cur {
+                        self.clock.advance_to(slot, t_now);
+                        self.preempted_s[slot] += t_now - cur;
+                    }
+                }
+                self.trainers[ti].workers[wi].active = avail;
+            }
+            let active_ix: Vec<usize> = self.trainers[ti]
+                .workers
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| w.active)
+                .map(|(i, _)| i)
+                .collect();
+            if active_ix.is_empty() {
+                crate::info!("trainer {ti}: all workers preempted; sitting this round out");
+                continue;
+            }
+            let parts = self.trainers[ti].shard.split(active_ix.len());
+            for (&w_ix, part) in active_ix.iter().zip(parts.into_iter()) {
+                self.trainers[ti].workers[w_ix].sampler = crate::data::BatchSampler::new(
+                    part,
+                    self.rng.fork(0xC4A5 ^ ((ti as u64) << 8) ^ (w_ix as u64)),
+                );
+            }
+            crate::debug!(
+                "trainer {ti}: churn re-shard over {} active workers at t={t_now:.2}s",
+                active_ix.len()
+            );
+        }
         Ok(())
     }
 
-    /// Evaluate worker-0 parameters of trainer `ti` (mid-outer-step eval,
-    /// the paper's every-10-steps cadence). Returns true if target reached.
-    fn evaluate(&mut self, ti: usize, outer_t: u64) -> Result<bool> {
-        let params_ptr: Vec<f32> = self.trainers[ti].workers[0].state.params.clone();
-        self.eval_params(&params_ptr, ti, outer_t)
-    }
-
-    /// Evaluate the trainer's outer parameters (post-sync).
-    fn evaluate_trainer_params(&mut self, ti: usize, outer_t: u64) -> Result<bool> {
-        let params: Vec<f32> = self.trainers[ti].params.clone();
-        self.eval_params(&params, ti, outer_t)
-    }
-
-    fn eval_params(&mut self, params: &[f32], ti: usize, outer_t: u64) -> Result<bool> {
-        let eb = self.engine.eval_batch();
-        let width = self.val_corpus.width();
-        let mut eval_rng = Rng::new(self.cfg.seed ^ 0xE7A1 ^ outer_t);
-        let mut loss_acc = 0.0;
-        let n = self.cfg.run.eval_batches.max(1);
-        let mut buf = TokenBatch::new(eb, width);
-        for _ in 0..n {
-            for row in 0..eb {
-                let ix = eval_rng.below(self.val_corpus.len() as u64) as usize;
-                buf.row_mut(row).copy_from_slice(self.val_corpus.sequence(ix));
-            }
-            loss_acc += self.engine.eval_loss(params, &buf)?;
+    /// MIT merge round (Algorithms 1-2), event flavour: after selection,
+    /// every active worker of the selected trainers posts a `MergeArrive`
+    /// at its current virtual time; the rendezvous completes when the
+    /// last arrival pops, and the transfer runs at the slowest
+    /// participating link's current bandwidth.
+    fn maybe_merge_event(&mut self, outer_t: u64) -> Result<()> {
+        let selected = self.select_merge();
+        if selected.len() < 2 {
+            return Ok(());
         }
-        let loss = loss_acc / n as f64;
-        let ppl = perplexity(loss);
-        let tr = &self.trainers[ti];
-        let vt = tr
-            .workers
+
+        let mut queue = EventQueue::new();
+        let mut slots: Vec<usize> = Vec::new();
+        let mut nodes: Vec<usize> = Vec::new();
+        for &id in &selected {
+            for (wi, w) in self.trainers[id].workers.iter().enumerate() {
+                if w.active {
+                    queue.push(
+                        self.clock.time(w.clock_slot),
+                        SimEvent::MergeArrive { trainer: id, worker: wi },
+                    );
+                    slots.push(w.clock_slot);
+                    nodes.push(w.node);
+                }
+            }
+        }
+        if slots.is_empty() {
+            // every selected trainer is fully preempted: fall back to the
+            // whole (frozen) cohort, like the lockstep barrier, instead of
+            // recording a merge at virtual time ~0
+            for &id in &selected {
+                for w in &self.trainers[id].workers {
+                    slots.push(w.clock_slot);
+                    nodes.push(w.node);
+                }
+            }
+        }
+        // drain the rendezvous (arrival markers); the barrier start is the
+        // last participant's clock
+        while queue.pop().is_some() {}
+        let t_all = slots
             .iter()
-            .map(|w| self.clock.time(w.clock_slot))
+            .map(|&s| self.clock.time(s))
             .fold(0.0f64, f64::max);
-        self.recorder.evals.push(EvalRecord {
-            global_step: tr.inner_steps_done,
-            outer_step: outer_t,
-            trainer: ti,
-            loss,
-            perplexity: ppl,
-            virtual_time_s: vt,
-            comm_count: self.ledger.count(),
-            comm_bytes: self.ledger.total_bytes(),
+
+        let param_bytes = (self.engine.param_count() * 4) as u64;
+        let bytes = (selected.len() as u64 - 1) * param_bytes;
+        let factor = self.scenario.min_bandwidth_factor(nodes.iter().copied(), t_all);
+        let t_after =
+            self.barrier_tracked(&slots, self.net.scaled(factor).transfer_time(bytes));
+        self.ledger.record(CommEvent {
+            kind: CommKind::Merge,
+            at_virtual_s: t_after,
+            bytes,
+            participants: selected.len(),
+            at_inner_step: self.total_samples,
         });
-        Ok(self.cfg.run.target_ppl > 0.0 && ppl <= self.cfg.run.target_ppl)
+        self.perform_merge(outer_t, &selected, t_after)
+    }
+
+    /// Per-worker utilization rows from the accumulated time accounting
+    /// (workers enumerate in clock-slot order).
+    fn utilization_table(&self) -> Vec<UtilRecord> {
+        let mut out = Vec::with_capacity(self.busy_s.len());
+        for tr in &self.trainers {
+            for (wi, w) in tr.workers.iter().enumerate() {
+                let s = w.clock_slot;
+                out.push(UtilRecord {
+                    trainer: tr.id,
+                    worker: wi,
+                    node: w.node,
+                    busy_s: self.busy_s[s],
+                    wait_s: self.wait_s[s],
+                    comm_s: self.comm_s[s],
+                    preempted_s: self.preempted_s[s],
+                });
+            }
+        }
+        out
+    }
+
+    /// Fill the recorder's per-worker utilization table.
+    fn record_utilization(&mut self) {
+        self.recorder.utilization = self.utilization_table();
     }
 
     /// Final summary.
     pub fn result(&self) -> RunResult {
+        let utils = self.utilization_table();
+        let total_idle_s: f64 = utils.iter().map(|u| u.idle_s()).sum();
+        let mean_utilization = if utils.is_empty() {
+            0.0
+        } else {
+            utils.iter().map(|u| u.utilization()).sum::<f64>() / utils.len() as f64
+        };
         RunResult {
             name: self.cfg.name.clone(),
             method: self.cfg.algo.method,
@@ -661,6 +1255,8 @@ impl Coordinator {
             comm_bytes: self.ledger.total_bytes(),
             virtual_time_s: self.clock.max_time(),
             trainers_left: self.live_trainers(),
+            total_idle_s,
+            mean_utilization,
             time_to_target: if self.cfg.run.target_ppl > 0.0 {
                 self.recorder.time_to_target(self.cfg.run.target_ppl)
             } else {
@@ -873,4 +1469,111 @@ mod tests {
         }
     }
 
+    #[test]
+    fn event_scheduler_matches_lockstep_exactly() {
+        // The regression anchor of the event-driven refactor: on a static
+        // cluster the two schedulers must produce bit-identical ledgers,
+        // records and summaries (see also tests/event_scheduler.rs for
+        // the config matrix).
+        let mut lock_cfg = mock_cfg();
+        lock_cfg.run.scheduler = crate::config::SchedulerKind::Lockstep;
+        let mut ev_cfg = mock_cfg();
+        ev_cfg.run.scheduler = crate::config::SchedulerKind::Event;
+
+        let run = |cfg: Config| {
+            let engine = crate::engine::build_engine(&cfg).unwrap();
+            let mut c = Coordinator::new(cfg, engine).unwrap();
+            let r = c.run().unwrap();
+            (r, c.recorder.clone(), c.ledger.clone())
+        };
+        let (ra, reca, leda) = run(lock_cfg);
+        let (rb, recb, ledb) = run(ev_cfg);
+
+        assert_eq!(leda.count(), ledb.count(), "ledger event count");
+        for (a, b) in leda.events.iter().zip(ledb.events.iter()) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.bytes, b.bytes);
+            assert_eq!(a.participants, b.participants);
+            assert_eq!(a.at_inner_step, b.at_inner_step);
+            assert_eq!(
+                a.at_virtual_s.to_bits(),
+                b.at_virtual_s.to_bits(),
+                "ledger timestamps must be bit-identical"
+            );
+        }
+        assert_eq!(ra.total_samples, rb.total_samples);
+        assert_eq!(ra.total_inner_steps, rb.total_inner_steps);
+        assert_eq!(ra.trainers_left, rb.trainers_left);
+        assert_eq!(ra.best_ppl.to_bits(), rb.best_ppl.to_bits());
+        assert_eq!(ra.final_ppl.to_bits(), rb.final_ppl.to_bits());
+        assert_eq!(ra.virtual_time_s.to_bits(), rb.virtual_time_s.to_bits());
+        assert_eq!(reca.steps.len(), recb.steps.len());
+        for (a, b) in reca.steps.iter().zip(recb.steps.iter()) {
+            assert_eq!((a.global_step, a.trainer, a.worker), (b.global_step, b.trainer, b.worker));
+            assert_eq!(a.requested_batch, b.requested_batch);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits());
+        }
+        assert_eq!(reca.evals.len(), recb.evals.len());
+        for (a, b) in reca.evals.iter().zip(recb.evals.iter()) {
+            assert_eq!(a.perplexity.to_bits(), b.perplexity.to_bits());
+            assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn utilization_is_recorded_and_sane() {
+        let (r, rec, _) = run_with(mock_cfg());
+        assert_eq!(rec.utilization.len(), 8, "4 trainers x 2 workers");
+        assert!(rec.utilization.iter().all(|u| u.busy_s > 0.0));
+        assert!(r.mean_utilization > 0.0 && r.mean_utilization <= 1.0);
+        assert!(r.total_idle_s >= 0.0);
+    }
+
+    #[test]
+    fn straggler_scenario_runs_and_stretches_time() {
+        let mk = |prob: f64| {
+            let mut cfg = mock_cfg();
+            cfg.run.scheduler = crate::config::SchedulerKind::Event;
+            cfg.cluster.scenario.straggler_prob = prob;
+            cfg.cluster.scenario.straggler_min = 2.0;
+            cfg.cluster.scenario.straggler_max = 3.0;
+            cfg
+        };
+        let (r0, _, _) = run_with(mk(0.0));
+        let (r1, _, _) = run_with(mk(0.5));
+        assert!(r1.best_ppl.is_finite());
+        assert!(
+            r1.virtual_time_s > r0.virtual_time_s,
+            "stragglers must stretch virtual time: {} vs {}",
+            r1.virtual_time_s,
+            r0.virtual_time_s
+        );
+        assert_eq!(
+            r0.total_samples, r1.total_samples,
+            "stragglers change time, not the sample schedule"
+        );
+    }
+
+    #[test]
+    fn churn_scenario_preempts_and_rejoins() {
+        let mut cfg = mock_cfg();
+        cfg.algo.merge.enabled = false; // isolate churn effects
+        cfg.run.scheduler = crate::config::SchedulerKind::Event;
+        // node 1 is down for a mid-run stretch of virtual time
+        cfg.cluster.scenario.churn.push(crate::config::ChurnWindow {
+            node: 1,
+            from_s: 0.3,
+            until_s: 1.2,
+        });
+        let engine = crate::engine::build_engine(&cfg).unwrap();
+        let mut c = Coordinator::new(cfg, engine).unwrap();
+        let r = c.run().unwrap();
+        assert!(r.best_ppl.is_finite());
+        c.record_utilization();
+        let preempted: f64 = c.recorder.utilization.iter().map(|u| u.preempted_s).sum();
+        assert!(preempted > 0.0, "preemption must be accounted");
+        // all workers are active again at the end (window long past)
+        assert!(c.trainers.iter().flat_map(|t| t.workers.iter()).all(|w| w.active));
+    }
 }

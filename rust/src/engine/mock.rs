@@ -73,7 +73,6 @@ pub struct MockEngine {
     eig: Vec<f32>,
     /// Optimum x*.
     xstar: Vec<f32>,
-    rng: Rng,
     adamw: AdamWParams,
     /// Scratch: chunk-mean gradients [C][d] (reused across steps).
     chunk_scratch: Vec<Vec<f32>>,
@@ -97,7 +96,6 @@ impl MockEngine {
             spec,
             eig,
             xstar,
-            rng,
             adamw: AdamWParams::default(),
             chunk_scratch: vec![vec![0.0; d]; MAX_CHUNKS],
             gbar_scratch: vec![0.0; d],
@@ -135,9 +133,16 @@ impl MockEngine {
         nsq
     }
 
-    /// Gradient + statistics shared by train_step / grad_step.
-    /// Fills gbar into `grad_out` and returns stats.
-    fn compute_grad(&mut self, params: &[f32], batch: usize, grad_out: &mut [f32]) -> StepStats {
+    /// Gradient + statistics shared by train_step / grad_step. Fills
+    /// gbar into `grad_out` and returns stats. All noise comes from the
+    /// caller's stream (see the engine module's stochasticity contract).
+    fn compute_grad(
+        &mut self,
+        params: &[f32],
+        batch: usize,
+        grad_out: &mut [f32],
+        noise: &mut Rng,
+    ) -> StepStats {
         let d = self.spec.dim;
         let chunks = batch.min(MAX_CHUNKS).max(1);
         let chunk_size = (batch as f64 / chunks as f64).max(1.0);
@@ -153,7 +158,7 @@ impl MockEngine {
         for c in 0..chunks {
             let buf = &mut self.chunk_scratch[c];
             for i in 0..d {
-                buf[i] = self.gbar_scratch[i] + self.rng.normal_ms(0.0, coord_std) as f32;
+                buf[i] = self.gbar_scratch[i] + noise.normal_ms(0.0, coord_std) as f32;
             }
         }
         // gbar = mean over chunks; s1 = ||gbar||^2
@@ -193,7 +198,7 @@ impl MockEngine {
         };
 
         // noisy loss observation: F(x) + noise/sqrt(b) * z
-        let loss_noise = self.rng.normal_ms(0.0, self.spec.noise * 0.05 / (batch as f64).sqrt());
+        let loss_noise = noise.normal_ms(0.0, self.spec.noise * 0.05 / (batch as f64).sqrt());
         let loss = self.true_loss(params) + loss_noise;
         let _ = true_nsq; // retained for debugging hooks
 
@@ -239,6 +244,7 @@ impl TrainEngine for MockEngine {
         state: &mut ModelState,
         lr: f64,
         batch: &TokenBatch,
+        noise: &mut Rng,
     ) -> Result<StepStats> {
         ensure!(
             LADDER.contains(&batch.batch),
@@ -246,7 +252,7 @@ impl TrainEngine for MockEngine {
             batch.batch
         );
         let mut grad = vec![0.0f32; self.spec.dim];
-        let stats = self.compute_grad(&state.params, batch.batch, &mut grad);
+        let stats = self.compute_grad(&state.params, batch.batch, &mut grad, noise);
         let lr = lr * self.spec.lr_scale;
         if self.spec.use_sgd {
             sgd_step(state, &grad, lr);
@@ -261,9 +267,10 @@ impl TrainEngine for MockEngine {
         params: &[f32],
         batch: &TokenBatch,
         grad_out: &mut [f32],
+        noise: &mut Rng,
     ) -> Result<StepStats> {
         ensure!(grad_out.len() == self.spec.dim, "grad_out length mismatch");
-        Ok(self.compute_grad(params, batch.batch, grad_out))
+        Ok(self.compute_grad(params, batch.batch, grad_out, noise))
     }
 
     fn apply_update(&mut self, state: &mut ModelState, lr: f64, grad: &[f32]) -> Result<()> {
@@ -276,10 +283,10 @@ impl TrainEngine for MockEngine {
         Ok(())
     }
 
-    fn eval_loss(&mut self, params: &[f32], batch: &TokenBatch) -> Result<f64> {
+    fn eval_loss(&mut self, params: &[f32], batch: &TokenBatch, noise: &mut Rng) -> Result<f64> {
         // Evaluation sees the true objective plus small observation noise.
-        let noise = self.rng.normal_ms(0.0, self.spec.noise * 0.01 / (batch.batch as f64).sqrt());
-        Ok(self.true_loss(params) + noise)
+        let obs = noise.normal_ms(0.0, self.spec.noise * 0.01 / (batch.batch as f64).sqrt());
+        Ok(self.true_loss(params) + obs)
     }
 }
 
@@ -298,10 +305,11 @@ mod tests {
     #[test]
     fn training_descends() {
         let mut e = engine();
+        let mut noise = Rng::new(100);
         let mut st = e.init_state(0);
         let l0 = e.true_loss(&st.params);
         for _ in 0..300 {
-            e.train_step(&mut st, 0.05, &batch(16)).unwrap();
+            e.train_step(&mut st, 0.05, &batch(16), &mut noise).unwrap();
         }
         let l1 = e.true_loss(&st.params);
         assert!(l1 < l0 * 0.5, "loss {l0} -> {l1} did not descend");
@@ -310,12 +318,13 @@ mod tests {
     #[test]
     fn sigma2_estimate_near_truth() {
         let mut e = engine();
+        let mut noise = Rng::new(101);
         let st = e.init_state(0);
         let mut grad = vec![0.0f32; 200];
         let mut acc = 0.0;
         let n = 200;
         for _ in 0..n {
-            let s = e.grad_step(&st.params, &batch(64), &mut grad).unwrap();
+            let s = e.grad_step(&st.params, &batch(64), &mut grad, &mut noise).unwrap();
             acc += s.sigma2;
         }
         let mean = acc / n as f64;
@@ -326,6 +335,7 @@ mod tests {
     #[test]
     fn grad_noise_shrinks_with_batch() {
         let mut e = engine();
+        let mut noise = Rng::new(102);
         let st = e.init_state(0);
         let mut grad = vec![0.0f32; 200];
         let mut var_small = 0.0;
@@ -333,13 +343,13 @@ mod tests {
         let mut tg = vec![0.0f32; 200];
         let true_nsq = e.true_grad(&st.params, &mut tg);
         for _ in 0..50 {
-            e.grad_step(&st.params, &batch(1), &mut grad).unwrap();
+            e.grad_step(&st.params, &batch(1), &mut grad, &mut noise).unwrap();
             var_small += grad
                 .iter()
                 .zip(tg.iter())
                 .map(|(a, b)| ((a - b) as f64).powi(2))
                 .sum::<f64>();
-            e.grad_step(&st.params, &batch(256), &mut grad).unwrap();
+            e.grad_step(&st.params, &batch(256), &mut grad, &mut noise).unwrap();
             var_big += grad
                 .iter()
                 .zip(tg.iter())
@@ -354,17 +364,24 @@ mod tests {
     }
 
     #[test]
-    fn deterministic_across_instances() {
+    fn deterministic_given_equal_noise_streams() {
         let mk = || MockEngine::new(MockSpec { seed: 11, ..MockSpec::default() });
         let mut a = mk();
         let mut b = mk();
+        let mut na = Rng::new(55);
+        let mut nb = Rng::new(55);
         let mut sa = a.init_state(2);
         let mut sb = b.init_state(2);
         assert_eq!(sa.params, sb.params);
-        let ra = a.train_step(&mut sa, 0.01, &batch(8)).unwrap();
-        let rb = b.train_step(&mut sb, 0.01, &batch(8)).unwrap();
+        let ra = a.train_step(&mut sa, 0.01, &batch(8), &mut na).unwrap();
+        let rb = b.train_step(&mut sb, 0.01, &batch(8), &mut nb).unwrap();
         assert_eq!(sa.params, sb.params);
         assert_eq!(ra.loss, rb.loss);
+        // distinct streams -> distinct noise -> distinct trajectories
+        let mut nc = Rng::new(56);
+        let mut sc = mk().init_state(2);
+        let rc = mk().train_step(&mut sc, 0.01, &batch(8), &mut nc).unwrap();
+        assert_ne!(ra.loss, rc.loss);
     }
 
     #[test]
@@ -380,11 +397,13 @@ mod tests {
         let spec = MockSpec { dim: 50, noise: 0.0, condition: 5.0, seed: 7, ..MockSpec::default() };
         let mut e1 = MockEngine::new(spec.clone());
         let mut e2 = MockEngine::new(spec);
+        let mut n1 = Rng::new(9);
+        let mut n2 = Rng::new(9);
         let mut s1 = e1.init_state(0);
         let mut s2 = e2.init_state(0);
-        e1.train_step(&mut s1, 0.01, &batch(4)).unwrap();
+        e1.train_step(&mut s1, 0.01, &batch(4), &mut n1).unwrap();
         let mut g = vec![0.0f32; 50];
-        e2.grad_step(&s2.params, &batch(4), &mut g).unwrap();
+        e2.grad_step(&s2.params, &batch(4), &mut g, &mut n2).unwrap();
         e2.apply_update(&mut s2, 0.01, &g).unwrap();
         for (a, b) in s1.params.iter().zip(s2.params.iter()) {
             assert!((a - b).abs() < 1e-6);
@@ -394,7 +413,8 @@ mod tests {
     #[test]
     fn rejects_unsupported_batch() {
         let mut e = engine();
+        let mut noise = Rng::new(0);
         let mut st = e.init_state(0);
-        assert!(e.train_step(&mut st, 0.01, &batch(3)).is_err());
+        assert!(e.train_step(&mut st, 0.01, &batch(3), &mut noise).is_err());
     }
 }

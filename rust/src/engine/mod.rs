@@ -10,6 +10,14 @@
 //! optimizer step at one of its supported batch sizes, (b) produce a raw
 //! gradient for SwitchMode accumulation, (c) commit an accumulated
 //! gradient, and (d) evaluate.
+//!
+//! Stochasticity contract (DESIGN.md §3.4): every stochastic engine call
+//! receives an explicit `noise: &mut Rng` stream and must draw *all* of
+//! its randomness from it. Deterministic engines (the PJRT transformer)
+//! ignore the stream. The coordinator hands each worker its own forked
+//! stream, which makes results independent of the order workers are
+//! scheduled in — the property that lets the event-driven scheduler
+//! reproduce the lockstep reference bit-for-bit on static clusters.
 
 pub mod mock;
 
@@ -17,6 +25,7 @@ pub use mock::{MockEngine, MockSpec};
 
 use crate::config::{Config, EngineConfig};
 use crate::data::TokenBatch;
+use crate::util::Rng;
 use anyhow::Result;
 
 /// Statistics returned by every gradient computation — the raw material
@@ -86,12 +95,14 @@ pub trait TrainEngine {
     fn eval_batch(&self) -> usize;
 
     /// One fused inner step (forward, backward, stats, AdamW update).
-    /// `batch.batch` must be a supported batch size.
+    /// `batch.batch` must be a supported batch size. All stochastic
+    /// draws must come from `noise` (see the module docs).
     fn train_step(
         &mut self,
         state: &mut ModelState,
         lr: f64,
         batch: &TokenBatch,
+        noise: &mut Rng,
     ) -> Result<StepStats>;
 
     /// Gradient + stats at max_batch without applying an update
@@ -101,13 +112,14 @@ pub trait TrainEngine {
         params: &[f32],
         batch: &TokenBatch,
         grad_out: &mut [f32],
+        noise: &mut Rng,
     ) -> Result<StepStats>;
 
     /// Commit an (accumulated) gradient with AdamW (SwitchMode commit).
     fn apply_update(&mut self, state: &mut ModelState, lr: f64, grad: &[f32]) -> Result<()>;
 
     /// Mean loss over one eval batch (batch.batch == eval_batch()).
-    fn eval_loss(&mut self, params: &[f32], batch: &TokenBatch) -> Result<f64>;
+    fn eval_loss(&mut self, params: &[f32], batch: &TokenBatch, noise: &mut Rng) -> Result<f64>;
 }
 
 /// Shared AdamW update used by the MockEngine (the XlaEngine's AdamW is

@@ -13,10 +13,68 @@
 //! * **L2/L1 (build-time Python)** — a MicroLlama-style transformer with a
 //!   Pallas flash-attention kernel and a fused gradient-moment kernel,
 //!   AOT-lowered to HLO text and executed through the PJRT runtime
-//!   ([`runtime`]).
+//!   ([`runtime`], behind the `xla` cargo feature).
 //!
-//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! ```text
+//!  examples / benches / CLI (main.rs)
+//!        │
+//!  ┌─────▼──────────────────────────────────────────────────────────┐
+//!  │ coordinator  — Algorithm 3 run loop (lockstep | event-driven)  │
+//!  │   batching   merge   outer   schedule   trainer                │
+//!  └─────┬──────────────────────────────┬───────────────────────────┘
+//!        │                              │
+//!  ┌─────▼───────────────────┐   ┌──────▼──────────────────────────┐
+//!  │ simulator               │   │ engine: TrainEngine             │
+//!  │   VirtualClock  ledger  │   │   MockEngine (pure Rust)        │
+//!  │   EventQueue  Scenario  │   │   XlaEngine (PJRT, `xla` feat.) │
+//!  └─────────────────────────┘   └─────┬───────────────────────────┘
+//!        data (synthetic Zipf corpus)  │  runtime/artifacts (AOT HLO)
+//! ```
+//!
+//! # Quickstart
+//!
+//! The smallest end-to-end run (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use adloco::config::presets;
+//! use adloco::coordinator::Coordinator;
+//! use adloco::engine::build_engine;
+//!
+//! let mut cfg = presets::mock_default();
+//! cfg.algo.outer_steps = 8;
+//! let engine = build_engine(&cfg)?;
+//! let mut coord = Coordinator::new(cfg, engine)?;
+//! let result = coord.run()?;
+//! println!("best ppl {:.3} over {} comms", result.best_ppl, result.comm_count);
+//! # anyhow::Ok(())
+//! ```
+//!
+//! For the paper's dynamic-workload story, run the churn + straggler
+//! scenario on the event-driven scheduler and read the per-worker
+//! utilization table it produces:
+//!
+//! ```no_run
+//! use adloco::config::presets;
+//! use adloco::coordinator::Coordinator;
+//! use adloco::engine::build_engine;
+//!
+//! let cfg = presets::hetero_dynamic(); // stragglers + churn + link shift
+//! let engine = build_engine(&cfg)?;
+//! let mut coord = Coordinator::new(cfg, engine)?;
+//! let result = coord.run()?;
+//! for u in &coord.recorder.utilization {
+//!     println!("trainer {} worker {} on node {}: {:.0}% busy, {:.2}s idle",
+//!         u.trainer, u.worker, u.node, u.utilization() * 100.0, u.idle_s());
+//! }
+//! println!("cluster idle total: {:.2}s", result.total_idle_s);
+//! # anyhow::Ok(())
+//! ```
+//!
+//! Or from the shell: `cargo run --release --example heterogeneous_cluster`.
+//!
+//! See DESIGN.md for the architecture (§3 covers the discrete-event
+//! clock, schedulers and scenarios; §4 the synthetic corpus) and
+//! EXPERIMENTS.md for the paper-vs-measured record and §Perf notes.
 
 pub mod batching;
 pub mod benchkit;

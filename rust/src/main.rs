@@ -97,6 +97,11 @@ fn print_result(r: &RunResult) {
     println!("  communications  : {} ({} bytes)", r.comm_count, r.comm_bytes);
     println!("  virtual time    : {:.3}s", r.virtual_time_s);
     println!("  trainers left   : {}", r.trainers_left);
+    println!(
+        "  utilization     : {:.1}% mean ({:.3}s idle across workers)",
+        r.mean_utilization * 100.0,
+        r.total_idle_s
+    );
     if let Some((step, t, comms)) = r.time_to_target {
         println!("  time-to-target  : step {step}, {t:.3}s, {comms} comms");
     }
@@ -155,6 +160,7 @@ fn cmd_calibrate(args: &cli::Args) -> Result<()> {
     let mut ys = Vec::new();
     println!("{:>8} {:>12}", "batch", "sec/step");
     let ladder: Vec<usize> = engine.supported_batches().to_vec();
+    let mut noise = adloco::util::Rng::new(7); // ignored by the PJRT engine
     for b in ladder {
         let mut state = engine.init_state(0);
         let mut batch = adloco::data::TokenBatch::new(b, width);
@@ -163,10 +169,10 @@ fn cmd_calibrate(args: &cli::Args) -> Result<()> {
             *t = rng.range(0, vocab) as i32;
         }
         // one warmup (compile) + timed reps
-        engine.train_step(&mut state, 1e-4, &batch)?;
+        engine.train_step(&mut state, 1e-4, &batch, &mut noise)?;
         let t0 = std::time::Instant::now();
         for _ in 0..reps {
-            engine.train_step(&mut state, 1e-4, &batch)?;
+            engine.train_step(&mut state, 1e-4, &batch, &mut noise)?;
         }
         let per = t0.elapsed().as_secs_f64() / reps as f64;
         println!("{b:>8} {per:>12.6}");

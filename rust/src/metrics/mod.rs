@@ -49,11 +49,47 @@ pub struct MergeRecord {
     pub virtual_time_s: f64,
 }
 
+/// End-of-run time budget of one worker: where its virtual seconds went
+/// while its trainer was alive. `busy_s` is compute, `wait_s` is barrier
+/// idling behind slower peers, `comm_s` is modeled transfer time, and
+/// `preempted_s` is churn downtime. The idle-time axis of the paper's
+/// dynamic-workload story ("increasing throughput and reducing idle
+/// time") is `wait_s + preempted_s`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UtilRecord {
+    pub trainer: usize,
+    pub worker: usize,
+    pub node: usize,
+    pub busy_s: f64,
+    pub wait_s: f64,
+    pub comm_s: f64,
+    pub preempted_s: f64,
+}
+
+impl UtilRecord {
+    pub fn idle_s(&self) -> f64 {
+        self.wait_s + self.preempted_s
+    }
+
+    /// Busy fraction of the worker's accounted time (1.0 for a worker
+    /// that never waited).
+    pub fn utilization(&self) -> f64 {
+        let total = self.busy_s + self.wait_s + self.comm_s + self.preempted_s;
+        if total > 0.0 {
+            self.busy_s / total
+        } else {
+            1.0
+        }
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct Recorder {
     pub steps: Vec<StepRecord>,
     pub evals: Vec<EvalRecord>,
     pub merges: Vec<MergeRecord>,
+    /// Per-worker utilization, filled once at the end of a run.
+    pub utilization: Vec<UtilRecord>,
     /// Free-form run annotations (config echo, engine info, ...).
     pub notes: Vec<(String, String)>,
 }
@@ -102,6 +138,22 @@ impl Recorder {
     /// (step, requested_batch) series — Theorem 1's E[b_k] observable.
     pub fn batch_growth_series(&self) -> Vec<(u64, usize)> {
         self.steps.iter().map(|s| (s.global_step, s.requested_batch)).collect()
+    }
+
+    /// Total idle seconds (barrier waits + churn downtime) across all
+    /// workers — the cluster-efficiency axis of the dynamic-workload
+    /// scenarios.
+    pub fn total_idle_s(&self) -> f64 {
+        self.utilization.iter().map(|u| u.idle_s()).sum()
+    }
+
+    /// Mean per-worker busy fraction (0 when no utilization was recorded).
+    pub fn mean_utilization(&self) -> f64 {
+        if self.utilization.is_empty() {
+            return 0.0;
+        }
+        self.utilization.iter().map(|u| u.utilization()).sum::<f64>()
+            / self.utilization.len() as f64
     }
 
     // ------------------------------------------------------------------
@@ -173,6 +225,20 @@ impl Recorder {
                 ("representative", JsonValue::num(m.representative as f64)),
                 ("trainers_left", JsonValue::num(m.trainers_left as f64)),
                 ("virtual_time_s", JsonValue::num(m.virtual_time_s)),
+            ]);
+            writeln!(w, "{}", line.to_string())?;
+        }
+        for u in &self.utilization {
+            let line = JsonValue::obj(vec![
+                ("type", JsonValue::str("utilization")),
+                ("trainer", JsonValue::num(u.trainer as f64)),
+                ("worker", JsonValue::num(u.worker as f64)),
+                ("node", JsonValue::num(u.node as f64)),
+                ("busy_s", JsonValue::num(u.busy_s)),
+                ("wait_s", JsonValue::num(u.wait_s)),
+                ("comm_s", JsonValue::num(u.comm_s)),
+                ("preempted_s", JsonValue::num(u.preempted_s)),
+                ("utilization", JsonValue::num(u.utilization())),
             ]);
             writeln!(w, "{}", line.to_string())?;
         }
@@ -274,6 +340,39 @@ mod tests {
         let csv_text = std::fs::read_to_string(&csv).unwrap();
         assert!(csv_text.starts_with("global_step,"));
         assert_eq!(csv_text.lines().count(), 2);
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let u = UtilRecord {
+            trainer: 0,
+            worker: 1,
+            node: 2,
+            busy_s: 6.0,
+            wait_s: 2.0,
+            comm_s: 1.0,
+            preempted_s: 1.0,
+        };
+        assert!((u.utilization() - 0.6).abs() < 1e-12);
+        assert!((u.idle_s() - 3.0).abs() < 1e-12);
+        let mut r = Recorder::new();
+        assert_eq!(r.mean_utilization(), 0.0);
+        r.utilization.push(u);
+        r.utilization.push(UtilRecord { busy_s: 4.0, wait_s: 0.0, ..u });
+        assert!((r.total_idle_s() - 4.0).abs() < 1e-12);
+        assert!((r.mean_utilization() - (0.6 + 4.0 / 6.0) / 2.0).abs() < 1e-12);
+
+        // utilization rows export as parseable jsonl
+        let dir = std::env::temp_dir().join("adloco_metrics_util");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("util.jsonl");
+        r.write_jsonl(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            let v = JsonValue::parse(line).unwrap();
+            assert_eq!(v.get("type").and_then(|t| t.as_str()), Some("utilization"));
+        }
     }
 
     #[test]

@@ -9,445 +9,560 @@
 //! The flat-parameter convention means every executable takes/returns the
 //! same `f32[P]` params/m/v vectors; `meta.json` (parsed in
 //! [`artifacts`]) describes the layout for tools that need named tensors.
+//!
+//! The PJRT path depends on the vendored `xla` bindings crate, which the
+//! offline crate set does not always provide. It is therefore gated
+//! behind the `xla` cargo feature: without it, [`XlaEngine::load`]
+//! returns a descriptive error and everything else in the crate (mock
+//! engine, simulator, coordinator, benches) works unchanged. The
+//! transformer itself is deterministic — it ignores the `noise` streams
+//! the [`TrainEngine`] contract threads through.
 
 pub mod artifacts;
 
 pub use artifacts::{ArtifactMeta, LadderRung, LayoutEntry};
 
-use crate::engine::{ModelState, StepStats, TrainEngine};
-use crate::data::TokenBatch;
-use anyhow::{anyhow, bail, Context, Result};
-use std::cell::RefCell;
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
-
-/// One compiled-on-demand HLO program.
-struct LazyExe {
-    path: PathBuf,
-    exe: Option<xla::PjRtLoadedExecutable>,
-}
-
-impl LazyExe {
-    fn new(path: PathBuf) -> Self {
-        LazyExe { path, exe: None }
-    }
-
-    fn get(&mut self, client: &xla::PjRtClient) -> Result<&xla::PjRtLoadedExecutable> {
-        if self.exe.is_none() {
-            let t0 = std::time::Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(
-                self.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .with_context(|| format!("parsing HLO text {}", self.path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", self.path.display()))?;
-            crate::debug!(
-                "compiled {} in {:?}",
-                self.path.file_name().unwrap_or_default().to_string_lossy(),
-                t0.elapsed()
-            );
-            self.exe = Some(exe);
-        }
-        Ok(self.exe.as_ref().unwrap())
-    }
-}
-
-/// PJRT-backed training engine over one artifact profile.
-pub struct XlaEngine {
-    meta: ArtifactMeta,
-    client: xla::PjRtClient,
-    train: RefCell<BTreeMap<usize, LazyExe>>,
-    grad: RefCell<BTreeMap<usize, LazyExe>>,
-    apply: RefCell<LazyExe>,
-    eval: RefCell<LazyExe>,
-    ladder: Vec<usize>,
-    init_params: Vec<f32>,
-    /// Wall-clock spent inside PJRT execute calls (perf accounting).
-    pub exec_time: RefCell<std::time::Duration>,
-    pub exec_calls: RefCell<u64>,
-}
-
-impl XlaEngine {
-    /// Load `artifacts_dir/profile` (meta.json + HLO files + init params).
-    pub fn load(artifacts_dir: &str, profile: &str) -> Result<XlaEngine> {
-        let dir = Path::new(artifacts_dir).join(profile);
-        let meta = ArtifactMeta::load(&dir.join("meta.json"))
-            .with_context(|| format!("loading artifact profile {}", dir.display()))?;
-
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
-
-        let mut train = BTreeMap::new();
-        for rung in &meta.ladder {
-            train.insert(rung.batch, LazyExe::new(dir.join(&rung.file)));
-        }
-        let mut grad = BTreeMap::new();
-        for rung in &meta.grad_steps {
-            grad.insert(rung.batch, LazyExe::new(dir.join(&rung.file)));
-        }
-        let ladder: Vec<usize> = meta.ladder.iter().map(|r| r.batch).collect();
-
-        let init_path = dir.join(&meta.init_params_file);
-        let raw = std::fs::read(&init_path)
-            .with_context(|| format!("reading {}", init_path.display()))?;
-        if raw.len() != meta.param_count * 4 {
-            bail!(
-                "init params size {} != 4 * param_count {}",
-                raw.len(),
-                meta.param_count
-            );
-        }
-        let init_params: Vec<f32> = raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-
-        Ok(XlaEngine {
-            client,
-            train: RefCell::new(train),
-            grad: RefCell::new(grad),
-            apply: RefCell::new(LazyExe::new(dir.join(&meta.apply_update_file))),
-            eval: RefCell::new(LazyExe::new(dir.join(&meta.eval_file))),
-            ladder,
-            init_params,
-            meta,
-            exec_time: RefCell::new(std::time::Duration::ZERO),
-            exec_calls: RefCell::new(0),
-        })
-    }
-
-    pub fn meta(&self) -> &ArtifactMeta {
-        &self.meta
-    }
-
-    /// Force-compile every program (used by benches to exclude compile
-    /// time from measurements).
-    pub fn warmup(&self) -> Result<()> {
-        for (_, exe) in self.train.borrow_mut().iter_mut() {
-            exe.get(&self.client)?;
-        }
-        for (_, exe) in self.grad.borrow_mut().iter_mut() {
-            exe.get(&self.client)?;
-        }
-        self.apply.borrow_mut().get(&self.client)?;
-        self.eval.borrow_mut().get(&self.client)?;
-        Ok(())
-    }
-
-    /// Upload a flat f32 slice straight into a device buffer — one copy,
-    /// no intermediate `Literal` materialization (perf: see
-    /// EXPERIMENTS.md §Perf; the params/m/v vectors dominate per-step
-    /// transfer volume).
-    fn upload_f32(&self, data: &[f32]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, &[data.len()], None)
-            .map_err(|e| anyhow!("upload f32[{}]: {e:?}", data.len()))
-    }
-
-    fn upload_tokens(&self, batch: &TokenBatch) -> Result<xla::PjRtBuffer> {
-        let want_width = self.meta.seq_len + 1;
-        if batch.width != want_width {
-            bail!("token width {} != seq_len+1 {}", batch.width, want_width);
-        }
-        self.client
-            .buffer_from_host_buffer(&batch.tokens, &[batch.batch, batch.width], None)
-            .map_err(|e| anyhow!("upload tokens: {e:?}"))
-    }
-
-    fn upload_scalar(&self, v: f32) -> Result<xla::PjRtBuffer> {
-        self.upload_f32(&[v])
-    }
-
-    fn execute(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        args: &[xla::PjRtBuffer],
-    ) -> Result<Vec<xla::Literal>> {
-        let t0 = std::time::Instant::now();
-        let result = exe
-            .execute_b::<&xla::PjRtBuffer>(&args.iter().collect::<Vec<_>>())
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        *self.exec_time.borrow_mut() += t0.elapsed();
-        *self.exec_calls.borrow_mut() += 1;
-        result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
-    }
-}
-
-fn read_f32_into(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
-    lit.copy_raw_to(out).map_err(|e| anyhow!("copy_raw_to: {e:?}"))
-}
-
-fn read_scalar(lit: &xla::Literal) -> Result<f64> {
-    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-    Ok(v.first().copied().unwrap_or(f32::NAN) as f64)
-}
-
-impl TrainEngine for XlaEngine {
-    fn name(&self) -> String {
-        format!(
-            "xla({}, P={}, seq={})",
-            self.meta.profile, self.meta.param_count, self.meta.seq_len
-        )
-    }
-
-    fn param_count(&self) -> usize {
-        self.meta.param_count
-    }
-
-    fn init_state(&self, seed: u64) -> ModelState {
-        // Base initialization comes from the artifact (deterministic,
-        // shared); per-trainer independence (MIT §4.1) is a small seeded
-        // jitter on top — same architecture, different basin.
-        let mut params = self.init_params.clone();
-        if seed != 0 {
-            let mut rng = crate::util::Rng::new(seed);
-            for p in params.iter_mut() {
-                *p += rng.normal_ms(0.0, 0.01) as f32;
-            }
-        }
-        ModelState::zeros_like(params)
-    }
-
-    fn supported_batches(&self) -> &[usize] {
-        &self.ladder
-    }
-
-    fn eval_batch(&self) -> usize {
-        self.meta.eval_batch
-    }
-
-    fn train_step(
-        &mut self,
-        state: &mut ModelState,
-        lr: f64,
-        batch: &TokenBatch,
-    ) -> Result<StepStats> {
-        let mut map = self.train.borrow_mut();
-        let lazy = map
-            .get_mut(&batch.batch)
-            .ok_or_else(|| anyhow!("no train executable for batch {}", batch.batch))?;
-        let exe_args = [
-            self.upload_f32(&state.params)?,
-            self.upload_f32(&state.m)?,
-            self.upload_f32(&state.v)?,
-            self.upload_scalar((state.step + 1) as f32)?,
-            self.upload_scalar(lr as f32)?,
-            self.upload_tokens(batch)?,
-        ];
-        let outs = {
-            let exe = lazy.get(&self.client)?;
-            self.execute(exe, &exe_args)?
-        };
-        if outs.len() != 7 {
-            bail!("train_step returned {} outputs, want 7", outs.len());
-        }
-        read_f32_into(&outs[0], &mut state.params)?;
-        read_f32_into(&outs[1], &mut state.m)?;
-        read_f32_into(&outs[2], &mut state.v)?;
-        state.step += 1;
-        Ok(StepStats {
-            loss: read_scalar(&outs[3])?,
-            grad_sq_norm: read_scalar(&outs[4])?,
-            sigma2: read_scalar(&outs[5])?,
-            ip_var: read_scalar(&outs[6])?,
-        })
-    }
-
-    fn grad_step(
-        &mut self,
-        params: &[f32],
-        batch: &TokenBatch,
-        grad_out: &mut [f32],
-    ) -> Result<StepStats> {
-        let exe_args = [self.upload_f32(params)?, self.upload_tokens(batch)?];
-        let outs = {
-            let mut map = self.grad.borrow_mut();
-            let lazy = map.get_mut(&batch.batch).ok_or_else(|| {
-                anyhow!("no grad_step executable for batch {}", batch.batch)
-            })?;
-            let exe = lazy.get(&self.client)?;
-            self.execute(exe, &exe_args)?
-        };
-        if outs.len() != 5 {
-            bail!("grad_step returned {} outputs, want 5", outs.len());
-        }
-        read_f32_into(&outs[0], grad_out)?;
-        Ok(StepStats {
-            loss: read_scalar(&outs[1])?,
-            grad_sq_norm: read_scalar(&outs[2])?,
-            sigma2: read_scalar(&outs[3])?,
-            ip_var: read_scalar(&outs[4])?,
-        })
-    }
-
-    fn apply_update(&mut self, state: &mut ModelState, lr: f64, grad: &[f32]) -> Result<()> {
-        let exe_args = [
-            self.upload_f32(&state.params)?,
-            self.upload_f32(&state.m)?,
-            self.upload_f32(&state.v)?,
-            self.upload_scalar((state.step + 1) as f32)?,
-            self.upload_scalar(lr as f32)?,
-            self.upload_f32(grad)?,
-        ];
-        let outs = {
-            let mut lazy = self.apply.borrow_mut();
-            let exe = lazy.get(&self.client)?;
-            self.execute(exe, &exe_args)?
-        };
-        if outs.len() != 3 {
-            bail!("apply_update returned {} outputs, want 3", outs.len());
-        }
-        read_f32_into(&outs[0], &mut state.params)?;
-        read_f32_into(&outs[1], &mut state.m)?;
-        read_f32_into(&outs[2], &mut state.v)?;
-        state.step += 1;
-        Ok(())
-    }
-
-    fn eval_loss(&mut self, params: &[f32], batch: &TokenBatch) -> Result<f64> {
-        if batch.batch != self.meta.eval_batch {
-            bail!(
-                "eval compiled for batch {}, got {}",
-                self.meta.eval_batch,
-                batch.batch
-            );
-        }
-        let exe_args = [self.upload_f32(params)?, self.upload_tokens(batch)?];
-        let outs = {
-            let mut lazy = self.eval.borrow_mut();
-            let exe = lazy.get(&self.client)?;
-            self.execute(exe, &exe_args)?
-        };
-        read_scalar(&outs[0])
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::artifacts::ArtifactMeta;
     use crate::data::TokenBatch;
+    use crate::engine::{ModelState, StepStats, TrainEngine};
     use crate::util::Rng;
+    use anyhow::{anyhow, bail, Context, Result};
+    use std::cell::RefCell;
+    use std::collections::BTreeMap;
+    use std::path::{Path, PathBuf};
 
-    fn artifacts_present() -> bool {
-        Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny/meta.json")).exists()
+    /// One compiled-on-demand HLO program.
+    struct LazyExe {
+        path: PathBuf,
+        exe: Option<xla::PjRtLoadedExecutable>,
     }
 
-    fn load_tiny() -> XlaEngine {
-        XlaEngine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"), "tiny").unwrap()
+    impl LazyExe {
+        fn new(path: PathBuf) -> Self {
+            LazyExe { path, exe: None }
+        }
+
+        fn get(&mut self, client: &xla::PjRtClient) -> Result<&xla::PjRtLoadedExecutable> {
+            if self.exe.is_none() {
+                let t0 = std::time::Instant::now();
+                let proto = xla::HloModuleProto::from_text_file(
+                    self.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .with_context(|| format!("parsing HLO text {}", self.path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", self.path.display()))?;
+                crate::debug!(
+                    "compiled {} in {:?}",
+                    self.path.file_name().unwrap_or_default().to_string_lossy(),
+                    t0.elapsed()
+                );
+                self.exe = Some(exe);
+            }
+            Ok(self.exe.as_ref().unwrap())
+        }
     }
 
-    fn random_batch(rng: &mut Rng, b: usize, width: usize, vocab: i64) -> TokenBatch {
-        let mut tb = TokenBatch::new(b, width);
-        for t in tb.tokens.iter_mut() {
-            *t = rng.range(0, vocab) as i32;
-        }
-        tb
+    /// PJRT-backed training engine over one artifact profile.
+    pub struct XlaEngine {
+        meta: ArtifactMeta,
+        client: xla::PjRtClient,
+        train: RefCell<BTreeMap<usize, LazyExe>>,
+        grad: RefCell<BTreeMap<usize, LazyExe>>,
+        apply: RefCell<LazyExe>,
+        eval: RefCell<LazyExe>,
+        ladder: Vec<usize>,
+        init_params: Vec<f32>,
+        /// Wall-clock spent inside PJRT execute calls (perf accounting).
+        pub exec_time: RefCell<std::time::Duration>,
+        pub exec_calls: RefCell<u64>,
     }
 
-    #[test]
-    fn loads_meta_and_params() {
-        if !artifacts_present() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
+    impl XlaEngine {
+        /// Load `artifacts_dir/profile` (meta.json + HLO files + init params).
+        pub fn load(artifacts_dir: &str, profile: &str) -> Result<XlaEngine> {
+            let dir = Path::new(artifacts_dir).join(profile);
+            let meta = ArtifactMeta::load(&dir.join("meta.json"))
+                .with_context(|| format!("loading artifact profile {}", dir.display()))?;
+
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+
+            let mut train = BTreeMap::new();
+            for rung in &meta.ladder {
+                train.insert(rung.batch, LazyExe::new(dir.join(&rung.file)));
+            }
+            let mut grad = BTreeMap::new();
+            for rung in &meta.grad_steps {
+                grad.insert(rung.batch, LazyExe::new(dir.join(&rung.file)));
+            }
+            let ladder: Vec<usize> = meta.ladder.iter().map(|r| r.batch).collect();
+
+            let init_path = dir.join(&meta.init_params_file);
+            let raw = std::fs::read(&init_path)
+                .with_context(|| format!("reading {}", init_path.display()))?;
+            if raw.len() != meta.param_count * 4 {
+                bail!(
+                    "init params size {} != 4 * param_count {}",
+                    raw.len(),
+                    meta.param_count
+                );
+            }
+            let init_params: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+
+            Ok(XlaEngine {
+                client,
+                train: RefCell::new(train),
+                grad: RefCell::new(grad),
+                apply: RefCell::new(LazyExe::new(dir.join(&meta.apply_update_file))),
+                eval: RefCell::new(LazyExe::new(dir.join(&meta.eval_file))),
+                ladder,
+                init_params,
+                meta,
+                exec_time: RefCell::new(std::time::Duration::ZERO),
+                exec_calls: RefCell::new(0),
+            })
         }
-        let e = load_tiny();
-        assert_eq!(e.param_count(), e.meta().param_count);
-        assert!(!e.supported_batches().is_empty());
-        let st = e.init_state(0);
-        assert_eq!(st.params.len(), e.param_count());
-        // jittered init differs from base but stays close
-        let st2 = e.init_state(42);
-        assert_ne!(st.params, st2.params);
+
+        pub fn meta(&self) -> &ArtifactMeta {
+            &self.meta
+        }
+
+        /// Force-compile every program (used by benches to exclude compile
+        /// time from measurements).
+        pub fn warmup(&self) -> Result<()> {
+            for (_, exe) in self.train.borrow_mut().iter_mut() {
+                exe.get(&self.client)?;
+            }
+            for (_, exe) in self.grad.borrow_mut().iter_mut() {
+                exe.get(&self.client)?;
+            }
+            self.apply.borrow_mut().get(&self.client)?;
+            self.eval.borrow_mut().get(&self.client)?;
+            Ok(())
+        }
+
+        /// Upload a flat f32 slice straight into a device buffer — one copy,
+        /// no intermediate `Literal` materialization (perf: see
+        /// EXPERIMENTS.md §Perf; the params/m/v vectors dominate per-step
+        /// transfer volume).
+        fn upload_f32(&self, data: &[f32]) -> Result<xla::PjRtBuffer> {
+            self.client
+                .buffer_from_host_buffer(data, &[data.len()], None)
+                .map_err(|e| anyhow!("upload f32[{}]: {e:?}", data.len()))
+        }
+
+        fn upload_tokens(&self, batch: &TokenBatch) -> Result<xla::PjRtBuffer> {
+            let want_width = self.meta.seq_len + 1;
+            if batch.width != want_width {
+                bail!("token width {} != seq_len+1 {}", batch.width, want_width);
+            }
+            self.client
+                .buffer_from_host_buffer(&batch.tokens, &[batch.batch, batch.width], None)
+                .map_err(|e| anyhow!("upload tokens: {e:?}"))
+        }
+
+        fn upload_scalar(&self, v: f32) -> Result<xla::PjRtBuffer> {
+            self.upload_f32(&[v])
+        }
+
+        fn execute(
+            &self,
+            exe: &xla::PjRtLoadedExecutable,
+            args: &[xla::PjRtBuffer],
+        ) -> Result<Vec<xla::Literal>> {
+            let t0 = std::time::Instant::now();
+            let result = exe
+                .execute_b::<&xla::PjRtBuffer>(&args.iter().collect::<Vec<_>>())
+                .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            *self.exec_time.borrow_mut() += t0.elapsed();
+            *self.exec_calls.borrow_mut() += 1;
+            result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+        }
     }
 
-    #[test]
-    fn train_step_descends_and_is_deterministic() {
-        if !artifacts_present() {
-            return;
-        }
-        let mut e = load_tiny();
-        let width = e.meta().seq_len + 1;
-        let mut rng = Rng::new(0);
-        let tb = random_batch(&mut rng, 4, width, 256);
-
-        let mut s1 = e.init_state(0);
-        let mut s2 = e.init_state(0);
-        let r1 = e.train_step(&mut s1, 4e-4, &tb).unwrap();
-        let r2 = e.train_step(&mut s2, 4e-4, &tb).unwrap();
-        assert_eq!(s1.params, s2.params, "train_step must be deterministic");
-        assert!((r1.loss - r2.loss).abs() < 1e-9);
-        assert!((r1.loss - (256f64).ln()).abs() < 1.0, "init loss ~ ln(vocab)");
-        assert!(r1.grad_sq_norm > 0.0);
-        assert!(r1.sigma2 > 0.0);
-
-        // overfit a single batch for a few steps
-        let first = r1.loss;
-        let mut last = first;
-        for _ in 0..10 {
-            last = e.train_step(&mut s1, 1e-3, &tb).unwrap().loss;
-        }
-        assert!(last < first, "loss {first} -> {last}");
+    fn read_f32_into(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
+        lit.copy_raw_to(out).map_err(|e| anyhow!("copy_raw_to: {e:?}"))
     }
 
-    #[test]
-    fn grad_apply_matches_train_step() {
-        if !artifacts_present() {
-            return;
-        }
-        let mut e = load_tiny();
-        let width = e.meta().seq_len + 1;
-        let bmax = e.meta().grad_step_batch;
-        let mut rng = Rng::new(1);
-        let tb = random_batch(&mut rng, bmax, width, 256);
-
-        let mut s1 = e.init_state(0);
-        let mut s2 = e.init_state(0);
-        let r1 = e.train_step(&mut s1, 4e-4, &tb).unwrap();
-
-        let mut grad = vec![0.0f32; e.param_count()];
-        let r2 = e.grad_step(&s2.params, &tb, &mut grad).unwrap();
-        e.apply_update(&mut s2, 4e-4, &grad).unwrap();
-
-        assert!((r1.loss - r2.loss).abs() < 1e-5);
-        let max_diff = s1
-            .params
-            .iter()
-            .zip(s2.params.iter())
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0f32, f32::max);
-        assert!(max_diff < 1e-5, "grad+apply vs train_step diff {max_diff}");
+    fn read_scalar(lit: &xla::Literal) -> Result<f64> {
+        let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(v.first().copied().unwrap_or(f32::NAN) as f64)
     }
 
-    #[test]
-    fn eval_loss_sane() {
-        if !artifacts_present() {
-            return;
+    impl TrainEngine for XlaEngine {
+        fn name(&self) -> String {
+            format!(
+                "xla({}, P={}, seq={})",
+                self.meta.profile, self.meta.param_count, self.meta.seq_len
+            )
         }
-        let mut e = load_tiny();
-        let width = e.meta().seq_len + 1;
-        let eb = e.eval_batch();
-        let mut rng = Rng::new(2);
-        let tb = random_batch(&mut rng, eb, width, 256);
-        let st = e.init_state(0);
-        let loss = e.eval_loss(&st.params, &tb).unwrap();
-        assert!((loss - (256f64).ln()).abs() < 1.0, "eval loss {loss}");
+
+        fn param_count(&self) -> usize {
+            self.meta.param_count
+        }
+
+        fn init_state(&self, seed: u64) -> ModelState {
+            // Base initialization comes from the artifact (deterministic,
+            // shared); per-trainer independence (MIT §4.1) is a small seeded
+            // jitter on top — same architecture, different basin.
+            let mut params = self.init_params.clone();
+            if seed != 0 {
+                let mut rng = crate::util::Rng::new(seed);
+                for p in params.iter_mut() {
+                    *p += rng.normal_ms(0.0, 0.01) as f32;
+                }
+            }
+            ModelState::zeros_like(params)
+        }
+
+        fn supported_batches(&self) -> &[usize] {
+            &self.ladder
+        }
+
+        fn eval_batch(&self) -> usize {
+            self.meta.eval_batch
+        }
+
+        fn train_step(
+            &mut self,
+            state: &mut ModelState,
+            lr: f64,
+            batch: &TokenBatch,
+            _noise: &mut Rng, // PJRT programs are deterministic
+        ) -> Result<StepStats> {
+            let mut map = self.train.borrow_mut();
+            let lazy = map
+                .get_mut(&batch.batch)
+                .ok_or_else(|| anyhow!("no train executable for batch {}", batch.batch))?;
+            let exe_args = [
+                self.upload_f32(&state.params)?,
+                self.upload_f32(&state.m)?,
+                self.upload_f32(&state.v)?,
+                self.upload_scalar((state.step + 1) as f32)?,
+                self.upload_scalar(lr as f32)?,
+                self.upload_tokens(batch)?,
+            ];
+            let outs = {
+                let exe = lazy.get(&self.client)?;
+                self.execute(exe, &exe_args)?
+            };
+            if outs.len() != 7 {
+                bail!("train_step returned {} outputs, want 7", outs.len());
+            }
+            read_f32_into(&outs[0], &mut state.params)?;
+            read_f32_into(&outs[1], &mut state.m)?;
+            read_f32_into(&outs[2], &mut state.v)?;
+            state.step += 1;
+            Ok(StepStats {
+                loss: read_scalar(&outs[3])?,
+                grad_sq_norm: read_scalar(&outs[4])?,
+                sigma2: read_scalar(&outs[5])?,
+                ip_var: read_scalar(&outs[6])?,
+            })
+        }
+
+        fn grad_step(
+            &mut self,
+            params: &[f32],
+            batch: &TokenBatch,
+            grad_out: &mut [f32],
+            _noise: &mut Rng,
+        ) -> Result<StepStats> {
+            let exe_args = [self.upload_f32(params)?, self.upload_tokens(batch)?];
+            let outs = {
+                let mut map = self.grad.borrow_mut();
+                let lazy = map.get_mut(&batch.batch).ok_or_else(|| {
+                    anyhow!("no grad_step executable for batch {}", batch.batch)
+                })?;
+                let exe = lazy.get(&self.client)?;
+                self.execute(exe, &exe_args)?
+            };
+            if outs.len() != 5 {
+                bail!("grad_step returned {} outputs, want 5", outs.len());
+            }
+            read_f32_into(&outs[0], grad_out)?;
+            Ok(StepStats {
+                loss: read_scalar(&outs[1])?,
+                grad_sq_norm: read_scalar(&outs[2])?,
+                sigma2: read_scalar(&outs[3])?,
+                ip_var: read_scalar(&outs[4])?,
+            })
+        }
+
+        fn apply_update(&mut self, state: &mut ModelState, lr: f64, grad: &[f32]) -> Result<()> {
+            let exe_args = [
+                self.upload_f32(&state.params)?,
+                self.upload_f32(&state.m)?,
+                self.upload_f32(&state.v)?,
+                self.upload_scalar((state.step + 1) as f32)?,
+                self.upload_scalar(lr as f32)?,
+                self.upload_f32(grad)?,
+            ];
+            let outs = {
+                let mut lazy = self.apply.borrow_mut();
+                let exe = lazy.get(&self.client)?;
+                self.execute(exe, &exe_args)?
+            };
+            if outs.len() != 3 {
+                bail!("apply_update returned {} outputs, want 3", outs.len());
+            }
+            read_f32_into(&outs[0], &mut state.params)?;
+            read_f32_into(&outs[1], &mut state.m)?;
+            read_f32_into(&outs[2], &mut state.v)?;
+            state.step += 1;
+            Ok(())
+        }
+
+        fn eval_loss(
+            &mut self,
+            params: &[f32],
+            batch: &TokenBatch,
+            _noise: &mut Rng,
+        ) -> Result<f64> {
+            if batch.batch != self.meta.eval_batch {
+                bail!(
+                    "eval compiled for batch {}, got {}",
+                    self.meta.eval_batch,
+                    batch.batch
+                );
+            }
+            let exe_args = [self.upload_f32(params)?, self.upload_tokens(batch)?];
+            let outs = {
+                let mut lazy = self.eval.borrow_mut();
+                let exe = lazy.get(&self.client)?;
+                self.execute(exe, &exe_args)?
+            };
+            read_scalar(&outs[0])
+        }
     }
 
-    #[test]
-    fn rejects_wrong_shapes() {
-        if !artifacts_present() {
-            return;
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use crate::data::TokenBatch;
+        use crate::util::Rng;
+
+        fn artifacts_present() -> bool {
+            Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny/meta.json")).exists()
         }
-        let mut e = load_tiny();
-        let mut st = e.init_state(0);
-        // unsupported batch size
-        let tb = TokenBatch::new(3, e.meta().seq_len + 1);
-        assert!(e.train_step(&mut st, 1e-3, &tb).is_err());
-        // wrong token width
-        let tb = TokenBatch::new(4, 5);
-        assert!(e.train_step(&mut st, 1e-3, &tb).is_err());
+
+        fn load_tiny() -> XlaEngine {
+            XlaEngine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"), "tiny").unwrap()
+        }
+
+        fn random_batch(rng: &mut Rng, b: usize, width: usize, vocab: i64) -> TokenBatch {
+            let mut tb = TokenBatch::new(b, width);
+            for t in tb.tokens.iter_mut() {
+                *t = rng.range(0, vocab) as i32;
+            }
+            tb
+        }
+
+        #[test]
+        fn loads_meta_and_params() {
+            if !artifacts_present() {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+            let e = load_tiny();
+            assert_eq!(e.param_count(), e.meta().param_count);
+            assert!(!e.supported_batches().is_empty());
+            let st = e.init_state(0);
+            assert_eq!(st.params.len(), e.param_count());
+            // jittered init differs from base but stays close
+            let st2 = e.init_state(42);
+            assert_ne!(st.params, st2.params);
+        }
+
+        #[test]
+        fn train_step_descends_and_is_deterministic() {
+            if !artifacts_present() {
+                return;
+            }
+            let mut e = load_tiny();
+            let width = e.meta().seq_len + 1;
+            let mut rng = Rng::new(0);
+            let mut noise = Rng::new(1);
+            let tb = random_batch(&mut rng, 4, width, 256);
+
+            let mut s1 = e.init_state(0);
+            let mut s2 = e.init_state(0);
+            let r1 = e.train_step(&mut s1, 4e-4, &tb, &mut noise).unwrap();
+            let r2 = e.train_step(&mut s2, 4e-4, &tb, &mut noise).unwrap();
+            assert_eq!(s1.params, s2.params, "train_step must be deterministic");
+            assert!((r1.loss - r2.loss).abs() < 1e-9);
+            assert!((r1.loss - (256f64).ln()).abs() < 1.0, "init loss ~ ln(vocab)");
+            assert!(r1.grad_sq_norm > 0.0);
+            assert!(r1.sigma2 > 0.0);
+
+            // overfit a single batch for a few steps
+            let first = r1.loss;
+            let mut last = first;
+            for _ in 0..10 {
+                last = e.train_step(&mut s1, 1e-3, &tb, &mut noise).unwrap().loss;
+            }
+            assert!(last < first, "loss {first} -> {last}");
+        }
+
+        #[test]
+        fn grad_apply_matches_train_step() {
+            if !artifacts_present() {
+                return;
+            }
+            let mut e = load_tiny();
+            let width = e.meta().seq_len + 1;
+            let bmax = e.meta().grad_step_batch;
+            let mut rng = Rng::new(1);
+            let mut noise = Rng::new(2);
+            let tb = random_batch(&mut rng, bmax, width, 256);
+
+            let mut s1 = e.init_state(0);
+            let mut s2 = e.init_state(0);
+            let r1 = e.train_step(&mut s1, 4e-4, &tb, &mut noise).unwrap();
+
+            let mut grad = vec![0.0f32; e.param_count()];
+            let r2 = e.grad_step(&s2.params, &tb, &mut grad, &mut noise).unwrap();
+            e.apply_update(&mut s2, 4e-4, &grad).unwrap();
+
+            assert!((r1.loss - r2.loss).abs() < 1e-5);
+            let max_diff = s1
+                .params
+                .iter()
+                .zip(s2.params.iter())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_diff < 1e-5, "grad+apply vs train_step diff {max_diff}");
+        }
+
+        #[test]
+        fn eval_loss_sane() {
+            if !artifacts_present() {
+                return;
+            }
+            let mut e = load_tiny();
+            let width = e.meta().seq_len + 1;
+            let eb = e.eval_batch();
+            let mut rng = Rng::new(2);
+            let mut noise = Rng::new(3);
+            let tb = random_batch(&mut rng, eb, width, 256);
+            let st = e.init_state(0);
+            let loss = e.eval_loss(&st.params, &tb, &mut noise).unwrap();
+            assert!((loss - (256f64).ln()).abs() < 1.0, "eval loss {loss}");
+        }
+
+        #[test]
+        fn rejects_wrong_shapes() {
+            if !artifacts_present() {
+                return;
+            }
+            let mut e = load_tiny();
+            let mut noise = Rng::new(0);
+            let mut st = e.init_state(0);
+            // unsupported batch size
+            let tb = TokenBatch::new(3, e.meta().seq_len + 1);
+            assert!(e.train_step(&mut st, 1e-3, &tb, &mut noise).is_err());
+            // wrong token width
+            let tb = TokenBatch::new(4, 5);
+            assert!(e.train_step(&mut st, 1e-3, &tb, &mut noise).is_err());
+        }
     }
 }
+
+#[cfg(feature = "xla")]
+pub use pjrt::XlaEngine;
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use super::artifacts::ArtifactMeta;
+    use crate::data::TokenBatch;
+    use crate::engine::{ModelState, StepStats, TrainEngine};
+    use crate::util::Rng;
+    use anyhow::{bail, Result};
+
+    /// Placeholder for the PJRT engine when the crate is built without the
+    /// `xla` feature. [`XlaEngine::load`] always errors, so no instance
+    /// ever exists and the trait methods are unreachable.
+    pub struct XlaEngine {
+        never: std::convert::Infallible,
+    }
+
+    impl XlaEngine {
+        pub fn load(artifacts_dir: &str, profile: &str) -> Result<XlaEngine> {
+            bail!(
+                "cannot load artifact profile {profile:?} from {artifacts_dir:?}: \
+                 adloco was built without the `xla` feature, so the PJRT engine \
+                 is unavailable (use a mock preset, or rebuild with \
+                 `--features xla` and the vendored xla dependency)"
+            )
+        }
+
+        pub fn meta(&self) -> &ArtifactMeta {
+            match self.never {}
+        }
+
+        pub fn warmup(&self) -> Result<()> {
+            match self.never {}
+        }
+    }
+
+    impl TrainEngine for XlaEngine {
+        fn name(&self) -> String {
+            match self.never {}
+        }
+
+        fn param_count(&self) -> usize {
+            match self.never {}
+        }
+
+        fn init_state(&self, _seed: u64) -> ModelState {
+            match self.never {}
+        }
+
+        fn supported_batches(&self) -> &[usize] {
+            match self.never {}
+        }
+
+        fn eval_batch(&self) -> usize {
+            match self.never {}
+        }
+
+        fn train_step(
+            &mut self,
+            _state: &mut ModelState,
+            _lr: f64,
+            _batch: &TokenBatch,
+            _noise: &mut Rng,
+        ) -> Result<StepStats> {
+            match self.never {}
+        }
+
+        fn grad_step(
+            &mut self,
+            _params: &[f32],
+            _batch: &TokenBatch,
+            _grad_out: &mut [f32],
+            _noise: &mut Rng,
+        ) -> Result<StepStats> {
+            match self.never {}
+        }
+
+        fn apply_update(&mut self, _state: &mut ModelState, _lr: f64, _grad: &[f32]) -> Result<()> {
+            match self.never {}
+        }
+
+        fn eval_loss(&mut self, _params: &[f32], _batch: &TokenBatch, _noise: &mut Rng) -> Result<f64> {
+            match self.never {}
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaEngine;

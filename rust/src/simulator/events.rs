@@ -1,0 +1,176 @@
+//! Discrete-event machinery for the simulated cluster (DESIGN.md §3.2).
+//!
+//! The event-driven scheduler replaces the round-lockstep worker walk with
+//! a priority queue of timestamped events: every worker posts a
+//! [`SimEvent::StepDone`] when its current inner step completes, and
+//! rendezvous points (outer sync, trainer merge) are announced via
+//! [`SimEvent::SyncArrive`] / [`SimEvent::MergeArrive`]. The coordinator
+//! pops events in virtual-time order, so a fast worker's step 7 can be
+//! processed before a straggler's step 2 — which is what lets dynamic
+//! workload scenarios (stragglers, churn, time-varying links) be expressed
+//! at all.
+//!
+//! Determinism: the queue orders by `(time, push sequence)`. Ties at the
+//! same virtual timestamp pop in push order, so a run is a pure function
+//! of the config seed regardless of platform or hash-map iteration order.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happened, to whom (indices are coordinator-level: trainer id and
+/// worker position within that trainer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimEvent {
+    /// Worker `worker` of trainer `trainer` finished inner step `step`
+    /// (1-based within the current outer step).
+    StepDone { trainer: usize, worker: usize, step: u64 },
+    /// Worker finished its inner loop and arrived at the outer-sync
+    /// barrier of its trainer.
+    SyncArrive { trainer: usize, worker: usize },
+    /// Worker arrived at a cross-trainer merge rendezvous.
+    MergeArrive { trainer: usize, worker: usize },
+}
+
+/// One scheduled event: virtual timestamp plus FIFO tie-break.
+#[derive(Clone, Copy, Debug)]
+struct Scheduled {
+    at_s: f64,
+    seq: u64,
+    ev: SimEvent,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq && self.at_s.total_cmp(&other.at_s) == Ordering::Equal
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    // BinaryHeap is a max-heap; invert so the EARLIEST (time, seq) pops
+    // first. NaN timestamps are rejected at push, so total_cmp is a
+    // plain numeric order here.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .at_s
+            .total_cmp(&self.at_s)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic min-priority event queue over virtual time.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `ev` at virtual second `at_s`.
+    pub fn push(&mut self, at_s: f64, ev: SimEvent) {
+        assert!(at_s.is_finite(), "event time must be finite, got {at_s}");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Scheduled { at_s, seq, ev });
+    }
+
+    /// Earliest event's timestamp without removing it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|s| s.at_s)
+    }
+
+    /// Remove and return the earliest `(time, event)`.
+    pub fn pop(&mut self) -> Option<(f64, SimEvent)> {
+        self.heap.pop().map(|s| (s.at_s, s.ev))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(t: usize, w: usize, s: u64) -> SimEvent {
+        SimEvent::StepDone { trainer: t, worker: w, step: s }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, step(0, 0, 3));
+        q.push(1.0, step(0, 0, 1));
+        q.push(2.0, step(0, 0, 2));
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|(t, _)| t).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ties_pop_in_push_order() {
+        let mut q = EventQueue::new();
+        for w in 0..5 {
+            q.push(1.0, step(0, w, 1));
+        }
+        let workers: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|(_, ev)| match ev {
+                SimEvent::StepDone { worker, .. } => worker,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(workers, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn interleaves_time_and_sequence() {
+        let mut q = EventQueue::new();
+        q.push(2.0, step(0, 0, 1)); // seq 0
+        q.push(1.0, step(1, 0, 1)); // seq 1
+        q.push(2.0, step(2, 0, 1)); // seq 2
+        q.push(0.5, step(3, 0, 1)); // seq 3
+        let trainers: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|(_, ev)| match ev {
+                SimEvent::StepDone { trainer, .. } => trainer,
+                _ => unreachable!(),
+            })
+            .collect();
+        // 0.5 -> trainer 3, 1.0 -> trainer 1, then the 2.0 tie in push order
+        assert_eq!(trainers, vec![3, 1, 0, 2]);
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = EventQueue::new();
+        assert!(q.peek_time().is_none());
+        q.push(4.0, SimEvent::SyncArrive { trainer: 0, worker: 0 });
+        q.push(2.0, SimEvent::MergeArrive { trainer: 1, worker: 1 });
+        assert_eq!(q.peek_time(), Some(2.0));
+        let (t, ev) = q.pop().unwrap();
+        assert_eq!(t, 2.0);
+        assert_eq!(ev, SimEvent::MergeArrive { trainer: 1, worker: 1 });
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nan_times() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, step(0, 0, 1));
+    }
+}

@@ -1,5 +1,6 @@
 //! Simulated heterogeneous cluster: compute-time model, network model,
-//! per-worker virtual clocks, and the communication ledger.
+//! per-worker virtual clocks, the discrete-event queue, dynamic-workload
+//! scenarios, and the communication ledger.
 //!
 //! The paper simulated its 4-GPU cluster by running trainer threads on one
 //! A100 and measuring wall-clock. We replace thread interleaving with a
@@ -8,6 +9,18 @@
 //! synchronization points advance every participant to the barrier maximum
 //! plus the modeled transfer time. This is deterministic, reproducible,
 //! and lets the theory benches run 10^5 steps in milliseconds.
+//!
+//! Scheduling comes in two flavours (DESIGN.md §3.1–§3.2): the retained
+//! *lockstep* reference walk, and the *event-driven* scheduler built on
+//! [`events::EventQueue`], which consumes `StepDone` / `SyncArrive` /
+//! `MergeArrive` events in virtual-time order and is the substrate for
+//! the [`scenario`] dynamic workloads (stragglers, churn, link shifts).
+
+pub mod events;
+pub mod scenario;
+
+pub use events::{EventQueue, SimEvent};
+pub use scenario::Scenario;
 
 use crate::config::ClusterConfig;
 
@@ -41,6 +54,16 @@ impl NetworkModel {
     /// One point-to-point transfer of `bytes`.
     pub fn transfer_time(&self, bytes: u64) -> f64 {
         self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// The same link with its bandwidth scaled by `factor` — how the
+    /// scenario layer's time-varying links enter a sync's cost. A factor
+    /// of exactly 1.0 reproduces `self` bit-for-bit.
+    pub fn scaled(&self, factor: f64) -> NetworkModel {
+        NetworkModel {
+            latency_s: self.latency_s,
+            bandwidth_bps: self.bandwidth_bps * factor,
+        }
     }
 
     /// Parameter-averaging round among `m` participants of `bytes` each.
@@ -137,6 +160,15 @@ impl VirtualClock {
     pub fn advance(&mut self, w: usize, dt: f64) {
         debug_assert!(dt >= 0.0);
         self.times[w] += dt;
+    }
+
+    /// Jump worker `w` forward to absolute time `t` (no-op if already
+    /// past). The event scheduler assigns pop timestamps directly so a
+    /// worker's clock matches the lockstep `+= dt` chain bit-for-bit.
+    pub fn advance_to(&mut self, w: usize, t: f64) {
+        if t > self.times[w] {
+            self.times[w] = t;
+        }
     }
 
     /// Barrier across a subset: all members jump to the max member time,

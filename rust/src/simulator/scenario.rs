@@ -1,0 +1,284 @@
+//! Dynamic-workload scenarios for the simulated cluster (DESIGN.md §3.3).
+//!
+//! The paper motivates AdLoCo by DiLoCo-style methods "fail[ing] to fully
+//! exploit computational clusters under dynamic workloads". A [`Scenario`]
+//! is the simulator's model of such a workload, compiled from the
+//! `cluster.scenario` config block:
+//!
+//! * **stragglers** — each inner step's compute time is multiplied, with
+//!   probability `straggler_prob`, by a uniform draw from
+//!   `[straggler_min, straggler_max]`. Draws come from the per-worker
+//!   time stream forked off the run RNG, so runs stay bit-reproducible.
+//! * **node churn** — nodes are preempted over `[from_s, until_s)`
+//!   windows of virtual time. Workers on a down node sit out the outer
+//!   steps that start inside the window (their shard is re-split among
+//!   the trainer's remaining workers) and rejoin afterwards.
+//! * **time-varying links** — per-node bandwidth factors change at
+//!   scheduled virtual times; a sync's transfer time uses the slowest
+//!   participating link at barrier time.
+//!
+//! A default (all-empty) scenario is *static*: every query degenerates to
+//! the constant-cluster answer and the event-driven scheduler reproduces
+//! the lockstep ledger bit-for-bit (see `tests/event_scheduler.rs`).
+
+use crate::config::ScenarioConfig;
+use crate::util::Rng;
+
+/// Compiled scenario: per-node down windows (sorted, coalesced) and
+/// per-node bandwidth shift timelines (sorted).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    straggler_prob: f64,
+    straggler_min: f64,
+    straggler_max: f64,
+    /// node -> sorted disjoint (from_s, until_s) preemption windows.
+    windows: Vec<Vec<(f64, f64)>>,
+    /// node -> sorted (at_s, bandwidth_factor) steps; factor 1.0 before
+    /// the first entry.
+    shifts: Vec<Vec<(f64, f64)>>,
+}
+
+impl Scenario {
+    /// Compile a config block for a cluster of `nodes` nodes. Entries
+    /// referring to out-of-range nodes are rejected by config validation
+    /// before this is reached.
+    pub fn compile(cfg: &ScenarioConfig, nodes: usize) -> Scenario {
+        let mut windows: Vec<Vec<(f64, f64)>> = vec![Vec::new(); nodes];
+        for w in &cfg.churn {
+            if w.node < nodes && w.until_s > w.from_s {
+                windows[w.node].push((w.from_s, w.until_s));
+            }
+        }
+        for wins in &mut windows {
+            wins.sort_by(|a, b| a.0.total_cmp(&b.0));
+            // coalesce overlapping/adjacent windows
+            let mut merged: Vec<(f64, f64)> = Vec::with_capacity(wins.len());
+            for &(from, until) in wins.iter() {
+                match merged.last_mut() {
+                    Some(last) if from <= last.1 => last.1 = last.1.max(until),
+                    _ => merged.push((from, until)),
+                }
+            }
+            *wins = merged;
+        }
+        let mut shifts: Vec<Vec<(f64, f64)>> = vec![Vec::new(); nodes];
+        for s in &cfg.link_shifts {
+            if s.node < nodes && s.bandwidth_factor > 0.0 {
+                shifts[s.node].push((s.at_s, s.bandwidth_factor));
+            }
+        }
+        for sh in &mut shifts {
+            sh.sort_by(|a, b| a.0.total_cmp(&b.0));
+        }
+        Scenario {
+            straggler_prob: cfg.straggler_prob,
+            straggler_min: cfg.straggler_min,
+            straggler_max: cfg.straggler_max,
+            windows,
+            shifts,
+        }
+    }
+
+    /// True when the scenario never perturbs the cluster (the bit-identity
+    /// regime of the event scheduler).
+    pub fn is_static(&self) -> bool {
+        self.straggler_prob <= 0.0
+            && self.windows.iter().all(|w| w.is_empty())
+            && self.shifts.iter().all(|s| s.is_empty())
+    }
+
+    /// Per-step compute-time multiplier drawn from `rng` (>= 1.0).
+    /// Consumes one uniform always, a second on a straggler hit, keeping
+    /// the stream layout simple to reason about.
+    pub fn straggler_factor(&self, rng: &mut Rng) -> f64 {
+        if self.straggler_prob <= 0.0 {
+            return 1.0;
+        }
+        if rng.f64() < self.straggler_prob {
+            self.straggler_min + rng.f64() * (self.straggler_max - self.straggler_min)
+        } else {
+            1.0
+        }
+    }
+
+    /// Is `node` up at virtual time `t`?
+    pub fn node_available(&self, node: usize, t: f64) -> bool {
+        self.down_until(node, t).is_none()
+    }
+
+    /// If `node` is down at `t`, the end of its preemption window.
+    fn down_until(&self, node: usize, t: f64) -> Option<f64> {
+        self.windows[node]
+            .iter()
+            .find(|&&(from, until)| t >= from && t < until)
+            .map(|&(_, until)| until)
+    }
+
+    /// Earliest down-window start in `(t, ..)` for `node`.
+    fn next_down_start(&self, node: usize, t: f64) -> Option<f64> {
+        self.windows[node].iter().map(|&(from, _)| from).find(|&from| from > t)
+    }
+
+    /// Finish time and stalled seconds for `busy` seconds of compute on
+    /// `node` starting at `start`, stretched across preemption windows.
+    pub fn compute_span(&self, node: usize, start: f64, busy: f64) -> (f64, f64) {
+        let mut t = start;
+        let mut stall = 0.0;
+        let mut remaining = busy;
+        loop {
+            if let Some(up) = self.down_until(node, t) {
+                stall += up - t;
+                t = up;
+                continue;
+            }
+            match self.next_down_start(node, t) {
+                Some(ws) if ws < t + remaining => {
+                    remaining -= ws - t;
+                    t = ws;
+                }
+                _ => return (t + remaining, stall),
+            }
+        }
+    }
+
+    /// Bandwidth multiplier of `node`'s link at time `t` (1.0 before the
+    /// first scheduled shift).
+    pub fn bandwidth_factor(&self, node: usize, t: f64) -> f64 {
+        self.shifts[node]
+            .iter()
+            .take_while(|&&(at, _)| at <= t)
+            .last()
+            .map(|&(_, f)| f)
+            .unwrap_or(1.0)
+    }
+
+    /// Slowest participating link's factor at `t` — the ring all-reduce
+    /// is throttled by its narrowest hop. Boost factors (> 1.0) pass
+    /// through; an empty participant set yields the neutral 1.0.
+    pub fn min_bandwidth_factor<I: IntoIterator<Item = usize>>(&self, nodes: I, t: f64) -> f64 {
+        let min = nodes
+            .into_iter()
+            .map(|n| self.bandwidth_factor(n, t))
+            .fold(f64::INFINITY, f64::min);
+        if min.is_finite() {
+            min
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChurnWindow, LinkShift};
+
+    fn cfg_with(churn: Vec<ChurnWindow>, shifts: Vec<LinkShift>) -> ScenarioConfig {
+        ScenarioConfig { churn, link_shifts: shifts, ..ScenarioConfig::default() }
+    }
+
+    #[test]
+    fn default_is_static() {
+        let s = Scenario::compile(&ScenarioConfig::default(), 4);
+        assert!(s.is_static());
+        assert!(s.node_available(0, 123.0));
+        assert_eq!(s.bandwidth_factor(3, 1e9), 1.0);
+        assert_eq!(s.compute_span(1, 5.0, 2.0), (7.0, 0.0));
+        let mut rng = Rng::new(1);
+        for _ in 0..32 {
+            assert_eq!(s.straggler_factor(&mut rng), 1.0);
+        }
+    }
+
+    #[test]
+    fn straggler_draws_in_range() {
+        let cfg = ScenarioConfig {
+            straggler_prob: 0.5,
+            straggler_min: 2.0,
+            straggler_max: 3.0,
+            ..ScenarioConfig::default()
+        };
+        let s = Scenario::compile(&cfg, 1);
+        let mut rng = Rng::new(7);
+        let mut hits = 0;
+        for _ in 0..2000 {
+            let f = s.straggler_factor(&mut rng);
+            if f != 1.0 {
+                hits += 1;
+                assert!((2.0..=3.0).contains(&f), "factor {f}");
+            }
+        }
+        // ~50% hit rate
+        assert!((700..1300).contains(&hits), "hits {hits}");
+    }
+
+    #[test]
+    fn churn_windows_coalesce_and_answer() {
+        let cfg = cfg_with(
+            vec![
+                ChurnWindow { node: 0, from_s: 10.0, until_s: 20.0 },
+                ChurnWindow { node: 0, from_s: 15.0, until_s: 25.0 }, // overlaps
+                ChurnWindow { node: 0, from_s: 40.0, until_s: 50.0 },
+            ],
+            vec![],
+        );
+        let s = Scenario::compile(&cfg, 2);
+        assert!(!s.is_static());
+        assert!(s.node_available(0, 9.9));
+        assert!(!s.node_available(0, 10.0));
+        assert!(!s.node_available(0, 24.9));
+        assert!(s.node_available(0, 25.0));
+        assert!(s.node_available(1, 15.0), "other node unaffected");
+    }
+
+    #[test]
+    fn compute_span_stretches_across_downtime() {
+        let cfg = cfg_with(vec![ChurnWindow { node: 0, from_s: 10.0, until_s: 14.0 }], vec![]);
+        let s = Scenario::compile(&cfg, 1);
+        // 5s of compute starting at 8: 2s busy, 4s stalled, 3s busy
+        let (end, stall) = s.compute_span(0, 8.0, 5.0);
+        assert!((end - 17.0).abs() < 1e-12, "end {end}");
+        assert!((stall - 4.0).abs() < 1e-12, "stall {stall}");
+        // starting inside the window: wait for the end first
+        let (end, stall) = s.compute_span(0, 11.0, 1.0);
+        assert!((end - 15.0).abs() < 1e-12);
+        assert!((stall - 3.0).abs() < 1e-12);
+        // fully clear of windows: untouched
+        assert_eq!(s.compute_span(0, 20.0, 2.5), (22.5, 0.0));
+    }
+
+    #[test]
+    fn bandwidth_shifts_are_piecewise_constant() {
+        let cfg = cfg_with(
+            vec![],
+            vec![
+                LinkShift { node: 1, at_s: 10.0, bandwidth_factor: 0.25 },
+                LinkShift { node: 1, at_s: 30.0, bandwidth_factor: 1.0 },
+            ],
+        );
+        let s = Scenario::compile(&cfg, 2);
+        assert_eq!(s.bandwidth_factor(1, 0.0), 1.0);
+        assert_eq!(s.bandwidth_factor(1, 10.0), 0.25);
+        assert_eq!(s.bandwidth_factor(1, 29.9), 0.25);
+        assert_eq!(s.bandwidth_factor(1, 30.0), 1.0);
+        // min across participants
+        assert_eq!(s.min_bandwidth_factor([0usize, 1], 15.0), 0.25);
+        assert_eq!(s.min_bandwidth_factor([0usize], 15.0), 1.0);
+        // empty participant set is neutral
+        assert_eq!(s.min_bandwidth_factor(std::iter::empty(), 15.0), 1.0);
+    }
+
+    #[test]
+    fn bandwidth_boosts_pass_through() {
+        let cfg = cfg_with(
+            vec![],
+            vec![
+                LinkShift { node: 0, at_s: 0.0, bandwidth_factor: 2.0 },
+                LinkShift { node: 1, at_s: 0.0, bandwidth_factor: 3.0 },
+            ],
+        );
+        let s = Scenario::compile(&cfg, 2);
+        // a uniformly upgraded link set must not be clamped back to 1.0
+        assert_eq!(s.min_bandwidth_factor([0usize, 1], 1.0), 2.0);
+    }
+}

@@ -27,6 +27,18 @@ pub struct Worker {
     pub node: usize,
     /// Slot in the run-wide VirtualClock.
     pub clock_slot: usize,
+    /// Private stream for engine gradient/loss noise. Per-worker streams
+    /// make the numeric trajectory independent of scheduling order — the
+    /// property the event-driven scheduler's bit-identity rests on
+    /// (DESIGN.md §3.4).
+    pub noise_rng: Rng,
+    /// Private stream for compute-time perturbations (legacy step jitter
+    /// and scenario straggler draws).
+    pub time_rng: Rng,
+    /// False while this worker's node is preempted by a churn scenario;
+    /// inactive workers sit out whole outer steps. Always true under a
+    /// static scenario.
+    pub active: bool,
 }
 
 /// One trainer (the paper's T_i): a model instance spanning M workers.
@@ -72,6 +84,9 @@ impl Trainer {
                 sampler: BatchSampler::new(ws, rng.fork(id as u64 * 1024 + j as u64)),
                 node: node_of_worker[j],
                 clock_slot: clock_base + j,
+                noise_rng: rng.fork(0x4015E ^ (id as u64 * 1024 + j as u64)),
+                time_rng: rng.fork(0x71EE ^ (id as u64 * 1024 + j as u64)),
+                active: true,
             })
             .collect();
         Trainer {
@@ -96,9 +111,25 @@ impl Trainer {
 
     /// Outer-step epilogue: Δ = x_prev − mean(workers), outer-opt step
     /// (Algorithm 3 lines 40-44). `delta_scratch` avoids reallocation.
+    /// Outside event-scheduler churn every worker is active, so this is
+    /// exactly the all-workers reduction.
     pub fn outer_step(&mut self, delta_scratch: &mut [f32]) {
-        let worker_params: Vec<&[f32]> =
-            self.workers.iter().map(|w| w.state.params.as_slice()).collect();
+        self.outer_step_active(delta_scratch)
+    }
+
+    /// The reduction over *active* workers only — churned-out workers'
+    /// stale parameters are excluded from the average. No-op if the
+    /// whole cohort is preempted.
+    pub fn outer_step_active(&mut self, delta_scratch: &mut [f32]) {
+        let worker_params: Vec<&[f32]> = self
+            .workers
+            .iter()
+            .filter(|w| w.active)
+            .map(|w| w.state.params.as_slice())
+            .collect();
+        if worker_params.is_empty() {
+            return;
+        }
         OuterOpt::compute_delta(&self.params, &worker_params, delta_scratch);
         self.outer.step(&mut self.params, delta_scratch);
     }

@@ -1,0 +1,297 @@
+//! Event-scheduler regression anchor: on static clusters the
+//! discrete-event run loop must reproduce the lockstep reference walk
+//! bit-for-bit — same `CommLedger` (counts, bytes, participants,
+//! `at_inner_step`s, timestamps), same `RunResult`, same record streams —
+//! for the quickstart and adloco_vs_diloco configurations and across a
+//! randomized config sweep. Plus behavioural tests for the dynamic
+//! scenarios (stragglers, churn re-sharding, link shifts) that only the
+//! event scheduler can express.
+
+use adloco::config::{presets, ChurnWindow, Config, LinkShift, Method, SchedulerKind};
+use adloco::coordinator::{resolve_policy, Coordinator, RunResult};
+use adloco::engine::build_engine;
+use adloco::metrics::Recorder;
+use adloco::simulator::{CommKind, CommLedger};
+use adloco::util::Rng;
+
+fn run(cfg: Config) -> (RunResult, Recorder, CommLedger) {
+    let engine = build_engine(&cfg).unwrap();
+    let mut c = Coordinator::new(cfg, engine).unwrap();
+    let r = c.run().unwrap();
+    (r, c.recorder.clone(), c.ledger().clone())
+}
+
+/// Run `cfg` under both schedulers and assert full bitwise agreement.
+fn assert_schedulers_agree(mut cfg: Config) {
+    assert!(
+        cfg.cluster.scenario.is_static(),
+        "bit-identity only holds for static scenarios"
+    );
+    cfg.run.scheduler = SchedulerKind::Lockstep;
+    let (ra, reca, leda) = run(cfg.clone());
+    cfg.run.scheduler = SchedulerKind::Event;
+    let (rb, recb, ledb) = run(cfg.clone());
+    let name = &cfg.name;
+
+    // ---- communication ledger: the paper's C(N) observable -------------
+    assert_eq!(leda.count(), ledb.count(), "{name}: ledger count");
+    assert_eq!(leda.total_bytes(), ledb.total_bytes(), "{name}: ledger bytes");
+    for (i, (a, b)) in leda.events.iter().zip(ledb.events.iter()).enumerate() {
+        assert_eq!(a.kind, b.kind, "{name}: event {i} kind");
+        assert_eq!(a.bytes, b.bytes, "{name}: event {i} bytes");
+        assert_eq!(a.participants, b.participants, "{name}: event {i} participants");
+        assert_eq!(a.at_inner_step, b.at_inner_step, "{name}: event {i} at_inner_step");
+        assert_eq!(
+            a.at_virtual_s.to_bits(),
+            b.at_virtual_s.to_bits(),
+            "{name}: event {i} timestamp ({} vs {})",
+            a.at_virtual_s,
+            b.at_virtual_s
+        );
+    }
+
+    // ---- run summary ----------------------------------------------------
+    assert_eq!(ra.total_samples, rb.total_samples, "{name}: samples");
+    assert_eq!(ra.total_inner_steps, rb.total_inner_steps, "{name}: steps");
+    assert_eq!(ra.trainers_left, rb.trainers_left, "{name}: trainers");
+    assert_eq!(ra.comm_count, rb.comm_count, "{name}: comms");
+    assert_eq!(ra.comm_bytes, rb.comm_bytes, "{name}: comm bytes");
+    assert_eq!(ra.best_ppl.to_bits(), rb.best_ppl.to_bits(), "{name}: best ppl");
+    assert_eq!(ra.final_ppl.to_bits(), rb.final_ppl.to_bits(), "{name}: final ppl");
+    assert_eq!(
+        ra.virtual_time_s.to_bits(),
+        rb.virtual_time_s.to_bits(),
+        "{name}: virtual time"
+    );
+    assert_eq!(
+        ra.total_idle_s.to_bits(),
+        rb.total_idle_s.to_bits(),
+        "{name}: idle time"
+    );
+
+    // ---- full record streams --------------------------------------------
+    assert_eq!(reca.steps.len(), recb.steps.len(), "{name}: step records");
+    for (a, b) in reca.steps.iter().zip(recb.steps.iter()) {
+        assert_eq!(
+            (a.global_step, a.outer_step, a.trainer, a.worker, a.batch, a.accum_steps),
+            (b.global_step, b.outer_step, b.trainer, b.worker, b.batch, b.accum_steps),
+            "{name}: step identity"
+        );
+        assert_eq!(a.requested_batch, b.requested_batch, "{name}: requested batch");
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{name}: step loss");
+        assert_eq!(
+            a.virtual_time_s.to_bits(),
+            b.virtual_time_s.to_bits(),
+            "{name}: step time"
+        );
+    }
+    assert_eq!(reca.evals.len(), recb.evals.len(), "{name}: eval records");
+    for (a, b) in reca.evals.iter().zip(recb.evals.iter()) {
+        assert_eq!(
+            (a.global_step, a.outer_step, a.trainer, a.comm_count, a.comm_bytes),
+            (b.global_step, b.outer_step, b.trainer, b.comm_count, b.comm_bytes),
+            "{name}: eval identity"
+        );
+        assert_eq!(a.perplexity.to_bits(), b.perplexity.to_bits(), "{name}: eval ppl");
+        assert_eq!(
+            a.virtual_time_s.to_bits(),
+            b.virtual_time_s.to_bits(),
+            "{name}: eval time"
+        );
+    }
+    assert_eq!(reca.merges.len(), recb.merges.len(), "{name}: merges");
+    for (a, b) in reca.merges.iter().zip(recb.merges.iter()) {
+        assert_eq!(a.merged, b.merged, "{name}: merged set");
+        assert_eq!(a.representative, b.representative, "{name}: representative");
+        assert_eq!(
+            a.virtual_time_s.to_bits(),
+            b.virtual_time_s.to_bits(),
+            "{name}: merge time"
+        );
+    }
+}
+
+/// The quickstart example's configuration (examples/quickstart.rs).
+fn quickstart_cfg() -> Config {
+    let mut cfg = presets::mock_default();
+    cfg.name = "quickstart".into();
+    cfg.algo.outer_steps = 8;
+    cfg.algo.inner_steps = 20;
+    cfg.algo.workers_per_trainer = 2;
+    cfg.apply_override("algo.batching.eta=0.8").unwrap();
+    cfg.apply_override("algo.merge.frequency=3").unwrap();
+    cfg
+}
+
+/// The adloco_vs_diloco example's algorithm shape. The example itself
+/// runs the XLA tiny profile; artifacts are not guaranteed here, so the
+/// same coordination schedule runs on the mock substrate (the scheduler
+/// equivalence being tested is engine-agnostic).
+fn adloco_vs_diloco_cfg(method: Method) -> Config {
+    let mut cfg = presets::xla_tiny();
+    cfg.engine = adloco::config::EngineConfig::Mock { dim: 400, noise: 1.0, condition: 10.0 };
+    cfg.name = format!("avd_{}", method.as_str());
+    cfg.algo.method = method;
+    cfg.algo.outer_steps = 4;
+    cfg.algo.inner_steps = 15;
+    cfg.algo.num_trainers = 3;
+    cfg.algo.workers_per_trainer = 1;
+    cfg.algo.merge.frequency = 2;
+    cfg.algo.fixed_batch = 4;
+    cfg.algo.lr_inner = 1e-3;
+    cfg.run.eval_every = 5;
+    cfg.run.eval_batches = 1;
+    resolve_policy(&cfg)
+}
+
+#[test]
+fn event_matches_lockstep_on_quickstart() {
+    assert_schedulers_agree(quickstart_cfg());
+}
+
+#[test]
+fn event_matches_lockstep_on_adloco_vs_diloco() {
+    for method in [Method::AdLoCo, Method::DiLoCo] {
+        assert_schedulers_agree(adloco_vs_diloco_cfg(method));
+    }
+}
+
+#[test]
+fn event_matches_lockstep_across_random_configs() {
+    // hand-rolled property sweep in the style of tests/properties.rs
+    let mut rng = Rng::new(0xE7E27);
+    for case in 0..8 {
+        let mut cfg = presets::quick();
+        cfg.name = format!("prop_sched_{case}");
+        cfg.seed = rng.next_u64();
+        cfg.algo.num_trainers = 1 + rng.below(4) as usize;
+        cfg.algo.workers_per_trainer = 1 + rng.below(3) as usize;
+        cfg.algo.inner_steps = 2 + rng.below(8) as usize;
+        cfg.algo.outer_steps = 1 + rng.below(4) as usize;
+        cfg.algo.merge.enabled = rng.f64() < 0.7;
+        cfg.algo.merge.w = 1 + rng.below(4) as usize;
+        cfg.algo.merge.frequency = 1 + rng.below(3) as usize;
+        cfg.algo.switch.enabled = rng.f64() < 0.7;
+        cfg.algo.batching.adaptive = rng.f64() < 0.8;
+        cfg.algo.batching.max_request = 64;
+        cfg.run.eval_every = 1 + rng.below(4) as usize;
+        cfg.run.max_inner_steps = if rng.f64() < 0.3 { 5 } else { 0 };
+        // heterogeneous speeds stress the event ordering without breaking
+        // the static-cluster guarantee
+        for (i, n) in cfg.cluster.nodes.iter_mut().enumerate() {
+            n.speed = 1.0 + i as f64 * 0.5;
+        }
+        cfg.validate().unwrap();
+        assert_schedulers_agree(cfg);
+    }
+}
+
+#[test]
+fn stragglers_are_deterministic_and_stretch_time() {
+    let mk = |prob: f64, seed: u64| {
+        let mut cfg = quickstart_cfg();
+        cfg.name = format!("straggle_{prob}_{seed}");
+        cfg.seed = seed;
+        cfg.run.scheduler = SchedulerKind::Event;
+        cfg.cluster.scenario.straggler_prob = prob;
+        cfg.cluster.scenario.straggler_min = 2.0;
+        cfg.cluster.scenario.straggler_max = 5.0;
+        cfg
+    };
+    // determinism: identical seeds -> identical runs
+    let (r1, _, l1) = run(mk(0.3, 9));
+    let (r2, _, l2) = run(mk(0.3, 9));
+    assert_eq!(r1.virtual_time_s.to_bits(), r2.virtual_time_s.to_bits());
+    assert_eq!(l1.count(), l2.count());
+    for (a, b) in l1.events.iter().zip(l2.events.iter()) {
+        assert_eq!(a.at_virtual_s.to_bits(), b.at_virtual_s.to_bits());
+    }
+    // stragglers stretch wall-clock but not the sample schedule
+    let (r0, _, _) = run(mk(0.0, 9));
+    assert!(r1.virtual_time_s > r0.virtual_time_s);
+    assert_eq!(r1.total_samples, r0.total_samples);
+    // ...and they widen barrier waits (idle time)
+    assert!(
+        r1.total_idle_s > r0.total_idle_s,
+        "straggler idle {} <= static idle {}",
+        r1.total_idle_s,
+        r0.total_idle_s
+    );
+}
+
+#[test]
+fn churn_resharding_keeps_syncing_with_survivors() {
+    // One trainer, three workers on three nodes; node 1 is preempted over
+    // a mid-run window. While it is down, outer syncs must run with 2
+    // participants (the survivors, fed by the re-split shard) and the
+    // preemption must be accounted in the utilization table.
+    let mut cfg = presets::quick();
+    cfg.name = "churn_reshard".into();
+    cfg.algo.num_trainers = 1;
+    cfg.algo.workers_per_trainer = 3;
+    cfg.algo.merge.enabled = false;
+    cfg.algo.outer_steps = 8;
+    cfg.algo.inner_steps = 6;
+    cfg.run.eval_every = 0;
+    cfg.run.scheduler = SchedulerKind::Event;
+    cfg.cluster.scenario.churn.push(ChurnWindow { node: 1, from_s: 0.02, until_s: 0.25 });
+    cfg.validate().unwrap();
+
+    let (r, rec, ledger) = run(cfg);
+    assert!(r.best_ppl.is_finite());
+    let participant_counts: Vec<usize> = ledger
+        .events
+        .iter()
+        .filter(|e| e.kind == CommKind::OuterSync)
+        .map(|e| e.participants)
+        .collect();
+    assert!(
+        participant_counts.iter().any(|&p| p == 2),
+        "no sync ran with the 2 survivors: {participant_counts:?}"
+    );
+    assert!(
+        participant_counts.iter().any(|&p| p == 3),
+        "the preempted worker never rejoined: {participant_counts:?}"
+    );
+    let preempted: f64 = rec.utilization.iter().map(|u| u.preempted_s).sum();
+    assert!(preempted > 0.0, "downtime must appear in the utilization table");
+    // worker on node 1 carries the preemption
+    let w1 = rec.utilization.iter().find(|u| u.node == 1).unwrap();
+    assert!(w1.preempted_s > 0.0);
+}
+
+#[test]
+fn link_shift_slows_syncs_while_active() {
+    // Collapsing one participating link's bandwidth must make outer syncs
+    // during the shift window take longer than the same syncs at full
+    // bandwidth.
+    let mk = |shifted: bool| {
+        let mut cfg = presets::quick();
+        cfg.name = if shifted { "link_slow" } else { "link_fast" }.into();
+        cfg.algo.num_trainers = 1;
+        cfg.algo.workers_per_trainer = 2;
+        cfg.algo.merge.enabled = false;
+        cfg.algo.batching.adaptive = false; // fixed schedule on both arms
+        cfg.algo.outer_steps = 4;
+        cfg.algo.inner_steps = 5;
+        cfg.run.eval_every = 0;
+        cfg.run.scheduler = SchedulerKind::Event;
+        if shifted {
+            cfg.cluster.scenario.link_shifts.push(LinkShift {
+                node: 0,
+                at_s: 0.0,
+                bandwidth_factor: 1e-4,
+            });
+        }
+        cfg
+    };
+    let (fast, _, lf) = run(mk(false));
+    let (slow, _, ls) = run(mk(true));
+    assert_eq!(lf.count(), ls.count(), "same sync schedule");
+    assert!(
+        slow.virtual_time_s > fast.virtual_time_s,
+        "a collapsed link must stretch the run: {} vs {}",
+        slow.virtual_time_s,
+        fast.virtual_time_s
+    );
+}

@@ -109,6 +109,20 @@ fn methods_rank_sanely_on_mock() {
 }
 
 #[test]
+fn hetero_dynamic_preset_runs_end_to_end() {
+    // the dynamic-workload scenario the heterogeneous_cluster example
+    // ships: stragglers + churn + a link shift on the event scheduler
+    let mut cfg = presets::hetero_dynamic();
+    cfg.name = "it_hetero".into();
+    cfg.algo.outer_steps = 5; // keep the test fast
+    cfg.algo.inner_steps = 10;
+    let r = run_experiment(cfg).unwrap();
+    assert!(r.best_ppl.is_finite());
+    assert!(r.virtual_time_s > 0.0);
+    assert!(r.mean_utilization > 0.0 && r.mean_utilization <= 1.0);
+}
+
+#[test]
 fn xla_coordinator_short_run() {
     if !artifacts_present() {
         eprintln!("skipping xla integration (run `make artifacts`)");

@@ -214,6 +214,35 @@ fn prop_clock_barrier_is_max_plus_extra() {
     }
 }
 
+#[test]
+fn prop_event_queue_orders_by_time_then_fifo() {
+    use adloco::simulator::{EventQueue, SimEvent};
+    let mut rng = Rng::new(900);
+    for case in 0..CASES {
+        let n = 1 + rng.below(64) as usize;
+        let mut q = EventQueue::new();
+        let mut expect: Vec<(u64, usize)> = Vec::new();
+        for i in 0..n {
+            // coarse buckets force plenty of timestamp ties
+            let bucket = rng.below(8);
+            q.push(bucket as f64, SimEvent::StepDone { trainer: i, worker: 0, step: 1 });
+            expect.push((bucket, i));
+        }
+        // stable sort == (time, push order), the queue's contract
+        expect.sort_by_key(|&(b, _)| b);
+        let got: Vec<(u64, usize)> = std::iter::from_fn(|| q.pop())
+            .map(|(t, ev)| {
+                let trainer = match ev {
+                    SimEvent::StepDone { trainer, .. } => trainer,
+                    _ => unreachable!(),
+                };
+                (t as u64, trainer)
+            })
+            .collect();
+        assert_eq!(got, expect, "case {case}");
+    }
+}
+
 // ---------------------------------------------------------------------------
 // json round-trip on random documents
 // ---------------------------------------------------------------------------

@@ -3,6 +3,8 @@
 //! finishes in seconds. The bench `fig2_ablation` is the full version.
 //!
 //! Run: `cargo run --release --example ablation`
+//! (append `-- --threads 4` for the parallel runtime — bit-identical
+//! results, shorter wall-clock; DESIGN.md §6)
 
 use adloco::config::{presets, Config};
 use adloco::coordinator::Coordinator;
@@ -10,6 +12,7 @@ use adloco::engine::build_engine;
 
 fn arm(
     name: &str,
+    threads: usize,
     mutate: impl Fn(&mut Config),
 ) -> anyhow::Result<(String, f64, usize, f64, Option<f64>)> {
     let mut cfg = presets::paper_table1();
@@ -19,6 +22,7 @@ fn arm(
     cfg.algo.workers_per_trainer = 2;
     cfg.algo.lr_inner = 0.02;
     cfg.run.eval_every = 5;
+    cfg.run.threads = threads;
     for n in &mut cfg.cluster.nodes {
         n.max_batch = 16;
     }
@@ -33,12 +37,14 @@ fn arm(
 }
 
 fn main() -> anyhow::Result<()> {
+    // `--threads N` (or RUN_THREADS) drives each arm's worker chains
+    let threads = adloco::benchkit::threads_arg();
     println!("running ablation arms (paper Fig. 2)...");
     let rows = vec![
-        arm("full", |_| {})?,
-        arm("no_adaptive", |c| c.algo.batching.adaptive = false)?,
-        arm("no_merge", |c| c.algo.merge.enabled = false)?,
-        arm("no_switch", |c| c.algo.switch.enabled = false)?,
+        arm("full", threads, |_| {})?,
+        arm("no_adaptive", threads, |c| c.algo.batching.adaptive = false)?,
+        arm("no_merge", threads, |c| c.algo.merge.enabled = false)?,
+        arm("no_switch", threads, |c| c.algo.switch.enabled = false)?,
     ];
     println!(
         "\n{:<14} {:>10} {:>8} {:>11} {:>13}",

@@ -5,6 +5,8 @@
 //! Requires `make artifacts`. Writes eval curves to runs/.
 //!
 //! Run: `cargo run --release --example adloco_vs_diloco [outer] [inner]`
+//! (append `--threads N` to fan each round's worker chains across N OS
+//! threads — bit-identical results, shorter wall-clock; DESIGN.md §6).
 
 use adloco::config::{presets, Method};
 use adloco::coordinator::{resolve_policy, Coordinator};
@@ -16,8 +18,20 @@ fn main() -> anyhow::Result<()> {
         std::process::exit(2);
     }
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let outer: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
-    let inner: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(15);
+    let mut positional: Vec<String> = Vec::new();
+    let mut threads: usize = 0;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if let Some(v) = a.strip_prefix("--threads=") {
+            threads = v.parse().unwrap_or(0);
+        } else if a == "--threads" {
+            threads = it.next().and_then(|v| v.parse().ok()).unwrap_or(0);
+        } else if !a.starts_with("--") {
+            positional.push(a.clone());
+        }
+    }
+    let outer: usize = positional.first().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let inner: usize = positional.get(1).and_then(|s| s.parse().ok()).unwrap_or(15);
 
     let mut results = Vec::new();
     for method in [Method::AdLoCo, Method::DiLoCo] {
@@ -33,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         cfg.algo.lr_inner = 1e-3;
         cfg.run.eval_every = 5;
         cfg.run.eval_batches = 1;
+        cfg.run.threads = threads;
         let cfg = resolve_policy(&cfg);
 
         println!("-- running {} ({outer} outer x {inner} inner) --", cfg.name);

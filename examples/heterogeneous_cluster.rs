@@ -14,17 +14,22 @@
 //! less idle time for the same training schedule.
 //!
 //! Run: `cargo run --release --example heterogeneous_cluster`
+//! (`-- --threads 4` fans the worker chains of each outer round across
+//! 4 OS threads; results are bit-identical to serial — DESIGN.md §6).
 
 use adloco::config::{presets, Method};
 use adloco::coordinator::{resolve_policy, Coordinator};
 use adloco::engine::build_engine;
 
 fn main() -> anyhow::Result<()> {
+    // --threads N / RUN_THREADS, else serial (the shared bench parser)
+    let threads = adloco::benchkit::threads_arg();
     let mut rows = Vec::new();
     for method in [Method::AdLoCo, Method::DiLoCo] {
         let mut cfg = presets::hetero_dynamic();
         cfg.name = format!("hetero_{}", method.as_str());
         cfg.algo.method = method;
+        cfg.run.threads = threads;
         let cfg = resolve_policy(&cfg);
         let engine = build_engine(&cfg)?;
         let mut coord = Coordinator::new(cfg, engine)?;
@@ -32,7 +37,11 @@ fn main() -> anyhow::Result<()> {
         coord.recorder.write_eval_csv(&format!("runs/{}.csv", r.name))?;
         coord.recorder.write_jsonl(&format!("runs/{}.jsonl", r.name))?;
 
-        println!("\n-- {} : per-worker utilization --", r.name);
+        println!(
+            "\n-- {} : {:.3}s wall on {} thread(s) --",
+            r.name, r.wall_clock_s, r.threads
+        );
+        println!("-- {} : per-worker utilization --", r.name);
         println!(
             "{:>7} {:>6} {:>4} {:>9} {:>9} {:>9} {:>11} {:>6}",
             "trainer", "worker", "node", "busy_s", "wait_s", "comm_s", "preempt_s", "util"

@@ -24,6 +24,11 @@ fn main() -> anyhow::Result<()> {
     cfg.apply_override("algo.batching.eta=0.8")?;
     cfg.apply_override("algo.merge.frequency=3")?;
 
+    // Parallel runtime (DESIGN.md §6): leave run.threads at 0 ("auto":
+    // the RUN_THREADS env var, else serial) or pin it explicitly, e.g.
+    // `cfg.apply_override("run.threads=4")?`. Any value yields
+    // bit-identical results — threads only change wall-clock.
+
     // 2. Build the engine (Mock here; swap the preset for `xla_tiny` to
     //    run the real PJRT transformer) and the coordinator.
     let engine = build_engine(&cfg)?;
@@ -35,6 +40,10 @@ fn main() -> anyhow::Result<()> {
     println!("best perplexity : {:.3}", result.best_ppl);
     println!("communications  : {} ({} bytes)", result.comm_count, result.comm_bytes);
     println!("virtual time    : {:.2}s", result.virtual_time_s);
+    println!(
+        "wall clock      : {:.3}s on {} thread(s)",
+        result.wall_clock_s, result.threads
+    );
     println!("trainers left   : {} (started with 4)", result.trainers_left);
 
     println!("\nperplexity curve (trainer, step, ppl):");

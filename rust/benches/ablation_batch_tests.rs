@@ -69,7 +69,7 @@ fn main() {
     // inner-product/orthogonality statistics (which divide by ||gbar||^4
     // resp. ||gbar||^2) dwarf the norm-test statistic by orders of
     // magnitude, making the augmented test impractical.
-    let mut engine = MockEngine::new(MockSpec {
+    let engine = MockEngine::new(MockSpec {
         dim: 2000,
         noise: 1.0,
         condition: 25.0,

@@ -11,9 +11,11 @@
 //! Output: summary table + per-method eval-curve CSVs under
 //! bench_results/fig1_<method>.csv.
 //!
-//! Run: `cargo bench --bench fig1_adloco_vs_diloco` (`--quick` to smoke).
+//! Run: `cargo bench --bench fig1_adloco_vs_diloco` (`--quick` to smoke;
+//! `--threads N` runs the method arms across N OS threads — results are
+//! bit-identical to the serial grid, see DESIGN.md §6).
 
-use adloco::benchkit::{quick_mode, Table};
+use adloco::benchkit::{quick_mode, run_cells, threads_arg, Table};
 use adloco::config::{presets, Config, Method, SchedulerKind};
 use adloco::coordinator::{resolve_policy, Coordinator};
 use adloco::engine::build_engine;
@@ -63,34 +65,55 @@ fn main() {
         "util",
     ]);
 
-    for m in methods {
-        let mut cfg = base_config(quick);
-        cfg.algo.method = m;
-        cfg.name = format!("fig1_{}", m.as_str());
-        cfg.run.target_ppl = 0.0; // run full horizon; target measured post-hoc
-        let cfg = resolve_policy(&cfg);
-        let engine = build_engine(&cfg).unwrap();
-        let mut coord = Coordinator::new(cfg, engine).unwrap();
-        let r = coord.run().unwrap();
-        let rec = &coord.recorder;
-        rec.write_eval_csv(&format!("bench_results/fig1_{}.csv", m.as_str())).unwrap();
-
-        let tt = rec.time_to_target(target_ppl);
-        table.row(&[
-            m.as_str().to_string(),
-            format!("{:.3}", r.best_ppl),
-            format!("{:.3}", r.final_ppl),
-            tt.map(|t| t.0.to_string()).unwrap_or_else(|| "-".into()),
-            tt.map(|t| format!("{:.2}", t.1)).unwrap_or_else(|| "-".into()),
-            tt.map(|t| t.2.to_string()).unwrap_or_else(|| "-".into()),
-            r.comm_count.to_string(),
-            format!("{:.1}", rec.mean_batch()),
-            format!("{:.2}", r.total_idle_s),
-            format!("{:.2}", r.mean_utilization),
-        ]);
+    // one cell per method arm; `--threads` fans the grid out with
+    // ordered result collection (rows stay in method order)
+    let threads = threads_arg();
+    let t0 = std::time::Instant::now();
+    let rows = run_cells(
+        threads,
+        methods
+            .iter()
+            .map(|&m| {
+                move || {
+                    let mut cfg = base_config(quick);
+                    cfg.algo.method = m;
+                    cfg.name = format!("fig1_{}", m.as_str());
+                    cfg.run.target_ppl = 0.0; // full horizon; target post-hoc
+                    // grid-level parallelism composes poorly with the
+                    // in-run pool (RUN_THREADS would oversubscribe);
+                    // cells run their workers serially, like the sweep
+                    cfg.run.threads = 1;
+                    let cfg = resolve_policy(&cfg);
+                    let engine = build_engine(&cfg).unwrap();
+                    let mut coord = Coordinator::new(cfg, engine).unwrap();
+                    let r = coord.run().unwrap();
+                    let rec = &coord.recorder;
+                    rec.write_eval_csv(&format!("bench_results/fig1_{}.csv", m.as_str()))
+                        .unwrap();
+                    let tt = rec.time_to_target(target_ppl);
+                    vec![
+                        m.as_str().to_string(),
+                        format!("{:.3}", r.best_ppl),
+                        format!("{:.3}", r.final_ppl),
+                        tt.map(|t| t.0.to_string()).unwrap_or_else(|| "-".into()),
+                        tt.map(|t| format!("{:.2}", t.1)).unwrap_or_else(|| "-".into()),
+                        tt.map(|t| t.2.to_string()).unwrap_or_else(|| "-".into()),
+                        r.comm_count.to_string(),
+                        format!("{:.1}", rec.mean_batch()),
+                        format!("{:.2}", r.total_idle_s),
+                        format!("{:.2}", r.mean_utilization),
+                    ]
+                }
+            })
+            .collect(),
+    );
+    for row in &rows {
+        table.row(row);
     }
+    let grid_wall = t0.elapsed().as_secs_f64();
 
     println!("\nFIG1 — AdLoCo vs DiLoCo vs LocalSGD (target ppl = {target_ppl})");
+    println!("grid: {} arms in {grid_wall:.2}s on {threads} thread(s)", rows.len());
     println!("(paper Fig. 1: AdLoCo reaches target perplexity in fewer steps,");
     println!(" less simulated time and fewer communications than DiLoCo)\n");
     table.print();

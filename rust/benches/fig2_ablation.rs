@@ -6,9 +6,11 @@
 //!   * without the merger: wasted computation on weak trainers;
 //!   * without switching: instability/inefficiency at large batch regimes.
 //!
-//! Run: `cargo bench --bench fig2_ablation` (`--quick` to smoke).
+//! Run: `cargo bench --bench fig2_ablation` (`--quick` to smoke;
+//! `--threads N` runs the ablation arms across N OS threads —
+//! bit-identical to the serial grid, see DESIGN.md §6).
 
-use adloco::benchkit::{quick_mode, Table};
+use adloco::benchkit::{quick_mode, run_cells, threads_arg, Table};
 use adloco::config::{presets, Config, SchedulerKind};
 use adloco::coordinator::Coordinator;
 use adloco::engine::build_engine;
@@ -67,33 +69,54 @@ fn main() {
         "idle_s",
     ]);
 
-    for arm in &arms {
-        let mut cfg = base_config(quick);
-        (arm.mutate)(&mut cfg);
-        cfg.name = format!("fig2_{}", arm.name);
-        let engine = build_engine(&cfg).unwrap();
-        let mut coord = Coordinator::new(cfg, engine).unwrap();
-        let r = coord.run().unwrap();
-        let rec = &coord.recorder;
-        rec.write_eval_csv(&format!("bench_results/fig2_{}.csv", arm.name)).unwrap();
-
-        let tt = rec.time_to_target(target_ppl);
-        let max_accum = rec.steps.iter().map(|s| s.accum_steps).max().unwrap_or(1);
-        table.row(&[
-            arm.name.to_string(),
-            format!("{:.3}", r.best_ppl),
-            format!("{:.3}", r.final_ppl),
-            tt.map(|t| t.0.to_string()).unwrap_or_else(|| "-".into()),
-            tt.map(|t| format!("{:.2}", t.1)).unwrap_or_else(|| "-".into()),
-            r.comm_count.to_string(),
-            r.trainers_left.to_string(),
-            format!("{:.1}", rec.mean_batch()),
-            max_accum.to_string(),
-            format!("{:.2}", r.total_idle_s),
-        ]);
+    // one cell per ablation arm; `--threads` fans them out with ordered
+    // result collection (rows stay in arm order)
+    let threads = threads_arg();
+    let t0 = std::time::Instant::now();
+    let rows = run_cells(
+        threads,
+        arms.iter()
+            .map(|arm| {
+                let name = arm.name;
+                let mutate = arm.mutate;
+                move || {
+                    let mut cfg = base_config(quick);
+                    mutate(&mut cfg);
+                    cfg.name = format!("fig2_{name}");
+                    // cells run their workers serially (see fig1): the
+                    // grid owns the thread budget, not the runs
+                    cfg.run.threads = 1;
+                    let engine = build_engine(&cfg).unwrap();
+                    let mut coord = Coordinator::new(cfg, engine).unwrap();
+                    let r = coord.run().unwrap();
+                    let rec = &coord.recorder;
+                    rec.write_eval_csv(&format!("bench_results/fig2_{name}.csv")).unwrap();
+                    let tt = rec.time_to_target(target_ppl);
+                    let max_accum =
+                        rec.steps.iter().map(|s| s.accum_steps).max().unwrap_or(1);
+                    vec![
+                        name.to_string(),
+                        format!("{:.3}", r.best_ppl),
+                        format!("{:.3}", r.final_ppl),
+                        tt.map(|t| t.0.to_string()).unwrap_or_else(|| "-".into()),
+                        tt.map(|t| format!("{:.2}", t.1)).unwrap_or_else(|| "-".into()),
+                        r.comm_count.to_string(),
+                        r.trainers_left.to_string(),
+                        format!("{:.1}", rec.mean_batch()),
+                        max_accum.to_string(),
+                        format!("{:.2}", r.total_idle_s),
+                    ]
+                }
+            })
+            .collect(),
+    );
+    for row in &rows {
+        table.row(row);
     }
+    let grid_wall = t0.elapsed().as_secs_f64();
 
     println!("\nFIG2 — AdLoCo ablation study (target ppl = {target_ppl})");
+    println!("grid: {} arms in {grid_wall:.2}s on {threads} thread(s)", rows.len());
     println!("(paper Fig. 2: each component removed degrades convergence)\n");
     table.print();
     table.write_csv("fig2_summary").unwrap();

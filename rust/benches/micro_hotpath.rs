@@ -92,7 +92,7 @@ fn main() {
     push(&mut table, "sampler.next_batch(b=16,s=64)", t);
 
     // ---- mock engine step ---------------------------------------------------
-    let mut mock = MockEngine::new(MockSpec { dim: 2000, ..MockSpec::default() });
+    let mock = MockEngine::new(MockSpec { dim: 2000, ..MockSpec::default() });
     let mut st = mock.init_state(0);
     let mut noise = Rng::new(17);
     let mb = TokenBatch::new(16, 8);
@@ -103,7 +103,7 @@ fn main() {
 
     // ---- PJRT ladder (artifacts-gated) --------------------------------------
     if std::path::Path::new("artifacts/tiny/meta.json").exists() {
-        let mut eng = adloco::runtime::XlaEngine::load("artifacts", "tiny").unwrap();
+        let eng = adloco::runtime::XlaEngine::load("artifacts", "tiny").unwrap();
         let width = eng.meta().seq_len + 1;
         let vocab = eng.meta().vocab as i64;
         let ladder: Vec<usize> = eng.supported_batches().to_vec();

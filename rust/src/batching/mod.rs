@@ -81,6 +81,7 @@ pub struct BatchController {
 }
 
 impl BatchController {
+    /// Controller starting at `cfg.initial_batch` with empty statistics.
     pub fn new(cfg: BatchingConfig) -> Self {
         let beta = if cfg.ema_beta > 0.0 { cfg.ema_beta } else { 0.0 };
         BatchController {
@@ -104,6 +105,7 @@ impl BatchController {
         self.requested = b.max(1);
     }
 
+    /// Number of step statistics folded in so far.
     pub fn observations(&self) -> u64 {
         self.observations
     }

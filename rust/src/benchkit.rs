@@ -1,9 +1,12 @@
 //! Minimal benchmarking toolkit (no `criterion` in the offline crate set).
 //!
 //! Provides warmup+repeat timing with median/p10/p90 reporting, simple
-//! table printing for the figure/table reproduction benches, and CSV
-//! output under `bench_results/` so every paper artifact regeneration
-//! leaves a machine-readable trace.
+//! table printing for the figure/table reproduction benches, CSV output
+//! under `bench_results/` so every paper artifact regeneration leaves a
+//! machine-readable trace, and — for the fig1/fig2 grids — the shared
+//! work-stealing [`run_cells`] fan-out (one implementation for bench
+//! grids, sweep cells and the coordinator's worker chains —
+//! DESIGN.md §6).
 
 use std::io::Write;
 use std::time::Instant;
@@ -11,14 +14,20 @@ use std::time::Instant;
 /// Timing summary over repeated runs.
 #[derive(Clone, Copy, Debug)]
 pub struct Timing {
+    /// Measured repetitions.
     pub reps: usize,
+    /// Median seconds per repetition.
     pub median_s: f64,
+    /// 10th-percentile seconds.
     pub p10_s: f64,
+    /// 90th-percentile seconds.
     pub p90_s: f64,
+    /// Mean seconds per repetition.
     pub mean_s: f64,
 }
 
 impl Timing {
+    /// Repetitions per second at the median.
     pub fn per_sec(&self) -> f64 {
         if self.median_s > 0.0 {
             1.0 / self.median_s
@@ -81,15 +90,18 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with the given column headers.
     pub fn new(headers: &[&str]) -> Table {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len());
         self.rows.push(cells.to_vec());
     }
 
+    /// Print the aligned table to stdout.
     pub fn print(&self) {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -126,6 +138,52 @@ impl Table {
     }
 }
 
+/// The shared work-stealing fan-out (see [`crate::util::parallel`]),
+/// re-exported here because the fig1/fig2 bench grids are its original
+/// public surface.
+pub use crate::util::parallel::run_cells;
+
+/// Wall-clock a closure: `(result, seconds)`.
+pub fn wall_time<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Serial-over-parallel wall-clock ratio (> 1 means the parallel run
+/// won); reported in the EXPERIMENTS.md §Perf speedup table.
+pub fn speedup(serial_s: f64, parallel_s: f64) -> f64 {
+    if parallel_s > 0.0 {
+        serial_s / parallel_s
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// The `--threads N` bench argument — how fig1/fig2 and the examples
+/// pick up the parallel runtime without a config file. `0` (and an
+/// absent flag) means "auto", deferring to the `RUN_THREADS` env var
+/// and finally serial — the same semantics as `run.threads`.
+pub fn threads_arg() -> usize {
+    let args = bench_args();
+    let mut explicit: Option<usize> = None;
+    for (i, a) in args.iter().enumerate() {
+        if let Some(v) = a.strip_prefix("--threads=") {
+            explicit = v.parse::<usize>().ok();
+        } else if a == "--threads" {
+            explicit = args.get(i + 1).and_then(|v| v.parse::<usize>().ok());
+        }
+    }
+    match explicit {
+        Some(n) if n >= 1 => n,
+        _ => std::env::var("RUN_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(1),
+    }
+}
+
 /// `cargo bench` passes `--bench`; strip the harness-reserved args so
 /// benches can read their own (e.g. `--quick`).
 pub fn bench_args() -> Vec<String> {
@@ -154,6 +212,15 @@ mod tests {
         assert_eq!(t.reps, 5);
         assert!(t.median_s >= 0.0);
         assert!(t.p10_s <= t.p90_s);
+    }
+
+    #[test]
+    fn speedup_and_wall_time() {
+        assert!((speedup(2.0, 1.0) - 2.0).abs() < 1e-12);
+        assert!(speedup(1.0, 0.0).is_infinite());
+        let (v, secs) = wall_time(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
     }
 
     #[test]

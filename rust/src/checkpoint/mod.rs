@@ -20,39 +20,57 @@ use crate::util::JsonValue;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 
+/// File magic of the checkpoint container format.
 pub const MAGIC: &[u8; 4] = b"ADLC";
+/// Container format version.
 pub const VERSION: u32 = 1;
 
 /// Snapshot of one worker's optimizer state.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkerSnapshot {
+    /// Worker parameter vector.
     pub params: Vec<f32>,
+    /// AdamW first moments.
     pub m: Vec<f32>,
+    /// AdamW second moments.
     pub v: Vec<f32>,
+    /// Optimizer step counter.
     pub step: u64,
 }
 
 /// Snapshot of one live trainer.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrainerSnapshot {
+    /// Trainer id (position in the coordinator's pool).
     pub id: usize,
+    /// Outer parameter vector.
     pub params: Vec<f32>,
     /// Outer-optimizer momentum buffer (empty for Average/Sgd).
     pub outer_velocity: Vec<f32>,
+    /// Adaptive controller's requested batch.
     pub requested_batch: usize,
+    /// Inner steps completed by this trainer.
     pub inner_steps_done: u64,
+    /// Per-worker optimizer state.
     pub workers: Vec<WorkerSnapshot>,
 }
 
 /// A full coordinator snapshot.
 #[derive(Clone, Debug, PartialEq, Default)]
 pub struct Checkpoint {
+    /// Name of the config that produced the snapshot.
     pub config_name: String,
+    /// Outer step the snapshot was taken after.
     pub outer_step: u64,
+    /// Samples consumed so far.
     pub total_samples: u64,
+    /// Ledger communication count at snapshot time.
     pub comm_count: u64,
+    /// Ledger communication bytes at snapshot time.
     pub comm_bytes: u64,
+    /// Per-slot virtual clock times.
     pub clock_times: Vec<f64>,
+    /// Live trainers (dead ones are omitted).
     pub trainers: Vec<TrainerSnapshot>,
 }
 
@@ -72,6 +90,7 @@ fn crc32_table() -> [u32; 256] {
     table
 }
 
+/// CRC32 (IEEE) of `data` — the checkpoint trailer integrity check.
 pub fn crc32(data: &[u8]) -> u32 {
     let table = crc32_table();
     let mut c = 0xFFFF_FFFFu32;
@@ -178,6 +197,7 @@ impl Checkpoint {
         out
     }
 
+    /// Parse and CRC-verify a serialized checkpoint.
     pub fn from_bytes(raw: &[u8]) -> Result<Checkpoint> {
         if raw.len() < 16 {
             bail!("checkpoint too short");
@@ -279,6 +299,7 @@ impl Checkpoint {
         Ok(cp)
     }
 
+    /// Write the checkpoint to `path` (write-then-rename, crash-safe).
     pub fn save(&self, path: &str) -> Result<()> {
         if let Some(dir) = std::path::Path::new(path).parent() {
             std::fs::create_dir_all(dir).ok();
@@ -292,6 +313,7 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Read and verify a checkpoint from `path`.
     pub fn load(path: &str) -> Result<Checkpoint> {
         let mut raw = Vec::new();
         std::fs::File::open(path)

@@ -6,9 +6,12 @@
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
+/// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// First bare token (e.g. `train`).
     pub subcommand: Option<String>,
+    /// Bare tokens after the subcommand.
     pub positional: Vec<String>,
     /// key -> values, in order of appearance (repeatable options).
     pub options: BTreeMap<String, Vec<String>>,
@@ -21,8 +24,10 @@ pub struct Args {
 const VALUE_OPTS: &[&str] = &[
     "config", "preset", "set", "out", "profile", "artifacts", "methods",
     "steps", "seed", "log-level", "target-ppl", "format", "param", "values",
+    "threads", "jobs",
 ];
 
+/// Parse an argv-style token stream (exclusive of the binary name).
 pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
     let mut args = Args::default();
     let mut it = argv.into_iter().peekable();
@@ -52,18 +57,22 @@ pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
 }
 
 impl Args {
+    /// Last value of `--key` (CLI convention: last one wins).
     pub fn opt(&self, key: &str) -> Option<&str> {
         self.options.get(key).and_then(|v| v.last()).map(String::as_str)
     }
 
+    /// Every value of a repeatable `--key`.
     pub fn opt_all(&self, key: &str) -> &[String] {
         self.options.get(key).map(Vec::as_slice).unwrap_or(&[])
     }
 
+    /// True when bare `--key` was passed.
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
 
+    /// Parse `--key`'s value into `T` (None when absent).
     pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
     where
         T::Err: std::fmt::Display,

@@ -19,12 +19,16 @@ use anyhow::{anyhow, bail, Context, Result};
 /// these knobs, matching the paper's ablation structure (Fig. 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
+    /// The paper's full method (adaptive batching + MIT + SwitchMode).
     AdLoCo,
+    /// DiLoCo baseline (fixed batch, no merging/switching).
     DiLoCo,
+    /// LocalSGD baseline (DiLoCo with a plain-average outer step).
     LocalSgd,
 }
 
 impl Method {
+    /// Parse a CLI/config method name.
     pub fn parse(s: &str) -> Result<Method> {
         match s.to_ascii_lowercase().as_str() {
             "adloco" => Ok(Method::AdLoCo),
@@ -34,6 +38,7 @@ impl Method {
         }
     }
 
+    /// Canonical lowercase name.
     pub fn as_str(self) -> &'static str {
         match self {
             Method::AdLoCo => "adloco",
@@ -55,6 +60,7 @@ pub enum BatchTest {
 }
 
 impl BatchTest {
+    /// Parse a CLI/config batch-test name.
     pub fn parse(s: &str) -> Result<BatchTest> {
         match s.to_ascii_lowercase().as_str() {
             "norm" => Ok(BatchTest::Norm),
@@ -64,6 +70,7 @@ impl BatchTest {
         }
     }
 
+    /// Canonical lowercase name.
     pub fn as_str(self) -> &'static str {
         match self {
             BatchTest::Norm => "norm",
@@ -73,6 +80,7 @@ impl BatchTest {
     }
 }
 
+/// Which compute substrate the run uses.
 #[derive(Clone, Debug)]
 pub enum EngineConfig {
     /// Pure-Rust synthetic objective (fast; powers theory benches & tests).
@@ -85,13 +93,20 @@ pub enum EngineConfig {
         condition: f64,
     },
     /// PJRT-backed transformer from `artifacts/<profile>/`.
-    Xla { artifacts_dir: String, profile: String },
+    Xla {
+        /// Root artifacts directory (holds one subdir per profile).
+        artifacts_dir: String,
+        /// Profile name (e.g. "tiny", "small").
+        profile: String,
+    },
 }
 
+/// Adaptive-batching knobs (paper §3.3).
 #[derive(Clone, Debug)]
 pub struct BatchingConfig {
     /// false => fixed batch (DiLoCo / ablation arm).
     pub adaptive: bool,
+    /// Which statistical test drives the request.
     pub test: BatchTest,
     /// Norm-test eta (paper Table 1: 0.8).
     pub eta: f64,
@@ -111,8 +126,10 @@ pub struct BatchingConfig {
     pub max_request: usize,
 }
 
+/// Multi-Instance Training merge knobs (paper §4.1).
 #[derive(Clone, Debug)]
 pub struct MergeConfig {
+    /// Master switch for MIT merging.
     pub enabled: bool,
     /// Merge the `w` worst trainers by requested batch (Algorithm 1).
     pub w: usize,
@@ -125,13 +142,17 @@ pub struct MergeConfig {
     pub policy: MergeSelect,
 }
 
+/// Merge-selection rule (paper default vs control arm).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MergeSelect {
+    /// The paper's rule: merge the w worst trainers by requested batch.
     WorstByBatch,
+    /// Random selection (control arm isolating the rule's contribution).
     Random,
 }
 
 impl MergeSelect {
+    /// Parse a CLI/config merge-policy name.
     pub fn parse(s: &str) -> Result<MergeSelect> {
         match s.to_ascii_lowercase().as_str() {
             "worst" | "worst_by_batch" => Ok(MergeSelect::WorstByBatch),
@@ -146,11 +167,15 @@ impl MergeSelect {
 pub struct ScheduleConfig {
     /// constant | warmup | warmup_cosine | step_decay
     pub kind: String,
+    /// Linear-warmup steps (warmup kinds).
     pub warmup_steps: u64,
     /// 0 = derive from outer_steps * inner_steps.
     pub total_steps: u64,
+    /// Cosine floor as a fraction of the base lr.
     pub min_frac: f64,
+    /// Steps between decays (step_decay).
     pub decay_every: u64,
+    /// Multiplier applied at each decay (step_decay).
     pub decay_factor: f64,
 }
 
@@ -167,13 +192,16 @@ impl Default for ScheduleConfig {
     }
 }
 
+/// SwitchMode (gradient accumulation) knobs (paper §4.2).
 #[derive(Clone, Debug)]
 pub struct SwitchConfig {
+    /// Master switch for SwitchMode.
     pub enabled: bool,
     /// Accumulation engages when b_req > multiplier * max_batch (paper: 2).
     pub multiplier: f64,
 }
 
+/// Outer-optimizer flavour (Algorithm 3 line 43).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum OuterOptKind {
     /// Plain parameter averaging (LocalSGD-style).
@@ -181,11 +209,16 @@ pub enum OuterOptKind {
     /// SGD on the outer delta (what the theorems assume).
     Sgd,
     /// Nesterov momentum on the outer delta (DiLoCo's default).
-    Nesterov { momentum: f64 },
+    Nesterov {
+        /// Momentum coefficient (DiLoCo default: 0.9).
+        momentum: f64,
+    },
 }
 
+/// The coordination algorithm and its hyperparameters.
 #[derive(Clone, Debug)]
 pub struct AlgoConfig {
+    /// Which method the run realizes (see [`Method`]).
     pub method: Method,
     /// k — initial number of trainers (paper Table 1: 4).
     pub num_trainers: usize,
@@ -195,18 +228,25 @@ pub struct AlgoConfig {
     pub inner_steps: usize,
     /// T — outer steps (paper Table 1: 20).
     pub outer_steps: usize,
+    /// Inner (worker) learning rate.
     pub lr_inner: f64,
+    /// Outer-optimizer learning rate.
     pub lr_outer: f64,
     /// Inner-lr schedule over the worker's inner-step axis.
     pub lr_schedule: ScheduleConfig,
+    /// Outer-optimizer flavour.
     pub outer_opt: OuterOptKind,
+    /// Adaptive-batching knobs.
     pub batching: BatchingConfig,
+    /// MIT merging knobs.
     pub merge: MergeConfig,
+    /// SwitchMode knobs.
     pub switch: SwitchConfig,
     /// Batch used when batching.adaptive == false.
     pub fixed_batch: usize,
 }
 
+/// Synthetic-corpus generation knobs (DESIGN.md §4).
 #[derive(Clone, Debug)]
 pub struct DataConfig {
     /// Total corpus size in sequences.
@@ -222,9 +262,11 @@ pub struct DataConfig {
     pub shard_fraction: f64,
     /// Held-out validation sequences.
     pub val_sequences: usize,
+    /// Corpus-generation seed (independent of the run seed).
     pub seed: u64,
 }
 
+/// One simulated node (GPU) of the cluster.
 #[derive(Clone, Debug)]
 pub struct NodeConfig {
     /// Memory-limited max batch per node (the paper's max_batch).
@@ -249,6 +291,7 @@ pub enum SchedulerKind {
 }
 
 impl SchedulerKind {
+    /// Parse a CLI/config scheduler name.
     pub fn parse(s: &str) -> Result<SchedulerKind> {
         match s.to_ascii_lowercase().as_str() {
             "lockstep" => Ok(SchedulerKind::Lockstep),
@@ -257,6 +300,7 @@ impl SchedulerKind {
         }
     }
 
+    /// Canonical lowercase name.
     pub fn as_str(self) -> &'static str {
         match self {
             SchedulerKind::Lockstep => "lockstep",
@@ -269,8 +313,11 @@ impl SchedulerKind {
 /// of virtual time.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ChurnWindow {
+    /// Node preempted by this window.
     pub node: usize,
+    /// Window start (virtual seconds, inclusive).
     pub from_s: f64,
+    /// Window end (virtual seconds, exclusive).
     pub until_s: f64,
 }
 
@@ -279,8 +326,11 @@ pub struct ChurnWindow {
 /// constant until the next shift).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LinkShift {
+    /// Node whose link shifts.
     pub node: usize,
+    /// Virtual time the shift takes effect.
     pub at_s: f64,
+    /// New bandwidth multiplier (piecewise constant onward).
     pub bandwidth_factor: f64,
 }
 
@@ -293,6 +343,7 @@ pub struct ScenarioConfig {
     pub straggler_prob: f64,
     /// Slowdown multiplier range, drawn uniformly on a straggler hit.
     pub straggler_min: f64,
+    /// Upper end of the straggler slowdown range.
     pub straggler_max: f64,
     /// Node preemption windows (virtual seconds).
     pub churn: Vec<ChurnWindow>,
@@ -319,8 +370,10 @@ impl ScenarioConfig {
     }
 }
 
+/// The simulated cluster: nodes, network, and dynamic workload.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
+    /// Simulated nodes (workers are placed round-robin across them).
     pub nodes: Vec<NodeConfig>,
     /// Per-sync latency, seconds (alpha in t = alpha + bytes/beta).
     pub net_latency_s: f64,
@@ -328,6 +381,7 @@ pub struct ClusterConfig {
     pub net_bandwidth_bps: f64,
     /// Step-time model: t_step = step_fixed_s + step_per_token_s * b * seq.
     pub step_fixed_s: f64,
+    /// Per-token term of the step-time model.
     pub step_per_token_s: f64,
     /// Fractional lognormal-ish jitter on per-step compute time
     /// (dynamic-workload knob from the paper's motivation; 0 = none).
@@ -338,6 +392,8 @@ pub struct ClusterConfig {
     pub scenario: ScenarioConfig,
 }
 
+/// Run-schedule knobs: evaluation cadence, stopping, checkpoints,
+/// scheduler flavour and the parallel runtime's thread count.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     /// Evaluate every this many *inner* steps (paper: every 10 steps).
@@ -357,16 +413,50 @@ pub struct RunConfig {
     pub resume_from: Option<String>,
     /// Run-loop flavour; `Event` is required for dynamic scenarios.
     pub scheduler: SchedulerKind,
+    /// OS threads for the in-run parallel execution runtime (DESIGN.md
+    /// §6): worker inner-step chains fan out across this many threads
+    /// between sync/merge rendezvous. `1` = serial; `0` = auto (the
+    /// `RUN_THREADS` env var if set, else 1). Any value produces
+    /// bit-identical ledgers/records/results — threads only change
+    /// wall-clock (the determinism suite in
+    /// `tests/determinism_parallel.rs` enforces this).
+    pub threads: usize,
 }
 
+impl RunConfig {
+    /// Resolve the `threads` knob: an explicit value wins; `0` defers to
+    /// the `RUN_THREADS` environment variable (serial when unset or
+    /// unparsable). Always >= 1.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        std::env::var("RUN_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(1)
+    }
+}
+
+/// A full experiment description; determines a run together with the
+/// artifact profile (and nothing else — see the determinism contract,
+/// DESIGN.md §6).
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Run name (output files, logs, result rows).
     pub name: String,
+    /// Master seed every stochastic stream forks from.
     pub seed: u64,
+    /// Compute substrate.
     pub engine: EngineConfig,
+    /// Coordination algorithm + hyperparameters.
     pub algo: AlgoConfig,
+    /// Synthetic-corpus generation.
     pub data: DataConfig,
+    /// Simulated cluster + dynamic workload.
     pub cluster: ClusterConfig,
+    /// Run schedule (eval cadence, checkpoints, scheduler, threads).
     pub run: RunConfig,
     /// Metrics output directory (JSONL/CSV); None = in-memory only.
     pub out_dir: Option<String>,
@@ -815,6 +905,9 @@ fn apply_run(r: &mut RunConfig, v: &JsonValue) -> Result<()> {
     if let Some(x) = v.get("scheduler").and_then(|x| x.as_str()) {
         r.scheduler = SchedulerKind::parse(x)?;
     }
+    if let Some(x) = v.get("threads").and_then(|x| x.as_usize()) {
+        r.threads = x;
+    }
     Ok(())
 }
 
@@ -925,6 +1018,20 @@ mod tests {
         cfg.cluster.scenario.churn[0].node = 0;
         cfg.cluster.scenario.churn[0].until_s = 0.0;
         assert!(cfg.validate().is_err(), "empty churn window must fail");
+    }
+
+    #[test]
+    fn threads_override_and_resolution() {
+        let mut cfg = presets::mock_default();
+        assert_eq!(cfg.run.threads, 0, "presets default to auto");
+        cfg.apply_override("run.threads=4").unwrap();
+        assert_eq!(cfg.run.threads, 4);
+        assert_eq!(cfg.run.effective_threads(), 4);
+        cfg.run.threads = 1;
+        // explicit values win over the RUN_THREADS env var (which may be
+        // set by the CI parallel leg, so threads=0 is not asserted here)
+        assert_eq!(cfg.run.effective_threads(), 1);
+        cfg.validate().unwrap();
     }
 
     #[test]

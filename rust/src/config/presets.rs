@@ -15,6 +15,7 @@ pub fn by_name(name: &str) -> Option<Config> {
     }
 }
 
+/// Every preset name `by_name` resolves.
 pub fn preset_names() -> &'static [&'static str] {
     &["mock_default", "paper_table1", "xla_tiny", "xla_small", "quick", "hetero_dynamic"]
 }
@@ -103,6 +104,7 @@ pub fn paper_table1() -> Config {
             checkpoint_every: 0,
             resume_from: None,
             scheduler: SchedulerKind::Lockstep,
+            threads: 0, // auto: RUN_THREADS env var, else serial
         },
         out_dir: None,
     }

@@ -33,6 +33,15 @@
 //!   `cluster.scenario` it models stragglers, node churn and
 //!   time-varying links, and accounts per-worker busy/wait/preempted
 //!   time for the utilization report.
+//!
+//! The event path additionally hosts the **parallel execution runtime**
+//! (DESIGN.md §6): with `run.threads > 1`, each active worker's
+//! inner-step chain for the outer round runs on a thread pool — workers
+//! are independent between sync/merge rendezvous, own their RNG streams
+//! and model state, and all records flush in canonical order, so a
+//! parallel run is bit-identical to the serial one
+//! (`tests/determinism_parallel.rs`). Threads buy wall-clock only; they
+//! never change a result.
 
 use crate::batching::{plan_step, StepPlan};
 use crate::config::{Config, Method, SchedulerKind};
@@ -44,24 +53,37 @@ use crate::simulator::{
     assign_workers, node_models, CommEvent, CommKind, CommLedger, EventQueue, NetworkModel,
     NodeModel, Scenario, SimEvent, VirtualClock,
 };
-use crate::trainer::Trainer;
+use crate::trainer::{Trainer, Worker};
 use crate::util::Rng;
 use anyhow::Result;
 use std::collections::BTreeMap;
 
 /// Outcome summary of a run (full series live in the recorder).
+///
+/// Every field except `wall_clock_s` and `threads` is covered by the
+/// determinism contract (DESIGN.md §6): it is a pure function of the
+/// config and must be bit-identical across schedulers and thread counts.
 #[derive(Clone, Debug)]
 pub struct RunResult {
+    /// Config name the run was launched under.
     pub name: String,
+    /// Coordination method (AdLoCo / DiLoCo / LocalSGD).
     pub method: Method,
     /// Best validation perplexity seen by any live trainer.
     pub best_ppl: f64,
+    /// Perplexity of the last evaluation of the run.
     pub final_ppl: f64,
+    /// Max per-trainer inner-step count reached.
     pub total_inner_steps: u64,
+    /// Samples consumed across the run (the N axis of Theorem 2).
     pub total_samples: u64,
+    /// Communication events recorded in the ledger.
     pub comm_count: usize,
+    /// Total bytes moved across all recorded communications.
     pub comm_bytes: u64,
+    /// Simulated wall-clock (max over worker virtual clocks).
     pub virtual_time_s: f64,
+    /// Live trainers at the end (merging consolidates them).
     pub trainers_left: usize,
     /// Sum of barrier-wait + churn-preemption seconds across all workers
     /// (the cluster-efficiency axis of the dynamic-workload scenarios).
@@ -70,6 +92,15 @@ pub struct RunResult {
     pub mean_utilization: f64,
     /// (step, time, comms) at which target_ppl was first reached, if ever.
     pub time_to_target: Option<(u64, f64, usize)>,
+    /// Host wall-clock seconds spent inside `Coordinator::run` — NOT part
+    /// of the determinism contract (it varies run to run); the observable
+    /// behind the §Perf speedup table.
+    pub wall_clock_s: f64,
+    /// Resolved thread count the run executed with (`run.threads`, with
+    /// 0 resolved via `RUN_THREADS`). Not part of the determinism
+    /// contract's compared payload, but parallel runs must reproduce the
+    /// serial payload bit-for-bit.
+    pub threads: usize,
 }
 
 /// Apply the method's policy constraints to a copy of the config
@@ -121,6 +152,205 @@ struct PendingEval {
     params: Vec<f32>,
 }
 
+/// Shared read-only state a worker chain borrows from the coordinator
+/// while it runs on a pool thread (DESIGN.md §6). `Copy` so each thread
+/// captures its own handle.
+#[derive(Clone, Copy)]
+struct ChainCtx<'a> {
+    engine: &'a dyn TrainEngine,
+    corpus: &'a Corpus,
+    nodes: &'a [NodeModel],
+    scenario: &'a Scenario,
+    lr_schedule: &'a crate::schedule::Schedule,
+    lr_inner: f64,
+    step_jitter: f64,
+    eval_every: u64,
+    cap: u64,
+    width: usize,
+}
+
+/// Per-chain launch parameters, copied out of the coordinator before the
+/// borrow split (everything here is plain data; the worker itself is the
+/// one `&mut` the chain owns).
+#[derive(Clone, Copy)]
+struct ChainTask {
+    ti: usize,
+    wi: usize,
+    slot: usize,
+    node: usize,
+    /// Worker virtual clock at the start of the outer step.
+    start_time: f64,
+    /// Carried-in busy/preempted accumulators: the chain continues the
+    /// exact f64 addition sequence the serial loop would perform, so the
+    /// utilization accounting stays bit-identical (DESIGN.md §6).
+    busy_start: f64,
+    preempted_start: f64,
+    plan: StepPlan,
+    target: u64,
+    start_done: u64,
+    /// True for the trainer's designated eval worker: snapshot parameters
+    /// at each mid-loop evaluation step.
+    snapshot_params: bool,
+}
+
+/// What one worker chain hands back to the coordinator at the join.
+struct ChainOutput {
+    ti: usize,
+    wi: usize,
+    slot: usize,
+    /// (step, stats, completion time) for each executed inner step.
+    stats: Vec<(u64, StepStats, f64)>,
+    /// Parameter snapshots at mid-loop eval steps (eval worker only).
+    snaps: Vec<(u64, Vec<f32>)>,
+    end_time: f64,
+    busy_end: f64,
+    preempted_end: f64,
+}
+
+/// Per-step scratch the engine work writes through (`grad`/`accum` may
+/// be empty when the plan never accumulates).
+struct StepScratch<'a> {
+    buf: &'a mut TokenBatch,
+    grad: &'a mut [f32],
+    accum: &'a mut [f32],
+}
+
+/// The engine work of one inner step of worker `w`: sample a batch (or
+/// `accum_steps` of them under SwitchMode), run the gradient
+/// computation, apply the update. THE single implementation — the
+/// lockstep walk, the serial event loop and the parallel chains all
+/// call this, so their numerics cannot drift apart (DESIGN.md §6).
+/// Engine noise comes from the worker's private stream.
+fn exec_step(
+    engine: &dyn TrainEngine,
+    corpus: &Corpus,
+    w: &mut Worker,
+    plan: &StepPlan,
+    lr: f64,
+    scratch: StepScratch<'_>,
+) -> Result<StepStats> {
+    if plan.accum_steps > 1 {
+        // SwitchMode: accumulate accum_steps gradients at the micro
+        // batch, then one optimizer commit (§4.2).
+        scratch.accum.iter_mut().for_each(|x| *x = 0.0);
+        let mut agg = StepStats::default();
+        for _ in 0..plan.accum_steps {
+            w.sampler.next_batch(corpus, scratch.buf);
+            let s = engine.grad_step(
+                &w.state.params,
+                scratch.buf,
+                scratch.grad,
+                &mut w.noise_rng,
+            )?;
+            for (a, g) in scratch.accum.iter_mut().zip(scratch.grad.iter()) {
+                *a += *g / plan.accum_steps as f32;
+            }
+            agg.loss += s.loss / plan.accum_steps as f64;
+            agg.grad_sq_norm += s.grad_sq_norm / plan.accum_steps as f64;
+            agg.sigma2 += s.sigma2 / plan.accum_steps as f64;
+            agg.ip_var += s.ip_var / plan.accum_steps as f64;
+        }
+        engine.apply_update(&mut w.state, lr, scratch.accum)?;
+        Ok(agg)
+    } else {
+        w.sampler.next_batch(corpus, scratch.buf);
+        engine.train_step(&mut w.state, lr, scratch.buf, &mut w.noise_rng)
+    }
+}
+
+/// Compute-time of one inner step (node model × accumulation depth ×
+/// optional jitter from the worker's private time stream) — the single
+/// implementation behind both schedulers and the parallel chains.
+fn step_compute_time(
+    node: &NodeModel,
+    plan: &StepPlan,
+    width: usize,
+    jitter: f64,
+    time_rng: &mut Rng,
+) -> f64 {
+    let mut dt = node.step_time(plan.micro_batch, width - 1) * plan.accum_steps as f64;
+    if jitter > 0.0 {
+        // truncated at -3 sigma so time never goes negative
+        let z = time_rng.normal().clamp(-3.0, 3.0);
+        dt *= (1.0 + jitter * z).max(0.05);
+    }
+    dt
+}
+
+/// One worker's full inner-step chain for an outer round — the unit of
+/// parallelism (DESIGN.md §6). Performs, draw for draw and flop for
+/// flop, what the serial event loop executes for this worker, by
+/// calling the same [`exec_step`] / [`step_compute_time`] /
+/// `Scenario` primitives in the same per-stream order (time_rng:
+/// jitter then straggler per step; noise_rng: engine draws per step;
+/// virtual-time recurrence via `compute_span` from the previous step's
+/// end). Scratch buffers are chain-local, so chains share nothing
+/// mutable.
+fn run_worker_chain(ctx: ChainCtx<'_>, task: ChainTask, w: &mut Worker) -> Result<ChainOutput> {
+    crate::util::logger::set_thread_context(format!("t{}.w{}", task.ti, task.wi));
+    let plan = task.plan;
+    // chain-local scratch; the gradient buffers are only needed on the
+    // SwitchMode (accumulating) path
+    let (mut grad, mut accum) = if plan.accum_steps > 1 {
+        let p = ctx.engine.param_count();
+        (vec![0.0f32; p], vec![0.0f32; p])
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    let mut buf = TokenBatch::new(plan.micro_batch, ctx.width);
+    let mut stats_out: Vec<(u64, StepStats, f64)> = Vec::with_capacity(task.target as usize);
+    let mut snaps: Vec<(u64, Vec<f32>)> = Vec::new();
+    let mut now = task.start_time;
+    let mut busy = task.busy_start;
+    let mut preempted = task.preempted_start;
+    let node_model = &ctx.nodes[task.node];
+
+    for step in 1..=task.target {
+        // ---- timing (serial: step_duration + schedule_step_end) --------
+        let mut dt =
+            step_compute_time(node_model, &plan, ctx.width, ctx.step_jitter, &mut w.time_rng);
+        dt *= ctx.scenario.straggler_factor(&mut w.time_rng);
+        let (end, stall) = ctx.scenario.compute_span(task.node, now, dt);
+        busy += dt;
+        preempted += stall;
+        now = end;
+
+        // ---- compute (the shared exec_step, like the serial paths) -----
+        let lr = ctx.lr_schedule.lr(ctx.lr_inner, task.start_done + step);
+        let stats = exec_step(
+            ctx.engine,
+            ctx.corpus,
+            w,
+            &plan,
+            lr,
+            StepScratch { buf: &mut buf, grad: &mut grad, accum: &mut accum },
+        )?;
+        stats_out.push((step, stats, now));
+
+        // ---- mid-loop eval snapshot (same gating as the serial loop) ---
+        if task.snapshot_params
+            && ctx.eval_every > 0
+            && step % ctx.eval_every == 0
+            && !(ctx.cap > 0 && task.start_done + step >= ctx.cap)
+        {
+            snaps.push((step, w.state.params.clone()));
+        }
+    }
+    crate::util::logger::clear_thread_context();
+    Ok(ChainOutput {
+        ti: task.ti,
+        wi: task.wi,
+        slot: task.slot,
+        stats: stats_out,
+        snaps,
+        end_time: now,
+        busy_end: busy,
+        preempted_end: preempted,
+    })
+}
+
+/// The AdLoCo run loop over the simulated cluster: owns the trainer pool,
+/// the engine, the virtual clocks, the data pipeline and the recorders.
 pub struct Coordinator {
     cfg: Config,
     engine: Box<dyn TrainEngine>,
@@ -132,6 +362,8 @@ pub struct Coordinator {
     net: NetworkModel,
     scenario: Scenario,
     ledger: CommLedger,
+    /// Every record stream the run produces (steps, evals, merges,
+    /// utilization, notes, wall-clock).
     pub recorder: Recorder,
     rng: Rng,
     /// Reusable buffers (hot path: no allocation per step).
@@ -151,6 +383,10 @@ pub struct Coordinator {
     wait_s: Vec<f64>,
     comm_s: Vec<f64>,
     preempted_s: Vec<f64>,
+    /// Resolved thread count for the parallel runtime (>= 1).
+    threads: usize,
+    /// Host wall-clock of the last `run()` call (perf reporting only).
+    run_wall_s: f64,
 }
 
 impl Coordinator {
@@ -201,11 +437,13 @@ impl Coordinator {
         }
 
         let p = engine.param_count();
+        let threads = cfg.run.effective_threads();
         let mut recorder = Recorder::new();
         recorder.note("engine", engine.name());
         recorder.note("method", a.method.as_str());
         recorder.note("config", cfg.name.clone());
         recorder.note("scheduler", cfg.run.scheduler.as_str());
+        recorder.note("threads", threads.to_string());
 
         Ok(Coordinator {
             clock: VirtualClock::new(k * m),
@@ -231,6 +469,8 @@ impl Coordinator {
             wait_s: vec![0.0; k * m],
             comm_s: vec![0.0; k * m],
             preempted_s: vec![0.0; k * m],
+            threads,
+            run_wall_s: 0.0,
             cfg,
             engine,
             corpus,
@@ -239,14 +479,22 @@ impl Coordinator {
         })
     }
 
+    /// The (policy-resolved) config this coordinator runs.
     pub fn config(&self) -> &Config {
         &self.cfg
     }
 
+    /// The communication ledger accumulated so far.
     pub fn ledger(&self) -> &CommLedger {
         &self.ledger
     }
 
+    /// Resolved thread count of the parallel runtime (>= 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Trainers still alive (not consumed by a merge).
     pub fn live_trainers(&self) -> usize {
         self.trainers.iter().filter(|t| t.alive).count()
     }
@@ -280,7 +528,15 @@ impl Coordinator {
 
     /// Run the full schedule (T outer steps of H inner steps), honouring
     /// the checkpoint/resume settings in `run` config.
+    ///
+    /// Scheduler/thread dispatch: serial lockstep keeps the reference
+    /// walk; everything else goes through the event-equivalent path,
+    /// which fans worker chains out across `run.threads` OS threads when
+    /// threads > 1. A parallel lockstep run is legal because lockstep
+    /// configs are static by validation and the event path is bit-equal
+    /// to lockstep on static clusters (DESIGN.md §3.2, §6).
     pub fn run(&mut self) -> Result<RunResult> {
+        let wall0 = std::time::Instant::now();
         let mut start = 1u64;
         if let Some(path) = self.cfg.run.resume_from.clone() {
             let cp = crate::checkpoint::Checkpoint::load(&path)?;
@@ -292,8 +548,8 @@ impl Coordinator {
         let every = self.cfg.run.checkpoint_every as u64;
         for t in start..=outer_steps {
             let hit = match self.cfg.run.scheduler {
-                SchedulerKind::Lockstep => self.step_outer(t)?,
-                SchedulerKind::Event => self.step_outer_event(t)?,
+                SchedulerKind::Lockstep if self.threads <= 1 => self.step_outer(t)?,
+                _ => self.step_outer_event(t)?,
             };
             if let Some(path) = self.cfg.run.checkpoint_path.clone() {
                 if (every > 0 && t % every == 0) || t == outer_steps || hit {
@@ -307,6 +563,8 @@ impl Coordinator {
             }
         }
         self.record_utilization();
+        self.run_wall_s = wall0.elapsed().as_secs_f64();
+        self.recorder.wall_clock_s = self.run_wall_s;
         Ok(self.result())
     }
 
@@ -418,49 +676,31 @@ impl Coordinator {
         )
     }
 
-    /// The engine work of one inner step of worker `wi` of trainer `ti`:
-    /// sample a batch (or `accum_steps` of them under SwitchMode), run the
-    /// gradient computation, apply the update. Pure compute — no clocks,
-    /// no controller, no records — so both schedulers share it verbatim.
-    /// Engine noise comes from the worker's private stream.
-    fn exec_worker_step(&mut self, ti: usize, wi: usize, plan: &StepPlan, lr: f64) -> Result<StepStats> {
+    /// The engine work of one inner step of worker `wi` of trainer `ti`
+    /// over the coordinator's shared scratch buffers — a thin borrow
+    /// adapter around the shared [`exec_step`] (which the parallel
+    /// chains call with chain-local scratch).
+    fn exec_worker_step(
+        &mut self,
+        ti: usize,
+        wi: usize,
+        plan: &StepPlan,
+        lr: f64,
+    ) -> Result<StepStats> {
         let width = self.corpus.width();
         let bi = self.batch_buf_for(plan.micro_batch, width);
-
-        if plan.accum_steps > 1 {
-            // SwitchMode: accumulate accum_steps gradients at the
-            // micro batch, then one optimizer commit (§4.2).
-            self.accum_scratch.iter_mut().for_each(|x| *x = 0.0);
-            let mut agg = StepStats::default();
-            for _ in 0..plan.accum_steps {
-                let tr = &mut self.trainers[ti];
-                let w = &mut tr.workers[wi];
-                w.sampler.next_batch(&self.corpus, &mut self.batch_bufs[bi]);
-                let s = self.engine.grad_step(
-                    &w.state.params,
-                    &self.batch_bufs[bi],
-                    &mut self.grad_scratch,
-                    &mut w.noise_rng,
-                )?;
-                for (a, g) in self.accum_scratch.iter_mut().zip(&self.grad_scratch) {
-                    *a += *g / plan.accum_steps as f32;
-                }
-                agg.loss += s.loss / plan.accum_steps as f64;
-                agg.grad_sq_norm += s.grad_sq_norm / plan.accum_steps as f64;
-                agg.sigma2 += s.sigma2 / plan.accum_steps as f64;
-                agg.ip_var += s.ip_var / plan.accum_steps as f64;
-            }
-            let tr = &mut self.trainers[ti];
-            let w = &mut tr.workers[wi];
-            self.engine.apply_update(&mut w.state, lr, &self.accum_scratch)?;
-            Ok(agg)
-        } else {
-            let tr = &mut self.trainers[ti];
-            let w = &mut tr.workers[wi];
-            w.sampler.next_batch(&self.corpus, &mut self.batch_bufs[bi]);
-            self.engine
-                .train_step(&mut w.state, lr, &self.batch_bufs[bi], &mut w.noise_rng)
-        }
+        exec_step(
+            self.engine.as_ref(),
+            &self.corpus,
+            &mut self.trainers[ti].workers[wi],
+            plan,
+            lr,
+            StepScratch {
+                buf: &mut self.batch_bufs[bi],
+                grad: &mut self.grad_scratch,
+                accum: &mut self.accum_scratch,
+            },
+        )
     }
 
     /// Index of the reusable token buffer for this (batch, width),
@@ -480,22 +720,14 @@ impl Coordinator {
         }
     }
 
-    /// Compute-time of one inner step of worker `wi` (node model x
-    /// accumulation depth x optional jitter from the worker's private
-    /// time stream). Shared by both schedulers.
+    /// Compute-time of one inner step of worker `wi` — a borrow adapter
+    /// around the shared [`step_compute_time`] (used by both schedulers;
+    /// the parallel chains call it directly).
     fn step_duration(&mut self, ti: usize, wi: usize, plan: &StepPlan) -> f64 {
         let width = self.corpus.width();
         let jitter = self.cfg.cluster.step_jitter;
-        let tr = &mut self.trainers[ti];
-        let w = &mut tr.workers[wi];
-        let mut dt = self.nodes[w.node].step_time(plan.micro_batch, width - 1)
-            * plan.accum_steps as f64;
-        if jitter > 0.0 {
-            // truncated at -3 sigma so time never goes negative
-            let z = w.time_rng.normal().clamp(-3.0, 3.0);
-            dt *= (1.0 + jitter * z).max(0.05);
-        }
-        dt
+        let w = &mut self.trainers[ti].workers[wi];
+        step_compute_time(&self.nodes[w.node], plan, width, jitter, &mut w.time_rng)
     }
 
     /// Pick the trainers to merge this round (Algorithm 1). Empty or a
@@ -831,7 +1063,6 @@ impl Coordinator {
 
         let h = self.cfg.algo.inner_steps as u64;
         let cap = self.cfg.run.max_inner_steps as u64;
-        let eval_every = self.cfg.run.eval_every as u64;
         let live: Vec<usize> = (0..self.trainers.len())
             .filter(|&i| self.trainers[i].alive)
             .collect();
@@ -867,9 +1098,113 @@ impl Coordinator {
             });
         }
 
+        // ---- inner phase: serial event loop, or parallel worker chains
+        //      when run.threads > 1 (bit-identical by construction —
+        //      DESIGN.md §6, enforced by tests/determinism_parallel.rs)
+        if self.threads > 1 {
+            hit_target |= self.parallel_inner_phase(outer_t, &live, &mut runs)?;
+        } else {
+            hit_target |= self.event_inner_phase(outer_t, &live, &mut runs)?;
+        }
+
+        // ---- canonical flush: controller folds, step records, evals -----
+        for &ti in &live {
+            let mut r = match runs[ti].take() {
+                Some(r) => r,
+                None => continue,
+            };
+            if r.n_active == 0 {
+                continue; // fully preempted: the trainer sat this one out
+            }
+            r.stats.sort_by_key(|&(s, w, _, _)| (s, w));
+            for &(step, wi, ref stats, vt) in r.stats.iter() {
+                let tr = &mut self.trainers[ti];
+                tr.controller.observe(stats, r.plan.effective_batch());
+                self.total_samples += r.plan.effective_batch() as u64;
+                self.recorder.steps.push(StepRecord {
+                    global_step: r.start_done + step,
+                    outer_step: outer_t,
+                    trainer: ti,
+                    worker: wi,
+                    batch: r.plan.micro_batch,
+                    requested_batch: tr.controller.requested(),
+                    accum_steps: r.plan.accum_steps,
+                    loss: stats.loss,
+                    grad_sq_norm: stats.grad_sq_norm,
+                    sigma2: stats.sigma2,
+                    virtual_time_s: vt,
+                });
+            }
+            self.trainers[ti].inner_steps_done = r.start_done + r.target;
+            r.evals.sort_by_key(|&(s, _)| s);
+            for (_, rec) in r.evals {
+                self.recorder.evals.push(rec);
+            }
+        }
+
+        // ---- outer sync over active workers, in trainer order -----------
+        let param_bytes = (self.engine.param_count() * 4) as u64;
+        for &ti in &live {
+            let members: Vec<(usize, usize)> = self.trainers[ti]
+                .workers
+                .iter()
+                .filter(|w| w.active)
+                .map(|w| (w.clock_slot, w.node))
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            let m_active = members.len();
+            let slots: Vec<usize> = members.iter().map(|&(s, _)| s).collect();
+            let t_start = slots
+                .iter()
+                .map(|&s| self.clock.time(s))
+                .fold(0.0_f64, f64::max);
+            let factor = self
+                .scenario
+                .min_bandwidth_factor(members.iter().map(|&(_, n)| n), t_start);
+            let comm_t = self.net.scaled(factor).allreduce_time(param_bytes, m_active);
+            let t_after = self.barrier_tracked(&slots, comm_t);
+            if m_active > 1 {
+                self.ledger.record(CommEvent {
+                    kind: CommKind::OuterSync,
+                    at_virtual_s: t_after,
+                    bytes: (2 * (m_active as u64 - 1)) * param_bytes,
+                    participants: m_active,
+                    at_inner_step: self.total_samples,
+                });
+            }
+            let tr = &mut self.trainers[ti];
+            tr.outer_step_active(&mut self.delta_scratch);
+        }
+
+        // end-of-outer-step evaluation on the trainer parameters
+        for &ti in &live {
+            if self.trainers[ti].alive {
+                let reached = self.evaluate_trainer_params(ti, outer_t)?;
+                hit_target |= reached;
+            }
+        }
+        Ok(hit_target)
+    }
+
+    /// The serial inner phase of one event-driven outer step: seed the
+    /// queue with every active worker's first step, then consume events
+    /// in virtual-time order. Returns true if a mid-loop evaluation hit
+    /// the target perplexity.
+    fn event_inner_phase(
+        &mut self,
+        outer_t: u64,
+        live: &[usize],
+        runs: &mut [Option<TrainerRun>],
+    ) -> Result<bool> {
+        let cap = self.cfg.run.max_inner_steps as u64;
+        let eval_every = self.cfg.run.eval_every as u64;
+        let mut hit_target = false;
+
         // ---- seed the queue with every active worker's first step -------
         let mut queue = EventQueue::new();
-        for &ti in &live {
+        for &ti in live {
             let plan = runs[ti].as_ref().unwrap().plan;
             for wi in 0..self.trainers[ti].workers.len() {
                 if !self.trainers[ti].workers[wi].active {
@@ -968,83 +1303,138 @@ impl Coordinator {
                 SimEvent::SyncArrive { .. } | SimEvent::MergeArrive { .. } => {}
             }
         }
+        Ok(hit_target)
+    }
 
-        // ---- canonical flush: controller folds, step records, evals -----
-        for &ti in &live {
-            let mut r = match runs[ti].take() {
-                Some(r) => r,
+    /// The parallel inner phase (the tentpole of DESIGN.md §6): between
+    /// the outer-step prologue and the sync/merge rendezvous, workers are
+    /// fully independent — each owns its model state, data sampler and
+    /// RNG streams — so their inner-step chains fan out across
+    /// `run.threads` OS threads and join at the boundary. Chain outputs
+    /// are applied in canonical (trainer, worker) order and mid-loop
+    /// evaluations are computed after the join, which together with the
+    /// canonical flush makes the result bit-identical to the serial
+    /// event loop no matter how the OS schedules the pool.
+    fn parallel_inner_phase(
+        &mut self,
+        outer_t: u64,
+        live: &[usize],
+        runs: &mut [Option<TrainerRun>],
+    ) -> Result<bool> {
+        // ---- launch parameters, copied out before the borrow split ------
+        let mut metas: Vec<ChainTask> = Vec::new();
+        for &ti in live {
+            let r = runs[ti].as_ref().unwrap();
+            for (wi, w) in self.trainers[ti].workers.iter().enumerate() {
+                if !w.active {
+                    continue;
+                }
+                metas.push(ChainTask {
+                    ti,
+                    wi,
+                    slot: w.clock_slot,
+                    node: w.node,
+                    start_time: self.clock.time(w.clock_slot),
+                    busy_start: self.busy_s[w.clock_slot],
+                    preempted_start: self.preempted_s[w.clock_slot],
+                    plan: r.plan,
+                    target: r.target,
+                    start_done: r.start_done,
+                    snapshot_params: wi == r.eval_worker,
+                });
+            }
+        }
+
+        // ---- pair tasks with exclusive worker borrows -------------------
+        let ctx = ChainCtx {
+            engine: self.engine.as_ref(),
+            corpus: &self.corpus,
+            nodes: &self.nodes,
+            scenario: &self.scenario,
+            lr_schedule: &self.lr_schedule,
+            lr_inner: self.cfg.algo.lr_inner,
+            step_jitter: self.cfg.cluster.step_jitter,
+            eval_every: self.cfg.run.eval_every as u64,
+            cap: self.cfg.run.max_inner_steps as u64,
+            width: self.corpus.width(),
+        };
+        let mut tasks: Vec<(ChainTask, &mut Worker)> = Vec::with_capacity(metas.len());
+        {
+            let mut pending = metas.into_iter().peekable();
+            for (ti, tr) in self.trainers.iter_mut().enumerate() {
+                for (wi, w) in tr.workers.iter_mut().enumerate() {
+                    if pending.peek().is_some_and(|m| m.ti == ti && m.wi == wi) {
+                        tasks.push((pending.next().unwrap(), w));
+                    }
+                }
+            }
+        }
+
+        // ---- fan out / join: the shared work-stealing pool, so uneven
+        //      chains (stragglers, slow nodes) never strand a thread ----
+        let results: Vec<Result<ChainOutput>> = crate::util::run_cells(
+            self.threads,
+            tasks
+                .into_iter()
+                .map(|(m, w)| move || run_worker_chain(ctx, m, w))
+                .collect(),
+        );
+        let mut outputs = Vec::with_capacity(results.len());
+        for r in results {
+            outputs.push(r?);
+        }
+        // canonical application order (the scheduling order of the pool
+        // must leave no trace)
+        outputs.sort_by_key(|o| (o.ti, o.wi));
+
+        // ---- apply: clocks, time accounting, step stats, snapshots ------
+        let mut snaps_by_trainer: BTreeMap<usize, Vec<(u64, Vec<f32>)>> = BTreeMap::new();
+        for o in outputs {
+            self.clock.advance_to(o.slot, o.end_time);
+            self.busy_s[o.slot] = o.busy_end;
+            self.preempted_s[o.slot] = o.preempted_end;
+            let r = runs[o.ti].as_mut().unwrap();
+            for (step, stats, t) in o.stats {
+                r.stats.push((step, o.wi, stats, t));
+            }
+            if !o.snaps.is_empty() {
+                snaps_by_trainer.entry(o.ti).or_default().extend(o.snaps);
+            }
+        }
+
+        // ---- mid-loop evaluations (deferred to the join; the eval RNG
+        //      is keyed by (seed, outer_step) so timing leaves no trace) -
+        let mut hit_target = false;
+        for &ti in live {
+            let snaps = match snaps_by_trainer.remove(&ti) {
+                Some(s) => s,
                 None => continue,
             };
-            if r.n_active == 0 {
-                continue; // fully preempted: the trainer sat this one out
-            }
-            r.stats.sort_by_key(|&(s, w, _, _)| (s, w));
-            for &(step, wi, ref stats, vt) in r.stats.iter() {
-                let tr = &mut self.trainers[ti];
-                tr.controller.observe(stats, r.plan.effective_batch());
-                self.total_samples += r.plan.effective_batch() as u64;
-                self.recorder.steps.push(StepRecord {
-                    global_step: r.start_done + step,
+            for (step, params) in snaps {
+                let (global_step, vt) = {
+                    let r = runs[ti].as_ref().unwrap();
+                    let vt = r
+                        .stats
+                        .iter()
+                        .filter(|&&(s, _, _, _)| s == step)
+                        .map(|&(_, _, _, t)| t)
+                        .fold(0.0f64, f64::max);
+                    (r.start_done + step, vt)
+                };
+                let (loss, ppl) = self.compute_eval(&params, outer_t)?;
+                hit_target |=
+                    self.cfg.run.target_ppl > 0.0 && ppl <= self.cfg.run.target_ppl;
+                let rec = EvalRecord {
+                    global_step,
                     outer_step: outer_t,
                     trainer: ti,
-                    worker: wi,
-                    batch: r.plan.micro_batch,
-                    requested_batch: tr.controller.requested(),
-                    accum_steps: r.plan.accum_steps,
-                    loss: stats.loss,
-                    grad_sq_norm: stats.grad_sq_norm,
-                    sigma2: stats.sigma2,
+                    loss,
+                    perplexity: ppl,
                     virtual_time_s: vt,
-                });
-            }
-            self.trainers[ti].inner_steps_done = r.start_done + r.target;
-            r.evals.sort_by_key(|&(s, _)| s);
-            for (_, rec) in r.evals {
-                self.recorder.evals.push(rec);
-            }
-        }
-
-        // ---- outer sync over active workers, in trainer order -----------
-        let param_bytes = (self.engine.param_count() * 4) as u64;
-        for &ti in &live {
-            let members: Vec<(usize, usize)> = self.trainers[ti]
-                .workers
-                .iter()
-                .filter(|w| w.active)
-                .map(|w| (w.clock_slot, w.node))
-                .collect();
-            if members.is_empty() {
-                continue;
-            }
-            let m_active = members.len();
-            let slots: Vec<usize> = members.iter().map(|&(s, _)| s).collect();
-            let t_start = slots
-                .iter()
-                .map(|&s| self.clock.time(s))
-                .fold(0.0_f64, f64::max);
-            let factor = self
-                .scenario
-                .min_bandwidth_factor(members.iter().map(|&(_, n)| n), t_start);
-            let comm_t = self.net.scaled(factor).allreduce_time(param_bytes, m_active);
-            let t_after = self.barrier_tracked(&slots, comm_t);
-            if m_active > 1 {
-                self.ledger.record(CommEvent {
-                    kind: CommKind::OuterSync,
-                    at_virtual_s: t_after,
-                    bytes: (2 * (m_active as u64 - 1)) * param_bytes,
-                    participants: m_active,
-                    at_inner_step: self.total_samples,
-                });
-            }
-            let tr = &mut self.trainers[ti];
-            tr.outer_step_active(&mut self.delta_scratch);
-        }
-
-        // end-of-outer-step evaluation on the trainer parameters
-        for &ti in &live {
-            if self.trainers[ti].alive {
-                let reached = self.evaluate_trainer_params(ti, outer_t)?;
-                hit_target |= reached;
+                    comm_count: self.ledger.count(),
+                    comm_bytes: self.ledger.total_bytes(),
+                };
+                runs[ti].as_mut().unwrap().evals.push((step, rec));
             }
         }
         Ok(hit_target)
@@ -1262,6 +1652,8 @@ impl Coordinator {
             } else {
                 None
             },
+            wall_clock_s: self.run_wall_s,
+            threads: self.threads,
         }
     }
 }
@@ -1519,6 +1911,45 @@ mod tests {
             assert_eq!(a.perplexity.to_bits(), b.perplexity.to_bits());
             assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits());
         }
+    }
+
+    #[test]
+    fn parallel_threads_match_serial_exactly() {
+        // The parallel runtime's core invariant (DESIGN.md §6), in-module
+        // smoke form; tests/determinism_parallel.rs holds the full suite.
+        let mk = |threads: usize| {
+            let mut cfg = mock_cfg();
+            cfg.run.scheduler = crate::config::SchedulerKind::Event;
+            cfg.run.threads = threads;
+            cfg
+        };
+        let run = |cfg: Config| {
+            let engine = crate::engine::build_engine(&cfg).unwrap();
+            let mut c = Coordinator::new(cfg, engine).unwrap();
+            let r = c.run().unwrap();
+            (r, c.recorder.clone(), c.ledger.clone())
+        };
+        let (ra, reca, leda) = run(mk(1));
+        let (rb, recb, ledb) = run(mk(4));
+        assert_eq!(ra.best_ppl.to_bits(), rb.best_ppl.to_bits());
+        assert_eq!(ra.virtual_time_s.to_bits(), rb.virtual_time_s.to_bits());
+        assert_eq!(ra.total_idle_s.to_bits(), rb.total_idle_s.to_bits());
+        assert_eq!(ra.total_samples, rb.total_samples);
+        assert_eq!(leda.count(), ledb.count());
+        for (a, b) in leda.events.iter().zip(ledb.events.iter()) {
+            assert_eq!(a.at_virtual_s.to_bits(), b.at_virtual_s.to_bits());
+        }
+        assert_eq!(reca.steps.len(), recb.steps.len());
+        for (a, b) in reca.steps.iter().zip(recb.steps.iter()) {
+            assert_eq!((a.global_step, a.trainer, a.worker), (b.global_step, b.trainer, b.worker));
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits());
+        }
+        assert_eq!(reca.evals.len(), recb.evals.len());
+        for (a, b) in reca.evals.iter().zip(recb.evals.iter()) {
+            assert_eq!(a.perplexity.to_bits(), b.perplexity.to_bits());
+        }
+        assert_eq!(rb.threads, 4);
     }
 
     #[test]

@@ -6,19 +6,25 @@ use crate::util::{Rng, ZipfTable};
 /// Generation parameters for a synthetic corpus.
 #[derive(Clone, Debug)]
 pub struct CorpusSpec {
+    /// Number of sequences to generate.
     pub sequences: usize,
-    pub seq_width: usize, // seq_len + 1 tokens per stored example
+    /// seq_len + 1 tokens per stored example.
+    pub seq_width: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Zipf exponent of the unigram background.
     pub zipf_s: f64,
     /// Probability a position is drawn from the Markov chain rather than
     /// the unigram background (higher = more learnable structure).
     pub structure: f64,
     /// Number of distinct repeated templates woven into the corpus.
     pub templates: usize,
+    /// Generation seed.
     pub seed: u64,
 }
 
 impl CorpusSpec {
+    /// Spec with the default structure/template mix.
     pub fn new(sequences: usize, seq_len: usize, vocab: usize, zipf_s: f64, seed: u64) -> Self {
         CorpusSpec {
             sequences,
@@ -35,6 +41,7 @@ impl CorpusSpec {
 /// A fully-materialized token corpus (train or validation split).
 #[derive(Clone)]
 pub struct Corpus {
+    /// The spec the corpus was generated from.
     pub spec: CorpusSpec,
     /// Row-major `[sequences, seq_width]`.
     tokens: Vec<i32>,
@@ -91,18 +98,22 @@ impl Corpus {
         Corpus { spec, tokens }
     }
 
+    /// Number of sequences.
     pub fn len(&self) -> usize {
         self.spec.sequences
     }
 
+    /// True when the corpus holds no sequences.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Tokens per sequence (seq_len + 1).
     pub fn width(&self) -> usize {
         self.spec.seq_width
     }
 
+    /// Read-only view of sequence `i`.
     #[inline]
     pub fn sequence(&self, i: usize) -> &[i32] {
         let w = self.spec.seq_width;

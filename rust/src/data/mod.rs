@@ -28,22 +28,28 @@ pub use shard::{make_shards, Shard};
 /// exactly the layout the PJRT `train_step` artifacts expect.
 #[derive(Clone, Debug)]
 pub struct TokenBatch {
+    /// Row-major token storage, `batch * width` entries.
     pub tokens: Vec<i32>,
+    /// Number of sequences (rows).
     pub batch: usize,
+    /// Tokens per sequence (seq_len + 1).
     pub width: usize,
 }
 
 impl TokenBatch {
+    /// Zero-filled batch of shape `[batch, width]`.
     pub fn new(batch: usize, width: usize) -> Self {
         TokenBatch { tokens: vec![0; batch * width], batch, width }
     }
 
+    /// Mutable view of row `i`.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [i32] {
         let w = self.width;
         &mut self.tokens[i * w..(i + 1) * w]
     }
 
+    /// Read-only view of row `i`.
     #[inline]
     pub fn row(&self, i: usize) -> &[i32] {
         &self.tokens[i * self.width..(i + 1) * self.width]

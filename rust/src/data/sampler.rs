@@ -9,6 +9,7 @@
 use super::{Corpus, Shard, TokenBatch};
 use crate::util::Rng;
 
+/// Epoch-shuffled without-replacement sampler over one worker's shard.
 pub struct BatchSampler {
     shard: Shard,
     cursor: usize,
@@ -19,6 +20,7 @@ pub struct BatchSampler {
 }
 
 impl BatchSampler {
+    /// Sampler over `shard` with its own shuffle stream.
     pub fn new(shard: Shard, rng: Rng) -> Self {
         let order: Vec<usize> = (0..shard.len()).collect();
         let mut s = BatchSampler { shard, cursor: 0, order, rng, drawn: 0 };

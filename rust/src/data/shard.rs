@@ -7,14 +7,17 @@ use crate::util::Rng;
 /// A shard is a list of sequence indices into the shared corpus.
 #[derive(Clone, Debug)]
 pub struct Shard {
+    /// Sequence indices into the shared corpus.
     pub indices: Vec<usize>,
 }
 
 impl Shard {
+    /// Number of sequences in the shard.
     pub fn len(&self) -> usize {
         self.indices.len()
     }
 
+    /// True when the shard holds no sequences.
     pub fn is_empty(&self) -> bool {
         self.indices.is_empty()
     }

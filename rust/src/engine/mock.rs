@@ -24,6 +24,7 @@ use crate::data::TokenBatch;
 use crate::util::Rng;
 use anyhow::{ensure, Result};
 
+/// Generation parameters of the synthetic objective.
 #[derive(Clone, Debug)]
 pub struct MockSpec {
     /// Problem dimension d.
@@ -32,6 +33,7 @@ pub struct MockSpec {
     pub noise: f64,
     /// Condition number of A (eigenvalues in [1/condition, 1]).
     pub condition: f64,
+    /// Seed of the objective (eigen-directions, optimum, inits).
     pub seed: u64,
     /// Use plain SGD instead of AdamW for the inner update (the paper's
     /// theorems assume SGD; theory benches set this).
@@ -67,6 +69,11 @@ const LOSS_FLOOR: f64 = 1.0;
 /// Max chunks used for the variance statistics (matches aot.py tiny/small).
 const MAX_CHUNKS: usize = 8;
 
+/// The synthetic engine. Construction is deterministic in the spec, and
+/// the instance is immutable after construction — every method takes
+/// `&self`, so one engine is freely shared across the parallel runtime's
+/// worker threads (statistic scratch is thread-local, keeping the hot
+/// path allocation-free without any cross-thread state).
 pub struct MockEngine {
     spec: MockSpec,
     /// Diagonal of A.
@@ -74,12 +81,10 @@ pub struct MockEngine {
     /// Optimum x*.
     xstar: Vec<f32>,
     adamw: AdamWParams,
-    /// Scratch: chunk-mean gradients [C][d] (reused across steps).
-    chunk_scratch: Vec<Vec<f32>>,
-    gbar_scratch: Vec<f32>,
 }
 
 impl MockEngine {
+    /// Build the objective (eigenspectrum + optimum) from `spec`.
     pub fn new(spec: MockSpec) -> Self {
         assert!(spec.dim >= 1);
         let mut rng = Rng::new(spec.seed);
@@ -91,17 +96,10 @@ impl MockEngine {
             })
             .collect();
         let xstar: Vec<f32> = (0..spec.dim).map(|_| rng.normal_ms(0.0, 1.0) as f32).collect();
-        let d = spec.dim;
-        MockEngine {
-            spec,
-            eig,
-            xstar,
-            adamw: AdamWParams::default(),
-            chunk_scratch: vec![vec![0.0; d]; MAX_CHUNKS],
-            gbar_scratch: vec![0.0; d],
-        }
+        MockEngine { spec, eig, xstar, adamw: AdamWParams::default() }
     }
 
+    /// The generation parameters this engine was built from.
     pub fn spec(&self) -> &MockSpec {
         &self.spec
     }
@@ -136,12 +134,40 @@ impl MockEngine {
     /// Gradient + statistics shared by train_step / grad_step. Fills
     /// gbar into `grad_out` and returns stats. All noise comes from the
     /// caller's stream (see the engine module's stochasticity contract).
+    /// Scratch is thread-local, so the hot path stays allocation-free
+    /// after each thread's first step while concurrent callers on
+    /// different worker threads never contend — the thread contract of
+    /// `TrainEngine` (DESIGN.md §6).
     fn compute_grad(
-        &mut self,
+        &self,
         params: &[f32],
         batch: usize,
         grad_out: &mut [f32],
         noise: &mut Rng,
+    ) -> StepStats {
+        thread_local! {
+            /// (gbar, flat [C * d] chunk-mean gradients), grown on demand.
+            static SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
+                const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+        }
+        SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let (gbar, chunk_buf) = &mut *scratch;
+            self.compute_grad_with(params, batch, grad_out, noise, gbar, chunk_buf)
+        })
+    }
+
+    /// `compute_grad` body over caller-provided scratch (every element
+    /// used is overwritten before it is read, so stale contents from a
+    /// previous step cannot leak into the statistics).
+    fn compute_grad_with(
+        &self,
+        params: &[f32],
+        batch: usize,
+        grad_out: &mut [f32],
+        noise: &mut Rng,
+        gbar: &mut Vec<f32>,
+        chunk_buf: &mut Vec<f32>,
     ) -> StepStats {
         let d = self.spec.dim;
         let chunks = batch.min(MAX_CHUNKS).max(1);
@@ -150,15 +176,21 @@ impl MockEngine {
         // each coordinate gets noise/sqrt(d * chunk_size).
         let coord_std = self.spec.noise / (d as f64 * chunk_size).sqrt();
 
-        let mut gbar = std::mem::take(&mut self.gbar_scratch);
-        let true_nsq = self.true_grad(params, &mut gbar);
-        self.gbar_scratch = gbar;
+        if gbar.len() < d {
+            gbar.resize(d, 0.0);
+        }
+        let gbar = &mut gbar[..d];
+        let true_nsq = self.true_grad(params, gbar);
 
-        // build chunk gradients = true grad + chunk noise
+        // build chunk gradients = true grad + chunk noise, flat [C * d]
+        if chunk_buf.len() < chunks * d {
+            chunk_buf.resize(chunks * d, 0.0);
+        }
+        let chunk_buf = &mut chunk_buf[..chunks * d];
         for c in 0..chunks {
-            let buf = &mut self.chunk_scratch[c];
-            for i in 0..d {
-                buf[i] = self.gbar_scratch[i] + noise.normal_ms(0.0, coord_std) as f32;
+            let buf = &mut chunk_buf[c * d..(c + 1) * d];
+            for (b, g) in buf.iter_mut().zip(gbar.iter()) {
+                *b = *g + noise.normal_ms(0.0, coord_std) as f32;
             }
         }
         // gbar = mean over chunks; s1 = ||gbar||^2
@@ -166,7 +198,7 @@ impl MockEngine {
         for i in 0..d {
             let mut acc = 0.0f64;
             for c in 0..chunks {
-                acc += self.chunk_scratch[c][i] as f64;
+                acc += chunk_buf[c * d + i] as f64;
             }
             let g = acc / chunks as f64;
             grad_out[i] = g as f32;
@@ -176,13 +208,13 @@ impl MockEngine {
         let mut s2 = 0.0f64;
         let mut ip = [0.0f64; MAX_CHUNKS];
         for c in 0..chunks {
-            let buf = &self.chunk_scratch[c];
+            let buf = &chunk_buf[c * d..(c + 1) * d];
             let mut acc = 0.0f64;
             let mut dotp = 0.0f64;
-            for i in 0..d {
-                let diff = buf[i] as f64 - grad_out[i] as f64;
+            for (x, g) in buf.iter().zip(grad_out.iter()) {
+                let diff = *x as f64 - *g as f64;
                 acc += diff * diff;
-                dotp += buf[i] as f64 * grad_out[i] as f64;
+                dotp += *x as f64 * *g as f64;
             }
             s2 += acc;
             ip[c] = dotp;
@@ -240,7 +272,7 @@ impl TrainEngine for MockEngine {
     }
 
     fn train_step(
-        &mut self,
+        &self,
         state: &mut ModelState,
         lr: f64,
         batch: &TokenBatch,
@@ -263,7 +295,7 @@ impl TrainEngine for MockEngine {
     }
 
     fn grad_step(
-        &mut self,
+        &self,
         params: &[f32],
         batch: &TokenBatch,
         grad_out: &mut [f32],
@@ -273,7 +305,7 @@ impl TrainEngine for MockEngine {
         Ok(self.compute_grad(params, batch.batch, grad_out, noise))
     }
 
-    fn apply_update(&mut self, state: &mut ModelState, lr: f64, grad: &[f32]) -> Result<()> {
+    fn apply_update(&self, state: &mut ModelState, lr: f64, grad: &[f32]) -> Result<()> {
         let lr = lr * self.spec.lr_scale;
         if self.spec.use_sgd {
             sgd_step(state, grad, lr);
@@ -283,7 +315,7 @@ impl TrainEngine for MockEngine {
         Ok(())
     }
 
-    fn eval_loss(&mut self, params: &[f32], batch: &TokenBatch, noise: &mut Rng) -> Result<f64> {
+    fn eval_loss(&self, params: &[f32], batch: &TokenBatch, noise: &mut Rng) -> Result<f64> {
         // Evaluation sees the true objective plus small observation noise.
         let obs = noise.normal_ms(0.0, self.spec.noise * 0.01 / (batch.batch as f64).sqrt());
         Ok(self.true_loss(params) + obs)
@@ -304,7 +336,7 @@ mod tests {
 
     #[test]
     fn training_descends() {
-        let mut e = engine();
+        let e = engine();
         let mut noise = Rng::new(100);
         let mut st = e.init_state(0);
         let l0 = e.true_loss(&st.params);
@@ -317,7 +349,7 @@ mod tests {
 
     #[test]
     fn sigma2_estimate_near_truth() {
-        let mut e = engine();
+        let e = engine();
         let mut noise = Rng::new(101);
         let st = e.init_state(0);
         let mut grad = vec![0.0f32; 200];
@@ -334,7 +366,7 @@ mod tests {
 
     #[test]
     fn grad_noise_shrinks_with_batch() {
-        let mut e = engine();
+        let e = engine();
         let mut noise = Rng::new(102);
         let st = e.init_state(0);
         let mut grad = vec![0.0f32; 200];
@@ -366,8 +398,8 @@ mod tests {
     #[test]
     fn deterministic_given_equal_noise_streams() {
         let mk = || MockEngine::new(MockSpec { seed: 11, ..MockSpec::default() });
-        let mut a = mk();
-        let mut b = mk();
+        let a = mk();
+        let b = mk();
         let mut na = Rng::new(55);
         let mut nb = Rng::new(55);
         let mut sa = a.init_state(2);
@@ -395,8 +427,8 @@ mod tests {
         // SwitchMode invariant: grad_step + apply_update == train_step
         // when no accumulation happens, given identical noise draws.
         let spec = MockSpec { dim: 50, noise: 0.0, condition: 5.0, seed: 7, ..MockSpec::default() };
-        let mut e1 = MockEngine::new(spec.clone());
-        let mut e2 = MockEngine::new(spec);
+        let e1 = MockEngine::new(spec.clone());
+        let e2 = MockEngine::new(spec);
         let mut n1 = Rng::new(9);
         let mut n2 = Rng::new(9);
         let mut s1 = e1.init_state(0);
@@ -412,7 +444,7 @@ mod tests {
 
     #[test]
     fn rejects_unsupported_batch() {
-        let mut e = engine();
+        let e = engine();
         let mut noise = Rng::new(0);
         let mut st = e.init_state(0);
         assert!(e.train_step(&mut st, 0.01, &batch(3), &mut noise).is_err());

@@ -47,14 +47,18 @@ pub struct StepStats {
 /// plain dense ops.
 #[derive(Clone, Debug)]
 pub struct ModelState {
+    /// Flat parameter vector (length = `TrainEngine::param_count`).
     pub params: Vec<f32>,
+    /// AdamW first-moment buffer (same length as `params`).
     pub m: Vec<f32>,
+    /// AdamW second-moment buffer (same length as `params`).
     pub v: Vec<f32>,
     /// 1-based count of optimizer updates applied (AdamW bias correction).
     pub step: u64,
 }
 
 impl ModelState {
+    /// Fresh state around `params` with zeroed moments and step count.
     pub fn zeros_like(params: Vec<f32>) -> Self {
         let n = params.len();
         ModelState { params, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
@@ -70,7 +74,16 @@ impl ModelState {
 }
 
 /// Compute substrate interface (see module docs).
-pub trait TrainEngine {
+///
+/// Thread contract (DESIGN.md §6): engines are shared by reference across
+/// the worker threads of the parallel runtime, so the trait requires
+/// `Send + Sync` and every method takes `&self`. All *mutable* state an
+/// engine call touches travels through its arguments (`ModelState`,
+/// gradient buffers, RNG streams), which the coordinator hands out
+/// per-worker — two workers never alias the same mutable argument.
+/// Engines with interior caches (the PJRT lazy-compile tables) must
+/// guard them with locks.
+pub trait TrainEngine: Send + Sync {
     /// Human-readable engine identifier for logs/metrics.
     fn name(&self) -> String;
 
@@ -98,7 +111,7 @@ pub trait TrainEngine {
     /// `batch.batch` must be a supported batch size. All stochastic
     /// draws must come from `noise` (see the module docs).
     fn train_step(
-        &mut self,
+        &self,
         state: &mut ModelState,
         lr: f64,
         batch: &TokenBatch,
@@ -108,7 +121,7 @@ pub trait TrainEngine {
     /// Gradient + stats at max_batch without applying an update
     /// (SwitchMode micro-step). Writes the mean gradient into `grad_out`.
     fn grad_step(
-        &mut self,
+        &self,
         params: &[f32],
         batch: &TokenBatch,
         grad_out: &mut [f32],
@@ -116,19 +129,23 @@ pub trait TrainEngine {
     ) -> Result<StepStats>;
 
     /// Commit an (accumulated) gradient with AdamW (SwitchMode commit).
-    fn apply_update(&mut self, state: &mut ModelState, lr: f64, grad: &[f32]) -> Result<()>;
+    fn apply_update(&self, state: &mut ModelState, lr: f64, grad: &[f32]) -> Result<()>;
 
     /// Mean loss over one eval batch (batch.batch == eval_batch()).
-    fn eval_loss(&mut self, params: &[f32], batch: &TokenBatch, noise: &mut Rng) -> Result<f64>;
+    fn eval_loss(&self, params: &[f32], batch: &TokenBatch, noise: &mut Rng) -> Result<f64>;
 }
 
 /// Shared AdamW update used by the MockEngine (the XlaEngine's AdamW is
 /// fused into the HLO; `python/tests/test_model.py::test_adamw_against_
 /// manual_numpy` pins both to the same arithmetic).
 pub struct AdamWParams {
+    /// First-moment decay rate.
     pub beta1: f64,
+    /// Second-moment decay rate.
     pub beta2: f64,
+    /// Denominator fuzz term.
     pub eps: f64,
+    /// Decoupled weight-decay coefficient.
     pub weight_decay: f64,
 }
 
@@ -139,6 +156,8 @@ impl Default for AdamWParams {
     }
 }
 
+/// One AdamW update of `state` along `grad` (bias-corrected, decoupled
+/// weight decay — the arithmetic the artifact HLO is pinned to).
 pub fn adamw_step(state: &mut ModelState, grad: &[f32], lr: f64, p: &AdamWParams) {
     debug_assert_eq!(state.params.len(), grad.len());
     state.step += 1;

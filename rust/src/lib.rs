@@ -72,9 +72,23 @@
 //!
 //! Or from the shell: `cargo run --release --example heterogeneous_cluster`.
 //!
+//! # Parallel execution
+//!
+//! Set `run.threads` (CLI `--threads`, env `RUN_THREADS`) to fan each
+//! outer round's worker chains out across OS threads, and `adloco sweep
+//! --jobs N` to parallelize sweep grids across cells. Parallelism is
+//! **bit-transparent**: ledgers, records and results are bit-identical
+//! to the serial run at any thread count — only wall-clock changes. The
+//! contract and its proof obligations live in DESIGN.md §6 and are
+//! enforced by `tests/determinism_parallel.rs`.
+//!
 //! See DESIGN.md for the architecture (§3 covers the discrete-event
-//! clock, schedulers and scenarios; §4 the synthetic corpus) and
-//! EXPERIMENTS.md for the paper-vs-measured record and §Perf notes.
+//! clock, schedulers and scenarios; §4 the synthetic corpus; §6 the
+//! parallel runtime and determinism contract) and EXPERIMENTS.md for the
+//! paper-vs-measured record and §Perf notes (serial-vs-parallel speedup
+//! table included).
+
+#![warn(missing_docs)]
 
 pub mod batching;
 pub mod benchkit;

@@ -9,9 +9,16 @@
 //!
 //! Examples:
 //!   adloco train --preset quick
+//!   adloco train --preset hetero_dynamic --threads 4
 //!   adloco train --preset xla_tiny --set algo.outer_steps=4 --out runs
 //!   adloco compare --preset mock_default --methods adloco,diloco,localsgd
+//!   adloco sweep --preset quick --param algo.batching.eta \
+//!       --values 0.4,0.8,1.6 --jobs 4
 //!   adloco calibrate --profile tiny
+//!
+//! `--threads N` drives the in-run parallel execution runtime; `--jobs N`
+//! parallelizes sweep grids across cells. Both are bit-identical to their
+//! serial counterparts (DESIGN.md §6).
 
 use adloco::cli;
 use adloco::config::{presets, Config, Method};
@@ -84,6 +91,9 @@ fn load_config(args: &cli::Args) -> Result<Config> {
     if let Some(t) = args.opt_parse::<f64>("target-ppl")? {
         cfg.run.target_ppl = t;
     }
+    if let Some(n) = args.opt_parse::<usize>("threads")? {
+        cfg.run.threads = n;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -105,6 +115,12 @@ fn print_result(r: &RunResult) {
     if let Some((step, t, comms)) = r.time_to_target {
         println!("  time-to-target  : step {step}, {t:.3}s, {comms} comms");
     }
+    println!(
+        "  wall clock      : {:.3}s on {} thread{}",
+        r.wall_clock_s,
+        r.threads,
+        if r.threads == 1 { "" } else { "s" }
+    );
 }
 
 fn cmd_train(args: &cli::Args) -> Result<()> {
@@ -150,7 +166,7 @@ fn cmd_compare(args: &cli::Args) -> Result<()> {
 fn cmd_calibrate(args: &cli::Args) -> Result<()> {
     let profile = args.opt("profile").unwrap_or("tiny");
     let dir = args.opt("artifacts").unwrap_or("artifacts");
-    let mut engine = adloco::runtime::XlaEngine::load(dir, profile)?;
+    let engine = adloco::runtime::XlaEngine::load(dir, profile)?;
     let seq = engine.meta().seq_len;
     let vocab = engine.meta().vocab as i64;
     let width = seq + 1;
@@ -274,7 +290,9 @@ fn cmd_report(args: &cli::Args) -> Result<()> {
 }
 
 /// Grid-sweep one config knob: `adloco sweep --preset X --param
-/// algo.batching.eta --values 0.4,0.8,1.6 [--methods adloco,diloco]`.
+/// algo.batching.eta --values 0.4,0.8,1.6 [--methods adloco,diloco]
+/// [--jobs 4]`. `--jobs` fans the grid's cells out across OS threads;
+/// cell results are bit-identical to the serial walk (DESIGN.md §6).
 fn cmd_sweep(args: &cli::Args) -> Result<()> {
     let base = load_config(args)?;
     let param = args
@@ -292,7 +310,16 @@ fn cmd_sweep(args: &cli::Args) -> Result<()> {
         .split(',')
         .map(Method::parse)
         .collect::<Result<_>>()?;
-    let rows = adloco::sweep::run_sweep(&base, param, &values, &methods)?;
+    let jobs = args.opt_parse::<usize>("jobs")?.unwrap_or(1);
+    let t0 = std::time::Instant::now();
+    let rows = adloco::sweep::run_sweep_jobs(&base, param, &values, &methods, jobs)?;
     print!("{}", adloco::sweep::format_table(param, &rows));
+    println!(
+        "grid wall clock: {:.3}s across {} cells ({} job{})",
+        t0.elapsed().as_secs_f64(),
+        rows.len(),
+        jobs.max(1),
+        if jobs.max(1) == 1 { "" } else { "s" }
+    );
     Ok(())
 }

@@ -41,6 +41,8 @@ pub enum MergePolicy {
     Random,
 }
 
+/// `check_merge` with a pluggable selection policy; the `Random` arm
+/// draws from `rng` (a globally-ordered stream — see DESIGN.md §3.4).
 pub fn check_merge_with_policy(
     requests: &[(usize, usize)],
     w: usize,

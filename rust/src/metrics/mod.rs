@@ -14,38 +14,61 @@ use std::io::Write;
 pub struct StepRecord {
     /// Global inner-step counter across the whole run.
     pub global_step: u64,
+    /// Outer step (1-based) the inner step ran inside.
     pub outer_step: u64,
+    /// Trainer id.
     pub trainer: usize,
+    /// Worker position within the trainer.
     pub worker: usize,
+    /// Micro-batch each engine call executed at.
     pub batch: usize,
+    /// Controller-requested batch after folding this step in.
     pub requested_batch: usize,
+    /// SwitchMode accumulation depth (1 = plain step).
     pub accum_steps: usize,
+    /// Mean training loss observed by the step.
     pub loss: f64,
+    /// ||mean gradient||^2 statistic of the step.
     pub grad_sq_norm: f64,
+    /// Estimated per-sample gradient variance of the step.
     pub sigma2: f64,
+    /// Worker virtual clock when the step completed.
     pub virtual_time_s: f64,
 }
 
 /// One validation pass.
 #[derive(Clone, Debug)]
 pub struct EvalRecord {
+    /// Global inner-step counter at evaluation time.
     pub global_step: u64,
+    /// Outer step the evaluation belongs to.
     pub outer_step: u64,
+    /// Trainer whose parameters were evaluated.
     pub trainer: usize,
+    /// Mean validation loss.
     pub loss: f64,
+    /// exp(loss), clamped (see [`perplexity`]).
     pub perplexity: f64,
+    /// Virtual time at which the evaluated parameters existed.
     pub virtual_time_s: f64,
+    /// Ledger communication count at evaluation time.
     pub comm_count: usize,
+    /// Ledger communication bytes at evaluation time.
     pub comm_bytes: u64,
 }
 
 /// A trainer-merge event (MIT DoMerge).
 #[derive(Clone, Debug)]
 pub struct MergeRecord {
+    /// Outer step the merge round ran at.
     pub outer_step: u64,
+    /// Trainers consumed by the merge.
     pub merged: Vec<usize>,
+    /// Trainer that carries the merged parameters forward.
     pub representative: usize,
+    /// Live trainers after the merge.
     pub trainers_left: usize,
+    /// Virtual time of the post-merge barrier.
     pub virtual_time_s: f64,
 }
 
@@ -57,16 +80,24 @@ pub struct MergeRecord {
 /// time") is `wait_s + preempted_s`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct UtilRecord {
+    /// Trainer id.
     pub trainer: usize,
+    /// Worker position within the trainer.
     pub worker: usize,
+    /// Simulated node the worker ran on.
     pub node: usize,
+    /// Compute seconds.
     pub busy_s: f64,
+    /// Barrier-wait seconds (idling behind slower peers).
     pub wait_s: f64,
+    /// Modeled communication seconds.
     pub comm_s: f64,
+    /// Churn-preemption downtime seconds.
     pub preempted_s: f64,
 }
 
 impl UtilRecord {
+    /// Idle seconds: barrier waiting plus churn preemption.
     pub fn idle_s(&self) -> f64 {
         self.wait_s + self.preempted_s
     }
@@ -83,22 +114,32 @@ impl UtilRecord {
     }
 }
 
+/// In-memory sink for every record stream a run produces.
 #[derive(Clone, Debug, Default)]
 pub struct Recorder {
+    /// Per-inner-step records in canonical (trainer, step, worker) order.
     pub steps: Vec<StepRecord>,
+    /// Evaluation curve.
     pub evals: Vec<EvalRecord>,
+    /// Trainer-merge events.
     pub merges: Vec<MergeRecord>,
     /// Per-worker utilization, filled once at the end of a run.
     pub utilization: Vec<UtilRecord>,
     /// Free-form run annotations (config echo, engine info, ...).
     pub notes: Vec<(String, String)>,
+    /// Host wall-clock seconds of the run (perf reporting; NOT part of
+    /// the determinism contract — see DESIGN.md §6 and the speedup
+    /// helpers in [`crate::benchkit`]).
+    pub wall_clock_s: f64,
 }
 
 impl Recorder {
+    /// Empty recorder.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Attach a free-form (key, value) annotation.
     pub fn note(&mut self, key: &str, value: impl Into<String>) {
         self.notes.push((key.to_string(), value.into()));
     }
@@ -116,10 +157,12 @@ impl Recorder {
             .map(|e| (e.global_step, e.virtual_time_s, e.comm_count))
     }
 
+    /// Perplexity of the last evaluation, if any.
     pub fn final_perplexity(&self) -> Option<f64> {
         self.evals.last().map(|e| e.perplexity)
     }
 
+    /// Minimum perplexity over all evaluations, if any.
     pub fn best_perplexity(&self) -> Option<f64> {
         self.evals
             .iter()
@@ -225,6 +268,13 @@ impl Recorder {
                 ("representative", JsonValue::num(m.representative as f64)),
                 ("trainers_left", JsonValue::num(m.trainers_left as f64)),
                 ("virtual_time_s", JsonValue::num(m.virtual_time_s)),
+            ]);
+            writeln!(w, "{}", line.to_string())?;
+        }
+        if self.wall_clock_s > 0.0 {
+            let line = JsonValue::obj(vec![
+                ("type", JsonValue::str("perf")),
+                ("wall_clock_s", JsonValue::num(self.wall_clock_s)),
             ]);
             writeln!(w, "{}", line.to_string())?;
         }

@@ -20,6 +20,7 @@ pub struct OuterOpt {
 }
 
 impl OuterOpt {
+    /// Build an outer optimizer of `kind` over `dim` parameters.
     pub fn new(kind: OuterOptKind, lr: f64, dim: usize) -> Self {
         let velocity = match kind {
             OuterOptKind::Nesterov { .. } => vec![0.0; dim],
@@ -28,6 +29,7 @@ impl OuterOpt {
         OuterOpt { kind, lr, velocity }
     }
 
+    /// The configured optimizer flavour.
     pub fn kind(&self) -> OuterOptKind {
         self.kind
     }

@@ -9,12 +9,16 @@ use std::path::Path;
 /// One entry of the flat-parameter layout table.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LayoutEntry {
+    /// Tensor name (e.g. `layers.0.attn.wq`).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Offset into the flat parameter vector.
     pub offset: usize,
 }
 
 impl LayoutEntry {
+    /// Element count of the tensor.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -23,35 +27,54 @@ impl LayoutEntry {
 /// One batch-size rung of the AOT ladder.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LadderRung {
+    /// Compiled batch size.
     pub batch: usize,
+    /// Variance-statistic chunk count the program was lowered with.
     pub chunks: usize,
+    /// HLO text file (relative to the profile directory).
     pub file: String,
 }
 
 /// Parsed artifact profile metadata.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// Profile name (e.g. "tiny").
     pub profile: String,
+    /// Flat parameter vector length.
     pub param_count: usize,
+    /// Vocabulary size the model was lowered with.
     pub vocab: usize,
+    /// Model width.
     pub d_model: usize,
+    /// Transformer layer count.
     pub n_layers: usize,
+    /// Attention head count.
     pub n_heads: usize,
+    /// Sequence length.
     pub seq_len: usize,
+    /// Named-tensor layout of the flat vector.
     pub layout: Vec<LayoutEntry>,
+    /// Compiled train_step batch ladder.
     pub ladder: Vec<LadderRung>,
+    /// Batch size of the top grad_step program.
     pub grad_step_batch: usize,
+    /// HLO file of the top grad_step program.
     pub grad_step_file: String,
     /// Per-rung grad_step programs (SwitchMode at any node budget).
     /// Falls back to just the top rung for older artifact bundles.
     pub grad_steps: Vec<LadderRung>,
+    /// HLO file of the apply_update program.
     pub apply_update_file: String,
+    /// Batch size the eval program was compiled for.
     pub eval_batch: usize,
+    /// HLO file of the eval program.
     pub eval_file: String,
+    /// Raw little-endian f32 file holding the shared initialization.
     pub init_params_file: String,
 }
 
 impl ArtifactMeta {
+    /// Load and validate `meta.json` from `path`.
     pub fn load(path: &Path) -> Result<ArtifactMeta> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
@@ -59,6 +82,7 @@ impl ArtifactMeta {
         Self::from_json(&v)
     }
 
+    /// Build from a parsed `meta.json` document.
     pub fn from_json(v: &JsonValue) -> Result<ArtifactMeta> {
         let req_usize = |obj: &JsonValue, key: &str| -> Result<usize> {
             obj.get(key)

@@ -29,14 +29,17 @@ mod pjrt {
     use crate::engine::{ModelState, StepStats, TrainEngine};
     use crate::util::Rng;
     use anyhow::{anyhow, bail, Context, Result};
-    use std::cell::RefCell;
     use std::collections::BTreeMap;
     use std::path::{Path, PathBuf};
+    use std::sync::{Arc, Mutex};
 
-    /// One compiled-on-demand HLO program.
+    /// One compiled-on-demand HLO program. The executable is handed out
+    /// as an `Arc` clone so callers hold it *outside* the cache lock —
+    /// worker threads must not serialize on each other's PJRT execute
+    /// calls (DESIGN.md §6).
     struct LazyExe {
         path: PathBuf,
-        exe: Option<xla::PjRtLoadedExecutable>,
+        exe: Option<Arc<xla::PjRtLoadedExecutable>>,
     }
 
     impl LazyExe {
@@ -44,7 +47,7 @@ mod pjrt {
             LazyExe { path, exe: None }
         }
 
-        fn get(&mut self, client: &xla::PjRtClient) -> Result<&xla::PjRtLoadedExecutable> {
+        fn get(&mut self, client: &xla::PjRtClient) -> Result<Arc<xla::PjRtLoadedExecutable>> {
             if self.exe.is_none() {
                 let t0 = std::time::Instant::now();
                 let proto = xla::HloModuleProto::from_text_file(
@@ -60,26 +63,38 @@ mod pjrt {
                     self.path.file_name().unwrap_or_default().to_string_lossy(),
                     t0.elapsed()
                 );
-                self.exe = Some(exe);
+                self.exe = Some(Arc::new(exe));
             }
-            Ok(self.exe.as_ref().unwrap())
+            Ok(self.exe.as_ref().unwrap().clone())
         }
     }
 
     /// PJRT-backed training engine over one artifact profile.
+    ///
+    /// Thread contract (DESIGN.md §6): the lazy-compile caches and perf
+    /// counters sit behind `Mutex`es so the engine can be shared by
+    /// reference across the parallel runtime's worker threads; the PJRT
+    /// CPU client itself is internally synchronized.
     pub struct XlaEngine {
         meta: ArtifactMeta,
         client: xla::PjRtClient,
-        train: RefCell<BTreeMap<usize, LazyExe>>,
-        grad: RefCell<BTreeMap<usize, LazyExe>>,
-        apply: RefCell<LazyExe>,
-        eval: RefCell<LazyExe>,
+        train: Mutex<BTreeMap<usize, LazyExe>>,
+        grad: Mutex<BTreeMap<usize, LazyExe>>,
+        apply: Mutex<LazyExe>,
+        eval: Mutex<LazyExe>,
         ladder: Vec<usize>,
         init_params: Vec<f32>,
         /// Wall-clock spent inside PJRT execute calls (perf accounting).
-        pub exec_time: RefCell<std::time::Duration>,
-        pub exec_calls: RefCell<u64>,
+        pub exec_time: Mutex<std::time::Duration>,
+        /// Number of PJRT execute calls issued.
+        pub exec_calls: Mutex<u64>,
     }
+
+    // SAFETY: every mutable member (lazy-compile caches, perf counters)
+    // is Mutex-guarded above; the raw PJRT client/executable handles are
+    // only used through the thread-safe PJRT C API.
+    unsafe impl Send for XlaEngine {}
+    unsafe impl Sync for XlaEngine {}
 
     impl XlaEngine {
         /// Load `artifacts_dir/profile` (meta.json + HLO files + init params).
@@ -117,18 +132,19 @@ mod pjrt {
 
             Ok(XlaEngine {
                 client,
-                train: RefCell::new(train),
-                grad: RefCell::new(grad),
-                apply: RefCell::new(LazyExe::new(dir.join(&meta.apply_update_file))),
-                eval: RefCell::new(LazyExe::new(dir.join(&meta.eval_file))),
+                train: Mutex::new(train),
+                grad: Mutex::new(grad),
+                apply: Mutex::new(LazyExe::new(dir.join(&meta.apply_update_file))),
+                eval: Mutex::new(LazyExe::new(dir.join(&meta.eval_file))),
                 ladder,
                 init_params,
                 meta,
-                exec_time: RefCell::new(std::time::Duration::ZERO),
-                exec_calls: RefCell::new(0),
+                exec_time: Mutex::new(std::time::Duration::ZERO),
+                exec_calls: Mutex::new(0),
             })
         }
 
+        /// Parsed `meta.json` of the loaded profile.
         pub fn meta(&self) -> &ArtifactMeta {
             &self.meta
         }
@@ -136,14 +152,14 @@ mod pjrt {
         /// Force-compile every program (used by benches to exclude compile
         /// time from measurements).
         pub fn warmup(&self) -> Result<()> {
-            for (_, exe) in self.train.borrow_mut().iter_mut() {
+            for (_, exe) in self.train.lock().unwrap().iter_mut() {
                 exe.get(&self.client)?;
             }
-            for (_, exe) in self.grad.borrow_mut().iter_mut() {
+            for (_, exe) in self.grad.lock().unwrap().iter_mut() {
                 exe.get(&self.client)?;
             }
-            self.apply.borrow_mut().get(&self.client)?;
-            self.eval.borrow_mut().get(&self.client)?;
+            self.apply.lock().unwrap().get(&self.client)?;
+            self.eval.lock().unwrap().get(&self.client)?;
             Ok(())
         }
 
@@ -182,8 +198,8 @@ mod pjrt {
                 .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
                 .to_literal_sync()
                 .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-            *self.exec_time.borrow_mut() += t0.elapsed();
-            *self.exec_calls.borrow_mut() += 1;
+            *self.exec_time.lock().unwrap() += t0.elapsed();
+            *self.exec_calls.lock().unwrap() += 1;
             result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
         }
     }
@@ -232,16 +248,20 @@ mod pjrt {
         }
 
         fn train_step(
-            &mut self,
+            &self,
             state: &mut ModelState,
             lr: f64,
             batch: &TokenBatch,
             _noise: &mut Rng, // PJRT programs are deterministic
         ) -> Result<StepStats> {
-            let mut map = self.train.borrow_mut();
-            let lazy = map
-                .get_mut(&batch.batch)
-                .ok_or_else(|| anyhow!("no train executable for batch {}", batch.batch))?;
+            // fetch (compiling at most once) under the lock, execute
+            // outside it — concurrent worker threads overlap here
+            let exe = {
+                let mut map = self.train.lock().unwrap();
+                map.get_mut(&batch.batch)
+                    .ok_or_else(|| anyhow!("no train executable for batch {}", batch.batch))?
+                    .get(&self.client)?
+            };
             let exe_args = [
                 self.upload_f32(&state.params)?,
                 self.upload_f32(&state.m)?,
@@ -250,10 +270,7 @@ mod pjrt {
                 self.upload_scalar(lr as f32)?,
                 self.upload_tokens(batch)?,
             ];
-            let outs = {
-                let exe = lazy.get(&self.client)?;
-                self.execute(exe, &exe_args)?
-            };
+            let outs = self.execute(&exe, &exe_args)?;
             if outs.len() != 7 {
                 bail!("train_step returned {} outputs, want 7", outs.len());
             }
@@ -270,21 +287,22 @@ mod pjrt {
         }
 
         fn grad_step(
-            &mut self,
+            &self,
             params: &[f32],
             batch: &TokenBatch,
             grad_out: &mut [f32],
             _noise: &mut Rng,
         ) -> Result<StepStats> {
-            let exe_args = [self.upload_f32(params)?, self.upload_tokens(batch)?];
-            let outs = {
-                let mut map = self.grad.borrow_mut();
-                let lazy = map.get_mut(&batch.batch).ok_or_else(|| {
-                    anyhow!("no grad_step executable for batch {}", batch.batch)
-                })?;
-                let exe = lazy.get(&self.client)?;
-                self.execute(exe, &exe_args)?
+            let exe = {
+                let mut map = self.grad.lock().unwrap();
+                map.get_mut(&batch.batch)
+                    .ok_or_else(|| {
+                        anyhow!("no grad_step executable for batch {}", batch.batch)
+                    })?
+                    .get(&self.client)?
             };
+            let exe_args = [self.upload_f32(params)?, self.upload_tokens(batch)?];
+            let outs = self.execute(&exe, &exe_args)?;
             if outs.len() != 5 {
                 bail!("grad_step returned {} outputs, want 5", outs.len());
             }
@@ -297,7 +315,7 @@ mod pjrt {
             })
         }
 
-        fn apply_update(&mut self, state: &mut ModelState, lr: f64, grad: &[f32]) -> Result<()> {
+        fn apply_update(&self, state: &mut ModelState, lr: f64, grad: &[f32]) -> Result<()> {
             let exe_args = [
                 self.upload_f32(&state.params)?,
                 self.upload_f32(&state.m)?,
@@ -306,11 +324,8 @@ mod pjrt {
                 self.upload_scalar(lr as f32)?,
                 self.upload_f32(grad)?,
             ];
-            let outs = {
-                let mut lazy = self.apply.borrow_mut();
-                let exe = lazy.get(&self.client)?;
-                self.execute(exe, &exe_args)?
-            };
+            let exe = self.apply.lock().unwrap().get(&self.client)?;
+            let outs = self.execute(&exe, &exe_args)?;
             if outs.len() != 3 {
                 bail!("apply_update returned {} outputs, want 3", outs.len());
             }
@@ -322,7 +337,7 @@ mod pjrt {
         }
 
         fn eval_loss(
-            &mut self,
+            &self,
             params: &[f32],
             batch: &TokenBatch,
             _noise: &mut Rng,
@@ -334,12 +349,9 @@ mod pjrt {
                     batch.batch
                 );
             }
+            let exe = self.eval.lock().unwrap().get(&self.client)?;
             let exe_args = [self.upload_f32(params)?, self.upload_tokens(batch)?];
-            let outs = {
-                let mut lazy = self.eval.borrow_mut();
-                let exe = lazy.get(&self.client)?;
-                self.execute(exe, &exe_args)?
-            };
+            let outs = self.execute(&exe, &exe_args)?;
             read_scalar(&outs[0])
         }
     }
@@ -387,7 +399,7 @@ mod pjrt {
             if !artifacts_present() {
                 return;
             }
-            let mut e = load_tiny();
+            let e = load_tiny();
             let width = e.meta().seq_len + 1;
             let mut rng = Rng::new(0);
             let mut noise = Rng::new(1);
@@ -417,7 +429,7 @@ mod pjrt {
             if !artifacts_present() {
                 return;
             }
-            let mut e = load_tiny();
+            let e = load_tiny();
             let width = e.meta().seq_len + 1;
             let bmax = e.meta().grad_step_batch;
             let mut rng = Rng::new(1);
@@ -447,7 +459,7 @@ mod pjrt {
             if !artifacts_present() {
                 return;
             }
-            let mut e = load_tiny();
+            let e = load_tiny();
             let width = e.meta().seq_len + 1;
             let eb = e.eval_batch();
             let mut rng = Rng::new(2);
@@ -463,7 +475,7 @@ mod pjrt {
             if !artifacts_present() {
                 return;
             }
-            let mut e = load_tiny();
+            let e = load_tiny();
             let mut noise = Rng::new(0);
             let mut st = e.init_state(0);
             // unsupported batch size
@@ -495,6 +507,7 @@ mod stub {
     }
 
     impl XlaEngine {
+        /// Always errors: the crate was built without the `xla` feature.
         pub fn load(artifacts_dir: &str, profile: &str) -> Result<XlaEngine> {
             bail!(
                 "cannot load artifact profile {profile:?} from {artifacts_dir:?}: \
@@ -504,10 +517,12 @@ mod stub {
             )
         }
 
+        /// Unreachable (no stub instance can exist).
         pub fn meta(&self) -> &ArtifactMeta {
             match self.never {}
         }
 
+        /// Unreachable (no stub instance can exist).
         pub fn warmup(&self) -> Result<()> {
             match self.never {}
         }
@@ -535,7 +550,7 @@ mod stub {
         }
 
         fn train_step(
-            &mut self,
+            &self,
             _state: &mut ModelState,
             _lr: f64,
             _batch: &TokenBatch,
@@ -545,7 +560,7 @@ mod stub {
         }
 
         fn grad_step(
-            &mut self,
+            &self,
             _params: &[f32],
             _batch: &TokenBatch,
             _grad_out: &mut [f32],
@@ -554,11 +569,11 @@ mod stub {
             match self.never {}
         }
 
-        fn apply_update(&mut self, _state: &mut ModelState, _lr: f64, _grad: &[f32]) -> Result<()> {
+        fn apply_update(&self, _state: &mut ModelState, _lr: f64, _grad: &[f32]) -> Result<()> {
             match self.never {}
         }
 
-        fn eval_loss(&mut self, _params: &[f32], _batch: &TokenBatch, _noise: &mut Rng) -> Result<f64> {
+        fn eval_loss(&self, _params: &[f32], _batch: &TokenBatch, _noise: &mut Rng) -> Result<f64> {
             match self.never {}
         }
     }

@@ -12,6 +12,7 @@ use crate::config::ScheduleConfig;
 /// Evaluated per (global inner step of a worker).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Schedule {
+    /// Flat lr.
     Constant,
     /// Linear warmup to the base lr over `warmup` steps, then flat.
     Warmup { warmup: u64 },
@@ -22,6 +23,8 @@ pub enum Schedule {
 }
 
 impl Schedule {
+    /// Compile a config block; `total_steps` backs the cosine horizon
+    /// when the config leaves it 0.
     pub fn from_config(cfg: &ScheduleConfig, total_steps: u64) -> Schedule {
         match cfg.kind.as_str() {
             "constant" => Schedule::Constant,

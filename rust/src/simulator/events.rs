@@ -73,14 +73,17 @@ pub struct EventQueue {
 }
 
 impl EventQueue {
+    /// Empty queue.
     pub fn new() -> Self {
         EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
     }
 
+    /// Scheduled-but-unpopped event count.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// True when nothing is scheduled.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }

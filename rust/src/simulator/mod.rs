@@ -33,6 +33,7 @@ pub struct NodeModel {
     pub speed: f64,
     /// t_step = (fixed + per_token * batch * seq) / speed
     pub step_fixed_s: f64,
+    /// Per-token term of the step-time model.
     pub step_per_token_s: f64,
 }
 
@@ -46,7 +47,9 @@ impl NodeModel {
 /// Latency + bandwidth network model shared by all links.
 #[derive(Clone, Debug)]
 pub struct NetworkModel {
+    /// Per-transfer latency, seconds.
     pub latency_s: f64,
+    /// Link bandwidth, bytes/second.
     pub bandwidth_bps: f64,
 }
 
@@ -91,9 +94,13 @@ pub enum CommKind {
 /// One recorded communication event.
 #[derive(Clone, Debug)]
 pub struct CommEvent {
+    /// What the communication was for.
     pub kind: CommKind,
+    /// Virtual time the communication completed.
     pub at_virtual_s: f64,
+    /// Bytes moved.
     pub bytes: u64,
+    /// Number of participating workers/trainers.
     pub participants: usize,
     /// Inner-step index (global, per run) at which it happened.
     pub at_inner_step: u64,
@@ -103,22 +110,27 @@ pub struct CommEvent {
 /// C(N) and the "communication efficiency" axis of Fig. 1.
 #[derive(Clone, Debug, Default)]
 pub struct CommLedger {
+    /// Every recorded communication, in completion order.
     pub events: Vec<CommEvent>,
 }
 
 impl CommLedger {
+    /// Append one communication.
     pub fn record(&mut self, ev: CommEvent) {
         self.events.push(ev);
     }
 
+    /// Total recorded communications.
     pub fn count(&self) -> usize {
         self.events.len()
     }
 
+    /// Recorded communications of one kind.
     pub fn count_kind(&self, kind: CommKind) -> usize {
         self.events.iter().filter(|e| e.kind == kind).count()
     }
 
+    /// Total bytes across all recorded communications.
     pub fn total_bytes(&self) -> u64 {
         self.events.iter().map(|e| e.bytes).sum()
     }
@@ -141,22 +153,27 @@ pub struct VirtualClock {
 }
 
 impl VirtualClock {
+    /// All-zero clocks for `workers` slots.
     pub fn new(workers: usize) -> Self {
         VirtualClock { times: vec![0.0; workers] }
     }
 
+    /// Number of clock slots.
     pub fn len(&self) -> usize {
         self.times.len()
     }
 
+    /// True when no slots exist.
     pub fn is_empty(&self) -> bool {
         self.times.is_empty()
     }
 
+    /// Slot `w`'s current virtual time.
     pub fn time(&self, w: usize) -> f64 {
         self.times[w]
     }
 
+    /// Advance slot `w` by `dt >= 0` seconds.
     pub fn advance(&mut self, w: usize, dt: f64) {
         debug_assert!(dt >= 0.0);
         self.times[w] += dt;

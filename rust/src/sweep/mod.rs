@@ -2,29 +2,69 @@
 //! config knob (optionally crossed with methods) and tabulate the
 //! results — the workhorse behind the design-choice ablations DESIGN.md
 //! calls out (η sensitivity, merge frequency, switch multiplier, ...).
+//!
+//! Parallelism (DESIGN.md §6): cells are independent experiments, so
+//! [`run_sweep_jobs`] fans them out across OS threads. Three rules keep
+//! the grid deterministic regardless of `jobs`:
+//!
+//! 1. **cell configs are built up front, in grid order** (errors surface
+//!    at the same cell the serial walk would hit first);
+//! 2. **seeds are derived, not improvised**: every cell at one sweep
+//!    value runs at `derive_seed(base.seed, "<param>=<value>")` — a pure
+//!    function of the base seed and the value, independent of which
+//!    thread executes the cell and of the grid's enumeration order.
+//!    Method arms at the same value deliberately share that seed, so
+//!    the central comparison (AdLoCo vs the baselines) stays
+//!    seed-paired: same data order, same noise draws, algorithm effect
+//!    unconfounded by seed variance;
+//! 3. **results collect into their grid index** (ordered collection), so
+//!    the returned rows never depend on completion order.
 
 use crate::config::{Config, Method};
 use crate::coordinator::{resolve_policy, Coordinator, RunResult};
 use crate::engine::build_engine;
+use crate::util::{derive_seed, run_cells};
 use anyhow::{Context, Result};
 
 /// One sweep cell result.
 #[derive(Clone, Debug)]
 pub struct SweepRow {
+    /// The swept parameter's value for this cell (verbatim CLI string).
     pub value: String,
+    /// Coordination method of this cell.
     pub method: Method,
+    /// Run summary of the cell.
     pub result: RunResult,
+    /// Mean executed batch over the cell's steps.
     pub mean_batch: f64,
+    /// Host wall-clock seconds the cell took (perf reporting only).
+    pub wall_s: f64,
 }
 
-/// Run `base` once per (value, method) with `param=value` applied.
+/// Run `base` once per (value, method) with `param=value` applied,
+/// serially in grid order. Equivalent to `run_sweep_jobs(.., 1)`.
 pub fn run_sweep(
     base: &Config,
     param: &str,
     values: &[String],
     methods: &[Method],
 ) -> Result<Vec<SweepRow>> {
-    let mut rows = Vec::new();
+    run_sweep_jobs(base, param, values, methods, 1)
+}
+
+/// Parallel sweep: run the (value × method) grid across `jobs` OS
+/// threads. Cell results are bit-identical to `jobs = 1` (see the module
+/// docs for the three rules that guarantee it); only wall-clock changes.
+pub fn run_sweep_jobs(
+    base: &Config,
+    param: &str,
+    values: &[String],
+    methods: &[Method],
+    jobs: usize,
+) -> Result<Vec<SweepRow>> {
+    // ---- build every cell config up front, in grid order ---------------
+    let jobs = jobs.max(1);
+    let mut cells: Vec<(String, Method, Config)> = Vec::new();
     for value in values {
         for &method in methods {
             let mut cfg = base.clone();
@@ -32,33 +72,61 @@ pub fn run_sweep(
             cfg.name = format!("{}_{}={}_{}", base.name, param, value, method.as_str());
             cfg.apply_override(&format!("{param}={value}"))
                 .with_context(|| format!("sweep value {value:?}"))?;
+            // derived per-value seed; method arms share it (seed-paired
+            // comparison — see the module docs)
+            cfg.seed = derive_seed(base.seed, &format!("{param}={value}"));
+            if jobs > 1 {
+                // concurrent cells own the thread budget: in-run worker
+                // pools on top would oversubscribe the cores. Serial
+                // grids (jobs == 1) keep the base config's run.threads.
+                // Either way the payload is bit-identical (DESIGN.md §6).
+                cfg.run.threads = 1;
+            }
             let cfg = resolve_policy(&cfg);
             cfg.validate()?;
-            crate::info!("sweep: {}", cfg.name);
-            let engine = build_engine(&cfg)?;
-            let mut coord = Coordinator::new(cfg, engine)?;
-            let result = coord.run()?;
-            rows.push(SweepRow {
-                value: value.clone(),
-                method,
-                result,
-                mean_batch: coord.recorder.mean_batch(),
-            });
+            cells.push((value.clone(), method, cfg));
         }
     }
-    Ok(rows)
+
+    // ---- fan out on the shared pool, ordered collection -----------------
+    run_cells(
+        jobs,
+        cells
+            .into_iter()
+            .map(|(value, method, cfg)| move || run_cell(value, method, cfg))
+            .collect(),
+    )
+    .into_iter()
+    .collect()
+}
+
+/// Execute one prepared cell (shared by the serial and parallel paths).
+fn run_cell(value: String, method: Method, cfg: Config) -> Result<SweepRow> {
+    crate::info!("sweep: {}", cfg.name);
+    let wall0 = std::time::Instant::now();
+    let engine = build_engine(&cfg)?;
+    let mut coord = Coordinator::new(cfg, engine)?;
+    let result = coord.run()?;
+    Ok(SweepRow {
+        value,
+        method,
+        result,
+        mean_batch: coord.recorder.mean_batch(),
+        wall_s: wall0.elapsed().as_secs_f64(),
+    })
 }
 
 /// Render sweep rows as an aligned text table (also used by the CLI).
 pub fn format_table(param: &str, rows: &[SweepRow]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:<12} {:<10} {:>10} {:>10} {:>8} {:>12} {:>10} {:>11}\n",
-        param, "method", "best_ppl", "final_ppl", "comms", "samples", "vtime_s", "mean_batch"
+        "{:<12} {:<10} {:>10} {:>10} {:>8} {:>12} {:>10} {:>11} {:>8}\n",
+        param, "method", "best_ppl", "final_ppl", "comms", "samples", "vtime_s", "mean_batch",
+        "wall_s"
     ));
     for r in rows {
         out.push_str(&format!(
-            "{:<12} {:<10} {:>10.4} {:>10.4} {:>8} {:>12} {:>10.3} {:>11.1}\n",
+            "{:<12} {:<10} {:>10.4} {:>10.4} {:>8} {:>12} {:>10.3} {:>11.1} {:>8.3}\n",
             r.value,
             r.method.as_str(),
             r.result.best_ppl,
@@ -67,6 +135,7 @@ pub fn format_table(param: &str, rows: &[SweepRow]) -> String {
             r.result.total_samples,
             r.result.virtual_time_s,
             r.mean_batch,
+            r.wall_s,
         ));
     }
     out
@@ -121,5 +190,66 @@ mod tests {
     fn bad_param_is_error() {
         let base = presets::quick();
         assert!(run_sweep(&base, "algo.method", &["bogus".into()], &[Method::AdLoCo]).is_err());
+    }
+
+    #[test]
+    fn parallel_jobs_match_serial_rows() {
+        // ordered collection + derived per-cell seeds: the grid's payload
+        // must be bit-identical no matter how many threads run it
+        let mut base = presets::quick();
+        base.algo.outer_steps = 2;
+        base.algo.inner_steps = 4;
+        let values: Vec<String> = vec!["0.4".into(), "0.8".into(), "1.6".into()];
+        let methods = [Method::AdLoCo, Method::DiLoCo];
+        let serial =
+            run_sweep_jobs(&base, "algo.batching.eta", &values, &methods, 1).unwrap();
+        let parallel =
+            run_sweep_jobs(&base, "algo.batching.eta", &values, &methods, 4).unwrap();
+        assert_eq!(serial.len(), 6);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(parallel.iter()) {
+            assert_eq!(a.value, b.value, "row order must be grid order");
+            assert_eq!(a.method, b.method);
+            assert_eq!(a.result.best_ppl.to_bits(), b.result.best_ppl.to_bits());
+            assert_eq!(a.result.final_ppl.to_bits(), b.result.final_ppl.to_bits());
+            assert_eq!(a.result.total_samples, b.result.total_samples);
+            assert_eq!(a.result.comm_count, b.result.comm_count);
+            assert_eq!(
+                a.result.virtual_time_s.to_bits(),
+                b.result.virtual_time_s.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn values_get_distinct_seeds_methods_stay_paired() {
+        // different sweep values -> different derived seeds; a no-op
+        // override value leaves the config identical except the seed,
+        // so equal results would mean the derivation collapsed
+        let mut base = presets::quick();
+        base.algo.outer_steps = 1;
+        base.algo.inner_steps = 3;
+        // checkpoint_every is numerically inert while checkpoint_path is
+        // None, so the two cells differ ONLY by their derived seed
+        let rows = run_sweep_jobs(
+            &base,
+            "run.checkpoint_every",
+            &["5".into(), "7".into()],
+            &[Method::DiLoCo],
+            2,
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_ne!(
+            rows[0].result.best_ppl.to_bits(),
+            rows[1].result.best_ppl.to_bits(),
+            "distinct values must not share a seed"
+        );
+        // method arms at one value share the derived seed (seed-paired
+        // comparison): identical-policy methods see identical data
+        assert_eq!(
+            crate::util::derive_seed(base.seed, "x=1"),
+            crate::util::derive_seed(base.seed, "x=1")
+        );
     }
 }

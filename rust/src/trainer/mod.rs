@@ -22,6 +22,7 @@ pub struct Worker {
     /// trainer at each outer step; AdamW moments persist across outer
     /// steps (standard DiLoCo practice).
     pub state: ModelState,
+    /// This worker's epoch-shuffled view of its data sub-shard.
     pub sampler: BatchSampler,
     /// Node (simulated GPU) this worker runs on.
     pub node: usize,
@@ -43,12 +44,17 @@ pub struct Worker {
 
 /// One trainer (the paper's T_i): a model instance spanning M workers.
 pub struct Trainer {
+    /// Trainer id (position in the coordinator's pool).
     pub id: usize,
     /// Outer parameters x_{T_i}.
     pub params: Vec<f32>,
+    /// Outer optimizer (per-trainer state).
     pub outer: OuterOpt,
+    /// Adaptive-batching controller.
     pub controller: BatchController,
+    /// The trainer's M workers.
     pub workers: Vec<Worker>,
+    /// The trainer's data shard (workers partition it).
     pub shard: Shard,
     /// Dead trainers were consumed by a merge and take no further part.
     pub alive: bool,

@@ -14,18 +14,26 @@ use std::fmt;
 /// A parsed JSON document.
 #[derive(Clone, Debug, PartialEq)]
 pub enum JsonValue {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (f64, matching python's `json`).
     Number(f64),
+    /// A string.
     String(String),
+    /// An array.
     Array(Vec<JsonValue>),
     /// Insertion-ordered object (Vec keeps meta.json diffs stable).
     Object(Vec<(String, JsonValue)>),
 }
 
+/// Parse failure with the byte offset it occurred at.
 #[derive(Debug)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset into the input.
     pub offset: usize,
 }
 
@@ -40,6 +48,7 @@ impl std::error::Error for JsonError {}
 impl JsonValue {
     // ---------------- accessors ----------------
 
+    /// Object field by key (None for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&JsonValue> {
         match self {
             JsonValue::Object(fields) => {
@@ -58,6 +67,7 @@ impl JsonValue {
         })
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             JsonValue::Number(n) => Some(*n),
@@ -65,6 +75,7 @@ impl JsonValue {
         }
     }
 
+    /// Non-negative integer value, if representable.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
             if n >= 0.0 && n.fract() == 0.0 && n <= u32::MAX as f64 * 4096.0 {
@@ -75,6 +86,7 @@ impl JsonValue {
         })
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             JsonValue::String(s) => Some(s),
@@ -82,6 +94,7 @@ impl JsonValue {
         }
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             JsonValue::Bool(b) => Some(*b),
@@ -89,6 +102,7 @@ impl JsonValue {
         }
     }
 
+    /// Array elements, if this is an array.
     pub fn as_array(&self) -> Option<&[JsonValue]> {
         match self {
             JsonValue::Array(a) => Some(a),
@@ -96,6 +110,7 @@ impl JsonValue {
         }
     }
 
+    /// Object fields in insertion order, if this is an object.
     pub fn as_object(&self) -> Option<&[(String, JsonValue)]> {
         match self {
             JsonValue::Object(o) => Some(o),
@@ -113,28 +128,33 @@ impl JsonValue {
 
     // ---------------- construction helpers ----------------
 
+    /// Object from (key, value) pairs.
     pub fn obj(fields: Vec<(&str, JsonValue)>) -> JsonValue {
         JsonValue::Object(
             fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
         )
     }
 
+    /// Number value.
     pub fn num(n: f64) -> JsonValue {
         JsonValue::Number(n)
     }
 
+    /// String value.
     pub fn str(s: impl Into<String>) -> JsonValue {
         JsonValue::String(s.into())
     }
 
     // ---------------- serialization ----------------
 
+    /// Compact single-line serialization.
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, None, 0);
         out
     }
 
+    /// Indented multi-line serialization.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, Some(2), 0);
@@ -186,6 +206,7 @@ impl JsonValue {
 
     // ---------------- parsing ----------------
 
+    /// Parse a JSON document.
     pub fn parse(text: &str) -> Result<JsonValue, JsonError> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         p.skip_ws();

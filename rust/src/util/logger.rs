@@ -4,20 +4,37 @@
 //! Kept free of globals-with-locks on the hot path: the level is read once
 //! and cached in an atomic, and the macros skip formatting entirely when
 //! the level is disabled.
+//!
+//! Thread safety (DESIGN.md §6): the parallel runtime logs from worker
+//! and sweep-cell threads concurrently. Each record is formatted into a
+//! single buffer first and emitted as one `write_all` under stderr's
+//! lock, so lines never tear or interleave mid-record. Threads running
+//! on behalf of a worker chain or a sweep cell tag their lines via
+//! [`set_thread_context`] (e.g. `t2.w1`, `cell3`), so interleaved
+//! output stays attributable.
 
+use std::cell::RefCell;
+use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// Log severity, ordered from most to least important.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable or user-visible failures.
     Error = 0,
+    /// Suspicious-but-continuing conditions.
     Warn = 1,
+    /// Run-level progress (default).
     Info = 2,
+    /// Per-outer-step diagnostics.
     Debug = 3,
+    /// Per-inner-step firehose.
     Trace = 4,
 }
 
 impl Level {
+    /// Uppercase label used in log lines.
     pub fn as_str(self) -> &'static str {
         match self {
             Level::Error => "ERROR",
@@ -59,6 +76,7 @@ pub fn set_max_level(lvl: Level) {
     LEVEL.store(lvl as u8, Ordering::Relaxed);
 }
 
+/// True when records at `lvl` are currently emitted.
 #[inline]
 pub fn log_enabled(lvl: Level) -> bool {
     lvl <= max_level()
@@ -72,11 +90,51 @@ pub fn uptime_secs() -> f64 {
     START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
-#[doc(hidden)]
-pub fn log_impl(lvl: Level, module: &str, args: std::fmt::Arguments<'_>) {
-    eprintln!("[{:>9.3}s {} {}] {}", uptime_secs(), lvl.as_str(), module, args);
+thread_local! {
+    /// Worker/cell tag of the current thread (None on the main thread).
+    static THREAD_CONTEXT: RefCell<Option<String>> = const { RefCell::new(None) };
 }
 
+/// Tag every subsequent log line from this thread with `tag` (the
+/// parallel runtime uses `t<trainer>.w<worker>`; sweep cells use
+/// `cell<i>`). Overwrites any previous tag.
+pub fn set_thread_context(tag: impl Into<String>) {
+    let tag = tag.into();
+    THREAD_CONTEXT.with(|c| *c.borrow_mut() = Some(tag));
+}
+
+/// Remove this thread's log tag.
+pub fn clear_thread_context() {
+    THREAD_CONTEXT.with(|c| *c.borrow_mut() = None);
+}
+
+/// This thread's current log tag, if any (lets nested fan-outs save
+/// and restore the caller's tag — see `util::parallel::run_cells`).
+pub fn thread_context() -> Option<String> {
+    THREAD_CONTEXT.with(|c| c.borrow().clone())
+}
+
+#[doc(hidden)]
+pub fn log_impl(lvl: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    // format the whole record (timestamp, level, module, thread tag,
+    // message) into one buffer, then emit it as a single write under
+    // stderr's own lock — records from concurrent worker/cell threads
+    // interleave only at line granularity, never mid-record
+    let line = THREAD_CONTEXT.with(|c| match c.borrow().as_deref() {
+        Some(tag) => format!(
+            "[{:>9.3}s {} {} {}] {}\n",
+            uptime_secs(),
+            lvl.as_str(),
+            module,
+            tag,
+            args
+        ),
+        None => format!("[{:>9.3}s {} {}] {}\n", uptime_secs(), lvl.as_str(), module, args),
+    });
+    let _ = std::io::stderr().lock().write_all(line.as_bytes());
+}
+
+/// Log at an explicit [`Level`]; prefer the per-level macros.
 #[macro_export]
 macro_rules! log_at {
     ($lvl:expr, $($arg:tt)*) => {
@@ -86,22 +144,27 @@ macro_rules! log_at {
     };
 }
 
+/// Log at [`Level::Error`].
 #[macro_export]
 macro_rules! error {
     ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Error, $($arg)*) };
 }
+/// Log at [`Level::Warn`].
 #[macro_export]
 macro_rules! warn {
     ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Warn, $($arg)*) };
 }
+/// Log at [`Level::Info`].
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Info, $($arg)*) };
 }
+/// Log at [`Level::Debug`].
 #[macro_export]
 macro_rules! debug {
     ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Debug, $($arg)*) };
 }
+/// Log at [`Level::Trace`].
 #[macro_export]
 macro_rules! trace {
     ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Trace, $($arg)*) };
@@ -123,5 +186,45 @@ mod tests {
         assert!(log_enabled(Level::Debug));
         assert!(!log_enabled(Level::Trace));
         set_max_level(Level::Info);
+    }
+
+    #[test]
+    fn thread_context_is_per_thread() {
+        set_thread_context("t0.w1");
+        THREAD_CONTEXT.with(|c| assert_eq!(c.borrow().as_deref(), Some("t0.w1")));
+        // a fresh thread starts untagged and its tag stays its own
+        std::thread::spawn(|| {
+            THREAD_CONTEXT.with(|c| assert!(c.borrow().is_none()));
+            set_thread_context("cell7");
+            THREAD_CONTEXT.with(|c| assert_eq!(c.borrow().as_deref(), Some("cell7")));
+        })
+        .join()
+        .unwrap();
+        THREAD_CONTEXT.with(|c| assert_eq!(c.borrow().as_deref(), Some("t0.w1")));
+        clear_thread_context();
+        THREAD_CONTEXT.with(|c| assert!(c.borrow().is_none()));
+    }
+
+    #[test]
+    fn concurrent_logging_does_not_panic() {
+        // tears can't be asserted from inside the process, but the
+        // emission path (including context formatting) must be race-free
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    set_thread_context(format!("t{i}.w0"));
+                    for j in 0..50 {
+                        log_impl(
+                            Level::Error,
+                            "logger::test",
+                            format_args!("thread {i} line {j}"),
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

@@ -9,9 +9,11 @@
 
 pub mod json;
 pub mod logger;
+pub mod parallel;
 pub mod rng;
 pub mod stats;
 
 pub use json::JsonValue;
-pub use logger::{log_enabled, Level};
-pub use rng::{Rng, ZipfTable};
+pub use logger::{clear_thread_context, log_enabled, set_thread_context, Level};
+pub use parallel::run_cells;
+pub use rng::{derive_seed, Rng, ZipfTable};

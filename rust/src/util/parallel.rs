@@ -1,0 +1,114 @@
+//! Work-stealing fan-out with ordered collection — the one thread-pool
+//! primitive every parallel layer shares (DESIGN.md §6): the
+//! coordinator's worker chains, `sweep::run_sweep_jobs` cells, and the
+//! fig1/fig2 bench grids (re-exported as `benchkit::run_cells`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run independent cells across `threads` OS threads and return their
+/// results **in cell order** (ordered collection — the scheduling of
+/// the pool leaves no trace in the output). Cells are claimed
+/// work-stealing style off a shared counter, so a slow cell never
+/// strands the remaining threads. `threads <= 1` degenerates to a
+/// plain in-order loop.
+///
+/// Determinism contract (DESIGN.md §6): a cell must be a pure function
+/// of its captured inputs — derive any seed it needs from its identity
+/// (see [`crate::util::derive_seed`]), never from shared mutable state.
+pub fn run_cells<T, F>(threads: usize, cells: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = cells.len();
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 {
+        // serial walk: still tag each cell's log lines, restoring
+        // whatever tag the calling thread already carried afterwards
+        let caller_tag = crate::util::logger::thread_context();
+        let out = cells
+            .into_iter()
+            .enumerate()
+            .map(|(i, f)| {
+                crate::util::set_thread_context(format!("cell{i}"));
+                f()
+            })
+            .collect();
+        match caller_tag {
+            Some(tag) => crate::util::set_thread_context(tag),
+            None => crate::util::clear_thread_context(),
+        }
+        return out;
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<F>>> = cells.into_iter().map(|f| Mutex::new(Some(f))).collect();
+    let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            // pool threads are scope-local: their tags die with them,
+            // and the calling thread's tag is never touched
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                crate::util::set_thread_context(format!("cell{i}"));
+                let f = slots[i].lock().unwrap().take().expect("cell claimed twice");
+                let r = f();
+                *out[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("cell produced no result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_cells_is_ordered_and_complete() {
+        // 17 cells over 4 threads: results must land at their own index
+        let cells: Vec<_> = (0..17).map(|i| move || i * 10).collect();
+        let out = run_cells(4, cells);
+        assert_eq!(out, (0..17).map(|i| i * 10).collect::<Vec<_>>());
+        // degenerate cases
+        let out = run_cells(1, (1..=2).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(out, vec![1, 2]);
+        let out: Vec<i32> = run_cells(8, Vec::<fn() -> i32>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn serial_path_restores_caller_tag() {
+        crate::util::set_thread_context("outer");
+        let out = run_cells(1, (0..3).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(out, vec![0, 1, 2]);
+        assert_eq!(
+            crate::util::logger::thread_context().as_deref(),
+            Some("outer"),
+            "run_cells must not wipe the caller's log tag"
+        );
+        crate::util::clear_thread_context();
+    }
+
+    #[test]
+    fn uneven_cells_all_complete() {
+        // a deliberately slow first cell must not strand the rest: the
+        // claim counter hands every remaining cell to the idle threads
+        let cells: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..9)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                    }
+                    i
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        assert_eq!(run_cells(3, cells), (0..9).collect::<Vec<_>>());
+    }
+}

@@ -10,10 +10,12 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Fold one sample in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -21,10 +23,12 @@ impl Welford {
         self.m2 += d * (x - self.mean);
     }
 
+    /// Samples folded in so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (0 before any sample).
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -38,6 +42,7 @@ impl Welford {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
@@ -53,11 +58,13 @@ pub struct Ema {
 }
 
 impl Ema {
+    /// EMA with smoothing `beta` in [0, 1).
     pub fn new(beta: f64) -> Self {
         assert!((0.0..1.0).contains(&beta), "beta must be in [0,1)");
         Ema { beta, value: 0.0, steps: 0 }
     }
 
+    /// Fold one sample in.
     pub fn push(&mut self, x: f64) {
         self.value = self.beta * self.value + (1.0 - self.beta) * x;
         self.steps += 1;
@@ -72,6 +79,7 @@ impl Ema {
         }
     }
 
+    /// Samples folded in so far.
     pub fn count(&self) -> u64 {
         self.steps
     }

@@ -1,0 +1,235 @@
+//! Parallel-runtime determinism suite (DESIGN.md §6): running the same
+//! config with `run.threads = 4` must produce **bit-identical** output
+//! to the serial run — same `CommLedger` (kinds, bytes, participants,
+//! `at_inner_step`s, timestamps down to `f64::to_bits`), same step /
+//! eval / merge / utilization record streams, same `RunResult` payload —
+//! for the quickstart and adloco_vs_diloco configurations and for the
+//! `hetero_dynamic` dynamic-workload scenario. Threads buy wall-clock
+//! only; any numerical divergence fails here first.
+//!
+//! The CI matrix additionally runs the whole test suite under
+//! `RUN_THREADS=4` (presets default `run.threads = 0` = auto), so every
+//! other test doubles as a determinism check.
+
+use adloco::config::{presets, Config, Method, SchedulerKind};
+use adloco::coordinator::{resolve_policy, Coordinator, RunResult};
+use adloco::engine::build_engine;
+use adloco::metrics::Recorder;
+use adloco::simulator::CommLedger;
+
+fn run(cfg: Config) -> (RunResult, Recorder, CommLedger) {
+    let engine = build_engine(&cfg).unwrap();
+    let mut c = Coordinator::new(cfg, engine).unwrap();
+    let r = c.run().unwrap();
+    (r, c.recorder.clone(), c.ledger().clone())
+}
+
+/// Run `cfg` serially and at 4 threads; assert full bitwise agreement of
+/// the determinism contract's payload (everything except wall-clock).
+fn assert_threads_agree(mut cfg: Config) {
+    cfg.run.threads = 1;
+    let (ra, reca, leda) = run(cfg.clone());
+    cfg.run.threads = 4;
+    let (rb, recb, ledb) = run(cfg.clone());
+    let name = &cfg.name;
+
+    // ---- communication ledger ------------------------------------------
+    assert_eq!(leda.count(), ledb.count(), "{name}: ledger count");
+    assert_eq!(leda.total_bytes(), ledb.total_bytes(), "{name}: ledger bytes");
+    for (i, (a, b)) in leda.events.iter().zip(ledb.events.iter()).enumerate() {
+        assert_eq!(a.kind, b.kind, "{name}: event {i} kind");
+        assert_eq!(a.bytes, b.bytes, "{name}: event {i} bytes");
+        assert_eq!(a.participants, b.participants, "{name}: event {i} participants");
+        assert_eq!(a.at_inner_step, b.at_inner_step, "{name}: event {i} at_inner_step");
+        assert_eq!(
+            a.at_virtual_s.to_bits(),
+            b.at_virtual_s.to_bits(),
+            "{name}: event {i} timestamp ({} vs {})",
+            a.at_virtual_s,
+            b.at_virtual_s
+        );
+    }
+
+    // ---- run summary (the RunResult f64s, bit for bit) -----------------
+    assert_eq!(ra.total_samples, rb.total_samples, "{name}: samples");
+    assert_eq!(ra.total_inner_steps, rb.total_inner_steps, "{name}: steps");
+    assert_eq!(ra.trainers_left, rb.trainers_left, "{name}: trainers");
+    assert_eq!(ra.comm_count, rb.comm_count, "{name}: comms");
+    assert_eq!(ra.comm_bytes, rb.comm_bytes, "{name}: comm bytes");
+    assert_eq!(ra.best_ppl.to_bits(), rb.best_ppl.to_bits(), "{name}: best ppl");
+    assert_eq!(ra.final_ppl.to_bits(), rb.final_ppl.to_bits(), "{name}: final ppl");
+    assert_eq!(
+        ra.virtual_time_s.to_bits(),
+        rb.virtual_time_s.to_bits(),
+        "{name}: virtual time"
+    );
+    assert_eq!(
+        ra.total_idle_s.to_bits(),
+        rb.total_idle_s.to_bits(),
+        "{name}: idle time"
+    );
+    assert_eq!(
+        ra.mean_utilization.to_bits(),
+        rb.mean_utilization.to_bits(),
+        "{name}: utilization"
+    );
+    assert_eq!(ra.time_to_target, rb.time_to_target, "{name}: time to target");
+    assert_eq!(rb.threads, 4, "{name}: resolved thread count");
+
+    // ---- full record streams -------------------------------------------
+    assert_eq!(reca.steps.len(), recb.steps.len(), "{name}: step records");
+    for (a, b) in reca.steps.iter().zip(recb.steps.iter()) {
+        assert_eq!(
+            (a.global_step, a.outer_step, a.trainer, a.worker, a.batch, a.accum_steps),
+            (b.global_step, b.outer_step, b.trainer, b.worker, b.batch, b.accum_steps),
+            "{name}: step identity"
+        );
+        assert_eq!(a.requested_batch, b.requested_batch, "{name}: requested batch");
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{name}: step loss");
+        assert_eq!(
+            a.grad_sq_norm.to_bits(),
+            b.grad_sq_norm.to_bits(),
+            "{name}: step grad norm"
+        );
+        assert_eq!(a.sigma2.to_bits(), b.sigma2.to_bits(), "{name}: step sigma2");
+        assert_eq!(
+            a.virtual_time_s.to_bits(),
+            b.virtual_time_s.to_bits(),
+            "{name}: step time"
+        );
+    }
+    assert_eq!(reca.evals.len(), recb.evals.len(), "{name}: eval records");
+    for (a, b) in reca.evals.iter().zip(recb.evals.iter()) {
+        assert_eq!(
+            (a.global_step, a.outer_step, a.trainer, a.comm_count, a.comm_bytes),
+            (b.global_step, b.outer_step, b.trainer, b.comm_count, b.comm_bytes),
+            "{name}: eval identity"
+        );
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{name}: eval loss");
+        assert_eq!(a.perplexity.to_bits(), b.perplexity.to_bits(), "{name}: eval ppl");
+        assert_eq!(
+            a.virtual_time_s.to_bits(),
+            b.virtual_time_s.to_bits(),
+            "{name}: eval time"
+        );
+    }
+    assert_eq!(reca.merges.len(), recb.merges.len(), "{name}: merges");
+    for (a, b) in reca.merges.iter().zip(recb.merges.iter()) {
+        assert_eq!(a.merged, b.merged, "{name}: merged set");
+        assert_eq!(a.representative, b.representative, "{name}: representative");
+        assert_eq!(a.trainers_left, b.trainers_left, "{name}: trainers left");
+        assert_eq!(
+            a.virtual_time_s.to_bits(),
+            b.virtual_time_s.to_bits(),
+            "{name}: merge time"
+        );
+    }
+    assert_eq!(
+        reca.utilization.len(),
+        recb.utilization.len(),
+        "{name}: utilization rows"
+    );
+    for (a, b) in reca.utilization.iter().zip(recb.utilization.iter()) {
+        assert_eq!(
+            (a.trainer, a.worker, a.node),
+            (b.trainer, b.worker, b.node),
+            "{name}: utilization identity"
+        );
+        assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits(), "{name}: busy_s");
+        assert_eq!(a.wait_s.to_bits(), b.wait_s.to_bits(), "{name}: wait_s");
+        assert_eq!(a.comm_s.to_bits(), b.comm_s.to_bits(), "{name}: comm_s");
+        assert_eq!(
+            a.preempted_s.to_bits(),
+            b.preempted_s.to_bits(),
+            "{name}: preempted_s"
+        );
+    }
+}
+
+/// The quickstart example's configuration (mock substrate, multi-worker
+/// trainers, merging on), shrunk only where it does not change coverage.
+fn quickstart_cfg() -> Config {
+    let mut cfg = presets::mock_default();
+    cfg.name = "quickstart".into();
+    cfg.algo.outer_steps = 6;
+    cfg.algo.inner_steps = 15;
+    cfg.algo.workers_per_trainer = 2;
+    cfg.run.eval_every = 5;
+    cfg
+}
+
+#[test]
+fn quickstart_parallel_is_bit_identical_event() {
+    let mut cfg = quickstart_cfg();
+    cfg.run.scheduler = SchedulerKind::Event;
+    assert_threads_agree(cfg);
+}
+
+#[test]
+fn quickstart_parallel_is_bit_identical_lockstep() {
+    // threads > 1 routes lockstep through the event-equivalent parallel
+    // path; on the static cluster lockstep requires, that must still be
+    // bit-identical to the serial lockstep reference walk
+    let mut cfg = quickstart_cfg();
+    cfg.run.scheduler = SchedulerKind::Lockstep;
+    assert_threads_agree(cfg);
+}
+
+#[test]
+fn adloco_vs_diloco_parallel_is_bit_identical() {
+    // both arms of the adloco_vs_diloco comparison (mock substrate)
+    for method in [Method::AdLoCo, Method::DiLoCo] {
+        let mut cfg = presets::mock_default();
+        cfg.name = format!("avd_{}", method.as_str());
+        cfg.algo.method = method;
+        cfg.algo.outer_steps = 5;
+        cfg.algo.inner_steps = 12;
+        cfg.algo.num_trainers = 3;
+        cfg.algo.workers_per_trainer = 2;
+        cfg.algo.merge.frequency = 2;
+        cfg.run.eval_every = 4;
+        cfg.run.scheduler = SchedulerKind::Event;
+        let cfg = resolve_policy(&cfg);
+        assert_threads_agree(cfg);
+    }
+}
+
+#[test]
+fn hetero_dynamic_parallel_is_bit_identical() {
+    // the full dynamic-workload scenario: stragglers, a churn window,
+    // link shifts, heterogeneous nodes — the hardest case for the
+    // parallel runtime because time and noise streams interleave
+    let mut cfg = presets::hetero_dynamic();
+    cfg.algo.outer_steps = 6;
+    assert_threads_agree(cfg);
+}
+
+#[test]
+fn switch_mode_parallel_is_bit_identical() {
+    // deep SwitchMode accumulation exercises the chain's grad/accum
+    // scratch path (chain-local buffers vs the serial shared scratch)
+    let mut cfg = quickstart_cfg();
+    cfg.run.scheduler = SchedulerKind::Event;
+    for n in &mut cfg.cluster.nodes {
+        n.max_batch = 2;
+    }
+    cfg.algo.batching.initial_batch = 10;
+    cfg.algo.batching.max_request = 16;
+    assert_threads_agree(cfg);
+}
+
+#[test]
+fn thread_count_beyond_worker_count_is_fine() {
+    // more threads than chains: the pool clamps, output unchanged
+    let mut a = quickstart_cfg();
+    a.run.scheduler = SchedulerKind::Event;
+    a.run.threads = 1;
+    let (ra, reca, _) = run(a);
+    let mut b = quickstart_cfg();
+    b.run.scheduler = SchedulerKind::Event;
+    b.run.threads = 64;
+    let (rb, recb, _) = run(b);
+    assert_eq!(ra.best_ppl.to_bits(), rb.best_ppl.to_bits());
+    assert_eq!(ra.virtual_time_s.to_bits(), rb.virtual_time_s.to_bits());
+    assert_eq!(reca.steps.len(), recb.steps.len());
+}

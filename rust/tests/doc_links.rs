@@ -1,0 +1,151 @@
+//! Documentation-link check: every `DESIGN.md §<n>` / `EXPERIMENTS.md
+//! §<name>` citation in the Rust sources must resolve to a real heading
+//! in the corresponding document. Citations are the source tree's
+//! architecture cross-references; a dangling one means the docs and the
+//! code drifted apart. Runs as part of the normal test suite (and the
+//! CI doc-link step invokes exactly this test).
+//!
+//! Scope: `rust/src/**`, `rust/benches/**`, `rust/tests/**` and
+//! `examples/**`. The check is line-scoped: a citation must name its
+//! document on the same line (the prevailing style in this tree).
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+/// Section tokens (the text after `§`) declared by markdown headings.
+fn headings(doc: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for line in doc.lines() {
+        if !line.starts_with('#') {
+            continue;
+        }
+        if let Some(pos) = line.find('§') {
+            let rest = &line[pos + '§'.len_utf8()..];
+            let token: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '.')
+                .collect();
+            let token = token.trim_end_matches('.').to_string();
+            if !token.is_empty() {
+                out.insert(token);
+            }
+        }
+    }
+    out
+}
+
+/// All `§<token>` references on a line with their byte offsets
+/// (trailing sentence periods stripped: `§3.` cites §3).
+fn section_refs(line: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut base = 0usize;
+    let mut rest = line;
+    while let Some(pos) = rest.find('§') {
+        let at = base + pos;
+        rest = &rest[pos + '§'.len_utf8()..];
+        base = at + '§'.len_utf8();
+        let token: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '.')
+            .collect();
+        let token = token.trim_end_matches('.').to_string();
+        if !token.is_empty() {
+            out.push((at, token));
+        }
+    }
+    out
+}
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            rust_files(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+#[test]
+fn every_design_and_experiments_citation_resolves() {
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let design = std::fs::read_to_string(repo.join("DESIGN.md"))
+        .expect("DESIGN.md must exist at the repo root");
+    let experiments = std::fs::read_to_string(repo.join("EXPERIMENTS.md"))
+        .expect("EXPERIMENTS.md must exist at the repo root");
+    let design_secs = headings(&design);
+    let experiments_secs = headings(&experiments);
+    assert!(
+        design_secs.contains("6"),
+        "DESIGN.md must declare §6 (parallel execution / determinism contract)"
+    );
+    assert!(experiments_secs.contains("Perf"), "EXPERIMENTS.md must declare §Perf");
+
+    let mut files = Vec::new();
+    for dir in ["rust/src", "rust/benches", "rust/tests", "examples"] {
+        rust_files(&repo.join(dir), &mut files);
+    }
+    assert!(files.len() > 20, "source scan looks wrong: {} files", files.len());
+
+    let mut bad: Vec<String> = Vec::new();
+    let mut checked = 0usize;
+    for file in &files {
+        let text = std::fs::read_to_string(file).unwrap();
+        for (ln, line) in text.lines().enumerate() {
+            // every document mention on the line, in byte order; a §
+            // token resolves against the nearest preceding mention (or
+            // the first one when the token precedes them all), so mixed
+            // lines like "EXPERIMENTS.md §Perf and DESIGN.md §6" check
+            // each citation against its own document
+            let mut mentions: Vec<(usize, &str)> = ["DESIGN.md", "EXPERIMENTS.md"]
+                .iter()
+                .flat_map(|&doc| line.match_indices(doc).map(move |(p, _)| (p, doc)))
+                .collect();
+            if mentions.is_empty() {
+                continue;
+            }
+            mentions.sort_by_key(|&(p, _)| p);
+            for (pos, token) in section_refs(line) {
+                let doc = mentions
+                    .iter()
+                    .rev()
+                    .find(|&&(p, _)| p < pos)
+                    .map(|&(_, d)| d)
+                    .unwrap_or(mentions[0].1);
+                let secs =
+                    if doc == "DESIGN.md" { &design_secs } else { &experiments_secs };
+                checked += 1;
+                if !secs.contains(&token) {
+                    bad.push(format!(
+                        "{}:{}: {doc} §{token} does not resolve",
+                        file.display(),
+                        ln + 1
+                    ));
+                }
+            }
+        }
+    }
+    assert!(checked > 30, "expected a citation-rich tree, found {checked}");
+    assert!(bad.is_empty(), "dangling doc citations:\n{}", bad.join("\n"));
+}
+
+#[test]
+fn heading_and_ref_parsers_behave() {
+    let doc = "## §3 The cluster\n### §3.1 Lockstep\n## §Perf — notes\nplain\n";
+    let h = headings(doc);
+    assert!(h.contains("3") && h.contains("3.1") && h.contains("Perf"));
+    assert_eq!(h.len(), 3);
+    // (doc names spelled out would make this very test a citation line,
+    // so the probe string cites sections only)
+    let refs = section_refs("see §3.1–§3.2 and §Perf.");
+    let tokens: Vec<&str> = refs.iter().map(|(_, t)| t.as_str()).collect();
+    assert_eq!(tokens, vec!["3.1", "3.2", "Perf"]);
+    // byte offsets are ascending (attribution relies on this)
+    assert!(refs.windows(2).all(|w| w[0].0 < w[1].0));
+    assert!(section_refs("no refs here").is_empty());
+}

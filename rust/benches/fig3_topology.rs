@@ -1,0 +1,93 @@
+//! FIG3 — topology comparison: the same heterogeneous-node MIT
+//! schedule run flat vs hierarchical (DESIGN.md §7), reporting WAN
+//! bytes, total comm volume and wall/virtual time. The hierarchical
+//! arm must move strictly fewer bytes across the WAN while conserving
+//! the total — the two-level cost asymmetry the paper's MIT stage
+//! rests on (EXPERIMENTS.md §Figures, Fig. 3 table).
+//!
+//! Output: summary table + bench_results/fig3_topology.csv.
+//!
+//! Run: `cargo bench --bench fig3_topology` (`--smoke` — or the usual
+//! `--quick` / `ADLOCO_BENCH_QUICK=1` — for the CI-sized run;
+//! `--threads N` fans worker chains out, bit-identically).
+
+use adloco::benchkit::{bench_args, quick_mode, threads_arg, wall_time, Table};
+use adloco::config::{presets, Config, TopologyKind};
+use adloco::coordinator::{Coordinator, RunResult};
+use adloco::engine::build_engine;
+
+fn smoke_mode() -> bool {
+    quick_mode() || bench_args().iter().any(|a| a == "--smoke")
+}
+
+fn base_config(smoke: bool) -> Config {
+    let mut cfg = presets::hierarchical_mit();
+    if smoke {
+        cfg.algo.outer_steps = 4;
+        cfg.algo.inner_steps = 8;
+    }
+    cfg.run.threads = threads_arg();
+    cfg
+}
+
+fn run_arm(topology: TopologyKind, smoke: bool) -> (RunResult, f64) {
+    let mut cfg = base_config(smoke);
+    cfg.cluster.topology = topology;
+    cfg.name = format!("fig3_{}", topology.as_str());
+    let engine = build_engine(&cfg).unwrap();
+    let mut coord = Coordinator::new(cfg, engine).unwrap();
+    let (r, wall_s) = wall_time(|| coord.run().unwrap());
+    (r, wall_s)
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    if smoke {
+        eprintln!("fig3_topology: smoke mode (reduced schedule)");
+    }
+    let mut table = Table::new(&[
+        "topology",
+        "comms",
+        "total_bytes",
+        "wan_bytes",
+        "trainers_left",
+        "best_ppl",
+        "vtime_s",
+        "wall_s",
+    ]);
+    let mut wan = Vec::new();
+    let mut totals = Vec::new();
+    for topology in [TopologyKind::Flat, TopologyKind::Hierarchical] {
+        let (r, wall_s) = run_arm(topology, smoke);
+        table.row(&[
+            topology.as_str().to_string(),
+            r.comm_count.to_string(),
+            r.comm_bytes.to_string(),
+            r.wan_comm_bytes.to_string(),
+            r.trainers_left.to_string(),
+            format!("{:.3}", r.best_ppl),
+            format!("{:.3}", r.virtual_time_s),
+            format!("{:.3}", wall_s),
+        ]);
+        wan.push(r.wan_comm_bytes);
+        totals.push(r.comm_bytes);
+    }
+    table.print();
+    table.write_csv("fig3_topology").ok();
+
+    let (flat_wan, hier_wan) = (wan[0], wan[1]);
+    println!(
+        "\nWAN bytes: flat {} vs hierarchical {} ({:.1}x less WAN traffic)",
+        flat_wan,
+        hier_wan,
+        flat_wan as f64 / hier_wan.max(1) as f64
+    );
+    assert!(
+        hier_wan < flat_wan,
+        "hierarchical topology must shrink WAN bytes ({hier_wan} vs {flat_wan})"
+    );
+    println!(
+        "total bytes: flat {} vs hierarchical {} (closed forms conserve volume)",
+        totals[0], totals[1]
+    );
+}

@@ -1,0 +1,340 @@
+//! The cluster layer: node compute models, worker placement, per-worker
+//! virtual clocks with barrier/utilization accounting, churn lifecycle,
+//! and the flat/hierarchical topology (DESIGN.md §7).
+//!
+//! Carved out of the coordinator god-module together with [`crate::comm`]:
+//! the coordinator now asks the [`ClusterState`] *where time goes*
+//! (clock ownership, barrier waits, preemption downtime) and the comm
+//! layer *what a synchronization costs*; only training policy stays in
+//! `coordinator/`. The split keeps the determinism contract intact —
+//! every f64 accumulation sequence here is the exact arithmetic the
+//! pre-split coordinator performed (DESIGN.md §6).
+
+pub mod topology;
+
+pub use topology::Topology;
+
+use crate::config::ClusterConfig;
+use crate::metrics::UtilRecord;
+use crate::simulator::Scenario;
+use crate::trainer::Trainer;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Compute-rate model of one simulated node (GPU).
+#[derive(Clone, Debug)]
+pub struct NodeModel {
+    /// Memory-limited max batch (the paper's `max_batch`).
+    pub max_batch: usize,
+    /// Relative speed multiplier (1.0 = reference hardware).
+    pub speed: f64,
+    /// t_step = (fixed + per_token * batch * seq) / speed
+    pub step_fixed_s: f64,
+    /// Per-token term of the step-time model.
+    pub step_per_token_s: f64,
+}
+
+impl NodeModel {
+    /// Virtual seconds to execute one optimizer step at `batch` x `seq`.
+    pub fn step_time(&self, batch: usize, seq: usize) -> f64 {
+        (self.step_fixed_s + self.step_per_token_s * (batch * seq) as f64) / self.speed
+    }
+}
+
+/// Per-worker virtual clocks plus barrier helpers.
+#[derive(Clone, Debug)]
+pub struct VirtualClock {
+    times: Vec<f64>,
+}
+
+impl VirtualClock {
+    /// All-zero clocks for `workers` slots.
+    pub fn new(workers: usize) -> Self {
+        VirtualClock { times: vec![0.0; workers] }
+    }
+
+    /// Number of clock slots.
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    /// True when no slots exist.
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    /// Slot `w`'s current virtual time.
+    pub fn time(&self, w: usize) -> f64 {
+        self.times[w]
+    }
+
+    /// Advance slot `w` by `dt >= 0` seconds.
+    pub fn advance(&mut self, w: usize, dt: f64) {
+        debug_assert!(dt >= 0.0);
+        self.times[w] += dt;
+    }
+
+    /// Jump worker `w` forward to absolute time `t` (no-op if already
+    /// past). The event scheduler assigns pop timestamps directly so a
+    /// worker's clock matches the lockstep `+= dt` chain bit-for-bit.
+    pub fn advance_to(&mut self, w: usize, t: f64) {
+        if t > self.times[w] {
+            self.times[w] = t;
+        }
+    }
+
+    /// Barrier across a subset: all members jump to the max member time,
+    /// then advance by `extra` (e.g. the all-reduce transfer time).
+    /// Returns the post-barrier time.
+    pub fn barrier(&mut self, members: &[usize], extra: f64) -> f64 {
+        let t = members
+            .iter()
+            .map(|&w| self.times[w])
+            .fold(0.0_f64, f64::max)
+            + extra;
+        for &w in members {
+            self.times[w] = t;
+        }
+        t
+    }
+
+    /// Global max time (run wall-clock in virtual seconds).
+    pub fn max_time(&self) -> f64 {
+        self.times.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Drop clocks not in `keep`, preserving order (trainer merges shrink
+    /// the worker set).
+    pub fn retain(&mut self, keep: &[usize]) {
+        self.times = keep.iter().map(|&w| self.times[w]).collect();
+    }
+}
+
+/// Build per-node models from a cluster config.
+pub fn node_models(cfg: &ClusterConfig) -> Vec<NodeModel> {
+    cfg.nodes
+        .iter()
+        .map(|n| NodeModel {
+            max_batch: n.max_batch,
+            speed: n.speed,
+            step_fixed_s: cfg.step_fixed_s,
+            step_per_token_s: cfg.step_per_token_s,
+        })
+        .collect()
+}
+
+/// Round-robin worker->node placement (the paper packs `nodes_per_gpu`
+/// trainer processes per simulated GPU the same way).
+pub fn assign_workers(total_workers: usize, nodes: usize) -> Vec<usize> {
+    (0..total_workers).map(|w| w % nodes).collect()
+}
+
+/// Everything the simulated cluster knows about *time and place*: node
+/// models, per-worker virtual clocks, the dynamic-workload scenario,
+/// the topology, and the per-slot time accounting behind the
+/// utilization report.
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    /// Per-worker virtual clocks (one slot per worker).
+    pub clock: VirtualClock,
+    /// Per-node compute models.
+    pub nodes: Vec<NodeModel>,
+    /// Compiled dynamic-workload scenario.
+    pub scenario: Scenario,
+    /// Compiled flat/hierarchical topology.
+    pub topology: Topology,
+    /// Per-slot compute seconds.
+    pub busy_s: Vec<f64>,
+    /// Per-slot barrier-wait seconds (idling behind slower peers).
+    pub wait_s: Vec<f64>,
+    /// Per-slot modeled communication seconds.
+    pub comm_s: Vec<f64>,
+    /// Per-slot churn-preemption downtime seconds.
+    pub preempted_s: Vec<f64>,
+}
+
+impl ClusterState {
+    /// Build the cluster layer for `slots` worker clock slots.
+    pub fn new(cfg: &ClusterConfig, slots: usize) -> ClusterState {
+        ClusterState {
+            clock: VirtualClock::new(slots),
+            nodes: node_models(cfg),
+            scenario: Scenario::compile(&cfg.scenario, cfg.nodes.len()),
+            topology: Topology::compile(cfg),
+            busy_s: vec![0.0; slots],
+            wait_s: vec![0.0; slots],
+            comm_s: vec![0.0; slots],
+            preempted_s: vec![0.0; slots],
+        }
+    }
+
+    /// Barrier with utilization accounting: members wait for the slowest
+    /// (wait time) then pay the transfer (comm time). Numerically exactly
+    /// [`VirtualClock::barrier`].
+    pub fn barrier_tracked(&mut self, members: &[usize], extra: f64) -> f64 {
+        let t_start = members
+            .iter()
+            .map(|&w| self.clock.time(w))
+            .fold(0.0_f64, f64::max);
+        for &w in members {
+            self.wait_s[w] += t_start - self.clock.time(w);
+            self.comm_s[w] += extra;
+        }
+        self.clock.barrier(members, extra)
+    }
+
+    /// Per-worker utilization rows from the accumulated time accounting
+    /// (workers enumerate in clock-slot order).
+    pub fn utilization_table(&self, trainers: &[Trainer]) -> Vec<UtilRecord> {
+        let mut out = Vec::with_capacity(self.busy_s.len());
+        for tr in trainers {
+            for (wi, w) in tr.workers.iter().enumerate() {
+                let s = w.clock_slot;
+                out.push(UtilRecord {
+                    trainer: tr.id,
+                    worker: wi,
+                    node: w.node,
+                    busy_s: self.busy_s[s],
+                    wait_s: self.wait_s[s],
+                    comm_s: self.comm_s[s],
+                    preempted_s: self.preempted_s[s],
+                });
+            }
+        }
+        out
+    }
+
+    /// Churn bookkeeping at an outer boundary: workers on preempted nodes
+    /// sit the round out; returning workers catch their clocks up and the
+    /// trainer's shard is re-split among the currently active workers
+    /// (the `Shard::split` / `union_shards` machinery).
+    #[allow(clippy::needless_range_loop)] // body interleaves &mut self calls
+    pub fn apply_churn(&mut self, trainers: &mut [Trainer], rng: &mut Rng) -> Result<()> {
+        if self.scenario.is_static() {
+            return Ok(());
+        }
+        for ti in 0..trainers.len() {
+            if !trainers[ti].alive {
+                continue;
+            }
+            // the trainer front: where its active cohort currently is; a
+            // fully-preempted trainer's clocks are frozen, so fall back
+            // to the global front or it would never see its window end
+            let mut t_now = trainers[ti]
+                .workers
+                .iter()
+                .map(|w| self.clock.time(w.clock_slot))
+                .fold(0.0f64, f64::max);
+            if !trainers[ti].workers.iter().any(|w| w.active) {
+                t_now = t_now.max(self.clock.max_time());
+            }
+            let changed = trainers[ti]
+                .workers
+                .iter()
+                .any(|w| self.scenario.node_available(w.node, t_now) != w.active);
+            if !changed {
+                continue;
+            }
+            for wi in 0..trainers[ti].workers.len() {
+                let (node, slot, was_active) = {
+                    let w = &trainers[ti].workers[wi];
+                    (w.node, w.clock_slot, w.active)
+                };
+                let avail = self.scenario.node_available(node, t_now);
+                if avail && !was_active {
+                    // rejoin: jump to the trainer front; the gap was
+                    // preemption downtime
+                    let cur = self.clock.time(slot);
+                    if t_now > cur {
+                        self.clock.advance_to(slot, t_now);
+                        self.preempted_s[slot] += t_now - cur;
+                    }
+                }
+                trainers[ti].workers[wi].active = avail;
+            }
+            let active_ix: Vec<usize> = trainers[ti]
+                .workers
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| w.active)
+                .map(|(i, _)| i)
+                .collect();
+            if active_ix.is_empty() {
+                crate::info!("trainer {ti}: all workers preempted; sitting this round out");
+                continue;
+            }
+            let parts = trainers[ti].shard.split(active_ix.len());
+            for (&w_ix, part) in active_ix.iter().zip(parts.into_iter()) {
+                trainers[ti].workers[w_ix].sampler = crate::data::BatchSampler::new(
+                    part,
+                    rng.fork(0xC4A5 ^ ((ti as u64) << 8) ^ (w_ix as u64)),
+                );
+            }
+            crate::debug!(
+                "trainer {ti}: churn re-shard over {} active workers at t={t_now:.2}s",
+                active_ix.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_time_scales_with_batch_and_speed() {
+        let n = NodeModel { max_batch: 8, speed: 2.0, step_fixed_s: 0.01, step_per_token_s: 1e-4 };
+        let t1 = n.step_time(1, 64);
+        let t8 = n.step_time(8, 64);
+        assert!(t8 > t1);
+        assert!((t1 - (0.01 + 64.0 * 1e-4) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn barrier_aligns_members() {
+        let mut c = VirtualClock::new(4);
+        c.advance(0, 1.0);
+        c.advance(1, 3.0);
+        c.advance(2, 2.0);
+        let t = c.barrier(&[0, 1, 2], 0.5);
+        assert!((t - 3.5).abs() < 1e-12);
+        for w in 0..3 {
+            assert!((c.time(w) - 3.5).abs() < 1e-12);
+        }
+        assert_eq!(c.time(3), 0.0, "non-member unaffected");
+    }
+
+    #[test]
+    fn retain_preserves_selected() {
+        let mut c = VirtualClock::new(3);
+        c.advance(0, 1.0);
+        c.advance(1, 2.0);
+        c.advance(2, 3.0);
+        c.retain(&[0, 2]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.time(0), 1.0);
+        assert_eq!(c.time(1), 3.0);
+    }
+
+    #[test]
+    fn assignment_round_robin() {
+        assert_eq!(assign_workers(5, 2), vec![0, 1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn barrier_tracked_accounts_wait_and_comm() {
+        let cfg = crate::config::presets::mock_default().cluster;
+        let mut cs = ClusterState::new(&cfg, 3);
+        cs.clock.advance(0, 1.0);
+        cs.clock.advance(1, 3.0);
+        let t = cs.barrier_tracked(&[0, 1], 0.5);
+        assert!((t - 3.5).abs() < 1e-12);
+        assert!((cs.wait_s[0] - 2.0).abs() < 1e-12, "slot 0 waited for slot 1");
+        assert_eq!(cs.wait_s[1], 0.0);
+        assert!((cs.comm_s[0] - 0.5).abs() < 1e-12);
+        assert!((cs.comm_s[1] - 0.5).abs() < 1e-12);
+        assert_eq!(cs.wait_s[2], 0.0, "non-member unaffected");
+    }
+}

@@ -1,0 +1,98 @@
+//! Cluster topology: flat single-tier, or hierarchical two-tier node
+//! groups (DESIGN.md §7).
+//!
+//! A hierarchical cluster partitions its nodes into groups wired by
+//! fast intra-group links; groups talk to each other only through
+//! their leaders over the slow WAN. The [`Topology`] is the compiled
+//! node→group map the [`crate::comm::CommLayer`] consults when pricing
+//! a synchronization and the coordinator consults when selecting
+//! merge candidates (prefer trainers homed in the same group — the
+//! cheap side of the MIT cost asymmetry).
+
+use crate::config::{ClusterConfig, TopologyKind};
+
+/// Compiled node→group map. Flat clusters get a single implicit group
+/// (every cost path then degenerates to the one-network formula).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    kind: TopologyKind,
+    /// Node id → group id (all zeros when flat).
+    group_of: Vec<usize>,
+    n_groups: usize,
+}
+
+impl Topology {
+    /// Compile the config's topology block. Malformed group maps
+    /// (empty group, node in two groups, unassigned node) are rejected
+    /// by `Config::validate` before this is reached.
+    pub fn compile(cfg: &ClusterConfig) -> Topology {
+        match cfg.topology {
+            TopologyKind::Flat => Topology {
+                kind: TopologyKind::Flat,
+                group_of: vec![0; cfg.nodes.len()],
+                n_groups: 1,
+            },
+            TopologyKind::Hierarchical => {
+                let mut group_of = vec![0usize; cfg.nodes.len()];
+                for (g, members) in cfg.groups.iter().enumerate() {
+                    for &node in members {
+                        if node < group_of.len() {
+                            group_of[node] = g;
+                        }
+                    }
+                }
+                Topology {
+                    kind: TopologyKind::Hierarchical,
+                    group_of,
+                    n_groups: cfg.groups.len(),
+                }
+            }
+        }
+    }
+
+    /// True under the two-tier (grouped) topology.
+    pub fn is_hierarchical(&self) -> bool {
+        self.kind == TopologyKind::Hierarchical
+    }
+
+    /// Group of `node` (0 for every node of a flat cluster).
+    pub fn group_of(&self, node: usize) -> usize {
+        self.group_of[node]
+    }
+
+    /// Number of groups (1 for flat).
+    pub fn n_groups(&self) -> usize {
+        self.n_groups
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn flat_is_one_group() {
+        let cfg = presets::mock_default().cluster;
+        let t = Topology::compile(&cfg);
+        assert!(!t.is_hierarchical());
+        assert_eq!(t.n_groups(), 1);
+        for n in 0..cfg.nodes.len() {
+            assert_eq!(t.group_of(n), 0);
+        }
+    }
+
+    #[test]
+    fn hierarchical_maps_nodes_to_groups() {
+        let mut cfg = presets::mock_default().cluster;
+        cfg.topology = TopologyKind::Hierarchical;
+        cfg.groups = vec![vec![0, 2], vec![1, 3]];
+        let t = Topology::compile(&cfg);
+        assert!(t.is_hierarchical());
+        assert_eq!(t.n_groups(), 2);
+        assert_eq!(t.group_of(0), 0);
+        assert_eq!(t.group_of(2), 0);
+        assert_eq!(t.group_of(1), 1);
+        assert_eq!(t.group_of(3), 1);
+    }
+}

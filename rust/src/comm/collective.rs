@@ -1,0 +1,212 @@
+//! Pluggable collective-communication cost models (DESIGN.md §7).
+//!
+//! A [`Collective`] prices one synchronization round among `m`
+//! participants, each contributing a `bytes`-sized payload, over a
+//! [`NetworkModel`]: it returns the modeled wall-clock seconds of the
+//! round *and* the bytes the [`crate::comm::CommLedger`] charges for it
+//! — one closed form per collective, in one place, instead of formulas
+//! hand-inlined at every `ledger.record` call site.
+//!
+//! Closed forms (`α` = link latency, `β` = bandwidth, `B` = bytes,
+//! `m` = participants; every collective costs nothing at `m <= 1`):
+//!
+//! | collective        | time model                       | ledger bytes |
+//! |-------------------|----------------------------------|--------------|
+//! | ring all-reduce   | `2(m−1)·α + 2(m−1)/m · B/β`      | `2(m−1)·B`   |
+//! | tree all-reduce   | `2⌈log₂m⌉ · (α + B/β)`           | `2(m−1)·B`   |
+//! | parameter server  | `2α + 2(m−1) · B/β`              | `2(m−1)·B`   |
+//! | gather (merge)    | `α + (m−1) · B/β`                | `(m−1)·B`    |
+//!
+//! Every reduce-style collective moves the same `2(m−1)·B` in total —
+//! they differ in *when* and *how parallel* the wire is used. The merge
+//! gather moves half: MIT DoMerge parameters flow one way, to the
+//! representative ([`crate::comm::CommKind::Merge`]'s form; the
+//! all-reduce row is [`crate::comm::CommKind::OuterSync`]'s).
+
+use super::NetworkModel;
+use crate::config::CollectiveKind;
+
+/// Cost model of one collective round, used as a trait object by the
+/// [`crate::comm::CommLayer`] so the collective *shape* (who talks to
+/// whom, when) is a pluggable config axis.
+pub trait Collective: Sync {
+    /// Canonical lowercase name (bench / debug output).
+    fn name(&self) -> &'static str;
+
+    /// `(seconds, ledger_bytes)` for `m` members exchanging `bytes`
+    /// each over `net`. `m <= 1` costs `(0.0, 0)`.
+    fn cost(&self, bytes: u64, m: usize, net: &NetworkModel) -> (f64, u64);
+}
+
+/// Ring all-reduce — the DiLoCo outer-sync default. The time side is
+/// [`NetworkModel::allreduce_time`] (the formula the simulator has
+/// always used); the ledger side is the `2(m−1)·B` reduce-scatter +
+/// all-gather wire total.
+pub struct RingAllReduce;
+
+impl Collective for RingAllReduce {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn cost(&self, bytes: u64, m: usize, net: &NetworkModel) -> (f64, u64) {
+        if m <= 1 {
+            return (0.0, 0);
+        }
+        (net.allreduce_time(bytes, m), 2 * (m as u64 - 1) * bytes)
+    }
+}
+
+/// Binary-tree all-reduce: reduce up `⌈log₂m⌉` levels then broadcast
+/// back down, each level one full-payload hop. Fewer latency terms
+/// than the ring at large `m`, more bandwidth-serial at small `m`.
+pub struct TreeAllReduce;
+
+impl Collective for TreeAllReduce {
+    fn name(&self) -> &'static str {
+        "tree"
+    }
+
+    fn cost(&self, bytes: u64, m: usize, net: &NetworkModel) -> (f64, u64) {
+        if m <= 1 {
+            return (0.0, 0);
+        }
+        // ceil(log2 m) = bit length of m-1 for m >= 2
+        let levels = (usize::BITS - (m - 1).leading_zeros()) as f64;
+        let per_level = net.latency_s + bytes as f64 / net.bandwidth_bps;
+        (2.0 * levels * per_level, 2 * (m as u64 - 1) * bytes)
+    }
+}
+
+/// Central parameter server: `m−1` members upload, the server reduces
+/// and broadcasts back. The server link serializes both directions, so
+/// time is linear in `m` — the worst scaling of the three, kept as the
+/// classic baseline shape.
+pub struct ParameterServer;
+
+impl Collective for ParameterServer {
+    fn name(&self) -> &'static str {
+        "param_server"
+    }
+
+    fn cost(&self, bytes: u64, m: usize, net: &NetworkModel) -> (f64, u64) {
+        if m <= 1 {
+            return (0.0, 0);
+        }
+        let moved = 2 * (m as u64 - 1) * bytes;
+        (2.0 * net.latency_s + moved as f64 / net.bandwidth_bps, moved)
+    }
+}
+
+/// Gather at the representative — the MIT DoMerge movement: `m−1`
+/// members each ship their parameters one way over a shared link
+/// (time is [`NetworkModel::transfer_time`] of the whole payload).
+pub struct GatherMerge;
+
+impl Collective for GatherMerge {
+    fn name(&self) -> &'static str {
+        "gather"
+    }
+
+    fn cost(&self, bytes: u64, m: usize, net: &NetworkModel) -> (f64, u64) {
+        if m <= 1 {
+            return (0.0, 0);
+        }
+        let moved = (m as u64 - 1) * bytes;
+        (net.transfer_time(moved), moved)
+    }
+}
+
+/// The ring instance behind [`CollectiveKind::Ring`].
+pub static RING: RingAllReduce = RingAllReduce;
+/// The tree instance behind [`CollectiveKind::Tree`].
+pub static TREE: TreeAllReduce = TreeAllReduce;
+/// The parameter-server instance behind [`CollectiveKind::ParamServer`].
+pub static PARAM_SERVER: ParameterServer = ParameterServer;
+/// The gather instance pricing every MIT merge.
+pub static GATHER: GatherMerge = GatherMerge;
+
+/// Resolve a configured sync collective to its trait object.
+pub fn collective_for(kind: CollectiveKind) -> &'static dyn Collective {
+    match kind {
+        CollectiveKind::Ring => &RING,
+        CollectiveKind::Tree => &TREE,
+        CollectiveKind::ParamServer => &PARAM_SERVER,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net() -> NetworkModel {
+        NetworkModel { latency_s: 1e-3, bandwidth_bps: 1e9 }
+    }
+
+    #[test]
+    fn singletons_cost_nothing() {
+        for c in [&RING as &dyn Collective, &TREE, &PARAM_SERVER, &GATHER] {
+            assert_eq!(c.cost(1_000_000, 1, &net()), (0.0, 0), "{}", c.name());
+            assert_eq!(c.cost(1_000_000, 0, &net()), (0.0, 0), "{}", c.name());
+        }
+    }
+
+    #[test]
+    fn ring_matches_network_model_and_ledger_form() {
+        let n = net();
+        for m in [2usize, 3, 8] {
+            let (t, b) = RING.cost(4_000_000, m, &n);
+            assert_eq!(t.to_bits(), n.allreduce_time(4_000_000, m).to_bits());
+            assert_eq!(b, 2 * (m as u64 - 1) * 4_000_000);
+        }
+    }
+
+    #[test]
+    fn gather_matches_transfer_time_and_half_bytes() {
+        let n = net();
+        for m in [2usize, 4] {
+            let (t, b) = GATHER.cost(1_000_000, m, &n);
+            assert_eq!(b, (m as u64 - 1) * 1_000_000);
+            assert_eq!(t.to_bits(), n.transfer_time(b).to_bits());
+        }
+    }
+
+    #[test]
+    fn reduce_collectives_move_identical_totals() {
+        let n = net();
+        for m in [2usize, 5, 16] {
+            let (_, ring_b) = RING.cost(123_456, m, &n);
+            let (_, tree_b) = TREE.cost(123_456, m, &n);
+            let (_, ps_b) = PARAM_SERVER.cost(123_456, m, &n);
+            assert_eq!(ring_b, tree_b);
+            assert_eq!(ring_b, ps_b);
+        }
+    }
+
+    #[test]
+    fn tree_levels_are_ceil_log2() {
+        let n = NetworkModel { latency_s: 1.0, bandwidth_bps: f64::INFINITY };
+        // with infinite bandwidth the time is 2*levels*latency
+        let levels = |m: usize| TREE.cost(1, m, &n).0 / 2.0;
+        assert_eq!(levels(2), 1.0);
+        assert_eq!(levels(3), 2.0);
+        assert_eq!(levels(4), 2.0);
+        assert_eq!(levels(5), 3.0);
+        assert_eq!(levels(8), 3.0);
+    }
+
+    #[test]
+    fn param_server_scales_linearly() {
+        let n = net();
+        let (t2, _) = PARAM_SERVER.cost(1_000_000_000, 2, &n);
+        let (t4, _) = PARAM_SERVER.cost(1_000_000_000, 4, &n);
+        assert!(t4 > 2.0 * t2, "server link serializes uploads: {t2} vs {t4}");
+    }
+
+    #[test]
+    fn kind_resolution() {
+        assert_eq!(collective_for(CollectiveKind::Ring).name(), "ring");
+        assert_eq!(collective_for(CollectiveKind::Tree).name(), "tree");
+        assert_eq!(collective_for(CollectiveKind::ParamServer).name(), "param_server");
+    }
+}

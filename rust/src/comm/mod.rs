@@ -1,0 +1,509 @@
+//! The communication layer: network tiers, pluggable collectives and
+//! the run-wide communication ledger (DESIGN.md §7).
+//!
+//! Carved out of the coordinator god-module so that **every
+//! [`CommEvent`] is produced by exactly one code path**: the
+//! coordinator describes a synchronization (kind, payload size,
+//! participant nodes) and the [`CommLayer`] prices it through a
+//! [`collective::Collective`] trait object, yielding the modeled
+//! transfer seconds *and* the ledger bytes from the same closed form.
+//! Before this layer existed, the byte formulas were hand-inlined at
+//! five `ledger.record` call sites.
+//!
+//! Two network tiers express the paper's MIT cost asymmetry — many
+//! lightweight merges on cheap local links, few expensive DiLoCo syncs
+//! across the cluster boundary: the *intra-group* network
+//! (`cluster.net_*`) and the *WAN* (`cluster.wan_*`), composed per the
+//! [`crate::cluster::Topology`]. Under the flat topology only the base
+//! network exists and every event is scoped [`CommScope::Wan`] — the
+//! single shared interconnect *is* the wide-area link of the
+//! flat-vs-hierarchical comparison (`theory::estimate_ledger`,
+//! `benches/fig3_topology.rs`).
+
+pub mod collective;
+
+use crate::cluster::Topology;
+use crate::config::ClusterConfig;
+use collective::{collective_for, Collective, GATHER};
+use std::collections::BTreeMap;
+
+/// Latency + bandwidth network model shared by all links of one tier.
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    /// Per-transfer latency, seconds.
+    pub latency_s: f64,
+    /// Link bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+impl NetworkModel {
+    /// One point-to-point transfer of `bytes`.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// The same link with its bandwidth scaled by `factor` — how the
+    /// scenario layer's time-varying links enter a sync's cost. A factor
+    /// of exactly 1.0 reproduces `self` bit-for-bit.
+    pub fn scaled(&self, factor: f64) -> NetworkModel {
+        NetworkModel {
+            latency_s: self.latency_s,
+            bandwidth_bps: self.bandwidth_bps * factor,
+        }
+    }
+
+    /// Parameter-averaging round among `m` participants of `bytes` each.
+    /// Modeled as a ring all-reduce: 2(m-1)/m * bytes on the wire per
+    /// node, plus one latency per ring hop (the time half of
+    /// [`collective::RingAllReduce`]'s closed form).
+    pub fn allreduce_time(&self, bytes: u64, m: usize) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        let hops = 2 * (m - 1);
+        hops as f64 * self.latency_s
+            + (2.0 * (m as f64 - 1.0) / m as f64) * bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// What a communication event was for (ledger taxonomy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommKind {
+    /// Inner-trainer worker averaging at an outer step (DiLoCo sync).
+    /// Closed form: the configured sync collective's all-reduce row
+    /// (ring default: `2(m−1)·P` ledger bytes — see [`collective`]).
+    OuterSync,
+    /// Trainer merge (MIT DoMerge parameter movement). Closed form:
+    /// the gather row, `(m−1)·P` ledger bytes.
+    Merge,
+}
+
+/// Which network tier carried a communication.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommScope {
+    /// Fast intra-group link (hierarchical topology only).
+    Intra,
+    /// Wide-area tier: the inter-group link of the hierarchical
+    /// topology — or the single shared network of a flat cluster,
+    /// which plays the WAN role in the flat-vs-hierarchical
+    /// comparison.
+    Wan,
+}
+
+/// One recorded communication event.
+#[derive(Clone, Debug)]
+pub struct CommEvent {
+    /// What the communication was for.
+    pub kind: CommKind,
+    /// Network tier that carried it.
+    pub scope: CommScope,
+    /// Virtual time the communication completed.
+    pub at_virtual_s: f64,
+    /// Bytes moved.
+    pub bytes: u64,
+    /// Number of participating workers/trainers (group leaders for a
+    /// hierarchical WAN phase).
+    pub participants: usize,
+    /// Inner-step index (global, per run) at which it happened.
+    pub at_inner_step: u64,
+}
+
+/// Ledger of all communications — the observable behind Theorem 2's
+/// C(N) and the "communication efficiency" axis of Fig. 1.
+#[derive(Clone, Debug, Default)]
+pub struct CommLedger {
+    /// Every recorded communication, in completion order.
+    pub events: Vec<CommEvent>,
+}
+
+impl CommLedger {
+    /// Append one communication.
+    pub fn record(&mut self, ev: CommEvent) {
+        self.events.push(ev);
+    }
+
+    /// Total recorded communications.
+    pub fn count(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Recorded communications of one kind.
+    pub fn count_kind(&self, kind: CommKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
+    }
+
+    /// Total bytes across all recorded communications.
+    pub fn total_bytes(&self) -> u64 {
+        self.events.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Bytes that crossed the WAN tier (== [`Self::total_bytes`] on a
+    /// flat cluster) — the axis the hierarchical topology shrinks.
+    pub fn wan_bytes(&self) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| e.scope == CommScope::Wan)
+            .map(|e| e.bytes)
+            .sum()
+    }
+
+    /// Total bytes of one event kind.
+    pub fn bytes_kind(&self, kind: CommKind) -> u64 {
+        self.events.iter().filter(|e| e.kind == kind).map(|e| e.bytes).sum()
+    }
+
+    /// Cumulative (inner_step, count) series for C(N) plots.
+    pub fn cumulative_by_step(&self) -> Vec<(u64, usize)> {
+        let mut evs: Vec<&CommEvent> = self.events.iter().collect();
+        evs.sort_by_key(|e| e.at_inner_step);
+        evs.iter()
+            .enumerate()
+            .map(|(i, e)| (e.at_inner_step, i + 1))
+            .collect()
+    }
+}
+
+/// One network phase of a priced communication — the ledger row it
+/// will produce once the rendezvous completes.
+#[derive(Clone, Debug)]
+pub struct CommPhase {
+    /// Tier the phase ran on.
+    pub scope: CommScope,
+    /// Ledger bytes of the phase (the collective's closed form).
+    pub bytes: u64,
+    /// Members of the phase (workers/trainers intra, group leaders on
+    /// the WAN).
+    pub participants: usize,
+}
+
+/// A priced communication: total modeled transfer seconds plus the
+/// ledger phases. Intra-group phases run concurrently across groups
+/// (time = max over groups); the WAN phase runs after them (adds).
+#[derive(Clone, Debug)]
+pub struct CommCost {
+    /// Modeled seconds the participants spend in the transfer (what
+    /// the barrier charges as comm time).
+    pub time_s: f64,
+    /// Ledger rows (empty when nothing moved, e.g. one participant).
+    pub phases: Vec<CommPhase>,
+}
+
+impl CommCost {
+    /// Total ledger bytes across phases.
+    pub fn total_bytes(&self) -> u64 {
+        self.phases.iter().map(|p| p.bytes).sum()
+    }
+}
+
+/// The comm layer a run owns: the two network tiers, the collectives
+/// pricing syncs and merges, and the ledger every phase lands in.
+pub struct CommLayer {
+    /// Base network: the whole cluster (flat) or the intra-group links
+    /// (hierarchical).
+    net: NetworkModel,
+    /// Inter-group (WAN) network of the hierarchical topology.
+    wan: NetworkModel,
+    /// Collective pricing outer syncs (`cluster.sync_collective`).
+    sync: &'static dyn Collective,
+    /// Collective pricing MIT merges (gather at the representative).
+    merge: &'static dyn Collective,
+    /// The run-wide communication ledger.
+    pub ledger: CommLedger,
+}
+
+impl CommLayer {
+    /// Build the layer from the cluster config block.
+    pub fn new(cfg: &ClusterConfig) -> CommLayer {
+        CommLayer {
+            net: NetworkModel {
+                latency_s: cfg.net_latency_s,
+                bandwidth_bps: cfg.net_bandwidth_bps,
+            },
+            wan: NetworkModel {
+                latency_s: cfg.wan_latency_s,
+                bandwidth_bps: cfg.wan_bandwidth_bps,
+            },
+            sync: collective_for(cfg.sync_collective),
+            merge: &GATHER,
+            ledger: CommLedger::default(),
+        }
+    }
+
+    /// Flat pricing: one round of `coll` among all `m` members over the
+    /// base network; the single phase is WAN-scoped (the shared network
+    /// is the flat cluster's wide-area link).
+    fn flat(coll: &dyn Collective, bytes: u64, m: usize, net: &NetworkModel) -> CommCost {
+        let (time_s, moved) = coll.cost(bytes, m, net);
+        let phases = if m > 1 {
+            vec![CommPhase { scope: CommScope::Wan, bytes: moved, participants: m }]
+        } else {
+            Vec::new()
+        };
+        CommCost { time_s, phases }
+    }
+
+    /// Two-level pricing: one round of `coll` inside each node group
+    /// (concurrent; the slowest group gates), then one round among the
+    /// group leaders over the WAN. Groups enumerate in ascending group
+    /// id, so the phase order — and the ledger — is deterministic.
+    fn two_level(
+        coll: &dyn Collective,
+        bytes: u64,
+        member_nodes: &[usize],
+        topo: &Topology,
+        net: &NetworkModel,
+        wan: &NetworkModel,
+    ) -> CommCost {
+        let mut groups: BTreeMap<usize, usize> = BTreeMap::new();
+        for &n in member_nodes {
+            *groups.entry(topo.group_of(n)).or_insert(0) += 1;
+        }
+        let mut phases = Vec::new();
+        let mut intra_s = 0.0_f64;
+        for &g_m in groups.values() {
+            let (t, moved) = coll.cost(bytes, g_m, net);
+            intra_s = intra_s.max(t);
+            if g_m > 1 {
+                phases.push(CommPhase {
+                    scope: CommScope::Intra,
+                    bytes: moved,
+                    participants: g_m,
+                });
+            }
+        }
+        let leaders = groups.len();
+        let (wan_s, wan_moved) = coll.cost(bytes, leaders, wan);
+        if leaders > 1 {
+            phases.push(CommPhase {
+                scope: CommScope::Wan,
+                bytes: wan_moved,
+                participants: leaders,
+            });
+        }
+        CommCost { time_s: intra_s + wan_s, phases }
+    }
+
+    /// Price one outer sync (DiLoCo worker averaging) among the workers
+    /// sitting on `member_nodes`. `bw_factor` is the scenario's slowest
+    /// participating-link factor at barrier time (1.0 reproduces the
+    /// unscaled network bit-for-bit).
+    pub fn sync_cost(
+        &self,
+        param_bytes: u64,
+        member_nodes: &[usize],
+        topo: &Topology,
+        bw_factor: f64,
+    ) -> CommCost {
+        if topo.is_hierarchical() {
+            Self::two_level(
+                self.sync,
+                param_bytes,
+                member_nodes,
+                topo,
+                &self.net.scaled(bw_factor),
+                &self.wan.scaled(bw_factor),
+            )
+        } else {
+            Self::flat(
+                self.sync,
+                param_bytes,
+                member_nodes.len(),
+                &self.net.scaled(bw_factor),
+            )
+        }
+    }
+
+    /// Price one MIT merge (gather at the representative) among the
+    /// trainers homed on `home_nodes`. Hierarchically, each group
+    /// gathers at its leader on intra links, then `G−1` leaders cross
+    /// the WAN — the cheap-local / expensive-global asymmetry the MIT
+    /// stage rests on.
+    pub fn merge_cost(
+        &self,
+        param_bytes: u64,
+        home_nodes: &[usize],
+        topo: &Topology,
+        bw_factor: f64,
+    ) -> CommCost {
+        if topo.is_hierarchical() {
+            Self::two_level(
+                self.merge,
+                param_bytes,
+                home_nodes,
+                topo,
+                &self.net.scaled(bw_factor),
+                &self.wan.scaled(bw_factor),
+            )
+        } else {
+            Self::flat(
+                self.merge,
+                param_bytes,
+                home_nodes.len(),
+                &self.net.scaled(bw_factor),
+            )
+        }
+    }
+
+    /// Land a priced communication in the ledger: one event per phase,
+    /// all stamped with the rendezvous completion time. This is the
+    /// single point every `CommEvent` of a run flows through.
+    pub fn record(
+        &mut self,
+        kind: CommKind,
+        cost: &CommCost,
+        at_virtual_s: f64,
+        at_inner_step: u64,
+    ) {
+        for ph in &cost.phases {
+            self.ledger.record(CommEvent {
+                kind,
+                scope: ph.scope,
+                at_virtual_s,
+                bytes: ph.bytes,
+                participants: ph.participants,
+                at_inner_step,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, TopologyKind};
+
+    #[test]
+    fn allreduce_time_properties() {
+        let net = NetworkModel { latency_s: 1e-3, bandwidth_bps: 1e9 };
+        assert_eq!(net.allreduce_time(1_000_000, 1), 0.0);
+        let t2 = net.allreduce_time(1_000_000, 2);
+        let t4 = net.allreduce_time(1_000_000, 4);
+        assert!(t2 > 0.0);
+        assert!(t4 > t2, "more participants -> more ring hops");
+        // bandwidth term approaches 2*bytes/bw from below
+        let t_big = net.allreduce_time(1_000_000_000, 4);
+        assert!(t_big < 2.0 * 1e9 / 1e9 + 1.0);
+    }
+
+    #[test]
+    fn scaled_by_one_is_bit_identical() {
+        let net = NetworkModel { latency_s: 1e-3, bandwidth_bps: 1.25e9 };
+        let s = net.scaled(1.0);
+        assert_eq!(s.latency_s.to_bits(), net.latency_s.to_bits());
+        assert_eq!(s.bandwidth_bps.to_bits(), net.bandwidth_bps.to_bits());
+        assert_eq!(
+            s.allreduce_time(4_000_000, 3).to_bits(),
+            net.allreduce_time(4_000_000, 3).to_bits()
+        );
+    }
+
+    #[test]
+    fn ledger_accounting() {
+        let mut l = CommLedger::default();
+        l.record(CommEvent {
+            kind: CommKind::OuterSync,
+            scope: CommScope::Wan,
+            at_virtual_s: 1.0,
+            bytes: 100,
+            participants: 2,
+            at_inner_step: 10,
+        });
+        l.record(CommEvent {
+            kind: CommKind::Merge,
+            scope: CommScope::Intra,
+            at_virtual_s: 2.0,
+            bytes: 50,
+            participants: 3,
+            at_inner_step: 20,
+        });
+        assert_eq!(l.count(), 2);
+        assert_eq!(l.count_kind(CommKind::OuterSync), 1);
+        assert_eq!(l.total_bytes(), 150);
+        assert_eq!(l.wan_bytes(), 100, "intra bytes stay off the WAN tally");
+        assert_eq!(l.bytes_kind(CommKind::Merge), 50);
+        assert_eq!(l.cumulative_by_step(), vec![(10, 1), (20, 2)]);
+    }
+
+    /// A hierarchical cluster config: 4 nodes grouped [[0,1],[2,3]]
+    /// with a WAN 10x slower than the intra links.
+    fn hier_cluster() -> crate::config::ClusterConfig {
+        let mut c = presets::mock_default().cluster;
+        c.topology = TopologyKind::Hierarchical;
+        c.groups = vec![vec![0, 1], vec![2, 3]];
+        c.wan_latency_s = 10.0 * c.net_latency_s;
+        c.wan_bandwidth_bps = c.net_bandwidth_bps / 10.0;
+        c
+    }
+
+    #[test]
+    fn flat_sync_cost_matches_legacy_formulas() {
+        let mut c = presets::mock_default().cluster;
+        c.topology = TopologyKind::Flat;
+        let layer = CommLayer::new(&c);
+        let net = NetworkModel { latency_s: c.net_latency_s, bandwidth_bps: c.net_bandwidth_bps };
+        let topo = Topology::compile(&c);
+        let p = 4_000u64;
+        let cost = layer.sync_cost(p, &[0, 1, 2], &topo, 1.0);
+        assert_eq!(cost.time_s.to_bits(), net.allreduce_time(p, 3).to_bits());
+        assert_eq!(cost.phases.len(), 1);
+        assert_eq!(cost.phases[0].bytes, 2 * 2 * p);
+        assert_eq!(cost.phases[0].scope, CommScope::Wan);
+        // single member: a free barrier, no ledger rows
+        let solo = layer.sync_cost(p, &[2], &topo, 1.0);
+        assert_eq!(solo.time_s, 0.0);
+        assert!(solo.phases.is_empty());
+        // merge gather: (k-1)P one way
+        let mcost = layer.merge_cost(p, &[0, 1], &topo, 1.0);
+        assert_eq!(mcost.time_s.to_bits(), net.transfer_time(p).to_bits());
+        assert_eq!(mcost.total_bytes(), p);
+    }
+
+    #[test]
+    fn hierarchical_sync_conserves_bytes_and_shrinks_wan() {
+        let c = hier_cluster();
+        let layer = CommLayer::new(&c);
+        let topo = Topology::compile(&c);
+        let p = 1_000u64;
+        // 4 workers spanning both groups, 2 per group
+        let cost = layer.sync_cost(p, &[0, 1, 2, 3], &topo, 1.0);
+        // phases: intra g0, intra g1, WAN leaders
+        assert_eq!(cost.phases.len(), 3);
+        let wan: u64 = cost
+            .phases
+            .iter()
+            .filter(|ph| ph.scope == CommScope::Wan)
+            .map(|ph| ph.bytes)
+            .sum();
+        // total conserved vs flat: 2(m-1)P; WAN shrinks to 2(G-1)P
+        assert_eq!(cost.total_bytes(), 2 * 3 * p);
+        assert_eq!(wan, 2 * p);
+        // all members in one group: nothing crosses the WAN
+        let local = layer.sync_cost(p, &[0, 1], &topo, 1.0);
+        assert_eq!(local.phases.len(), 1);
+        assert_eq!(local.phases[0].scope, CommScope::Intra);
+        assert_eq!(local.total_bytes(), 2 * p);
+    }
+
+    #[test]
+    fn hierarchical_merge_splits_gather_by_group() {
+        let c = hier_cluster();
+        let layer = CommLayer::new(&c);
+        let topo = Topology::compile(&c);
+        let p = 1_000u64;
+        // 3 trainers homed on nodes 0, 1 (group 0) and 2 (group 1):
+        // intra gather (2-1)P in group 0, WAN (2-1)P between leaders
+        let cost = layer.merge_cost(p, &[0, 1, 2], &topo, 1.0);
+        assert_eq!(cost.total_bytes(), 2 * p, "(k-1)P conserved");
+        let wan: u64 = cost
+            .phases
+            .iter()
+            .filter(|ph| ph.scope == CommScope::Wan)
+            .map(|ph| ph.bytes)
+            .sum();
+        assert_eq!(wan, p);
+        // cross-group WAN leg is priced on the slow tier: strictly
+        // slower than the same gather over intra links
+        let all_local = layer.merge_cost(p, &[0, 1], &topo, 1.0);
+        assert!(cost.time_s > all_local.time_s);
+    }
+}

@@ -309,6 +309,72 @@ impl SchedulerKind {
     }
 }
 
+/// Cluster topology flavour (DESIGN.md §7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Single-tier cluster: one shared network connects every node
+    /// (that network plays the WAN role in topology comparisons).
+    Flat,
+    /// Two-tier cluster: nodes are partitioned into `cluster.groups`
+    /// with fast intra-group links (`cluster.net_*`); groups talk only
+    /// through their leaders over the slow WAN (`cluster.wan_*`). MIT
+    /// merges and worker→trainer reduces stay intra-group where
+    /// possible; outer DiLoCo syncs cross the WAN leader-to-leader.
+    Hierarchical,
+}
+
+impl TopologyKind {
+    /// Parse a CLI/config topology name.
+    pub fn parse(s: &str) -> Result<TopologyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "flat" => Ok(TopologyKind::Flat),
+            "hierarchical" | "hier" => Ok(TopologyKind::Hierarchical),
+            _ => bail!("unknown topology {s:?} (flat|hierarchical)"),
+        }
+    }
+
+    /// Canonical lowercase name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TopologyKind::Flat => "flat",
+            TopologyKind::Hierarchical => "hierarchical",
+        }
+    }
+}
+
+/// Which collective prices the outer sync (the pluggable-collective
+/// axis of the comm layer; cost table in `comm::collective`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveKind {
+    /// Ring all-reduce (default; the historical simulator model).
+    Ring,
+    /// Binary-tree all-reduce.
+    Tree,
+    /// Central parameter server.
+    ParamServer,
+}
+
+impl CollectiveKind {
+    /// Parse a CLI/config collective name.
+    pub fn parse(s: &str) -> Result<CollectiveKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "ring" => Ok(CollectiveKind::Ring),
+            "tree" => Ok(CollectiveKind::Tree),
+            "param_server" | "ps" => Ok(CollectiveKind::ParamServer),
+            _ => bail!("unknown collective {s:?} (ring|tree|param_server)"),
+        }
+    }
+
+    /// Canonical lowercase name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CollectiveKind::Ring => "ring",
+            CollectiveKind::Tree => "tree",
+            CollectiveKind::ParamServer => "param_server",
+        }
+    }
+}
+
 /// A node-preemption window: the node is down over `[from_s, until_s)`
 /// of virtual time.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -390,6 +456,20 @@ pub struct ClusterConfig {
     pub step_jitter: f64,
     /// Dynamic-workload scenario (stragglers / churn / link shifts).
     pub scenario: ScenarioConfig,
+    /// Topology flavour: flat (one shared network) or hierarchical
+    /// (node groups + WAN between group leaders) — DESIGN.md §7.
+    pub topology: TopologyKind,
+    /// Hierarchical node groups: `groups[g]` lists the node ids of
+    /// group `g`. Must partition `nodes` exactly (validated: no empty
+    /// group, no node — and hence no worker — in two groups, no
+    /// unassigned node). Ignored under the flat topology.
+    pub groups: Vec<Vec<usize>>,
+    /// WAN latency between group leaders, seconds (hierarchical only).
+    pub wan_latency_s: f64,
+    /// WAN bandwidth between group leaders, bytes/second.
+    pub wan_bandwidth_bps: f64,
+    /// Collective model pricing outer syncs (ring | tree | param_server).
+    pub sync_collective: CollectiveKind,
 }
 
 /// Run-schedule knobs: evaluation cadence, stopping, checkpoints,
@@ -503,6 +583,36 @@ impl Config {
         }
         if self.cluster.net_bandwidth_bps <= 0.0 {
             bail!("cluster.net_bandwidth_bps must be positive");
+        }
+        if self.cluster.wan_bandwidth_bps <= 0.0 {
+            bail!("cluster.wan_bandwidth_bps must be positive");
+        }
+        if self.cluster.topology == TopologyKind::Hierarchical {
+            let n = self.cluster.nodes.len();
+            if self.cluster.groups.is_empty() {
+                bail!("cluster.groups must be non-empty under topology=hierarchical");
+            }
+            let mut owner: Vec<Option<usize>> = vec![None; n];
+            for (g, members) in self.cluster.groups.iter().enumerate() {
+                if members.is_empty() {
+                    bail!("cluster.groups[{g}] is empty");
+                }
+                for &node in members {
+                    if node >= n {
+                        bail!("cluster.groups[{g}] node {node} out of range ({n} nodes)");
+                    }
+                    if let Some(prev) = owner[node] {
+                        bail!(
+                            "cluster.groups: node {node} (and its workers) appears in \
+                             groups {prev} and {g}"
+                        );
+                    }
+                    owner[node] = Some(g);
+                }
+            }
+            if let Some(node) = owner.iter().position(|o| o.is_none()) {
+                bail!("cluster.groups: node {node} (and its workers) belongs to no group");
+            }
         }
         if !(0.0..1.0).contains(&self.cluster.step_jitter) {
             bail!("cluster.step_jitter must be in [0,1)");
@@ -822,6 +932,35 @@ fn apply_cluster(c: &mut ClusterConfig, v: &JsonValue) -> Result<()> {
     if let Some(s) = v.get("scenario") {
         apply_scenario(&mut c.scenario, s)?;
     }
+    if let Some(x) = v.get("topology").and_then(|x| x.as_str()) {
+        c.topology = TopologyKind::parse(x)?;
+    }
+    if let Some(arr) = v.get("groups").and_then(|x| x.as_array()) {
+        c.groups = arr
+            .iter()
+            .map(|g| {
+                let members = g
+                    .as_array()
+                    .ok_or_else(|| anyhow!("cluster.groups must be an array of node-id arrays"))?;
+                members
+                    .iter()
+                    .map(|n| {
+                        n.as_usize()
+                            .ok_or_else(|| anyhow!("cluster.groups entries must be node ids"))
+                    })
+                    .collect::<Result<Vec<usize>>>()
+            })
+            .collect::<Result<Vec<Vec<usize>>>>()?;
+    }
+    if let Some(x) = v.get("wan_latency_s").and_then(|x| x.as_f64()) {
+        c.wan_latency_s = x;
+    }
+    if let Some(x) = v.get("wan_bandwidth_bps").and_then(|x| x.as_f64()) {
+        c.wan_bandwidth_bps = x;
+    }
+    if let Some(x) = v.get("sync_collective").and_then(|x| x.as_str()) {
+        c.sync_collective = CollectiveKind::parse(x)?;
+    }
     Ok(())
 }
 
@@ -953,6 +1092,7 @@ mod tests {
         presets::xla_tiny().validate().unwrap();
         presets::xla_small().validate().unwrap();
         presets::hetero_dynamic().validate().unwrap();
+        presets::hierarchical_mit().validate().unwrap();
     }
 
     #[test]
@@ -1032,6 +1172,44 @@ mod tests {
         // set by the CI parallel leg, so threads=0 is not asserted here)
         assert_eq!(cfg.run.effective_threads(), 1);
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn topology_overrides_and_group_validation() {
+        let mut cfg = presets::mock_default();
+        assert_eq!(cfg.cluster.topology, TopologyKind::Flat);
+        cfg.apply_override("cluster.topology=hierarchical").unwrap();
+        assert_eq!(cfg.cluster.topology, TopologyKind::Hierarchical);
+        // hierarchical without groups must fail
+        assert!(cfg.validate().is_err(), "missing group map must fail");
+        cfg.apply_override("cluster.groups=[[0,1],[2,3]]").unwrap();
+        cfg.validate().unwrap();
+        cfg.apply_override("cluster.sync_collective=tree").unwrap();
+        assert_eq!(cfg.cluster.sync_collective, CollectiveKind::Tree);
+        cfg.apply_override("cluster.wan_bandwidth_bps=1e8").unwrap();
+        assert_eq!(cfg.cluster.wan_bandwidth_bps, 1e8);
+        cfg.validate().unwrap();
+
+        // malformed group maps: empty group, node in two groups,
+        // unassigned node, out-of-range node
+        let mut bad = cfg.clone();
+        bad.cluster.groups = vec![vec![0, 1, 2, 3], vec![]];
+        assert!(bad.validate().is_err(), "empty group must fail");
+        let mut bad = cfg.clone();
+        bad.cluster.groups = vec![vec![0, 1], vec![1, 2, 3]];
+        assert!(bad.validate().is_err(), "node in two groups must fail");
+        let mut bad = cfg.clone();
+        bad.cluster.groups = vec![vec![0, 1], vec![2]];
+        assert!(bad.validate().is_err(), "unassigned node must fail");
+        let mut bad = cfg.clone();
+        bad.cluster.groups = vec![vec![0, 1], vec![2, 99]];
+        assert!(bad.validate().is_err(), "out-of-range node must fail");
+
+        // flat ignores the group map entirely
+        let mut flat = cfg.clone();
+        flat.cluster.topology = TopologyKind::Flat;
+        flat.cluster.groups = vec![vec![0], vec![]];
+        flat.validate().unwrap();
     }
 
     #[test]

@@ -11,13 +11,22 @@ pub fn by_name(name: &str) -> Option<Config> {
         "xla_small" => Some(xla_small()),
         "quick" => Some(quick()),
         "hetero_dynamic" => Some(hetero_dynamic()),
+        "hierarchical_mit" => Some(hierarchical_mit()),
         _ => None,
     }
 }
 
 /// Every preset name `by_name` resolves.
 pub fn preset_names() -> &'static [&'static str] {
-    &["mock_default", "paper_table1", "xla_tiny", "xla_small", "quick", "hetero_dynamic"]
+    &[
+        "mock_default",
+        "paper_table1",
+        "xla_tiny",
+        "xla_small",
+        "quick",
+        "hetero_dynamic",
+        "hierarchical_mit",
+    ]
 }
 
 fn base_batching() -> BatchingConfig {
@@ -51,6 +60,14 @@ fn base_cluster(nodes: usize, max_batch: usize) -> ClusterConfig {
         step_per_token_s: 3e-5,
         step_jitter: 0.0,
         scenario: ScenarioConfig::default(),
+        // flat single tier by default; the WAN tier only engages under
+        // topology=hierarchical (a 10x slower cross-group link in the
+        // ballpark of a shared datacenter uplink)
+        topology: TopologyKind::Flat,
+        groups: Vec::new(),
+        wan_latency_s: 1e-2,
+        wan_bandwidth_bps: 1.25e8,
+        sync_collective: CollectiveKind::Ring,
     }
 }
 
@@ -199,6 +216,41 @@ pub fn hetero_dynamic() -> Config {
             LinkShift { node: 1, at_s: 20.0, bandwidth_factor: 1.0 },
         ],
     };
+    cfg
+}
+
+/// Hierarchical two-level MIT topology on heterogeneous nodes: the
+/// four hetero nodes partitioned into two groups (`[[0,1],[2,3]]`)
+/// with fast intra-group links and a 10x slower WAN between group
+/// leaders. Worker→trainer reduces and MIT merges run intra-group;
+/// only cross-group merges touch the WAN — the two-level cost
+/// asymmetry of the paper's MIT stage (DESIGN.md §7). Static scenario
+/// (no stragglers/churn), so `theory::estimate_ledger` predicts the
+/// comm ledger exactly (see `tests/topology.rs`).
+pub fn hierarchical_mit() -> Config {
+    let mut cfg = paper_table1();
+    cfg.name = "hierarchical_mit".into();
+    cfg.algo.outer_steps = 10;
+    cfg.algo.inner_steps = 30;
+    cfg.algo.workers_per_trainer = 2;
+    cfg.algo.lr_inner = 0.02;
+    cfg.algo.fixed_batch = 8;
+    cfg.engine = EngineConfig::Mock { dim: 500, noise: 1.0, condition: 10.0 };
+    cfg.data.corpus_sequences = 4_000;
+    cfg.data.val_sequences = 128;
+    cfg.run.eval_every = 10;
+    cfg.run.scheduler = SchedulerKind::Event;
+    // heterogeneous nodes as in hetero_dynamic, but a static cluster
+    cfg.cluster.nodes = vec![
+        NodeConfig { max_batch: 128, speed: 2.0 },
+        NodeConfig { max_batch: 64, speed: 1.0 },
+        NodeConfig { max_batch: 64, speed: 1.0 },
+        NodeConfig { max_batch: 16, speed: 0.35 },
+    ];
+    cfg.cluster.topology = TopologyKind::Hierarchical;
+    cfg.cluster.groups = vec![vec![0, 1], vec![2, 3]];
+    cfg.cluster.wan_latency_s = 1e-2;
+    cfg.cluster.wan_bandwidth_bps = 1.25e8; // a tenth of the intra links
     cfg
 }
 

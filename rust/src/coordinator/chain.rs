@@ -1,0 +1,214 @@
+//! The worker-chain primitives of the parallel execution runtime
+//! (DESIGN.md §6): the single `exec_step` / `step_compute_time`
+//! implementation every scheduler path calls, and the chain a pool
+//! thread runs for one worker's whole inner loop of an outer round.
+
+use crate::batching::StepPlan;
+use crate::cluster::NodeModel;
+use crate::data::{Corpus, TokenBatch};
+use crate::engine::{StepStats, TrainEngine};
+use crate::simulator::Scenario;
+use crate::trainer::Worker;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Shared read-only state a worker chain borrows from the coordinator
+/// while it runs on a pool thread (DESIGN.md §6). `Copy` so each thread
+/// captures its own handle.
+#[derive(Clone, Copy)]
+pub(crate) struct ChainCtx<'a> {
+    pub(crate) engine: &'a dyn TrainEngine,
+    pub(crate) corpus: &'a Corpus,
+    pub(crate) nodes: &'a [NodeModel],
+    pub(crate) scenario: &'a Scenario,
+    pub(crate) lr_schedule: &'a crate::schedule::Schedule,
+    pub(crate) lr_inner: f64,
+    pub(crate) step_jitter: f64,
+    pub(crate) eval_every: u64,
+    pub(crate) cap: u64,
+    pub(crate) width: usize,
+}
+
+/// Per-chain launch parameters, copied out of the coordinator before the
+/// borrow split (everything here is plain data; the worker itself is the
+/// one `&mut` the chain owns).
+#[derive(Clone, Copy)]
+pub(crate) struct ChainTask {
+    pub(crate) ti: usize,
+    pub(crate) wi: usize,
+    pub(crate) slot: usize,
+    pub(crate) node: usize,
+    /// Worker virtual clock at the start of the outer step.
+    pub(crate) start_time: f64,
+    /// Carried-in busy/preempted accumulators: the chain continues the
+    /// exact f64 addition sequence the serial loop would perform, so the
+    /// utilization accounting stays bit-identical (DESIGN.md §6).
+    pub(crate) busy_start: f64,
+    pub(crate) preempted_start: f64,
+    pub(crate) plan: StepPlan,
+    pub(crate) target: u64,
+    pub(crate) start_done: u64,
+    /// True for the trainer's designated eval worker: snapshot parameters
+    /// at each mid-loop evaluation step.
+    pub(crate) snapshot_params: bool,
+}
+
+/// What one worker chain hands back to the coordinator at the join.
+pub(crate) struct ChainOutput {
+    pub(crate) ti: usize,
+    pub(crate) wi: usize,
+    pub(crate) slot: usize,
+    /// (step, stats, completion time) for each executed inner step.
+    pub(crate) stats: Vec<(u64, StepStats, f64)>,
+    /// Parameter snapshots at mid-loop eval steps (eval worker only).
+    pub(crate) snaps: Vec<(u64, Vec<f32>)>,
+    pub(crate) end_time: f64,
+    pub(crate) busy_end: f64,
+    pub(crate) preempted_end: f64,
+}
+
+/// Per-step scratch the engine work writes through (`grad`/`accum` may
+/// be empty when the plan never accumulates).
+pub(crate) struct StepScratch<'a> {
+    pub(crate) buf: &'a mut TokenBatch,
+    pub(crate) grad: &'a mut [f32],
+    pub(crate) accum: &'a mut [f32],
+}
+
+/// The engine work of one inner step of worker `w`: sample a batch (or
+/// `accum_steps` of them under SwitchMode), run the gradient
+/// computation, apply the update. THE single implementation — the
+/// lockstep walk, the serial event loop and the parallel chains all
+/// call this, so their numerics cannot drift apart (DESIGN.md §6).
+/// Engine noise comes from the worker's private stream.
+pub(crate) fn exec_step(
+    engine: &dyn TrainEngine,
+    corpus: &Corpus,
+    w: &mut Worker,
+    plan: &StepPlan,
+    lr: f64,
+    scratch: StepScratch<'_>,
+) -> Result<StepStats> {
+    if plan.accum_steps > 1 {
+        // SwitchMode: accumulate accum_steps gradients at the micro
+        // batch, then one optimizer commit (§4.2).
+        scratch.accum.iter_mut().for_each(|x| *x = 0.0);
+        let mut agg = StepStats::default();
+        for _ in 0..plan.accum_steps {
+            w.sampler.next_batch(corpus, scratch.buf);
+            let s = engine.grad_step(
+                &w.state.params,
+                scratch.buf,
+                scratch.grad,
+                &mut w.noise_rng,
+            )?;
+            for (a, g) in scratch.accum.iter_mut().zip(scratch.grad.iter()) {
+                *a += *g / plan.accum_steps as f32;
+            }
+            agg.loss += s.loss / plan.accum_steps as f64;
+            agg.grad_sq_norm += s.grad_sq_norm / plan.accum_steps as f64;
+            agg.sigma2 += s.sigma2 / plan.accum_steps as f64;
+            agg.ip_var += s.ip_var / plan.accum_steps as f64;
+        }
+        engine.apply_update(&mut w.state, lr, scratch.accum)?;
+        Ok(agg)
+    } else {
+        w.sampler.next_batch(corpus, scratch.buf);
+        engine.train_step(&mut w.state, lr, scratch.buf, &mut w.noise_rng)
+    }
+}
+
+/// Compute-time of one inner step (node model × accumulation depth ×
+/// optional jitter from the worker's private time stream) — the single
+/// implementation behind both schedulers and the parallel chains.
+pub(crate) fn step_compute_time(
+    node: &NodeModel,
+    plan: &StepPlan,
+    width: usize,
+    jitter: f64,
+    time_rng: &mut Rng,
+) -> f64 {
+    let mut dt = node.step_time(plan.micro_batch, width - 1) * plan.accum_steps as f64;
+    if jitter > 0.0 {
+        // truncated at -3 sigma so time never goes negative
+        let z = time_rng.normal().clamp(-3.0, 3.0);
+        dt *= (1.0 + jitter * z).max(0.05);
+    }
+    dt
+}
+
+/// One worker's full inner-step chain for an outer round — the unit of
+/// parallelism (DESIGN.md §6). Performs, draw for draw and flop for
+/// flop, what the serial event loop executes for this worker, by
+/// calling the same [`exec_step`] / [`step_compute_time`] /
+/// `Scenario` primitives in the same per-stream order (time_rng:
+/// jitter then straggler per step; noise_rng: engine draws per step;
+/// virtual-time recurrence via `compute_span` from the previous step's
+/// end). Scratch buffers are chain-local, so chains share nothing
+/// mutable.
+pub(crate) fn run_worker_chain(
+    ctx: ChainCtx<'_>,
+    task: ChainTask,
+    w: &mut Worker,
+) -> Result<ChainOutput> {
+    crate::util::logger::set_thread_context(format!("t{}.w{}", task.ti, task.wi));
+    let plan = task.plan;
+    // chain-local scratch; the gradient buffers are only needed on the
+    // SwitchMode (accumulating) path
+    let (mut grad, mut accum) = if plan.accum_steps > 1 {
+        let p = ctx.engine.param_count();
+        (vec![0.0f32; p], vec![0.0f32; p])
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    let mut buf = TokenBatch::new(plan.micro_batch, ctx.width);
+    let mut stats_out: Vec<(u64, StepStats, f64)> = Vec::with_capacity(task.target as usize);
+    let mut snaps: Vec<(u64, Vec<f32>)> = Vec::new();
+    let mut now = task.start_time;
+    let mut busy = task.busy_start;
+    let mut preempted = task.preempted_start;
+    let node_model = &ctx.nodes[task.node];
+
+    for step in 1..=task.target {
+        // ---- timing (serial: step_duration + schedule_step_end) --------
+        let mut dt =
+            step_compute_time(node_model, &plan, ctx.width, ctx.step_jitter, &mut w.time_rng);
+        dt *= ctx.scenario.straggler_factor(&mut w.time_rng);
+        let (end, stall) = ctx.scenario.compute_span(task.node, now, dt);
+        busy += dt;
+        preempted += stall;
+        now = end;
+
+        // ---- compute (the shared exec_step, like the serial paths) -----
+        let lr = ctx.lr_schedule.lr(ctx.lr_inner, task.start_done + step);
+        let stats = exec_step(
+            ctx.engine,
+            ctx.corpus,
+            w,
+            &plan,
+            lr,
+            StepScratch { buf: &mut buf, grad: &mut grad, accum: &mut accum },
+        )?;
+        stats_out.push((step, stats, now));
+
+        // ---- mid-loop eval snapshot (same gating as the serial loop) ---
+        if task.snapshot_params
+            && ctx.eval_every > 0
+            && step % ctx.eval_every == 0
+            && !(ctx.cap > 0 && task.start_done + step >= ctx.cap)
+        {
+            snaps.push((step, w.state.params.clone()));
+        }
+    }
+    crate::util::logger::clear_thread_context();
+    Ok(ChainOutput {
+        ti: task.ti,
+        wi: task.wi,
+        slot: task.slot,
+        stats: stats_out,
+        snaps,
+        end_time: now,
+        busy_end: busy,
+        preempted_end: preempted,
+    })
+}

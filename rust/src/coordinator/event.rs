@@ -1,0 +1,469 @@
+//! The discrete-event scheduler (DESIGN.md §3.2) and the parallel
+//! inner phase built on it (DESIGN.md §6): worker steps, sync and
+//! merge arrivals consumed in virtual-time order, with canonical-order
+//! flushes that keep the output bit-identical to the lockstep walk on
+//! static clusters at any thread count.
+
+use super::chain::{run_worker_chain, ChainCtx, ChainTask};
+use super::Coordinator;
+use crate::batching::StepPlan;
+use crate::comm::CommKind;
+use crate::engine::StepStats;
+use crate::metrics::{EvalRecord, StepRecord};
+use crate::simulator::{EventQueue, SimEvent};
+use crate::trainer::Worker;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Per-trainer bookkeeping of one event-driven outer step.
+pub(crate) struct TrainerRun {
+    pub(crate) plan: StepPlan,
+    /// Inner steps this trainer executes this outer step.
+    pub(crate) target: u64,
+    /// `inner_steps_done` at the start of the outer step.
+    pub(crate) start_done: u64,
+    /// Worker whose parameters mid-loop evals read (first active; worker
+    /// 0 on a static cluster, matching the lockstep path).
+    pub(crate) eval_worker: usize,
+    pub(crate) n_active: usize,
+    /// Completed steps: (step, worker, stats, completion time). Folded
+    /// into the controller in canonical (step, worker) order at the
+    /// outer boundary — the exact order the lockstep walk produces.
+    pub(crate) stats: Vec<(u64, usize, StepStats, f64)>,
+    /// Mid-loop evals buffered until the canonical flush, keyed by step.
+    pub(crate) evals: Vec<(u64, EvalRecord)>,
+    /// Pending mid-loop evals: step -> arrival times + params snapshot.
+    pub(crate) pending: BTreeMap<u64, PendingEval>,
+}
+
+pub(crate) struct PendingEval {
+    pub(crate) times: Vec<f64>,
+    pub(crate) remaining: usize,
+    pub(crate) params: Vec<f32>,
+}
+
+impl Coordinator {
+    /// One outer step of the discrete-event scheduler. Returns true if
+    /// the target perplexity was reached.
+    ///
+    /// Inner steps execute when their `StepDone` event pops — in virtual
+    /// time order across all trainers and workers. Controller
+    /// observations, step records and buffered evals are flushed in
+    /// canonical (trainer, step, worker) order at the outer boundary,
+    /// which is exactly the order the lockstep walk produces — together
+    /// with per-worker RNG streams this makes the two schedulers
+    /// bit-identical on static clusters.
+    pub fn step_outer_event(&mut self, outer_t: u64) -> Result<bool> {
+        // ---- churn: refresh worker activity, re-shard changed trainers --
+        self.cluster.apply_churn(&mut self.trainers, &mut self.rng)?;
+
+        // ---- merging (same cadence and selection as lockstep) -----------
+        let mc = self.cfg.algo.merge.clone();
+        if mc.enabled
+            && self.live_trainers() > 1
+            && mc.frequency > 0
+            && outer_t % mc.frequency as u64 == 0
+        {
+            self.maybe_merge_event(outer_t)?;
+        }
+
+        let h = self.cfg.algo.inner_steps as u64;
+        let cap = self.cfg.run.max_inner_steps as u64;
+        let live: Vec<usize> = (0..self.trainers.len())
+            .filter(|&i| self.trainers[i].alive)
+            .collect();
+        let mut hit_target = false;
+
+        // ---- per-trainer plans + bookkeeping ----------------------------
+        let mut runs: Vec<Option<TrainerRun>> =
+            (0..self.trainers.len()).map(|_| None).collect();
+        for &ti in &live {
+            self.trainers[ti].broadcast_params();
+            let plan = self.plan_for(ti);
+            let start_done = self.trainers[ti].inner_steps_done;
+            let target = if cap == 0 {
+                h
+            } else {
+                h.min(cap.saturating_sub(start_done).max(1))
+            };
+            let n_active = self.trainers[ti].workers.iter().filter(|w| w.active).count();
+            let eval_worker = self.trainers[ti]
+                .workers
+                .iter()
+                .position(|w| w.active)
+                .unwrap_or(0);
+            runs[ti] = Some(TrainerRun {
+                plan,
+                target,
+                start_done,
+                eval_worker,
+                n_active,
+                stats: Vec::with_capacity((target as usize) * n_active),
+                evals: Vec::new(),
+                pending: BTreeMap::new(),
+            });
+        }
+
+        // ---- inner phase: serial event loop, or parallel worker chains
+        //      when run.threads > 1 (bit-identical by construction —
+        //      DESIGN.md §6, enforced by tests/determinism_parallel.rs)
+        if self.threads > 1 {
+            hit_target |= self.parallel_inner_phase(outer_t, &live, &mut runs)?;
+        } else {
+            hit_target |= self.event_inner_phase(outer_t, &live, &mut runs)?;
+        }
+
+        // ---- canonical flush: controller folds, step records, evals -----
+        for &ti in &live {
+            let mut r = match runs[ti].take() {
+                Some(r) => r,
+                None => continue,
+            };
+            if r.n_active == 0 {
+                continue; // fully preempted: the trainer sat this one out
+            }
+            r.stats.sort_by_key(|&(s, w, _, _)| (s, w));
+            for &(step, wi, ref stats, vt) in r.stats.iter() {
+                let tr = &mut self.trainers[ti];
+                tr.controller.observe(stats, r.plan.effective_batch());
+                self.total_samples += r.plan.effective_batch() as u64;
+                self.recorder.steps.push(StepRecord {
+                    global_step: r.start_done + step,
+                    outer_step: outer_t,
+                    trainer: ti,
+                    worker: wi,
+                    batch: r.plan.micro_batch,
+                    requested_batch: tr.controller.requested(),
+                    accum_steps: r.plan.accum_steps,
+                    loss: stats.loss,
+                    grad_sq_norm: stats.grad_sq_norm,
+                    sigma2: stats.sigma2,
+                    virtual_time_s: vt,
+                });
+            }
+            self.trainers[ti].inner_steps_done = r.start_done + r.target;
+            r.evals.sort_by_key(|&(s, _)| s);
+            for (_, rec) in r.evals {
+                self.recorder.evals.push(rec);
+            }
+        }
+
+        // ---- outer sync over active workers, in trainer order, priced
+        //      by the comm layer (topology-aware: intra-group reduces +
+        //      a leader round over the WAN under hierarchical) ----------
+        let param_bytes = (self.engine.param_count() * 4) as u64;
+        for &ti in &live {
+            let members: Vec<(usize, usize)> = self.trainers[ti]
+                .workers
+                .iter()
+                .filter(|w| w.active)
+                .map(|w| (w.clock_slot, w.node))
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            let slots: Vec<usize> = members.iter().map(|&(s, _)| s).collect();
+            let member_nodes: Vec<usize> = members.iter().map(|&(_, n)| n).collect();
+            let t_start = slots
+                .iter()
+                .map(|&s| self.cluster.clock.time(s))
+                .fold(0.0_f64, f64::max);
+            let factor = self
+                .cluster
+                .scenario
+                .min_bandwidth_factor(member_nodes.iter().copied(), t_start);
+            let cost = self.comm.sync_cost(
+                param_bytes,
+                &member_nodes,
+                &self.cluster.topology,
+                factor,
+            );
+            let t_after = self.cluster.barrier_tracked(&slots, cost.time_s);
+            self.comm
+                .record(CommKind::OuterSync, &cost, t_after, self.total_samples);
+            let tr = &mut self.trainers[ti];
+            tr.outer_step_active(&mut self.delta_scratch);
+        }
+
+        // end-of-outer-step evaluation on the trainer parameters
+        for &ti in &live {
+            if self.trainers[ti].alive {
+                let reached = self.evaluate_trainer_params(ti, outer_t)?;
+                hit_target |= reached;
+            }
+        }
+        Ok(hit_target)
+    }
+
+    /// The serial inner phase of one event-driven outer step: seed the
+    /// queue with every active worker's first step, then consume events
+    /// in virtual-time order. Returns true if a mid-loop evaluation hit
+    /// the target perplexity.
+    fn event_inner_phase(
+        &mut self,
+        outer_t: u64,
+        live: &[usize],
+        runs: &mut [Option<TrainerRun>],
+    ) -> Result<bool> {
+        let cap = self.cfg.run.max_inner_steps as u64;
+        let eval_every = self.cfg.run.eval_every as u64;
+        let mut hit_target = false;
+
+        // ---- seed the queue with every active worker's first step -------
+        let mut queue = EventQueue::new();
+        for &ti in live {
+            let plan = runs[ti].as_ref().unwrap().plan;
+            for wi in 0..self.trainers[ti].workers.len() {
+                if !self.trainers[ti].workers[wi].active {
+                    continue;
+                }
+                let end = self.schedule_step_end(ti, wi, &plan);
+                queue.push(end, SimEvent::StepDone { trainer: ti, worker: wi, step: 1 });
+            }
+        }
+
+        // ---- consume events in virtual-time order -----------------------
+        while let Some((t, ev)) = queue.pop() {
+            match ev {
+                SimEvent::StepDone { trainer: ti, worker: wi, step } => {
+                    let slot = self.trainers[ti].workers[wi].clock_slot;
+                    self.cluster.clock.advance_to(slot, t);
+                    let (plan, target, start_done, eval_worker) = {
+                        let r = runs[ti].as_ref().unwrap();
+                        (r.plan, r.target, r.start_done, r.eval_worker)
+                    };
+                    let lr = self
+                        .lr_schedule
+                        .lr(self.cfg.algo.lr_inner, start_done + step);
+                    let stats = self.exec_worker_step(ti, wi, &plan, lr)?;
+                    runs[ti].as_mut().unwrap().stats.push((step, wi, stats, t));
+
+                    // mid-loop eval bookkeeping: the eval runs once every
+                    // active worker has completed this step (lockstep
+                    // evaluates at the same logical point)
+                    let eval_due = eval_every > 0
+                        && step % eval_every == 0
+                        && step <= target
+                        && !(cap > 0 && start_done + step >= cap);
+                    if eval_due {
+                        let ready = {
+                            let r = runs[ti].as_mut().unwrap();
+                            let n_active = r.n_active;
+                            let p = r.pending.entry(step).or_insert_with(|| PendingEval {
+                                times: Vec::new(),
+                                remaining: n_active,
+                                params: Vec::new(),
+                            });
+                            p.times.push(t);
+                            p.remaining -= 1;
+                            p.remaining == 0
+                        };
+                        if wi == eval_worker {
+                            let snap = self.trainers[ti].workers[wi].state.params.clone();
+                            runs[ti]
+                                .as_mut()
+                                .unwrap()
+                                .pending
+                                .get_mut(&step)
+                                .unwrap()
+                                .params = snap;
+                        }
+                        if ready {
+                            let pend = runs[ti]
+                                .as_mut()
+                                .unwrap()
+                                .pending
+                                .remove(&step)
+                                .unwrap();
+                            let vt =
+                                pend.times.iter().fold(0.0f64, |acc, &x| acc.max(x));
+                            let (loss, ppl) = self.compute_eval(&pend.params, outer_t)?;
+                            hit_target |= self.cfg.run.target_ppl > 0.0
+                                && ppl <= self.cfg.run.target_ppl;
+                            let rec = EvalRecord {
+                                global_step: start_done + step,
+                                outer_step: outer_t,
+                                trainer: ti,
+                                loss,
+                                perplexity: ppl,
+                                virtual_time_s: vt,
+                                comm_count: self.comm.ledger.count(),
+                                comm_bytes: self.comm.ledger.total_bytes(),
+                            };
+                            runs[ti].as_mut().unwrap().evals.push((step, rec));
+                        }
+                    }
+
+                    if step < target {
+                        let end = self.schedule_step_end(ti, wi, &plan);
+                        queue.push(
+                            end,
+                            SimEvent::StepDone { trainer: ti, worker: wi, step: step + 1 },
+                        );
+                    } else {
+                        queue.push(t, SimEvent::SyncArrive { trainer: ti, worker: wi });
+                    }
+                }
+                // Arrival markers: the rendezvous itself is the queue
+                // draining — every active worker has posted its arrival
+                // by then.
+                SimEvent::SyncArrive { .. } | SimEvent::MergeArrive { .. } => {}
+            }
+        }
+        Ok(hit_target)
+    }
+
+    /// The parallel inner phase (the tentpole of DESIGN.md §6): between
+    /// the outer-step prologue and the sync/merge rendezvous, workers are
+    /// fully independent — each owns its model state, data sampler and
+    /// RNG streams — so their inner-step chains fan out across
+    /// `run.threads` OS threads and join at the boundary. Chain outputs
+    /// are applied in canonical (trainer, worker) order and mid-loop
+    /// evaluations are computed after the join, which together with the
+    /// canonical flush makes the result bit-identical to the serial
+    /// event loop no matter how the OS schedules the pool.
+    fn parallel_inner_phase(
+        &mut self,
+        outer_t: u64,
+        live: &[usize],
+        runs: &mut [Option<TrainerRun>],
+    ) -> Result<bool> {
+        // ---- launch parameters, copied out before the borrow split ------
+        let mut metas: Vec<ChainTask> = Vec::new();
+        for &ti in live {
+            let r = runs[ti].as_ref().unwrap();
+            for (wi, w) in self.trainers[ti].workers.iter().enumerate() {
+                if !w.active {
+                    continue;
+                }
+                metas.push(ChainTask {
+                    ti,
+                    wi,
+                    slot: w.clock_slot,
+                    node: w.node,
+                    start_time: self.cluster.clock.time(w.clock_slot),
+                    busy_start: self.cluster.busy_s[w.clock_slot],
+                    preempted_start: self.cluster.preempted_s[w.clock_slot],
+                    plan: r.plan,
+                    target: r.target,
+                    start_done: r.start_done,
+                    snapshot_params: wi == r.eval_worker,
+                });
+            }
+        }
+
+        // ---- pair tasks with exclusive worker borrows -------------------
+        let ctx = ChainCtx {
+            engine: self.engine.as_ref(),
+            corpus: &self.corpus,
+            nodes: &self.cluster.nodes,
+            scenario: &self.cluster.scenario,
+            lr_schedule: &self.lr_schedule,
+            lr_inner: self.cfg.algo.lr_inner,
+            step_jitter: self.cfg.cluster.step_jitter,
+            eval_every: self.cfg.run.eval_every as u64,
+            cap: self.cfg.run.max_inner_steps as u64,
+            width: self.corpus.width(),
+        };
+        let mut tasks: Vec<(ChainTask, &mut Worker)> = Vec::with_capacity(metas.len());
+        {
+            let mut pending = metas.into_iter().peekable();
+            for (ti, tr) in self.trainers.iter_mut().enumerate() {
+                for (wi, w) in tr.workers.iter_mut().enumerate() {
+                    if pending.peek().is_some_and(|m| m.ti == ti && m.wi == wi) {
+                        tasks.push((pending.next().unwrap(), w));
+                    }
+                }
+            }
+        }
+
+        // ---- fan out / join: the shared work-stealing pool, so uneven
+        //      chains (stragglers, slow nodes) never strand a thread ----
+        let results: Vec<Result<super::chain::ChainOutput>> = crate::util::run_cells(
+            self.threads,
+            tasks
+                .into_iter()
+                .map(|(m, w)| move || run_worker_chain(ctx, m, w))
+                .collect(),
+        );
+        let mut outputs = Vec::with_capacity(results.len());
+        for r in results {
+            outputs.push(r?);
+        }
+        // canonical application order (the scheduling order of the pool
+        // must leave no trace)
+        outputs.sort_by_key(|o| (o.ti, o.wi));
+
+        // ---- apply: clocks, time accounting, step stats, snapshots ------
+        let mut snaps_by_trainer: BTreeMap<usize, Vec<(u64, Vec<f32>)>> = BTreeMap::new();
+        for o in outputs {
+            self.cluster.clock.advance_to(o.slot, o.end_time);
+            self.cluster.busy_s[o.slot] = o.busy_end;
+            self.cluster.preempted_s[o.slot] = o.preempted_end;
+            let r = runs[o.ti].as_mut().unwrap();
+            for (step, stats, t) in o.stats {
+                r.stats.push((step, o.wi, stats, t));
+            }
+            if !o.snaps.is_empty() {
+                snaps_by_trainer.entry(o.ti).or_default().extend(o.snaps);
+            }
+        }
+
+        // ---- mid-loop evaluations (deferred to the join; the eval RNG
+        //      is keyed by (seed, outer_step) so timing leaves no trace) -
+        let mut hit_target = false;
+        for &ti in live {
+            let snaps = match snaps_by_trainer.remove(&ti) {
+                Some(s) => s,
+                None => continue,
+            };
+            for (step, params) in snaps {
+                let (global_step, vt) = {
+                    let r = runs[ti].as_ref().unwrap();
+                    let vt = r
+                        .stats
+                        .iter()
+                        .filter(|&&(s, _, _, _)| s == step)
+                        .map(|&(_, _, _, t)| t)
+                        .fold(0.0f64, f64::max);
+                    (r.start_done + step, vt)
+                };
+                let (loss, ppl) = self.compute_eval(&params, outer_t)?;
+                hit_target |=
+                    self.cfg.run.target_ppl > 0.0 && ppl <= self.cfg.run.target_ppl;
+                let rec = EvalRecord {
+                    global_step,
+                    outer_step: outer_t,
+                    trainer: ti,
+                    loss,
+                    perplexity: ppl,
+                    virtual_time_s: vt,
+                    comm_count: self.comm.ledger.count(),
+                    comm_bytes: self.comm.ledger.total_bytes(),
+                };
+                runs[ti].as_mut().unwrap().evals.push((step, rec));
+            }
+        }
+        Ok(hit_target)
+    }
+
+    /// Schedule the completion time of worker `wi`'s next inner step:
+    /// current clock + duration, stretched by scenario stragglers and
+    /// preemption windows. Accounts busy/preempted time.
+    fn schedule_step_end(&mut self, ti: usize, wi: usize, plan: &StepPlan) -> f64 {
+        let mut dt = self.step_duration(ti, wi, plan);
+        {
+            let w = &mut self.trainers[ti].workers[wi];
+            dt *= self.cluster.scenario.straggler_factor(&mut w.time_rng);
+        }
+        let (slot, node) = {
+            let w = &self.trainers[ti].workers[wi];
+            (w.clock_slot, w.node)
+        };
+        let start = self.cluster.clock.time(slot);
+        let (end, stall) = self.cluster.scenario.compute_span(node, start, dt);
+        self.cluster.busy_s[slot] += dt;
+        self.cluster.preempted_s[slot] += stall;
+        end
+    }
+}

@@ -1,0 +1,120 @@
+//! The lockstep reference walk (DESIGN.md §3.1): trainers and their
+//! workers iterate in fixed program order. Retained as the bit-exact
+//! regression anchor for the event scheduler and the parallel runtime.
+
+use super::Coordinator;
+use crate::batching::StepPlan;
+use crate::comm::CommKind;
+use crate::metrics::StepRecord;
+use anyhow::Result;
+
+impl Coordinator {
+    /// One outer step of the lockstep reference walk. Returns true if the
+    /// target perplexity was reached.
+    pub fn step_outer(&mut self, outer_t: u64) -> Result<bool> {
+        // ---- merging (Algorithm 3 lines 11-16) -------------------------
+        let mc = self.cfg.algo.merge.clone();
+        if mc.enabled
+            && self.live_trainers() > 1
+            && mc.frequency > 0
+            && outer_t % mc.frequency as u64 == 0
+        {
+            self.maybe_merge(outer_t)?;
+        }
+
+        // ---- inner loops ------------------------------------------------
+        let h = self.cfg.algo.inner_steps;
+        let live: Vec<usize> = (0..self.trainers.len())
+            .filter(|&i| self.trainers[i].alive)
+            .collect();
+        let mut hit_target = false;
+
+        for &ti in &live {
+            self.trainers[ti].broadcast_params();
+            let plan = self.plan_for(ti);
+            for step_h in 1..=h {
+                self.inner_step(ti, outer_t, &plan)?;
+                // cap on total inner steps (profiling / quick runs)
+                let cap = self.cfg.run.max_inner_steps as u64;
+                if cap > 0 && self.trainers[ti].inner_steps_done >= cap {
+                    break;
+                }
+                // periodic evaluation on worker-0's live parameters
+                if self.cfg.run.eval_every > 0
+                    && step_h % self.cfg.run.eval_every == 0
+                {
+                    let reached = self.evaluate(ti, outer_t)?;
+                    hit_target |= reached;
+                }
+            }
+        }
+
+        // ---- outer sync (Algorithm 3 lines 40-44), priced by the comm
+        //      layer: one collective round over the trainer's workers
+        //      (topology-aware; flat ring == the historical formulas) ----
+        let param_bytes = (self.engine.param_count() * 4) as u64;
+        for &ti in &live {
+            let member_nodes: Vec<usize> =
+                self.trainers[ti].workers.iter().map(|w| w.node).collect();
+            let slots: Vec<usize> =
+                self.trainers[ti].workers.iter().map(|w| w.clock_slot).collect();
+            let cost =
+                self.comm
+                    .sync_cost(param_bytes, &member_nodes, &self.cluster.topology, 1.0);
+            let t_after = self.cluster.barrier_tracked(&slots, cost.time_s);
+            self.comm
+                .record(CommKind::OuterSync, &cost, t_after, self.total_samples);
+            let tr = &mut self.trainers[ti];
+            tr.outer_step(&mut self.delta_scratch);
+        }
+
+        // end-of-outer-step evaluation on the trainer parameters
+        for &ti in &live {
+            if self.trainers[ti].alive {
+                let reached = self.evaluate_trainer_params(ti, outer_t)?;
+                hit_target |= reached;
+            }
+        }
+        Ok(hit_target)
+    }
+
+    /// One inner step of every worker of trainer `ti` (lockstep walk).
+    fn inner_step(&mut self, ti: usize, outer_t: u64, plan: &StepPlan) -> Result<()> {
+        let lr = self
+            .lr_schedule
+            .lr(self.cfg.algo.lr_inner, self.trainers[ti].inner_steps_done + 1);
+        let n_workers = self.trainers[ti].workers.len();
+
+        for wi in 0..n_workers {
+            let stats = self.exec_worker_step(ti, wi, plan, lr)?;
+
+            // virtual time: accum_steps micro-steps on this worker's node
+            let dt = self.step_duration(ti, wi, plan);
+            let slot = self.trainers[ti].workers[wi].clock_slot;
+            self.cluster.clock.advance(slot, dt);
+            self.cluster.busy_s[slot] += dt;
+
+            // adaptive-batching statistics (Algorithm 3 line 31)
+            let tr = &mut self.trainers[ti];
+            tr.controller.observe(&stats, plan.effective_batch());
+
+            self.total_samples += plan.effective_batch() as u64;
+            let global_step = tr.inner_steps_done + 1;
+            self.recorder.steps.push(StepRecord {
+                global_step,
+                outer_step: outer_t,
+                trainer: ti,
+                worker: wi,
+                batch: plan.micro_batch,
+                requested_batch: tr.controller.requested(),
+                accum_steps: plan.accum_steps,
+                loss: stats.loss,
+                grad_sq_norm: stats.grad_sq_norm,
+                sigma2: stats.sigma2,
+                virtual_time_s: self.cluster.clock.time(slot),
+            });
+        }
+        self.trainers[ti].inner_steps_done += 1;
+        Ok(())
+    }
+}

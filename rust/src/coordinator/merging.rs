@@ -1,0 +1,235 @@
+//! MIT merge rounds (paper Algorithms 1-2): candidate selection —
+//! topology-aware under the hierarchical cluster (DESIGN.md §7) —
+//! the barrier/rendezvous flavours of both schedulers, and the shared
+//! parameter/shard consolidation.
+
+use super::Coordinator;
+use crate::comm::CommKind;
+use crate::data::shard::union_shards;
+use crate::merge::{check_merge_with_policy, do_merge, MergePolicy};
+use crate::metrics::MergeRecord;
+use crate::trainer::Trainer;
+use anyhow::Result;
+
+impl Coordinator {
+    /// The node a trainer is "homed" on for topology purposes: its
+    /// first worker's placement (static over the run; churn toggles
+    /// activity, never placement).
+    pub(crate) fn home_node(&self, ti: usize) -> usize {
+        self.trainers[ti].workers[0].node
+    }
+
+    /// Pick the trainers to merge this round (Algorithm 1). Empty or a
+    /// single id means no merge.
+    ///
+    /// Under the hierarchical topology, selection prefers trainers
+    /// homed in the *same node group* — the cheap intra-group side of
+    /// the MIT cost asymmetry (DESIGN.md §7): groups are scanned in
+    /// ascending id and the first group that can merge wins; only when
+    /// no group can merge alone does selection fall through to the
+    /// flat (cross-WAN) rule. Flat clusters take the historical path
+    /// unchanged.
+    pub(crate) fn select_merge(&mut self) -> Vec<usize> {
+        let requests: Vec<(usize, usize)> = self
+            .trainers
+            .iter()
+            .filter(|t| t.alive)
+            .map(|t| (t.id, t.requested_batch()))
+            .collect();
+        let policy = match self.cfg.algo.merge.policy {
+            crate::config::MergeSelect::WorstByBatch => MergePolicy::WorstByBatch,
+            crate::config::MergeSelect::Random => MergePolicy::Random,
+        };
+        let w = self.cfg.algo.merge.w;
+        let min_keep = self.cfg.algo.merge.min_trainers;
+        if self.cluster.topology.is_hierarchical() {
+            let live_total = requests.len();
+            for g in 0..self.cluster.topology.n_groups() {
+                let sub: Vec<(usize, usize)> = requests
+                    .iter()
+                    .copied()
+                    .filter(|&(id, _)| {
+                        self.cluster.topology.group_of(self.home_node(id)) == g
+                    })
+                    .collect();
+                if sub.len() < 2 {
+                    continue;
+                }
+                // the global min_trainers floor restated for the group:
+                // every trainer outside it survives a local merge
+                let outside = live_total - sub.len();
+                let local_keep = min_keep.saturating_sub(outside).max(1);
+                let sel = check_merge_with_policy(&sub, w, local_keep, policy, &mut self.rng);
+                if sel.len() >= 2 {
+                    return sel;
+                }
+            }
+        }
+        check_merge_with_policy(&requests, w, min_keep, policy, &mut self.rng)
+    }
+
+    /// MIT merge round (Algorithms 1-2), lockstep flavour: selection, a
+    /// plain barrier over every worker of the selected trainers, then the
+    /// shared consolidation. The comm layer prices the gather ((k−1)·P
+    /// flat; split into intra legs + a (G−1)·P WAN leg hierarchically).
+    pub(crate) fn maybe_merge(&mut self, outer_t: u64) -> Result<()> {
+        let selected = self.select_merge();
+        if selected.len() < 2 {
+            return Ok(());
+        }
+
+        // barrier every worker of the merging trainers + transfer time
+        let param_bytes = (self.engine.param_count() * 4) as u64;
+        let slots: Vec<usize> = selected
+            .iter()
+            .flat_map(|&id| self.trainers[id].workers.iter().map(|w| w.clock_slot))
+            .collect();
+        let homes: Vec<usize> = selected.iter().map(|&id| self.home_node(id)).collect();
+        let cost = self
+            .comm
+            .merge_cost(param_bytes, &homes, &self.cluster.topology, 1.0);
+        let t_after = self.cluster.barrier_tracked(&slots, cost.time_s);
+        self.comm
+            .record(CommKind::Merge, &cost, t_after, self.total_samples);
+        self.perform_merge(outer_t, &selected, t_after)
+    }
+
+    /// MIT merge round (Algorithms 1-2), event flavour: the rendezvous
+    /// start is the last active participant's clock, and the transfer
+    /// runs at the slowest participating link's current bandwidth.
+    pub(crate) fn maybe_merge_event(&mut self, outer_t: u64) -> Result<()> {
+        let selected = self.select_merge();
+        if selected.len() < 2 {
+            return Ok(());
+        }
+
+        let mut slots: Vec<usize> = Vec::new();
+        let mut nodes: Vec<usize> = Vec::new();
+        for &id in &selected {
+            for w in &self.trainers[id].workers {
+                if w.active {
+                    slots.push(w.clock_slot);
+                    nodes.push(w.node);
+                }
+            }
+        }
+        if slots.is_empty() {
+            // every selected trainer is fully preempted: fall back to the
+            // whole (frozen) cohort, like the lockstep barrier, instead of
+            // recording a merge at virtual time ~0
+            for &id in &selected {
+                for w in &self.trainers[id].workers {
+                    slots.push(w.clock_slot);
+                    nodes.push(w.node);
+                }
+            }
+        }
+        let t_all = slots
+            .iter()
+            .map(|&s| self.cluster.clock.time(s))
+            .fold(0.0f64, f64::max);
+
+        let param_bytes = (self.engine.param_count() * 4) as u64;
+        let factor = self
+            .cluster
+            .scenario
+            .min_bandwidth_factor(nodes.iter().copied(), t_all);
+        let homes: Vec<usize> = selected.iter().map(|&id| self.home_node(id)).collect();
+        let cost = self
+            .comm
+            .merge_cost(param_bytes, &homes, &self.cluster.topology, factor);
+        let t_after = self.cluster.barrier_tracked(&slots, cost.time_s);
+        self.comm
+            .record(CommKind::Merge, &cost, t_after, self.total_samples);
+        self.perform_merge(outer_t, &selected, t_after)
+    }
+
+    /// The parameter/shard consolidation of a merge (Algorithm 2), after
+    /// the participants' barrier produced `t_after`. Shared by both
+    /// schedulers; the ledger entry is recorded by the caller.
+    pub(crate) fn perform_merge(
+        &mut self,
+        outer_t: u64,
+        selected: &[usize],
+        t_after: f64,
+    ) -> Result<()> {
+        // weighted merge over the selected trainers' parameters
+        let outcome = {
+            // split borrows: collect (id, b_req) first, then build the
+            // mutable member list in id order
+            let reqs: Vec<(usize, usize)> = selected
+                .iter()
+                .map(|&id| (id, self.trainers[id].requested_batch()))
+                .collect();
+            let mut members: Vec<(usize, usize, &mut [f32])> = Vec::new();
+            // safe split of multiple &mut trainers via split_at_mut walk
+            let mut rest: &mut [Trainer] = &mut self.trainers;
+            let mut base = 0usize;
+            let mut sorted = selected.to_vec();
+            sorted.sort_unstable();
+            for id in sorted {
+                let local = id - base;
+                let tmp = rest;
+                let (head, tail) = tmp.split_at_mut(local + 1);
+                let tr = &mut head[local];
+                let b = reqs.iter().find(|(i, _)| *i == id).unwrap().1;
+                members.push((id, b, tr.params.as_mut_slice()));
+                rest = tail;
+                base = id + 1;
+            }
+            do_merge(&mut members)
+        };
+
+        // consume the non-representative trainers
+        for &dead in &outcome.removed {
+            self.trainers[dead].alive = false;
+        }
+        // the representative keeps the union of the merged shards and its
+        // own optimizer trajectory (Algorithm 2 line 9); its outer
+        // momentum is reset since the parameters jumped
+        let shard_refs: Vec<&crate::data::Shard> = selected
+            .iter()
+            .map(|&id| &self.trainers[id].shard)
+            .collect();
+        let merged_shard = union_shards(&shard_refs);
+        let rep = outcome.representative;
+        {
+            // re-split among the representative's active workers (all of
+            // them on a static cluster); churned-out workers get fresh
+            // samplers from the merged shard when they rejoin
+            let active_ix: Vec<usize> = self.trainers[rep]
+                .workers
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| w.active)
+                .map(|(i, _)| i)
+                .collect();
+            let split_ix: Vec<usize> = if active_ix.is_empty() {
+                (0..self.trainers[rep].workers.len()).collect()
+            } else {
+                active_ix
+            };
+            let worker_shards = merged_shard.split(split_ix.len());
+            for (&w_ix, ws) in split_ix.iter().zip(worker_shards.into_iter()) {
+                self.trainers[rep].workers[w_ix].sampler =
+                    crate::data::BatchSampler::new(ws, self.rng.fork(0xABCD + rep as u64));
+            }
+            self.trainers[rep].shard = merged_shard;
+            self.trainers[rep].outer.reset();
+        }
+
+        crate::info!(
+            "outer {outer_t}: merged {:?} -> representative {rep} ({} trainers left)",
+            outcome.removed,
+            self.live_trainers()
+        );
+        self.recorder.merges.push(MergeRecord {
+            outer_step: outer_t,
+            merged: outcome.removed.clone(),
+            representative: rep,
+            trainers_left: self.live_trainers(),
+            virtual_time_s: t_after,
+        });
+        Ok(())
+    }
+}

@@ -16,8 +16,21 @@
 //!
 //! Timekeeping is virtual (DESIGN.md §3): compute advances each worker's
 //! clock through the node's step-time model; outer syncs and merges are
-//! barriers plus modeled all-reduce/transfer time; the ledger records
-//! every communication for the C(N) analyses (Theorem 2).
+//! barriers plus modeled collective time; the ledger records every
+//! communication for the C(N) analyses (Theorem 2).
+//!
+//! Since the PR-3 layering (DESIGN.md §7) the coordinator is training
+//! policy only; its former god-module responsibilities live in:
+//!
+//! * [`crate::cluster`] — *time and place*: node models, virtual
+//!   clocks, barrier/utilization accounting, churn, and the
+//!   flat/hierarchical topology;
+//! * [`crate::comm`] — *cost and ledger*: network tiers, pluggable
+//!   collectives, and the single code path every `CommEvent` flows
+//!   through;
+//! * [`lockstep`] / [`event`] (this module's submodules) — the two run
+//!   loops; [`chain`] — the parallel worker-chain runtime;
+//!   [`merging`] — MIT selection/rendezvous/consolidation.
 //!
 //! Two run loops drive the same numerics (DESIGN.md §3.1–§3.2):
 //!
@@ -43,20 +56,24 @@
 //! (`tests/determinism_parallel.rs`). Threads buy wall-clock only; they
 //! never change a result.
 
+mod chain;
+mod event;
+mod lockstep;
+mod merging;
+#[cfg(test)]
+mod tests;
+
 use crate::batching::{plan_step, StepPlan};
+use crate::cluster::{assign_workers, ClusterState};
+use crate::comm::{CommLayer, CommLedger};
 use crate::config::{Config, Method, SchedulerKind};
-use crate::data::{make_shards, shard::union_shards, Corpus, CorpusSpec, TokenBatch};
+use crate::data::{make_shards, Corpus, CorpusSpec, TokenBatch};
 use crate::engine::{StepStats, TrainEngine};
-use crate::merge::{check_merge_with_policy, do_merge, MergePolicy};
-use crate::metrics::{perplexity, EvalRecord, MergeRecord, Recorder, StepRecord, UtilRecord};
-use crate::simulator::{
-    assign_workers, node_models, CommEvent, CommKind, CommLedger, EventQueue, NetworkModel,
-    NodeModel, Scenario, SimEvent, VirtualClock,
-};
-use crate::trainer::{Trainer, Worker};
+use crate::metrics::{perplexity, EvalRecord, Recorder};
+use crate::trainer::Trainer;
 use crate::util::Rng;
 use anyhow::Result;
-use std::collections::BTreeMap;
+use chain::{exec_step, step_compute_time, StepScratch};
 
 /// Outcome summary of a run (full series live in the recorder).
 ///
@@ -81,6 +98,11 @@ pub struct RunResult {
     pub comm_count: usize,
     /// Total bytes moved across all recorded communications.
     pub comm_bytes: u64,
+    /// Bytes that crossed the WAN tier — equal to `comm_bytes` on a
+    /// flat cluster (its single network is the WAN of the topology
+    /// comparison); strictly the cross-group leader traffic under the
+    /// hierarchical topology (DESIGN.md §7).
+    pub wan_comm_bytes: u64,
     /// Simulated wall-clock (max over worker virtual clocks).
     pub virtual_time_s: f64,
     /// Live trainers at the end (merging consolidates them).
@@ -125,243 +147,21 @@ pub fn resolve_policy(cfg: &Config) -> Config {
     out
 }
 
-/// Per-trainer bookkeeping of one event-driven outer step.
-struct TrainerRun {
-    plan: StepPlan,
-    /// Inner steps this trainer executes this outer step.
-    target: u64,
-    /// `inner_steps_done` at the start of the outer step.
-    start_done: u64,
-    /// Worker whose parameters mid-loop evals read (first active; worker
-    /// 0 on a static cluster, matching the lockstep path).
-    eval_worker: usize,
-    n_active: usize,
-    /// Completed steps: (step, worker, stats, completion time). Folded
-    /// into the controller in canonical (step, worker) order at the
-    /// outer boundary — the exact order the lockstep walk produces.
-    stats: Vec<(u64, usize, StepStats, f64)>,
-    /// Mid-loop evals buffered until the canonical flush, keyed by step.
-    evals: Vec<(u64, EvalRecord)>,
-    /// Pending mid-loop evals: step -> arrival times + params snapshot.
-    pending: BTreeMap<u64, PendingEval>,
-}
-
-struct PendingEval {
-    times: Vec<f64>,
-    remaining: usize,
-    params: Vec<f32>,
-}
-
-/// Shared read-only state a worker chain borrows from the coordinator
-/// while it runs on a pool thread (DESIGN.md §6). `Copy` so each thread
-/// captures its own handle.
-#[derive(Clone, Copy)]
-struct ChainCtx<'a> {
-    engine: &'a dyn TrainEngine,
-    corpus: &'a Corpus,
-    nodes: &'a [NodeModel],
-    scenario: &'a Scenario,
-    lr_schedule: &'a crate::schedule::Schedule,
-    lr_inner: f64,
-    step_jitter: f64,
-    eval_every: u64,
-    cap: u64,
-    width: usize,
-}
-
-/// Per-chain launch parameters, copied out of the coordinator before the
-/// borrow split (everything here is plain data; the worker itself is the
-/// one `&mut` the chain owns).
-#[derive(Clone, Copy)]
-struct ChainTask {
-    ti: usize,
-    wi: usize,
-    slot: usize,
-    node: usize,
-    /// Worker virtual clock at the start of the outer step.
-    start_time: f64,
-    /// Carried-in busy/preempted accumulators: the chain continues the
-    /// exact f64 addition sequence the serial loop would perform, so the
-    /// utilization accounting stays bit-identical (DESIGN.md §6).
-    busy_start: f64,
-    preempted_start: f64,
-    plan: StepPlan,
-    target: u64,
-    start_done: u64,
-    /// True for the trainer's designated eval worker: snapshot parameters
-    /// at each mid-loop evaluation step.
-    snapshot_params: bool,
-}
-
-/// What one worker chain hands back to the coordinator at the join.
-struct ChainOutput {
-    ti: usize,
-    wi: usize,
-    slot: usize,
-    /// (step, stats, completion time) for each executed inner step.
-    stats: Vec<(u64, StepStats, f64)>,
-    /// Parameter snapshots at mid-loop eval steps (eval worker only).
-    snaps: Vec<(u64, Vec<f32>)>,
-    end_time: f64,
-    busy_end: f64,
-    preempted_end: f64,
-}
-
-/// Per-step scratch the engine work writes through (`grad`/`accum` may
-/// be empty when the plan never accumulates).
-struct StepScratch<'a> {
-    buf: &'a mut TokenBatch,
-    grad: &'a mut [f32],
-    accum: &'a mut [f32],
-}
-
-/// The engine work of one inner step of worker `w`: sample a batch (or
-/// `accum_steps` of them under SwitchMode), run the gradient
-/// computation, apply the update. THE single implementation — the
-/// lockstep walk, the serial event loop and the parallel chains all
-/// call this, so their numerics cannot drift apart (DESIGN.md §6).
-/// Engine noise comes from the worker's private stream.
-fn exec_step(
-    engine: &dyn TrainEngine,
-    corpus: &Corpus,
-    w: &mut Worker,
-    plan: &StepPlan,
-    lr: f64,
-    scratch: StepScratch<'_>,
-) -> Result<StepStats> {
-    if plan.accum_steps > 1 {
-        // SwitchMode: accumulate accum_steps gradients at the micro
-        // batch, then one optimizer commit (§4.2).
-        scratch.accum.iter_mut().for_each(|x| *x = 0.0);
-        let mut agg = StepStats::default();
-        for _ in 0..plan.accum_steps {
-            w.sampler.next_batch(corpus, scratch.buf);
-            let s = engine.grad_step(
-                &w.state.params,
-                scratch.buf,
-                scratch.grad,
-                &mut w.noise_rng,
-            )?;
-            for (a, g) in scratch.accum.iter_mut().zip(scratch.grad.iter()) {
-                *a += *g / plan.accum_steps as f32;
-            }
-            agg.loss += s.loss / plan.accum_steps as f64;
-            agg.grad_sq_norm += s.grad_sq_norm / plan.accum_steps as f64;
-            agg.sigma2 += s.sigma2 / plan.accum_steps as f64;
-            agg.ip_var += s.ip_var / plan.accum_steps as f64;
-        }
-        engine.apply_update(&mut w.state, lr, scratch.accum)?;
-        Ok(agg)
-    } else {
-        w.sampler.next_batch(corpus, scratch.buf);
-        engine.train_step(&mut w.state, lr, scratch.buf, &mut w.noise_rng)
-    }
-}
-
-/// Compute-time of one inner step (node model × accumulation depth ×
-/// optional jitter from the worker's private time stream) — the single
-/// implementation behind both schedulers and the parallel chains.
-fn step_compute_time(
-    node: &NodeModel,
-    plan: &StepPlan,
-    width: usize,
-    jitter: f64,
-    time_rng: &mut Rng,
-) -> f64 {
-    let mut dt = node.step_time(plan.micro_batch, width - 1) * plan.accum_steps as f64;
-    if jitter > 0.0 {
-        // truncated at -3 sigma so time never goes negative
-        let z = time_rng.normal().clamp(-3.0, 3.0);
-        dt *= (1.0 + jitter * z).max(0.05);
-    }
-    dt
-}
-
-/// One worker's full inner-step chain for an outer round — the unit of
-/// parallelism (DESIGN.md §6). Performs, draw for draw and flop for
-/// flop, what the serial event loop executes for this worker, by
-/// calling the same [`exec_step`] / [`step_compute_time`] /
-/// `Scenario` primitives in the same per-stream order (time_rng:
-/// jitter then straggler per step; noise_rng: engine draws per step;
-/// virtual-time recurrence via `compute_span` from the previous step's
-/// end). Scratch buffers are chain-local, so chains share nothing
-/// mutable.
-fn run_worker_chain(ctx: ChainCtx<'_>, task: ChainTask, w: &mut Worker) -> Result<ChainOutput> {
-    crate::util::logger::set_thread_context(format!("t{}.w{}", task.ti, task.wi));
-    let plan = task.plan;
-    // chain-local scratch; the gradient buffers are only needed on the
-    // SwitchMode (accumulating) path
-    let (mut grad, mut accum) = if plan.accum_steps > 1 {
-        let p = ctx.engine.param_count();
-        (vec![0.0f32; p], vec![0.0f32; p])
-    } else {
-        (Vec::new(), Vec::new())
-    };
-    let mut buf = TokenBatch::new(plan.micro_batch, ctx.width);
-    let mut stats_out: Vec<(u64, StepStats, f64)> = Vec::with_capacity(task.target as usize);
-    let mut snaps: Vec<(u64, Vec<f32>)> = Vec::new();
-    let mut now = task.start_time;
-    let mut busy = task.busy_start;
-    let mut preempted = task.preempted_start;
-    let node_model = &ctx.nodes[task.node];
-
-    for step in 1..=task.target {
-        // ---- timing (serial: step_duration + schedule_step_end) --------
-        let mut dt =
-            step_compute_time(node_model, &plan, ctx.width, ctx.step_jitter, &mut w.time_rng);
-        dt *= ctx.scenario.straggler_factor(&mut w.time_rng);
-        let (end, stall) = ctx.scenario.compute_span(task.node, now, dt);
-        busy += dt;
-        preempted += stall;
-        now = end;
-
-        // ---- compute (the shared exec_step, like the serial paths) -----
-        let lr = ctx.lr_schedule.lr(ctx.lr_inner, task.start_done + step);
-        let stats = exec_step(
-            ctx.engine,
-            ctx.corpus,
-            w,
-            &plan,
-            lr,
-            StepScratch { buf: &mut buf, grad: &mut grad, accum: &mut accum },
-        )?;
-        stats_out.push((step, stats, now));
-
-        // ---- mid-loop eval snapshot (same gating as the serial loop) ---
-        if task.snapshot_params
-            && ctx.eval_every > 0
-            && step % ctx.eval_every == 0
-            && !(ctx.cap > 0 && task.start_done + step >= ctx.cap)
-        {
-            snaps.push((step, w.state.params.clone()));
-        }
-    }
-    crate::util::logger::clear_thread_context();
-    Ok(ChainOutput {
-        ti: task.ti,
-        wi: task.wi,
-        slot: task.slot,
-        stats: stats_out,
-        snaps,
-        end_time: now,
-        busy_end: busy,
-        preempted_end: preempted,
-    })
-}
-
 /// The AdLoCo run loop over the simulated cluster: owns the trainer pool,
-/// the engine, the virtual clocks, the data pipeline and the recorders.
+/// the engine, the data pipeline, the recorders, and the two carved-out
+/// layers — [`ClusterState`] (time & place) and [`CommLayer`] (cost &
+/// ledger).
 pub struct Coordinator {
     cfg: Config,
     engine: Box<dyn TrainEngine>,
     corpus: Corpus,
     val_corpus: Corpus,
     trainers: Vec<Trainer>,
-    clock: VirtualClock,
-    nodes: Vec<NodeModel>,
-    net: NetworkModel,
-    scenario: Scenario,
-    ledger: CommLedger,
+    /// Time & place: virtual clocks, node models, scenario, topology,
+    /// per-slot busy/wait/comm/preempted accounting.
+    cluster: ClusterState,
+    /// Cost & ledger: network tiers, collectives, every `CommEvent`.
+    comm: CommLayer,
     /// Every record stream the run produces (steps, evals, merges,
     /// utilization, notes, wall-clock).
     pub recorder: Recorder,
@@ -378,11 +178,6 @@ pub struct Coordinator {
     total_samples: u64,
     /// Inner-lr schedule (evaluated on each trainer's inner-step count).
     lr_schedule: crate::schedule::Schedule,
-    /// Per-clock-slot time accounting (virtual seconds).
-    busy_s: Vec<f64>,
-    wait_s: Vec<f64>,
-    comm_s: Vec<f64>,
-    preempted_s: Vec<f64>,
     /// Resolved thread count for the parallel runtime (>= 1).
     threads: usize,
     /// Host wall-clock of the last `run()` call (perf reporting only).
@@ -444,16 +239,11 @@ impl Coordinator {
         recorder.note("config", cfg.name.clone());
         recorder.note("scheduler", cfg.run.scheduler.as_str());
         recorder.note("threads", threads.to_string());
+        recorder.note("topology", cfg.cluster.topology.as_str());
 
         Ok(Coordinator {
-            clock: VirtualClock::new(k * m),
-            nodes: node_models(&cfg.cluster),
-            net: NetworkModel {
-                latency_s: cfg.cluster.net_latency_s,
-                bandwidth_bps: cfg.cluster.net_bandwidth_bps,
-            },
-            scenario: Scenario::compile(&cfg.cluster.scenario, cfg.cluster.nodes.len()),
-            ledger: CommLedger::default(),
+            cluster: ClusterState::new(&cfg.cluster, k * m),
+            comm: CommLayer::new(&cfg.cluster),
             recorder,
             rng,
             delta_scratch: vec![0.0; p],
@@ -465,10 +255,6 @@ impl Coordinator {
                 &cfg.algo.lr_schedule,
                 (cfg.algo.outer_steps * cfg.algo.inner_steps) as u64,
             ),
-            busy_s: vec![0.0; k * m],
-            wait_s: vec![0.0; k * m],
-            comm_s: vec![0.0; k * m],
-            preempted_s: vec![0.0; k * m],
             threads,
             run_wall_s: 0.0,
             cfg,
@@ -486,7 +272,7 @@ impl Coordinator {
 
     /// The communication ledger accumulated so far.
     pub fn ledger(&self) -> &CommLedger {
-        &self.ledger
+        &self.comm.ledger
     }
 
     /// Resolved thread count of the parallel runtime (>= 1).
@@ -505,25 +291,10 @@ impl Coordinator {
         let node_min = t
             .workers
             .iter()
-            .map(|w| self.nodes[w.node].max_batch)
+            .map(|w| self.cluster.nodes[w.node].max_batch)
             .min()
             .unwrap_or(1);
         node_min.min(self.engine.max_batch()).max(1)
-    }
-
-    /// Barrier with utilization accounting: members wait for the slowest
-    /// (wait time) then pay the transfer (comm time). Numerically exactly
-    /// `VirtualClock::barrier`.
-    fn barrier_tracked(&mut self, members: &[usize], extra: f64) -> f64 {
-        let t_start = members
-            .iter()
-            .map(|&w| self.clock.time(w))
-            .fold(0.0_f64, f64::max);
-        for &w in members {
-            self.wait_s[w] += t_start - self.clock.time(w);
-            self.comm_s[w] += extra;
-        }
-        self.clock.barrier(members, extra)
     }
 
     /// Run the full schedule (T outer steps of H inner steps), honouring
@@ -575,9 +346,11 @@ impl Coordinator {
             config_name: self.cfg.name.clone(),
             outer_step,
             total_samples: self.total_samples,
-            comm_count: self.ledger.count() as u64,
-            comm_bytes: self.ledger.total_bytes(),
-            clock_times: (0..self.clock.len()).map(|w| self.clock.time(w)).collect(),
+            comm_count: self.comm.ledger.count() as u64,
+            comm_bytes: self.comm.ledger.total_bytes(),
+            clock_times: (0..self.cluster.clock.len())
+                .map(|w| self.cluster.clock.time(w))
+                .collect(),
             trainers: self
                 .trainers
                 .iter()
@@ -645,10 +418,10 @@ impl Coordinator {
             }
         }
         for (w, &t) in cp.clock_times.iter().enumerate().map(|(i, t)| (i, t)) {
-            if w < self.clock.len() {
-                let cur = self.clock.time(w);
+            if w < self.cluster.clock.len() {
+                let cur = self.cluster.clock.time(w);
                 if t > cur {
-                    self.clock.advance(w, t - cur);
+                    self.cluster.clock.advance(w, t - cur);
                 }
             }
         }
@@ -727,113 +500,7 @@ impl Coordinator {
         let width = self.corpus.width();
         let jitter = self.cfg.cluster.step_jitter;
         let w = &mut self.trainers[ti].workers[wi];
-        step_compute_time(&self.nodes[w.node], plan, width, jitter, &mut w.time_rng)
-    }
-
-    /// Pick the trainers to merge this round (Algorithm 1). Empty or a
-    /// single id means no merge.
-    fn select_merge(&mut self) -> Vec<usize> {
-        let requests: Vec<(usize, usize)> = self
-            .trainers
-            .iter()
-            .filter(|t| t.alive)
-            .map(|t| (t.id, t.requested_batch()))
-            .collect();
-        let policy = match self.cfg.algo.merge.policy {
-            crate::config::MergeSelect::WorstByBatch => MergePolicy::WorstByBatch,
-            crate::config::MergeSelect::Random => MergePolicy::Random,
-        };
-        check_merge_with_policy(
-            &requests,
-            self.cfg.algo.merge.w,
-            self.cfg.algo.merge.min_trainers,
-            policy,
-            &mut self.rng,
-        )
-    }
-
-    /// The parameter/shard consolidation of a merge (Algorithm 2), after
-    /// the participants' barrier produced `t_after`. Shared by both
-    /// schedulers; the ledger entry is recorded by the caller.
-    fn perform_merge(&mut self, outer_t: u64, selected: &[usize], t_after: f64) -> Result<()> {
-        // weighted merge over the selected trainers' parameters
-        let outcome = {
-            // split borrows: collect (id, b_req) first, then build the
-            // mutable member list in id order
-            let reqs: Vec<(usize, usize)> = selected
-                .iter()
-                .map(|&id| (id, self.trainers[id].requested_batch()))
-                .collect();
-            let mut members: Vec<(usize, usize, &mut [f32])> = Vec::new();
-            // safe split of multiple &mut trainers via split_at_mut walk
-            let mut rest: &mut [Trainer] = &mut self.trainers;
-            let mut base = 0usize;
-            let mut sorted = selected.to_vec();
-            sorted.sort_unstable();
-            for id in sorted {
-                let local = id - base;
-                let tmp = rest;
-                let (head, tail) = tmp.split_at_mut(local + 1);
-                let tr = &mut head[local];
-                let b = reqs.iter().find(|(i, _)| *i == id).unwrap().1;
-                members.push((id, b, tr.params.as_mut_slice()));
-                rest = tail;
-                base = id + 1;
-            }
-            do_merge(&mut members)
-        };
-
-        // consume the non-representative trainers
-        for &dead in &outcome.removed {
-            self.trainers[dead].alive = false;
-        }
-        // the representative keeps the union of the merged shards and its
-        // own optimizer trajectory (Algorithm 2 line 9); its outer
-        // momentum is reset since the parameters jumped
-        let shard_refs: Vec<&crate::data::Shard> = selected
-            .iter()
-            .map(|&id| &self.trainers[id].shard)
-            .collect();
-        let merged_shard = union_shards(&shard_refs);
-        let rep = outcome.representative;
-        {
-            // re-split among the representative's active workers (all of
-            // them on a static cluster); churned-out workers get fresh
-            // samplers from the merged shard when they rejoin
-            let active_ix: Vec<usize> = self.trainers[rep]
-                .workers
-                .iter()
-                .enumerate()
-                .filter(|(_, w)| w.active)
-                .map(|(i, _)| i)
-                .collect();
-            let split_ix: Vec<usize> = if active_ix.is_empty() {
-                (0..self.trainers[rep].workers.len()).collect()
-            } else {
-                active_ix
-            };
-            let worker_shards = merged_shard.split(split_ix.len());
-            for (&w_ix, ws) in split_ix.iter().zip(worker_shards.into_iter()) {
-                self.trainers[rep].workers[w_ix].sampler =
-                    crate::data::BatchSampler::new(ws, self.rng.fork(0xABCD + rep as u64));
-            }
-            self.trainers[rep].shard = merged_shard;
-            self.trainers[rep].outer.reset();
-        }
-
-        crate::info!(
-            "outer {outer_t}: merged {:?} -> representative {rep} ({} trainers left)",
-            outcome.removed,
-            self.live_trainers()
-        );
-        self.recorder.merges.push(MergeRecord {
-            outer_step: outer_t,
-            merged: outcome.removed.clone(),
-            representative: rep,
-            trainers_left: self.live_trainers(),
-            virtual_time_s: t_after,
-        });
-        Ok(())
+        step_compute_time(&self.cluster.nodes[w.node], plan, width, jitter, &mut w.time_rng)
     }
 
     /// Validation loss/perplexity of `params` (fresh per-call eval RNG
@@ -863,7 +530,7 @@ impl Coordinator {
         let vt = tr
             .workers
             .iter()
-            .map(|w| self.clock.time(w.clock_slot))
+            .map(|w| self.cluster.clock.time(w.clock_slot))
             .fold(0.0f64, f64::max);
         self.recorder.evals.push(EvalRecord {
             global_step: tr.inner_steps_done,
@@ -872,8 +539,8 @@ impl Coordinator {
             loss,
             perplexity: ppl,
             virtual_time_s: vt,
-            comm_count: self.ledger.count(),
-            comm_bytes: self.ledger.total_bytes(),
+            comm_count: self.comm.ledger.count(),
+            comm_bytes: self.comm.ledger.total_bytes(),
         });
         Ok(self.cfg.run.target_ppl > 0.0 && ppl <= self.cfg.run.target_ppl)
     }
@@ -891,738 +558,14 @@ impl Coordinator {
         self.eval_params(&params, ti, outer_t)
     }
 
-    // ------------------------------------------------------------------
-    // lockstep scheduler (reference walk)
-    // ------------------------------------------------------------------
-
-    /// One outer step of the lockstep reference walk. Returns true if the
-    /// target perplexity was reached.
-    pub fn step_outer(&mut self, outer_t: u64) -> Result<bool> {
-        // ---- merging (Algorithm 3 lines 11-16) -------------------------
-        let mc = self.cfg.algo.merge.clone();
-        if mc.enabled
-            && self.live_trainers() > 1
-            && mc.frequency > 0
-            && outer_t % mc.frequency as u64 == 0
-        {
-            self.maybe_merge(outer_t)?;
-        }
-
-        // ---- inner loops ------------------------------------------------
-        let h = self.cfg.algo.inner_steps;
-        let live: Vec<usize> = (0..self.trainers.len())
-            .filter(|&i| self.trainers[i].alive)
-            .collect();
-        let mut hit_target = false;
-
-        for &ti in &live {
-            self.trainers[ti].broadcast_params();
-            let plan = self.plan_for(ti);
-            for step_h in 1..=h {
-                self.inner_step(ti, outer_t, &plan)?;
-                // cap on total inner steps (profiling / quick runs)
-                let cap = self.cfg.run.max_inner_steps as u64;
-                if cap > 0 && self.trainers[ti].inner_steps_done >= cap {
-                    break;
-                }
-                // periodic evaluation on worker-0's live parameters
-                if self.cfg.run.eval_every > 0
-                    && step_h % self.cfg.run.eval_every == 0
-                {
-                    let reached = self.evaluate(ti, outer_t)?;
-                    hit_target |= reached;
-                }
-            }
-        }
-
-        // ---- outer sync (Algorithm 3 lines 40-44) ------------------------
-        let param_bytes = (self.engine.param_count() * 4) as u64;
-        for &ti in &live {
-            let m = self.trainers[ti].workers.len();
-            let slots: Vec<usize> =
-                self.trainers[ti].workers.iter().map(|w| w.clock_slot).collect();
-            let comm_t = self.net.allreduce_time(param_bytes, m);
-            let t_after = self.barrier_tracked(&slots, comm_t);
-            if m > 1 {
-                self.ledger.record(CommEvent {
-                    kind: CommKind::OuterSync,
-                    at_virtual_s: t_after,
-                    bytes: (2 * (m as u64 - 1)) * param_bytes,
-                    participants: m,
-                    at_inner_step: self.total_samples, // N axis: samples
-                });
-            }
-            let tr = &mut self.trainers[ti];
-            tr.outer_step(&mut self.delta_scratch);
-        }
-
-        // end-of-outer-step evaluation on the trainer parameters
-        for &ti in &live {
-            if self.trainers[ti].alive {
-                let reached = self.evaluate_trainer_params(ti, outer_t)?;
-                hit_target |= reached;
-            }
-        }
-        Ok(hit_target)
-    }
-
-    /// One inner step of every worker of trainer `ti` (lockstep walk).
-    fn inner_step(&mut self, ti: usize, outer_t: u64, plan: &StepPlan) -> Result<()> {
-        let lr = self
-            .lr_schedule
-            .lr(self.cfg.algo.lr_inner, self.trainers[ti].inner_steps_done + 1);
-        let n_workers = self.trainers[ti].workers.len();
-
-        for wi in 0..n_workers {
-            let stats = self.exec_worker_step(ti, wi, plan, lr)?;
-
-            // virtual time: accum_steps micro-steps on this worker's node
-            let dt = self.step_duration(ti, wi, plan);
-            let slot = self.trainers[ti].workers[wi].clock_slot;
-            self.clock.advance(slot, dt);
-            self.busy_s[slot] += dt;
-
-            // adaptive-batching statistics (Algorithm 3 line 31)
-            let tr = &mut self.trainers[ti];
-            tr.controller.observe(&stats, plan.effective_batch());
-
-            self.total_samples += plan.effective_batch() as u64;
-            let global_step = tr.inner_steps_done + 1;
-            self.recorder.steps.push(StepRecord {
-                global_step,
-                outer_step: outer_t,
-                trainer: ti,
-                worker: wi,
-                batch: plan.micro_batch,
-                requested_batch: tr.controller.requested(),
-                accum_steps: plan.accum_steps,
-                loss: stats.loss,
-                grad_sq_norm: stats.grad_sq_norm,
-                sigma2: stats.sigma2,
-                virtual_time_s: self.clock.time(slot),
-            });
-        }
-        self.trainers[ti].inner_steps_done += 1;
-        Ok(())
-    }
-
-    /// MIT merge round (Algorithms 1-2), lockstep flavour: selection, a
-    /// plain barrier over every worker of the selected trainers, then the
-    /// shared consolidation.
-    fn maybe_merge(&mut self, outer_t: u64) -> Result<()> {
-        let selected = self.select_merge();
-        if selected.len() < 2 {
-            return Ok(());
-        }
-
-        // barrier every worker of the merging trainers + transfer time
-        let param_bytes = (self.engine.param_count() * 4) as u64;
-        let slots: Vec<usize> = selected
-            .iter()
-            .flat_map(|&id| self.trainers[id].workers.iter().map(|w| w.clock_slot))
-            .collect();
-        let bytes = (selected.len() as u64 - 1) * param_bytes;
-        let t_after = self.barrier_tracked(&slots, self.net.transfer_time(bytes));
-        self.ledger.record(CommEvent {
-            kind: CommKind::Merge,
-            at_virtual_s: t_after,
-            bytes,
-            participants: selected.len(),
-            at_inner_step: self.total_samples,
-        });
-        self.perform_merge(outer_t, &selected, t_after)
-    }
-
-    // ------------------------------------------------------------------
-    // event-driven scheduler
-    // ------------------------------------------------------------------
-
-    /// One outer step of the discrete-event scheduler. Returns true if
-    /// the target perplexity was reached.
-    ///
-    /// Inner steps execute when their `StepDone` event pops — in virtual
-    /// time order across all trainers and workers. Controller
-    /// observations, step records and buffered evals are flushed in
-    /// canonical (trainer, step, worker) order at the outer boundary,
-    /// which is exactly the order the lockstep walk produces — together
-    /// with per-worker RNG streams this makes the two schedulers
-    /// bit-identical on static clusters.
-    pub fn step_outer_event(&mut self, outer_t: u64) -> Result<bool> {
-        // ---- churn: refresh worker activity, re-shard changed trainers --
-        self.apply_churn()?;
-
-        // ---- merging (same cadence and selection as lockstep) -----------
-        let mc = self.cfg.algo.merge.clone();
-        if mc.enabled
-            && self.live_trainers() > 1
-            && mc.frequency > 0
-            && outer_t % mc.frequency as u64 == 0
-        {
-            self.maybe_merge_event(outer_t)?;
-        }
-
-        let h = self.cfg.algo.inner_steps as u64;
-        let cap = self.cfg.run.max_inner_steps as u64;
-        let live: Vec<usize> = (0..self.trainers.len())
-            .filter(|&i| self.trainers[i].alive)
-            .collect();
-        let mut hit_target = false;
-
-        // ---- per-trainer plans + bookkeeping ----------------------------
-        let mut runs: Vec<Option<TrainerRun>> =
-            (0..self.trainers.len()).map(|_| None).collect();
-        for &ti in &live {
-            self.trainers[ti].broadcast_params();
-            let plan = self.plan_for(ti);
-            let start_done = self.trainers[ti].inner_steps_done;
-            let target = if cap == 0 {
-                h
-            } else {
-                h.min(cap.saturating_sub(start_done).max(1))
-            };
-            let n_active = self.trainers[ti].workers.iter().filter(|w| w.active).count();
-            let eval_worker = self.trainers[ti]
-                .workers
-                .iter()
-                .position(|w| w.active)
-                .unwrap_or(0);
-            runs[ti] = Some(TrainerRun {
-                plan,
-                target,
-                start_done,
-                eval_worker,
-                n_active,
-                stats: Vec::with_capacity((target as usize) * n_active),
-                evals: Vec::new(),
-                pending: BTreeMap::new(),
-            });
-        }
-
-        // ---- inner phase: serial event loop, or parallel worker chains
-        //      when run.threads > 1 (bit-identical by construction —
-        //      DESIGN.md §6, enforced by tests/determinism_parallel.rs)
-        if self.threads > 1 {
-            hit_target |= self.parallel_inner_phase(outer_t, &live, &mut runs)?;
-        } else {
-            hit_target |= self.event_inner_phase(outer_t, &live, &mut runs)?;
-        }
-
-        // ---- canonical flush: controller folds, step records, evals -----
-        for &ti in &live {
-            let mut r = match runs[ti].take() {
-                Some(r) => r,
-                None => continue,
-            };
-            if r.n_active == 0 {
-                continue; // fully preempted: the trainer sat this one out
-            }
-            r.stats.sort_by_key(|&(s, w, _, _)| (s, w));
-            for &(step, wi, ref stats, vt) in r.stats.iter() {
-                let tr = &mut self.trainers[ti];
-                tr.controller.observe(stats, r.plan.effective_batch());
-                self.total_samples += r.plan.effective_batch() as u64;
-                self.recorder.steps.push(StepRecord {
-                    global_step: r.start_done + step,
-                    outer_step: outer_t,
-                    trainer: ti,
-                    worker: wi,
-                    batch: r.plan.micro_batch,
-                    requested_batch: tr.controller.requested(),
-                    accum_steps: r.plan.accum_steps,
-                    loss: stats.loss,
-                    grad_sq_norm: stats.grad_sq_norm,
-                    sigma2: stats.sigma2,
-                    virtual_time_s: vt,
-                });
-            }
-            self.trainers[ti].inner_steps_done = r.start_done + r.target;
-            r.evals.sort_by_key(|&(s, _)| s);
-            for (_, rec) in r.evals {
-                self.recorder.evals.push(rec);
-            }
-        }
-
-        // ---- outer sync over active workers, in trainer order -----------
-        let param_bytes = (self.engine.param_count() * 4) as u64;
-        for &ti in &live {
-            let members: Vec<(usize, usize)> = self.trainers[ti]
-                .workers
-                .iter()
-                .filter(|w| w.active)
-                .map(|w| (w.clock_slot, w.node))
-                .collect();
-            if members.is_empty() {
-                continue;
-            }
-            let m_active = members.len();
-            let slots: Vec<usize> = members.iter().map(|&(s, _)| s).collect();
-            let t_start = slots
-                .iter()
-                .map(|&s| self.clock.time(s))
-                .fold(0.0_f64, f64::max);
-            let factor = self
-                .scenario
-                .min_bandwidth_factor(members.iter().map(|&(_, n)| n), t_start);
-            let comm_t = self.net.scaled(factor).allreduce_time(param_bytes, m_active);
-            let t_after = self.barrier_tracked(&slots, comm_t);
-            if m_active > 1 {
-                self.ledger.record(CommEvent {
-                    kind: CommKind::OuterSync,
-                    at_virtual_s: t_after,
-                    bytes: (2 * (m_active as u64 - 1)) * param_bytes,
-                    participants: m_active,
-                    at_inner_step: self.total_samples,
-                });
-            }
-            let tr = &mut self.trainers[ti];
-            tr.outer_step_active(&mut self.delta_scratch);
-        }
-
-        // end-of-outer-step evaluation on the trainer parameters
-        for &ti in &live {
-            if self.trainers[ti].alive {
-                let reached = self.evaluate_trainer_params(ti, outer_t)?;
-                hit_target |= reached;
-            }
-        }
-        Ok(hit_target)
-    }
-
-    /// The serial inner phase of one event-driven outer step: seed the
-    /// queue with every active worker's first step, then consume events
-    /// in virtual-time order. Returns true if a mid-loop evaluation hit
-    /// the target perplexity.
-    fn event_inner_phase(
-        &mut self,
-        outer_t: u64,
-        live: &[usize],
-        runs: &mut [Option<TrainerRun>],
-    ) -> Result<bool> {
-        let cap = self.cfg.run.max_inner_steps as u64;
-        let eval_every = self.cfg.run.eval_every as u64;
-        let mut hit_target = false;
-
-        // ---- seed the queue with every active worker's first step -------
-        let mut queue = EventQueue::new();
-        for &ti in live {
-            let plan = runs[ti].as_ref().unwrap().plan;
-            for wi in 0..self.trainers[ti].workers.len() {
-                if !self.trainers[ti].workers[wi].active {
-                    continue;
-                }
-                let end = self.schedule_step_end(ti, wi, &plan);
-                queue.push(end, SimEvent::StepDone { trainer: ti, worker: wi, step: 1 });
-            }
-        }
-
-        // ---- consume events in virtual-time order -----------------------
-        while let Some((t, ev)) = queue.pop() {
-            match ev {
-                SimEvent::StepDone { trainer: ti, worker: wi, step } => {
-                    let slot = self.trainers[ti].workers[wi].clock_slot;
-                    self.clock.advance_to(slot, t);
-                    let (plan, target, start_done, eval_worker) = {
-                        let r = runs[ti].as_ref().unwrap();
-                        (r.plan, r.target, r.start_done, r.eval_worker)
-                    };
-                    let lr = self
-                        .lr_schedule
-                        .lr(self.cfg.algo.lr_inner, start_done + step);
-                    let stats = self.exec_worker_step(ti, wi, &plan, lr)?;
-                    runs[ti].as_mut().unwrap().stats.push((step, wi, stats, t));
-
-                    // mid-loop eval bookkeeping: the eval runs once every
-                    // active worker has completed this step (lockstep
-                    // evaluates at the same logical point)
-                    let eval_due = eval_every > 0
-                        && step % eval_every == 0
-                        && step <= target
-                        && !(cap > 0 && start_done + step >= cap);
-                    if eval_due {
-                        let ready = {
-                            let r = runs[ti].as_mut().unwrap();
-                            let n_active = r.n_active;
-                            let p = r.pending.entry(step).or_insert_with(|| PendingEval {
-                                times: Vec::new(),
-                                remaining: n_active,
-                                params: Vec::new(),
-                            });
-                            p.times.push(t);
-                            p.remaining -= 1;
-                            p.remaining == 0
-                        };
-                        if wi == eval_worker {
-                            let snap = self.trainers[ti].workers[wi].state.params.clone();
-                            runs[ti]
-                                .as_mut()
-                                .unwrap()
-                                .pending
-                                .get_mut(&step)
-                                .unwrap()
-                                .params = snap;
-                        }
-                        if ready {
-                            let pend = runs[ti]
-                                .as_mut()
-                                .unwrap()
-                                .pending
-                                .remove(&step)
-                                .unwrap();
-                            let vt =
-                                pend.times.iter().fold(0.0f64, |acc, &x| acc.max(x));
-                            let (loss, ppl) = self.compute_eval(&pend.params, outer_t)?;
-                            hit_target |= self.cfg.run.target_ppl > 0.0
-                                && ppl <= self.cfg.run.target_ppl;
-                            let rec = EvalRecord {
-                                global_step: start_done + step,
-                                outer_step: outer_t,
-                                trainer: ti,
-                                loss,
-                                perplexity: ppl,
-                                virtual_time_s: vt,
-                                comm_count: self.ledger.count(),
-                                comm_bytes: self.ledger.total_bytes(),
-                            };
-                            runs[ti].as_mut().unwrap().evals.push((step, rec));
-                        }
-                    }
-
-                    if step < target {
-                        let end = self.schedule_step_end(ti, wi, &plan);
-                        queue.push(
-                            end,
-                            SimEvent::StepDone { trainer: ti, worker: wi, step: step + 1 },
-                        );
-                    } else {
-                        queue.push(t, SimEvent::SyncArrive { trainer: ti, worker: wi });
-                    }
-                }
-                // Arrival markers: the rendezvous itself is the queue
-                // draining — every active worker has posted its arrival
-                // by then. (MergeArrive is handled in maybe_merge_event.)
-                SimEvent::SyncArrive { .. } | SimEvent::MergeArrive { .. } => {}
-            }
-        }
-        Ok(hit_target)
-    }
-
-    /// The parallel inner phase (the tentpole of DESIGN.md §6): between
-    /// the outer-step prologue and the sync/merge rendezvous, workers are
-    /// fully independent — each owns its model state, data sampler and
-    /// RNG streams — so their inner-step chains fan out across
-    /// `run.threads` OS threads and join at the boundary. Chain outputs
-    /// are applied in canonical (trainer, worker) order and mid-loop
-    /// evaluations are computed after the join, which together with the
-    /// canonical flush makes the result bit-identical to the serial
-    /// event loop no matter how the OS schedules the pool.
-    fn parallel_inner_phase(
-        &mut self,
-        outer_t: u64,
-        live: &[usize],
-        runs: &mut [Option<TrainerRun>],
-    ) -> Result<bool> {
-        // ---- launch parameters, copied out before the borrow split ------
-        let mut metas: Vec<ChainTask> = Vec::new();
-        for &ti in live {
-            let r = runs[ti].as_ref().unwrap();
-            for (wi, w) in self.trainers[ti].workers.iter().enumerate() {
-                if !w.active {
-                    continue;
-                }
-                metas.push(ChainTask {
-                    ti,
-                    wi,
-                    slot: w.clock_slot,
-                    node: w.node,
-                    start_time: self.clock.time(w.clock_slot),
-                    busy_start: self.busy_s[w.clock_slot],
-                    preempted_start: self.preempted_s[w.clock_slot],
-                    plan: r.plan,
-                    target: r.target,
-                    start_done: r.start_done,
-                    snapshot_params: wi == r.eval_worker,
-                });
-            }
-        }
-
-        // ---- pair tasks with exclusive worker borrows -------------------
-        let ctx = ChainCtx {
-            engine: self.engine.as_ref(),
-            corpus: &self.corpus,
-            nodes: &self.nodes,
-            scenario: &self.scenario,
-            lr_schedule: &self.lr_schedule,
-            lr_inner: self.cfg.algo.lr_inner,
-            step_jitter: self.cfg.cluster.step_jitter,
-            eval_every: self.cfg.run.eval_every as u64,
-            cap: self.cfg.run.max_inner_steps as u64,
-            width: self.corpus.width(),
-        };
-        let mut tasks: Vec<(ChainTask, &mut Worker)> = Vec::with_capacity(metas.len());
-        {
-            let mut pending = metas.into_iter().peekable();
-            for (ti, tr) in self.trainers.iter_mut().enumerate() {
-                for (wi, w) in tr.workers.iter_mut().enumerate() {
-                    if pending.peek().is_some_and(|m| m.ti == ti && m.wi == wi) {
-                        tasks.push((pending.next().unwrap(), w));
-                    }
-                }
-            }
-        }
-
-        // ---- fan out / join: the shared work-stealing pool, so uneven
-        //      chains (stragglers, slow nodes) never strand a thread ----
-        let results: Vec<Result<ChainOutput>> = crate::util::run_cells(
-            self.threads,
-            tasks
-                .into_iter()
-                .map(|(m, w)| move || run_worker_chain(ctx, m, w))
-                .collect(),
-        );
-        let mut outputs = Vec::with_capacity(results.len());
-        for r in results {
-            outputs.push(r?);
-        }
-        // canonical application order (the scheduling order of the pool
-        // must leave no trace)
-        outputs.sort_by_key(|o| (o.ti, o.wi));
-
-        // ---- apply: clocks, time accounting, step stats, snapshots ------
-        let mut snaps_by_trainer: BTreeMap<usize, Vec<(u64, Vec<f32>)>> = BTreeMap::new();
-        for o in outputs {
-            self.clock.advance_to(o.slot, o.end_time);
-            self.busy_s[o.slot] = o.busy_end;
-            self.preempted_s[o.slot] = o.preempted_end;
-            let r = runs[o.ti].as_mut().unwrap();
-            for (step, stats, t) in o.stats {
-                r.stats.push((step, o.wi, stats, t));
-            }
-            if !o.snaps.is_empty() {
-                snaps_by_trainer.entry(o.ti).or_default().extend(o.snaps);
-            }
-        }
-
-        // ---- mid-loop evaluations (deferred to the join; the eval RNG
-        //      is keyed by (seed, outer_step) so timing leaves no trace) -
-        let mut hit_target = false;
-        for &ti in live {
-            let snaps = match snaps_by_trainer.remove(&ti) {
-                Some(s) => s,
-                None => continue,
-            };
-            for (step, params) in snaps {
-                let (global_step, vt) = {
-                    let r = runs[ti].as_ref().unwrap();
-                    let vt = r
-                        .stats
-                        .iter()
-                        .filter(|&&(s, _, _, _)| s == step)
-                        .map(|&(_, _, _, t)| t)
-                        .fold(0.0f64, f64::max);
-                    (r.start_done + step, vt)
-                };
-                let (loss, ppl) = self.compute_eval(&params, outer_t)?;
-                hit_target |=
-                    self.cfg.run.target_ppl > 0.0 && ppl <= self.cfg.run.target_ppl;
-                let rec = EvalRecord {
-                    global_step,
-                    outer_step: outer_t,
-                    trainer: ti,
-                    loss,
-                    perplexity: ppl,
-                    virtual_time_s: vt,
-                    comm_count: self.ledger.count(),
-                    comm_bytes: self.ledger.total_bytes(),
-                };
-                runs[ti].as_mut().unwrap().evals.push((step, rec));
-            }
-        }
-        Ok(hit_target)
-    }
-
-    /// Schedule the completion time of worker `wi`'s next inner step:
-    /// current clock + duration, stretched by scenario stragglers and
-    /// preemption windows. Accounts busy/preempted time.
-    fn schedule_step_end(&mut self, ti: usize, wi: usize, plan: &StepPlan) -> f64 {
-        let mut dt = self.step_duration(ti, wi, plan);
-        {
-            let w = &mut self.trainers[ti].workers[wi];
-            dt *= self.scenario.straggler_factor(&mut w.time_rng);
-        }
-        let (slot, node) = {
-            let w = &self.trainers[ti].workers[wi];
-            (w.clock_slot, w.node)
-        };
-        let start = self.clock.time(slot);
-        let (end, stall) = self.scenario.compute_span(node, start, dt);
-        self.busy_s[slot] += dt;
-        self.preempted_s[slot] += stall;
-        end
-    }
-
-    /// Churn bookkeeping at an outer boundary: workers on preempted nodes
-    /// sit the round out; returning workers catch their clocks up and the
-    /// trainer's shard is re-split among the currently active workers
-    /// (the `Shard::split` / `union_shards` machinery).
-    #[allow(clippy::needless_range_loop)] // body interleaves &mut self calls
-    fn apply_churn(&mut self) -> Result<()> {
-        if self.scenario.is_static() {
-            return Ok(());
-        }
-        for ti in 0..self.trainers.len() {
-            if !self.trainers[ti].alive {
-                continue;
-            }
-            // the trainer front: where its active cohort currently is; a
-            // fully-preempted trainer's clocks are frozen, so fall back
-            // to the global front or it would never see its window end
-            let mut t_now = self.trainers[ti]
-                .workers
-                .iter()
-                .map(|w| self.clock.time(w.clock_slot))
-                .fold(0.0f64, f64::max);
-            if !self.trainers[ti].workers.iter().any(|w| w.active) {
-                t_now = t_now.max(self.clock.max_time());
-            }
-            let changed = self.trainers[ti]
-                .workers
-                .iter()
-                .any(|w| self.scenario.node_available(w.node, t_now) != w.active);
-            if !changed {
-                continue;
-            }
-            for wi in 0..self.trainers[ti].workers.len() {
-                let (node, slot, was_active) = {
-                    let w = &self.trainers[ti].workers[wi];
-                    (w.node, w.clock_slot, w.active)
-                };
-                let avail = self.scenario.node_available(node, t_now);
-                if avail && !was_active {
-                    // rejoin: jump to the trainer front; the gap was
-                    // preemption downtime
-                    let cur = self.clock.time(slot);
-                    if t_now > cur {
-                        self.clock.advance_to(slot, t_now);
-                        self.preempted_s[slot] += t_now - cur;
-                    }
-                }
-                self.trainers[ti].workers[wi].active = avail;
-            }
-            let active_ix: Vec<usize> = self.trainers[ti]
-                .workers
-                .iter()
-                .enumerate()
-                .filter(|(_, w)| w.active)
-                .map(|(i, _)| i)
-                .collect();
-            if active_ix.is_empty() {
-                crate::info!("trainer {ti}: all workers preempted; sitting this round out");
-                continue;
-            }
-            let parts = self.trainers[ti].shard.split(active_ix.len());
-            for (&w_ix, part) in active_ix.iter().zip(parts.into_iter()) {
-                self.trainers[ti].workers[w_ix].sampler = crate::data::BatchSampler::new(
-                    part,
-                    self.rng.fork(0xC4A5 ^ ((ti as u64) << 8) ^ (w_ix as u64)),
-                );
-            }
-            crate::debug!(
-                "trainer {ti}: churn re-shard over {} active workers at t={t_now:.2}s",
-                active_ix.len()
-            );
-        }
-        Ok(())
-    }
-
-    /// MIT merge round (Algorithms 1-2), event flavour: after selection,
-    /// every active worker of the selected trainers posts a `MergeArrive`
-    /// at its current virtual time; the rendezvous completes when the
-    /// last arrival pops, and the transfer runs at the slowest
-    /// participating link's current bandwidth.
-    fn maybe_merge_event(&mut self, outer_t: u64) -> Result<()> {
-        let selected = self.select_merge();
-        if selected.len() < 2 {
-            return Ok(());
-        }
-
-        let mut queue = EventQueue::new();
-        let mut slots: Vec<usize> = Vec::new();
-        let mut nodes: Vec<usize> = Vec::new();
-        for &id in &selected {
-            for (wi, w) in self.trainers[id].workers.iter().enumerate() {
-                if w.active {
-                    queue.push(
-                        self.clock.time(w.clock_slot),
-                        SimEvent::MergeArrive { trainer: id, worker: wi },
-                    );
-                    slots.push(w.clock_slot);
-                    nodes.push(w.node);
-                }
-            }
-        }
-        if slots.is_empty() {
-            // every selected trainer is fully preempted: fall back to the
-            // whole (frozen) cohort, like the lockstep barrier, instead of
-            // recording a merge at virtual time ~0
-            for &id in &selected {
-                for w in &self.trainers[id].workers {
-                    slots.push(w.clock_slot);
-                    nodes.push(w.node);
-                }
-            }
-        }
-        // drain the rendezvous (arrival markers); the barrier start is the
-        // last participant's clock
-        while queue.pop().is_some() {}
-        let t_all = slots
-            .iter()
-            .map(|&s| self.clock.time(s))
-            .fold(0.0f64, f64::max);
-
-        let param_bytes = (self.engine.param_count() * 4) as u64;
-        let bytes = (selected.len() as u64 - 1) * param_bytes;
-        let factor = self.scenario.min_bandwidth_factor(nodes.iter().copied(), t_all);
-        let t_after =
-            self.barrier_tracked(&slots, self.net.scaled(factor).transfer_time(bytes));
-        self.ledger.record(CommEvent {
-            kind: CommKind::Merge,
-            at_virtual_s: t_after,
-            bytes,
-            participants: selected.len(),
-            at_inner_step: self.total_samples,
-        });
-        self.perform_merge(outer_t, &selected, t_after)
-    }
-
-    /// Per-worker utilization rows from the accumulated time accounting
-    /// (workers enumerate in clock-slot order).
-    fn utilization_table(&self) -> Vec<UtilRecord> {
-        let mut out = Vec::with_capacity(self.busy_s.len());
-        for tr in &self.trainers {
-            for (wi, w) in tr.workers.iter().enumerate() {
-                let s = w.clock_slot;
-                out.push(UtilRecord {
-                    trainer: tr.id,
-                    worker: wi,
-                    node: w.node,
-                    busy_s: self.busy_s[s],
-                    wait_s: self.wait_s[s],
-                    comm_s: self.comm_s[s],
-                    preempted_s: self.preempted_s[s],
-                });
-            }
-        }
-        out
-    }
-
     /// Fill the recorder's per-worker utilization table.
     fn record_utilization(&mut self) {
-        self.recorder.utilization = self.utilization_table();
+        self.recorder.utilization = self.cluster.utilization_table(&self.trainers);
     }
 
     /// Final summary.
     pub fn result(&self) -> RunResult {
-        let utils = self.utilization_table();
+        let utils = self.cluster.utilization_table(&self.trainers);
         let total_idle_s: f64 = utils.iter().map(|u| u.idle_s()).sum();
         let mean_utilization = if utils.is_empty() {
             0.0
@@ -1641,9 +584,10 @@ impl Coordinator {
                 .max()
                 .unwrap_or(0),
             total_samples: self.total_samples,
-            comm_count: self.ledger.count(),
-            comm_bytes: self.ledger.total_bytes(),
-            virtual_time_s: self.clock.max_time(),
+            comm_count: self.comm.ledger.count(),
+            comm_bytes: self.comm.ledger.total_bytes(),
+            wan_comm_bytes: self.comm.ledger.wan_bytes(),
+            virtual_time_s: self.cluster.clock.max_time(),
             trainers_left: self.live_trainers(),
             total_idle_s,
             mean_utilization,
@@ -1669,342 +613,4 @@ pub fn run_experiment(cfg: Config) -> Result<RunResult> {
         coord.recorder.write_eval_csv(&format!("{base}.csv"))?;
     }
     Ok(result)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::presets;
-
-    fn mock_cfg() -> Config {
-        let mut cfg = presets::mock_default();
-        cfg.algo.outer_steps = 8;
-        cfg.algo.inner_steps = 15;
-        cfg.algo.lr_inner = 0.15; // converge fast enough that the norm
-                                  // test's request visibly grows in-test
-        cfg.algo.num_trainers = 4;
-        cfg.algo.workers_per_trainer = 2;
-        cfg.algo.merge.frequency = 2;
-        cfg.run.eval_every = 5;
-        cfg
-    }
-
-    fn run_with(cfg: Config) -> (RunResult, Recorder, usize) {
-        let engine = crate::engine::build_engine(&cfg).unwrap();
-        let mut c = Coordinator::new(cfg, engine).unwrap();
-        let r = c.run().unwrap();
-        let rec = c.recorder.clone();
-        (r, rec, c.live_trainers())
-    }
-
-    #[test]
-    fn adloco_run_descends_and_merges() {
-        let (r, rec, live) = run_with(mock_cfg());
-        assert!(r.best_ppl < rec.evals.first().unwrap().perplexity);
-        assert!(live < 4, "merging should consolidate trainers");
-        assert!(!rec.merges.is_empty());
-        assert!(r.comm_count > 0);
-        assert!(r.virtual_time_s > 0.0);
-    }
-
-    #[test]
-    fn adaptive_batch_grows() {
-        let (_, rec, _) = run_with(mock_cfg());
-        let first_req = rec.steps.first().unwrap().requested_batch;
-        let last_req = rec.steps.last().unwrap().requested_batch;
-        assert!(
-            last_req > first_req,
-            "requested batch should grow: {first_req} -> {last_req}"
-        );
-    }
-
-    #[test]
-    fn diloco_policy_disables_features() {
-        let mut cfg = mock_cfg();
-        cfg.algo.method = Method::DiLoCo;
-        let resolved = resolve_policy(&cfg);
-        assert!(!resolved.algo.batching.adaptive);
-        assert!(!resolved.algo.merge.enabled);
-        assert!(!resolved.algo.switch.enabled);
-
-        let (r, rec, live) = run_with(cfg);
-        assert_eq!(live, 4, "DiLoCo must not merge");
-        assert!(rec.merges.is_empty());
-        // fixed batch: every step at algo.fixed_batch
-        let fixed = resolved.algo.fixed_batch;
-        assert!(rec.steps.iter().all(|s| s.batch == fixed.min(16)));
-        assert!(r.best_ppl.is_finite());
-    }
-
-    #[test]
-    fn localsgd_uses_average_outer() {
-        let mut cfg = mock_cfg();
-        cfg.algo.method = Method::LocalSgd;
-        let resolved = resolve_policy(&cfg);
-        assert_eq!(resolved.algo.outer_opt, crate::config::OuterOptKind::Average);
-        let (r, _, _) = run_with(cfg);
-        assert!(r.best_ppl.is_finite());
-    }
-
-    #[test]
-    fn switch_mode_engages_at_large_requests() {
-        let mut cfg = mock_cfg();
-        // tiny node budget + warm-started request past 2*max_batch forces
-        // SwitchMode from the first plan
-        for n in &mut cfg.cluster.nodes {
-            n.max_batch = 2;
-        }
-        cfg.algo.batching.initial_batch = 10;
-        cfg.algo.batching.max_request = 16; // bound accumulation depth
-        cfg.algo.outer_steps = 8;
-        let (_, rec, _) = run_with(cfg);
-        assert!(
-            rec.steps.iter().any(|s| s.accum_steps > 1),
-            "switch mode never engaged"
-        );
-        // micro batch never exceeds the node budget
-        assert!(rec.steps.iter().all(|s| s.batch <= 2));
-    }
-
-    #[test]
-    fn switch_disabled_never_accumulates() {
-        let mut cfg = mock_cfg();
-        for n in &mut cfg.cluster.nodes {
-            n.max_batch = 2;
-        }
-        cfg.algo.batching.max_request = 16;
-        cfg.algo.switch.enabled = false;
-        let (_, rec, _) = run_with(cfg);
-        assert!(rec.steps.iter().all(|s| s.accum_steps == 1));
-    }
-
-    #[test]
-    fn merge_preserves_param_dimension_and_counts() {
-        let cfg = mock_cfg();
-        let engine = crate::engine::build_engine(&cfg).unwrap();
-        let mut c = Coordinator::new(cfg, engine).unwrap();
-        let p = c.engine.param_count();
-        for t in 1..=6u64 {
-            c.step_outer(t).unwrap();
-        }
-        for tr in c.trainers.iter().filter(|t| t.alive) {
-            assert_eq!(tr.params.len(), p);
-        }
-        // every merge recorded the surviving count correctly
-        for m in &c.recorder.merges {
-            assert!(m.trainers_left >= c.cfg.algo.merge.min_trainers);
-        }
-    }
-
-    #[test]
-    fn min_trainers_floor_respected() {
-        let mut cfg = mock_cfg();
-        cfg.algo.merge.min_trainers = 3;
-        cfg.algo.merge.w = 4;
-        cfg.algo.outer_steps = 10;
-        let (_, _, live) = run_with(cfg);
-        assert!(live >= 3, "live {live} below min_trainers floor");
-    }
-
-    #[test]
-    fn comm_ledger_has_outer_syncs() {
-        let cfg = mock_cfg(); // workers_per_trainer = 2 -> real syncs
-        let engine = crate::engine::build_engine(&cfg).unwrap();
-        let mut c = Coordinator::new(cfg, engine).unwrap();
-        c.run().unwrap();
-        assert!(c.ledger().count_kind(CommKind::OuterSync) > 0);
-    }
-
-    #[test]
-    fn deterministic_runs() {
-        let (r1, rec1, _) = run_with(mock_cfg());
-        let (r2, rec2, _) = run_with(mock_cfg());
-        assert_eq!(r1.comm_count, r2.comm_count);
-        assert_eq!(r1.total_samples, r2.total_samples);
-        assert_eq!(rec1.evals.len(), rec2.evals.len());
-        for (a, b) in rec1.evals.iter().zip(rec2.evals.iter()) {
-            assert!((a.perplexity - b.perplexity).abs() < 1e-9);
-        }
-    }
-
-    #[test]
-    fn random_merge_policy_runs_and_merges() {
-        let mut cfg = mock_cfg();
-        cfg.algo.merge.policy = crate::config::MergeSelect::Random;
-        let (r, rec, live) = run_with(cfg);
-        assert!(r.best_ppl.is_finite());
-        assert!(live < 4, "random policy must still merge");
-        assert!(!rec.merges.is_empty());
-    }
-
-    #[test]
-    fn target_ppl_stops_early() {
-        let mut cfg = mock_cfg();
-        cfg.run.target_ppl = 1e14; // above the e^30 perplexity clamp => trivially reached
-        let (r, _, _) = run_with(cfg);
-        assert!(r.time_to_target.is_some());
-        assert!(r.total_inner_steps <= 15, "should stop within first outer step");
-    }
-
-    #[test]
-    fn virtual_time_monotone_in_steps() {
-        let (_, rec, _) = run_with(mock_cfg());
-        // per (trainer, worker) stream, virtual time must be nondecreasing
-        use std::collections::HashMap;
-        let mut last: HashMap<(usize, usize), f64> = HashMap::new();
-        for s in &rec.steps {
-            let key = (s.trainer, s.worker);
-            if let Some(prev) = last.get(&key) {
-                assert!(s.virtual_time_s >= *prev);
-            }
-            last.insert(key, s.virtual_time_s);
-        }
-    }
-
-    #[test]
-    fn event_scheduler_matches_lockstep_exactly() {
-        // The regression anchor of the event-driven refactor: on a static
-        // cluster the two schedulers must produce bit-identical ledgers,
-        // records and summaries (see also tests/event_scheduler.rs for
-        // the config matrix).
-        let mut lock_cfg = mock_cfg();
-        lock_cfg.run.scheduler = crate::config::SchedulerKind::Lockstep;
-        let mut ev_cfg = mock_cfg();
-        ev_cfg.run.scheduler = crate::config::SchedulerKind::Event;
-
-        let run = |cfg: Config| {
-            let engine = crate::engine::build_engine(&cfg).unwrap();
-            let mut c = Coordinator::new(cfg, engine).unwrap();
-            let r = c.run().unwrap();
-            (r, c.recorder.clone(), c.ledger.clone())
-        };
-        let (ra, reca, leda) = run(lock_cfg);
-        let (rb, recb, ledb) = run(ev_cfg);
-
-        assert_eq!(leda.count(), ledb.count(), "ledger event count");
-        for (a, b) in leda.events.iter().zip(ledb.events.iter()) {
-            assert_eq!(a.kind, b.kind);
-            assert_eq!(a.bytes, b.bytes);
-            assert_eq!(a.participants, b.participants);
-            assert_eq!(a.at_inner_step, b.at_inner_step);
-            assert_eq!(
-                a.at_virtual_s.to_bits(),
-                b.at_virtual_s.to_bits(),
-                "ledger timestamps must be bit-identical"
-            );
-        }
-        assert_eq!(ra.total_samples, rb.total_samples);
-        assert_eq!(ra.total_inner_steps, rb.total_inner_steps);
-        assert_eq!(ra.trainers_left, rb.trainers_left);
-        assert_eq!(ra.best_ppl.to_bits(), rb.best_ppl.to_bits());
-        assert_eq!(ra.final_ppl.to_bits(), rb.final_ppl.to_bits());
-        assert_eq!(ra.virtual_time_s.to_bits(), rb.virtual_time_s.to_bits());
-        assert_eq!(reca.steps.len(), recb.steps.len());
-        for (a, b) in reca.steps.iter().zip(recb.steps.iter()) {
-            assert_eq!((a.global_step, a.trainer, a.worker), (b.global_step, b.trainer, b.worker));
-            assert_eq!(a.requested_batch, b.requested_batch);
-            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
-            assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits());
-        }
-        assert_eq!(reca.evals.len(), recb.evals.len());
-        for (a, b) in reca.evals.iter().zip(recb.evals.iter()) {
-            assert_eq!(a.perplexity.to_bits(), b.perplexity.to_bits());
-            assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits());
-        }
-    }
-
-    #[test]
-    fn parallel_threads_match_serial_exactly() {
-        // The parallel runtime's core invariant (DESIGN.md §6), in-module
-        // smoke form; tests/determinism_parallel.rs holds the full suite.
-        let mk = |threads: usize| {
-            let mut cfg = mock_cfg();
-            cfg.run.scheduler = crate::config::SchedulerKind::Event;
-            cfg.run.threads = threads;
-            cfg
-        };
-        let run = |cfg: Config| {
-            let engine = crate::engine::build_engine(&cfg).unwrap();
-            let mut c = Coordinator::new(cfg, engine).unwrap();
-            let r = c.run().unwrap();
-            (r, c.recorder.clone(), c.ledger.clone())
-        };
-        let (ra, reca, leda) = run(mk(1));
-        let (rb, recb, ledb) = run(mk(4));
-        assert_eq!(ra.best_ppl.to_bits(), rb.best_ppl.to_bits());
-        assert_eq!(ra.virtual_time_s.to_bits(), rb.virtual_time_s.to_bits());
-        assert_eq!(ra.total_idle_s.to_bits(), rb.total_idle_s.to_bits());
-        assert_eq!(ra.total_samples, rb.total_samples);
-        assert_eq!(leda.count(), ledb.count());
-        for (a, b) in leda.events.iter().zip(ledb.events.iter()) {
-            assert_eq!(a.at_virtual_s.to_bits(), b.at_virtual_s.to_bits());
-        }
-        assert_eq!(reca.steps.len(), recb.steps.len());
-        for (a, b) in reca.steps.iter().zip(recb.steps.iter()) {
-            assert_eq!((a.global_step, a.trainer, a.worker), (b.global_step, b.trainer, b.worker));
-            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
-            assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits());
-        }
-        assert_eq!(reca.evals.len(), recb.evals.len());
-        for (a, b) in reca.evals.iter().zip(recb.evals.iter()) {
-            assert_eq!(a.perplexity.to_bits(), b.perplexity.to_bits());
-        }
-        assert_eq!(rb.threads, 4);
-    }
-
-    #[test]
-    fn utilization_is_recorded_and_sane() {
-        let (r, rec, _) = run_with(mock_cfg());
-        assert_eq!(rec.utilization.len(), 8, "4 trainers x 2 workers");
-        assert!(rec.utilization.iter().all(|u| u.busy_s > 0.0));
-        assert!(r.mean_utilization > 0.0 && r.mean_utilization <= 1.0);
-        assert!(r.total_idle_s >= 0.0);
-    }
-
-    #[test]
-    fn straggler_scenario_runs_and_stretches_time() {
-        let mk = |prob: f64| {
-            let mut cfg = mock_cfg();
-            cfg.run.scheduler = crate::config::SchedulerKind::Event;
-            cfg.cluster.scenario.straggler_prob = prob;
-            cfg.cluster.scenario.straggler_min = 2.0;
-            cfg.cluster.scenario.straggler_max = 3.0;
-            cfg
-        };
-        let (r0, _, _) = run_with(mk(0.0));
-        let (r1, _, _) = run_with(mk(0.5));
-        assert!(r1.best_ppl.is_finite());
-        assert!(
-            r1.virtual_time_s > r0.virtual_time_s,
-            "stragglers must stretch virtual time: {} vs {}",
-            r1.virtual_time_s,
-            r0.virtual_time_s
-        );
-        assert_eq!(
-            r0.total_samples, r1.total_samples,
-            "stragglers change time, not the sample schedule"
-        );
-    }
-
-    #[test]
-    fn churn_scenario_preempts_and_rejoins() {
-        let mut cfg = mock_cfg();
-        cfg.algo.merge.enabled = false; // isolate churn effects
-        cfg.run.scheduler = crate::config::SchedulerKind::Event;
-        // node 1 is down for a mid-run stretch of virtual time
-        cfg.cluster.scenario.churn.push(crate::config::ChurnWindow {
-            node: 1,
-            from_s: 0.3,
-            until_s: 1.2,
-        });
-        let engine = crate::engine::build_engine(&cfg).unwrap();
-        let mut c = Coordinator::new(cfg, engine).unwrap();
-        let r = c.run().unwrap();
-        assert!(r.best_ppl.is_finite());
-        c.record_utilization();
-        let preempted: f64 = c.recorder.utilization.iter().map(|u| u.preempted_s).sum();
-        assert!(preempted > 0.0, "preemption must be accounted");
-        // all workers are active again at the end (window long past)
-        assert!(c.trainers.iter().flat_map(|t| t.workers.iter()).all(|w| w.active));
-    }
 }

@@ -1,0 +1,364 @@
+//! In-module coordinator suite: run-level behaviour of every method and
+//! ablation arm, scheduler equivalence and parallel-runtime smoke checks
+//! (the full suites live in `tests/`).
+
+use super::*;
+use crate::comm::CommKind;
+use crate::config::presets;
+
+fn mock_cfg() -> Config {
+    let mut cfg = presets::mock_default();
+    cfg.algo.outer_steps = 8;
+    cfg.algo.inner_steps = 15;
+    cfg.algo.lr_inner = 0.15; // converge fast enough that the norm
+                              // test's request visibly grows in-test
+    cfg.algo.num_trainers = 4;
+    cfg.algo.workers_per_trainer = 2;
+    cfg.algo.merge.frequency = 2;
+    cfg.run.eval_every = 5;
+    cfg
+}
+
+fn run_with(cfg: Config) -> (RunResult, Recorder, usize) {
+    let engine = crate::engine::build_engine(&cfg).unwrap();
+    let mut c = Coordinator::new(cfg, engine).unwrap();
+    let r = c.run().unwrap();
+    let rec = c.recorder.clone();
+    (r, rec, c.live_trainers())
+}
+
+#[test]
+fn adloco_run_descends_and_merges() {
+    let (r, rec, live) = run_with(mock_cfg());
+    assert!(r.best_ppl < rec.evals.first().unwrap().perplexity);
+    assert!(live < 4, "merging should consolidate trainers");
+    assert!(!rec.merges.is_empty());
+    assert!(r.comm_count > 0);
+    assert!(r.virtual_time_s > 0.0);
+}
+
+#[test]
+fn adaptive_batch_grows() {
+    let (_, rec, _) = run_with(mock_cfg());
+    let first_req = rec.steps.first().unwrap().requested_batch;
+    let last_req = rec.steps.last().unwrap().requested_batch;
+    assert!(
+        last_req > first_req,
+        "requested batch should grow: {first_req} -> {last_req}"
+    );
+}
+
+#[test]
+fn diloco_policy_disables_features() {
+    let mut cfg = mock_cfg();
+    cfg.algo.method = Method::DiLoCo;
+    let resolved = resolve_policy(&cfg);
+    assert!(!resolved.algo.batching.adaptive);
+    assert!(!resolved.algo.merge.enabled);
+    assert!(!resolved.algo.switch.enabled);
+
+    let (r, rec, live) = run_with(cfg);
+    assert_eq!(live, 4, "DiLoCo must not merge");
+    assert!(rec.merges.is_empty());
+    // fixed batch: every step at algo.fixed_batch
+    let fixed = resolved.algo.fixed_batch;
+    assert!(rec.steps.iter().all(|s| s.batch == fixed.min(16)));
+    assert!(r.best_ppl.is_finite());
+}
+
+#[test]
+fn localsgd_uses_average_outer() {
+    let mut cfg = mock_cfg();
+    cfg.algo.method = Method::LocalSgd;
+    let resolved = resolve_policy(&cfg);
+    assert_eq!(resolved.algo.outer_opt, crate::config::OuterOptKind::Average);
+    let (r, _, _) = run_with(cfg);
+    assert!(r.best_ppl.is_finite());
+}
+
+#[test]
+fn switch_mode_engages_at_large_requests() {
+    let mut cfg = mock_cfg();
+    // tiny node budget + warm-started request past 2*max_batch forces
+    // SwitchMode from the first plan
+    for n in &mut cfg.cluster.nodes {
+        n.max_batch = 2;
+    }
+    cfg.algo.batching.initial_batch = 10;
+    cfg.algo.batching.max_request = 16; // bound accumulation depth
+    cfg.algo.outer_steps = 8;
+    let (_, rec, _) = run_with(cfg);
+    assert!(
+        rec.steps.iter().any(|s| s.accum_steps > 1),
+        "switch mode never engaged"
+    );
+    // micro batch never exceeds the node budget
+    assert!(rec.steps.iter().all(|s| s.batch <= 2));
+}
+
+#[test]
+fn switch_disabled_never_accumulates() {
+    let mut cfg = mock_cfg();
+    for n in &mut cfg.cluster.nodes {
+        n.max_batch = 2;
+    }
+    cfg.algo.batching.max_request = 16;
+    cfg.algo.switch.enabled = false;
+    let (_, rec, _) = run_with(cfg);
+    assert!(rec.steps.iter().all(|s| s.accum_steps == 1));
+}
+
+#[test]
+fn merge_preserves_param_dimension_and_counts() {
+    let cfg = mock_cfg();
+    let engine = crate::engine::build_engine(&cfg).unwrap();
+    let mut c = Coordinator::new(cfg, engine).unwrap();
+    let p = c.engine.param_count();
+    for t in 1..=6u64 {
+        c.step_outer(t).unwrap();
+    }
+    for tr in c.trainers.iter().filter(|t| t.alive) {
+        assert_eq!(tr.params.len(), p);
+    }
+    // every merge recorded the surviving count correctly
+    for m in &c.recorder.merges {
+        assert!(m.trainers_left >= c.cfg.algo.merge.min_trainers);
+    }
+}
+
+#[test]
+fn min_trainers_floor_respected() {
+    let mut cfg = mock_cfg();
+    cfg.algo.merge.min_trainers = 3;
+    cfg.algo.merge.w = 4;
+    cfg.algo.outer_steps = 10;
+    let (_, _, live) = run_with(cfg);
+    assert!(live >= 3, "live {live} below min_trainers floor");
+}
+
+#[test]
+fn comm_ledger_has_outer_syncs() {
+    let cfg = mock_cfg(); // workers_per_trainer = 2 -> real syncs
+    let engine = crate::engine::build_engine(&cfg).unwrap();
+    let mut c = Coordinator::new(cfg, engine).unwrap();
+    c.run().unwrap();
+    assert!(c.ledger().count_kind(CommKind::OuterSync) > 0);
+    // flat cluster: the single network is the WAN tier, so every byte
+    // counts as WAN traffic (DESIGN.md §7)
+    assert_eq!(c.ledger().wan_bytes(), c.ledger().total_bytes());
+}
+
+#[test]
+fn deterministic_runs() {
+    let (r1, rec1, _) = run_with(mock_cfg());
+    let (r2, rec2, _) = run_with(mock_cfg());
+    assert_eq!(r1.comm_count, r2.comm_count);
+    assert_eq!(r1.total_samples, r2.total_samples);
+    assert_eq!(rec1.evals.len(), rec2.evals.len());
+    for (a, b) in rec1.evals.iter().zip(rec2.evals.iter()) {
+        assert!((a.perplexity - b.perplexity).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn random_merge_policy_runs_and_merges() {
+    let mut cfg = mock_cfg();
+    cfg.algo.merge.policy = crate::config::MergeSelect::Random;
+    let (r, rec, live) = run_with(cfg);
+    assert!(r.best_ppl.is_finite());
+    assert!(live < 4, "random policy must still merge");
+    assert!(!rec.merges.is_empty());
+}
+
+#[test]
+fn target_ppl_stops_early() {
+    let mut cfg = mock_cfg();
+    cfg.run.target_ppl = 1e14; // above the e^30 perplexity clamp => trivially reached
+    let (r, _, _) = run_with(cfg);
+    assert!(r.time_to_target.is_some());
+    assert!(r.total_inner_steps <= 15, "should stop within first outer step");
+}
+
+#[test]
+fn virtual_time_monotone_in_steps() {
+    let (_, rec, _) = run_with(mock_cfg());
+    // per (trainer, worker) stream, virtual time must be nondecreasing
+    use std::collections::HashMap;
+    let mut last: HashMap<(usize, usize), f64> = HashMap::new();
+    for s in &rec.steps {
+        let key = (s.trainer, s.worker);
+        if let Some(prev) = last.get(&key) {
+            assert!(s.virtual_time_s >= *prev);
+        }
+        last.insert(key, s.virtual_time_s);
+    }
+}
+
+#[test]
+fn event_scheduler_matches_lockstep_exactly() {
+    // The regression anchor of the event-driven refactor: on a static
+    // cluster the two schedulers must produce bit-identical ledgers,
+    // records and summaries (see also tests/event_scheduler.rs for
+    // the config matrix).
+    let mut lock_cfg = mock_cfg();
+    lock_cfg.run.scheduler = crate::config::SchedulerKind::Lockstep;
+    let mut ev_cfg = mock_cfg();
+    ev_cfg.run.scheduler = crate::config::SchedulerKind::Event;
+
+    let run = |cfg: Config| {
+        let engine = crate::engine::build_engine(&cfg).unwrap();
+        let mut c = Coordinator::new(cfg, engine).unwrap();
+        let r = c.run().unwrap();
+        (r, c.recorder.clone(), c.ledger().clone())
+    };
+    let (ra, reca, leda) = run(lock_cfg);
+    let (rb, recb, ledb) = run(ev_cfg);
+
+    assert_eq!(leda.count(), ledb.count(), "ledger event count");
+    for (a, b) in leda.events.iter().zip(ledb.events.iter()) {
+        assert_eq!(a.kind, b.kind);
+        assert_eq!(a.scope, b.scope);
+        assert_eq!(a.bytes, b.bytes);
+        assert_eq!(a.participants, b.participants);
+        assert_eq!(a.at_inner_step, b.at_inner_step);
+        assert_eq!(
+            a.at_virtual_s.to_bits(),
+            b.at_virtual_s.to_bits(),
+            "ledger timestamps must be bit-identical"
+        );
+    }
+    assert_eq!(ra.total_samples, rb.total_samples);
+    assert_eq!(ra.total_inner_steps, rb.total_inner_steps);
+    assert_eq!(ra.trainers_left, rb.trainers_left);
+    assert_eq!(ra.best_ppl.to_bits(), rb.best_ppl.to_bits());
+    assert_eq!(ra.final_ppl.to_bits(), rb.final_ppl.to_bits());
+    assert_eq!(ra.virtual_time_s.to_bits(), rb.virtual_time_s.to_bits());
+    assert_eq!(reca.steps.len(), recb.steps.len());
+    for (a, b) in reca.steps.iter().zip(recb.steps.iter()) {
+        assert_eq!((a.global_step, a.trainer, a.worker), (b.global_step, b.trainer, b.worker));
+        assert_eq!(a.requested_batch, b.requested_batch);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits());
+    }
+    assert_eq!(reca.evals.len(), recb.evals.len());
+    for (a, b) in reca.evals.iter().zip(recb.evals.iter()) {
+        assert_eq!(a.perplexity.to_bits(), b.perplexity.to_bits());
+        assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits());
+    }
+}
+
+#[test]
+fn parallel_threads_match_serial_exactly() {
+    // The parallel runtime's core invariant (DESIGN.md §6), in-module
+    // smoke form; tests/determinism_parallel.rs holds the full suite.
+    let mk = |threads: usize| {
+        let mut cfg = mock_cfg();
+        cfg.run.scheduler = crate::config::SchedulerKind::Event;
+        cfg.run.threads = threads;
+        cfg
+    };
+    let run = |cfg: Config| {
+        let engine = crate::engine::build_engine(&cfg).unwrap();
+        let mut c = Coordinator::new(cfg, engine).unwrap();
+        let r = c.run().unwrap();
+        (r, c.recorder.clone(), c.ledger().clone())
+    };
+    let (ra, reca, leda) = run(mk(1));
+    let (rb, recb, ledb) = run(mk(4));
+    assert_eq!(ra.best_ppl.to_bits(), rb.best_ppl.to_bits());
+    assert_eq!(ra.virtual_time_s.to_bits(), rb.virtual_time_s.to_bits());
+    assert_eq!(ra.total_idle_s.to_bits(), rb.total_idle_s.to_bits());
+    assert_eq!(ra.total_samples, rb.total_samples);
+    assert_eq!(leda.count(), ledb.count());
+    for (a, b) in leda.events.iter().zip(ledb.events.iter()) {
+        assert_eq!(a.at_virtual_s.to_bits(), b.at_virtual_s.to_bits());
+    }
+    assert_eq!(reca.steps.len(), recb.steps.len());
+    for (a, b) in reca.steps.iter().zip(recb.steps.iter()) {
+        assert_eq!((a.global_step, a.trainer, a.worker), (b.global_step, b.trainer, b.worker));
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits());
+    }
+    assert_eq!(reca.evals.len(), recb.evals.len());
+    for (a, b) in reca.evals.iter().zip(recb.evals.iter()) {
+        assert_eq!(a.perplexity.to_bits(), b.perplexity.to_bits());
+    }
+    assert_eq!(rb.threads, 4);
+}
+
+#[test]
+fn utilization_is_recorded_and_sane() {
+    let (r, rec, _) = run_with(mock_cfg());
+    assert_eq!(rec.utilization.len(), 8, "4 trainers x 2 workers");
+    assert!(rec.utilization.iter().all(|u| u.busy_s > 0.0));
+    assert!(r.mean_utilization > 0.0 && r.mean_utilization <= 1.0);
+    assert!(r.total_idle_s >= 0.0);
+}
+
+#[test]
+fn straggler_scenario_runs_and_stretches_time() {
+    let mk = |prob: f64| {
+        let mut cfg = mock_cfg();
+        cfg.run.scheduler = crate::config::SchedulerKind::Event;
+        cfg.cluster.scenario.straggler_prob = prob;
+        cfg.cluster.scenario.straggler_min = 2.0;
+        cfg.cluster.scenario.straggler_max = 3.0;
+        cfg
+    };
+    let (r0, _, _) = run_with(mk(0.0));
+    let (r1, _, _) = run_with(mk(0.5));
+    assert!(r1.best_ppl.is_finite());
+    assert!(
+        r1.virtual_time_s > r0.virtual_time_s,
+        "stragglers must stretch virtual time: {} vs {}",
+        r1.virtual_time_s,
+        r0.virtual_time_s
+    );
+    assert_eq!(
+        r0.total_samples, r1.total_samples,
+        "stragglers change time, not the sample schedule"
+    );
+}
+
+#[test]
+fn churn_scenario_preempts_and_rejoins() {
+    let mut cfg = mock_cfg();
+    cfg.algo.merge.enabled = false; // isolate churn effects
+    cfg.run.scheduler = crate::config::SchedulerKind::Event;
+    // node 1 is down for a mid-run stretch of virtual time
+    cfg.cluster.scenario.churn.push(crate::config::ChurnWindow {
+        node: 1,
+        from_s: 0.3,
+        until_s: 1.2,
+    });
+    let engine = crate::engine::build_engine(&cfg).unwrap();
+    let mut c = Coordinator::new(cfg, engine).unwrap();
+    let r = c.run().unwrap();
+    assert!(r.best_ppl.is_finite());
+    c.record_utilization();
+    let preempted: f64 = c.recorder.utilization.iter().map(|u| u.preempted_s).sum();
+    assert!(preempted > 0.0, "preemption must be accounted");
+    // all workers are active again at the end (window long past)
+    assert!(c.trainers.iter().flat_map(|t| t.workers.iter()).all(|w| w.active));
+}
+
+#[test]
+fn hierarchical_topology_moves_bytes_off_the_wan() {
+    // the tentpole invariant in-module: same schedule, same total
+    // bytes formulas, strictly less WAN traffic under the two-level
+    // topology (full suite: tests/topology.rs)
+    let mut flat = presets::hierarchical_mit();
+    flat.cluster.topology = crate::config::TopologyKind::Flat;
+    flat.algo.outer_steps = 4;
+    let mut hier = presets::hierarchical_mit();
+    hier.algo.outer_steps = 4;
+    let (rf, _, _) = run_with(flat);
+    let (rh, _, _) = run_with(hier);
+    assert_eq!(rf.wan_comm_bytes, rf.comm_bytes, "flat: every byte is WAN");
+    assert!(
+        rh.wan_comm_bytes < rf.wan_comm_bytes,
+        "hierarchical must shrink WAN bytes: {} vs {}",
+        rh.wan_comm_bytes,
+        rf.wan_comm_bytes
+    );
+}

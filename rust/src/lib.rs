@@ -21,15 +21,23 @@
 //!  ┌─────▼──────────────────────────────────────────────────────────┐
 //!  │ coordinator  — Algorithm 3 run loop (lockstep | event-driven)  │
 //!  │   batching   merge   outer   schedule   trainer                │
-//!  └─────┬──────────────────────────────┬───────────────────────────┘
-//!        │                              │
-//!  ┌─────▼───────────────────┐   ┌──────▼──────────────────────────┐
-//!  │ simulator               │   │ engine: TrainEngine             │
-//!  │   VirtualClock  ledger  │   │   MockEngine (pure Rust)        │
-//!  │   EventQueue  Scenario  │   │   XlaEngine (PJRT, `xla` feat.) │
-//!  └─────────────────────────┘   └─────┬───────────────────────────┘
-//!        data (synthetic Zipf corpus)  │  runtime/artifacts (AOT HLO)
+//!  └──┬─────────────┬────────────────────┬──────────────────────────┘
+//!     │             │                    │
+//!  ┌──▼──────────┐ ┌▼─────────────────┐ ┌▼────────────────────────┐
+//!  │ cluster     │ │ comm             │ │ engine: TrainEngine     │
+//!  │  clocks     │ │  NetworkModel x2 │ │  MockEngine (pure Rust) │
+//!  │  NodeModel  │ │  collectives     │ │  XlaEngine (PJRT,       │
+//!  │  topology   │ │  CommLedger      │ │   `xla` feature)        │
+//!  │  churn      │ └──────────────────┘ └──┬──────────────────────┘
+//!  └──┬──────────┘   simulator: EventQueue │ runtime/artifacts
+//!     └─ Scenario ──── (discrete events)   │   (AOT HLO)
+//!        data (synthetic Zipf corpus) ─────┘
 //! ```
+//!
+//! The `cluster`/`comm` split (DESIGN.md §7) also carries the
+//! hierarchical two-level topology: node groups with fast intra links,
+//! a slow WAN between group leaders, pluggable collective cost models,
+//! and WAN-vs-intra byte accounting in the ledger.
 //!
 //! # Quickstart
 //!
@@ -94,6 +102,8 @@ pub mod batching;
 pub mod benchkit;
 pub mod checkpoint;
 pub mod cli;
+pub mod cluster;
+pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;

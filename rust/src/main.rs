@@ -10,6 +10,7 @@
 //! Examples:
 //!   adloco train --preset quick
 //!   adloco train --preset hetero_dynamic --threads 4
+//!   adloco train --preset hierarchical_mit --topology flat   # WAN-bytes baseline
 //!   adloco train --preset xla_tiny --set algo.outer_steps=4 --out runs
 //!   adloco compare --preset mock_default --methods adloco,diloco,localsgd
 //!   adloco sweep --preset quick --param algo.batching.eta \
@@ -94,6 +95,9 @@ fn load_config(args: &cli::Args) -> Result<Config> {
     if let Some(n) = args.opt_parse::<usize>("threads")? {
         cfg.run.threads = n;
     }
+    if let Some(t) = args.opt("topology") {
+        cfg.cluster.topology = adloco::config::TopologyKind::parse(t)?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -104,7 +108,10 @@ fn print_result(r: &RunResult) {
     println!("  final ppl       : {:.4}", r.final_ppl);
     println!("  inner steps     : {}", r.total_inner_steps);
     println!("  samples         : {}", r.total_samples);
-    println!("  communications  : {} ({} bytes)", r.comm_count, r.comm_bytes);
+    println!(
+        "  communications  : {} ({} bytes, {} on the WAN)",
+        r.comm_count, r.comm_bytes, r.wan_comm_bytes
+    );
     println!("  virtual time    : {:.3}s", r.virtual_time_s);
     println!("  trainers left   : {}", r.trainers_left);
     println!(

@@ -1,6 +1,6 @@
-//! Simulated heterogeneous cluster: compute-time model, network model,
-//! per-worker virtual clocks, the discrete-event queue, dynamic-workload
-//! scenarios, and the communication ledger.
+//! Simulated heterogeneous cluster: the discrete-event queue and the
+//! dynamic-workload scenarios (plus re-exports of the cluster/comm
+//! layers carved out of this module and the coordinator — DESIGN.md §7).
 //!
 //! The paper simulated its 4-GPU cluster by running trainer threads on one
 //! A100 and measuring wall-clock. We replace thread interleaving with a
@@ -15,6 +15,12 @@
 //! [`events::EventQueue`], which consumes `StepDone` / `SyncArrive` /
 //! `MergeArrive` events in virtual-time order and is the substrate for
 //! the [`scenario`] dynamic workloads (stragglers, churn, link shifts).
+//!
+//! Layering note: the clock/node/placement types now live in
+//! [`crate::cluster`] and the network/ledger/collective types in
+//! [`crate::comm`]; both are re-exported here so historical imports
+//! (`adloco::simulator::VirtualClock`, `adloco::simulator::CommLedger`,
+//! …) keep resolving.
 
 pub mod events;
 pub mod scenario;
@@ -22,295 +28,5 @@ pub mod scenario;
 pub use events::{EventQueue, SimEvent};
 pub use scenario::Scenario;
 
-use crate::config::ClusterConfig;
-
-/// Compute-rate model of one simulated node (GPU).
-#[derive(Clone, Debug)]
-pub struct NodeModel {
-    /// Memory-limited max batch (the paper's `max_batch`).
-    pub max_batch: usize,
-    /// Relative speed multiplier (1.0 = reference hardware).
-    pub speed: f64,
-    /// t_step = (fixed + per_token * batch * seq) / speed
-    pub step_fixed_s: f64,
-    /// Per-token term of the step-time model.
-    pub step_per_token_s: f64,
-}
-
-impl NodeModel {
-    /// Virtual seconds to execute one optimizer step at `batch` x `seq`.
-    pub fn step_time(&self, batch: usize, seq: usize) -> f64 {
-        (self.step_fixed_s + self.step_per_token_s * (batch * seq) as f64) / self.speed
-    }
-}
-
-/// Latency + bandwidth network model shared by all links.
-#[derive(Clone, Debug)]
-pub struct NetworkModel {
-    /// Per-transfer latency, seconds.
-    pub latency_s: f64,
-    /// Link bandwidth, bytes/second.
-    pub bandwidth_bps: f64,
-}
-
-impl NetworkModel {
-    /// One point-to-point transfer of `bytes`.
-    pub fn transfer_time(&self, bytes: u64) -> f64 {
-        self.latency_s + bytes as f64 / self.bandwidth_bps
-    }
-
-    /// The same link with its bandwidth scaled by `factor` — how the
-    /// scenario layer's time-varying links enter a sync's cost. A factor
-    /// of exactly 1.0 reproduces `self` bit-for-bit.
-    pub fn scaled(&self, factor: f64) -> NetworkModel {
-        NetworkModel {
-            latency_s: self.latency_s,
-            bandwidth_bps: self.bandwidth_bps * factor,
-        }
-    }
-
-    /// Parameter-averaging round among `m` participants of `bytes` each.
-    /// Modeled as a ring all-reduce: 2(m-1)/m * bytes on the wire per
-    /// node, plus one latency per ring hop.
-    pub fn allreduce_time(&self, bytes: u64, m: usize) -> f64 {
-        if m <= 1 {
-            return 0.0;
-        }
-        let hops = 2 * (m - 1);
-        hops as f64 * self.latency_s
-            + (2.0 * (m as f64 - 1.0) / m as f64) * bytes as f64 / self.bandwidth_bps
-    }
-}
-
-/// What a communication event was for (ledger taxonomy).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum CommKind {
-    /// Inner-trainer worker averaging at an outer step (DiLoCo sync).
-    OuterSync,
-    /// Trainer merge (MIT DoMerge parameter movement).
-    Merge,
-}
-
-/// One recorded communication event.
-#[derive(Clone, Debug)]
-pub struct CommEvent {
-    /// What the communication was for.
-    pub kind: CommKind,
-    /// Virtual time the communication completed.
-    pub at_virtual_s: f64,
-    /// Bytes moved.
-    pub bytes: u64,
-    /// Number of participating workers/trainers.
-    pub participants: usize,
-    /// Inner-step index (global, per run) at which it happened.
-    pub at_inner_step: u64,
-}
-
-/// Ledger of all communications — the observable behind Theorem 2's
-/// C(N) and the "communication efficiency" axis of Fig. 1.
-#[derive(Clone, Debug, Default)]
-pub struct CommLedger {
-    /// Every recorded communication, in completion order.
-    pub events: Vec<CommEvent>,
-}
-
-impl CommLedger {
-    /// Append one communication.
-    pub fn record(&mut self, ev: CommEvent) {
-        self.events.push(ev);
-    }
-
-    /// Total recorded communications.
-    pub fn count(&self) -> usize {
-        self.events.len()
-    }
-
-    /// Recorded communications of one kind.
-    pub fn count_kind(&self, kind: CommKind) -> usize {
-        self.events.iter().filter(|e| e.kind == kind).count()
-    }
-
-    /// Total bytes across all recorded communications.
-    pub fn total_bytes(&self) -> u64 {
-        self.events.iter().map(|e| e.bytes).sum()
-    }
-
-    /// Cumulative (inner_step, count) series for C(N) plots.
-    pub fn cumulative_by_step(&self) -> Vec<(u64, usize)> {
-        let mut evs: Vec<&CommEvent> = self.events.iter().collect();
-        evs.sort_by_key(|e| e.at_inner_step);
-        evs.iter()
-            .enumerate()
-            .map(|(i, e)| (e.at_inner_step, i + 1))
-            .collect()
-    }
-}
-
-/// Per-worker virtual clocks plus barrier helpers.
-#[derive(Clone, Debug)]
-pub struct VirtualClock {
-    times: Vec<f64>,
-}
-
-impl VirtualClock {
-    /// All-zero clocks for `workers` slots.
-    pub fn new(workers: usize) -> Self {
-        VirtualClock { times: vec![0.0; workers] }
-    }
-
-    /// Number of clock slots.
-    pub fn len(&self) -> usize {
-        self.times.len()
-    }
-
-    /// True when no slots exist.
-    pub fn is_empty(&self) -> bool {
-        self.times.is_empty()
-    }
-
-    /// Slot `w`'s current virtual time.
-    pub fn time(&self, w: usize) -> f64 {
-        self.times[w]
-    }
-
-    /// Advance slot `w` by `dt >= 0` seconds.
-    pub fn advance(&mut self, w: usize, dt: f64) {
-        debug_assert!(dt >= 0.0);
-        self.times[w] += dt;
-    }
-
-    /// Jump worker `w` forward to absolute time `t` (no-op if already
-    /// past). The event scheduler assigns pop timestamps directly so a
-    /// worker's clock matches the lockstep `+= dt` chain bit-for-bit.
-    pub fn advance_to(&mut self, w: usize, t: f64) {
-        if t > self.times[w] {
-            self.times[w] = t;
-        }
-    }
-
-    /// Barrier across a subset: all members jump to the max member time,
-    /// then advance by `extra` (e.g. the all-reduce transfer time).
-    /// Returns the post-barrier time.
-    pub fn barrier(&mut self, members: &[usize], extra: f64) -> f64 {
-        let t = members
-            .iter()
-            .map(|&w| self.times[w])
-            .fold(0.0_f64, f64::max)
-            + extra;
-        for &w in members {
-            self.times[w] = t;
-        }
-        t
-    }
-
-    /// Global max time (run wall-clock in virtual seconds).
-    pub fn max_time(&self) -> f64 {
-        self.times.iter().copied().fold(0.0, f64::max)
-    }
-
-    /// Drop clocks not in `keep`, preserving order (trainer merges shrink
-    /// the worker set).
-    pub fn retain(&mut self, keep: &[usize]) {
-        self.times = keep.iter().map(|&w| self.times[w]).collect();
-    }
-}
-
-/// Build per-node models from a cluster config.
-pub fn node_models(cfg: &ClusterConfig) -> Vec<NodeModel> {
-    cfg.nodes
-        .iter()
-        .map(|n| NodeModel {
-            max_batch: n.max_batch,
-            speed: n.speed,
-            step_fixed_s: cfg.step_fixed_s,
-            step_per_token_s: cfg.step_per_token_s,
-        })
-        .collect()
-}
-
-/// Round-robin worker->node placement (the paper packs `nodes_per_gpu`
-/// trainer processes per simulated GPU the same way).
-pub fn assign_workers(total_workers: usize, nodes: usize) -> Vec<usize> {
-    (0..total_workers).map(|w| w % nodes).collect()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn step_time_scales_with_batch_and_speed() {
-        let n = NodeModel { max_batch: 8, speed: 2.0, step_fixed_s: 0.01, step_per_token_s: 1e-4 };
-        let t1 = n.step_time(1, 64);
-        let t8 = n.step_time(8, 64);
-        assert!(t8 > t1);
-        assert!((t1 - (0.01 + 64.0 * 1e-4) / 2.0).abs() < 1e-12);
-    }
-
-    #[test]
-    fn allreduce_time_properties() {
-        let net = NetworkModel { latency_s: 1e-3, bandwidth_bps: 1e9 };
-        assert_eq!(net.allreduce_time(1_000_000, 1), 0.0);
-        let t2 = net.allreduce_time(1_000_000, 2);
-        let t4 = net.allreduce_time(1_000_000, 4);
-        assert!(t2 > 0.0);
-        assert!(t4 > t2, "more participants -> more ring hops");
-        // bandwidth term approaches 2*bytes/bw from below
-        let t_big = net.allreduce_time(1_000_000_000, 4);
-        assert!(t_big < 2.0 * 1e9 as f64 / 1e9 + 1.0);
-    }
-
-    #[test]
-    fn barrier_aligns_members() {
-        let mut c = VirtualClock::new(4);
-        c.advance(0, 1.0);
-        c.advance(1, 3.0);
-        c.advance(2, 2.0);
-        let t = c.barrier(&[0, 1, 2], 0.5);
-        assert!((t - 3.5).abs() < 1e-12);
-        for w in 0..3 {
-            assert!((c.time(w) - 3.5).abs() < 1e-12);
-        }
-        assert_eq!(c.time(3), 0.0, "non-member unaffected");
-    }
-
-    #[test]
-    fn retain_preserves_selected() {
-        let mut c = VirtualClock::new(3);
-        c.advance(0, 1.0);
-        c.advance(1, 2.0);
-        c.advance(2, 3.0);
-        c.retain(&[0, 2]);
-        assert_eq!(c.len(), 2);
-        assert_eq!(c.time(0), 1.0);
-        assert_eq!(c.time(1), 3.0);
-    }
-
-    #[test]
-    fn ledger_accounting() {
-        let mut l = CommLedger::default();
-        l.record(CommEvent {
-            kind: CommKind::OuterSync,
-            at_virtual_s: 1.0,
-            bytes: 100,
-            participants: 2,
-            at_inner_step: 10,
-        });
-        l.record(CommEvent {
-            kind: CommKind::Merge,
-            at_virtual_s: 2.0,
-            bytes: 50,
-            participants: 3,
-            at_inner_step: 20,
-        });
-        assert_eq!(l.count(), 2);
-        assert_eq!(l.count_kind(CommKind::OuterSync), 1);
-        assert_eq!(l.total_bytes(), 150);
-        assert_eq!(l.cumulative_by_step(), vec![(10, 1), (20, 2)]);
-    }
-
-    #[test]
-    fn assignment_round_robin() {
-        assert_eq!(assign_workers(5, 2), vec![0, 1, 0, 1, 0]);
-    }
-}
+pub use crate::cluster::{assign_workers, node_models, NodeModel, VirtualClock};
+pub use crate::comm::{CommEvent, CommKind, CommLedger, CommScope, NetworkModel};

@@ -1,5 +1,8 @@
 //! Theorem 1/2 bound evaluators (paper §5 + Appendix A.1), used by the
-//! theory benches to overlay the analytic curves on measured series.
+//! theory benches to overlay the analytic curves on measured series,
+//! plus the closed-form communication-volume estimates for the
+//! flat/hierarchical topologies (DESIGN.md §7), compared against the
+//! measured `CommLedger` in `tests/topology.rs`.
 //!
 //! Theorem 1 (batch growth):
 //!   E[b_k] = Ω( k σ² / (η² L (HM + η²) (F(x₀) − F(x*))) )
@@ -76,6 +79,176 @@ pub fn fit_scale(shape: &[f64], measured: &[f64]) -> (f64, f64) {
     (scale, r2)
 }
 
+// ---------------------------------------------------------------------------
+// Communication-volume estimates (DESIGN.md §7)
+//
+// Deterministic replays of the comm layer's closed forms: given the
+// topology shape of every synchronization and the measured merge
+// timeline, predict exactly what the ledger records — event counts,
+// total bytes, and the WAN/intra split. On a static cluster the
+// prediction is exact (asserted in tests/topology.rs).
+// ---------------------------------------------------------------------------
+
+/// Byte split of a predicted communication between network tiers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommBytes {
+    /// Bytes on fast intra-group links (0 for flat).
+    pub intra: u64,
+    /// Bytes on the WAN tier (all bytes, for flat).
+    pub wan: u64,
+}
+
+impl CommBytes {
+    /// Total bytes across both tiers.
+    pub fn total(&self) -> u64 {
+        self.intra + self.wan
+    }
+}
+
+/// Topology shape of one synchronization's participant set.
+#[derive(Clone, Debug)]
+pub enum TopoShape {
+    /// Flat cluster: all `m` participants on the one shared network
+    /// (WAN-scoped in the ledger).
+    Flat {
+        /// Participant count.
+        m: usize,
+    },
+    /// Hierarchical cluster: per-group participant counts (one entry
+    /// per group that has members; the entry count is G, the number
+    /// of group leaders crossing the WAN).
+    Hier {
+        /// Participants per involved group.
+        parts: Vec<usize>,
+    },
+}
+
+/// The shared event walk of both closed forms: one event per group
+/// with ≥ 2 members charging `(gᵢ−1)·wire_bytes` intra, plus one
+/// leader event charging `(G−1)·wire_bytes` WAN when G ≥ 2 (flat =
+/// one WAN clique). `wire_bytes` is the ledger charge per non-leader
+/// edge: `2·P` for all-reduce syncs, `P` for one-way merge gathers.
+fn shape_comm(shape: &TopoShape, wire_bytes: u64) -> (usize, CommBytes) {
+    match shape {
+        TopoShape::Flat { m } => {
+            if *m <= 1 {
+                return (0, CommBytes::default());
+            }
+            (1, CommBytes { intra: 0, wan: (*m as u64 - 1) * wire_bytes })
+        }
+        TopoShape::Hier { parts } => {
+            let mut events = 0usize;
+            let mut intra = 0u64;
+            for &g in parts {
+                if g > 1 {
+                    events += 1;
+                    intra += (g as u64 - 1) * wire_bytes;
+                }
+            }
+            let leaders = parts.len();
+            let mut wan = 0u64;
+            if leaders > 1 {
+                events += 1;
+                wan = (leaders as u64 - 1) * wire_bytes;
+            }
+            (events, CommBytes { intra, wan })
+        }
+    }
+}
+
+/// Predicted ledger rows + bytes of one outer sync (all-reduce ring
+/// form): flat `2(m−1)·B` on the WAN in one event; hierarchical
+/// `Σᵢ 2(gᵢ−1)·B` intra plus `2(G−1)·B` WAN — the same total, moved
+/// off the WAN.
+pub fn sync_comm(shape: &TopoShape, param_bytes: u64) -> (usize, CommBytes) {
+    shape_comm(shape, 2 * param_bytes)
+}
+
+/// Predicted ledger rows + bytes of one MIT merge (gather form): flat
+/// `(k−1)·B` WAN; hierarchical `Σᵢ (gᵢ−1)·B = (k−G)·B` intra plus
+/// `(G−1)·B` WAN — again byte-conserving, WAN-shrinking.
+pub fn merge_comm(shape: &TopoShape, param_bytes: u64) -> (usize, CommBytes) {
+    shape_comm(shape, param_bytes)
+}
+
+/// Predicted whole-run ledger aggregate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LedgerEstimate {
+    /// Recorded `CommEvent` count.
+    pub events: usize,
+    /// Bytes across both tiers.
+    pub total_bytes: u64,
+    /// Bytes on the WAN tier only.
+    pub wan_bytes: u64,
+}
+
+/// One planned/measured merge of a run's schedule (chronological).
+#[derive(Clone, Debug)]
+pub struct MergePlanStep {
+    /// Outer step the merge ran at.
+    pub outer_step: u64,
+    /// Trainers consumed (removed) by the merge.
+    pub removed: Vec<usize>,
+    /// Representative that carries on.
+    pub representative: usize,
+}
+
+fn fold(est: &mut LedgerEstimate, (events, bytes): (usize, CommBytes)) {
+    est.events += events;
+    est.total_bytes += bytes.total();
+    est.wan_bytes += bytes.wan;
+}
+
+/// Replay a run's schedule against the closed forms. `sync_shapes[i]`
+/// is trainer `i`'s worker-cohort shape, `home_groups[i]` its home
+/// group (ignored when `hierarchical` is false), `merges` the merge
+/// timeline (e.g. a run's `MergeRecord`s). The walk matches the
+/// coordinator's order on a *static* cluster: merges fire at the top
+/// of their outer step, then every live trainer syncs once, for
+/// `outer_steps` steps.
+pub fn estimate_ledger(
+    outer_steps: u64,
+    sync_shapes: &[TopoShape],
+    home_groups: &[usize],
+    hierarchical: bool,
+    merges: &[MergePlanStep],
+    param_bytes: u64,
+) -> LedgerEstimate {
+    assert_eq!(sync_shapes.len(), home_groups.len());
+    let k = sync_shapes.len();
+    let mut alive = vec![true; k];
+    let mut est = LedgerEstimate::default();
+    let mut mi = 0usize;
+    for t in 1..=outer_steps {
+        while mi < merges.len() && merges[mi].outer_step == t {
+            let m = &merges[mi];
+            let mut parts: Vec<usize> = m.removed.clone();
+            parts.push(m.representative);
+            let shape = if hierarchical {
+                let mut counts: std::collections::BTreeMap<usize, usize> =
+                    std::collections::BTreeMap::new();
+                for &id in &parts {
+                    *counts.entry(home_groups[id]).or_insert(0) += 1;
+                }
+                TopoShape::Hier { parts: counts.values().copied().collect() }
+            } else {
+                TopoShape::Flat { m: parts.len() }
+            };
+            fold(&mut est, merge_comm(&shape, param_bytes));
+            for &dead in &m.removed {
+                alive[dead] = false;
+            }
+            mi += 1;
+        }
+        for (id, shape) in sync_shapes.iter().enumerate() {
+            if alive[id] {
+                fold(&mut est, sync_comm(shape, param_bytes));
+            }
+        }
+    }
+    est
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,5 +312,53 @@ mod tests {
         let measured: Vec<f64> = (1..=50).map(|k| (k * k) as f64).collect();
         let (_, r2) = fit_scale(&shape, &measured);
         assert!(r2 < 0.99, "r2 {r2}");
+    }
+
+    #[test]
+    fn sync_and_merge_forms_conserve_bytes() {
+        let p = 1000u64;
+        // hierarchical total equals the flat total for the same m
+        let flat = sync_comm(&TopoShape::Flat { m: 4 }, p).1;
+        let hier = sync_comm(&TopoShape::Hier { parts: vec![2, 2] }, p).1;
+        assert_eq!(flat.total(), hier.total());
+        assert_eq!(flat.wan, 2 * 3 * p);
+        assert_eq!(hier.wan, 2 * p, "only the leader round crosses the WAN");
+        let flat_m = merge_comm(&TopoShape::Flat { m: 5 }, p).1;
+        let hier_m = merge_comm(&TopoShape::Hier { parts: vec![3, 2] }, p).1;
+        assert_eq!(flat_m.total(), hier_m.total());
+        assert_eq!(hier_m.intra, 3 * p, "(k-G)P stays intra");
+        assert_eq!(hier_m.wan, p, "(G-1)P crosses the WAN");
+    }
+
+    #[test]
+    fn degenerate_shapes_cost_nothing() {
+        let p = 7u64;
+        assert_eq!(sync_comm(&TopoShape::Flat { m: 1 }, p), (0, CommBytes::default()));
+        assert_eq!(merge_comm(&TopoShape::Flat { m: 1 }, p), (0, CommBytes::default()));
+        // one group, one member: no events at all
+        let (e, b) = sync_comm(&TopoShape::Hier { parts: vec![1] }, p);
+        assert_eq!((e, b.total()), (0, 0));
+        // one group, many members: intra only
+        let (e, b) = sync_comm(&TopoShape::Hier { parts: vec![3] }, p);
+        assert_eq!(e, 1);
+        assert_eq!(b.wan, 0);
+        assert_eq!(b.intra, 2 * 2 * p);
+    }
+
+    #[test]
+    fn estimate_ledger_replays_merge_timeline() {
+        // 2 trainers, 2 workers each, flat: one sync apiece per outer
+        // step until a merge at t=2 removes trainer 1
+        let shapes = vec![TopoShape::Flat { m: 2 }, TopoShape::Flat { m: 2 }];
+        let homes = vec![0, 0];
+        let merges = vec![MergePlanStep { outer_step: 2, removed: vec![1], representative: 0 }];
+        let p = 10u64;
+        let est = estimate_ledger(3, &shapes, &homes, false, &merges, p);
+        // syncs: t1 both (2 events), t2..t3 only trainer 0 (2 events),
+        // plus one merge event
+        assert_eq!(est.events, 5);
+        // bytes: 4 syncs x 2(2-1)p + merge (2-1)p
+        assert_eq!(est.total_bytes, 4 * 2 * p + p);
+        assert_eq!(est.wan_bytes, est.total_bytes, "flat: everything is WAN");
     }
 }

@@ -38,6 +38,7 @@ fn assert_threads_agree(mut cfg: Config) {
     assert_eq!(leda.total_bytes(), ledb.total_bytes(), "{name}: ledger bytes");
     for (i, (a, b)) in leda.events.iter().zip(ledb.events.iter()).enumerate() {
         assert_eq!(a.kind, b.kind, "{name}: event {i} kind");
+        assert_eq!(a.scope, b.scope, "{name}: event {i} scope");
         assert_eq!(a.bytes, b.bytes, "{name}: event {i} bytes");
         assert_eq!(a.participants, b.participants, "{name}: event {i} participants");
         assert_eq!(a.at_inner_step, b.at_inner_step, "{name}: event {i} at_inner_step");
@@ -200,6 +201,16 @@ fn hetero_dynamic_parallel_is_bit_identical() {
     // link shifts, heterogeneous nodes — the hardest case for the
     // parallel runtime because time and noise streams interleave
     let mut cfg = presets::hetero_dynamic();
+    cfg.algo.outer_steps = 6;
+    assert_threads_agree(cfg);
+}
+
+#[test]
+fn hierarchical_mit_parallel_is_bit_identical() {
+    // the hierarchical two-level topology (DESIGN.md §7): intra-group
+    // reduces, WAN leader rounds and topology-aware merge selection
+    // must all be thread-transparent like everything else
+    let mut cfg = presets::hierarchical_mit();
     cfg.algo.outer_steps = 6;
     assert_threads_agree(cfg);
 }

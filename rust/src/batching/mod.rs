@@ -22,6 +22,17 @@ pub struct StepPlan {
     pub accum_steps: usize,
     /// True when SwitchMode engaged (b_req > n * max_batch).
     pub switched: bool,
+    /// True when [`round_to_ladder`] saturated below the hardware
+    /// budget: the AOT ladder's top rung is smaller than
+    /// `min(b_req, max_batch)`, so the plan runs a smaller micro batch
+    /// than the hardware (and Algorithm 3) intended. The flag is
+    /// surfaced per step in the recorder (`StepRecord.clamped`) instead
+    /// of capping silently; the arithmetic itself is unchanged so
+    /// existing runs stay bit-identical. Note the deliberate SwitchMode
+    /// dead zone (`max_batch < b_req <= n·max_batch`, clamped to
+    /// `max_batch` to keep full update frequency — paper §4.2) is NOT a
+    /// clamp: it is the intended plan.
+    pub clamped: bool,
 }
 
 impl StepPlan {
@@ -44,9 +55,23 @@ pub fn round_to_ladder(b: usize, ladder: &[usize]) -> usize {
 }
 
 /// SwitchMode policy (paper §4.2 + Algorithm 3 lines 17-27):
-/// accumulation engages only once b_req exceeds `multiplier * max_batch`
-/// (paper: n = 2); below that the batch is clamped to max_batch and full
-/// update frequency is kept.
+/// accumulation engages only once b_req *strictly exceeds*
+/// `multiplier * max_batch` (paper: n = 2); below that the batch is
+/// clamped to max_batch and full update frequency is kept.
+///
+/// Boundary semantics, pinned (Algorithm 3's test is the real-valued
+/// `b_req > n·max_batch`): at `b_req == floor(n·max_batch)` exactly the
+/// plan does NOT switch — equality is "still affordable at full update
+/// frequency". Because `b_req` is an integer, `b_req > n·max_batch`
+/// over the reals and `b_req > floor(n·max_batch)` over the integers
+/// select the same set, so the floored threshold is not an off-by-one:
+/// the first switching request is `floor(n·max_batch) + 1` for every
+/// multiplier, integer or fractional (`switch_mode_threshold_boundary`
+/// pins both sides of the rung).
+///
+/// Ladder saturation never changes the arithmetic — it raises the
+/// plan's [`StepPlan::clamped`] flag instead, which the coordinator
+/// surfaces per step in the run records.
 pub fn plan_step(
     b_req: usize,
     max_batch: usize,
@@ -61,12 +86,31 @@ pub fn plan_step(
         // accumulate ceil(b_req / max_batch) micro-steps of max_batch
         let micro = round_to_ladder(max_batch, ladder).min(max_batch);
         let accum = b_req.div_ceil(max_batch);
-        StepPlan { micro_batch: micro, accum_steps: accum, switched: true }
+        let clamped = micro < b_req.min(max_batch);
+        StepPlan { micro_batch: micro, accum_steps: accum, switched: true, clamped }
     } else {
-        let clamped = b_req.min(max_batch);
-        let micro = round_to_ladder(clamped, ladder).min(max_batch);
-        StepPlan { micro_batch: micro.max(1), accum_steps: 1, switched: false }
+        let want = b_req.min(max_batch);
+        let micro = round_to_ladder(want, ladder).min(max_batch).max(1);
+        let clamped = micro < want;
+        StepPlan { micro_batch: micro, accum_steps: 1, switched: false, clamped }
     }
+}
+
+/// The controller's full statistical state — what a checkpoint must
+/// capture for the resumed request sequence to continue bit-for-bit
+/// (config-derived knobs like `ema_beta` are rebuilt from the config).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ControllerState {
+    /// Current requested batch b_req.
+    pub requested: usize,
+    /// Step statistics folded in so far.
+    pub observations: u64,
+    /// `(value, steps)` of the sigma² EMA.
+    pub sigma2_ema: (f64, u64),
+    /// `(value, steps)` of the inner-product-variance EMA.
+    pub ip_var_ema: (f64, u64),
+    /// `(value, steps)` of the gradient-norm EMA.
+    pub s1_ema: (f64, u64),
 }
 
 /// Per-trainer adaptive batch controller.
@@ -108,6 +152,28 @@ impl BatchController {
     /// Number of step statistics folded in so far.
     pub fn observations(&self) -> u64 {
         self.observations
+    }
+
+    /// Capture the controller's statistical state for a checkpoint.
+    pub fn export_state(&self) -> ControllerState {
+        ControllerState {
+            requested: self.requested,
+            observations: self.observations,
+            sigma2_ema: self.sigma2_ema.state(),
+            ip_var_ema: self.ip_var_ema.state(),
+            s1_ema: self.s1_ema.state(),
+        }
+    }
+
+    /// Restore a captured [`ControllerState`] (checkpoint resume): the
+    /// next `observe` continues the exact request sequence of the saved
+    /// run.
+    pub fn restore_state(&mut self, st: &ControllerState) {
+        self.requested = st.requested.max(1);
+        self.observations = st.observations;
+        self.sigma2_ema.set_state(st.sigma2_ema.0, st.sigma2_ema.1);
+        self.ip_var_ema.set_state(st.ip_var_ema.0, st.ip_var_ema.1);
+        self.s1_ema.set_state(st.s1_ema.0, st.s1_ema.1);
     }
 
     /// Fold in the statistics of a completed gradient computation (which
@@ -350,7 +416,10 @@ mod tests {
         let ladder = [1, 2, 4, 8, 16];
         // paper: n=2, max_batch=16 -> accumulate only above 32
         let p = plan_step(32, 16, 2.0, true, &ladder);
-        assert_eq!(p, StepPlan { micro_batch: 16, accum_steps: 1, switched: false });
+        assert_eq!(
+            p,
+            StepPlan { micro_batch: 16, accum_steps: 1, switched: false, clamped: false }
+        );
         let p = plan_step(33, 16, 2.0, true, &ladder);
         assert!(p.switched);
         assert_eq!(p.micro_batch, 16);
@@ -358,11 +427,73 @@ mod tests {
         assert_eq!(p.effective_batch(), 48);
     }
 
+    /// SAT1: Algorithm 3's switch test is the *strict* inequality
+    /// `b_req > n·max_batch` — pinned on both sides of the rung, for an
+    /// integer and a fractional multiplier. `b_req == threshold` exactly
+    /// must stay at full update frequency.
+    #[test]
+    fn switch_mode_threshold_boundary() {
+        let ladder = [1, 2, 4, 8, 16];
+        // integer threshold: n=2, max=16 -> rung at 32
+        let at = plan_step(32, 16, 2.0, true, &ladder);
+        assert!(!at.switched, "b_req == threshold must not switch");
+        assert_eq!(at.effective_batch(), 16, "clamped to max_batch, one update");
+        let above = plan_step(33, 16, 2.0, true, &ladder);
+        assert!(above.switched, "threshold + 1 is the first switching request");
+        assert_eq!(above.accum_steps, 3);
+        // fractional threshold: n=2.5, max=10 -> floor(25.0) = 25; the
+        // integer request 25 equals the real threshold -> no switch, and
+        // 26 is the first request strictly above it
+        let at = plan_step(25, 10, 2.5, true, &ladder);
+        assert!(!at.switched);
+        let above = plan_step(26, 10, 2.5, true, &ladder);
+        assert!(above.switched);
+        assert_eq!(above.accum_steps, 3); // ceil(26/10)
+        // fractional threshold that is not attained by any integer:
+        // n=2.45, max=10 -> floor(24.5) = 24; 24 stays, 25 switches
+        assert!(!plan_step(24, 10, 2.45, true, &ladder).switched);
+        assert!(plan_step(25, 10, 2.45, true, &ladder).switched);
+    }
+
+    /// SAT1: ladder saturation raises the clamp flag instead of capping
+    /// silently; the intended SwitchMode dead-zone clamp does not.
+    #[test]
+    fn ladder_saturation_sets_clamp_flag() {
+        // top rung 8 < max_batch 12: the hardware budget is unreachable
+        let sparse = [1, 2, 4, 8];
+        let p = plan_step(6, 12, 2.0, true, &sparse);
+        assert!(!p.clamped, "request on the ladder is not a clamp");
+        let p = plan_step(12, 12, 2.0, true, &sparse);
+        assert!(p.clamped, "rounding 12 saturates at rung 8");
+        assert_eq!(p.micro_batch, 8);
+        let p = plan_step(40, 12, 2.0, true, &sparse);
+        assert!(p.switched && p.clamped, "switched accumulation still under-runs");
+        assert_eq!(p.micro_batch, 8);
+        assert_eq!(p.accum_steps, 4); // ceil(40/12) — arithmetic unchanged
+        assert!(p.effective_batch() < 40, "the flag marks the silent shortfall");
+
+        // full ladder: the dead zone (max < b_req <= n·max) is the
+        // *intended* clamp-to-max_batch, not a ladder saturation
+        let full = [1, 2, 4, 8, 16];
+        let p = plan_step(20, 16, 2.0, true, &full);
+        assert!(!p.switched && !p.clamped);
+        assert_eq!(p.micro_batch, 16);
+        // switch disabled: ladder covers the budget -> no flag either
+        let p = plan_step(1000, 16, 2.0, false, &full);
+        assert!(!p.clamped);
+        // but a saturated ladder below the budget always flags
+        let p = plan_step(1000, 16, 2.0, false, &sparse);
+        assert!(p.clamped);
+    }
+
     #[test]
     fn switch_disabled_clamps() {
         let ladder = [1, 2, 4, 8, 16];
         let p = plan_step(1000, 16, 2.0, false, &ladder);
-        assert_eq!(p, StepPlan { micro_batch: 16, accum_steps: 1, switched: false });
+        assert_eq!(
+            p,
+            StepPlan { micro_batch: 16, accum_steps: 1, switched: false, clamped: false }
+        );
     }
 
     #[test]

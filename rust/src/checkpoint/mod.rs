@@ -1,20 +1,30 @@
 //! Checkpointing: serialize / restore the trainer pool mid-run.
 //!
 //! A production distributed trainer must survive restarts; this module
-//! gives the coordinator durable snapshots of everything the *optimizer*
-//! needs to continue: per-trainer outer parameters and outer-momentum,
-//! per-worker model + AdamW state, the adaptive-batching controller's
-//! requested batch, virtual-clock times and the communication counters.
+//! gives the coordinator durable snapshots of **everything the run
+//! needs to continue bit-for-bit**: per-trainer outer parameters and
+//! outer-momentum, per-worker model + AdamW state, every stochastic
+//! stream (the coordinator RNG and each worker's noise/time/sampler
+//! streams, mid-sequence), each sampler's epoch position, the adaptive
+//! controller's full statistics, the cluster's per-slot time
+//! accounting, the communication counters, and any delayed-overlap
+//! collective still in flight (DESIGN.md §8).
 //!
 //! Format (little-endian): `b"ADLC"` magic, u32 version, u32 JSON header
-//! length, JSON header (structure + counters), then the raw f32 blobs in
-//! header order, and a trailing CRC32 of everything before it.
+//! length, JSON header (structure + counters + stream states), then the
+//! raw f32 blobs in header order, and a trailing CRC32 of everything
+//! before it. Every 64-bit quantity that must restore bit-exactly —
+//! RNG words, wide counters (samples/bytes/draws), and all f64 state —
+//! is a hex string in the header: JSON numbers are f64, which would
+//! round counters above 2^53 and turn a non-finite f64 into an
+//! unloadable `null`. Small structural integers (ids, lengths,
+//! cursors) stay plain numbers for readability.
 //!
-//! Data-pipeline position (sampler permutation, engine-internal RNG) is
-//! deliberately NOT captured: on resume the samplers reshuffle from the
-//! config seed. Parameter/optimizer state — the expensive part — resumes
-//! exactly; the data order after resume is a fresh deterministic stream
-//! (the same trade most real frameworks make).
+//! Resume contract (enforced by `tests/checkpoint_resume.rs`): a run
+//! resumed from a checkpoint taken at outer step k produces, from step
+//! k+1 on, the **bit-identical** record streams, ledger continuation
+//! and final `RunResult` payload of the uninterrupted run — on both
+//! schedulers, at any thread count, and under the delayed-overlap mode.
 
 use crate::util::JsonValue;
 use anyhow::{anyhow, bail, Context, Result};
@@ -22,10 +32,81 @@ use std::io::{Read, Write};
 
 /// File magic of the checkpoint container format.
 pub const MAGIC: &[u8; 4] = b"ADLC";
-/// Container format version.
-pub const VERSION: u32 = 1;
+/// Container format version (2 = exact-resume: stream states, sampler
+/// positions, controller statistics, time accounting, in-flight syncs).
+pub const VERSION: u32 = 2;
 
-/// Snapshot of one worker's optimizer state.
+/// A captured RNG stream (`Rng::state`): the four xoshiro words plus
+/// the cached Box-Muller spare.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct RngSnapshot {
+    /// xoshiro256** state words.
+    pub s: [u64; 4],
+    /// Cached second Box-Muller output, if one is pending.
+    pub gauss_spare: Option<f64>,
+}
+
+impl RngSnapshot {
+    /// Capture a live stream.
+    pub fn of(rng: &crate::util::Rng) -> RngSnapshot {
+        let (s, gauss_spare) = rng.state();
+        RngSnapshot { s, gauss_spare }
+    }
+
+    /// Rebuild the live stream.
+    pub fn to_rng(&self) -> crate::util::Rng {
+        crate::util::Rng::from_state(self.s, self.gauss_spare)
+    }
+}
+
+/// A captured sampler position (`BatchSampler::export_state`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplerSnapshot {
+    /// Shard sequence indices.
+    pub shard: Vec<usize>,
+    /// Current epoch's shuffled order.
+    pub order: Vec<usize>,
+    /// Cursor into `order`.
+    pub cursor: usize,
+    /// Total draws since construction.
+    pub drawn: u64,
+    /// Shuffle stream.
+    pub rng: RngSnapshot,
+}
+
+/// One ledger phase of an in-flight collective (scope + closed-form
+/// bytes + participant count) — enough to land the exact `CommEvent`s
+/// when the resumed run retires the handle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseSnapshot {
+    /// True for the WAN tier, false for intra-group.
+    pub wan: bool,
+    /// Ledger bytes of the phase.
+    pub bytes: u64,
+    /// Phase participant count.
+    pub participants: usize,
+}
+
+/// A delayed-overlap outer update still in flight at snapshot time
+/// (DESIGN.md §8): the priced collective plus the frozen delta it will
+/// apply at the trainer's next outer boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PendingSnapshot {
+    /// Virtual time the last contribution was posted.
+    pub posted_at: f64,
+    /// Virtual time the transfer completes.
+    pub completes_at: f64,
+    /// Modeled transfer seconds (the hidden/exposed split's total).
+    pub time_s: f64,
+    /// `total_samples` at post time (the ledger's C(N) stamp).
+    pub sent_samples: u64,
+    /// Ledger phases to land at completion.
+    pub phases: Vec<PhaseSnapshot>,
+    /// The frozen outer delta.
+    pub delta: Vec<f32>,
+}
+
+/// Snapshot of one worker's optimizer state and streams.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkerSnapshot {
     /// Worker parameter vector.
@@ -36,6 +117,14 @@ pub struct WorkerSnapshot {
     pub v: Vec<f32>,
     /// Optimizer step counter.
     pub step: u64,
+    /// Churn activity flag at snapshot time.
+    pub active: bool,
+    /// Engine gradient/loss noise stream, mid-sequence.
+    pub noise_rng: RngSnapshot,
+    /// Compute-time perturbation stream, mid-sequence.
+    pub time_rng: RngSnapshot,
+    /// Data sampler position, mid-epoch.
+    pub sampler: SamplerSnapshot,
 }
 
 /// Snapshot of one live trainer.
@@ -51,6 +140,18 @@ pub struct TrainerSnapshot {
     pub requested_batch: usize,
     /// Inner steps completed by this trainer.
     pub inner_steps_done: u64,
+    /// Controller observation count.
+    pub observations: u64,
+    /// `(value, steps)` of the controller's sigma² EMA.
+    pub sigma2_ema: (f64, u64),
+    /// `(value, steps)` of the controller's inner-product EMA.
+    pub ip_var_ema: (f64, u64),
+    /// `(value, steps)` of the controller's gradient-norm EMA.
+    pub s1_ema: (f64, u64),
+    /// The trainer-level shard (workers partition it; churn re-splits).
+    pub shard: Vec<usize>,
+    /// Delayed-overlap update in flight, if any.
+    pub pending: Option<PendingSnapshot>,
     /// Per-worker optimizer state.
     pub workers: Vec<WorkerSnapshot>,
 }
@@ -68,8 +169,25 @@ pub struct Checkpoint {
     pub comm_count: u64,
     /// Ledger communication bytes at snapshot time.
     pub comm_bytes: u64,
+    /// Ledger WAN-tier bytes at snapshot time.
+    pub comm_wan_bytes: u64,
+    /// Overlap-hidden collective seconds accumulated so far.
+    pub overlap_hidden_s: f64,
     /// Per-slot virtual clock times.
     pub clock_times: Vec<f64>,
+    /// Per-slot compute seconds.
+    pub busy_s: Vec<f64>,
+    /// Per-slot barrier-wait seconds.
+    pub wait_s: Vec<f64>,
+    /// Per-slot exposed communication seconds.
+    pub comm_s: Vec<f64>,
+    /// Per-slot overlap-hidden communication seconds.
+    pub comm_hidden_s: Vec<f64>,
+    /// Per-slot churn-preemption seconds.
+    pub preempted_s: Vec<f64>,
+    /// The coordinator's own stream (merge selection forks, churn
+    /// re-shard forks), mid-sequence.
+    pub rng: RngSnapshot,
     /// Live trainers (dead ones are omitted).
     pub trainers: Vec<TrainerSnapshot>,
 }
@@ -101,7 +219,7 @@ pub fn crc32(data: &[u8]) -> u32 {
 }
 
 // ---------------------------------------------------------------------------
-// encoding
+// encoding helpers
 // ---------------------------------------------------------------------------
 
 fn f32s_to_bytes(v: &[f32], out: &mut Vec<u8>) {
@@ -117,55 +235,222 @@ fn bytes_to_f32s(raw: &[u8]) -> Vec<f32> {
         .collect()
 }
 
+fn usizes_json(v: &[usize]) -> JsonValue {
+    JsonValue::Array(v.iter().map(|&x| JsonValue::num(x as f64)).collect())
+}
+
+/// Bit-exact f64: raw bits as a hex string (survives non-finite values
+/// and never depends on decimal round-tripping).
+fn f64_json(x: f64) -> JsonValue {
+    JsonValue::str(format!("{:016x}", x.to_bits()))
+}
+
+/// Exact u64: hex string (JSON numbers are f64 and round above 2^53).
+fn u64_json(x: u64) -> JsonValue {
+    JsonValue::str(format!("{x:016x}"))
+}
+
+fn f64s_json(v: &[f64]) -> JsonValue {
+    JsonValue::Array(v.iter().map(|&x| f64_json(x)).collect())
+}
+
+fn rng_json(r: &RngSnapshot) -> JsonValue {
+    JsonValue::obj(vec![
+        (
+            "s",
+            JsonValue::Array(
+                r.s.iter().map(|&w| JsonValue::str(format!("{w:016x}"))).collect(),
+            ),
+        ),
+        (
+            "spare",
+            match r.gauss_spare {
+                // bit-exact: store the f64's raw bits in hex
+                Some(x) => JsonValue::str(format!("{:016x}", x.to_bits())),
+                None => JsonValue::Null,
+            },
+        ),
+    ])
+}
+
+fn ema_json(e: (f64, u64)) -> JsonValue {
+    JsonValue::obj(vec![
+        ("value", f64_json(e.0)),
+        ("steps", u64_json(e.1)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// decoding helpers
+// ---------------------------------------------------------------------------
+
+/// A u64 field: exact hex string, or a plain number for the small
+/// structural integers (ids, lengths, cursors).
+fn get_u64(v: &JsonValue, k: &str) -> Result<u64> {
+    let x = v.get(k).ok_or_else(|| anyhow!("checkpoint header missing {k}"))?;
+    if let Some(s) = x.as_str() {
+        return parse_hex_u64(s);
+    }
+    x.as_f64()
+        .map(|n| n as u64)
+        .ok_or_else(|| anyhow!("checkpoint header field {k} is not an integer"))
+}
+
+/// An f64 field: bit-exact hex string (the v2 form), or a plain number
+/// (tolerated for hand-written headers).
+fn get_f64(v: &JsonValue, k: &str) -> Result<f64> {
+    let x = v.get(k).ok_or_else(|| anyhow!("checkpoint header missing {k}"))?;
+    if let Some(s) = x.as_str() {
+        return Ok(f64::from_bits(parse_hex_u64(s)?));
+    }
+    x.as_f64().ok_or_else(|| anyhow!("checkpoint header field {k} is not a number"))
+}
+
+fn parse_hex_u64(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).with_context(|| format!("bad hex word {s:?}"))
+}
+
+fn parse_usizes(v: &JsonValue, k: &str) -> Result<Vec<usize>> {
+    v.get(k)
+        .and_then(|x| x.as_array())
+        .ok_or_else(|| anyhow!("checkpoint header missing {k}"))?
+        .iter()
+        .map(|x| {
+            x.as_usize().ok_or_else(|| anyhow!("non-integer entry in {k}"))
+        })
+        .collect()
+}
+
+fn parse_f64s(v: &JsonValue, k: &str) -> Result<Vec<f64>> {
+    v.get(k)
+        .and_then(|x| x.as_array())
+        .ok_or_else(|| anyhow!("checkpoint header missing {k}"))?
+        .iter()
+        .map(|x| {
+            if let Some(s) = x.as_str() {
+                return Ok(f64::from_bits(parse_hex_u64(s)?));
+            }
+            x.as_f64().ok_or_else(|| anyhow!("non-number entry in {k}"))
+        })
+        .collect()
+}
+
+fn parse_rng(v: &JsonValue, k: &str) -> Result<RngSnapshot> {
+    let r = v.get(k).ok_or_else(|| anyhow!("checkpoint header missing {k}"))?;
+    let words = r
+        .get("s")
+        .and_then(|x| x.as_array())
+        .ok_or_else(|| anyhow!("{k}: missing rng words"))?;
+    if words.len() != 4 {
+        bail!("{k}: expected 4 rng words, got {}", words.len());
+    }
+    let mut s = [0u64; 4];
+    for (i, w) in words.iter().enumerate() {
+        s[i] = parse_hex_u64(w.as_str().ok_or_else(|| anyhow!("{k}: rng word not a string"))?)?;
+    }
+    let gauss_spare = match r.get("spare") {
+        Some(JsonValue::Null) | None => None,
+        Some(x) => Some(f64::from_bits(parse_hex_u64(
+            x.as_str().ok_or_else(|| anyhow!("{k}: spare not a string"))?,
+        )?)),
+    };
+    Ok(RngSnapshot { s, gauss_spare })
+}
+
+fn parse_ema(v: &JsonValue, k: &str) -> Result<(f64, u64)> {
+    let e = v.get(k).ok_or_else(|| anyhow!("checkpoint header missing {k}"))?;
+    Ok((get_f64(e, "value")?, get_u64(e, "steps")?))
+}
+
 impl Checkpoint {
     fn header_json(&self) -> JsonValue {
         JsonValue::obj(vec![
             ("config_name", JsonValue::str(self.config_name.clone())),
-            ("outer_step", JsonValue::num(self.outer_step as f64)),
-            ("total_samples", JsonValue::num(self.total_samples as f64)),
-            ("comm_count", JsonValue::num(self.comm_count as f64)),
-            ("comm_bytes", JsonValue::num(self.comm_bytes as f64)),
-            (
-                "clock_times",
-                JsonValue::Array(self.clock_times.iter().map(|&t| JsonValue::num(t)).collect()),
-            ),
+            ("outer_step", u64_json(self.outer_step)),
+            ("total_samples", u64_json(self.total_samples)),
+            ("comm_count", u64_json(self.comm_count)),
+            ("comm_bytes", u64_json(self.comm_bytes)),
+            ("comm_wan_bytes", u64_json(self.comm_wan_bytes)),
+            ("overlap_hidden_s", f64_json(self.overlap_hidden_s)),
+            ("clock_times", f64s_json(&self.clock_times)),
+            ("busy_s", f64s_json(&self.busy_s)),
+            ("wait_s", f64s_json(&self.wait_s)),
+            ("comm_s", f64s_json(&self.comm_s)),
+            ("comm_hidden_s", f64s_json(&self.comm_hidden_s)),
+            ("preempted_s", f64s_json(&self.preempted_s)),
+            ("rng", rng_json(&self.rng)),
             (
                 "trainers",
-                JsonValue::Array(
-                    self.trainers
-                        .iter()
-                        .map(|t| {
-                            JsonValue::obj(vec![
-                                ("id", JsonValue::num(t.id as f64)),
-                                ("param_len", JsonValue::num(t.params.len() as f64)),
-                                (
-                                    "velocity_len",
-                                    JsonValue::num(t.outer_velocity.len() as f64),
-                                ),
-                                (
-                                    "requested_batch",
-                                    JsonValue::num(t.requested_batch as f64),
-                                ),
-                                (
-                                    "inner_steps_done",
-                                    JsonValue::num(t.inner_steps_done as f64),
-                                ),
-                                (
-                                    "workers",
-                                    JsonValue::Array(
-                                        t.workers
-                                            .iter()
-                                            .map(|w| {
-                                                JsonValue::obj(vec![
-                                                    (
-                                                        "param_len",
-                                                        JsonValue::num(w.params.len() as f64),
-                                                    ),
-                                                    ("step", JsonValue::num(w.step as f64)),
-                                                ])
-                                            })
-                                            .collect(),
+                JsonValue::Array(self.trainers.iter().map(Self::trainer_json).collect()),
+            ),
+        ])
+    }
+
+    fn trainer_json(t: &TrainerSnapshot) -> JsonValue {
+        let pending = match &t.pending {
+            None => JsonValue::Null,
+            Some(p) => JsonValue::obj(vec![
+                ("posted_at", f64_json(p.posted_at)),
+                ("completes_at", f64_json(p.completes_at)),
+                ("time_s", f64_json(p.time_s)),
+                ("sent_samples", u64_json(p.sent_samples)),
+                ("delta_len", JsonValue::num(p.delta.len() as f64)),
+                (
+                    "phases",
+                    JsonValue::Array(
+                        p.phases
+                            .iter()
+                            .map(|ph| {
+                                JsonValue::obj(vec![
+                                    ("wan", JsonValue::Bool(ph.wan)),
+                                    ("bytes", u64_json(ph.bytes)),
+                                    (
+                                        "participants",
+                                        JsonValue::num(ph.participants as f64),
                                     ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        };
+        JsonValue::obj(vec![
+            ("id", JsonValue::num(t.id as f64)),
+            ("param_len", JsonValue::num(t.params.len() as f64)),
+            ("velocity_len", JsonValue::num(t.outer_velocity.len() as f64)),
+            ("requested_batch", JsonValue::num(t.requested_batch as f64)),
+            ("inner_steps_done", u64_json(t.inner_steps_done)),
+            ("observations", u64_json(t.observations)),
+            ("sigma2_ema", ema_json(t.sigma2_ema)),
+            ("ip_var_ema", ema_json(t.ip_var_ema)),
+            ("s1_ema", ema_json(t.s1_ema)),
+            ("shard", usizes_json(&t.shard)),
+            ("pending", pending),
+            (
+                "workers",
+                JsonValue::Array(
+                    t.workers
+                        .iter()
+                        .map(|w| {
+                            JsonValue::obj(vec![
+                                ("param_len", JsonValue::num(w.params.len() as f64)),
+                                ("step", u64_json(w.step)),
+                                ("active", JsonValue::Bool(w.active)),
+                                ("noise_rng", rng_json(&w.noise_rng)),
+                                ("time_rng", rng_json(&w.time_rng)),
+                                (
+                                    "sampler",
+                                    JsonValue::obj(vec![
+                                        ("shard", usizes_json(&w.sampler.shard)),
+                                        ("order", usizes_json(&w.sampler.order)),
+                                        (
+                                            "cursor",
+                                            JsonValue::num(w.sampler.cursor as f64),
+                                        ),
+                                        ("drawn", u64_json(w.sampler.drawn)),
+                                        ("rng", rng_json(&w.sampler.rng)),
+                                    ]),
                                 ),
                             ])
                         })
@@ -186,6 +471,9 @@ impl Checkpoint {
         for t in &self.trainers {
             f32s_to_bytes(&t.params, &mut out);
             f32s_to_bytes(&t.outer_velocity, &mut out);
+            if let Some(p) = &t.pending {
+                f32s_to_bytes(&p.delta, &mut out);
+            }
             for w in &t.workers {
                 f32s_to_bytes(&w.params, &mut out);
                 f32s_to_bytes(&w.m, &mut out);
@@ -213,7 +501,10 @@ impl Checkpoint {
         }
         let version = u32::from_le_bytes(body[4..8].try_into().unwrap());
         if version != VERSION {
-            bail!("unsupported checkpoint version {version}");
+            bail!(
+                "unsupported checkpoint version {version} (this build reads v{VERSION}; \
+                 re-create the checkpoint with the current binary)"
+            );
         }
         let hlen = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
         if body.len() < 12 + hlen {
@@ -223,30 +514,25 @@ impl Checkpoint {
             .context("checkpoint header not utf-8")?;
         let h = JsonValue::parse(header_text).map_err(|e| anyhow!("header: {e}"))?;
 
-        let gu = |v: &JsonValue, k: &str| -> Result<u64> {
-            v.get(k)
-                .and_then(|x| x.as_f64())
-                .map(|n| n as u64)
-                .ok_or_else(|| anyhow!("header missing {k}"))
-        };
-
         let mut cp = Checkpoint {
             config_name: h
                 .get("config_name")
                 .and_then(|x| x.as_str())
                 .unwrap_or_default()
                 .to_string(),
-            outer_step: gu(&h, "outer_step")?,
-            total_samples: gu(&h, "total_samples")?,
-            comm_count: gu(&h, "comm_count")?,
-            comm_bytes: gu(&h, "comm_bytes")?,
-            clock_times: h
-                .get("clock_times")
-                .and_then(|x| x.as_array())
-                .ok_or_else(|| anyhow!("header missing clock_times"))?
-                .iter()
-                .map(|x| x.as_f64().unwrap_or(0.0))
-                .collect(),
+            outer_step: get_u64(&h, "outer_step")?,
+            total_samples: get_u64(&h, "total_samples")?,
+            comm_count: get_u64(&h, "comm_count")?,
+            comm_bytes: get_u64(&h, "comm_bytes")?,
+            comm_wan_bytes: get_u64(&h, "comm_wan_bytes")?,
+            overlap_hidden_s: get_f64(&h, "overlap_hidden_s")?,
+            clock_times: parse_f64s(&h, "clock_times")?,
+            busy_s: parse_f64s(&h, "busy_s")?,
+            wait_s: parse_f64s(&h, "wait_s")?,
+            comm_s: parse_f64s(&h, "comm_s")?,
+            comm_hidden_s: parse_f64s(&h, "comm_hidden_s")?,
+            preempted_s: parse_f64s(&h, "preempted_s")?,
+            rng: parse_rng(&h, "rng")?,
             trainers: Vec::new(),
         };
 
@@ -266,30 +552,82 @@ impl Checkpoint {
             .and_then(|x| x.as_array())
             .ok_or_else(|| anyhow!("header missing trainers"))?
         {
-            let plen = gu(tj, "param_len")? as usize;
-            let vlen = gu(tj, "velocity_len")? as usize;
+            let plen = get_u64(tj, "param_len")? as usize;
+            let vlen = get_u64(tj, "velocity_len")? as usize;
             let params = take_f32s(plen, &mut cursor)?;
             let outer_velocity = take_f32s(vlen, &mut cursor)?;
+            let pending = match tj.get("pending") {
+                Some(JsonValue::Null) | None => None,
+                Some(pj) => {
+                    let dlen = get_u64(pj, "delta_len")? as usize;
+                    let phases = pj
+                        .get("phases")
+                        .and_then(|x| x.as_array())
+                        .ok_or_else(|| anyhow!("pending missing phases"))?
+                        .iter()
+                        .map(|ph| {
+                            Ok(PhaseSnapshot {
+                                wan: ph
+                                    .get("wan")
+                                    .and_then(|x| x.as_bool())
+                                    .ok_or_else(|| anyhow!("phase missing wan"))?,
+                                bytes: get_u64(ph, "bytes")?,
+                                participants: get_u64(ph, "participants")? as usize,
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    Some(PendingSnapshot {
+                        posted_at: get_f64(pj, "posted_at")?,
+                        completes_at: get_f64(pj, "completes_at")?,
+                        time_s: get_f64(pj, "time_s")?,
+                        sent_samples: get_u64(pj, "sent_samples")?,
+                        phases,
+                        delta: take_f32s(dlen, &mut cursor)?,
+                    })
+                }
+            };
             let mut workers = Vec::new();
             for wj in tj
                 .get("workers")
                 .and_then(|x| x.as_array())
                 .ok_or_else(|| anyhow!("trainer missing workers"))?
             {
-                let wlen = gu(wj, "param_len")? as usize;
+                let wlen = get_u64(wj, "param_len")? as usize;
+                let sj = wj
+                    .get("sampler")
+                    .ok_or_else(|| anyhow!("worker missing sampler"))?;
                 workers.push(WorkerSnapshot {
                     params: take_f32s(wlen, &mut cursor)?,
                     m: take_f32s(wlen, &mut cursor)?,
                     v: take_f32s(wlen, &mut cursor)?,
-                    step: gu(wj, "step")?,
+                    step: get_u64(wj, "step")?,
+                    active: wj
+                        .get("active")
+                        .and_then(|x| x.as_bool())
+                        .ok_or_else(|| anyhow!("worker missing active"))?,
+                    noise_rng: parse_rng(wj, "noise_rng")?,
+                    time_rng: parse_rng(wj, "time_rng")?,
+                    sampler: SamplerSnapshot {
+                        shard: parse_usizes(sj, "shard")?,
+                        order: parse_usizes(sj, "order")?,
+                        cursor: get_u64(sj, "cursor")? as usize,
+                        drawn: get_u64(sj, "drawn")?,
+                        rng: parse_rng(sj, "rng")?,
+                    },
                 });
             }
             cp.trainers.push(TrainerSnapshot {
-                id: gu(tj, "id")? as usize,
+                id: get_u64(tj, "id")? as usize,
                 params,
                 outer_velocity,
-                requested_batch: gu(tj, "requested_batch")? as usize,
-                inner_steps_done: gu(tj, "inner_steps_done")?,
+                requested_batch: get_u64(tj, "requested_batch")? as usize,
+                inner_steps_done: get_u64(tj, "inner_steps_done")?,
+                observations: get_u64(tj, "observations")?,
+                sigma2_ema: parse_ema(tj, "sigma2_ema")?,
+                ip_var_ema: parse_ema(tj, "ip_var_ema")?,
+                s1_ema: parse_ema(tj, "s1_ema")?,
+                shard: parse_usizes(tj, "shard")?,
+                pending,
                 workers,
             });
         }
@@ -328,10 +666,35 @@ mod tests {
     use super::*;
     use crate::util::Rng;
 
+    fn rng_snap(seed: u64, with_spare: bool) -> RngSnapshot {
+        let mut r = Rng::new(seed);
+        if with_spare {
+            let _ = r.normal(); // populate the Box-Muller spare
+        }
+        RngSnapshot::of(&r)
+    }
+
     fn sample_checkpoint() -> Checkpoint {
         let mut rng = Rng::new(3);
         let mk = |n: usize, rng: &mut Rng| -> Vec<f32> {
             (0..n).map(|_| rng.normal() as f32).collect()
+        };
+        let sampler = |seed: u64| SamplerSnapshot {
+            shard: vec![3, 1, 4, 1, 5, 9],
+            order: vec![2, 0, 5, 1, 4, 3],
+            cursor: 3,
+            drawn: 21,
+            rng: rng_snap(seed, false),
+        };
+        let worker = |rng: &mut Rng, seed: u64| WorkerSnapshot {
+            params: mk(64, rng),
+            m: mk(64, rng),
+            v: mk(64, rng),
+            step: 140,
+            active: seed % 2 == 0,
+            noise_rng: rng_snap(seed, true),
+            time_rng: rng_snap(seed ^ 7, false),
+            sampler: sampler(seed ^ 99),
         };
         Checkpoint {
             config_name: "unit".into(),
@@ -339,7 +702,15 @@ mod tests {
             total_samples: 12345,
             comm_count: 42,
             comm_bytes: 9876,
+            comm_wan_bytes: 5432,
+            overlap_hidden_s: 0.125625,
             clock_times: vec![1.5, 2.25, 0.0],
+            busy_s: vec![1.0, 2.0, 0.5],
+            wait_s: vec![0.25, 0.0, 0.75],
+            comm_s: vec![0.01, 0.02, 0.03],
+            comm_hidden_s: vec![0.001, 0.0, 0.002],
+            preempted_s: vec![0.0, 0.5, 0.0],
+            rng: rng_snap(11, true),
             trainers: vec![
                 TrainerSnapshot {
                     id: 0,
@@ -347,20 +718,23 @@ mod tests {
                     outer_velocity: mk(64, &mut rng),
                     requested_batch: 17,
                     inner_steps_done: 140,
-                    workers: vec![
-                        WorkerSnapshot {
-                            params: mk(64, &mut rng),
-                            m: mk(64, &mut rng),
-                            v: mk(64, &mut rng),
-                            step: 140,
-                        },
-                        WorkerSnapshot {
-                            params: mk(64, &mut rng),
-                            m: mk(64, &mut rng),
-                            v: mk(64, &mut rng),
-                            step: 140,
-                        },
-                    ],
+                    observations: 280,
+                    sigma2_ema: (1.2345678901234567, 280),
+                    ip_var_ema: (0.0, 0),
+                    s1_ema: (9.87e-3, 280),
+                    shard: vec![0, 2, 4, 6, 8, 10],
+                    pending: Some(PendingSnapshot {
+                        posted_at: 3.5,
+                        completes_at: 3.502,
+                        time_s: 0.002,
+                        sent_samples: 12000,
+                        phases: vec![
+                            PhaseSnapshot { wan: false, bytes: 4000, participants: 2 },
+                            PhaseSnapshot { wan: true, bytes: 2000, participants: 2 },
+                        ],
+                        delta: mk(64, &mut rng),
+                    }),
+                    workers: vec![worker(&mut rng, 2), worker(&mut rng, 5)],
                 },
                 TrainerSnapshot {
                     id: 2,
@@ -368,12 +742,13 @@ mod tests {
                     outer_velocity: vec![],
                     requested_batch: 3,
                     inner_steps_done: 140,
-                    workers: vec![WorkerSnapshot {
-                        params: mk(64, &mut rng),
-                        m: mk(64, &mut rng),
-                        v: mk(64, &mut rng),
-                        step: 140,
-                    }],
+                    observations: 140,
+                    sigma2_ema: (0.5, 140),
+                    ip_var_ema: (0.25, 140),
+                    s1_ema: (0.125, 140),
+                    shard: vec![1, 3, 5],
+                    pending: None,
+                    workers: vec![worker(&mut rng, 8)],
                 },
             ],
         }
@@ -385,6 +760,61 @@ mod tests {
         let bytes = cp.to_bytes();
         let back = Checkpoint::from_bytes(&bytes).unwrap();
         assert_eq!(cp, back);
+    }
+
+    #[test]
+    fn rng_snapshot_roundtrips_bit_exact() {
+        // hex words + bit-hex spare must survive the JSON header exactly
+        let cp = sample_checkpoint();
+        let back = Checkpoint::from_bytes(&cp.to_bytes()).unwrap();
+        assert_eq!(back.rng.s, cp.rng.s);
+        assert_eq!(
+            back.rng.gauss_spare.unwrap().to_bits(),
+            cp.rng.gauss_spare.unwrap().to_bits()
+        );
+        // a resumed stream continues draw-for-draw
+        let mut a = cp.rng.to_rng();
+        let mut b = back.rng.to_rng();
+        for _ in 0..8 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn wide_counters_and_nonfinite_f64s_roundtrip() {
+        // counters above 2^53 and non-finite f64 state must survive the
+        // header (hex encoding) — a JSON-number encoding would round the
+        // former and turn the latter into an unloadable null
+        let mut cp = sample_checkpoint();
+        cp.total_samples = (1u64 << 53) + 1;
+        cp.comm_bytes = u64::MAX - 7;
+        cp.overlap_hidden_s = f64::NAN;
+        cp.clock_times[1] = f64::INFINITY;
+        cp.trainers[0].sigma2_ema = (f64::NEG_INFINITY, u64::MAX);
+        let back = Checkpoint::from_bytes(&cp.to_bytes()).unwrap();
+        assert_eq!(back.total_samples, (1u64 << 53) + 1);
+        assert_eq!(back.comm_bytes, u64::MAX - 7);
+        assert!(back.overlap_hidden_s.is_nan());
+        assert_eq!(
+            back.overlap_hidden_s.to_bits(),
+            cp.overlap_hidden_s.to_bits(),
+            "even NaN payload bits survive"
+        );
+        assert_eq!(back.clock_times[1], f64::INFINITY);
+        assert_eq!(back.trainers[0].sigma2_ema.0, f64::NEG_INFINITY);
+        assert_eq!(back.trainers[0].sigma2_ema.1, u64::MAX);
+    }
+
+    #[test]
+    fn pending_sync_roundtrips() {
+        let cp = sample_checkpoint();
+        let back = Checkpoint::from_bytes(&cp.to_bytes()).unwrap();
+        let p = back.trainers[0].pending.as_ref().unwrap();
+        let q = cp.trainers[0].pending.as_ref().unwrap();
+        assert_eq!(p.completes_at.to_bits(), q.completes_at.to_bits());
+        assert_eq!(p.phases, q.phases);
+        assert_eq!(p.delta, q.delta);
+        assert!(back.trainers[1].pending.is_none());
     }
 
     #[test]
@@ -426,6 +856,18 @@ mod tests {
         bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
         let err = Checkpoint::from_bytes(&bytes).unwrap_err();
         assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn old_version_rejected_with_guidance() {
+        let cp = sample_checkpoint();
+        let mut bytes = cp.to_bytes();
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        let n = bytes.len();
+        let crc = crc32(&bytes[..n - 4]);
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("version 1"), "{err}");
     }
 
     #[test]

@@ -149,6 +149,12 @@ pub struct ClusterState {
     pub wait_s: Vec<f64>,
     /// Per-slot modeled communication seconds.
     pub comm_s: Vec<f64>,
+    /// Per-slot communication seconds *hidden* under the next round's
+    /// compute by the delayed-overlap mode (DESIGN.md §8). Unlike
+    /// `comm_s` these never advanced the worker's clock — they are the
+    /// part of a collective the overlap amortized away. Always zero in
+    /// blocking mode.
+    pub comm_hidden_s: Vec<f64>,
     /// Per-slot churn-preemption downtime seconds.
     pub preempted_s: Vec<f64>,
 }
@@ -164,7 +170,18 @@ impl ClusterState {
             busy_s: vec![0.0; slots],
             wait_s: vec![0.0; slots],
             comm_s: vec![0.0; slots],
+            comm_hidden_s: vec![0.0; slots],
             preempted_s: vec![0.0; slots],
+        }
+    }
+
+    /// Credit `hidden` seconds of overlapped (clock-free) communication
+    /// to every member slot — the per-worker side of the delayed-overlap
+    /// accounting (DESIGN.md §8).
+    pub fn charge_hidden(&mut self, members: &[usize], hidden: f64) {
+        debug_assert!(hidden >= 0.0);
+        for &w in members {
+            self.comm_hidden_s[w] += hidden;
         }
     }
 
@@ -197,6 +214,7 @@ impl ClusterState {
                     busy_s: self.busy_s[s],
                     wait_s: self.wait_s[s],
                     comm_s: self.comm_s[s],
+                    hidden_s: self.comm_hidden_s[s],
                     preempted_s: self.preempted_s[s],
                 });
             }
@@ -336,5 +354,18 @@ mod tests {
         assert!((cs.comm_s[0] - 0.5).abs() < 1e-12);
         assert!((cs.comm_s[1] - 0.5).abs() < 1e-12);
         assert_eq!(cs.wait_s[2], 0.0, "non-member unaffected");
+    }
+
+    #[test]
+    fn charge_hidden_credits_members_without_moving_clocks() {
+        let cfg = crate::config::presets::mock_default().cluster;
+        let mut cs = ClusterState::new(&cfg, 3);
+        cs.clock.advance(0, 1.0);
+        cs.charge_hidden(&[0, 2], 0.25);
+        assert!((cs.comm_hidden_s[0] - 0.25).abs() < 1e-12);
+        assert_eq!(cs.comm_hidden_s[1], 0.0, "non-member unaffected");
+        assert!((cs.comm_hidden_s[2] - 0.25).abs() < 1e-12);
+        assert_eq!(cs.clock.time(0), 1.0, "hidden comm never advances a clock");
+        assert_eq!(cs.comm_s[0], 0.0, "hidden time is not exposed comm time");
     }
 }

@@ -114,6 +114,15 @@ pub struct CommEvent {
 pub struct CommLedger {
     /// Every recorded communication, in completion order.
     pub events: Vec<CommEvent>,
+    /// Events recorded before a checkpoint this run resumed from (the
+    /// events themselves live in the pre-resume run; only the counters
+    /// carry over so `count`/`total_bytes` continue the original
+    /// sequence bit-for-bit — DESIGN.md §8 resume semantics).
+    base_count: usize,
+    /// Bytes recorded before the resume point.
+    base_bytes: u64,
+    /// WAN-tier bytes recorded before the resume point.
+    base_wan_bytes: u64,
 }
 
 impl CommLedger {
@@ -122,29 +131,42 @@ impl CommLedger {
         self.events.push(ev);
     }
 
-    /// Total recorded communications.
-    pub fn count(&self) -> usize {
-        self.events.len()
+    /// Seed the counters with a resumed run's pre-checkpoint totals, so
+    /// every later `count()`/`total_bytes()`/`wan_bytes()` read matches
+    /// the uninterrupted run exactly (checkpoint/resume contract).
+    pub fn resume_from(&mut self, count: usize, bytes: u64, wan_bytes: u64) {
+        self.base_count = count;
+        self.base_bytes = bytes;
+        self.base_wan_bytes = wan_bytes;
     }
 
-    /// Recorded communications of one kind.
+    /// Total recorded communications (including any resumed-from base).
+    pub fn count(&self) -> usize {
+        self.base_count + self.events.len()
+    }
+
+    /// Recorded communications of one kind (post-resume events only; the
+    /// resumed base is not broken down by kind).
     pub fn count_kind(&self, kind: CommKind) -> usize {
         self.events.iter().filter(|e| e.kind == kind).count()
     }
 
-    /// Total bytes across all recorded communications.
+    /// Total bytes across all recorded communications (including any
+    /// resumed-from base).
     pub fn total_bytes(&self) -> u64 {
-        self.events.iter().map(|e| e.bytes).sum()
+        self.base_bytes + self.events.iter().map(|e| e.bytes).sum::<u64>()
     }
 
     /// Bytes that crossed the WAN tier (== [`Self::total_bytes`] on a
     /// flat cluster) — the axis the hierarchical topology shrinks.
     pub fn wan_bytes(&self) -> u64 {
-        self.events
-            .iter()
-            .filter(|e| e.scope == CommScope::Wan)
-            .map(|e| e.bytes)
-            .sum()
+        self.base_wan_bytes
+            + self
+                .events
+                .iter()
+                .filter(|e| e.scope == CommScope::Wan)
+                .map(|e| e.bytes)
+                .sum::<u64>()
     }
 
     /// Total bytes of one event kind.
@@ -195,6 +217,24 @@ impl CommCost {
     }
 }
 
+/// A non-blocking collective in flight (DESIGN.md §8): the priced cost,
+/// when the last contribution was posted, and when the transfer
+/// completes. Produced by [`CommLayer::begin_sync`]; the ledger rows
+/// land only when [`CommLayer::complete_sync`] retires the handle, so
+/// the in-flight byte gauge always balances back to zero at run end.
+#[derive(Clone, Debug)]
+pub struct SyncHandle {
+    /// What the in-flight collective is for.
+    pub kind: CommKind,
+    /// The priced cost (duration + ledger phases) captured at post time,
+    /// including any scenario bandwidth factor then in effect.
+    pub cost: CommCost,
+    /// Virtual time the last participant posted its contribution.
+    pub posted_at: f64,
+    /// Virtual time the collective completes (`posted_at + cost.time_s`).
+    pub completes_at: f64,
+}
+
 /// The comm layer a run owns: the two network tiers, the collectives
 /// pricing syncs and merges, and the ledger every phase lands in.
 pub struct CommLayer {
@@ -207,6 +247,10 @@ pub struct CommLayer {
     sync: &'static dyn Collective,
     /// Collective pricing MIT merges (gather at the representative).
     merge: &'static dyn Collective,
+    /// Bytes currently travelling in non-blocking collectives (delayed
+    /// overlap mode): incremented at `begin_sync`, released at
+    /// `complete_sync`. Always zero in blocking mode and at run end.
+    in_flight_bytes: u64,
     /// The run-wide communication ledger.
     pub ledger: CommLedger,
 }
@@ -225,8 +269,43 @@ impl CommLayer {
             },
             sync: collective_for(cfg.sync_collective),
             merge: &GATHER,
+            in_flight_bytes: 0,
             ledger: CommLedger::default(),
         }
+    }
+
+    /// Bytes currently in flight in non-blocking collectives.
+    pub fn in_flight_bytes(&self) -> u64 {
+        self.in_flight_bytes
+    }
+
+    /// Post a non-blocking collective (DESIGN.md §8): the priced cost
+    /// starts travelling at `posted_at` and completes `cost.time_s`
+    /// later. Nothing lands in the ledger yet — the returned handle is
+    /// retired through [`Self::complete_sync`] when the delayed outer
+    /// update applies.
+    pub fn begin_sync(&mut self, kind: CommKind, cost: CommCost, posted_at: f64) -> SyncHandle {
+        self.in_flight_bytes += cost.total_bytes();
+        let completes_at = posted_at + cost.time_s;
+        SyncHandle { kind, cost, posted_at, completes_at }
+    }
+
+    /// Retire an in-flight collective: release its bytes from the
+    /// in-flight gauge and land its ledger rows, stamped with the
+    /// *completion* time captured at post (the transfer ran concurrently
+    /// with compute, so completion — not application — is the honest
+    /// timestamp).
+    pub fn complete_sync(&mut self, handle: &SyncHandle, at_inner_step: u64) {
+        debug_assert!(self.in_flight_bytes >= handle.cost.total_bytes());
+        self.in_flight_bytes -= handle.cost.total_bytes();
+        self.record(handle.kind, &handle.cost, handle.completes_at, at_inner_step);
+    }
+
+    /// Re-adopt an in-flight collective restored from a checkpoint
+    /// (resume rebuilds the pending handle; the gauge must account its
+    /// bytes again so the eventual `complete_sync` balances).
+    pub fn adopt_in_flight(&mut self, handle: &SyncHandle) {
+        self.in_flight_bytes += handle.cost.total_bytes();
     }
 
     /// Flat pricing: one round of `coll` among all `m` members over the
@@ -422,6 +501,53 @@ mod tests {
         assert_eq!(l.wan_bytes(), 100, "intra bytes stay off the WAN tally");
         assert_eq!(l.bytes_kind(CommKind::Merge), 50);
         assert_eq!(l.cumulative_by_step(), vec![(10, 1), (20, 2)]);
+    }
+
+    #[test]
+    fn begin_complete_sync_balances_in_flight_and_records_at_completion() {
+        let c = presets::mock_default().cluster;
+        let mut layer = CommLayer::new(&c);
+        let topo = Topology::compile(&c);
+        let cost = layer.sync_cost(1_000, &[0, 1, 2], &topo, 1.0);
+        let total = cost.total_bytes();
+        let d = cost.time_s;
+        assert_eq!(layer.in_flight_bytes(), 0);
+        let h = layer.begin_sync(CommKind::OuterSync, cost, 5.0);
+        assert_eq!(layer.in_flight_bytes(), total, "posted bytes are in flight");
+        assert_eq!(h.posted_at, 5.0);
+        assert_eq!(h.completes_at.to_bits(), (5.0 + d).to_bits());
+        assert!(layer.ledger.events.is_empty(), "nothing lands before completion");
+        layer.complete_sync(&h, 77);
+        assert_eq!(layer.in_flight_bytes(), 0, "gauge balances back to zero");
+        assert_eq!(layer.ledger.count(), 1);
+        let ev = &layer.ledger.events[0];
+        assert_eq!(ev.bytes, total);
+        assert_eq!(ev.at_inner_step, 77);
+        assert_eq!(ev.at_virtual_s.to_bits(), h.completes_at.to_bits());
+        // resume adoption re-arms the gauge without touching the ledger
+        layer.adopt_in_flight(&h);
+        assert_eq!(layer.in_flight_bytes(), total);
+        assert_eq!(layer.ledger.count(), 1);
+    }
+
+    #[test]
+    fn ledger_resume_offsets_continue_the_counters() {
+        let mut l = CommLedger::default();
+        l.resume_from(3, 600, 400);
+        assert_eq!(l.count(), 3);
+        assert_eq!(l.total_bytes(), 600);
+        assert_eq!(l.wan_bytes(), 400);
+        l.record(CommEvent {
+            kind: CommKind::OuterSync,
+            scope: CommScope::Intra,
+            at_virtual_s: 1.0,
+            bytes: 50,
+            participants: 2,
+            at_inner_step: 5,
+        });
+        assert_eq!(l.count(), 4);
+        assert_eq!(l.total_bytes(), 650);
+        assert_eq!(l.wan_bytes(), 400, "intra event adds nothing to the WAN tally");
     }
 
     /// A hierarchical cluster config: 4 nodes grouped [[0,1],[2,3]]

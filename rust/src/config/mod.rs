@@ -342,6 +342,56 @@ impl TopologyKind {
     }
 }
 
+/// How outer syncs overlap with compute (DESIGN.md §8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// The historical rendezvous: workers barrier at the outer boundary
+    /// and pay the full collective time before the outer update applies.
+    /// Bit-identical to every pre-overlap release.
+    Blocking,
+    /// ACCO-style delayed application: the round-k collective is posted
+    /// non-blocking at the boundary and its outer update applies one
+    /// outer round later, so round k+1's compute runs on parameters
+    /// stale by exactly one update while the transfer is in flight.
+    /// Workers only stall for whatever part of the collective the next
+    /// round's compute could not hide.
+    Delayed,
+}
+
+impl OverlapMode {
+    /// Parse a CLI/config overlap-mode name.
+    pub fn parse(s: &str) -> Result<OverlapMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "blocking" => Ok(OverlapMode::Blocking),
+            "delayed" => Ok(OverlapMode::Delayed),
+            _ => bail!("unknown overlap mode {s:?} (blocking|delayed)"),
+        }
+    }
+
+    /// Canonical lowercase name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OverlapMode::Blocking => "blocking",
+            OverlapMode::Delayed => "delayed",
+        }
+    }
+}
+
+/// Communication-behaviour knobs (the comm layer's config block; the
+/// network *shapes* stay under `cluster.*` where they always lived).
+#[derive(Clone, Debug)]
+pub struct CommConfig {
+    /// Outer-sync overlap mode (DESIGN.md §8). `Blocking` reproduces
+    /// the pre-overlap output bit-for-bit.
+    pub overlap: OverlapMode,
+}
+
+impl Default for CommConfig {
+    fn default() -> Self {
+        CommConfig { overlap: OverlapMode::Blocking }
+    }
+}
+
 /// Which collective prices the outer sync (the pluggable-collective
 /// axis of the comm layer; cost table in `comm::collective`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -536,6 +586,8 @@ pub struct Config {
     pub data: DataConfig,
     /// Simulated cluster + dynamic workload.
     pub cluster: ClusterConfig,
+    /// Communication behaviour (outer-sync overlap mode).
+    pub comm: CommConfig,
     /// Run schedule (eval cadence, checkpoints, scheduler, threads).
     pub run: RunConfig,
     /// Metrics output directory (JSONL/CSV); None = in-memory only.
@@ -723,6 +775,11 @@ fn apply_json(cfg: &mut Config, v: &JsonValue) -> Result<()> {
     }
     if let Some(c) = v.get("cluster") {
         apply_cluster(&mut cfg.cluster, c)?;
+    }
+    if let Some(c) = v.get("comm") {
+        if let Some(x) = c.get("overlap").and_then(|x| x.as_str()) {
+            cfg.comm.overlap = OverlapMode::parse(x)?;
+        }
     }
     if let Some(r) = v.get("run") {
         apply_run(&mut cfg.run, r)?;
@@ -1210,6 +1267,23 @@ mod tests {
         flat.cluster.topology = TopologyKind::Flat;
         flat.cluster.groups = vec![vec![0], vec![]];
         flat.validate().unwrap();
+    }
+
+    #[test]
+    fn overlap_override_and_parse() {
+        let mut cfg = presets::mock_default();
+        assert_eq!(cfg.comm.overlap, OverlapMode::Blocking, "blocking is the default");
+        cfg.apply_override("comm.overlap=delayed").unwrap();
+        assert_eq!(cfg.comm.overlap, OverlapMode::Delayed);
+        cfg.validate().unwrap();
+        assert!(cfg.apply_override("comm.overlap=sometimes").is_err());
+        assert_eq!(OverlapMode::Delayed.as_str(), "delayed");
+        assert_eq!(OverlapMode::parse("BLOCKING").unwrap(), OverlapMode::Blocking);
+        // delayed composes with both schedulers and topologies
+        cfg.run.scheduler = SchedulerKind::Event;
+        cfg.validate().unwrap();
+        cfg.run.scheduler = SchedulerKind::Lockstep;
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub fn by_name(name: &str) -> Option<Config> {
         "quick" => Some(quick()),
         "hetero_dynamic" => Some(hetero_dynamic()),
         "hierarchical_mit" => Some(hierarchical_mit()),
+        "adloco_overlap" => Some(adloco_overlap()),
         _ => None,
     }
 }
@@ -26,6 +27,7 @@ pub fn preset_names() -> &'static [&'static str] {
         "quick",
         "hetero_dynamic",
         "hierarchical_mit",
+        "adloco_overlap",
     ]
 }
 
@@ -112,6 +114,7 @@ pub fn paper_table1() -> Config {
             seed: 7,
         },
         cluster: base_cluster(4, 64), // 4 simulated GPUs (paper §6.1)
+        comm: CommConfig::default(), // blocking outer syncs (DESIGN.md §8)
         run: RunConfig {
             eval_every: 10, // paper: eval every 10 steps
             eval_batches: 4,
@@ -254,6 +257,18 @@ pub fn hierarchical_mit() -> Config {
     cfg
 }
 
+/// The `hetero_dynamic` schedule with ACCO-style delayed outer syncs
+/// (DESIGN.md §8): the round-k collective is posted non-blocking and its
+/// outer update applies one round late, hiding the transfer under the
+/// next round's compute — the overlap lever AdLoCo's adaptive batching
+/// complements (`benches/fig4_overlap.rs` measures the saving).
+pub fn adloco_overlap() -> Config {
+    let mut cfg = hetero_dynamic();
+    cfg.name = "adloco_overlap".into();
+    cfg.comm.overlap = OverlapMode::Delayed;
+    cfg
+}
+
 /// Minimal smoke-run preset (seconds, MockEngine).
 pub fn quick() -> Config {
     let mut cfg = mock_default();
@@ -295,5 +310,28 @@ mod tests {
             cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn overlap_preset_is_delayed_hetero_dynamic() {
+        let overlap = adloco_overlap();
+        assert_eq!(overlap.comm.overlap, OverlapMode::Delayed);
+        // every preset other than the overlap one keeps blocking syncs
+        for name in preset_names() {
+            let cfg = by_name(name).unwrap();
+            let want = if *name == "adloco_overlap" {
+                OverlapMode::Delayed
+            } else {
+                OverlapMode::Blocking
+            };
+            assert_eq!(cfg.comm.overlap, want, "{name}");
+        }
+        // the twin relationship: same cluster/scenario/schedule as
+        // hetero_dynamic, only the overlap knob differs
+        let hetero = hetero_dynamic();
+        assert_eq!(overlap.algo.outer_steps, hetero.algo.outer_steps);
+        assert_eq!(overlap.cluster.nodes.len(), hetero.cluster.nodes.len());
+        assert_eq!(overlap.cluster.scenario.churn, hetero.cluster.scenario.churn);
+        assert_eq!(overlap.run.scheduler, SchedulerKind::Event);
     }
 }

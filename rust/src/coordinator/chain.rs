@@ -2,6 +2,13 @@
 //! (DESIGN.md §6): the single `exec_step` / `step_compute_time`
 //! implementation every scheduler path calls, and the chain a pool
 //! thread runs for one worker's whole inner loop of an outer round.
+//!
+//! The delayed-overlap mode (DESIGN.md §8) needs no changes here by
+//! design: chains only ever run *between* outer boundaries, and both
+//! the non-blocking post and the one-round-late apply sit at the
+//! boundary where the coordinator is single-threaded — so a chain
+//! cannot observe whether the parameters it was broadcast are fresh or
+//! one update stale.
 
 use crate::batching::StepPlan;
 use crate::cluster::NodeModel;

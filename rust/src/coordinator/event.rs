@@ -135,6 +135,7 @@ impl Coordinator {
                     batch: r.plan.micro_batch,
                     requested_batch: tr.controller.requested(),
                     accum_steps: r.plan.accum_steps,
+                    clamped: r.plan.clamped,
                     loss: stats.loss,
                     grad_sq_norm: stats.grad_sq_norm,
                     sigma2: stats.sigma2,
@@ -150,7 +151,9 @@ impl Coordinator {
 
         // ---- outer sync over active workers, in trainer order, priced
         //      by the comm layer (topology-aware: intra-group reduces +
-        //      a leader round over the WAN under hierarchical) ----------
+        //      a leader round over the WAN under hierarchical). Delayed
+        //      overlap posts the collective non-blocking and applies the
+        //      previous round's update instead (DESIGN.md §8) ----------
         let param_bytes = (self.engine.param_count() * 4) as u64;
         for &ti in &live {
             let members: Vec<(usize, usize)> = self.trainers[ti]
@@ -172,6 +175,10 @@ impl Coordinator {
                 .cluster
                 .scenario
                 .min_bandwidth_factor(member_nodes.iter().copied(), t_start);
+            if self.overlap_delayed() {
+                self.outer_sync_delayed(ti, &slots, &member_nodes, factor);
+                continue;
+            }
             let cost = self.comm.sync_cost(
                 param_bytes,
                 &member_nodes,
@@ -211,6 +218,21 @@ impl Coordinator {
 
         // ---- seed the queue with every active worker's first step -------
         let mut queue = EventQueue::new();
+        // delayed overlap: surface each in-flight collective's completion
+        // as a SyncComplete marker so the event trace shows when the
+        // round-(k−1) transfer lands relative to round k's compute. Pure
+        // bookkeeping — the apply itself happens at the outer boundary
+        // (DESIGN.md §8), so popping the marker changes no numerics.
+        if self.overlap_delayed() {
+            for &ti in live {
+                if let Some(p) = &self.pending_syncs[ti] {
+                    queue.push(
+                        p.handle.completes_at,
+                        SimEvent::SyncComplete { trainer: ti },
+                    );
+                }
+            }
+        }
         for &ti in live {
             let plan = runs[ti].as_ref().unwrap().plan;
             for wi in 0..self.trainers[ti].workers.len() {
@@ -304,10 +326,13 @@ impl Coordinator {
                         queue.push(t, SimEvent::SyncArrive { trainer: ti, worker: wi });
                     }
                 }
-                // Arrival markers: the rendezvous itself is the queue
-                // draining — every active worker has posted its arrival
-                // by then.
-                SimEvent::SyncArrive { .. } | SimEvent::MergeArrive { .. } => {}
+                // Arrival/completion markers: the rendezvous itself is
+                // the queue draining — every active worker has posted
+                // its arrival by then — and delayed-overlap completions
+                // apply at the boundary, not at their pop.
+                SimEvent::SyncArrive { .. }
+                | SimEvent::MergeArrive { .. }
+                | SimEvent::SyncComplete { .. } => {}
             }
         }
         Ok(hit_target)

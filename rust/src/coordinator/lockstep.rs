@@ -51,13 +51,21 @@ impl Coordinator {
 
         // ---- outer sync (Algorithm 3 lines 40-44), priced by the comm
         //      layer: one collective round over the trainer's workers
-        //      (topology-aware; flat ring == the historical formulas) ----
+        //      (topology-aware; flat ring == the historical formulas).
+        //      Delayed overlap posts the collective non-blocking and
+        //      applies the previous round's update one round late
+        //      instead (DESIGN.md §8; one shared helper keeps the
+        //      lockstep and event walks bit-for-bit identical) --------
         let param_bytes = (self.engine.param_count() * 4) as u64;
         for &ti in &live {
             let member_nodes: Vec<usize> =
                 self.trainers[ti].workers.iter().map(|w| w.node).collect();
             let slots: Vec<usize> =
                 self.trainers[ti].workers.iter().map(|w| w.clock_slot).collect();
+            if self.overlap_delayed() {
+                self.outer_sync_delayed(ti, &slots, &member_nodes, 1.0);
+                continue;
+            }
             let cost =
                 self.comm
                     .sync_cost(param_bytes, &member_nodes, &self.cluster.topology, 1.0);
@@ -108,6 +116,7 @@ impl Coordinator {
                 batch: plan.micro_batch,
                 requested_batch: tr.controller.requested(),
                 accum_steps: plan.accum_steps,
+                clamped: plan.clamped,
                 loss: stats.loss,
                 grad_sq_norm: stats.grad_sq_norm,
                 sigma2: stats.sigma2,

@@ -77,6 +77,12 @@ impl Coordinator {
         if selected.len() < 2 {
             return Ok(());
         }
+        // a merge is a full rendezvous: any delayed outer update still in
+        // flight for a participant drains (applies) first, so the merged
+        // parameters include every posted collective (DESIGN.md §8)
+        for &id in &selected {
+            self.drain_pending(id);
+        }
 
         // barrier every worker of the merging trainers + transfer time
         let param_bytes = (self.engine.param_count() * 4) as u64;
@@ -101,6 +107,11 @@ impl Coordinator {
         let selected = self.select_merge();
         if selected.len() < 2 {
             return Ok(());
+        }
+        // drain in-flight delayed updates of every participant before the
+        // consolidation (same rule as the lockstep flavour — DESIGN.md §8)
+        for &id in &selected {
+            self.drain_pending(id);
         }
 
         let mut slots: Vec<usize> = Vec::new();

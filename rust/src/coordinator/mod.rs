@@ -55,6 +55,14 @@
 //! parallel run is bit-identical to the serial one
 //! (`tests/determinism_parallel.rs`). Threads buy wall-clock only; they
 //! never change a result.
+//!
+//! Outer syncs come in two overlap flavours (DESIGN.md §8,
+//! `comm.overlap`): the default **blocking** rendezvous (bit-identical
+//! to every pre-overlap release), and the ACCO-style **delayed** mode
+//! where the collective posts non-blocking and its outer update applies
+//! one round late — round k+1 computes on parameters stale by one
+//! update while round k's transfer drains concurrently, and workers
+//! stall only for whatever residue the compute could not hide.
 
 mod chain;
 mod event;
@@ -65,8 +73,8 @@ mod tests;
 
 use crate::batching::{plan_step, StepPlan};
 use crate::cluster::{assign_workers, ClusterState};
-use crate::comm::{CommLayer, CommLedger};
-use crate::config::{Config, Method, SchedulerKind};
+use crate::comm::{CommKind, CommLayer, CommLedger, SyncHandle};
+use crate::config::{Config, Method, OverlapMode, SchedulerKind};
 use crate::data::{make_shards, Corpus, CorpusSpec, TokenBatch};
 use crate::engine::{StepStats, TrainEngine};
 use crate::metrics::{perplexity, EvalRecord, Recorder};
@@ -74,6 +82,20 @@ use crate::trainer::Trainer;
 use crate::util::Rng;
 use anyhow::Result;
 use chain::{exec_step, step_compute_time, StepScratch};
+
+/// A delayed outer update in flight (DESIGN.md §8): the non-blocking
+/// collective's handle plus the outer delta it will apply one round
+/// late. The delta is captured at post time because the workers' buffers
+/// are overwritten by the next round's broadcast.
+pub(crate) struct PendingSync {
+    /// The in-flight collective (cost, post time, completion time).
+    pub(crate) handle: SyncHandle,
+    /// Δ = x_ref − mean(active workers), frozen at post time.
+    pub(crate) delta: Vec<f32>,
+    /// `total_samples` at post time — the C(N) axis stamp the ledger
+    /// row carries when the collective completes.
+    pub(crate) sent_samples: u64,
+}
 
 /// Outcome summary of a run (full series live in the recorder).
 ///
@@ -114,6 +136,12 @@ pub struct RunResult {
     pub mean_utilization: f64,
     /// (step, time, comms) at which target_ppl was first reached, if ever.
     pub time_to_target: Option<(u64, f64, usize)>,
+    /// Collective seconds hidden under compute by the delayed-overlap
+    /// mode (DESIGN.md §8): per applied sync, `min(comm, time until the
+    /// next boundary)` — the wall-clock the overlap saved versus
+    /// blocking on the same schedule. Zero in blocking mode. Part of
+    /// the determinism contract like every other payload field.
+    pub overlap_hidden_s: f64,
     /// Host wall-clock seconds spent inside `Coordinator::run` — NOT part
     /// of the determinism contract (it varies run to run); the observable
     /// behind the §Perf speedup table.
@@ -176,6 +204,12 @@ pub struct Coordinator {
     batch_bufs: Vec<TokenBatch>,
     /// Samples consumed across the run (the N axis of Theorem 2).
     total_samples: u64,
+    /// Per-trainer delayed outer updates in flight (DESIGN.md §8).
+    /// Always all-`None` in blocking mode.
+    pending_syncs: Vec<Option<PendingSync>>,
+    /// Run-level sum of per-sync hidden collective seconds (the
+    /// `RunResult::overlap_hidden_s` accumulator).
+    overlap_hidden_s: f64,
     /// Inner-lr schedule (evaluated on each trainer's inner-step count).
     lr_schedule: crate::schedule::Schedule,
     /// Resolved thread count for the parallel runtime (>= 1).
@@ -251,6 +285,8 @@ impl Coordinator {
             accum_scratch: vec![0.0; p],
             batch_bufs: Vec::new(),
             total_samples: 0,
+            pending_syncs: (0..k).map(|_| None).collect(),
+            overlap_hidden_s: 0.0,
             lr_schedule: crate::schedule::Schedule::from_config(
                 &cfg.algo.lr_schedule,
                 (cfg.algo.outer_steps * cfg.algo.inner_steps) as u64,
@@ -273,6 +309,13 @@ impl Coordinator {
     /// The communication ledger accumulated so far.
     pub fn ledger(&self) -> &CommLedger {
         &self.comm.ledger
+    }
+
+    /// Bytes currently travelling in non-blocking collectives
+    /// (DESIGN.md §8). Zero in blocking mode and after every run
+    /// completes — the end-of-run drain retires all handles.
+    pub fn in_flight_bytes(&self) -> u64 {
+        self.comm.in_flight_bytes()
     }
 
     /// Resolved thread count of the parallel runtime (>= 1).
@@ -317,7 +360,9 @@ impl Coordinator {
         }
         let outer_steps = self.cfg.algo.outer_steps as u64;
         let every = self.cfg.run.checkpoint_every as u64;
+        let mut last_t = start.min(outer_steps);
         for t in start..=outer_steps {
+            last_t = t;
             let hit = match self.cfg.run.scheduler {
                 SchedulerKind::Lockstep if self.threads <= 1 => self.step_outer(t)?,
                 _ => self.step_outer_event(t)?,
@@ -333,54 +378,118 @@ impl Coordinator {
                 break;
             }
         }
+        self.drain_overlap(last_t)?;
         self.record_utilization();
         self.run_wall_s = wall0.elapsed().as_secs_f64();
         self.recorder.wall_clock_s = self.run_wall_s;
         Ok(self.result())
     }
 
-    /// Capture the trainer pool for checkpointing.
+    /// Capture the full run state for checkpointing (the exact-resume
+    /// contract: everything the remaining rounds read — parameters,
+    /// optimizer state, every stochastic stream mid-sequence, sampler
+    /// positions, controller statistics, time accounting, ledger
+    /// counters and in-flight delayed syncs).
     pub fn snapshot(&self, outer_step: u64) -> crate::checkpoint::Checkpoint {
-        use crate::checkpoint::{Checkpoint, TrainerSnapshot, WorkerSnapshot};
+        use crate::checkpoint::{
+            Checkpoint, PendingSnapshot, PhaseSnapshot, RngSnapshot, SamplerSnapshot,
+            TrainerSnapshot, WorkerSnapshot,
+        };
+        use crate::comm::CommScope;
+        let sampler_snap = |w: &crate::trainer::Worker| -> SamplerSnapshot {
+            let st = w.sampler.export_state();
+            SamplerSnapshot {
+                shard: st.shard,
+                order: st.order,
+                cursor: st.cursor,
+                drawn: st.drawn,
+                rng: RngSnapshot { s: st.rng.0, gauss_spare: st.rng.1 },
+            }
+        };
         Checkpoint {
             config_name: self.cfg.name.clone(),
             outer_step,
             total_samples: self.total_samples,
             comm_count: self.comm.ledger.count() as u64,
             comm_bytes: self.comm.ledger.total_bytes(),
+            comm_wan_bytes: self.comm.ledger.wan_bytes(),
+            overlap_hidden_s: self.overlap_hidden_s,
             clock_times: (0..self.cluster.clock.len())
                 .map(|w| self.cluster.clock.time(w))
                 .collect(),
+            busy_s: self.cluster.busy_s.clone(),
+            wait_s: self.cluster.wait_s.clone(),
+            comm_s: self.cluster.comm_s.clone(),
+            comm_hidden_s: self.cluster.comm_hidden_s.clone(),
+            preempted_s: self.cluster.preempted_s.clone(),
+            rng: RngSnapshot::of(&self.rng),
             trainers: self
                 .trainers
                 .iter()
                 .filter(|t| t.alive)
-                .map(|t| TrainerSnapshot {
-                    id: t.id,
-                    params: t.params.clone(),
-                    outer_velocity: t.outer.velocity().to_vec(),
-                    requested_batch: t.controller.requested(),
-                    inner_steps_done: t.inner_steps_done,
-                    workers: t
-                        .workers
-                        .iter()
-                        .map(|w| WorkerSnapshot {
-                            params: w.state.params.clone(),
-                            m: w.state.m.clone(),
-                            v: w.state.v.clone(),
-                            step: w.state.step,
-                        })
-                        .collect(),
+                .map(|t| {
+                    let ctrl = t.controller.export_state();
+                    TrainerSnapshot {
+                        id: t.id,
+                        params: t.params.clone(),
+                        outer_velocity: t.outer.velocity().to_vec(),
+                        requested_batch: ctrl.requested,
+                        inner_steps_done: t.inner_steps_done,
+                        observations: ctrl.observations,
+                        sigma2_ema: ctrl.sigma2_ema,
+                        ip_var_ema: ctrl.ip_var_ema,
+                        s1_ema: ctrl.s1_ema,
+                        shard: t.shard.indices.clone(),
+                        pending: self.pending_syncs[t.id].as_ref().map(|p| {
+                            PendingSnapshot {
+                                posted_at: p.handle.posted_at,
+                                completes_at: p.handle.completes_at,
+                                time_s: p.handle.cost.time_s,
+                                sent_samples: p.sent_samples,
+                                phases: p
+                                    .handle
+                                    .cost
+                                    .phases
+                                    .iter()
+                                    .map(|ph| PhaseSnapshot {
+                                        wan: ph.scope == CommScope::Wan,
+                                        bytes: ph.bytes,
+                                        participants: ph.participants,
+                                    })
+                                    .collect(),
+                                delta: p.delta.clone(),
+                            }
+                        }),
+                        workers: t
+                            .workers
+                            .iter()
+                            .map(|w| WorkerSnapshot {
+                                params: w.state.params.clone(),
+                                m: w.state.m.clone(),
+                                v: w.state.v.clone(),
+                                step: w.state.step,
+                                active: w.active,
+                                noise_rng: RngSnapshot::of(&w.noise_rng),
+                                time_rng: RngSnapshot::of(&w.time_rng),
+                                sampler: sampler_snap(w),
+                            })
+                            .collect(),
+                    }
                 })
                 .collect(),
         }
     }
 
-    /// Restore trainer state from a checkpoint. Trainers present in the
-    /// coordinator but absent from the checkpoint were merged away before
-    /// the snapshot and are marked dead. Data-pipeline position restarts
-    /// from the config seed (see checkpoint module docs).
+    /// Restore the full run state from a checkpoint. Trainers present in
+    /// the coordinator but absent from the checkpoint were merged away
+    /// before the snapshot and are marked dead. The restore is exact:
+    /// RNG streams, sampler positions, controller statistics, time
+    /// accounting, ledger counters and in-flight delayed syncs all
+    /// continue bit-for-bit (`tests/checkpoint_resume.rs`).
     pub fn restore(&mut self, cp: &crate::checkpoint::Checkpoint) -> Result<()> {
+        use crate::batching::ControllerState;
+        use crate::comm::{CommCost, CommPhase, CommScope};
+        use crate::data::SamplerState;
         use anyhow::ensure;
         let p = self.engine.param_count();
         for t in &mut self.trainers {
@@ -408,14 +517,65 @@ impl Coordinator {
             t.alive = true;
             t.params.copy_from_slice(&snap.params);
             t.outer.set_velocity(&snap.outer_velocity);
-            t.controller.set_requested(snap.requested_batch);
+            t.controller.restore_state(&ControllerState {
+                requested: snap.requested_batch,
+                observations: snap.observations,
+                sigma2_ema: snap.sigma2_ema,
+                ip_var_ema: snap.ip_var_ema,
+                s1_ema: snap.s1_ema,
+            });
             t.inner_steps_done = snap.inner_steps_done;
+            t.shard = crate::data::Shard { indices: snap.shard.clone() };
             for (w, ws) in t.workers.iter_mut().zip(snap.workers.iter()) {
                 w.state.params.copy_from_slice(&ws.params);
                 w.state.m.copy_from_slice(&ws.m);
                 w.state.v.copy_from_slice(&ws.v);
                 w.state.step = ws.step;
+                w.active = ws.active;
+                w.noise_rng = ws.noise_rng.to_rng();
+                w.time_rng = ws.time_rng.to_rng();
+                w.sampler = crate::data::BatchSampler::from_state(SamplerState {
+                    shard: ws.sampler.shard.clone(),
+                    order: ws.sampler.order.clone(),
+                    cursor: ws.sampler.cursor,
+                    drawn: ws.sampler.drawn,
+                    rng: (ws.sampler.rng.s, ws.sampler.rng.gauss_spare),
+                });
             }
+            // re-arm any delayed collective that was in flight
+            let pending = match &snap.pending {
+                None => None,
+                Some(pj) => {
+                    let handle = SyncHandle {
+                        kind: CommKind::OuterSync,
+                        cost: CommCost {
+                            time_s: pj.time_s,
+                            phases: pj
+                                .phases
+                                .iter()
+                                .map(|ph| CommPhase {
+                                    scope: if ph.wan {
+                                        CommScope::Wan
+                                    } else {
+                                        CommScope::Intra
+                                    },
+                                    bytes: ph.bytes,
+                                    participants: ph.participants,
+                                })
+                                .collect(),
+                        },
+                        posted_at: pj.posted_at,
+                        completes_at: pj.completes_at,
+                    };
+                    self.comm.adopt_in_flight(&handle);
+                    Some(PendingSync {
+                        handle,
+                        delta: pj.delta.clone(),
+                        sent_samples: pj.sent_samples,
+                    })
+                }
+            };
+            self.pending_syncs[snap.id] = pending;
         }
         for (w, &t) in cp.clock_times.iter().enumerate().map(|(i, t)| (i, t)) {
             if w < self.cluster.clock.len() {
@@ -425,6 +585,26 @@ impl Coordinator {
                 }
             }
         }
+        // per-slot time accounting continues the saved f64 sequences
+        let slots = self.cluster.busy_s.len();
+        for (dst, src) in [
+            (&mut self.cluster.busy_s, &cp.busy_s),
+            (&mut self.cluster.wait_s, &cp.wait_s),
+            (&mut self.cluster.comm_s, &cp.comm_s),
+            (&mut self.cluster.comm_hidden_s, &cp.comm_hidden_s),
+            (&mut self.cluster.preempted_s, &cp.preempted_s),
+        ] {
+            for (w, &v) in src.iter().enumerate().take(slots) {
+                dst[w] = v;
+            }
+        }
+        self.rng = cp.rng.to_rng();
+        self.overlap_hidden_s = cp.overlap_hidden_s;
+        self.comm.ledger.resume_from(
+            cp.comm_count as usize,
+            cp.comm_bytes,
+            cp.comm_wan_bytes,
+        );
         self.total_samples = cp.total_samples;
         Ok(())
     }
@@ -501,6 +681,131 @@ impl Coordinator {
         let jitter = self.cfg.cluster.step_jitter;
         let w = &mut self.trainers[ti].workers[wi];
         step_compute_time(&self.cluster.nodes[w.node], plan, width, jitter, &mut w.time_rng)
+    }
+
+    /// True when the run uses ACCO-style delayed outer syncs
+    /// (DESIGN.md §8): collectives post non-blocking and outer updates
+    /// apply one round late.
+    pub(crate) fn overlap_delayed(&self) -> bool {
+        self.cfg.comm.overlap == OverlapMode::Delayed
+    }
+
+    /// The delayed-overlap outer boundary of trainer `ti`
+    /// (DESIGN.md §8), shared verbatim by the lockstep walk and the
+    /// event scheduler so the two stay bit-identical on static clusters:
+    ///
+    /// 1. freeze this round's delta over the active workers (the next
+    ///    broadcast overwrites their buffers),
+    /// 2. post the collective non-blocking at the cohort front `t_send`
+    ///    (the completion can't precede the last contribution),
+    /// 3. apply the *previous* round's update, stalling only for the
+    ///    part of its transfer this round's compute did not hide.
+    pub(crate) fn outer_sync_delayed(
+        &mut self,
+        ti: usize,
+        slots: &[usize],
+        member_nodes: &[usize],
+        bw_factor: f64,
+    ) {
+        let param_bytes = (self.engine.param_count() * 4) as u64;
+        let t_send = slots
+            .iter()
+            .map(|&s| self.cluster.clock.time(s))
+            .fold(0.0_f64, f64::max);
+        let cost =
+            self.comm
+                .sync_cost(param_bytes, member_nodes, &self.cluster.topology, bw_factor);
+        let mut delta = vec![0.0f32; self.engine.param_count()];
+        if !self.trainers[ti].active_delta(&mut delta) {
+            // fully-preempted cohort: nothing to post this round (the
+            // blocking epilogue is the same no-op); any older pending
+            // update keeps waiting for the next live boundary
+            return;
+        }
+        let handle = self.comm.begin_sync(CommKind::OuterSync, cost, t_send);
+        let prev = self.pending_syncs[ti].replace(PendingSync {
+            handle,
+            delta,
+            sent_samples: self.total_samples,
+        });
+        match prev {
+            Some(prev) => self.apply_pending(ti, slots, prev),
+            // first boundary: nothing to apply yet, but the cohort still
+            // aligns (zero comm) before the next broadcast
+            None => {
+                self.cluster.barrier_tracked(slots, 0.0);
+            }
+        }
+    }
+
+    /// Apply a delayed update at the current cohort front: barrier the
+    /// members charging only the *exposed* residue of the transfer as
+    /// comm time, credit the hidden part, land the ledger rows at the
+    /// completion timestamp captured at post, and step the outer
+    /// optimizer along the (one-round-stale) delta — Nesterov velocity
+    /// continues in application order across the delay.
+    fn apply_pending(&mut self, ti: usize, slots: &[usize], prev: PendingSync) {
+        let t_start = slots
+            .iter()
+            .map(|&s| self.cluster.clock.time(s))
+            .fold(0.0_f64, f64::max);
+        let exposed = (prev.handle.completes_at - t_start).max(0.0);
+        self.cluster.barrier_tracked(slots, exposed);
+        // hidden = min(transfer, time since post) — the cohort front can
+        // never sit before the post point, so this is non-negative; the
+        // max(0.0) only guards float dust
+        let hidden = (prev.handle.cost.time_s - exposed).max(0.0);
+        self.cluster.charge_hidden(slots, hidden);
+        self.overlap_hidden_s += hidden;
+        self.comm.complete_sync(&prev.handle, prev.sent_samples);
+        let tr = &mut self.trainers[ti];
+        tr.outer.step(&mut tr.params, &prev.delta);
+    }
+
+    /// Retire trainer `ti`'s in-flight update immediately (merge
+    /// rendezvous and end-of-run drains): the cohort waits out whatever
+    /// part of the transfer has not completed, then the update applies.
+    pub(crate) fn drain_pending(&mut self, ti: usize) {
+        let Some(prev) = self.pending_syncs[ti].take() else { return };
+        let mut slots: Vec<usize> = self.trainers[ti]
+            .workers
+            .iter()
+            .filter(|w| w.active)
+            .map(|w| w.clock_slot)
+            .collect();
+        if slots.is_empty() {
+            // fully-preempted cohort: fall back to the frozen clocks,
+            // like the merge rendezvous does
+            slots =
+                self.trainers[ti].workers.iter().map(|w| w.clock_slot).collect();
+        }
+        self.apply_pending(ti, &slots, prev);
+    }
+
+    /// End-of-run drain of the delayed-overlap mode (DESIGN.md §8):
+    /// every live trainer's final update applies (fully exposed — there
+    /// is no next round to hide it under), then one last evaluation
+    /// records the fully-applied parameters.
+    fn drain_overlap(&mut self, outer_t: u64) -> Result<()> {
+        if !self.overlap_delayed() {
+            return Ok(());
+        }
+        let live: Vec<usize> = (0..self.trainers.len())
+            .filter(|&i| self.trainers[i].alive)
+            .collect();
+        let mut drained = false;
+        for &ti in &live {
+            if self.pending_syncs[ti].is_some() {
+                self.drain_pending(ti);
+                drained = true;
+            }
+        }
+        if drained {
+            for &ti in &live {
+                self.evaluate_trainer_params(ti, outer_t)?;
+            }
+        }
+        Ok(())
     }
 
     /// Validation loss/perplexity of `params` (fresh per-call eval RNG
@@ -596,6 +901,7 @@ impl Coordinator {
             } else {
                 None
             },
+            overlap_hidden_s: self.overlap_hidden_s,
             wall_clock_s: self.run_wall_s,
             threads: self.threads,
         }

@@ -21,7 +21,7 @@ pub mod sampler;
 pub mod shard;
 
 pub use corpus::{Corpus, CorpusSpec};
-pub use sampler::BatchSampler;
+pub use sampler::{BatchSampler, SamplerState};
 pub use shard::{make_shards, Shard};
 
 /// A batch of token sequences, row-major `[batch, seq_len + 1]` i32 —

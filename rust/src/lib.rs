@@ -37,7 +37,11 @@
 //! The `cluster`/`comm` split (DESIGN.md §7) also carries the
 //! hierarchical two-level topology: node groups with fast intra links,
 //! a slow WAN between group leaders, pluggable collective cost models,
-//! and WAN-vs-intra byte accounting in the ledger.
+//! and WAN-vs-intra byte accounting in the ledger. On top of it sits
+//! the delayed-overlap mode (DESIGN.md §8, `comm.overlap = delayed`):
+//! outer collectives post non-blocking through `SyncHandle`s and their
+//! updates apply one round late, hiding transfer time under the next
+//! round's compute while conserving every ledger byte.
 //!
 //! # Quickstart
 //!

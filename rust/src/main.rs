@@ -11,6 +11,8 @@
 //!   adloco train --preset quick
 //!   adloco train --preset hetero_dynamic --threads 4
 //!   adloco train --preset hierarchical_mit --topology flat   # WAN-bytes baseline
+//!   adloco train --preset adloco_overlap                     # delayed outer syncs
+//!   adloco train --preset hetero_dynamic --overlap delayed   # same knob, any preset
 //!   adloco train --preset xla_tiny --set algo.outer_steps=4 --out runs
 //!   adloco compare --preset mock_default --methods adloco,diloco,localsgd
 //!   adloco sweep --preset quick --param algo.batching.eta \
@@ -98,6 +100,9 @@ fn load_config(args: &cli::Args) -> Result<Config> {
     if let Some(t) = args.opt("topology") {
         cfg.cluster.topology = adloco::config::TopologyKind::parse(t)?;
     }
+    if let Some(o) = args.opt("overlap") {
+        cfg.comm.overlap = adloco::config::OverlapMode::parse(o)?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -113,6 +118,12 @@ fn print_result(r: &RunResult) {
         r.comm_count, r.comm_bytes, r.wan_comm_bytes
     );
     println!("  virtual time    : {:.3}s", r.virtual_time_s);
+    if r.overlap_hidden_s > 0.0 {
+        println!(
+            "  overlap hidden  : {:.3}s of collective time under compute",
+            r.overlap_hidden_s
+        );
+    }
     println!("  trainers left   : {}", r.trainers_left);
     println!(
         "  utilization     : {:.1}% mean ({:.3}s idle across workers)",

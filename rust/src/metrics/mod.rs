@@ -26,6 +26,10 @@ pub struct StepRecord {
     pub requested_batch: usize,
     /// SwitchMode accumulation depth (1 = plain step).
     pub accum_steps: usize,
+    /// True when the AOT batch ladder saturated below the hardware
+    /// budget and silently capped this step's effective batch under the
+    /// request (the `round_to_ladder` clamp — `batching::plan_step`).
+    pub clamped: bool,
     /// Mean training loss observed by the step.
     pub loss: f64,
     /// ||mean gradient||^2 statistic of the step.
@@ -92,6 +96,10 @@ pub struct UtilRecord {
     pub wait_s: f64,
     /// Modeled communication seconds.
     pub comm_s: f64,
+    /// Communication seconds hidden under compute by the delayed-overlap
+    /// mode (DESIGN.md §8) — never part of the worker's clocked time, so
+    /// excluded from the utilization denominator. Zero in blocking mode.
+    pub hidden_s: f64,
     /// Churn-preemption downtime seconds.
     pub preempted_s: f64,
 }
@@ -213,6 +221,7 @@ impl Recorder {
             ("batch", JsonValue::num(s.batch as f64)),
             ("requested_batch", JsonValue::num(s.requested_batch as f64)),
             ("accum_steps", JsonValue::num(s.accum_steps as f64)),
+            ("clamped", JsonValue::Bool(s.clamped)),
             ("loss", JsonValue::num(s.loss)),
             ("grad_sq_norm", JsonValue::num(s.grad_sq_norm)),
             ("sigma2", JsonValue::num(s.sigma2)),
@@ -287,6 +296,7 @@ impl Recorder {
                 ("busy_s", JsonValue::num(u.busy_s)),
                 ("wait_s", JsonValue::num(u.wait_s)),
                 ("comm_s", JsonValue::num(u.comm_s)),
+                ("hidden_s", JsonValue::num(u.hidden_s)),
                 ("preempted_s", JsonValue::num(u.preempted_s)),
                 ("utilization", JsonValue::num(u.utilization())),
             ]);
@@ -362,6 +372,7 @@ mod tests {
             batch: 4,
             requested_batch: 7,
             accum_steps: 1,
+            clamped: false,
             loss: 5.5,
             grad_sq_norm: 0.25,
             sigma2: 1.5,
@@ -401,6 +412,7 @@ mod tests {
             busy_s: 6.0,
             wait_s: 2.0,
             comm_s: 1.0,
+            hidden_s: 0.5,
             preempted_s: 1.0,
         };
         assert!((u.utilization() - 0.6).abs() < 1e-12);
@@ -443,6 +455,7 @@ mod tests {
                 batch: *b,
                 requested_batch: *b + 1,
                 accum_steps: 1,
+                clamped: false,
                 loss: 0.0,
                 grad_sq_norm: 0.0,
                 sigma2: 0.0,

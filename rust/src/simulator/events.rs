@@ -29,6 +29,11 @@ pub enum SimEvent {
     SyncArrive { trainer: usize, worker: usize },
     /// Worker arrived at a cross-trainer merge rendezvous.
     MergeArrive { trainer: usize, worker: usize },
+    /// A delayed-overlap (non-blocking) outer collective of `trainer`
+    /// finished transferring (DESIGN.md §8). A trace marker: the stale
+    /// outer update applies at the trainer's next outer boundary, not at
+    /// this pop, so consuming it changes no numerics.
+    SyncComplete { trainer: usize },
 }
 
 /// One scheduled event: virtual timestamp plus FIFO tie-break.
@@ -175,5 +180,19 @@ mod tests {
     fn rejects_nan_times() {
         let mut q = EventQueue::new();
         q.push(f64::NAN, step(0, 0, 1));
+    }
+
+    #[test]
+    fn sync_complete_orders_like_any_event() {
+        let mut q = EventQueue::new();
+        q.push(2.0, step(0, 0, 1));
+        q.push(1.0, SimEvent::SyncComplete { trainer: 3 });
+        let (t, ev) = q.pop().unwrap();
+        assert_eq!(t, 1.0);
+        assert_eq!(ev, SimEvent::SyncComplete { trainer: 3 });
+        // a completion in the past still pops (before later compute)
+        q.push(0.5, SimEvent::SyncComplete { trainer: 1 });
+        assert_eq!(q.pop().unwrap().1, SimEvent::SyncComplete { trainer: 1 });
+        assert_eq!(q.pop().unwrap().0, 2.0);
     }
 }

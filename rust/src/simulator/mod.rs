@@ -13,8 +13,10 @@
 //! Scheduling comes in two flavours (DESIGN.md §3.1–§3.2): the retained
 //! *lockstep* reference walk, and the *event-driven* scheduler built on
 //! [`events::EventQueue`], which consumes `StepDone` / `SyncArrive` /
-//! `MergeArrive` events in virtual-time order and is the substrate for
-//! the [`scenario`] dynamic workloads (stragglers, churn, link shifts).
+//! `MergeArrive` events in virtual-time order — plus `SyncComplete`
+//! markers for delayed-overlap collectives (DESIGN.md §8) — and is the
+//! substrate for the [`scenario`] dynamic workloads (stragglers, churn,
+//! link shifts).
 //!
 //! Layering note: the clock/node/placement types now live in
 //! [`crate::cluster`] and the network/ledger/collective types in

@@ -123,10 +123,12 @@ impl Trainer {
         self.outer_step_active(delta_scratch)
     }
 
-    /// The reduction over *active* workers only — churned-out workers'
-    /// stale parameters are excluded from the average. No-op if the
-    /// whole cohort is preempted.
-    pub fn outer_step_active(&mut self, delta_scratch: &mut [f32]) {
+    /// Δ = x − mean(active workers) into `delta`; returns false (and
+    /// leaves `delta` untouched) when the whole cohort is preempted.
+    /// The single implementation behind both the blocking epilogue
+    /// ([`Self::outer_step_active`]) and the delayed-overlap post
+    /// (DESIGN.md §8), so the two cannot drift.
+    pub fn active_delta(&self, delta: &mut [f32]) -> bool {
         let worker_params: Vec<&[f32]> = self
             .workers
             .iter()
@@ -134,9 +136,19 @@ impl Trainer {
             .map(|w| w.state.params.as_slice())
             .collect();
         if worker_params.is_empty() {
+            return false;
+        }
+        OuterOpt::compute_delta(&self.params, &worker_params, delta);
+        true
+    }
+
+    /// The reduction over *active* workers only — churned-out workers'
+    /// stale parameters are excluded from the average. No-op if the
+    /// whole cohort is preempted.
+    pub fn outer_step_active(&mut self, delta_scratch: &mut [f32]) {
+        if !self.active_delta(delta_scratch) {
             return;
         }
-        OuterOpt::compute_delta(&self.params, &worker_params, delta_scratch);
         self.outer.step(&mut self.params, delta_scratch);
     }
 
@@ -184,6 +196,25 @@ mod tests {
         for w in &t.workers {
             assert_eq!(w.state.params[0], 123.0);
         }
+    }
+
+    #[test]
+    fn active_delta_guards_fully_preempted_cohorts() {
+        let (_, mut t) = setup(2);
+        t.broadcast_params();
+        let mut scratch = vec![7.0f32; t.params.len()];
+        for w in &mut t.workers {
+            w.active = false;
+        }
+        assert!(!t.active_delta(&mut scratch), "no active workers -> no delta");
+        assert_eq!(scratch[0], 7.0, "scratch untouched on the guard path");
+        let before = t.params[0];
+        t.outer_step_active(&mut scratch); // must be a clean no-op
+        assert_eq!(t.params[0], before);
+        t.workers[1].active = true;
+        t.workers[1].state.params[0] = t.params[0] + 4.0;
+        assert!(t.active_delta(&mut scratch));
+        assert!((scratch[0] + 4.0).abs() < 1e-6, "delta over the active worker only");
     }
 
     #[test]

@@ -35,6 +35,20 @@ impl Rng {
         Rng { s, gauss_spare: None }
     }
 
+    /// Raw generator state: the four xoshiro words plus the cached
+    /// Box-Muller spare. Together with [`Rng::from_state`] this makes a
+    /// stream checkpointable mid-sequence — the resumed stream continues
+    /// draw-for-draw where the saved one stopped (checkpoint contract,
+    /// DESIGN.md §8).
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Rebuild a generator from a captured [`Rng::state`].
+    pub fn from_state(s: [u64; 4], gauss_spare: Option<f64>) -> Rng {
+        Rng { s, gauss_spare }
+    }
+
     /// Derive an independent stream (e.g. per trainer / per worker).
     pub fn fork(&mut self, stream: u64) -> Rng {
         let mut sm = self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407);
@@ -221,6 +235,20 @@ mod tests {
         }
         let mut c = Rng::new(43);
         assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn state_roundtrip_continues_the_stream() {
+        let mut a = Rng::new(99);
+        // advance past a normal() so the Box-Muller spare is populated
+        let _ = a.normal();
+        let (s, spare) = a.state();
+        assert!(spare.is_some(), "box-muller caches its second output");
+        let mut b = Rng::from_state(s, spare);
+        for _ in 0..16 {
+            assert_eq!(a.normal().to_bits(), b.normal().to_bits());
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

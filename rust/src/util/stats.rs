@@ -70,6 +70,18 @@ impl Ema {
         self.steps += 1;
     }
 
+    /// Raw accumulator state `(value, steps)` — checkpointing (beta is
+    /// config-derived and not part of the state).
+    pub fn state(&self) -> (f64, u64) {
+        (self.value, self.steps)
+    }
+
+    /// Restore a captured [`Ema::state`] (checkpoint resume).
+    pub fn set_state(&mut self, value: f64, steps: u64) {
+        self.value = value;
+        self.steps = steps;
+    }
+
     /// Bias-corrected estimate; None before any sample.
     pub fn get(&self) -> Option<f64> {
         if self.steps == 0 {

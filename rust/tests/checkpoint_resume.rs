@@ -1,0 +1,305 @@
+//! Exact-resume suite (checkpoint v2 contract): a run resumed from a
+//! checkpoint taken at outer step k must produce, from step k+1 on, the
+//! **bit-identical** record streams, ledger continuation, utilization
+//! accounting and final `RunResult` payload of the uninterrupted run —
+//! on both schedulers, at 1 and 4 threads, under the dynamic-workload
+//! scenario, and with delayed-overlap collectives in flight across the
+//! resume point (DESIGN.md §8).
+//!
+//! `best_ppl` is deliberately not compared: it minimizes over *all*
+//! evaluations including the pre-checkpoint prefix the resumed run
+//! never re-executes.
+
+use adloco::config::{presets, Config, OverlapMode, SchedulerKind};
+use adloco::coordinator::{Coordinator, RunResult};
+use adloco::engine::build_engine;
+use adloco::metrics::Recorder;
+
+/// One outer step, dispatched exactly like `Coordinator::run` does.
+fn drive_step(c: &mut Coordinator, t: u64) {
+    let serial_lockstep =
+        c.config().run.scheduler == SchedulerKind::Lockstep && c.threads() <= 1;
+    if serial_lockstep {
+        c.step_outer(t).unwrap();
+    } else {
+        c.step_outer_event(t).unwrap();
+    }
+}
+
+fn new_coord(cfg: &Config) -> Coordinator {
+    let engine = build_engine(cfg).unwrap();
+    Coordinator::new(cfg.clone(), engine).unwrap()
+}
+
+/// Save at outer step `k`, resume, and assert the remaining record
+/// stream plus the final `RunResult` payload are bit-identical to the
+/// uninterrupted run.
+fn assert_exact_resume(cfg: Config, k: u64, tag: &str) {
+    // reference: the uninterrupted run
+    let mut full = new_coord(&cfg);
+    let rfull = full.run().unwrap();
+
+    // truncated run: drive to k exactly as run() would, snapshot, stop
+    let dir = std::env::temp_dir().join("adloco_resume_suite");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{tag}.ckpt")).to_str().unwrap().to_string();
+    let mut part = new_coord(&cfg);
+    for t in 1..=k {
+        drive_step(&mut part, t);
+    }
+    part.snapshot(k).save(&path).unwrap();
+
+    // resumed run: same config + resume_from
+    let mut cfg2 = cfg.clone();
+    cfg2.run.resume_from = Some(path);
+    let mut resumed = new_coord(&cfg2);
+    let rres = resumed.run().unwrap();
+
+    assert_payloads_match(&rfull, &rres, tag);
+    assert_suffix_matches(&full.recorder, &resumed.recorder, k, tag);
+}
+
+/// The `RunResult` determinism payload, bit for bit (minus `best_ppl`,
+/// see module docs, and the wall-clock/threads perf fields).
+fn assert_payloads_match(a: &RunResult, b: &RunResult, tag: &str) {
+    assert_eq!(a.final_ppl.to_bits(), b.final_ppl.to_bits(), "{tag}: final ppl");
+    assert_eq!(a.total_inner_steps, b.total_inner_steps, "{tag}: inner steps");
+    assert_eq!(a.total_samples, b.total_samples, "{tag}: samples");
+    assert_eq!(a.comm_count, b.comm_count, "{tag}: comm count");
+    assert_eq!(a.comm_bytes, b.comm_bytes, "{tag}: comm bytes");
+    assert_eq!(a.wan_comm_bytes, b.wan_comm_bytes, "{tag}: WAN bytes");
+    assert_eq!(
+        a.virtual_time_s.to_bits(),
+        b.virtual_time_s.to_bits(),
+        "{tag}: virtual time ({} vs {})",
+        a.virtual_time_s,
+        b.virtual_time_s
+    );
+    assert_eq!(a.trainers_left, b.trainers_left, "{tag}: trainers left");
+    assert_eq!(
+        a.total_idle_s.to_bits(),
+        b.total_idle_s.to_bits(),
+        "{tag}: idle time"
+    );
+    assert_eq!(
+        a.mean_utilization.to_bits(),
+        b.mean_utilization.to_bits(),
+        "{tag}: utilization"
+    );
+    assert_eq!(
+        a.overlap_hidden_s.to_bits(),
+        b.overlap_hidden_s.to_bits(),
+        "{tag}: overlap hidden"
+    );
+    assert_eq!(a.time_to_target, b.time_to_target, "{tag}: time to target");
+}
+
+/// The resumed run's record streams must equal the uninterrupted run's
+/// post-k suffix, field for field and bit for bit; utilization rows
+/// (whole-run accumulators, restored from the checkpoint) must match in
+/// full.
+fn assert_suffix_matches(full: &Recorder, res: &Recorder, k: u64, tag: &str) {
+    let full_steps: Vec<_> = full.steps.iter().filter(|s| s.outer_step > k).collect();
+    assert_eq!(full_steps.len(), res.steps.len(), "{tag}: step suffix length");
+    for (a, b) in full_steps.iter().zip(res.steps.iter()) {
+        assert_eq!(
+            (a.global_step, a.outer_step, a.trainer, a.worker),
+            (b.global_step, b.outer_step, b.trainer, b.worker),
+            "{tag}: step identity"
+        );
+        assert_eq!(a.batch, b.batch, "{tag}: step batch");
+        assert_eq!(a.requested_batch, b.requested_batch, "{tag}: requested");
+        assert_eq!(a.accum_steps, b.accum_steps, "{tag}: accum");
+        assert_eq!(a.clamped, b.clamped, "{tag}: clamp flag");
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{tag}: step loss");
+        assert_eq!(
+            a.grad_sq_norm.to_bits(),
+            b.grad_sq_norm.to_bits(),
+            "{tag}: grad norm"
+        );
+        assert_eq!(a.sigma2.to_bits(), b.sigma2.to_bits(), "{tag}: sigma2");
+        assert_eq!(
+            a.virtual_time_s.to_bits(),
+            b.virtual_time_s.to_bits(),
+            "{tag}: step time"
+        );
+    }
+    let full_evals: Vec<_> = full.evals.iter().filter(|e| e.outer_step > k).collect();
+    assert_eq!(full_evals.len(), res.evals.len(), "{tag}: eval suffix length");
+    for (a, b) in full_evals.iter().zip(res.evals.iter()) {
+        assert_eq!(
+            (a.global_step, a.outer_step, a.trainer),
+            (b.global_step, b.outer_step, b.trainer),
+            "{tag}: eval identity"
+        );
+        assert_eq!(a.comm_count, b.comm_count, "{tag}: eval comm count");
+        assert_eq!(a.comm_bytes, b.comm_bytes, "{tag}: eval comm bytes");
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{tag}: eval loss");
+        assert_eq!(
+            a.perplexity.to_bits(),
+            b.perplexity.to_bits(),
+            "{tag}: eval ppl"
+        );
+        assert_eq!(
+            a.virtual_time_s.to_bits(),
+            b.virtual_time_s.to_bits(),
+            "{tag}: eval time"
+        );
+    }
+    let full_merges: Vec<_> = full.merges.iter().filter(|m| m.outer_step > k).collect();
+    assert_eq!(full_merges.len(), res.merges.len(), "{tag}: merge suffix length");
+    for (a, b) in full_merges.iter().zip(res.merges.iter()) {
+        assert_eq!(a.merged, b.merged, "{tag}: merged set");
+        assert_eq!(a.representative, b.representative, "{tag}: representative");
+        assert_eq!(a.trainers_left, b.trainers_left, "{tag}: trainers left");
+        assert_eq!(
+            a.virtual_time_s.to_bits(),
+            b.virtual_time_s.to_bits(),
+            "{tag}: merge time"
+        );
+    }
+    assert_eq!(
+        full.utilization.len(),
+        res.utilization.len(),
+        "{tag}: utilization rows"
+    );
+    for (a, b) in full.utilization.iter().zip(res.utilization.iter()) {
+        assert_eq!(
+            (a.trainer, a.worker, a.node),
+            (b.trainer, b.worker, b.node),
+            "{tag}: utilization identity"
+        );
+        assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits(), "{tag}: busy_s");
+        assert_eq!(a.wait_s.to_bits(), b.wait_s.to_bits(), "{tag}: wait_s");
+        assert_eq!(a.comm_s.to_bits(), b.comm_s.to_bits(), "{tag}: comm_s");
+        assert_eq!(a.hidden_s.to_bits(), b.hidden_s.to_bits(), "{tag}: hidden_s");
+        assert_eq!(
+            a.preempted_s.to_bits(),
+            b.preempted_s.to_bits(),
+            "{tag}: preempted_s"
+        );
+    }
+}
+
+/// The shared base schedule: small but feature-dense (multi-worker
+/// trainers, adaptive batching, merging, mid-loop evals).
+fn base_cfg() -> Config {
+    let mut cfg = presets::mock_default();
+    cfg.name = "resume_base".into();
+    cfg.algo.num_trainers = 3;
+    cfg.algo.workers_per_trainer = 2;
+    cfg.algo.outer_steps = 6;
+    cfg.algo.inner_steps = 10;
+    cfg.algo.merge.frequency = 2;
+    cfg.run.eval_every = 4;
+    cfg
+}
+
+#[test]
+fn resume_is_bit_exact_lockstep_serial() {
+    let cfg = base_cfg();
+    assert_exact_resume(cfg, 3, "lockstep_t1");
+}
+
+#[test]
+fn resume_is_bit_exact_event_serial() {
+    let mut cfg = base_cfg();
+    cfg.run.scheduler = SchedulerKind::Event;
+    assert_exact_resume(cfg, 3, "event_t1");
+}
+
+#[test]
+fn resume_is_bit_exact_event_parallel() {
+    let mut cfg = base_cfg();
+    cfg.run.scheduler = SchedulerKind::Event;
+    cfg.run.threads = 4;
+    assert_exact_resume(cfg, 3, "event_t4");
+}
+
+#[test]
+fn resume_is_bit_exact_lockstep_parallel() {
+    // lockstep + threads > 1 routes through the event-equivalent path
+    // (legal on static clusters); resume must hold there too
+    let mut cfg = base_cfg();
+    cfg.run.threads = 4;
+    assert_exact_resume(cfg, 3, "lockstep_t4");
+}
+
+#[test]
+fn resume_is_bit_exact_delayed_overlap_serial() {
+    // the checkpoint at k carries trainer deltas still in flight
+    // (posted at round k, applying at k+1) — the resumed run must land
+    // the exact ledger rows and apply the exact stale updates
+    let mut cfg = base_cfg();
+    cfg.name = "resume_overlap".into();
+    cfg.comm.overlap = OverlapMode::Delayed;
+    cfg.run.scheduler = SchedulerKind::Event;
+    assert_exact_resume(cfg, 3, "overlap_t1");
+}
+
+#[test]
+fn resume_is_bit_exact_delayed_overlap_parallel() {
+    let mut cfg = base_cfg();
+    cfg.name = "resume_overlap_par".into();
+    cfg.comm.overlap = OverlapMode::Delayed;
+    cfg.run.scheduler = SchedulerKind::Event;
+    cfg.run.threads = 4;
+    assert_exact_resume(cfg, 3, "overlap_t4");
+}
+
+#[test]
+fn resume_is_bit_exact_delayed_overlap_lockstep() {
+    let mut cfg = base_cfg();
+    cfg.name = "resume_overlap_lock".into();
+    cfg.comm.overlap = OverlapMode::Delayed;
+    assert_exact_resume(cfg, 3, "overlap_lockstep");
+}
+
+#[test]
+fn resume_is_bit_exact_hetero_dynamic() {
+    // stragglers + churn + link shifts: the resume point sits inside the
+    // dynamic scenario, so worker activity flags, per-step straggler
+    // draws and the churn re-shard stream all cross the checkpoint
+    let mut cfg = presets::hetero_dynamic();
+    cfg.name = "resume_hetero".into();
+    cfg.algo.outer_steps = 6;
+    assert_exact_resume(cfg, 3, "hetero_t1");
+}
+
+#[test]
+fn resume_is_bit_exact_hetero_dynamic_delayed() {
+    let mut cfg = presets::adloco_overlap();
+    cfg.name = "resume_hetero_overlap".into();
+    cfg.algo.outer_steps = 6;
+    assert_exact_resume(cfg, 3, "hetero_overlap_t1");
+}
+
+#[test]
+fn pending_sync_survives_the_checkpoint_file() {
+    // white-box: after k rounds of a delayed run every live trainer has
+    // a collective in flight; the snapshot must carry it and the loaded
+    // file must reproduce it exactly
+    let mut cfg = base_cfg();
+    cfg.name = "resume_pending".into();
+    cfg.comm.overlap = OverlapMode::Delayed;
+    cfg.run.scheduler = SchedulerKind::Event;
+    cfg.algo.merge.enabled = false; // keep every trainer alive + pending
+    let mut c = new_coord(&cfg);
+    for t in 1..=3 {
+        drive_step(&mut c, t);
+    }
+    let snap = c.snapshot(3);
+    assert_eq!(snap.trainers.len(), 3);
+    for t in &snap.trainers {
+        let p = t.pending.as_ref().expect("every trainer has a sync in flight");
+        assert!(p.completes_at > p.posted_at);
+        assert!(!p.delta.is_empty());
+        assert!(!p.phases.is_empty());
+    }
+    let dir = std::env::temp_dir().join("adloco_resume_suite");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pending.ckpt").to_str().unwrap().to_string();
+    snap.save(&path).unwrap();
+    let loaded = adloco::checkpoint::Checkpoint::load(&path).unwrap();
+    assert_eq!(snap, loaded, "checkpoint file roundtrips the in-flight state");
+}

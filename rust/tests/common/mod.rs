@@ -1,0 +1,145 @@
+//! Shared helpers for the integration suites: the canonical run driver
+//! and the FNV golden-digest serialization used by the seam anchors
+//! (`tests/topology.rs`, `tests/overlap.rs`, `tests/checkpoint_resume.rs`).
+//!
+//! The `digest` serialization is FROZEN: it writes exactly the fields it
+//! wrote when the flat golden was first pinned, so refactors that add
+//! record fields cannot silently shift historical digests. New fields
+//! get their own extended digest (`digest_with_overlap`).
+#![allow(dead_code)]
+
+use adloco::comm::{CommLedger, CommScope};
+use adloco::config::Config;
+use adloco::coordinator::{Coordinator, RunResult};
+use adloco::engine::build_engine;
+use adloco::metrics::Recorder;
+
+/// Build + run a config, returning the full determinism-contract payload.
+pub fn run(cfg: Config) -> (RunResult, Recorder, CommLedger) {
+    let engine = build_engine(&cfg).unwrap();
+    let mut c = Coordinator::new(cfg, engine).unwrap();
+    let r = c.run().unwrap();
+    (r, c.recorder.clone(), c.ledger().clone())
+}
+
+/// FNV-1a over a byte string (the digest hash).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Canonical serialization of everything the determinism contract
+/// covers: record streams, ledger, and the RunResult payload, with
+/// every f64 rendered as raw bits. FROZEN — see module docs.
+pub fn digest(r: &RunResult, rec: &Recorder, ledger: &CommLedger) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    for e in &ledger.events {
+        let kind = match e.kind {
+            adloco::comm::CommKind::OuterSync => "sync",
+            adloco::comm::CommKind::Merge => "merge",
+        };
+        let scope = match e.scope {
+            CommScope::Intra => "intra",
+            CommScope::Wan => "wan",
+        };
+        let _ = writeln!(
+            s,
+            "L:{kind}:{scope}:{}:{}:{}:{:016x}",
+            e.bytes,
+            e.participants,
+            e.at_inner_step,
+            e.at_virtual_s.to_bits()
+        );
+    }
+    for st in &rec.steps {
+        let _ = writeln!(
+            s,
+            "S:{}:{}:{}:{}:{}:{}:{}:{:016x}:{:016x}:{:016x}:{:016x}",
+            st.global_step,
+            st.outer_step,
+            st.trainer,
+            st.worker,
+            st.batch,
+            st.requested_batch,
+            st.accum_steps,
+            st.loss.to_bits(),
+            st.grad_sq_norm.to_bits(),
+            st.sigma2.to_bits(),
+            st.virtual_time_s.to_bits()
+        );
+    }
+    for e in &rec.evals {
+        let _ = writeln!(
+            s,
+            "E:{}:{}:{}:{}:{}:{:016x}:{:016x}:{:016x}",
+            e.global_step,
+            e.outer_step,
+            e.trainer,
+            e.comm_count,
+            e.comm_bytes,
+            e.loss.to_bits(),
+            e.perplexity.to_bits(),
+            e.virtual_time_s.to_bits()
+        );
+    }
+    for m in &rec.merges {
+        let _ = writeln!(
+            s,
+            "M:{}:{:?}:{}:{}:{:016x}",
+            m.outer_step,
+            m.merged,
+            m.representative,
+            m.trainers_left,
+            m.virtual_time_s.to_bits()
+        );
+    }
+    for u in &rec.utilization {
+        let _ = writeln!(
+            s,
+            "U:{}:{}:{}:{:016x}:{:016x}:{:016x}:{:016x}",
+            u.trainer,
+            u.worker,
+            u.node,
+            u.busy_s.to_bits(),
+            u.wait_s.to_bits(),
+            u.comm_s.to_bits(),
+            u.preempted_s.to_bits()
+        );
+    }
+    let _ = writeln!(
+        s,
+        "R:{}:{}:{}:{}:{}:{:016x}:{:016x}:{:016x}",
+        r.total_inner_steps,
+        r.total_samples,
+        r.comm_count,
+        r.comm_bytes,
+        r.trainers_left,
+        r.best_ppl.to_bits(),
+        r.final_ppl.to_bits(),
+        r.virtual_time_s.to_bits()
+    );
+    format!("{:016x}", fnv1a(s.as_bytes()))
+}
+
+/// Extended digest for the delayed-overlap seam (DESIGN.md §8): the
+/// frozen serialization plus the overlap-specific payload — per-step
+/// clamp flags, per-worker hidden-comm seconds and the run-level
+/// `overlap_hidden_s` — so future comm refactors can't silently shift
+/// the new observables either.
+pub fn digest_with_overlap(r: &RunResult, rec: &Recorder, ledger: &CommLedger) -> String {
+    use std::fmt::Write as _;
+    let mut s = digest(r, rec, ledger);
+    for st in &rec.steps {
+        let _ = writeln!(s, "C:{}:{}:{}", st.trainer, st.global_step, st.clamped as u8);
+    }
+    for u in &rec.utilization {
+        let _ = writeln!(s, "H:{}:{}:{:016x}", u.trainer, u.worker, u.hidden_s.to_bits());
+    }
+    let _ = writeln!(s, "O:{:016x}", r.overlap_hidden_s.to_bits());
+    format!("{:016x}", fnv1a(s.as_bytes()))
+}

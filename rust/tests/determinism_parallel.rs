@@ -75,6 +75,11 @@ fn assert_threads_agree(mut cfg: Config) {
         "{name}: utilization"
     );
     assert_eq!(ra.time_to_target, rb.time_to_target, "{name}: time to target");
+    assert_eq!(
+        ra.overlap_hidden_s.to_bits(),
+        rb.overlap_hidden_s.to_bits(),
+        "{name}: overlap hidden"
+    );
     assert_eq!(rb.threads, 4, "{name}: resolved thread count");
 
     // ---- full record streams -------------------------------------------
@@ -139,6 +144,7 @@ fn assert_threads_agree(mut cfg: Config) {
         assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits(), "{name}: busy_s");
         assert_eq!(a.wait_s.to_bits(), b.wait_s.to_bits(), "{name}: wait_s");
         assert_eq!(a.comm_s.to_bits(), b.comm_s.to_bits(), "{name}: comm_s");
+        assert_eq!(a.hidden_s.to_bits(), b.hidden_s.to_bits(), "{name}: hidden_s");
         assert_eq!(
             a.preempted_s.to_bits(),
             b.preempted_s.to_bits(),
@@ -211,6 +217,16 @@ fn hierarchical_mit_parallel_is_bit_identical() {
     // reduces, WAN leader rounds and topology-aware merge selection
     // must all be thread-transparent like everything else
     let mut cfg = presets::hierarchical_mit();
+    cfg.algo.outer_steps = 6;
+    assert_threads_agree(cfg);
+}
+
+#[test]
+fn adloco_overlap_parallel_is_bit_identical() {
+    // the delayed-overlap preset (DESIGN.md §8): non-blocking outer
+    // collectives + stale outer updates on the full dynamic-workload
+    // scenario must be thread-transparent like every other mode
+    let mut cfg = presets::adloco_overlap();
     cfg.algo.outer_steps = 6;
     assert_threads_agree(cfg);
 }

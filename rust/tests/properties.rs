@@ -131,6 +131,121 @@ fn prop_plan_step_invariants() {
         if !enabled {
             assert!(!p.switched);
         }
+        // SAT2: switched iff accumulation actually engaged (multiplier
+        // >= 1 guarantees a switching request exceeds max_batch)
+        assert_eq!(
+            p.switched,
+            p.accum_steps > 1,
+            "case {case}: switched must mean accumulation"
+        );
+        // SAT2: the plan never under-runs what the request, the ladder
+        // and the hardware jointly allow
+        let top = *ladder.last().unwrap();
+        assert!(
+            p.effective_batch() >= b_req.min(top).min(max_batch),
+            "case {case}: effective {} under-runs min(b_req {b_req}, top {top}, max {max_batch})",
+            p.effective_batch()
+        );
+        // when switched with the ladder covering the budget, the
+        // accumulated plan covers the full request
+        if p.switched && top >= max_batch {
+            assert!(
+                p.effective_batch() >= b_req.min(top),
+                "case {case}: switched plan must cover min(b_req, top)"
+            );
+        }
+        // SAT1/SAT2: the clamp flag is exactly "the ladder saturated
+        // below the intended micro batch" — never the SwitchMode
+        // dead-zone clamp, never plain rounding up
+        assert_eq!(
+            p.clamped,
+            p.micro_batch < b_req.min(max_batch),
+            "case {case}: clamp flag semantics"
+        );
+        if top >= max_batch {
+            assert!(!p.clamped, "case {case}: covered ladder never clamps");
+        }
+    }
+}
+
+#[test]
+fn prop_controller_monotone_under_monotone_noise() {
+    // SAT2: with the EMA off and shrinking disabled, the norm test's
+    // request is monotone in the noise statistic — non-decreasing sigma²
+    // at fixed gradient norm must yield a non-decreasing request, even
+    // for a controller allowed to shrink (monotone = false)
+    let mut rng = Rng::new(510);
+    for case in 0..CASES {
+        let mut bc = presets::paper_table1().algo.batching;
+        bc.monotone = false;
+        bc.ema_beta = 0.0;
+        bc.max_request = 0; // uncapped: the raw test drives the request
+        let s1 = 0.5 + rng.f64() * 2.0;
+        let mut c = BatchController::new(bc);
+        let mut sigma2 = rng.f64();
+        let mut prev_req = 0usize;
+        for step in 0..30 {
+            sigma2 += rng.f64() * 2.0; // monotone noise growth
+            c.observe(
+                &StepStats { loss: 1.0, grad_sq_norm: s1, sigma2, ip_var: 0.0 },
+                8,
+            );
+            let req = c.requested();
+            assert!(
+                req >= prev_req,
+                "case {case} step {step}: request shrank {prev_req} -> {req} \
+                 under monotone noise"
+            );
+            prev_req = req;
+        }
+    }
+}
+
+#[test]
+fn prop_controller_replay_is_deterministic() {
+    // SAT2: the controller (EMAs included) is a pure fold over its
+    // observation stream — replaying the same stream into a fresh
+    // controller reproduces every request, and an export/restore mid-
+    // stream continues the exact sequence (the checkpoint contract)
+    let mut rng = Rng::new(520);
+    for case in 0..60 {
+        let mut bc = presets::paper_table1().algo.batching;
+        bc.ema_beta = if case % 2 == 0 { 0.5 } else { 0.0 };
+        bc.monotone = case % 3 == 0;
+        let obs: Vec<(StepStats, usize)> = (0..40)
+            .map(|_| {
+                (
+                    StepStats {
+                        loss: rng.f64() * 10.0,
+                        grad_sq_norm: rng.f64() * 2.0,
+                        sigma2: rng.f64() * 5.0,
+                        ip_var: rng.f64() * 5.0,
+                    },
+                    1 + rng.below(64) as usize,
+                )
+            })
+            .collect();
+        let mut a = BatchController::new(bc.clone());
+        let mut b = BatchController::new(bc.clone());
+        let mut resumed = BatchController::new(bc.clone());
+        for (i, (stats, batch)) in obs.iter().enumerate() {
+            a.observe(stats, *batch);
+            b.observe(stats, *batch);
+            assert_eq!(a.requested(), b.requested(), "case {case} step {i}: replay");
+            if i == 19 {
+                resumed.restore_state(&a.export_state());
+            }
+            if i >= 20 {
+                resumed.observe(stats, *batch);
+                assert_eq!(
+                    a.requested(),
+                    resumed.requested(),
+                    "case {case} step {i}: restored controller diverged"
+                );
+            }
+        }
+        assert_eq!(a.export_state(), b.export_state(), "case {case}: final state");
+        assert_eq!(a.export_state(), resumed.export_state(), "case {case}: resumed state");
     }
 }
 

@@ -4,21 +4,16 @@
 //! golden seam digest pinning the flat-topology record stream across
 //! schedulers and thread counts (the pre/post-decomposition anchor).
 
+mod common;
+
 use adloco::cluster::{assign_workers, Topology};
 use adloco::comm::{CommLedger, CommScope};
 use adloco::config::{presets, Config, SchedulerKind, TopologyKind};
-use adloco::coordinator::{Coordinator, RunResult};
+use adloco::coordinator::RunResult;
 use adloco::engine::build_engine;
-use adloco::metrics::Recorder;
 use adloco::theory::{estimate_ledger, MergePlanStep, TopoShape};
+use common::{digest, run};
 use std::collections::BTreeMap;
-
-fn run(cfg: Config) -> (RunResult, Recorder, CommLedger) {
-    let engine = build_engine(&cfg).unwrap();
-    let mut c = Coordinator::new(cfg, engine).unwrap();
-    let r = c.run().unwrap();
-    (r, c.recorder.clone(), c.ledger().clone())
-}
 
 // ---------------------------------------------------------------------------
 // config validation of group maps
@@ -162,110 +157,38 @@ fn topology_aware_selection_prefers_intra_group_merges() {
 }
 
 // ---------------------------------------------------------------------------
-// golden seam: flat topology across schedulers and thread counts
+// golden seams: flat AND hierarchical record streams across schedulers
+// and thread counts (digest serialization lives in tests/common/mod.rs,
+// frozen so these pins survive field additions)
 // ---------------------------------------------------------------------------
 
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
+/// Pin one config's digest across the lockstep walk, the serial event
+/// scheduler and the 4-thread runtime, plus an optional absolute-bits
+/// fixture (`GOLDEN_WRITE=1` creates it on a reference machine).
+fn assert_golden_seam(mk: impl Fn(SchedulerKind, usize) -> Config, fixture_name: &str) {
+    let digest_of = |cfg: Config| {
+        let (r, rec, ledger) = run(cfg);
+        digest(&r, &rec, &ledger)
+    };
+    let lockstep = digest_of(mk(SchedulerKind::Lockstep, 1));
+    let event = digest_of(mk(SchedulerKind::Event, 1));
+    let parallel = digest_of(mk(SchedulerKind::Event, 4));
+    assert_eq!(lockstep, event, "{fixture_name}: lockstep vs event digest");
+    assert_eq!(event, parallel, "{fixture_name}: serial vs 4-thread digest");
 
-/// Canonical serialization of everything the determinism contract
-/// covers: record streams, ledger, and the RunResult payload, with
-/// every f64 rendered as raw bits.
-fn digest(r: &RunResult, rec: &Recorder, ledger: &CommLedger) -> String {
-    use std::fmt::Write as _;
-    let mut s = String::new();
-    for e in &ledger.events {
-        let kind = match e.kind {
-            adloco::comm::CommKind::OuterSync => "sync",
-            adloco::comm::CommKind::Merge => "merge",
-        };
-        let scope = match e.scope {
-            CommScope::Intra => "intra",
-            CommScope::Wan => "wan",
-        };
-        let _ = writeln!(
-            s,
-            "L:{kind}:{scope}:{}:{}:{}:{:016x}",
-            e.bytes,
-            e.participants,
-            e.at_inner_step,
-            e.at_virtual_s.to_bits()
+    let fixture = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join(format!("tests/fixtures/{fixture_name}.txt"));
+    if std::env::var("GOLDEN_WRITE").as_deref() == Ok("1") {
+        std::fs::create_dir_all(fixture.parent().unwrap()).unwrap();
+        std::fs::write(&fixture, &lockstep).unwrap();
+    } else if fixture.exists() {
+        let pinned = std::fs::read_to_string(&fixture).unwrap();
+        assert_eq!(
+            pinned.trim(),
+            lockstep,
+            "{fixture_name}: record stream drifted from the pinned golden"
         );
     }
-    for st in &rec.steps {
-        let _ = writeln!(
-            s,
-            "S:{}:{}:{}:{}:{}:{}:{}:{:016x}:{:016x}:{:016x}:{:016x}",
-            st.global_step,
-            st.outer_step,
-            st.trainer,
-            st.worker,
-            st.batch,
-            st.requested_batch,
-            st.accum_steps,
-            st.loss.to_bits(),
-            st.grad_sq_norm.to_bits(),
-            st.sigma2.to_bits(),
-            st.virtual_time_s.to_bits()
-        );
-    }
-    for e in &rec.evals {
-        let _ = writeln!(
-            s,
-            "E:{}:{}:{}:{}:{}:{:016x}:{:016x}:{:016x}",
-            e.global_step,
-            e.outer_step,
-            e.trainer,
-            e.comm_count,
-            e.comm_bytes,
-            e.loss.to_bits(),
-            e.perplexity.to_bits(),
-            e.virtual_time_s.to_bits()
-        );
-    }
-    for m in &rec.merges {
-        let _ = writeln!(
-            s,
-            "M:{}:{:?}:{}:{}:{:016x}",
-            m.outer_step,
-            m.merged,
-            m.representative,
-            m.trainers_left,
-            m.virtual_time_s.to_bits()
-        );
-    }
-    for u in &rec.utilization {
-        let _ = writeln!(
-            s,
-            "U:{}:{}:{}:{:016x}:{:016x}:{:016x}:{:016x}",
-            u.trainer,
-            u.worker,
-            u.node,
-            u.busy_s.to_bits(),
-            u.wait_s.to_bits(),
-            u.comm_s.to_bits(),
-            u.preempted_s.to_bits()
-        );
-    }
-    let _ = writeln!(
-        s,
-        "R:{}:{}:{}:{}:{}:{:016x}:{:016x}:{:016x}",
-        r.total_inner_steps,
-        r.total_samples,
-        r.comm_count,
-        r.comm_bytes,
-        r.trainers_left,
-        r.best_ppl.to_bits(),
-        r.final_ppl.to_bits(),
-        r.virtual_time_s.to_bits()
-    );
-    format!("{:016x}", fnv1a(s.as_bytes()))
 }
 
 /// The flat-topology seam anchor: the same config must digest
@@ -290,27 +213,24 @@ fn flat_golden_digest_across_schedulers_and_threads() {
         cfg.run.threads = threads;
         cfg
     };
-    let digest_of = |cfg: Config| {
-        let (r, rec, ledger) = run(cfg);
-        digest(&r, &rec, &ledger)
-    };
-    let lockstep = digest_of(mk(SchedulerKind::Lockstep, 1));
-    let event = digest_of(mk(SchedulerKind::Event, 1));
-    let parallel = digest_of(mk(SchedulerKind::Event, 4));
-    assert_eq!(lockstep, event, "lockstep vs event digest");
-    assert_eq!(event, parallel, "serial vs 4-thread digest");
+    assert_golden_seam(mk, "flat_golden");
+}
 
-    let fixture = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("tests/fixtures/flat_golden.txt");
-    if std::env::var("GOLDEN_WRITE").as_deref() == Ok("1") {
-        std::fs::create_dir_all(fixture.parent().unwrap()).unwrap();
-        std::fs::write(&fixture, &lockstep).unwrap();
-    } else if fixture.exists() {
-        let pinned = std::fs::read_to_string(&fixture).unwrap();
-        assert_eq!(
-            pinned.trim(),
-            lockstep,
-            "flat-topology record stream drifted from the pinned golden"
-        );
-    }
+/// SAT4: the *hierarchical* record stream is pinned the same way the
+/// flat one always was — intra/WAN phase ordering, topology-aware merge
+/// selection and the two-tier barrier arithmetic must digest
+/// identically through the lockstep walk, the serial event scheduler
+/// and the 4-thread runtime (the preset is static, so lockstep can
+/// legally drive it).
+#[test]
+fn hierarchical_golden_digest_across_schedulers_and_threads() {
+    let mk = |sched: SchedulerKind, threads: usize| {
+        let mut cfg = presets::hierarchical_mit();
+        cfg.name = "hier_golden".into();
+        cfg.algo.outer_steps = 6;
+        cfg.run.scheduler = sched;
+        cfg.run.threads = threads;
+        cfg
+    };
+    assert_golden_seam(mk, "hier_golden");
 }

@@ -1,0 +1,213 @@
+//! FIG5 — elastic vs static instance pools (DESIGN.md §9): the same
+//! churn + straggler schedule run with a frozen pool, the
+//! utilization-driven spawn controller (`elastic_mit`), and the
+//! respawn-after-merge policy, reporting spawns, mean live instances
+//! m(t), utilization, vacant capacity and throughput
+//! (EXPERIMENTS.md §Figures, Fig. 5 table).
+//!
+//! Asserted invariants:
+//!
+//! * the respawn arm spawns (its merges are deterministic) and no
+//!   elastic arm utilizes the cluster *worse* than the frozen pool;
+//! * `elastic = off` is **bit-identical** to the frozen pool — the
+//!   `elastic_mit` preset with the mode forced off must reproduce the
+//!   `hetero_dynamic` twin's ledger, record streams and RunResult
+//!   payload exactly (the CI golden-digest leg for the elastic seam);
+//! * every spawning arm strictly lifts the time-averaged live-instance
+//!   census m(t) above the frozen pool's (both run the same merge
+//!   cadence, so the census ordering is structural). Samples and
+//!   vacant capacity are *reported* for the Fig. 5 table, not asserted
+//!   — adaptive-batch trajectories legally diverge once merge
+//!   selection differs.
+//!
+//! Output: summary table + bench_results/fig5_elastic.csv.
+//!
+//! Run: `cargo bench --bench fig5_elastic` (`--smoke` — or the usual
+//! `--quick` / `ADLOCO_BENCH_QUICK=1` — for the CI-sized run;
+//! `--threads N` fans worker chains out, bit-identically).
+
+use adloco::benchkit::{bench_args, quick_mode, threads_arg, wall_time, Table};
+use adloco::config::{presets, Config, ElasticMode};
+use adloco::coordinator::{Coordinator, RunResult};
+use adloco::engine::build_engine;
+use adloco::metrics::Recorder;
+
+fn smoke_mode() -> bool {
+    quick_mode() || bench_args().iter().any(|a| a == "--smoke")
+}
+
+fn shrink(cfg: &mut Config, smoke: bool) {
+    if smoke {
+        cfg.algo.outer_steps = 6;
+        cfg.algo.inner_steps = 10;
+    }
+    cfg.run.threads = threads_arg();
+}
+
+/// The frozen-pool baseline: the churn scenario as shipped.
+fn static_config(smoke: bool) -> Config {
+    let mut cfg = presets::hetero_dynamic();
+    cfg.name = "fig5_static".into();
+    shrink(&mut cfg, smoke);
+    cfg
+}
+
+/// The `elastic_mit` preset with the mode forced off — must be
+/// bit-identical to the static baseline.
+fn off_config(smoke: bool) -> Config {
+    let mut cfg = presets::elastic_mit();
+    cfg.name = "fig5_elastic_off".into();
+    cfg.algo.elastic.mode = ElasticMode::Off;
+    shrink(&mut cfg, smoke);
+    cfg
+}
+
+/// The utilization-driven spawn controller (the preset as shipped).
+fn util_config(smoke: bool) -> Config {
+    let mut cfg = presets::elastic_mit();
+    cfg.name = "fig5_elastic_util".into();
+    shrink(&mut cfg, smoke);
+    cfg
+}
+
+/// Respawn-after-merge on the same schedule: merges at the preset's
+/// frequency are deterministic, so this arm's spawns are guaranteed.
+fn respawn_config(smoke: bool) -> Config {
+    let mut cfg = presets::elastic_mit();
+    cfg.name = "fig5_elastic_respawn".into();
+    cfg.algo.elastic.mode = ElasticMode::RespawnAfterMerge;
+    shrink(&mut cfg, smoke);
+    cfg
+}
+
+fn run_arm(cfg: Config) -> (RunResult, Recorder, f64) {
+    let engine = build_engine(&cfg).unwrap();
+    let mut coord = Coordinator::new(cfg, engine).unwrap();
+    let (r, wall_s) = wall_time(|| coord.run().unwrap());
+    (r, coord.recorder.clone(), wall_s)
+}
+
+/// Bitwise equality of the determinism payload + record streams of two
+/// runs (the `elastic = off` golden check, inlined — the run *name* is
+/// the only field allowed to differ).
+fn assert_bit_identical(a: &(RunResult, Recorder, f64), b: &(RunResult, Recorder, f64)) {
+    let (ra, reca, _) = a;
+    let (rb, recb, _) = b;
+    assert_eq!(ra.total_samples, rb.total_samples, "off-twin: samples");
+    assert_eq!(ra.comm_count, rb.comm_count, "off-twin: comms");
+    assert_eq!(ra.comm_bytes, rb.comm_bytes, "off-twin: bytes");
+    assert_eq!(ra.wan_comm_bytes, rb.wan_comm_bytes, "off-twin: WAN bytes");
+    assert_eq!(ra.best_ppl.to_bits(), rb.best_ppl.to_bits(), "off-twin: best ppl");
+    assert_eq!(ra.final_ppl.to_bits(), rb.final_ppl.to_bits(), "off-twin: final ppl");
+    assert_eq!(
+        ra.virtual_time_s.to_bits(),
+        rb.virtual_time_s.to_bits(),
+        "off-twin: virtual time"
+    );
+    assert_eq!(
+        ra.mean_utilization.to_bits(),
+        rb.mean_utilization.to_bits(),
+        "off-twin: utilization"
+    );
+    assert_eq!(ra.spawn_count, 0, "off-twin: spawns must be zero");
+    assert_eq!(reca.steps.len(), recb.steps.len(), "off-twin: step records");
+    for (sa, sb) in reca.steps.iter().zip(recb.steps.iter()) {
+        assert_eq!(sa.loss.to_bits(), sb.loss.to_bits(), "off-twin: step loss");
+        assert_eq!(
+            sa.virtual_time_s.to_bits(),
+            sb.virtual_time_s.to_bits(),
+            "off-twin: step time"
+        );
+    }
+    assert_eq!(reca.evals.len(), recb.evals.len(), "off-twin: eval records");
+    for (ea, eb) in reca.evals.iter().zip(recb.evals.iter()) {
+        assert_eq!(ea.perplexity.to_bits(), eb.perplexity.to_bits(), "off-twin: eval");
+    }
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    if smoke {
+        eprintln!("fig5_elastic: smoke mode (reduced schedule)");
+    }
+    let mut table = Table::new(&[
+        "arm",
+        "spawns",
+        "mean_live",
+        "mean_util",
+        "vacant_s",
+        "samples",
+        "vtime_s",
+        "best_ppl",
+        "wall_s",
+    ]);
+    let mut report = |arm: &str, r: &RunResult, wall_s: f64| {
+        table.row(&[
+            arm.to_string(),
+            r.spawn_count.to_string(),
+            format!("{:.2}", r.mean_live_instances),
+            format!("{:.4}", r.mean_utilization),
+            format!("{:.3}", r.total_vacant_s),
+            r.total_samples.to_string(),
+            format!("{:.3}", r.virtual_time_s),
+            format!("{:.3}", r.best_ppl),
+            format!("{:.3}", wall_s),
+        ]);
+    };
+
+    // ---- golden leg: elastic=off is the frozen pool, bit for bit --------
+    let st = run_arm(static_config(smoke));
+    let off = run_arm(off_config(smoke));
+    assert_bit_identical(&st, &off);
+    report("static", &st.0, st.2);
+    report("elastic_off", &off.0, off.2);
+
+    // ---- elastic arms ----------------------------------------------------
+    let util = run_arm(util_config(smoke));
+    let resp = run_arm(respawn_config(smoke));
+    report("elastic_util", &util.0, util.2);
+    report("elastic_respawn", &resp.0, resp.2);
+
+    assert!(
+        resp.0.spawn_count >= 1,
+        "respawn arm must spawn (merges are deterministic on this schedule)"
+    );
+    assert!(
+        util.0.spawn_count.max(resp.0.spawn_count) >= 1,
+        "at least one elastic arm must spawn"
+    );
+    for (arm, r) in [("util", &util.0), ("respawn", &resp.0)] {
+        if r.spawn_count > 0 {
+            assert!(
+                r.mean_utilization + 1e-9 >= st.0.mean_utilization,
+                "elastic_{arm} ({:.4}) must not utilize worse than static ({:.4})",
+                r.mean_utilization,
+                st.0.mean_utilization
+            );
+            // both runs merge at the same cadence, so spawns strictly
+            // lift the time-averaged live-instance census m(t)
+            assert!(
+                r.mean_live_instances > st.0.mean_live_instances,
+                "elastic_{arm} must lift the live census ({:.3} vs {:.3})",
+                r.mean_live_instances,
+                st.0.mean_live_instances
+            );
+        }
+    }
+
+    table.print();
+    table.write_csv("fig5_elastic").ok();
+
+    println!(
+        "\nstatic: util {:.4}, {} samples | elastic_util: {} spawns, util {:.4}, {} \
+         samples | elastic_respawn: {} spawns, util {:.4}, {} samples",
+        st.0.mean_utilization,
+        st.0.total_samples,
+        util.0.spawn_count,
+        util.0.mean_utilization,
+        util.0.total_samples,
+        resp.0.spawn_count,
+        resp.0.mean_utilization,
+        resp.0.total_samples,
+    );
+}

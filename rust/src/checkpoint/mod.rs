@@ -33,8 +33,12 @@ use std::io::{Read, Write};
 /// File magic of the checkpoint container format.
 pub const MAGIC: &[u8; 4] = b"ADLC";
 /// Container format version (2 = exact-resume: stream states, sampler
-/// positions, controller statistics, time accounting, in-flight syncs).
-pub const VERSION: u32 = 2;
+/// positions, controller statistics, time accounting, in-flight syncs;
+/// 3 = the elastic lifecycle, DESIGN.md §9: the instance registry —
+/// including the structure of mid-run spawned instances — spawn
+/// bookkeeping, per-slot vacant capacity and the round census, so a
+/// resume across a spawn boundary continues bit-for-bit).
+pub const VERSION: u32 = 3;
 
 /// A captured RNG stream (`Rng::state`): the four xoshiro words plus
 /// the cached Box-Muller spare.
@@ -156,6 +160,31 @@ pub struct TrainerSnapshot {
     pub workers: Vec<WorkerSnapshot>,
 }
 
+/// One instance-registry row (DESIGN.md §9): lifecycle metadata plus
+/// the structural facts — worker node/clock-slot assignments — needed
+/// to rebuild instances that did not exist at config time. Rows cover
+/// *every* instance that ever existed (retired ones included), so a
+/// resumed pool reproduces the uninterrupted run's indices and
+/// utilization rows exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegistryRowSnapshot {
+    /// Stable instance id (position in the trainer pool).
+    pub id: usize,
+    /// Lifecycle state name (`instances::LifecycleState::as_str`).
+    pub state: String,
+    /// Origin name (`instances::Origin::as_str`).
+    pub origin: String,
+    /// Outer step the instance joined the pool (0 for seed instances).
+    pub born_outer: u64,
+    /// Virtual time the instance joined (0.0 for seed instances) — the
+    /// vacancy-reclamation anchor (DESIGN.md §9).
+    pub born_at_s: f64,
+    /// Outer step a merge retired it, if any.
+    pub retired_outer: Option<u64>,
+    /// (node, clock_slot) of each worker, in worker order.
+    pub workers: Vec<(usize, usize)>,
+}
+
 /// A full coordinator snapshot.
 #[derive(Clone, Debug, PartialEq, Default)]
 pub struct Checkpoint {
@@ -185,6 +214,26 @@ pub struct Checkpoint {
     pub comm_hidden_s: Vec<f64>,
     /// Per-slot churn-preemption seconds.
     pub preempted_s: Vec<f64>,
+    /// Per-slot vacant capacity seconds (DESIGN.md §9).
+    pub vacant_s: Vec<f64>,
+    /// Instances spawned so far (the registry's spawn ledger).
+    pub spawn_count: u64,
+    /// Outer step of the most recent spawn round (0 = never) — the
+    /// spawn controller's cooldown anchor.
+    pub last_spawn_outer: u64,
+    /// Representative of the most recent merge, if any (future spawns
+    /// seed their parameters from it).
+    pub last_merge_rep: Option<usize>,
+    /// Σ live instances over the rounds driven so far (the
+    /// `mean_live_instances` numerator; resumed runs must report the
+    /// uninterrupted value).
+    pub live_rounds_sum: u64,
+    /// Rounds driven so far (the denominator).
+    pub rounds_count: u64,
+    /// The full instance registry, one row per instance that ever
+    /// existed (empty only in hand-written headers; `snapshot` always
+    /// fills it).
+    pub registry: Vec<RegistryRowSnapshot>,
     /// The coordinator's own stream (merge selection forks, churn
     /// re-shard forks), mid-sequence.
     pub rng: RngSnapshot,
@@ -378,6 +427,56 @@ impl Checkpoint {
             ("comm_s", f64s_json(&self.comm_s)),
             ("comm_hidden_s", f64s_json(&self.comm_hidden_s)),
             ("preempted_s", f64s_json(&self.preempted_s)),
+            ("vacant_s", f64s_json(&self.vacant_s)),
+            ("spawn_count", u64_json(self.spawn_count)),
+            ("last_spawn_outer", u64_json(self.last_spawn_outer)),
+            (
+                "last_merge_rep",
+                match self.last_merge_rep {
+                    Some(r) => JsonValue::num(r as f64),
+                    None => JsonValue::Null,
+                },
+            ),
+            ("live_rounds_sum", u64_json(self.live_rounds_sum)),
+            ("rounds_count", u64_json(self.rounds_count)),
+            (
+                "registry",
+                JsonValue::Array(
+                    self.registry
+                        .iter()
+                        .map(|r| {
+                            JsonValue::obj(vec![
+                                ("id", JsonValue::num(r.id as f64)),
+                                ("state", JsonValue::str(r.state.clone())),
+                                ("origin", JsonValue::str(r.origin.clone())),
+                                ("born_outer", u64_json(r.born_outer)),
+                                ("born_at_s", f64_json(r.born_at_s)),
+                                (
+                                    "retired_outer",
+                                    match r.retired_outer {
+                                        Some(t) => u64_json(t),
+                                        None => JsonValue::Null,
+                                    },
+                                ),
+                                (
+                                    "workers",
+                                    JsonValue::Array(
+                                        r.workers
+                                            .iter()
+                                            .map(|&(n, s)| {
+                                                JsonValue::Array(vec![
+                                                    JsonValue::num(n as f64),
+                                                    JsonValue::num(s as f64),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("rng", rng_json(&self.rng)),
             (
                 "trainers",
@@ -532,6 +631,65 @@ impl Checkpoint {
             comm_s: parse_f64s(&h, "comm_s")?,
             comm_hidden_s: parse_f64s(&h, "comm_hidden_s")?,
             preempted_s: parse_f64s(&h, "preempted_s")?,
+            vacant_s: parse_f64s(&h, "vacant_s")?,
+            spawn_count: get_u64(&h, "spawn_count")?,
+            last_spawn_outer: get_u64(&h, "last_spawn_outer")?,
+            last_merge_rep: match h.get("last_merge_rep") {
+                Some(JsonValue::Null) | None => None,
+                Some(x) => Some(
+                    x.as_usize()
+                        .ok_or_else(|| anyhow!("last_merge_rep is not an integer"))?,
+                ),
+            },
+            live_rounds_sum: get_u64(&h, "live_rounds_sum")?,
+            rounds_count: get_u64(&h, "rounds_count")?,
+            registry: h
+                .get("registry")
+                .and_then(|x| x.as_array())
+                .ok_or_else(|| anyhow!("header missing registry"))?
+                .iter()
+                .map(|rj| {
+                    let workers = rj
+                        .get("workers")
+                        .and_then(|x| x.as_array())
+                        .ok_or_else(|| anyhow!("registry row missing workers"))?
+                        .iter()
+                        .map(|wj| {
+                            let pair = wj
+                                .as_array()
+                                .filter(|a| a.len() == 2)
+                                .ok_or_else(|| anyhow!("registry worker is not a pair"))?;
+                            let n = pair[0]
+                                .as_usize()
+                                .ok_or_else(|| anyhow!("registry worker node"))?;
+                            let s = pair[1]
+                                .as_usize()
+                                .ok_or_else(|| anyhow!("registry worker slot"))?;
+                            Ok((n, s))
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok(RegistryRowSnapshot {
+                        id: get_u64(rj, "id")? as usize,
+                        state: rj
+                            .get("state")
+                            .and_then(|x| x.as_str())
+                            .ok_or_else(|| anyhow!("registry row missing state"))?
+                            .to_string(),
+                        origin: rj
+                            .get("origin")
+                            .and_then(|x| x.as_str())
+                            .ok_or_else(|| anyhow!("registry row missing origin"))?
+                            .to_string(),
+                        born_outer: get_u64(rj, "born_outer")?,
+                        born_at_s: get_f64(rj, "born_at_s")?,
+                        retired_outer: match rj.get("retired_outer") {
+                            Some(JsonValue::Null) | None => None,
+                            Some(_) => Some(get_u64(rj, "retired_outer")?),
+                        },
+                        workers,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
             rng: parse_rng(&h, "rng")?,
             trainers: Vec::new(),
         };
@@ -710,6 +868,41 @@ mod tests {
             comm_s: vec![0.01, 0.02, 0.03],
             comm_hidden_s: vec![0.001, 0.0, 0.002],
             preempted_s: vec![0.0, 0.5, 0.0],
+            vacant_s: vec![0.0, 0.0, 1.25],
+            spawn_count: 1,
+            last_spawn_outer: 5,
+            last_merge_rep: Some(2),
+            live_rounds_sum: 17,
+            rounds_count: 7,
+            registry: vec![
+                RegistryRowSnapshot {
+                    id: 0,
+                    state: "active".into(),
+                    origin: "seed".into(),
+                    born_outer: 0,
+                    born_at_s: 0.0,
+                    retired_outer: None,
+                    workers: vec![(0, 0), (1, 1)],
+                },
+                RegistryRowSnapshot {
+                    id: 1,
+                    state: "retired".into(),
+                    origin: "seed".into(),
+                    born_outer: 0,
+                    born_at_s: 0.0,
+                    retired_outer: Some(4),
+                    workers: vec![(1, 2)],
+                },
+                RegistryRowSnapshot {
+                    id: 2,
+                    state: "spawned".into(),
+                    origin: "util".into(),
+                    born_outer: 5,
+                    born_at_s: 7.25,
+                    retired_outer: None,
+                    workers: vec![(3, 3)],
+                },
+            ],
             rng: rng_snap(11, true),
             trainers: vec![
                 TrainerSnapshot {
@@ -803,6 +996,27 @@ mod tests {
         assert_eq!(back.clock_times[1], f64::INFINITY);
         assert_eq!(back.trainers[0].sigma2_ema.0, f64::NEG_INFINITY);
         assert_eq!(back.trainers[0].sigma2_ema.1, u64::MAX);
+    }
+
+    #[test]
+    fn registry_and_spawn_bookkeeping_roundtrip() {
+        let cp = sample_checkpoint();
+        let back = Checkpoint::from_bytes(&cp.to_bytes()).unwrap();
+        assert_eq!(back.registry, cp.registry);
+        assert_eq!(back.registry[2].origin, "util");
+        assert_eq!(back.registry[1].retired_outer, Some(4));
+        assert_eq!(back.registry[0].workers, vec![(0, 0), (1, 1)]);
+        assert_eq!(back.spawn_count, 1);
+        assert_eq!(back.last_spawn_outer, 5);
+        assert_eq!(back.last_merge_rep, Some(2));
+        assert_eq!(back.live_rounds_sum, 17);
+        assert_eq!(back.rounds_count, 7);
+        assert_eq!(back.vacant_s[2].to_bits(), 1.25f64.to_bits());
+        // None variants survive too
+        let mut cp2 = cp.clone();
+        cp2.last_merge_rep = None;
+        let back2 = Checkpoint::from_bytes(&cp2.to_bytes()).unwrap();
+        assert_eq!(back2.last_merge_rep, None);
     }
 
     #[test]

@@ -108,6 +108,15 @@ impl VirtualClock {
     pub fn retain(&mut self, keep: &[usize]) {
         self.times = keep.iter().map(|&w| self.times[w]).collect();
     }
+
+    /// Append a new clock slot starting at absolute time `t` (elastic
+    /// spawns join mid-run at the cluster front, not at t = 0 —
+    /// DESIGN.md §9). Returns the new slot's index.
+    pub fn push(&mut self, t: f64) -> usize {
+        debug_assert!(t >= 0.0);
+        self.times.push(t);
+        self.times.len() - 1
+    }
 }
 
 /// Build per-node models from a cluster config.
@@ -157,6 +166,11 @@ pub struct ClusterState {
     pub comm_hidden_s: Vec<f64>,
     /// Per-slot churn-preemption downtime seconds.
     pub preempted_s: Vec<f64>,
+    /// Per-slot capacity seconds with no live instance assigned
+    /// (DESIGN.md §9): accrued for the frozen slots of merge-retired
+    /// trainers. Distinct from `wait_s`/`preempted_s` — nobody was
+    /// scheduled there — and excluded from the utilization denominator.
+    pub vacant_s: Vec<f64>,
 }
 
 impl ClusterState {
@@ -172,7 +186,34 @@ impl ClusterState {
             comm_s: vec![0.0; slots],
             comm_hidden_s: vec![0.0; slots],
             preempted_s: vec![0.0; slots],
+            vacant_s: vec![0.0; slots],
         }
+    }
+
+    /// Allocate a fresh worker clock slot starting at absolute time `t`
+    /// with zeroed time accounting — how elastic spawns obtain their
+    /// slots (DESIGN.md §9). Existing slots are untouched, so growing
+    /// the pool never perturbs any accumulated f64 sequence.
+    pub fn push_slot(&mut self, t: f64) -> usize {
+        let slot = self.clock.push(t);
+        self.busy_s.push(0.0);
+        self.wait_s.push(0.0);
+        self.comm_s.push(0.0);
+        self.comm_hidden_s.push(0.0);
+        self.preempted_s.push(0.0);
+        self.vacant_s.push(0.0);
+        slot
+    }
+
+    /// Set slot `w`'s vacant capacity to the window from its frozen
+    /// clock to `until` (no live instance assigned — DESIGN.md §9).
+    /// An **assignment**, not an accumulation: the window is fully
+    /// recomputable from the frozen clock and the reclaim timeline, so
+    /// re-running the end-of-run accounting (e.g. resuming from a
+    /// snapshot taken after a completed run) is idempotent. The clock
+    /// itself is not advanced: the slot has no owner to move.
+    pub fn set_vacant_window(&mut self, w: usize, until: f64) {
+        self.vacant_s[w] = (until - self.clock.time(w)).max(0.0);
     }
 
     /// Credit `hidden` seconds of overlapped (clock-free) communication
@@ -216,6 +257,7 @@ impl ClusterState {
                     comm_s: self.comm_s[s],
                     hidden_s: self.comm_hidden_s[s],
                     preempted_s: self.preempted_s[s],
+                    vacant_s: self.vacant_s[s],
                 });
             }
         }
@@ -354,6 +396,43 @@ mod tests {
         assert!((cs.comm_s[0] - 0.5).abs() < 1e-12);
         assert!((cs.comm_s[1] - 0.5).abs() < 1e-12);
         assert_eq!(cs.wait_s[2], 0.0, "non-member unaffected");
+    }
+
+    #[test]
+    fn push_slot_extends_all_accounting_in_lockstep() {
+        let cfg = crate::config::presets::mock_default().cluster;
+        let mut cs = ClusterState::new(&cfg, 2);
+        cs.clock.advance(0, 1.0);
+        cs.busy_s[0] = 1.0;
+        let s = cs.push_slot(7.5);
+        assert_eq!(s, 2);
+        assert_eq!(cs.clock.len(), 3);
+        assert_eq!(cs.clock.time(2), 7.5, "spawned slot starts at the front");
+        let tables =
+            [&cs.busy_s, &cs.wait_s, &cs.comm_s, &cs.comm_hidden_s, &cs.preempted_s, &cs.vacant_s];
+        for v in tables {
+            assert_eq!(v.len(), 3);
+            assert_eq!(v[2], 0.0);
+        }
+        assert_eq!(cs.clock.time(0), 1.0, "existing slots untouched");
+        assert_eq!(cs.busy_s[0], 1.0);
+    }
+
+    #[test]
+    fn vacant_window_is_assigned_idempotently_without_moving_the_clock() {
+        let cfg = crate::config::presets::mock_default().cluster;
+        let mut cs = ClusterState::new(&cfg, 2);
+        cs.clock.advance(0, 2.0);
+        cs.set_vacant_window(0, 5.0);
+        assert!((cs.vacant_s[0] - 3.0).abs() < 1e-12);
+        assert_eq!(cs.clock.time(0), 2.0, "no owner, no clock movement");
+        // re-running the accounting is an assignment, never a double count
+        cs.set_vacant_window(0, 5.0);
+        assert!((cs.vacant_s[0] - 3.0).abs() < 1e-12, "idempotent");
+        // an earlier end recomputes (clamped at zero)
+        cs.set_vacant_window(0, 1.0);
+        assert_eq!(cs.vacant_s[0], 0.0);
+        assert_eq!(cs.wait_s[0], 0.0, "vacancy never inflates wait_s");
     }
 
     #[test]

@@ -192,6 +192,80 @@ impl Default for ScheduleConfig {
     }
 }
 
+/// Elastic trainer-lifecycle policy (DESIGN.md §9): whether — and how —
+/// the coordinator may grow the instance pool at runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElasticMode {
+    /// The pool is frozen at config time (historical behaviour, and the
+    /// bit-for-bit default: no registry decision is ever evaluated).
+    Off,
+    /// Spawn a lightweight instance on any available node whose idle
+    /// fraction reaches `elastic.idle_threshold` and that still has
+    /// worker-slot capacity (churn- or merge-freed capacity counts as
+    /// fully idle).
+    UtilThreshold,
+    /// After each MIT merge retires part of the pool, respawn as many
+    /// fresh instances on the least-loaded nodes — merges consolidate
+    /// knowledge without permanently draining parallelism.
+    RespawnAfterMerge,
+}
+
+impl ElasticMode {
+    /// Parse a CLI/config elastic-mode name.
+    pub fn parse(s: &str) -> Result<ElasticMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" => Ok(ElasticMode::Off),
+            "util_threshold" | "util" => Ok(ElasticMode::UtilThreshold),
+            "respawn_after_merge" | "respawn" => Ok(ElasticMode::RespawnAfterMerge),
+            _ => bail!("unknown elastic mode {s:?} (off|util_threshold|respawn_after_merge)"),
+        }
+    }
+
+    /// Canonical lowercase name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ElasticMode::Off => "off",
+            ElasticMode::UtilThreshold => "util_threshold",
+            ElasticMode::RespawnAfterMerge => "respawn_after_merge",
+        }
+    }
+}
+
+/// Elastic-lifecycle knobs (DESIGN.md §9). The whole block is inert
+/// while `mode == Off`.
+#[derive(Clone, Debug)]
+pub struct ElasticConfig {
+    /// Lifecycle policy (see [`ElasticMode`]).
+    pub mode: ElasticMode,
+    /// `util_threshold`: spawn when a node's accumulated idle fraction
+    /// `(wait + preempted) / accounted` reaches this.
+    pub idle_threshold: f64,
+    /// Hard cap on live instances (0 = `2 × algo.num_trainers`).
+    pub max_instances: usize,
+    /// Minimum outer rounds between consecutive `util_threshold` spawn
+    /// rounds (respawn-after-merge fires immediately).
+    pub cooldown_rounds: usize,
+    /// Workers per spawned instance — the paper's "lightweight training
+    /// stream" width (seed instances keep `workers_per_trainer`).
+    pub workers_per_spawn: usize,
+    /// Per-node worker-slot capacity the spawn controller respects
+    /// (0 = derive from the densest initial placement).
+    pub node_capacity: usize,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            mode: ElasticMode::Off,
+            idle_threshold: 0.25,
+            max_instances: 0,
+            cooldown_rounds: 2,
+            workers_per_spawn: 1,
+            node_capacity: 0,
+        }
+    }
+}
+
 /// SwitchMode (gradient accumulation) knobs (paper §4.2).
 #[derive(Clone, Debug)]
 pub struct SwitchConfig {
@@ -242,6 +316,8 @@ pub struct AlgoConfig {
     pub merge: MergeConfig,
     /// SwitchMode knobs.
     pub switch: SwitchConfig,
+    /// Elastic trainer-lifecycle knobs (DESIGN.md §9).
+    pub elastic: ElasticConfig,
     /// Batch used when batching.adaptive == false.
     pub fixed_batch: usize,
 }
@@ -625,6 +701,24 @@ impl Config {
         if a.switch.enabled && a.switch.multiplier < 1.0 {
             bail!("switch.multiplier must be >= 1");
         }
+        if a.elastic.mode != ElasticMode::Off {
+            if !(0.0..=1.0).contains(&a.elastic.idle_threshold) {
+                bail!("elastic.idle_threshold must be in [0,1]");
+            }
+            if a.elastic.workers_per_spawn == 0 {
+                bail!("elastic.workers_per_spawn must be >= 1");
+            }
+            if a.elastic.max_instances != 0 && a.elastic.max_instances < a.num_trainers {
+                bail!(
+                    "elastic.max_instances ({}) below the initial pool ({})",
+                    a.elastic.max_instances,
+                    a.num_trainers
+                );
+            }
+            if a.elastic.mode == ElasticMode::RespawnAfterMerge && !a.merge.enabled {
+                bail!("elastic=respawn_after_merge requires merge.enabled");
+            }
+        }
         if self.cluster.nodes.is_empty() {
             bail!("cluster.nodes must be non-empty");
         }
@@ -928,6 +1022,30 @@ fn apply_algo(a: &mut AlgoConfig, v: &JsonValue) -> Result<()> {
         }
         f64_field!(s, "multiplier", a.switch.multiplier);
     }
+    if let Some(e) = v.get("elastic") {
+        // a bare string sets the mode (`--set algo.elastic=util_threshold`);
+        // an object addresses the individual knobs
+        if let Some(s) = e.as_str() {
+            a.elastic.mode = ElasticMode::parse(s)?;
+        } else {
+            if let Some(s) = e.get("mode").and_then(|x| x.as_str()) {
+                a.elastic.mode = ElasticMode::parse(s)?;
+            }
+            f64_field!(e, "idle_threshold", a.elastic.idle_threshold);
+            if let Some(x) = e.get("max_instances").and_then(|x| x.as_usize()) {
+                a.elastic.max_instances = x;
+            }
+            if let Some(x) = e.get("cooldown_rounds").and_then(|x| x.as_usize()) {
+                a.elastic.cooldown_rounds = x;
+            }
+            if let Some(x) = e.get("workers_per_spawn").and_then(|x| x.as_usize()) {
+                a.elastic.workers_per_spawn = x;
+            }
+            if let Some(x) = e.get("node_capacity").and_then(|x| x.as_usize()) {
+                a.elastic.node_capacity = x;
+            }
+        }
+    }
     Ok(())
 }
 
@@ -1150,6 +1268,7 @@ mod tests {
         presets::xla_small().validate().unwrap();
         presets::hetero_dynamic().validate().unwrap();
         presets::hierarchical_mit().validate().unwrap();
+        presets::elastic_mit().validate().unwrap();
     }
 
     #[test]
@@ -1284,6 +1403,49 @@ mod tests {
         cfg.validate().unwrap();
         cfg.run.scheduler = SchedulerKind::Lockstep;
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn elastic_overrides_and_validation() {
+        let mut cfg = presets::mock_default();
+        assert_eq!(cfg.algo.elastic.mode, ElasticMode::Off, "off is the default");
+        // bare-string form sets the mode
+        cfg.apply_override("algo.elastic=util_threshold").unwrap();
+        assert_eq!(cfg.algo.elastic.mode, ElasticMode::UtilThreshold);
+        // object form addresses the knobs
+        cfg.apply_override("algo.elastic.idle_threshold=0.4").unwrap();
+        cfg.apply_override("algo.elastic.max_instances=6").unwrap();
+        cfg.apply_override("algo.elastic.workers_per_spawn=2").unwrap();
+        cfg.apply_override("algo.elastic.node_capacity=3").unwrap();
+        assert_eq!(cfg.algo.elastic.idle_threshold, 0.4);
+        assert_eq!(cfg.algo.elastic.max_instances, 6);
+        assert_eq!(cfg.algo.elastic.workers_per_spawn, 2);
+        assert_eq!(cfg.algo.elastic.node_capacity, 3);
+        cfg.validate().unwrap();
+        assert!(cfg.apply_override("algo.elastic=sometimes").is_err());
+        assert_eq!(ElasticMode::parse("respawn").unwrap(), ElasticMode::RespawnAfterMerge);
+        assert_eq!(ElasticMode::UtilThreshold.as_str(), "util_threshold");
+
+        // validation: cap below the initial pool, zero-width spawns,
+        // respawn without merging
+        let mut bad = cfg.clone();
+        bad.algo.elastic.max_instances = bad.algo.num_trainers - 1;
+        assert!(bad.validate().is_err(), "cap below initial pool must fail");
+        let mut bad = cfg.clone();
+        bad.algo.elastic.workers_per_spawn = 0;
+        assert!(bad.validate().is_err(), "zero-width spawn must fail");
+        let mut bad = cfg.clone();
+        bad.algo.elastic.mode = ElasticMode::RespawnAfterMerge;
+        bad.algo.merge.enabled = false;
+        assert!(bad.validate().is_err(), "respawn without merging must fail");
+        let mut bad = cfg.clone();
+        bad.algo.elastic.idle_threshold = 1.5;
+        assert!(bad.validate().is_err(), "threshold beyond 1 must fail");
+        // everything is inert when off
+        let mut off = cfg.clone();
+        off.algo.elastic.mode = ElasticMode::Off;
+        off.algo.elastic.idle_threshold = 99.0;
+        off.validate().unwrap();
     }
 
     #[test]

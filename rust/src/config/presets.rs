@@ -13,6 +13,7 @@ pub fn by_name(name: &str) -> Option<Config> {
         "hetero_dynamic" => Some(hetero_dynamic()),
         "hierarchical_mit" => Some(hierarchical_mit()),
         "adloco_overlap" => Some(adloco_overlap()),
+        "elastic_mit" => Some(elastic_mit()),
         _ => None,
     }
 }
@@ -28,6 +29,7 @@ pub fn preset_names() -> &'static [&'static str] {
         "hetero_dynamic",
         "hierarchical_mit",
         "adloco_overlap",
+        "elastic_mit",
     ]
 }
 
@@ -102,6 +104,7 @@ pub fn paper_table1() -> Config {
                 policy: MergeSelect::WorstByBatch,
             },
             switch: SwitchConfig { enabled: true, multiplier: 2.0 },
+            elastic: ElasticConfig::default(), // frozen pool (DESIGN.md §9)
             fixed_batch: 16,
         },
         data: DataConfig {
@@ -269,6 +272,30 @@ pub fn adloco_overlap() -> Config {
     cfg
 }
 
+/// The `hetero_dynamic` schedule with the elastic trainer lifecycle on
+/// (DESIGN.md §9): one extra worker slot of headroom per node
+/// (`node_capacity = 3` against the initial 2-per-node packing) and a
+/// utilization-driven spawn controller, so capacity freed by the churn
+/// window and by MIT merges is refilled with fresh lightweight streams
+/// instead of idling — the paper's "multiple lightweight training
+/// streams … increasing throughput and reducing idle time" made a
+/// runtime policy (`benches/fig5_elastic.rs` measures the gain).
+pub fn elastic_mit() -> Config {
+    let mut cfg = hetero_dynamic();
+    cfg.name = "elastic_mit".into();
+    cfg.algo.elastic = ElasticConfig {
+        mode: ElasticMode::UtilThreshold,
+        // the 2:1:1:0.35 speed spread makes fast nodes wait far longer
+        // than this at every sync barrier, so freed capacity refills
+        idle_threshold: 0.05,
+        max_instances: 8,
+        cooldown_rounds: 2,
+        workers_per_spawn: 1,
+        node_capacity: 3,
+    };
+    cfg
+}
+
 /// Minimal smoke-run preset (seconds, MockEngine).
 pub fn quick() -> Config {
     let mut cfg = mock_default();
@@ -310,6 +337,29 @@ mod tests {
             cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn elastic_preset_is_util_driven_hetero_dynamic() {
+        let cfg = elastic_mit();
+        assert_eq!(cfg.algo.elastic.mode, ElasticMode::UtilThreshold);
+        assert!(cfg.algo.elastic.node_capacity > 0, "explicit spawn headroom");
+        assert!(cfg.algo.elastic.max_instances >= cfg.algo.num_trainers);
+        // every other preset keeps the pool frozen
+        for name in preset_names() {
+            let want = if *name == "elastic_mit" {
+                ElasticMode::UtilThreshold
+            } else {
+                ElasticMode::Off
+            };
+            assert_eq!(by_name(name).unwrap().algo.elastic.mode, want, "{name}");
+        }
+        // same cluster/scenario/schedule as hetero_dynamic: only the
+        // lifecycle knob differs
+        let hetero = hetero_dynamic();
+        assert_eq!(cfg.cluster.nodes.len(), hetero.cluster.nodes.len());
+        assert_eq!(cfg.cluster.scenario.churn, hetero.cluster.scenario.churn);
+        assert_eq!(cfg.run.scheduler, SchedulerKind::Event);
     }
 
     #[test]

@@ -59,13 +59,18 @@ impl Coordinator {
 
         // ---- merging (same cadence and selection as lockstep) -----------
         let mc = self.cfg.algo.merge.clone();
+        let mut merge_freed = 0usize;
         if mc.enabled
             && self.live_trainers() > 1
             && mc.frequency > 0
             && outer_t % mc.frequency as u64 == 0
         {
-            self.maybe_merge_event(outer_t)?;
+            merge_freed = self.maybe_merge_event(outer_t)?;
         }
+
+        // ---- elastic lifecycle (DESIGN.md §9): spawn controller +
+        //      round census, shared verbatim with the lockstep walk ----
+        self.elastic_boundary(outer_t, merge_freed)?;
 
         let h = self.cfg.algo.inner_steps as u64;
         let cap = self.cfg.run.max_inner_steps as u64;
@@ -233,6 +238,28 @@ impl Coordinator {
                 }
             }
         }
+        // elastic lifecycle trace markers (DESIGN.md §9): surface this
+        // round's boundary spawns/retirements in the event trace. Like
+        // SyncComplete these are bookkeeping-only — the spawn/retire
+        // already happened before the queue was seeded.
+        for meta in self.registry.metas() {
+            if meta.born_outer == outer_t {
+                let t = self.trainers[meta.id.0]
+                    .workers
+                    .first()
+                    .map(|w| self.cluster.clock.time(w.clock_slot))
+                    .unwrap_or(0.0);
+                queue.push(t, SimEvent::InstanceSpawned { instance: meta.id.0 });
+            }
+            if meta.retired_outer == Some(outer_t) {
+                let t = self.trainers[meta.id.0]
+                    .workers
+                    .first()
+                    .map(|w| self.cluster.clock.time(w.clock_slot))
+                    .unwrap_or(0.0);
+                queue.push(t, SimEvent::InstanceRetired { instance: meta.id.0 });
+            }
+        }
         for &ti in live {
             let plan = runs[ti].as_ref().unwrap().plan;
             for wi in 0..self.trainers[ti].workers.len() {
@@ -326,13 +353,17 @@ impl Coordinator {
                         queue.push(t, SimEvent::SyncArrive { trainer: ti, worker: wi });
                     }
                 }
-                // Arrival/completion markers: the rendezvous itself is
-                // the queue draining — every active worker has posted
-                // its arrival by then — and delayed-overlap completions
-                // apply at the boundary, not at their pop.
+                // Arrival/completion/lifecycle markers: the rendezvous
+                // itself is the queue draining — every active worker has
+                // posted its arrival by then — delayed-overlap
+                // completions apply at the boundary, not at their pop,
+                // and lifecycle markers only place boundary spawns/
+                // retirements in the trace.
                 SimEvent::SyncArrive { .. }
                 | SimEvent::MergeArrive { .. }
-                | SimEvent::SyncComplete { .. } => {}
+                | SimEvent::SyncComplete { .. }
+                | SimEvent::InstanceSpawned { .. }
+                | SimEvent::InstanceRetired { .. } => {}
             }
         }
         Ok(hit_target)

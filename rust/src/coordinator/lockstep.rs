@@ -14,13 +14,18 @@ impl Coordinator {
     pub fn step_outer(&mut self, outer_t: u64) -> Result<bool> {
         // ---- merging (Algorithm 3 lines 11-16) -------------------------
         let mc = self.cfg.algo.merge.clone();
+        let mut merge_freed = 0usize;
         if mc.enabled
             && self.live_trainers() > 1
             && mc.frequency > 0
             && outer_t % mc.frequency as u64 == 0
         {
-            self.maybe_merge(outer_t)?;
+            merge_freed = self.maybe_merge(outer_t)?;
         }
+
+        // ---- elastic lifecycle (DESIGN.md §9): spawn controller +
+        //      round census, shared verbatim with the event scheduler --
+        self.elastic_boundary(outer_t, merge_freed)?;
 
         // ---- inner loops ------------------------------------------------
         let h = self.cfg.algo.inner_steps;

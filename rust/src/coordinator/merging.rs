@@ -72,11 +72,14 @@ impl Coordinator {
     /// plain barrier over every worker of the selected trainers, then the
     /// shared consolidation. The comm layer prices the gather ((k−1)·P
     /// flat; split into intra legs + a (G−1)·P WAN leg hierarchically).
-    pub(crate) fn maybe_merge(&mut self, outer_t: u64) -> Result<()> {
+    /// Returns the number of instances the merge retired (the
+    /// respawn-after-merge budget — DESIGN.md §9).
+    pub(crate) fn maybe_merge(&mut self, outer_t: u64) -> Result<usize> {
         let selected = self.select_merge();
         if selected.len() < 2 {
-            return Ok(());
+            return Ok(0);
         }
+        self.registry.mark_merging(&selected);
         // a merge is a full rendezvous: any delayed outer update still in
         // flight for a participant drains (applies) first, so the merged
         // parameters include every posted collective (DESIGN.md §8)
@@ -103,11 +106,13 @@ impl Coordinator {
     /// MIT merge round (Algorithms 1-2), event flavour: the rendezvous
     /// start is the last active participant's clock, and the transfer
     /// runs at the slowest participating link's current bandwidth.
-    pub(crate) fn maybe_merge_event(&mut self, outer_t: u64) -> Result<()> {
+    /// Returns the number of instances the merge retired (DESIGN.md §9).
+    pub(crate) fn maybe_merge_event(&mut self, outer_t: u64) -> Result<usize> {
         let selected = self.select_merge();
         if selected.len() < 2 {
-            return Ok(());
+            return Ok(0);
         }
+        self.registry.mark_merging(&selected);
         // drain in-flight delayed updates of every participant before the
         // consolidation (same rule as the lockstep flavour — DESIGN.md §8)
         for &id in &selected {
@@ -157,13 +162,14 @@ impl Coordinator {
 
     /// The parameter/shard consolidation of a merge (Algorithm 2), after
     /// the participants' barrier produced `t_after`. Shared by both
-    /// schedulers; the ledger entry is recorded by the caller.
+    /// schedulers; the ledger entry is recorded by the caller. Returns
+    /// the number of instances retired (the elastic respawn budget).
     pub(crate) fn perform_merge(
         &mut self,
         outer_t: u64,
         selected: &[usize],
         t_after: f64,
-    ) -> Result<()> {
+    ) -> Result<usize> {
         // weighted merge over the selected trainers' parameters
         let outcome = {
             // split borrows: collect (id, b_req) first, then build the
@@ -229,6 +235,21 @@ impl Coordinator {
             self.trainers[rep].outer.reset();
         }
 
+        // lifecycle transitions (DESIGN.md §9): Merging resolves —
+        // representative back to Active, consumed instances to Retired;
+        // the registry also remembers the merge product for future
+        // spawns to seed their parameters from
+        self.registry.resolve_merge(rep, &outcome.removed, outer_t);
+        for &dead in &outcome.removed {
+            self.recorder.lifecycle.push(crate::metrics::LifecycleRecord {
+                outer_step: outer_t,
+                instance: dead,
+                event: crate::metrics::LifecycleEvent::Retired,
+                live_after: self.live_trainers(),
+                virtual_time_s: t_after,
+            });
+        }
+
         crate::info!(
             "outer {outer_t}: merged {:?} -> representative {rep} ({} trainers left)",
             outcome.removed,
@@ -241,6 +262,6 @@ impl Coordinator {
             trainers_left: self.live_trainers(),
             virtual_time_s: t_after,
         });
-        Ok(())
+        Ok(outcome.removed.len())
     }
 }

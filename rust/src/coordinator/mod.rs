@@ -74,12 +74,15 @@ mod tests;
 use crate::batching::{plan_step, StepPlan};
 use crate::cluster::{assign_workers, ClusterState};
 use crate::comm::{CommKind, CommLayer, CommLedger, SyncHandle};
-use crate::config::{Config, Method, OverlapMode, SchedulerKind};
+use crate::config::{Config, ElasticMode, Method, OverlapMode, SchedulerKind};
 use crate::data::{make_shards, Corpus, CorpusSpec, TokenBatch};
 use crate::engine::{StepStats, TrainEngine};
-use crate::metrics::{perplexity, EvalRecord, Recorder};
+use crate::instances::{plan_spawns, InstanceRegistry, NodeLoad, Origin, SpawnBudget};
+use crate::metrics::{
+    perplexity, EvalRecord, LifecycleEvent, LifecycleRecord, Recorder, RoundRecord,
+};
 use crate::trainer::Trainer;
-use crate::util::Rng;
+use crate::util::{derive_seed, Rng};
 use anyhow::Result;
 use chain::{exec_step, step_compute_time, StepScratch};
 
@@ -142,6 +145,18 @@ pub struct RunResult {
     /// blocking on the same schedule. Zero in blocking mode. Part of
     /// the determinism contract like every other payload field.
     pub overlap_hidden_s: f64,
+    /// Instances the elastic lifecycle spawned over the run
+    /// (DESIGN.md §9). Always 0 under `algo.elastic = off`.
+    pub spawn_count: u64,
+    /// Time-averaged live-instance count over the outer rounds — the
+    /// measured m(t) of the elastic theory estimates (DESIGN.md §9).
+    /// Equals the static pool size minus merge shrinkage when elastic
+    /// is off.
+    pub mean_live_instances: f64,
+    /// Capacity seconds across all slots that sat with no live instance
+    /// assigned (`UtilRecord::vacant_s` summed) — the freed-capacity
+    /// waste the spawn controller exists to reclaim.
+    pub total_vacant_s: f64,
     /// Host wall-clock seconds spent inside `Coordinator::run` — NOT part
     /// of the determinism contract (it varies run to run); the observable
     /// behind the §Perf speedup table.
@@ -210,6 +225,16 @@ pub struct Coordinator {
     /// Run-level sum of per-sync hidden collective seconds (the
     /// `RunResult::overlap_hidden_s` accumulator).
     overlap_hidden_s: f64,
+    /// The elastic instance registry (DESIGN.md §9): lifecycle states,
+    /// spawn bookkeeping, node capacities. Mirrors the pool for frozen
+    /// (`elastic = off`) runs without ever touching their numerics.
+    registry: InstanceRegistry,
+    /// Σ live instances over the outer rounds driven so far (the
+    /// numerator of `RunResult::mean_live_instances`; checkpointed so
+    /// resumed runs report the uninterrupted value).
+    live_rounds_sum: u64,
+    /// Outer rounds driven so far (the denominator).
+    rounds_count: u64,
     /// Inner-lr schedule (evaluated on each trainer's inner-step count).
     lr_schedule: crate::schedule::Schedule,
     /// Resolved thread count for the parallel runtime (>= 1).
@@ -265,6 +290,24 @@ impl Coordinator {
             ));
         }
 
+        // per-node worker-slot capacity the spawn controller respects
+        // (DESIGN.md §9): an explicit `elastic.node_capacity`, or the
+        // densest initial packing (uniform across nodes — simulated
+        // hosts are homogeneous in slot count)
+        let node_capacity: Vec<usize> = {
+            let n_nodes = cfg.cluster.nodes.len();
+            let cap = if a.elastic.node_capacity > 0 {
+                a.elastic.node_capacity
+            } else {
+                let mut counts = vec![0usize; n_nodes];
+                for &node in &placement {
+                    counts[node] += 1;
+                }
+                counts.iter().copied().max().unwrap_or(1).max(1)
+            };
+            vec![cap; n_nodes]
+        };
+
         let p = engine.param_count();
         let threads = cfg.run.effective_threads();
         let mut recorder = Recorder::new();
@@ -280,6 +323,9 @@ impl Coordinator {
             comm: CommLayer::new(&cfg.cluster),
             recorder,
             rng,
+            registry: InstanceRegistry::seed(k, node_capacity),
+            live_rounds_sum: 0,
+            rounds_count: 0,
             delta_scratch: vec![0.0; p],
             grad_scratch: vec![0.0; p],
             accum_scratch: vec![0.0; p],
@@ -326,6 +372,208 @@ impl Coordinator {
     /// Trainers still alive (not consumed by a merge).
     pub fn live_trainers(&self) -> usize {
         self.trainers.iter().filter(|t| t.alive).count()
+    }
+
+    /// The elastic instance registry: lifecycle states, spawn ledger,
+    /// node capacities (DESIGN.md §9).
+    pub fn registry(&self) -> &InstanceRegistry {
+        &self.registry
+    }
+
+    // ------------------------------------------------------------------
+    // elastic lifecycle (DESIGN.md §9)
+    // ------------------------------------------------------------------
+
+    /// The shared elastic outer-boundary phase, called by both
+    /// schedulers at the same point (after the merge round, before the
+    /// inner loops) so lockstep and event stay bit-identical: promote
+    /// last round's spawns to Active, run the spawn controller, then
+    /// take the round's live-instance census. Returns the ids spawned
+    /// this round. Under `elastic = off` the controller is never
+    /// consulted — only the (new-stream) census runs.
+    pub(crate) fn elastic_boundary(
+        &mut self,
+        outer_t: u64,
+        merge_freed: usize,
+    ) -> Result<Vec<usize>> {
+        self.registry.activate_spawned();
+        let spawned = if self.cfg.algo.elastic.mode == ElasticMode::Off {
+            Vec::new()
+        } else {
+            self.maybe_spawn(outer_t, merge_freed)?
+        };
+        let live = self.live_trainers();
+        self.live_rounds_sum += live as u64;
+        self.rounds_count += 1;
+        self.recorder.rounds.push(RoundRecord { outer_step: outer_t, live_instances: live });
+        Ok(spawned)
+    }
+
+    /// Consult the spawn controller over the accumulated per-node
+    /// utilization statistics (all determinism-contract fields — every
+    /// scheduler and thread count sees identical loads) and spawn the
+    /// planned instances. `merge_freed` is the number of instances this
+    /// round's merge retired (the respawn-after-merge budget).
+    fn maybe_spawn(&mut self, outer_t: u64, merge_freed: usize) -> Result<Vec<usize>> {
+        let e = self.cfg.algo.elastic.clone();
+        let max_instances = if e.max_instances > 0 {
+            e.max_instances
+        } else {
+            2 * self.cfg.algo.num_trainers
+        };
+        let n_nodes = self.cluster.nodes.len();
+        let front = self.cluster.clock.max_time();
+        // aggregate slot ownership + idle statistics per node over the
+        // live instances (inactive workers still own their slots)
+        let mut assigned = vec![0usize; n_nodes];
+        let mut idle = vec![0.0f64; n_nodes];
+        let mut accounted = vec![0.0f64; n_nodes];
+        for tr in self.trainers.iter().filter(|t| t.alive) {
+            for w in &tr.workers {
+                let s = w.clock_slot;
+                assigned[w.node] += 1;
+                idle[w.node] += self.cluster.wait_s[s] + self.cluster.preempted_s[s];
+                accounted[w.node] += self.cluster.busy_s[s]
+                    + self.cluster.wait_s[s]
+                    + self.cluster.comm_s[s]
+                    + self.cluster.preempted_s[s];
+            }
+        }
+        let loads: Vec<NodeLoad> = (0..n_nodes)
+            .map(|n| NodeLoad {
+                node: n,
+                capacity: self.registry.node_capacity[n],
+                assigned: assigned[n],
+                idle_frac: if accounted[n] > 0.0 {
+                    idle[n] / accounted[n]
+                } else if assigned[n] == 0 {
+                    1.0 // churn- or merge-freed capacity: fully idle
+                } else {
+                    0.0 // first round: no accounting yet
+                },
+                available: self.cluster.scenario.node_available(n, front),
+            })
+            .collect();
+        let cooldown_ok = self.registry.last_spawn_outer == 0
+            || outer_t >= self.registry.last_spawn_outer + e.cooldown_rounds as u64;
+        let origin = match e.mode {
+            ElasticMode::RespawnAfterMerge => Origin::MergeRespawn,
+            _ => Origin::UtilSpawn,
+        };
+        let plan = plan_spawns(
+            e.mode,
+            e.idle_threshold,
+            &loads,
+            &SpawnBudget {
+                live_instances: self.live_trainers(),
+                max_instances,
+                cooldown_ok,
+                merge_freed,
+                spawn_width: e.workers_per_spawn.max(1),
+            },
+        );
+        let mut out = Vec::with_capacity(plan.len());
+        for node in plan {
+            out.push(self.spawn_instance(node, outer_t, origin)?);
+        }
+        Ok(out)
+    }
+
+    /// Materialize one spawned instance on `node` (DESIGN.md §9):
+    /// parameters seeded from the last merge product (or the first live
+    /// instance), fresh outer/controller state, a fresh shard drawn —
+    /// like every other stream of the instance — from its private
+    /// `derive_seed(seed, "instance=<id>")` RNG, and brand-new clock
+    /// slots starting at the cluster front. Existing instances' streams
+    /// and slots are untouched by construction.
+    fn spawn_instance(&mut self, node: usize, outer_t: u64, origin: Origin) -> Result<usize> {
+        let id = self.trainers.len();
+        let mut irng = Rng::new(derive_seed(self.cfg.seed, &format!("instance={id}")));
+        let src = self
+            .registry
+            .last_merge_rep
+            .filter(|&r| self.trainers[r].alive)
+            .or_else(|| (0..self.trainers.len()).find(|&i| self.trainers[i].alive));
+        let params = match src {
+            Some(s) => self.trainers[s].params.clone(),
+            None => self.engine.init_state(id as u64).params,
+        };
+        let shard = make_shards(self.corpus.len(), 1, self.cfg.data.shard_fraction, &mut irng)
+            .pop()
+            .unwrap();
+        let t_spawn = self.cluster.clock.max_time();
+        let m = self.cfg.algo.elastic.workers_per_spawn.max(1);
+        let slots: Vec<usize> = (0..m).map(|_| self.cluster.push_slot(t_spawn)).collect();
+        let tr = Trainer::spawned(id, params, &self.cfg.algo, shard, node, &slots, &mut irng);
+        self.trainers.push(tr);
+        self.pending_syncs.push(None);
+        let rid = self.registry.register_spawn(outer_t, t_spawn, origin);
+        debug_assert_eq!(rid.0, id, "registry and trainer pool must append in lockstep");
+        crate::info!(
+            "outer {outer_t}: spawned instance {id} on node {node} at t={t_spawn:.2}s \
+             ({} live)",
+            self.live_trainers()
+        );
+        self.recorder.lifecycle.push(LifecycleRecord {
+            outer_step: outer_t,
+            instance: id,
+            event: LifecycleEvent::Spawned { node },
+            live_after: self.live_trainers(),
+            virtual_time_s: t_spawn,
+        });
+        Ok(id)
+    }
+
+    /// Book the vacant capacity of every retired instance's frozen
+    /// slots (satellite of DESIGN.md §9: freed capacity accrues to its
+    /// own `vacant_s` bucket instead of vanishing or polluting wait_s).
+    /// A vacancy window opens where a retired worker's clock froze and
+    /// closes either at the run front or — FIFO per node — when a later
+    /// spawn re-occupies the freed capacity on that node: each spawned
+    /// worker slot reclaims at most one open window, so the elastic
+    /// lifecycle measurably *shrinks* the vacant total it was built to
+    /// reclaim. Pure function of contract state (registry birth times,
+    /// frozen clocks), so schedulers, thread counts and resumed runs
+    /// all agree — and the per-slot write is an assignment
+    /// ([`ClusterState::set_vacant_window`]), so recomputing after a
+    /// resume (even from a snapshot taken post-run) never double
+    /// counts.
+    fn accrue_vacant_all(&mut self) {
+        let front = self.cluster.clock.max_time();
+        // reclaim events: each spawned worker slot occupies one unit of
+        // node capacity from its birth time on (chronological; the sort
+        // is stable, so same-boundary spawns keep registry order)
+        let mut reclaims: Vec<(f64, usize)> = Vec::new();
+        for meta in self.registry.metas() {
+            if meta.origin == Origin::Seed {
+                continue;
+            }
+            for w in &self.trainers[meta.id.0].workers {
+                reclaims.push((meta.born_at_s, w.node));
+            }
+        }
+        reclaims.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut used = vec![false; reclaims.len()];
+        // vacancy windows: retired instances' frozen slots, oldest first
+        let mut windows: Vec<(f64, usize, usize)> = Vec::new();
+        for tr in self.trainers.iter().filter(|t| !t.alive) {
+            for w in &tr.workers {
+                windows.push((self.cluster.clock.time(w.clock_slot), w.node, w.clock_slot));
+            }
+        }
+        windows.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.2.cmp(&b.2)));
+        for (start, node, slot) in windows {
+            let mut end = front;
+            for i in 0..reclaims.len() {
+                let (t, n) = reclaims[i];
+                if !used[i] && n == node && t >= start {
+                    used[i] = true;
+                    end = t;
+                    break;
+                }
+            }
+            self.cluster.set_vacant_window(slot, end);
+        }
     }
 
     /// The effective hardware max_batch for a trainer: the smallest node
@@ -379,6 +627,7 @@ impl Coordinator {
             }
         }
         self.drain_overlap(last_t)?;
+        self.accrue_vacant_all();
         self.record_utilization();
         self.run_wall_s = wall0.elapsed().as_secs_f64();
         self.recorder.wall_clock_s = self.run_wall_s;
@@ -392,8 +641,8 @@ impl Coordinator {
     /// counters and in-flight delayed syncs).
     pub fn snapshot(&self, outer_step: u64) -> crate::checkpoint::Checkpoint {
         use crate::checkpoint::{
-            Checkpoint, PendingSnapshot, PhaseSnapshot, RngSnapshot, SamplerSnapshot,
-            TrainerSnapshot, WorkerSnapshot,
+            Checkpoint, PendingSnapshot, PhaseSnapshot, RegistryRowSnapshot, RngSnapshot,
+            SamplerSnapshot, TrainerSnapshot, WorkerSnapshot,
         };
         use crate::comm::CommScope;
         let sampler_snap = |w: &crate::trainer::Worker| -> SamplerSnapshot {
@@ -422,6 +671,30 @@ impl Coordinator {
             comm_s: self.cluster.comm_s.clone(),
             comm_hidden_s: self.cluster.comm_hidden_s.clone(),
             preempted_s: self.cluster.preempted_s.clone(),
+            vacant_s: self.cluster.vacant_s.clone(),
+            spawn_count: self.registry.spawn_count,
+            last_spawn_outer: self.registry.last_spawn_outer,
+            last_merge_rep: self.registry.last_merge_rep,
+            live_rounds_sum: self.live_rounds_sum,
+            rounds_count: self.rounds_count,
+            registry: self
+                .registry
+                .metas()
+                .iter()
+                .map(|m| RegistryRowSnapshot {
+                    id: m.id.0,
+                    state: m.state.as_str().to_string(),
+                    origin: m.origin.as_str().to_string(),
+                    born_outer: m.born_outer,
+                    born_at_s: m.born_at_s,
+                    retired_outer: m.retired_outer,
+                    workers: self.trainers[m.id.0]
+                        .workers
+                        .iter()
+                        .map(|w| (w.node, w.clock_slot))
+                        .collect(),
+                })
+                .collect(),
             rng: RngSnapshot::of(&self.rng),
             trainers: self
                 .trainers
@@ -490,8 +763,80 @@ impl Coordinator {
         use crate::batching::ControllerState;
         use crate::comm::{CommCost, CommPhase, CommScope};
         use crate::data::SamplerState;
-        use anyhow::ensure;
+        use crate::instances::{InstanceId, InstanceMeta, LifecycleState};
+        use anyhow::{anyhow, ensure};
         let p = self.engine.param_count();
+
+        // ---- elastic pool structure (DESIGN.md §9): rebuild instances
+        //      that did not exist at config time — live ones as shells
+        //      the state restore below fills, retired ones as frozen
+        //      placeholders so ids, slots and utilization rows all
+        //      reproduce the uninterrupted run ----------------------------
+        while self.cluster.clock.len() < cp.clock_times.len() {
+            self.cluster.push_slot(0.0);
+        }
+        let initial = self.trainers.len();
+        for row in &cp.registry {
+            if row.id < initial {
+                continue;
+            }
+            ensure!(
+                row.id == self.trainers.len(),
+                "checkpoint registry rows out of order at id {}",
+                row.id
+            );
+            ensure!(!row.workers.is_empty(), "registry row {} has no workers", row.id);
+            for &(node, slot) in &row.workers {
+                ensure!(
+                    node < self.cluster.nodes.len(),
+                    "registry row {} node {node} out of range",
+                    row.id
+                );
+                while self.cluster.clock.len() <= slot {
+                    self.cluster.push_slot(0.0);
+                }
+            }
+            let slots: Vec<usize> = row.workers.iter().map(|&(_, s)| s).collect();
+            let node = row.workers[0].0;
+            // shell only: params/streams/samplers of live instances are
+            // overwritten by the snapshot restore below; retired ones
+            // are never touched again
+            let mut shell_rng = Rng::new(0);
+            let mut tr = Trainer::spawned(
+                row.id,
+                vec![0.0; p],
+                &self.cfg.algo,
+                crate::data::Shard { indices: Vec::new() },
+                node,
+                &slots,
+                &mut shell_rng,
+            );
+            for (w, &(n, s)) in tr.workers.iter_mut().zip(row.workers.iter()) {
+                w.node = n;
+                w.clock_slot = s;
+            }
+            self.trainers.push(tr);
+            self.pending_syncs.push(None);
+        }
+        // rebuild the registry rows + spawn bookkeeping
+        for row in &cp.registry {
+            self.registry.restore_row(InstanceMeta {
+                id: InstanceId(row.id),
+                state: LifecycleState::parse(&row.state)
+                    .ok_or_else(|| anyhow!("bad registry state {:?}", row.state))?,
+                born_outer: row.born_outer,
+                born_at_s: row.born_at_s,
+                retired_outer: row.retired_outer,
+                origin: crate::instances::Origin::parse(&row.origin)
+                    .ok_or_else(|| anyhow!("bad registry origin {:?}", row.origin))?,
+            });
+        }
+        self.registry.spawn_count = cp.spawn_count;
+        self.registry.last_spawn_outer = cp.last_spawn_outer;
+        self.registry.last_merge_rep = cp.last_merge_rep;
+        self.live_rounds_sum = cp.live_rounds_sum;
+        self.rounds_count = cp.rounds_count;
+
         for t in &mut self.trainers {
             t.alive = false;
         }
@@ -593,6 +938,7 @@ impl Coordinator {
             (&mut self.cluster.comm_s, &cp.comm_s),
             (&mut self.cluster.comm_hidden_s, &cp.comm_hidden_s),
             (&mut self.cluster.preempted_s, &cp.preempted_s),
+            (&mut self.cluster.vacant_s, &cp.vacant_s),
         ] {
             for (w, &v) in src.iter().enumerate().take(slots) {
                 dst[w] = v;
@@ -872,6 +1218,7 @@ impl Coordinator {
     pub fn result(&self) -> RunResult {
         let utils = self.cluster.utilization_table(&self.trainers);
         let total_idle_s: f64 = utils.iter().map(|u| u.idle_s()).sum();
+        let total_vacant_s: f64 = utils.iter().map(|u| u.vacant_s).sum();
         let mean_utilization = if utils.is_empty() {
             0.0
         } else {
@@ -902,6 +1249,13 @@ impl Coordinator {
                 None
             },
             overlap_hidden_s: self.overlap_hidden_s,
+            spawn_count: self.registry.spawn_count,
+            mean_live_instances: if self.rounds_count > 0 {
+                self.live_rounds_sum as f64 / self.rounds_count as f64
+            } else {
+                self.live_trainers() as f64
+            },
+            total_vacant_s,
             wall_clock_s: self.run_wall_s,
             threads: self.threads,
         }

@@ -38,6 +38,39 @@ fn adloco_run_descends_and_merges() {
 }
 
 #[test]
+fn frozen_pool_census_and_registry_mirror_the_run() {
+    // elastic off: the registry mirrors the merge-shrunk pool without
+    // touching the run (DESIGN.md §9); the census records every round
+    let cfg = mock_cfg();
+    let outer = cfg.algo.outer_steps as u64;
+    let engine = crate::engine::build_engine(&cfg).unwrap();
+    let mut c = Coordinator::new(cfg, engine).unwrap();
+    let r = c.run().unwrap();
+    assert_eq!(r.spawn_count, 0, "off ⇒ zero spawns");
+    assert_eq!(c.recorder.rounds.len() as u64, outer);
+    assert_eq!(
+        c.recorder.rounds.first().unwrap().live_instances,
+        4,
+        "round 1 census sees the full seed pool"
+    );
+    assert_eq!(
+        c.recorder.rounds.last().unwrap().live_instances,
+        r.trainers_left,
+        "final census equals the surviving pool"
+    );
+    assert!(r.mean_live_instances <= 4.0 && r.mean_live_instances >= 1.0);
+    // registry lifecycle mirrors the merges: retired rows match the
+    // merge records, live rows match the survivors
+    let reg = c.registry();
+    assert_eq!(reg.len(), 4, "no instance was ever added");
+    assert_eq!(reg.live_count(), r.trainers_left);
+    let retired: usize = c.recorder.merges.iter().map(|m| m.merged.len()).sum();
+    assert_eq!(4 - reg.live_count(), retired);
+    // retired slots accrued vacancy, live ones none
+    assert!(r.total_vacant_s > 0.0);
+}
+
+#[test]
 fn adaptive_batch_grows() {
     let (_, rec, _) = run_with(mock_cfg());
     let first_req = rec.steps.first().unwrap().requested_batch;

@@ -1,0 +1,528 @@
+//! The elastic trainer-lifecycle layer (DESIGN.md §9): stable instance
+//! identities, the Spawn → Active → Merging → Retired state machine,
+//! and the utilization-driven spawn controller that turns the paper's
+//! "multiple lightweight training streams" into a *runtime* quantity.
+//!
+//! Before this layer the instance pool was frozen at config time
+//! (`algo.num_trainers × workers_per_trainer`): MIT merges only ever
+//! shrank it, and capacity freed by churn or merges sat idle for the
+//! rest of the run. The registry decouples **who an instance is** (its
+//! [`InstanceId`], stable for the whole run and never re-indexed) from
+//! **where it computes** (clock slots and node assignments, allocated
+//! dynamically by the cluster layer), so the coordinator can grow the
+//! pool mid-run without disturbing any existing stream.
+//!
+//! Two design rules keep the elastic layer inside the determinism
+//! contract (DESIGN.md §6):
+//!
+//! * the spawn decision ([`plan_spawns`]) is a **pure function** of the
+//!   accumulated per-node utilization statistics — themselves contract
+//!   fields — so lockstep, event and any thread count agree on every
+//!   spawn;
+//! * a spawned instance's stochastic streams are seeded from
+//!   `derive_seed(cfg.seed, "instance=<id>")`, never drawn from the
+//!   coordinator's main stream, so `elastic = off` runs replay every
+//!   historical draw sequence bit-for-bit.
+
+use crate::config::ElasticMode;
+
+/// Stable identity of one training instance. Equal to the instance's
+/// position in the coordinator's (append-only) trainer pool: seed
+/// instances occupy `0..num_trainers`, spawned instances append after
+/// them, and no id is ever reused or re-indexed — unlike clock slots,
+/// which are a placement concern the cluster layer owns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct InstanceId(
+    /// Position in the coordinator's append-only trainer pool.
+    pub usize,
+);
+
+impl std::fmt::Display for InstanceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "instance={}", self.0)
+    }
+}
+
+/// Lifecycle states of an instance (DESIGN.md §9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LifecycleState {
+    /// Created this round; becomes [`LifecycleState::Active`] after its
+    /// first completed outer round.
+    Spawned,
+    /// Participating in inner loops, syncs and merge selection.
+    Active,
+    /// Selected by CheckMerge this round. Transient and **call-internal
+    /// only**: `mark_merging` and `resolve_merge` run within a single
+    /// merge round, so the state resolves to `Active` (representative)
+    /// or `Retired` (consumed) before any snapshot, census or
+    /// `registry()` read can observe it — it exists so the state
+    /// machine names the selection step, not as a serialized state.
+    Merging,
+    /// Consumed by a merge; takes no further part. Its frozen clock
+    /// slots accrue [`crate::metrics::UtilRecord::vacant_s`].
+    Retired,
+}
+
+impl LifecycleState {
+    /// Canonical lowercase name (checkpoint header encoding).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LifecycleState::Spawned => "spawned",
+            LifecycleState::Active => "active",
+            LifecycleState::Merging => "merging",
+            LifecycleState::Retired => "retired",
+        }
+    }
+
+    /// Parse a checkpoint-header state name.
+    pub fn parse(s: &str) -> Option<LifecycleState> {
+        match s {
+            "spawned" => Some(LifecycleState::Spawned),
+            "active" => Some(LifecycleState::Active),
+            "merging" => Some(LifecycleState::Merging),
+            "retired" => Some(LifecycleState::Retired),
+            _ => None,
+        }
+    }
+}
+
+/// How an instance came to exist.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Origin {
+    /// Part of the initial `algo.num_trainers` pool.
+    Seed,
+    /// Spawned by the utilization controller on an underused node.
+    UtilSpawn,
+    /// Respawned after a merge retired part of the pool
+    /// (`algo.elastic = respawn_after_merge`).
+    MergeRespawn,
+}
+
+impl Origin {
+    /// Canonical lowercase name (checkpoint header encoding).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Origin::Seed => "seed",
+            Origin::UtilSpawn => "util",
+            Origin::MergeRespawn => "respawn",
+        }
+    }
+
+    /// Parse a checkpoint-header origin name.
+    pub fn parse(s: &str) -> Option<Origin> {
+        match s {
+            "seed" => Some(Origin::Seed),
+            "util" => Some(Origin::UtilSpawn),
+            "respawn" => Some(Origin::MergeRespawn),
+            _ => None,
+        }
+    }
+}
+
+/// Lifecycle metadata of one instance (the registry row).
+#[derive(Clone, Debug)]
+pub struct InstanceMeta {
+    /// Stable identity (== position in the trainer pool).
+    pub id: InstanceId,
+    /// Current lifecycle state.
+    pub state: LifecycleState,
+    /// Outer step the instance joined the pool (0 for seed instances).
+    pub born_outer: u64,
+    /// Virtual time the instance joined (0.0 for seed instances) — the
+    /// moment its workers started re-occupying node capacity, which is
+    /// when the vacancy accounting stops charging the capacity it
+    /// reclaimed (DESIGN.md §9).
+    pub born_at_s: f64,
+    /// Outer step a merge retired it, if any.
+    pub retired_outer: Option<u64>,
+    /// How it came to exist.
+    pub origin: Origin,
+}
+
+/// The elastic instance registry: one append-only row per instance that
+/// ever existed, plus the spawn controller's persistent state. The
+/// coordinator owns one; the trainer pool's `alive` flags stay the
+/// numeric source of truth while the registry carries the lifecycle
+/// view (states, birth/retirement rounds, spawn bookkeeping).
+#[derive(Clone, Debug)]
+pub struct InstanceRegistry {
+    metas: Vec<InstanceMeta>,
+    /// Per-node worker-slot capacity the spawn controller respects.
+    pub node_capacity: Vec<usize>,
+    /// Instances spawned over the run so far.
+    pub spawn_count: u64,
+    /// Outer step of the most recent spawn round (0 = never) — the
+    /// controller's cooldown anchor.
+    pub last_spawn_outer: u64,
+    /// Representative of the most recent merge, if any: the "last merge
+    /// product" new instances seed their parameters from.
+    pub last_merge_rep: Option<usize>,
+}
+
+impl InstanceRegistry {
+    /// Registry over the initial pool of `k` seed instances with the
+    /// given per-node capacities.
+    pub fn seed(k: usize, node_capacity: Vec<usize>) -> InstanceRegistry {
+        InstanceRegistry {
+            metas: (0..k)
+                .map(|i| InstanceMeta {
+                    id: InstanceId(i),
+                    state: LifecycleState::Active,
+                    born_outer: 0,
+                    born_at_s: 0.0,
+                    retired_outer: None,
+                    origin: Origin::Seed,
+                })
+                .collect(),
+            node_capacity,
+            spawn_count: 0,
+            last_spawn_outer: 0,
+            last_merge_rep: None,
+        }
+    }
+
+    /// Every registry row, in id order.
+    pub fn metas(&self) -> &[InstanceMeta] {
+        &self.metas
+    }
+
+    /// Total instances that ever existed (seed + spawned).
+    pub fn len(&self) -> usize {
+        self.metas.len()
+    }
+
+    /// True when no instance was ever registered.
+    pub fn is_empty(&self) -> bool {
+        self.metas.is_empty()
+    }
+
+    /// One row by id.
+    pub fn meta(&self, id: usize) -> &InstanceMeta {
+        &self.metas[id]
+    }
+
+    /// Instances currently in the pool (anything not retired).
+    pub fn live_count(&self) -> usize {
+        self.metas.iter().filter(|m| m.state != LifecycleState::Retired).count()
+    }
+
+    /// Append a freshly spawned instance; returns its stable id.
+    pub fn register_spawn(
+        &mut self,
+        born_outer: u64,
+        born_at_s: f64,
+        origin: Origin,
+    ) -> InstanceId {
+        let id = InstanceId(self.metas.len());
+        self.metas.push(InstanceMeta {
+            id,
+            state: LifecycleState::Spawned,
+            born_outer,
+            born_at_s,
+            retired_outer: None,
+            origin,
+        });
+        self.spawn_count += 1;
+        self.last_spawn_outer = born_outer;
+        id
+    }
+
+    /// Promote round-old `Spawned` rows to `Active` (called at each
+    /// outer boundary after the inner phase completed).
+    pub fn activate_spawned(&mut self) {
+        for m in &mut self.metas {
+            if m.state == LifecycleState::Spawned {
+                m.state = LifecycleState::Active;
+            }
+        }
+    }
+
+    /// Mark a CheckMerge selection (transient `Merging` state).
+    pub fn mark_merging(&mut self, ids: &[usize]) {
+        for &id in ids {
+            if self.metas[id].state != LifecycleState::Retired {
+                self.metas[id].state = LifecycleState::Merging;
+            }
+        }
+    }
+
+    /// Resolve a merge: the representative returns to `Active`, the
+    /// consumed instances retire at `outer_step`.
+    pub fn resolve_merge(&mut self, representative: usize, removed: &[usize], outer_step: u64) {
+        self.metas[representative].state = LifecycleState::Active;
+        for &id in removed {
+            self.metas[id].state = LifecycleState::Retired;
+            self.metas[id].retired_outer = Some(outer_step);
+        }
+        self.last_merge_rep = Some(representative);
+    }
+
+    /// Restore one row from a checkpoint (rows arrive in id order; the
+    /// registry must have been freshly seeded for the config first).
+    pub fn restore_row(&mut self, row: InstanceMeta) {
+        let id = row.id.0;
+        if id < self.metas.len() {
+            self.metas[id] = row;
+        } else {
+            assert_eq!(id, self.metas.len(), "registry rows must restore in id order");
+            self.metas.push(row);
+        }
+    }
+}
+
+/// One node's load summary the spawn controller decides over — built by
+/// the coordinator from the accumulated per-slot utilization accounting
+/// (all determinism-contract fields, so every scheduler/thread count
+/// sees identical loads).
+#[derive(Clone, Copy, Debug)]
+pub struct NodeLoad {
+    /// Node id.
+    pub node: usize,
+    /// Worker-slot capacity of the node.
+    pub capacity: usize,
+    /// Worker slots currently owned by live instances.
+    pub assigned: usize,
+    /// Idle fraction of the node's assigned workers so far:
+    /// `(wait + preempted) / (busy + wait + comm + preempted)`, or 1.0
+    /// for a node with capacity but no assigned live instance (churn-
+    /// or merge-freed capacity).
+    pub idle_frac: f64,
+    /// False while the node is preempted by the churn scenario —
+    /// spawning onto a down node is never useful.
+    pub available: bool,
+}
+
+/// The controller's instance budget and pacing inputs (bundled so
+/// [`plan_spawns`] stays a readable pure function).
+#[derive(Clone, Copy, Debug)]
+pub struct SpawnBudget {
+    /// Instances live right now.
+    pub live_instances: usize,
+    /// Hard cap on live instances.
+    pub max_instances: usize,
+    /// False while the `util_threshold` cooldown has not elapsed.
+    pub cooldown_ok: bool,
+    /// Instances retired by this round's merge (the respawn budget).
+    pub merge_freed: usize,
+    /// Worker slots **each spawned instance occupies**
+    /// (`elastic.workers_per_spawn`) — capacity checks are in slots,
+    /// so a wide spawn needs that much room on its node.
+    pub spawn_width: usize,
+}
+
+/// The spawn controller (DESIGN.md §9): decide which nodes receive a new
+/// lightweight instance this round. A **pure function** of its inputs:
+///
+/// * `Off` (or a cooldown that has not elapsed in `util_threshold`
+///   mode) ⇒ no spawns, unconditionally;
+/// * `UtilThreshold` ⇒ at most one spawn per node per round, on every
+///   available node with room for a full `spawn_width`-slot instance
+///   whose `idle_frac` reaches `idle_threshold`, in ascending node
+///   order, until the instance budget
+///   (`max_instances − live_instances`) runs out;
+/// * `RespawnAfterMerge` ⇒ up to `merge_freed` spawns (the instances
+///   the round's merge retired), placed on the least-loaded available
+///   nodes with room (ties broken by node id), also bounded by the
+///   instance budget.
+///
+/// Guarantees (property-tested in `tests/properties.rs`): the returned
+/// placement never exceeds any node's slot capacity — counting
+/// `spawn_width` slots per placement — never pushes the live count
+/// past `max_instances`, and — for `UtilThreshold` — a node's
+/// eligibility is monotone in its idle fraction.
+pub fn plan_spawns(
+    mode: ElasticMode,
+    idle_threshold: f64,
+    loads: &[NodeLoad],
+    budget: &SpawnBudget,
+) -> Vec<usize> {
+    let width = budget.spawn_width.max(1);
+    let instances = budget.max_instances.saturating_sub(budget.live_instances);
+    if instances == 0 {
+        return Vec::new();
+    }
+    match mode {
+        ElasticMode::Off => Vec::new(),
+        ElasticMode::UtilThreshold => {
+            if !budget.cooldown_ok {
+                return Vec::new();
+            }
+            loads
+                .iter()
+                .filter(|l| l.available && l.assigned + width <= l.capacity)
+                .filter(|l| l.idle_frac >= idle_threshold)
+                .map(|l| l.node)
+                .take(instances)
+                .collect()
+        }
+        ElasticMode::RespawnAfterMerge => {
+            let want = budget.merge_freed.min(instances);
+            if want == 0 {
+                return Vec::new();
+            }
+            // least-loaded first, ties by node id; a node may take
+            // several respawns as long as its slot capacity allows
+            let mut free: Vec<(usize, usize, usize)> = loads
+                .iter()
+                .filter(|l| l.available && l.assigned + width <= l.capacity)
+                .map(|l| (l.assigned, l.node, l.capacity))
+                .collect();
+            let mut out = Vec::with_capacity(want);
+            while out.len() < want {
+                let Some(slot) = free
+                    .iter_mut()
+                    .filter(|s| s.0 + width <= s.2)
+                    .min_by_key(|s| (s.0, s.1))
+                else {
+                    break;
+                };
+                out.push(slot.1);
+                slot.0 += width;
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(node: usize, capacity: usize, assigned: usize, idle: f64) -> NodeLoad {
+        NodeLoad { node, capacity, assigned, idle_frac: idle, available: true }
+    }
+
+    fn budget(live: usize, max: usize, cooldown_ok: bool, freed: usize) -> SpawnBudget {
+        SpawnBudget {
+            live_instances: live,
+            max_instances: max,
+            cooldown_ok,
+            merge_freed: freed,
+            spawn_width: 1,
+        }
+    }
+
+    #[test]
+    fn registry_lifecycle_walk() {
+        let mut reg = InstanceRegistry::seed(2, vec![1, 1]);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.live_count(), 2);
+        assert_eq!(reg.meta(0).origin, Origin::Seed);
+        let id = reg.register_spawn(3, 12.5, Origin::UtilSpawn);
+        assert_eq!(id, InstanceId(2));
+        assert_eq!(reg.meta(2).state, LifecycleState::Spawned);
+        assert_eq!(reg.meta(2).born_at_s, 12.5);
+        assert_eq!(reg.spawn_count, 1);
+        assert_eq!(reg.last_spawn_outer, 3);
+        reg.activate_spawned();
+        assert_eq!(reg.meta(2).state, LifecycleState::Active);
+        reg.mark_merging(&[0, 1]);
+        assert_eq!(reg.meta(0).state, LifecycleState::Merging);
+        reg.resolve_merge(0, &[1], 4);
+        assert_eq!(reg.meta(0).state, LifecycleState::Active);
+        assert_eq!(reg.meta(1).state, LifecycleState::Retired);
+        assert_eq!(reg.meta(1).retired_outer, Some(4));
+        assert_eq!(reg.last_merge_rep, Some(0));
+        assert_eq!(reg.live_count(), 2, "spawn replaced the retired instance");
+    }
+
+    #[test]
+    fn state_and_origin_names_roundtrip() {
+        for s in [
+            LifecycleState::Spawned,
+            LifecycleState::Active,
+            LifecycleState::Merging,
+            LifecycleState::Retired,
+        ] {
+            assert_eq!(LifecycleState::parse(s.as_str()), Some(s));
+        }
+        for o in [Origin::Seed, Origin::UtilSpawn, Origin::MergeRespawn] {
+            assert_eq!(Origin::parse(o.as_str()), Some(o));
+        }
+        assert!(LifecycleState::parse("gone").is_none());
+        assert!(Origin::parse("nowhere").is_none());
+        assert_eq!(InstanceId(7).to_string(), "instance=7");
+    }
+
+    #[test]
+    fn off_mode_never_spawns() {
+        let loads = vec![load(0, 4, 0, 1.0), load(1, 4, 0, 1.0)];
+        let s = plan_spawns(ElasticMode::Off, 0.0, &loads, &budget(1, 100, true, 5));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn util_threshold_picks_idle_nodes_with_free_capacity() {
+        let loads = vec![
+            load(0, 2, 2, 0.9), // idle but full
+            load(1, 2, 1, 0.5), // idle with room -> spawn
+            load(2, 2, 1, 0.1), // busy -> skip
+            load(3, 2, 0, 1.0), // freed capacity -> spawn
+        ];
+        let s = plan_spawns(ElasticMode::UtilThreshold, 0.3, &loads, &budget(4, 8, true, 0));
+        assert_eq!(s, vec![1, 3]);
+        // cooldown gates everything
+        let s = plan_spawns(ElasticMode::UtilThreshold, 0.3, &loads, &budget(4, 8, false, 0));
+        assert!(s.is_empty());
+        // budget truncates in ascending node order
+        let s = plan_spawns(ElasticMode::UtilThreshold, 0.3, &loads, &budget(7, 8, true, 0));
+        assert_eq!(s, vec![1]);
+    }
+
+    #[test]
+    fn util_threshold_skips_unavailable_nodes() {
+        let mut down = load(0, 2, 0, 1.0);
+        down.available = false;
+        let loads = vec![down, load(1, 2, 0, 1.0)];
+        let s = plan_spawns(ElasticMode::UtilThreshold, 0.5, &loads, &budget(2, 8, true, 0));
+        assert_eq!(s, vec![1], "preempted node must not receive a spawn");
+    }
+
+    #[test]
+    fn wide_spawns_need_room_for_every_worker_slot() {
+        // spawn_width = 2: a node with 1 free slot is NOT eligible
+        let loads = vec![load(0, 2, 1, 1.0), load(1, 3, 1, 1.0), load(2, 4, 0, 0.0)];
+        let wide = SpawnBudget { spawn_width: 2, ..budget(0, 16, true, 4) };
+        let s = plan_spawns(ElasticMode::UtilThreshold, 0.5, &loads, &wide);
+        assert_eq!(s, vec![1], "only node 1 has 2 free slots above threshold");
+        // respawn accounting charges the full width per placement —
+        // least-loaded first: node 2 (0/4), then node 1 (1/3), then
+        // node 2 again (2/4); node 1 is then full for a 2-wide spawn
+        let s = plan_spawns(ElasticMode::RespawnAfterMerge, 0.5, &loads, &wide);
+        assert_eq!(s, vec![2, 1, 2]);
+    }
+
+    #[test]
+    fn respawn_fills_least_loaded_first() {
+        let loads = vec![load(0, 2, 2, 0.0), load(1, 2, 1, 0.0), load(2, 2, 0, 0.0)];
+        let s = plan_spawns(ElasticMode::RespawnAfterMerge, 0.9, &loads, &budget(3, 8, true, 3));
+        // node 2 (0 assigned) first, then node 1 and node 2 tie at 1 ->
+        // node 1 by id, then node 2 again
+        assert_eq!(s, vec![2, 1, 2]);
+        // capacity exhausts the fill even when more were freed
+        let s =
+            plan_spawns(ElasticMode::RespawnAfterMerge, 0.9, &loads, &budget(3, 16, true, 10));
+        assert_eq!(s.len(), 3, "only 3 free slots exist");
+        // budget binds before freed count
+        let s = plan_spawns(ElasticMode::RespawnAfterMerge, 0.9, &loads, &budget(7, 8, true, 3));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn spawns_never_exceed_capacity_or_budget() {
+        let loads = vec![load(0, 1, 0, 1.0), load(1, 3, 2, 1.0)];
+        for mode in [ElasticMode::UtilThreshold, ElasticMode::RespawnAfterMerge] {
+            let s = plan_spawns(mode, 0.0, &loads, &budget(0, 100, true, 100));
+            for &n in &loads {
+                let placed = s.iter().filter(|&&x| x == n.node).count();
+                assert!(
+                    n.assigned + placed <= n.capacity,
+                    "{mode:?}: node {} over capacity",
+                    n.node
+                );
+            }
+        }
+        let s = plan_spawns(ElasticMode::UtilThreshold, 0.0, &loads, &budget(99, 100, true, 0));
+        assert!(s.len() <= 1, "budget of 1 must bound the plan");
+    }
+}

@@ -21,6 +21,7 @@
 //!  ┌─────▼──────────────────────────────────────────────────────────┐
 //!  │ coordinator  — Algorithm 3 run loop (lockstep | event-driven)  │
 //!  │   batching   merge   outer   schedule   trainer                │
+//!  │   instances  — elastic lifecycle registry + spawn controller   │
 //!  └──┬─────────────┬────────────────────┬──────────────────────────┘
 //!     │             │                    │
 //!  ┌──▼──────────┐ ┌▼─────────────────┐ ┌▼────────────────────────┐
@@ -41,7 +42,13 @@
 //! the delayed-overlap mode (DESIGN.md §8, `comm.overlap = delayed`):
 //! outer collectives post non-blocking through `SyncHandle`s and their
 //! updates apply one round late, hiding transfer time under the next
-//! round's compute while conserving every ledger byte.
+//! round's compute while conserving every ledger byte. The elastic
+//! lifecycle (DESIGN.md §9, `algo.elastic`) makes the instance pool a
+//! *runtime* quantity: an [`instances`] registry tracks every instance
+//! through Spawn → Active → Merging → Retired, and a utilization-driven
+//! spawn controller refills capacity freed by churn and MIT merges with
+//! fresh lightweight streams — `num_trainers` becomes a policy output,
+//! not an input.
 //!
 //! # Quickstart
 //!
@@ -112,6 +119,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod instances;
 pub mod merge;
 pub mod metrics;
 pub mod outer;

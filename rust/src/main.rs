@@ -13,6 +13,8 @@
 //!   adloco train --preset hierarchical_mit --topology flat   # WAN-bytes baseline
 //!   adloco train --preset adloco_overlap                     # delayed outer syncs
 //!   adloco train --preset hetero_dynamic --overlap delayed   # same knob, any preset
+//!   adloco train --preset elastic_mit                        # elastic lifecycle on
+//!   adloco train --preset hetero_dynamic --elastic respawn_after_merge
 //!   adloco train --preset xla_tiny --set algo.outer_steps=4 --out runs
 //!   adloco compare --preset mock_default --methods adloco,diloco,localsgd
 //!   adloco sweep --preset quick --param algo.batching.eta \
@@ -103,6 +105,9 @@ fn load_config(args: &cli::Args) -> Result<Config> {
     if let Some(o) = args.opt("overlap") {
         cfg.comm.overlap = adloco::config::OverlapMode::parse(o)?;
     }
+    if let Some(e) = args.opt("elastic") {
+        cfg.algo.elastic.mode = adloco::config::ElasticMode::parse(e)?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -125,10 +130,17 @@ fn print_result(r: &RunResult) {
         );
     }
     println!("  trainers left   : {}", r.trainers_left);
+    if r.spawn_count > 0 {
+        println!(
+            "  elastic         : {} spawned, {:.2} mean live instances",
+            r.spawn_count, r.mean_live_instances
+        );
+    }
     println!(
-        "  utilization     : {:.1}% mean ({:.3}s idle across workers)",
+        "  utilization     : {:.1}% mean ({:.3}s idle across workers, {:.3}s vacant)",
         r.mean_utilization * 100.0,
-        r.total_idle_s
+        r.total_idle_s,
+        r.total_vacant_s
     );
     if let Some((step, t, comms)) = r.time_to_target {
         println!("  time-to-target  : step {step}, {t:.3}s, {comms} comms");

@@ -6,15 +6,34 @@
 
 use crate::util::Rng;
 
-/// Which trainers to merge this round (Algorithm 1, CHECKMERGE).
+/// Alternative policies for the ablation benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergePolicy {
+    /// Paper default: w smallest requested batches.
+    WorstByBatch,
+    /// Random w trainers (control arm isolating the selection rule).
+    Random,
+}
+
+/// Which trainers to merge this round (Algorithm 1, CHECKMERGE) — **the
+/// single selection code path**: every caller, whatever the policy,
+/// flows through the same edge-case and floor clamping.
 ///
-/// Inputs are (trainer_id, requested_batch) pairs for the *live* trainers.
-/// Returns the ids selected for merging (empty when no merge applies).
-/// Matching the paper:  w == 0 or k <= 1 -> none;  w > k -> none;
-/// otherwise the w trainers with the smallest b_req. `min_keep` guards the
-/// floor on the surviving trainer count (w is clamped so at least
-/// `min_keep` trainers remain *after* the merge collapses w into 1).
-pub fn check_merge(requests: &[(usize, usize)], w: usize, min_keep: usize) -> Vec<usize> {
+/// Inputs are (trainer_id, requested_batch) pairs for the *live*
+/// trainers. Returns the ids selected for merging (empty when no merge
+/// applies). Matching the paper:  w == 0 or k <= 1 -> none;  w > k ->
+/// none; `min_keep` guards the floor on the surviving trainer count (w
+/// is clamped so at least `min_keep` trainers remain *after* the merge
+/// collapses w into 1). The policy then picks the members: the paper's
+/// w-smallest-b_req rule, or a uniform draw from `rng` (a
+/// globally-ordered stream — see DESIGN.md §3.4) for the control arm.
+pub fn check_merge_with_policy(
+    requests: &[(usize, usize)],
+    w: usize,
+    min_keep: usize,
+    policy: MergePolicy,
+    rng: &mut Rng,
+) -> Vec<usize> {
     let k = requests.len();
     if w == 0 || k <= 1 || w > k {
         return Vec::new();
@@ -25,44 +44,30 @@ pub fn check_merge(requests: &[(usize, usize)], w: usize, min_keep: usize) -> Ve
     if w < 2 {
         return Vec::new();
     }
-    let mut order: Vec<(usize, usize)> = requests.to_vec();
-    // sort ascending by b_req, tie-break on id for determinism
-    order.sort_by_key(|&(id, b)| (b, id));
-    order.truncate(w);
-    order.into_iter().map(|(id, _)| id).collect()
-}
-
-/// Alternative policies for the ablation benches.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum MergePolicy {
-    /// Paper default: w smallest requested batches.
-    WorstByBatch,
-    /// Random w trainers (control arm isolating the selection rule).
-    Random,
-}
-
-/// `check_merge` with a pluggable selection policy; the `Random` arm
-/// draws from `rng` (a globally-ordered stream — see DESIGN.md §3.4).
-pub fn check_merge_with_policy(
-    requests: &[(usize, usize)],
-    w: usize,
-    min_keep: usize,
-    policy: MergePolicy,
-    rng: &mut Rng,
-) -> Vec<usize> {
     match policy {
-        MergePolicy::WorstByBatch => check_merge(requests, w, min_keep),
+        MergePolicy::WorstByBatch => {
+            let mut order: Vec<(usize, usize)> = requests.to_vec();
+            // sort ascending by b_req, tie-break on id for determinism
+            order.sort_by_key(|&(id, b)| (b, id));
+            order.truncate(w);
+            order.into_iter().map(|(id, _)| id).collect()
+        }
         MergePolicy::Random => {
-            let base = check_merge(requests, w, min_keep); // reuse clamping rules
-            if base.is_empty() {
-                return base;
-            }
-            let w = base.len();
             let ids: Vec<usize> = requests.iter().map(|&(id, _)| id).collect();
             let picks = rng.sample_indices(ids.len(), w);
             picks.into_iter().map(|i| ids[i]).collect()
         }
     }
+}
+
+/// Legacy entry point: the paper's worst-by-batch selection. A thin
+/// wrapper over [`check_merge_with_policy`] kept for source
+/// compatibility — the policy path is the one selection implementation
+/// (a regression test pins the two to identical selections).
+#[deprecated(note = "use check_merge_with_policy(.., MergePolicy::WorstByBatch, ..)")]
+pub fn check_merge(requests: &[(usize, usize)], w: usize, min_keep: usize) -> Vec<usize> {
+    // WorstByBatch never draws, so a throwaway stream changes nothing
+    check_merge_with_policy(requests, w, min_keep, MergePolicy::WorstByBatch, &mut Rng::new(0))
 }
 
 /// Result of a weighted merge (Algorithm 2, DOMERGE).
@@ -122,7 +127,43 @@ pub fn do_merge(members: &mut [(usize, usize, &mut [f32])]) -> MergeOutcome {
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the legacy wrapper is pinned against the policy path here
+
     use super::*;
+
+    /// SAT1: the deprecated wrapper and the consolidated policy path
+    /// must select identically on a grid of pool shapes — one selection
+    /// implementation, two entry points.
+    #[test]
+    fn legacy_wrapper_matches_policy_path_exactly() {
+        let mut rng = Rng::new(42);
+        let pools: Vec<Vec<(usize, usize)>> = vec![
+            vec![],
+            vec![(0, 5)],
+            vec![(0, 5), (1, 3)],
+            vec![(0, 50), (1, 10), (2, 30), (3, 20)],
+            vec![(3, 10), (1, 10), (2, 10)],                 // ties
+            vec![(7, 1), (2, 9), (5, 4), (0, 4), (9, 2)],    // sparse ids
+        ];
+        for reqs in &pools {
+            for w in 0..=reqs.len() + 1 {
+                for min_keep in 1..=reqs.len().max(1) + 1 {
+                    let legacy = check_merge(reqs, w, min_keep);
+                    let policy = check_merge_with_policy(
+                        reqs,
+                        w,
+                        min_keep,
+                        MergePolicy::WorstByBatch,
+                        &mut rng,
+                    );
+                    assert_eq!(
+                        legacy, policy,
+                        "selection drifted for reqs={reqs:?} w={w} min_keep={min_keep}"
+                    );
+                }
+            }
+        }
+    }
 
     #[test]
     fn check_merge_picks_w_smallest() {

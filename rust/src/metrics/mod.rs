@@ -61,6 +61,53 @@ pub struct EvalRecord {
     pub comm_bytes: u64,
 }
 
+/// What happened to an instance in a lifecycle event (DESIGN.md §9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LifecycleEvent {
+    /// A fresh instance joined the pool on `node`.
+    Spawned {
+        /// Node the spawned instance's workers were placed on.
+        node: usize,
+    },
+    /// A merge consumed the instance.
+    Retired,
+}
+
+impl LifecycleEvent {
+    /// Canonical lowercase name (JSONL `event` field).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LifecycleEvent::Spawned { .. } => "spawned",
+            LifecycleEvent::Retired => "retired",
+        }
+    }
+}
+
+/// One instance-lifecycle ledger entry (spawn / retire — DESIGN.md §9).
+#[derive(Clone, Copy, Debug)]
+pub struct LifecycleRecord {
+    /// Outer step the event happened at.
+    pub outer_step: u64,
+    /// Instance the event concerns.
+    pub instance: usize,
+    /// What happened.
+    pub event: LifecycleEvent,
+    /// Live instances after the event.
+    pub live_after: usize,
+    /// Virtual time of the event.
+    pub virtual_time_s: f64,
+}
+
+/// Per-outer-round pool census: the time-varying m(t) observable the
+/// elastic theory estimates consume (DESIGN.md §9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoundRecord {
+    /// Outer step (1-based).
+    pub outer_step: u64,
+    /// Instances live at the start of the round's inner phase.
+    pub live_instances: usize,
+}
+
 /// A trainer-merge event (MIT DoMerge).
 #[derive(Clone, Debug)]
 pub struct MergeRecord {
@@ -102,6 +149,13 @@ pub struct UtilRecord {
     pub hidden_s: f64,
     /// Churn-preemption downtime seconds.
     pub preempted_s: f64,
+    /// Capacity seconds the worker's slot spent with **no live instance
+    /// assigned** (its trainer was retired by a merge) — freed capacity,
+    /// distinct from `wait_s` (an owned worker idling behind peers) and
+    /// from `preempted_s` (node downtime). Excluded from the
+    /// utilization denominator: nobody was scheduled there. The elastic
+    /// lifecycle (DESIGN.md §9) exists to shrink this bucket.
+    pub vacant_s: f64,
 }
 
 impl UtilRecord {
@@ -131,6 +185,12 @@ pub struct Recorder {
     pub evals: Vec<EvalRecord>,
     /// Trainer-merge events.
     pub merges: Vec<MergeRecord>,
+    /// Instance-lifecycle events: spawns and merge retirements
+    /// (DESIGN.md §9). Empty streams for a frozen pool are normal —
+    /// seed instances produce no lifecycle rows.
+    pub lifecycle: Vec<LifecycleRecord>,
+    /// Per-outer-round live-instance census — the measured m(t).
+    pub rounds: Vec<RoundRecord>,
     /// Per-worker utilization, filled once at the end of a run.
     pub utilization: Vec<UtilRecord>,
     /// Free-form run annotations (config echo, engine info, ...).
@@ -196,6 +256,29 @@ impl Recorder {
     /// scenarios.
     pub fn total_idle_s(&self) -> f64 {
         self.utilization.iter().map(|u| u.idle_s()).sum()
+    }
+
+    /// Total capacity seconds that sat with no live instance assigned.
+    pub fn total_vacant_s(&self) -> f64 {
+        self.utilization.iter().map(|u| u.vacant_s).sum()
+    }
+
+    /// Spawn events recorded over the run.
+    pub fn spawn_count(&self) -> usize {
+        self.lifecycle
+            .iter()
+            .filter(|l| matches!(l.event, LifecycleEvent::Spawned { .. }))
+            .count()
+    }
+
+    /// Mean live instances over the recorded rounds (the time-averaged
+    /// m(t); 0 when no round census was recorded).
+    pub fn mean_live_instances(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.live_instances as f64).sum::<f64>()
+            / self.rounds.len() as f64
     }
 
     /// Mean per-worker busy fraction (0 when no utilization was recorded).
@@ -280,6 +363,28 @@ impl Recorder {
             ]);
             writeln!(w, "{}", line.to_string())?;
         }
+        for l in &self.lifecycle {
+            let mut fields = vec![
+                ("type", JsonValue::str("lifecycle")),
+                ("event", JsonValue::str(l.event.as_str())),
+                ("outer_step", JsonValue::num(l.outer_step as f64)),
+                ("instance", JsonValue::num(l.instance as f64)),
+                ("live_after", JsonValue::num(l.live_after as f64)),
+                ("virtual_time_s", JsonValue::num(l.virtual_time_s)),
+            ];
+            if let LifecycleEvent::Spawned { node } = l.event {
+                fields.push(("node", JsonValue::num(node as f64)));
+            }
+            writeln!(w, "{}", JsonValue::obj(fields).to_string())?;
+        }
+        for r in &self.rounds {
+            let line = JsonValue::obj(vec![
+                ("type", JsonValue::str("round")),
+                ("outer_step", JsonValue::num(r.outer_step as f64)),
+                ("live_instances", JsonValue::num(r.live_instances as f64)),
+            ]);
+            writeln!(w, "{}", line.to_string())?;
+        }
         if self.wall_clock_s > 0.0 {
             let line = JsonValue::obj(vec![
                 ("type", JsonValue::str("perf")),
@@ -298,6 +403,7 @@ impl Recorder {
                 ("comm_s", JsonValue::num(u.comm_s)),
                 ("hidden_s", JsonValue::num(u.hidden_s)),
                 ("preempted_s", JsonValue::num(u.preempted_s)),
+                ("vacant_s", JsonValue::num(u.vacant_s)),
                 ("utilization", JsonValue::num(u.utilization())),
             ]);
             writeln!(w, "{}", line.to_string())?;
@@ -414,6 +520,7 @@ mod tests {
             comm_s: 1.0,
             hidden_s: 0.5,
             preempted_s: 1.0,
+            vacant_s: 4.0,
         };
         assert!((u.utilization() - 0.6).abs() < 1e-12);
         assert!((u.idle_s() - 3.0).abs() < 1e-12);
@@ -435,6 +542,62 @@ mod tests {
             let v = JsonValue::parse(line).unwrap();
             assert_eq!(v.get("type").and_then(|t| t.as_str()), Some("utilization"));
         }
+    }
+
+    #[test]
+    fn lifecycle_and_round_streams_export_and_summarize() {
+        let mut r = Recorder::new();
+        assert_eq!(r.mean_live_instances(), 0.0);
+        assert_eq!(r.spawn_count(), 0);
+        r.lifecycle.push(LifecycleRecord {
+            outer_step: 2,
+            instance: 4,
+            event: LifecycleEvent::Spawned { node: 1 },
+            live_after: 5,
+            virtual_time_s: 3.25,
+        });
+        r.lifecycle.push(LifecycleRecord {
+            outer_step: 3,
+            instance: 0,
+            event: LifecycleEvent::Retired,
+            live_after: 4,
+            virtual_time_s: 5.5,
+        });
+        r.rounds.push(RoundRecord { outer_step: 1, live_instances: 4 });
+        r.rounds.push(RoundRecord { outer_step: 2, live_instances: 5 });
+        assert_eq!(r.spawn_count(), 1);
+        assert!((r.mean_live_instances() - 4.5).abs() < 1e-12);
+        let u = UtilRecord {
+            trainer: 0,
+            worker: 0,
+            node: 0,
+            busy_s: 1.0,
+            wait_s: 0.0,
+            comm_s: 0.0,
+            hidden_s: 0.0,
+            preempted_s: 0.0,
+            vacant_s: 2.5,
+        };
+        r.utilization.push(u);
+        assert!((r.total_vacant_s() - 2.5).abs() < 1e-12);
+        assert_eq!(u.utilization(), 1.0, "vacant time is not the worker idling");
+
+        let dir = std::env::temp_dir().join("adloco_metrics_lifecycle");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lc.jsonl");
+        r.write_jsonl(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // 2 lifecycle + 2 round + 1 utilization lines, all parseable
+        assert_eq!(text.lines().count(), 5);
+        let mut spawned_nodes = 0;
+        for line in text.lines() {
+            let v = JsonValue::parse(line).unwrap();
+            if v.get("event").and_then(|e| e.as_str()) == Some("spawned") {
+                assert_eq!(v.get("node").and_then(|n| n.as_f64()), Some(1.0));
+                spawned_nodes += 1;
+            }
+        }
+        assert_eq!(spawned_nodes, 1);
     }
 
     #[test]

@@ -34,6 +34,14 @@ pub enum SimEvent {
     /// outer update applies at the trainer's next outer boundary, not at
     /// this pop, so consuming it changes no numerics.
     SyncComplete { trainer: usize },
+    /// The elastic lifecycle (DESIGN.md §9) spawned `instance` at this
+    /// round's boundary. A trace marker like `SyncComplete`: the spawn
+    /// itself already happened before the queue was seeded, so the pop
+    /// changes no numerics — it only places the event in the trace.
+    InstanceSpawned { instance: usize },
+    /// A merge at this round's boundary retired `instance` (trace
+    /// marker, same rules as `InstanceSpawned`).
+    InstanceRetired { instance: usize },
 }
 
 /// One scheduled event: virtual timestamp plus FIFO tie-break.
@@ -180,6 +188,17 @@ mod tests {
     fn rejects_nan_times() {
         let mut q = EventQueue::new();
         q.push(f64::NAN, step(0, 0, 1));
+    }
+
+    #[test]
+    fn lifecycle_markers_order_like_any_event() {
+        let mut q = EventQueue::new();
+        q.push(2.0, step(0, 0, 1));
+        q.push(1.0, SimEvent::InstanceSpawned { instance: 4 });
+        q.push(1.5, SimEvent::InstanceRetired { instance: 2 });
+        assert_eq!(q.pop().unwrap().1, SimEvent::InstanceSpawned { instance: 4 });
+        assert_eq!(q.pop().unwrap().1, SimEvent::InstanceRetired { instance: 2 });
+        assert_eq!(q.pop().unwrap().0, 2.0);
     }
 
     #[test]

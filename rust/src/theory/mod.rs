@@ -44,13 +44,44 @@ impl BoundParams {
         if n < 2 {
             return 0.0;
         }
-        let num = self.b_max as f64
+        scale * self.comm_rate() * (n as f64).ln()
+    }
+
+    /// The per-instance constant in front of `ln N` in Theorem 2's
+    /// bound (everything except the hidden `scale`).
+    fn comm_rate(&self) -> f64 {
+        self.b_max as f64
             * self.eta
             * self.eta
             * self.l_smooth
             * (1.0 + self.eta * self.eta)
-            * self.f_gap;
-        scale * num / self.sigma2 * (n as f64).ln()
+            * self.f_gap
+            / self.sigma2
+    }
+
+    /// Theorem 2 extended to a **time-varying instance count m(t)**
+    /// (the elastic lifecycle, DESIGN.md §9): each live instance
+    /// contributes the per-instance `K·ln N` communication rate, so
+    /// over a sample axis partitioned into spans `(n_start, n_end, m)`
+    /// with `m` instances live,
+    ///
+    /// `E[C] = scale · K · Σ_spans m · (ln n_end − ln n_start)`.
+    ///
+    /// A single span `(1, N, 1)` reduces exactly to
+    /// [`Self::comm_upper_bound`]; a frozen pool of `m` instances is
+    /// the single span `(1, N, m)`. Span starts are clamped to ≥ 1 (so
+    /// `ln` is well-defined) and degenerate spans contribute 0.
+    pub fn comm_upper_bound_timevarying(&self, spans: &[(u64, u64, usize)], scale: f64) -> f64 {
+        let k = scale * self.comm_rate();
+        spans
+            .iter()
+            .map(|&(n0, n1, m)| {
+                let n0 = n0.max(1) as f64;
+                let n1 = (n1.max(1) as f64).max(n0);
+                m as f64 * (n1.ln() - n0.ln())
+            })
+            .sum::<f64>()
+            * k
     }
 }
 
@@ -269,6 +300,21 @@ pub struct MergePlanStep {
     pub representative: usize,
 }
 
+/// One planned/measured elastic spawn (chronological, DESIGN.md §9):
+/// from `outer_step` on, a new instance with cohort `shape` homed in
+/// `home_group` syncs every round. Instance ids are assigned in spawn
+/// order after the seed pool, matching the coordinator's registry.
+#[derive(Clone, Debug)]
+pub struct SpawnPlanStep {
+    /// Outer step the spawn happened at (the instance syncs from this
+    /// step on — spawns land before the round's syncs, after merges).
+    pub outer_step: u64,
+    /// The spawned instance's worker-cohort shape.
+    pub shape: TopoShape,
+    /// Home group of the instance (ignored on flat clusters).
+    pub home_group: usize,
+}
+
 fn fold(est: &mut LedgerEstimate, (events, bytes): (usize, CommBytes)) {
     est.events += events;
     est.total_bytes += bytes.total();
@@ -290,11 +336,42 @@ pub fn estimate_ledger(
     merges: &[MergePlanStep],
     param_bytes: u64,
 ) -> LedgerEstimate {
+    estimate_ledger_elastic(
+        outer_steps,
+        sync_shapes,
+        home_groups,
+        hierarchical,
+        merges,
+        &[],
+        param_bytes,
+    )
+}
+
+/// [`estimate_ledger`] extended to an **elastic pool** (DESIGN.md §9):
+/// the live instance count becomes a function of the round, m(t) —
+/// merges shrink it, `spawns` grow it. The walk matches the
+/// coordinator's boundary order exactly: at the top of each outer step
+/// the merges due fire, then the spawns due join (appending their
+/// shapes after the existing pool, like the registry appends ids),
+/// then every live instance syncs once. With no spawns this is
+/// bit-identical to the historical closed form — the `estimate_ledger`
+/// wrapper delegates here with an empty spawn plan.
+pub fn estimate_ledger_elastic(
+    outer_steps: u64,
+    sync_shapes: &[TopoShape],
+    home_groups: &[usize],
+    hierarchical: bool,
+    merges: &[MergePlanStep],
+    spawns: &[SpawnPlanStep],
+    param_bytes: u64,
+) -> LedgerEstimate {
     assert_eq!(sync_shapes.len(), home_groups.len());
-    let k = sync_shapes.len();
-    let mut alive = vec![true; k];
+    let mut shapes: Vec<TopoShape> = sync_shapes.to_vec();
+    let mut homes: Vec<usize> = home_groups.to_vec();
+    let mut alive = vec![true; shapes.len()];
     let mut est = LedgerEstimate::default();
     let mut mi = 0usize;
+    let mut si = 0usize;
     for t in 1..=outer_steps {
         while mi < merges.len() && merges[mi].outer_step == t {
             let m = &merges[mi];
@@ -304,7 +381,7 @@ pub fn estimate_ledger(
                 let mut counts: std::collections::BTreeMap<usize, usize> =
                     std::collections::BTreeMap::new();
                 for &id in &parts {
-                    *counts.entry(home_groups[id]).or_insert(0) += 1;
+                    *counts.entry(homes[id]).or_insert(0) += 1;
                 }
                 TopoShape::Hier { parts: counts.values().copied().collect() }
             } else {
@@ -316,7 +393,13 @@ pub fn estimate_ledger(
             }
             mi += 1;
         }
-        for (id, shape) in sync_shapes.iter().enumerate() {
+        while si < spawns.len() && spawns[si].outer_step == t {
+            shapes.push(spawns[si].shape.clone());
+            homes.push(spawns[si].home_group);
+            alive.push(true);
+            si += 1;
+        }
+        for (id, shape) in shapes.iter().enumerate() {
             if alive[id] {
                 fold(&mut est, sync_comm(shape, param_bytes));
             }
@@ -469,6 +552,85 @@ mod tests {
         assert_eq!(est.hidden_s, 0.0);
         assert!((est.virtual_time_s - 3.0).abs() < 1e-12);
         assert!((est.virtual_time_s - est.blocking_time_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timevarying_comm_bound_reduces_to_theorem_2() {
+        let p = params();
+        for n in [10u64, 1_000, 1_000_000] {
+            let single = p.comm_upper_bound_timevarying(&[(1, n, 1)], 1.0);
+            assert!(
+                (single - p.comm_upper_bound(n, 1.0)).abs() < 1e-9,
+                "single unit span must reduce to the Theorem 2 bound at N={n}"
+            );
+        }
+        // a frozen pool of m instances is m times the per-instance bound
+        let frozen = p.comm_upper_bound_timevarying(&[(1, 1000, 4)], 1.0);
+        assert!((frozen - 4.0 * p.comm_upper_bound(1000, 1.0)).abs() < 1e-9);
+        // splitting a span is additive; growing m(t) mid-run lands
+        // strictly between the frozen m_lo and m_hi bounds
+        let split = p.comm_upper_bound_timevarying(&[(1, 100, 2), (100, 1000, 2)], 1.0);
+        assert!((split - p.comm_upper_bound_timevarying(&[(1, 1000, 2)], 1.0)).abs() < 1e-9);
+        let grown = p.comm_upper_bound_timevarying(&[(1, 100, 2), (100, 1000, 3)], 1.0);
+        let lo = p.comm_upper_bound_timevarying(&[(1, 1000, 2)], 1.0);
+        let hi = p.comm_upper_bound_timevarying(&[(1, 1000, 3)], 1.0);
+        assert!(grown > lo && grown < hi, "{lo} < {grown} < {hi}");
+        // degenerate spans contribute nothing
+        assert_eq!(p.comm_upper_bound_timevarying(&[(5, 5, 9), (7, 3, 9)], 1.0), 0.0);
+    }
+
+    #[test]
+    fn estimate_ledger_elastic_replays_spawn_timeline() {
+        // 1 seed trainer with 2 workers; at t=2 a single-worker spawn
+        // joins; flat cluster, 3 outer steps
+        let shapes = vec![TopoShape::Flat { m: 2 }];
+        let homes = vec![0];
+        let spawns = vec![SpawnPlanStep {
+            outer_step: 2,
+            shape: TopoShape::Flat { m: 1 },
+            home_group: 0,
+        }];
+        let p = 10u64;
+        let est = estimate_ledger_elastic(3, &shapes, &homes, false, &[], &spawns, p);
+        // the m=1 spawned cohort syncs for free (no peers), so events
+        // and bytes match the seed trainer alone...
+        assert_eq!(est.events, 3);
+        assert_eq!(est.total_bytes, 3 * 2 * p);
+        // ...while a 2-worker spawn adds one sync event per remaining
+        // round at 2(2-1)P each
+        let spawns2 = vec![SpawnPlanStep {
+            outer_step: 2,
+            shape: TopoShape::Flat { m: 2 },
+            home_group: 0,
+        }];
+        let est2 = estimate_ledger_elastic(3, &shapes, &homes, false, &[], &spawns2, p);
+        assert_eq!(est2.events, 3 + 2);
+        assert_eq!(est2.total_bytes, 3 * 2 * p + 2 * 2 * p);
+        // empty spawn plan delegates to the frozen closed form exactly
+        let frozen = estimate_ledger(3, &shapes, &homes, false, &[], p);
+        let empty = estimate_ledger_elastic(3, &shapes, &homes, false, &[], &[], p);
+        assert_eq!(frozen, empty);
+    }
+
+    #[test]
+    fn estimate_ledger_elastic_interleaves_merges_and_spawns() {
+        // 2 seed trainers (2 workers each); the t=2 merge removes one,
+        // and a respawn joins the same round — the round's syncs cover
+        // the survivor + the spawn
+        let shapes = vec![TopoShape::Flat { m: 2 }, TopoShape::Flat { m: 2 }];
+        let homes = vec![0, 0];
+        let merges =
+            vec![MergePlanStep { outer_step: 2, removed: vec![1], representative: 0 }];
+        let spawns = vec![SpawnPlanStep {
+            outer_step: 2,
+            shape: TopoShape::Flat { m: 2 },
+            home_group: 0,
+        }];
+        let p = 10u64;
+        let est = estimate_ledger_elastic(3, &shapes, &homes, false, &merges, &spawns, p);
+        // t1: 2 syncs; t2: merge + 2 syncs (survivor + spawn); t3: 2 syncs
+        assert_eq!(est.events, 2 + 1 + 2 + 2);
+        assert_eq!(est.total_bytes, 6 * 2 * p + p);
     }
 
     #[test]

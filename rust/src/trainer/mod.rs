@@ -107,6 +107,53 @@ impl Trainer {
         }
     }
 
+    /// Build a mid-run **spawned** instance (the elastic lifecycle,
+    /// DESIGN.md §9): a lightweight stream whose outer parameters start
+    /// from `params` (the last merge product or the global model), whose
+    /// workers all sit on one `node` with pre-allocated `clock_slots`,
+    /// and whose every stochastic stream forks from the caller's
+    /// instance-private `rng` (seeded via
+    /// `derive_seed(cfg.seed, "instance=<id>")`) — never from the
+    /// coordinator's main stream, so existing instances replay
+    /// bit-for-bit whether or not the spawn happened.
+    pub fn spawned(
+        id: usize,
+        params: Vec<f32>,
+        algo: &AlgoConfig,
+        shard: Shard,
+        node: usize,
+        clock_slots: &[usize],
+        rng: &mut Rng,
+    ) -> Trainer {
+        let m = clock_slots.len();
+        assert!(m >= 1, "a spawned instance needs at least one worker");
+        let worker_shards = shard.split(m);
+        let workers = worker_shards
+            .into_iter()
+            .enumerate()
+            .map(|(j, ws)| Worker {
+                state: ModelState::zeros_like(params.clone()),
+                sampler: BatchSampler::new(ws, rng.fork(0x5BA7 ^ j as u64)),
+                node,
+                clock_slot: clock_slots[j],
+                noise_rng: rng.fork(0x4015E ^ j as u64),
+                time_rng: rng.fork(0x71EE ^ j as u64),
+                active: true,
+            })
+            .collect();
+        let p = params.len();
+        Trainer {
+            id,
+            params,
+            outer: OuterOpt::new(algo.outer_opt, algo.lr_outer, p),
+            controller: BatchController::new(algo.batching.clone()),
+            workers,
+            shard,
+            alive: true,
+            inner_steps_done: 0,
+        }
+    }
+
     /// Outer-step prologue: every worker restarts from the trainer params
     /// (Algorithm 3 line 30).
     pub fn broadcast_params(&mut self) {
@@ -186,6 +233,34 @@ mod tests {
         // worker shards partition the trainer shard
         let total: usize = t.workers.iter().map(|w| w.sampler.shard_len()).sum();
         assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn spawned_instance_starts_from_given_params_with_fresh_state() {
+        let algo = presets::mock_default().algo;
+        let mut main_rng = Rng::new(9);
+        let before = main_rng.state();
+        let mut inst_rng = Rng::new(crate::util::derive_seed(0, "instance=5"));
+        let shard = Shard { indices: (0..30).collect() };
+        let params = vec![0.5f32; 40];
+        let t = Trainer::spawned(5, params.clone(), &algo, shard, 2, &[8, 9], &mut inst_rng);
+        assert_eq!(t.id, 5);
+        assert!(t.alive);
+        assert_eq!(t.params, params);
+        assert_eq!(t.inner_steps_done, 0);
+        assert_eq!(t.workers.len(), 2);
+        assert_eq!(t.workers[0].clock_slot, 8);
+        assert_eq!(t.workers[1].clock_slot, 9);
+        for w in &t.workers {
+            assert_eq!(w.node, 2, "lightweight stream: all workers on one node");
+            assert!(w.active);
+            assert_eq!(w.state.params, params, "zeros_like starts from the seed params");
+            assert!(w.state.m.iter().all(|&x| x == 0.0), "fresh AdamW moments");
+        }
+        let total: usize = t.workers.iter().map(|w| w.sampler.shard_len()).sum();
+        assert_eq!(total, 30, "workers partition the spawned shard");
+        // the spawn never touched the coordinator-style main stream
+        assert_eq!(main_rng.state(), before);
     }
 
     #[test]

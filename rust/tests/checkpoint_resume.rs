@@ -92,6 +92,17 @@ fn assert_payloads_match(a: &RunResult, b: &RunResult, tag: &str) {
         "{tag}: overlap hidden"
     );
     assert_eq!(a.time_to_target, b.time_to_target, "{tag}: time to target");
+    assert_eq!(a.spawn_count, b.spawn_count, "{tag}: spawn count");
+    assert_eq!(
+        a.mean_live_instances.to_bits(),
+        b.mean_live_instances.to_bits(),
+        "{tag}: mean live instances"
+    );
+    assert_eq!(
+        a.total_vacant_s.to_bits(),
+        b.total_vacant_s.to_bits(),
+        "{tag}: vacant time"
+    );
 }
 
 /// The resumed run's record streams must equal the uninterrupted run's
@@ -272,6 +283,88 @@ fn resume_is_bit_exact_hetero_dynamic_delayed() {
     cfg.name = "resume_hetero_overlap".into();
     cfg.algo.outer_steps = 6;
     assert_exact_resume(cfg, 3, "hetero_overlap_t1");
+}
+
+/// An elastic schedule whose first spawns are guaranteed at outer step
+/// 1: two single-worker seed trainers over 4 nodes leave two nodes
+/// fully unassigned (idle fraction 1.0 — DESIGN.md §9).
+fn elastic_cfg() -> Config {
+    let mut cfg = presets::mock_default();
+    cfg.name = "resume_elastic".into();
+    cfg.algo.num_trainers = 2;
+    cfg.algo.workers_per_trainer = 1;
+    cfg.algo.outer_steps = 6;
+    cfg.algo.inner_steps = 10;
+    cfg.algo.merge.frequency = 2;
+    cfg.algo.elastic.mode = adloco::config::ElasticMode::UtilThreshold;
+    cfg.algo.elastic.idle_threshold = 0.5;
+    cfg.algo.elastic.max_instances = 4;
+    cfg.run.eval_every = 4;
+    cfg
+}
+
+#[test]
+fn resume_is_bit_exact_across_spawn_boundary() {
+    // the checkpoint at k=3 carries mid-run spawned instances (born at
+    // outer 1) plus whatever merges already retired — the resumed pool
+    // must rebuild ids, slots, registry and every stream exactly
+    let cfg = elastic_cfg();
+    assert_exact_resume(cfg, 3, "elastic_t1");
+}
+
+#[test]
+fn resume_is_bit_exact_at_the_spawn_round_itself() {
+    // k=1 is the round the first spawns happen: the snapshot is taken
+    // with instances whose whole history is "just spawned"
+    let cfg = elastic_cfg();
+    assert_exact_resume(cfg, 1, "elastic_mid_spawn");
+}
+
+#[test]
+fn resume_is_bit_exact_elastic_parallel_event() {
+    let mut cfg = elastic_cfg();
+    cfg.run.scheduler = SchedulerKind::Event;
+    cfg.run.threads = 4;
+    assert_exact_resume(cfg, 3, "elastic_t4");
+}
+
+#[test]
+fn resume_is_bit_exact_elastic_dynamic() {
+    // the elastic_mit preset: spawns under churn + stragglers, resumed
+    // mid-scenario
+    let mut cfg = presets::elastic_mit();
+    cfg.name = "resume_elastic_mit".into();
+    cfg.algo.outer_steps = 6;
+    assert_exact_resume(cfg, 3, "elastic_mit_t1");
+}
+
+#[test]
+fn spawned_instances_survive_the_checkpoint_file() {
+    // white-box: after the spawn round the snapshot's registry must
+    // carry the spawned instances' structure, and the file must
+    // roundtrip it exactly
+    let cfg = elastic_cfg();
+    let mut c = new_coord(&cfg);
+    for t in 1..=2 {
+        drive_step(&mut c, t);
+    }
+    let snap = c.snapshot(2);
+    assert!(snap.spawn_count >= 1, "the elastic config must have spawned by k=2");
+    assert_eq!(snap.registry.len(), snap.spawn_count as usize + 2);
+    let spawned: Vec<_> =
+        snap.registry.iter().filter(|r| r.origin == "util").collect();
+    assert_eq!(spawned.len(), snap.spawn_count as usize);
+    for row in &spawned {
+        assert!(row.born_outer >= 1);
+        assert!(!row.workers.is_empty(), "structure travels with the row");
+    }
+    assert_eq!(snap.rounds_count, 2, "round census accumulators travel too");
+    let dir = std::env::temp_dir().join("adloco_resume_suite");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("spawned.ckpt").to_str().unwrap().to_string();
+    snap.save(&path).unwrap();
+    let loaded = adloco::checkpoint::Checkpoint::load(&path).unwrap();
+    assert_eq!(snap, loaded, "checkpoint file roundtrips the registry");
 }
 
 #[test]

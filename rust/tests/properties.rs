@@ -4,9 +4,10 @@
 //! controller monotonicity, clock barriers, and JSON round-tripping.
 
 use adloco::batching::{plan_step, round_to_ladder, BatchController};
-use adloco::config::presets;
+use adloco::config::{presets, ElasticMode};
 use adloco::engine::StepStats;
-use adloco::merge::{check_merge, do_merge};
+use adloco::instances::{plan_spawns, NodeLoad, SpawnBudget};
+use adloco::merge::{check_merge_with_policy, do_merge, MergePolicy};
 use adloco::simulator::VirtualClock;
 use adloco::util::{JsonValue, Rng};
 
@@ -25,7 +26,13 @@ fn prop_check_merge_selects_minima() {
         let min_keep = 1 + rng.below(3) as usize;
         let reqs: Vec<(usize, usize)> =
             (0..k).map(|id| (id, 1 + rng.below(100) as usize)).collect();
-        let sel = check_merge(&reqs, w, min_keep);
+        let sel = check_merge_with_policy(
+            &reqs,
+            w,
+            min_keep,
+            MergePolicy::WorstByBatch,
+            &mut Rng::new(0),
+        );
 
         if !sel.is_empty() {
             assert!(sel.len() >= 2, "case {case}: merge of {} members", sel.len());
@@ -438,5 +445,119 @@ fn prop_random_configs_run_clean() {
         assert!(r.best_ppl.is_finite(), "case {case}");
         assert!(r.trainers_left >= 1, "case {case}");
         assert!(r.total_inner_steps >= 1, "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// elastic spawn-controller properties (DESIGN.md §9)
+// ---------------------------------------------------------------------------
+
+/// Random node-load table: capacities 1..=4, assigned 0..=capacity,
+/// idle fractions in [0,1], ~1 in 8 nodes down.
+fn random_loads(rng: &mut Rng) -> Vec<NodeLoad> {
+    let nodes = 1 + rng.below(8) as usize;
+    (0..nodes)
+        .map(|node| {
+            let capacity = 1 + rng.below(4) as usize;
+            NodeLoad {
+                node,
+                capacity,
+                assigned: rng.below(capacity as u64 + 1) as usize,
+                idle_frac: rng.f64(),
+                available: rng.below(8) != 0,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_spawn_plan_respects_capacity_budget_and_availability() {
+    let mut rng = Rng::new(700);
+    for case in 0..CASES {
+        let loads = random_loads(&mut rng);
+        let budget = SpawnBudget {
+            live_instances: rng.below(10) as usize,
+            max_instances: rng.below(16) as usize,
+            cooldown_ok: rng.below(2) == 0,
+            merge_freed: rng.below(6) as usize,
+            spawn_width: 1 + rng.below(3) as usize,
+        };
+        let threshold = rng.f64();
+        for mode in [ElasticMode::UtilThreshold, ElasticMode::RespawnAfterMerge] {
+            let plan = plan_spawns(mode, threshold, &loads, &budget);
+            let live = budget.live_instances;
+            assert!(
+                live + plan.len() <= budget.max_instances.max(live),
+                "case {case} {mode:?}: budget exceeded ({live} + {} > {})",
+                plan.len(),
+                budget.max_instances
+            );
+            for l in &loads {
+                let placed = plan.iter().filter(|&&n| n == l.node).count();
+                // slot capacity counts the full spawn width per placement
+                assert!(
+                    l.assigned + placed * budget.spawn_width <= l.capacity,
+                    "case {case} {mode:?}: node {} over slot capacity",
+                    l.node
+                );
+                assert!(
+                    placed == 0 || l.available,
+                    "case {case} {mode:?}: spawned onto a down node {}",
+                    l.node
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_spawn_plan_is_monotone_in_idle_ratio() {
+    // raising idle fractions (everything else fixed, budget unbinding)
+    // can only grow the util_threshold plan — never drop a node
+    let mut rng = Rng::new(701);
+    for case in 0..CASES {
+        let loads = random_loads(&mut rng);
+        let threshold = rng.f64();
+        let budget = SpawnBudget {
+            live_instances: 0,
+            max_instances: loads.len() + 8, // budget never binds
+            cooldown_ok: true,
+            merge_freed: 0,
+            spawn_width: 1,
+        };
+        let base = plan_spawns(ElasticMode::UtilThreshold, threshold, &loads, &budget);
+        let mut raised = loads.clone();
+        for l in &mut raised {
+            l.idle_frac = (l.idle_frac + rng.f64() * (1.0 - l.idle_frac)).min(1.0);
+        }
+        let more = plan_spawns(ElasticMode::UtilThreshold, threshold, &raised, &budget);
+        for n in &base {
+            assert!(
+                more.contains(n),
+                "case {case}: node {n} dropped out when idle ratios rose \
+                 (base {base:?} vs {more:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_elastic_off_never_spawns() {
+    let mut rng = Rng::new(702);
+    for _ in 0..CASES {
+        let loads = random_loads(&mut rng);
+        let plan = plan_spawns(
+            ElasticMode::Off,
+            0.0, // most permissive threshold
+            &loads,
+            &SpawnBudget {
+                live_instances: 0,
+                max_instances: usize::MAX,
+                cooldown_ok: true,
+                merge_freed: rng.below(10) as usize,
+                spawn_width: 1,
+            },
+        );
+        assert!(plan.is_empty(), "elastic=off must never spawn");
     }
 }

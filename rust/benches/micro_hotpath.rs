@@ -101,6 +101,32 @@ fn main() {
     });
     push(&mut table, "mock.train_step(dim=2000,b=16)", t);
 
+    // ---- checkpoint interchange (v4 encode/decode, DESIGN.md §10) ----------
+    {
+        let c = {
+            let mut cfg = presets::mock_default();
+            cfg.name = "bench_ckpt".into();
+            cfg.algo.num_trainers = 4;
+            cfg.algo.workers_per_trainer = 2;
+            cfg.algo.inner_steps = 2;
+            cfg.algo.outer_steps = 1;
+            let engine = adloco::engine::build_engine(&cfg).unwrap();
+            let mut c = adloco::coordinator::Coordinator::new(cfg, engine).unwrap();
+            c.step_outer(1).unwrap();
+            c
+        };
+        let snap = c.snapshot(1);
+        let bytes = snap.to_bytes();
+        let t = time_auto(budget, 5, || {
+            std::hint::black_box(snap.to_bytes());
+        });
+        push(&mut table, &format!("ckpt.to_bytes({} KiB)", bytes.len() / 1024), t);
+        let t = time_auto(budget, 5, || {
+            std::hint::black_box(adloco::checkpoint::import_bytes(&bytes).unwrap());
+        });
+        push(&mut table, &format!("ckpt.import_bytes({} KiB)", bytes.len() / 1024), t);
+    }
+
     // ---- PJRT ladder (artifacts-gated) --------------------------------------
     if std::path::Path::new("artifacts/tiny/meta.json").exists() {
         let eng = adloco::runtime::XlaEngine::load("artifacts", "tiny").unwrap();

@@ -1,0 +1,994 @@
+//! The v4 checkpoint interchange container (DESIGN.md §10).
+//!
+//! Byte layout:
+//!
+//! ```text
+//! "ADLC"  u32-LE version=4
+//! for each section META, HEAD, BLOB, "END.":
+//!     tag[4]  u32-LE payload_len  payload  u64-LE fnv1a(tag‖len‖payload)
+//! u64-LE fnv1a(everything above)            -- the file seal
+//! ```
+//!
+//! * **META** — format metadata JSON: the interchange variant
+//!   (`complete` for exact resume, `minimal` for params+RNG
+//!   warm-start), `interchange_format_version`, the producing crate
+//!   version, the config name and the config structural digest.
+//! * **HEAD** — the state header JSON (everything except raw f32
+//!   payloads; wide integers and all f64s as bit-exact hex strings).
+//! * **BLOB** — the raw f32 payload, little-endian, in header order.
+//! * **END.** — empty; a positional sentinel so a file cut between
+//!   BLOB's seal and the file seal is still structurally detected.
+//!
+//! Every section carries its own FNV-1a seal, and the whole file a
+//! final one, so truncation at *any* offset and any single-byte
+//! corruption are detected deterministically (see `util::hash` for the
+//! single-byte guarantee) and surface as a typed [`InterchangeError`]
+//! — never a panic, never a silent partial resume. Bytes after the
+//! file seal are rejected as [`InterchangeError::TrailingGarbage`].
+//!
+//! Parsing is strict (`deny_unknown_fields`-style): every JSON object
+//! in META/HEAD must be fully consumed; an unrecognized or duplicated
+//! field is [`InterchangeError::UnknownField`], so files written by a
+//! newer schema revision fail loudly instead of silently dropping
+//! state. `tests/crash_fault.rs` drives all of this kill-anywhere:
+//! truncating at every section boundary and flipping sampled bytes of
+//! real mid-run checkpoints.
+
+use super::{
+    blob_bytes, bytes_to_f32s, state_fields, Checkpoint, Interchange, MinimalCheckpoint,
+    MinimalTrainer, MinimalWorker, PendingSnapshot, PhaseSnapshot, RegistryRowSnapshot,
+    RngSnapshot, SamplerSnapshot, TrainerSnapshot, WorkerSnapshot, MAGIC, VERSION,
+};
+use crate::util::{fnv1a, JsonValue};
+use std::fmt;
+
+/// Typed interchange failure. Every way a checkpoint file can be
+/// unreadable maps to exactly one of these — callers (and the
+/// crash-fault harness) match on the variant, not on message text.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum InterchangeError {
+    /// Strict parsing found a field the schema does not define (or a
+    /// duplicate of one it does).
+    UnknownField {
+        /// Path of the enclosing object, e.g. `HEAD.trainers[0]`.
+        context: String,
+        /// The offending field name.
+        field: String,
+    },
+    /// The container (or META) declares a version this build does not
+    /// read.
+    VersionMismatch {
+        /// The declared version.
+        found: u32,
+    },
+    /// The file ends before a section's declared extent.
+    Truncated {
+        /// Section being read when the bytes ran out.
+        section: String,
+        /// Bytes the section needed the file to reach.
+        needed: usize,
+        /// Bytes actually present.
+        have: usize,
+    },
+    /// A seal mismatch or malformed content inside a section.
+    Corrupt {
+        /// Section (or legacy region) that failed.
+        section: String,
+        /// What was wrong.
+        detail: String,
+    },
+    /// Bytes present after the file seal.
+    TrailingGarbage {
+        /// How many extra bytes follow.
+        bytes: usize,
+    },
+}
+
+impl fmt::Display for InterchangeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            InterchangeError::UnknownField { context, field } => write!(
+                f,
+                "unknown field {field:?} in {context} (strict interchange parsing \
+                 rejects unrecognized fields)"
+            ),
+            InterchangeError::VersionMismatch { found } => write!(
+                f,
+                "unsupported checkpoint interchange version {found} (this build reads \
+                 versions 1 through {VERSION})"
+            ),
+            InterchangeError::Truncated { section, needed, have } => write!(
+                f,
+                "checkpoint truncated in {section}: need {needed} bytes, have {have}"
+            ),
+            InterchangeError::Corrupt { section, detail } => {
+                write!(f, "checkpoint corrupt in {section}: {detail}")
+            }
+            InterchangeError::TrailingGarbage { bytes } => write!(
+                f,
+                "checkpoint has {bytes} trailing byte(s) after the file seal"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for InterchangeError {}
+
+type IResult<T> = std::result::Result<T, InterchangeError>;
+
+/// The two interchange variants (META `interchange_format`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InterchangeFormat {
+    /// Params + RNG states: enough to warm-start, not to resume.
+    Minimal,
+    /// Everything exact resume reads.
+    Complete,
+}
+
+impl InterchangeFormat {
+    /// The META field value.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            InterchangeFormat::Minimal => "minimal",
+            InterchangeFormat::Complete => "complete",
+        }
+    }
+}
+
+/// Parsed META section: what the file *is*, before any state is read.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InterchangeMeta {
+    /// Which variant the file carries.
+    pub format: InterchangeFormat,
+    /// Declared interchange version (must match the container's).
+    pub format_version: u32,
+    /// `CARGO_PKG_VERSION` of the writer — informational only; any
+    /// value loads.
+    pub crate_version: String,
+    /// Name of the config that produced the snapshot.
+    pub config_name: String,
+    /// `Config::structural_digest` of the producing config (0 when
+    /// unknown).
+    pub config_digest: u64,
+}
+
+const SEC_META: &[u8; 4] = b"META";
+const SEC_HEAD: &[u8; 4] = b"HEAD";
+const SEC_BLOB: &[u8; 4] = b"BLOB";
+const SEC_END: &[u8; 4] = b"END.";
+const SECTION_TAGS: [&[u8; 4]; 4] = [SEC_META, SEC_HEAD, SEC_BLOB, SEC_END];
+
+// ---------------------------------------------------------------------------
+// writer
+// ---------------------------------------------------------------------------
+
+fn push_section(out: &mut Vec<u8>, tag: &[u8; 4], payload: &[u8]) {
+    let start = out.len();
+    out.extend_from_slice(tag);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    let seal = fnv1a(&out[start..]);
+    out.extend_from_slice(&seal.to_le_bytes());
+}
+
+fn container(meta: &[u8], head: &[u8], blob: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(meta.len() + head.len() + blob.len() + 64);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    push_section(&mut out, SEC_META, meta);
+    push_section(&mut out, SEC_HEAD, head);
+    push_section(&mut out, SEC_BLOB, blob);
+    push_section(&mut out, SEC_END, &[]);
+    let seal = fnv1a(&out);
+    out.extend_from_slice(&seal.to_le_bytes());
+    out
+}
+
+fn meta_json(format: InterchangeFormat, config_name: &str, config_digest: u64) -> String {
+    JsonValue::obj(vec![
+        ("interchange_format", JsonValue::str(format.as_str())),
+        ("interchange_format_version", JsonValue::num(VERSION as f64)),
+        ("crate_version", JsonValue::str(env!("CARGO_PKG_VERSION"))),
+        ("config_name", JsonValue::str(config_name)),
+        ("config_digest", super::u64_json(config_digest)),
+    ])
+    .to_string()
+}
+
+/// Serialize a full snapshot as the v4 *complete* container.
+pub fn encode_complete(cp: &Checkpoint) -> Vec<u8> {
+    let meta = meta_json(InterchangeFormat::Complete, &cp.config_name, cp.config_digest);
+    let head = JsonValue::obj(state_fields(cp)).to_string();
+    container(meta.as_bytes(), head.as_bytes(), &blob_bytes(cp))
+}
+
+/// Serialize a warm-start snapshot as the v4 *minimal* container.
+pub fn encode_minimal(m: &MinimalCheckpoint) -> Vec<u8> {
+    let meta = meta_json(InterchangeFormat::Minimal, &m.config_name, m.config_digest);
+    let head = JsonValue::obj(vec![
+        ("outer_step", super::u64_json(m.outer_step)),
+        ("rng", super::rng_json(&m.rng)),
+        (
+            "trainers",
+            JsonValue::Array(
+                m.trainers
+                    .iter()
+                    .map(|t| {
+                        JsonValue::obj(vec![
+                            ("id", JsonValue::num(t.id as f64)),
+                            ("param_len", JsonValue::num(t.params.len() as f64)),
+                            (
+                                "workers",
+                                JsonValue::Array(
+                                    t.workers
+                                        .iter()
+                                        .map(|w| {
+                                            JsonValue::obj(vec![
+                                                ("noise_rng", super::rng_json(&w.noise_rng)),
+                                                ("time_rng", super::rng_json(&w.time_rng)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+    .to_string();
+    let mut blob = Vec::new();
+    for t in &m.trainers {
+        super::f32s_to_bytes(&t.params, &mut blob);
+    }
+    container(meta.as_bytes(), head.as_bytes(), &blob)
+}
+
+// ---------------------------------------------------------------------------
+// structural walk
+// ---------------------------------------------------------------------------
+
+fn tag_name(tag: &[u8; 4]) -> &'static str {
+    match tag {
+        b"META" => "META",
+        b"HEAD" => "HEAD",
+        b"BLOB" => "BLOB",
+        _ => "END.",
+    }
+}
+
+/// Split a v4 container into its four section payloads, verifying the
+/// section seals, the file seal, and the absence of trailing bytes.
+fn split_sections(raw: &[u8]) -> IResult<[&[u8]; 4]> {
+    let mut cur = 8usize; // past magic + version
+    let mut payloads: [&[u8]; 4] = [&[]; 4];
+    for (i, tag) in SECTION_TAGS.iter().enumerate() {
+        let name = tag_name(tag);
+        if raw.len() < cur + 8 {
+            return Err(InterchangeError::Truncated {
+                section: name.into(),
+                needed: cur + 8,
+                have: raw.len(),
+            });
+        }
+        if &raw[cur..cur + 4] != *tag {
+            return Err(InterchangeError::Corrupt {
+                section: name.into(),
+                detail: format!(
+                    "expected section tag {:?}, found {:?}",
+                    String::from_utf8_lossy(*tag),
+                    String::from_utf8_lossy(&raw[cur..cur + 4])
+                ),
+            });
+        }
+        let len = u32::from_le_bytes(raw[cur + 4..cur + 8].try_into().unwrap()) as usize;
+        let end = cur + 8 + len;
+        if raw.len() < end + 8 {
+            return Err(InterchangeError::Truncated {
+                section: name.into(),
+                needed: end + 8,
+                have: raw.len(),
+            });
+        }
+        let seal = u64::from_le_bytes(raw[end..end + 8].try_into().unwrap());
+        if fnv1a(&raw[cur..end]) != seal {
+            return Err(InterchangeError::Corrupt {
+                section: name.into(),
+                detail: "section seal mismatch".into(),
+            });
+        }
+        payloads[i] = &raw[cur + 8..end];
+        cur = end + 8;
+    }
+    if !payloads[3].is_empty() {
+        return Err(InterchangeError::Corrupt {
+            section: "END.".into(),
+            detail: format!("sentinel section carries {} payload bytes", payloads[3].len()),
+        });
+    }
+    if raw.len() < cur + 8 {
+        return Err(InterchangeError::Truncated {
+            section: "file seal".into(),
+            needed: cur + 8,
+            have: raw.len(),
+        });
+    }
+    let seal = u64::from_le_bytes(raw[cur..cur + 8].try_into().unwrap());
+    if fnv1a(&raw[..cur]) != seal {
+        return Err(InterchangeError::Corrupt {
+            section: "file seal".into(),
+            detail: "file seal mismatch".into(),
+        });
+    }
+    cur += 8;
+    if raw.len() > cur {
+        return Err(InterchangeError::TrailingGarbage { bytes: raw.len() - cur });
+    }
+    Ok(payloads)
+}
+
+/// Structural offsets of a (valid) v4 container: the prologue edges,
+/// every section's tag/length/payload/seal edges, and the file end.
+/// The crash-fault harness truncates at each of these — every cut
+/// before the end must fail typed.
+pub fn section_boundaries(raw: &[u8]) -> Vec<usize> {
+    let mut out = vec![0usize, 4, 8];
+    let mut cur = 8usize;
+    for _ in SECTION_TAGS.iter() {
+        if raw.len() < cur + 8 {
+            break;
+        }
+        let len = u32::from_le_bytes(raw[cur + 4..cur + 8].try_into().unwrap()) as usize;
+        let end = cur + 8 + len;
+        if end + 8 > raw.len() {
+            break;
+        }
+        out.extend_from_slice(&[cur + 4, cur + 8, end, end + 8]);
+        cur = end + 8;
+    }
+    if *out.last().unwrap() < raw.len() {
+        out.push(raw.len());
+    }
+    out.dedup();
+    out
+}
+
+// ---------------------------------------------------------------------------
+// strict reader
+// ---------------------------------------------------------------------------
+
+/// `deny_unknown_fields` over a parsed JSON object: every field must be
+/// consumed exactly once; `finish` rejects whatever is left (which also
+/// catches duplicated keys — the second copy is never consumable).
+struct StrictObj<'a> {
+    fields: &'a [(String, JsonValue)],
+    taken: Vec<bool>,
+    section: &'static str,
+    path: String,
+}
+
+impl<'a> StrictObj<'a> {
+    fn new(v: &'a JsonValue, section: &'static str, path: String) -> IResult<StrictObj<'a>> {
+        let fields = v.as_object().ok_or_else(|| InterchangeError::Corrupt {
+            section: section.into(),
+            detail: format!("{path} is not an object"),
+        })?;
+        let taken = vec![false; fields.len()];
+        Ok(StrictObj { fields, taken, section, path })
+    }
+
+    fn take(&mut self, key: &str) -> IResult<&'a JsonValue> {
+        for (i, (k, v)) in self.fields.iter().enumerate() {
+            if !self.taken[i] && k == key {
+                self.taken[i] = true;
+                return Ok(v);
+            }
+        }
+        Err(InterchangeError::Corrupt {
+            section: self.section.into(),
+            detail: format!("{}: missing field {key:?}", self.path),
+        })
+    }
+
+    fn finish(self) -> IResult<()> {
+        for (i, (k, _)) in self.fields.iter().enumerate() {
+            if !self.taken[i] {
+                return Err(InterchangeError::UnknownField {
+                    context: self.path,
+                    field: k.clone(),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+fn corrupt(section: &'static str, detail: String) -> InterchangeError {
+    InterchangeError::Corrupt { section: section.into(), detail }
+}
+
+fn s_str<'a>(v: &'a JsonValue, sec: &'static str, path: &str) -> IResult<&'a str> {
+    v.as_str().ok_or_else(|| corrupt(sec, format!("{path} is not a string")))
+}
+
+fn s_bool(v: &JsonValue, sec: &'static str, path: &str) -> IResult<bool> {
+    v.as_bool().ok_or_else(|| corrupt(sec, format!("{path} is not a bool")))
+}
+
+fn s_hex(v: &JsonValue, sec: &'static str, path: &str) -> IResult<u64> {
+    let s = s_str(v, sec, path)?;
+    u64::from_str_radix(s, 16).map_err(|_| corrupt(sec, format!("{path}: bad hex word {s:?}")))
+}
+
+/// Exact u64: the hex-string form the writer emits, with plain integral
+/// numbers tolerated for hand-written headers.
+fn s_u64(v: &JsonValue, sec: &'static str, path: &str) -> IResult<u64> {
+    if v.as_str().is_some() {
+        return s_hex(v, sec, path);
+    }
+    match v.as_f64() {
+        Some(n) if n >= 0.0 && n.fract() == 0.0 => Ok(n as u64),
+        _ => Err(corrupt(sec, format!("{path} is not an integer"))),
+    }
+}
+
+/// Bit-exact f64 (hex of the raw bits), plain numbers tolerated.
+fn s_f64(v: &JsonValue, sec: &'static str, path: &str) -> IResult<f64> {
+    if v.as_str().is_some() {
+        return Ok(f64::from_bits(s_hex(v, sec, path)?));
+    }
+    v.as_f64().ok_or_else(|| corrupt(sec, format!("{path} is not a number")))
+}
+
+fn s_usize(v: &JsonValue, sec: &'static str, path: &str) -> IResult<usize> {
+    v.as_usize().ok_or_else(|| corrupt(sec, format!("{path} is not a small integer")))
+}
+
+fn s_array<'a>(v: &'a JsonValue, sec: &'static str, path: &str) -> IResult<&'a [JsonValue]> {
+    v.as_array().ok_or_else(|| corrupt(sec, format!("{path} is not an array")))
+}
+
+fn s_usizes(v: &JsonValue, sec: &'static str, path: &str) -> IResult<Vec<usize>> {
+    s_array(v, sec, path)?
+        .iter()
+        .enumerate()
+        .map(|(i, x)| s_usize(x, sec, &format!("{path}[{i}]")))
+        .collect()
+}
+
+fn s_f64s(v: &JsonValue, sec: &'static str, path: &str) -> IResult<Vec<f64>> {
+    s_array(v, sec, path)?
+        .iter()
+        .enumerate()
+        .map(|(i, x)| s_f64(x, sec, &format!("{path}[{i}]")))
+        .collect()
+}
+
+fn s_rng(v: &JsonValue, sec: &'static str, path: &str) -> IResult<RngSnapshot> {
+    let mut o = StrictObj::new(v, sec, path.to_string())?;
+    let words = s_array(o.take("s")?, sec, &format!("{path}.s"))?;
+    if words.len() != 4 {
+        return Err(corrupt(sec, format!("{path}.s: expected 4 rng words, got {}", words.len())));
+    }
+    let mut s = [0u64; 4];
+    for (i, w) in words.iter().enumerate() {
+        s[i] = s_hex(w, sec, &format!("{path}.s[{i}]"))?;
+    }
+    let gauss_spare = match o.take("spare")? {
+        JsonValue::Null => None,
+        x => Some(f64::from_bits(s_hex(x, sec, &format!("{path}.spare"))?)),
+    };
+    o.finish()?;
+    Ok(RngSnapshot { s, gauss_spare })
+}
+
+fn s_ema(v: &JsonValue, sec: &'static str, path: &str) -> IResult<(f64, u64)> {
+    let mut o = StrictObj::new(v, sec, path.to_string())?;
+    let value = s_f64(o.take("value")?, sec, &format!("{path}.value"))?;
+    let steps = s_u64(o.take("steps")?, sec, &format!("{path}.steps"))?;
+    o.finish()?;
+    Ok((value, steps))
+}
+
+fn parse_json(payload: &[u8], sec: &'static str) -> IResult<JsonValue> {
+    let text = std::str::from_utf8(payload)
+        .map_err(|e| corrupt(sec, format!("payload is not UTF-8: {e}")))?;
+    JsonValue::parse(text).map_err(|e| corrupt(sec, format!("payload is not valid JSON: {e}")))
+}
+
+fn take_f32s(blob: &[u8], cursor: &mut usize, n: usize, what: &str) -> IResult<Vec<f32>> {
+    let bytes = n * 4;
+    if *cursor + bytes > blob.len() {
+        return Err(corrupt(
+            "BLOB",
+            format!(
+                "payload exhausted reading {what}: need {} bytes at offset {}, have {}",
+                bytes,
+                *cursor,
+                blob.len()
+            ),
+        ));
+    }
+    let out = bytes_to_f32s(&blob[*cursor..*cursor + bytes]);
+    *cursor += bytes;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// decoders
+// ---------------------------------------------------------------------------
+
+fn parse_meta(payload: &[u8]) -> IResult<InterchangeMeta> {
+    let v = parse_json(payload, "META")?;
+    let mut o = StrictObj::new(&v, "META", "META".into())?;
+    let format = match s_str(o.take("interchange_format")?, "META", "META.interchange_format")? {
+        "minimal" => InterchangeFormat::Minimal,
+        "complete" => InterchangeFormat::Complete,
+        other => {
+            return Err(corrupt("META", format!("unknown interchange_format {other:?}")));
+        }
+    };
+    let format_version =
+        s_u64(o.take("interchange_format_version")?, "META", "META.interchange_format_version")?;
+    if format_version != VERSION as u64 {
+        return Err(InterchangeError::VersionMismatch { found: format_version as u32 });
+    }
+    let crate_version =
+        s_str(o.take("crate_version")?, "META", "META.crate_version")?.to_string();
+    let config_name = s_str(o.take("config_name")?, "META", "META.config_name")?.to_string();
+    let config_digest = s_u64(o.take("config_digest")?, "META", "META.config_digest")?;
+    o.finish()?;
+    Ok(InterchangeMeta {
+        format,
+        format_version: format_version as u32,
+        crate_version,
+        config_name,
+        config_digest,
+    })
+}
+
+fn parse_registry_row(v: &JsonValue, path: &str) -> IResult<RegistryRowSnapshot> {
+    const S: &str = "HEAD";
+    let mut o = StrictObj::new(v, S, path.to_string())?;
+    let id = s_usize(o.take("id")?, S, &format!("{path}.id"))?;
+    let state = s_str(o.take("state")?, S, &format!("{path}.state"))?.to_string();
+    let origin = s_str(o.take("origin")?, S, &format!("{path}.origin"))?.to_string();
+    let born_outer = s_u64(o.take("born_outer")?, S, &format!("{path}.born_outer"))?;
+    let born_at_s = s_f64(o.take("born_at_s")?, S, &format!("{path}.born_at_s"))?;
+    let retired_outer = match o.take("retired_outer")? {
+        JsonValue::Null => None,
+        x => Some(s_u64(x, S, &format!("{path}.retired_outer"))?),
+    };
+    let workers = s_array(o.take("workers")?, S, &format!("{path}.workers"))?
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            let wp = format!("{path}.workers[{i}]");
+            let pair = s_array(w, S, &wp)?;
+            if pair.len() != 2 {
+                return Err(corrupt(S, format!("{wp}: expected [node, slot]")));
+            }
+            Ok((s_usize(&pair[0], S, &wp)?, s_usize(&pair[1], S, &wp)?))
+        })
+        .collect::<IResult<Vec<(usize, usize)>>>()?;
+    o.finish()?;
+    Ok(RegistryRowSnapshot { id, state, origin, born_outer, born_at_s, retired_outer, workers })
+}
+
+fn parse_trainer(v: &JsonValue, path: &str, blob: &[u8], cursor: &mut usize) -> IResult<TrainerSnapshot> {
+    const S: &str = "HEAD";
+    let mut o = StrictObj::new(v, S, path.to_string())?;
+    let id = s_usize(o.take("id")?, S, &format!("{path}.id"))?;
+    let param_len = s_usize(o.take("param_len")?, S, &format!("{path}.param_len"))?;
+    let velocity_len = s_usize(o.take("velocity_len")?, S, &format!("{path}.velocity_len"))?;
+    let requested_batch = s_usize(o.take("requested_batch")?, S, &format!("{path}.requested_batch"))?;
+    let inner_steps_done = s_u64(o.take("inner_steps_done")?, S, &format!("{path}.inner_steps_done"))?;
+    let observations = s_u64(o.take("observations")?, S, &format!("{path}.observations"))?;
+    let sigma2_ema = s_ema(o.take("sigma2_ema")?, S, &format!("{path}.sigma2_ema"))?;
+    let ip_var_ema = s_ema(o.take("ip_var_ema")?, S, &format!("{path}.ip_var_ema"))?;
+    let s1_ema = s_ema(o.take("s1_ema")?, S, &format!("{path}.s1_ema"))?;
+    let shard = s_usizes(o.take("shard")?, S, &format!("{path}.shard"))?;
+
+    // pending header first (its delta sits between the trainer vectors
+    // and the worker vectors in the blob)
+    let pending_v = o.take("pending")?;
+    let pending_head = match pending_v {
+        JsonValue::Null => None,
+        x => {
+            let pp = format!("{path}.pending");
+            let mut po = StrictObj::new(x, S, pp.clone())?;
+            let posted_at = s_f64(po.take("posted_at")?, S, &format!("{pp}.posted_at"))?;
+            let completes_at = s_f64(po.take("completes_at")?, S, &format!("{pp}.completes_at"))?;
+            let time_s = s_f64(po.take("time_s")?, S, &format!("{pp}.time_s"))?;
+            let sent_samples = s_u64(po.take("sent_samples")?, S, &format!("{pp}.sent_samples"))?;
+            let delta_len = s_usize(po.take("delta_len")?, S, &format!("{pp}.delta_len"))?;
+            let phases = s_array(po.take("phases")?, S, &format!("{pp}.phases"))?
+                .iter()
+                .enumerate()
+                .map(|(i, ph)| {
+                    let php = format!("{pp}.phases[{i}]");
+                    let mut pho = StrictObj::new(ph, S, php.clone())?;
+                    let wan = s_bool(pho.take("wan")?, S, &format!("{php}.wan"))?;
+                    let bytes = s_u64(pho.take("bytes")?, S, &format!("{php}.bytes"))?;
+                    let participants =
+                        s_usize(pho.take("participants")?, S, &format!("{php}.participants"))?;
+                    pho.finish()?;
+                    Ok(PhaseSnapshot { wan, bytes, participants })
+                })
+                .collect::<IResult<Vec<PhaseSnapshot>>>()?;
+            po.finish()?;
+            Some((posted_at, completes_at, time_s, sent_samples, delta_len, phases))
+        }
+    };
+
+    let workers_v = s_array(o.take("workers")?, S, &format!("{path}.workers"))?.to_vec();
+    o.finish()?;
+
+    // blob fills, in writer order: params, velocity, pending delta,
+    // then per-worker params/m/v
+    let params = take_f32s(blob, cursor, param_len, &format!("{path}.params"))?;
+    let outer_velocity = take_f32s(blob, cursor, velocity_len, &format!("{path}.velocity"))?;
+    let pending = match pending_head {
+        None => None,
+        Some((posted_at, completes_at, time_s, sent_samples, delta_len, phases)) => {
+            let delta = take_f32s(blob, cursor, delta_len, &format!("{path}.pending.delta"))?;
+            Some(PendingSnapshot { posted_at, completes_at, time_s, sent_samples, phases, delta })
+        }
+    };
+    let mut workers = Vec::with_capacity(workers_v.len());
+    for (wi, wv) in workers_v.iter().enumerate() {
+        let wp = format!("{path}.workers[{wi}]");
+        let mut wo = StrictObj::new(wv, S, wp.clone())?;
+        let w_param_len = s_usize(wo.take("param_len")?, S, &format!("{wp}.param_len"))?;
+        let step = s_u64(wo.take("step")?, S, &format!("{wp}.step"))?;
+        let active = s_bool(wo.take("active")?, S, &format!("{wp}.active"))?;
+        let noise_rng = s_rng(wo.take("noise_rng")?, S, &format!("{wp}.noise_rng"))?;
+        let time_rng = s_rng(wo.take("time_rng")?, S, &format!("{wp}.time_rng"))?;
+        let sv = wo.take("sampler")?;
+        let sp = format!("{wp}.sampler");
+        let mut so = StrictObj::new(sv, S, sp.clone())?;
+        let sampler = SamplerSnapshot {
+            shard: s_usizes(so.take("shard")?, S, &format!("{sp}.shard"))?,
+            order: s_usizes(so.take("order")?, S, &format!("{sp}.order"))?,
+            cursor: s_usize(so.take("cursor")?, S, &format!("{sp}.cursor"))?,
+            drawn: s_u64(so.take("drawn")?, S, &format!("{sp}.drawn"))?,
+            rng: s_rng(so.take("rng")?, S, &format!("{sp}.rng"))?,
+        };
+        so.finish()?;
+        wo.finish()?;
+        let w_params = take_f32s(blob, cursor, w_param_len, &format!("{wp}.params"))?;
+        let m = take_f32s(blob, cursor, w_param_len, &format!("{wp}.m"))?;
+        let vv = take_f32s(blob, cursor, w_param_len, &format!("{wp}.v"))?;
+        workers.push(WorkerSnapshot {
+            params: w_params,
+            m,
+            v: vv,
+            step,
+            active,
+            noise_rng,
+            time_rng,
+            sampler,
+        });
+    }
+
+    Ok(TrainerSnapshot {
+        id,
+        params,
+        outer_velocity,
+        requested_batch,
+        inner_steps_done,
+        observations,
+        sigma2_ema,
+        ip_var_ema,
+        s1_ema,
+        shard,
+        pending,
+        workers,
+    })
+}
+
+fn decode_complete(meta: &InterchangeMeta, head: &[u8], blob: &[u8]) -> IResult<Checkpoint> {
+    const S: &str = "HEAD";
+    let v = parse_json(head, S)?;
+    let mut o = StrictObj::new(&v, S, S.into())?;
+    let outer_step = s_u64(o.take("outer_step")?, S, "HEAD.outer_step")?;
+    let total_samples = s_u64(o.take("total_samples")?, S, "HEAD.total_samples")?;
+    let comm_count = s_u64(o.take("comm_count")?, S, "HEAD.comm_count")?;
+    let comm_bytes = s_u64(o.take("comm_bytes")?, S, "HEAD.comm_bytes")?;
+    let comm_wan_bytes = s_u64(o.take("comm_wan_bytes")?, S, "HEAD.comm_wan_bytes")?;
+    let overlap_hidden_s = s_f64(o.take("overlap_hidden_s")?, S, "HEAD.overlap_hidden_s")?;
+    let clock_times = s_f64s(o.take("clock_times")?, S, "HEAD.clock_times")?;
+    let busy_s = s_f64s(o.take("busy_s")?, S, "HEAD.busy_s")?;
+    let wait_s = s_f64s(o.take("wait_s")?, S, "HEAD.wait_s")?;
+    let comm_s = s_f64s(o.take("comm_s")?, S, "HEAD.comm_s")?;
+    let comm_hidden_s = s_f64s(o.take("comm_hidden_s")?, S, "HEAD.comm_hidden_s")?;
+    let preempted_s = s_f64s(o.take("preempted_s")?, S, "HEAD.preempted_s")?;
+    let vacant_s = s_f64s(o.take("vacant_s")?, S, "HEAD.vacant_s")?;
+    let spawn_count = s_u64(o.take("spawn_count")?, S, "HEAD.spawn_count")?;
+    let last_spawn_outer = s_u64(o.take("last_spawn_outer")?, S, "HEAD.last_spawn_outer")?;
+    let last_merge_rep = match o.take("last_merge_rep")? {
+        JsonValue::Null => None,
+        x => Some(s_usize(x, S, "HEAD.last_merge_rep")?),
+    };
+    let live_rounds_sum = s_u64(o.take("live_rounds_sum")?, S, "HEAD.live_rounds_sum")?;
+    let rounds_count = s_u64(o.take("rounds_count")?, S, "HEAD.rounds_count")?;
+    let registry = s_array(o.take("registry")?, S, "HEAD.registry")?
+        .iter()
+        .enumerate()
+        .map(|(i, r)| parse_registry_row(r, &format!("HEAD.registry[{i}]")))
+        .collect::<IResult<Vec<RegistryRowSnapshot>>>()?;
+    let rng = s_rng(o.take("rng")?, S, "HEAD.rng")?;
+    let trainers_v = s_array(o.take("trainers")?, S, "HEAD.trainers")?.to_vec();
+    o.finish()?;
+
+    let mut cursor = 0usize;
+    let trainers = trainers_v
+        .iter()
+        .enumerate()
+        .map(|(i, t)| parse_trainer(t, &format!("HEAD.trainers[{i}]"), blob, &mut cursor))
+        .collect::<IResult<Vec<TrainerSnapshot>>>()?;
+    if cursor != blob.len() {
+        return Err(corrupt(
+            "BLOB",
+            format!("{} payload bytes beyond the last declared vector", blob.len() - cursor),
+        ));
+    }
+
+    Ok(Checkpoint {
+        config_name: meta.config_name.clone(),
+        config_digest: meta.config_digest,
+        outer_step,
+        total_samples,
+        comm_count,
+        comm_bytes,
+        comm_wan_bytes,
+        overlap_hidden_s,
+        clock_times,
+        busy_s,
+        wait_s,
+        comm_s,
+        comm_hidden_s,
+        preempted_s,
+        vacant_s,
+        spawn_count,
+        last_spawn_outer,
+        last_merge_rep,
+        live_rounds_sum,
+        rounds_count,
+        registry,
+        rng,
+        trainers,
+    })
+}
+
+fn decode_minimal(meta: &InterchangeMeta, head: &[u8], blob: &[u8]) -> IResult<MinimalCheckpoint> {
+    const S: &str = "HEAD";
+    let v = parse_json(head, S)?;
+    let mut o = StrictObj::new(&v, S, S.into())?;
+    let outer_step = s_u64(o.take("outer_step")?, S, "HEAD.outer_step")?;
+    let rng = s_rng(o.take("rng")?, S, "HEAD.rng")?;
+    let trainers_v = s_array(o.take("trainers")?, S, "HEAD.trainers")?.to_vec();
+    o.finish()?;
+
+    let mut cursor = 0usize;
+    let mut trainers = Vec::with_capacity(trainers_v.len());
+    for (i, tv) in trainers_v.iter().enumerate() {
+        let tp = format!("HEAD.trainers[{i}]");
+        let mut to = StrictObj::new(tv, S, tp.clone())?;
+        let id = s_usize(to.take("id")?, S, &format!("{tp}.id"))?;
+        let param_len = s_usize(to.take("param_len")?, S, &format!("{tp}.param_len"))?;
+        let workers = s_array(to.take("workers")?, S, &format!("{tp}.workers"))?
+            .iter()
+            .enumerate()
+            .map(|(wi, wv)| {
+                let wp = format!("{tp}.workers[{wi}]");
+                let mut wo = StrictObj::new(wv, S, wp.clone())?;
+                let noise_rng = s_rng(wo.take("noise_rng")?, S, &format!("{wp}.noise_rng"))?;
+                let time_rng = s_rng(wo.take("time_rng")?, S, &format!("{wp}.time_rng"))?;
+                wo.finish()?;
+                Ok(MinimalWorker { noise_rng, time_rng })
+            })
+            .collect::<IResult<Vec<MinimalWorker>>>()?;
+        to.finish()?;
+        let params = take_f32s(blob, &mut cursor, param_len, &format!("{tp}.params"))?;
+        trainers.push(MinimalTrainer { id, params, workers });
+    }
+    if cursor != blob.len() {
+        return Err(corrupt(
+            "BLOB",
+            format!("{} payload bytes beyond the last declared vector", blob.len() - cursor),
+        ));
+    }
+
+    Ok(MinimalCheckpoint {
+        config_name: meta.config_name.clone(),
+        config_digest: meta.config_digest,
+        outer_step,
+        rng,
+        trainers,
+    })
+}
+
+/// Decode a v4 container (magic and version already checked by
+/// `import_bytes`) into its interchange variant.
+pub(crate) fn decode_v4(raw: &[u8]) -> IResult<Interchange> {
+    let [meta_b, head_b, blob_b, _end] = split_sections(raw)?;
+    let meta = parse_meta(meta_b)?;
+    match meta.format {
+        InterchangeFormat::Complete => {
+            decode_complete(&meta, head_b, blob_b).map(Interchange::Complete)
+        }
+        InterchangeFormat::Minimal => {
+            decode_minimal(&meta, head_b, blob_b).map(Interchange::Minimal)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::sample_checkpoint;
+    use super::super::{import_bytes, Interchange};
+    use super::*;
+
+    #[test]
+    fn every_single_bit_flip_is_detected() {
+        // the seal's deterministic single-byte guarantee, end to end:
+        // flip one bit at EVERY byte offset of a real container and the
+        // import must fail typed — no flip may parse, and none may panic
+        let bytes = sample_checkpoint().to_bytes();
+        for pos in 0..bytes.len() {
+            let mut m = bytes.clone();
+            m[pos] ^= 1 << (pos % 8);
+            assert!(
+                import_bytes(&m).is_err(),
+                "bit flip at offset {pos}/{} went undetected",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_length_is_detected() {
+        // every proper prefix must fail typed (zero panics, zero
+        // partial parses) — the in-process version of the kill-anywhere
+        // sweep in tests/crash_fault.rs
+        let bytes = sample_checkpoint().to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(
+                import_bytes(&bytes[..cut]).is_err(),
+                "truncation to {cut}/{} bytes went undetected",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn section_boundaries_walk_the_layout() {
+        let bytes = sample_checkpoint().to_bytes();
+        let bounds = section_boundaries(&bytes);
+        assert_eq!(bounds[0], 0);
+        assert_eq!(*bounds.last().unwrap(), bytes.len());
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "boundaries must be increasing");
+        // 3 prologue edges + 4 edges per section + file end, deduped
+        assert!(bounds.len() >= 3 + 4 * 4, "got only {} boundaries", bounds.len());
+        for &cut in &bounds {
+            if cut < bytes.len() {
+                assert!(import_bytes(&bytes[..cut]).is_err(), "cut at boundary {cut} parsed");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_field_in_meta_rejected() {
+        let cp = sample_checkpoint();
+        let meta = JsonValue::obj(vec![
+            ("interchange_format", JsonValue::str("complete")),
+            ("interchange_format_version", JsonValue::num(VERSION as f64)),
+            ("crate_version", JsonValue::str("0.0.0")),
+            ("config_name", JsonValue::str("unit")),
+            ("config_digest", super::super::u64_json(0)),
+            ("surprise", JsonValue::Bool(true)),
+        ])
+        .to_string();
+        let head = JsonValue::obj(state_fields(&cp)).to_string();
+        let bytes = container(meta.as_bytes(), head.as_bytes(), &blob_bytes(&cp));
+        let err = import_bytes(&bytes).unwrap_err();
+        assert_eq!(
+            err,
+            InterchangeError::UnknownField { context: "META".into(), field: "surprise".into() },
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn unknown_field_in_head_rejected() {
+        let cp = sample_checkpoint();
+        let meta = meta_json(InterchangeFormat::Complete, &cp.config_name, cp.config_digest);
+        let mut fields = state_fields(&cp);
+        fields.push(("extra_state", JsonValue::num(1.0)));
+        let head = JsonValue::obj(fields).to_string();
+        let bytes = container(meta.as_bytes(), head.as_bytes(), &blob_bytes(&cp));
+        let err = import_bytes(&bytes).unwrap_err();
+        assert!(
+            matches!(
+                &err,
+                InterchangeError::UnknownField { context, field }
+                    if context == "HEAD" && field == "extra_state"
+            ),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn duplicate_field_rejected() {
+        // a duplicated key is only consumable once; strict parsing
+        // reports the second copy as unknown
+        let cp = sample_checkpoint();
+        let meta = meta_json(InterchangeFormat::Complete, &cp.config_name, cp.config_digest);
+        let mut fields = state_fields(&cp);
+        fields.push(("outer_step", super::super::u64_json(99)));
+        let head = JsonValue::obj(fields).to_string();
+        let bytes = container(meta.as_bytes(), head.as_bytes(), &blob_bytes(&cp));
+        let err = import_bytes(&bytes).unwrap_err();
+        assert!(
+            matches!(&err, InterchangeError::UnknownField { field, .. } if field == "outer_step"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn meta_version_mismatch_rejected() {
+        let cp = sample_checkpoint();
+        let meta = JsonValue::obj(vec![
+            ("interchange_format", JsonValue::str("complete")),
+            ("interchange_format_version", JsonValue::num(7.0)),
+            ("crate_version", JsonValue::str("0.0.0")),
+            ("config_name", JsonValue::str("unit")),
+            ("config_digest", super::super::u64_json(0)),
+        ])
+        .to_string();
+        let head = JsonValue::obj(state_fields(&cp)).to_string();
+        let bytes = container(meta.as_bytes(), head.as_bytes(), &blob_bytes(&cp));
+        let err = import_bytes(&bytes).unwrap_err();
+        assert_eq!(err, InterchangeError::VersionMismatch { found: 7 }, "{err}");
+    }
+
+    #[test]
+    fn foreign_crate_version_still_loads() {
+        // crate_version is informational: files written by other builds
+        // of the same interchange version must load
+        let cp = sample_checkpoint();
+        let meta = JsonValue::obj(vec![
+            ("interchange_format", JsonValue::str("complete")),
+            ("interchange_format_version", JsonValue::num(VERSION as f64)),
+            ("crate_version", JsonValue::str("99.1.0-beta")),
+            ("config_name", JsonValue::str(cp.config_name.as_str())),
+            ("config_digest", super::super::u64_json(cp.config_digest)),
+        ])
+        .to_string();
+        let head = JsonValue::obj(state_fields(&cp)).to_string();
+        let bytes = container(meta.as_bytes(), head.as_bytes(), &blob_bytes(&cp));
+        match import_bytes(&bytes).unwrap() {
+            Interchange::Complete(back) => assert_eq!(back, cp),
+            other => panic!("expected complete variant, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn blob_length_mismatch_rejected() {
+        // a header that declares less payload than BLOB carries must
+        // not silently ignore the excess
+        let cp = sample_checkpoint();
+        let meta = meta_json(InterchangeFormat::Complete, &cp.config_name, cp.config_digest);
+        let head = JsonValue::obj(state_fields(&cp)).to_string();
+        let mut blob = blob_bytes(&cp);
+        blob.extend_from_slice(&[0u8; 4]);
+        let bytes = container(meta.as_bytes(), head.as_bytes(), &blob);
+        let err = import_bytes(&bytes).unwrap_err();
+        assert!(
+            matches!(&err, InterchangeError::Corrupt { section, .. } if section == "BLOB"),
+            "{err}"
+        );
+    }
+}

@@ -1,0 +1,619 @@
+//! Importers (and historical writers) for the pre-v4 checkpoint
+//! containers — the interchange's migration story (DESIGN.md §10).
+//!
+//! All three legacy versions share one container shape:
+//!
+//! ```text
+//! "ADLC"  u32-LE version  u32-LE header_len  header-JSON  raw-f32-blobs
+//! u32-LE CRC32(everything above)
+//! ```
+//!
+//! * **v1** — the minimal layout: outer params + RNG streams per
+//!   trainer. Imports as [`MinimalCheckpoint`] (warm-start only).
+//! * **v2** — exact resume before the elastic lifecycle: adds optimizer
+//!   moments, sampler cursors, controller statistics, time accounting
+//!   and in-flight syncs. Imports as a complete [`Checkpoint`] with the
+//!   elastic fields defaulted (zero vacancy/spawn bookkeeping and a
+//!   best-effort registry: one active seed row per live trainer, worker
+//!   assignments unknown — the coordinator keeps its config-seeded
+//!   assignments for such rows).
+//! * **v3** — v2 plus the registry, spawn bookkeeping, vacancy and
+//!   round-census accounting. Imports losslessly (`config_digest`
+//!   becomes 0: the field did not exist yet, so resume skips the
+//!   digest check for imported files).
+//!
+//! The writers ([`export_v1`]/[`export_v2`]/[`export_v3`]) reproduce
+//! the historical bytes; they exist for the cross-version
+//! compatibility matrix (`tests/interchange_fixtures.rs`) and for
+//! regenerating the golden fixture files — current code always writes
+//! v4.
+
+use super::{
+    crc32, f32s_to_bytes, f64_json, f64s_json, get_f64, get_u64, parse_ema, parse_f64s,
+    parse_hex_u64, parse_rng, parse_usizes, rng_json, trainer_json, u64_json, usizes_json,
+    Checkpoint, InterchangeError, MinimalCheckpoint, MinimalTrainer, MinimalWorker,
+    PendingSnapshot, PhaseSnapshot, RegistryRowSnapshot, RngSnapshot, SamplerSnapshot,
+    TrainerSnapshot, WorkerSnapshot, MAGIC,
+};
+use crate::util::JsonValue;
+use anyhow::{anyhow, bail, Result};
+
+type IResult<T> = std::result::Result<T, InterchangeError>;
+
+// ---------------------------------------------------------------------------
+// container walk (shared by all three versions)
+// ---------------------------------------------------------------------------
+
+/// Verify a legacy container's structure and CRC trailer; return the
+/// parsed header and the raw blob body.
+fn split_legacy<'a>(raw: &'a [u8], what: &'static str) -> IResult<(JsonValue, &'a [u8])> {
+    // magic and version were already checked by `import_bytes`
+    if raw.len() < 16 {
+        return Err(InterchangeError::Truncated {
+            section: format!("{what} prologue"),
+            needed: 16,
+            have: raw.len(),
+        });
+    }
+    let header_len = u32::from_le_bytes(raw[8..12].try_into().unwrap()) as usize;
+    let need = 12 + header_len + 4;
+    if raw.len() < need {
+        return Err(InterchangeError::Truncated {
+            section: format!("{what} header"),
+            needed: need,
+            have: raw.len(),
+        });
+    }
+    let stored = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
+    if crc32(&raw[..raw.len() - 4]) != stored {
+        return Err(InterchangeError::Corrupt {
+            section: format!("{what} CRC trailer"),
+            detail: "whole-file CRC mismatch".into(),
+        });
+    }
+    let text = std::str::from_utf8(&raw[12..12 + header_len]).map_err(|e| {
+        InterchangeError::Corrupt {
+            section: format!("{what} header"),
+            detail: format!("header is not UTF-8: {e}"),
+        }
+    })?;
+    let header = JsonValue::parse(text).map_err(|e| InterchangeError::Corrupt {
+        section: format!("{what} header"),
+        detail: format!("header is not valid JSON: {e}"),
+    })?;
+    Ok((header, &raw[12 + header_len..raw.len() - 4]))
+}
+
+fn as_corrupt(what: &'static str, e: anyhow::Error) -> InterchangeError {
+    InterchangeError::Corrupt { section: format!("{what} payload"), detail: format!("{e:#}") }
+}
+
+fn take_f32s(body: &[u8], cursor: &mut usize, n: usize) -> Result<Vec<f32>> {
+    let bytes = n * 4;
+    if *cursor + bytes > body.len() {
+        bail!(
+            "payload exhausted: need {bytes} bytes at offset {cursor}, have {}",
+            body.len()
+        );
+    }
+    let out = super::bytes_to_f32s(&body[*cursor..*cursor + bytes]);
+    *cursor += bytes;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// tolerant header parsing (legacy files predate strict mode)
+// ---------------------------------------------------------------------------
+
+fn parse_registry(header: &JsonValue) -> Result<Vec<RegistryRowSnapshot>> {
+    let rows = header
+        .get("registry")
+        .and_then(|x| x.as_array())
+        .ok_or_else(|| anyhow!("missing registry"))?;
+    rows.iter()
+        .map(|r| {
+            let workers = r
+                .get("workers")
+                .and_then(|x| x.as_array())
+                .ok_or_else(|| anyhow!("registry row missing workers"))?
+                .iter()
+                .map(|w| {
+                    let pair = w.as_array().ok_or_else(|| anyhow!("bad worker pair"))?;
+                    if pair.len() != 2 {
+                        bail!("worker pair must be [node, slot]");
+                    }
+                    Ok((
+                        pair[0].as_usize().ok_or_else(|| anyhow!("bad worker node"))?,
+                        pair[1].as_usize().ok_or_else(|| anyhow!("bad worker slot"))?,
+                    ))
+                })
+                .collect::<Result<Vec<(usize, usize)>>>()?;
+            Ok(RegistryRowSnapshot {
+                id: r.get("id").and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("row id"))?,
+                state: r
+                    .get("state")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| anyhow!("row state"))?
+                    .to_string(),
+                origin: r
+                    .get("origin")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| anyhow!("row origin"))?
+                    .to_string(),
+                born_outer: get_u64(r, "born_outer")?,
+                born_at_s: get_f64(r, "born_at_s")?,
+                retired_outer: match r.get("retired_outer") {
+                    Some(JsonValue::Null) | None => None,
+                    Some(x) => Some(if let Some(s) = x.as_str() {
+                        parse_hex_u64(s)?
+                    } else {
+                        x.as_f64().ok_or_else(|| anyhow!("bad retired_outer"))? as u64
+                    }),
+                },
+                workers,
+            })
+        })
+        .collect()
+}
+
+fn parse_trainers(header: &JsonValue, body: &[u8]) -> Result<Vec<TrainerSnapshot>> {
+    let ts = header
+        .get("trainers")
+        .and_then(|x| x.as_array())
+        .ok_or_else(|| anyhow!("missing trainers"))?;
+    let mut cursor = 0usize;
+    let mut out = Vec::with_capacity(ts.len());
+    for t in ts {
+        let id = t.get("id").and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("trainer id"))?;
+        let param_len =
+            t.get("param_len").and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("param_len"))?;
+        let velocity_len = t
+            .get("velocity_len")
+            .and_then(|x| x.as_usize())
+            .ok_or_else(|| anyhow!("velocity_len"))?;
+        let pending_head = match t.get("pending") {
+            Some(JsonValue::Null) | None => None,
+            Some(p) => {
+                let delta_len = p
+                    .get("delta_len")
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| anyhow!("pending delta_len"))?;
+                let phases = p
+                    .get("phases")
+                    .and_then(|x| x.as_array())
+                    .ok_or_else(|| anyhow!("pending phases"))?
+                    .iter()
+                    .map(|ph| {
+                        Ok(PhaseSnapshot {
+                            wan: ph
+                                .get("wan")
+                                .and_then(|x| x.as_bool())
+                                .ok_or_else(|| anyhow!("phase wan"))?,
+                            bytes: get_u64(ph, "bytes")?,
+                            participants: ph
+                                .get("participants")
+                                .and_then(|x| x.as_usize())
+                                .ok_or_else(|| anyhow!("phase participants"))?,
+                        })
+                    })
+                    .collect::<Result<Vec<PhaseSnapshot>>>()?;
+                Some((
+                    PendingSnapshot {
+                        posted_at: get_f64(p, "posted_at")?,
+                        completes_at: get_f64(p, "completes_at")?,
+                        time_s: get_f64(p, "time_s")?,
+                        sent_samples: get_u64(p, "sent_samples")?,
+                        phases,
+                        delta: Vec::new(), // filled from the blob below
+                    },
+                    delta_len,
+                ))
+            }
+        };
+        let params = take_f32s(body, &mut cursor, param_len)?;
+        let outer_velocity = take_f32s(body, &mut cursor, velocity_len)?;
+        let pending = match pending_head {
+            None => None,
+            Some((mut p, delta_len)) => {
+                p.delta = take_f32s(body, &mut cursor, delta_len)?;
+                Some(p)
+            }
+        };
+        let workers_json = t
+            .get("workers")
+            .and_then(|x| x.as_array())
+            .ok_or_else(|| anyhow!("trainer workers"))?;
+        let mut workers = Vec::with_capacity(workers_json.len());
+        for w in workers_json {
+            let w_len = w
+                .get("param_len")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("worker param_len"))?;
+            let sampler_v = w.get("sampler").ok_or_else(|| anyhow!("worker sampler"))?;
+            let sampler = SamplerSnapshot {
+                shard: parse_usizes(sampler_v, "shard")?,
+                order: parse_usizes(sampler_v, "order")?,
+                cursor: sampler_v
+                    .get("cursor")
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| anyhow!("sampler cursor"))?,
+                drawn: get_u64(sampler_v, "drawn")?,
+                rng: parse_rng(sampler_v, "rng")?,
+            };
+            workers.push(WorkerSnapshot {
+                params: take_f32s(body, &mut cursor, w_len)?,
+                m: take_f32s(body, &mut cursor, w_len)?,
+                v: take_f32s(body, &mut cursor, w_len)?,
+                step: get_u64(w, "step")?,
+                active: w
+                    .get("active")
+                    .and_then(|x| x.as_bool())
+                    .ok_or_else(|| anyhow!("worker active"))?,
+                noise_rng: parse_rng(w, "noise_rng")?,
+                time_rng: parse_rng(w, "time_rng")?,
+                sampler,
+            });
+        }
+        out.push(TrainerSnapshot {
+            id,
+            params,
+            outer_velocity,
+            requested_batch: t
+                .get("requested_batch")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("requested_batch"))?,
+            inner_steps_done: get_u64(t, "inner_steps_done")?,
+            observations: get_u64(t, "observations")?,
+            sigma2_ema: parse_ema(t, "sigma2_ema")?,
+            ip_var_ema: parse_ema(t, "ip_var_ema")?,
+            s1_ema: parse_ema(t, "s1_ema")?,
+            shard: parse_usizes(t, "shard")?,
+            pending,
+            workers,
+        });
+    }
+    if cursor != body.len() {
+        bail!("{} trailing payload bytes beyond the last declared vector", body.len() - cursor);
+    }
+    Ok(out)
+}
+
+fn parse_complete(header: &JsonValue, body: &[u8], has_elastic: bool) -> Result<Checkpoint> {
+    let clock_times = parse_f64s(header, "clock_times")?;
+    let trainers = parse_trainers(header, body)?;
+    let (vacant_s, spawn_count, last_spawn_outer, last_merge_rep, live_rounds_sum, rounds_count, registry);
+    if has_elastic {
+        vacant_s = parse_f64s(header, "vacant_s")?;
+        spawn_count = get_u64(header, "spawn_count")?;
+        last_spawn_outer = get_u64(header, "last_spawn_outer")?;
+        last_merge_rep = match header.get("last_merge_rep") {
+            Some(JsonValue::Null) | None => None,
+            Some(x) => Some(x.as_usize().ok_or_else(|| anyhow!("bad last_merge_rep"))?),
+        };
+        live_rounds_sum = get_u64(header, "live_rounds_sum")?;
+        rounds_count = get_u64(header, "rounds_count")?;
+        registry = parse_registry(header)?;
+    } else {
+        // pre-elastic file: no vacancy, no spawns, and a best-effort
+        // registry — one active seed row per live trainer; worker
+        // assignments are unknown (empty), which the coordinator
+        // resolves by keeping its config-seeded assignment
+        vacant_s = vec![0.0; clock_times.len()];
+        spawn_count = 0;
+        last_spawn_outer = 0;
+        last_merge_rep = None;
+        live_rounds_sum = 0;
+        rounds_count = 0;
+        registry = trainers
+            .iter()
+            .map(|t| RegistryRowSnapshot {
+                id: t.id,
+                state: "active".into(),
+                origin: "seed".into(),
+                born_outer: 0,
+                born_at_s: 0.0,
+                retired_outer: None,
+                workers: Vec::new(),
+            })
+            .collect();
+    }
+    Ok(Checkpoint {
+        config_name: header
+            .get("config_name")
+            .and_then(|x| x.as_str())
+            .unwrap_or_default()
+            .to_string(),
+        config_digest: 0, // predates the digest; resume skips the check
+        outer_step: get_u64(header, "outer_step")?,
+        total_samples: get_u64(header, "total_samples")?,
+        comm_count: get_u64(header, "comm_count")?,
+        comm_bytes: get_u64(header, "comm_bytes")?,
+        comm_wan_bytes: get_u64(header, "comm_wan_bytes")?,
+        overlap_hidden_s: get_f64(header, "overlap_hidden_s")?,
+        clock_times,
+        busy_s: parse_f64s(header, "busy_s")?,
+        wait_s: parse_f64s(header, "wait_s")?,
+        comm_s: parse_f64s(header, "comm_s")?,
+        comm_hidden_s: parse_f64s(header, "comm_hidden_s")?,
+        preempted_s: parse_f64s(header, "preempted_s")?,
+        vacant_s,
+        spawn_count,
+        last_spawn_outer,
+        last_merge_rep,
+        live_rounds_sum,
+        rounds_count,
+        registry,
+        rng: parse_rng(header, "rng")?,
+        trainers,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// importers
+// ---------------------------------------------------------------------------
+
+/// Import a v3 container (elastic-era exact resume). Lossless.
+pub(crate) fn import_v3(raw: &[u8]) -> IResult<Checkpoint> {
+    let (header, body) = split_legacy(raw, "v3")?;
+    parse_complete(&header, body, true).map_err(|e| as_corrupt("v3", e))
+}
+
+/// Import a v2 container (pre-elastic exact resume); elastic fields
+/// default as documented on the module.
+pub(crate) fn import_v2(raw: &[u8]) -> IResult<Checkpoint> {
+    let (header, body) = split_legacy(raw, "v2")?;
+    parse_complete(&header, body, false).map_err(|e| as_corrupt("v2", e))
+}
+
+/// Import a v1 container (params + RNG streams) as the minimal
+/// warm-start variant.
+pub(crate) fn import_v1(raw: &[u8]) -> IResult<MinimalCheckpoint> {
+    let (header, body) = split_legacy(raw, "v1")?;
+    parse_minimal(&header, body).map_err(|e| as_corrupt("v1", e))
+}
+
+fn parse_minimal(header: &JsonValue, body: &[u8]) -> Result<MinimalCheckpoint> {
+    let ts = header
+        .get("trainers")
+        .and_then(|x| x.as_array())
+        .ok_or_else(|| anyhow!("missing trainers"))?;
+    let mut cursor = 0usize;
+    let mut trainers = Vec::with_capacity(ts.len());
+    for t in ts {
+        let param_len =
+            t.get("param_len").and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("param_len"))?;
+        let workers = t
+            .get("workers")
+            .and_then(|x| x.as_array())
+            .ok_or_else(|| anyhow!("trainer workers"))?
+            .iter()
+            .map(|w| {
+                Ok(MinimalWorker {
+                    noise_rng: parse_rng(w, "noise_rng")?,
+                    time_rng: parse_rng(w, "time_rng")?,
+                })
+            })
+            .collect::<Result<Vec<MinimalWorker>>>()?;
+        trainers.push(MinimalTrainer {
+            id: t.get("id").and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("trainer id"))?,
+            params: take_f32s(body, &mut cursor, param_len)?,
+            workers,
+        });
+    }
+    if cursor != body.len() {
+        bail!("{} trailing payload bytes beyond the last declared vector", body.len() - cursor);
+    }
+    Ok(MinimalCheckpoint {
+        config_name: header
+            .get("config_name")
+            .and_then(|x| x.as_str())
+            .unwrap_or_default()
+            .to_string(),
+        config_digest: 0,
+        outer_step: get_u64(header, "outer_step")?,
+        rng: parse_rng(header, "rng")?,
+        trainers,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// historical writers
+// ---------------------------------------------------------------------------
+
+fn legacy_container(version: u32, header: &str, blobs: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12 + header.len() + blobs.len() + 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    out.extend_from_slice(blobs);
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Write the historical v3 bytes of a snapshot (elastic-era layout).
+pub fn export_v3(cp: &Checkpoint) -> Vec<u8> {
+    let mut fields = vec![("config_name", JsonValue::str(cp.config_name.as_str()))];
+    fields.extend(super::state_fields(cp));
+    legacy_container(3, &JsonValue::obj(fields).to_string(), &super::blob_bytes(cp))
+}
+
+/// Write the historical v2 bytes of a snapshot: the v3 layout minus
+/// the elastic fields (vacancy, spawn bookkeeping, round census,
+/// registry). Elastic state present on `cp` is dropped — v2 could not
+/// express it.
+pub fn export_v2(cp: &Checkpoint) -> Vec<u8> {
+    let fields = vec![
+        ("config_name", JsonValue::str(cp.config_name.as_str())),
+        ("outer_step", u64_json(cp.outer_step)),
+        ("total_samples", u64_json(cp.total_samples)),
+        ("comm_count", u64_json(cp.comm_count)),
+        ("comm_bytes", u64_json(cp.comm_bytes)),
+        ("comm_wan_bytes", u64_json(cp.comm_wan_bytes)),
+        ("overlap_hidden_s", f64_json(cp.overlap_hidden_s)),
+        ("clock_times", f64s_json(&cp.clock_times)),
+        ("busy_s", f64s_json(&cp.busy_s)),
+        ("wait_s", f64s_json(&cp.wait_s)),
+        ("comm_s", f64s_json(&cp.comm_s)),
+        ("comm_hidden_s", f64s_json(&cp.comm_hidden_s)),
+        ("preempted_s", f64s_json(&cp.preempted_s)),
+        ("rng", rng_json(&cp.rng)),
+        (
+            "trainers",
+            JsonValue::Array(cp.trainers.iter().map(trainer_json).collect()),
+        ),
+    ];
+    legacy_container(2, &JsonValue::obj(fields).to_string(), &super::blob_bytes(cp))
+}
+
+/// Write the historical v1 bytes of a minimal snapshot (params + RNG
+/// streams; blob carries only the outer parameter vectors).
+pub fn export_v1(m: &MinimalCheckpoint) -> Vec<u8> {
+    let fields = vec![
+        ("config_name", JsonValue::str(m.config_name.as_str())),
+        ("outer_step", u64_json(m.outer_step)),
+        ("rng", rng_json(&m.rng)),
+        (
+            "trainers",
+            JsonValue::Array(
+                m.trainers
+                    .iter()
+                    .map(|t| {
+                        JsonValue::obj(vec![
+                            ("id", JsonValue::num(t.id as f64)),
+                            ("param_len", JsonValue::num(t.params.len() as f64)),
+                            (
+                                "workers",
+                                JsonValue::Array(
+                                    t.workers
+                                        .iter()
+                                        .map(|w| {
+                                            JsonValue::obj(vec![
+                                                ("noise_rng", rng_json(&w.noise_rng)),
+                                                ("time_rng", rng_json(&w.time_rng)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    let mut blobs = Vec::new();
+    for t in &m.trainers {
+        f32s_to_bytes(&t.params, &mut blobs);
+    }
+    legacy_container(1, &JsonValue::obj(fields).to_string(), &blobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::sample_checkpoint;
+    use super::super::{import_bytes, Interchange};
+    use super::*;
+
+    #[test]
+    fn v3_roundtrips_through_the_import_path() {
+        let cp = sample_checkpoint();
+        let bytes = export_v3(&cp);
+        let back = match import_bytes(&bytes).unwrap() {
+            Interchange::Complete(c) => c,
+            other => panic!("expected complete, got {other:?}"),
+        };
+        // v3 predates the config digest; everything else is lossless
+        let mut want = cp;
+        want.config_digest = 0;
+        assert_eq!(back, want);
+    }
+
+    #[test]
+    fn v2_import_fills_elastic_defaults() {
+        let cp = sample_checkpoint();
+        let back = match import_bytes(&export_v2(&cp)).unwrap() {
+            Interchange::Complete(c) => c,
+            other => panic!("expected complete, got {other:?}"),
+        };
+        assert_eq!(back.outer_step, cp.outer_step);
+        assert_eq!(back.trainers, cp.trainers);
+        assert_eq!(back.clock_times, cp.clock_times);
+        assert_eq!(back.vacant_s, vec![0.0; cp.clock_times.len()]);
+        assert_eq!(back.spawn_count, 0);
+        assert_eq!(back.last_merge_rep, None);
+        assert_eq!(back.rounds_count, 0);
+        // best-effort registry: one active seed row per live trainer
+        assert_eq!(back.registry.len(), cp.trainers.len());
+        assert_eq!(back.registry[0].id, cp.trainers[0].id);
+        assert_eq!(back.registry[1].id, cp.trainers[1].id);
+        assert!(back.registry.iter().all(|r| r.state == "active" && r.origin == "seed"));
+        assert!(back.registry.iter().all(|r| r.workers.is_empty()));
+    }
+
+    #[test]
+    fn v1_imports_as_minimal() {
+        let min = sample_checkpoint().to_minimal();
+        let back = match import_bytes(&export_v1(&min)).unwrap() {
+            Interchange::Minimal(m) => m,
+            other => panic!("expected minimal, got {other:?}"),
+        };
+        let mut want = min;
+        want.config_digest = 0;
+        assert_eq!(back, want);
+    }
+
+    #[test]
+    fn legacy_crc_damage_is_typed() {
+        let mut bytes = export_v3(&sample_checkpoint());
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        let err = import_bytes(&bytes).unwrap_err();
+        assert!(
+            matches!(&err, InterchangeError::Corrupt { section, .. } if section.contains("CRC")),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn legacy_truncation_is_typed() {
+        let bytes = export_v2(&sample_checkpoint());
+        for cut in [9, 14, bytes.len() / 2, bytes.len() - 1] {
+            let err = import_bytes(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(
+                    &err,
+                    InterchangeError::Truncated { .. } | InterchangeError::Corrupt { .. }
+                ),
+                "cut {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn version_dispatch_matrix() {
+        // every container version routes to its importer and comes back
+        // as the right variant
+        let cp = sample_checkpoint();
+        let min = cp.to_minimal();
+        for (version, bytes) in [
+            (1u32, export_v1(&min)),
+            (2, export_v2(&cp)),
+            (3, export_v3(&cp)),
+            (4, cp.to_bytes()),
+        ] {
+            assert_eq!(
+                u32::from_le_bytes(bytes[4..8].try_into().unwrap()),
+                version,
+                "writer stamped the wrong container version"
+            );
+            let got = import_bytes(&bytes).unwrap();
+            match (version, got) {
+                (1, Interchange::Minimal(_)) => {}
+                (2..=4, Interchange::Complete(_)) => {}
+                (v, other) => panic!("version {v} imported as {other:?}"),
+            }
+        }
+    }
+}

@@ -10,35 +10,52 @@
 //! accounting, the communication counters, and any delayed-overlap
 //! collective still in flight (DESIGN.md §8).
 //!
-//! Format (little-endian): `b"ADLC"` magic, u32 version, u32 JSON header
-//! length, JSON header (structure + counters + stream states), then the
-//! raw f32 blobs in header order, and a trailing CRC32 of everything
-//! before it. Every 64-bit quantity that must restore bit-exactly —
-//! RNG words, wide counters (samples/bytes/draws), and all f64 state —
-//! is a hex string in the header: JSON numbers are f64, which would
-//! round counters above 2^53 and turn a non-finite f64 into an
-//! unloadable `null`. Small structural integers (ids, lengths,
-//! cursors) stay plain numbers for readability.
+//! The on-disk story is the **versioned interchange** (DESIGN.md §10):
+//! the current container is v4 — a sectioned, FNV-sealed layout with a
+//! format-metadata header and strict (`deny_unknown_fields`-style)
+//! parsing, in two variants: *complete* (exact resume — everything
+//! above) and *minimal* (parameters + RNG states, enough to warm-start
+//! a fresh schedule). See [`interchange`] for the byte layout and
+//! [`legacy`] for the v1/v2/v3 importers; every historical version
+//! still loads through [`import_bytes`]. Damage never resumes
+//! silently: truncation and bit flips surface as typed
+//! [`InterchangeError`]s (`tests/crash_fault.rs` proves this at every
+//! section boundary and under sampled byte corruption).
+//!
+//! Every 64-bit quantity that must restore bit-exactly — RNG words,
+//! wide counters (samples/bytes/draws), and all f64 state — is a hex
+//! string in the JSON headers: JSON numbers are f64, which would round
+//! counters above 2^53 and turn a non-finite f64 into an unloadable
+//! `null`. Small structural integers (ids, lengths, cursors) stay
+//! plain numbers for readability.
 //!
 //! Resume contract (enforced by `tests/checkpoint_resume.rs`): a run
-//! resumed from a checkpoint taken at outer step k produces, from step
-//! k+1 on, the **bit-identical** record streams, ledger continuation
-//! and final `RunResult` payload of the uninterrupted run — on both
-//! schedulers, at any thread count, and under the delayed-overlap mode.
+//! resumed from a complete checkpoint taken at outer step k produces,
+//! from step k+1 on, the **bit-identical** record streams, ledger
+//! continuation and final `RunResult` payload of the uninterrupted run
+//! — on both schedulers, at any thread count, and under the
+//! delayed-overlap mode.
 
 use crate::util::JsonValue;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 
-/// File magic of the checkpoint container format.
+pub mod interchange;
+pub mod legacy;
+pub mod retention;
+
+pub use interchange::{section_boundaries, InterchangeError, InterchangeFormat, InterchangeMeta};
+
+/// File magic of the checkpoint container format (all versions).
 pub const MAGIC: &[u8; 4] = b"ADLC";
-/// Container format version (2 = exact-resume: stream states, sampler
-/// positions, controller statistics, time accounting, in-flight syncs;
-/// 3 = the elastic lifecycle, DESIGN.md §9: the instance registry —
-/// including the structure of mid-run spawned instances — spawn
-/// bookkeeping, per-slot vacant capacity and the round census, so a
-/// resume across a spawn boundary continues bit-for-bit).
-pub const VERSION: u32 = 3;
+/// Container format version (1 = the minimal params+RNG warm-start
+/// layout; 2 = exact-resume: stream states, sampler positions,
+/// controller statistics, time accounting, in-flight syncs; 3 = the
+/// elastic lifecycle, DESIGN.md §9: the instance registry, spawn
+/// bookkeeping, vacancy and round-census accounting; 4 = the sectioned
+/// interchange, DESIGN.md §10: format-metadata header, per-section
+/// FNV seals, strict parsing, minimal/complete variants).
+pub const VERSION: u32 = 4;
 
 /// A captured RNG stream (`Rng::state`): the four xoshiro words plus
 /// the cached Box-Muller spare.
@@ -185,11 +202,16 @@ pub struct RegistryRowSnapshot {
     pub workers: Vec<(usize, usize)>,
 }
 
-/// A full coordinator snapshot.
+/// A full coordinator snapshot (the *complete* interchange variant —
+/// everything exact resume reads).
 #[derive(Clone, Debug, PartialEq, Default)]
 pub struct Checkpoint {
     /// Name of the config that produced the snapshot.
     pub config_name: String,
+    /// `Config::structural_digest` of the producing config (0 when
+    /// unknown — hand-built snapshots and pre-v4 imports). Resume
+    /// refuses a nonzero digest that does not match the running config.
+    pub config_digest: u64,
     /// Outer step the snapshot was taken after.
     pub outer_step: u64,
     /// Samples consumed so far.
@@ -241,8 +263,61 @@ pub struct Checkpoint {
     pub trainers: Vec<TrainerSnapshot>,
 }
 
+/// One trainer of the *minimal* interchange variant: the outer
+/// parameters plus the per-worker stochastic streams — enough to
+/// warm-start a fresh schedule from a trained model, not enough for
+/// exact resume.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct MinimalTrainer {
+    /// Trainer id (position in the coordinator's pool).
+    pub id: usize,
+    /// Outer parameter vector (workers warm-start from it too).
+    pub params: Vec<f32>,
+    /// Per-worker RNG states, in worker order.
+    pub workers: Vec<MinimalWorker>,
+}
+
+/// Per-worker RNG states of the minimal variant.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct MinimalWorker {
+    /// Engine gradient/loss noise stream.
+    pub noise_rng: RngSnapshot,
+    /// Compute-time perturbation stream.
+    pub time_rng: RngSnapshot,
+}
+
+/// The *minimal* interchange variant (params + RNG states): what the
+/// v1 container carried, and what `Checkpoint::to_minimal` strips a
+/// full snapshot down to. Loading one warm-starts a fresh run
+/// (`Coordinator::warm_start`) instead of exact-resuming it.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct MinimalCheckpoint {
+    /// Name of the config that produced the snapshot.
+    pub config_name: String,
+    /// `Config::structural_digest` of the producing config (0 when
+    /// unknown). Warm-start across configs is legal, so a mismatch
+    /// only logs — it does not refuse the load.
+    pub config_digest: u64,
+    /// Outer step the snapshot was taken after.
+    pub outer_step: u64,
+    /// The coordinator's own stream.
+    pub rng: RngSnapshot,
+    /// Per-trainer parameters and streams.
+    pub trainers: Vec<MinimalTrainer>,
+}
+
+/// A parsed interchange file: either variant, any container version.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Interchange {
+    /// Exact-resume payload (container v2/v3/v4-complete).
+    Complete(Checkpoint),
+    /// Warm-start payload (container v1 / v4-minimal).
+    Minimal(MinimalCheckpoint),
+}
+
 // ---------------------------------------------------------------------------
-// CRC32 (IEEE) — small table-driven implementation; no external crates.
+// CRC32 (IEEE) — the pre-v4 trailer integrity check; kept for the
+// legacy importers. v4 seals with FNV-1a instead (util::fnv1a).
 // ---------------------------------------------------------------------------
 
 fn crc32_table() -> [u32; 256] {
@@ -257,7 +332,7 @@ fn crc32_table() -> [u32; 256] {
     table
 }
 
-/// CRC32 (IEEE) of `data` — the checkpoint trailer integrity check.
+/// CRC32 (IEEE) of `data` — the v1/v2/v3 trailer integrity check.
 pub fn crc32(data: &[u8]) -> u32 {
     let table = crc32_table();
     let mut c = 0xFFFF_FFFFu32;
@@ -268,42 +343,42 @@ pub fn crc32(data: &[u8]) -> u32 {
 }
 
 // ---------------------------------------------------------------------------
-// encoding helpers
+// encoding helpers (shared by the v4 writer and the legacy exporters)
 // ---------------------------------------------------------------------------
 
-fn f32s_to_bytes(v: &[f32], out: &mut Vec<u8>) {
+pub(crate) fn f32s_to_bytes(v: &[f32], out: &mut Vec<u8>) {
     out.reserve(v.len() * 4);
     for x in v {
         out.extend_from_slice(&x.to_le_bytes());
     }
 }
 
-fn bytes_to_f32s(raw: &[u8]) -> Vec<f32> {
+pub(crate) fn bytes_to_f32s(raw: &[u8]) -> Vec<f32> {
     raw.chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect()
 }
 
-fn usizes_json(v: &[usize]) -> JsonValue {
+pub(crate) fn usizes_json(v: &[usize]) -> JsonValue {
     JsonValue::Array(v.iter().map(|&x| JsonValue::num(x as f64)).collect())
 }
 
 /// Bit-exact f64: raw bits as a hex string (survives non-finite values
 /// and never depends on decimal round-tripping).
-fn f64_json(x: f64) -> JsonValue {
+pub(crate) fn f64_json(x: f64) -> JsonValue {
     JsonValue::str(format!("{:016x}", x.to_bits()))
 }
 
 /// Exact u64: hex string (JSON numbers are f64 and round above 2^53).
-fn u64_json(x: u64) -> JsonValue {
+pub(crate) fn u64_json(x: u64) -> JsonValue {
     JsonValue::str(format!("{x:016x}"))
 }
 
-fn f64s_json(v: &[f64]) -> JsonValue {
+pub(crate) fn f64s_json(v: &[f64]) -> JsonValue {
     JsonValue::Array(v.iter().map(|&x| f64_json(x)).collect())
 }
 
-fn rng_json(r: &RngSnapshot) -> JsonValue {
+pub(crate) fn rng_json(r: &RngSnapshot) -> JsonValue {
     JsonValue::obj(vec![
         (
             "s",
@@ -322,20 +397,178 @@ fn rng_json(r: &RngSnapshot) -> JsonValue {
     ])
 }
 
-fn ema_json(e: (f64, u64)) -> JsonValue {
+pub(crate) fn ema_json(e: (f64, u64)) -> JsonValue {
+    JsonValue::obj(vec![("value", f64_json(e.0)), ("steps", u64_json(e.1))])
+}
+
+/// The state fields shared by the v3 header and the v4 HEAD section
+/// (v3 additionally leads with `config_name`; v4 moves identity into
+/// the META section).
+pub(crate) fn state_fields(cp: &Checkpoint) -> Vec<(&'static str, JsonValue)> {
+    vec![
+        ("outer_step", u64_json(cp.outer_step)),
+        ("total_samples", u64_json(cp.total_samples)),
+        ("comm_count", u64_json(cp.comm_count)),
+        ("comm_bytes", u64_json(cp.comm_bytes)),
+        ("comm_wan_bytes", u64_json(cp.comm_wan_bytes)),
+        ("overlap_hidden_s", f64_json(cp.overlap_hidden_s)),
+        ("clock_times", f64s_json(&cp.clock_times)),
+        ("busy_s", f64s_json(&cp.busy_s)),
+        ("wait_s", f64s_json(&cp.wait_s)),
+        ("comm_s", f64s_json(&cp.comm_s)),
+        ("comm_hidden_s", f64s_json(&cp.comm_hidden_s)),
+        ("preempted_s", f64s_json(&cp.preempted_s)),
+        ("vacant_s", f64s_json(&cp.vacant_s)),
+        ("spawn_count", u64_json(cp.spawn_count)),
+        ("last_spawn_outer", u64_json(cp.last_spawn_outer)),
+        (
+            "last_merge_rep",
+            match cp.last_merge_rep {
+                Some(r) => JsonValue::num(r as f64),
+                None => JsonValue::Null,
+            },
+        ),
+        ("live_rounds_sum", u64_json(cp.live_rounds_sum)),
+        ("rounds_count", u64_json(cp.rounds_count)),
+        (
+            "registry",
+            JsonValue::Array(cp.registry.iter().map(registry_row_json).collect()),
+        ),
+        ("rng", rng_json(&cp.rng)),
+        (
+            "trainers",
+            JsonValue::Array(cp.trainers.iter().map(trainer_json).collect()),
+        ),
+    ]
+}
+
+fn registry_row_json(r: &RegistryRowSnapshot) -> JsonValue {
     JsonValue::obj(vec![
-        ("value", f64_json(e.0)),
-        ("steps", u64_json(e.1)),
+        ("id", JsonValue::num(r.id as f64)),
+        ("state", JsonValue::str(r.state.clone())),
+        ("origin", JsonValue::str(r.origin.clone())),
+        ("born_outer", u64_json(r.born_outer)),
+        ("born_at_s", f64_json(r.born_at_s)),
+        (
+            "retired_outer",
+            match r.retired_outer {
+                Some(t) => u64_json(t),
+                None => JsonValue::Null,
+            },
+        ),
+        (
+            "workers",
+            JsonValue::Array(
+                r.workers
+                    .iter()
+                    .map(|&(n, s)| {
+                        JsonValue::Array(vec![
+                            JsonValue::num(n as f64),
+                            JsonValue::num(s as f64),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
+pub(crate) fn trainer_json(t: &TrainerSnapshot) -> JsonValue {
+    let pending = match &t.pending {
+        None => JsonValue::Null,
+        Some(p) => JsonValue::obj(vec![
+            ("posted_at", f64_json(p.posted_at)),
+            ("completes_at", f64_json(p.completes_at)),
+            ("time_s", f64_json(p.time_s)),
+            ("sent_samples", u64_json(p.sent_samples)),
+            ("delta_len", JsonValue::num(p.delta.len() as f64)),
+            (
+                "phases",
+                JsonValue::Array(
+                    p.phases
+                        .iter()
+                        .map(|ph| {
+                            JsonValue::obj(vec![
+                                ("wan", JsonValue::Bool(ph.wan)),
+                                ("bytes", u64_json(ph.bytes)),
+                                ("participants", JsonValue::num(ph.participants as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    };
+    JsonValue::obj(vec![
+        ("id", JsonValue::num(t.id as f64)),
+        ("param_len", JsonValue::num(t.params.len() as f64)),
+        ("velocity_len", JsonValue::num(t.outer_velocity.len() as f64)),
+        ("requested_batch", JsonValue::num(t.requested_batch as f64)),
+        ("inner_steps_done", u64_json(t.inner_steps_done)),
+        ("observations", u64_json(t.observations)),
+        ("sigma2_ema", ema_json(t.sigma2_ema)),
+        ("ip_var_ema", ema_json(t.ip_var_ema)),
+        ("s1_ema", ema_json(t.s1_ema)),
+        ("shard", usizes_json(&t.shard)),
+        ("pending", pending),
+        (
+            "workers",
+            JsonValue::Array(
+                t.workers
+                    .iter()
+                    .map(|w| {
+                        JsonValue::obj(vec![
+                            ("param_len", JsonValue::num(w.params.len() as f64)),
+                            ("step", u64_json(w.step)),
+                            ("active", JsonValue::Bool(w.active)),
+                            ("noise_rng", rng_json(&w.noise_rng)),
+                            ("time_rng", rng_json(&w.time_rng)),
+                            (
+                                "sampler",
+                                JsonValue::obj(vec![
+                                    ("shard", usizes_json(&w.sampler.shard)),
+                                    ("order", usizes_json(&w.sampler.order)),
+                                    ("cursor", JsonValue::num(w.sampler.cursor as f64)),
+                                    ("drawn", u64_json(w.sampler.drawn)),
+                                    ("rng", rng_json(&w.sampler.rng)),
+                                ]),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// The raw f32 payload, in header order: per trainer — params,
+/// outer_velocity, the pending delta if one is in flight, then per
+/// worker params/m/v. Identical across v2, v3 and the v4 BLOB section.
+pub(crate) fn blob_bytes(cp: &Checkpoint) -> Vec<u8> {
+    let mut out = Vec::new();
+    for t in &cp.trainers {
+        f32s_to_bytes(&t.params, &mut out);
+        f32s_to_bytes(&t.outer_velocity, &mut out);
+        if let Some(p) = &t.pending {
+            f32s_to_bytes(&p.delta, &mut out);
+        }
+        for w in &t.workers {
+            f32s_to_bytes(&w.params, &mut out);
+            f32s_to_bytes(&w.m, &mut out);
+            f32s_to_bytes(&w.v, &mut out);
+        }
+    }
+    out
+}
+
 // ---------------------------------------------------------------------------
-// decoding helpers
+// tolerant decoding helpers (the legacy importers; the v4 path uses the
+// strict reader in `interchange`)
 // ---------------------------------------------------------------------------
 
 /// A u64 field: exact hex string, or a plain number for the small
 /// structural integers (ids, lengths, cursors).
-fn get_u64(v: &JsonValue, k: &str) -> Result<u64> {
+pub(crate) fn get_u64(v: &JsonValue, k: &str) -> Result<u64> {
     let x = v.get(k).ok_or_else(|| anyhow!("checkpoint header missing {k}"))?;
     if let Some(s) = x.as_str() {
         return parse_hex_u64(s);
@@ -345,9 +578,9 @@ fn get_u64(v: &JsonValue, k: &str) -> Result<u64> {
         .ok_or_else(|| anyhow!("checkpoint header field {k} is not an integer"))
 }
 
-/// An f64 field: bit-exact hex string (the v2 form), or a plain number
+/// An f64 field: bit-exact hex string (the v2+ form), or a plain number
 /// (tolerated for hand-written headers).
-fn get_f64(v: &JsonValue, k: &str) -> Result<f64> {
+pub(crate) fn get_f64(v: &JsonValue, k: &str) -> Result<f64> {
     let x = v.get(k).ok_or_else(|| anyhow!("checkpoint header missing {k}"))?;
     if let Some(s) = x.as_str() {
         return Ok(f64::from_bits(parse_hex_u64(s)?));
@@ -355,22 +588,20 @@ fn get_f64(v: &JsonValue, k: &str) -> Result<f64> {
     x.as_f64().ok_or_else(|| anyhow!("checkpoint header field {k} is not a number"))
 }
 
-fn parse_hex_u64(s: &str) -> Result<u64> {
+pub(crate) fn parse_hex_u64(s: &str) -> Result<u64> {
     u64::from_str_radix(s, 16).with_context(|| format!("bad hex word {s:?}"))
 }
 
-fn parse_usizes(v: &JsonValue, k: &str) -> Result<Vec<usize>> {
+pub(crate) fn parse_usizes(v: &JsonValue, k: &str) -> Result<Vec<usize>> {
     v.get(k)
         .and_then(|x| x.as_array())
         .ok_or_else(|| anyhow!("checkpoint header missing {k}"))?
         .iter()
-        .map(|x| {
-            x.as_usize().ok_or_else(|| anyhow!("non-integer entry in {k}"))
-        })
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("non-integer entry in {k}")))
         .collect()
 }
 
-fn parse_f64s(v: &JsonValue, k: &str) -> Result<Vec<f64>> {
+pub(crate) fn parse_f64s(v: &JsonValue, k: &str) -> Result<Vec<f64>> {
     v.get(k)
         .and_then(|x| x.as_array())
         .ok_or_else(|| anyhow!("checkpoint header missing {k}"))?
@@ -384,7 +615,7 @@ fn parse_f64s(v: &JsonValue, k: &str) -> Result<Vec<f64>> {
         .collect()
 }
 
-fn parse_rng(v: &JsonValue, k: &str) -> Result<RngSnapshot> {
+pub(crate) fn parse_rng(v: &JsonValue, k: &str) -> Result<RngSnapshot> {
     let r = v.get(k).ok_or_else(|| anyhow!("checkpoint header missing {k}"))?;
     let words = r
         .get("s")
@@ -406,416 +637,136 @@ fn parse_rng(v: &JsonValue, k: &str) -> Result<RngSnapshot> {
     Ok(RngSnapshot { s, gauss_spare })
 }
 
-fn parse_ema(v: &JsonValue, k: &str) -> Result<(f64, u64)> {
+pub(crate) fn parse_ema(v: &JsonValue, k: &str) -> Result<(f64, u64)> {
     let e = v.get(k).ok_or_else(|| anyhow!("checkpoint header missing {k}"))?;
     Ok((get_f64(e, "value")?, get_u64(e, "steps")?))
 }
 
+// ---------------------------------------------------------------------------
+// the public container API
+// ---------------------------------------------------------------------------
+
+/// Parse any supported container version into its interchange variant:
+/// v4 dispatches on the META `interchange_format`; v2/v3 import as
+/// complete, v1 as minimal. Every failure is a typed
+/// [`InterchangeError`] — damaged bytes never parse partially.
+pub fn import_bytes(raw: &[u8]) -> std::result::Result<Interchange, InterchangeError> {
+    if raw.len() < 8 {
+        return Err(InterchangeError::Truncated {
+            section: "prologue".into(),
+            needed: 8,
+            have: raw.len(),
+        });
+    }
+    if &raw[0..4] != MAGIC {
+        return Err(InterchangeError::Corrupt {
+            section: "magic".into(),
+            detail: format!("bad checkpoint magic {:?}", &raw[0..4]),
+        });
+    }
+    let version = u32::from_le_bytes(raw[4..8].try_into().unwrap());
+    match version {
+        4 => interchange::decode_v4(raw),
+        3 => legacy::import_v3(raw).map(Interchange::Complete),
+        2 => legacy::import_v2(raw).map(Interchange::Complete),
+        1 => legacy::import_v1(raw).map(Interchange::Minimal),
+        v => Err(InterchangeError::VersionMismatch { found: v }),
+    }
+}
+
+/// Read and verify an interchange file of any supported version.
+pub fn load_interchange(path: &str) -> Result<Interchange> {
+    let mut raw = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("open {path}"))?
+        .read_to_end(&mut raw)?;
+    import_bytes(&raw).with_context(|| format!("loading checkpoint {path}"))
+}
+
+fn save_bytes(path: &str, bytes: &[u8]) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    // write-then-rename for crash safety
+    let tmp = format!("{path}.tmp");
+    let mut f = std::fs::File::create(&tmp).with_context(|| format!("create {tmp}"))?;
+    f.write_all(bytes)?;
+    f.sync_all().ok();
+    std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp} -> {path}"))?;
+    Ok(())
+}
+
 impl Checkpoint {
-    fn header_json(&self) -> JsonValue {
-        JsonValue::obj(vec![
-            ("config_name", JsonValue::str(self.config_name.clone())),
-            ("outer_step", u64_json(self.outer_step)),
-            ("total_samples", u64_json(self.total_samples)),
-            ("comm_count", u64_json(self.comm_count)),
-            ("comm_bytes", u64_json(self.comm_bytes)),
-            ("comm_wan_bytes", u64_json(self.comm_wan_bytes)),
-            ("overlap_hidden_s", f64_json(self.overlap_hidden_s)),
-            ("clock_times", f64s_json(&self.clock_times)),
-            ("busy_s", f64s_json(&self.busy_s)),
-            ("wait_s", f64s_json(&self.wait_s)),
-            ("comm_s", f64s_json(&self.comm_s)),
-            ("comm_hidden_s", f64s_json(&self.comm_hidden_s)),
-            ("preempted_s", f64s_json(&self.preempted_s)),
-            ("vacant_s", f64s_json(&self.vacant_s)),
-            ("spawn_count", u64_json(self.spawn_count)),
-            ("last_spawn_outer", u64_json(self.last_spawn_outer)),
-            (
-                "last_merge_rep",
-                match self.last_merge_rep {
-                    Some(r) => JsonValue::num(r as f64),
-                    None => JsonValue::Null,
-                },
-            ),
-            ("live_rounds_sum", u64_json(self.live_rounds_sum)),
-            ("rounds_count", u64_json(self.rounds_count)),
-            (
-                "registry",
-                JsonValue::Array(
-                    self.registry
-                        .iter()
-                        .map(|r| {
-                            JsonValue::obj(vec![
-                                ("id", JsonValue::num(r.id as f64)),
-                                ("state", JsonValue::str(r.state.clone())),
-                                ("origin", JsonValue::str(r.origin.clone())),
-                                ("born_outer", u64_json(r.born_outer)),
-                                ("born_at_s", f64_json(r.born_at_s)),
-                                (
-                                    "retired_outer",
-                                    match r.retired_outer {
-                                        Some(t) => u64_json(t),
-                                        None => JsonValue::Null,
-                                    },
-                                ),
-                                (
-                                    "workers",
-                                    JsonValue::Array(
-                                        r.workers
-                                            .iter()
-                                            .map(|&(n, s)| {
-                                                JsonValue::Array(vec![
-                                                    JsonValue::num(n as f64),
-                                                    JsonValue::num(s as f64),
-                                                ])
-                                            })
-                                            .collect(),
-                                    ),
-                                ),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-            ("rng", rng_json(&self.rng)),
-            (
-                "trainers",
-                JsonValue::Array(self.trainers.iter().map(Self::trainer_json).collect()),
-            ),
-        ])
-    }
-
-    fn trainer_json(t: &TrainerSnapshot) -> JsonValue {
-        let pending = match &t.pending {
-            None => JsonValue::Null,
-            Some(p) => JsonValue::obj(vec![
-                ("posted_at", f64_json(p.posted_at)),
-                ("completes_at", f64_json(p.completes_at)),
-                ("time_s", f64_json(p.time_s)),
-                ("sent_samples", u64_json(p.sent_samples)),
-                ("delta_len", JsonValue::num(p.delta.len() as f64)),
-                (
-                    "phases",
-                    JsonValue::Array(
-                        p.phases
-                            .iter()
-                            .map(|ph| {
-                                JsonValue::obj(vec![
-                                    ("wan", JsonValue::Bool(ph.wan)),
-                                    ("bytes", u64_json(ph.bytes)),
-                                    (
-                                        "participants",
-                                        JsonValue::num(ph.participants as f64),
-                                    ),
-                                ])
-                            })
-                            .collect(),
-                    ),
-                ),
-            ]),
-        };
-        JsonValue::obj(vec![
-            ("id", JsonValue::num(t.id as f64)),
-            ("param_len", JsonValue::num(t.params.len() as f64)),
-            ("velocity_len", JsonValue::num(t.outer_velocity.len() as f64)),
-            ("requested_batch", JsonValue::num(t.requested_batch as f64)),
-            ("inner_steps_done", u64_json(t.inner_steps_done)),
-            ("observations", u64_json(t.observations)),
-            ("sigma2_ema", ema_json(t.sigma2_ema)),
-            ("ip_var_ema", ema_json(t.ip_var_ema)),
-            ("s1_ema", ema_json(t.s1_ema)),
-            ("shard", usizes_json(&t.shard)),
-            ("pending", pending),
-            (
-                "workers",
-                JsonValue::Array(
-                    t.workers
-                        .iter()
-                        .map(|w| {
-                            JsonValue::obj(vec![
-                                ("param_len", JsonValue::num(w.params.len() as f64)),
-                                ("step", u64_json(w.step)),
-                                ("active", JsonValue::Bool(w.active)),
-                                ("noise_rng", rng_json(&w.noise_rng)),
-                                ("time_rng", rng_json(&w.time_rng)),
-                                (
-                                    "sampler",
-                                    JsonValue::obj(vec![
-                                        ("shard", usizes_json(&w.sampler.shard)),
-                                        ("order", usizes_json(&w.sampler.order)),
-                                        (
-                                            "cursor",
-                                            JsonValue::num(w.sampler.cursor as f64),
-                                        ),
-                                        ("drawn", u64_json(w.sampler.drawn)),
-                                        ("rng", rng_json(&w.sampler.rng)),
-                                    ]),
-                                ),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-        ])
-    }
-
-    /// Serialize to bytes (see module docs for the layout).
+    /// Serialize to the v4 *complete* container (see [`interchange`]).
     pub fn to_bytes(&self) -> Vec<u8> {
-        let header = self.header_json().to_string();
-        let mut out = Vec::new();
-        out.extend_from_slice(MAGIC);
-        out.extend_from_slice(&VERSION.to_le_bytes());
-        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
-        out.extend_from_slice(header.as_bytes());
-        for t in &self.trainers {
-            f32s_to_bytes(&t.params, &mut out);
-            f32s_to_bytes(&t.outer_velocity, &mut out);
-            if let Some(p) = &t.pending {
-                f32s_to_bytes(&p.delta, &mut out);
-            }
-            for w in &t.workers {
-                f32s_to_bytes(&w.params, &mut out);
-                f32s_to_bytes(&w.m, &mut out);
-                f32s_to_bytes(&w.v, &mut out);
-            }
-        }
-        let crc = crc32(&out);
-        out.extend_from_slice(&crc.to_le_bytes());
-        out
+        interchange::encode_complete(self)
     }
 
-    /// Parse and CRC-verify a serialized checkpoint.
+    /// Parse and verify a serialized checkpoint of any supported
+    /// version, requiring the exact-resume (complete) variant.
     pub fn from_bytes(raw: &[u8]) -> Result<Checkpoint> {
-        if raw.len() < 16 {
-            bail!("checkpoint too short");
+        match import_bytes(raw) {
+            Ok(Interchange::Complete(cp)) => Ok(cp),
+            Ok(Interchange::Minimal(_)) => bail!(
+                "checkpoint is a minimal (warm-start) interchange; exact resume \
+                 requires a complete checkpoint"
+            ),
+            Err(e) => Err(anyhow::Error::new(e)),
         }
-        let (body, crc_bytes) = raw.split_at(raw.len() - 4);
-        let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
-        let got = crc32(body);
-        if want != got {
-            bail!("checkpoint CRC mismatch: file {want:#x} vs computed {got:#x}");
-        }
-        if &body[0..4] != MAGIC {
-            bail!("bad checkpoint magic");
-        }
-        let version = u32::from_le_bytes(body[4..8].try_into().unwrap());
-        if version != VERSION {
-            bail!(
-                "unsupported checkpoint version {version} (this build reads v{VERSION}; \
-                 re-create the checkpoint with the current binary)"
-            );
-        }
-        let hlen = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
-        if body.len() < 12 + hlen {
-            bail!("truncated checkpoint header");
-        }
-        let header_text = std::str::from_utf8(&body[12..12 + hlen])
-            .context("checkpoint header not utf-8")?;
-        let h = JsonValue::parse(header_text).map_err(|e| anyhow!("header: {e}"))?;
+    }
 
-        let mut cp = Checkpoint {
-            config_name: h
-                .get("config_name")
-                .and_then(|x| x.as_str())
-                .unwrap_or_default()
-                .to_string(),
-            outer_step: get_u64(&h, "outer_step")?,
-            total_samples: get_u64(&h, "total_samples")?,
-            comm_count: get_u64(&h, "comm_count")?,
-            comm_bytes: get_u64(&h, "comm_bytes")?,
-            comm_wan_bytes: get_u64(&h, "comm_wan_bytes")?,
-            overlap_hidden_s: get_f64(&h, "overlap_hidden_s")?,
-            clock_times: parse_f64s(&h, "clock_times")?,
-            busy_s: parse_f64s(&h, "busy_s")?,
-            wait_s: parse_f64s(&h, "wait_s")?,
-            comm_s: parse_f64s(&h, "comm_s")?,
-            comm_hidden_s: parse_f64s(&h, "comm_hidden_s")?,
-            preempted_s: parse_f64s(&h, "preempted_s")?,
-            vacant_s: parse_f64s(&h, "vacant_s")?,
-            spawn_count: get_u64(&h, "spawn_count")?,
-            last_spawn_outer: get_u64(&h, "last_spawn_outer")?,
-            last_merge_rep: match h.get("last_merge_rep") {
-                Some(JsonValue::Null) | None => None,
-                Some(x) => Some(
-                    x.as_usize()
-                        .ok_or_else(|| anyhow!("last_merge_rep is not an integer"))?,
-                ),
-            },
-            live_rounds_sum: get_u64(&h, "live_rounds_sum")?,
-            rounds_count: get_u64(&h, "rounds_count")?,
-            registry: h
-                .get("registry")
-                .and_then(|x| x.as_array())
-                .ok_or_else(|| anyhow!("header missing registry"))?
+    /// Strip down to the minimal (warm-start) variant: outer params +
+    /// RNG states. Everything else — optimizer moments, samplers,
+    /// controller statistics, time accounting — is dropped.
+    pub fn to_minimal(&self) -> MinimalCheckpoint {
+        MinimalCheckpoint {
+            config_name: self.config_name.clone(),
+            config_digest: self.config_digest,
+            outer_step: self.outer_step,
+            rng: self.rng.clone(),
+            trainers: self
+                .trainers
                 .iter()
-                .map(|rj| {
-                    let workers = rj
-                        .get("workers")
-                        .and_then(|x| x.as_array())
-                        .ok_or_else(|| anyhow!("registry row missing workers"))?
+                .map(|t| MinimalTrainer {
+                    id: t.id,
+                    params: t.params.clone(),
+                    workers: t
+                        .workers
                         .iter()
-                        .map(|wj| {
-                            let pair = wj
-                                .as_array()
-                                .filter(|a| a.len() == 2)
-                                .ok_or_else(|| anyhow!("registry worker is not a pair"))?;
-                            let n = pair[0]
-                                .as_usize()
-                                .ok_or_else(|| anyhow!("registry worker node"))?;
-                            let s = pair[1]
-                                .as_usize()
-                                .ok_or_else(|| anyhow!("registry worker slot"))?;
-                            Ok((n, s))
+                        .map(|w| MinimalWorker {
+                            noise_rng: w.noise_rng.clone(),
+                            time_rng: w.time_rng.clone(),
                         })
-                        .collect::<Result<Vec<_>>>()?;
-                    Ok(RegistryRowSnapshot {
-                        id: get_u64(rj, "id")? as usize,
-                        state: rj
-                            .get("state")
-                            .and_then(|x| x.as_str())
-                            .ok_or_else(|| anyhow!("registry row missing state"))?
-                            .to_string(),
-                        origin: rj
-                            .get("origin")
-                            .and_then(|x| x.as_str())
-                            .ok_or_else(|| anyhow!("registry row missing origin"))?
-                            .to_string(),
-                        born_outer: get_u64(rj, "born_outer")?,
-                        born_at_s: get_f64(rj, "born_at_s")?,
-                        retired_outer: match rj.get("retired_outer") {
-                            Some(JsonValue::Null) | None => None,
-                            Some(_) => Some(get_u64(rj, "retired_outer")?),
-                        },
-                        workers,
-                    })
+                        .collect(),
                 })
-                .collect::<Result<Vec<_>>>()?,
-            rng: parse_rng(&h, "rng")?,
-            trainers: Vec::new(),
-        };
-
-        let mut cursor = 12 + hlen;
-        let mut take_f32s = |n: usize, cursor: &mut usize| -> Result<Vec<f32>> {
-            let bytes = n * 4;
-            if body.len() < *cursor + bytes {
-                bail!("truncated checkpoint blob");
-            }
-            let v = bytes_to_f32s(&body[*cursor..*cursor + bytes]);
-            *cursor += bytes;
-            Ok(v)
-        };
-
-        for tj in h
-            .get("trainers")
-            .and_then(|x| x.as_array())
-            .ok_or_else(|| anyhow!("header missing trainers"))?
-        {
-            let plen = get_u64(tj, "param_len")? as usize;
-            let vlen = get_u64(tj, "velocity_len")? as usize;
-            let params = take_f32s(plen, &mut cursor)?;
-            let outer_velocity = take_f32s(vlen, &mut cursor)?;
-            let pending = match tj.get("pending") {
-                Some(JsonValue::Null) | None => None,
-                Some(pj) => {
-                    let dlen = get_u64(pj, "delta_len")? as usize;
-                    let phases = pj
-                        .get("phases")
-                        .and_then(|x| x.as_array())
-                        .ok_or_else(|| anyhow!("pending missing phases"))?
-                        .iter()
-                        .map(|ph| {
-                            Ok(PhaseSnapshot {
-                                wan: ph
-                                    .get("wan")
-                                    .and_then(|x| x.as_bool())
-                                    .ok_or_else(|| anyhow!("phase missing wan"))?,
-                                bytes: get_u64(ph, "bytes")?,
-                                participants: get_u64(ph, "participants")? as usize,
-                            })
-                        })
-                        .collect::<Result<Vec<_>>>()?;
-                    Some(PendingSnapshot {
-                        posted_at: get_f64(pj, "posted_at")?,
-                        completes_at: get_f64(pj, "completes_at")?,
-                        time_s: get_f64(pj, "time_s")?,
-                        sent_samples: get_u64(pj, "sent_samples")?,
-                        phases,
-                        delta: take_f32s(dlen, &mut cursor)?,
-                    })
-                }
-            };
-            let mut workers = Vec::new();
-            for wj in tj
-                .get("workers")
-                .and_then(|x| x.as_array())
-                .ok_or_else(|| anyhow!("trainer missing workers"))?
-            {
-                let wlen = get_u64(wj, "param_len")? as usize;
-                let sj = wj
-                    .get("sampler")
-                    .ok_or_else(|| anyhow!("worker missing sampler"))?;
-                workers.push(WorkerSnapshot {
-                    params: take_f32s(wlen, &mut cursor)?,
-                    m: take_f32s(wlen, &mut cursor)?,
-                    v: take_f32s(wlen, &mut cursor)?,
-                    step: get_u64(wj, "step")?,
-                    active: wj
-                        .get("active")
-                        .and_then(|x| x.as_bool())
-                        .ok_or_else(|| anyhow!("worker missing active"))?,
-                    noise_rng: parse_rng(wj, "noise_rng")?,
-                    time_rng: parse_rng(wj, "time_rng")?,
-                    sampler: SamplerSnapshot {
-                        shard: parse_usizes(sj, "shard")?,
-                        order: parse_usizes(sj, "order")?,
-                        cursor: get_u64(sj, "cursor")? as usize,
-                        drawn: get_u64(sj, "drawn")?,
-                        rng: parse_rng(sj, "rng")?,
-                    },
-                });
-            }
-            cp.trainers.push(TrainerSnapshot {
-                id: get_u64(tj, "id")? as usize,
-                params,
-                outer_velocity,
-                requested_batch: get_u64(tj, "requested_batch")? as usize,
-                inner_steps_done: get_u64(tj, "inner_steps_done")?,
-                observations: get_u64(tj, "observations")?,
-                sigma2_ema: parse_ema(tj, "sigma2_ema")?,
-                ip_var_ema: parse_ema(tj, "ip_var_ema")?,
-                s1_ema: parse_ema(tj, "s1_ema")?,
-                shard: parse_usizes(tj, "shard")?,
-                pending,
-                workers,
-            });
+                .collect(),
         }
-        if cursor != body.len() {
-            bail!("checkpoint has {} trailing bytes", body.len() - cursor);
-        }
-        Ok(cp)
     }
 
     /// Write the checkpoint to `path` (write-then-rename, crash-safe).
     pub fn save(&self, path: &str) -> Result<()> {
-        if let Some(dir) = std::path::Path::new(path).parent() {
-            std::fs::create_dir_all(dir).ok();
-        }
-        // write-then-rename for crash safety
-        let tmp = format!("{path}.tmp");
-        let mut f = std::fs::File::create(&tmp).with_context(|| format!("create {tmp}"))?;
-        f.write_all(&self.to_bytes())?;
-        f.sync_all().ok();
-        std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp} -> {path}"))?;
-        Ok(())
+        save_bytes(path, &self.to_bytes())
     }
 
-    /// Read and verify a checkpoint from `path`.
+    /// Read and verify a complete checkpoint from `path`.
     pub fn load(path: &str) -> Result<Checkpoint> {
         let mut raw = Vec::new();
         std::fs::File::open(path)
             .with_context(|| format!("open {path}"))?
             .read_to_end(&mut raw)?;
-        Self::from_bytes(&raw)
+        Self::from_bytes(&raw).with_context(|| format!("loading checkpoint {path}"))
+    }
+}
+
+impl MinimalCheckpoint {
+    /// Serialize to the v4 *minimal* container.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        interchange::encode_minimal(self)
+    }
+
+    /// Write the minimal checkpoint to `path` (write-then-rename).
+    pub fn save(&self, path: &str) -> Result<()> {
+        save_bytes(path, &self.to_bytes())
     }
 }
 
@@ -832,7 +783,7 @@ mod tests {
         RngSnapshot::of(&r)
     }
 
-    fn sample_checkpoint() -> Checkpoint {
+    pub(super) fn sample_checkpoint() -> Checkpoint {
         let mut rng = Rng::new(3);
         let mk = |n: usize, rng: &mut Rng| -> Vec<f32> {
             (0..n).map(|_| rng.normal() as f32).collect()
@@ -856,6 +807,7 @@ mod tests {
         };
         Checkpoint {
             config_name: "unit".into(),
+            config_digest: 0x1234_5678_9abc_def0,
             outer_step: 7,
             total_samples: 12345,
             comm_count: 42,
@@ -1043,20 +995,51 @@ mod tests {
     }
 
     #[test]
-    fn corruption_detected() {
+    fn config_digest_roundtrips() {
+        let cp = sample_checkpoint();
+        let back = Checkpoint::from_bytes(&cp.to_bytes()).unwrap();
+        assert_eq!(back.config_digest, 0x1234_5678_9abc_def0);
+    }
+
+    #[test]
+    fn corruption_detected_with_typed_error() {
         let cp = sample_checkpoint();
         let mut bytes = cp.to_bytes();
         let mid = bytes.len() / 2;
         bytes[mid] ^= 0xFF;
-        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
-        assert!(err.to_string().contains("CRC"), "{err}");
+        let err = import_bytes(&bytes).unwrap_err();
+        assert!(
+            matches!(err, InterchangeError::Corrupt { .. }),
+            "expected Corrupt, got {err}"
+        );
+        // the anyhow seam preserves the typed error for downcasting
+        let any = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(any.downcast_ref::<InterchangeError>().is_some(), "{any}");
     }
 
     #[test]
-    fn truncation_detected() {
+    fn truncation_detected_with_typed_error() {
         let cp = sample_checkpoint();
         let bytes = cp.to_bytes();
-        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 9]).is_err());
+        let err = import_bytes(&bytes[..bytes.len() - 9]).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                InterchangeError::Truncated { .. } | InterchangeError::Corrupt { .. }
+            ),
+            "expected a typed damage error, got {err}"
+        );
+    }
+
+    #[test]
+    fn trailing_garbage_rejected_with_typed_error() {
+        // regression (satellite of the v4 interchange PR): bytes after
+        // the last section must never be silently accepted
+        let cp = sample_checkpoint();
+        let mut bytes = cp.to_bytes();
+        bytes.extend_from_slice(b"junk");
+        let err = import_bytes(&bytes).unwrap_err();
+        assert_eq!(err, InterchangeError::TrailingGarbage { bytes: 4 }, "{err}");
     }
 
     #[test]
@@ -1064,24 +1047,49 @@ mod tests {
         let cp = sample_checkpoint();
         let mut bytes = cp.to_bytes();
         bytes[0] = b'X';
-        // CRC covers the magic, so recompute it to isolate the magic check
-        let n = bytes.len();
-        let crc = crc32(&bytes[..n - 4]);
-        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
-        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        let err = import_bytes(&bytes).unwrap_err();
         assert!(err.to_string().contains("magic"), "{err}");
     }
 
     #[test]
-    fn old_version_rejected_with_guidance() {
+    fn future_version_rejected_with_version_mismatch() {
         let cp = sample_checkpoint();
         let mut bytes = cp.to_bytes();
-        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
-        let n = bytes.len();
-        let crc = crc32(&bytes[..n - 4]);
-        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        bytes[4..8].copy_from_slice(&9u32.to_le_bytes());
+        let err = import_bytes(&bytes).unwrap_err();
+        assert_eq!(err, InterchangeError::VersionMismatch { found: 9 }, "{err}");
+        assert!(err.to_string().contains("version 9"), "{err}");
+    }
+
+    #[test]
+    fn minimal_variant_roundtrips_and_is_refused_for_exact_resume() {
+        let cp = sample_checkpoint();
+        let min = cp.to_minimal();
+        assert_eq!(min.trainers.len(), cp.trainers.len());
+        assert_eq!(min.trainers[0].params, cp.trainers[0].params);
+        assert_eq!(min.trainers[0].workers.len(), 2);
+        assert_eq!(min.trainers[0].workers[1].time_rng, cp.trainers[0].workers[1].time_rng);
+        let bytes = min.to_bytes();
+        match import_bytes(&bytes).unwrap() {
+            Interchange::Minimal(back) => assert_eq!(back, min),
+            other => panic!("expected minimal variant, got {other:?}"),
+        }
+        // the exact-resume loader must refuse a warm-start file
         let err = Checkpoint::from_bytes(&bytes).unwrap_err();
-        assert!(err.to_string().contains("version 1"), "{err}");
+        assert!(err.to_string().contains("minimal"), "{err}");
+    }
+
+    #[test]
+    fn minimal_file_roundtrip() {
+        let min = sample_checkpoint().to_minimal();
+        let dir = std::env::temp_dir().join("adloco_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.ckpt");
+        min.save(path.to_str().unwrap()).unwrap();
+        match load_interchange(path.to_str().unwrap()).unwrap() {
+            Interchange::Minimal(back) => assert_eq!(back, min),
+            other => panic!("expected minimal variant, got {other:?}"),
+        }
     }
 
     #[test]

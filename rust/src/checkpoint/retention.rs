@@ -1,0 +1,151 @@
+//! Checkpoint retention (`run.keep_checkpoints`, DESIGN.md §10).
+//!
+//! Long elastic runs checkpoint every few rounds; with a single target
+//! path each write overwrites the last good file, and with per-step
+//! paths the directory grows without bound. Retention gives the middle
+//! ground: when `run.keep_checkpoints = N > 0`, the coordinator writes
+//! each snapshot to `<path>.<step:06>` and then prunes, keeping
+//!
+//! * the **last N** checkpoints by step, plus
+//! * every **pinned** step — the merge-boundary checkpoints, since a
+//!   merge is the one event after which the pool's composition changed
+//!   and an earlier file can no longer be reproduced by re-running a
+//!   kept one (DESIGN.md §9).
+//!
+//! `keep_checkpoints = 0` (the default) keeps today's behaviour: one
+//! file at `run.checkpoint_path`, overwritten in place. The planner
+//! ([`plan_retention`]) is pure — the fs sweep ([`enforce`]) only
+//! deletes files the planner names, and never the one just written.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeSet;
+
+/// The per-step file a retention-managed run writes for `step`.
+/// Zero-padded so lexicographic directory order is step order.
+pub fn step_file(base: &str, step: u64) -> String {
+    format!("{base}.{step:06}")
+}
+
+/// Parse the step back out of a [`step_file`] name for `base`.
+/// `None` for the bare base path or unrelated files.
+pub fn parse_step_file(base: &str, name: &str) -> Option<u64> {
+    let suffix = name.strip_prefix(base)?.strip_prefix('.')?;
+    if suffix.is_empty() || !suffix.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    suffix.parse().ok()
+}
+
+/// Decide which steps to delete: everything except the last `keep`
+/// steps and the pinned ones. `keep == 0` disables retention (nothing
+/// is ever deleted).
+pub fn plan_retention(steps: &[(u64, bool)], keep: usize) -> Vec<u64> {
+    if keep == 0 {
+        return Vec::new();
+    }
+    let mut sorted: Vec<u64> = steps.iter().map(|&(s, _)| s).collect();
+    sorted.sort_unstable();
+    sorted.dedup();
+    let cutoff = sorted.len().saturating_sub(keep);
+    let recent: BTreeSet<u64> = sorted[cutoff..].iter().copied().collect();
+    let pinned: BTreeSet<u64> =
+        steps.iter().filter(|&&(_, pin)| pin).map(|&(s, _)| s).collect();
+    sorted
+        .into_iter()
+        .filter(|s| !recent.contains(s) && !pinned.contains(s))
+        .collect()
+}
+
+/// List the steps that currently have a [`step_file`] on disk for
+/// `base`, ascending.
+pub fn list_steps(base: &str) -> Vec<u64> {
+    let path = std::path::Path::new(base);
+    let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+    let file = match path.file_name().and_then(|f| f.to_str()) {
+        Some(f) => f,
+        None => return Vec::new(),
+    };
+    let entries = match std::fs::read_dir(dir.unwrap_or_else(|| std::path::Path::new("."))) {
+        Ok(e) => e,
+        Err(_) => return Vec::new(),
+    };
+    let mut steps: Vec<u64> = entries
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().to_str().and_then(|n| parse_step_file(file, n)))
+        .collect();
+    steps.sort_unstable();
+    steps.dedup();
+    steps
+}
+
+/// Prune `base`'s step files down to the last `keep` plus `pinned`
+/// steps. Returns the steps actually deleted. No-op when `keep == 0`.
+pub fn enforce(base: &str, keep: usize, pinned: &BTreeSet<u64>) -> Result<Vec<u64>> {
+    if keep == 0 {
+        return Ok(Vec::new());
+    }
+    let on_disk: Vec<(u64, bool)> =
+        list_steps(base).into_iter().map(|s| (s, pinned.contains(&s))).collect();
+    let mut deleted = Vec::new();
+    for step in plan_retention(&on_disk, keep) {
+        let path = step_file(base, step);
+        std::fs::remove_file(&path).with_context(|| format!("pruning checkpoint {path}"))?;
+        deleted.push(step);
+    }
+    Ok(deleted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_file_names_sort_in_step_order() {
+        assert_eq!(step_file("out/run.ckpt", 7), "out/run.ckpt.000007");
+        assert!(step_file("c", 99) < step_file("c", 100));
+        assert_eq!(parse_step_file("run.ckpt", "run.ckpt.000042"), Some(42));
+        assert_eq!(parse_step_file("run.ckpt", "run.ckpt"), None);
+        assert_eq!(parse_step_file("run.ckpt", "run.ckpt.tmp"), None);
+        assert_eq!(parse_step_file("run.ckpt", "other.ckpt.000001"), None);
+    }
+
+    #[test]
+    fn planner_keeps_last_n_and_pins() {
+        let steps: Vec<(u64, bool)> =
+            vec![(2, false), (4, true), (6, false), (8, true), (10, false), (12, false)];
+        // keep the last 2 (10, 12) plus the pinned merge boundaries (4, 8)
+        assert_eq!(plan_retention(&steps, 2), vec![2, 6]);
+        // a large enough keep deletes nothing
+        assert_eq!(plan_retention(&steps, 6), Vec::<u64>::new());
+        assert_eq!(plan_retention(&steps, 100), Vec::<u64>::new());
+        // keep == 0 disables retention entirely
+        assert_eq!(plan_retention(&steps, 0), Vec::<u64>::new());
+        // pins alone never count against the keep window
+        assert_eq!(plan_retention(&steps, 1), vec![2, 6, 10]);
+    }
+
+    #[test]
+    fn enforce_prunes_only_step_files() {
+        let dir = std::env::temp_dir().join("adloco_retention_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("run.ckpt");
+        let base = base.to_str().unwrap();
+        for step in [2u64, 4, 6, 8, 10] {
+            std::fs::write(step_file(base, step), b"x").unwrap();
+        }
+        // an unrelated file and the bare base must survive any sweep
+        std::fs::write(base, b"bare").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"n").unwrap();
+
+        let pinned: BTreeSet<u64> = [4u64].into_iter().collect();
+        let deleted = enforce(base, 2, &pinned).unwrap();
+        assert_eq!(deleted, vec![2, 6]);
+        assert_eq!(list_steps(base), vec![4, 8, 10]);
+        assert!(std::path::Path::new(base).exists());
+        assert!(dir.join("notes.txt").exists());
+
+        // idempotent: a second sweep has nothing left to do
+        assert_eq!(enforce(base, 2, &pinned).unwrap(), Vec::<u64>::new());
+    }
+}

@@ -24,7 +24,8 @@ pub struct Args {
 const VALUE_OPTS: &[&str] = &[
     "config", "preset", "set", "out", "profile", "artifacts", "methods",
     "steps", "seed", "log-level", "target-ppl", "format", "param", "values",
-    "threads", "jobs", "topology", "overlap", "elastic",
+    "threads", "jobs", "topology", "overlap", "elastic", "checkpoint",
+    "resume", "keep-checkpoints",
 ];
 
 /// Parse an argv-style token stream (exclusive of the binary name).

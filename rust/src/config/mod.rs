@@ -617,6 +617,11 @@ pub struct RunConfig {
     pub checkpoint_every: usize,
     /// Resume trainer state from this checkpoint before the first step.
     pub resume_from: Option<String>,
+    /// Checkpoint retention (DESIGN.md §10): 0 (default) overwrites the
+    /// single `checkpoint_path` file in place; N > 0 writes per-step
+    /// files `<checkpoint_path>.<step:06>` and prunes to the last N
+    /// plus the pinned merge-boundary checkpoints.
+    pub keep_checkpoints: usize,
     /// Run-loop flavour; `Event` is required for dynamic scenarios.
     pub scheduler: SchedulerKind,
     /// OS threads for the in-run parallel execution runtime (DESIGN.md
@@ -841,6 +846,21 @@ impl Config {
             .ok_or_else(|| anyhow!("override must be path=value, got {spec:?}"))?;
         set_path(self, path.trim(), value.trim())
             .with_context(|| format!("applying override {spec:?}"))
+    }
+
+    /// Digest of the *structural* config — the fields a checkpoint's
+    /// state depends on (seed, engine, algo, data, cluster, comm). The
+    /// run schedule, name and output routing are excluded, so resuming
+    /// with a different checkpoint cadence, thread count or out_dir
+    /// keeps the digest equal. Stamped into every v4 checkpoint's META
+    /// (`config_digest`, DESIGN.md §10); exact resume refuses a
+    /// mismatch, warm-start only logs one.
+    pub fn structural_digest(&self) -> u64 {
+        let repr = format!(
+            "{}|{:?}|{:?}|{:?}|{:?}|{:?}",
+            self.seed, self.engine, self.algo, self.data, self.cluster, self.comm
+        );
+        crate::util::fnv1a(repr.as_bytes())
     }
 }
 
@@ -1215,6 +1235,9 @@ fn apply_run(r: &mut RunConfig, v: &JsonValue) -> Result<()> {
     }
     if let Some(x) = v.get("resume_from").and_then(|x| x.as_str()) {
         r.resume_from = Some(x.to_string());
+    }
+    if let Some(x) = v.get("keep_checkpoints").and_then(|x| x.as_usize()) {
+        r.keep_checkpoints = x;
     }
     if let Some(x) = v.get("scheduler").and_then(|x| x.as_str()) {
         r.scheduler = SchedulerKind::parse(x)?;

@@ -126,6 +126,7 @@ pub fn paper_table1() -> Config {
             checkpoint_path: None,
             checkpoint_every: 0,
             resume_from: None,
+            keep_checkpoints: 0, // overwrite-in-place; N>0 keeps last N + merge pins
             scheduler: SchedulerKind::Lockstep,
             threads: 0, // auto: RUN_THREADS env var, else serial
         },

@@ -601,13 +601,27 @@ impl Coordinator {
         let wall0 = std::time::Instant::now();
         let mut start = 1u64;
         if let Some(path) = self.cfg.run.resume_from.clone() {
-            let cp = crate::checkpoint::Checkpoint::load(&path)?;
-            start = cp.outer_step + 1;
-            self.restore(&cp)?;
-            crate::info!("resumed from {path} at outer step {}", cp.outer_step);
+            match crate::checkpoint::load_interchange(&path)? {
+                crate::checkpoint::Interchange::Complete(cp) => {
+                    start = cp.outer_step + 1;
+                    self.restore(&cp)?;
+                    crate::info!("resumed from {path} at outer step {}", cp.outer_step);
+                }
+                crate::checkpoint::Interchange::Minimal(m) => {
+                    // warm-start: parameters + streams only; the
+                    // schedule restarts from step 1
+                    self.warm_start(&m)?;
+                    crate::info!(
+                        "warm-started from minimal checkpoint {path} \
+                         (taken at outer step {}; schedule restarts)",
+                        m.outer_step
+                    );
+                }
+            }
         }
         let outer_steps = self.cfg.algo.outer_steps as u64;
         let every = self.cfg.run.checkpoint_every as u64;
+        let keep = self.cfg.run.keep_checkpoints;
         let mut last_t = start.min(outer_steps);
         for t in start..=outer_steps {
             last_t = t;
@@ -617,8 +631,25 @@ impl Coordinator {
             };
             if let Some(path) = self.cfg.run.checkpoint_path.clone() {
                 if (every > 0 && t % every == 0) || t == outer_steps || hit {
-                    self.snapshot(t).save(&path)?;
-                    crate::debug!("checkpoint written to {path} at outer {t}");
+                    if keep == 0 {
+                        // retention off: one file, overwritten in place
+                        self.snapshot(t).save(&path)?;
+                        crate::debug!("checkpoint written to {path} at outer {t}");
+                    } else {
+                        // retention on (DESIGN.md §10): per-step files,
+                        // pruned to the last N plus the merge-boundary
+                        // checkpoints this run has seen
+                        use crate::checkpoint::retention;
+                        let file = retention::step_file(&path, t);
+                        self.snapshot(t).save(&file)?;
+                        let pinned: std::collections::BTreeSet<u64> =
+                            self.recorder.merges.iter().map(|m| m.outer_step).collect();
+                        let deleted = retention::enforce(&path, keep, &pinned)?;
+                        crate::debug!(
+                            "checkpoint written to {file} at outer {t} (pruned {} older)",
+                            deleted.len()
+                        );
+                    }
                 }
             }
             if hit {
@@ -657,6 +688,7 @@ impl Coordinator {
         };
         Checkpoint {
             config_name: self.cfg.name.clone(),
+            config_digest: self.cfg.structural_digest(),
             outer_step,
             total_samples: self.total_samples,
             comm_count: self.comm.ledger.count() as u64,
@@ -767,6 +799,20 @@ impl Coordinator {
         use anyhow::{anyhow, ensure};
         let p = self.engine.param_count();
 
+        // a nonzero digest identifies the structural config that wrote
+        // the snapshot; exact resume under a different one would diverge
+        // silently, so refuse it (0 = pre-v4 import, digest unknown)
+        if cp.config_digest != 0 {
+            ensure!(
+                cp.config_digest == self.cfg.structural_digest(),
+                "checkpoint was written by a different config (digest {:016x} != {:016x}); \
+                 exact resume requires the same structural config — use a minimal \
+                 (warm-start) checkpoint to transfer parameters across configs",
+                cp.config_digest,
+                self.cfg.structural_digest()
+            );
+        }
+
         // ---- elastic pool structure (DESIGN.md §9): rebuild instances
         //      that did not exist at config time — live ones as shells
         //      the state restore below fills, retired ones as frozen
@@ -829,7 +875,7 @@ impl Coordinator {
                 retired_outer: row.retired_outer,
                 origin: crate::instances::Origin::parse(&row.origin)
                     .ok_or_else(|| anyhow!("bad registry origin {:?}", row.origin))?,
-            });
+            })?;
         }
         self.registry.spawn_count = cp.spawn_count;
         self.registry.last_spawn_outer = cp.last_spawn_outer;
@@ -952,6 +998,53 @@ impl Coordinator {
             cp.comm_wan_bytes,
         );
         self.total_samples = cp.total_samples;
+        Ok(())
+    }
+
+    /// Warm-start from a minimal (params + RNG) interchange: copy each
+    /// snapshot trainer's outer parameters into the trainer and all of
+    /// its workers, restore the worker noise/time streams and the
+    /// coordinator stream, and leave everything else — optimizer
+    /// moments, samplers, controller statistics, accounting, the
+    /// schedule itself — at its fresh-run state. Unlike exact resume, a
+    /// config-digest mismatch only warns: transferring trained
+    /// parameters into a different setup is the point of the minimal
+    /// variant (DESIGN.md §10).
+    pub fn warm_start(&mut self, m: &crate::checkpoint::MinimalCheckpoint) -> Result<()> {
+        use anyhow::ensure;
+        let p = self.engine.param_count();
+        if m.config_digest != 0 && m.config_digest != self.cfg.structural_digest() {
+            crate::warn!(
+                "minimal checkpoint comes from a different config \
+                 (digest {:016x} != {:016x}); warm-starting anyway",
+                m.config_digest,
+                self.cfg.structural_digest()
+            );
+        }
+        for snap in &m.trainers {
+            ensure!(
+                snap.id < self.trainers.len(),
+                "minimal checkpoint trainer id {} out of range (config has {})",
+                snap.id,
+                self.trainers.len()
+            );
+            ensure!(
+                snap.params.len() == p,
+                "minimal checkpoint param count {} != engine {}",
+                snap.params.len(),
+                p
+            );
+            let t = &mut self.trainers[snap.id];
+            t.params.copy_from_slice(&snap.params);
+            for w in t.workers.iter_mut() {
+                w.state.params.copy_from_slice(&snap.params);
+            }
+            for (w, ws) in t.workers.iter_mut().zip(snap.workers.iter()) {
+                w.noise_rng = ws.noise_rng.to_rng();
+                w.time_rng = ws.time_rng.to_rng();
+            }
+        }
+        self.rng = m.rng.to_rng();
         Ok(())
     }
 

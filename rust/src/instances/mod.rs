@@ -259,14 +259,22 @@ impl InstanceRegistry {
 
     /// Restore one row from a checkpoint (rows arrive in id order; the
     /// registry must have been freshly seeded for the config first).
-    pub fn restore_row(&mut self, row: InstanceMeta) {
+    /// A gap in the id sequence is a damaged or hand-edited checkpoint
+    /// — reported as an error, never a panic, so the crash-fault
+    /// harness's corrupted files always fail cleanly.
+    pub fn restore_row(&mut self, row: InstanceMeta) -> anyhow::Result<()> {
         let id = row.id.0;
         if id < self.metas.len() {
             self.metas[id] = row;
         } else {
-            assert_eq!(id, self.metas.len(), "registry rows must restore in id order");
+            anyhow::ensure!(
+                id == self.metas.len(),
+                "registry rows must restore in id order (got id {id} with {} rows)",
+                self.metas.len()
+            );
             self.metas.push(row);
         }
+        Ok(())
     }
 }
 

@@ -16,6 +16,8 @@
 //!   adloco train --preset elastic_mit                        # elastic lifecycle on
 //!   adloco train --preset hetero_dynamic --elastic respawn_after_merge
 //!   adloco train --preset xla_tiny --set algo.outer_steps=4 --out runs
+//!   adloco train --preset quick --checkpoint runs/q.ckpt --keep-checkpoints 3
+//!   adloco train --preset quick --resume runs/q.ckpt.000004    # exact resume
 //!   adloco compare --preset mock_default --methods adloco,diloco,localsgd
 //!   adloco sweep --preset quick --param algo.batching.eta \
 //!       --values 0.4,0.8,1.6 --jobs 4
@@ -107,6 +109,15 @@ fn load_config(args: &cli::Args) -> Result<Config> {
     }
     if let Some(e) = args.opt("elastic") {
         cfg.algo.elastic.mode = adloco::config::ElasticMode::parse(e)?;
+    }
+    if let Some(p) = args.opt("checkpoint") {
+        cfg.run.checkpoint_path = Some(p.to_string());
+    }
+    if let Some(p) = args.opt("resume") {
+        cfg.run.resume_from = Some(p.to_string());
+    }
+    if let Some(n) = args.opt_parse::<usize>("keep-checkpoints")? {
+        cfg.run.keep_checkpoints = n;
     }
     cfg.validate()?;
     Ok(cfg)

@@ -1,0 +1,57 @@
+//! FNV-1a (64-bit) — the checkpoint interchange's section/file seal and
+//! the config structural digest (DESIGN.md §10).
+//!
+//! Not cryptographic: the seal detects *accidental* damage (truncation,
+//! bit flips, torn writes), not forgery. One guarantee matters for the
+//! kill-anywhere harness (`tests/crash_fault.rs`) and is worth stating
+//! precisely: every byte step `h = (h ^ b) * P` is a bijection of the
+//! 64-bit state for a fixed input byte (XOR is an involution, and
+//! multiplication by the odd prime `P` is invertible mod 2^64), so two
+//! equal-length inputs that differ in **exactly one byte** always hash
+//! differently — the diverged states walk through the same remaining
+//! bijections and can never re-collide. Single-bit corruption is
+//! therefore detected deterministically, not probabilistically;
+//! multi-byte damage is detected with overwhelming probability; length
+//! changes are caught structurally by the container walk.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over a byte string.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // reference values from the FNV specification's test suite
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn single_byte_difference_always_detected() {
+        // the deterministic-detection property the interchange seal
+        // relies on: flip any single byte (every bit pattern) at every
+        // position and the hash must change
+        let base = b"ADLC interchange seal property".to_vec();
+        let h0 = fnv1a(&base);
+        for pos in 0..base.len() {
+            for flip in 1..=255u8 {
+                let mut m = base.clone();
+                m[pos] ^= flip;
+                assert_ne!(fnv1a(&m), h0, "collision at pos {pos} flip {flip:#x}");
+            }
+        }
+    }
+}

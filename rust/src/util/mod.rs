@@ -7,12 +7,14 @@
 //! `artifacts/*/meta.json`, experiment configs and metric dumps), a
 //! leveled logger and a handful of numeric helpers.
 
+pub mod hash;
 pub mod json;
 pub mod logger;
 pub mod parallel;
 pub mod rng;
 pub mod stats;
 
+pub use hash::fnv1a;
 pub use json::JsonValue;
 pub use logger::{clear_thread_context, log_enabled, set_thread_context, Level};
 pub use parallel::run_cells;

@@ -1,35 +1,24 @@
-//! Exact-resume suite (checkpoint v2 contract): a run resumed from a
-//! checkpoint taken at outer step k must produce, from step k+1 on, the
-//! **bit-identical** record streams, ledger continuation, utilization
-//! accounting and final `RunResult` payload of the uninterrupted run —
-//! on both schedulers, at 1 and 4 threads, under the dynamic-workload
-//! scenario, and with delayed-overlap collectives in flight across the
-//! resume point (DESIGN.md §8).
+//! Exact-resume suite (checkpoint v4 interchange contract): a run
+//! resumed from a checkpoint taken at outer step k must produce, from
+//! step k+1 on, the **bit-identical** record streams, ledger
+//! continuation, utilization accounting and final `RunResult` payload
+//! of the uninterrupted run — on both schedulers, at 1 and 4 threads,
+//! under the dynamic-workload scenario, and with delayed-overlap
+//! collectives in flight across the resume point (DESIGN.md §8, §10).
 //!
 //! `best_ppl` is deliberately not compared: it minimizes over *all*
 //! evaluations including the pre-checkpoint prefix the resumed run
 //! never re-executes.
+//!
+//! Damage injection (truncation / bit flips / trailing garbage at
+//! every offset class) lives in `tests/crash_fault.rs`; this suite owns
+//! the happy paths plus the resume-time policy gates: config-digest
+//! refusal, minimal warm-start, and checkpoint retention.
+
+mod common;
 
 use adloco::config::{presets, Config, OverlapMode, SchedulerKind};
-use adloco::coordinator::{Coordinator, RunResult};
-use adloco::engine::build_engine;
-use adloco::metrics::Recorder;
-
-/// One outer step, dispatched exactly like `Coordinator::run` does.
-fn drive_step(c: &mut Coordinator, t: u64) {
-    let serial_lockstep =
-        c.config().run.scheduler == SchedulerKind::Lockstep && c.threads() <= 1;
-    if serial_lockstep {
-        c.step_outer(t).unwrap();
-    } else {
-        c.step_outer_event(t).unwrap();
-    }
-}
-
-fn new_coord(cfg: &Config) -> Coordinator {
-    let engine = build_engine(cfg).unwrap();
-    Coordinator::new(cfg.clone(), engine).unwrap()
-}
+use common::{assert_payloads_match, assert_suffix_matches, drive_step, new_coord};
 
 /// Save at outer step `k`, resume, and assert the remaining record
 /// stream plus the final `RunResult` payload are bit-identical to the
@@ -57,139 +46,6 @@ fn assert_exact_resume(cfg: Config, k: u64, tag: &str) {
 
     assert_payloads_match(&rfull, &rres, tag);
     assert_suffix_matches(&full.recorder, &resumed.recorder, k, tag);
-}
-
-/// The `RunResult` determinism payload, bit for bit (minus `best_ppl`,
-/// see module docs, and the wall-clock/threads perf fields).
-fn assert_payloads_match(a: &RunResult, b: &RunResult, tag: &str) {
-    assert_eq!(a.final_ppl.to_bits(), b.final_ppl.to_bits(), "{tag}: final ppl");
-    assert_eq!(a.total_inner_steps, b.total_inner_steps, "{tag}: inner steps");
-    assert_eq!(a.total_samples, b.total_samples, "{tag}: samples");
-    assert_eq!(a.comm_count, b.comm_count, "{tag}: comm count");
-    assert_eq!(a.comm_bytes, b.comm_bytes, "{tag}: comm bytes");
-    assert_eq!(a.wan_comm_bytes, b.wan_comm_bytes, "{tag}: WAN bytes");
-    assert_eq!(
-        a.virtual_time_s.to_bits(),
-        b.virtual_time_s.to_bits(),
-        "{tag}: virtual time ({} vs {})",
-        a.virtual_time_s,
-        b.virtual_time_s
-    );
-    assert_eq!(a.trainers_left, b.trainers_left, "{tag}: trainers left");
-    assert_eq!(
-        a.total_idle_s.to_bits(),
-        b.total_idle_s.to_bits(),
-        "{tag}: idle time"
-    );
-    assert_eq!(
-        a.mean_utilization.to_bits(),
-        b.mean_utilization.to_bits(),
-        "{tag}: utilization"
-    );
-    assert_eq!(
-        a.overlap_hidden_s.to_bits(),
-        b.overlap_hidden_s.to_bits(),
-        "{tag}: overlap hidden"
-    );
-    assert_eq!(a.time_to_target, b.time_to_target, "{tag}: time to target");
-    assert_eq!(a.spawn_count, b.spawn_count, "{tag}: spawn count");
-    assert_eq!(
-        a.mean_live_instances.to_bits(),
-        b.mean_live_instances.to_bits(),
-        "{tag}: mean live instances"
-    );
-    assert_eq!(
-        a.total_vacant_s.to_bits(),
-        b.total_vacant_s.to_bits(),
-        "{tag}: vacant time"
-    );
-}
-
-/// The resumed run's record streams must equal the uninterrupted run's
-/// post-k suffix, field for field and bit for bit; utilization rows
-/// (whole-run accumulators, restored from the checkpoint) must match in
-/// full.
-fn assert_suffix_matches(full: &Recorder, res: &Recorder, k: u64, tag: &str) {
-    let full_steps: Vec<_> = full.steps.iter().filter(|s| s.outer_step > k).collect();
-    assert_eq!(full_steps.len(), res.steps.len(), "{tag}: step suffix length");
-    for (a, b) in full_steps.iter().zip(res.steps.iter()) {
-        assert_eq!(
-            (a.global_step, a.outer_step, a.trainer, a.worker),
-            (b.global_step, b.outer_step, b.trainer, b.worker),
-            "{tag}: step identity"
-        );
-        assert_eq!(a.batch, b.batch, "{tag}: step batch");
-        assert_eq!(a.requested_batch, b.requested_batch, "{tag}: requested");
-        assert_eq!(a.accum_steps, b.accum_steps, "{tag}: accum");
-        assert_eq!(a.clamped, b.clamped, "{tag}: clamp flag");
-        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{tag}: step loss");
-        assert_eq!(
-            a.grad_sq_norm.to_bits(),
-            b.grad_sq_norm.to_bits(),
-            "{tag}: grad norm"
-        );
-        assert_eq!(a.sigma2.to_bits(), b.sigma2.to_bits(), "{tag}: sigma2");
-        assert_eq!(
-            a.virtual_time_s.to_bits(),
-            b.virtual_time_s.to_bits(),
-            "{tag}: step time"
-        );
-    }
-    let full_evals: Vec<_> = full.evals.iter().filter(|e| e.outer_step > k).collect();
-    assert_eq!(full_evals.len(), res.evals.len(), "{tag}: eval suffix length");
-    for (a, b) in full_evals.iter().zip(res.evals.iter()) {
-        assert_eq!(
-            (a.global_step, a.outer_step, a.trainer),
-            (b.global_step, b.outer_step, b.trainer),
-            "{tag}: eval identity"
-        );
-        assert_eq!(a.comm_count, b.comm_count, "{tag}: eval comm count");
-        assert_eq!(a.comm_bytes, b.comm_bytes, "{tag}: eval comm bytes");
-        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{tag}: eval loss");
-        assert_eq!(
-            a.perplexity.to_bits(),
-            b.perplexity.to_bits(),
-            "{tag}: eval ppl"
-        );
-        assert_eq!(
-            a.virtual_time_s.to_bits(),
-            b.virtual_time_s.to_bits(),
-            "{tag}: eval time"
-        );
-    }
-    let full_merges: Vec<_> = full.merges.iter().filter(|m| m.outer_step > k).collect();
-    assert_eq!(full_merges.len(), res.merges.len(), "{tag}: merge suffix length");
-    for (a, b) in full_merges.iter().zip(res.merges.iter()) {
-        assert_eq!(a.merged, b.merged, "{tag}: merged set");
-        assert_eq!(a.representative, b.representative, "{tag}: representative");
-        assert_eq!(a.trainers_left, b.trainers_left, "{tag}: trainers left");
-        assert_eq!(
-            a.virtual_time_s.to_bits(),
-            b.virtual_time_s.to_bits(),
-            "{tag}: merge time"
-        );
-    }
-    assert_eq!(
-        full.utilization.len(),
-        res.utilization.len(),
-        "{tag}: utilization rows"
-    );
-    for (a, b) in full.utilization.iter().zip(res.utilization.iter()) {
-        assert_eq!(
-            (a.trainer, a.worker, a.node),
-            (b.trainer, b.worker, b.node),
-            "{tag}: utilization identity"
-        );
-        assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits(), "{tag}: busy_s");
-        assert_eq!(a.wait_s.to_bits(), b.wait_s.to_bits(), "{tag}: wait_s");
-        assert_eq!(a.comm_s.to_bits(), b.comm_s.to_bits(), "{tag}: comm_s");
-        assert_eq!(a.hidden_s.to_bits(), b.hidden_s.to_bits(), "{tag}: hidden_s");
-        assert_eq!(
-            a.preempted_s.to_bits(),
-            b.preempted_s.to_bits(),
-            "{tag}: preempted_s"
-        );
-    }
 }
 
 /// The shared base schedule: small but feature-dense (multi-worker
@@ -395,4 +251,128 @@ fn pending_sync_survives_the_checkpoint_file() {
     snap.save(&path).unwrap();
     let loaded = adloco::checkpoint::Checkpoint::load(&path).unwrap();
     assert_eq!(snap, loaded, "checkpoint file roundtrips the in-flight state");
+}
+
+#[test]
+fn warm_start_transfers_params_and_streams_only() {
+    // white-box: warm-starting from a minimal interchange copies the
+    // snapshot's outer parameters into the trainer and all its workers
+    // and restores the RNG streams, but leaves the schedule fresh
+    let cfg = base_cfg();
+    let mut c = new_coord(&cfg);
+    for t in 1..=3 {
+        drive_step(&mut c, t);
+    }
+    let minimal = c.snapshot(3).to_minimal();
+    assert!(!minimal.trainers.is_empty());
+
+    let mut w = new_coord(&cfg);
+    w.warm_start(&minimal).unwrap();
+    let s0 = w.snapshot(0);
+    for snap in &minimal.trainers {
+        let t = s0
+            .trainers
+            .iter()
+            .find(|t| t.id == snap.id)
+            .expect("warm-started trainer exists");
+        assert_eq!(t.params, snap.params, "trainer params transferred");
+        for (wk, ws) in t.workers.iter().zip(snap.workers.iter()) {
+            assert_eq!(wk.params, snap.params, "worker params transferred");
+            assert_eq!(wk.noise_rng, ws.noise_rng, "noise stream transferred");
+            assert_eq!(wk.time_rng, ws.time_rng, "time stream transferred");
+        }
+    }
+    assert_eq!(s0.rng, minimal.rng, "coordinator stream transferred");
+}
+
+#[test]
+fn resume_from_a_minimal_file_restarts_the_schedule() {
+    // end-to-end: `run.resume_from` pointing at a minimal (warm-start)
+    // file must run the whole schedule again, from outer step 1
+    let cfg = base_cfg();
+    let mut c = new_coord(&cfg);
+    for t in 1..=3 {
+        drive_step(&mut c, t);
+    }
+    let dir = std::env::temp_dir().join("adloco_resume_suite");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("warm.ckpt").to_str().unwrap().to_string();
+    c.snapshot(3).to_minimal().save(&path).unwrap();
+
+    let mut cfg2 = cfg.clone();
+    cfg2.run.resume_from = Some(path);
+    let mut warm = new_coord(&cfg2);
+    warm.run().unwrap();
+    assert!(
+        warm.recorder.steps.iter().any(|s| s.outer_step == 1),
+        "the schedule restarts at outer step 1 after a warm start"
+    );
+    assert!(warm.recorder.steps.iter().any(|s| s.outer_step == 6));
+}
+
+#[test]
+fn mismatched_config_digest_refuses_exact_resume() {
+    // the checkpoint remembers the structural config it came from; an
+    // exact resume under a structurally different config must be a
+    // typed refusal, not a silent divergence
+    let cfg = base_cfg();
+    let mut c = new_coord(&cfg);
+    drive_step(&mut c, 1);
+    let dir = std::env::temp_dir().join("adloco_resume_suite");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("digest.ckpt").to_str().unwrap().to_string();
+    c.snapshot(1).save(&path).unwrap();
+
+    let mut cfg2 = cfg.clone();
+    cfg2.seed = cfg.seed + 1; // structural change
+    cfg2.run.resume_from = Some(path);
+    let err = new_coord(&cfg2).run().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("different config"),
+        "unexpected refusal message: {err:#}"
+    );
+}
+
+#[test]
+fn retention_keeps_last_n_plus_merge_pins_on_disk() {
+    // end-to-end GC: with `keep_checkpoints = 2` and a checkpoint every
+    // outer step, the run leaves exactly the last two step files plus
+    // the merge-boundary pins — and a retained file resumes bit-exactly
+    use adloco::checkpoint::retention;
+
+    let dir = std::env::temp_dir().join("adloco_retention_run");
+    let _ = std::fs::remove_dir_all(&dir); // stale files would pollute list_steps
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = dir.join("run.ckpt").to_str().unwrap().to_string();
+
+    let mut cfg = base_cfg();
+    cfg.run.checkpoint_path = Some(base.clone());
+    cfg.run.checkpoint_every = 1;
+    cfg.run.keep_checkpoints = 2;
+    let mut c = new_coord(&cfg);
+    let rfull = c.run().unwrap();
+
+    let pins: std::collections::BTreeSet<u64> =
+        c.recorder.merges.iter().map(|m| m.outer_step).collect();
+    assert!(!pins.is_empty(), "the base schedule merges at least once");
+    let written: Vec<(u64, bool)> =
+        (1..=6).map(|t| (t, pins.contains(&t))).collect();
+    let want = retention::plan_retention(&written, 2);
+    assert_eq!(retention::list_steps(&base), want, "on-disk set == retention plan");
+    assert!(want.contains(&6), "the final checkpoint always survives");
+    assert!(
+        want.len() < 6,
+        "retention actually pruned something (kept {want:?})"
+    );
+
+    // any retained step file is a first-class exact-resume source
+    let k = *want.iter().filter(|s| **s < 6).max().unwrap();
+    let mut cfg2 = cfg.clone();
+    cfg2.run.checkpoint_path = None;
+    cfg2.run.keep_checkpoints = 0;
+    cfg2.run.resume_from = Some(retention::step_file(&base, k));
+    let mut resumed = new_coord(&cfg2);
+    let rres = resumed.run().unwrap();
+    assert_payloads_match(&rfull, &rres, "retention resume");
+    assert_suffix_matches(&c.recorder, &resumed.recorder, k, "retention resume");
 }

@@ -1,6 +1,8 @@
-//! Shared helpers for the integration suites: the canonical run driver
-//! and the FNV golden-digest serialization used by the seam anchors
-//! (`tests/topology.rs`, `tests/overlap.rs`, `tests/checkpoint_resume.rs`).
+//! Shared helpers for the integration suites: the canonical run driver,
+//! the FNV golden-digest serialization used by the seam anchors
+//! (`tests/topology.rs`, `tests/overlap.rs`, `tests/checkpoint_resume.rs`)
+//! and the bit-exact resume comparators shared by the resume suite and
+//! the kill-anywhere harness (`tests/crash_fault.rs`).
 //!
 //! The `digest` serialization is FROZEN: it writes exactly the fields it
 //! wrote when the flat golden was first pinned, so refactors that add
@@ -9,7 +11,7 @@
 #![allow(dead_code)]
 
 use adloco::comm::{CommLedger, CommScope};
-use adloco::config::Config;
+use adloco::config::{Config, SchedulerKind};
 use adloco::coordinator::{Coordinator, RunResult};
 use adloco::engine::build_engine;
 use adloco::metrics::Recorder;
@@ -20,6 +22,157 @@ pub fn run(cfg: Config) -> (RunResult, Recorder, CommLedger) {
     let mut c = Coordinator::new(cfg, engine).unwrap();
     let r = c.run().unwrap();
     (r, c.recorder.clone(), c.ledger().clone())
+}
+
+/// Build a coordinator for a config (without running it).
+pub fn new_coord(cfg: &Config) -> Coordinator {
+    let engine = build_engine(cfg).unwrap();
+    Coordinator::new(cfg.clone(), engine).unwrap()
+}
+
+/// One outer step, dispatched exactly like `Coordinator::run` does.
+pub fn drive_step(c: &mut Coordinator, t: u64) {
+    let serial_lockstep =
+        c.config().run.scheduler == SchedulerKind::Lockstep && c.threads() <= 1;
+    if serial_lockstep {
+        c.step_outer(t).unwrap();
+    } else {
+        c.step_outer_event(t).unwrap();
+    }
+}
+
+/// The `RunResult` determinism payload, bit for bit (minus `best_ppl` —
+/// it minimizes over the pre-checkpoint prefix a resumed run never
+/// re-executes — and the wall-clock/threads perf fields).
+pub fn assert_payloads_match(a: &RunResult, b: &RunResult, tag: &str) {
+    assert_eq!(a.final_ppl.to_bits(), b.final_ppl.to_bits(), "{tag}: final ppl");
+    assert_eq!(a.total_inner_steps, b.total_inner_steps, "{tag}: inner steps");
+    assert_eq!(a.total_samples, b.total_samples, "{tag}: samples");
+    assert_eq!(a.comm_count, b.comm_count, "{tag}: comm count");
+    assert_eq!(a.comm_bytes, b.comm_bytes, "{tag}: comm bytes");
+    assert_eq!(a.wan_comm_bytes, b.wan_comm_bytes, "{tag}: WAN bytes");
+    assert_eq!(
+        a.virtual_time_s.to_bits(),
+        b.virtual_time_s.to_bits(),
+        "{tag}: virtual time ({} vs {})",
+        a.virtual_time_s,
+        b.virtual_time_s
+    );
+    assert_eq!(a.trainers_left, b.trainers_left, "{tag}: trainers left");
+    assert_eq!(
+        a.total_idle_s.to_bits(),
+        b.total_idle_s.to_bits(),
+        "{tag}: idle time"
+    );
+    assert_eq!(
+        a.mean_utilization.to_bits(),
+        b.mean_utilization.to_bits(),
+        "{tag}: utilization"
+    );
+    assert_eq!(
+        a.overlap_hidden_s.to_bits(),
+        b.overlap_hidden_s.to_bits(),
+        "{tag}: overlap hidden"
+    );
+    assert_eq!(a.time_to_target, b.time_to_target, "{tag}: time to target");
+    assert_eq!(a.spawn_count, b.spawn_count, "{tag}: spawn count");
+    assert_eq!(
+        a.mean_live_instances.to_bits(),
+        b.mean_live_instances.to_bits(),
+        "{tag}: mean live instances"
+    );
+    assert_eq!(
+        a.total_vacant_s.to_bits(),
+        b.total_vacant_s.to_bits(),
+        "{tag}: vacant time"
+    );
+}
+
+/// The resumed run's record streams must equal the uninterrupted run's
+/// post-k suffix, field for field and bit for bit; utilization rows
+/// (whole-run accumulators, restored from the checkpoint) must match in
+/// full.
+pub fn assert_suffix_matches(full: &Recorder, res: &Recorder, k: u64, tag: &str) {
+    let full_steps: Vec<_> = full.steps.iter().filter(|s| s.outer_step > k).collect();
+    assert_eq!(full_steps.len(), res.steps.len(), "{tag}: step suffix length");
+    for (a, b) in full_steps.iter().zip(res.steps.iter()) {
+        assert_eq!(
+            (a.global_step, a.outer_step, a.trainer, a.worker),
+            (b.global_step, b.outer_step, b.trainer, b.worker),
+            "{tag}: step identity"
+        );
+        assert_eq!(a.batch, b.batch, "{tag}: step batch");
+        assert_eq!(a.requested_batch, b.requested_batch, "{tag}: requested");
+        assert_eq!(a.accum_steps, b.accum_steps, "{tag}: accum");
+        assert_eq!(a.clamped, b.clamped, "{tag}: clamp flag");
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{tag}: step loss");
+        assert_eq!(
+            a.grad_sq_norm.to_bits(),
+            b.grad_sq_norm.to_bits(),
+            "{tag}: grad norm"
+        );
+        assert_eq!(a.sigma2.to_bits(), b.sigma2.to_bits(), "{tag}: sigma2");
+        assert_eq!(
+            a.virtual_time_s.to_bits(),
+            b.virtual_time_s.to_bits(),
+            "{tag}: step time"
+        );
+    }
+    let full_evals: Vec<_> = full.evals.iter().filter(|e| e.outer_step > k).collect();
+    assert_eq!(full_evals.len(), res.evals.len(), "{tag}: eval suffix length");
+    for (a, b) in full_evals.iter().zip(res.evals.iter()) {
+        assert_eq!(
+            (a.global_step, a.outer_step, a.trainer),
+            (b.global_step, b.outer_step, b.trainer),
+            "{tag}: eval identity"
+        );
+        assert_eq!(a.comm_count, b.comm_count, "{tag}: eval comm count");
+        assert_eq!(a.comm_bytes, b.comm_bytes, "{tag}: eval comm bytes");
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{tag}: eval loss");
+        assert_eq!(
+            a.perplexity.to_bits(),
+            b.perplexity.to_bits(),
+            "{tag}: eval ppl"
+        );
+        assert_eq!(
+            a.virtual_time_s.to_bits(),
+            b.virtual_time_s.to_bits(),
+            "{tag}: eval time"
+        );
+    }
+    let full_merges: Vec<_> = full.merges.iter().filter(|m| m.outer_step > k).collect();
+    assert_eq!(full_merges.len(), res.merges.len(), "{tag}: merge suffix length");
+    for (a, b) in full_merges.iter().zip(res.merges.iter()) {
+        assert_eq!(a.merged, b.merged, "{tag}: merged set");
+        assert_eq!(a.representative, b.representative, "{tag}: representative");
+        assert_eq!(a.trainers_left, b.trainers_left, "{tag}: trainers left");
+        assert_eq!(
+            a.virtual_time_s.to_bits(),
+            b.virtual_time_s.to_bits(),
+            "{tag}: merge time"
+        );
+    }
+    assert_eq!(
+        full.utilization.len(),
+        res.utilization.len(),
+        "{tag}: utilization rows"
+    );
+    for (a, b) in full.utilization.iter().zip(res.utilization.iter()) {
+        assert_eq!(
+            (a.trainer, a.worker, a.node),
+            (b.trainer, b.worker, b.node),
+            "{tag}: utilization identity"
+        );
+        assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits(), "{tag}: busy_s");
+        assert_eq!(a.wait_s.to_bits(), b.wait_s.to_bits(), "{tag}: wait_s");
+        assert_eq!(a.comm_s.to_bits(), b.comm_s.to_bits(), "{tag}: comm_s");
+        assert_eq!(a.hidden_s.to_bits(), b.hidden_s.to_bits(), "{tag}: hidden_s");
+        assert_eq!(
+            a.preempted_s.to_bits(),
+            b.preempted_s.to_bits(),
+            "{tag}: preempted_s"
+        );
+    }
 }
 
 /// FNV-1a over a byte string (the digest hash).

@@ -1,0 +1,224 @@
+//! Kill-anywhere crash-fault harness (DESIGN.md §10, EXPERIMENTS.md
+//! §Robustness): a training process may die at any instant, leaving
+//! behind either a complete checkpoint or a damaged one. The recovery
+//! contract has exactly two legal outcomes and this suite sweeps both:
+//!
+//! 1. **Valid file** — resuming from a checkpoint taken at *any* event
+//!    boundary (every outer step of the schedule) reproduces the
+//!    uninterrupted run bit for bit, via the shared comparators in
+//!    `tests/common`.
+//! 2. **Damaged file** — truncating the file at every section boundary
+//!    and at strided byte offsets, flipping bits at strided offsets,
+//!    and appending trailing bytes must each yield a clean typed
+//!    [`InterchangeError`] from the import path and a clean `Err` from
+//!    the full resume path. Zero panics, zero silent divergence.
+//!
+//! The matrix covers both schedulers (lockstep/event), 1 and 4 worker
+//! threads, blocking and delayed-overlap collectives, and elastic
+//! spawning on/off. Each config is one `#[test]` so the sweeps run in
+//! parallel under the default test harness.
+
+mod common;
+
+use adloco::checkpoint::{import_bytes, section_boundaries, Checkpoint, Interchange};
+use adloco::config::{presets, Config, OverlapMode, SchedulerKind};
+use common::{assert_payloads_match, assert_suffix_matches, drive_step, new_coord};
+
+/// A small but feature-dense schedule: multi-worker trainers, adaptive
+/// batching, merging and a mid-schedule eval in four outer steps.
+fn base_cfg(name: &str) -> Config {
+    let mut cfg = presets::mock_default();
+    cfg.name = name.into();
+    cfg.algo.num_trainers = 2;
+    cfg.algo.workers_per_trainer = 2;
+    cfg.algo.outer_steps = 4;
+    cfg.algo.inner_steps = 6;
+    cfg.algo.merge.frequency = 2;
+    cfg.run.eval_every = 3;
+    cfg
+}
+
+/// The elastic variant: two single-worker seed trainers over four
+/// nodes guarantee spawns at outer step 1 (idle fraction 1.0 on the
+/// unassigned nodes — DESIGN.md §9).
+fn elastic_cfg(name: &str) -> Config {
+    let mut cfg = base_cfg(name);
+    cfg.algo.workers_per_trainer = 1;
+    cfg.algo.elastic.mode = adloco::config::ElasticMode::UtilThreshold;
+    cfg.algo.elastic.idle_threshold = 0.5;
+    cfg.algo.elastic.max_instances = 4;
+    cfg
+}
+
+/// A damaged byte stream must fail the import with a typed error (the
+/// return type statically guarantees it is an [`InterchangeError`]);
+/// reaching this function at all — instead of a panic/abort — is the
+/// property under test.
+fn expect_typed_failure(raw: &[u8], what: &str) {
+    match import_bytes(raw) {
+        Ok(_) => panic!("{what}: damaged checkpoint imported successfully"),
+        Err(e) => {
+            assert!(!e.to_string().is_empty(), "{what}: error message is empty");
+        }
+    }
+}
+
+/// Damage sweep over one serialized checkpoint: truncation at every
+/// section boundary and at ~97 strided offsets, single-bit flips at
+/// ~131 strided offsets, and trailing garbage.
+fn damage_sweep(bytes: &[u8], tag: &str) {
+    let boundaries = section_boundaries(bytes);
+    assert!(
+        boundaries.len() >= 8,
+        "{tag}: a v4 container has at least four sections worth of boundaries"
+    );
+    for &cut in &boundaries {
+        if cut == bytes.len() {
+            continue; // the full file is the valid case, handled elsewhere
+        }
+        expect_typed_failure(&bytes[..cut], &format!("{tag}: boundary cut at {cut}"));
+    }
+    let stride = (bytes.len() / 97).max(1);
+    for cut in (0..bytes.len()).step_by(stride) {
+        expect_typed_failure(&bytes[..cut], &format!("{tag}: byte cut at {cut}"));
+    }
+    let stride = (bytes.len() / 131).max(1);
+    for pos in (0..bytes.len()).step_by(stride) {
+        let mut flipped = bytes.to_vec();
+        flipped[pos] ^= 1 << (pos % 8);
+        expect_typed_failure(&flipped, &format!("{tag}: bit flip at {pos}"));
+    }
+    let mut trailing = bytes.to_vec();
+    trailing.extend_from_slice(&[0xAB, 0xCD, 0xEF]);
+    expect_typed_failure(&trailing, &format!("{tag}: trailing garbage"));
+}
+
+/// The full harness for one config:
+///
+/// - reference run, uninterrupted;
+/// - a second run checkpointed at **every** outer step;
+/// - for each mid-schedule checkpoint: resume and compare bit for bit;
+/// - for the midpoint checkpoint: the damage sweep, plus damaged files
+///   driven through the *full* resume path (`Coordinator::run`) at each
+///   section boundary, asserting a clean `Err` end to end.
+fn kill_anywhere(cfg: Config, tag: &str) {
+    let mut full = new_coord(&cfg);
+    let rfull = full.run().unwrap();
+
+    let outer = cfg.algo.outer_steps as u64;
+    let mut part = new_coord(&cfg);
+    let mut snaps: Vec<(u64, Checkpoint)> = Vec::new();
+    for t in 1..=outer {
+        drive_step(&mut part, t);
+        snaps.push((t, part.snapshot(t)));
+    }
+
+    let dir = std::env::temp_dir().join("adloco_crash_fault");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    for (k, snap) in snaps.iter().filter(|(k, _)| *k < outer) {
+        let path = dir.join(format!("{tag}_{k}.ckpt")).to_str().unwrap().to_string();
+        snap.save(&path).unwrap();
+        let mut cfg2 = cfg.clone();
+        cfg2.run.resume_from = Some(path);
+        let mut resumed = new_coord(&cfg2);
+        let rres = resumed.run().unwrap();
+        let t = format!("{tag} k={k}");
+        assert_payloads_match(&rfull, &rres, &t);
+        assert_suffix_matches(&full.recorder, &resumed.recorder, *k, &t);
+    }
+
+    // damage the midpoint checkpoint — it carries the densest state
+    // (merges done, spawns live, syncs possibly in flight)
+    let (mid_k, mid) = &snaps[snaps.len() / 2];
+    let bytes = mid.to_bytes();
+    damage_sweep(&bytes, tag);
+
+    // end-to-end: a damaged file on disk must surface as a clean error
+    // from the resume path itself, never a panic or a silent fresh run
+    for &cut in &section_boundaries(&bytes) {
+        if cut == bytes.len() {
+            continue;
+        }
+        let path = dir
+            .join(format!("{tag}_damaged_{cut}.ckpt"))
+            .to_str()
+            .unwrap()
+            .to_string();
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let mut cfg2 = cfg.clone();
+        cfg2.run.resume_from = Some(path);
+        let err = new_coord(&cfg2).run().unwrap_err();
+        assert!(
+            !format!("{err:#}").is_empty(),
+            "{tag}: resume from cut {cut} of the k={mid_k} file must explain itself"
+        );
+    }
+}
+
+#[test]
+fn kill_anywhere_lockstep_serial_blocking() {
+    kill_anywhere(base_cfg("cf_lock_t1"), "lock_t1");
+}
+
+#[test]
+fn kill_anywhere_lockstep_parallel_blocking() {
+    let mut cfg = base_cfg("cf_lock_t4");
+    cfg.run.threads = 4;
+    kill_anywhere(cfg, "lock_t4");
+}
+
+#[test]
+fn kill_anywhere_event_serial_blocking() {
+    let mut cfg = base_cfg("cf_event_t1");
+    cfg.run.scheduler = SchedulerKind::Event;
+    kill_anywhere(cfg, "event_t1");
+}
+
+#[test]
+fn kill_anywhere_event_serial_delayed() {
+    let mut cfg = base_cfg("cf_event_t1_delayed");
+    cfg.run.scheduler = SchedulerKind::Event;
+    cfg.comm.overlap = OverlapMode::Delayed;
+    kill_anywhere(cfg, "event_t1_delayed");
+}
+
+#[test]
+fn kill_anywhere_event_parallel_delayed() {
+    let mut cfg = base_cfg("cf_event_t4_delayed");
+    cfg.run.scheduler = SchedulerKind::Event;
+    cfg.run.threads = 4;
+    cfg.comm.overlap = OverlapMode::Delayed;
+    kill_anywhere(cfg, "event_t4_delayed");
+}
+
+#[test]
+fn kill_anywhere_elastic_lockstep_serial() {
+    kill_anywhere(elastic_cfg("cf_elastic_t1"), "elastic_t1");
+}
+
+#[test]
+fn kill_anywhere_elastic_event_parallel_delayed() {
+    let mut cfg = elastic_cfg("cf_elastic_t4_delayed");
+    cfg.run.scheduler = SchedulerKind::Event;
+    cfg.run.threads = 4;
+    cfg.comm.overlap = OverlapMode::Delayed;
+    kill_anywhere(cfg, "elastic_t4_delayed");
+}
+
+#[test]
+fn minimal_checkpoints_survive_the_damage_sweep_too() {
+    // the warm-start variant shares the container, so it shares the
+    // integrity contract: every cut and flip is a typed error
+    let cfg = base_cfg("cf_minimal");
+    let mut c = new_coord(&cfg);
+    for t in 1..=2 {
+        drive_step(&mut c, t);
+    }
+    let bytes = c.snapshot(2).to_minimal().to_bytes();
+    match import_bytes(&bytes).unwrap() {
+        Interchange::Minimal(_) => {}
+        Interchange::Complete(_) => panic!("minimal container decoded as complete"),
+    }
+    damage_sweep(&bytes, "minimal");
+}

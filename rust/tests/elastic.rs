@@ -287,3 +287,129 @@ fn elastic_mit_spawns_and_does_not_waste_the_cluster() {
     );
     assert!(re.total_samples > 0);
 }
+
+// ---------------------------------------------------------------------------
+// registry restore edge cases (DESIGN.md §9, §10): the checkpoint path
+// must rebuild any registry the run can produce — and refuse, cleanly,
+// any shape a damaged file can produce
+// ---------------------------------------------------------------------------
+
+use adloco::instances::{InstanceId, InstanceMeta, InstanceRegistry, Origin};
+
+#[test]
+fn registry_restore_accepts_an_all_retired_pool() {
+    // after enough merges every instance can be retired; a checkpoint
+    // taken then holds only retired rows and must restore verbatim
+    let mut reg = InstanceRegistry::seed(2, vec![1, 1, 1, 1]);
+    let rows = [
+        (0, Origin::Seed, 0, 0.0, Some(3)),
+        (1, Origin::Seed, 0, 0.0, Some(5)),
+        (2, Origin::Util, 1, 2.5, Some(3)),
+        (3, Origin::Util, 1, 2.5, Some(5)),
+    ];
+    for (id, origin, born_outer, born_at_s, retired_outer) in rows {
+        reg.restore_row(InstanceMeta {
+            id: InstanceId(id),
+            state: LifecycleState::Retired,
+            born_outer,
+            born_at_s,
+            retired_outer,
+            origin,
+        })
+        .unwrap();
+    }
+    assert_eq!(reg.len(), 4);
+    assert_eq!(reg.live_count(), 0, "every row is retired");
+    assert_eq!(reg.meta(2).retired_outer, Some(3));
+    assert!(reg.metas().iter().all(|m| m.state == LifecycleState::Retired));
+}
+
+#[test]
+fn registry_restore_rejects_an_id_gap_cleanly() {
+    // a spawn recorded in the bookkeeping whose row never made it into
+    // the file leaves a gap in the id sequence — a damaged checkpoint,
+    // reported as an error rather than a panic
+    let mut reg = InstanceRegistry::seed(2, vec![1, 1]);
+    let err = reg
+        .restore_row(InstanceMeta {
+            id: InstanceId(4), // ids 2 and 3 are missing
+            state: LifecycleState::Active,
+            born_outer: 1,
+            born_at_s: 1.0,
+            retired_outer: None,
+            origin: Origin::Util,
+        })
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("id order"), "{err:#}");
+    assert_eq!(reg.len(), 2, "the failed row must not be applied");
+}
+
+#[test]
+fn coordinator_restore_rejects_a_spawned_row_without_slots() {
+    // the other half of "spawn recorded, slot never pushed": a spawned
+    // registry row whose worker placement list is empty cannot be
+    // rebuilt — the coordinator must refuse with a clean error
+    let cfg = guaranteed_spawn_cfg();
+    let mut c = run_keep_steps(&cfg, 2);
+    let mut snap = c.snapshot(2);
+    let initial = cfg.algo.num_trainers;
+    let spawned = snap
+        .registry
+        .iter_mut()
+        .find(|r| r.id >= initial)
+        .expect("the guaranteed-spawn config spawned by outer 2");
+    spawned.workers.clear();
+    let engine2 = build_engine(&cfg).unwrap();
+    let mut fresh = Coordinator::new(cfg.clone(), engine2).unwrap();
+    let err = fresh.restore(&snap).unwrap_err();
+    assert!(format!("{err:#}").contains("no workers"), "{err:#}");
+}
+
+#[test]
+fn pool_full_at_checkpoint_time_stays_capped_after_resume() {
+    // max_instances reached exactly at the checkpoint: outer 1 is the
+    // spawn round (2 seeds + 2 spawns = max 4) and precedes the first
+    // merge, so every row is live when the snapshot is taken; the
+    // resumed run must carry the full pool and keep the live census
+    // within the budget forever after
+    let cfg = guaranteed_spawn_cfg(); // max_instances = 4
+    let mut c = run_keep_steps(&cfg, 1);
+    let snap = c.snapshot(1);
+    assert_eq!(
+        snap.registry.len(),
+        cfg.algo.elastic.max_instances,
+        "the pool must be full at the checkpoint"
+    );
+    assert!(
+        snap.registry.iter().all(|r| r.state != "retired"),
+        "nothing retired before the first merge"
+    );
+
+    let dir = std::env::temp_dir().join("adloco_elastic_suite");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("full_pool.ckpt").to_str().unwrap().to_string();
+    snap.save(&path).unwrap();
+    let mut cfg2 = cfg.clone();
+    cfg2.run.resume_from = Some(path);
+    let engine2 = build_engine(&cfg2).unwrap();
+    let mut resumed = Coordinator::new(cfg2, engine2).unwrap();
+    resumed.run().unwrap();
+    let fin = resumed.snapshot(cfg.algo.outer_steps as u64);
+    let live = fin.registry.iter().filter(|r| r.state != "retired").count();
+    assert!(
+        live <= cfg.algo.elastic.max_instances,
+        "resume must never grow the live pool past max_instances (got {live})"
+    );
+    assert!(fin.spawn_count >= snap.spawn_count, "spawn bookkeeping survives the resume");
+}
+
+/// Drive `k` outer steps exactly like `Coordinator::run` would (serial
+/// lockstep on these configs) and hand the coordinator back.
+fn run_keep_steps(cfg: &Config, k: u64) -> Coordinator {
+    let engine = build_engine(cfg).unwrap();
+    let mut c = Coordinator::new(cfg.clone(), engine).unwrap();
+    for t in 1..=k {
+        c.step_outer(t).unwrap();
+    }
+    c
+}

@@ -1,0 +1,248 @@
+#!/usr/bin/env python3
+"""Build the committed v1/v2/v3 golden checkpoint fixtures.
+
+The byte layouts mirror adloco's historical writers (``export_v1`` /
+``export_v2`` / ``export_v3`` in ``src/checkpoint/legacy.rs``) applied
+to the fixture snapshot defined in ``tests/interchange_fixtures.rs`` —
+the two definitions must stay in lockstep, and the test suite asserts
+byte equality between these files and the Rust writers.
+
+The authoritative regeneration path is::
+
+    GOLDEN_WRITE=1 cargo test --test interchange_fixtures
+
+This script exists so the fixtures can be rebuilt without a Rust
+toolchain and as an independent, executable description of the legacy
+container:
+
+    "ADLC"  u32-LE version  u32-LE header_len  header-JSON  raw-f32-blobs
+    u32-LE CRC32(everything above)
+
+u64 values are 16-digit hex strings (JSON numbers are f64 and round
+above 2^53); f64 values are the hex of their raw bits (bit-exact,
+survives non-finite values); small structural integers stay plain.
+"""
+
+import json
+import os
+import struct
+import zlib
+
+
+def hx(v):
+    return format(v, "016x")
+
+
+def fbits(x):
+    return hx(struct.unpack("<Q", struct.pack("<d", x))[0])
+
+
+def rng(s, spare=None):
+    return {"s": [hx(w) for w in s], "spare": None if spare is None else fbits(spare)}
+
+
+def ema(value, steps):
+    return {"value": fbits(value), "steps": hx(steps)}
+
+
+def f32s(xs):
+    return b"".join(struct.pack("<f", x) for x in xs)
+
+
+# --------------------------------------------------------------------------
+# the fixture snapshot (keep identical to fixture_complete() in
+# tests/interchange_fixtures.rs)
+# --------------------------------------------------------------------------
+
+RNG_MAIN = rng(
+    [0x0123456789ABCDEF, 0xFEDCBA9876543210, 0x0F1E2D3C4B5A6978, 0x1122334455667788],
+    spare=0.5,
+)
+NOISE_A = rng([0x1111111111111111, 0x2222222222222222, 0x3333333333333333, 0x4444444444444444])
+TIME_A = rng(
+    [0x5555555555555555, 0x6666666666666666, 0x7777777777777777, 0x8888888888888888],
+    spare=-0.75,
+)
+SAMPLER_RNG_A = rng([9, 10, 11, 12])
+NOISE_B = rng([0xAAAAAAAAAAAAAAAA, 0xBBBBBBBBBBBBBBBB, 0xCCCCCCCCCCCCCCCC, 0xDDDDDDDDDDDDDDDD])
+TIME_B = rng([0xEEEEEEEEEEEEEEEE, 0xFFFFFFFFFFFFFFFF, 0x0123012301230123, 0x4567456745674567])
+SAMPLER_RNG_B = rng([13, 14, 15, 16], spare=1.5)
+
+PARAMS = [0.5, -1.25, 3.0, 0.0625]
+VELOCITY = [0.125, -0.5, 0.0, 2.0]
+DELTA = [0.25, -0.25, 0.5, -0.5]
+W_A = {"params": [1.0, 2.0, -3.0, 0.25], "m": [0.0625, 0.0, -0.0625, 0.125], "v": [0.5, 0.25, 0.125, 0.0625]}
+W_B = {"params": [-1.0, 0.5, 0.75, -0.125], "m": [0.25, -0.25, 0.0, 0.5], "v": [0.0625, 0.125, 0.25, 0.5]}
+
+TRAINER = {
+    "id": 0,
+    "param_len": 4,
+    "velocity_len": 4,
+    "requested_batch": 8,
+    "inner_steps_done": hx(18),
+    "observations": hx(36),
+    "sigma2_ema": ema(0.5, 36),
+    "ip_var_ema": ema(0.25, 36),
+    "s1_ema": ema(0.125, 36),
+    "shard": [0, 2, 4],
+    "pending": {
+        "posted_at": fbits(3.5),
+        "completes_at": fbits(3.75),
+        "time_s": fbits(0.25),
+        "sent_samples": hx(4096),
+        "delta_len": 4,
+        "phases": [
+            {"wan": False, "bytes": hx(512), "participants": 2},
+            {"wan": True, "bytes": hx(256), "participants": 2},
+        ],
+    },
+    "workers": [
+        {
+            "param_len": 4,
+            "step": hx(18),
+            "active": True,
+            "noise_rng": NOISE_A,
+            "time_rng": TIME_A,
+            "sampler": {
+                "shard": [0, 2, 4],
+                "order": [2, 0, 1],
+                "cursor": 1,
+                "drawn": hx(6),
+                "rng": SAMPLER_RNG_A,
+            },
+        },
+        {
+            "param_len": 4,
+            "step": hx(18),
+            "active": False,
+            "noise_rng": NOISE_B,
+            "time_rng": TIME_B,
+            "sampler": {
+                "shard": [1, 3, 5],
+                "order": [0, 1, 2],
+                "cursor": 0,
+                "drawn": hx(0),
+                "rng": SAMPLER_RNG_B,
+            },
+        },
+    ],
+}
+
+REGISTRY = [
+    {
+        "id": 0,
+        "state": "active",
+        "origin": "seed",
+        "born_outer": hx(0),
+        "born_at_s": fbits(0.0),
+        "retired_outer": None,
+        "workers": [[0, 0]],
+    },
+    {
+        "id": 1,
+        "state": "spawned",
+        "origin": "util",
+        "born_outer": hx(2),
+        "born_at_s": fbits(3.5),
+        "retired_outer": None,
+        "workers": [[1, 1]],
+    },
+]
+
+STATE = {
+    "outer_step": hx(3),
+    "total_samples": hx(2**53 + 1),  # exercises the hex-over-JSON-number rule
+    "comm_count": hx(12),
+    "comm_bytes": hx(4096),
+    "comm_wan_bytes": hx(1024),
+    "overlap_hidden_s": fbits(0.5),
+    "clock_times": [fbits(1.5), fbits(2.25)],
+    "busy_s": [fbits(1.0), fbits(2.0)],
+    "wait_s": [fbits(0.25), fbits(0.0)],
+    "comm_s": [fbits(0.125), fbits(0.0625)],
+    "comm_hidden_s": [fbits(0.0), fbits(0.0)],
+    "preempted_s": [fbits(0.0), fbits(0.5)],
+    "vacant_s": [fbits(0.0), fbits(0.75)],
+    "spawn_count": hx(1),
+    "last_spawn_outer": hx(2),
+    "last_merge_rep": 0,
+    "live_rounds_sum": hx(5),
+    "rounds_count": hx(3),
+}
+
+# blob order: per trainer params, velocity, pending delta, then per
+# worker params/m/v (src/checkpoint/mod.rs::blob_bytes)
+BLOB_COMPLETE = (
+    f32s(PARAMS)
+    + f32s(VELOCITY)
+    + f32s(DELTA)
+    + f32s(W_A["params"]) + f32s(W_A["m"]) + f32s(W_A["v"])
+    + f32s(W_B["params"]) + f32s(W_B["m"]) + f32s(W_B["v"])
+)
+
+
+def container(version, header_obj, blobs):
+    header = json.dumps(header_obj, separators=(",", ":")).encode()
+    out = b"ADLC" + struct.pack("<I", version) + struct.pack("<I", len(header)) + header + blobs
+    return out + struct.pack("<I", zlib.crc32(out) & 0xFFFFFFFF)
+
+
+def v3():
+    header = {"config_name": "fixture"}
+    header.update(STATE)
+    header["registry"] = REGISTRY
+    header["rng"] = RNG_MAIN
+    header["trainers"] = [TRAINER]
+    return container(3, header, BLOB_COMPLETE)
+
+
+def v2():
+    # the v3 layout minus the elastic fields (vacancy, spawn
+    # bookkeeping, round census, registry)
+    header = {"config_name": "fixture"}
+    for k, v in STATE.items():
+        if k in ("vacant_s", "spawn_count", "last_spawn_outer", "last_merge_rep",
+                 "live_rounds_sum", "rounds_count"):
+            continue
+        header[k] = v
+    header["rng"] = RNG_MAIN
+    header["trainers"] = [TRAINER]
+    return container(2, header, BLOB_COMPLETE)
+
+
+def v1():
+    header = {
+        "config_name": "fixture",
+        "outer_step": hx(3),
+        "rng": RNG_MAIN,
+        "trainers": [
+            {
+                "id": 0,
+                "param_len": 4,
+                "workers": [
+                    {"noise_rng": NOISE_A, "time_rng": TIME_A},
+                    {"noise_rng": NOISE_B, "time_rng": TIME_B},
+                ],
+            }
+        ],
+    }
+    return container(1, header, f32s(PARAMS))
+
+
+def main():
+    here = os.path.dirname(os.path.abspath(__file__))
+    for name, build in (("v1.ckpt", v1), ("v2.ckpt", v2), ("v3.ckpt", v3)):
+        data = build()
+        # self-check: CRC trailer and header JSON must verify
+        assert data[:4] == b"ADLC"
+        assert struct.unpack("<I", data[-4:])[0] == zlib.crc32(data[:-4]) & 0xFFFFFFFF
+        hlen = struct.unpack("<I", data[8:12])[0]
+        json.loads(data[12 : 12 + hlen].decode())
+        path = os.path.join(here, name)
+        with open(path, "wb") as f:
+            f.write(data)
+        print(f"wrote {path} ({len(data)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

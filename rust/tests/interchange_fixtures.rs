@@ -1,0 +1,303 @@
+//! Golden-fixture cross-version matrix (DESIGN.md §10): one committed
+//! container file per historical version (`tests/fixtures/v{1,2,3}.ckpt`),
+//! each imported through the current interchange path and asserted
+//! equivalent to a fresh v4 export of the same snapshot.
+//!
+//! The fixture bytes were written once by `tests/fixtures/make_fixtures.py`
+//! (a toolchain-free mirror of the historical writers) and are pinned
+//! by byte equality against `checkpoint::legacy::export_v{1,2,3}` —
+//! regenerate with:
+//!
+//! ```text
+//! GOLDEN_WRITE=1 cargo test --test interchange_fixtures
+//! ```
+//!
+//! `fixture_complete()` here and the constants in `make_fixtures.py`
+//! must stay in lockstep; every value is exactly representable so both
+//! sides serialize identical bits.
+
+use adloco::checkpoint::legacy::{export_v1, export_v2, export_v3};
+use adloco::checkpoint::{
+    import_bytes, Checkpoint, Interchange, MinimalCheckpoint, PendingSnapshot, PhaseSnapshot,
+    RegistryRowSnapshot, RngSnapshot, SamplerSnapshot, TrainerSnapshot, WorkerSnapshot,
+};
+
+fn rng(s: [u64; 4], spare: Option<f64>) -> RngSnapshot {
+    RngSnapshot { s, gauss_spare: spare }
+}
+
+fn rng_main() -> RngSnapshot {
+    rng(
+        [0x0123_4567_89ab_cdef, 0xfedc_ba98_7654_3210, 0x0f1e_2d3c_4b5a_6978, 0x1122_3344_5566_7788],
+        Some(0.5),
+    )
+}
+
+fn noise_a() -> RngSnapshot {
+    rng(
+        [0x1111_1111_1111_1111, 0x2222_2222_2222_2222, 0x3333_3333_3333_3333, 0x4444_4444_4444_4444],
+        None,
+    )
+}
+
+fn time_a() -> RngSnapshot {
+    rng(
+        [0x5555_5555_5555_5555, 0x6666_6666_6666_6666, 0x7777_7777_7777_7777, 0x8888_8888_8888_8888],
+        Some(-0.75),
+    )
+}
+
+fn noise_b() -> RngSnapshot {
+    rng(
+        [0xaaaa_aaaa_aaaa_aaaa, 0xbbbb_bbbb_bbbb_bbbb, 0xcccc_cccc_cccc_cccc, 0xdddd_dddd_dddd_dddd],
+        None,
+    )
+}
+
+fn time_b() -> RngSnapshot {
+    rng(
+        [0xeeee_eeee_eeee_eeee, 0xffff_ffff_ffff_ffff, 0x0123_0123_0123_0123, 0x4567_4567_4567_4567],
+        None,
+    )
+}
+
+/// The fixture snapshot: one trainer, two workers, a sync in flight,
+/// a two-row registry — every field class of the complete variant.
+fn fixture_complete() -> Checkpoint {
+    Checkpoint {
+        config_name: "fixture".into(),
+        config_digest: 0, // legacy containers predate the digest
+        outer_step: 3,
+        total_samples: (1u64 << 53) + 1, // exercises the hex-over-JSON-number rule
+        comm_count: 12,
+        comm_bytes: 4096,
+        comm_wan_bytes: 1024,
+        overlap_hidden_s: 0.5,
+        clock_times: vec![1.5, 2.25],
+        busy_s: vec![1.0, 2.0],
+        wait_s: vec![0.25, 0.0],
+        comm_s: vec![0.125, 0.0625],
+        comm_hidden_s: vec![0.0, 0.0],
+        preempted_s: vec![0.0, 0.5],
+        vacant_s: vec![0.0, 0.75],
+        spawn_count: 1,
+        last_spawn_outer: 2,
+        last_merge_rep: Some(0),
+        live_rounds_sum: 5,
+        rounds_count: 3,
+        registry: vec![
+            RegistryRowSnapshot {
+                id: 0,
+                state: "active".into(),
+                origin: "seed".into(),
+                born_outer: 0,
+                born_at_s: 0.0,
+                retired_outer: None,
+                workers: vec![(0, 0)],
+            },
+            RegistryRowSnapshot {
+                id: 1,
+                state: "spawned".into(),
+                origin: "util".into(),
+                born_outer: 2,
+                born_at_s: 3.5,
+                retired_outer: None,
+                workers: vec![(1, 1)],
+            },
+        ],
+        rng: rng_main(),
+        trainers: vec![TrainerSnapshot {
+            id: 0,
+            params: vec![0.5, -1.25, 3.0, 0.0625],
+            outer_velocity: vec![0.125, -0.5, 0.0, 2.0],
+            requested_batch: 8,
+            inner_steps_done: 18,
+            observations: 36,
+            sigma2_ema: (0.5, 36),
+            ip_var_ema: (0.25, 36),
+            s1_ema: (0.125, 36),
+            shard: vec![0, 2, 4],
+            pending: Some(PendingSnapshot {
+                posted_at: 3.5,
+                completes_at: 3.75,
+                time_s: 0.25,
+                sent_samples: 4096,
+                phases: vec![
+                    PhaseSnapshot { wan: false, bytes: 512, participants: 2 },
+                    PhaseSnapshot { wan: true, bytes: 256, participants: 2 },
+                ],
+                delta: vec![0.25, -0.25, 0.5, -0.5],
+            }),
+            workers: vec![
+                WorkerSnapshot {
+                    params: vec![1.0, 2.0, -3.0, 0.25],
+                    m: vec![0.0625, 0.0, -0.0625, 0.125],
+                    v: vec![0.5, 0.25, 0.125, 0.0625],
+                    step: 18,
+                    active: true,
+                    noise_rng: noise_a(),
+                    time_rng: time_a(),
+                    sampler: SamplerSnapshot {
+                        shard: vec![0, 2, 4],
+                        order: vec![2, 0, 1],
+                        cursor: 1,
+                        drawn: 6,
+                        rng: rng([9, 10, 11, 12], None),
+                    },
+                },
+                WorkerSnapshot {
+                    params: vec![-1.0, 0.5, 0.75, -0.125],
+                    m: vec![0.25, -0.25, 0.0, 0.5],
+                    v: vec![0.0625, 0.125, 0.25, 0.5],
+                    step: 18,
+                    active: false,
+                    noise_rng: noise_b(),
+                    time_rng: time_b(),
+                    sampler: SamplerSnapshot {
+                        shard: vec![1, 3, 5],
+                        order: vec![0, 1, 2],
+                        cursor: 0,
+                        drawn: 0,
+                        rng: rng([13, 14, 15, 16], Some(1.5)),
+                    },
+                },
+            ],
+        }],
+    }
+}
+
+/// Read a committed fixture; with `GOLDEN_WRITE=1`, (re)write it from
+/// the current historical writer first.
+fn fixture_bytes(name: &str, regen: impl Fn() -> Vec<u8>) -> Vec<u8> {
+    let path = format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"));
+    if std::env::var("GOLDEN_WRITE").is_ok() {
+        std::fs::write(&path, regen()).unwrap();
+    }
+    std::fs::read(&path).unwrap_or_else(|e| {
+        panic!("missing fixture {path}: {e}; regenerate with GOLDEN_WRITE=1")
+    })
+}
+
+fn import_complete(raw: &[u8], what: &str) -> Checkpoint {
+    match import_bytes(raw).unwrap_or_else(|e| panic!("{what}: {e}")) {
+        Interchange::Complete(cp) => cp,
+        Interchange::Minimal(_) => panic!("{what}: expected the complete variant"),
+    }
+}
+
+#[test]
+fn fixtures_match_the_current_writers_byte_for_byte() {
+    // the committed bytes (from make_fixtures.py) and the Rust
+    // historical writers must agree exactly — any drift in either
+    // encoder shows up here before it can corrupt the migration story
+    let cp = fixture_complete();
+    assert_eq!(fixture_bytes("v3.ckpt", || export_v3(&cp)), export_v3(&cp), "v3");
+    assert_eq!(fixture_bytes("v2.ckpt", || export_v2(&cp)), export_v2(&cp), "v2");
+    let min = cp.to_minimal();
+    assert_eq!(fixture_bytes("v1.ckpt", || export_v1(&min)), export_v1(&min), "v1");
+}
+
+#[test]
+fn v3_fixture_imports_losslessly() {
+    let cp = import_complete(&fixture_bytes("v3.ckpt", || export_v3(&fixture_complete())), "v3");
+    assert_eq!(cp, fixture_complete());
+}
+
+#[test]
+fn v2_fixture_imports_with_elastic_defaults() {
+    let cp = import_complete(&fixture_bytes("v2.ckpt", || export_v2(&fixture_complete())), "v2");
+    let want = fixture_complete();
+    assert_eq!(cp.trainers, want.trainers);
+    assert_eq!(cp.outer_step, want.outer_step);
+    assert_eq!(cp.total_samples, want.total_samples);
+    assert_eq!(cp.clock_times, want.clock_times);
+    assert_eq!(cp.busy_s, want.busy_s);
+    assert_eq!(cp.rng, want.rng);
+    // v2 could not express the elastic lifecycle: zero vacancy/spawn
+    // bookkeeping and a synthesized one-row seed registry
+    assert_eq!(cp.vacant_s, vec![0.0; want.clock_times.len()]);
+    assert_eq!(cp.spawn_count, 0);
+    assert_eq!(cp.last_merge_rep, None);
+    assert_eq!(cp.registry.len(), 1);
+    assert_eq!(cp.registry[0].id, 0);
+    assert_eq!(cp.registry[0].state, "active");
+    assert_eq!(cp.registry[0].origin, "seed");
+}
+
+#[test]
+fn v1_fixture_imports_as_minimal() {
+    let raw = fixture_bytes("v1.ckpt", || export_v1(&fixture_complete().to_minimal()));
+    let min = match import_bytes(&raw).unwrap() {
+        Interchange::Minimal(m) => m,
+        Interchange::Complete(_) => panic!("v1 must import as the minimal variant"),
+    };
+    assert_eq!(min, fixture_complete().to_minimal());
+}
+
+#[test]
+fn every_fixture_reexports_to_an_equivalent_v4() {
+    // the acceptance bar: import vN, write v4, read it back — nothing
+    // may be lost or altered, and the v4 encode must be deterministic
+    for (name, raw) in [
+        ("v2", fixture_bytes("v2.ckpt", || export_v2(&fixture_complete()))),
+        ("v3", fixture_bytes("v3.ckpt", || export_v3(&fixture_complete()))),
+    ] {
+        let cp = import_complete(&raw, name);
+        let v4 = cp.to_bytes();
+        assert_eq!(v4, cp.to_bytes(), "{name}: v4 encode is deterministic");
+        assert_eq!(
+            import_complete(&v4, name),
+            cp,
+            "{name}: v4 re-export round-trips the import"
+        );
+    }
+    let raw = fixture_bytes("v1.ckpt", || export_v1(&fixture_complete().to_minimal()));
+    let min = match import_bytes(&raw).unwrap() {
+        Interchange::Minimal(m) => m,
+        other => panic!("v1: {other:?}"),
+    };
+    let v4 = min.to_bytes();
+    match import_bytes(&v4).unwrap() {
+        Interchange::Minimal(back) => assert_eq!(back, min, "v1 → v4 minimal round-trip"),
+        other => panic!("v4 minimal decoded as {other:?}"),
+    }
+}
+
+#[test]
+fn damaged_fixtures_fail_with_typed_errors() {
+    // the legacy import path shares the no-silent-resume contract:
+    // cuts and flips on the committed bytes are typed errors
+    let cp = fixture_complete();
+    for (name, regen) in [
+        ("v1.ckpt", export_v1(&cp.to_minimal())),
+        ("v2.ckpt", export_v2(&cp)),
+        ("v3.ckpt", export_v3(&cp)),
+    ] {
+        let raw = fixture_bytes(name, || regen.clone());
+        for cut in [0, 7, 11, raw.len() / 2, raw.len() - 1] {
+            assert!(import_bytes(&raw[..cut]).is_err(), "{name}: cut {cut} accepted");
+        }
+        for pos in [9, 12, raw.len() / 2, raw.len() - 2] {
+            let mut flipped = raw.clone();
+            flipped[pos] ^= 0x40;
+            assert!(import_bytes(&flipped).is_err(), "{name}: flip {pos} accepted");
+        }
+    }
+}
+
+#[test]
+fn minimal_checkpoint_matches_its_v1_ancestor_semantics() {
+    // `to_minimal` of the fixture and the v1 container describe the
+    // same snapshot: same ids, params and stream states
+    let min = fixture_complete().to_minimal();
+    assert_eq!(min.config_name, "fixture");
+    assert_eq!(min.outer_step, 3);
+    assert_eq!(min.trainers.len(), 1);
+    assert_eq!(min.trainers[0].params, vec![0.5, -1.25, 3.0, 0.0625]);
+    assert_eq!(min.trainers[0].workers.len(), 2);
+    assert_eq!(min.trainers[0].workers[0].noise_rng, noise_a());
+    assert_eq!(min.trainers[0].workers[1].time_rng, time_b());
+    let _: &MinimalCheckpoint = &min; // the variant exact resume refuses
+    let err = Checkpoint::from_bytes(&min.to_bytes()).unwrap_err();
+    assert!(format!("{err:#}").contains("minimal"), "{err:#}");
+}

@@ -561,3 +561,180 @@ fn prop_elastic_off_never_spawns() {
         assert!(plan.is_empty(), "elastic=off must never spawn");
     }
 }
+
+// ---------------------------------------------------------------------------
+// checkpoint interchange round-trips on random snapshots (DESIGN.md §10)
+// ---------------------------------------------------------------------------
+
+use adloco::checkpoint::{
+    import_bytes, legacy, Checkpoint, Interchange, PendingSnapshot, PhaseSnapshot,
+    RegistryRowSnapshot, RngSnapshot, SamplerSnapshot, TrainerSnapshot, WorkerSnapshot,
+};
+
+fn random_rng_snapshot(rng: &mut Rng) -> RngSnapshot {
+    RngSnapshot {
+        s: [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()],
+        gauss_spare: if rng.f64() < 0.5 { Some(rng.f64() * 4.0 - 2.0) } else { None },
+    }
+}
+
+fn random_f32s(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_ms(0.0, 2.0) as f32).collect()
+}
+
+fn random_f64s(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.f64() * 1e4).collect()
+}
+
+/// A structurally valid random snapshot: every vector length declared
+/// in the header matches its blob payload, worker moment vectors share
+/// the worker's parameter length, and the registry rows use the real
+/// lifecycle vocabulary — values themselves (counters above 2^53,
+/// negative floats, empty shards) are adversarial.
+fn random_checkpoint(rng: &mut Rng) -> Checkpoint {
+    let slots = 1 + rng.below(4) as usize;
+    let n_trainers = 1 + rng.below(3) as usize;
+    let trainers: Vec<TrainerSnapshot> = (0..n_trainers)
+        .map(|id| {
+            let p_len = 1 + rng.below(8) as usize;
+            let workers = (0..1 + rng.below(3) as usize)
+                .map(|_| {
+                    let w_len = 1 + rng.below(8) as usize;
+                    WorkerSnapshot {
+                        params: random_f32s(rng, w_len),
+                        m: random_f32s(rng, w_len),
+                        v: random_f32s(rng, w_len),
+                        step: rng.next_u64(),
+                        active: rng.below(2) == 0,
+                        noise_rng: random_rng_snapshot(rng),
+                        time_rng: random_rng_snapshot(rng),
+                        sampler: SamplerSnapshot {
+                            shard: (0..rng.below(6) as usize).collect(),
+                            order: (0..rng.below(6) as usize).collect(),
+                            cursor: rng.below(6) as usize,
+                            drawn: rng.next_u64(),
+                            rng: random_rng_snapshot(rng),
+                        },
+                    }
+                })
+                .collect();
+            TrainerSnapshot {
+                id,
+                params: random_f32s(rng, p_len),
+                outer_velocity: random_f32s(rng, rng.below(8) as usize),
+                requested_batch: 1 + rng.below(512) as usize,
+                inner_steps_done: rng.next_u64(),
+                observations: rng.next_u64(),
+                sigma2_ema: (rng.f64() * 10.0, rng.next_u64()),
+                ip_var_ema: (rng.f64() * 10.0, rng.next_u64()),
+                s1_ema: (rng.f64() * 10.0, rng.next_u64()),
+                shard: (0..rng.below(6) as usize).collect(),
+                pending: if rng.below(2) == 0 {
+                    Some(PendingSnapshot {
+                        posted_at: rng.f64() * 100.0,
+                        completes_at: rng.f64() * 200.0,
+                        time_s: rng.f64(),
+                        sent_samples: rng.next_u64(),
+                        phases: (0..1 + rng.below(3) as usize)
+                            .map(|_| PhaseSnapshot {
+                                wan: rng.below(2) == 0,
+                                bytes: rng.next_u64(),
+                                participants: 1 + rng.below(8) as usize,
+                            })
+                            .collect(),
+                        delta: random_f32s(rng, rng.below(8) as usize),
+                    })
+                } else {
+                    None
+                },
+                workers,
+            }
+        })
+        .collect();
+    let registry = (0..n_trainers + rng.below(3) as usize)
+        .map(|id| RegistryRowSnapshot {
+            id,
+            state: ["spawned", "active", "merging", "retired"][rng.below(4) as usize].into(),
+            origin: ["seed", "util", "respawn"][rng.below(3) as usize].into(),
+            born_outer: rng.below(100),
+            born_at_s: rng.f64() * 1e3,
+            retired_outer: if rng.below(2) == 0 { Some(rng.below(100)) } else { None },
+            workers: (0..rng.below(3) as usize).map(|w| (rng.below(4) as usize, w)).collect(),
+        })
+        .collect();
+    Checkpoint {
+        config_name: format!("prop_ckpt_{}", rng.below(1000)),
+        config_digest: rng.next_u64(),
+        outer_step: rng.below(1_000_000),
+        total_samples: rng.next_u64(), // above 2^53 half the time
+        comm_count: rng.next_u64(),
+        comm_bytes: rng.next_u64(),
+        comm_wan_bytes: rng.next_u64(),
+        overlap_hidden_s: rng.f64() * 1e4,
+        clock_times: random_f64s(rng, slots),
+        busy_s: random_f64s(rng, slots),
+        wait_s: random_f64s(rng, slots),
+        comm_s: random_f64s(rng, slots),
+        comm_hidden_s: random_f64s(rng, slots),
+        preempted_s: random_f64s(rng, slots),
+        vacant_s: random_f64s(rng, slots),
+        spawn_count: rng.below(100),
+        last_spawn_outer: rng.below(100),
+        last_merge_rep: if rng.below(2) == 0 { Some(rng.below(8) as usize) } else { None },
+        live_rounds_sum: rng.next_u64(),
+        rounds_count: rng.below(1000),
+        registry,
+        rng: random_rng_snapshot(rng),
+        trainers,
+    }
+}
+
+#[test]
+fn prop_checkpoint_export_import_export_is_byte_identical() {
+    // the v4 encoder is a pure function of the snapshot and the decoder
+    // inverts it exactly: export → import → export reproduces the very
+    // same bytes, for arbitrary valid snapshots
+    let mut rng = Rng::new(1000);
+    for case in 0..60 {
+        let cp = random_checkpoint(&mut rng);
+        let bytes = cp.to_bytes();
+        let back = match import_bytes(&bytes).unwrap_or_else(|e| panic!("case {case}: {e}")) {
+            Interchange::Complete(c) => c,
+            other => panic!("case {case}: {other:?}"),
+        };
+        assert_eq!(back, cp, "case {case}: struct round-trip");
+        assert_eq!(back.to_bytes(), bytes, "case {case}: byte round-trip");
+    }
+}
+
+#[test]
+fn prop_minimal_checkpoint_roundtrip_is_byte_identical() {
+    let mut rng = Rng::new(1001);
+    for case in 0..60 {
+        let min = random_checkpoint(&mut rng).to_minimal();
+        let bytes = min.to_bytes();
+        let back = match import_bytes(&bytes).unwrap_or_else(|e| panic!("case {case}: {e}")) {
+            Interchange::Minimal(m) => m,
+            other => panic!("case {case}: {other:?}"),
+        };
+        assert_eq!(back, min, "case {case}: struct round-trip");
+        assert_eq!(back.to_bytes(), bytes, "case {case}: byte round-trip");
+    }
+}
+
+#[test]
+fn prop_legacy_v3_import_inverts_the_historical_writer() {
+    // migration is lossless on arbitrary snapshots, not just the golden
+    // fixture: export_v3 → import recovers everything but the digest
+    let mut rng = Rng::new(1002);
+    for case in 0..40 {
+        let cp = random_checkpoint(&mut rng);
+        let back = match import_bytes(&legacy::export_v3(&cp)).unwrap() {
+            Interchange::Complete(c) => c,
+            other => panic!("case {case}: {other:?}"),
+        };
+        let mut want = cp;
+        want.config_digest = 0; // v3 predates the digest
+        assert_eq!(back, want, "case {case}");
+    }
+}

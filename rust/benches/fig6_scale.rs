@@ -1,0 +1,282 @@
+//! FIG6 — event-path scalability under fleet-scale traced workloads
+//! (DESIGN.md §11): the `fleet_trace` preset's spot-market replay scaled
+//! to 100 / 1,000 / 10,000 workers, recording wall-clock versus node
+//! count and pinning each point's record stream with the FROZEN FNV
+//! digest recipe (the `tests/topology.rs` golden-seam convention:
+//! in-process cross-thread equality always asserted; the absolute bits
+//! live in `tests/fixtures/fig6_scale.txt`, written on the reference
+//! machine with `GOLDEN_WRITE=1` and compared whenever present).
+//!
+//! Asserted invariants:
+//!
+//! * every scale point completes on the event scheduler — including the
+//!   10k-worker point in `--smoke` mode (the CI leg);
+//! * the smallest point is **bit-identical** across `threads=1` and
+//!   `threads=4` (the determinism contract, DESIGN.md §6, at the
+//!   fleet-trace seam);
+//! * the generated trace is identical across the points' construction
+//!   (same seed ⇒ same per-node streams), so digests are functions of
+//!   scale alone.
+//!
+//! Output: summary table + bench_results/fig6_scale.csv + the repo's
+//! first perf artifact, bench_results/BENCH_fig6.json (wall-clock vs
+//! node count rows; uploaded by CI).
+//!
+//! Run: `cargo bench --bench fig6_scale` (`--smoke` — or `--quick` /
+//! `ADLOCO_BENCH_QUICK=1` — for the CI-sized schedule; `--threads N`
+//! fans worker chains out, bit-identically).
+
+use adloco::benchkit::{
+    bench_args, quick_mode, threads_arg, wall_time, write_json_artifact, Table,
+};
+use adloco::comm::{CommLedger, CommScope};
+use adloco::config::{presets, Config, NodeConfig};
+use adloco::coordinator::{Coordinator, RunResult};
+use adloco::engine::build_engine;
+use adloco::metrics::Recorder;
+use adloco::util::JsonValue;
+
+fn smoke_mode() -> bool {
+    quick_mode() || bench_args().iter().any(|a| a == "--smoke")
+}
+
+/// The `fleet_trace` preset rescaled to `workers` workers: 4 workers
+/// per trainer, 2 workers per node, uniform hosts. The trace source
+/// (spot-market generator) rides along and regenerates for the larger
+/// node count from the same seed-derived streams.
+fn scale_config(workers: usize, smoke: bool, threads: usize) -> Config {
+    assert!(workers % 4 == 0 && workers % 2 == 0);
+    let mut cfg = presets::fleet_trace();
+    cfg.name = format!("fig6_w{workers}");
+    cfg.algo.num_trainers = workers / 4;
+    cfg.algo.workers_per_trainer = 4;
+    cfg.cluster.nodes =
+        (0..workers / 2).map(|_| NodeConfig { max_batch: 32, speed: 1.0 }).collect();
+    if smoke {
+        cfg.algo.outer_steps = 3;
+        cfg.algo.inner_steps = 4;
+        cfg.engine = adloco::config::EngineConfig::Mock { dim: 64, noise: 1.0, condition: 10.0 };
+        // fixed micro-batches keep the smoke flop budget linear in the
+        // worker count (adaptive growth is fig1-fig3 territory)
+        cfg.algo.batching.adaptive = false;
+        cfg.algo.fixed_batch = 4;
+        cfg.run.eval_batches = 1;
+        cfg.data.val_sequences = 64;
+    }
+    cfg.run.threads = threads;
+    cfg
+}
+
+fn run_arm(cfg: Config) -> (RunResult, Recorder, CommLedger, f64) {
+    let engine = build_engine(&cfg).unwrap();
+    let mut coord = Coordinator::new(cfg, engine).unwrap();
+    let (r, wall_s) = wall_time(|| coord.run().unwrap());
+    let rec = coord.recorder.clone();
+    let ledger = coord.ledger().clone();
+    (r, rec, ledger, wall_s)
+}
+
+/// FNV-1a over a byte string (the digest hash).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The FROZEN golden-digest serialization from `tests/common/mod.rs`,
+/// inlined because benches cannot link the test support crate. Any
+/// drift from that recipe is a bug: the fixture written here must stay
+/// comparable with the digests the integration suites pin.
+fn digest(r: &RunResult, rec: &Recorder, ledger: &CommLedger) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    for e in &ledger.events {
+        let kind = match e.kind {
+            adloco::comm::CommKind::OuterSync => "sync",
+            adloco::comm::CommKind::Merge => "merge",
+        };
+        let scope = match e.scope {
+            CommScope::Intra => "intra",
+            CommScope::Wan => "wan",
+        };
+        let _ = writeln!(
+            s,
+            "L:{kind}:{scope}:{}:{}:{}:{:016x}",
+            e.bytes,
+            e.participants,
+            e.at_inner_step,
+            e.at_virtual_s.to_bits()
+        );
+    }
+    for st in &rec.steps {
+        let _ = writeln!(
+            s,
+            "S:{}:{}:{}:{}:{}:{}:{}:{:016x}:{:016x}:{:016x}:{:016x}",
+            st.global_step,
+            st.outer_step,
+            st.trainer,
+            st.worker,
+            st.batch,
+            st.requested_batch,
+            st.accum_steps,
+            st.loss.to_bits(),
+            st.grad_sq_norm.to_bits(),
+            st.sigma2.to_bits(),
+            st.virtual_time_s.to_bits()
+        );
+    }
+    for e in &rec.evals {
+        let _ = writeln!(
+            s,
+            "E:{}:{}:{}:{}:{}:{:016x}:{:016x}:{:016x}",
+            e.global_step,
+            e.outer_step,
+            e.trainer,
+            e.comm_count,
+            e.comm_bytes,
+            e.loss.to_bits(),
+            e.perplexity.to_bits(),
+            e.virtual_time_s.to_bits()
+        );
+    }
+    for m in &rec.merges {
+        let _ = writeln!(
+            s,
+            "M:{}:{:?}:{}:{}:{:016x}",
+            m.outer_step,
+            m.merged,
+            m.representative,
+            m.trainers_left,
+            m.virtual_time_s.to_bits()
+        );
+    }
+    for u in &rec.utilization {
+        let _ = writeln!(
+            s,
+            "U:{}:{}:{}:{:016x}:{:016x}:{:016x}:{:016x}",
+            u.trainer,
+            u.worker,
+            u.node,
+            u.busy_s.to_bits(),
+            u.wait_s.to_bits(),
+            u.comm_s.to_bits(),
+            u.preempted_s.to_bits()
+        );
+    }
+    let _ = writeln!(
+        s,
+        "R:{}:{}:{}:{}:{}:{:016x}:{:016x}:{:016x}",
+        r.total_inner_steps,
+        r.total_samples,
+        r.comm_count,
+        r.comm_bytes,
+        r.trainers_left,
+        r.best_ppl.to_bits(),
+        r.final_ppl.to_bits(),
+        r.virtual_time_s.to_bits()
+    );
+    format!("{:016x}", fnv1a(s.as_bytes()))
+}
+
+/// Golden fixture for the smoke grid (the CI configuration): one
+/// `workers=<N> digest=<hex>` line per scale point. `GOLDEN_WRITE=1`
+/// (re)writes it on the reference machine; when the file exists, every
+/// run — on both RUN_THREADS CI legs — must reproduce it bit for bit.
+fn check_fixture(points: &[(usize, String)]) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/fig6_scale.txt");
+    let rendered: String =
+        points.iter().map(|(w, d)| format!("workers={w} digest={d}\n")).collect();
+    if std::env::var("GOLDEN_WRITE").as_deref() == Ok("1") {
+        std::fs::write(path, &rendered).unwrap();
+        eprintln!("fig6_scale: wrote golden fixture {path}");
+        return;
+    }
+    match std::fs::read_to_string(path) {
+        Ok(want) => {
+            assert_eq!(
+                rendered, want,
+                "fig6_scale: record-stream digests drifted from the pinned golden {path}"
+            );
+            eprintln!("fig6_scale: golden fixture matched ({} points)", points.len());
+        }
+        Err(_) => eprintln!(
+            "fig6_scale: no golden fixture at {path} (set GOLDEN_WRITE=1 to pin); \
+             cross-thread bit-identity still asserted in-process"
+        ),
+    }
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let threads = threads_arg();
+    if smoke {
+        eprintln!("fig6_scale: smoke mode (reduced schedule)");
+    }
+
+    // ---- cross-thread bit-identity at the smallest point ----------------
+    let (r1, rec1, led1, _) = run_arm(scale_config(100, smoke, 1));
+    let (r4, rec4, led4, _) = run_arm(scale_config(100, smoke, 4));
+    let d1 = digest(&r1, &rec1, &led1);
+    let d4 = digest(&r4, &rec4, &led4);
+    assert_eq!(d1, d4, "threads=1 vs threads=4 digests must match (DESIGN.md §6)");
+
+    // ---- the scale grid --------------------------------------------------
+    let grid: &[usize] = &[100, 1_000, 10_000];
+    let mut table =
+        Table::new(&["workers", "nodes", "trainers", "steps", "vtime_s", "wall_s", "digest"]);
+    let mut points: Vec<(usize, String)> = Vec::new();
+    let mut rows: Vec<JsonValue> = Vec::new();
+    for &w in grid {
+        let cfg = scale_config(w, smoke, threads);
+        let nodes = cfg.cluster.nodes.len();
+        let trainers = cfg.algo.num_trainers;
+        let (r, rec, led, wall_s) = run_arm(cfg);
+        let d = digest(&r, &rec, &led);
+        assert!(r.total_inner_steps > 0, "the {w}-worker point must actually step");
+        table.row(&[
+            w.to_string(),
+            nodes.to_string(),
+            trainers.to_string(),
+            r.total_inner_steps.to_string(),
+            format!("{:.3}", r.virtual_time_s),
+            format!("{wall_s:.3}"),
+            d.clone(),
+        ]);
+        rows.push(JsonValue::obj(vec![
+            ("workers", JsonValue::num(w as f64)),
+            ("nodes", JsonValue::num(nodes as f64)),
+            ("trainers", JsonValue::num(trainers as f64)),
+            ("inner_steps", JsonValue::num(r.total_inner_steps as f64)),
+            ("virtual_time_s", JsonValue::num(r.virtual_time_s)),
+            ("wall_s", JsonValue::num(wall_s)),
+            ("digest", JsonValue::str(d.clone())),
+        ]));
+        points.push((w, d));
+    }
+
+    // the fixture pins the CI (smoke) configuration only; the full
+    // schedule produces its own digests and is not golden-pinned
+    if smoke {
+        check_fixture(&points);
+    }
+
+    table.print();
+    table.write_csv("fig6_scale").ok();
+    let artifact = JsonValue::obj(vec![
+        ("bench", JsonValue::str("fig6_scale")),
+        ("smoke", JsonValue::Bool(smoke)),
+        ("threads", JsonValue::num(threads as f64)),
+        ("rows", JsonValue::Array(rows)),
+    ]);
+    write_json_artifact("fig6", &artifact).ok();
+
+    println!(
+        "\nfig6_scale: {} points up to {} workers completed on the event path \
+         (threads={threads}, smoke={smoke})",
+        grid.len(),
+        grid.last().unwrap()
+    );
+}

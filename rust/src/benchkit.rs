@@ -138,6 +138,21 @@ impl Table {
     }
 }
 
+/// Write a machine-readable perf artifact under `bench_results/` —
+/// `BENCH_<name>.json`, the convention CI uploads as a workflow
+/// artifact (EXPERIMENTS.md §Perf). Returns the written path.
+pub fn write_json_artifact(
+    name: &str,
+    value: &crate::util::JsonValue,
+) -> std::io::Result<String> {
+    std::fs::create_dir_all("bench_results")?;
+    let path = format!("bench_results/BENCH_{name}.json");
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{}", value.to_string_pretty())?;
+    eprintln!("wrote {path}");
+    Ok(path)
+}
+
 /// The shared work-stealing fan-out (see [`crate::util::parallel`]),
 /// re-exported here because the fig1/fig2 bench grids are its original
 /// public surface.
@@ -233,5 +248,20 @@ mod tests {
         let text = std::fs::read_to_string("bench_results/benchkit_selftest.csv").unwrap();
         assert!(text.contains("a,b"));
         std::fs::remove_file("bench_results/benchkit_selftest.csv").ok();
+    }
+
+    #[test]
+    fn json_artifact_roundtrips() {
+        use crate::util::JsonValue;
+        let v = JsonValue::obj(vec![
+            ("bench", JsonValue::str("selftest")),
+            ("rows", JsonValue::Array(vec![JsonValue::num(1.0), JsonValue::num(2.0)])),
+        ]);
+        let path = write_json_artifact("selftest", &v).unwrap();
+        assert_eq!(path, "bench_results/BENCH_selftest.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = JsonValue::parse(text.trim()).unwrap();
+        assert_eq!(back.get("bench").and_then(|x| x.as_str()), Some("selftest"));
+        std::fs::remove_file(&path).ok();
     }
 }

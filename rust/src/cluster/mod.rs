@@ -174,12 +174,22 @@ pub struct ClusterState {
 }
 
 impl ClusterState {
-    /// Build the cluster layer for `slots` worker clock slots.
+    /// Build the cluster layer for `slots` worker clock slots, compiling
+    /// the stochastic `cluster.scenario` block directly.
     pub fn new(cfg: &ClusterConfig, slots: usize) -> ClusterState {
+        let scenario = Scenario::compile(&cfg.scenario, cfg.nodes.len());
+        ClusterState::new_with_scenario(cfg, slots, scenario)
+    }
+
+    /// Build the cluster layer around an already-compiled scenario —
+    /// the `ScenarioSource` seam (DESIGN.md §11): the coordinator
+    /// resolves `cluster.trace` (stochastic model, trace file, or
+    /// generator) and injects the result here.
+    pub fn new_with_scenario(cfg: &ClusterConfig, slots: usize, scenario: Scenario) -> ClusterState {
         ClusterState {
             clock: VirtualClock::new(slots),
             nodes: node_models(cfg),
-            scenario: Scenario::compile(&cfg.scenario, cfg.nodes.len()),
+            scenario,
             topology: Topology::compile(cfg),
             busy_s: vec![0.0; slots],
             wait_s: vec![0.0; slots],
@@ -270,7 +280,10 @@ impl ClusterState {
     /// (the `Shard::split` / `union_shards` machinery).
     #[allow(clippy::needless_range_loop)] // body interleaves &mut self calls
     pub fn apply_churn(&mut self, trainers: &mut [Trainer], rng: &mut Rng) -> Result<()> {
-        if self.scenario.is_static() {
+        // only preemption windows need boundary bookkeeping; shift- or
+        // straggler-only scenarios used to pay this full-fleet sweep
+        // too, which the fig6 scale pass showed up at 10k workers
+        if !self.scenario.has_windows() {
             return Ok(());
         }
         for ti in 0..trainers.len() {

@@ -562,6 +562,95 @@ impl ScenarioConfig {
     }
 }
 
+/// Where the run's workload scenario comes from (the `ScenarioSource`
+/// seam, DESIGN.md §11). Non-stochastic sources replace the
+/// `cluster.scenario` block, which must then stay at its static
+/// default (validated — two sources would be ambiguous).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum TraceSourceConfig {
+    /// Compile the stochastic `cluster.scenario` model (default).
+    #[default]
+    Stochastic,
+    /// Replay a JSONL trace file (`simulator::Trace`); set via
+    /// `cluster.trace_path`.
+    Path(String),
+    /// Generate a deterministic trace at startup
+    /// (`simulator::generators`); set via `cluster.trace_gen`.
+    Generator(TraceGenConfig),
+}
+
+/// Which fleet-dynamics generator builds the trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceGenKind {
+    /// Per-node alternating exponential up/down preemption windows.
+    SpotMarket,
+    /// Sinusoidal per-node compute-slowdown timelines (speed-only, so
+    /// legal under the lockstep scheduler).
+    Diurnal,
+    /// Correlated outages taking whole `cluster.groups` racks down.
+    RackFailures,
+}
+
+impl TraceGenKind {
+    /// Parse the config-file spelling.
+    pub fn parse(s: &str) -> Result<TraceGenKind> {
+        match s {
+            "spot_market" => Ok(TraceGenKind::SpotMarket),
+            "diurnal" => Ok(TraceGenKind::Diurnal),
+            "rack_failures" => Ok(TraceGenKind::RackFailures),
+            _ => bail!("unknown trace generator {s:?} (spot_market | diurnal | rack_failures)"),
+        }
+    }
+
+    /// Canonical config-file spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TraceGenKind::SpotMarket => "spot_market",
+            TraceGenKind::Diurnal => "diurnal",
+            TraceGenKind::RackFailures => "rack_failures",
+        }
+    }
+}
+
+/// Knobs for the deterministic trace generators. Only the fields the
+/// chosen `kind` reads are validated; the rest ride along so partial
+/// overlays can switch kinds without resetting everything.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceGenConfig {
+    /// Generator flavour.
+    pub kind: TraceGenKind,
+    /// Trace horizon: events are generated over `[0, horizon_s)` of
+    /// virtual time.
+    pub horizon_s: f64,
+    /// Spot market: mean up-time between preemptions (seconds).
+    pub mean_up_s: f64,
+    /// Spot market / rack failures: mean outage length (seconds).
+    pub mean_down_s: f64,
+    /// Diurnal: load-wave period (seconds).
+    pub period_s: f64,
+    /// Diurnal: peak extra slowdown (factor tops out at 1 + amplitude).
+    pub amplitude: f64,
+    /// Diurnal: piecewise-constant samples per period.
+    pub samples_per_period: usize,
+    /// Rack failures: outage windows drawn per rack.
+    pub outages_per_rack: usize,
+}
+
+impl Default for TraceGenConfig {
+    fn default() -> Self {
+        TraceGenConfig {
+            kind: TraceGenKind::SpotMarket,
+            horizon_s: 20.0,
+            mean_up_s: 6.0,
+            mean_down_s: 1.5,
+            period_s: 10.0,
+            amplitude: 0.5,
+            samples_per_period: 8,
+            outages_per_rack: 1,
+        }
+    }
+}
+
 /// The simulated cluster: nodes, network, and dynamic workload.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -582,6 +671,10 @@ pub struct ClusterConfig {
     pub step_jitter: f64,
     /// Dynamic-workload scenario (stragglers / churn / link shifts).
     pub scenario: ScenarioConfig,
+    /// Scenario source seam (DESIGN.md §11): the stochastic `scenario`
+    /// block, a replayed JSONL trace file, or a deterministic trace
+    /// generator.
+    pub trace: TraceSourceConfig,
     /// Topology flavour: flat (one shared network) or hierarchical
     /// (node groups + WAN between group leaders) — DESIGN.md §7.
     pub topology: TopologyKind,
@@ -807,6 +900,86 @@ impl Config {
                  (the lockstep reference walk cannot express it)"
             );
         }
+        match &self.cluster.trace {
+            TraceSourceConfig::Stochastic => {}
+            TraceSourceConfig::Path(p) => {
+                if p.is_empty() {
+                    bail!("cluster.trace_path must be non-empty");
+                }
+                if !sc.is_static() {
+                    bail!(
+                        "cluster.trace replaces the stochastic scenario; \
+                         clear cluster.scenario or drop the trace (ambiguous sources)"
+                    );
+                }
+                // whether the file's dynamics need the event scheduler
+                // is only known after loading; Coordinator::new checks.
+            }
+            TraceSourceConfig::Generator(g) => {
+                if !sc.is_static() {
+                    bail!(
+                        "cluster.trace replaces the stochastic scenario; \
+                         clear cluster.scenario or drop the generator (ambiguous sources)"
+                    );
+                }
+                if !g.horizon_s.is_finite() || g.horizon_s <= 0.0 {
+                    bail!("trace_gen.horizon_s must be finite and > 0");
+                }
+                match g.kind {
+                    TraceGenKind::SpotMarket => {
+                        if !g.mean_up_s.is_finite()
+                            || g.mean_up_s <= 0.0
+                            || !g.mean_down_s.is_finite()
+                            || g.mean_down_s <= 0.0
+                        {
+                            bail!("trace_gen spot_market needs mean_up_s, mean_down_s > 0");
+                        }
+                    }
+                    TraceGenKind::Diurnal => {
+                        if !g.period_s.is_finite() || g.period_s <= 0.0 {
+                            bail!("trace_gen.period_s must be finite and > 0");
+                        }
+                        if !g.amplitude.is_finite() || g.amplitude < 0.0 {
+                            bail!("trace_gen.amplitude must be finite and >= 0");
+                        }
+                        if g.samples_per_period == 0 {
+                            bail!("trace_gen.samples_per_period must be >= 1");
+                        }
+                    }
+                    TraceGenKind::RackFailures => {
+                        if !g.mean_down_s.is_finite() || g.mean_down_s <= 0.0 {
+                            bail!("trace_gen rack_failures needs mean_down_s > 0");
+                        }
+                        if g.outages_per_rack == 0 {
+                            bail!("trace_gen.outages_per_rack must be >= 1");
+                        }
+                        if self.cluster.groups.is_empty() {
+                            bail!("trace_gen rack_failures requires cluster.groups (the rack map)");
+                        }
+                        let n = self.cluster.nodes.len();
+                        for (gi, members) in self.cluster.groups.iter().enumerate() {
+                            if let Some(&node) = members.iter().find(|&&node| node >= n) {
+                                bail!(
+                                    "cluster.groups[{gi}] node {node} out of range ({n} nodes)"
+                                );
+                            }
+                        }
+                    }
+                }
+                // preemption traces interleave with scheduling in ways
+                // the lockstep walk cannot express; diurnal (speed-only)
+                // traces are deterministic and scheduler-agnostic
+                if matches!(g.kind, TraceGenKind::SpotMarket | TraceGenKind::RackFailures)
+                    && self.run.scheduler != SchedulerKind::Event
+                {
+                    bail!(
+                        "trace generator {:?} produces preemption windows and requires \
+                         run.scheduler=event",
+                        g.kind.as_str()
+                    );
+                }
+            }
+        }
         if self.data.vocab < 2 || self.data.seq_len == 0 {
             bail!("data.vocab >= 2 and data.seq_len >= 1 required");
         }
@@ -817,8 +990,10 @@ impl Config {
             bail!("data.shard_fraction must be in [0,1]");
         }
         let total_workers = a.num_trainers * a.workers_per_trainer;
-        if total_workers > 4096 {
-            bail!("{total_workers} workers is beyond the simulator's design range");
+        if total_workers > 16384 {
+            // raised from 4096 by the fig6 scale pass (DESIGN.md §11):
+            // the event path sustains the 10k-worker fleet point
+            bail!("{total_workers} workers is beyond the simulator's design range (16384)");
         }
         Ok(())
     }
@@ -1127,6 +1302,58 @@ fn apply_cluster(c: &mut ClusterConfig, v: &JsonValue) -> Result<()> {
     if let Some(s) = v.get("scenario") {
         apply_scenario(&mut c.scenario, s)?;
     }
+    if let Some(x) = v.get("trace_source").and_then(|x| x.as_str()) {
+        // explicit reset back to the stochastic model (the other
+        // variants are selected by trace_path / trace_gen below)
+        match x {
+            "stochastic" => c.trace = TraceSourceConfig::Stochastic,
+            other => bail!(
+                "cluster.trace_source {other:?} unknown (use \"stochastic\", or set \
+                 cluster.trace_path / cluster.trace_gen)"
+            ),
+        }
+    }
+    if let Some(x) = v.get("trace_path").and_then(|x| x.as_str()) {
+        c.trace = TraceSourceConfig::Path(x.to_string());
+    }
+    if let Some(gv) = v.get("trace_gen") {
+        // partial overlay over the current generator knobs (or the
+        // defaults when the source was not a generator); a bare string
+        // just picks the kind: `--set cluster.trace_gen=spot_market`
+        let mut g = match &c.trace {
+            TraceSourceConfig::Generator(g) => g.clone(),
+            _ => TraceGenConfig::default(),
+        };
+        if let Some(s) = gv.as_str() {
+            g.kind = TraceGenKind::parse(s)?;
+        } else {
+            if let Some(s) = gv.get("kind").and_then(|x| x.as_str()) {
+                g.kind = TraceGenKind::parse(s)?;
+            }
+            if let Some(x) = gv.get("horizon_s").and_then(|x| x.as_f64()) {
+                g.horizon_s = x;
+            }
+            if let Some(x) = gv.get("mean_up_s").and_then(|x| x.as_f64()) {
+                g.mean_up_s = x;
+            }
+            if let Some(x) = gv.get("mean_down_s").and_then(|x| x.as_f64()) {
+                g.mean_down_s = x;
+            }
+            if let Some(x) = gv.get("period_s").and_then(|x| x.as_f64()) {
+                g.period_s = x;
+            }
+            if let Some(x) = gv.get("amplitude").and_then(|x| x.as_f64()) {
+                g.amplitude = x;
+            }
+            if let Some(x) = gv.get("samples_per_period").and_then(|x| x.as_usize()) {
+                g.samples_per_period = x;
+            }
+            if let Some(x) = gv.get("outages_per_rack").and_then(|x| x.as_usize()) {
+                g.outages_per_rack = x;
+            }
+        }
+        c.trace = TraceSourceConfig::Generator(g);
+    }
     if let Some(x) = v.get("topology").and_then(|x| x.as_str()) {
         c.topology = TopologyKind::parse(x)?;
     }
@@ -1292,6 +1519,51 @@ mod tests {
         presets::hetero_dynamic().validate().unwrap();
         presets::hierarchical_mit().validate().unwrap();
         presets::elastic_mit().validate().unwrap();
+        presets::fleet_trace().validate().unwrap();
+    }
+
+    #[test]
+    fn trace_source_overrides_and_validation() {
+        let mut cfg = presets::mock_default();
+        assert_eq!(cfg.cluster.trace, TraceSourceConfig::Stochastic);
+        cfg.apply_override("cluster.trace_path=traces/run.jsonl").unwrap();
+        assert_eq!(
+            cfg.cluster.trace,
+            TraceSourceConfig::Path("traces/run.jsonl".into())
+        );
+        cfg.validate().unwrap();
+        // a bare string picks the generator kind; objects overlay knobs
+        cfg.apply_override("cluster.trace_gen=diurnal").unwrap();
+        cfg.apply_override(r#"cluster.trace_gen={"horizon_s":30.0,"amplitude":0.25}"#).unwrap();
+        match &cfg.cluster.trace {
+            TraceSourceConfig::Generator(g) => {
+                assert_eq!(g.kind, TraceGenKind::Diurnal);
+                assert_eq!(g.horizon_s, 30.0);
+                assert_eq!(g.amplitude, 0.25);
+            }
+            other => panic!("expected generator source, got {other:?}"),
+        }
+        // diurnal (speed-only) traces stay legal under lockstep
+        cfg.validate().unwrap();
+        // preemption generators require the event scheduler...
+        cfg.apply_override("cluster.trace_gen=spot_market").unwrap();
+        assert!(cfg.validate().is_err());
+        cfg.apply_override("run.scheduler=event").unwrap();
+        cfg.validate().unwrap();
+        // ...rack failures additionally need the group map
+        cfg.apply_override("cluster.trace_gen=rack_failures").unwrap();
+        assert!(cfg.validate().unwrap_err().to_string().contains("cluster.groups"));
+        cfg.apply_override("cluster.groups=[[0,1],[2,3]]").unwrap();
+        cfg.validate().unwrap();
+        // a trace source plus a non-static stochastic scenario is ambiguous
+        cfg.apply_override("cluster.scenario.straggler_prob=0.1").unwrap();
+        assert!(cfg.validate().is_err());
+        cfg.apply_override("cluster.scenario.straggler_prob=0.0").unwrap();
+        // and an explicit reset returns to the stochastic model
+        cfg.apply_override("cluster.trace_source=stochastic").unwrap();
+        assert_eq!(cfg.cluster.trace, TraceSourceConfig::Stochastic);
+        cfg.validate().unwrap();
+        assert!(cfg.apply_override("cluster.trace_source=bogus").is_err());
     }
 
     #[test]

@@ -14,6 +14,7 @@ pub fn by_name(name: &str) -> Option<Config> {
         "hierarchical_mit" => Some(hierarchical_mit()),
         "adloco_overlap" => Some(adloco_overlap()),
         "elastic_mit" => Some(elastic_mit()),
+        "fleet_trace" => Some(fleet_trace()),
         _ => None,
     }
 }
@@ -30,6 +31,7 @@ pub fn preset_names() -> &'static [&'static str] {
         "hierarchical_mit",
         "adloco_overlap",
         "elastic_mit",
+        "fleet_trace",
     ]
 }
 
@@ -64,6 +66,7 @@ fn base_cluster(nodes: usize, max_batch: usize) -> ClusterConfig {
         step_per_token_s: 3e-5,
         step_jitter: 0.0,
         scenario: ScenarioConfig::default(),
+        trace: TraceSourceConfig::Stochastic,
         // flat single tier by default; the WAN tier only engages under
         // topology=hierarchical (a 10x slower cross-group link in the
         // ballpark of a shared datacenter uplink)
@@ -297,6 +300,41 @@ pub fn elastic_mit() -> Config {
     cfg
 }
 
+/// Fleet-scale trace replay (DESIGN.md §11): 8 trainers x 4 workers
+/// spread over 16 uniform nodes, driven by a generated spot-market
+/// preemption trace instead of the hand-set stochastic scenario. The
+/// membership is kept fixed (merging off, pool frozen) so the preset
+/// scales cleanly to the 100/1k/10k-worker grid of
+/// `benches/fig6_scale.rs` — node churn, not algorithm phase changes,
+/// is what the big-cluster points stress.
+pub fn fleet_trace() -> Config {
+    let mut cfg = paper_table1();
+    cfg.name = "fleet_trace".into();
+    cfg.engine = EngineConfig::Mock { dim: 256, noise: 1.0, condition: 10.0 };
+    cfg.algo.num_trainers = 8;
+    cfg.algo.workers_per_trainer = 4;
+    cfg.algo.inner_steps = 12;
+    cfg.algo.outer_steps = 6;
+    cfg.algo.lr_inner = 0.02;
+    cfg.algo.fixed_batch = 8;
+    cfg.algo.merge.enabled = false;
+    cfg.data.corpus_sequences = 4_000;
+    cfg.data.val_sequences = 128;
+    cfg.run.eval_every = 6;
+    cfg.run.scheduler = SchedulerKind::Event;
+    cfg.cluster = base_cluster(16, 32);
+    // spot-market churn sized to the run's few-seconds virtual-time
+    // span, so preemptions actually land inside the run
+    cfg.cluster.trace = TraceSourceConfig::Generator(TraceGenConfig {
+        kind: TraceGenKind::SpotMarket,
+        horizon_s: 8.0,
+        mean_up_s: 2.5,
+        mean_down_s: 0.8,
+        ..TraceGenConfig::default()
+    });
+    cfg
+}
+
 /// Minimal smoke-run preset (seconds, MockEngine).
 pub fn quick() -> Config {
     let mut cfg = mock_default();
@@ -361,6 +399,34 @@ mod tests {
         assert_eq!(cfg.cluster.nodes.len(), hetero.cluster.nodes.len());
         assert_eq!(cfg.cluster.scenario.churn, hetero.cluster.scenario.churn);
         assert_eq!(cfg.run.scheduler, SchedulerKind::Event);
+    }
+
+    #[test]
+    fn fleet_trace_preset_replays_a_generated_spot_trace() {
+        let cfg = fleet_trace();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.run.scheduler, SchedulerKind::Event);
+        assert_eq!(cfg.algo.num_trainers * cfg.algo.workers_per_trainer, 32);
+        assert!(cfg.cluster.scenario.is_static(), "trace replaces the stochastic model");
+        match &cfg.cluster.trace {
+            TraceSourceConfig::Generator(g) => {
+                assert_eq!(g.kind, TraceGenKind::SpotMarket);
+                assert!(g.horizon_s > 0.0 && g.mean_up_s > 0.0 && g.mean_down_s > 0.0);
+            }
+            other => panic!("fleet_trace must use a generator source, got {other:?}"),
+        }
+        // membership stays fixed so the preset scales to the fig6 grid
+        assert!(!cfg.algo.merge.enabled);
+        // every other preset keeps the stochastic source
+        for name in preset_names() {
+            if *name != "fleet_trace" {
+                assert_eq!(
+                    by_name(name).unwrap().cluster.trace,
+                    TraceSourceConfig::Stochastic,
+                    "{name}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -181,6 +181,7 @@ pub(crate) fn run_worker_chain(
         let mut dt =
             step_compute_time(node_model, &plan, ctx.width, ctx.step_jitter, &mut w.time_rng);
         dt *= ctx.scenario.straggler_factor(&mut w.time_rng);
+        dt *= ctx.scenario.speed_factor(task.node, now);
         let (end, stall) = ctx.scenario.compute_span(task.node, now, dt);
         busy += dt;
         preempted += stall;

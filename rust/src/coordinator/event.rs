@@ -517,6 +517,10 @@ impl Coordinator {
             (w.clock_slot, w.node)
         };
         let start = self.cluster.clock.time(slot);
+        // traced speed timelines (DESIGN.md §11): a deterministic
+        // compute-time multiplier sampled at step start. 1.0 (bitwise
+        // identity) outside a trace.
+        dt *= self.cluster.scenario.speed_factor(node, start);
         let (end, stall) = self.cluster.scenario.compute_span(node, start, dt);
         self.cluster.busy_s[slot] += dt;
         self.cluster.preempted_s[slot] += stall;

@@ -102,8 +102,15 @@ impl Coordinator {
             let stats = self.exec_worker_step(ti, wi, plan, lr)?;
 
             // virtual time: accum_steps micro-steps on this worker's node
-            let dt = self.step_duration(ti, wi, plan);
-            let slot = self.trainers[ti].workers[wi].clock_slot;
+            let mut dt = self.step_duration(ti, wi, plan);
+            let (slot, node) = {
+                let w = &self.trainers[ti].workers[wi];
+                (w.clock_slot, w.node)
+            };
+            // traced speed timelines are deterministic, so lockstep can
+            // express them — the same multiply as the event scheduler's
+            // schedule_step_end, at the same step-start time
+            dt *= self.cluster.scenario.speed_factor(node, self.cluster.clock.time(slot));
             self.cluster.clock.advance(slot, dt);
             self.cluster.busy_s[slot] += dt;
 

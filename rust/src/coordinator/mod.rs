@@ -81,6 +81,7 @@ use crate::instances::{plan_spawns, InstanceRegistry, NodeLoad, Origin, SpawnBud
 use crate::metrics::{
     perplexity, EvalRecord, LifecycleEvent, LifecycleRecord, Recorder, RoundRecord,
 };
+use crate::simulator::ScenarioSource;
 use crate::trainer::Trainer;
 use crate::util::{derive_seed, Rng};
 use anyhow::Result;
@@ -308,6 +309,21 @@ impl Coordinator {
             vec![cap; n_nodes]
         };
 
+        // resolve the scenario source (stochastic model, trace file, or
+        // deterministic generator — DESIGN.md §11). Generators draw from
+        // derive_seed streams, never `rng`, so resolving here does not
+        // shift any training stream. Config validation covers the
+        // statically-known cases; a loaded trace file's dynamics are
+        // only known now, hence the runtime scheduler check.
+        let scenario_source = ScenarioSource::resolve(&cfg.cluster, cfg.seed)?;
+        let scenario = scenario_source.compile(cfg.cluster.nodes.len())?;
+        if scenario.requires_event() && cfg.run.scheduler != SchedulerKind::Event {
+            anyhow::bail!(
+                "the resolved workload trace is dynamic (churn/link shifts/stragglers) \
+                 and requires run.scheduler=event"
+            );
+        }
+
         let p = engine.param_count();
         let threads = cfg.run.effective_threads();
         let mut recorder = Recorder::new();
@@ -317,9 +333,10 @@ impl Coordinator {
         recorder.note("scheduler", cfg.run.scheduler.as_str());
         recorder.note("threads", threads.to_string());
         recorder.note("topology", cfg.cluster.topology.as_str());
+        recorder.note("scenario_source", scenario_source.describe());
 
         Ok(Coordinator {
-            cluster: ClusterState::new(&cfg.cluster, k * m),
+            cluster: ClusterState::new_with_scenario(&cfg.cluster, k * m, scenario),
             comm: CommLayer::new(&cfg.cluster),
             recorder,
             rng,

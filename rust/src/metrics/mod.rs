@@ -3,7 +3,10 @@
 //!
 //! Everything Fig. 1 / Fig. 2 / the theory benches plot flows through the
 //! `Recorder`; the export format is line-oriented so the report
-//! generators (and any external plotting) can stream it.
+//! generators (and any external plotting) can stream it. The fleet-scale
+//! bench additionally distills its recorded streams into the
+//! `bench_results/BENCH_fig6.json` perf artifact (EXPERIMENTS.md §Perf)
+//! via `benchkit::write_json_artifact`.
 
 use crate::util::JsonValue;
 use anyhow::{Context, Result};

@@ -1,0 +1,301 @@
+//! Deterministic fleet-dynamics trace generators (DESIGN.md §11).
+//!
+//! Each generator maps a spec + seed to a [`Trace`], modelling a
+//! workload regime the paper's 4-node scenarios cannot reach:
+//!
+//! * [`spot_market`] — per-node alternating up/down renewal process
+//!   with exponential holding times (spot-instance preemption);
+//! * [`diurnal`] — per-node sinusoidal compute-slowdown timelines with
+//!   random phase (time-of-day load on shared hosts). Speed-only, so
+//!   the result is legal under the lockstep walk;
+//! * [`rack_failures`] — correlated outages that take a whole topology
+//!   group down at once (switch/PDU failure).
+//!
+//! Every random stream is forked with [`derive_seed`] from the config
+//! seed and a per-node/per-group tag — **never** the run's main RNG —
+//! so identical seeds reproduce identical traces regardless of how the
+//! surrounding run consumes randomness, and generating a trace never
+//! perturbs the training stream layout (DESIGN.md §6).
+
+use crate::simulator::trace::{Trace, TraceEvent, TraceRecord};
+use crate::util::{derive_seed, Rng};
+
+/// Spot-market preemption: alternating exponential up/down intervals
+/// per node.
+#[derive(Clone, Debug)]
+pub struct SpotMarketSpec {
+    /// Cluster size.
+    pub nodes: usize,
+    /// Only windows *starting* before this horizon are emitted (a
+    /// window may extend past it).
+    pub horizon_s: f64,
+    /// Mean up-time between preemptions (seconds).
+    pub mean_up_s: f64,
+    /// Mean preemption length (seconds).
+    pub mean_down_s: f64,
+    /// Config seed the generator streams are derived from.
+    pub seed: u64,
+}
+
+/// Diurnal load: sinusoidal per-node compute-time multiplier in
+/// `[1, 1 + amplitude]`, sampled piecewise-constant.
+#[derive(Clone, Debug)]
+pub struct DiurnalSpec {
+    /// Cluster size.
+    pub nodes: usize,
+    /// Samples cover `[0, horizon_s)`.
+    pub horizon_s: f64,
+    /// Period of the load wave (seconds).
+    pub period_s: f64,
+    /// Peak extra slowdown (factor tops out at `1 + amplitude`).
+    pub amplitude: f64,
+    /// Piecewise-constant samples per period.
+    pub samples_per_period: usize,
+    /// Config seed the per-node phase streams are derived from.
+    pub seed: u64,
+}
+
+/// Correlated rack failures: each outage takes every node of a
+/// topology group down over the same window.
+#[derive(Clone, Debug)]
+pub struct RackFailureSpec {
+    /// Cluster size.
+    pub nodes: usize,
+    /// The topology group map (`cluster.groups`): `groups[g]` lists the
+    /// node ids failing together.
+    pub groups: Vec<Vec<usize>>,
+    /// Outage starts are drawn uniformly over `[0, horizon_s)`.
+    pub horizon_s: f64,
+    /// Outages drawn per rack.
+    pub outages_per_rack: usize,
+    /// Mean outage length (seconds, exponential).
+    pub mean_down_s: f64,
+    /// Config seed the per-group streams are derived from.
+    pub seed: u64,
+}
+
+/// Exponential draw with the given mean (inverse-CDF of one uniform;
+/// `u < 1` keeps it finite).
+fn exp_draw(rng: &mut Rng, mean: f64) -> f64 {
+    -mean * (1.0 - rng.f64()).ln()
+}
+
+fn sorted_trace(nodes: usize, mut records: Vec<TraceRecord>) -> Trace {
+    // stable: equal-t records keep emission order (node-major)
+    records.sort_by(|a, b| a.t.total_cmp(&b.t));
+    Trace {
+        nodes,
+        straggler_prob: 0.0,
+        straggler_min: 1.5,
+        straggler_max: 4.0,
+        records,
+    }
+}
+
+/// Generate a spot-market preemption trace. Per-node windows are
+/// strictly increasing and disjoint by construction (a node is never
+/// revived mid-outage: the next window starts after the previous one
+/// ends plus a fresh up-time).
+pub fn spot_market(spec: &SpotMarketSpec) -> Trace {
+    let mut records = Vec::new();
+    for node in 0..spec.nodes {
+        let mut rng = Rng::new(derive_seed(spec.seed, &format!("trace/spot/node={node}")));
+        let mut t = exp_draw(&mut rng, spec.mean_up_s);
+        while t < spec.horizon_s {
+            let down = exp_draw(&mut rng, spec.mean_down_s).max(1e-9);
+            records.push(TraceRecord { t, node, ev: TraceEvent::Down { until: t + down } });
+            t = t + down + exp_draw(&mut rng, spec.mean_up_s);
+        }
+    }
+    sorted_trace(spec.nodes, records)
+}
+
+/// Generate a diurnal-load speed trace: each node's compute-time
+/// multiplier follows `1 + a/2 * (1 - cos(2π (t + phase) / period))`,
+/// sampled every `period / samples_per_period` seconds. Factors stay
+/// inside `[1, 1 + amplitude]` and consume no RNG at replay time.
+pub fn diurnal(spec: &DiurnalSpec) -> Trace {
+    let mut records = Vec::new();
+    let samples = spec.samples_per_period.max(1);
+    let dt = spec.period_s / samples as f64;
+    for node in 0..spec.nodes {
+        let mut rng = Rng::new(derive_seed(spec.seed, &format!("trace/diurnal/node={node}")));
+        let phase = rng.f64() * spec.period_s;
+        let mut i = 0u64;
+        loop {
+            let t = i as f64 * dt;
+            if t >= spec.horizon_s {
+                break;
+            }
+            let angle = std::f64::consts::TAU * (t + phase) / spec.period_s;
+            let factor = 1.0 + spec.amplitude * 0.5 * (1.0 - angle.cos());
+            records.push(TraceRecord { t, node, ev: TraceEvent::Speed { factor } });
+            i += 1;
+        }
+    }
+    sorted_trace(spec.nodes, records)
+}
+
+/// Generate correlated rack failures: for each topology group, draw
+/// `outages_per_rack` outage windows and emit an identical `down`
+/// record for every member node — the whole rack fails and recovers
+/// atomically.
+pub fn rack_failures(spec: &RackFailureSpec) -> Trace {
+    let mut records = Vec::new();
+    for (g, members) in spec.groups.iter().enumerate() {
+        let mut rng = Rng::new(derive_seed(spec.seed, &format!("trace/rack/group={g}")));
+        for _ in 0..spec.outages_per_rack {
+            let start = rng.f64() * spec.horizon_s;
+            let down = exp_draw(&mut rng, spec.mean_down_s).max(1e-9);
+            for &node in members {
+                if node < spec.nodes {
+                    records.push(TraceRecord {
+                        t: start,
+                        node,
+                        ev: TraceEvent::Down { until: start + down },
+                    });
+                }
+            }
+        }
+    }
+    sorted_trace(spec.nodes, records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spot_windows_never_revive_mid_outage() {
+        let spec = SpotMarketSpec {
+            nodes: 6,
+            horizon_s: 200.0,
+            mean_up_s: 10.0,
+            mean_down_s: 3.0,
+            seed: 42,
+        };
+        let t = spot_market(&spec);
+        assert!(!t.records.is_empty());
+        for node in 0..spec.nodes {
+            let mut prev_until = f64::NEG_INFINITY;
+            for r in t.records.iter().filter(|r| r.node == node) {
+                let TraceEvent::Down { until } = r.ev else {
+                    panic!("spot trace emits only down records, got {:?}", r.ev)
+                };
+                assert!(r.t < spec.horizon_s, "window starts inside the horizon");
+                assert!(
+                    r.t > prev_until,
+                    "node {node}: window at t={} overlaps previous outage ending {prev_until}",
+                    r.t
+                );
+                assert!(until > r.t);
+                prev_until = until;
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_factors_stay_within_bounds() {
+        let spec = DiurnalSpec {
+            nodes: 4,
+            horizon_s: 50.0,
+            period_s: 10.0,
+            amplitude: 0.75,
+            samples_per_period: 8,
+            seed: 7,
+        };
+        let t = diurnal(&spec);
+        assert_eq!(t.records.len(), 4 * 40); // 5 periods x 8 samples x 4 nodes
+        for r in &t.records {
+            let TraceEvent::Speed { factor } = r.ev else {
+                panic!("diurnal trace emits only speed records")
+            };
+            assert!(
+                (1.0..=1.0 + spec.amplitude).contains(&factor),
+                "factor {factor} outside [1, 1.75]"
+            );
+        }
+        // phases differ across nodes: the t=0 samples are not all equal
+        let first: Vec<f64> = t
+            .records
+            .iter()
+            .filter(|r| r.t == 0.0)
+            .map(|r| match r.ev {
+                TraceEvent::Speed { factor } => factor,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(first.len(), 4);
+        assert!(first.iter().any(|&f| f != first[0]), "per-node phase streams differ");
+    }
+
+    #[test]
+    fn rack_failures_are_group_atomic() {
+        let spec = RackFailureSpec {
+            nodes: 8,
+            groups: vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]],
+            horizon_s: 100.0,
+            outages_per_rack: 3,
+            mean_down_s: 5.0,
+            seed: 11,
+        };
+        let t = rack_failures(&spec);
+        assert_eq!(t.records.len(), 2 * 3 * 4);
+        // group every record by (t, until): each window must cover one
+        // full rack, and only nodes from that rack
+        let mut windows: Vec<(f64, f64, Vec<usize>)> = Vec::new();
+        for r in &t.records {
+            let TraceEvent::Down { until } = r.ev else { panic!("only down records") };
+            match windows.iter_mut().find(|(t0, u0, _)| *t0 == r.t && *u0 == until) {
+                Some((_, _, nodes)) => nodes.push(r.node),
+                None => windows.push((r.t, until, vec![r.node])),
+            }
+        }
+        assert_eq!(windows.len(), 6);
+        for (t0, _, mut nodes) in windows {
+            nodes.sort_unstable();
+            let rack = spec
+                .groups
+                .iter()
+                .find(|g| g.contains(&nodes[0]))
+                .expect("node belongs to a rack");
+            let mut want = rack.clone();
+            want.sort_unstable();
+            assert_eq!(nodes, want, "outage at t={t0} must cover exactly one rack");
+        }
+    }
+
+    #[test]
+    fn identical_seeds_reproduce_identical_traces() {
+        let spec = SpotMarketSpec {
+            nodes: 5,
+            horizon_s: 80.0,
+            mean_up_s: 8.0,
+            mean_down_s: 2.0,
+            seed: 99,
+        };
+        assert_eq!(spot_market(&spec).to_jsonl(), spot_market(&spec).to_jsonl());
+        let mut other = spec.clone();
+        other.seed = 100;
+        assert_ne!(spot_market(&spec).to_jsonl(), spot_market(&other).to_jsonl());
+
+        let d = DiurnalSpec {
+            nodes: 3,
+            horizon_s: 20.0,
+            period_s: 10.0,
+            amplitude: 0.5,
+            samples_per_period: 4,
+            seed: 5,
+        };
+        assert_eq!(diurnal(&d).to_jsonl(), diurnal(&d).to_jsonl());
+        let r = RackFailureSpec {
+            nodes: 4,
+            groups: vec![vec![0, 1], vec![2, 3]],
+            horizon_s: 60.0,
+            outages_per_rack: 2,
+            mean_down_s: 4.0,
+            seed: 13,
+        };
+        assert_eq!(rack_failures(&r).to_jsonl(), rack_failures(&r).to_jsonl());
+    }
+}

@@ -18,6 +18,13 @@
 //! substrate for the [`scenario`] dynamic workloads (stragglers, churn,
 //! link shifts).
 //!
+//! Scenarios themselves come through the [`trace::ScenarioSource`]
+//! seam (DESIGN.md §11): either the stochastic config model or a
+//! replayed [`trace::Trace`] — a versioned JSONL timeline loaded from
+//! disk or produced by the deterministic fleet-dynamics
+//! [`generators`] (spot-market preemption, diurnal load, correlated
+//! rack failures).
+//!
 //! Layering note: the clock/node/placement types now live in
 //! [`crate::cluster`] and the network/ledger/collective types in
 //! [`crate::comm`]; both are re-exported here so historical imports
@@ -25,10 +32,13 @@
 //! …) keep resolving.
 
 pub mod events;
+pub mod generators;
 pub mod scenario;
+pub mod trace;
 
 pub use events::{EventQueue, SimEvent};
 pub use scenario::Scenario;
+pub use trace::{ScenarioSource, Trace, TraceError, TraceEvent, TraceRecord};
 
 pub use crate::cluster::{assign_workers, node_models, NodeModel, VirtualClock};
 pub use crate::comm::{CommEvent, CommKind, CommLedger, CommScope, NetworkModel};

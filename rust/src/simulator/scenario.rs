@@ -20,12 +20,25 @@
 //! A default (all-empty) scenario is *static*: every query degenerates to
 //! the constant-cluster answer and the event-driven scheduler reproduces
 //! the lockstep ledger bit-for-bit (see `tests/event_scheduler.rs`).
+//!
+//! Besides the stochastic config block, a scenario can be compiled from
+//! a replayed workload trace ([`Scenario::compile_trace`], DESIGN.md
+//! §11), which additionally carries deterministic per-node *speed*
+//! timelines — piecewise-constant compute-time multipliers that consume
+//! no RNG, and are therefore legal under the lockstep reference walk
+//! (unlike stragglers/churn/shifts, see [`Scenario::requires_event`]).
+//!
+//! All timeline lookups are binary searches (`partition_point`) over the
+//! sorted per-node vectors: queries run on every inner step of every
+//! worker, so the 10k-node fleet traces of `benches/fig6_scale.rs` would
+//! turn linear scans into the event path's bottleneck.
 
 use crate::config::ScenarioConfig;
+use crate::simulator::trace::{Trace, TraceEvent};
 use crate::util::Rng;
 
 /// Compiled scenario: per-node down windows (sorted, coalesced) and
-/// per-node bandwidth shift timelines (sorted).
+/// per-node bandwidth/speed shift timelines (sorted).
 #[derive(Clone, Debug)]
 pub struct Scenario {
     straggler_prob: f64,
@@ -36,6 +49,25 @@ pub struct Scenario {
     /// node -> sorted (at_s, bandwidth_factor) steps; factor 1.0 before
     /// the first entry.
     shifts: Vec<Vec<(f64, f64)>>,
+    /// node -> sorted (at_s, compute-time multiplier) steps; factor 1.0
+    /// before the first entry. Deterministic (no RNG), so speed-only
+    /// scenarios keep lockstep == event bit-identity.
+    speeds: Vec<Vec<(f64, f64)>>,
+}
+
+/// Sort windows by start and coalesce overlapping/adjacent ones into a
+/// disjoint sorted set (shared by the config and trace compilers, so an
+/// exported scenario recompiles to bit-identical windows).
+fn sort_coalesce(wins: &mut Vec<(f64, f64)>) {
+    wins.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut merged: Vec<(f64, f64)> = Vec::with_capacity(wins.len());
+    for &(from, until) in wins.iter() {
+        match merged.last_mut() {
+            Some(last) if from <= last.1 => last.1 = last.1.max(until),
+            _ => merged.push((from, until)),
+        }
+    }
+    *wins = merged;
 }
 
 impl Scenario {
@@ -50,16 +82,7 @@ impl Scenario {
             }
         }
         for wins in &mut windows {
-            wins.sort_by(|a, b| a.0.total_cmp(&b.0));
-            // coalesce overlapping/adjacent windows
-            let mut merged: Vec<(f64, f64)> = Vec::with_capacity(wins.len());
-            for &(from, until) in wins.iter() {
-                match merged.last_mut() {
-                    Some(last) if from <= last.1 => last.1 = last.1.max(until),
-                    _ => merged.push((from, until)),
-                }
-            }
-            *wins = merged;
+            sort_coalesce(wins);
         }
         let mut shifts: Vec<Vec<(f64, f64)>> = vec![Vec::new(); nodes];
         for s in &cfg.link_shifts {
@@ -76,6 +99,54 @@ impl Scenario {
             straggler_max: cfg.straggler_max,
             windows,
             shifts,
+            speeds: vec![Vec::new(); nodes],
+        }
+    }
+
+    /// Compile a replayed workload trace (DESIGN.md §11). Uses the same
+    /// per-node sort/coalesce as [`Scenario::compile`], so a trace
+    /// exported with `Trace::from_scenario` compiles to bit-identical
+    /// timelines — the invariant behind `tests/trace_replay.rs`.
+    pub fn compile_trace(trace: &Trace) -> Scenario {
+        let nodes = trace.nodes;
+        let mut windows: Vec<Vec<(f64, f64)>> = vec![Vec::new(); nodes];
+        let mut shifts: Vec<Vec<(f64, f64)>> = vec![Vec::new(); nodes];
+        let mut speeds: Vec<Vec<(f64, f64)>> = vec![Vec::new(); nodes];
+        for r in &trace.records {
+            match r.ev {
+                TraceEvent::Down { until } => {
+                    if until > r.t {
+                        windows[r.node].push((r.t, until));
+                    }
+                }
+                TraceEvent::Bandwidth { factor } => {
+                    if factor > 0.0 {
+                        shifts[r.node].push((r.t, factor));
+                    }
+                }
+                TraceEvent::Speed { factor } => {
+                    if factor > 0.0 {
+                        speeds[r.node].push((r.t, factor));
+                    }
+                }
+            }
+        }
+        for wins in &mut windows {
+            sort_coalesce(wins);
+        }
+        for sh in &mut shifts {
+            sh.sort_by(|a, b| a.0.total_cmp(&b.0));
+        }
+        for sp in &mut speeds {
+            sp.sort_by(|a, b| a.0.total_cmp(&b.0));
+        }
+        Scenario {
+            straggler_prob: trace.straggler_prob,
+            straggler_min: trace.straggler_min,
+            straggler_max: trace.straggler_max,
+            windows,
+            shifts,
+            speeds,
         }
     }
 
@@ -85,6 +156,25 @@ impl Scenario {
         self.straggler_prob <= 0.0
             && self.windows.iter().all(|w| w.is_empty())
             && self.shifts.iter().all(|s| s.is_empty())
+            && self.speeds.iter().all(|s| s.is_empty())
+    }
+
+    /// True when any node has a preemption window — the only scenario
+    /// feature that needs outer-boundary churn bookkeeping
+    /// (`ClusterState::apply_churn`).
+    pub fn has_windows(&self) -> bool {
+        self.windows.iter().any(|w| !w.is_empty())
+    }
+
+    /// True when the scenario needs the event scheduler: stragglers,
+    /// churn and link shifts all interleave with scheduling decisions
+    /// the lockstep reference walk cannot express. Deterministic speed
+    /// timelines are exempt — they multiply each step's compute time in
+    /// place, identically under every scheduler.
+    pub fn requires_event(&self) -> bool {
+        self.straggler_prob > 0.0
+            || self.windows.iter().any(|w| !w.is_empty())
+            || self.shifts.iter().any(|s| !s.is_empty())
     }
 
     /// Per-step compute-time multiplier drawn from `rng` (>= 1.0).
@@ -107,16 +197,23 @@ impl Scenario {
     }
 
     /// If `node` is down at `t`, the end of its preemption window.
+    /// Binary search over the sorted disjoint windows: the last window
+    /// starting at or before `t` is the only candidate covering it.
     fn down_until(&self, node: usize, t: f64) -> Option<f64> {
-        self.windows[node]
-            .iter()
-            .find(|&&(from, until)| t >= from && t < until)
-            .map(|&(_, until)| until)
+        let wins = &self.windows[node];
+        let i = wins.partition_point(|&(from, _)| from <= t);
+        match i.checked_sub(1).map(|i| wins[i]) {
+            Some((_, until)) if t < until => Some(until),
+            _ => None,
+        }
     }
 
-    /// Earliest down-window start in `(t, ..)` for `node`.
+    /// Earliest down-window start in `(t, ..)` for `node` (binary
+    /// search; windows are sorted by start).
     fn next_down_start(&self, node: usize, t: f64) -> Option<f64> {
-        self.windows[node].iter().map(|&(from, _)| from).find(|&from| from > t)
+        let wins = &self.windows[node];
+        let i = wins.partition_point(|&(from, _)| from <= t);
+        wins.get(i).map(|&(from, _)| from)
     }
 
     /// Finish time and stalled seconds for `busy` seconds of compute on
@@ -142,14 +239,28 @@ impl Scenario {
     }
 
     /// Bandwidth multiplier of `node`'s link at time `t` (1.0 before the
-    /// first scheduled shift).
+    /// first scheduled shift). Binary search for the last shift at or
+    /// before `t`; on equal timestamps the later entry wins, exactly as
+    /// the historical `take_while(..).last()` scan resolved ties.
     pub fn bandwidth_factor(&self, node: usize, t: f64) -> f64 {
-        self.shifts[node]
-            .iter()
-            .take_while(|&&(at, _)| at <= t)
-            .last()
-            .map(|&(_, f)| f)
-            .unwrap_or(1.0)
+        Self::timeline_at(&self.shifts[node], t)
+    }
+
+    /// Compute-time multiplier of `node` at time `t` (1.0 before the
+    /// first speed record; traced timelines only — the stochastic
+    /// config model has no speed knob).
+    pub fn speed_factor(&self, node: usize, t: f64) -> f64 {
+        Self::timeline_at(&self.speeds[node], t)
+    }
+
+    /// Last value of a sorted piecewise-constant `(at_s, value)`
+    /// timeline at or before `t`; 1.0 before the first entry.
+    fn timeline_at(steps: &[(f64, f64)], t: f64) -> f64 {
+        let i = steps.partition_point(|&(at, _)| at <= t);
+        match i.checked_sub(1) {
+            Some(i) => steps[i].1,
+            None => 1.0,
+        }
     }
 
     /// Slowest participating link's factor at `t` — the ring all-reduce
@@ -280,5 +391,82 @@ mod tests {
         let s = Scenario::compile(&cfg, 2);
         // a uniformly upgraded link set must not be clamped back to 1.0
         assert_eq!(s.min_bandwidth_factor([0usize, 1], 1.0), 2.0);
+    }
+
+    #[test]
+    fn compile_trace_matches_compile_on_exported_scenario() {
+        let cfg = ScenarioConfig {
+            straggler_prob: 0.2,
+            churn: vec![
+                ChurnWindow { node: 0, from_s: 10.0, until_s: 20.0 },
+                ChurnWindow { node: 0, from_s: 15.0, until_s: 25.0 },
+                ChurnWindow { node: 2, from_s: 1.0, until_s: 2.0 },
+            ],
+            link_shifts: vec![
+                LinkShift { node: 1, at_s: 5.0, bandwidth_factor: 0.1 },
+                LinkShift { node: 1, at_s: 5.0, bandwidth_factor: 0.3 }, // same-t tie
+                LinkShift { node: 1, at_s: 20.0, bandwidth_factor: 1.0 },
+            ],
+            ..ScenarioConfig::default()
+        };
+        let direct = Scenario::compile(&cfg, 3);
+        let replayed =
+            Scenario::compile_trace(&crate::simulator::trace::Trace::from_scenario(&cfg, 3));
+        // Debug prints every timeline f64 — bit-level structural equality
+        assert_eq!(format!("{direct:?}"), format!("{replayed:?}"));
+        // same-t tie resolution survives the round trip
+        assert_eq!(direct.bandwidth_factor(1, 5.0), 0.3);
+        assert_eq!(replayed.bandwidth_factor(1, 5.0), 0.3);
+    }
+
+    #[test]
+    fn speed_timelines_are_piecewise_and_lockstep_legal() {
+        use crate::simulator::trace::{Trace, TraceEvent, TraceRecord};
+        let t = Trace {
+            nodes: 2,
+            straggler_prob: 0.0,
+            straggler_min: 1.5,
+            straggler_max: 4.0,
+            records: vec![
+                TraceRecord { t: 5.0, node: 0, ev: TraceEvent::Speed { factor: 2.0 } },
+                TraceRecord { t: 10.0, node: 0, ev: TraceEvent::Speed { factor: 0.5 } },
+            ],
+        };
+        let s = Scenario::compile_trace(&t);
+        assert_eq!(s.speed_factor(0, 4.9), 1.0);
+        assert_eq!(s.speed_factor(0, 5.0), 2.0);
+        assert_eq!(s.speed_factor(0, 9.9), 2.0);
+        assert_eq!(s.speed_factor(0, 10.0), 0.5);
+        assert_eq!(s.speed_factor(1, 100.0), 1.0, "other node untouched");
+        // speed-only: dynamic, but legal under lockstep and churn-free
+        assert!(!s.is_static());
+        assert!(!s.requires_event());
+        assert!(!s.has_windows());
+    }
+
+    #[test]
+    fn binary_search_window_lookups_match_linear_reference() {
+        let mut rng = Rng::new(0xB15EC7);
+        for _ in 0..200 {
+            let n = 1 + rng.below(20) as usize;
+            let churn: Vec<ChurnWindow> = (0..n)
+                .map(|_| {
+                    let from = rng.f64() * 100.0;
+                    ChurnWindow { node: 0, from_s: from, until_s: from + 0.1 + rng.f64() * 10.0 }
+                })
+                .collect();
+            let s = Scenario::compile(&cfg_with(churn, vec![]), 1);
+            for _ in 0..50 {
+                let t = rng.f64() * 120.0;
+                let lin_down = s.windows[0]
+                    .iter()
+                    .find(|&&(from, until)| t >= from && t < until)
+                    .map(|&(_, until)| until);
+                assert_eq!(s.down_until(0, t), lin_down);
+                let lin_next =
+                    s.windows[0].iter().map(|&(from, _)| from).find(|&from| from > t);
+                assert_eq!(s.next_down_start(0, t), lin_next);
+            }
+        }
     }
 }

@@ -1,0 +1,746 @@
+//! Versioned JSONL workload traces (DESIGN.md §11).
+//!
+//! A [`Trace`] is a replayable description of cluster dynamics: per-node
+//! availability windows, bandwidth shifts, and compute-speed factors on
+//! a shared virtual-time axis. It is the file-format side of the
+//! [`ScenarioSource`] seam — `cluster.scenario` can come from the
+//! stochastic config model *or* from a trace replayed record-for-record,
+//! and an exported stochastic scenario replays bit-identically (see
+//! `tests/trace_replay.rs`).
+//!
+//! ## Format (`adloco-trace` v1)
+//!
+//! One JSON object per line. Line 1 is the header:
+//!
+//! ```text
+//! {"format":"adloco-trace","version":1,"nodes":4,"records":2,
+//!  "straggler_prob":"...","straggler_min":"...","straggler_max":"..."}
+//! ```
+//!
+//! then exactly `records` record lines, globally non-decreasing in `t`:
+//!
+//! ```text
+//! {"t":"<hex f64>","node":3,"kind":"down","until":"<hex f64>"}
+//! {"t":"<hex f64>","node":1,"kind":"bw","factor":"<hex f64>"}
+//! {"t":"<hex f64>","node":0,"kind":"speed","factor":"<hex f64>"}
+//! ```
+//!
+//! `down` preempts the node over `[t, until)`; `bw` sets the node's
+//! link-bandwidth multiplier from `t` on (piecewise constant); `speed`
+//! sets a compute-time multiplier (>= values slow the node down) from
+//! `t` on. All f64s are written as bit-exact hex strings (the
+//! `checkpoint/interchange.rs` convention) with plain JSON numbers
+//! tolerated on input, so serialize → parse → serialize is
+//! byte-identical.
+//!
+//! Parsing follows the interchange strict-parse discipline: unknown or
+//! duplicate fields, out-of-order timestamps, non-positive factors,
+//! truncation and trailing garbage are all **typed** [`TraceError`]s —
+//! never silent defaults.
+
+use crate::config::{ClusterConfig, ScenarioConfig, TraceGenKind, TraceSourceConfig};
+use crate::simulator::Scenario;
+use crate::util::JsonValue;
+use std::fmt;
+
+/// Format tag in the header line.
+pub const TRACE_FORMAT: &str = "adloco-trace";
+/// Current (and only) trace format version.
+pub const TRACE_VERSION: u64 = 1;
+
+/// Typed trace parse/validation errors (strict: every malformed input
+/// maps to one of these, never a silent default).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceError {
+    /// A line is not valid JSON / not an object / a field has the wrong
+    /// JSON type or appears twice.
+    Corrupt { line: usize, detail: String },
+    /// Header `format` is not `adloco-trace`.
+    BadFormat { found: String },
+    /// Header `version` is not a supported version.
+    VersionMismatch { found: u64 },
+    /// A required field is absent.
+    MissingField { line: usize, field: &'static str },
+    /// A field the format does not define (deny-unknown-fields).
+    UnknownField { line: usize, field: String },
+    /// A field is present but its value is out of domain.
+    BadValue { line: usize, field: &'static str, detail: String },
+    /// A `bw` record with factor <= 0 (a dead link is a `down` window,
+    /// not a zero-bandwidth shift).
+    NegativeBandwidth { line: usize, value: f64 },
+    /// Record timestamps must be globally non-decreasing.
+    OutOfOrder { line: usize, t: f64, prev: f64 },
+    /// Record `node` is >= the header's `nodes`.
+    NodeOutOfRange { line: usize, node: usize, nodes: usize },
+    /// Fewer record lines than the header's `records` count.
+    Truncated { expected: usize, have: usize },
+    /// Non-empty content after the declared record count.
+    TrailingGarbage { line: usize },
+}
+
+impl fmt::Display for TraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceError::Corrupt { line, detail } => {
+                write!(f, "trace line {line}: corrupt ({detail})")
+            }
+            TraceError::BadFormat { found } => {
+                write!(f, "trace header: format {found:?} is not {TRACE_FORMAT:?}")
+            }
+            TraceError::VersionMismatch { found } => {
+                write!(f, "trace header: version {found} unsupported (expected {TRACE_VERSION})")
+            }
+            TraceError::MissingField { line, field } => {
+                write!(f, "trace line {line}: missing field {field:?}")
+            }
+            TraceError::UnknownField { line, field } => {
+                write!(f, "trace line {line}: unknown field {field:?}")
+            }
+            TraceError::BadValue { line, field, detail } => {
+                write!(f, "trace line {line}: bad {field:?}: {detail}")
+            }
+            TraceError::NegativeBandwidth { line, value } => {
+                write!(f, "trace line {line}: bandwidth factor {value} must be > 0")
+            }
+            TraceError::OutOfOrder { line, t, prev } => {
+                write!(f, "trace line {line}: t={t} precedes previous record t={prev}")
+            }
+            TraceError::NodeOutOfRange { line, node, nodes } => {
+                write!(f, "trace line {line}: node {node} out of range ({nodes} nodes)")
+            }
+            TraceError::Truncated { expected, have } => {
+                write!(f, "trace truncated: header declares {expected} records, found {have}")
+            }
+            TraceError::TrailingGarbage { line } => {
+                write!(f, "trace line {line}: content after the declared record count")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+type TResult<T> = Result<T, TraceError>;
+
+/// One timeline event on one node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Node preempted over `[t, until)`.
+    Down { until: f64 },
+    /// Link-bandwidth multiplier from `t` on (piecewise constant).
+    Bandwidth { factor: f64 },
+    /// Compute-time multiplier from `t` on (piecewise constant; > 1
+    /// slows the node, < 1 speeds it up). Deterministic — consumes no
+    /// RNG — so speed-only traces stay legal under the lockstep walk.
+    Speed { factor: f64 },
+}
+
+/// A timestamped per-node record.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Virtual time the event takes effect (seconds, non-decreasing
+    /// across the file).
+    pub t: f64,
+    /// Node the event applies to.
+    pub node: usize,
+    /// The event payload.
+    pub ev: TraceEvent,
+}
+
+/// A parsed (or generated) workload trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    /// Cluster size the trace was recorded against; replay requires an
+    /// exact match.
+    pub nodes: usize,
+    /// Straggler model carried through from the stochastic scenario
+    /// (draws still come from each worker's private time stream, so a
+    /// replay reproduces the original run's draws exactly).
+    pub straggler_prob: f64,
+    /// Straggler slowdown range, lower end.
+    pub straggler_min: f64,
+    /// Straggler slowdown range, upper end.
+    pub straggler_max: f64,
+    /// Timeline records, non-decreasing in `t`.
+    pub records: Vec<TraceRecord>,
+}
+
+// ---------------------------------------------------------------------------
+// strict line reader (the interchange consumption-tracking discipline)
+// ---------------------------------------------------------------------------
+
+/// Deny-unknown-fields view over one parsed JSONL object: every `take`
+/// marks a field consumed; `finish` rejects whatever was not consumed.
+struct StrictLine<'a> {
+    line: usize,
+    fields: Vec<(&'a str, &'a JsonValue, std::cell::Cell<bool>)>,
+}
+
+impl<'a> StrictLine<'a> {
+    fn new(line: usize, v: &'a JsonValue) -> TResult<StrictLine<'a>> {
+        let pairs = v
+            .as_object()
+            .ok_or_else(|| TraceError::Corrupt { line, detail: "not a JSON object".into() })?;
+        let mut fields: Vec<(&str, &JsonValue, std::cell::Cell<bool>)> = Vec::new();
+        for (k, val) in pairs {
+            if fields.iter().any(|(name, _, _)| *name == k.as_str()) {
+                return Err(TraceError::Corrupt { line, detail: format!("duplicate field {k:?}") });
+            }
+            fields.push((k.as_str(), val, std::cell::Cell::new(false)));
+        }
+        Ok(StrictLine { line, fields })
+    }
+
+    fn take(&self, field: &'static str) -> TResult<&'a JsonValue> {
+        for (name, val, used) in &self.fields {
+            if *name == field {
+                used.set(true);
+                return Ok(val);
+            }
+        }
+        Err(TraceError::MissingField { line: self.line, field })
+    }
+
+    fn take_f64(&self, field: &'static str) -> TResult<f64> {
+        parse_f64(self.take(field)?, self.line, field)
+    }
+
+    fn take_usize(&self, field: &'static str) -> TResult<usize> {
+        self.take(field)?.as_usize().ok_or(TraceError::BadValue {
+            line: self.line,
+            field,
+            detail: "expected a non-negative integer".into(),
+        })
+    }
+
+    fn take_str(&self, field: &'static str) -> TResult<&'a str> {
+        self.take(field)?.as_str().ok_or(TraceError::BadValue {
+            line: self.line,
+            field,
+            detail: "expected a string".into(),
+        })
+    }
+
+    fn finish(&self) -> TResult<()> {
+        for (name, _, used) in &self.fields {
+            if !used.get() {
+                return Err(TraceError::UnknownField {
+                    line: self.line,
+                    field: (*name).to_string(),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Bit-exact f64: the hex-string form the writer emits, plain JSON
+/// numbers tolerated (the interchange `s_f64` convention).
+fn parse_f64(v: &JsonValue, line: usize, field: &'static str) -> TResult<f64> {
+    if let Some(s) = v.as_str() {
+        let bits = u64::from_str_radix(s, 16).map_err(|_| TraceError::BadValue {
+            line,
+            field,
+            detail: format!("bad hex f64 {s:?}"),
+        })?;
+        return Ok(f64::from_bits(bits));
+    }
+    v.as_f64().ok_or(TraceError::BadValue {
+        line,
+        field,
+        detail: "expected a number or hex string".into(),
+    })
+}
+
+fn hex_f64(v: f64) -> JsonValue {
+    JsonValue::str(format!("{:016x}", v.to_bits()))
+}
+
+fn check_time(t: f64, line: usize, field: &'static str) -> TResult<()> {
+    if !t.is_finite() || t < 0.0 {
+        return Err(TraceError::BadValue {
+            line,
+            field,
+            detail: format!("{t} is not a finite time >= 0"),
+        });
+    }
+    Ok(())
+}
+
+impl Trace {
+    /// Canonical JSONL serialization (header + records, one object per
+    /// line, f64s as bit-exact hex). `parse` of this text reproduces
+    /// `self` exactly, and re-serializing reproduces these bytes.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let header = JsonValue::obj(vec![
+            ("format", JsonValue::str(TRACE_FORMAT)),
+            ("version", JsonValue::num(TRACE_VERSION as f64)),
+            ("nodes", JsonValue::num(self.nodes as f64)),
+            ("records", JsonValue::num(self.records.len() as f64)),
+            ("straggler_prob", hex_f64(self.straggler_prob)),
+            ("straggler_min", hex_f64(self.straggler_min)),
+            ("straggler_max", hex_f64(self.straggler_max)),
+        ]);
+        out.push_str(&header.to_string());
+        out.push('\n');
+        for r in &self.records {
+            let mut fields = vec![
+                ("t", hex_f64(r.t)),
+                ("node", JsonValue::num(r.node as f64)),
+            ];
+            match r.ev {
+                TraceEvent::Down { until } => {
+                    fields.push(("kind", JsonValue::str("down")));
+                    fields.push(("until", hex_f64(until)));
+                }
+                TraceEvent::Bandwidth { factor } => {
+                    fields.push(("kind", JsonValue::str("bw")));
+                    fields.push(("factor", hex_f64(factor)));
+                }
+                TraceEvent::Speed { factor } => {
+                    fields.push(("kind", JsonValue::str("speed")));
+                    fields.push(("factor", hex_f64(factor)));
+                }
+            }
+            out.push_str(&JsonValue::obj(fields).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Strict parse of the JSONL form. Every malformed input yields a
+    /// typed [`TraceError`]; nothing is defaulted or skipped.
+    pub fn parse(text: &str) -> TResult<Trace> {
+        let mut lines = text.lines().enumerate().map(|(i, l)| (i + 1, l));
+        let (hline, htext) = lines
+            .find(|(_, l)| !l.trim().is_empty())
+            .ok_or(TraceError::Corrupt { line: 1, detail: "empty trace".into() })?;
+        let hjson = JsonValue::parse(htext)
+            .map_err(|e| TraceError::Corrupt { line: hline, detail: format!("{e:?}") })?;
+        let h = StrictLine::new(hline, &hjson)?;
+        let format = h.take_str("format")?;
+        if format != TRACE_FORMAT {
+            return Err(TraceError::BadFormat { found: format.to_string() });
+        }
+        let version = h.take_usize("version")? as u64;
+        if version != TRACE_VERSION {
+            return Err(TraceError::VersionMismatch { found: version });
+        }
+        let nodes = h.take_usize("nodes")?;
+        if nodes == 0 {
+            return Err(TraceError::BadValue {
+                line: hline,
+                field: "nodes",
+                detail: "a trace needs at least one node".into(),
+            });
+        }
+        let expected = h.take_usize("records")?;
+        let straggler_prob = h.take_f64("straggler_prob")?;
+        let straggler_min = h.take_f64("straggler_min")?;
+        let straggler_max = h.take_f64("straggler_max")?;
+        h.finish()?;
+        if !(0.0..=1.0).contains(&straggler_prob) {
+            return Err(TraceError::BadValue {
+                line: hline,
+                field: "straggler_prob",
+                detail: format!("{straggler_prob} not in [0,1]"),
+            });
+        }
+        if straggler_prob > 0.0 && (straggler_min < 1.0 || straggler_max < straggler_min) {
+            return Err(TraceError::BadValue {
+                line: hline,
+                field: "straggler_min",
+                detail: "straggler factors need 1 <= min <= max".into(),
+            });
+        }
+
+        let mut records = Vec::with_capacity(expected);
+        let mut prev_t = f64::NEG_INFINITY;
+        for (line, text) in lines.by_ref() {
+            if records.len() == expected {
+                if text.trim().is_empty() {
+                    continue;
+                }
+                return Err(TraceError::TrailingGarbage { line });
+            }
+            if text.trim().is_empty() {
+                return Err(TraceError::Corrupt {
+                    line,
+                    detail: "blank line inside the record stream".into(),
+                });
+            }
+            let rjson = JsonValue::parse(text)
+                .map_err(|e| TraceError::Corrupt { line, detail: format!("{e:?}") })?;
+            let r = StrictLine::new(line, &rjson)?;
+            let t = r.take_f64("t")?;
+            check_time(t, line, "t")?;
+            if t < prev_t {
+                return Err(TraceError::OutOfOrder { line, t, prev: prev_t });
+            }
+            let node = r.take_usize("node")?;
+            if node >= nodes {
+                return Err(TraceError::NodeOutOfRange { line, node, nodes });
+            }
+            let ev = match r.take_str("kind")? {
+                "down" => {
+                    let until = r.take_f64("until")?;
+                    check_time(until, line, "until")?;
+                    if until <= t {
+                        return Err(TraceError::BadValue {
+                            line,
+                            field: "until",
+                            detail: format!("window [{t}, {until}) is empty"),
+                        });
+                    }
+                    TraceEvent::Down { until }
+                }
+                "bw" => {
+                    let factor = r.take_f64("factor")?;
+                    if !factor.is_finite() || factor <= 0.0 {
+                        return Err(TraceError::NegativeBandwidth { line, value: factor });
+                    }
+                    TraceEvent::Bandwidth { factor }
+                }
+                "speed" => {
+                    let factor = r.take_f64("factor")?;
+                    if !factor.is_finite() || factor <= 0.0 {
+                        return Err(TraceError::BadValue {
+                            line,
+                            field: "factor",
+                            detail: format!("speed factor {factor} must be finite and > 0"),
+                        });
+                    }
+                    TraceEvent::Speed { factor }
+                }
+                other => {
+                    return Err(TraceError::BadValue {
+                        line,
+                        field: "kind",
+                        detail: format!("unknown record kind {other:?}"),
+                    });
+                }
+            };
+            r.finish()?;
+            prev_t = t;
+            records.push(TraceRecord { t, node, ev });
+        }
+        if records.len() < expected {
+            return Err(TraceError::Truncated { expected, have: records.len() });
+        }
+        Ok(Trace { nodes, straggler_prob, straggler_min, straggler_max, records })
+    }
+
+    /// Read and parse a trace file.
+    pub fn load(path: &str) -> anyhow::Result<Trace> {
+        use anyhow::Context;
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+        Trace::parse(&text).with_context(|| format!("parsing trace {path}"))
+    }
+
+    /// Serialize and write a trace file.
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        use anyhow::Context;
+        std::fs::write(path, self.to_jsonl()).with_context(|| format!("writing trace {path}"))
+    }
+
+    /// Export a stochastic scenario config as a trace over `nodes`
+    /// nodes. Churn windows become `down` records and link shifts `bw`
+    /// records, bit-exactly; the straggler model rides in the header
+    /// (its draws live in per-worker streams, so replay reproduces
+    /// them). `Scenario::compile_trace` of the result equals
+    /// `Scenario::compile` of the config, hence bit-identical replay.
+    pub fn from_scenario(sc: &ScenarioConfig, nodes: usize) -> Trace {
+        let mut records: Vec<TraceRecord> = Vec::new();
+        for w in &sc.churn {
+            if w.node < nodes && w.until_s > w.from_s {
+                records.push(TraceRecord {
+                    t: w.from_s,
+                    node: w.node,
+                    ev: TraceEvent::Down { until: w.until_s },
+                });
+            }
+        }
+        for s in &sc.link_shifts {
+            if s.node < nodes && s.bandwidth_factor > 0.0 {
+                records.push(TraceRecord {
+                    t: s.at_s,
+                    node: s.node,
+                    ev: TraceEvent::Bandwidth { factor: s.bandwidth_factor },
+                });
+            }
+        }
+        // stable: equal-t records keep config order, matching the
+        // stable per-node sort inside Scenario::compile
+        records.sort_by(|a, b| a.t.total_cmp(&b.t));
+        Trace {
+            nodes,
+            straggler_prob: sc.straggler_prob,
+            straggler_min: sc.straggler_min,
+            straggler_max: sc.straggler_max,
+            records,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the ScenarioSource seam
+// ---------------------------------------------------------------------------
+
+/// Where the compiled [`Scenario`] comes from: the stochastic config
+/// model (the historical path) or a replayed [`Trace`] (loaded from
+/// disk or produced by a deterministic generator at startup).
+#[derive(Clone, Debug)]
+pub enum ScenarioSource {
+    /// Compile `cluster.scenario` directly (the default).
+    Stochastic(ScenarioConfig),
+    /// Replay a trace record-for-record.
+    Replay(Trace),
+}
+
+impl ScenarioSource {
+    /// Resolve the configured source: load the trace file, run the
+    /// generator (streams via `util::derive_seed`, never the run RNG),
+    /// or pass the stochastic model through.
+    pub fn resolve(cluster: &ClusterConfig, seed: u64) -> anyhow::Result<ScenarioSource> {
+        use crate::simulator::generators;
+        let nodes = cluster.nodes.len();
+        Ok(match &cluster.trace {
+            TraceSourceConfig::Stochastic => {
+                ScenarioSource::Stochastic(cluster.scenario.clone())
+            }
+            TraceSourceConfig::Path(path) => ScenarioSource::Replay(Trace::load(path)?),
+            TraceSourceConfig::Generator(g) => {
+                let trace = match g.kind {
+                    TraceGenKind::SpotMarket => generators::spot_market(&generators::SpotMarketSpec {
+                        nodes,
+                        horizon_s: g.horizon_s,
+                        mean_up_s: g.mean_up_s,
+                        mean_down_s: g.mean_down_s,
+                        seed,
+                    }),
+                    TraceGenKind::Diurnal => generators::diurnal(&generators::DiurnalSpec {
+                        nodes,
+                        horizon_s: g.horizon_s,
+                        period_s: g.period_s,
+                        amplitude: g.amplitude,
+                        samples_per_period: g.samples_per_period,
+                        seed,
+                    }),
+                    TraceGenKind::RackFailures => {
+                        generators::rack_failures(&generators::RackFailureSpec {
+                            nodes,
+                            groups: cluster.groups.clone(),
+                            horizon_s: g.horizon_s,
+                            outages_per_rack: g.outages_per_rack,
+                            mean_down_s: g.mean_down_s,
+                            seed,
+                        })
+                    }
+                };
+                ScenarioSource::Replay(trace)
+            }
+        })
+    }
+
+    /// Human-readable provenance tag for run metadata.
+    pub fn describe(&self) -> String {
+        match self {
+            ScenarioSource::Stochastic(_) => "stochastic".to_string(),
+            ScenarioSource::Replay(t) => {
+                format!("trace({} nodes, {} records)", t.nodes, t.records.len())
+            }
+        }
+    }
+
+    /// Compile for a cluster of `nodes` nodes; a replayed trace must
+    /// have been recorded against exactly that cluster size.
+    pub fn compile(&self, nodes: usize) -> anyhow::Result<Scenario> {
+        match self {
+            ScenarioSource::Stochastic(sc) => Ok(Scenario::compile(sc, nodes)),
+            ScenarioSource::Replay(t) => {
+                if t.nodes != nodes {
+                    anyhow::bail!(
+                        "trace recorded for {} nodes, cluster has {nodes}",
+                        t.nodes
+                    );
+                }
+                Ok(Scenario::compile_trace(t))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChurnWindow, LinkShift};
+
+    fn sample_trace() -> Trace {
+        Trace {
+            nodes: 4,
+            straggler_prob: 0.25,
+            straggler_min: 1.5,
+            straggler_max: 4.0,
+            records: vec![
+                TraceRecord { t: 0.0, node: 0, ev: TraceEvent::Speed { factor: 1.25 } },
+                TraceRecord { t: 2.0, node: 1, ev: TraceEvent::Bandwidth { factor: 0.5 } },
+                TraceRecord { t: 2.0, node: 3, ev: TraceEvent::Down { until: 5.5 } },
+                TraceRecord { t: 9.0, node: 1, ev: TraceEvent::Bandwidth { factor: 1.0 } },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_byte_identical() {
+        let t = sample_trace();
+        let text = t.to_jsonl();
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.to_jsonl(), text);
+    }
+
+    #[test]
+    fn plain_numbers_tolerated_on_input() {
+        let text = concat!(
+            "{\"format\":\"adloco-trace\",\"version\":1,\"nodes\":2,\"records\":1,",
+            "\"straggler_prob\":0,\"straggler_min\":1.5,\"straggler_max\":4}\n",
+            "{\"t\":1.5,\"node\":0,\"kind\":\"bw\",\"factor\":0.5}\n",
+        );
+        let t = Trace::parse(text).unwrap();
+        assert_eq!(t.records[0].t, 1.5);
+        assert_eq!(t.records[0].ev, TraceEvent::Bandwidth { factor: 0.5 });
+        // canonical re-serialization switches to hex and round-trips
+        let canon = t.to_jsonl();
+        assert_eq!(Trace::parse(&canon).unwrap(), t);
+    }
+
+    #[test]
+    fn unknown_field_is_typed() {
+        let mut t = sample_trace();
+        t.records.truncate(1);
+        let text = t.to_jsonl().replace("{\"t\":", "{\"bogus\":1,\"t\":");
+        match Trace::parse(&text) {
+            Err(TraceError::UnknownField { line: 2, field }) => assert_eq!(field, "bogus"),
+            other => panic!("expected UnknownField, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_field_is_typed() {
+        let mut t = sample_trace();
+        t.records.truncate(1);
+        let text = t.to_jsonl().replace("\"node\":0,", "\"node\":0,\"node\":0,");
+        match Trace::parse(&text) {
+            Err(TraceError::Corrupt { line: 2, .. }) => {}
+            other => panic!("expected Corrupt (duplicate), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn out_of_order_timestamp_is_typed() {
+        let mut t = sample_trace();
+        t.records.swap(0, 3); // t=9 first, then t=2
+        match Trace::parse(&t.to_jsonl()) {
+            Err(TraceError::OutOfOrder { line: 3, .. }) => {}
+            other => panic!("expected OutOfOrder, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn negative_bandwidth_is_typed() {
+        let t = Trace {
+            records: vec![TraceRecord {
+                t: 1.0,
+                node: 0,
+                ev: TraceEvent::Bandwidth { factor: -0.5 },
+            }],
+            ..sample_trace()
+        };
+        match Trace::parse(&t.to_jsonl()) {
+            Err(TraceError::NegativeBandwidth { line: 2, value }) => assert_eq!(value, -0.5),
+            other => panic!("expected NegativeBandwidth, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_and_trailing_garbage_are_typed() {
+        let t = sample_trace();
+        let text = t.to_jsonl();
+        // drop the last record line
+        let cut = text.rfind("{\"t\"").unwrap();
+        match Trace::parse(&text[..cut]) {
+            Err(TraceError::Truncated { expected: 4, have: 3 }) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        // an extra record past the declared count
+        let extra = format!("{text}{}", text.lines().last().unwrap());
+        match Trace::parse(&extra) {
+            Err(TraceError::TrailingGarbage { .. }) => {}
+            other => panic!("expected TrailingGarbage, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_and_format_are_checked() {
+        let text = sample_trace().to_jsonl();
+        let v2 = text.replacen("\"version\":1", "\"version\":2", 1);
+        assert_eq!(Trace::parse(&v2), Err(TraceError::VersionMismatch { found: 2 }));
+        let alien = text.replacen("adloco-trace", "mystery-trace", 1);
+        match Trace::parse(&alien) {
+            Err(TraceError::BadFormat { found }) => assert_eq!(found, "mystery-trace"),
+            other => panic!("expected BadFormat, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn node_out_of_range_is_typed() {
+        let t = Trace {
+            records: vec![TraceRecord {
+                t: 0.0,
+                node: 9,
+                ev: TraceEvent::Speed { factor: 2.0 },
+            }],
+            ..sample_trace()
+        };
+        match Trace::parse(&t.to_jsonl()) {
+            Err(TraceError::NodeOutOfRange { line: 2, node: 9, nodes: 4 }) => {}
+            other => panic!("expected NodeOutOfRange, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_down_window_is_typed() {
+        let t = Trace {
+            records: vec![TraceRecord { t: 3.0, node: 0, ev: TraceEvent::Down { until: 3.0 } }],
+            ..sample_trace()
+        };
+        match Trace::parse(&t.to_jsonl()) {
+            Err(TraceError::BadValue { line: 2, field: "until", .. }) => {}
+            other => panic!("expected BadValue(until), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn from_scenario_exports_churn_and_shifts() {
+        let sc = ScenarioConfig {
+            straggler_prob: 0.15,
+            churn: vec![ChurnWindow { node: 3, from_s: 8.0, until_s: 16.0 }],
+            link_shifts: vec![
+                LinkShift { node: 1, at_s: 5.0, bandwidth_factor: 0.1 },
+                LinkShift { node: 1, at_s: 20.0, bandwidth_factor: 1.0 },
+            ],
+            ..ScenarioConfig::default()
+        };
+        let t = Trace::from_scenario(&sc, 4);
+        assert_eq!(t.records.len(), 3);
+        assert_eq!(t.straggler_prob, 0.15);
+        // sorted by t: bw@5, down@8, bw@20
+        assert_eq!(t.records[0].ev, TraceEvent::Bandwidth { factor: 0.1 });
+        assert_eq!(t.records[1].ev, TraceEvent::Down { until: 16.0 });
+        assert_eq!(t.records[2].t, 20.0);
+        // and the export parses back identically through the file form
+        assert_eq!(Trace::parse(&t.to_jsonl()).unwrap(), t);
+    }
+}

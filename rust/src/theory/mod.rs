@@ -4,6 +4,12 @@
 //! flat/hierarchical topologies (DESIGN.md §7), compared against the
 //! measured `CommLedger` in `tests/topology.rs`.
 //!
+//! The comm estimates hold unchanged on trace-driven runs (DESIGN.md
+//! §11): a replayed workload trace moves *when* collectives fire on the
+//! virtual clock, never how many run or how many bytes they move, so
+//! the closed forms stay exact on traced timelines too — pinned by
+//! `tests/trace_replay.rs` against the fleet preset's ledger.
+//!
 //! Theorem 1 (batch growth):
 //!   E[b_k] = Ω( k σ² / (η² L (HM + η²) (F(x₀) − F(x*))) )
 //! Theorem 2 (communication complexity, after N accumulation iterations):

@@ -738,3 +738,257 @@ fn prop_legacy_v3_import_inverts_the_historical_writer() {
         assert_eq!(back, want, "case {case}");
     }
 }
+
+// ---------------------------------------------------------------------------
+// workload-trace properties (DESIGN.md §11): the JSONL interchange and
+// the deterministic fleet generators
+// ---------------------------------------------------------------------------
+
+use adloco::simulator::generators::{
+    diurnal, rack_failures, spot_market, DiurnalSpec, RackFailureSpec, SpotMarketSpec,
+};
+use adloco::simulator::{Trace, TraceError, TraceEvent, TraceRecord};
+
+/// Adversarial but valid trace: timestamps spanning 24 decades (still
+/// non-decreasing, ties included), factors from 1e-6 to 1e6, mixed
+/// event kinds, optional straggler header.
+fn random_trace(rng: &mut Rng) -> Trace {
+    let nodes = 1 + rng.below(12) as usize;
+    let n_records = rng.below(40) as usize;
+    let mut t = 0.0f64;
+    let mut records = Vec::with_capacity(n_records);
+    for _ in 0..n_records {
+        // huge/tiny, and sometimes exactly zero (a tie with the
+        // previous record), to stress the hex round-trip
+        if rng.below(4) != 0 {
+            t += rng.f64() * 10f64.powi(rng.range(-12, 12) as i32);
+        }
+        let node = rng.below(nodes as u64) as usize;
+        let factor = (rng.f64() + 1e-12) * 10f64.powi(rng.range(-6, 6) as i32);
+        let ev = match rng.below(3) {
+            0 => {
+                // huge t + tiny duration can round back to t; the format
+                // requires a strictly non-empty window
+                let mut until = t + rng.f64() * 10f64.powi(rng.range(-9, 9) as i32) + 1e-12;
+                if until <= t {
+                    until = t * 2.0 + 1.0;
+                }
+                TraceEvent::Down { until }
+            }
+            1 => TraceEvent::Bandwidth { factor },
+            _ => TraceEvent::Speed { factor },
+        };
+        records.push(TraceRecord { t, node, ev });
+    }
+    let (prob, min, max) = if rng.below(2) == 0 {
+        (0.0, 1.0, 1.0)
+    } else {
+        let min = 1.0 + rng.f64() * 3.0;
+        (rng.f64(), min, min + rng.f64() * 5.0)
+    };
+    Trace {
+        nodes,
+        straggler_prob: prob,
+        straggler_min: min,
+        straggler_max: max,
+        records,
+    }
+}
+
+#[test]
+fn prop_trace_serialize_parse_is_byte_identical() {
+    let mut rng = Rng::new(2024);
+    for case in 0..CASES {
+        let trace = random_trace(&mut rng);
+        let text = trace.to_jsonl();
+        let back = Trace::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(back, trace, "case {case}: struct round-trip");
+        // canonical form: a second serialization is byte-identical
+        assert_eq!(back.to_jsonl(), text, "case {case}: byte round-trip");
+    }
+}
+
+#[test]
+fn prop_trace_truncations_never_parse_silently() {
+    // cutting the canonical text anywhere (beyond dropping the final
+    // newline alone) yields a typed error, never a silently shorter
+    // trace: line-boundary cuts are Truncated, mid-line cuts Corrupt
+    let mut rng = Rng::new(2025);
+    for case in 0..CASES {
+        let mut trace = random_trace(&mut rng);
+        if trace.records.is_empty() {
+            trace.records.push(TraceRecord {
+                t: 0.0,
+                node: 0,
+                ev: TraceEvent::Speed { factor: 1.5 },
+            });
+        }
+        let text = trace.to_jsonl();
+        let cut = 1 + rng.below(text.len() as u64 - 2) as usize;
+        let clipped = &text[..floor_char_boundary(&text, cut)];
+        match Trace::parse(clipped) {
+            Err(
+                TraceError::Truncated { .. }
+                | TraceError::Corrupt { .. }
+                | TraceError::MissingField { .. }
+                | TraceError::BadFormat { .. },
+            ) => {}
+            Err(other) => panic!("case {case}: unexpected error class {other}"),
+            Ok(_) => panic!("case {case}: cut at byte {cut} of {} parsed", text.len()),
+        }
+    }
+}
+
+fn floor_char_boundary(s: &str, mut i: usize) -> usize {
+    while i > 0 && !s.is_char_boundary(i) {
+        i -= 1;
+    }
+    i
+}
+
+#[test]
+fn prop_trace_mutations_yield_typed_errors() {
+    let mut rng = Rng::new(2026);
+    for case in 0..CASES {
+        let mut trace = random_trace(&mut rng);
+        while trace.records.len() < 2 {
+            let t = trace.records.last().map(|r| r.t).unwrap_or(0.0) + 1.0;
+            trace.records.push(TraceRecord {
+                t,
+                node: 0,
+                ev: TraceEvent::Bandwidth { factor: 1.0 },
+            });
+        }
+        let n = trace.records.len();
+        match rng.below(4) {
+            0 => {
+                // strictly decreasing timestamp (kept >= 0 so the
+                // ordering check, not the value check, is what fires)
+                let i = 1 + rng.below(n as u64 - 1) as usize;
+                trace.records[i - 1].t += 1.0;
+                if let TraceEvent::Down { until } = &mut trace.records[i - 1].ev {
+                    *until = trace.records[i - 1].t * 2.0 + 1.0;
+                }
+                trace.records[i].t = trace.records[i - 1].t / 2.0;
+                let err = Trace::parse(&trace.to_jsonl()).unwrap_err();
+                assert!(
+                    matches!(err, TraceError::OutOfOrder { .. }),
+                    "case {case}: {err}"
+                );
+            }
+            1 => {
+                // non-positive bandwidth factor
+                let i = rng.below(n as u64) as usize;
+                trace.records[i].ev =
+                    TraceEvent::Bandwidth { factor: -(1.0 + rng.f64()) };
+                let err = Trace::parse(&trace.to_jsonl()).unwrap_err();
+                assert!(
+                    matches!(err, TraceError::NegativeBandwidth { .. }),
+                    "case {case}: {err}"
+                );
+            }
+            2 => {
+                // node index beyond the declared cluster size
+                let i = rng.below(n as u64) as usize;
+                trace.records[i].node = trace.nodes + rng.below(5) as usize;
+                let err = Trace::parse(&trace.to_jsonl()).unwrap_err();
+                assert!(
+                    matches!(err, TraceError::NodeOutOfRange { .. }),
+                    "case {case}: {err}"
+                );
+            }
+            _ => {
+                // unknown field injected into a random line
+                let text = trace.to_jsonl();
+                let line = rng.below(1 + n as u64) as usize; // header or record
+                let mutated: String = text
+                    .lines()
+                    .enumerate()
+                    .map(|(i, l)| {
+                        if i == line {
+                            format!("{{\"bogus\":1,{}\n", &l[1..])
+                        } else {
+                            format!("{l}\n")
+                        }
+                    })
+                    .collect();
+                let err = Trace::parse(&mutated).unwrap_err();
+                assert!(
+                    matches!(err, TraceError::UnknownField { .. }),
+                    "case {case}: {err}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_generators_are_seed_deterministic_and_invariant() {
+    let mut rng = Rng::new(2027);
+    for case in 0..60 {
+        let seed = rng.next_u64();
+        let nodes = 1 + rng.below(8) as usize;
+        let horizon = 1.0 + rng.f64() * 30.0;
+
+        let spot = SpotMarketSpec {
+            nodes,
+            horizon_s: horizon,
+            mean_up_s: 0.1 + rng.f64() * 5.0,
+            mean_down_s: 0.1 + rng.f64() * 2.0,
+            seed,
+        };
+        let a = spot_market(&spot);
+        assert_eq!(a.to_jsonl(), spot_market(&spot).to_jsonl(), "case {case}: spot seed");
+        // outage windows per node: sorted, disjoint — a preempted node
+        // never revives mid-outage
+        for node in 0..nodes {
+            let mut prev_until = f64::NEG_INFINITY;
+            for r in a.records.iter().filter(|r| r.node == node) {
+                let TraceEvent::Down { until } = r.ev else {
+                    panic!("case {case}: spot emits only Down records");
+                };
+                assert!(r.t >= prev_until, "case {case}: node {node} revived mid-outage");
+                assert!(until > r.t, "case {case}: empty outage window");
+                prev_until = until;
+            }
+        }
+
+        let amplitude = rng.f64() * 2.0;
+        let di = DiurnalSpec {
+            nodes,
+            horizon_s: horizon,
+            period_s: 0.5 + rng.f64() * 10.0,
+            amplitude,
+            samples_per_period: 1 + rng.below(16) as usize,
+            seed,
+        };
+        let d = diurnal(&di);
+        assert_eq!(d.to_jsonl(), diurnal(&di).to_jsonl(), "case {case}: diurnal seed");
+        for r in &d.records {
+            let TraceEvent::Speed { factor } = r.ev else {
+                panic!("case {case}: diurnal emits only Speed records");
+            };
+            assert!(
+                factor >= 1.0 - 1e-12 && factor <= 1.0 + amplitude + 1e-12,
+                "case {case}: diurnal factor {factor} outside [1, 1+{amplitude}]"
+            );
+        }
+
+        let groups: Vec<Vec<usize>> = (0..nodes).map(|i| vec![i]).collect();
+        let rack = RackFailureSpec {
+            nodes,
+            groups: groups.clone(),
+            horizon_s: horizon,
+            outages_per_rack: 1 + rng.below(3) as usize,
+            mean_down_s: 0.1 + rng.f64() * 2.0,
+            seed,
+        };
+        let r1 = rack_failures(&rack);
+        assert_eq!(r1.to_jsonl(), rack_failures(&rack).to_jsonl(), "case {case}: rack seed");
+        // a different seed moves at least one generator's output
+        let other = SpotMarketSpec { seed: seed ^ 0x9e37, ..spot };
+        if !a.records.is_empty() {
+            assert_ne!(a.to_jsonl(), spot_market(&other).to_jsonl(), "case {case}: seed blind");
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Trace-replay equivalence suite (DESIGN.md §11): a stochastic
+//! scenario exported as a workload trace and replayed through the
+//! `ScenarioSource` seam must reproduce the original run **bit for
+//! bit** — record streams, comm ledger, and the `RunResult` payload.
+//! Also pins the traced golden seam (lockstep == event == threads{1,4}
+//! on a lockstep-legal diurnal trace, DESIGN.md §6), the fleet-scale
+//! preset's cross-thread identity, the theory comm estimate on a
+//! traced run (traces move *when* syncs happen, never how many or how
+//! big — EXPERIMENTS.md §Figures, Fig. 6), and the runtime guard that
+//! keeps dynamic traces off the lockstep walk.
+
+mod common;
+
+use adloco::cluster::{assign_workers, Topology};
+use adloco::config::{
+    presets, Config, EngineConfig, ScenarioConfig, SchedulerKind, TopologyKind,
+    TraceGenConfig, TraceGenKind, TraceSourceConfig,
+};
+use adloco::engine::build_engine;
+use adloco::simulator::Trace;
+use adloco::theory::{estimate_ledger, TopoShape};
+use common::{assert_payloads_match, digest, run};
+
+/// Unique-per-process temp path for an exported trace file.
+fn tmp_trace(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("adloco_trace_replay_{}_{tag}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Run a stochastic preset, export its scenario as a trace file, replay
+/// the trace through `cluster.trace = Path(..)`, and assert the two
+/// runs are bit-identical end to end.
+fn assert_replay_matches(cfg: Config, tag: &str) {
+    let nodes = cfg.cluster.nodes.len();
+    let trace = Trace::from_scenario(&cfg.cluster.scenario, nodes);
+    assert!(
+        !trace.records.is_empty(),
+        "{tag}: the stochastic preset must export a non-trivial trace"
+    );
+    let path = tmp_trace(tag);
+    trace.save(&path).unwrap();
+    // the file must round-trip before we trust the replay comparison
+    assert_eq!(Trace::load(&path).unwrap(), trace, "{tag}: save/load round-trip");
+
+    // the trace fully replaces the stochastic scenario block (straggler
+    // parameters ride in the trace header); leaving any of it set would
+    // be an ambiguous double source and is rejected by validate()
+    let mut replay = cfg.clone();
+    replay.name = format!("{}_replay", cfg.name);
+    replay.cluster.scenario = ScenarioConfig::default();
+    replay.cluster.trace = TraceSourceConfig::Path(path.clone());
+
+    let (r_a, rec_a, led_a) = run(cfg);
+    let (r_b, rec_b, led_b) = run(replay);
+    assert_eq!(
+        digest(&r_a, &rec_a, &led_a),
+        digest(&r_b, &rec_b, &led_b),
+        "{tag}: stochastic vs trace-replay record streams must be bit-identical"
+    );
+    assert_payloads_match(&r_a, &r_b, tag);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn hetero_dynamic_replays_bit_identically() {
+    assert_replay_matches(presets::hetero_dynamic(), "hetero_dynamic");
+}
+
+#[test]
+fn elastic_mit_replays_bit_identically() {
+    assert_replay_matches(presets::elastic_mit(), "elastic_mit");
+}
+
+// ---------------------------------------------------------------------------
+// golden seam on a traced (lockstep-legal) preset
+// ---------------------------------------------------------------------------
+
+/// A small diurnal-load config: speed timelines are deterministic, so
+/// the trace is expressible on every scheduler (DESIGN.md §11).
+fn diurnal_cfg(scheduler: SchedulerKind, threads: usize) -> Config {
+    let mut cfg = presets::mock_default();
+    cfg.name = "trace_diurnal_seam".into();
+    cfg.engine = EngineConfig::Mock { dim: 64, noise: 1.0, condition: 10.0 };
+    cfg.algo.num_trainers = 2;
+    cfg.algo.workers_per_trainer = 2;
+    cfg.algo.inner_steps = 6;
+    cfg.algo.outer_steps = 3;
+    cfg.data.corpus_sequences = 600;
+    cfg.data.val_sequences = 32;
+    cfg.cluster.trace = TraceSourceConfig::Generator(TraceGenConfig {
+        kind: TraceGenKind::Diurnal,
+        horizon_s: 10.0,
+        period_s: 2.0,
+        amplitude: 0.5,
+        samples_per_period: 8,
+        ..TraceGenConfig::default()
+    });
+    cfg.run.scheduler = scheduler;
+    cfg.run.threads = threads;
+    cfg
+}
+
+/// Lockstep == event == threads{1,4} on the diurnal trace, with a
+/// golden fixture (`GOLDEN_WRITE=1` creates it on a reference machine)
+/// additionally pinning the absolute record stream.
+#[test]
+fn diurnal_trace_seam_is_scheduler_and_thread_invariant() {
+    let (r_l, rec_l, led_l) = run(diurnal_cfg(SchedulerKind::Lockstep, 1));
+    let (r_e, rec_e, led_e) = run(diurnal_cfg(SchedulerKind::Event, 1));
+    let (r_p, rec_p, led_p) = run(diurnal_cfg(SchedulerKind::Event, 4));
+    let lockstep = digest(&r_l, &rec_l, &led_l);
+    let event = digest(&r_e, &rec_e, &led_e);
+    let parallel = digest(&r_p, &rec_p, &led_p);
+    assert_eq!(lockstep, event, "diurnal trace: lockstep vs event digest");
+    assert_eq!(event, parallel, "diurnal trace: serial vs 4-thread digest");
+    assert_payloads_match(&r_l, &r_e, "diurnal lockstep vs event");
+    assert_payloads_match(&r_e, &r_p, "diurnal serial vs parallel");
+    // the speed timelines must actually engage: a diurnal factor > 1
+    // stretches virtual time relative to the untraced twin
+    let mut flat = diurnal_cfg(SchedulerKind::Lockstep, 1);
+    flat.cluster.trace = TraceSourceConfig::Stochastic;
+    let (r_flat, _, _) = run(flat);
+    assert!(
+        r_l.virtual_time_s > r_flat.virtual_time_s,
+        "diurnal slowdown must stretch virtual time: {} vs {}",
+        r_l.virtual_time_s,
+        r_flat.virtual_time_s
+    );
+
+    let fixture = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/trace_diurnal.txt");
+    if std::env::var("GOLDEN_WRITE").as_deref() == Ok("1") {
+        std::fs::create_dir_all(fixture.parent().unwrap()).unwrap();
+        std::fs::write(&fixture, &lockstep).unwrap();
+    } else if fixture.exists() {
+        let pinned = std::fs::read_to_string(&fixture).unwrap();
+        assert_eq!(
+            lockstep,
+            pinned.trim(),
+            "trace_diurnal: record stream drifted from the pinned golden"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fleet preset: cross-thread identity + theory estimate on a traced run
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_trace_threads_agree_and_match_theory() {
+    let mk = |threads: usize| {
+        let mut cfg = presets::fleet_trace();
+        cfg.run.threads = threads;
+        cfg
+    };
+    let cfg = mk(1);
+    let param_bytes = (build_engine(&cfg).unwrap().param_count() * 4) as u64;
+    let outer_steps = cfg.algo.outer_steps as u64;
+    let k = cfg.algo.num_trainers;
+    let m = cfg.algo.workers_per_trainer;
+    let placement = assign_workers(k * m, cfg.cluster.nodes.len());
+    let topo = Topology::compile(&cfg.cluster);
+    assert_eq!(cfg.cluster.topology, TopologyKind::Flat);
+    let shapes: Vec<TopoShape> = (0..k).map(|_| TopoShape::Flat { m }).collect();
+    let homes: Vec<usize> = (0..k).map(|i| topo.group_of(placement[i * m])).collect();
+
+    let (r1, rec1, led1) = run(cfg);
+    let (r4, rec4, led4) = run(mk(4));
+    assert_eq!(
+        digest(&r1, &rec1, &led1),
+        digest(&r4, &rec4, &led4),
+        "fleet_trace: threads=1 vs threads=4 digest"
+    );
+    assert_payloads_match(&r1, &r4, "fleet_trace threads");
+
+    // spot-market preemptions shift *when* outer syncs fire, never how
+    // many collectives run or how many bytes they move — the closed
+    // forms stay exact on traced timelines (merging/elastic are off in
+    // this preset, so the plan streams are empty)
+    assert!(rec1.merges.is_empty());
+    let est = estimate_ledger(outer_steps, &shapes, &homes, false, &[], param_bytes);
+    assert_eq!(est.events, led1.count(), "fleet_trace: predicted event count");
+    assert_eq!(est.total_bytes, led1.total_bytes(), "fleet_trace: predicted total bytes");
+    assert_eq!(est.wan_bytes, led1.wan_bytes(), "fleet_trace: predicted WAN bytes");
+    assert_eq!(r1.comm_bytes, led1.total_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// runtime guard: dynamic traces cannot run on the lockstep walk
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lockstep_rejects_a_dynamic_trace_file() {
+    // export hetero_dynamic's churn+shift scenario (validate() cannot
+    // inspect a trace file, so this guard must live in Coordinator::new)
+    let src = presets::hetero_dynamic();
+    let trace = Trace::from_scenario(&src.cluster.scenario, src.cluster.nodes.len());
+    let path = tmp_trace("lockstep_guard");
+    trace.save(&path).unwrap();
+
+    let mut cfg = diurnal_cfg(SchedulerKind::Lockstep, 1);
+    cfg.name = "lockstep_dynamic_trace".into();
+    cfg.cluster.trace = TraceSourceConfig::Path(path.clone());
+    cfg.validate().unwrap(); // statically fine: the file is opaque here
+    let engine = build_engine(&cfg).unwrap();
+    let err = match adloco::coordinator::Coordinator::new(cfg, engine) {
+        Ok(_) => panic!("a dynamic trace on the lockstep walk must be rejected"),
+        Err(e) => e,
+    };
+    assert!(
+        format!("{err:#}").contains("run.scheduler=event"),
+        "unexpected error: {err:#}"
+    );
+    std::fs::remove_file(&path).ok();
+}

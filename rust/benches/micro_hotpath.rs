@@ -1,71 +1,176 @@
 //! MICRO — hot-path microbenchmarks backing EXPERIMENTS.md §Perf:
-//! the L3 dense-vector operations (merge, outer delta+step, controller),
-//! data sampling, the MockEngine step, and — when artifacts are present —
-//! the PJRT train/grad/eval calls across the batch ladder.
+//! the vectorized L3 kernels (DESIGN.md §12) across a paper-scale
+//! parameter ladder, the batch controller, data sampling, the
+//! MockEngine step, checkpoint encode/decode (raw64le vs legacy hex
+//! accounting), and — when artifacts are present — the PJRT
+//! train/grad/eval calls across the batch ladder.
 //!
 //! Run: `cargo bench --bench micro_hotpath` (`--quick` to smoke).
+//! Emits `bench_results/BENCH_micro.json` (one row per op: params,
+//! median_ms, p90_ms, bytes_per_s) — the artifact CI uploads and
+//! `scripts/perf_gate.py` compares against the committed baseline.
 
 use adloco::batching::BatchController;
-use adloco::benchkit::{quick_mode, time_auto, Table};
+use adloco::benchkit::{quick_mode, threads_arg, time_auto, write_json_artifact, Table, Timing};
+use adloco::checkpoint::{import_bytes, interchange::encode_complete_with, AccountingEncoding};
 use adloco::config::presets;
 use adloco::data::{make_shards, BatchSampler, Corpus, CorpusSpec, TokenBatch};
 use adloco::engine::{MockEngine, MockSpec, StepStats, TrainEngine};
 use adloco::merge::do_merge;
 use adloco::outer::OuterOpt;
-use adloco::util::Rng;
+use adloco::util::{vecmath, JsonValue, Rng};
+
+/// Table + JSON rows kept in sync: every op lands in both the printed
+/// table and the machine-readable artifact.
+struct Rows {
+    table: Table,
+    json: Vec<JsonValue>,
+}
+
+impl Rows {
+    fn new() -> Rows {
+        Rows {
+            table: Table::new(&["op", "params", "median_ms", "p90_ms", "GB_per_s"]),
+            json: Vec::new(),
+        }
+    }
+
+    /// `bytes_per_rep` is the approximate DRAM traffic of one rep (0
+    /// for ops where a bandwidth figure is meaningless).
+    fn push(&mut self, op: &str, params: usize, bytes_per_rep: usize, t: Timing) {
+        let bps = if t.median_s > 0.0 { bytes_per_rep as f64 / t.median_s } else { 0.0 };
+        self.table.row(&[
+            op.to_string(),
+            if params > 0 { format!("{params}") } else { "-".into() },
+            format!("{:.4}", t.median_s * 1e3),
+            format!("{:.4}", t.p90_s * 1e3),
+            if bps > 0.0 { format!("{:.2}", bps / 1e9) } else { "-".into() },
+        ]);
+        self.json.push(JsonValue::obj(vec![
+            ("op", JsonValue::str(op)),
+            ("params", JsonValue::num(params as f64)),
+            ("median_ms", JsonValue::num(t.median_s * 1e3)),
+            ("p90_ms", JsonValue::num(t.p90_s * 1e3)),
+            ("bytes_per_s", JsonValue::num(bps)),
+        ]));
+    }
+}
+
+/// Cheap deterministic fill (hash ramp) — generating 1e8 values through
+/// the Box–Muller RNG would dominate setup time.
+fn fill(n: usize, salt: u32) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let h = (i as u32).wrapping_add(salt).wrapping_mul(2_654_435_761);
+            ((h >> 16) & 0xffff) as f32 / 65_536.0 - 0.5
+        })
+        .collect()
+}
 
 fn main() {
     let quick = quick_mode();
     let budget = if quick { 0.05 } else { 0.5 };
-    let p = 117_056; // tiny-profile parameter count
-    let mut rng = Rng::new(1);
-    let mut table = Table::new(&["op", "median_ms", "p90_ms", "ops_per_s"]);
-    fn push(table: &mut Table, name: &str, t: adloco::benchkit::Timing) {
-        table.row(&[
-            name.to_string(),
-            format!("{:.4}", t.median_s * 1e3),
-            format!("{:.4}", t.p90_s * 1e3),
-            format!("{:.1}", t.per_sec()),
-        ]);
+    let mut rows = Rows::new();
+
+    // ---- vectorized kernel ladder (DESIGN.md §12) ------------------------
+    // Single-vector ops climb to 1e8 on full runs; multi-buffer ops
+    // (merge, outer) stop at 1e7 to bound resident memory (4 extra
+    // buffers each).
+    let singles: Vec<usize> = if quick {
+        vec![100_000, 10_000_000]
+    } else {
+        vec![1_000_000, 10_000_000, 100_000_000]
+    };
+    let multis: Vec<usize> =
+        if quick { vec![100_000, 10_000_000] } else { vec![1_000_000, 10_000_000] };
+
+    for &n in &singles {
+        let a = fill(n, 1);
+        let b = fill(n, 2);
+        let t = time_auto(budget, 3, || {
+            std::hint::black_box(vecmath::dot_f32(&a, &b));
+        });
+        rows.push(&format!("vec.dot(n={n})"), n, 8 * n, t);
+
+        let t = time_auto(budget, 3, || {
+            std::hint::black_box(vecmath::norm_sq_f32(&a));
+        });
+        rows.push(&format!("vec.norm_sq(n={n})"), n, 4 * n, t);
+
+        let mut y = b.clone();
+        let t = time_auto(budget, 3, || {
+            vecmath::axpy_f32(0.5, &a, &mut y);
+            std::hint::black_box(&y);
+        });
+        rows.push(&format!("vec.axpy(n={n})"), n, 12 * n, t);
+
+        let mut p = b.clone();
+        let t = time_auto(budget, 3, || {
+            vecmath::sgd_step_f32(&mut p, &a, 1e-4);
+            std::hint::black_box(&p);
+        });
+        rows.push(&format!("vec.sgd_step(n={n})"), n, 12 * n, t);
     }
 
-    // ---- merge (DoMerge weighted average over 4 trainers) ----------------
-    let mut bufs: Vec<Vec<f32>> =
-        (0..4).map(|_| (0..p).map(|_| rng.normal() as f32).collect()).collect();
-    let t = time_auto(budget, 5, || {
-        let mut it = bufs.iter_mut();
-        let (a, b, c, d) =
-            (it.next().unwrap(), it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
-        let mut members = vec![
-            (0usize, 3usize, a.as_mut_slice()),
-            (1, 7, b.as_mut_slice()),
-            (2, 2, c.as_mut_slice()),
-            (3, 9, d.as_mut_slice()),
-        ];
-        std::hint::black_box(do_merge(&mut members));
-    });
-    push(&mut table, "do_merge(4 x 117k)", t);
+    for &n in &multis {
+        // merge: weighted average over 4 trainers (f64 accumulator
+        // allocated per call, exactly like the coordinator's path)
+        let mut bufs: Vec<Vec<f32>> = (0..4).map(|i| fill(n, 10 + i as u32)).collect();
+        let t = time_auto(budget, 3, || {
+            let mut it = bufs.iter_mut();
+            let (a, b, c, d) =
+                (it.next().unwrap(), it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+            let mut members = vec![
+                (0usize, 3usize, a.as_mut_slice()),
+                (1, 7, b.as_mut_slice()),
+                (2, 2, c.as_mut_slice()),
+                (3, 9, d.as_mut_slice()),
+            ];
+            std::hint::black_box(do_merge(&mut members));
+        });
+        rows.push(&format!("merge.do_merge(4,n={n})"), n, 36 * n, t);
 
-    // ---- outer delta + Nesterov step --------------------------------------
-    let x_prev: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
-    let workers: Vec<Vec<f32>> =
-        (0..4).map(|_| (0..p).map(|_| rng.normal() as f32).collect()).collect();
-    let mut x = x_prev.clone();
-    let mut delta = vec![0.0f32; p];
-    let mut opt = OuterOpt::new(
-        adloco::config::OuterOptKind::Nesterov { momentum: 0.9 },
-        0.5,
-        p,
-    );
-    let t = time_auto(budget, 5, || {
-        let wr: Vec<&[f32]> = workers.iter().map(|w| w.as_slice()).collect();
-        OuterOpt::compute_delta(&x_prev, &wr, &mut delta);
-        opt.step(&mut x, &delta);
-        std::hint::black_box(&x);
-    });
-    push(&mut table, "outer_delta+nesterov(4 x 117k)", t);
+        // outer delta + Nesterov over 4 workers
+        let x_prev = fill(n, 20);
+        let workers: Vec<Vec<f32>> = (0..4).map(|i| fill(n, 30 + i as u32)).collect();
+        let mut x = x_prev.clone();
+        let mut delta = vec![0.0f32; n];
+        let mut opt = OuterOpt::new(
+            adloco::config::OuterOptKind::Nesterov { momentum: 0.9 },
+            0.5,
+            n,
+        );
+        let t = time_auto(budget, 3, || {
+            let wr: Vec<&[f32]> = workers.iter().map(|w| w.as_slice()).collect();
+            OuterOpt::compute_delta(&x_prev, &wr, &mut delta);
+            opt.step(&mut x, &delta);
+            std::hint::black_box(&x);
+        });
+        rows.push(&format!("outer.delta+nesterov(4,n={n})"), n, 48 * n, t);
 
-    // ---- batch controller --------------------------------------------------
+        // adamw: params/m/v read-write + grad read
+        let grad = fill(n, 40);
+        let mut p = fill(n, 41);
+        let mut m = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        let k = vecmath::AdamCoeffs {
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.1,
+            bc1: 1.0 - 0.9f64.powf(10.0),
+            bc2: 1.0 - 0.95f64.powf(10.0),
+            lr: 1e-3,
+        };
+        let t = time_auto(budget, 3, || {
+            vecmath::adamw_step_f32(&mut p, &mut m, &mut v, &grad, &k);
+            std::hint::black_box(&p);
+        });
+        rows.push(&format!("vec.adamw_step(n={n})"), n, 28 * n, t);
+    }
+
+    // ---- batch controller ------------------------------------------------
+    let mut rng = Rng::new(1);
     let mut ctl = BatchController::new(presets::paper_table1().algo.batching);
     let stats = StepStats { loss: 2.0, grad_sq_norm: 0.5, sigma2: 1.3, ip_var: 0.2 };
     let t = time_auto(budget.min(0.1), 100, || {
@@ -73,14 +178,9 @@ fn main() {
             ctl.observe(std::hint::black_box(&stats), 8);
         }
     });
-    table.row(&[
-        "controller.observe x1000".into(),
-        format!("{:.4}", t.median_s * 1e3),
-        format!("{:.4}", t.p90_s * 1e3),
-        format!("{:.1}", t.per_sec()),
-    ]);
+    rows.push("controller.observe x1000", 0, 0, t);
 
-    // ---- data sampling ------------------------------------------------------
+    // ---- data sampling ---------------------------------------------------
     let corpus = Corpus::generate(CorpusSpec::new(4000, 64, 256, 1.1, 5));
     let shard = make_shards(4000, 1, 1.0, &mut rng).pop().unwrap();
     let mut sampler = BatchSampler::new(shard, rng.fork(9));
@@ -89,19 +189,20 @@ fn main() {
         sampler.next_batch(&corpus, &mut buf);
         std::hint::black_box(&buf);
     });
-    push(&mut table, "sampler.next_batch(b=16,s=64)", t);
+    rows.push("sampler.next_batch(b=16,s=64)", 0, 0, t);
 
-    // ---- mock engine step ---------------------------------------------------
-    let mock = MockEngine::new(MockSpec { dim: 2000, ..MockSpec::default() });
+    // ---- mock engine step (vectorized grad statistics) -------------------
+    let dim = if quick { 2000 } else { 20_000 };
+    let mock = MockEngine::new(MockSpec { dim, ..MockSpec::default() });
     let mut st = mock.init_state(0);
     let mut noise = Rng::new(17);
     let mb = TokenBatch::new(16, 8);
     let t = time_auto(budget, 5, || {
         mock.train_step(&mut st, 0.01, &mb, &mut noise).unwrap();
     });
-    push(&mut table, "mock.train_step(dim=2000,b=16)", t);
+    rows.push(&format!("mock.train_step(dim={dim},b=16)"), dim, 0, t);
 
-    // ---- checkpoint interchange (v4 encode/decode, DESIGN.md §10) ----------
+    // ---- checkpoint interchange: raw64le vs legacy hex accounting --------
     {
         let c = {
             let mut cfg = presets::mock_default();
@@ -116,18 +217,22 @@ fn main() {
             c
         };
         let snap = c.snapshot(1);
-        let bytes = snap.to_bytes();
-        let t = time_auto(budget, 5, || {
-            std::hint::black_box(snap.to_bytes());
-        });
-        push(&mut table, &format!("ckpt.to_bytes({} KiB)", bytes.len() / 1024), t);
-        let t = time_auto(budget, 5, || {
-            std::hint::black_box(adloco::checkpoint::import_bytes(&bytes).unwrap());
-        });
-        push(&mut table, &format!("ckpt.import_bytes({} KiB)", bytes.len() / 1024), t);
+        let encodings = [(AccountingEncoding::Raw, "raw64le"), (AccountingEncoding::Hex, "hex")];
+        for (enc, tag) in encodings {
+            let bytes = encode_complete_with(&snap, enc);
+            let kib = bytes.len() / 1024;
+            let t = time_auto(budget, 5, || {
+                std::hint::black_box(encode_complete_with(&snap, enc));
+            });
+            rows.push(&format!("ckpt.encode[{tag}]({kib} KiB)"), 0, bytes.len(), t);
+            let t = time_auto(budget, 5, || {
+                std::hint::black_box(import_bytes(&bytes).unwrap());
+            });
+            rows.push(&format!("ckpt.import[{tag}]({kib} KiB)"), 0, bytes.len(), t);
+        }
     }
 
-    // ---- PJRT ladder (artifacts-gated) --------------------------------------
+    // ---- PJRT ladder (artifacts-gated) -----------------------------------
     if std::path::Path::new("artifacts/tiny/meta.json").exists() {
         let eng = adloco::runtime::XlaEngine::load("artifacts", "tiny").unwrap();
         let width = eng.meta().seq_len + 1;
@@ -144,7 +249,7 @@ fn main() {
             let t = time_auto(budget, 3, || {
                 eng.train_step(&mut state, 1e-4, &tb, &mut noise).unwrap();
             });
-            push(&mut table, &format!("xla.train_step(tiny,b={b})"), t);
+            rows.push(&format!("xla.train_step(tiny,b={b})"), 0, 0, t);
         }
         // grad + apply at max batch
         let bmax = eng.meta().grad_step_batch;
@@ -159,7 +264,7 @@ fn main() {
         let t = time_auto(budget, 3, || {
             eng.grad_step(&st0.params, &tb, &mut grad, &mut noise).unwrap();
         });
-        push(&mut table, &format!("xla.grad_step(tiny,b={bmax})"), t);
+        rows.push(&format!("xla.grad_step(tiny,b={bmax})"), 0, 0, t);
 
         let eb = eng.eval_batch();
         let mut tb = TokenBatch::new(eb, width);
@@ -170,12 +275,19 @@ fn main() {
         let t = time_auto(budget, 3, || {
             eng.eval_loss(&st0.params, &tb, &mut noise).unwrap();
         });
-        push(&mut table, &format!("xla.eval(tiny,b={eb})"), t);
+        rows.push(&format!("xla.eval(tiny,b={eb})"), 0, 0, t);
     } else {
         eprintln!("artifacts/tiny missing — run `make artifacts` for PJRT rows");
     }
 
     println!("\nMICRO — hot-path benchmarks");
-    table.print();
-    table.write_csv("micro_hotpath").unwrap();
+    rows.table.print();
+    rows.table.write_csv("micro_hotpath").unwrap();
+    let doc = JsonValue::obj(vec![
+        ("bench", JsonValue::str("micro")),
+        ("quick", JsonValue::Bool(quick)),
+        ("threads", JsonValue::num(threads_arg() as f64)),
+        ("rows", JsonValue::Array(rows.json)),
+    ]);
+    write_json_artifact("micro", &doc).unwrap();
 }

@@ -12,10 +12,17 @@
 //! * **META** — format metadata JSON: the interchange variant
 //!   (`complete` for exact resume, `minimal` for params+RNG
 //!   warm-start), `interchange_format_version`, the producing crate
-//!   version, the config name and the config structural digest.
-//! * **HEAD** — the state header JSON (everything except raw f32
-//!   payloads; wide integers and all f64s as bit-exact hex strings).
-//! * **BLOB** — the raw f32 payload, little-endian, in header order.
+//!   version, the config name, the config structural digest, and the
+//!   accounting-array encoding flag (`accounting_encoding`, see
+//!   [`AccountingEncoding`]; absent in pre-PR-8 files = `hex`).
+//! * **HEAD** — the state header JSON (everything except raw payloads;
+//!   wide integers and all f64s as bit-exact hex strings — except the
+//!   per-slot f64 accounting arrays under `raw64le`, where HEAD keeps
+//!   only their element counts).
+//! * **BLOB** — raw little-endian payload, in header order. Under
+//!   `raw64le` the seven accounting f64 arrays come first (HEAD field
+//!   order), then the f32 state vectors; under `hex` it is the f32
+//!   vectors alone.
 //! * **END.** — empty; a positional sentinel so a file cut between
 //!   BLOB's seal and the file seal is still structurally detected.
 //!
@@ -35,9 +42,10 @@
 //! real mid-run checkpoints.
 
 use super::{
-    blob_bytes, bytes_to_f32s, state_fields, Checkpoint, Interchange, MinimalCheckpoint,
-    MinimalTrainer, MinimalWorker, PendingSnapshot, PhaseSnapshot, RegistryRowSnapshot,
-    RngSnapshot, SamplerSnapshot, TrainerSnapshot, WorkerSnapshot, MAGIC, VERSION,
+    blob_bytes, bytes_to_f32s, bytes_to_f64s, f64s_to_bytes, state_fields_with, Checkpoint,
+    Interchange, MinimalCheckpoint, MinimalTrainer, MinimalWorker, PendingSnapshot,
+    PhaseSnapshot, RegistryRowSnapshot, RngSnapshot, SamplerSnapshot, TrainerSnapshot,
+    WorkerSnapshot, MAGIC, VERSION,
 };
 use crate::util::{fnv1a, JsonValue};
 use std::fmt;
@@ -135,6 +143,31 @@ impl InterchangeFormat {
     }
 }
 
+/// How the seven per-slot f64 accounting arrays of a *complete*
+/// snapshot (clock_times, busy_s, wait_s, comm_s, comm_hidden_s,
+/// preempted_s, vacant_s) are encoded (META `accounting_encoding`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccountingEncoding {
+    /// Per-f64 hex strings inline in HEAD — what pre-PR-8 v4 files (no
+    /// META flag) and the legacy v3 exporter carry. ~18 JSON bytes per
+    /// element; allocation-heavy at 10k slots.
+    Hex,
+    /// Raw little-endian f64 bytes at the front of the BLOB section
+    /// (HEAD field order); HEAD keeps only the element counts. Exact
+    /// (bit-for-bit, like hex) at 8 bytes per element.
+    Raw,
+}
+
+impl AccountingEncoding {
+    /// The META field value.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AccountingEncoding::Hex => "hex",
+            AccountingEncoding::Raw => "raw64le",
+        }
+    }
+}
+
 /// Parsed META section: what the file *is*, before any state is read.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct InterchangeMeta {
@@ -150,6 +183,9 @@ pub struct InterchangeMeta {
     /// `Config::structural_digest` of the producing config (0 when
     /// unknown).
     pub config_digest: u64,
+    /// Accounting-array encoding; files without the META flag (written
+    /// before it existed) decode as [`AccountingEncoding::Hex`].
+    pub accounting: AccountingEncoding,
 }
 
 const SEC_META: &[u8; 4] = b"META";
@@ -184,27 +220,75 @@ fn container(meta: &[u8], head: &[u8], blob: &[u8]) -> Vec<u8> {
     out
 }
 
-fn meta_json(format: InterchangeFormat, config_name: &str, config_digest: u64) -> String {
+fn meta_json(
+    format: InterchangeFormat,
+    config_name: &str,
+    config_digest: u64,
+    accounting: AccountingEncoding,
+) -> String {
     JsonValue::obj(vec![
         ("interchange_format", JsonValue::str(format.as_str())),
         ("interchange_format_version", JsonValue::num(VERSION as f64)),
         ("crate_version", JsonValue::str(env!("CARGO_PKG_VERSION"))),
         ("config_name", JsonValue::str(config_name)),
         ("config_digest", super::u64_json(config_digest)),
+        ("accounting_encoding", JsonValue::str(accounting.as_str())),
     ])
     .to_string()
 }
 
-/// Serialize a full snapshot as the v4 *complete* container.
+/// The seven accounting arrays in HEAD field order — the raw64le BLOB
+/// prefix order the writer and reader must agree on.
+fn accounting_arrays(cp: &Checkpoint) -> [&[f64]; 7] {
+    [
+        &cp.clock_times,
+        &cp.busy_s,
+        &cp.wait_s,
+        &cp.comm_s,
+        &cp.comm_hidden_s,
+        &cp.preempted_s,
+        &cp.vacant_s,
+    ]
+}
+
+/// Serialize a full snapshot as the v4 *complete* container (raw64le
+/// accounting — the default writer since PR 8).
 pub fn encode_complete(cp: &Checkpoint) -> Vec<u8> {
-    let meta = meta_json(InterchangeFormat::Complete, &cp.config_name, cp.config_digest);
-    let head = JsonValue::obj(state_fields(cp)).to_string();
-    container(meta.as_bytes(), head.as_bytes(), &blob_bytes(cp))
+    encode_complete_with(cp, AccountingEncoding::Raw)
+}
+
+/// `encode_complete` with an explicit accounting encoding. `Hex`
+/// reproduces the pre-PR-8 writer byte layout (kept callable so tests
+/// and the micro bench can pin legacy importability and measure the
+/// encoding gap).
+pub fn encode_complete_with(cp: &Checkpoint, accounting: AccountingEncoding) -> Vec<u8> {
+    let meta =
+        meta_json(InterchangeFormat::Complete, &cp.config_name, cp.config_digest, accounting);
+    let raw = accounting == AccountingEncoding::Raw;
+    let head = JsonValue::obj(state_fields_with(cp, raw)).to_string();
+    let blob = if raw {
+        let mut out = Vec::new();
+        for arr in accounting_arrays(cp) {
+            f64s_to_bytes(arr, &mut out);
+        }
+        out.extend_from_slice(&blob_bytes(cp));
+        out
+    } else {
+        blob_bytes(cp)
+    };
+    container(meta.as_bytes(), head.as_bytes(), &blob)
 }
 
 /// Serialize a warm-start snapshot as the v4 *minimal* container.
+/// (Minimal files carry no accounting arrays; the META flag is emitted
+/// as `hex` purely for uniformity.)
 pub fn encode_minimal(m: &MinimalCheckpoint) -> Vec<u8> {
-    let meta = meta_json(InterchangeFormat::Minimal, &m.config_name, m.config_digest);
+    let meta = meta_json(
+        InterchangeFormat::Minimal,
+        &m.config_name,
+        m.config_digest,
+        AccountingEncoding::Hex,
+    );
     let head = JsonValue::obj(vec![
         ("outer_step", super::u64_json(m.outer_step)),
         ("rng", super::rng_json(&m.rng)),
@@ -391,6 +475,19 @@ impl<'a> StrictObj<'a> {
         })
     }
 
+    /// `take` for fields added after the format shipped: None when the
+    /// field is absent (older writer), so the caller picks the legacy
+    /// default instead of erroring.
+    fn take_opt(&mut self, key: &str) -> Option<&'a JsonValue> {
+        for (i, (k, v)) in self.fields.iter().enumerate() {
+            if !self.taken[i] && k == key {
+                self.taken[i] = true;
+                return Some(v);
+            }
+        }
+        None
+    }
+
     fn finish(self) -> IResult<()> {
         for (i, (k, _)) in self.fields.iter().enumerate() {
             if !self.taken[i] {
@@ -515,6 +612,42 @@ fn take_f32s(blob: &[u8], cursor: &mut usize, n: usize, what: &str) -> IResult<V
     Ok(out)
 }
 
+fn take_f64s(blob: &[u8], cursor: &mut usize, n: usize, what: &str) -> IResult<Vec<f64>> {
+    let bytes = n * 8;
+    if *cursor + bytes > blob.len() {
+        return Err(corrupt(
+            "BLOB",
+            format!(
+                "payload exhausted reading {what}: need {} bytes at offset {}, have {}",
+                bytes,
+                *cursor,
+                blob.len()
+            ),
+        ));
+    }
+    let out = bytes_to_f64s(&blob[*cursor..*cursor + bytes]);
+    *cursor += bytes;
+    Ok(out)
+}
+
+/// One accounting array: inline hex f64s (`hex`), or an element count
+/// resolved against the BLOB prefix (`raw64le`).
+fn accounting_array(
+    v: &JsonValue,
+    accounting: AccountingEncoding,
+    blob: &[u8],
+    cursor: &mut usize,
+    path: &str,
+) -> IResult<Vec<f64>> {
+    match accounting {
+        AccountingEncoding::Hex => s_f64s(v, "HEAD", path),
+        AccountingEncoding::Raw => {
+            let n = s_usize(v, "HEAD", path)?;
+            take_f64s(blob, cursor, n, path)
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // decoders
 // ---------------------------------------------------------------------------
@@ -538,6 +671,17 @@ fn parse_meta(payload: &[u8]) -> IResult<InterchangeMeta> {
         s_str(o.take("crate_version")?, "META", "META.crate_version")?.to_string();
     let config_name = s_str(o.take("config_name")?, "META", "META.config_name")?.to_string();
     let config_digest = s_u64(o.take("config_digest")?, "META", "META.config_digest")?;
+    let accounting = match o.take_opt("accounting_encoding") {
+        // pre-flag writers: inline hex accounting arrays
+        None => AccountingEncoding::Hex,
+        Some(v) => match s_str(v, "META", "META.accounting_encoding")? {
+            "hex" => AccountingEncoding::Hex,
+            "raw64le" => AccountingEncoding::Raw,
+            other => {
+                return Err(corrupt("META", format!("unknown accounting_encoding {other:?}")));
+            }
+        },
+    };
     o.finish()?;
     Ok(InterchangeMeta {
         format,
@@ -545,6 +689,7 @@ fn parse_meta(payload: &[u8]) -> IResult<InterchangeMeta> {
         crate_version,
         config_name,
         config_digest,
+        accounting,
     })
 }
 
@@ -698,13 +843,21 @@ fn decode_complete(meta: &InterchangeMeta, head: &[u8], blob: &[u8]) -> IResult<
     let comm_bytes = s_u64(o.take("comm_bytes")?, S, "HEAD.comm_bytes")?;
     let comm_wan_bytes = s_u64(o.take("comm_wan_bytes")?, S, "HEAD.comm_wan_bytes")?;
     let overlap_hidden_s = s_f64(o.take("overlap_hidden_s")?, S, "HEAD.overlap_hidden_s")?;
-    let clock_times = s_f64s(o.take("clock_times")?, S, "HEAD.clock_times")?;
-    let busy_s = s_f64s(o.take("busy_s")?, S, "HEAD.busy_s")?;
-    let wait_s = s_f64s(o.take("wait_s")?, S, "HEAD.wait_s")?;
-    let comm_s = s_f64s(o.take("comm_s")?, S, "HEAD.comm_s")?;
-    let comm_hidden_s = s_f64s(o.take("comm_hidden_s")?, S, "HEAD.comm_hidden_s")?;
-    let preempted_s = s_f64s(o.take("preempted_s")?, S, "HEAD.preempted_s")?;
-    let vacant_s = s_f64s(o.take("vacant_s")?, S, "HEAD.vacant_s")?;
+    // under raw64le the accounting arrays occupy the BLOB prefix, so the
+    // cursor the trainer vectors continue from starts after them
+    let mut cursor = 0usize;
+    let acct = meta.accounting;
+    let clock_times =
+        accounting_array(o.take("clock_times")?, acct, blob, &mut cursor, "HEAD.clock_times")?;
+    let busy_s = accounting_array(o.take("busy_s")?, acct, blob, &mut cursor, "HEAD.busy_s")?;
+    let wait_s = accounting_array(o.take("wait_s")?, acct, blob, &mut cursor, "HEAD.wait_s")?;
+    let comm_s = accounting_array(o.take("comm_s")?, acct, blob, &mut cursor, "HEAD.comm_s")?;
+    let comm_hidden_s =
+        accounting_array(o.take("comm_hidden_s")?, acct, blob, &mut cursor, "HEAD.comm_hidden_s")?;
+    let preempted_s =
+        accounting_array(o.take("preempted_s")?, acct, blob, &mut cursor, "HEAD.preempted_s")?;
+    let vacant_s =
+        accounting_array(o.take("vacant_s")?, acct, blob, &mut cursor, "HEAD.vacant_s")?;
     let spawn_count = s_u64(o.take("spawn_count")?, S, "HEAD.spawn_count")?;
     let last_spawn_outer = s_u64(o.take("last_spawn_outer")?, S, "HEAD.last_spawn_outer")?;
     let last_merge_rep = match o.take("last_merge_rep")? {
@@ -722,7 +875,6 @@ fn decode_complete(meta: &InterchangeMeta, head: &[u8], blob: &[u8]) -> IResult<
     let trainers_v = s_array(o.take("trainers")?, S, "HEAD.trainers")?.to_vec();
     o.finish()?;
 
-    let mut cursor = 0usize;
     let trainers = trainers_v
         .iter()
         .enumerate()
@@ -828,7 +980,7 @@ pub(crate) fn decode_v4(raw: &[u8]) -> IResult<Interchange> {
 #[cfg(test)]
 mod tests {
     use super::super::tests::sample_checkpoint;
-    use super::super::{import_bytes, Interchange};
+    use super::super::{import_bytes, state_fields, Interchange};
     use super::*;
 
     #[test]
@@ -904,7 +1056,12 @@ mod tests {
     #[test]
     fn unknown_field_in_head_rejected() {
         let cp = sample_checkpoint();
-        let meta = meta_json(InterchangeFormat::Complete, &cp.config_name, cp.config_digest);
+        let meta = meta_json(
+            InterchangeFormat::Complete,
+            &cp.config_name,
+            cp.config_digest,
+            AccountingEncoding::Hex,
+        );
         let mut fields = state_fields(&cp);
         fields.push(("extra_state", JsonValue::num(1.0)));
         let head = JsonValue::obj(fields).to_string();
@@ -925,7 +1082,12 @@ mod tests {
         // a duplicated key is only consumable once; strict parsing
         // reports the second copy as unknown
         let cp = sample_checkpoint();
-        let meta = meta_json(InterchangeFormat::Complete, &cp.config_name, cp.config_digest);
+        let meta = meta_json(
+            InterchangeFormat::Complete,
+            &cp.config_name,
+            cp.config_digest,
+            AccountingEncoding::Hex,
+        );
         let mut fields = state_fields(&cp);
         fields.push(("outer_step", super::super::u64_json(99)));
         let head = JsonValue::obj(fields).to_string();
@@ -976,11 +1138,122 @@ mod tests {
     }
 
     #[test]
+    fn raw_and_hex_accounting_decode_identically() {
+        // the raw64le writer and the legacy hex writer must produce
+        // bit-identical checkpoints on import — encoding is a container
+        // concern, never a state one
+        let cp = sample_checkpoint();
+        let raw_bytes = encode_complete_with(&cp, AccountingEncoding::Raw);
+        let hex_bytes = encode_complete_with(&cp, AccountingEncoding::Hex);
+        assert!(
+            raw_bytes.len() < hex_bytes.len(),
+            "raw64le should be smaller ({} vs {} bytes)",
+            raw_bytes.len(),
+            hex_bytes.len()
+        );
+        let from_raw = match import_bytes(&raw_bytes).unwrap() {
+            Interchange::Complete(c) => c,
+            other => panic!("expected complete, got {other:?}"),
+        };
+        let from_hex = match import_bytes(&hex_bytes).unwrap() {
+            Interchange::Complete(c) => c,
+            other => panic!("expected complete, got {other:?}"),
+        };
+        assert_eq!(from_raw, cp);
+        assert_eq!(from_hex, cp);
+    }
+
+    #[test]
+    fn meta_without_accounting_flag_defaults_to_hex() {
+        // pre-PR-8 v4 files carry no accounting_encoding field and hex
+        // arrays in HEAD: they must keep importing unchanged
+        let cp = sample_checkpoint();
+        let meta = JsonValue::obj(vec![
+            ("interchange_format", JsonValue::str("complete")),
+            ("interchange_format_version", JsonValue::num(VERSION as f64)),
+            ("crate_version", JsonValue::str("0.0.0")),
+            ("config_name", JsonValue::str(cp.config_name.as_str())),
+            ("config_digest", super::super::u64_json(cp.config_digest)),
+        ])
+        .to_string();
+        let head = JsonValue::obj(state_fields(&cp)).to_string();
+        let bytes = container(meta.as_bytes(), head.as_bytes(), &blob_bytes(&cp));
+        match import_bytes(&bytes).unwrap() {
+            Interchange::Complete(back) => assert_eq!(back, cp),
+            other => panic!("expected complete variant, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_accounting_encoding_rejected() {
+        let cp = sample_checkpoint();
+        let meta = JsonValue::obj(vec![
+            ("interchange_format", JsonValue::str("complete")),
+            ("interchange_format_version", JsonValue::num(VERSION as f64)),
+            ("crate_version", JsonValue::str("0.0.0")),
+            ("config_name", JsonValue::str("unit")),
+            ("config_digest", super::super::u64_json(0)),
+            ("accounting_encoding", JsonValue::str("base85")),
+        ])
+        .to_string();
+        let head = JsonValue::obj(state_fields(&cp)).to_string();
+        let bytes = container(meta.as_bytes(), head.as_bytes(), &blob_bytes(&cp));
+        let err = import_bytes(&bytes).unwrap_err();
+        assert!(
+            matches!(&err, InterchangeError::Corrupt { section, detail }
+                if section == "META" && detail.contains("accounting_encoding")),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn raw_accounting_short_blob_rejected() {
+        // a raw64le HEAD declaring more accounting elements than the
+        // BLOB prefix carries must fail typed in BLOB, not panic
+        let cp = sample_checkpoint();
+        let meta = meta_json(
+            InterchangeFormat::Complete,
+            &cp.config_name,
+            cp.config_digest,
+            AccountingEncoding::Raw,
+        );
+        let head = JsonValue::obj(state_fields_with(&cp, true)).to_string();
+        // blob deliberately missing the accounting prefix entirely,
+        // while HEAD declares non-empty arrays
+        let bytes = container(meta.as_bytes(), head.as_bytes(), &blob_bytes(&cp));
+        match import_bytes(&bytes) {
+            Err(InterchangeError::Corrupt { section, .. }) => assert_eq!(section, "BLOB"),
+            // with small checkpoints the misaligned read can also
+            // surface as the end-of-blob length check
+            Err(other) => {
+                panic!("expected a typed Corrupt error, got {other}")
+            }
+            Ok(_) => panic!("short raw accounting blob must not import"),
+        }
+    }
+
+    #[test]
+    fn every_raw_bit_flip_is_detected() {
+        // the seal guarantee holds for the raw64le layout too
+        let bytes = encode_complete_with(&sample_checkpoint(), AccountingEncoding::Raw);
+        for pos in (0..bytes.len()).step_by(7) {
+            let mut m = bytes.clone();
+            m[pos] ^= 1 << (pos % 8);
+            assert!(import_bytes(&m).is_err(), "bit flip at offset {pos} went undetected");
+        }
+    }
+
+    #[test]
     fn blob_length_mismatch_rejected() {
         // a header that declares less payload than BLOB carries must
         // not silently ignore the excess
         let cp = sample_checkpoint();
-        let meta = meta_json(InterchangeFormat::Complete, &cp.config_name, cp.config_digest);
+        let meta = meta_json(
+            InterchangeFormat::Complete,
+            &cp.config_name,
+            cp.config_digest,
+            AccountingEncoding::Hex,
+        );
         let head = JsonValue::obj(state_fields(&cp)).to_string();
         let mut blob = blob_bytes(&cp);
         blob.extend_from_slice(&[0u8; 4]);

@@ -44,7 +44,9 @@ pub mod interchange;
 pub mod legacy;
 pub mod retention;
 
-pub use interchange::{section_boundaries, InterchangeError, InterchangeFormat, InterchangeMeta};
+pub use interchange::{
+    section_boundaries, AccountingEncoding, InterchangeError, InterchangeFormat, InterchangeMeta,
+};
 
 /// File magic of the checkpoint container format (all versions).
 pub const MAGIC: &[u8; 4] = b"ADLC";
@@ -359,6 +361,19 @@ pub(crate) fn bytes_to_f32s(raw: &[u8]) -> Vec<f32> {
         .collect()
 }
 
+pub(crate) fn f64s_to_bytes(v: &[f64], out: &mut Vec<u8>) {
+    out.reserve(v.len() * 8);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub(crate) fn bytes_to_f64s(raw: &[u8]) -> Vec<f64> {
+    raw.chunks_exact(8)
+        .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect()
+}
+
 pub(crate) fn usizes_json(v: &[usize]) -> JsonValue {
     JsonValue::Array(v.iter().map(|&x| JsonValue::num(x as f64)).collect())
 }
@@ -403,8 +418,28 @@ pub(crate) fn ema_json(e: (f64, u64)) -> JsonValue {
 
 /// The state fields shared by the v3 header and the v4 HEAD section
 /// (v3 additionally leads with `config_name`; v4 moves identity into
-/// the META section).
+/// the META section). Hex accounting arrays — what the legacy exporter
+/// and pre-PR-8 v4 files carry.
 pub(crate) fn state_fields(cp: &Checkpoint) -> Vec<(&'static str, JsonValue)> {
+    state_fields_with(cp, false)
+}
+
+/// `state_fields` with a choice of accounting-array encoding: inline
+/// per-f64 hex strings (`raw_accounting = false`), or just the element
+/// counts, with the raw little-endian f64 bytes prepended to the BLOB
+/// section by the writer (`raw_accounting = true` — the v4 `raw64le`
+/// META flag; exact and ~4.5x smaller per element than hex-in-JSON).
+pub(crate) fn state_fields_with(
+    cp: &Checkpoint,
+    raw_accounting: bool,
+) -> Vec<(&'static str, JsonValue)> {
+    let acct = |v: &[f64]| {
+        if raw_accounting {
+            JsonValue::num(v.len() as f64)
+        } else {
+            f64s_json(v)
+        }
+    };
     vec![
         ("outer_step", u64_json(cp.outer_step)),
         ("total_samples", u64_json(cp.total_samples)),
@@ -412,13 +447,13 @@ pub(crate) fn state_fields(cp: &Checkpoint) -> Vec<(&'static str, JsonValue)> {
         ("comm_bytes", u64_json(cp.comm_bytes)),
         ("comm_wan_bytes", u64_json(cp.comm_wan_bytes)),
         ("overlap_hidden_s", f64_json(cp.overlap_hidden_s)),
-        ("clock_times", f64s_json(&cp.clock_times)),
-        ("busy_s", f64s_json(&cp.busy_s)),
-        ("wait_s", f64s_json(&cp.wait_s)),
-        ("comm_s", f64s_json(&cp.comm_s)),
-        ("comm_hidden_s", f64s_json(&cp.comm_hidden_s)),
-        ("preempted_s", f64s_json(&cp.preempted_s)),
-        ("vacant_s", f64s_json(&cp.vacant_s)),
+        ("clock_times", acct(&cp.clock_times)),
+        ("busy_s", acct(&cp.busy_s)),
+        ("wait_s", acct(&cp.wait_s)),
+        ("comm_s", acct(&cp.comm_s)),
+        ("comm_hidden_s", acct(&cp.comm_hidden_s)),
+        ("preempted_s", acct(&cp.preempted_s)),
+        ("vacant_s", acct(&cp.vacant_s)),
         ("spawn_count", u64_json(cp.spawn_count)),
         ("last_spawn_outer", u64_json(cp.last_spawn_outer)),
         (

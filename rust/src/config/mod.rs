@@ -725,6 +725,12 @@ pub struct RunConfig {
     /// wall-clock (the determinism suite in
     /// `tests/determinism_parallel.rs` enforces this).
     pub threads: usize,
+    /// Stream per-inner-step records to disk once per outer round
+    /// instead of holding them all in RAM (fleet-scale runs: 10k workers
+    /// × thousands of rounds). Requires `out_dir`; the final JSONL is
+    /// byte-identical to the buffered writer's
+    /// (`tests/stream_records.rs`).
+    pub stream_records: bool,
 }
 
 impl RunConfig {
@@ -1471,6 +1477,9 @@ fn apply_run(r: &mut RunConfig, v: &JsonValue) -> Result<()> {
     }
     if let Some(x) = v.get("threads").and_then(|x| x.as_usize()) {
         r.threads = x;
+    }
+    if let Some(x) = v.get("stream_records").and_then(|x| x.as_bool()) {
+        r.stream_records = x;
     }
     Ok(())
 }

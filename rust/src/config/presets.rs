@@ -132,6 +132,7 @@ pub fn paper_table1() -> Config {
             keep_checkpoints: 0, // overwrite-in-place; N>0 keeps last N + merge pins
             scheduler: SchedulerKind::Lockstep,
             threads: 0, // auto: RUN_THREADS env var, else serial
+            stream_records: false, // buffered JSONL; fleet-scale runs opt in
         },
         out_dir: None,
     }

@@ -79,7 +79,8 @@ use crate::data::{make_shards, Corpus, CorpusSpec, TokenBatch};
 use crate::engine::{StepStats, TrainEngine};
 use crate::instances::{plan_spawns, InstanceRegistry, NodeLoad, Origin, SpawnBudget};
 use crate::metrics::{
-    perplexity, EvalRecord, LifecycleEvent, LifecycleRecord, Recorder, RoundRecord,
+    perplexity, EvalRecord, LifecycleEvent, LifecycleRecord, RecordStreamer, Recorder,
+    RoundRecord,
 };
 use crate::simulator::ScenarioSource;
 use crate::trainer::Trainer;
@@ -242,6 +243,9 @@ pub struct Coordinator {
     threads: usize,
     /// Host wall-clock of the last `run()` call (perf reporting only).
     run_wall_s: f64,
+    /// Per-round step-record streaming sink (`run.stream_records`);
+    /// None = keep everything buffered in the recorder.
+    streamer: Option<RecordStreamer>,
 }
 
 impl Coordinator {
@@ -356,6 +360,7 @@ impl Coordinator {
             ),
             threads,
             run_wall_s: 0.0,
+            streamer: None,
             cfg,
             engine,
             corpus,
@@ -646,6 +651,11 @@ impl Coordinator {
                 SchedulerKind::Lockstep if self.threads <= 1 => self.step_outer(t)?,
                 _ => self.step_outer_event(t)?,
             };
+            if let Some(streamer) = self.streamer.as_mut() {
+                // flush this round's step records to disk and drop them
+                // from RAM (run.stream_records)
+                streamer.drain(&mut self.recorder)?;
+            }
             if let Some(path) = self.cfg.run.checkpoint_path.clone() {
                 if (every > 0 && t % every == 0) || t == outer_steps || hit {
                     if keep == 0 {
@@ -680,6 +690,23 @@ impl Coordinator {
         self.run_wall_s = wall0.elapsed().as_secs_f64();
         self.recorder.wall_clock_s = self.run_wall_s;
         Ok(self.result())
+    }
+
+    /// Attach a per-round step-record streaming sink writing toward
+    /// `final_path` (`run.stream_records`). Call before `run()`.
+    pub fn enable_record_streaming(&mut self, final_path: &str) -> Result<()> {
+        self.streamer = Some(RecordStreamer::create(final_path)?);
+        Ok(())
+    }
+
+    /// Finish the streaming sink: drain remaining steps and assemble the
+    /// final JSONL (byte-identical to the buffered writer's). No-op when
+    /// streaming was never enabled.
+    pub fn finish_record_streaming(&mut self) -> Result<()> {
+        if let Some(streamer) = self.streamer.take() {
+            streamer.finish(&mut self.recorder)?;
+        }
+        Ok(())
     }
 
     /// Capture the full run state for checkpointing (the exact-resume
@@ -1376,10 +1403,22 @@ impl Coordinator {
 pub fn run_experiment(cfg: Config) -> Result<RunResult> {
     let engine = crate::engine::build_engine(&cfg)?;
     let mut coord = Coordinator::new(cfg, engine)?;
+    let stream = coord.cfg.run.stream_records;
+    let base = coord.cfg.out_dir.clone().map(|dir| format!("{dir}/{}", coord.cfg.name));
+    if stream {
+        if let Some(base) = &base {
+            coord.enable_record_streaming(&format!("{base}.jsonl"))?;
+        }
+        // stream_records without out_dir degrades to buffered (nothing
+        // would be written anyway)
+    }
     let result = coord.run()?;
-    if let Some(dir) = coord.cfg.out_dir.clone() {
-        let base = format!("{dir}/{}", coord.cfg.name);
-        coord.recorder.write_jsonl(&format!("{base}.jsonl"))?;
+    if let Some(base) = base {
+        if stream {
+            coord.finish_record_streaming()?;
+        } else {
+            coord.recorder.write_jsonl(&format!("{base}.jsonl"))?;
+        }
         coord.recorder.write_eval_csv(&format!("{base}.csv"))?;
     }
     Ok(result)

@@ -21,7 +21,7 @@
 
 use super::{adamw_step, sgd_step, AdamWParams, ModelState, StepStats, TrainEngine};
 use crate::data::TokenBatch;
-use crate::util::Rng;
+use crate::util::{vecmath, Rng};
 use anyhow::{ensure, Result};
 
 /// Generation parameters of the synthetic objective.
@@ -110,25 +110,18 @@ impl MockEngine {
         &self.xstar
     }
 
-    /// True loss F(x) (no noise) — handy for tests/benches.
+    /// True loss F(x) (no noise) — handy for tests/benches. Summation
+    /// follows the fixed chunked order (DESIGN.md §12).
     pub fn true_loss(&self, x: &[f32]) -> f64 {
-        let mut acc = 0.0f64;
-        for i in 0..self.spec.dim {
-            let d = (x[i] - self.xstar[i]) as f64;
-            acc += 0.5 * self.eig[i] as f64 * d * d;
-        }
-        acc + LOSS_FLOOR
+        vecmath::quad_loss_f32(&x[..self.spec.dim], &self.xstar, &self.eig) + LOSS_FLOOR
     }
 
-    /// True gradient A(x - x*) into `out`; returns ||grad||^2.
+    /// True gradient A(x - x*) into `out`; returns ||grad||^2 (the
+    /// gradient elements are bit-identical to the old serial loop; only
+    /// the norm reduction uses the chunked order).
     fn true_grad(&self, x: &[f32], out: &mut [f32]) -> f64 {
-        let mut nsq = 0.0f64;
-        for i in 0..self.spec.dim {
-            let g = self.eig[i] * (x[i] - self.xstar[i]);
-            out[i] = g;
-            nsq += (g as f64) * (g as f64);
-        }
-        nsq
+        let d = self.spec.dim;
+        vecmath::quad_grad_f32(&x[..d], &self.xstar, &self.eig, &mut out[..d])
     }
 
     /// Gradient + statistics shared by train_step / grad_step. Fills
@@ -193,29 +186,17 @@ impl MockEngine {
                 *b = *g + noise.normal_ms(0.0, coord_std) as f32;
             }
         }
-        // gbar = mean over chunks; s1 = ||gbar||^2
-        let mut s1 = 0.0f64;
-        for i in 0..d {
-            let mut acc = 0.0f64;
-            for c in 0..chunks {
-                acc += chunk_buf[c * d + i] as f64;
-            }
-            let g = acc / chunks as f64;
-            grad_out[i] = g as f32;
-            s1 += g * g;
-        }
-        // s2 = sum_c ||g_c - gbar||^2 ; ip_c = <g_c, gbar>
+        // gbar = mean over chunks; s1 = ||gbar||^2. The per-element mean
+        // keeps the old row order (so grad_out is bit-identical); the s1
+        // reduction uses the chunked order (DESIGN.md §12).
+        let s1 = vecmath::chunk_mean_norm_sq(chunk_buf, chunks, &mut grad_out[..d]);
+        // s2 = sum_c ||g_c - gbar||^2 ; ip_c = <g_c, gbar> — fused per-row
+        // kernel, both sums in the chunked order
         let mut s2 = 0.0f64;
         let mut ip = [0.0f64; MAX_CHUNKS];
         for c in 0..chunks {
             let buf = &chunk_buf[c * d..(c + 1) * d];
-            let mut acc = 0.0f64;
-            let mut dotp = 0.0f64;
-            for (x, g) in buf.iter().zip(grad_out.iter()) {
-                let diff = *x as f64 - *g as f64;
-                acc += diff * diff;
-                dotp += *x as f64 * *g as f64;
-            }
+            let (acc, dotp) = vecmath::sq_diff_dot_f32(buf, &grad_out[..d]);
             s2 += acc;
             ip[c] = dotp;
         }

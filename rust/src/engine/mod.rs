@@ -162,29 +162,24 @@ pub fn adamw_step(state: &mut ModelState, grad: &[f32], lr: f64, p: &AdamWParams
     debug_assert_eq!(state.params.len(), grad.len());
     state.step += 1;
     let t = state.step as f64;
-    let bc1 = 1.0 - p.beta1.powf(t);
-    let bc2 = 1.0 - p.beta2.powf(t);
-    for i in 0..grad.len() {
-        let g = grad[i] as f64;
-        let m = p.beta1 * state.m[i] as f64 + (1.0 - p.beta1) * g;
-        let v = p.beta2 * state.v[i] as f64 + (1.0 - p.beta2) * g * g;
-        state.m[i] = m as f32;
-        state.v[i] = v as f32;
-        let m_hat = m / bc1;
-        let v_hat = v / bc2;
-        let x = state.params[i] as f64;
-        state.params[i] =
-            (x - lr * (m_hat / (v_hat.sqrt() + p.eps) + p.weight_decay * x)) as f32;
-    }
+    let k = crate::util::vecmath::AdamCoeffs {
+        beta1: p.beta1,
+        beta2: p.beta2,
+        eps: p.eps,
+        weight_decay: p.weight_decay,
+        bc1: 1.0 - p.beta1.powf(t),
+        bc2: 1.0 - p.beta2.powf(t),
+        lr,
+    };
+    // elementwise kernel — bit-identical to the old serial loop
+    crate::util::vecmath::adamw_step_f32(&mut state.params, &mut state.m, &mut state.v, grad, &k);
 }
 
 /// Plain SGD update (what the paper's theorems assume for the outer/inner
 /// analysis; the theory benches use it for clean Theorem 1/2 curves).
 pub fn sgd_step(state: &mut ModelState, grad: &[f32], lr: f64) {
     state.step += 1;
-    for i in 0..grad.len() {
-        state.params[i] -= (lr * grad[i] as f64) as f32;
-    }
+    crate::util::vecmath::sgd_step_f32(&mut state.params, grad, lr);
 }
 
 /// Build an engine from config. XlaEngine construction lives in

@@ -105,18 +105,16 @@ pub fn do_merge(members: &mut [(usize, usize, &mut [f32])]) -> MergeOutcome {
         .map(|(i, _)| i)
         .unwrap();
 
-    // accumulate into f64 then write back to the representative
+    // accumulate into f64 then write back to the representative;
+    // elementwise kernels keep the per-index member order, so the result
+    // is bit-identical to the old serial loops (DESIGN.md §12)
     let mut acc = vec![0.0f64; n];
     for (_, b, p) in members.iter() {
         let w = *b as f64 / w_sum;
-        for i in 0..n {
-            acc[i] += w * p[i] as f64;
-        }
+        crate::util::vecmath::weighted_add_f32(w, p, &mut acc);
     }
     let rep_id = members[rep_pos].0;
-    for (i, v) in acc.iter().enumerate() {
-        members[rep_pos].2[i] = *v as f32;
-    }
+    crate::util::vecmath::write_back_f64(&acc, members[rep_pos].2);
     let removed = members
         .iter()
         .map(|&(id, _, _)| id)

@@ -202,6 +202,12 @@ pub struct Recorder {
     /// the determinism contract — see DESIGN.md §6 and the speedup
     /// helpers in [`crate::benchkit`]).
     pub wall_clock_s: f64,
+    /// Step records already flushed to disk by a [`RecordStreamer`]
+    /// (`run.stream_records`) and dropped from `steps`. Folded back into
+    /// [`Recorder::mean_batch`] so summaries survive the drain.
+    pub drained_steps: u64,
+    /// Sum of applied batch sizes over the drained steps.
+    pub drained_batch_sum: f64,
 }
 
 impl Recorder {
@@ -241,15 +247,23 @@ impl Recorder {
             .min_by(|a, b| a.partial_cmp(b).unwrap())
     }
 
-    /// Mean applied batch size over all steps (hardware-utilization proxy).
+    /// Mean applied batch size over all steps (hardware-utilization
+    /// proxy). Counts steps already streamed to disk via their drained
+    /// aggregates, so the summary is identical with and without
+    /// `run.stream_records`.
     pub fn mean_batch(&self) -> f64 {
-        if self.steps.is_empty() {
+        let n = self.steps.len() as f64 + self.drained_steps as f64;
+        if n == 0.0 {
             return 0.0;
         }
-        self.steps.iter().map(|s| s.batch as f64).sum::<f64>() / self.steps.len() as f64
+        let sum =
+            self.steps.iter().map(|s| s.batch as f64).sum::<f64>() + self.drained_batch_sum;
+        sum / n
     }
 
     /// (step, requested_batch) series — Theorem 1's E[b_k] observable.
+    /// In-RAM records only: the theory benches that plot this never
+    /// enable `run.stream_records`.
     pub fn batch_growth_series(&self) -> Vec<(u64, usize)> {
         self.steps.iter().map(|s| (s.global_step, s.requested_batch)).collect()
     }
@@ -336,6 +350,16 @@ impl Recorder {
         }
         let f = std::fs::File::create(path).with_context(|| format!("create {path}"))?;
         let mut w = std::io::BufWriter::new(f);
+        self.write_notes(&mut w)?;
+        Self::write_step_lines(&mut w, &self.steps)?;
+        self.write_tail(&mut w)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Note lines — the canonical JSONL prefix (shared by the buffered
+    /// writer and the streaming finisher so both emit identical bytes).
+    fn write_notes<W: Write>(&self, w: &mut W) -> Result<()> {
         for (k, v) in &self.notes {
             let line = JsonValue::obj(vec![
                 ("type", JsonValue::str("note")),
@@ -344,9 +368,20 @@ impl Recorder {
             ]);
             writeln!(w, "{}", line.to_string())?;
         }
-        for s in &self.steps {
+        Ok(())
+    }
+
+    /// Step lines (one per record, canonical order = slice order).
+    fn write_step_lines<W: Write>(w: &mut W, steps: &[StepRecord]) -> Result<()> {
+        for s in steps {
             writeln!(w, "{}", Self::step_json(s).to_string())?;
         }
+        Ok(())
+    }
+
+    /// Everything after the step block: evals, merges, lifecycle, rounds,
+    /// perf, utilization — the canonical JSONL suffix.
+    fn write_tail<W: Write>(&self, w: &mut W) -> Result<()> {
         for e in &self.evals {
             writeln!(w, "{}", Self::eval_json(e).to_string())?;
         }
@@ -414,6 +449,15 @@ impl Recorder {
         Ok(())
     }
 
+    /// Drain `self.steps` into a streamer-owned sink: fold the aggregate
+    /// counters and clear the in-RAM buffer. (Separated from the IO so
+    /// the streamer can call it after writing the lines.)
+    fn fold_drained_steps(&mut self) {
+        self.drained_steps += self.steps.len() as u64;
+        self.drained_batch_sum += self.steps.iter().map(|s| s.batch as f64).sum::<f64>();
+        self.steps.clear();
+    }
+
     /// Write the eval curve as CSV (step, time, ppl, comms) — what the
     /// figure generators tabulate.
     pub fn write_eval_csv(&self, path: &str) -> Result<()> {
@@ -430,6 +474,74 @@ impl Recorder {
                 e.global_step, e.virtual_time_s, e.loss, e.perplexity, e.comm_count, e.comm_bytes
             )?;
         }
+        Ok(())
+    }
+}
+
+/// Streaming JSONL sink for step records (`run.stream_records`,
+/// ROADMAP item 3 tail: 10k workers × thousands of rounds would pin
+/// every `StepRecord` in RAM for the whole run otherwise).
+///
+/// Step records are the only stream that grows per inner step — evals,
+/// merges, lifecycle and rounds are O(rounds) and stay buffered (the
+/// coordinator reads `recorder.merges` mid-run for checkpoint-retention
+/// pins, and the summaries need the eval curve). The streamer appends
+/// drained step lines to a `<final>.steps.part` segment file per round;
+/// `finish` reassembles the final JSONL in the exact canonical order of
+/// [`Recorder::write_jsonl`] (notes, steps, evals, merges, lifecycle,
+/// rounds, perf, utilization) using the same line emitters, so the
+/// streamed file is byte-identical to the buffered writer's
+/// (`tests/stream_records.rs` pins this).
+#[derive(Debug)]
+pub struct RecordStreamer {
+    final_path: String,
+    part_path: String,
+    part: std::io::BufWriter<std::fs::File>,
+}
+
+impl RecordStreamer {
+    /// Open the step-segment sink for a run that will end up at
+    /// `final_path`.
+    pub fn create(final_path: &str) -> Result<Self> {
+        if let Some(dir) = std::path::Path::new(final_path).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let part_path = format!("{final_path}.steps.part");
+        let f = std::fs::File::create(&part_path)
+            .with_context(|| format!("create {part_path}"))?;
+        Ok(RecordStreamer {
+            final_path: final_path.to_string(),
+            part_path,
+            part: std::io::BufWriter::new(f),
+        })
+    }
+
+    /// Append the recorder's buffered step records to the segment file,
+    /// fold their aggregates, and drop them from RAM. Called once per
+    /// outer round by the coordinator.
+    pub fn drain(&mut self, rec: &mut Recorder) -> Result<()> {
+        Recorder::write_step_lines(&mut self.part, &rec.steps)?;
+        rec.fold_drained_steps();
+        self.part.flush().context("flush step segment")?;
+        Ok(())
+    }
+
+    /// Drain any remaining steps, then assemble the final JSONL file in
+    /// the canonical record order and remove the segment file.
+    pub fn finish(mut self, rec: &mut Recorder) -> Result<()> {
+        self.drain(rec)?;
+        let RecordStreamer { final_path, part_path, part } = self;
+        drop(part);
+        let f = std::fs::File::create(&final_path)
+            .with_context(|| format!("create {final_path}"))?;
+        let mut w = std::io::BufWriter::new(f);
+        rec.write_notes(&mut w)?;
+        let mut seg = std::fs::File::open(&part_path)
+            .with_context(|| format!("reopen {part_path}"))?;
+        std::io::copy(&mut seg, &mut w).context("copy step segment")?;
+        rec.write_tail(&mut w)?;
+        w.flush()?;
+        std::fs::remove_file(&part_path).ok();
         Ok(())
     }
 }

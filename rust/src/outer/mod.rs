@@ -9,6 +9,7 @@
 //!   * `Nesterov` — DiLoCo's default outer optimizer
 
 use crate::config::OuterOptKind;
+use crate::util::vecmath;
 
 /// Stateful outer optimizer for one trainer.
 #[derive(Clone, Debug)]
@@ -42,15 +43,9 @@ impl OuterOpt {
         for w in workers {
             assert_eq!(w.len(), n);
         }
-        let inv = 1.0 / workers.len() as f64;
-        for i in 0..n {
-            let mut avg = 0.0f64;
-            for w in workers {
-                avg += w[i] as f64;
-            }
-            avg *= inv;
-            delta[i] = (x_prev[i] as f64 - avg) as f32;
-        }
+        // register-blocked kernel; per-index worker order matches the old
+        // serial loop, so the result is bit-identical (DESIGN.md §12)
+        vecmath::delta_from_workers(x_prev, workers, delta);
     }
 
     /// Apply the outer update to `x` given Δ (OuterOpt step of
@@ -60,23 +55,15 @@ impl OuterOpt {
         match self.kind {
             OuterOptKind::Average => {
                 // x ← x − Δ  == mean of workers (lr ignored by design)
-                for i in 0..x.len() {
-                    x[i] -= delta[i];
-                }
+                vecmath::sub_assign_f32(x, delta);
             }
             OuterOptKind::Sgd => {
-                for i in 0..x.len() {
-                    x[i] = (x[i] as f64 - self.lr * delta[i] as f64) as f32;
-                }
+                vecmath::scale_sub_f32(x, delta, self.lr, false);
             }
             OuterOptKind::Nesterov { momentum } => {
                 debug_assert_eq!(self.velocity.len(), x.len());
-                for i in 0..x.len() {
-                    let v = momentum * self.velocity[i] as f64 + delta[i] as f64;
-                    self.velocity[i] = v as f32;
-                    // Nesterov lookahead: step along momentum*v + delta
-                    x[i] = (x[i] as f64 - self.lr * (momentum * v + delta[i] as f64)) as f32;
-                }
+                // Nesterov lookahead: step along momentum*v + delta
+                vecmath::nesterov_step_f32(x, &mut self.velocity, delta, self.lr, momentum);
             }
         }
     }

@@ -13,6 +13,7 @@ pub mod logger;
 pub mod parallel;
 pub mod rng;
 pub mod stats;
+pub mod vecmath;
 
 pub use hash::fnv1a;
 pub use json::JsonValue;

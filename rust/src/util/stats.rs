@@ -87,7 +87,11 @@ impl Ema {
         if self.steps == 0 {
             None
         } else {
-            Some(self.value / (1.0 - self.beta.powi(self.steps as i32)))
+            // saturate instead of `as i32` (which wraps above i32::MAX and
+            // could flip the exponent sign); the correction term is
+            // indistinguishable from 1.0 long before the cap anyway
+            let exp = i32::try_from(self.steps).unwrap_or(i32::MAX);
+            Some(self.value / (1.0 - self.beta.powi(exp)))
         }
     }
 
@@ -112,33 +116,25 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// Dot product over f32 slices (hot path of merge / outer step checks).
+/// Delegates to the vectorized kernel; summation follows the fixed
+/// chunked order of DESIGN.md §12.
 #[inline]
 pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f64;
-    for (x, y) in a.iter().zip(b.iter()) {
-        acc += (*x as f64) * (*y as f64);
-    }
-    acc
+    super::vecmath::dot_f32(a, b)
 }
 
-/// Squared L2 norm of an f32 slice, accumulated in f64.
+/// Squared L2 norm of an f32 slice, accumulated in f64 (chunked order,
+/// DESIGN.md §12).
 #[inline]
 pub fn norm_sq_f32(a: &[f32]) -> f64 {
-    let mut acc = 0.0f64;
-    for x in a {
-        acc += (*x as f64) * (*x as f64);
-    }
-    acc
+    super::vecmath::norm_sq_f32(a)
 }
 
-/// `y += alpha * x` (axpy) over f32 slices.
+/// `y += alpha * x` (axpy) over f32 slices. Elementwise — bit-identical
+/// to the serial loop regardless of chunking.
 #[inline]
 pub fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += alpha * *xi;
-    }
+    super::vecmath::axpy_f32(alpha, x, y)
 }
 
 /// Simple ordinary-least-squares fit y ~ a + b*x. Returns (a, b, r2).
@@ -191,6 +187,20 @@ mod tests {
             e.push(10.0);
         }
         assert!((e.get().unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_bias_correction_saturates_huge_step_counts() {
+        // regression: `steps as i32` used to wrap above i32::MAX, flipping
+        // the exponent sign and corrupting the correction factor
+        let mut e = Ema::new(0.9);
+        e.set_state(5.0, u64::MAX);
+        let got = e.get().unwrap();
+        assert!(got.is_finite());
+        assert!((got - 5.0).abs() < 1e-12, "correction must be ~1.0 at huge steps, got {got}");
+        // just past i32::MAX specifically
+        e.set_state(5.0, i32::MAX as u64 + 1);
+        assert!((e.get().unwrap() - 5.0).abs() < 1e-12);
     }
 
     #[test]

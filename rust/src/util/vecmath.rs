@@ -1,0 +1,697 @@
+//! Vectorized dense-vector kernels for the L3 hot paths (DESIGN.md §12).
+//!
+//! Every dense loop the coordinator drives per outer round — merge
+//! weighted averages, outer delta/Nesterov updates, the MockEngine's
+//! gradient statistics, and the inner SGD/AdamW updates — funnels
+//! through this module. The kernels are written in the
+//! *independent-accumulator* shape stable-Rust LLVM auto-vectorizes:
+//! fixed lane width [`LANES`] = 8, a flat array of per-lane
+//! accumulators carried across full chunks, and a serial scalar tail.
+//! No `unsafe`, no nightly SIMD intrinsics — the shape alone is enough
+//! for the autovectorizer to emit packed adds/multiplies on any target
+//! with 128-bit-or-wider vector units.
+//!
+//! ## Determinism contract (DESIGN.md §12)
+//!
+//! Two kernel classes, with different bit-level guarantees:
+//!
+//! * **Elementwise kernels** (`axpy_f32`, `weighted_add_f32`,
+//!   `write_back_f64`, `delta_from_workers`, `sub_assign_f32`,
+//!   `scale_sub_f32`, `nesterov_step_f32`, `sgd_step_f32`,
+//!   `adamw_step_f32`): each output element is produced by *exactly*
+//!   the arithmetic expression of the pre-vectorization serial loop, in
+//!   the same per-index operation order. Chunking only regroups
+//!   independent iterations, so these are bit-identical to their serial
+//!   ancestors on every input, NaNs and all.
+//!
+//! * **Reduction kernels** (`dot_f32`, `norm_sq_f32`, `quad_loss_f32`,
+//!   `quad_grad_f32`, `chunk_mean_norm_sq`, `sq_diff_dot_f32`): the
+//!   summation order is the *fixed chunked order* — lane `l` (0..8)
+//!   accumulates exactly the indices `i ≡ l (mod 8)` with
+//!   `i < 8·⌊n/8⌋`, in ascending order; the eight lane accumulators are
+//!   then combined by the fixed pairwise tree
+//!   `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))`; tail indices
+//!   `8·⌊n/8⌋ ≤ i < n` are added serially, last. This order is frozen:
+//!   it does not depend on the target CPU, thread count, scheduler or
+//!   optimization level, so lockstep/event × threads{1,4} stay
+//!   bit-identical to *each other* (the §6 contract). It differs from
+//!   the old strictly-serial order, which is why the FROZEN goldens
+//!   were re-pinned once when this module landed (CHANGES.md, PR 8).
+//!
+//! `tests/properties.rs` pins every kernel here bit-for-bit against a
+//! straight-line scalar reference implementing the same chunked order,
+//! over exhaustive lengths 0..=65 and adversarial values (NaN, ±inf,
+//! denormals, signed zeros).
+
+/// Fixed lane width of every chunked kernel. Eight f64 accumulators
+/// fill one AVX-512 register, two AVX2 registers or four NEON
+/// registers — wide enough that the reduction chain never serializes,
+/// narrow enough that the scalar tail stays cheap.
+pub const LANES: usize = 8;
+
+/// Combine the eight lane accumulators with the fixed pairwise tree
+/// (part of the frozen summation order — see the module docs).
+#[inline(always)]
+fn reduce_lanes(acc: &[f64; LANES]) -> f64 {
+    let a = [acc[0] + acc[4], acc[1] + acc[5], acc[2] + acc[6], acc[3] + acc[7]];
+    (a[0] + a[2]) + (a[1] + a[3])
+}
+
+// ---------------------------------------------------------------------------
+// reductions (fixed chunked summation order)
+// ---------------------------------------------------------------------------
+
+/// Dot product over f32 slices, accumulated in f64 lanes.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / LANES;
+    let mut acc = [0.0f64; LANES];
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            acc[l] += a[base + l] as f64 * b[base + l] as f64;
+        }
+    }
+    let mut s = reduce_lanes(&acc);
+    for i in chunks * LANES..n {
+        s += a[i] as f64 * b[i] as f64;
+    }
+    s
+}
+
+/// Squared L2 norm of an f32 slice, accumulated in f64 lanes.
+#[inline]
+pub fn norm_sq_f32(a: &[f32]) -> f64 {
+    let n = a.len();
+    let chunks = n / LANES;
+    let mut acc = [0.0f64; LANES];
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            acc[l] += a[base + l] as f64 * a[base + l] as f64;
+        }
+    }
+    let mut s = reduce_lanes(&acc);
+    for i in chunks * LANES..n {
+        s += a[i] as f64 * a[i] as f64;
+    }
+    s
+}
+
+/// Diagonal-quadratic loss Σ_i ½·eig_i·(x_i − xstar_i)² — the
+/// MockEngine objective (per-element arithmetic unchanged: the f32
+/// subtraction widens to f64 *after* it happens, exactly like the old
+/// serial loop).
+#[inline]
+pub fn quad_loss_f32(x: &[f32], xstar: &[f32], eig: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), xstar.len());
+    debug_assert_eq!(x.len(), eig.len());
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut acc = [0.0f64; LANES];
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let d = (x[base + l] - xstar[base + l]) as f64;
+            acc[l] += 0.5 * eig[base + l] as f64 * d * d;
+        }
+    }
+    let mut s = reduce_lanes(&acc);
+    for i in chunks * LANES..n {
+        let d = (x[i] - xstar[i]) as f64;
+        s += 0.5 * eig[i] as f64 * d * d;
+    }
+    s
+}
+
+/// Diagonal-quadratic gradient g_i = eig_i·(x_i − xstar_i) into `out`
+/// (f32 arithmetic, elementwise — bit-identical), returning Σ g_i²
+/// (f64 lane reduction — chunked order).
+#[inline]
+pub fn quad_grad_f32(x: &[f32], xstar: &[f32], eig: &[f32], out: &mut [f32]) -> f64 {
+    debug_assert_eq!(x.len(), xstar.len());
+    debug_assert_eq!(x.len(), eig.len());
+    debug_assert_eq!(x.len(), out.len());
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut acc = [0.0f64; LANES];
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let g = eig[base + l] * (x[base + l] - xstar[base + l]);
+            out[base + l] = g;
+            acc[l] += g as f64 * g as f64;
+        }
+    }
+    let mut s = reduce_lanes(&acc);
+    for i in chunks * LANES..n {
+        let g = eig[i] * (x[i] - xstar[i]);
+        out[i] = g;
+        s += g as f64 * g as f64;
+    }
+    s
+}
+
+/// Mean over `chunks` stacked gradient rows (`chunk_buf` is flat
+/// `[chunks * d]`, row-major) into `grad_out` (`d` elements), returning
+/// ||mean||². The per-element mean keeps the old serial order (rows
+/// ascending, divided once at the end), so `grad_out` is bit-identical
+/// to the pre-vectorization loop; only the ||·||² reduction moved to
+/// the chunked order. Blocked over 8 output lanes, so the row reads are
+/// contiguous 8-wide runs instead of the old `[c*d + i]` stride-d walk.
+#[inline]
+pub fn chunk_mean_norm_sq(chunk_buf: &[f32], chunks: usize, grad_out: &mut [f32]) -> f64 {
+    let d = grad_out.len();
+    debug_assert!(chunks >= 1);
+    debug_assert_eq!(chunk_buf.len(), chunks * d);
+    let blocks = d / LANES;
+    let mut s1 = [0.0f64; LANES];
+    for bl in 0..blocks {
+        let base = bl * LANES;
+        let mut acc = [0.0f64; LANES];
+        for c in 0..chunks {
+            let row = &chunk_buf[c * d + base..c * d + base + LANES];
+            for l in 0..LANES {
+                acc[l] += row[l] as f64;
+            }
+        }
+        for l in 0..LANES {
+            let g = acc[l] / chunks as f64;
+            grad_out[base + l] = g as f32;
+            s1[l] += g * g;
+        }
+    }
+    let mut s = reduce_lanes(&s1);
+    for i in blocks * LANES..d {
+        let mut acc = 0.0f64;
+        for c in 0..chunks {
+            acc += chunk_buf[c * d + i] as f64;
+        }
+        let g = acc / chunks as f64;
+        grad_out[i] = g as f32;
+        s += g * g;
+    }
+    s
+}
+
+/// Fused pair of reductions over one gradient row `x` against the mean
+/// gradient `g`: `(Σ (x_i − g_i)², Σ x_i·g_i)` — the per-chunk (s2, ip)
+/// statistics of the variance estimator. Both sums use the chunked
+/// order.
+#[inline]
+pub fn sq_diff_dot_f32(x: &[f32], g: &[f32]) -> (f64, f64) {
+    debug_assert_eq!(x.len(), g.len());
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut acc_sq = [0.0f64; LANES];
+    let mut acc_ip = [0.0f64; LANES];
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let xv = x[base + l] as f64;
+            let gv = g[base + l] as f64;
+            let diff = xv - gv;
+            acc_sq[l] += diff * diff;
+            acc_ip[l] += xv * gv;
+        }
+    }
+    let mut sq = reduce_lanes(&acc_sq);
+    let mut ip = reduce_lanes(&acc_ip);
+    for i in chunks * LANES..n {
+        let xv = x[i] as f64;
+        let gv = g[i] as f64;
+        let diff = xv - gv;
+        sq += diff * diff;
+        ip += xv * gv;
+    }
+    (sq, ip)
+}
+
+// ---------------------------------------------------------------------------
+// elementwise kernels (bit-identical to the serial loops)
+// ---------------------------------------------------------------------------
+
+/// `y += alpha * x` over f32 slices (f32 arithmetic, like the original).
+#[inline]
+pub fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            y[base + l] += alpha * x[base + l];
+        }
+    }
+    for i in chunks * LANES..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `acc[i] += w * p[i]` widening f32 → f64 — the per-member pass of the
+/// merge weighted average.
+#[inline]
+pub fn weighted_add_f32(w: f64, p: &[f32], acc: &mut [f64]) {
+    debug_assert_eq!(p.len(), acc.len());
+    let n = p.len();
+    let chunks = n / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            acc[base + l] += w * p[base + l] as f64;
+        }
+    }
+    for i in chunks * LANES..n {
+        acc[i] += w * p[i] as f64;
+    }
+}
+
+/// Narrow an f64 accumulator back into an f32 buffer (merge write-back).
+#[inline]
+pub fn write_back_f64(acc: &[f64], out: &mut [f32]) {
+    debug_assert_eq!(acc.len(), out.len());
+    let n = acc.len();
+    let chunks = n / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            out[base + l] = acc[base + l] as f32;
+        }
+    }
+    for i in chunks * LANES..n {
+        out[i] = acc[i] as f32;
+    }
+}
+
+/// Δ_i = x_prev_i − (Σ_w w_i) / |workers| over every worker's
+/// post-inner-loop parameters. Register-blocked over 8 output lanes;
+/// the per-element worker-sum order (workers ascending, one multiply
+/// by 1/|workers| at the end) matches the old serial loop exactly, so
+/// the result is bit-identical.
+#[inline]
+pub fn delta_from_workers(x_prev: &[f32], workers: &[&[f32]], delta: &mut [f32]) {
+    debug_assert!(!workers.is_empty());
+    let n = x_prev.len();
+    debug_assert_eq!(delta.len(), n);
+    let inv = 1.0 / workers.len() as f64;
+    let blocks = n / LANES;
+    for bl in 0..blocks {
+        let base = bl * LANES;
+        let mut acc = [0.0f64; LANES];
+        for w in workers {
+            let row = &w[base..base + LANES];
+            for l in 0..LANES {
+                acc[l] += row[l] as f64;
+            }
+        }
+        for l in 0..LANES {
+            delta[base + l] = (x_prev[base + l] as f64 - acc[l] * inv) as f32;
+        }
+    }
+    for i in blocks * LANES..n {
+        let mut avg = 0.0f64;
+        for w in workers {
+            avg += w[i] as f64;
+        }
+        delta[i] = (x_prev[i] as f64 - avg * inv) as f32;
+    }
+}
+
+/// `x[i] -= d[i]` (f32 — the Average outer step).
+#[inline]
+pub fn sub_assign_f32(x: &mut [f32], d: &[f32]) {
+    debug_assert_eq!(x.len(), d.len());
+    let n = x.len();
+    let chunks = n / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            x[base + l] -= d[base + l];
+        }
+    }
+    for i in chunks * LANES..n {
+        x[i] -= d[i];
+    }
+}
+
+/// `x[i] = (x[i] − lr·d[i])` with f64 intermediates (SGD steps: the
+/// outer-SGD update, and — via `sgd_step` — the inner one, whose
+/// original loop computed `x[i] -= (lr * d[i] as f64) as f32`; pass
+/// `narrow_rhs = true` for that variant, which narrows the product
+/// before subtracting in f32).
+#[inline]
+pub fn scale_sub_f32(x: &mut [f32], d: &[f32], lr: f64, narrow_rhs: bool) {
+    debug_assert_eq!(x.len(), d.len());
+    let n = x.len();
+    let chunks = n / LANES;
+    if narrow_rhs {
+        for c in 0..chunks {
+            let base = c * LANES;
+            for l in 0..LANES {
+                x[base + l] -= (lr * d[base + l] as f64) as f32;
+            }
+        }
+        for i in chunks * LANES..n {
+            x[i] -= (lr * d[i] as f64) as f32;
+        }
+    } else {
+        for c in 0..chunks {
+            let base = c * LANES;
+            for l in 0..LANES {
+                x[base + l] = (x[base + l] as f64 - lr * d[base + l] as f64) as f32;
+            }
+        }
+        for i in chunks * LANES..n {
+            x[i] = (x[i] as f64 - lr * d[i] as f64) as f32;
+        }
+    }
+}
+
+/// DiLoCo's Nesterov outer update: v ← μ·v + Δ;
+/// x ← x − lr·(μ·v + Δ) — per-element arithmetic identical to the old
+/// serial loop.
+#[inline]
+pub fn nesterov_step_f32(
+    x: &mut [f32],
+    velocity: &mut [f32],
+    delta: &[f32],
+    lr: f64,
+    momentum: f64,
+) {
+    debug_assert_eq!(x.len(), delta.len());
+    debug_assert_eq!(velocity.len(), x.len());
+    let n = x.len();
+    let chunks = n / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let i = base + l;
+            let v = momentum * velocity[i] as f64 + delta[i] as f64;
+            velocity[i] = v as f32;
+            x[i] = (x[i] as f64 - lr * (momentum * v + delta[i] as f64)) as f32;
+        }
+    }
+    for i in chunks * LANES..n {
+        let v = momentum * velocity[i] as f64 + delta[i] as f64;
+        velocity[i] = v as f32;
+        x[i] = (x[i] as f64 - lr * (momentum * v + delta[i] as f64)) as f32;
+    }
+}
+
+/// Inner SGD: `params[i] -= (lr * grad[i] as f64) as f32`.
+#[inline]
+pub fn sgd_step_f32(params: &mut [f32], grad: &[f32], lr: f64) {
+    scale_sub_f32(params, grad, lr, true);
+}
+
+/// Precomputed per-step AdamW coefficients (the bias corrections depend
+/// on the step count, everything else on config).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamCoeffs {
+    /// First-moment decay rate.
+    pub beta1: f64,
+    /// Second-moment decay rate.
+    pub beta2: f64,
+    /// Denominator fuzz term.
+    pub eps: f64,
+    /// Decoupled weight-decay coefficient.
+    pub weight_decay: f64,
+    /// 1 − β1^t.
+    pub bc1: f64,
+    /// 1 − β2^t.
+    pub bc2: f64,
+    /// Learning rate.
+    pub lr: f64,
+}
+
+/// One AdamW update over flat state vectors — per-element arithmetic
+/// identical to the pre-vectorization `engine::adamw_step` loop.
+#[inline]
+pub fn adamw_step_f32(
+    params: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    grad: &[f32],
+    k: &AdamCoeffs,
+) {
+    debug_assert_eq!(params.len(), grad.len());
+    debug_assert_eq!(m.len(), grad.len());
+    debug_assert_eq!(v.len(), grad.len());
+    let n = grad.len();
+    let chunks = n / LANES;
+    #[inline(always)]
+    fn one(
+        params: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        grad: &[f32],
+        k: &AdamCoeffs,
+        i: usize,
+    ) {
+        let g = grad[i] as f64;
+        let mi = k.beta1 * m[i] as f64 + (1.0 - k.beta1) * g;
+        let vi = k.beta2 * v[i] as f64 + (1.0 - k.beta2) * g * g;
+        m[i] = mi as f32;
+        v[i] = vi as f32;
+        let m_hat = mi / k.bc1;
+        let v_hat = vi / k.bc2;
+        let x = params[i] as f64;
+        params[i] = (x - k.lr * (m_hat / (v_hat.sqrt() + k.eps) + k.weight_decay * x)) as f32;
+    }
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            one(params, m, v, grad, k, base + l);
+        }
+    }
+    for i in chunks * LANES..n {
+        one(params, m, v, grad, k, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scalar reference for the frozen chunked reduction order: lane
+    /// `i % 8` accumulates index `i` over the full-chunk prefix, the
+    /// pairwise tree combines lanes, tail added serially last.
+    fn chunked_sum(terms: impl ExactSizeIterator<Item = f64> + Clone) -> f64 {
+        let n = terms.len();
+        let full = (n / LANES) * LANES;
+        let mut acc = [0.0f64; LANES];
+        for (i, t) in terms.clone().take(full).enumerate() {
+            acc[i % LANES] += t;
+        }
+        let mut s = reduce_lanes(&acc);
+        for t in terms.skip(full) {
+            s += t;
+        }
+        s
+    }
+
+    fn ramp(n: usize, seed: f32) -> Vec<f32> {
+        (0..n).map(|i| seed + i as f32 * 0.25 - (i % 3) as f32).collect()
+    }
+
+    #[test]
+    fn dot_and_norm_follow_chunked_order() {
+        for n in [0usize, 1, 7, 8, 9, 16, 33, 65, 1000] {
+            let a = ramp(n, 0.5);
+            let b = ramp(n, -1.25);
+            let want = chunked_sum(a.iter().zip(b.iter()).map(|(x, y)| *x as f64 * *y as f64));
+            assert_eq!(dot_f32(&a, &b).to_bits(), want.to_bits(), "dot n={n}");
+            let want = chunked_sum(a.iter().map(|x| *x as f64 * *x as f64));
+            assert_eq!(norm_sq_f32(&a).to_bits(), want.to_bits(), "norm n={n}");
+        }
+    }
+
+    #[test]
+    fn elementwise_kernels_match_serial_loops() {
+        for n in [0usize, 1, 7, 8, 9, 31, 64, 65] {
+            let x = ramp(n, 2.0);
+            let mut y1 = ramp(n, -0.5);
+            let mut y2 = y1.clone();
+            axpy_f32(1.5, &x, &mut y1);
+            for i in 0..n {
+                y2[i] += 1.5 * x[i];
+            }
+            assert_eq!(y1, y2, "axpy n={n}");
+
+            let mut a1 = vec![0.125f64; n];
+            let mut a2 = a1.clone();
+            weighted_add_f32(0.75, &x, &mut a1);
+            for i in 0..n {
+                a2[i] += 0.75 * x[i] as f64;
+            }
+            assert_eq!(a1, a2, "weighted_add n={n}");
+
+            let mut o1 = vec![0.0f32; n];
+            write_back_f64(&a1, &mut o1);
+            for i in 0..n {
+                assert_eq!(o1[i].to_bits(), (a1[i] as f32).to_bits(), "write_back n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn delta_matches_serial_worker_mean() {
+        for n in [0usize, 1, 8, 9, 65] {
+            let x_prev = ramp(n, 1.0);
+            let w1 = ramp(n, -2.0);
+            let w2 = ramp(n, 3.5);
+            let w3 = ramp(n, 0.25);
+            let workers: Vec<&[f32]> = vec![&w1, &w2, &w3];
+            let mut got = vec![0.0f32; n];
+            delta_from_workers(&x_prev, &workers, &mut got);
+            let inv = 1.0 / 3.0f64;
+            for i in 0..n {
+                let mut avg = 0.0f64;
+                for w in &workers {
+                    avg += w[i] as f64;
+                }
+                avg *= inv;
+                let want = (x_prev[i] as f64 - avg) as f32;
+                assert_eq!(got[i].to_bits(), want.to_bits(), "delta n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_mean_preserves_per_element_order() {
+        let d = 21;
+        let chunks = 5;
+        let buf: Vec<f32> = (0..chunks * d).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut got = vec![0.0f32; d];
+        let s1 = chunk_mean_norm_sq(&buf, chunks, &mut got);
+        let mut want_g = vec![0.0f32; d];
+        for i in 0..d {
+            let mut acc = 0.0f64;
+            for c in 0..chunks {
+                acc += buf[c * d + i] as f64;
+            }
+            want_g[i] = (acc / chunks as f64) as f32;
+        }
+        assert_eq!(got, want_g, "mean gradient must be bit-identical to the serial loop");
+        let want_s1 =
+            chunked_sum(want_g.iter().map(|g| {
+                // recompute the pre-narrowing f64 mean the kernel squares
+                *g as f64 * *g as f64
+            }));
+        // the kernel squares the f64 mean before narrowing; recompute it
+        let mut means = Vec::with_capacity(d);
+        for i in 0..d {
+            let mut acc = 0.0f64;
+            for c in 0..chunks {
+                acc += buf[c * d + i] as f64;
+            }
+            means.push(acc / chunks as f64);
+        }
+        let want_s1_exact = chunked_sum(means.iter().map(|g| g * g));
+        assert_eq!(s1.to_bits(), want_s1_exact.to_bits());
+        let _ = want_s1;
+    }
+
+    #[test]
+    fn sq_diff_dot_follows_chunked_order() {
+        let n = 65;
+        let x = ramp(n, 0.1);
+        let g = ramp(n, -0.9);
+        let (sq, ip) = sq_diff_dot_f32(&x, &g);
+        let want_sq = chunked_sum(x.iter().zip(g.iter()).map(|(a, b)| {
+            let d = *a as f64 - *b as f64;
+            d * d
+        }));
+        let want_ip = chunked_sum(x.iter().zip(g.iter()).map(|(a, b)| *a as f64 * *b as f64));
+        assert_eq!(sq.to_bits(), want_sq.to_bits());
+        assert_eq!(ip.to_bits(), want_ip.to_bits());
+    }
+
+    #[test]
+    fn optimizer_steps_match_serial_loops() {
+        let n = 65;
+        let grad = ramp(n, 0.7);
+        // sgd (inner form: narrow the product)
+        let mut p1 = ramp(n, 1.0);
+        let mut p2 = p1.clone();
+        sgd_step_f32(&mut p1, &grad, 0.05);
+        for i in 0..n {
+            p2[i] -= (0.05 * grad[i] as f64) as f32;
+        }
+        assert_eq!(p1, p2);
+        // outer sgd (f64 subtract, then narrow)
+        let mut p1 = ramp(n, 1.0);
+        let mut p2 = p1.clone();
+        scale_sub_f32(&mut p1, &grad, 0.7, false);
+        for i in 0..n {
+            p2[i] = (p2[i] as f64 - 0.7 * grad[i] as f64) as f32;
+        }
+        assert_eq!(p1, p2);
+        // nesterov
+        let mut x1 = ramp(n, -1.0);
+        let mut v1 = vec![0.25f32; n];
+        let mut x2 = x1.clone();
+        let mut v2 = v1.clone();
+        nesterov_step_f32(&mut x1, &mut v1, &grad, 0.5, 0.9);
+        for i in 0..n {
+            let v = 0.9 * v2[i] as f64 + grad[i] as f64;
+            v2[i] = v as f32;
+            x2[i] = (x2[i] as f64 - 0.5 * (0.9 * v + grad[i] as f64)) as f32;
+        }
+        assert_eq!(x1, x2);
+        assert_eq!(v1, v2);
+        // adamw
+        let k = AdamCoeffs {
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.1,
+            bc1: 1.0 - 0.9f64.powf(3.0),
+            bc2: 1.0 - 0.95f64.powf(3.0),
+            lr: 1e-3,
+        };
+        let mut p1 = ramp(n, 0.3);
+        let mut m1 = vec![0.01f32; n];
+        let mut vv1 = vec![0.02f32; n];
+        let (mut p2, mut m2, mut vv2) = (p1.clone(), m1.clone(), vv1.clone());
+        adamw_step_f32(&mut p1, &mut m1, &mut vv1, &grad, &k);
+        for i in 0..n {
+            let g = grad[i] as f64;
+            let mi = k.beta1 * m2[i] as f64 + (1.0 - k.beta1) * g;
+            let vi = k.beta2 * vv2[i] as f64 + (1.0 - k.beta2) * g * g;
+            m2[i] = mi as f32;
+            vv2[i] = vi as f32;
+            let x = p2[i] as f64;
+            p2[i] = (x - k.lr * (mi / k.bc1 / ((vi / k.bc2).sqrt() + k.eps) + k.weight_decay * x))
+                as f32;
+        }
+        assert_eq!(p1, p2);
+        assert_eq!(m1, m2);
+        assert_eq!(vv1, vv2);
+    }
+
+    #[test]
+    fn quad_kernels_match_reference_order() {
+        let n = 33;
+        let x = ramp(n, 0.4);
+        let xs = ramp(n, -0.8);
+        let eig: Vec<f32> = (0..n).map(|i| 0.1 + i as f32 * 0.01).collect();
+        let want = chunked_sum((0..n).map(|i| {
+            let d = (x[i] - xs[i]) as f64;
+            0.5 * eig[i] as f64 * d * d
+        }));
+        assert_eq!(quad_loss_f32(&x, &xs, &eig).to_bits(), want.to_bits());
+
+        let mut out = vec![0.0f32; n];
+        let nsq = quad_grad_f32(&x, &xs, &eig, &mut out);
+        let mut want_out = vec![0.0f32; n];
+        for i in 0..n {
+            want_out[i] = eig[i] * (x[i] - xs[i]);
+        }
+        assert_eq!(out, want_out);
+        let want_nsq = chunked_sum(want_out.iter().map(|g| *g as f64 * *g as f64));
+        assert_eq!(nsq.to_bits(), want_nsq.to_bits());
+    }
+}

@@ -1,0 +1,94 @@
+//! Streaming record flush (`run.stream_records`): the streamed JSONL
+//! must be byte-identical to what the buffered writer produces for the
+//! same run, on both schedulers, with the `.steps.part` segment cleaned
+//! up and the in-RAM step buffer actually drained.
+
+use adloco::config::{presets, Config, SchedulerKind};
+use adloco::coordinator::{resolve_policy, run_experiment, Coordinator};
+use adloco::engine::build_engine;
+
+fn quick_cfg(name: &str, scheduler: SchedulerKind) -> Config {
+    let mut cfg = presets::quick();
+    cfg.name = name.into();
+    cfg.run.scheduler = scheduler;
+    cfg
+}
+
+fn run_into(dir: &std::path::Path, mut cfg: Config) -> (Vec<u8>, Vec<u8>) {
+    std::fs::remove_dir_all(dir).ok();
+    cfg.out_dir = Some(dir.to_str().unwrap().to_string());
+    let name = cfg.name.clone();
+    run_experiment(cfg).unwrap();
+    let jsonl = std::fs::read(dir.join(format!("{name}.jsonl"))).unwrap();
+    let csv = std::fs::read(dir.join(format!("{name}.csv"))).unwrap();
+    (jsonl, csv)
+}
+
+fn streamed_matches_buffered(scheduler: SchedulerKind) {
+    let tag = scheduler.as_str();
+    let base = std::env::temp_dir().join(format!("adloco_stream_{tag}"));
+
+    let buffered = run_into(&base.join("buffered"), quick_cfg("sr", scheduler));
+
+    let mut cfg = quick_cfg("sr", scheduler);
+    cfg.run.stream_records = true;
+    let streamed_dir = base.join("streamed");
+    let streamed = run_into(&streamed_dir, cfg);
+
+    assert_eq!(
+        buffered.0, streamed.0,
+        "{tag}: streamed JSONL must be byte-identical to the buffered writer"
+    );
+    assert_eq!(buffered.1, streamed.1, "{tag}: eval CSV must match");
+    assert!(
+        !streamed_dir.join("sr.jsonl.steps.part").exists(),
+        "{tag}: segment file must be removed after reassembly"
+    );
+}
+
+#[test]
+fn streamed_jsonl_is_byte_identical_lockstep() {
+    streamed_matches_buffered(SchedulerKind::Lockstep);
+}
+
+#[test]
+fn streamed_jsonl_is_byte_identical_event() {
+    streamed_matches_buffered(SchedulerKind::Event);
+}
+
+#[test]
+fn streaming_drains_ram_and_preserves_aggregates() {
+    let dir = std::env::temp_dir().join("adloco_stream_direct");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // buffered reference for the aggregate
+    let cfg = resolve_policy(&quick_cfg("sr_direct", SchedulerKind::Lockstep));
+    let engine = build_engine(&cfg).unwrap();
+    let mut buffered = Coordinator::new(cfg, engine).unwrap();
+    buffered.run().unwrap();
+    let want_mean = buffered.recorder.mean_batch();
+    let total_steps = buffered.recorder.steps.len() as u64;
+    assert!(total_steps > 0, "quick preset must record steps");
+
+    // streamed run: steps leave RAM every round, aggregates survive
+    let cfg = resolve_policy(&quick_cfg("sr_direct", SchedulerKind::Lockstep));
+    let engine = build_engine(&cfg).unwrap();
+    let mut coord = Coordinator::new(cfg, engine).unwrap();
+    let path = dir.join("sr_direct.jsonl");
+    coord.enable_record_streaming(path.to_str().unwrap()).unwrap();
+    coord.run().unwrap();
+    coord.finish_record_streaming().unwrap();
+
+    assert!(coord.recorder.steps.is_empty(), "streamed steps must leave RAM");
+    assert_eq!(coord.recorder.drained_steps, total_steps);
+    // batch sizes are integers, so the per-round partial sums are exact
+    // and the folded mean equals the buffered one bit for bit
+    assert_eq!(
+        coord.recorder.mean_batch().to_bits(),
+        want_mean.to_bits(),
+        "mean_batch must fold drained aggregates exactly"
+    );
+    assert!(path.exists());
+    assert!(!dir.join("sr_direct.jsonl.steps.part").exists());
+}

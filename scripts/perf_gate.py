@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate over bench_results/BENCH_micro.json.
+
+Compares the micro_hotpath artifact produced by the current build
+against the committed baseline (rust/benches/baselines/micro_baseline.json)
+and fails when any op's median regresses by more than the tolerance
+factor (default 2x — generous on purpose: shared CI runners are noisy,
+and the gate is meant to catch order-of-magnitude accidents like a
+de-vectorized kernel or an accidentally quadratic loop, not 10% drift).
+
+Structural problems are always hard failures:
+  * missing/unparseable artifact,
+  * no kernel row at >= 1e7 params (the ladder must reach paper scale),
+  * a baseline-pinned op missing from the current artifact.
+
+Baseline rows with ``"median_ms": null`` are advisory: the op is listed
+(so its presence is still checked) but not yet pinned to a number —
+they pass with a note. Pin them by copying medians from a trusted CI
+run's artifact.
+
+Usage:
+  python3 scripts/perf_gate.py \
+      [--current rust/bench_results/BENCH_micro.json] \
+      [--baseline rust/benches/baselines/micro_baseline.json] \
+      [--tolerance 2.0]
+"""
+
+import argparse
+import json
+import sys
+
+KERNEL_FLOOR = 10_000_000  # the ladder must reach paper scale
+
+
+def load(path, what):
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"perf gate: cannot load {what} {path}: {e}")
+        sys.exit(1)
+
+
+def rows_by_op(doc, path):
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        print(f"perf gate: {path} has no rows array")
+        sys.exit(1)
+    out = {}
+    for r in rows:
+        if not isinstance(r, dict) or "op" not in r:
+            print(f"perf gate: malformed row in {path}: {r!r}")
+            sys.exit(1)
+        out[r["op"]] = r
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="rust/bench_results/BENCH_micro.json")
+    ap.add_argument("--baseline", default="rust/benches/baselines/micro_baseline.json")
+    ap.add_argument("--tolerance", type=float, default=2.0)
+    args = ap.parse_args()
+
+    current = rows_by_op(load(args.current, "current artifact"), args.current)
+    baseline_doc = load(args.baseline, "baseline")
+    baseline = rows_by_op(baseline_doc, args.baseline)
+
+    # structural: the ladder must include a paper-scale kernel row
+    big = [
+        op
+        for op, r in current.items()
+        if isinstance(r.get("params"), (int, float)) and r["params"] >= KERNEL_FLOOR
+    ]
+    if not big:
+        print(
+            f"perf gate: FAIL — no kernel row at >= {KERNEL_FLOOR} params "
+            f"in {args.current}; the micro ladder must reach paper scale"
+        )
+        sys.exit(1)
+
+    failures = []
+    advisory = 0
+    checked = 0
+    for op, base_row in baseline.items():
+        cur = current.get(op)
+        if cur is None:
+            failures.append(f"op {op!r} pinned in baseline but missing from current artifact")
+            continue
+        base_med = base_row.get("median_ms")
+        if base_med is None:
+            advisory += 1
+            continue
+        cur_med = cur.get("median_ms")
+        if not isinstance(cur_med, (int, float)) or cur_med < 0:
+            failures.append(f"op {op!r}: current median_ms is {cur_med!r}")
+            continue
+        checked += 1
+        if cur_med > args.tolerance * base_med:
+            failures.append(
+                f"op {op!r}: median {cur_med:.4f} ms > {args.tolerance}x "
+                f"baseline {base_med:.4f} ms"
+            )
+
+    print(
+        f"perf gate: {len(current)} current rows, {len(baseline)} baseline rows "
+        f"({checked} gated, {advisory} advisory/unpinned), "
+        f"{len(big)} rows at >= {KERNEL_FLOOR} params, tolerance {args.tolerance}x"
+    )
+    if failures:
+        for f in failures:
+            print(f"perf gate: FAIL — {f}")
+        sys.exit(1)
+    print("perf gate: PASS")
+
+
+if __name__ == "__main__":
+    main()

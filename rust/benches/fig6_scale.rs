@@ -31,7 +31,7 @@ use adloco::benchkit::{
 };
 use adloco::comm::{CommLedger, CommScope};
 use adloco::config::{presets, Config, NodeConfig};
-use adloco::coordinator::{Coordinator, RunResult};
+use adloco::coordinator::{run_experiment, Coordinator, RunResult};
 use adloco::engine::build_engine;
 use adloco::metrics::Recorder;
 use adloco::util::JsonValue;
@@ -222,6 +222,38 @@ fn main() {
     let d1 = digest(&r1, &rec1, &led1);
     let d4 = digest(&r4, &rec4, &led4);
     assert_eq!(d1, d4, "threads=1 vs threads=4 digests must match (DESIGN.md §6)");
+
+    // ---- streamed-vs-buffered byte identity at the smallest point --------
+    // fleet_trace defaults to run.stream_records = on (the fleet preset
+    // is where the buffered recorder's open tail hurts); assert here in
+    // the smoke leg that the streamed JSONL is byte-identical to the
+    // buffered writer at the smallest grid point.
+    if smoke {
+        let base = std::env::temp_dir().join("adloco_fig6_stream");
+        let arm = |stream: bool, sub: &str| -> (Vec<u8>, Vec<u8>) {
+            let dir = base.join(sub);
+            std::fs::remove_dir_all(&dir).ok();
+            let mut cfg = scale_config(100, true, threads);
+            cfg.run.stream_records = stream;
+            cfg.out_dir = Some(dir.to_str().unwrap().to_string());
+            let name = cfg.name.clone();
+            run_experiment(cfg).unwrap();
+            (
+                std::fs::read(dir.join(format!("{name}.jsonl"))).unwrap(),
+                std::fs::read(dir.join(format!("{name}.csv"))).unwrap(),
+            )
+        };
+        let buffered = arm(false, "buffered");
+        let streamed = arm(true, "streamed");
+        assert_eq!(
+            fnv1a(&buffered.0),
+            fnv1a(&streamed.0),
+            "fig6 smoke: streamed JSONL digest must equal buffered"
+        );
+        assert_eq!(buffered.0, streamed.0, "fig6 smoke: streamed JSONL bytes must equal buffered");
+        assert_eq!(buffered.1, streamed.1, "fig6 smoke: eval CSV must match");
+        eprintln!("fig6_scale: streamed-vs-buffered byte identity held at 100 workers");
+    }
 
     // ---- the scale grid --------------------------------------------------
     let grid: &[usize] = &[100, 1_000, 10_000];

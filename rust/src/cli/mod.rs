@@ -25,7 +25,7 @@ const VALUE_OPTS: &[&str] = &[
     "config", "preset", "set", "out", "profile", "artifacts", "methods",
     "steps", "seed", "log-level", "target-ppl", "format", "param", "values",
     "threads", "jobs", "topology", "overlap", "elastic", "checkpoint",
-    "resume", "keep-checkpoints",
+    "resume", "keep-checkpoints", "addr", "port", "max-runs",
 ];
 
 /// Parse an argv-style token stream (exclusive of the binary name).

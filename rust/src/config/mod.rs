@@ -749,6 +749,42 @@ impl RunConfig {
     }
 }
 
+/// Service-mode settings for the `adloco serve` daemon (DESIGN.md §13).
+/// Like `run`, none of these affect a run's output — they only shape how
+/// the control plane accepts and schedules work — so they are excluded
+/// from [`Config::structural_digest`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServiceConfig {
+    /// Bind address for the HTTP listener (loopback by default; the
+    /// daemon has no auth layer, so exposing it wider is on you).
+    pub addr: String,
+    /// TCP port; `0` asks the OS for an ephemeral port (the daemon
+    /// prints the bound address at startup — also how the tests avoid
+    /// loopback port collisions across parallel CI legs).
+    pub port: u16,
+    /// How many submitted runs may execute concurrently; further
+    /// submissions queue FIFO in `Submitted` state. Each run still uses
+    /// its own `run.threads` inner fan-out.
+    pub max_concurrent_runs: usize,
+    /// Reject request bodies larger than this many bytes (HTTP 413).
+    pub max_body_bytes: usize,
+    /// Reject request heads (request line + headers) larger than this
+    /// many bytes (HTTP 431).
+    pub max_header_bytes: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            addr: "127.0.0.1".to_string(),
+            port: 0,
+            max_concurrent_runs: 2,
+            max_body_bytes: 1 << 20,
+            max_header_bytes: 16 * 1024,
+        }
+    }
+}
+
 /// A full experiment description; determines a run together with the
 /// artifact profile (and nothing else — see the determinism contract,
 /// DESIGN.md §6).
@@ -770,6 +806,8 @@ pub struct Config {
     pub comm: CommConfig,
     /// Run schedule (eval cadence, checkpoints, scheduler, threads).
     pub run: RunConfig,
+    /// `adloco serve` control-plane settings (DESIGN.md §13).
+    pub service: ServiceConfig,
     /// Metrics output directory (JSONL/CSV); None = in-memory only.
     pub out_dir: Option<String>,
 }
@@ -1001,6 +1039,18 @@ impl Config {
             // the event path sustains the 10k-worker fleet point
             bail!("{total_workers} workers is beyond the simulator's design range (16384)");
         }
+        if self.service.max_concurrent_runs == 0 {
+            bail!("service.max_concurrent_runs must be >= 1");
+        }
+        if self.service.max_body_bytes < 1024 {
+            bail!("service.max_body_bytes must be >= 1024 (a submit body must fit)");
+        }
+        if self.service.max_header_bytes < 256 {
+            bail!("service.max_header_bytes must be >= 256 (a request head must fit)");
+        }
+        if self.service.addr.is_empty() {
+            bail!("service.addr must be a bind address, e.g. 127.0.0.1");
+        }
         Ok(())
     }
 
@@ -1018,6 +1068,16 @@ impl Config {
         apply_json(&mut cfg, &v)?;
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Apply a JSON overlay (the config-file format: only present keys
+    /// change) on top of this config. This is the same machinery
+    /// [`Config::load`] and `--set` overrides route through; the service
+    /// control plane uses it to apply a `POST /runs` body's `config`
+    /// object, so HTTP submissions get byte-identical semantics — and
+    /// the same typed errors — as the CLI (DESIGN.md §13).
+    pub fn apply_overlay(&mut self, v: &JsonValue) -> Result<()> {
+        apply_json(self, v)
     }
 
     /// Apply a `--set dotted.path=value` override.
@@ -1078,6 +1138,9 @@ fn apply_json(cfg: &mut Config, v: &JsonValue) -> Result<()> {
     }
     if let Some(r) = v.get("run") {
         apply_run(&mut cfg.run, r)?;
+    }
+    if let Some(s) = v.get("service") {
+        apply_service(&mut cfg.service, s)?;
     }
     Ok(())
 }
@@ -1484,6 +1547,28 @@ fn apply_run(r: &mut RunConfig, v: &JsonValue) -> Result<()> {
     Ok(())
 }
 
+fn apply_service(s: &mut ServiceConfig, v: &JsonValue) -> Result<()> {
+    if let Some(x) = v.get("addr").and_then(|x| x.as_str()) {
+        s.addr = x.to_string();
+    }
+    if let Some(x) = v.get("port").and_then(|x| x.as_usize()) {
+        if x > u16::MAX as usize {
+            bail!("service.port must be <= {}", u16::MAX);
+        }
+        s.port = x as u16;
+    }
+    if let Some(x) = v.get("max_concurrent_runs").and_then(|x| x.as_usize()) {
+        s.max_concurrent_runs = x;
+    }
+    if let Some(x) = v.get("max_body_bytes").and_then(|x| x.as_usize()) {
+        s.max_body_bytes = x;
+    }
+    if let Some(x) = v.get("max_header_bytes").and_then(|x| x.as_usize()) {
+        s.max_header_bytes = x;
+    }
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // dotted-path overrides (CLI --set)
 // ---------------------------------------------------------------------------
@@ -1529,6 +1614,49 @@ mod tests {
         presets::hierarchical_mit().validate().unwrap();
         presets::elastic_mit().validate().unwrap();
         presets::fleet_trace().validate().unwrap();
+    }
+
+    #[test]
+    fn service_overrides_and_validation() {
+        let mut cfg = presets::mock_default();
+        assert_eq!(cfg.service, ServiceConfig::default());
+        cfg.apply_override("service.addr=0.0.0.0").unwrap();
+        cfg.apply_override("service.port=8080").unwrap();
+        cfg.apply_override("service.max_concurrent_runs=4").unwrap();
+        cfg.apply_override("service.max_body_bytes=2048").unwrap();
+        cfg.apply_override("service.max_header_bytes=512").unwrap();
+        assert_eq!(cfg.service.addr, "0.0.0.0");
+        assert_eq!(cfg.service.port, 8080);
+        assert_eq!(cfg.service.max_concurrent_runs, 4);
+        assert_eq!(cfg.service.max_body_bytes, 2048);
+        assert_eq!(cfg.service.max_header_bytes, 512);
+        cfg.validate().unwrap();
+        assert!(cfg.apply_override("service.port=65536").is_err());
+        cfg.apply_override("service.max_concurrent_runs=0").unwrap();
+        assert!(cfg.validate().unwrap_err().to_string().contains("max_concurrent_runs"));
+        cfg.apply_override("service.max_concurrent_runs=2").unwrap();
+        cfg.apply_override("service.max_body_bytes=10").unwrap();
+        assert!(cfg.validate().unwrap_err().to_string().contains("max_body_bytes"));
+        cfg.apply_override("service.max_body_bytes=4096").unwrap();
+        cfg.apply_override("service.max_header_bytes=10").unwrap();
+        assert!(cfg.validate().unwrap_err().to_string().contains("max_header_bytes"));
+        // service knobs never move the structural digest (DESIGN.md §10)
+        let a = presets::mock_default().structural_digest();
+        cfg.apply_override("service.max_header_bytes=512").unwrap();
+        assert_eq!(cfg.structural_digest(), a);
+    }
+
+    #[test]
+    fn overlay_is_public_and_matches_set_path() {
+        let mut via_overlay = presets::mock_default();
+        let v = JsonValue::parse(r#"{"algo":{"outer_steps":3},"run":{"threads":4}}"#).unwrap();
+        via_overlay.apply_overlay(&v).unwrap();
+        let mut via_set = presets::mock_default();
+        via_set.apply_override("algo.outer_steps=3").unwrap();
+        via_set.apply_override("run.threads=4").unwrap();
+        assert_eq!(via_overlay.algo.outer_steps, via_set.algo.outer_steps);
+        assert_eq!(via_overlay.run.threads, via_set.run.threads);
+        assert_eq!(via_overlay.structural_digest(), via_set.structural_digest());
     }
 
     #[test]

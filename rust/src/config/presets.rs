@@ -134,6 +134,7 @@ pub fn paper_table1() -> Config {
             threads: 0, // auto: RUN_THREADS env var, else serial
             stream_records: false, // buffered JSONL; fleet-scale runs opt in
         },
+        service: ServiceConfig::default(),
         out_dir: None,
     }
 }
@@ -333,6 +334,12 @@ pub fn fleet_trace() -> Config {
         mean_down_s: 0.8,
         ..TraceGenConfig::default()
     });
+    // fleet scale is exactly where the buffered recorder's open tail
+    // hurts (10k workers x thousands of step records held in RAM):
+    // stream per-round when an out_dir is set. The final JSONL stays
+    // byte-identical to buffered (tests/stream_records.rs; the fig6
+    // smoke bench asserts it at scale).
+    cfg.run.stream_records = true;
     cfg
 }
 
@@ -418,14 +425,16 @@ mod tests {
         }
         // membership stays fixed so the preset scales to the fig6 grid
         assert!(!cfg.algo.merge.enabled);
-        // every other preset keeps the stochastic source
+        // fleet scale drains the recorder per round instead of holding
+        // the open tail in RAM; all other presets stay buffered
+        assert!(cfg.run.stream_records);
+        // every other preset keeps the stochastic source (and the
+        // buffered recorder)
         for name in preset_names() {
             if *name != "fleet_trace" {
-                assert_eq!(
-                    by_name(name).unwrap().cluster.trace,
-                    TraceSourceConfig::Stochastic,
-                    "{name}"
-                );
+                let other = by_name(name).unwrap();
+                assert_eq!(other.cluster.trace, TraceSourceConfig::Stochastic, "{name}");
+                assert!(!other.run.stream_records, "{name}");
             }
         }
     }

@@ -87,6 +87,129 @@ use crate::trainer::Trainer;
 use crate::util::{derive_seed, Rng};
 use anyhow::Result;
 use chain::{exec_step, step_compute_time, StepScratch};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Live progress counters a steered run publishes at every outer-round
+/// boundary (DESIGN.md §13). Pure observability: reading them never
+/// perturbs the run.
+#[derive(Clone, Debug, Default)]
+pub struct BoundaryProgress {
+    /// Outer rounds completed so far.
+    pub outer_steps_done: u64,
+    /// The run's configured outer-step total.
+    pub outer_steps_total: u64,
+    /// Live instance census at the boundary.
+    pub live_instances: usize,
+    /// Virtual-time front across all worker clocks (seconds).
+    pub virtual_time_s: f64,
+    /// Samples consumed so far (the N axis of Theorem 2).
+    pub total_samples: u64,
+}
+
+/// Steering handle shared between a driver (the `adloco serve` control
+/// plane) and a running [`Coordinator`] (DESIGN.md §13).
+///
+/// The coordinator polls it once per outer round, at the same shared
+/// boundary both schedulers cross (the `elastic_boundary` pattern), in
+/// a fixed order: publish progress → park while paused → write any
+/// requested v4 complete snapshot → honour a cancel. Because every
+/// externally requested mutation lands at that boundary — and pause
+/// only suspends host wall-clock, never virtual time — a steered run's
+/// records and results stay bit-identical to the same config run
+/// one-shot; a cancelled run is the exact prefix of the uncancelled
+/// one. The order also guarantees a checkpoint requested before a
+/// cancel is written at the cancel boundary, not dropped.
+#[derive(Default)]
+pub struct BoundaryControl {
+    inner: Mutex<ControlInner>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct ControlInner {
+    cancel: bool,
+    paused: bool,
+    checkpoint_request: Option<String>,
+    checkpoints: Vec<(u64, String)>,
+    progress: BoundaryProgress,
+}
+
+impl BoundaryControl {
+    /// Fresh handle with nothing requested.
+    pub fn new() -> Self {
+        BoundaryControl::default()
+    }
+
+    /// Ask the run to stop at its next outer-round boundary. Also wakes
+    /// a paused run so cancellation cannot deadlock behind a pause.
+    pub fn request_cancel(&self) {
+        self.lock().cancel = true;
+        self.cv.notify_all();
+    }
+
+    /// True once a cancel has been requested.
+    pub fn cancelled(&self) -> bool {
+        self.lock().cancel
+    }
+
+    /// Park the run at its next boundary (`true`) or release it
+    /// (`false`). Pausing costs host wall-clock only — virtual time and
+    /// every record stream are untouched.
+    pub fn set_paused(&self, paused: bool) {
+        self.lock().paused = paused;
+        self.cv.notify_all();
+    }
+
+    /// True while a pause is in force.
+    pub fn paused(&self) -> bool {
+        self.lock().paused
+    }
+
+    /// Ask for a v4 complete snapshot to `path` at the next boundary.
+    /// A later request before the boundary replaces the pending one.
+    pub fn request_checkpoint(&self, path: &str) {
+        self.lock().checkpoint_request = Some(path.to_string());
+    }
+
+    /// Snapshots written so far, as `(outer_step, path)` in write order.
+    pub fn checkpoints(&self) -> Vec<(u64, String)> {
+        self.lock().checkpoints.clone()
+    }
+
+    /// The most recently published boundary counters.
+    pub fn progress(&self) -> BoundaryProgress {
+        self.lock().progress.clone()
+    }
+
+    /// Replace the published counters. The coordinator calls this at
+    /// every boundary; the service also pre-publishes the schedule
+    /// shape (`outer_steps_total`) at submit time so observers see it
+    /// before the first round completes.
+    pub fn publish(&self, p: BoundaryProgress) {
+        self.lock().progress = p;
+    }
+
+    fn take_checkpoint_request(&self) -> Option<String> {
+        self.lock().checkpoint_request.take()
+    }
+
+    fn record_checkpoint(&self, outer: u64, path: String) {
+        self.lock().checkpoints.push((outer, path));
+    }
+
+    fn wait_while_paused(&self) {
+        let mut g = self.lock();
+        while g.paused && !g.cancel {
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ControlInner> {
+        // a panicked holder only ever held the lock for plain field
+        // reads/writes; the state stays coherent, so recover the guard
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
 
 /// A delayed outer update in flight (DESIGN.md §8): the non-blocking
 /// collective's handle plus the outer delta it will apply one round
@@ -246,6 +369,9 @@ pub struct Coordinator {
     /// Per-round step-record streaming sink (`run.stream_records`);
     /// None = keep everything buffered in the recorder.
     streamer: Option<RecordStreamer>,
+    /// Service steering handle polled at every outer boundary
+    /// (DESIGN.md §13); None = one-shot run, boundary untouched.
+    control: Option<Arc<BoundaryControl>>,
 }
 
 impl Coordinator {
@@ -361,6 +487,7 @@ impl Coordinator {
             threads,
             run_wall_s: 0.0,
             streamer: None,
+            control: None,
             cfg,
             engine,
             corpus,
@@ -679,6 +806,30 @@ impl Coordinator {
                     }
                 }
             }
+            if let Some(ctl) = self.control.clone() {
+                // service steering (DESIGN.md §13): every externally
+                // requested mutation lands here, at the shared boundary
+                // both schedulers cross — publish, park while paused,
+                // snapshot, then cancel, in that order, so a pending
+                // checkpoint is written even at the cancel boundary
+                ctl.publish(BoundaryProgress {
+                    outer_steps_done: t,
+                    outer_steps_total: outer_steps,
+                    live_instances: self.live_trainers(),
+                    virtual_time_s: self.cluster.clock.max_time(),
+                    total_samples: self.total_samples,
+                });
+                ctl.wait_while_paused();
+                if let Some(path) = ctl.take_checkpoint_request() {
+                    self.snapshot(t).save(&path)?;
+                    crate::info!("service checkpoint written to {path} at outer {t}");
+                    ctl.record_checkpoint(t, path);
+                }
+                if ctl.cancelled() {
+                    crate::info!("service cancel honoured at outer boundary {t}");
+                    break;
+                }
+            }
             if hit {
                 crate::info!("target perplexity reached at outer step {t}; stopping");
                 break;
@@ -689,7 +840,24 @@ impl Coordinator {
         self.record_utilization();
         self.run_wall_s = wall0.elapsed().as_secs_f64();
         self.recorder.wall_clock_s = self.run_wall_s;
+        if let Some(ctl) = self.control.clone() {
+            // final census for observers that poll after completion
+            ctl.publish(BoundaryProgress {
+                outer_steps_done: last_t,
+                outer_steps_total: outer_steps,
+                live_instances: self.live_trainers(),
+                virtual_time_s: self.cluster.clock.max_time(),
+                total_samples: self.total_samples,
+            });
+        }
         Ok(self.result())
+    }
+
+    /// Attach a service steering handle (DESIGN.md §13). Call before
+    /// `run()`; with no handle attached the boundary hook is inert and
+    /// the loop is byte-for-byte the one-shot path.
+    pub fn set_boundary_control(&mut self, ctl: Arc<BoundaryControl>) {
+        self.control = Some(ctl);
     }
 
     /// Attach a per-round step-record streaming sink writing toward

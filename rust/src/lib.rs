@@ -16,9 +16,13 @@
 //!   ([`runtime`], behind the `xla` cargo feature).
 //!
 //! ```text
-//!  examples / benches / CLI (main.rs)
-//!        │
-//!  ┌─────▼──────────────────────────────────────────────────────────┐
+//!  examples / benches / CLI (main.rs)     HTTP clients
+//!        │                                     │
+//!        │              ┌──────────────────────▼──────────────────┐
+//!        │              │ service — `adloco serve` daemon         │
+//!        │              │   server (HTTP/1.1)  api  state  client │
+//!        │              └──────────────────────┬──────────────────┘
+//!  ┌─────▼──────────────────────────────────────▼───────────────────┐
 //!  │ coordinator  — Algorithm 3 run loop (lockstep | event-driven)  │
 //!  │   batching   merge   outer   schedule   trainer                │
 //!  │   instances  — elastic lifecycle registry + spawn controller   │
@@ -125,6 +129,7 @@ pub mod metrics;
 pub mod outer;
 pub mod runtime;
 pub mod schedule;
+pub mod service;
 pub mod simulator;
 pub mod sweep;
 pub mod theory;

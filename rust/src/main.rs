@@ -6,6 +6,7 @@
 //!   calibrate  measure real PJRT step times and fit the simulator model
 //!   inspect    print an artifact profile's metadata
 //!   presets    list named presets
+//!   serve      long-lived daemon: submit/steer runs over HTTP
 //!
 //! Examples:
 //!   adloco train --preset quick
@@ -22,6 +23,7 @@
 //!   adloco sweep --preset quick --param algo.batching.eta \
 //!       --values 0.4,0.8,1.6 --jobs 4
 //!   adloco calibrate --profile tiny
+//!   adloco serve --port 7700 --max-runs 2 --out runs/service
 //!
 //! `--threads N` drives the in-run parallel execution runtime; `--jobs N`
 //! parallelizes sweep grids across cells. Both are bit-identical to their
@@ -61,6 +63,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         Some("inspect") => cmd_inspect(&args),
         Some("report") => cmd_report(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("serve") => cmd_serve(&args),
         Some("presets") => {
             for name in presets::preset_names() {
                 println!("{name}");
@@ -68,11 +71,11 @@ fn run(argv: Vec<String>) -> Result<()> {
             Ok(())
         }
         Some(other) => {
-            bail!("unknown subcommand {other:?} (try: train, compare, calibrate, inspect, report, sweep, presets)")
+            bail!("unknown subcommand {other:?} (try: train, compare, calibrate, inspect, report, sweep, serve, presets)")
         }
         None => {
             println!("adloco — AdLoCo distributed-training reproduction");
-            println!("usage: adloco <train|compare|calibrate|inspect|report|sweep|presets> [options]");
+            println!("usage: adloco <train|compare|calibrate|inspect|report|sweep|serve|presets> [options]");
             Ok(())
         }
     }
@@ -328,6 +331,33 @@ fn cmd_report(args: &cli::Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Long-lived daemon: bind `service.addr:service.port` and execute
+/// submitted runs on a bounded executor pool. `--addr/--port/--max-runs`
+/// shadow the `service.*` config knobs; `--out` picks the run-artifact
+/// root (default `runs/service`). Blocks until killed.
+fn cmd_serve(args: &cli::Args) -> Result<()> {
+    let mut cfg = load_config(args)?;
+    if let Some(a) = args.opt("addr") {
+        cfg.service.addr = a.to_string();
+    }
+    if let Some(p) = args.opt_parse::<u16>("port")? {
+        cfg.service.port = p;
+    }
+    if let Some(n) = args.opt_parse::<usize>("max-runs")? {
+        cfg.service.max_concurrent_runs = n;
+    }
+    cfg.validate()?;
+    let root = args.opt("out").unwrap_or("runs/service").to_string();
+    std::fs::create_dir_all(&root).with_context(|| format!("creating run root {root}"))?;
+    let server = adloco::service::Server::start(cfg.service.clone(), &root)?;
+    println!("adloco serve listening on http://{}", server.addr());
+    println!("run artifacts under {root}/<id>/");
+    println!("try: curl http://{}/health", server.addr());
+    loop {
+        std::thread::park();
+    }
 }
 
 /// Grid-sweep one config knob: `adloco sweep --preset X --param

@@ -506,7 +506,7 @@ impl RecordStreamer {
         if let Some(dir) = std::path::Path::new(final_path).parent() {
             std::fs::create_dir_all(dir).ok();
         }
-        let part_path = format!("{final_path}.steps.part");
+        let part_path = part_path_for(final_path);
         let f = std::fs::File::create(&part_path)
             .with_context(|| format!("create {part_path}"))?;
         Ok(RecordStreamer {
@@ -544,6 +544,39 @@ impl RecordStreamer {
         std::fs::remove_file(&part_path).ok();
         Ok(())
     }
+}
+
+/// The live step-segment path [`RecordStreamer`] writes beside
+/// `final_path`. The service's incremental record endpoint reads this
+/// file while a streamed run is still executing (DESIGN.md §13).
+pub fn part_path_for(final_path: &str) -> String {
+    format!("{final_path}.steps.part")
+}
+
+/// Incremental JSONL cursor (DESIGN.md §13): the complete lines of
+/// `path` starting at 0-based line index `from`, plus the next cursor
+/// value (`from` + number of lines returned).
+///
+/// Only newline-terminated lines are served — a trailing fragment still
+/// being flushed by a concurrent [`RecordStreamer::drain`] is withheld
+/// until its newline lands, so a client never sees a torn record. A
+/// missing file reads as an empty page (the run has not opened its sink
+/// yet), which keeps polling clients unconditional.
+pub fn read_jsonl_lines_from(path: &str, from: usize) -> Result<(Vec<String>, usize)> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((Vec::new(), from)),
+        Err(e) => return Err(e).with_context(|| format!("reading {path}")),
+    };
+    let text = std::str::from_utf8(&bytes).with_context(|| format!("{path} is not UTF-8"))?;
+    let lines: Vec<String> = text
+        .split_inclusive('\n')
+        .filter(|l| l.ends_with('\n'))
+        .skip(from)
+        .map(|l| l.strip_suffix('\n').unwrap_or(l).to_string())
+        .collect();
+    let next = from + lines.len();
+    Ok((lines, next))
 }
 
 /// Perplexity from a mean cross-entropy loss (clamped to avoid overflow
@@ -742,5 +775,32 @@ mod tests {
         }
         assert!((r.mean_batch() - 4.0).abs() < 1e-12);
         assert_eq!(r.batch_growth_series()[2], (2, 7));
+    }
+
+    #[test]
+    fn jsonl_cursor_serves_complete_lines_and_withholds_the_tail() {
+        let dir = std::env::temp_dir().join(format!("adloco_cursor_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("records.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        std::fs::remove_file(&path).ok();
+        // a missing file reads as an empty page
+        let (lines, next) = read_jsonl_lines_from(&path, 0).unwrap();
+        assert!(lines.is_empty());
+        assert_eq!(next, 0);
+        // an unterminated tail is withheld until its newline lands
+        std::fs::write(&path, "{\"a\":1}\n{\"b\":2}\n{\"c\":").unwrap();
+        let (lines, next) = read_jsonl_lines_from(&path, 0).unwrap();
+        assert_eq!(lines, vec!["{\"a\":1}", "{\"b\":2}"]);
+        assert_eq!(next, 2);
+        std::fs::write(&path, "{\"a\":1}\n{\"b\":2}\n{\"c\":3}\n").unwrap();
+        let (lines, next) = read_jsonl_lines_from(&path, next).unwrap();
+        assert_eq!(lines, vec!["{\"c\":3}"]);
+        assert_eq!(next, 3);
+        // a cursor past the end is a clean empty page, not an error
+        let (lines, far) = read_jsonl_lines_from(&path, 10).unwrap();
+        assert!(lines.is_empty());
+        assert_eq!(far, 10);
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -1,0 +1,430 @@
+//! Typed request/response schemas for the control plane (DESIGN.md §13).
+//!
+//! Every request body is parsed with the same strict deny-unknown-fields
+//! discipline as the v4 checkpoint interchange (`StrictObj`, DESIGN.md
+//! §10): each field is consumed exactly once and leftovers — which
+//! include duplicate keys — are typed rejects, never silent ignores.
+//! Every error the service can produce is an [`ApiError`]: an HTTP
+//! status, a stable machine-readable code the tests pin, and a human
+//! message. There are no untyped error paths.
+
+use crate::config::{presets, Config};
+use crate::coordinator::RunResult;
+use crate::util::JsonValue;
+
+/// A typed control-plane error: the HTTP status the response carries, a
+/// stable machine code (`tests/service_api.rs` pins these), and a human
+/// message. Serialized on the wire as
+/// `{"error":{"code":"...","message":"..."}}`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ApiError {
+    /// HTTP status code of the response.
+    pub status: u16,
+    /// Stable machine-readable code.
+    pub code: String,
+    /// Human-readable detail.
+    pub message: String,
+}
+
+impl ApiError {
+    /// Build from parts.
+    pub fn new(status: u16, code: &str, message: impl Into<String>) -> ApiError {
+        ApiError { status, code: code.to_string(), message: message.into() }
+    }
+
+    /// 400 `bad_request`: malformed HTTP surface (request line, header
+    /// syntax, content-length).
+    pub fn bad_request(message: impl Into<String>) -> ApiError {
+        ApiError::new(400, "bad_request", message)
+    }
+
+    /// 400 `invalid_json`: the body failed to parse, had trailing
+    /// garbage, or a field had the wrong JSON type.
+    pub fn invalid_json(message: impl Into<String>) -> ApiError {
+        ApiError::new(400, "invalid_json", message)
+    }
+
+    /// 400 `unknown_field`: a body object carried a field the schema
+    /// does not define (or a duplicate key).
+    pub fn unknown_field(path: &str) -> ApiError {
+        ApiError::new(400, "unknown_field", format!("unknown field {path}"))
+    }
+
+    /// 400 `missing_field`: a required field (or field group) is absent.
+    pub fn missing_field(path: &str) -> ApiError {
+        ApiError::new(400, "missing_field", format!("missing field {path}"))
+    }
+
+    /// 400 `unknown_preset`: `submit.preset` names no known preset.
+    pub fn unknown_preset(name: &str) -> ApiError {
+        ApiError::new(400, "unknown_preset", format!("unknown preset {name:?}"))
+    }
+
+    /// 400 `invalid_config`: the resolved config failed the same
+    /// validation the CLI applies (the message is `Config::validate`'s).
+    pub fn invalid_config(message: impl Into<String>) -> ApiError {
+        ApiError::new(400, "invalid_config", message)
+    }
+
+    /// 400 `bad_query`: malformed or unknown query parameter.
+    pub fn bad_query(message: impl Into<String>) -> ApiError {
+        ApiError::new(400, "bad_query", message)
+    }
+
+    /// 404 `not_found`: unknown endpoint path or run id.
+    pub fn not_found(message: impl Into<String>) -> ApiError {
+        ApiError::new(404, "not_found", message)
+    }
+
+    /// 405 `method_not_allowed`: known path, wrong method.
+    pub fn method_not_allowed(method: &str, path: &str) -> ApiError {
+        ApiError::new(405, "method_not_allowed", format!("{method} not allowed on {path}"))
+    }
+
+    /// 409 `invalid_state`: the run's lifecycle state rejects the
+    /// operation (e.g. cancel on a terminal run).
+    pub fn invalid_state(message: impl Into<String>) -> ApiError {
+        ApiError::new(409, "invalid_state", message)
+    }
+
+    /// 413 `payload_too_large`: body beyond `service.max_body_bytes`.
+    pub fn payload_too_large(limit: usize) -> ApiError {
+        ApiError::new(413, "payload_too_large", format!("body exceeds {limit} bytes"))
+    }
+
+    /// 431 `header_too_large`: head beyond `service.max_header_bytes`.
+    pub fn header_too_large(limit: usize) -> ApiError {
+        ApiError::new(431, "header_too_large", format!("request head exceeds {limit} bytes"))
+    }
+
+    /// 501 `unsupported`: a protocol feature the daemon deliberately
+    /// does not implement (chunked transfer-encoding).
+    pub fn unsupported(message: impl Into<String>) -> ApiError {
+        ApiError::new(501, "unsupported", message)
+    }
+
+    /// 500 `internal`: an I/O failure while serving (not a client bug).
+    pub fn internal(message: impl Into<String>) -> ApiError {
+        ApiError::new(500, "internal", message)
+    }
+
+    /// The wire body.
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::obj(vec![(
+            "error",
+            JsonValue::obj(vec![
+                ("code", JsonValue::str(self.code.clone())),
+                ("message", JsonValue::str(self.message.clone())),
+            ]),
+        )])
+    }
+
+    /// Parse a wire error back into a typed one (client side). A body
+    /// that does not carry the error envelope still yields a usable
+    /// `ApiError` with code `unknown`.
+    pub fn from_wire(status: u16, body: &JsonValue) -> ApiError {
+        let err = body.get("error");
+        let code = err
+            .and_then(|e| e.get("code"))
+            .and_then(|c| c.as_str())
+            .unwrap_or("unknown")
+            .to_string();
+        let message = err
+            .and_then(|e| e.get("message"))
+            .and_then(|m| m.as_str())
+            .unwrap_or("(no message)")
+            .to_string();
+        ApiError { status, code, message }
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}: {}", self.status, self.code, self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// Deny-unknown-fields JSON object reader: the v4 interchange's
+/// `StrictObj` consumption-tracking discipline (DESIGN.md §10) rebased
+/// onto [`ApiError`]. Every field must be consumed exactly once;
+/// `finish` rejects leftovers, which also catches duplicate keys.
+pub struct StrictBody<'a> {
+    fields: &'a [(String, JsonValue)],
+    taken: Vec<bool>,
+    what: &'static str,
+}
+
+impl<'a> StrictBody<'a> {
+    /// Wrap `v`, which must be a JSON object.
+    pub fn new(v: &'a JsonValue, what: &'static str) -> Result<StrictBody<'a>, ApiError> {
+        match v {
+            JsonValue::Object(fields) => {
+                Ok(StrictBody { fields, taken: vec![false; fields.len()], what })
+            }
+            _ => Err(ApiError::invalid_json(format!("{what} must be a JSON object"))),
+        }
+    }
+
+    /// Consume an optional field (first unconsumed occurrence).
+    pub fn take_opt(&mut self, key: &str) -> Option<&'a JsonValue> {
+        for (i, (k, val)) in self.fields.iter().enumerate() {
+            if k == key && !self.taken[i] {
+                self.taken[i] = true;
+                return Some(val);
+            }
+        }
+        None
+    }
+
+    /// Every field must have been consumed; a leftover (unknown or
+    /// duplicate key) is a typed reject.
+    pub fn finish(self) -> Result<(), ApiError> {
+        for (i, (k, _)) in self.fields.iter().enumerate() {
+            if !self.taken[i] {
+                return Err(ApiError::unknown_field(&format!("{}.{}", self.what, k)));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A validated `POST /runs` body: a preset name and/or a config overlay
+/// object (the config-file format), optional dotted-path overrides
+/// applied last, and an optional run-name override.
+#[derive(Clone, Debug, Default)]
+pub struct SubmitRequest {
+    /// Preset base ([`presets::by_name`]); defaults to `mock_default`
+    /// when only `config` is given.
+    pub preset: Option<String>,
+    /// Config overlay applied on the base via [`Config::apply_overlay`].
+    pub config: Option<JsonValue>,
+    /// `("dotted.path", value)` overrides applied after the overlay, in
+    /// object order — the HTTP twin of the CLI's `--set`.
+    pub overrides: Vec<(String, JsonValue)>,
+    /// Run-name override (output file naming inside the run directory).
+    pub name: Option<String>,
+}
+
+impl SubmitRequest {
+    /// Preset-only shorthand.
+    pub fn preset(name: &str) -> SubmitRequest {
+        SubmitRequest { preset: Some(name.to_string()), ..SubmitRequest::default() }
+    }
+
+    /// Append one dotted-path override (builder style).
+    pub fn with_override(mut self, path: &str, value: JsonValue) -> SubmitRequest {
+        self.overrides.push((path.to_string(), value));
+        self
+    }
+
+    /// Strict parse: deny unknown fields, typed errors throughout.
+    pub fn parse(v: &JsonValue) -> Result<SubmitRequest, ApiError> {
+        let mut b = StrictBody::new(v, "submit")?;
+        let mut req = SubmitRequest::default();
+        if let Some(p) = b.take_opt("preset") {
+            match p.as_str() {
+                Some(s) => req.preset = Some(s.to_string()),
+                None => return Err(ApiError::invalid_json("submit.preset must be a string")),
+            }
+        }
+        if let Some(c) = b.take_opt("config") {
+            if c.as_object().is_none() {
+                return Err(ApiError::invalid_json("submit.config must be an object"));
+            }
+            req.config = Some(c.clone());
+        }
+        if let Some(o) = b.take_opt("overrides") {
+            match o.as_object() {
+                Some(fields) => {
+                    for (k, val) in fields {
+                        req.overrides.push((k.clone(), val.clone()));
+                    }
+                }
+                None => {
+                    return Err(ApiError::invalid_json("submit.overrides must be an object"))
+                }
+            }
+        }
+        if let Some(n) = b.take_opt("name") {
+            match n.as_str() {
+                Some(s) => req.name = Some(s.to_string()),
+                None => return Err(ApiError::invalid_json("submit.name must be a string")),
+            }
+        }
+        if req.preset.is_none() && req.config.is_none() {
+            return Err(ApiError::missing_field("submit.preset (or submit.config)"));
+        }
+        b.finish()?;
+        Ok(req)
+    }
+
+    /// The wire form (client side).
+    pub fn to_json(&self) -> JsonValue {
+        let mut fields: Vec<(String, JsonValue)> = Vec::new();
+        if let Some(p) = &self.preset {
+            fields.push(("preset".to_string(), JsonValue::str(p.clone())));
+        }
+        if let Some(c) = &self.config {
+            fields.push(("config".to_string(), c.clone()));
+        }
+        if !self.overrides.is_empty() {
+            fields.push(("overrides".to_string(), JsonValue::Object(self.overrides.clone())));
+        }
+        if let Some(n) = &self.name {
+            fields.push(("name".to_string(), JsonValue::str(n.clone())));
+        }
+        JsonValue::Object(fields)
+    }
+
+    /// Resolve to a validated [`Config`], surfacing the same typed
+    /// messages as the CLI path (`Config::load` + `--set` + `validate`).
+    pub fn resolve(&self) -> Result<Config, ApiError> {
+        let mut cfg = match &self.preset {
+            Some(name) => {
+                presets::by_name(name).ok_or_else(|| ApiError::unknown_preset(name))?
+            }
+            None => presets::mock_default(),
+        };
+        if let Some(overlay) = &self.config {
+            cfg.apply_overlay(overlay)
+                .map_err(|e| ApiError::invalid_config(format!("{e:#}")))?;
+        }
+        for (path, value) in &self.overrides {
+            // route dotted paths through the overlay machinery exactly
+            // like the CLI's --set: nested one-key objects
+            let mut leaf = value.clone();
+            for key in path.split('.').rev() {
+                leaf = JsonValue::Object(vec![(key.to_string(), leaf)]);
+            }
+            cfg.apply_overlay(&leaf)
+                .map_err(|e| ApiError::invalid_config(format!("override {path}: {e:#}")))?;
+        }
+        if let Some(name) = &self.name {
+            cfg.name = name.clone();
+        }
+        cfg.validate().map_err(|e| ApiError::invalid_config(format!("{e:#}")))?;
+        Ok(cfg)
+    }
+}
+
+/// `GET /version` body: crate version, the newest checkpoint
+/// interchange format this build writes, and a capability flag for
+/// config structural digests (DESIGN.md §10).
+pub fn version_json() -> JsonValue {
+    JsonValue::obj(vec![
+        ("version", JsonValue::str(env!("CARGO_PKG_VERSION"))),
+        ("checkpoint_format", JsonValue::num(crate::checkpoint::VERSION as f64)),
+        ("config_digest", JsonValue::Bool(true)),
+    ])
+}
+
+/// The full [`RunResult`] as a JSON object: every determinism-contract
+/// field plus the two excluded ones (`wall_clock_s`, `threads` —
+/// DESIGN.md §6). Comparing two results under the contract means
+/// dropping those two keys first; the bit-identity suite does exactly
+/// that.
+pub fn run_result_json(r: &RunResult) -> JsonValue {
+    let mut fields = vec![
+        ("name", JsonValue::str(r.name.clone())),
+        ("method", JsonValue::str(r.method.as_str())),
+        ("best_ppl", JsonValue::num(r.best_ppl)),
+        ("final_ppl", JsonValue::num(r.final_ppl)),
+        ("total_inner_steps", JsonValue::num(r.total_inner_steps as f64)),
+        ("total_samples", JsonValue::num(r.total_samples as f64)),
+        ("comm_count", JsonValue::num(r.comm_count as f64)),
+        ("comm_bytes", JsonValue::num(r.comm_bytes as f64)),
+        ("wan_comm_bytes", JsonValue::num(r.wan_comm_bytes as f64)),
+        ("virtual_time_s", JsonValue::num(r.virtual_time_s)),
+        ("trainers_left", JsonValue::num(r.trainers_left as f64)),
+        ("total_idle_s", JsonValue::num(r.total_idle_s)),
+        ("mean_utilization", JsonValue::num(r.mean_utilization)),
+        ("overlap_hidden_s", JsonValue::num(r.overlap_hidden_s)),
+        ("spawn_count", JsonValue::num(r.spawn_count as f64)),
+        ("mean_live_instances", JsonValue::num(r.mean_live_instances)),
+        ("total_vacant_s", JsonValue::num(r.total_vacant_s)),
+        ("wall_clock_s", JsonValue::num(r.wall_clock_s)),
+        ("threads", JsonValue::num(r.threads as f64)),
+    ];
+    if let Some((step, time_s, comms)) = r.time_to_target {
+        fields.push((
+            "time_to_target",
+            JsonValue::obj(vec![
+                ("global_step", JsonValue::num(step as f64)),
+                ("virtual_time_s", JsonValue::num(time_s)),
+                ("comm_count", JsonValue::num(comms as f64)),
+            ]),
+        ));
+    }
+    JsonValue::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_body(text: &str) -> Result<SubmitRequest, ApiError> {
+        SubmitRequest::parse(&JsonValue::parse(text).unwrap())
+    }
+
+    #[test]
+    fn submit_parse_is_strict() {
+        let req = parse_body(r#"{"preset":"quick"}"#).unwrap();
+        assert_eq!(req.preset.as_deref(), Some("quick"));
+        let err = parse_body(r#"{"preset":"quick","bogus":1}"#).unwrap_err();
+        assert_eq!((err.status, err.code.as_str()), (400, "unknown_field"));
+        assert!(err.message.contains("submit.bogus"), "{}", err.message);
+        let err = parse_body(r#"{}"#).unwrap_err();
+        assert_eq!((err.status, err.code.as_str()), (400, "missing_field"));
+        let err = parse_body(r#"{"preset":1}"#).unwrap_err();
+        assert_eq!((err.status, err.code.as_str()), (400, "invalid_json"));
+        let err = SubmitRequest::parse(&JsonValue::num(3.0)).unwrap_err();
+        assert_eq!(err.code, "invalid_json");
+    }
+
+    #[test]
+    fn submit_resolve_matches_cli_semantics() {
+        let req = SubmitRequest::preset("quick")
+            .with_override("algo.outer_steps", JsonValue::num(2.0))
+            .with_override("run.threads", JsonValue::num(4.0));
+        let cfg = req.resolve().unwrap();
+        assert_eq!(cfg.algo.outer_steps, 2);
+        assert_eq!(cfg.run.threads, 4);
+        let mut cli = presets::by_name("quick").unwrap();
+        cli.apply_override("algo.outer_steps=2").unwrap();
+        cli.apply_override("run.threads=4").unwrap();
+        assert_eq!(cfg.structural_digest(), cli.structural_digest());
+
+        let err = SubmitRequest::preset("nope").resolve().unwrap_err();
+        assert_eq!((err.status, err.code.as_str()), (400, "unknown_preset"));
+        // invalid configs fail with the CLI's own validate message
+        let err = SubmitRequest::preset("quick")
+            .with_override("algo.num_trainers", JsonValue::num(0.0))
+            .resolve()
+            .unwrap_err();
+        assert_eq!((err.status, err.code.as_str()), (400, "invalid_config"));
+        assert!(err.message.contains("num_trainers"), "{}", err.message);
+    }
+
+    #[test]
+    fn submit_roundtrips_through_the_wire_form() {
+        let req = SubmitRequest::preset("hetero_dynamic")
+            .with_override("run.threads", JsonValue::num(1.0));
+        let back = SubmitRequest::parse(&req.to_json()).unwrap();
+        assert_eq!(back.preset.as_deref(), Some("hetero_dynamic"));
+        assert_eq!(back.overrides.len(), 1);
+        assert_eq!(
+            back.resolve().unwrap().structural_digest(),
+            req.resolve().unwrap().structural_digest()
+        );
+    }
+
+    #[test]
+    fn error_envelope_roundtrips() {
+        let e = ApiError::invalid_state("run 3 is done");
+        let back = ApiError::from_wire(e.status, &e.to_json());
+        assert_eq!(back, e);
+        assert_eq!(version_json().get("config_digest"), Some(&JsonValue::Bool(true)));
+    }
+}

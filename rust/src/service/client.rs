@@ -1,0 +1,339 @@
+//! Typed in-crate client for the `adloco serve` API (DESIGN.md §13).
+//!
+//! One request per connection (`Connection: close`), blocking
+//! `std::net` sockets, and the same [`ApiError`] envelope the server
+//! emits: any non-2xx response is decoded back into a typed error, so
+//! tests can assert exact `(status, code)` pairs through the client.
+
+use super::api::{ApiError, SubmitRequest};
+use super::state::RunState;
+use crate::util::JsonValue;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+/// A run summary as returned by `GET /runs/{id}` and the mutation
+/// endpoints.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    /// Registry id.
+    pub id: u64,
+    /// Run name.
+    pub name: String,
+    /// Lifecycle state.
+    pub state: RunState,
+    /// Structural config digest, zero-padded hex.
+    pub config_digest: String,
+    /// Outer boundaries completed so far.
+    pub outer_steps_done: u64,
+    /// Total outer steps in the schedule.
+    pub outer_steps_total: u64,
+    /// Live trainer instances at the last boundary.
+    pub live_instances: u64,
+    /// Simulated virtual time at the last boundary.
+    pub virtual_time_s: f64,
+    /// Samples consumed at the last boundary.
+    pub total_samples: u64,
+    /// Claim-order stamp once the run started.
+    pub started_order: Option<u64>,
+    /// Whether a cancel is pending or honoured.
+    pub cancel_requested: bool,
+    /// Service checkpoints written so far, as `(outer_step, path)`.
+    pub checkpoints: Vec<(u64, String)>,
+    /// Failure detail once Failed.
+    pub error: Option<String>,
+}
+
+/// One page of `GET /runs/{id}/records?from=N`.
+#[derive(Clone, Debug)]
+pub struct RecordsPage {
+    /// Echo of the requested cursor.
+    pub from: usize,
+    /// Cursor for the next page (== `from` when no new lines).
+    pub next: usize,
+    /// True once the run is terminal and `lines` come from the
+    /// assembled canonical JSONL.
+    pub complete: bool,
+    /// `"live"` (part file) or `"final"` (assembled JSONL). Cursors are
+    /// per-source: restart from 0 when this flips.
+    pub source: String,
+    /// Complete JSONL lines, newline stripped.
+    pub lines: Vec<String>,
+}
+
+fn field<'v>(v: &'v JsonValue, key: &str) -> Result<&'v JsonValue> {
+    v.get(key).with_context(|| format!("response is missing field {key:?}"))
+}
+
+fn field_u64(v: &JsonValue, key: &str) -> Result<u64> {
+    Ok(field(v, key)?
+        .as_f64()
+        .with_context(|| format!("field {key:?} is not a number"))? as u64)
+}
+
+fn field_str(v: &JsonValue, key: &str) -> Result<String> {
+    Ok(field(v, key)?
+        .as_str()
+        .with_context(|| format!("field {key:?} is not a string"))?
+        .to_string())
+}
+
+fn parse_summary(v: &JsonValue) -> Result<RunSummary> {
+    let state_str = field_str(v, "state")?;
+    let state = RunState::parse(&state_str)
+        .with_context(|| format!("unknown run state {state_str:?}"))?;
+    let checkpoints = match v.get("checkpoints").and_then(|c| c.as_array()) {
+        Some(items) => items
+            .iter()
+            .map(|c| Ok((field_u64(c, "outer_step")?, field_str(c, "path")?)))
+            .collect::<Result<Vec<_>>>()?,
+        None => Vec::new(),
+    };
+    Ok(RunSummary {
+        id: field_u64(v, "id")?,
+        name: field_str(v, "name")?,
+        state,
+        config_digest: field_str(v, "config_digest")?,
+        outer_steps_done: field_u64(v, "outer_steps_done")?,
+        outer_steps_total: field_u64(v, "outer_steps_total")?,
+        live_instances: field_u64(v, "live_instances")?,
+        virtual_time_s: field(v, "virtual_time_s")?
+            .as_f64()
+            .context("field \"virtual_time_s\" is not a number")?,
+        total_samples: field_u64(v, "total_samples")?,
+        started_order: v.get("started_order").and_then(|o| o.as_f64()).map(|o| o as u64),
+        cancel_requested: field(v, "cancel_requested")?
+            .as_bool()
+            .context("field \"cancel_requested\" is not a bool")?,
+        checkpoints,
+        error: v.get("error").and_then(|e| e.as_str()).map(str::to_string),
+    })
+}
+
+/// Blocking HTTP client bound to one server address.
+pub struct Client {
+    addr: SocketAddr,
+    timeout: Duration,
+}
+
+impl Client {
+    /// Client for `addr` with a 10 s per-request timeout.
+    pub fn new(addr: SocketAddr) -> Client {
+        Client { addr, timeout: Duration::from_secs(10) }
+    }
+
+    /// Raw request: returns `(status, parsed body)` without mapping
+    /// error statuses (negative-path tests assert on these directly).
+    pub fn request(
+        &self,
+        method: &str,
+        path: &str,
+        body: Option<&JsonValue>,
+    ) -> Result<(u16, JsonValue)> {
+        let payload = body.map(|b| b.to_string()).unwrap_or_default();
+        let mut stream = TcpStream::connect_timeout(&self.addr, self.timeout)
+            .with_context(|| format!("connect to {}", self.addr))?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            self.addr,
+            payload.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(payload.as_bytes())?;
+        stream.flush()?;
+        let mut raw = Vec::new();
+        stream.read_to_end(&mut raw)?;
+        parse_response(&raw)
+    }
+
+    /// Raw request with non-2xx mapped to a typed [`ApiError`]
+    /// (downcastable from the returned `anyhow::Error`).
+    fn call(&self, method: &str, path: &str, body: Option<&JsonValue>) -> Result<JsonValue> {
+        let (status, v) = self.request(method, path, body)?;
+        if !(200..300).contains(&status) {
+            return Err(ApiError::from_wire(status, &v).into());
+        }
+        Ok(v)
+    }
+
+    /// `GET /health`.
+    pub fn health(&self) -> Result<bool> {
+        let v = self.call("GET", "/health", None)?;
+        Ok(v.get("ok").and_then(|b| b.as_bool()).unwrap_or(false))
+    }
+
+    /// `GET /version`.
+    pub fn version(&self) -> Result<JsonValue> {
+        self.call("GET", "/version", None)
+    }
+
+    /// `POST /runs`.
+    pub fn submit(&self, req: &SubmitRequest) -> Result<RunSummary> {
+        parse_summary(&self.call("POST", "/runs", Some(&req.to_json()))?)
+    }
+
+    /// `GET /runs`: every run plus the per-state totals object.
+    pub fn runs(&self) -> Result<(Vec<RunSummary>, JsonValue)> {
+        let v = self.call("GET", "/runs", None)?;
+        let runs = field(&v, "runs")?
+            .as_array()
+            .context("field \"runs\" is not an array")?
+            .iter()
+            .map(parse_summary)
+            .collect::<Result<Vec<_>>>()?;
+        Ok((runs, field(&v, "totals")?.clone()))
+    }
+
+    /// `GET /runs/{id}`.
+    pub fn run(&self, id: u64) -> Result<RunSummary> {
+        parse_summary(&self.call("GET", &format!("/runs/{id}"), None)?)
+    }
+
+    /// `GET /runs/{id}/records?from=N`.
+    pub fn records(&self, id: u64, from: usize) -> Result<RecordsPage> {
+        let v = self.call("GET", &format!("/runs/{id}/records?from={from}"), None)?;
+        Ok(RecordsPage {
+            from: field_u64(&v, "from")? as usize,
+            next: field_u64(&v, "next")? as usize,
+            complete: field(&v, "complete")?
+                .as_bool()
+                .context("field \"complete\" is not a bool")?,
+            source: field_str(&v, "source")?,
+            lines: field(&v, "lines")?
+                .as_array()
+                .context("field \"lines\" is not an array")?
+                .iter()
+                .map(|l| {
+                    l.as_str()
+                        .map(str::to_string)
+                        .context("records line is not a string")
+                })
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+
+    /// `GET /runs/{id}/result` (409 until terminal).
+    pub fn result(&self, id: u64) -> Result<JsonValue> {
+        self.call("GET", &format!("/runs/{id}/result"), None)
+    }
+
+    /// `POST /runs/{id}/pause`.
+    pub fn pause(&self, id: u64) -> Result<RunSummary> {
+        parse_summary(&self.call("POST", &format!("/runs/{id}/pause"), None)?)
+    }
+
+    /// `POST /runs/{id}/resume`.
+    pub fn resume(&self, id: u64) -> Result<RunSummary> {
+        parse_summary(&self.call("POST", &format!("/runs/{id}/resume"), None)?)
+    }
+
+    /// `POST /runs/{id}/cancel`.
+    pub fn cancel(&self, id: u64) -> Result<RunSummary> {
+        parse_summary(&self.call("POST", &format!("/runs/{id}/cancel"), None)?)
+    }
+
+    /// `POST /runs/{id}/checkpoint`: returns the path the v4 snapshot
+    /// will be written to at the run's next outer boundary.
+    pub fn checkpoint(&self, id: u64) -> Result<String> {
+        let v = self.call("POST", &format!("/runs/{id}/checkpoint"), None)?;
+        field_str(&v, "path")
+    }
+
+    /// Poll `GET /runs/{id}` until the run is terminal (10 ms cadence),
+    /// returning the final summary.
+    pub fn wait_terminal(&self, id: u64, timeout: Duration) -> Result<RunSummary> {
+        let start = Instant::now();
+        loop {
+            let summary = self.run(id)?;
+            if summary.state.is_terminal() {
+                return Ok(summary);
+            }
+            if start.elapsed() > timeout {
+                bail!(
+                    "run {id} still {} after {timeout:?}",
+                    summary.state.as_str()
+                );
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+fn parse_response(raw: &[u8]) -> Result<(u16, JsonValue)> {
+    let head_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .context("response has no header terminator")?;
+    let head = std::str::from_utf8(&raw[..head_end]).context("response head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let mut parts = status_line.splitn(3, ' ');
+    let proto = parts.next().unwrap_or("");
+    if !proto.starts_with("HTTP/1.") {
+        bail!("malformed status line {status_line:?}");
+    }
+    let status: u16 = parts
+        .next()
+        .unwrap_or("")
+        .parse()
+        .with_context(|| format!("malformed status line {status_line:?}"))?;
+    let mut content_length = None;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = Some(
+                    value
+                        .trim()
+                        .parse::<usize>()
+                        .with_context(|| format!("bad content-length {value:?}"))?,
+                );
+            }
+        }
+    }
+    let body_start = head_end + 4;
+    let body = match content_length {
+        Some(n) => {
+            if raw.len() < body_start + n {
+                bail!("response body truncated: have {}, need {n}", raw.len() - body_start);
+            }
+            &raw[body_start..body_start + n]
+        }
+        None => &raw[body_start..],
+    };
+    if body.is_empty() {
+        return Ok((status, JsonValue::Null));
+    }
+    let text = std::str::from_utf8(body).context("response body is not UTF-8")?;
+    let v = JsonValue::parse(text).with_context(|| format!("response body is not JSON: {text:?}"))?;
+    Ok((status, v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_parser_reads_the_servers_own_wire_format() {
+        let body = JsonValue::obj(vec![("ok", JsonValue::Bool(true))]);
+        let raw = super::super::server::write_response(200, &body);
+        let (status, v) = parse_response(&raw).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(v, body);
+        let err = ApiError::not_found("nope");
+        let raw = super::super::server::write_response(err.status, &err.to_json());
+        let (status, v) = parse_response(&raw).unwrap();
+        let round = ApiError::from_wire(status, &v);
+        assert_eq!((round.status, round.code.as_str()), (404, "not_found"));
+        assert_eq!(round.message, "nope");
+    }
+
+    #[test]
+    fn summary_parser_rejects_missing_fields_with_context() {
+        let v = JsonValue::obj(vec![("id", JsonValue::num(1.0))]);
+        let err = parse_summary(&v).unwrap_err();
+        assert!(format!("{err:#}").contains("state"), "got: {err:#}");
+    }
+}

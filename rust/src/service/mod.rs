@@ -1,0 +1,31 @@
+//! `adloco serve`: a long-lived daemon that accepts run submissions
+//! over a hand-rolled HTTP/1.1 API and executes them on a bounded
+//! executor pool (DESIGN.md §13).
+//!
+//! Layering, from the wire inward:
+//!
+//! - [`server`] — `std::net` listener, incremental request parser with
+//!   typed rejects, router, executor pool.
+//! - [`api`] — request/response schemas with strict
+//!   deny-unknown-fields parsing and the [`ApiError`] envelope.
+//! - [`state`] — the run [`Registry`]: FIFO queue, lifecycle state
+//!   machine, and per-run steering handles.
+//! - [`client`] — typed blocking [`Client`] used by the CLI and the
+//!   black-box test suite.
+//!
+//! The determinism contract carries over unchanged: every steering
+//! mutation (pause, checkpoint, cancel) lands at an outer-round
+//! boundary through the coordinator's `BoundaryControl` hook, so a run
+//! served over HTTP is bit-identical to the same config executed
+//! one-shot via `run_experiment` — records, eval CSV, and all RunResult
+//! fields except wall-clock.
+
+pub mod api;
+pub mod client;
+pub mod server;
+pub mod state;
+
+pub use api::{ApiError, SubmitRequest};
+pub use client::{Client, RecordsPage, RunSummary};
+pub use server::{HttpLimits, Server};
+pub use state::{transition_allowed, Registry, RunState};

@@ -1,0 +1,655 @@
+//! Hand-rolled HTTP/1.1 front end over `std::net` (DESIGN.md §13).
+//!
+//! The wire layer is deliberately tiny: one request per connection
+//! (`Connection: close`), bodies bounded by `service.max_body_bytes`,
+//! heads by `service.max_header_bytes`, and every malformed input maps
+//! to a typed [`ApiError`] — the parser ([`parse_request`]) is a pure
+//! function over a byte prefix so the property suite can truncate and
+//! mutate it at every boundary without sockets.
+//!
+//! Execution happens on a fixed pool of `service.max_concurrent_runs`
+//! executor threads draining the [`Registry`] FIFO; the accept loop
+//! only parses, routes, and answers, so steering endpoints stay
+//! responsive while runs execute.
+
+use super::api::{self, ApiError, SubmitRequest};
+use super::state::{Registry, RunSnapshot};
+use crate::config::ServiceConfig;
+use crate::coordinator::Coordinator;
+use crate::util::JsonValue;
+use anyhow::Result;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Parser bounds, lifted from [`ServiceConfig`] so the pure parser can
+/// be exercised without a full config.
+#[derive(Clone, Copy, Debug)]
+pub struct HttpLimits {
+    /// Maximum bytes for the request line + headers (431 beyond).
+    pub max_header_bytes: usize,
+    /// Maximum bytes for the body (413 beyond).
+    pub max_body_bytes: usize,
+}
+
+/// A parsed request: method, split target, lowercased header names, and
+/// the exact body bytes.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Uppercase method token (e.g. `GET`).
+    pub method: String,
+    /// Target path, query stripped.
+    pub path: String,
+    /// Raw query string after `?`, if any.
+    pub query: Option<String>,
+    /// Headers in arrival order; names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    /// Body bytes (exactly `Content-Length` of them).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of a (lowercase) header name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+fn head_limit(limits: &HttpLimits) -> usize {
+    // the terminator itself is allowed past the cap
+    limits.max_header_bytes + 4
+}
+
+/// Incremental HTTP/1.1 request parser over a received byte prefix.
+///
+/// Returns `Ok(None)` while the prefix is incomplete (more bytes may
+/// still arrive), `Ok(Some((req, consumed)))` once a full request is
+/// present, and a typed [`ApiError`] the moment the prefix is already
+/// unsalvageable (bad request line, oversized head or body, unsupported
+/// transfer encoding). A strict prefix of a valid request NEVER parses
+/// as complete — the property suite enumerates this.
+pub fn parse_request(
+    buf: &[u8],
+    limits: &HttpLimits,
+) -> Result<Option<(Request, usize)>, ApiError> {
+    let head_end = buf.windows(4).position(|w| w == b"\r\n\r\n");
+    let Some(head_end) = head_end else {
+        if buf.len() > head_limit(limits) {
+            return Err(ApiError::header_too_large(limits.max_header_bytes));
+        }
+        return Ok(None);
+    };
+    if head_end > limits.max_header_bytes {
+        return Err(ApiError::header_too_large(limits.max_header_bytes));
+    }
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| ApiError::bad_request("request head is not valid UTF-8"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let parts: Vec<&str> = request_line.split(' ').collect();
+    if parts.len() != 3 {
+        return Err(ApiError::bad_request(format!(
+            "malformed request line {request_line:?}"
+        )));
+    }
+    let (method, target, version) = (parts[0], parts[1], parts[2]);
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(ApiError::bad_request(format!("malformed method token {method:?}")));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(ApiError::bad_request(format!(
+            "unsupported protocol version {version:?}"
+        )));
+    }
+    if !target.starts_with('/') {
+        return Err(ApiError::bad_request(format!("request target {target:?} must be absolute")));
+    }
+    let mut headers = Vec::new();
+    let mut content_length: Option<usize> = None;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(ApiError::bad_request(format!("malformed header line {line:?}")));
+        };
+        if name.is_empty() || name.contains(' ') {
+            return Err(ApiError::bad_request(format!("malformed header name {name:?}")));
+        }
+        let name = name.to_ascii_lowercase();
+        let value = value.trim().to_string();
+        if name == "transfer-encoding" {
+            return Err(ApiError::unsupported(
+                "transfer-encoding is not supported; send Content-Length",
+            ));
+        }
+        if name == "content-length" {
+            let n: usize = value
+                .parse()
+                .map_err(|_| ApiError::bad_request(format!("bad content-length {value:?}")))?;
+            if let Some(prev) = content_length {
+                if prev != n {
+                    return Err(ApiError::bad_request("conflicting content-length headers"));
+                }
+            }
+            content_length = Some(n);
+        }
+        headers.push((name, value));
+    }
+    let body_len = content_length.unwrap_or(0);
+    if body_len > limits.max_body_bytes {
+        return Err(ApiError::payload_too_large(limits.max_body_bytes));
+    }
+    let body_start = head_end + 4;
+    if buf.len() < body_start + body_len {
+        return Ok(None);
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+    Ok(Some((
+        Request {
+            method: method.to_string(),
+            path,
+            query,
+            headers,
+            body: buf[body_start..body_start + body_len].to_vec(),
+        },
+        body_start + body_len,
+    )))
+}
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        _ => "Unknown",
+    }
+}
+
+/// Serialize one JSON response with the fixed header set the in-crate
+/// client expects (`Connection: close`, exact `Content-Length`).
+pub fn write_response(status: u16, body: &JsonValue) -> Vec<u8> {
+    let payload = body.to_string();
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        reason_phrase(status),
+        payload.len()
+    );
+    let mut out = head.into_bytes();
+    out.extend_from_slice(payload.as_bytes());
+    out
+}
+
+fn run_summary_json(s: &RunSnapshot) -> JsonValue {
+    let mut fields = vec![
+        ("id", JsonValue::num(s.id as f64)),
+        ("name", JsonValue::str(s.name.clone())),
+        ("state", JsonValue::str(s.state.as_str())),
+        ("config_digest", JsonValue::str(format!("{:016x}", s.config_digest))),
+        ("outer_steps_done", JsonValue::num(s.progress.outer_steps_done as f64)),
+        ("outer_steps_total", JsonValue::num(s.progress.outer_steps_total as f64)),
+        ("live_instances", JsonValue::num(s.progress.live_instances as f64)),
+        ("virtual_time_s", JsonValue::num(s.progress.virtual_time_s)),
+        ("total_samples", JsonValue::num(s.progress.total_samples as f64)),
+        ("cancel_requested", JsonValue::Bool(s.cancel_requested)),
+        (
+            "checkpoints",
+            JsonValue::Array(
+                s.checkpoints
+                    .iter()
+                    .map(|(step, path)| {
+                        JsonValue::obj(vec![
+                            ("outer_step", JsonValue::num(*step as f64)),
+                            ("path", JsonValue::str(path.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    if let Some(order) = s.started_order {
+        fields.push(("started_order", JsonValue::num(order as f64)));
+    }
+    if let Some(err) = &s.error {
+        fields.push(("error", JsonValue::str(err.clone())));
+    }
+    JsonValue::obj(fields)
+}
+
+fn no_query(req: &Request) -> Result<(), ApiError> {
+    match &req.query {
+        Some(q) => Err(ApiError::bad_query(format!("unexpected query string {q:?}"))),
+        None => Ok(()),
+    }
+}
+
+fn no_body(req: &Request) -> Result<(), ApiError> {
+    if req.body.is_empty() {
+        Ok(())
+    } else {
+        Err(ApiError::invalid_json("this endpoint takes no request body"))
+    }
+}
+
+fn parse_id(seg: &str) -> Result<u64, ApiError> {
+    if seg.is_empty() || !seg.bytes().all(|b| b.is_ascii_digit()) {
+        return Err(ApiError::not_found(format!("unknown run id {seg:?}")));
+    }
+    seg.parse().map_err(|_| ApiError::not_found(format!("unknown run id {seg:?}")))
+}
+
+fn parse_from_query(req: &Request) -> Result<usize, ApiError> {
+    let Some(q) = &req.query else {
+        return Ok(0);
+    };
+    let mut from = 0usize;
+    for pair in q.split('&').filter(|p| !p.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        if k != "from" {
+            return Err(ApiError::bad_query(format!("unknown query key {k:?}")));
+        }
+        from = v
+            .parse()
+            .map_err(|_| ApiError::bad_query(format!("bad from value {v:?}")))?;
+    }
+    Ok(from)
+}
+
+fn snapshot_or_404(reg: &Registry, id: u64) -> Result<RunSnapshot, ApiError> {
+    reg.snapshot(id).ok_or_else(|| ApiError::not_found(format!("unknown run id {id}")))
+}
+
+fn body_json(req: &Request) -> Result<JsonValue, ApiError> {
+    let text = std::str::from_utf8(&req.body)
+        .map_err(|_| ApiError::invalid_json("body is not valid UTF-8"))?;
+    JsonValue::parse(text).map_err(|e| ApiError::invalid_json(format!("{e}")))
+}
+
+fn records_json(reg: &Registry, id: u64, from: usize) -> Result<(u16, JsonValue), ApiError> {
+    let snap = snapshot_or_404(reg, id)?;
+    // live reads page the streamer's part file; once terminal the
+    // assembled canonical JSONL is the source. Cursors are per-source:
+    // when `source` flips to "final", re-fetch from 0.
+    let (source, path, complete) = if snap.state.is_terminal() {
+        ("final", snap.records_path.clone(), true)
+    } else {
+        ("live", snap.part_path.clone(), false)
+    };
+    let (lines, next) = crate::metrics::read_jsonl_lines_from(&path, from)
+        .map_err(|e| ApiError::internal(format!("records read failed: {e:#}")))?;
+    Ok((
+        200,
+        JsonValue::obj(vec![
+            ("id", JsonValue::num(id as f64)),
+            ("from", JsonValue::num(from as f64)),
+            ("next", JsonValue::num(next as f64)),
+            ("complete", JsonValue::Bool(complete)),
+            ("source", JsonValue::str(source)),
+            (
+                "lines",
+                JsonValue::Array(lines.into_iter().map(JsonValue::str).collect()),
+            ),
+        ]),
+    ))
+}
+
+/// Route one parsed request against the registry. Pure with respect to
+/// the socket: returns `(status, body)` and never panics on untrusted
+/// input.
+pub fn route(req: &Request, reg: &Registry) -> (u16, JsonValue) {
+    match route_inner(req, reg) {
+        Ok((status, body)) => (status, body),
+        Err(e) => (e.status, e.to_json()),
+    }
+}
+
+fn route_inner(req: &Request, reg: &Registry) -> Result<(u16, JsonValue), ApiError> {
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    let method = req.method.as_str();
+    match segs.as_slice() {
+        ["health"] => {
+            require_method(req, "GET")?;
+            no_query(req)?;
+            Ok((200, JsonValue::obj(vec![("ok", JsonValue::Bool(true))])))
+        }
+        ["version"] => {
+            require_method(req, "GET")?;
+            no_query(req)?;
+            Ok((200, api::version_json()))
+        }
+        ["runs"] => match method {
+            "GET" => {
+                no_query(req)?;
+                let runs = reg.snapshots().iter().map(run_summary_json).collect();
+                let totals = reg
+                    .totals()
+                    .into_iter()
+                    .map(|(k, n)| (k, JsonValue::num(n as f64)))
+                    .collect();
+                Ok((
+                    200,
+                    JsonValue::obj(vec![
+                        ("runs", JsonValue::Array(runs)),
+                        ("totals", JsonValue::obj(totals)),
+                    ]),
+                ))
+            }
+            "POST" => {
+                no_query(req)?;
+                let v = body_json(req)?;
+                let submit = SubmitRequest::parse(&v)?;
+                let cfg = submit.resolve()?;
+                let snap = reg.submit(cfg);
+                Ok((201, run_summary_json(&snap)))
+            }
+            _ => Err(ApiError::method_not_allowed(method, &req.path)),
+        },
+        ["runs", id] => {
+            require_method(req, "GET")?;
+            no_query(req)?;
+            let snap = snapshot_or_404(reg, parse_id(id)?)?;
+            Ok((200, run_summary_json(&snap)))
+        }
+        ["runs", id, "records"] => {
+            require_method(req, "GET")?;
+            let id = parse_id(id)?;
+            let from = parse_from_query(req)?;
+            records_json(reg, id, from)
+        }
+        ["runs", id, "result"] => {
+            require_method(req, "GET")?;
+            no_query(req)?;
+            let snap = snapshot_or_404(reg, parse_id(id)?)?;
+            if !snap.state.is_terminal() {
+                return Err(ApiError::invalid_state(format!(
+                    "run {} is {}; the result exists only once the run is terminal",
+                    snap.id,
+                    snap.state.as_str()
+                )));
+            }
+            let mut fields = vec![
+                ("id", JsonValue::num(snap.id as f64)),
+                ("state", JsonValue::str(snap.state.as_str())),
+            ];
+            if let Some(result) = snap.result {
+                fields.push(("result", result));
+            }
+            if let Some(err) = snap.error {
+                fields.push(("error", JsonValue::str(err)));
+            }
+            Ok((200, JsonValue::obj(fields)))
+        }
+        ["runs", id, action] if matches!(*action, "pause" | "resume" | "cancel") => {
+            require_method(req, "POST")?;
+            no_query(req)?;
+            no_body(req)?;
+            let id = parse_id(id)?;
+            let snap = match *action {
+                "pause" => reg.request_pause(id)?,
+                "resume" => reg.request_resume(id)?,
+                _ => reg.request_cancel(id)?,
+            };
+            Ok((200, run_summary_json(&snap)))
+        }
+        ["runs", id, "checkpoint"] => {
+            require_method(req, "POST")?;
+            no_query(req)?;
+            no_body(req)?;
+            let (snap, path) = reg.request_checkpoint(parse_id(id)?)?;
+            Ok((
+                202,
+                JsonValue::obj(vec![
+                    ("id", JsonValue::num(snap.id as f64)),
+                    ("state", JsonValue::str(snap.state.as_str())),
+                    ("path", JsonValue::str(path)),
+                ]),
+            ))
+        }
+        _ => Err(ApiError::not_found(format!("no such endpoint {}", req.path))),
+    }
+}
+
+fn require_method(req: &Request, expect: &str) -> Result<(), ApiError> {
+    if req.method == expect {
+        Ok(())
+    } else {
+        Err(ApiError::method_not_allowed(&req.method, &req.path))
+    }
+}
+
+fn execute(job: &super::state::Job) -> Result<JsonValue, String> {
+    let run = || -> Result<JsonValue> {
+        let engine = crate::engine::build_engine(&job.cfg)?;
+        let mut coord = Coordinator::new(job.cfg.clone(), engine)?;
+        coord.set_boundary_control(Arc::clone(&job.control));
+        coord.enable_record_streaming(&job.records_path)?;
+        let result = coord.run()?;
+        coord.finish_record_streaming()?;
+        coord.recorder.write_eval_csv(&job.csv_path)?;
+        Ok(api::run_result_json(&result))
+    };
+    run().map_err(|e| format!("{e:#}"))
+}
+
+fn executor_loop(reg: Arc<Registry>) {
+    while let Some(job) = reg.claim_next() {
+        let outcome = execute(&job);
+        let cancelled = job.control.cancelled();
+        reg.finish(job.id, outcome, cancelled);
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, reg: &Registry, limits: HttpLimits) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let hard_cap = head_limit(&limits) + limits.max_body_bytes + 1;
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let response = loop {
+        match parse_request(&buf, &limits) {
+            Ok(Some((req, _consumed))) => {
+                let (status, body) = route(&req, reg);
+                break write_response(status, &body);
+            }
+            Err(e) => break write_response(e.status, &e.to_json()),
+            Ok(None) => {}
+        }
+        if buf.len() >= hard_cap {
+            let e = ApiError::payload_too_large(limits.max_body_bytes);
+            break write_response(e.status, &e.to_json());
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return; // idle probe (health-check connect), nothing to answer
+                }
+                let e = ApiError::bad_request("connection closed mid-request");
+                break write_response(e.status, &e.to_json());
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) => {
+                let e = ApiError::bad_request("read timed out mid-request");
+                break write_response(e.status, &e.to_json());
+            }
+        }
+    };
+    let _ = stream.write_all(&response);
+    let _ = stream.flush();
+}
+
+fn bind_with_retry(addr: &str, port: u16, attempts: usize) -> Result<TcpListener> {
+    let mut last = None;
+    for i in 0..attempts.max(1) {
+        match TcpListener::bind((addr, port)) {
+            Ok(l) => return Ok(l),
+            Err(e) if e.kind() == std::io::ErrorKind::AddrInUse && i + 1 < attempts => {
+                // loopback port collisions are transient (CI runs suites
+                // in parallel); back off briefly and retry
+                std::thread::sleep(Duration::from_millis(25));
+                last = Some(e);
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Err(last.expect("bind attempted at least once").into())
+}
+
+/// The long-lived daemon: a bound listener, its accept thread, and the
+/// executor pool. Dropping (or calling [`Server::shutdown`]) cancels
+/// every live run at its next boundary and joins all threads.
+pub struct Server {
+    addr: SocketAddr,
+    registry: Arc<Registry>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `service.addr:service.port` (0 picks an ephemeral port) and
+    /// spawn the accept thread plus `service.max_concurrent_runs`
+    /// executors. Run artifacts land under `root_dir/<id>/`.
+    pub fn start(service: ServiceConfig, root_dir: &str) -> Result<Server> {
+        let listener = bind_with_retry(&service.addr, service.port, 10)?;
+        let addr = listener.local_addr()?;
+        let registry = Arc::new(Registry::new(root_dir));
+        let stop = Arc::new(AtomicBool::new(false));
+        let limits = HttpLimits {
+            max_header_bytes: service.max_header_bytes,
+            max_body_bytes: service.max_body_bytes,
+        };
+        let workers: Vec<JoinHandle<()>> = (0..service.max_concurrent_runs)
+            .map(|_| {
+                let reg = Arc::clone(&registry);
+                std::thread::spawn(move || executor_loop(reg))
+            })
+            .collect();
+        let accept = {
+            let reg = Arc::clone(&registry);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let reg = Arc::clone(&reg);
+                    std::thread::spawn(move || handle_connection(stream, &reg, limits));
+                }
+            })
+        };
+        Ok(Server {
+            addr,
+            registry,
+            stop,
+            accept: Some(accept),
+            workers,
+        })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared registry (in-process steering and tests).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Stop accepting, cancel live runs at their next boundary, drain
+    /// the executor pool, and join every thread.
+    pub fn shutdown(mut self) {
+        self.stop_threads();
+    }
+
+    fn stop_threads(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.registry.shutdown();
+        // unblock the accept loop with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LIMITS: HttpLimits = HttpLimits { max_header_bytes: 16 * 1024, max_body_bytes: 1 << 20 };
+
+    #[test]
+    fn parser_handles_split_arrival_and_rejects_malformed_heads() {
+        let raw = b"POST /runs HTTP/1.1\r\ncontent-length: 2\r\n\r\n{}";
+        for cut in 0..raw.len() {
+            assert!(
+                parse_request(&raw[..cut], &LIMITS).unwrap().is_none(),
+                "strict prefix of length {cut} must be incomplete"
+            );
+        }
+        let (req, consumed) = parse_request(raw, &LIMITS).unwrap().unwrap();
+        assert_eq!(consumed, raw.len());
+        assert_eq!((req.method.as_str(), req.path.as_str()), ("POST", "/runs"));
+        assert_eq!(req.body, b"{}");
+        assert_eq!(req.header("content-length"), Some("2"));
+
+        let bad = parse_request(b"GET /health HTTP/2\r\n\r\n", &LIMITS).unwrap_err();
+        assert_eq!((bad.status, bad.code.as_str()), (400, "bad_request"));
+        let te = parse_request(
+            b"POST /runs HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n",
+            &LIMITS,
+        )
+        .unwrap_err();
+        assert_eq!((te.status, te.code.as_str()), (501, "unsupported"));
+        let tiny = HttpLimits { max_header_bytes: 8, max_body_bytes: 4 };
+        let big_head = parse_request(b"GET /health HTTP/1.1\r\n\r\n", &tiny).unwrap_err();
+        assert_eq!(big_head.status, 431);
+        let big_body =
+            parse_request(b"POST /runs HTTP/1.1\r\ncontent-length: 5\r\n\r\n", &tiny);
+        // head alone exceeds the tiny cap, so 431 wins; retry with a
+        // roomier head cap to see the 413
+        assert_eq!(big_body.unwrap_err().status, 431);
+        let roomy = HttpLimits { max_header_bytes: 256, max_body_bytes: 4 };
+        let big_body =
+            parse_request(b"POST /runs HTTP/1.1\r\ncontent-length: 5\r\n\r\n", &roomy).unwrap_err();
+        assert_eq!((big_body.status, big_body.code.as_str()), (413, "payload_too_large"));
+    }
+
+    #[test]
+    fn query_and_target_split_is_exact() {
+        let raw = b"GET /runs/0/records?from=12 HTTP/1.1\r\n\r\n";
+        let (req, _) = parse_request(raw, &LIMITS).unwrap().unwrap();
+        assert_eq!(req.path, "/runs/0/records");
+        assert_eq!(req.query.as_deref(), Some("from=12"));
+        assert_eq!(parse_from_query(&req).unwrap(), 12);
+        let bad = Request { query: Some("start=3".into()), ..req.clone() };
+        assert_eq!(parse_from_query(&bad).unwrap_err().code, "bad_query");
+    }
+}

@@ -1,0 +1,475 @@
+//! The run registry (DESIGN.md §13): submission queue, lifecycle state
+//! machine, and the executor pool's claim source.
+//!
+//! The state machine is Submitted → Running ⇄ Paused → Done / Failed /
+//! Cancelled. Its transition relation is the pure function
+//! [`transition_allowed`] so the property suite can enumerate it;
+//! terminal states accept no transitions and no steering mutations, and
+//! pause/resume/cancel/checkpoint are accepted only from Running or
+//! Paused ([`RunState::accepts_mutation`]).
+//!
+//! Executor threads block in [`Registry::claim_next`]; submissions are
+//! claimed strictly in id order and stamped with a monotonic
+//! `started_order` under the registry lock, which is what makes the
+//! queueing order deterministic (and testable) even with several
+//! executors racing.
+
+use super::api::ApiError;
+use crate::config::Config;
+use crate::coordinator::{BoundaryControl, BoundaryProgress};
+use crate::util::JsonValue;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Lifecycle of a submitted run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunState {
+    /// Accepted and queued; not yet claimed by an executor.
+    Submitted,
+    /// Executing on an executor thread.
+    Running,
+    /// Parked at an outer-round boundary (host wall-clock only;
+    /// virtual time and records are untouched).
+    Paused,
+    /// Completed the full schedule (or hit its target) and produced a
+    /// result.
+    Done,
+    /// The coordinator returned an error; see the entry's `error`.
+    Failed,
+    /// A cancel landed at an outer boundary; the result and records are
+    /// the exact prefix of the uncancelled run.
+    Cancelled,
+}
+
+impl RunState {
+    /// Every state, for matrix-enumerating property tests.
+    pub const ALL: [RunState; 6] = [
+        RunState::Submitted,
+        RunState::Running,
+        RunState::Paused,
+        RunState::Done,
+        RunState::Failed,
+        RunState::Cancelled,
+    ];
+
+    /// Canonical lowercase wire name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RunState::Submitted => "submitted",
+            RunState::Running => "running",
+            RunState::Paused => "paused",
+            RunState::Done => "done",
+            RunState::Failed => "failed",
+            RunState::Cancelled => "cancelled",
+        }
+    }
+
+    /// Parse a wire name (client side).
+    pub fn parse(s: &str) -> Option<RunState> {
+        RunState::ALL.iter().copied().find(|st| st.as_str() == s)
+    }
+
+    /// Terminal states accept no further transitions or mutations.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, RunState::Done | RunState::Failed | RunState::Cancelled)
+    }
+
+    /// Whether a steering mutation (pause/resume/cancel/checkpoint) may
+    /// target a run in this state: only Running and Paused — a queued
+    /// run has no boundary to land the mutation on, a terminal run has
+    /// no future boundaries at all.
+    pub fn accepts_mutation(self) -> bool {
+        matches!(self, RunState::Running | RunState::Paused)
+    }
+}
+
+/// The registry's transition relation, as a pure function so the
+/// property suite can enumerate the full matrix. `Paused → Done/Failed`
+/// exist because a pause request can land after the run's final
+/// boundary already passed (the entry is marked Paused while the
+/// coordinator is past every park point); the executor then
+/// terminalizes the entry from Paused.
+pub fn transition_allowed(from: RunState, to: RunState) -> bool {
+    use RunState::*;
+    matches!(
+        (from, to),
+        (Submitted, Running)
+            | (Running, Paused | Done | Failed | Cancelled)
+            | (Paused, Running | Done | Failed | Cancelled)
+    )
+}
+
+/// An immutable wire-facing view of one run's registry row, taken under
+/// the registry lock.
+#[derive(Clone, Debug)]
+pub struct RunSnapshot {
+    /// Monotonic submission id (also the FIFO queue key).
+    pub id: u64,
+    /// Run name (the config's, possibly overridden at submit).
+    pub name: String,
+    /// Lifecycle state.
+    pub state: RunState,
+    /// Structural digest of the resolved config (DESIGN.md §10).
+    pub config_digest: u64,
+    /// Claim-order stamp: the nth run to start executing.
+    pub started_order: Option<u64>,
+    /// Error detail once Failed.
+    pub error: Option<String>,
+    /// Final result JSON once terminal (Done and Cancelled carry one).
+    pub result: Option<JsonValue>,
+    /// Latest boundary counters published by the coordinator.
+    pub progress: BoundaryProgress,
+    /// True once a cancel has been requested (it lands at the next
+    /// boundary; the state flips to Cancelled when it does).
+    pub cancel_requested: bool,
+    /// Service checkpoints written so far, as `(outer_step, path)`.
+    pub checkpoints: Vec<(u64, String)>,
+    /// Canonical final records path (assembled when the run finishes).
+    pub records_path: String,
+    /// Live step-segment path while the run is executing.
+    pub part_path: String,
+}
+
+/// A claimed execution unit handed to an executor thread.
+pub struct Job {
+    /// Registry id.
+    pub id: u64,
+    /// The resolved config (validated at submit).
+    pub cfg: Config,
+    /// Steering handle shared with the endpoints.
+    pub control: Arc<BoundaryControl>,
+    /// Canonical final records path (the streaming target).
+    pub records_path: String,
+    /// Eval-series CSV path written next to the records.
+    pub csv_path: String,
+}
+
+struct RunEntry {
+    id: u64,
+    name: String,
+    state: RunState,
+    config_digest: u64,
+    started_order: Option<u64>,
+    error: Option<String>,
+    result: Option<JsonValue>,
+    cfg: Config,
+    control: Arc<BoundaryControl>,
+    dir: String,
+    records_path: String,
+    part_path: String,
+    ckpt_seq: u64,
+}
+
+struct RegistryInner {
+    runs: Vec<RunEntry>,
+    next_started: u64,
+    shutdown: bool,
+}
+
+/// The run registry: every submission's row, guarded by one lock, plus
+/// the condvar executor threads block on.
+pub struct Registry {
+    root: String,
+    inner: Mutex<RegistryInner>,
+    cv: Condvar,
+}
+
+impl Registry {
+    /// Empty registry writing run directories under `root`.
+    pub fn new(root: &str) -> Registry {
+        Registry {
+            root: root.to_string(),
+            inner: Mutex::new(RegistryInner {
+                runs: Vec::new(),
+                next_started: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, RegistryInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn entry_snapshot(e: &RunEntry) -> RunSnapshot {
+        RunSnapshot {
+            id: e.id,
+            name: e.name.clone(),
+            state: e.state,
+            config_digest: e.config_digest,
+            started_order: e.started_order,
+            error: e.error.clone(),
+            result: e.result.clone(),
+            progress: e.control.progress(),
+            cancel_requested: e.control.cancelled(),
+            checkpoints: e.control.checkpoints(),
+            records_path: e.records_path.clone(),
+            part_path: e.part_path.clone(),
+        }
+    }
+
+    fn transition(e: &mut RunEntry, to: RunState) {
+        debug_assert!(
+            transition_allowed(e.state, to),
+            "illegal run-state transition {:?} -> {:?} (run {})",
+            e.state,
+            to,
+            e.id
+        );
+        e.state = to;
+    }
+
+    /// Register a validated config; returns the new row's snapshot. The
+    /// run starts once an executor slot frees up (FIFO by id).
+    pub fn submit(&self, cfg: Config) -> RunSnapshot {
+        let control = Arc::new(BoundaryControl::new());
+        // pre-publish the schedule shape so observers see the total
+        // before the first boundary reports progress
+        control.publish(BoundaryProgress {
+            outer_steps_total: cfg.algo.outer_steps as u64,
+            ..BoundaryProgress::default()
+        });
+        let mut g = self.lock();
+        let id = g.runs.len() as u64;
+        let dir = format!("{}/{id}", self.root);
+        let records_path = format!("{dir}/{}.jsonl", cfg.name);
+        let part_path = crate::metrics::part_path_for(&records_path);
+        let entry = RunEntry {
+            id,
+            name: cfg.name.clone(),
+            state: RunState::Submitted,
+            config_digest: cfg.structural_digest(),
+            started_order: None,
+            error: None,
+            result: None,
+            cfg,
+            control,
+            dir,
+            records_path,
+            part_path,
+            ckpt_seq: 0,
+        };
+        let snap = Registry::entry_snapshot(&entry);
+        g.runs.push(entry);
+        drop(g);
+        self.cv.notify_all();
+        snap
+    }
+
+    /// Block until a queued run exists (claim it: Submitted → Running,
+    /// stamped with the next `started_order`) or the registry shuts
+    /// down (`None`). Claims are strictly in id order.
+    pub fn claim_next(&self) -> Option<Job> {
+        let mut g = self.lock();
+        loop {
+            if g.shutdown {
+                return None;
+            }
+            if let Some(i) = g.runs.iter().position(|r| r.state == RunState::Submitted) {
+                let order = g.next_started;
+                g.next_started += 1;
+                let e = &mut g.runs[i];
+                Registry::transition(e, RunState::Running);
+                e.started_order = Some(order);
+                return Some(Job {
+                    id: e.id,
+                    cfg: e.cfg.clone(),
+                    control: Arc::clone(&e.control),
+                    records_path: e.records_path.clone(),
+                    csv_path: format!("{}/{}.csv", e.dir, e.name),
+                });
+            }
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Terminalize a claimed run with its outcome. `cancelled` wins
+    /// over a clean result (a cancel that landed at a boundary still
+    /// produces the truncated run's result).
+    pub fn finish(&self, id: u64, outcome: Result<JsonValue, String>, cancelled: bool) {
+        let mut g = self.lock();
+        let Some(e) = g.runs.iter_mut().find(|r| r.id == id) else {
+            return;
+        };
+        match outcome {
+            Ok(result) => {
+                e.result = Some(result);
+                let to = if cancelled { RunState::Cancelled } else { RunState::Done };
+                Registry::transition(e, to);
+            }
+            Err(msg) => {
+                e.error = Some(msg);
+                Registry::transition(e, RunState::Failed);
+            }
+        }
+    }
+
+    /// Snapshot one run.
+    pub fn snapshot(&self, id: u64) -> Option<RunSnapshot> {
+        let g = self.lock();
+        g.runs.iter().find(|r| r.id == id).map(Registry::entry_snapshot)
+    }
+
+    /// Snapshot every run, in submission order.
+    pub fn snapshots(&self) -> Vec<RunSnapshot> {
+        let g = self.lock();
+        g.runs.iter().map(Registry::entry_snapshot).collect()
+    }
+
+    fn mutable_entry<'g>(
+        g: &'g mut MutexGuard<'_, RegistryInner>,
+        id: u64,
+    ) -> Result<&'g mut RunEntry, ApiError> {
+        g.runs
+            .iter_mut()
+            .find(|r| r.id == id)
+            .ok_or_else(|| ApiError::not_found(format!("unknown run id {id}")))
+    }
+
+    fn require_mutable(e: &RunEntry, what: &str) -> Result<(), ApiError> {
+        if !e.state.accepts_mutation() {
+            return Err(ApiError::invalid_state(format!(
+                "run {} is {}; {what} is accepted only while running or paused",
+                e.id,
+                e.state.as_str()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Park the run at its next outer boundary (idempotent while
+    /// paused). 404 on unknown id, 409 unless Running/Paused.
+    pub fn request_pause(&self, id: u64) -> Result<RunSnapshot, ApiError> {
+        let mut g = self.lock();
+        let e = Registry::mutable_entry(&mut g, id)?;
+        Registry::require_mutable(e, "pause")?;
+        if e.state == RunState::Running {
+            Registry::transition(e, RunState::Paused);
+        }
+        e.control.set_paused(true);
+        Ok(Registry::entry_snapshot(e))
+    }
+
+    /// Release a paused run (idempotent while running). 404 on unknown
+    /// id, 409 unless Running/Paused.
+    pub fn request_resume(&self, id: u64) -> Result<RunSnapshot, ApiError> {
+        let mut g = self.lock();
+        let e = Registry::mutable_entry(&mut g, id)?;
+        Registry::require_mutable(e, "resume")?;
+        if e.state == RunState::Paused {
+            Registry::transition(e, RunState::Running);
+        }
+        e.control.set_paused(false);
+        Ok(Registry::entry_snapshot(e))
+    }
+
+    /// Request a stop at the run's next outer boundary. The state flips
+    /// to Cancelled when the executor observes the honoured cancel. 404
+    /// on unknown id, 409 unless Running/Paused.
+    pub fn request_cancel(&self, id: u64) -> Result<RunSnapshot, ApiError> {
+        let mut g = self.lock();
+        let e = Registry::mutable_entry(&mut g, id)?;
+        Registry::require_mutable(e, "cancel")?;
+        e.control.request_cancel();
+        Ok(Registry::entry_snapshot(e))
+    }
+
+    /// Request a v4 complete snapshot at the run's next outer boundary;
+    /// returns the path it will be written to. 404 on unknown id, 409
+    /// unless Running/Paused.
+    pub fn request_checkpoint(&self, id: u64) -> Result<(RunSnapshot, String), ApiError> {
+        let mut g = self.lock();
+        let e = Registry::mutable_entry(&mut g, id)?;
+        Registry::require_mutable(e, "checkpoint")?;
+        let path = format!("{}/ckpt_{:03}.adlc", e.dir, e.ckpt_seq);
+        e.ckpt_seq += 1;
+        e.control.request_checkpoint(&path);
+        Ok((Registry::entry_snapshot(e), path))
+    }
+
+    /// Per-state counts plus the grand total (`GET /runs` totals; the
+    /// concurrency suite asserts conservation).
+    pub fn totals(&self) -> Vec<(&'static str, usize)> {
+        let g = self.lock();
+        let mut out: Vec<(&'static str, usize)> = RunState::ALL
+            .iter()
+            .map(|s| (s.as_str(), g.runs.iter().filter(|r| r.state == *s).count()))
+            .collect();
+        out.push(("total", g.runs.len()));
+        out
+    }
+
+    /// Stop claiming (executors drain and exit) and cancel every
+    /// non-terminal run at its next boundary.
+    pub fn shutdown(&self) {
+        let mut g = self.lock();
+        g.shutdown = true;
+        for e in g.runs.iter() {
+            if !e.state.is_terminal() {
+                e.control.request_cancel();
+                e.control.set_paused(false);
+            }
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn registry_submit_claim_finish_walks_the_state_machine() {
+        let dir = std::env::temp_dir().join(format!("adloco_reg_{}", std::process::id()));
+        let reg = Registry::new(dir.to_str().unwrap());
+        let a = reg.submit(presets::quick());
+        let b = reg.submit(presets::quick());
+        assert_eq!((a.id, b.id), (0, 1));
+        assert_eq!(a.state, RunState::Submitted);
+        assert_eq!(a.progress.outer_steps_total, presets::quick().algo.outer_steps as u64);
+        // mutations are rejected before the run starts
+        let err = reg.request_cancel(0).unwrap_err();
+        assert_eq!((err.status, err.code.as_str()), (409, "invalid_state"));
+        assert_eq!(reg.request_pause(99).unwrap_err().status, 404);
+        // claims are FIFO and stamped in order
+        let j0 = reg.claim_next().unwrap();
+        let j1 = reg.claim_next().unwrap();
+        assert_eq!((j0.id, j1.id), (0, 1));
+        assert_eq!(reg.snapshot(0).unwrap().started_order, Some(0));
+        assert_eq!(reg.snapshot(1).unwrap().started_order, Some(1));
+        // pause/resume flip the state; cancel leaves it for the executor
+        assert_eq!(reg.request_pause(0).unwrap().state, RunState::Paused);
+        assert_eq!(reg.request_resume(0).unwrap().state, RunState::Running);
+        let snap = reg.request_cancel(0).unwrap();
+        assert!(snap.cancel_requested);
+        assert_eq!(snap.state, RunState::Running);
+        reg.finish(0, Ok(JsonValue::Null), true);
+        assert_eq!(reg.snapshot(0).unwrap().state, RunState::Cancelled);
+        reg.finish(1, Err("boom".into()), false);
+        let s1 = reg.snapshot(1).unwrap();
+        assert_eq!(s1.state, RunState::Failed);
+        assert_eq!(s1.error.as_deref(), Some("boom"));
+        // terminal rows reject every mutation
+        for id in [0u64, 1] {
+            for res in [
+                reg.request_pause(id),
+                reg.request_resume(id),
+                reg.request_cancel(id),
+                reg.request_checkpoint(id).map(|(s, _)| s),
+            ] {
+                assert_eq!(res.unwrap_err().code, "invalid_state");
+            }
+        }
+        let totals = reg.totals();
+        let total = totals.iter().find(|(k, _)| *k == "total").unwrap().1;
+        let by_state: usize =
+            totals.iter().filter(|(k, _)| *k != "total").map(|(_, n)| n).sum();
+        assert_eq!(total, 2);
+        assert_eq!(by_state, total);
+        // shutdown unblocks claimers
+        reg.shutdown();
+        assert!(reg.claim_next().is_none());
+    }
+}

@@ -8,6 +8,8 @@ use adloco::config::{presets, ElasticMode};
 use adloco::engine::StepStats;
 use adloco::instances::{plan_spawns, NodeLoad, SpawnBudget};
 use adloco::merge::{check_merge_with_policy, do_merge, MergePolicy};
+use adloco::service::server::parse_request;
+use adloco::service::{transition_allowed, HttpLimits, RunState};
 use adloco::simulator::VirtualClock;
 use adloco::util::{JsonValue, Rng};
 
@@ -1323,5 +1325,177 @@ fn prop_delta_and_chunk_mean_match_serial_loops() {
         }
         let s1_terms: Vec<f64> = means.iter().map(|g| g * g).collect();
         assert_bits_eq(s1, ref_chunked_sum(&s1_terms), &format!("case {case}: s1 n={n}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// service properties: HTTP parser totality and the run-state machine
+// ---------------------------------------------------------------------------
+
+/// A random well-formed HTTP/1.1 request (method, path, optional query,
+/// a few headers, a content-length body) plus its serialized bytes.
+fn random_request(rng: &mut Rng) -> Vec<u8> {
+    let method = ["GET", "POST", "PUT", "DELETE"][rng.below(4) as usize];
+    let depth = 1 + rng.below(3) as usize;
+    let mut path = String::new();
+    for _ in 0..depth {
+        path.push('/');
+        for _ in 0..(1 + rng.below(8)) {
+            path.push((b'a' + rng.below(26) as u8) as char);
+        }
+    }
+    if rng.below(3) == 0 {
+        path.push_str(&format!("?from={}", rng.below(1000)));
+    }
+    let body_len = rng.below(40) as usize;
+    let body: Vec<u8> = (0..body_len).map(|_| b'0' + rng.below(10) as u8).collect();
+    let mut raw = format!("{method} {path} HTTP/1.1\r\n").into_bytes();
+    for h in 0..rng.below(4) {
+        raw.extend_from_slice(format!("x-extra-{h}: v{h}\r\n").as_bytes());
+    }
+    raw.extend_from_slice(format!("content-length: {body_len}\r\n\r\n").as_bytes());
+    raw.extend_from_slice(&body);
+    raw
+}
+
+const PROP_LIMITS: HttpLimits = HttpLimits { max_header_bytes: 16 * 1024, max_body_bytes: 1 << 20 };
+
+#[test]
+fn prop_http_parser_never_completes_or_panics_on_a_strict_prefix() {
+    let mut rng = Rng::new(13_000);
+    for case in 0..CASES {
+        let raw = random_request(&mut rng);
+        // every strict prefix is incomplete — never Ok(Some), never Err,
+        // never a panic (truncation at EVERY byte boundary)
+        for cut in 0..raw.len() {
+            let got = parse_request(&raw[..cut], &PROP_LIMITS);
+            assert!(
+                matches!(got, Ok(None)),
+                "case {case}: prefix len {cut}/{} parsed to {got:?}",
+                raw.len()
+            );
+        }
+        // the full buffer parses and consumes exactly itself, with or
+        // without trailing bytes already sitting in the receive buffer
+        let (req, consumed) = parse_request(&raw, &PROP_LIMITS).unwrap().unwrap();
+        assert_eq!(consumed, raw.len(), "case {case}: consumed length");
+        assert!(req.path.starts_with('/'), "case {case}: path {:?}", req.path);
+        let mut with_tail = raw.clone();
+        with_tail.extend_from_slice(b"GARBAGE");
+        let (_, consumed2) = parse_request(&with_tail, &PROP_LIMITS).unwrap().unwrap();
+        assert_eq!(consumed2, raw.len(), "case {case}: trailing bytes must not be consumed");
+    }
+}
+
+#[test]
+fn prop_http_parser_rejects_every_mutation_class_with_its_typed_code() {
+    let mut rng = Rng::new(13_100);
+    for case in 0..CASES {
+        let raw = random_request(&mut rng);
+        let text = String::from_utf8(raw.clone()).unwrap();
+        let class = rng.below(6);
+        let (mutated, want_status, want_code): (Vec<u8>, u16, &str) = match class {
+            // protocol version the server does not speak
+            0 => (text.replacen("HTTP/1.1", "HTTP/9.9", 1).into_bytes(), 400, "bad_request"),
+            // header line with its colon knocked out
+            1 => (text.replacen("content-length:", "content-length", 1).into_bytes(),
+                400, "bad_request"),
+            // unparsable content-length value
+            2 => {
+                let at = text.find("content-length:").unwrap();
+                let eol = at + text[at..].find("\r\n").unwrap();
+                let mut s = text.clone();
+                s.replace_range(at..eol, "content-length: zzz");
+                (s.into_bytes(), 400, "bad_request")
+            }
+            // chunked transfer is typed-rejected, not half-implemented
+            3 => (
+                text.replacen("content-length:", "transfer-encoding: chunked\r\ncontent-length:", 1)
+                    .into_bytes(),
+                501,
+                "unsupported",
+            ),
+            // declared body beyond the byte budget
+            4 => {
+                let at = text.find("content-length:").unwrap();
+                let eol = at + text[at..].find("\r\n").unwrap();
+                let mut s = text.clone();
+                s.replace_range(at..eol, "content-length: 9999999");
+                (s.into_bytes(), 413, "payload_too_large")
+            }
+            // head larger than the configured cap (tiny-limit parse below)
+            _ => (text.into_bytes(), 431, "header_too_large"),
+        };
+        let limits = if class == 5 {
+            HttpLimits { max_header_bytes: 4, max_body_bytes: 1 << 20 }
+        } else {
+            PROP_LIMITS
+        };
+        let err = match parse_request(&mutated, &limits) {
+            Err(e) => e,
+            other => panic!("case {case} class {class}: expected typed reject, got {other:?}"),
+        };
+        assert_eq!(
+            (err.status, err.code.as_str()),
+            (want_status, want_code),
+            "case {case} class {class}: {}",
+            err.message
+        );
+    }
+}
+
+#[test]
+fn prop_run_state_machine_has_no_exits_from_terminal_states() {
+    // exhaustive transition matrix
+    for &from in RunState::ALL.iter() {
+        for &to in RunState::ALL.iter() {
+            let allowed = transition_allowed(from, to);
+            assert!(!allowed || from != to, "self-transition {from:?} must not be allowed");
+            if from.is_terminal() {
+                assert!(!allowed, "terminal {from:?} must not reach {to:?}");
+            }
+            if from == RunState::Submitted {
+                assert_eq!(allowed, to == RunState::Running, "Submitted may only start");
+            }
+            if allowed && to == RunState::Submitted {
+                panic!("{from:?} must not re-enter the queue");
+            }
+        }
+        // mutations are accepted exactly where a future boundary exists
+        assert_eq!(
+            from.accepts_mutation(),
+            matches!(from, RunState::Running | RunState::Paused),
+            "{from:?}: accepts_mutation"
+        );
+        // wire names round-trip
+        assert_eq!(RunState::parse(from.as_str()), Some(from));
+    }
+    assert_eq!(RunState::parse("bogus"), None);
+
+    // random walks respect the matrix and always end in a terminal state
+    let mut rng = Rng::new(13_200);
+    for case in 0..CASES {
+        let mut state = RunState::Submitted;
+        let mut steps = 0;
+        while !state.is_terminal() {
+            let nexts: Vec<RunState> = RunState::ALL
+                .iter()
+                .copied()
+                .filter(|&to| transition_allowed(state, to))
+                .collect();
+            assert!(!nexts.is_empty(), "case {case}: non-terminal {state:?} is stuck");
+            // bias toward termination so the walk provably halts
+            let pick = if steps > 20 {
+                *nexts.iter().find(|s| s.is_terminal()).unwrap()
+            } else {
+                nexts[rng.below(nexts.len() as u64) as usize]
+            };
+            state = pick;
+            steps += 1;
+        }
+        // once terminal the walk is over: no transition leaves
+        for &to in RunState::ALL.iter() {
+            assert!(!transition_allowed(state, to), "case {case}: {state:?} -> {to:?}");
+        }
     }
 }

@@ -1,0 +1,498 @@
+//! Black-box suite for `adloco serve` (DESIGN.md §13): the endpoint
+//! matrix over a real loopback listener, the negative-path matrix with
+//! exact `(status, code)` pairs, boundary-steered lifecycle
+//! (pause → checkpoint → resume → cancel), deterministic queueing under
+//! a bounded executor pool, and the headline contract — a run submitted
+//! over HTTP is bit-identical (FNV digest) to the same config executed
+//! one-shot through `run_experiment`.
+
+mod common;
+
+use adloco::config::{presets, ServiceConfig};
+use adloco::coordinator::run_experiment;
+use adloco::service::api::run_result_json;
+use adloco::service::{Client, RunState, Server, SubmitRequest};
+use adloco::util::JsonValue;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn service_cfg(max_runs: usize) -> ServiceConfig {
+    ServiceConfig { max_concurrent_runs: max_runs, ..ServiceConfig::default() }
+}
+
+fn temp_root(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("adloco_service_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.to_str().unwrap().to_string()
+}
+
+fn start(tag: &str, cfg: ServiceConfig) -> (Server, Client) {
+    let server = Server::start(cfg, &temp_root(tag)).unwrap();
+    let client = Client::new(server.addr());
+    (server, client)
+}
+
+/// Send raw bytes over a fresh connection and return `(status, body)`.
+fn raw_roundtrip(server: &Server, bytes: &[u8]) -> (u16, JsonValue) {
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.write_all(bytes).unwrap();
+    stream.flush().unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap();
+    let head_end = raw.windows(4).position(|w| w == b"\r\n\r\n").unwrap();
+    let head = std::str::from_utf8(&raw[..head_end]).unwrap();
+    let status: u16 = head.split(' ').nth(1).unwrap().parse().unwrap();
+    let body = std::str::from_utf8(&raw[head_end + 4..]).unwrap();
+    (status, JsonValue::parse(body).unwrap())
+}
+
+fn error_code(v: &JsonValue) -> &str {
+    v.get("error").and_then(|e| e.get("code")).and_then(|c| c.as_str()).unwrap_or("<none>")
+}
+
+/// Drop `keys` from a JSON object (determinism comparisons exclude
+/// `wall_clock_s`; `threads` is equal by construction).
+fn without_keys(v: &JsonValue, keys: &[&str]) -> JsonValue {
+    match v {
+        JsonValue::Object(fields) => JsonValue::Object(
+            fields.iter().filter(|(k, _)| !keys.contains(&k.as_str())).cloned().collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+/// Reassemble a terminal run's canonical JSONL bytes from the records
+/// endpoint, exercising the cursor along the way.
+fn fetch_records(client: &Client, id: u64) -> Vec<u8> {
+    let page = client.records(id, 0).unwrap();
+    assert_eq!(page.source, "final", "caller must wait for a terminal run");
+    assert!(page.complete);
+    assert_eq!(page.next, page.lines.len());
+    // cursor semantics: fetching from the end yields an empty page, and
+    // a mid-stream cursor serves the exact suffix
+    let tail = client.records(id, page.next).unwrap();
+    assert!(tail.lines.is_empty() && tail.complete && tail.next == page.next);
+    let mid = page.lines.len() / 2;
+    let suffix = client.records(id, mid).unwrap();
+    assert_eq!(suffix.lines, page.lines[mid..].to_vec());
+    let mut bytes = Vec::new();
+    for l in &page.lines {
+        bytes.extend_from_slice(l.as_bytes());
+        bytes.push(b'\n');
+    }
+    bytes
+}
+
+// ---------------------------------------------------------------------------
+// endpoint matrix: happy paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn health_version_submit_and_result_round_trip() {
+    let (server, client) = start("happy", service_cfg(1));
+    assert!(client.health().unwrap());
+    let v = client.version().unwrap();
+    assert!(v.get("version").and_then(|x| x.as_str()).is_some());
+    assert_eq!(
+        v.get("checkpoint_format").and_then(|x| x.as_f64()),
+        Some(adloco::checkpoint::VERSION as f64)
+    );
+
+    let req = SubmitRequest::preset("quick");
+    let submitted = client.submit(&req).unwrap();
+    assert_eq!(submitted.id, 0);
+    assert_eq!(submitted.name, "quick");
+    assert_eq!(submitted.outer_steps_total, presets::quick().algo.outer_steps as u64);
+
+    let done = client.wait_terminal(0, Duration::from_secs(120)).unwrap();
+    assert_eq!(done.state, RunState::Done);
+    assert_eq!(done.started_order, Some(0));
+    assert_eq!(done.outer_steps_done, done.outer_steps_total);
+    assert_eq!(
+        done.config_digest,
+        format!("{:016x}", presets::quick().structural_digest())
+    );
+
+    let result = client.result(0).unwrap();
+    assert_eq!(result.get("state").and_then(|s| s.as_str()), Some("done"));
+    let payload = result.get("result").expect("done run carries a result");
+    assert!(payload.get("total_inner_steps").and_then(|x| x.as_f64()).unwrap() > 0.0);
+
+    let page = client.records(0, 0).unwrap();
+    assert_eq!(page.source, "final");
+    assert!(page.complete);
+    assert!(!page.lines.is_empty(), "a finished run serves its canonical records");
+    for line in &page.lines {
+        JsonValue::parse(line).expect("every served records line is standalone JSON");
+    }
+
+    let (runs, totals) = client.runs().unwrap();
+    assert_eq!(runs.len(), 1);
+    assert_eq!(totals.get("total").and_then(|x| x.as_f64()), Some(1.0));
+    assert_eq!(totals.get("done").and_then(|x| x.as_f64()), Some(1.0));
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// negative paths: exact (status, code) pairs, no panics, no silent 200s
+// ---------------------------------------------------------------------------
+
+#[test]
+fn negative_paths_return_exact_typed_errors() {
+    let (server, client) = start("negative", service_cfg(1));
+
+    // malformed JSON body
+    let (status, v) = raw_roundtrip(
+        &server,
+        b"POST /runs HTTP/1.1\r\ncontent-length: 5\r\n\r\n{oops",
+    );
+    assert_eq!((status, error_code(&v)), (400, "invalid_json"));
+
+    // trailing garbage after a valid JSON document
+    let (status, v) = raw_roundtrip(
+        &server,
+        b"POST /runs HTTP/1.1\r\ncontent-length: 20\r\n\r\n{\"preset\":\"quick\"} x",
+    );
+    assert_eq!((status, error_code(&v)), (400, "invalid_json"));
+
+    // unknown field, strict deny-unknown-fields discipline
+    let body = JsonValue::obj(vec![
+        ("preset", JsonValue::str("quick")),
+        ("bogus", JsonValue::num(1.0)),
+    ]);
+    let (status, v) = client.request("POST", "/runs", Some(&body)).unwrap();
+    assert_eq!((status, error_code(&v)), (400, "unknown_field"));
+    let msg = v.get("error").and_then(|e| e.get("message")).and_then(|m| m.as_str()).unwrap();
+    assert!(msg.contains("submit.bogus"), "got: {msg}");
+
+    // neither preset nor config
+    let (status, v) = client.request("POST", "/runs", Some(&JsonValue::Object(vec![]))).unwrap();
+    assert_eq!((status, error_code(&v)), (400, "missing_field"));
+
+    // unknown preset
+    let body = JsonValue::obj(vec![("preset", JsonValue::str("nope"))]);
+    let (status, v) = client.request("POST", "/runs", Some(&body)).unwrap();
+    assert_eq!((status, error_code(&v)), (400, "unknown_preset"));
+
+    // config rejected by validate(), surfaced as invalid_config
+    let body = JsonValue::obj(vec![
+        ("preset", JsonValue::str("quick")),
+        (
+            "overrides",
+            JsonValue::obj(vec![("algo.outer_steps", JsonValue::num(0.0))]),
+        ),
+    ]);
+    let (status, v) = client.request("POST", "/runs", Some(&body)).unwrap();
+    assert_eq!((status, error_code(&v)), (400, "invalid_config"));
+
+    // wrong method on known endpoints
+    let (status, v) = client.request("DELETE", "/runs", None).unwrap();
+    assert_eq!((status, error_code(&v)), (405, "method_not_allowed"));
+    let (status, v) = client.request("POST", "/health", None).unwrap();
+    assert_eq!((status, error_code(&v)), (405, "method_not_allowed"));
+
+    // unknown run ids and unknown endpoints
+    let (status, v) = client.request("GET", "/runs/99", None).unwrap();
+    assert_eq!((status, error_code(&v)), (404, "not_found"));
+    let (status, v) = client.request("GET", "/runs/abc", None).unwrap();
+    assert_eq!((status, error_code(&v)), (404, "not_found"));
+    let (status, v) = client.request("GET", "/nope", None).unwrap();
+    assert_eq!((status, error_code(&v)), (404, "not_found"));
+
+    // bad query string
+    let (status, v) = client.request("GET", "/runs/0/records?bogus=1", None).unwrap();
+    assert_eq!((status, error_code(&v)), (400, "bad_query"));
+
+    // mutation endpoints take no body
+    let body = JsonValue::Object(vec![]);
+    let (status, v) = client.request("POST", "/runs/0/cancel", Some(&body)).unwrap();
+    assert_eq!((status, error_code(&v)), (400, "invalid_json"));
+
+    // bad protocol version and transfer-encoding over the raw socket
+    let (status, v) = raw_roundtrip(&server, b"GET /health HTTP/2\r\n\r\n");
+    assert_eq!((status, error_code(&v)), (400, "bad_request"));
+    let (status, v) = raw_roundtrip(
+        &server,
+        b"POST /runs HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n",
+    );
+    assert_eq!((status, error_code(&v)), (501, "unsupported"));
+
+    // a run that exists but is not terminal: result is a 409
+    let req = SubmitRequest::preset("quick")
+        .with_override("algo.outer_steps", JsonValue::num(4000.0))
+        .with_override("run.eval_every", JsonValue::num(1_000_000.0));
+    let long = client.submit(&req).unwrap();
+    let (status, v) = client.request("GET", &format!("/runs/{}/result", long.id), None).unwrap();
+    assert_eq!((status, error_code(&v)), (409, "invalid_state"));
+    // a terminal run rejects further mutations
+    client.cancel_when_running(long.id);
+    let fin = client.wait_terminal(long.id, Duration::from_secs(120)).unwrap();
+    assert!(fin.state.is_terminal());
+    let (status, v) =
+        client.request("POST", &format!("/runs/{}/cancel", long.id), None).unwrap();
+    assert_eq!((status, error_code(&v)), (409, "invalid_state"));
+
+    server.shutdown();
+}
+
+/// Steering helper: keep trying until the registry has the run in a
+/// mutable state (submission → claim is asynchronous).
+trait SteerWhenRunning {
+    fn cancel_when_running(&self, id: u64);
+    fn pause_when_running(&self, id: u64) -> adloco::service::RunSummary;
+}
+
+impl SteerWhenRunning for Client {
+    fn cancel_when_running(&self, id: u64) {
+        loop {
+            match self.cancel(id) {
+                Ok(_) => return,
+                Err(_) => {
+                    if self.run(id).unwrap().state.is_terminal() {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+
+    fn pause_when_running(&self, id: u64) -> adloco::service::RunSummary {
+        loop {
+            match self.pause(id) {
+                Ok(s) => return s,
+                Err(_) => {
+                    assert!(
+                        !self.run(id).unwrap().state.is_terminal(),
+                        "run {id} finished before pause landed — schedule too short"
+                    );
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn oversized_bodies_and_heads_get_413_and_431() {
+    let tight = ServiceConfig {
+        max_header_bytes: 256,
+        max_body_bytes: 1024,
+        ..service_cfg(1)
+    };
+    let (server, _client) = start("tight", tight);
+    let (status, v) = raw_roundtrip(
+        &server,
+        b"POST /runs HTTP/1.1\r\ncontent-length: 5000\r\n\r\n",
+    );
+    assert_eq!((status, error_code(&v)), (413, "payload_too_large"));
+    let mut junk = b"GET /".to_vec();
+    junk.extend(vec![b'a'; 600]);
+    let (status, v) = raw_roundtrip(&server, &junk);
+    assert_eq!((status, error_code(&v)), (431, "header_too_large"));
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// lifecycle steering: every mutation lands at an outer-round boundary
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pause_checkpoint_resume_cancel_land_at_boundaries() {
+    let (server, client) = start("steer", service_cfg(1));
+    // a schedule far too long to finish on its own: the test ends it
+    // with cancel, so only the boundaries it steers through actually run
+    let req = SubmitRequest::preset("quick")
+        .with_override("algo.outer_steps", JsonValue::num(50_000.0))
+        .with_override("run.eval_every", JsonValue::num(1_000_000.0));
+    let id = client.submit(&req).unwrap().id;
+
+    let paused = client.pause_when_running(id);
+    assert_eq!(paused.state, RunState::Paused);
+
+    // while parked, records are served live from the part file
+    let page = client.records(id, 0).unwrap();
+    assert_eq!(page.source, "live");
+    assert!(!page.complete);
+
+    let ckpt_path = client.checkpoint(id).unwrap();
+    let resumed = client.resume(id).unwrap();
+    assert_eq!(resumed.state, RunState::Running);
+    let after_cancel = client.cancel(id).unwrap();
+    assert!(after_cancel.cancel_requested);
+
+    let fin = client.wait_terminal(id, Duration::from_secs(120)).unwrap();
+    assert_eq!(fin.state, RunState::Cancelled);
+    assert!(
+        fin.outer_steps_done < fin.outer_steps_total,
+        "cancel must stop the schedule early ({}/{})",
+        fin.outer_steps_done,
+        fin.outer_steps_total
+    );
+
+    // the checkpoint requested while paused was written at the wake
+    // boundary — before the cancel could land (hook order guarantee)
+    assert_eq!(fin.checkpoints.len(), 1);
+    let (ckpt_step, listed_path) = &fin.checkpoints[0];
+    assert_eq!(listed_path, &ckpt_path);
+    assert!(*ckpt_step <= fin.outer_steps_done);
+    let ckpt = adloco::checkpoint::Checkpoint::load(&ckpt_path).unwrap();
+    assert_eq!(ckpt.outer_step, *ckpt_step);
+    assert_eq!(format!("{:016x}", ckpt.config_digest), fin.config_digest);
+
+    // a cancelled run still carries the truncated result
+    let result = client.result(id).unwrap();
+    assert_eq!(result.get("state").and_then(|s| s.as_str()), Some("cancelled"));
+    assert!(result.get("result").is_some());
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// the headline: HTTP-served runs are bit-identical to one-shot execution
+// ---------------------------------------------------------------------------
+
+fn assert_served_matches_one_shot(preset: &str, threads: usize) {
+    let tag = format!("ident_{preset}_t{threads}");
+    let name = format!("svc_{preset}_t{threads}");
+    let (server, client) = start(&tag, service_cfg(1));
+
+    let req = SubmitRequest {
+        name: Some(name.clone()),
+        ..SubmitRequest::preset(preset)
+    }
+    .with_override("run.threads", JsonValue::num(threads as f64));
+    let id = client.submit(&req).unwrap().id;
+    let fin = client.wait_terminal(id, Duration::from_secs(300)).unwrap();
+    assert_eq!(fin.state, RunState::Done, "{tag}: {:?}", fin.error);
+    let served_jsonl = fetch_records(&client, id);
+    let served_result = client.result(id).unwrap().get("result").unwrap().clone();
+    let snap = server.registry().snapshot(id).unwrap();
+    let served_csv = std::fs::read(snap.records_path.replace(".jsonl", ".csv")).unwrap();
+
+    // one-shot arm: same config through run_experiment, buffered writer
+    let dir = std::env::temp_dir().join(format!("adloco_service_oneshot_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut cfg = presets::by_name(preset).unwrap();
+    cfg.name = name.clone();
+    cfg.run.threads = threads;
+    cfg.run.stream_records = false;
+    cfg.out_dir = Some(dir.to_str().unwrap().to_string());
+    let result = run_experiment(cfg).unwrap();
+    let one_shot_jsonl = std::fs::read(dir.join(format!("{name}.jsonl"))).unwrap();
+    let one_shot_csv = std::fs::read(dir.join(format!("{name}.csv"))).unwrap();
+
+    assert_eq!(
+        common::fnv1a(&served_jsonl),
+        common::fnv1a(&one_shot_jsonl),
+        "{tag}: HTTP-served records must be bit-identical to one-shot (len {} vs {})",
+        served_jsonl.len(),
+        one_shot_jsonl.len()
+    );
+    assert_eq!(
+        common::fnv1a(&served_csv),
+        common::fnv1a(&one_shot_csv),
+        "{tag}: eval CSV must match"
+    );
+    assert_eq!(
+        without_keys(&served_result, &["wall_clock_s"]),
+        without_keys(&run_result_json(&result), &["wall_clock_s"]),
+        "{tag}: RunResult payload must match minus wall-clock"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn served_run_is_bit_identical_lockstep_threads_1() {
+    assert_served_matches_one_shot("quick", 1);
+}
+
+#[test]
+fn served_run_is_bit_identical_lockstep_threads_4() {
+    assert_served_matches_one_shot("quick", 4);
+}
+
+#[test]
+fn served_run_is_bit_identical_hetero_dynamic_threads_1() {
+    assert_served_matches_one_shot("hetero_dynamic", 1);
+}
+
+#[test]
+fn served_run_is_bit_identical_hetero_dynamic_threads_4() {
+    assert_served_matches_one_shot("hetero_dynamic", 4);
+}
+
+#[test]
+fn served_run_is_bit_identical_elastic_mit_threads_1() {
+    assert_served_matches_one_shot("elastic_mit", 1);
+}
+
+#[test]
+fn served_run_is_bit_identical_elastic_mit_threads_4() {
+    assert_served_matches_one_shot("elastic_mit", 4);
+}
+
+// ---------------------------------------------------------------------------
+// bounded concurrency: deterministic queueing, serial-identical digests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn queued_runs_execute_fifo_with_serial_identical_digests() {
+    const N: u64 = 5;
+    let (server, client) = start("conc", service_cfg(2));
+    for i in 0..N {
+        let req = SubmitRequest {
+            name: Some(format!("conc_{i}")),
+            ..SubmitRequest::preset("quick")
+        }
+        .with_override("seed", JsonValue::num(100.0 + i as f64));
+        assert_eq!(client.submit(&req).unwrap().id, i);
+    }
+
+    // totals are conserved at every instant: per-state counts sum to N
+    let (_, totals) = client.runs().unwrap();
+    let total = totals.get("total").and_then(|x| x.as_f64()).unwrap();
+    let by_state: f64 = ["submitted", "running", "paused", "done", "failed", "cancelled"]
+        .iter()
+        .map(|k| totals.get(k).and_then(|x| x.as_f64()).unwrap())
+        .sum();
+    assert_eq!(total, N as f64);
+    assert_eq!(by_state, total);
+
+    for i in 0..N {
+        let fin = client.wait_terminal(i, Duration::from_secs(120)).unwrap();
+        assert_eq!(fin.state, RunState::Done, "run {i}: {:?}", fin.error);
+        // the pool claims strictly FIFO, so the nth submission is the
+        // nth start even with two executors racing
+        assert_eq!(fin.started_order, Some(i), "run {i} started out of order");
+    }
+    let (_, totals) = client.runs().unwrap();
+    assert_eq!(totals.get("done").and_then(|x| x.as_f64()), Some(N as f64));
+
+    // each run's records and result are identical to a serial one-shot
+    for i in 0..N {
+        let served = fetch_records(&client, i);
+        let served_result = client.result(i).unwrap().get("result").unwrap().clone();
+        let dir = std::env::temp_dir().join(format!("adloco_service_conc_oneshot_{i}"));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = presets::quick();
+        cfg.name = format!("conc_{i}");
+        cfg.seed = 100 + i;
+        cfg.out_dir = Some(dir.to_str().unwrap().to_string());
+        let result = run_experiment(cfg).unwrap();
+        let one_shot = std::fs::read(dir.join(format!("conc_{i}.jsonl"))).unwrap();
+        assert_eq!(
+            common::fnv1a(&served),
+            common::fnv1a(&one_shot),
+            "run {i}: concurrent execution changed the records"
+        );
+        assert_eq!(
+            without_keys(&served_result, &["wall_clock_s"]),
+            without_keys(&run_result_json(&result), &["wall_clock_s"]),
+            "run {i}: concurrent execution changed the result"
+        );
+    }
+    server.shutdown();
+}

@@ -56,6 +56,46 @@ fn streamed_jsonl_is_byte_identical_event() {
     streamed_matches_buffered(SchedulerKind::Event);
 }
 
+/// `fleet_trace` defaults to the streaming writer (the fleet preset is
+/// exactly where the buffered recorder's open tail hurts) — and the
+/// streamed bytes still match buffered on a shrunk fleet schedule, the
+/// same reduction `benches/fig6_scale.rs --smoke` runs at scale.
+#[test]
+fn fleet_trace_defaults_to_streaming_and_stays_byte_identical() {
+    assert!(
+        presets::fleet_trace().run.stream_records,
+        "fleet_trace must default to run.stream_records = on"
+    );
+
+    let shrink = || {
+        let mut cfg = presets::fleet_trace();
+        cfg.name = "ft_small".into();
+        cfg.algo.outer_steps = 3;
+        cfg.algo.inner_steps = 4;
+        cfg.engine = adloco::config::EngineConfig::Mock { dim: 64, noise: 1.0, condition: 10.0 };
+        cfg.algo.batching.adaptive = false;
+        cfg.algo.fixed_batch = 4;
+        cfg.run.eval_batches = 1;
+        cfg.data.val_sequences = 64;
+        cfg
+    };
+    let base = std::env::temp_dir().join("adloco_stream_fleet");
+
+    let mut buffered_cfg = shrink();
+    buffered_cfg.run.stream_records = false;
+    let buffered = run_into(&base.join("buffered"), buffered_cfg);
+
+    let streamed_dir = base.join("streamed");
+    let streamed = run_into(&streamed_dir, shrink()); // preset default: streaming on
+
+    assert_eq!(
+        buffered.0, streamed.0,
+        "fleet_trace: streamed JSONL must be byte-identical to buffered"
+    );
+    assert_eq!(buffered.1, streamed.1, "fleet_trace: eval CSV must match");
+    assert!(!streamed_dir.join("ft_small.jsonl.steps.part").exists());
+}
+
 #[test]
 fn streaming_drains_ram_and_preserves_aggregates() {
     let dir = std::env::temp_dir().join("adloco_stream_direct");

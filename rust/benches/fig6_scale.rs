@@ -67,13 +67,24 @@ fn scale_config(workers: usize, smoke: bool, threads: usize) -> Config {
     cfg
 }
 
-fn run_arm(cfg: Config) -> (RunResult, Recorder, CommLedger, f64) {
+fn run_arm(cfg: Config) -> (RunResult, Recorder, CommLedger, f64, JsonValue) {
+    let rounds = cfg.algo.outer_steps as f64;
     let engine = build_engine(&cfg).unwrap();
     let mut coord = Coordinator::new(cfg, engine).unwrap();
+    // per-round average allocation count across the whole run (includes
+    // the first round's arena growth — the amortized figure); null
+    // without `--features perf-count-alloc`
+    let before = adloco::util::alloc_count::snapshot();
     let (r, wall_s) = wall_time(|| coord.run().unwrap());
+    let d = adloco::util::alloc_count::snapshot().since(before);
+    let allocs_per_round = if adloco::util::alloc_count::counting_enabled() && rounds > 0.0 {
+        JsonValue::num(d.allocs as f64 / rounds)
+    } else {
+        JsonValue::Null
+    };
     let rec = coord.recorder.clone();
     let ledger = coord.ledger().clone();
-    (r, rec, ledger, wall_s)
+    (r, rec, ledger, wall_s, allocs_per_round)
 }
 
 /// FNV-1a over a byte string (the digest hash).
@@ -217,8 +228,8 @@ fn main() {
     }
 
     // ---- cross-thread bit-identity at the smallest point ----------------
-    let (r1, rec1, led1, _) = run_arm(scale_config(100, smoke, 1));
-    let (r4, rec4, led4, _) = run_arm(scale_config(100, smoke, 4));
+    let (r1, rec1, led1, _, _) = run_arm(scale_config(100, smoke, 1));
+    let (r4, rec4, led4, _, _) = run_arm(scale_config(100, smoke, 4));
     let d1 = digest(&r1, &rec1, &led1);
     let d4 = digest(&r4, &rec4, &led4);
     assert_eq!(d1, d4, "threads=1 vs threads=4 digests must match (DESIGN.md §6)");
@@ -265,7 +276,7 @@ fn main() {
         let cfg = scale_config(w, smoke, threads);
         let nodes = cfg.cluster.nodes.len();
         let trainers = cfg.algo.num_trainers;
-        let (r, rec, led, wall_s) = run_arm(cfg);
+        let (r, rec, led, wall_s, allocs_per_round) = run_arm(cfg);
         let d = digest(&r, &rec, &led);
         assert!(r.total_inner_steps > 0, "the {w}-worker point must actually step");
         table.row(&[
@@ -285,6 +296,16 @@ fn main() {
             ("virtual_time_s", JsonValue::num(r.virtual_time_s)),
             ("wall_s", JsonValue::num(wall_s)),
             ("digest", JsonValue::str(d.clone())),
+            ("allocs_per_round", allocs_per_round),
+            // process high-water mark, monotone across grid points —
+            // the trajectory artifact CI tracks, not a per-point figure
+            (
+                "peak_rss_bytes",
+                match adloco::util::alloc_count::peak_rss_bytes() {
+                    Some(b) => JsonValue::num(b as f64),
+                    None => JsonValue::Null,
+                },
+            ),
         ]));
         points.push((w, d));
     }

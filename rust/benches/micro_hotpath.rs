@@ -280,6 +280,88 @@ fn main() {
         eprintln!("artifacts/tiny missing — run `make artifacts` for PJRT rows");
     }
 
+    // ---- steady-state round loop: persistent pool + arenas ---------------
+    // (DESIGN.md §14) One full `step_outer_event` round at paper-scale
+    // params with merge / mid-loop-eval boundaries disabled — the
+    // zero-param-sized-allocation steady state the runtime contract
+    // promises. Rows carry measured allocs_per_round /
+    // param_allocs_per_round under `--features perf-count-alloc` (null
+    // otherwise) plus the process peak-RSS probe.
+    {
+        use adloco::util::alloc_count;
+        let dim = if quick { 100_000 } else { 1_000_000 };
+        for th in [1usize, 4] {
+            let mut cfg = presets::mock_default();
+            cfg.name = format!("micro_steady_t{th}");
+            cfg.algo.num_trainers = 2;
+            cfg.algo.workers_per_trainer = 2;
+            cfg.algo.inner_steps = 4;
+            cfg.algo.outer_steps = 1_000_000; // rounds are driven manually below
+            cfg.engine = adloco::config::EngineConfig::Mock { dim, noise: 1.0, condition: 10.0 };
+            cfg.algo.batching.adaptive = false;
+            cfg.algo.fixed_batch = 4;
+            cfg.algo.merge.enabled = false;
+            cfg.run.eval_every = 0;
+            cfg.run.eval_batches = 1;
+            cfg.data.val_sequences = 64;
+            cfg.run.threads = th;
+            let engine = adloco::engine::build_engine(&cfg).unwrap();
+            let mut c = adloco::coordinator::Coordinator::new(cfg, engine).unwrap();
+            let mut t = 0u64;
+            // warm: arenas grow to their working size, pool threads park
+            for _ in 0..2 {
+                t += 1;
+                c.step_outer_event(t).unwrap();
+            }
+            let timing = time_auto(budget, 3, || {
+                t += 1;
+                c.step_outer_event(t).unwrap();
+            });
+            // allocation accounting over a fixed round count, after the
+            // timing loop (every buffer is at steady state by now);
+            // "param-sized" = at least one f32 parameter vector
+            alloc_count::set_large_threshold(4 * dim);
+            let rounds = 5u64;
+            let before = alloc_count::snapshot();
+            for _ in 0..rounds {
+                t += 1;
+                c.step_outer_event(t).unwrap();
+            }
+            let d = alloc_count::snapshot().since(before);
+            alloc_count::set_large_threshold(usize::MAX);
+            let (apr, papr) = if alloc_count::counting_enabled() {
+                (
+                    JsonValue::num(d.allocs as f64 / rounds as f64),
+                    JsonValue::num(d.large_allocs as f64 / rounds as f64),
+                )
+            } else {
+                (JsonValue::Null, JsonValue::Null)
+            };
+            let rss = match alloc_count::peak_rss_bytes() {
+                Some(b) => JsonValue::num(b as f64),
+                None => JsonValue::Null,
+            };
+            let op = format!("round.steady(p={dim},threads={th})");
+            rows.table.row(&[
+                op.clone(),
+                format!("{dim}"),
+                format!("{:.4}", timing.median_s * 1e3),
+                format!("{:.4}", timing.p90_s * 1e3),
+                "-".into(),
+            ]);
+            rows.json.push(JsonValue::obj(vec![
+                ("op", JsonValue::str(op)),
+                ("params", JsonValue::num(dim as f64)),
+                ("median_ms", JsonValue::num(timing.median_s * 1e3)),
+                ("p90_ms", JsonValue::num(timing.p90_s * 1e3)),
+                ("bytes_per_s", JsonValue::num(0.0)),
+                ("allocs_per_round", apr),
+                ("param_allocs_per_round", papr),
+                ("peak_rss_bytes", rss),
+            ]));
+        }
+    }
+
     println!("\nMICRO — hot-path benchmarks");
     rows.table.print();
     rows.table.write_csv("micro_hotpath").unwrap();

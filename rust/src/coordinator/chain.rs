@@ -144,6 +144,39 @@ pub(crate) fn step_compute_time(
     dt
 }
 
+/// Per-thread chain arena (DESIGN.md §14): the SwitchMode gradient
+/// buffers and the token-batch cache a chain writes through, owned by
+/// the pool thread and reused across every chain — and every round —
+/// that thread ever runs, so a steady-state round performs zero
+/// param-sized heap allocations. Chains never nest, so the `RefCell`
+/// borrow is exclusive for a chain's whole duration.
+#[derive(Default)]
+struct ChainArena {
+    grad: Vec<f32>,
+    accum: Vec<f32>,
+    /// One reusable buffer per (batch, width) shape — the shape set is
+    /// bounded by the engine's batch ladder, so the cache stays tiny
+    /// (mirrors the coordinator's serial-path `batch_bufs` cache).
+    bufs: Vec<TokenBatch>,
+}
+
+impl ChainArena {
+    fn batch_buf(&mut self, batch: usize, width: usize) -> usize {
+        match self.bufs.iter().position(|b| b.batch == batch && b.width == width) {
+            Some(i) => i,
+            None => {
+                self.bufs.push(TokenBatch::new(batch, width));
+                self.bufs.len() - 1
+            }
+        }
+    }
+}
+
+thread_local! {
+    static CHAIN_ARENA: std::cell::RefCell<ChainArena> =
+        std::cell::RefCell::new(ChainArena::default());
+}
+
 /// One worker's full inner-step chain for an outer round — the unit of
 /// parallelism (DESIGN.md §6). Performs, draw for draw and flop for
 /// flop, what the serial event loop executes for this worker, by
@@ -151,24 +184,44 @@ pub(crate) fn step_compute_time(
 /// `Scenario` primitives in the same per-stream order (time_rng:
 /// jitter then straggler per step; noise_rng: engine draws per step;
 /// virtual-time recurrence via `compute_span` from the previous step's
-/// end). Scratch buffers are chain-local, so chains share nothing
-/// mutable.
+/// end). Scratch lives in the pool thread's [`ChainArena`], and chains
+/// share nothing mutable across threads.
 pub(crate) fn run_worker_chain(
     ctx: ChainCtx<'_>,
     task: ChainTask,
     w: &mut Worker,
 ) -> Result<ChainOutput> {
-    crate::util::logger::set_thread_context(format!("t{}.w{}", task.ti, task.wi));
+    CHAIN_ARENA.with(|arena| {
+        let mut arena = arena.borrow_mut();
+        run_worker_chain_in(ctx, task, w, &mut arena)
+    })
+}
+
+fn run_worker_chain_in(
+    ctx: ChainCtx<'_>,
+    task: ChainTask,
+    w: &mut Worker,
+    arena: &mut ChainArena,
+) -> Result<ChainOutput> {
+    // re-tag in place: reuses the pool thread's tag buffer, no per-chain
+    // String allocation (the tag is simply left behind after the chain —
+    // pool threads only log while running a cell)
+    crate::util::logger::set_thread_context_args(format_args!("t{}.w{}", task.ti, task.wi));
     let plan = task.plan;
-    // chain-local scratch; the gradient buffers are only needed on the
-    // SwitchMode (accumulating) path
-    let (mut grad, mut accum) = if plan.accum_steps > 1 {
+    // arena-backed scratch; the gradient buffers are only needed on the
+    // SwitchMode (accumulating) path. clear+resize re-zeroes the full
+    // span — bit-identical to the fresh `vec![0.0f32; p]` this used to
+    // allocate, but the capacity is retained across chains and rounds.
+    if plan.accum_steps > 1 {
         let p = ctx.engine.param_count();
-        (vec![0.0f32; p], vec![0.0f32; p])
-    } else {
-        (Vec::new(), Vec::new())
-    };
-    let mut buf = TokenBatch::new(plan.micro_batch, ctx.width);
+        arena.grad.clear();
+        arena.grad.resize(p, 0.0);
+        arena.accum.clear();
+        arena.accum.resize(p, 0.0);
+    }
+    let bi = arena.batch_buf(plan.micro_batch, ctx.width);
+    let ChainArena { grad, accum, bufs } = arena;
+    let buf = &mut bufs[bi];
     let mut stats_out: Vec<(u64, StepStats, f64)> = Vec::with_capacity(task.target as usize);
     let mut snaps: Vec<(u64, Vec<f32>)> = Vec::new();
     let mut now = task.start_time;
@@ -195,7 +248,7 @@ pub(crate) fn run_worker_chain(
             w,
             &plan,
             lr,
-            StepScratch { buf: &mut buf, grad: &mut grad, accum: &mut accum },
+            StepScratch { buf: &mut *buf, grad: &mut grad[..], accum: &mut accum[..] },
         )?;
         stats_out.push((step, stats, now));
 
@@ -208,7 +261,6 @@ pub(crate) fn run_worker_chain(
             snaps.push((step, w.state.params.clone()));
         }
     }
-    crate::util::logger::clear_thread_context();
     Ok(ChainOutput {
         ti: task.ti,
         wi: task.wi,

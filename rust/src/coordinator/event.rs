@@ -403,7 +403,12 @@ impl Coordinator {
                     plan: r.plan,
                     target: r.target,
                     start_done: r.start_done,
-                    snapshot_params: wi == r.eval_worker,
+                    // snapshots cost a param clone each: only arm them
+                    // when a mid-loop eval boundary will actually land
+                    // inside this chain's step range
+                    snapshot_params: wi == r.eval_worker
+                        && self.cfg.run.eval_every > 0
+                        && r.target >= self.cfg.run.eval_every as u64,
                 });
             }
         }
@@ -433,10 +438,13 @@ impl Coordinator {
             }
         }
 
-        // ---- fan out / join: the shared work-stealing pool, so uneven
-        //      chains (stragglers, slow nodes) never strand a thread ----
-        let results: Vec<Result<super::chain::ChainOutput>> = crate::util::run_cells(
-            self.threads,
+        // ---- fan out / join: the coordinator's persistent pool
+        //      (DESIGN.md §14) — threads were spawned once at
+        //      construction and parked between rounds; work-stealing
+        //      claims mean uneven chains (stragglers, slow nodes) never
+        //      strand a thread ----
+        let pool = self.pool.as_ref().expect("worker pool present when threads > 1");
+        let results: Vec<Result<super::chain::ChainOutput>> = pool.run(
             tasks
                 .into_iter()
                 .map(|(m, w)| move || run_worker_chain(ctx, m, w))

@@ -6,7 +6,7 @@
 use super::Coordinator;
 use crate::comm::CommKind;
 use crate::data::shard::union_shards;
-use crate::merge::{check_merge_with_policy, do_merge, MergePolicy};
+use crate::merge::{check_merge_with_policy, do_merge_with_scratch, MergePolicy};
 use crate::metrics::MergeRecord;
 use crate::trainer::Trainer;
 use anyhow::Result;
@@ -194,7 +194,9 @@ impl Coordinator {
                 rest = tail;
                 base = id + 1;
             }
-            do_merge(&mut members)
+            // coordinator-owned f64 accumulator, reused across every
+            // merge boundary (disjoint field borrow from `trainers`)
+            do_merge_with_scratch(&mut members, &mut self.merge_scratch)
         };
 
         // consume the non-representative trainers

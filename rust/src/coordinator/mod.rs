@@ -372,6 +372,22 @@ pub struct Coordinator {
     /// Service steering handle polled at every outer boundary
     /// (DESIGN.md §13); None = one-shot run, boundary untouched.
     control: Option<Arc<BoundaryControl>>,
+    /// Persistent execution runtime (DESIGN.md §14): pool threads are
+    /// spawned once here and parked between rounds;
+    /// `parallel_inner_phase` reuses them every round. None when
+    /// `threads <= 1` (serial paths never need it).
+    pool: Option<crate::util::parallel::WorkerPool>,
+    /// Reusable eval-parameter staging buffer: `evaluate` /
+    /// `evaluate_trainer_params` copy into this instead of cloning a
+    /// param vector per evaluation (DESIGN.md §14).
+    eval_scratch: Vec<f32>,
+    /// Reusable f64 accumulator for merge weighted averages
+    /// ([`crate::merge::do_merge_with_scratch`]).
+    merge_scratch: Vec<f64>,
+    /// Recycled outer-delta buffers for the delayed-sync path: popped in
+    /// `outer_sync_delayed`, pushed back when a `PendingSync` is
+    /// applied, so steady-state overlap rounds allocate nothing.
+    delta_pool: Vec<Vec<f32>>,
 }
 
 impl Coordinator {
@@ -488,6 +504,14 @@ impl Coordinator {
             run_wall_s: 0.0,
             streamer: None,
             control: None,
+            pool: if threads > 1 {
+                Some(crate::util::parallel::WorkerPool::new(threads))
+            } else {
+                None
+            },
+            eval_scratch: Vec::new(),
+            merge_scratch: Vec::new(),
+            delta_pool: Vec::new(),
             cfg,
             engine,
             corpus,
@@ -1366,11 +1390,17 @@ impl Coordinator {
         let cost =
             self.comm
                 .sync_cost(param_bytes, member_nodes, &self.cluster.topology, bw_factor);
-        let mut delta = vec![0.0f32; self.engine.param_count()];
+        // recycled delta buffer (DESIGN.md §14): clear+resize re-zeroes
+        // the span, bit-identical to the fresh `vec![0.0f32; p]` this
+        // used to allocate every delayed boundary
+        let mut delta = self.delta_pool.pop().unwrap_or_default();
+        delta.clear();
+        delta.resize(self.engine.param_count(), 0.0);
         if !self.trainers[ti].active_delta(&mut delta) {
             // fully-preempted cohort: nothing to post this round (the
             // blocking epilogue is the same no-op); any older pending
             // update keeps waiting for the next live boundary
+            self.delta_pool.push(delta);
             return;
         }
         let handle = self.comm.begin_sync(CommKind::OuterSync, cost, t_send);
@@ -1411,6 +1441,8 @@ impl Coordinator {
         self.comm.complete_sync(&prev.handle, prev.sent_samples);
         let tr = &mut self.trainers[ti];
         tr.outer.step(&mut tr.params, &prev.delta);
+        // recycle the delta buffer for the next delayed post
+        self.delta_pool.push(prev.delta);
     }
 
     /// Retire trainer `ti`'s in-flight update immediately (merge
@@ -1468,13 +1500,16 @@ impl Coordinator {
         let mut eval_rng = Rng::new(self.cfg.seed ^ 0xE7A1 ^ outer_t);
         let mut loss_acc = 0.0;
         let n = self.cfg.run.eval_batches.max(1);
-        let mut buf = TokenBatch::new(eb, width);
+        // reuse the shared (batch, width) buffer cache instead of a
+        // fresh TokenBatch per evaluation; every row is overwritten
+        // below before the engine reads it
+        let bi = self.batch_buf_for(eb, width);
         for _ in 0..n {
             for row in 0..eb {
                 let ix = eval_rng.below(self.val_corpus.len() as u64) as usize;
-                buf.row_mut(row).copy_from_slice(self.val_corpus.sequence(ix));
+                self.batch_bufs[bi].row_mut(row).copy_from_slice(self.val_corpus.sequence(ix));
             }
-            loss_acc += self.engine.eval_loss(params, &buf, &mut eval_rng)?;
+            loss_acc += self.engine.eval_loss(params, &self.batch_bufs[bi], &mut eval_rng)?;
         }
         let loss = loss_acc / n as f64;
         Ok((loss, perplexity(loss)))
@@ -1504,14 +1539,24 @@ impl Coordinator {
     /// Evaluate worker-0 parameters of trainer `ti` (mid-outer-step eval,
     /// the paper's every-10-steps cadence). Returns true if target reached.
     fn evaluate(&mut self, ti: usize, outer_t: u64) -> Result<bool> {
-        let params: Vec<f32> = self.trainers[ti].workers[0].state.params.clone();
-        self.eval_params(&params, ti, outer_t)
+        // stage into the reusable eval buffer instead of cloning a
+        // fresh param vector per evaluation (DESIGN.md §14)
+        let mut params = std::mem::take(&mut self.eval_scratch);
+        params.clear();
+        params.extend_from_slice(&self.trainers[ti].workers[0].state.params);
+        let out = self.eval_params(&params, ti, outer_t);
+        self.eval_scratch = params;
+        out
     }
 
     /// Evaluate the trainer's outer parameters (post-sync).
     fn evaluate_trainer_params(&mut self, ti: usize, outer_t: u64) -> Result<bool> {
-        let params: Vec<f32> = self.trainers[ti].params.clone();
-        self.eval_params(&params, ti, outer_t)
+        let mut params = std::mem::take(&mut self.eval_scratch);
+        params.clear();
+        params.extend_from_slice(&self.trainers[ti].params);
+        let out = self.eval_params(&params, ti, outer_t);
+        self.eval_scratch = params;
+        out
     }
 
     /// Fill the recorder's per-worker utilization table.

@@ -264,15 +264,30 @@ impl TrainEngine for MockEngine {
             "mock: unsupported batch {}",
             batch.batch
         );
-        let mut grad = vec![0.0f32; self.spec.dim];
-        let stats = self.compute_grad(&state.params, batch.batch, &mut grad, noise);
-        let lr = lr * self.spec.lr_scale;
-        if self.spec.use_sgd {
-            sgd_step(state, &grad, lr);
-        } else {
-            adamw_step(state, &grad, lr, &self.adamw);
+        // thread-local grad scratch, grown on demand — keeps the
+        // non-accumulating hot path allocation-free after each worker
+        // thread's first step (same thread contract as `compute_grad`'s
+        // SCRATCH; `compute_grad` overwrites every element before any
+        // read, so stale contents cannot leak into the update).
+        thread_local! {
+            static GRAD: std::cell::RefCell<Vec<f32>> =
+                const { std::cell::RefCell::new(Vec::new()) };
         }
-        Ok(stats)
+        GRAD.with(|cell| {
+            let mut grad = cell.borrow_mut();
+            if grad.len() < self.spec.dim {
+                grad.resize(self.spec.dim, 0.0);
+            }
+            let grad = &mut grad[..self.spec.dim];
+            let stats = self.compute_grad(&state.params, batch.batch, grad, noise);
+            let lr = lr * self.spec.lr_scale;
+            if self.spec.use_sgd {
+                sgd_step(state, grad, lr);
+            } else {
+                adamw_step(state, grad, lr, &self.adamw);
+            }
+            Ok(stats)
+        })
     }
 
     fn grad_step(

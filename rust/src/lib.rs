@@ -113,6 +113,13 @@
 
 #![warn(missing_docs)]
 
+/// Counting global allocator for the perf trajectory (DESIGN.md §14):
+/// only installed under the `perf-count-alloc` feature, so default
+/// builds keep the system allocator untouched.
+#[cfg(feature = "perf-count-alloc")]
+#[global_allocator]
+static COUNTING_ALLOC: util::alloc_count::CountingAlloc = util::alloc_count::CountingAlloc;
+
 pub mod batching;
 pub mod benchkit;
 pub mod checkpoint;

@@ -89,6 +89,18 @@ pub struct MergeOutcome {
 /// the consumed trainers and carries the representative's optimizer state
 /// forward (Algorithm 2 line 9).
 pub fn do_merge(members: &mut [(usize, usize, &mut [f32])]) -> MergeOutcome {
+    let mut acc = Vec::new();
+    do_merge_with_scratch(members, &mut acc)
+}
+
+/// [`do_merge`] over caller-owned f64 accumulator scratch: `acc` is
+/// resized and fully re-zeroed before use, so the result is
+/// bit-identical to the allocating entry point while the coordinator
+/// can reuse one buffer across every merge boundary (DESIGN.md §14).
+pub fn do_merge_with_scratch(
+    members: &mut [(usize, usize, &mut [f32])],
+    acc: &mut Vec<f64>,
+) -> MergeOutcome {
     assert!(members.len() >= 2, "merge needs >= 2 members");
     let n = members[0].2.len();
     for (_, _, p) in members.iter() {
@@ -108,7 +120,9 @@ pub fn do_merge(members: &mut [(usize, usize, &mut [f32])]) -> MergeOutcome {
     // accumulate into f64 then write back to the representative;
     // elementwise kernels keep the per-index member order, so the result
     // is bit-identical to the old serial loops (DESIGN.md §12)
-    let mut acc = vec![0.0f64; n];
+    acc.clear();
+    acc.resize(n, 0.0);
+    let acc = &mut acc[..n];
     for (_, b, p) in members.iter() {
         let w = *b as f64 / w_sum;
         crate::util::vecmath::weighted_add_f32(w, p, &mut acc);

@@ -1,0 +1,171 @@
+//! Allocation accounting for the perf trajectory (DESIGN.md §14).
+//!
+//! Two probes feed the `allocs_per_round` / `peak_rss_bytes` rows in
+//! `BENCH_micro.json` / `BENCH_fig6.json`:
+//!
+//! * a **counting global allocator**, compiled only under the
+//!   `perf-count-alloc` cargo feature (installed by `lib.rs` via
+//!   `#[global_allocator]`): every `alloc`/`alloc_zeroed`/`realloc`
+//!   bumps process-wide relaxed atomic counters, including a separate
+//!   counter for "large" allocations at or above a settable threshold —
+//!   the instrument behind the zero-param-sized-allocations acceptance
+//!   check (`tests/alloc_steady.rs`). With the feature off, the probe
+//!   API stays callable and reports zeros / `counting_enabled() ==
+//!   false`, so benches emit `null` rows instead of diverging.
+//! * a **peak-RSS probe** reading `VmHWM` from `/proc/self/status`
+//!   (always compiled; `None` off Linux) — the process high-water mark,
+//!   monotone over the process lifetime.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+// The counters live unconditionally (they are four statics); only the
+// allocator that feeds them is feature-gated. This keeps every probe
+// call site free of cfg noise.
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+static LARGE_ALLOCS: AtomicU64 = AtomicU64::new(0);
+static LARGE_THRESHOLD: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// Counting wrapper over [`std::alloc::System`]; installed as the
+/// global allocator by `lib.rs` when the `perf-count-alloc` feature is
+/// on. Deallocations are intentionally not counted: the perf contract
+/// is about allocation *traffic*, and frees pair 1:1 with the counted
+/// allocs.
+#[cfg(feature = "perf-count-alloc")]
+pub struct CountingAlloc;
+
+#[cfg(feature = "perf-count-alloc")]
+// SAFETY: defers every allocation verbatim to `System`; the counter
+// updates are relaxed atomics with no allocation of their own, so the
+// GlobalAlloc contract is exactly `System`'s.
+unsafe impl std::alloc::GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
+        record(layout.size());
+        std::alloc::System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
+        std::alloc::System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: std::alloc::Layout) -> *mut u8 {
+        record(layout.size());
+        std::alloc::System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: std::alloc::Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        record(new_size);
+        std::alloc::System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[cfg(feature = "perf-count-alloc")]
+fn record(size: usize) {
+    ALLOCS.fetch_add(1, Ordering::Relaxed);
+    BYTES.fetch_add(size as u64, Ordering::Relaxed);
+    if size >= LARGE_THRESHOLD.load(Ordering::Relaxed) {
+        LARGE_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// True when the counting allocator is installed (the
+/// `perf-count-alloc` feature): [`snapshot`] deltas are meaningful.
+pub fn counting_enabled() -> bool {
+    cfg!(feature = "perf-count-alloc")
+}
+
+/// Point-in-time reading of the process-wide allocation counters
+/// (all zeros when counting is disabled). Subtract two snapshots via
+/// [`AllocSnapshot::since`] to attribute traffic to a code region —
+/// process-wide, so keep other threads quiet while measuring.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    /// Heap allocations performed (`alloc` + `alloc_zeroed` + `realloc`).
+    pub allocs: u64,
+    /// Bytes requested across those allocations.
+    pub bytes: u64,
+    /// Allocations at or above the [`set_large_threshold`] cutoff.
+    pub large_allocs: u64,
+}
+
+impl AllocSnapshot {
+    /// Counter deltas from `earlier` to `self`.
+    pub fn since(self, earlier: AllocSnapshot) -> AllocSnapshot {
+        AllocSnapshot {
+            allocs: self.allocs.wrapping_sub(earlier.allocs),
+            bytes: self.bytes.wrapping_sub(earlier.bytes),
+            large_allocs: self.large_allocs.wrapping_sub(earlier.large_allocs),
+        }
+    }
+}
+
+/// Read the current counters.
+pub fn snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        allocs: ALLOCS.load(Ordering::Relaxed),
+        bytes: BYTES.load(Ordering::Relaxed),
+        large_allocs: LARGE_ALLOCS.load(Ordering::Relaxed),
+    }
+}
+
+/// Count allocations of at least `bytes` separately (the
+/// "param-sized" cutoff: set it just below `4 * param_count` to catch
+/// any param-sized f32 buffer). Applies from the next allocation on.
+pub fn set_large_threshold(bytes: usize) {
+    LARGE_THRESHOLD.store(bytes, Ordering::Relaxed);
+}
+
+/// Process peak resident set size in bytes (`VmHWM` from
+/// `/proc/self/status`); `None` when the probe is unavailable (non-Linux
+/// or unreadable procfs). Monotone over the process lifetime — a
+/// high-water mark, not a point-in-time reading.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_since_is_elementwise() {
+        let a = AllocSnapshot { allocs: 10, bytes: 1000, large_allocs: 1 };
+        let b = AllocSnapshot { allocs: 17, bytes: 1500, large_allocs: 1 };
+        assert_eq!(b.since(a), AllocSnapshot { allocs: 7, bytes: 500, large_allocs: 0 });
+    }
+
+    #[test]
+    fn peak_rss_probe_reads_on_linux() {
+        let rss = peak_rss_bytes();
+        if cfg!(target_os = "linux") {
+            let v = rss.expect("VmHWM present in /proc/self/status on Linux");
+            assert!(v > 0, "peak RSS must be positive, got {v}");
+        }
+    }
+
+    #[cfg(feature = "perf-count-alloc")]
+    #[test]
+    fn counters_observe_a_large_allocation() {
+        set_large_threshold(1 << 20);
+        let before = snapshot();
+        let buf = vec![0u8; 2 << 20];
+        std::hint::black_box(&buf);
+        let d = snapshot().since(before);
+        assert!(d.allocs >= 1, "allocation not counted");
+        assert!(d.bytes >= (2 << 20) as u64, "bytes not counted: {}", d.bytes);
+        assert!(d.large_allocs >= 1, "large allocation not counted");
+        set_large_threshold(usize::MAX);
+    }
+}

@@ -103,6 +103,29 @@ pub fn set_thread_context(tag: impl Into<String>) {
     THREAD_CONTEXT.with(|c| *c.borrow_mut() = Some(tag));
 }
 
+/// Re-tag this thread **in place**: formats `args` into the existing
+/// tag `String`, reusing its capacity, so steady-state re-tagging (a
+/// pool thread switching from `p<t>` to `cell<k>` or `t<i>.w<j>` every
+/// round — DESIGN.md §14) performs no heap allocation once the buffer
+/// has grown to its working size.
+pub fn set_thread_context_args(args: std::fmt::Arguments<'_>) {
+    use std::fmt::Write as _;
+    THREAD_CONTEXT.with(|c| {
+        let mut slot = c.borrow_mut();
+        match slot.as_mut() {
+            Some(s) => {
+                s.clear();
+                let _ = s.write_fmt(args);
+            }
+            None => {
+                let mut s = String::new();
+                let _ = s.write_fmt(args);
+                *slot = Some(s);
+            }
+        }
+    });
+}
+
 /// Remove this thread's log tag.
 pub fn clear_thread_context() {
     THREAD_CONTEXT.with(|c| *c.borrow_mut() = None);
@@ -203,6 +226,20 @@ mod tests {
         THREAD_CONTEXT.with(|c| assert_eq!(c.borrow().as_deref(), Some("t0.w1")));
         clear_thread_context();
         THREAD_CONTEXT.with(|c| assert!(c.borrow().is_none()));
+    }
+
+    #[test]
+    fn context_args_rewrites_in_place() {
+        clear_thread_context();
+        set_thread_context_args(format_args!("t{}.w{}", 3, 41));
+        assert_eq!(thread_context().as_deref(), Some("t3.w41"));
+        let cap_before = THREAD_CONTEXT.with(|c| c.borrow().as_ref().unwrap().capacity());
+        // a shorter rewrite must reuse the same buffer (no realloc)
+        set_thread_context_args(format_args!("p{}", 1));
+        assert_eq!(thread_context().as_deref(), Some("p1"));
+        let cap_after = THREAD_CONTEXT.with(|c| c.borrow().as_ref().unwrap().capacity());
+        assert_eq!(cap_before, cap_after, "in-place rewrite must not reallocate");
+        clear_thread_context();
     }
 
     #[test]

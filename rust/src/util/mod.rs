@@ -7,6 +7,7 @@
 //! `artifacts/*/meta.json`, experiment configs and metric dumps), a
 //! leveled logger and a handful of numeric helpers.
 
+pub mod alloc_count;
 pub mod hash;
 pub mod json;
 pub mod logger;
@@ -18,5 +19,5 @@ pub mod vecmath;
 pub use hash::fnv1a;
 pub use json::JsonValue;
 pub use logger::{clear_thread_context, log_enabled, set_thread_context, Level};
-pub use parallel::run_cells;
+pub use parallel::{run_cells, WorkerPool};
 pub use rng::{derive_seed, Rng, ZipfTable};

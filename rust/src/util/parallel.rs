@@ -1,17 +1,275 @@
-//! Work-stealing fan-out with ordered collection — the one thread-pool
-//! primitive every parallel layer shares (DESIGN.md §6): the
-//! coordinator's worker chains, `sweep::run_sweep_jobs` cells, and the
-//! fig1/fig2 bench grids (re-exported as `benchkit::run_cells`).
+//! Persistent work-stealing execution runtime with ordered collection —
+//! the one thread-pool primitive every parallel layer shares
+//! (DESIGN.md §6, §14): the coordinator's worker chains, the
+//! `sweep::run_sweep_jobs` cells, and the fig1/fig2 bench grids
+//! (re-exported as `benchkit::run_cells`).
+//!
+//! The [`WorkerPool`] spawns its OS threads **once** and parks them on a
+//! condvar between fan-outs, so a training run costs O(threads) thread
+//! spawns instead of O(rounds × threads). [`run_cells`] remains the thin
+//! one-shot wrapper for callers that fan out a single time (sweeps,
+//! bench grids) and don't want to hold a pool.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Cumulative count of pool OS threads ever spawned by this process.
+static THREADS_SPAWNED: AtomicU64 = AtomicU64::new(0);
+
+/// Total pool OS threads spawned by this process so far (cumulative,
+/// never reset). A persistent-pool run must grow this by O(threads),
+/// not O(rounds × threads) — asserted in `tests/worker_pool.rs`.
+pub fn threads_spawned() -> u64 {
+    THREADS_SPAWNED.load(Ordering::Relaxed)
+}
+
+/// One fan-out generation, type-erased so parked workers can execute
+/// arbitrary-lifetime closures. The `'static` here is a lie told under
+/// a strict protocol: [`WorkerPool::run`] publishes the reference and
+/// does not return until every worker has finished the generation, so
+/// the pointee (a stack-local closure inside `run`) strictly outlives
+/// every dereference.
+type ErasedJob = &'static (dyn Fn() + Sync);
+
+struct PoolState {
+    /// Generation counter; bumped once per published job. Workers
+    /// remember the last generation they ran so spurious condvar
+    /// wakeups and re-locks never re-run a job.
+    seq: u64,
+    job: Option<ErasedJob>,
+    /// Workers still inside the current generation.
+    remaining: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Signalled when a new generation is published (or on shutdown).
+    work_cv: Condvar,
+    /// Signalled by the last worker leaving a generation.
+    done_cv: Condvar,
+}
+
+/// Persistent work-stealing thread pool with ordered collection
+/// (DESIGN.md §14). Threads are spawned once in [`WorkerPool::new`] and
+/// parked between [`WorkerPool::run`] calls; the `Coordinator` owns one
+/// for the lifetime of a run and `parallel_inner_phase` reuses it every
+/// round.
+///
+/// Determinism contract (DESIGN.md §6): results are collected **in cell
+/// order**, so pool scheduling leaves no trace in the output. A cell
+/// must be a pure function of its captured inputs — derive any seed it
+/// needs from its identity (see [`crate::util::derive_seed`]), never
+/// from shared mutable state. Thread identity (`p<t>` log tags) is
+/// cosmetic; cell identity is what the contract is written against.
+///
+/// Panic story: if a cell panics, the panic is caught on the pool
+/// thread, the first panic payload is recorded, and that worker stops
+/// claiming further cells (the others drain the remaining cells, same
+/// as `std::thread::scope` semantics). [`WorkerPool::run`] then
+/// re-raises the recorded panic on the caller thread after the
+/// generation fully completes — never a hang, and the pool itself
+/// survives and stays usable for subsequent `run` calls.
+///
+/// `run` is not reentrant: one generation at a time, from one caller
+/// thread (the coordinator is the single owner; a cell must never call
+/// back into its own pool).
+pub struct WorkerPool {
+    threads: usize,
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads` parked OS threads. `threads <= 1`
+    /// spawns nothing: every [`WorkerPool::run`] then degenerates to
+    /// the in-order serial walk on the caller thread.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { seq: 0, job: None, remaining: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::new();
+        if threads > 1 {
+            for t in 0..threads {
+                let shared = Arc::clone(&shared);
+                handles.push(std::thread::spawn(move || {
+                    THREADS_SPAWNED.fetch_add(1, Ordering::Relaxed);
+                    // thread-identity tag, allocated once per pool
+                    // thread for its whole lifetime (cells may re-tag
+                    // in place via `set_thread_context_args`, which
+                    // reuses this same String buffer)
+                    crate::util::set_thread_context(format!("p{t}"));
+                    worker_loop(&shared);
+                }));
+            }
+        }
+        WorkerPool { threads, shared, handles }
+    }
+
+    /// Number of OS threads this pool fans out across (1 = serial).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run independent cells across the pool and return their results
+    /// **in cell order**. Cells are claimed work-stealing style off a
+    /// shared counter, so a slow cell never strands the remaining
+    /// threads. Blocks until every cell has completed; re-raises the
+    /// first cell panic, if any, after the generation is fully drained.
+    pub fn run<T, F>(&self, cells: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        let n = cells.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.threads <= 1 || n == 1 {
+            return run_serial(cells);
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<F>>> = cells.into_iter().map(|f| Mutex::new(Some(f))).collect();
+        let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let first_panic: Mutex<Option<Box<dyn Any + Send>>> = Mutex::new(None);
+        let body = || {
+            loop {
+                // Relaxed is sufficient: this counter only partitions
+                // cell indices between workers (each fetch_add hands
+                // out a distinct i by RMW atomicity alone); all
+                // happens-before edges for the cell closures and their
+                // results flow through the slot/out mutexes and the
+                // pool's state mutex, never through this counter.
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // cell-identity tag, written into the pool thread's
+                // existing tag buffer — no per-cell String allocation
+                crate::util::logger::set_thread_context_args(format_args!("cell{i}"));
+                let f = slots[i].lock().unwrap().take().expect("cell claimed twice");
+                match catch_unwind(AssertUnwindSafe(f)) {
+                    Ok(r) => *out[i].lock().unwrap() = Some(r),
+                    Err(p) => {
+                        let mut fp = first_panic.lock().unwrap();
+                        if fp.is_none() {
+                            *fp = Some(p);
+                        }
+                        // stop claiming; peers drain the rest
+                        break;
+                    }
+                }
+            }
+        };
+        let body_ref: &(dyn Fn() + Sync) = &body;
+        // SAFETY: `body` lives on this stack frame and `run` does not
+        // return (or unwind past this point) until the wait loop below
+        // has observed `remaining == 0`, i.e. every worker has exited
+        // the generation. No worker dereferences the job after
+        // decrementing `remaining`, so the erased reference never
+        // outlives the pointee. The captures (`next`, `slots`, `out`,
+        // `first_panic`) are all Sync, and `T`/`F` are Send, so calling
+        // `body` from pool threads is sound.
+        let erased: ErasedJob = unsafe {
+            std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(body_ref)
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(erased);
+            st.seq += 1;
+            st.remaining = self.handles.len();
+            self.shared.work_cv.notify_all();
+        }
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining != 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+        }
+        if let Some(p) = first_panic.into_inner().unwrap() {
+            resume_unwind(p);
+        }
+        out.into_iter()
+            .map(|m| m.into_inner().unwrap().expect("cell produced no result"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            // workers only unwind if a panic escapes `catch_unwind`
+            // (i.e. never in practice); don't double-panic in Drop
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    let mut last_seq = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.seq != last_seq {
+                    last_seq = st.seq;
+                    break st.job.expect("generation published without a job");
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        job();
+        let mut st = shared.state.lock().unwrap();
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// In-order serial walk on the caller thread, tagging each cell's log
+/// lines and restoring whatever tag the caller already carried.
+fn run_serial<T, F>(cells: Vec<F>) -> Vec<T>
+where
+    F: FnOnce() -> T,
+{
+    let caller_tag = crate::util::logger::thread_context();
+    let out = cells
+        .into_iter()
+        .enumerate()
+        .map(|(i, f)| {
+            crate::util::logger::set_thread_context_args(format_args!("cell{i}"));
+            f()
+        })
+        .collect();
+    match caller_tag {
+        Some(tag) => crate::util::set_thread_context(tag),
+        None => crate::util::clear_thread_context(),
+    }
+    out
+}
 
 /// Run independent cells across `threads` OS threads and return their
 /// results **in cell order** (ordered collection — the scheduling of
-/// the pool leaves no trace in the output). Cells are claimed
-/// work-stealing style off a shared counter, so a slow cell never
-/// strands the remaining threads. `threads <= 1` degenerates to a
-/// plain in-order loop.
+/// the pool leaves no trace in the output). One-shot wrapper over
+/// [`WorkerPool`] for callers that fan out a single time (sweeps, bench
+/// grids); round-loop callers should hold a pool instead.
+/// `threads <= 1` degenerates to a plain in-order loop.
 ///
 /// Determinism contract (DESIGN.md §6): a cell must be a pure function
 /// of its captured inputs — derive any seed it needs from its identity
@@ -24,45 +282,9 @@ where
     let n = cells.len();
     let threads = threads.clamp(1, n.max(1));
     if threads <= 1 {
-        // serial walk: still tag each cell's log lines, restoring
-        // whatever tag the calling thread already carried afterwards
-        let caller_tag = crate::util::logger::thread_context();
-        let out = cells
-            .into_iter()
-            .enumerate()
-            .map(|(i, f)| {
-                crate::util::set_thread_context(format!("cell{i}"));
-                f()
-            })
-            .collect();
-        match caller_tag {
-            Some(tag) => crate::util::set_thread_context(tag),
-            None => crate::util::clear_thread_context(),
-        }
-        return out;
+        return run_serial(cells);
     }
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<F>>> = cells.into_iter().map(|f| Mutex::new(Some(f))).collect();
-    let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            // pool threads are scope-local: their tags die with them,
-            // and the calling thread's tag is never touched
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::SeqCst);
-                if i >= n {
-                    break;
-                }
-                crate::util::set_thread_context(format!("cell{i}"));
-                let f = slots[i].lock().unwrap().take().expect("cell claimed twice");
-                let r = f();
-                *out[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
-    out.into_iter()
-        .map(|m| m.into_inner().unwrap().expect("cell produced no result"))
-        .collect()
+    WorkerPool::new(threads).run(cells)
 }
 
 #[cfg(test)]
@@ -110,5 +332,27 @@ mod tests {
             })
             .collect();
         assert_eq!(run_cells(3, cells), (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_reuse_borrows_caller_state() {
+        // a persistent pool must execute closures borrowing the
+        // caller's stack across many generations (non-'static cells)
+        let pool = WorkerPool::new(4);
+        let base = vec![100usize, 200, 300, 400, 500];
+        for round in 0..10 {
+            let cells: Vec<_> = base.iter().map(|&b| move || b + round).collect();
+            let out = pool.run(cells);
+            assert_eq!(out, base.iter().map(|&b| b + round).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn pool_single_cell_runs_serial() {
+        let pool = WorkerPool::new(4);
+        let out = pool.run(vec![|| 7usize]);
+        assert_eq!(out, vec![7]);
+        let out: Vec<i32> = pool.run(Vec::<fn() -> i32>::new());
+        assert!(out.is_empty());
     }
 }

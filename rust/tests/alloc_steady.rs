@@ -1,0 +1,86 @@
+//! Acceptance check for the zero-allocation steady state (DESIGN.md
+//! §14): under `--features perf-count-alloc`, a steady-state outer
+//! round (no merge / checkpoint boundary) at paper-scale params
+//! performs **zero** param-sized heap allocations.
+//!
+//! Compiled out without the feature — CI runs this binary explicitly
+//! via `cargo test --features perf-count-alloc --test alloc_steady`.
+#![cfg(feature = "perf-count-alloc")]
+
+use std::sync::Mutex;
+
+use adloco::util::alloc_count;
+
+/// The counting allocator and its large-allocation threshold are
+/// process-global; tests in this binary serialize so one test's
+/// metered window never observes another test's allocations.
+static METER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    METER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Steady-round config mirroring the `round.steady(...)` micro bench:
+/// merge and mid-run eval boundaries off, fixed batch, manual rounds.
+fn steady_cfg(dim: usize, threads: usize) -> adloco::config::Config {
+    let mut cfg = adloco::config::presets::mock_default();
+    cfg.name = format!("alloc_steady_t{threads}");
+    cfg.algo.num_trainers = 2;
+    cfg.algo.workers_per_trainer = 2;
+    cfg.algo.inner_steps = 4;
+    cfg.algo.outer_steps = 1_000_000; // rounds driven manually
+    cfg.engine = adloco::config::EngineConfig::Mock { dim, noise: 1.0, condition: 10.0 };
+    cfg.algo.batching.adaptive = false;
+    cfg.algo.fixed_batch = 4;
+    cfg.algo.merge.enabled = false;
+    cfg.run.eval_every = 0;
+    cfg.run.eval_batches = 1;
+    cfg.data.val_sequences = 64;
+    cfg.run.threads = threads;
+    cfg
+}
+
+/// Drives `warm` unmetered rounds, then meters `rounds` more with the
+/// param-sized threshold armed and returns the large-alloc delta.
+fn metered_large_allocs(dim: usize, threads: usize, warm: u64, rounds: u64) -> u64 {
+    let cfg = steady_cfg(dim, threads);
+    let engine = adloco::engine::build_engine(&cfg).unwrap();
+    let mut c = adloco::coordinator::Coordinator::new(cfg, engine).unwrap();
+    let mut t = 0u64;
+    for _ in 0..warm {
+        t += 1;
+        c.step_outer_event(t).unwrap();
+    }
+    // "param-sized" = at least one f32 parameter vector
+    alloc_count::set_large_threshold(4 * dim);
+    let before = alloc_count::snapshot();
+    for _ in 0..rounds {
+        t += 1;
+        c.step_outer_event(t).unwrap();
+    }
+    let d = alloc_count::snapshot().since(before);
+    alloc_count::set_large_threshold(usize::MAX);
+    d.large_allocs
+}
+
+#[test]
+fn steady_round_serial_makes_zero_param_sized_allocs() {
+    let _g = lock();
+    let large = metered_large_allocs(1_000_000, 1, 2, 3);
+    assert_eq!(
+        large, 0,
+        "serial steady rounds at 1e6 params must not heap-allocate \
+         param-sized buffers (counted {large} large allocations)"
+    );
+}
+
+#[test]
+fn steady_round_pooled_makes_zero_param_sized_allocs() {
+    let _g = lock();
+    let large = metered_large_allocs(1_000_000, 4, 2, 2);
+    assert_eq!(
+        large, 0,
+        "pooled (threads=4) steady rounds at 1e6 params must not \
+         heap-allocate param-sized buffers (counted {large} large allocations)"
+    );
+}

@@ -1,0 +1,118 @@
+//! Satellite coverage for the persistent execution runtime
+//! (DESIGN.md §14): reuse across many fan-out generations, the panic
+//! story, equivalence with the one-shot `run_cells` wrapper, and the
+//! O(threads)-not-O(rounds × threads) spawn contract — including
+//! through a real multi-round coordinator run.
+
+use std::sync::Mutex;
+
+use adloco::util::parallel::{run_cells, threads_spawned, WorkerPool};
+
+/// `threads_spawned()` is a process-global counter and the tests in
+/// this binary run concurrently: every test that constructs a pool
+/// serializes here so spawn-count deltas stay attributable.
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The reuse-across-rounds property: one pool, 100 sequential
+/// fan-outs, results in cell order every time.
+#[test]
+fn pool_reused_across_hundred_fanouts_stays_ordered() {
+    let _g = lock();
+    let pool = WorkerPool::new(4);
+    for round in 0..100u64 {
+        let cells: Vec<_> = (0..9u64).map(|i| move || i * 1_000 + round).collect();
+        let out = pool.run(cells);
+        assert_eq!(
+            out,
+            (0..9u64).map(|i| i * 1_000 + round).collect::<Vec<_>>(),
+            "round {round}: ordered collection must hold on a reused pool"
+        );
+    }
+}
+
+/// The pool and the one-shot wrapper agree bit for bit on pure cells.
+#[test]
+fn pool_matches_run_cells_results() {
+    let _g = lock();
+    let mk = || {
+        (0..23u64)
+            .map(|i| move || i.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17))
+            .collect::<Vec<_>>()
+    };
+    let via_wrapper = run_cells(4, mk());
+    let pool = WorkerPool::new(4);
+    assert_eq!(pool.run(mk()), via_wrapper);
+    assert_eq!(run_cells(1, mk()), via_wrapper, "serial walk agrees too");
+}
+
+/// The panic story (DESIGN.md §14): a panicking cell's payload
+/// re-raises on the caller after the generation drains — never a hang —
+/// and the pool itself survives and stays usable.
+#[test]
+fn panicking_cell_propagates_and_pool_survives() {
+    let _g = lock();
+    let pool = WorkerPool::new(4);
+    let cells: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..8)
+        .map(|i| {
+            Box::new(move || {
+                if i == 3 {
+                    panic!("cell 3 exploded");
+                }
+                i
+            }) as Box<dyn FnOnce() -> usize + Send>
+        })
+        .collect();
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.run(cells)))
+        .expect_err("a cell panic must propagate to the caller");
+    let msg = err.downcast_ref::<&str>().copied().unwrap_or_default();
+    assert!(msg.contains("cell 3 exploded"), "panic payload preserved, got {msg:?}");
+    // the same pool keeps working after a panicking generation
+    let out = pool.run((0..5usize).map(|i| move || i * 2).collect::<Vec<_>>());
+    assert_eq!(out, vec![0, 2, 4, 6, 8]);
+}
+
+/// O(threads) OS threads per pool, no matter how many generations run.
+#[test]
+fn pool_spawns_o_threads_not_o_rounds() {
+    let _g = lock();
+    let before = threads_spawned();
+    let pool = WorkerPool::new(4);
+    for _ in 0..50 {
+        let out = pool.run((0..8usize).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(out, (0..8).collect::<Vec<_>>());
+    }
+    assert_eq!(
+        threads_spawned() - before,
+        4,
+        "50 fan-outs over one pool must spawn exactly its 4 threads"
+    );
+}
+
+/// The coordinator-level spawn contract: a full multi-round event run
+/// at `threads = 4` spawns O(threads) OS threads total (the persistent
+/// pool), not O(rounds × threads) as the old scoped fan-out did.
+#[test]
+fn coordinator_run_spawns_one_pool() {
+    let _g = lock();
+    let mut cfg = adloco::config::presets::mock_default();
+    cfg.name = "worker_pool_spawn_census".into();
+    cfg.algo.num_trainers = 2;
+    cfg.algo.workers_per_trainer = 2;
+    cfg.algo.inner_steps = 3;
+    cfg.algo.outer_steps = 20;
+    cfg.run.scheduler = adloco::config::SchedulerKind::Event;
+    cfg.run.threads = 4;
+    let engine = adloco::engine::build_engine(&cfg).unwrap();
+    let before = threads_spawned();
+    let mut coord = adloco::coordinator::Coordinator::new(cfg, engine).unwrap();
+    coord.run().unwrap();
+    let spawned = threads_spawned() - before;
+    assert!(
+        spawned <= 4,
+        "20 outer rounds at threads=4 must reuse one pool (spawned {spawned} threads)"
+    );
+}

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""CI perf-regression gate over bench_results/BENCH_micro.json.
+"""CI perf-regression gate over the bench_results perf artifacts.
 
 Compares the micro_hotpath artifact produced by the current build
 against the committed baseline (rust/benches/baselines/micro_baseline.json)
@@ -11,18 +11,33 @@ de-vectorized kernel or an accidentally quadratic loop, not 10% drift).
 Structural problems are always hard failures:
   * missing/unparseable artifact,
   * no kernel row at >= 1e7 params (the ladder must reach paper scale),
-  * a baseline-pinned op missing from the current artifact.
+  * a baseline-pinned op missing from the current artifact,
+  * a ``round.steady`` row without the ``allocs_per_round`` /
+    ``param_allocs_per_round`` / ``peak_rss_bytes`` keys (the
+    allocation-tracked half of the perf trajectory, DESIGN.md §14),
+  * a measured ``param_allocs_per_round`` that is not 0 — a steady-state
+    round must perform zero param-sized heap allocations.
 
 Baseline rows with ``"median_ms": null`` are advisory: the op is listed
 (so its presence is still checked) but not yet pinned to a number —
 they pass with a note. Pin them by copying medians from a trusted CI
-run's artifact.
+run's artifact. Measured alloc counts are likewise advisory while null
+(a build without ``--features perf-count-alloc``) unless
+``--require-alloc-counts`` is passed, which CI does on the instrumented
+leg.
+
+When ``--fig6-current`` is given, the fig6 wall-clock trajectory is
+gated the same way against rust/benches/baselines/fig6_baseline.json:
+every baseline-pinned workers point must be present, and a pinned
+``wall_s`` must not regress past the tolerance.
 
 Usage:
   python3 scripts/perf_gate.py \
       [--current rust/bench_results/BENCH_micro.json] \
       [--baseline rust/benches/baselines/micro_baseline.json] \
-      [--tolerance 2.0]
+      [--fig6-current rust/bench_results/BENCH_fig6.json] \
+      [--fig6-baseline rust/benches/baselines/fig6_baseline.json] \
+      [--tolerance 2.0] [--require-alloc-counts]
 """
 
 import argparse
@@ -30,6 +45,8 @@ import json
 import sys
 
 KERNEL_FLOOR = 10_000_000  # the ladder must reach paper scale
+STEADY_PREFIX = "round.steady("
+ALLOC_KEYS = ("allocs_per_round", "param_allocs_per_round", "peak_rss_bytes")
 
 
 def load(path, what):
@@ -41,30 +58,101 @@ def load(path, what):
         sys.exit(1)
 
 
-def rows_by_op(doc, path):
+def rows_by_key(doc, path, key):
     rows = doc.get("rows")
     if not isinstance(rows, list) or not rows:
         print(f"perf gate: {path} has no rows array")
         sys.exit(1)
     out = {}
     for r in rows:
-        if not isinstance(r, dict) or "op" not in r:
-            print(f"perf gate: malformed row in {path}: {r!r}")
+        if not isinstance(r, dict) or key not in r:
+            print(f"perf gate: malformed row in {path} (no {key!r}): {r!r}")
             sys.exit(1)
-        out[r["op"]] = r
+        out[r[key]] = r
     return out
+
+
+def check_medians(baseline, current, tolerance, what, failures):
+    """Presence + regression gate shared by the micro and fig6 legs."""
+    advisory = 0
+    checked = 0
+    for key, base_row in baseline.items():
+        cur = current.get(key)
+        if cur is None:
+            failures.append(
+                f"{what} {key!r} pinned in baseline but missing from current artifact"
+            )
+            continue
+        base_med = base_row.get("median_ms" if what == "op" else "wall_s")
+        if base_med is None:
+            advisory += 1
+            continue
+        field = "median_ms" if what == "op" else "wall_s"
+        cur_med = cur.get(field)
+        if not isinstance(cur_med, (int, float)) or cur_med < 0:
+            failures.append(f"{what} {key!r}: current {field} is {cur_med!r}")
+            continue
+        checked += 1
+        if cur_med > tolerance * base_med:
+            failures.append(
+                f"{what} {key!r}: {field} {cur_med:.4f} > {tolerance}x "
+                f"baseline {base_med:.4f}"
+            )
+    return checked, advisory
+
+
+def check_steady_rows(current, require_alloc_counts, failures):
+    """The allocation-tracked rows (DESIGN.md §14): every round.steady op
+    must carry the alloc/RSS keys; measured param-sized alloc counts
+    must be exactly zero."""
+    steady = [op for op in current if op.startswith(STEADY_PREFIX)]
+    if not steady:
+        failures.append(
+            f"no {STEADY_PREFIX}...) rows in the current artifact — the "
+            f"steady-round allocation trajectory is missing"
+        )
+        return 0
+    measured = 0
+    for op in steady:
+        row = current[op]
+        for key in ALLOC_KEYS:
+            if key not in row:
+                failures.append(f"op {op!r}: missing {key!r} field")
+        apr = row.get("param_allocs_per_round")
+        if apr is None:
+            if require_alloc_counts:
+                failures.append(
+                    f"op {op!r}: param_allocs_per_round is null but "
+                    f"--require-alloc-counts was given (bench must run with "
+                    f"--features perf-count-alloc)"
+                )
+            continue
+        measured += 1
+        if apr != 0:
+            failures.append(
+                f"op {op!r}: param_allocs_per_round = {apr!r}, expected 0 — "
+                f"a steady-state round must not heap-allocate param-sized buffers"
+            )
+    return measured
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default="rust/bench_results/BENCH_micro.json")
     ap.add_argument("--baseline", default="rust/benches/baselines/micro_baseline.json")
+    ap.add_argument("--fig6-current", default=None)
+    ap.add_argument("--fig6-baseline", default="rust/benches/baselines/fig6_baseline.json")
     ap.add_argument("--tolerance", type=float, default=2.0)
+    ap.add_argument(
+        "--require-alloc-counts",
+        action="store_true",
+        help="hard-fail when the steady-round rows carry null alloc counts",
+    )
     args = ap.parse_args()
 
-    current = rows_by_op(load(args.current, "current artifact"), args.current)
+    current = rows_by_key(load(args.current, "current artifact"), args.current, "op")
     baseline_doc = load(args.baseline, "baseline")
-    baseline = rows_by_op(baseline_doc, args.baseline)
+    baseline = rows_by_key(baseline_doc, args.baseline, "op")
 
     # structural: the ladder must include a paper-scale kernel row
     big = [
@@ -80,33 +168,34 @@ def main():
         sys.exit(1)
 
     failures = []
-    advisory = 0
-    checked = 0
-    for op, base_row in baseline.items():
-        cur = current.get(op)
-        if cur is None:
-            failures.append(f"op {op!r} pinned in baseline but missing from current artifact")
-            continue
-        base_med = base_row.get("median_ms")
-        if base_med is None:
-            advisory += 1
-            continue
-        cur_med = cur.get("median_ms")
-        if not isinstance(cur_med, (int, float)) or cur_med < 0:
-            failures.append(f"op {op!r}: current median_ms is {cur_med!r}")
-            continue
-        checked += 1
-        if cur_med > args.tolerance * base_med:
-            failures.append(
-                f"op {op!r}: median {cur_med:.4f} ms > {args.tolerance}x "
-                f"baseline {base_med:.4f} ms"
-            )
+    checked, advisory = check_medians(baseline, current, args.tolerance, "op", failures)
+    measured = check_steady_rows(current, args.require_alloc_counts, failures)
 
     print(
         f"perf gate: {len(current)} current rows, {len(baseline)} baseline rows "
-        f"({checked} gated, {advisory} advisory/unpinned), "
+        f"({checked} gated, {advisory} advisory/unpinned, {measured} alloc-measured), "
         f"{len(big)} rows at >= {KERNEL_FLOOR} params, tolerance {args.tolerance}x"
     )
+
+    if args.fig6_current is not None:
+        fig6_cur = rows_by_key(
+            load(args.fig6_current, "fig6 current artifact"), args.fig6_current, "workers"
+        )
+        fig6_base = rows_by_key(
+            load(args.fig6_baseline, "fig6 baseline"), args.fig6_baseline, "workers"
+        )
+        f6_checked, f6_advisory = check_medians(
+            fig6_base, fig6_cur, args.tolerance, "workers", failures
+        )
+        for key, row in fig6_cur.items():
+            for field in ("allocs_per_round", "peak_rss_bytes"):
+                if field not in row:
+                    failures.append(f"workers {key!r}: missing {field!r} field")
+        print(
+            f"perf gate: fig6 {len(fig6_cur)} current points, {len(fig6_base)} baseline "
+            f"points ({f6_checked} gated, {f6_advisory} advisory/unpinned)"
+        )
+
     if failures:
         for f in failures:
             print(f"perf gate: FAIL — {f}")
